@@ -1,0 +1,69 @@
+//! Serving benchmark example: drive the batched force-field service with
+//! concurrent clients and report latency/throughput — the paper's
+//! deployment setting (batch inference for relaxations/MD).
+//!
+//!     make artifacts && cargo run --release --example force_field_service
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use gaunt_tp::coordinator::batcher::BatchPolicy;
+use gaunt_tp::coordinator::{ForceFieldServer, ServerConfig};
+use gaunt_tp::data::gen_bpa_dataset;
+use gaunt_tp::runtime::Engine;
+
+fn main() -> Result<()> {
+    let engine = Arc::new(Engine::new("artifacts")?);
+    let server = Arc::new(ForceFieldServer::start(
+        engine,
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(4),
+                max_queue: 8192,
+            },
+            n_workers: 2,
+            ..Default::default()
+        },
+    )?);
+
+    let n_clients = 4usize;
+    let per_client = 32usize;
+    let structures = gen_bpa_dataset(&[0.05], per_client, 13).remove(0);
+
+    println!(
+        "load test: {n_clients} concurrent clients x {per_client} requests"
+    );
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let srv = server.clone();
+        let structs = structures.clone();
+        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+            let mut lat = Vec::new();
+            for g in &structs {
+                let resp =
+                    srv.infer_blocking(g.pos.clone(), g.species.clone())?;
+                lat.push(resp.latency_s);
+                assert_eq!(resp.forces.len(), g.pos.len());
+            }
+            let _ = c;
+            Ok(lat)
+        }));
+    }
+    let mut all_lat = Vec::new();
+    for h in handles {
+        all_lat.extend(h.join().unwrap()?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    all_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total = n_clients * per_client;
+    println!("\n== results ==");
+    println!("throughput : {:.1} structures/s", total as f64 / wall);
+    println!("p50 latency: {:.2} ms", 1e3 * all_lat[total / 2]);
+    println!("p99 latency: {:.2} ms", 1e3 * all_lat[total * 99 / 100]);
+    println!("server     : {}", server.metrics().report());
+    Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+    Ok(())
+}

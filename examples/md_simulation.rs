@@ -1,0 +1,89 @@
+//! Model-in-the-loop molecular dynamics: run MD on the 3BPA-lite molecule
+//! where the forces come from the *served* GauntNet model (through the
+//! full coordinator: batcher -> router -> PJRT), and compare the
+//! trajectory against ground-truth classical-potential MD.
+//!
+//!     make artifacts && cargo run --release --example md_simulation
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use gaunt_tp::coordinator::{ForceFieldServer, ServerConfig};
+use gaunt_tp::md::{Integrator, Molecule, Thermostat};
+use gaunt_tp::runtime::Engine;
+use gaunt_tp::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let engine = Arc::new(Engine::new("artifacts")?);
+    let server = ForceFieldServer::start(engine, ServerConfig::default())?;
+
+    let mol = Molecule::bpa_lite();
+    let mut rng = Rng::new(3);
+    let dt = 0.002f64;
+    // each step is one served inference (~seconds on the CPU interpret
+    // path); override with GTP_STEPS for longer runs
+    let steps = std::env::var("GTP_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40usize);
+
+    // ground-truth MD
+    let mut md_ref = Integrator::new(
+        mol.pos.clone(), mol.species.clone(), &mol.potential, dt,
+        Thermostat::None,
+    );
+    md_ref.thermalize(0.05, &mut rng);
+    let vel0 = md_ref.vel.clone();
+
+    // model-driven MD: identical start, forces from the service
+    let mut pos = mol.pos.clone();
+    let mut vel = vel0.clone();
+    let mass = 1.0f64;
+    let mut f_model = server
+        .infer_blocking(pos.clone(), mol.species.clone())?
+        .forces;
+    println!("step |  model-E  | drift from reference trajectory");
+    for step in 0..steps {
+        // velocity Verlet with model forces
+        for i in 0..pos.len() {
+            for k in 0..3 {
+                vel[i][k] += 0.5 * dt * f_model[i][k] / mass;
+                pos[i][k] += dt * vel[i][k];
+            }
+        }
+        let resp = server.infer_blocking(pos.clone(), mol.species.clone())?;
+        f_model = resp.forces;
+        for i in 0..pos.len() {
+            for k in 0..3 {
+                vel[i][k] += 0.5 * dt * f_model[i][k] / mass;
+            }
+        }
+        // advance the reference
+        md_ref.step(&mol.potential, &mut rng);
+        if step % 10 == 0 || step + 1 == steps {
+            let mut d2 = 0.0;
+            for (p, q) in pos.iter().zip(&md_ref.pos) {
+                for k in 0..3 {
+                    d2 += (p[k] - q[k]) * (p[k] - q[k]);
+                }
+            }
+            println!(
+                "{step:>4} | {:>9.4} | RMSD {:.4}",
+                resp.energy,
+                (d2 / pos.len() as f64).sqrt()
+            );
+        }
+        assert!(
+            pos.iter().all(|p| p.iter().all(|x| x.is_finite())),
+            "model-driven MD diverged to non-finite positions"
+        );
+    }
+    println!("\nservice metrics: {}", server.metrics().report());
+    println!(
+        "note: the shipped state is untrained — run \
+         `cargo run --release --example train_force_field` and wire the \
+         trained state via ForceFieldServer::set_state for physical forces."
+    );
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: load an AOT-compiled Gaunt Tensor Product kernel and verify
+//! it against the native Rust implementation.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use gaunt_tp::runtime::{Engine, Tensor};
+use gaunt_tp::tp::{ConvMethod, GauntPlan};
+use gaunt_tp::util::rng::Rng;
+use gaunt_tp::num_coeffs;
+
+fn main() -> Result<()> {
+    let engine = Engine::new("artifacts")?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // 1. the compiled Pallas pipeline (Python built it; Rust runs it)
+    let name = "gaunt_tp_L2_B64";
+    let exe = engine.load(name)?;
+    println!(
+        "loaded {name}: inputs {:?} -> outputs {:?}",
+        exe.inputs.iter().map(|s| s.shape.clone()).collect::<Vec<_>>(),
+        exe.outputs.iter().map(|s| s.shape.clone()).collect::<Vec<_>>(),
+    );
+
+    let l = 2usize;
+    let n = num_coeffs(l);
+    let b = 64usize;
+    let mut rng = Rng::new(0);
+    let x1: Vec<f32> = rng.normals_f32(b * n);
+    let x2: Vec<f32> = rng.normals_f32(b * n);
+    let out = exe.run(&[Tensor::F32(x1.clone()), Tensor::F32(x2.clone())])?;
+    let y = out[0].as_f32()?;
+
+    // 2. the native Rust implementation of the same O(L^3) algorithm
+    let plan = GauntPlan::new(l, l, l, ConvMethod::Auto);
+    let mut max_err = 0.0f64;
+    for r in 0..b {
+        let a: Vec<f64> = x1[r * n..(r + 1) * n].iter().map(|&v| v as f64).collect();
+        let c: Vec<f64> = x2[r * n..(r + 1) * n].iter().map(|&v| v as f64).collect();
+        let want = plan.apply(&a, &c);
+        for k in 0..n {
+            max_err = max_err.max((y[r * n + k] as f64 - want[k]).abs());
+        }
+    }
+    println!("XLA kernel vs native Rust Gaunt TP: max |diff| = {max_err:.2e}");
+    assert!(max_err < 1e-4, "implementations disagree");
+    println!("quickstart OK — the three layers agree.");
+    Ok(())
+}

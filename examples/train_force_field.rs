@@ -1,0 +1,47 @@
+//! End-to-end training driver (the repo's full-stack proof): generate a
+//! synthetic adsorbate dataset with the MD substrate, train GauntNet for a
+//! few hundred steps through the fused AOT train-step artifact (Pallas
+//! Gaunt kernels + JAX autodiff + Adam, all inside one XLA computation
+//! executed from Rust), log the loss curve, and report test metrics.
+//!
+//!     make artifacts && cargo run --release --example train_force_field
+//!     [-- --steps 300 --variant gaunt]
+
+use anyhow::Result;
+use gaunt_tp::experiments::{eval_forcefield, train_forcefield};
+use gaunt_tp::data::{gen_adsorbate_dataset, normalize_graphs};
+use gaunt_tp::runtime::Engine;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps = args
+        .iter()
+        .position(|a| a == "--steps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200usize);
+    let variant = args
+        .iter()
+        .position(|a| a == "--variant")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "gaunt".to_string());
+
+    let engine = Engine::new("artifacts")?;
+    println!("== end-to-end GauntNet training ({variant}, {steps} steps) ==");
+    let (state, stats, per_step) =
+        train_forcefield(&engine, &variant, steps, true)?;
+
+    // held-out evaluation
+    let mut test = gen_adsorbate_dataset(24, 777);
+    normalize_graphs(&mut test, stats);
+    let fwd = if variant == "gaunt" { "ff_fwd_B8" } else { "ff_fwd_cg_B8" };
+    let (e_mae, f_mae, f_cos, efwt) = eval_forcefield(&engine, fwd, &state, &test)?;
+    println!("\n== held-out test (24 structures) ==");
+    println!("energy MAE / atom : {e_mae:.4} (normalized units)");
+    println!("force MAE         : {f_mae:.4}");
+    println!("force cos         : {f_cos:.3}");
+    println!("EFwT              : {:.1}%", 100.0 * efwt);
+    println!("throughput        : {:.2} s/step (batch 8)", per_step);
+    println!("\nloss curve logged above; see EXPERIMENTS.md §e2e for the record.");
+    Ok(())
+}

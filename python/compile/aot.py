@@ -1,0 +1,397 @@
+"""AOT compiler: lower every jitted computation to HLO text artifacts.
+
+This is the one-shot build step (`make artifacts`).  After it runs, the
+Rust coordinator is self-contained: it loads `artifacts/*.hlo.txt` with
+`HloModuleProto::from_text_file`, compiles on the PJRT CPU client, and
+executes — Python never appears on the request path.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Emitted artifact families (see artifacts/manifest.json):
+  gaunt_tp_L{l}_B{b}   — the batched Gaunt TP kernel op (Pallas pipeline)
+  cg_tp_L{l}_B{b}      — the O(L^6) Clebsch-Gordan baseline op
+  ff_fwd_B{b}          — GauntNet force-field inference: (params, graphs)
+                          -> (energy, forces); several batch variants for
+                          the coordinator's router
+  ff_train_step_{tp}   — one fused Adam step (params, opt, batch) ->
+                          (params', opt', loss); gaunt + cg variants
+  nbody_fwd_{tp} / nbody_train_{tp} — SEGNN-lite for the Fig. 1d sanity check
+
+plus params_*.bin (initial state blobs) and golden/*.json (cross-language
+test vectors for the native Rust implementation).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import fourier as fr
+from . import model as M
+from . import so3
+from .kernels import cg_tp as ck
+from .kernels import gaunt_tp as gk
+
+
+# --------------------------------------------------------------------------
+# lowering helpers
+# --------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides large constants as `{...}`,
+    # which the downstream text parser silently reconstructs as zeros —
+    # every coefficient table (CG tensors, sh2f/f2sh panels, SH monomial
+    # tables) would be wiped.  Print with full constants.
+    popt = xc._xla.HloPrintOptions()
+    popt.print_large_constants = True
+    # jax's printer emits source_end_line/... metadata the 0.5.1 text
+    # parser does not know; strip it.
+    popt.print_metadata = False
+    return comp.as_hlo_module().to_string(popt)
+
+
+def _spec_of(x) -> dict:
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": {}, "state_blobs": {}}
+        os.makedirs(out_dir, exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+
+    def lower(self, name: str, fn, example_args, input_names, output_names,
+              meta=None):
+        print(f"[aot] lowering {name} ...", flush=True)
+        # keep_unused: inference artifacts take the full (params + opt)
+        # state so serving and training share one tensor layout — the opt
+        # tensors are unused by fwd and must NOT be pruned from the HLO
+        # signature.
+        lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *example_args)
+        flat_outs = jax.tree.leaves(outs)
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [
+                {"name": n, **_spec_of(a)}
+                for n, a in zip(input_names, jax.tree.leaves(example_args))
+            ],
+            "outputs": [
+                {"name": n, **_spec_of(o)} for n, o in zip(output_names, flat_outs)
+            ],
+            "meta": meta or {},
+        }
+        print(f"[aot]   -> {fname} ({len(text)} chars)", flush=True)
+
+    def write_state_blob(self, name: str, named_arrays):
+        """Concatenated little-endian blob + tensor directory."""
+        fname = f"{name}.bin"
+        tensors = []
+        offset = 0
+        with open(os.path.join(self.out_dir, fname), "wb") as f:
+            for n, a in named_arrays:
+                a = np.asarray(a)
+                raw = a.astype("<f4" if a.dtype.kind == "f" else "<i4").tobytes()
+                tensors.append(
+                    {"name": n, "shape": list(a.shape), "dtype": str(a.dtype),
+                     "offset": offset, "nbytes": len(raw)}
+                )
+                f.write(raw)
+                offset += len(raw)
+        self.manifest["state_blobs"][name] = {"file": fname, "tensors": tensors}
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"[aot] manifest with {len(self.manifest['artifacts'])} artifacts")
+
+
+def flatten_state(state):
+    """Deterministic (path-named) flatten of a pytree."""
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+# --------------------------------------------------------------------------
+# artifact families
+# --------------------------------------------------------------------------
+
+
+def emit_tp_kernels(w: ArtifactWriter, degrees, batch: int):
+    for L in degrees:
+        n = so3.num_coeffs(L)
+        spec = jax.ShapeDtypeStruct((batch, n), jnp.float32)
+        gf = gk.make_gaunt_tp(L, L, L, "fft")
+        w.lower(
+            f"gaunt_tp_L{L}_B{batch}", lambda a, b, f=gf: (f(a, b),),
+            (spec, spec), ["x1", "x2"], ["y"],
+            meta={"L": L, "batch": batch, "op": "gaunt_tp", "method": "fft"},
+        )
+        cf = ck.make_cg_tp(L, L, L)
+        w.lower(
+            f"cg_tp_L{L}_B{batch}", lambda a, b, f=cf: (f(a, b),),
+            (spec, spec), ["x1", "x2"], ["y"],
+            meta={"L": L, "batch": batch, "op": "cg_tp"},
+        )
+
+
+def ff_config(tp: str = "gaunt") -> M.Config:
+    return M.Config(L=2, channels=8, n_species=4, n_layers=2, n_bessel=8,
+                    r_cut=4.0, n_atoms=32, n_edges=128, tp=tp)
+
+
+def _ff_batch_specs(cfg: M.Config, b: int):
+    return dict(
+        pos=jax.ShapeDtypeStruct((b, cfg.n_atoms, 3), jnp.float32),
+        species=jax.ShapeDtypeStruct((b, cfg.n_atoms), jnp.int32),
+        edges=jax.ShapeDtypeStruct((b, cfg.n_edges, 2), jnp.int32),
+        edge_mask=jax.ShapeDtypeStruct((b, cfg.n_edges), jnp.float32),
+        atom_mask=jax.ShapeDtypeStruct((b, cfg.n_atoms), jnp.float32),
+    )
+
+
+def emit_forcefield(w: ArtifactWriter, batches, seed=0, tp="gaunt",
+                    suffix=""):
+    cfg = ff_config(tp)
+    params = M.init_params(seed, cfg)
+    state = {"params": params, "opt": M.adam_init(params)}
+    named = flatten_state(state)
+    state_names = [n for n, _ in named]
+    w.write_state_blob(f"ff_state_init{suffix}", named)
+
+    treedef = jax.tree.structure(state)
+
+    for b in batches:
+        bs = _ff_batch_specs(cfg, b)
+
+        def fwd(*args, _b=b):
+            k = len(state_names)
+            st = jax.tree.unflatten(treedef, args[:k])
+            pos, species, edges, em, am = args[k:]
+            e, f = M.batched_energy_forces(
+                st["params"], pos, species, edges, em, am, cfg
+            )
+            return e, f
+
+        args = tuple(a for _, a in named) + (
+            bs["pos"], bs["species"], bs["edges"], bs["edge_mask"],
+            bs["atom_mask"],
+        )
+        w.lower(
+            f"ff_fwd{suffix}_B{b}", fwd, args,
+            state_names + ["pos", "species", "edges", "edge_mask", "atom_mask"],
+            ["energy", "forces"],
+            meta={"model": "gauntnet", "tp": tp, "batch": b,
+                  "n_atoms": cfg.n_atoms, "n_edges": cfg.n_edges,
+                  "n_species": cfg.n_species, "L": cfg.L,
+                  "channels": cfg.channels, "r_cut": cfg.r_cut,
+                  "n_state": len(state_names)},
+        )
+
+
+def emit_ff_train(w: ArtifactWriter, tps=("gaunt", "cg"), b=8, seed=0, lr=2e-3):
+    for tp in tps:
+        cfg = ff_config(tp)
+        params = M.init_params(seed, cfg)
+        state = {"params": params, "opt": M.adam_init(params)}
+        named = flatten_state(state)
+        state_names = [n for n, _ in named]
+        w.write_state_blob(f"ff_state_init_{tp}", named)
+        treedef = jax.tree.structure(state)
+        bs = _ff_batch_specs(cfg, b)
+        batch_specs = dict(
+            **bs,
+            energy=jax.ShapeDtypeStruct((b,), jnp.float32),
+            forces=jax.ShapeDtypeStruct((b, cfg.n_atoms, 3), jnp.float32),
+        )
+        batch_names = list(batch_specs.keys())
+
+        def step(*args, _cfg=cfg, _td=treedef, _k=len(state_names),
+                 _bn=batch_names):
+            st = jax.tree.unflatten(_td, args[:_k])
+            batch = dict(zip(_bn, args[_k:]))
+            p2, o2, loss = M.ff_train_step(st["params"], st["opt"], batch,
+                                           _cfg, lr=lr)
+            flat = [a for _, a in flatten_state({"params": p2, "opt": o2})]
+            return tuple(flat) + (loss,)
+
+        args = tuple(a for _, a in named) + tuple(batch_specs.values())
+        w.lower(
+            f"ff_train_step_{tp}", step, args,
+            state_names + batch_names, state_names + ["loss"],
+            meta={"model": "gauntnet", "tp": tp, "batch": b, "lr": lr,
+                  "n_atoms": cfg.n_atoms, "n_edges": cfg.n_edges,
+                  "n_state": len(state_names)},
+        )
+
+
+def nbody_config(tp: str) -> M.Config:
+    return M.Config(L=1, channels=8, n_species=2, n_layers=2, n_bessel=8,
+                    r_cut=20.0, n_atoms=5, n_edges=20, tp=tp,
+                    readout="vector", vec_in=True)
+
+
+def emit_nbody(w: ArtifactWriter, tps=("gaunt", "cg"), b=16, seed=1, lr=5e-3):
+    for tp in tps:
+        cfg = nbody_config(tp)
+        params = M.init_params(seed, cfg)
+        state = {"params": params, "opt": M.adam_init(params)}
+        named = flatten_state(state)
+        state_names = [n for n, _ in named]
+        w.write_state_blob(f"nbody_state_init_{tp}", named)
+        treedef = jax.tree.structure(state)
+        batch_specs = dict(
+            pos=jax.ShapeDtypeStruct((b, cfg.n_atoms, 3), jnp.float32),
+            vel=jax.ShapeDtypeStruct((b, cfg.n_atoms, 3), jnp.float32),
+            charge=jax.ShapeDtypeStruct((b, cfg.n_atoms), jnp.int32),
+            edges=jax.ShapeDtypeStruct((b, cfg.n_edges, 2), jnp.int32),
+            edge_mask=jax.ShapeDtypeStruct((b, cfg.n_edges), jnp.float32),
+            atom_mask=jax.ShapeDtypeStruct((b, cfg.n_atoms), jnp.float32),
+            target=jax.ShapeDtypeStruct((b, cfg.n_atoms, 3), jnp.float32),
+        )
+        batch_names = list(batch_specs.keys())
+
+        def fwd(*args, _cfg=cfg, _td=treedef, _k=len(state_names)):
+            st = jax.tree.unflatten(_td, args[:_k])
+            pos, vel, charge, edges, em, am = args[_k:_k + 6]
+            pred = jax.vmap(
+                lambda p, v, c, e, m1, m2: M.nbody_forecast(
+                    st["params"], p, v, c, e, m1, m2, _cfg)
+            )(pos, vel, charge, edges, em, am)
+            return (pred,)
+
+        fargs = tuple(a for _, a in named) + tuple(
+            batch_specs[k] for k in batch_names[:-1]
+        )
+        w.lower(
+            f"nbody_fwd_{tp}", fwd, fargs,
+            state_names + batch_names[:-1], ["pred"],
+            meta={"model": "segnn_lite", "tp": tp, "batch": b,
+                  "n_state": len(state_names)},
+        )
+
+        def step(*args, _cfg=cfg, _td=treedef, _k=len(state_names),
+                 _bn=batch_names):
+            st = jax.tree.unflatten(_td, args[:_k])
+            batch = dict(zip(_bn, args[_k:]))
+            p2, o2, loss = M.nbody_train_step(st["params"], st["opt"], batch,
+                                              _cfg, lr=lr)
+            flat = [a for _, a in flatten_state({"params": p2, "opt": o2})]
+            return tuple(flat) + (loss,)
+
+        args = tuple(a for _, a in named) + tuple(batch_specs.values())
+        w.lower(
+            f"nbody_train_{tp}", step, args,
+            state_names + batch_names, state_names + ["loss"],
+            meta={"model": "segnn_lite", "tp": tp, "batch": b, "lr": lr,
+                  "n_state": len(state_names)},
+        )
+
+
+# --------------------------------------------------------------------------
+# golden cross-language test vectors for the Rust implementation
+# --------------------------------------------------------------------------
+
+
+def emit_golden(out_dir: str):
+    g = {}
+    rng = np.random.default_rng(99)
+    # Wigner 3j samples
+    tj = []
+    for (l1, l2, l3) in [(1, 1, 2), (2, 2, 2), (3, 2, 1), (2, 1, 1), (4, 3, 2)]:
+        for m1 in range(-l1, l1 + 1):
+            for m2 in range(-l2, l2 + 1):
+                m3 = -(m1 + m2)
+                if abs(m3) > l3:
+                    continue
+                tj.append([l1, l2, l3, m1, m2, m3,
+                           so3.wigner_3j(l1, l2, l3, m1, m2, m3)])
+    g["wigner3j"] = tj
+    # real Gaunt tensor L=2
+    g["gaunt_222"] = np.asarray(so3.gaunt_tensor_real(2, 2, 2)).ravel().tolist()
+    g["cg_222"] = np.asarray(so3.cg_tensor_real(2, 2, 2)).ravel().tolist()
+    # SH values at sample directions
+    pts = rng.standard_normal((6, 3))
+    g["sh_points"] = pts.ravel().tolist()
+    g["sh_L3"] = so3.real_sh_xyz(3, pts).ravel().tolist()
+    # sh2f panels L=3 (re/im split)
+    p = np.asarray(fr.sh2f_panels(3))
+    g["sh2f_panels_L3_re"] = p.real.ravel().tolist()
+    g["sh2f_panels_L3_im"] = p.imag.ravel().tolist()
+    t = np.asarray(fr.f2sh_panels(3, 6))
+    g["f2sh_panels_L3_N6_re"] = t.real.ravel().tolist()
+    g["f2sh_panels_L3_N6_im"] = t.imag.ravel().tolist()
+    # gaunt TP I/O pairs
+    x1 = rng.standard_normal((3, 16))
+    x2 = rng.standard_normal((3, 16))
+    y = fr.gaunt_tp(x1, 3, x2, 3, 3)
+    g["tp_x1"] = x1.ravel().tolist()
+    g["tp_x2"] = x2.ravel().tolist()
+    g["tp_y_L3"] = y.ravel().tolist()
+    yfull = fr.gaunt_tp(x1, 3, x2, 3, 6)
+    g["tp_y_L6"] = yfull.ravel().tolist()
+    # wigner D for a fixed rotation (alpha, beta, gamma) = (0.3, 1.1, -0.7)
+    rot = so3.euler_zyz(0.3, 1.1, -0.7)
+    g["rot"] = rot.ravel().tolist()
+    g["wigner_d_block_L2"] = so3.wigner_d_real_block(2, rot).ravel().tolist()
+    os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+    with open(os.path.join(out_dir, "golden", "so3_golden.json"), "w") as f:
+        json.dump(g, f)
+    print("[aot] golden vectors written")
+
+
+# --------------------------------------------------------------------------
+# main
+# --------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="minimal artifact set (CI/tests)")
+    ap.add_argument("--tp-degrees", default="1,2,3,4")
+    ap.add_argument("--tp-batch", type=int, default=64)
+    args = ap.parse_args()
+
+    w = ArtifactWriter(args.out_dir)
+    emit_golden(args.out_dir)
+    if args.quick:
+        emit_tp_kernels(w, [2], 8)
+        emit_forcefield(w, [1])
+    else:
+        degrees = [int(d) for d in args.tp_degrees.split(",")]
+        emit_tp_kernels(w, degrees, args.tp_batch)
+        emit_forcefield(w, [1, 4, 8])
+        emit_forcefield(w, [8], tp="cg", suffix="_cg")  # CG eval variant
+        emit_ff_train(w)
+        emit_nbody(w)
+    w.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,315 @@
+"""SH <-> 2D Fourier change of basis (paper Section 3.2), numpy build-time.
+
+A feature x in R^{(L+1)^2} of real-SH coefficients represents the spherical
+function F(theta, phi) = sum x_{lm} Y_m^l.  Every Y_m^l is a trigonometric
+polynomial on the torus (theta, phi) in [0, 2pi)^2, so F extends to the
+torus, and:
+
+  sh2f:  x -> complex grid U[u, v] (|u|,|v| <= L) with
+         F = sum U[u,v] e^{i(u theta + v phi)};  sparse: v = +-m only.
+  multiplication of functions = 2D convolution of grids (Eqn. (5));
+  f2sh:  project a band-limited torus function back onto SH coefficients,
+         z^{l,m}_{u,v} = int_{S^2} e^{i(u theta + v phi)} Y_m^l dOmega
+         (exact: trig-poly algebra x analytic int_0^pi e^{ik theta} dtheta);
+         sparse: v = +-m only.
+
+Grids are stored as (2N+1, 2N+1) complex arrays, index [N+u, N+v].
+
+The packed "panel" tables (one dense matmul panel per |v|) are the form the
+Pallas kernels and the Rust fast path consume — they turn the sparse
+O(L^3) contraction into MXU-friendly dense matmuls.
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import numpy as np
+
+from . import so3
+
+SQRT2_OVER_2 = math.sqrt(2.0) / 2.0
+
+
+# --------------------------------------------------------------------------
+# theta-Fourier expansion of SH theta-parts
+# --------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def theta_fourier(l: int, m: int) -> np.ndarray:
+    """Complex coefficients c_u (u = -l..l, length 2l+1) of the signed torus
+    extension of N_l^m P_l^m(cos theta):
+
+      g(theta) = N P_l^m(cos theta) * sign(sin theta)^m
+
+    g is a trig polynomial of degree l; sampled on 4l+8 points + FFT => exact.
+    """
+    assert 0 <= m <= l
+    n = 4 * l + 8
+    theta = np.arange(n) * (2.0 * math.pi / n)
+    g = so3.assoc_legendre(l, m, np.cos(theta)) * so3.sh_norm(l, m)
+    if m % 2 == 1:
+        g = g * np.sign(np.sin(theta))
+        # at theta = 0, pi the P factor is 0 for odd m, so sign() ambiguity
+        # is harmless.
+    c = np.fft.fft(g) / n
+    out = np.zeros(2 * l + 1, dtype=np.complex128)
+    for u in range(-l, l + 1):
+        out[l + u] = c[u % n]
+    # sanity: the trig polynomial reconstructs g
+    return out
+
+
+@lru_cache(maxsize=None)
+def theta_projection(l: int, m: int, n_grid: int) -> np.ndarray:
+    """t_u = int_0^pi e^{i u theta} N P_l^m(cos th) sin th dtheta  for
+    u = -n_grid..n_grid (length 2*n_grid+1).
+
+    h(theta) = N P sin(theta) extended to the torus is a trig polynomial of
+    degree l+1 with coefficients d_k; then
+    t_u = sum_k d_k I(u+k),  I(0)=pi, I(odd n)=2i/n, I(even n != 0)=0.
+    """
+    assert 0 <= m <= l
+    n = 4 * (l + 1) + 8
+    theta = np.arange(n) * (2.0 * math.pi / n)
+    h = (
+        so3.assoc_legendre(l, m, np.cos(theta))
+        * so3.sh_norm(l, m)
+        * np.sin(theta)
+    )
+    if m % 2 == 1:
+        h = h * np.sign(np.sin(theta))
+    c = np.fft.fft(h) / n
+    deg = l + 1
+    d = {k: c[k % n] for k in range(-deg, deg + 1)}
+
+    def integral(nn: int) -> complex:
+        if nn == 0:
+            return math.pi
+        if nn % 2 == 0:
+            return 0.0
+        return 2.0j / nn
+
+    out = np.zeros(2 * n_grid + 1, dtype=np.complex128)
+    for u in range(-n_grid, n_grid + 1):
+        out[n_grid + u] = sum(dk * integral(u + k) for k, dk in d.items())
+    return out
+
+
+# --------------------------------------------------------------------------
+# dense conversion tables
+# --------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def sh2f_dense(L: int) -> np.ndarray:
+    """Y2F[i_{lm}, L+u, L+v]: x -> U = einsum('iuv,i->uv', Y2F, x)."""
+    n = so3.num_coeffs(L)
+    t = np.zeros((n, 2 * L + 1, 2 * L + 1), dtype=np.complex128)
+    for l, m in so3.lm_iter(L):
+        p = theta_fourier(l, abs(m))  # length 2l+1
+        i = so3.lm_index(l, m)
+        us = slice(L - l, L + l + 1)
+        if m == 0:
+            t[i, us, L] = p
+        elif m > 0:
+            t[i, us, L + m] = SQRT2_OVER_2 * p
+            t[i, us, L - m] = SQRT2_OVER_2 * p
+        else:  # m < 0: sqrt2 sin(|m| phi) = -i s e^{i|m|phi} + i s e^{-i|m|phi}
+            a = -m
+            t[i, us, L + a] = -1j * SQRT2_OVER_2 * p
+            t[i, us, L - a] = 1j * SQRT2_OVER_2 * p
+    return t
+
+
+@lru_cache(maxsize=None)
+def f2sh_dense(L_out: int, n_grid: int) -> np.ndarray:
+    """Z[i_{lm}, N+u, N+v]: grid -> x = real(einsum('iuv,uv->i', Z, U))."""
+    n = so3.num_coeffs(L_out)
+    ng = 2 * n_grid + 1
+    z = np.zeros((n, ng, ng), dtype=np.complex128)
+    for l, m in so3.lm_iter(L_out):
+        t = theta_projection(l, abs(m), n_grid)
+        i = so3.lm_index(l, m)
+        if m == 0:
+            z[i, :, n_grid] = 2.0 * math.pi * t
+        elif m > 0:
+            z[i, :, n_grid + m] = math.sqrt(2.0) * math.pi * t
+            z[i, :, n_grid - m] = math.sqrt(2.0) * math.pi * t
+        else:
+            a = -m
+            z[i, :, n_grid + a] = 1j * math.sqrt(2.0) * math.pi * t
+            z[i, :, n_grid - a] = -1j * math.sqrt(2.0) * math.pi * t
+    return z
+
+
+# --------------------------------------------------------------------------
+# reference (numpy) pipeline
+# --------------------------------------------------------------------------
+
+
+def sh2f(x: np.ndarray, L: int) -> np.ndarray:
+    """x[..., (L+1)^2] -> U[..., 2L+1, 2L+1] complex."""
+    return np.einsum("iuv,...i->...uv", sh2f_dense(L), x)
+
+
+def f2sh(grid: np.ndarray, L_out: int) -> np.ndarray:
+    """U[..., 2N+1, 2N+1] -> x[..., (L_out+1)^2] real."""
+    n_grid = (grid.shape[-1] - 1) // 2
+    z = f2sh_dense(L_out, n_grid)
+    return np.real(np.einsum("iuv,...uv->...i", z, grid))
+
+
+def conv2d_full(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Full 2D convolution of (...,2N1+1,2N1+1) with (...,2N2+1,2N2+1)."""
+    n1 = a.shape[-1]
+    n2 = b.shape[-1]
+    out_n = n1 + n2 - 1
+    out = np.zeros(np.broadcast_shapes(a.shape[:-2], b.shape[:-2]) + (out_n, out_n),
+                   dtype=np.result_type(a, b))
+    for i in range(n1):
+        for j in range(n1):
+            out[..., i : i + n2, j : j + n2] += a[..., i : i + 1, j : j + 1] * b
+    return out
+
+
+def conv2d_fft(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Same as conv2d_full via FFT (zero-padded)."""
+    n1, n2 = a.shape[-1], b.shape[-1]
+    n = n1 + n2 - 1
+    fa = np.fft.fft2(a, s=(n, n))
+    fb = np.fft.fft2(b, s=(n, n))
+    return np.fft.ifft2(fa * fb)
+
+
+def gaunt_tp(x1: np.ndarray, L1: int, x2: np.ndarray, L2: int, L3: int,
+             use_fft: bool = False) -> np.ndarray:
+    """Reference Gaunt tensor product via the Fourier pipeline.
+
+    x1[..., (L1+1)^2] (x) x2[..., (L2+1)^2] -> x3[..., (L3+1)^2], equal to
+    the direct contraction with the real Gaunt tensor (tested).
+    """
+    u1 = sh2f(x1, L1)
+    u2 = sh2f(x2, L2)
+    u3 = (conv2d_fft if use_fft else conv2d_full)(u1, u2)
+    return f2sh(u3, L3)
+
+
+def gaunt_tp_direct(x1: np.ndarray, L1: int, x2: np.ndarray, L2: int,
+                    L3: int) -> np.ndarray:
+    """Direct O(L^6) contraction with the quadrature Gaunt tensor (oracle)."""
+    g = so3.gaunt_tensor_real(L1, L2, L3)
+    return np.einsum("kij,...i,...j->...k", g, x1, x2)
+
+
+# --------------------------------------------------------------------------
+# packed per-|v| panel tables (kernel/Rust format)
+# --------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def sh2f_panels(L: int) -> np.ndarray:
+    """P[s, u, l] complex, shape [L+1, 2L+1, L+1]; zero where l < s.
+
+    With W[l, s] = x_{l,0} (s=0) or (sqrt2/2)(x_{l,s} - i x_{l,-s}) (s>0):
+      U[u, L+s] = sum_l P[s, u, l] W[l, s]
+      U[u, L-s] = sum_l P[s, u, l] conj(W[l, s])
+    """
+    p = np.zeros((L + 1, 2 * L + 1, L + 1), dtype=np.complex128)
+    for s in range(L + 1):
+        for l in range(s, L + 1):
+            pf = theta_fourier(l, s)  # u = -l..l
+            p[s, L - l : L + l + 1, l] = pf
+    return p
+
+
+@lru_cache(maxsize=None)
+def f2sh_panels(L_out: int, n_grid: int) -> np.ndarray:
+    """T[s, l, u] complex, shape [L_out+1, L_out+1, 2*n_grid+1].
+
+    x3_{l,0}  = 2 pi      Re sum_u T[0,l,u] U[u, N]
+    x3_{l,+s} = sqrt2 pi  Re sum_u T[s,l,u] (U[u, N+s] + U[u, N-s])
+    x3_{l,-s} = sqrt2 pi  Re sum_u i T[s,l,u] (U[u, N+s] - U[u, N-s])
+    (prefactors folded into the table here: see apply_f2sh_panels.)
+    """
+    t = np.zeros((L_out + 1, L_out + 1, 2 * n_grid + 1), dtype=np.complex128)
+    for s in range(L_out + 1):
+        for l in range(s, L_out + 1):
+            t[s, l] = theta_projection(l, s, n_grid)
+    return t
+
+
+def apply_sh2f_panels(x: np.ndarray, L: int) -> np.ndarray:
+    """O(L^3) panel form of sh2f; x[..., (L+1)^2] -> U[..., 2L+1, 2L+1]."""
+    p = sh2f_panels(L)
+    shp = x.shape[:-1]
+    u = np.zeros(shp + (2 * L + 1, 2 * L + 1), dtype=np.complex128)
+    w = np.zeros(shp + (L + 1, L + 1), dtype=np.complex128)  # [l, s]
+    for l in range(L + 1):
+        w[..., l, 0] = x[..., so3.lm_index(l, 0)]
+        for s in range(1, l + 1):
+            w[..., l, s] = SQRT2_OVER_2 * (
+                x[..., so3.lm_index(l, s)] - 1j * x[..., so3.lm_index(l, -s)]
+            )
+    for s in range(L + 1):
+        acc = np.einsum("ul,...l->...u", p[s], w[..., :, s])
+        u[..., :, L + s] = acc
+        if s > 0:
+            u[..., :, L - s] = np.einsum(
+                "ul,...l->...u", p[s], np.conj(w[..., :, s])
+            )
+    return u
+
+
+def apply_f2sh_panels(grid: np.ndarray, L_out: int) -> np.ndarray:
+    """O(L^3) panel form of f2sh."""
+    n_grid = (grid.shape[-1] - 1) // 2
+    t = f2sh_panels(L_out, n_grid)
+    shp = grid.shape[:-2]
+    x = np.zeros(shp + (so3.num_coeffs(L_out),))
+    for s in range(L_out + 1):
+        gp = grid[..., :, n_grid + s]
+        gm = grid[..., :, n_grid - s]
+        if s == 0:
+            acc = 2.0 * math.pi * np.einsum("lu,...u->...l", t[0], gp)
+            for l in range(L_out + 1):
+                x[..., so3.lm_index(l, 0)] = np.real(acc[..., l])
+        else:
+            accp = math.sqrt(2.0) * math.pi * np.einsum(
+                "lu,...u->...l", t[s], gp + gm
+            )
+            accm = math.sqrt(2.0) * math.pi * np.einsum(
+                "lu,...u->...l", 1j * t[s], gp - gm
+            )
+            for l in range(s, L_out + 1):
+                x[..., so3.lm_index(l, s)] = np.real(accp[..., l])
+                x[..., so3.lm_index(l, -s)] = np.real(accm[..., l])
+    return x
+
+
+# --------------------------------------------------------------------------
+# float32 re/im-packed tables exported to kernels and Rust
+# --------------------------------------------------------------------------
+
+
+def packed_tables_f32(L1: int, L2: int, L3: int):
+    """Everything the Pallas kernels / Rust runtime need, float32, with the
+    complex dimension split into a trailing re/im axis of size 2.
+
+    Returns dict with:
+      p1: [L1+1, 2L1+1, L1+1, 2]   sh2f panels for the left operand
+      p2: [L2+1, 2L2+1, L2+1, 2]   sh2f panels for the right operand
+      t3: [L3+1, L3+1, 2N+1, 2]    f2sh panels on the product grid,
+                                   N = L1 + L2 (prefactors NOT folded)
+    """
+
+    def c2f(a):
+        return np.stack([a.real, a.imag], axis=-1).astype(np.float32)
+
+    n = L1 + L2
+    return {
+        "p1": c2f(sh2f_panels(L1)),
+        "p2": c2f(sh2f_panels(L2)),
+        "t3": c2f(f2sh_panels(L3, n)),
+    }

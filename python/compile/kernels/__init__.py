@@ -1,0 +1,2 @@
+"""Layer-1 Pallas kernels for the paper's compute hot-spot."""
+from . import cg_tp, gaunt_tp, ref  # noqa: F401

@@ -1,0 +1,91 @@
+"""Layer-1 Pallas kernel for the Clebsch-Gordan tensor product baseline.
+
+The paper's O(L^6) reference point (Eqn. (1)): a dense contraction of the
+full real CG coupling tensor C[k, i, j] with the two inputs.  Kept as a
+kernel so the Fig. 1 efficiency comparison can run both paths through the
+identical execution stack (same PJRT runtime, same batching).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import so3
+
+# Perf pass #2 (EXPERIMENTS.md §Perf): interpret-mode pallas lowers the
+# grid to an XLA while-loop that the CPU backend executes serially per
+# block; a large default block makes typical calls single-block (grid=1)
+# and lets XLA fuse the whole panel contraction.  On real TPU hardware the
+# block size would instead be tiled to VMEM (see DESIGN.md §4).
+DEFAULT_BLOCK_B = 4096
+
+
+def _cg_tp_kernel(x1_ref, x2_ref, c_ref, o_ref):
+    """o[b, k] = sum_{i,j} C[k,i,j] x1[b,i] x2[b,j].
+
+    Contracted as (x1 . C) then (. x2): two matmul-shaped steps so the MXU
+    sees dense panels rather than a 3D gather.
+    """
+    x1 = x1_ref[...]
+    x2 = x2_ref[...]
+    c = c_ref[...]
+    # t[b, k, j] = sum_i x1[b, i] C[k, i, j]
+    t = jnp.einsum("bi,kij->bkj", x1, c)
+    o_ref[...] = jnp.einsum("bkj,bj->bk", t, x2)
+
+
+@functools.lru_cache(maxsize=None)
+def make_cg_tp(L1: int, L2: int, L3: int, block_b: int = DEFAULT_BLOCK_B,
+               interpret: bool = True):
+    """Factory: batched full CG tensor product [B,(L1+1)^2] x [B,(L2+1)^2]
+    -> [B,(L3+1)^2] (differentiable via custom VJP with the transposed
+    contractions)."""
+    c_np = so3.cg_tensor_real(L1, L2, L3)
+
+    def run(x1, x2):
+        dt = x1.dtype
+        c = jnp.asarray(c_np, dt)
+        b = x1.shape[0]
+        pad = (-b) % block_b
+        if pad:
+            x1 = jnp.concatenate([x1, jnp.zeros((pad, x1.shape[1]), dt)], 0)
+            x2 = jnp.concatenate([x2, jnp.zeros((pad, x2.shape[1]), dt)], 0)
+        bp = x1.shape[0]
+        n1, n2, n3 = x1.shape[1], x2.shape[1], c_np.shape[0]
+        out = pl.pallas_call(
+            _cg_tp_kernel,
+            grid=(bp // block_b,),
+            in_specs=[
+                pl.BlockSpec((block_b, n1), lambda i: (i, 0)),
+                pl.BlockSpec((block_b, n2), lambda i: (i, 0)),
+                pl.BlockSpec((n3, n1, n2), lambda i: (0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_b, n3), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((bp, n3), dt),
+            interpret=interpret,
+        )(x1, x2, c)
+        return out[:b]
+
+    @jax.custom_vjp
+    def cg_tp(x1, x2):
+        return run(x1, x2)
+
+    def fwd(x1, x2):
+        # call the *wrapped* op (not raw pallas) so nested differentiation
+        # (grad-of-grad, as in force-matching losses) re-enters the
+        # custom_vjp rule instead of trying to linearize pallas_call.
+        return cg_tp(x1, x2), (x1, x2)
+
+    def bwd(res, g):
+        x1, x2 = res
+        dt = x1.dtype
+        c = jnp.asarray(c_np, dt)
+        d1 = jnp.einsum("bk,kij,bj->bi", g, c, x2)
+        d2 = jnp.einsum("bk,kij,bi->bj", g, c, x1)
+        return d1, d2
+
+    cg_tp.defvjp(fwd, bwd)
+    return cg_tp

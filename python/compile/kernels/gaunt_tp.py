@@ -1,0 +1,408 @@
+"""Layer-1 Pallas kernels for the Gaunt Tensor Product (paper Section 3.2).
+
+The O(L^3) pipeline is three stages:
+
+  1. sh2f   — SH coefficients -> 2D Fourier grid, exploiting the m = +-v
+              sparsity as dense per-|v| matmul *panels* (MXU-friendly);
+  2. conv2d — multiplication of spherical functions == 2D convolution of
+              the coefficient grids.  Two paths: a direct Pallas kernel
+              (small L) and XLA's `fft` op (O(L^2 log L), large L);
+  3. f2sh   — project the product grid back onto SH coefficients, again
+              per-|v| panels.
+
+All kernels use real arithmetic with an explicit re/im split (stacked
+float planes): TPU Pallas has no complex registers, and this keeps the
+inner loops pure MXU matmuls.  Kernels are lowered with interpret=True —
+the CPU PJRT plugin cannot execute Mosaic custom-calls (see DESIGN.md
+§Hardware-Adaptation).
+
+Differentiation: the Gaunt TP is bilinear with a *fully symmetric*
+coupling tensor (the Gaunt integral is symmetric in all three SH), so the
+VJP is again a Gaunt TP:  d/dx1 <g, G(x1,x2)> = G(g, x2) truncated to L1.
+We register that as a custom_vjp so forces (-dE/dr) flow through the
+Pallas kernels.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .. import fourier as fr
+from .. import so3
+
+# Perf pass #2 (EXPERIMENTS.md §Perf): interpret-mode pallas lowers the
+# grid to an XLA while-loop that the CPU backend executes serially per
+# block; a large default block makes typical calls single-block (grid=1)
+# and lets XLA fuse the whole panel contraction.  On real TPU hardware the
+# block size would instead be tiled to VMEM (see DESIGN.md §4).
+DEFAULT_BLOCK_B = 4096
+
+
+# --------------------------------------------------------------------------
+# kernel bodies
+# --------------------------------------------------------------------------
+
+
+def _sh2f_kernel(w_re_ref, w_im_ref, p_re_ref, p_im_ref,
+                 up_re_ref, up_im_ref, um_re_ref, um_im_ref):
+    """Panel contraction: out[b,u,s] = sum_l P[s,u,l] * W[b,l,s].
+
+    up = P * W (v = +s half), um = P * conj(W) (v = -s half).
+    Shapes: W [B, L+1, L+1] (l, s), P [L+1, 2L+1, L+1] (s, u, l).
+    """
+    w_re = w_re_ref[...]
+    w_im = w_im_ref[...]
+    p_re = p_re_ref[...]
+    p_im = p_im_ref[...]
+    a = jnp.einsum("sul,bls->bus", p_re, w_re)
+    b = jnp.einsum("sul,bls->bus", p_im, w_im)
+    c = jnp.einsum("sul,bls->bus", p_re, w_im)
+    d = jnp.einsum("sul,bls->bus", p_im, w_re)
+    up_re_ref[...] = a - b
+    up_im_ref[...] = c + d
+    um_re_ref[...] = a + b
+    um_im_ref[...] = d - c
+
+
+def _f2sh_kernel(gp_re_ref, gp_im_ref, gm_re_ref, gm_im_ref,
+                 t_re_ref, t_im_ref, xp_ref, xm_ref):
+    """Panel back-projection.
+
+    gp[b,u,s] = U3[b, u, N+s], gm[b,u,s] = U3[b, u, N-s].
+    xp[b,s,l] = Re sum_u T[s,l,u] (gp+gm)   (-> m = +s, and m = 0 via s=0)
+    xm[b,s,l] = Re sum_u i T[s,l,u] (gp-gm) (-> m = -s)
+    Prefactors (pi, sqrt2 pi) are applied by the host-side glue.
+    """
+    gp_re = gp_re_ref[...]
+    gp_im = gp_im_ref[...]
+    gm_re = gm_re_ref[...]
+    gm_im = gm_im_ref[...]
+    t_re = t_re_ref[...]
+    t_im = t_im_ref[...]
+    sp_re = gp_re + gm_re
+    sp_im = gp_im + gm_im
+    sm_re = gp_re - gm_re
+    sm_im = gp_im - gm_im
+    xp_ref[...] = (
+        jnp.einsum("slu,bus->bsl", t_re, sp_re)
+        - jnp.einsum("slu,bus->bsl", t_im, sp_im)
+    )
+    xm_ref[...] = -(
+        jnp.einsum("slu,bus->bsl", t_im, sm_re)
+        + jnp.einsum("slu,bus->bsl", t_re, sm_im)
+    )
+
+
+def _conv2d_kernel(a_re_ref, a_im_ref, b_re_ref, b_im_ref, o_re_ref, o_im_ref):
+    """Direct full 2D convolution (small-L path), complex via re/im planes."""
+    a_re = a_re_ref[...]
+    a_im = a_im_ref[...]
+    b_re = b_re_ref[...]
+    b_im = b_im_ref[...]
+    n1 = a_re.shape[-1]
+    n2 = b_re.shape[-1]
+    if n1 == 1:  # degenerate L=0 grid: plain complex product
+        o_re_ref[...] = a_re * b_re - a_im * b_im
+        o_im_ref[...] = a_re * b_im + a_im * b_re
+        return
+    n = n1 + n2 - 1
+    o_re = jnp.zeros(a_re.shape[:-2] + (n, n), a_re.dtype)
+    o_im = jnp.zeros_like(o_re)
+    for i in range(n1):
+        for j in range(n1):
+            ar = a_re[..., i : i + 1, j : j + 1]
+            ai = a_im[..., i : i + 1, j : j + 1]
+            o_re = o_re.at[..., i : i + n2, j : j + n2].add(ar * b_re - ai * b_im)
+            o_im = o_im.at[..., i : i + n2, j : j + n2].add(ar * b_im + ai * b_re)
+    o_re_ref[...] = o_re
+    o_im_ref[...] = o_im
+
+
+# --------------------------------------------------------------------------
+# host-side glue (cheap O(L^2) reshuffles; jnp, differentiable)
+# --------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _w_build_indices(L: int):
+    """Index/scale arrays turning flat x[(L+1)^2] into W[l,s] re/im parts.
+
+    w[l, 0] = x_{l,0};  w[l, s>0] = (sqrt2/2)(x_{l,s} - i x_{l,-s})
+    Entries with s > l are zero (scale 0, index 0).
+    """
+    n = L + 1
+    idx_re = np.zeros((n, n), dtype=np.int32)
+    sc_re = np.zeros((n, n), dtype=np.float64)
+    idx_im = np.zeros((n, n), dtype=np.int32)
+    sc_im = np.zeros((n, n), dtype=np.float64)
+    for l in range(n):
+        idx_re[l, 0] = so3.lm_index(l, 0)
+        sc_re[l, 0] = 1.0
+        for s in range(1, l + 1):
+            idx_re[l, s] = so3.lm_index(l, s)
+            sc_re[l, s] = fr.SQRT2_OVER_2
+            idx_im[l, s] = so3.lm_index(l, -s)
+            sc_im[l, s] = -fr.SQRT2_OVER_2
+    return idx_re, sc_re, idx_im, sc_im
+
+
+def build_w(x: jnp.ndarray, L: int):
+    """x[..., (L+1)^2] -> (w_re, w_im) of shape [..., L+1, L+1] (l, s)."""
+    idx_re, sc_re, idx_im, sc_im = _w_build_indices(L)
+    dt = x.dtype
+    w_re = jnp.take(x, jnp.asarray(idx_re.ravel()), axis=-1) * jnp.asarray(
+        sc_re.ravel(), dt
+    )
+    w_im = jnp.take(x, jnp.asarray(idx_im.ravel()), axis=-1) * jnp.asarray(
+        sc_im.ravel(), dt
+    )
+    shape = x.shape[:-1] + (L + 1, L + 1)
+    return w_re.reshape(shape), w_im.reshape(shape)
+
+
+def assemble_grid(up_re, up_im, um_re, um_im):
+    """(up, um)[..., u, s] -> complex-split grid [..., u, 2L+1] over v.
+
+    v-axis layout: [L-s ... L ... L+s]; column v=L+s from up[:, :, s],
+    column v=L-s from um[:, :, s]; center column is up s=0.
+    """
+    left_re = jnp.flip(um_re[..., 1:], axis=-1)
+    left_im = jnp.flip(um_im[..., 1:], axis=-1)
+    g_re = jnp.concatenate([left_re, up_re], axis=-1)
+    g_im = jnp.concatenate([left_im, up_im], axis=-1)
+    return g_re, g_im
+
+
+def split_grid(g_re, g_im, S: int):
+    """grid [..., u, 2N+1] -> gp, gm [..., u, S+1] (columns N+s / N-s)."""
+    n = (g_re.shape[-1] - 1) // 2
+    gp_re = g_re[..., n : n + S + 1]
+    gp_im = g_im[..., n : n + S + 1]
+    gm_re = jnp.flip(g_re[..., n - S : n + 1], axis=-1)
+    gm_im = jnp.flip(g_im[..., n - S : n + 1], axis=-1)
+    return gp_re, gp_im, gm_re, gm_im
+
+
+@functools.lru_cache(maxsize=None)
+def _scatter_indices(L3: int):
+    """Flat (l,m) gather plan from xp/xm[s,l] planes."""
+    n = so3.num_coeffs(L3)
+    src = np.zeros(n, dtype=np.int32)
+    use_m = np.zeros(n, dtype=np.float64)  # 1.0 -> take xm, 0.0 -> take xp
+    scale = np.zeros(n, dtype=np.float64)
+    for l, m in so3.lm_iter(L3):
+        i = so3.lm_index(l, m)
+        s = abs(m)
+        src[i] = s * (L3 + 1) + l
+        use_m[i] = 1.0 if m < 0 else 0.0
+        scale[i] = math.pi if m == 0 else math.sqrt(2.0) * math.pi
+    return src, use_m, scale
+
+
+def scatter_flat(xp: jnp.ndarray, xm: jnp.ndarray, L3: int) -> jnp.ndarray:
+    """xp, xm [..., S+1, L3+1] -> x3[..., (L3+1)^2] with prefactors.
+
+    s=0 rows of xp already hold 2x the center column contribution (gp==gm),
+    hence the pi (not 2 pi) prefactor from _scatter_indices.
+    """
+    src, use_m, scale = _scatter_indices(L3)
+    dt = xp.dtype
+    xpf = xp.reshape(xp.shape[:-2] + (-1,))
+    xmf = xm.reshape(xm.shape[:-2] + (-1,))
+    idx = jnp.asarray(src)
+    sel = jnp.asarray(use_m, dt)
+    sc = jnp.asarray(scale, dt)
+    vp = jnp.take(xpf, idx, axis=-1)
+    vm = jnp.take(xmf, idx, axis=-1)
+    return (vp * (1.0 - sel) + vm * sel) * sc
+
+
+# --------------------------------------------------------------------------
+# pallas_call wrappers
+# --------------------------------------------------------------------------
+
+
+def _effective_block(b, block_b):
+    """Single block when the batch fits (the common case); otherwise the
+    configured tile."""
+    return b if b <= block_b else block_b
+
+
+def _pad_batch(x, block_b):
+    b = x.shape[0]
+    eb = _effective_block(b, block_b)
+    pad = (-b) % eb
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], 0)
+    return x, b
+
+
+def sh2f_pallas(x: jnp.ndarray, L: int, block_b: int = DEFAULT_BLOCK_B,
+                interpret: bool = True):
+    """Batched sh2f via the Pallas panel kernel.
+
+    x[B, (L+1)^2] -> complex-split grid (g_re, g_im) [B, 2L+1, 2L+1].
+    """
+    p = fr.sh2f_panels(L)
+    dt = x.dtype
+    p_re = jnp.asarray(p.real, dt)
+    p_im = jnp.asarray(p.imag, dt)
+    w_re, w_im = build_w(x, L)
+    w_re, b0 = _pad_batch(w_re, block_b)
+    w_im, _ = _pad_batch(w_im, block_b)
+    bp = w_re.shape[0]
+    block_b = _effective_block(bp, block_b)
+    n_s = L + 1
+    n_u = 2 * L + 1
+    grid = (bp // block_b,)
+    blk_w = pl.BlockSpec((block_b, n_s, n_s), lambda i: (i, 0, 0))
+    blk_p = pl.BlockSpec((n_s, n_u, n_s), lambda i: (0, 0, 0))
+    blk_o = pl.BlockSpec((block_b, n_u, n_s), lambda i: (i, 0, 0))
+    shp = jax.ShapeDtypeStruct((bp, n_u, n_s), dt)
+    up_re, up_im, um_re, um_im = pl.pallas_call(
+        _sh2f_kernel,
+        grid=grid,
+        in_specs=[blk_w, blk_w, blk_p, blk_p],
+        out_specs=[blk_o, blk_o, blk_o, blk_o],
+        out_shape=[shp, shp, shp, shp],
+        interpret=interpret,
+    )(w_re, w_im, p_re, p_im)
+    g_re, g_im = assemble_grid(up_re, up_im, um_re, um_im)
+    return g_re[:b0], g_im[:b0]
+
+
+def f2sh_pallas(g_re: jnp.ndarray, g_im: jnp.ndarray, L3: int,
+                block_b: int = DEFAULT_BLOCK_B, interpret: bool = True):
+    """Batched f2sh via the Pallas panel kernel.
+
+    grid [B, 2N+1, 2N+1] (complex split) -> x3 [B, (L3+1)^2].
+    """
+    n_grid = (g_re.shape[-1] - 1) // 2
+    t = fr.f2sh_panels(L3, n_grid)
+    dt = g_re.dtype
+    t_re = jnp.asarray(t.real, dt)
+    t_im = jnp.asarray(t.imag, dt)
+    gp_re, gp_im, gm_re, gm_im = split_grid(g_re, g_im, L3)
+    gp_re, b0 = _pad_batch(gp_re, block_b)
+    gp_im, _ = _pad_batch(gp_im, block_b)
+    gm_re, _ = _pad_batch(gm_re, block_b)
+    gm_im, _ = _pad_batch(gm_im, block_b)
+    bp = gp_re.shape[0]
+    block_b = _effective_block(bp, block_b)
+    n_s = L3 + 1
+    n_u = 2 * n_grid + 1
+    grid = (bp // block_b,)
+    blk_g = pl.BlockSpec((block_b, n_u, n_s), lambda i: (i, 0, 0))
+    blk_t = pl.BlockSpec((n_s, n_s, n_u), lambda i: (0, 0, 0))
+    blk_o = pl.BlockSpec((block_b, n_s, n_s), lambda i: (i, 0, 0))
+    shp = jax.ShapeDtypeStruct((bp, n_s, n_s), dt)
+    xp, xm = pl.pallas_call(
+        _f2sh_kernel,
+        grid=grid,
+        in_specs=[blk_g, blk_g, blk_g, blk_g, blk_t, blk_t],
+        out_specs=[blk_o, blk_o],
+        out_shape=[shp, shp],
+        interpret=interpret,
+    )(gp_re, gp_im, gm_re, gm_im, t_re, t_im)
+    return scatter_flat(xp, xm, L3)[:b0]
+
+
+def conv2d_pallas(a_re, a_im, b_re, b_im, block_b: int = DEFAULT_BLOCK_B,
+                  interpret: bool = True):
+    """Batched direct 2D convolution kernel (small-L path)."""
+    n1, n2 = a_re.shape[-1], b_re.shape[-1]
+    n = n1 + n2 - 1
+    dt = a_re.dtype
+    a_re, b0 = _pad_batch(a_re, block_b)
+    a_im, _ = _pad_batch(a_im, block_b)
+    b_re, _ = _pad_batch(b_re, block_b)
+    b_im, _ = _pad_batch(b_im, block_b)
+    bp = a_re.shape[0]
+    block_b = _effective_block(bp, block_b)
+    grid = (bp // block_b,)
+    blk_a = pl.BlockSpec((block_b, n1, n1), lambda i: (i, 0, 0))
+    blk_b = pl.BlockSpec((block_b, n2, n2), lambda i: (i, 0, 0))
+    blk_o = pl.BlockSpec((block_b, n, n), lambda i: (i, 0, 0))
+    shp = jax.ShapeDtypeStruct((bp, n, n), dt)
+    o_re, o_im = pl.pallas_call(
+        _conv2d_kernel,
+        grid=grid,
+        in_specs=[blk_a, blk_a, blk_b, blk_b],
+        out_specs=[blk_o, blk_o],
+        out_shape=[shp, shp],
+        interpret=interpret,
+    )(a_re, a_im, b_re, b_im)
+    return o_re[:b0], o_im[:b0]
+
+
+def conv2d_fft_xla(a_re, a_im, b_re, b_im):
+    """FFT convolution path: XLA `fft` op between the two Pallas stages."""
+    n1, n2 = a_re.shape[-1], b_re.shape[-1]
+    n = n1 + n2 - 1
+    a = (a_re + 1j * a_im).astype(jnp.complex64 if a_re.dtype == jnp.float32
+                                  else jnp.complex128)
+    b = (b_re + 1j * b_im).astype(a.dtype)
+    fa = jnp.fft.fft2(a, s=(n, n))
+    fb = jnp.fft.fft2(b, s=(n, n))
+    o = jnp.fft.ifft2(fa * fb)
+    return jnp.real(o).astype(a_re.dtype), jnp.imag(o).astype(a_re.dtype)
+
+
+# --------------------------------------------------------------------------
+# assembled Gaunt tensor product with custom VJP
+# --------------------------------------------------------------------------
+
+
+def _gaunt_tp_impl(x1, x2, L1: int, L2: int, L3: int, method: str,
+                   block_b: int, interpret: bool):
+    g1_re, g1_im = sh2f_pallas(x1, L1, block_b, interpret)
+    g2_re, g2_im = sh2f_pallas(x2, L2, block_b, interpret)
+    if method == "fft":
+        o_re, o_im = conv2d_fft_xla(g1_re, g1_im, g2_re, g2_im)
+    else:
+        o_re, o_im = conv2d_pallas(g1_re, g1_im, g2_re, g2_im, block_b, interpret)
+    return f2sh_pallas(o_re, o_im, L3, block_b, interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def make_gaunt_tp(L1: int, L2: int, L3: int, method: str = "fft",
+                  block_b: int = DEFAULT_BLOCK_B, interpret: bool = True):
+    """Factory: differentiable batched Gaunt TP  [B,(L1+1)^2] x [B,(L2+1)^2]
+    -> [B,(L3+1)^2].  The VJP reuses the same pipeline (full symmetry of the
+    Gaunt tensor)."""
+
+    @jax.custom_vjp
+    def gaunt_tp(x1, x2):
+        return _gaunt_tp_impl(x1, x2, L1, L2, L3, method, block_b, interpret)
+
+    def fwd(x1, x2):
+        return gaunt_tp(x1, x2), (x1, x2)
+
+    def bwd(res, g):
+        # The cotangent of a bilinear op with a fully symmetric coupling
+        # tensor is the same op on (g, other input).  Resolving the wrapped
+        # (custom_vjp) factories here — not the raw pallas impl — keeps the
+        # backward pass itself differentiable, so force training (grad of a
+        # loss on -dE/dr) composes to arbitrary order.
+        x1, x2 = res
+        d1 = make_gaunt_tp(L3, L2, L1, method, block_b, interpret)(g, x2)
+        d2 = make_gaunt_tp(L3, L1, L2, method, block_b, interpret)(g, x1)
+        return d1, d2
+
+    gaunt_tp.defvjp(fwd, bwd)
+    return gaunt_tp
+
+
+def gaunt_tp_channelwise(x1, x2, L1, L2, L3, method="fft",
+                         block_b=DEFAULT_BLOCK_B, interpret=True):
+    """Channel-wise combination rule (paper Appendix C): inputs
+    [B, C, (L+1)^2]; the C axis folds into the batch."""
+    b, c = x1.shape[0], x1.shape[1]
+    f = make_gaunt_tp(L1, L2, L3, method, block_b, interpret)
+    out = f(x1.reshape(b * c, -1), x2.reshape(b * c, -1))
+    return out.reshape(b, c, -1)

@@ -1,0 +1,496 @@
+"""SO(3) / O(3) representation-theory substrate (build-time, numpy).
+
+Everything the Gaunt Tensor Product needs, implemented from scratch:
+
+- associated Legendre functions (no Condon-Shortley phase),
+- orthonormal **real** spherical harmonics (angular + differentiable
+  Cartesian-polynomial forms),
+- Wigner 3j symbols (Racah explicit sum, paper Eqn. (23)),
+- Clebsch-Gordan coefficients (paper Eqn. (22)),
+- **complex** Gaunt coefficients (3j product formula, paper Eqn. (24)),
+- **real** Gaunt coefficients, by two independent routes that are
+  cross-checked in tests:
+    (a) exact Gauss-Legendre x trapezoid quadrature of the triple product,
+    (b) unitary change of basis from the complex Gaunt tensor,
+- real-basis Wigner 3j ("w3j", the tensor used by e3nn-style CG tensor
+  products) via the same unitary transform,
+- real Wigner-D matrices (numerically, from the equivariance of real SH),
+  used by equivariance tests and by the eSCN rotation trick.
+
+Conventions: real SH are orthonormal on S^2,
+    Y_m^l(theta, phi) = N_l^{|m|} P_l^{|m|}(cos theta) * Phi_m(phi),
+    Phi_m = sqrt(2) cos(m phi) [m>0], 1 [m=0], sqrt(2) sin(|m| phi) [m<0],
+    N_l^m = sqrt((2l+1)/(4 pi) * (l-m)!/(l+m)!),
+with *no* Condon-Shortley phase in P_l^m.
+
+Flat irrep indexing: features of degree up to L are vectors of length
+(L+1)^2 with entry (l, m) at index l*l + l + m (m = -l..l).
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import numpy as np
+
+# --------------------------------------------------------------------------
+# indexing helpers
+# --------------------------------------------------------------------------
+
+
+def lm_index(l: int, m: int) -> int:
+    """Flat index of (l, m) in the (L+1)^2 irrep layout."""
+    assert -l <= m <= l, (l, m)
+    return l * l + l + m
+
+
+def num_coeffs(L: int) -> int:
+    """Dimension of a feature holding irreps of degree 0..L."""
+    return (L + 1) ** 2
+
+
+def lm_iter(L: int):
+    """Iterate (l, m) pairs in flat order."""
+    for l in range(L + 1):
+        for m in range(-l, l + 1):
+            yield l, m
+
+
+# --------------------------------------------------------------------------
+# factorials / associated Legendre
+# --------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def _fact(n: int) -> float:
+    return math.factorial(n) * 1.0 if n >= 0 else 0.0
+
+
+def assoc_legendre(l: int, m: int, x: np.ndarray) -> np.ndarray:
+    """P_l^m(x), 0 <= m <= l, WITHOUT the Condon-Shortley phase.
+
+    Stable upward recurrence:
+      P_m^m   = (2m-1)!! (1-x^2)^{m/2}
+      P_{m+1}^m = x (2m+1) P_m^m
+      (l-m) P_l^m = x (2l-1) P_{l-1}^m - (l+m-1) P_{l-2}^m
+    """
+    assert 0 <= m <= l
+    x = np.asarray(x, dtype=np.float64)
+    somx2 = np.sqrt(np.maximum(0.0, 1.0 - x * x))
+    pmm = np.ones_like(x)
+    fact = 1.0
+    for _ in range(m):
+        pmm = pmm * fact * somx2
+        fact += 2.0
+    if l == m:
+        return pmm
+    pmmp1 = x * (2 * m + 1) * pmm
+    if l == m + 1:
+        return pmmp1
+    pll = pmmp1
+    for ll in range(m + 2, l + 1):
+        pll = (x * (2 * ll - 1) * pmmp1 - (ll + m - 1) * pmm) / (ll - m)
+        pmm = pmmp1
+        pmmp1 = pll
+    return pll
+
+
+def sh_norm(l: int, m: int) -> float:
+    """Orthonormalization constant N_l^{|m|}."""
+    m = abs(m)
+    return math.sqrt((2 * l + 1) / (4.0 * math.pi) * _fact(l - m) / _fact(l + m))
+
+
+# --------------------------------------------------------------------------
+# real spherical harmonics (angular form)
+# --------------------------------------------------------------------------
+
+
+def real_sh_angular(l: int, m: int, theta: np.ndarray, phi: np.ndarray) -> np.ndarray:
+    """Real orthonormal Y_m^l(theta, phi)."""
+    p = assoc_legendre(l, abs(m), np.cos(theta)) * sh_norm(l, m)
+    if m > 0:
+        return p * math.sqrt(2.0) * np.cos(m * phi)
+    if m < 0:
+        return p * math.sqrt(2.0) * np.sin(-m * phi)
+    return p
+
+
+def real_sh_all(L: int, theta: np.ndarray, phi: np.ndarray) -> np.ndarray:
+    """All real SH up to degree L, stacked last axis: shape (..., (L+1)^2)."""
+    theta = np.asarray(theta, dtype=np.float64)
+    out = np.zeros(theta.shape + (num_coeffs(L),))
+    for l, m in lm_iter(L):
+        out[..., lm_index(l, m)] = real_sh_angular(l, m, theta, phi)
+    return out
+
+
+def complex_sh(l: int, m: int, theta: np.ndarray, phi: np.ndarray) -> np.ndarray:
+    """Complex orthonormal SH with Condon-Shortley phase (physics convention).
+
+    Y_l^m = (-1)^m N_l^{|m|} P_l^{|m|}(cos th) e^{i m phi}  [m >= 0]
+    Y_l^{-m} = (-1)^m conj(Y_l^m)
+    """
+    am = abs(m)
+    p = assoc_legendre(l, am, np.cos(theta)) * sh_norm(l, am)
+    if m >= 0:
+        return ((-1.0) ** m) * p * np.exp(1j * m * phi)
+    # Y_l^{-am} = (-1)^am conj(Y_l^am)
+    return p * np.exp(-1j * am * phi)
+
+
+# --------------------------------------------------------------------------
+# quadrature on the sphere (exact for band-limited integrands)
+# --------------------------------------------------------------------------
+
+
+def sphere_quadrature(deg: int):
+    """Nodes/weights exact for products of SH with total degree <= deg.
+
+    Gauss-Legendre in cos(theta) (exact for poly degree <= 2n-1) x uniform
+    trapezoid in phi (exact for trig polys of degree < n_phi).
+    Returns (theta[K], phi[J], w[K]) with total weight sum_k w_k * (2 pi/J)
+    integrating over S^2.
+    """
+    n_theta = deg // 2 + 2
+    x, w = np.polynomial.legendre.leggauss(n_theta)
+    theta = np.arccos(x)
+    n_phi = deg + 2
+    phi = np.arange(n_phi) * (2.0 * math.pi / n_phi)
+    return theta, phi, w, 2.0 * math.pi / n_phi
+
+
+def sphere_integral(f_vals: np.ndarray, w: np.ndarray, dphi: float) -> np.ndarray:
+    """Integrate f over S^2 given values f[K_theta, J_phi, ...]."""
+    return np.tensordot(w, f_vals.sum(axis=1), axes=(0, 0)) * dphi
+
+
+# --------------------------------------------------------------------------
+# Wigner 3j, Clebsch-Gordan (paper Eqns. 22-23)
+# --------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def wigner_3j(l1: int, l2: int, l3: int, m1: int, m2: int, m3: int) -> float:
+    """Wigner 3j symbol via the Racah explicit sum (paper Eqn. (23))."""
+    if m1 + m2 + m3 != 0:
+        return 0.0
+    if not (abs(l1 - l2) <= l3 <= l1 + l2):
+        return 0.0
+    if abs(m1) > l1 or abs(m2) > l2 or abs(m3) > l3:
+        return 0.0
+    pref = math.sqrt(
+        _fact(l1 + l2 - l3)
+        * _fact(l1 - l2 + l3)
+        * _fact(-l1 + l2 + l3)
+        / _fact(l1 + l2 + l3 + 1)
+    )
+    pref *= math.sqrt(
+        _fact(l1 - m1)
+        * _fact(l1 + m1)
+        * _fact(l2 - m2)
+        * _fact(l2 + m2)
+        * _fact(l3 - m3)
+        * _fact(l3 + m3)
+    )
+    k_min = max(0, l2 - l3 - m1, l1 - l3 + m2)
+    k_max = min(l1 + l2 - l3, l1 - m1, l2 + m2)
+    s = 0.0
+    for k in range(k_min, k_max + 1):
+        den = (
+            _fact(k)
+            * _fact(l1 + l2 - l3 - k)
+            * _fact(l1 - m1 - k)
+            * _fact(l2 + m2 - k)
+            * _fact(l3 - l2 + m1 + k)
+            * _fact(l3 - l1 - m2 + k)
+        )
+        s += ((-1.0) ** k) / den
+    return ((-1.0) ** (l1 - l2 - m3)) * pref * s
+
+
+def clebsch_gordan(l1: int, m1: int, l2: int, m2: int, l: int, m: int) -> float:
+    """C^{(l,m)}_{(l1,m1)(l2,m2)} from the 3j symbol (paper Eqn. (22))."""
+    if m1 + m2 != m:
+        return 0.0
+    return ((-1.0) ** (-l1 + l2 - m)) * math.sqrt(2 * l + 1) * wigner_3j(
+        l1, l2, l, m1, m2, -m
+    )
+
+
+def gaunt_complex(l1: int, m1: int, l2: int, m2: int, l3: int, m3: int) -> float:
+    """Complex Gaunt coefficient: integral of three complex SH (Eqn. (24))."""
+    return (
+        math.sqrt(
+            (2 * l1 + 1) * (2 * l2 + 1) * (2 * l3 + 1) / (4.0 * math.pi)
+        )
+        * wigner_3j(l1, l2, l3, 0, 0, 0)
+        * wigner_3j(l1, l2, l3, m1, m2, m3)
+    )
+
+
+# --------------------------------------------------------------------------
+# real <-> complex SH unitary and real Gaunt / real w3j tensors
+# --------------------------------------------------------------------------
+
+
+def real_to_complex_u(l: int) -> np.ndarray:
+    """U with Y^R_m = sum_mu U[m, mu] Y^C_mu (rows m=-l..l, cols mu=-l..l)."""
+    dim = 2 * l + 1
+    u = np.zeros((dim, dim), dtype=np.complex128)
+    c = l  # center offset
+    u[c + 0, c + 0] = 1.0
+    s = math.sqrt(0.5)
+    for m in range(1, l + 1):
+        # Y^R_m  = s * ((-1)^m Y^C_m + Y^C_{-m})
+        u[c + m, c + m] = s * ((-1.0) ** m)
+        u[c + m, c - m] = s
+        # Y^R_{-m} = -i s * ((-1)^m Y^C_m - Y^C_{-m})
+        u[c - m, c + m] = -1j * s * ((-1.0) ** m)
+        u[c - m, c - m] = 1j * s
+    return u
+
+
+@lru_cache(maxsize=None)
+def gaunt_tensor_real(L1: int, L2: int, L3: int) -> np.ndarray:
+    """Real Gaunt tensor G[i3, i1, i2] = int Y^R_{i3} Y^R_{i1} Y^R_{i2} dOmega.
+
+    Computed by exact quadrature (Gauss-Legendre x trapezoid); the complex
+    3j route is cross-checked against this in tests.
+    Shape: [(L3+1)^2, (L1+1)^2, (L2+1)^2].
+    """
+    deg = L1 + L2 + L3
+    theta, phi, w, dphi = sphere_quadrature(deg)
+    th, ph = np.meshgrid(theta, phi, indexing="ij")
+    y1 = real_sh_all(L1, th, ph)  # [K, J, n1]
+    y2 = real_sh_all(L2, th, ph)
+    y3 = real_sh_all(L3, th, ph)
+    # integral of y3 * y1 * y2 over the sphere
+    wgrid = w[:, None] * dphi
+    t = np.einsum("kja,kjb,kjc,kj->abc", y3, y1, y2, wgrid, optimize=True)
+    t[np.abs(t) < 1e-12] = 0.0
+    return t
+
+
+@lru_cache(maxsize=None)
+def gaunt_tensor_real_from_3j(L1: int, L2: int, L3: int) -> np.ndarray:
+    """Real Gaunt tensor via U-transform of the complex Gaunt tensor."""
+    n1, n2, n3 = num_coeffs(L1), num_coeffs(L2), num_coeffs(L3)
+    out = np.zeros((n3, n1, n2))
+    for l1 in range(L1 + 1):
+        u1 = real_to_complex_u(l1)
+        for l2 in range(L2 + 1):
+            u2 = real_to_complex_u(l2)
+            for l3 in range(L3 + 1):
+                if (l1 + l2 + l3) % 2 != 0:
+                    continue  # complex Gaunt vanishes for odd sums
+                if not (abs(l1 - l2) <= l3 <= l1 + l2):
+                    continue
+                u3 = real_to_complex_u(l3)
+                gc = np.zeros((2 * l3 + 1, 2 * l1 + 1, 2 * l2 + 1))
+                for m1 in range(-l1, l1 + 1):
+                    for m2 in range(-l2, l2 + 1):
+                        m3 = -(m1 + m2)
+                        if abs(m3) > l3:
+                            continue
+                        # int Y^C_{m3'} with m3' index: G^C(l1 m1, l2 m2, l3 m3)
+                        gc[l3 + m3, l1 + m1, l2 + m2] = gaunt_complex(
+                            l1, m1, l2, m2, l3, m3
+                        )
+                blk = np.einsum("ax,by,cz,xyz->abc", u3, u1, u2, gc.astype(complex))
+                assert np.abs(blk.imag).max() < 1e-10
+                out[
+                    lm_index(l3, -l3) : lm_index(l3, l3) + 1,
+                    lm_index(l1, -l1) : lm_index(l1, l1) + 1,
+                    lm_index(l2, -l2) : lm_index(l2, l2) + 1,
+                ] = blk.real
+    out[np.abs(out) < 1e-12] = 0.0
+    return out
+
+
+@lru_cache(maxsize=None)
+def w3j_real(l1: int, l2: int, l3: int) -> np.ndarray:
+    """Real-basis Wigner 3j tensor (the e3nn-style CG coupling tensor).
+
+    Computed by U-transform of the complex 3j; for odd l1+l2+l3 the raw
+    transform is purely imaginary and we keep the imaginary part (this is the
+    standard phase choice making the tensor real and SO(3)-equivariant).
+    Shape [2l1+1, 2l2+1, 2l3+1]; normalized so sum of squares = 1 when
+    the triangle inequality holds.
+    """
+    if not (abs(l1 - l2) <= l3 <= l1 + l2):
+        return np.zeros((2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1))
+    u1, u2, u3 = real_to_complex_u(l1), real_to_complex_u(l2), real_to_complex_u(l3)
+    t = np.zeros((2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1), dtype=np.complex128)
+    for m1 in range(-l1, l1 + 1):
+        for m2 in range(-l2, l2 + 1):
+            m3 = -(m1 + m2)
+            if abs(m3) > l3:
+                continue
+            t[l1 + m1, l2 + m2, l3 + m3] = wigner_3j(l1, l2, l3, m1, m2, m3)
+    out = np.einsum("ax,by,cz,xyz->abc", u1, u2, u3, t)
+    if (l1 + l2 + l3) % 2 == 0:
+        assert np.abs(out.imag).max() < 1e-10
+        res = out.real
+    else:
+        assert np.abs(out.real).max() < 1e-10
+        res = out.imag
+    res[np.abs(res) < 1e-12] = 0.0
+    return res
+
+
+@lru_cache(maxsize=None)
+def cg_tensor_real(L1: int, L2: int, L3: int) -> np.ndarray:
+    """Full real CG coupling tensor C[i3, i1, i2] for the CG-TP baseline.
+
+    Uses the real-basis w3j with the sqrt(2l3+1) CG normalization, summing
+    all (l1, l2) -> l3 paths with unit path weights (the paper's *full*
+    tensor product of Eqn. (1)).
+    """
+    n1, n2, n3 = num_coeffs(L1), num_coeffs(L2), num_coeffs(L3)
+    out = np.zeros((n3, n1, n2))
+    for l1 in range(L1 + 1):
+        for l2 in range(L2 + 1):
+            for l3 in range(abs(l1 - l2), min(L3, l1 + l2) + 1):
+                w = w3j_real(l1, l2, l3) * math.sqrt(2 * l3 + 1)
+                out[
+                    lm_index(l3, -l3) : lm_index(l3, l3) + 1,
+                    lm_index(l1, -l1) : lm_index(l1, l1) + 1,
+                    lm_index(l2, -l2) : lm_index(l2, l2) + 1,
+                ] += np.transpose(w, (2, 0, 1))
+    return out
+
+
+# --------------------------------------------------------------------------
+# rotations, real Wigner-D
+# --------------------------------------------------------------------------
+
+
+def rot_z(a: float) -> np.ndarray:
+    c, s = math.cos(a), math.sin(a)
+    return np.array([[c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0]])
+
+
+def rot_y(a: float) -> np.ndarray:
+    c, s = math.cos(a), math.sin(a)
+    return np.array([[c, 0.0, s], [0.0, 1.0, 0.0], [-s, 0.0, c]])
+
+
+def euler_zyz(alpha: float, beta: float, gamma: float) -> np.ndarray:
+    """Rotation matrix R = Rz(alpha) Ry(beta) Rz(gamma)."""
+    return rot_z(alpha) @ rot_y(beta) @ rot_z(gamma)
+
+
+def random_rotation(rng: np.random.Generator) -> np.ndarray:
+    """Haar-ish random rotation via QR of a Gaussian matrix."""
+    a = rng.standard_normal((3, 3))
+    q, r = np.linalg.qr(a)
+    q = q * np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:
+        q[:, 0] = -q[:, 0]
+    return q
+
+
+def xyz_to_angles(r: np.ndarray):
+    """(theta, phi) of unit vectors r[..., 3]; theta from +z, phi from +x."""
+    r = np.asarray(r, dtype=np.float64)
+    n = np.linalg.norm(r, axis=-1, keepdims=True)
+    u = r / np.maximum(n, 1e-30)
+    theta = np.arccos(np.clip(u[..., 2], -1.0, 1.0))
+    phi = np.arctan2(u[..., 1], u[..., 0])
+    return theta, phi
+
+
+def real_sh_xyz(L: int, r: np.ndarray) -> np.ndarray:
+    """Real SH of unit vectors given in Cartesian form: shape (..., (L+1)^2)."""
+    theta, phi = xyz_to_angles(r)
+    return real_sh_all(L, theta, phi)
+
+
+@lru_cache(maxsize=None)
+def _wigner_d_lstsq_points(l: int) -> np.ndarray:
+    rng = np.random.default_rng(12345 + l)
+    pts = rng.standard_normal((max(64, 8 * (2 * l + 1)), 3))
+    return pts / np.linalg.norm(pts, axis=1, keepdims=True)
+
+
+def wigner_d_real(l: int, rot: np.ndarray) -> np.ndarray:
+    """Real Wigner-D matrix D^l(R) with Y^l(R r) = D^l(R) Y^l(r).
+
+    Solved exactly (machine precision) by least squares over sample points —
+    SH equivariance makes the system consistent.
+    """
+    pts = _wigner_d_lstsq_points(l)
+    y = real_sh_xyz(l, pts)[:, lm_index(l, -l) : lm_index(l, l) + 1]
+    yr = real_sh_xyz(l, pts @ rot.T)[:, lm_index(l, -l) : lm_index(l, l) + 1]
+    d, *_ = np.linalg.lstsq(y, yr, rcond=None)
+    return d.T
+
+
+def wigner_d_real_block(L: int, rot: np.ndarray) -> np.ndarray:
+    """Block-diagonal real Wigner-D acting on a full (L+1)^2 feature."""
+    n = num_coeffs(L)
+    out = np.zeros((n, n))
+    for l in range(L + 1):
+        sl = slice(lm_index(l, -l), lm_index(l, l) + 1)
+        out[sl, sl] = wigner_d_real(l, rot)
+    return out
+
+
+def align_to_y(r: np.ndarray) -> np.ndarray:
+    """Rotation R with R r/||r|| = (0, 1, 0) — the eSCN alignment trick."""
+    u = np.asarray(r, dtype=np.float64)
+    u = u / np.linalg.norm(u)
+    y = np.array([0.0, 1.0, 0.0])
+    v = np.cross(u, y)
+    c = float(u @ y)
+    if c < -1.0 + 1e-12:  # antiparallel: rotate pi about x
+        return np.diag([1.0, -1.0, -1.0])
+    vx = np.array([[0, -v[2], v[1]], [v[2], 0, -v[0]], [-v[1], v[0], 0]])
+    return np.eye(3) + vx + vx @ vx / (1.0 + c)
+
+
+# --------------------------------------------------------------------------
+# Cartesian polynomial form of real SH (differentiable evaluation tables)
+# --------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def sh_monomial_table(L: int):
+    """Coefficients expressing each real SH of degree l as a homogeneous
+    degree-l polynomial in (x, y, z) on the unit sphere.
+
+    Returns (exps, coefs): exps[l] is an int array [n_mono_l, 3] of
+    (a, b, c) exponents with a+b+c = l; coefs[l] is [2l+1, n_mono_l] with
+    Y_m^l(r) = sum_k coefs[l][m+l, k] * x^a y^b z^c.  Solved to machine
+    precision by least squares on oversampled random unit vectors.
+    """
+    rng = np.random.default_rng(777)
+    exps, coefs = [], []
+    for l in range(L + 1):
+        e = np.array(
+            [(a, b, l - a - b) for a in range(l + 1) for b in range(l - a + 1)],
+            dtype=np.int64,
+        ).reshape(-1, 3)
+        npts = 6 * max(len(e), 2 * l + 1) + 16
+        pts = rng.standard_normal((npts, 3))
+        pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+        mono = np.prod(pts[:, None, :] ** e[None, :, :], axis=2)  # [npts, nmono]
+        ysh = real_sh_xyz(l, pts)[:, lm_index(l, -l) : lm_index(l, l) + 1]
+        sol, *_ = np.linalg.lstsq(mono, ysh, rcond=None)  # [nmono, 2l+1]
+        sol[np.abs(sol) < 1e-11] = 0.0
+        exps.append(e)
+        coefs.append(sol.T.copy())
+    return exps, coefs
+
+
+def real_sh_xyz_poly(L: int, r: np.ndarray) -> np.ndarray:
+    """Evaluate real SH via the polynomial tables (numpy; pole-free)."""
+    exps, coefs = sh_monomial_table(L)
+    r = np.asarray(r, dtype=np.float64)
+    u = r / np.linalg.norm(r, axis=-1, keepdims=True)
+    out = np.zeros(r.shape[:-1] + (num_coeffs(L),))
+    for l in range(L + 1):
+        mono = np.prod(u[..., None, :] ** exps[l][None, :, :], axis=-1)
+        out[..., lm_index(l, -l) : lm_index(l, l) + 1] = mono @ coefs[l].T
+    return out

@@ -1,0 +1,2 @@
+import jax
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,272 @@
+"""Tests for the SH <-> 2D Fourier change of basis (fourier.py)."""
+import math
+
+import numpy as np
+import pytest
+
+from compile import fourier as fr
+from compile import so3
+
+RNG = np.random.default_rng(2024)
+
+
+def _eval_grid(grid, theta, phi):
+    """Evaluate sum U[u,v] e^{i(u th + v ph)} at sample points."""
+    n = (grid.shape[-1] - 1) // 2
+    us = np.arange(-n, n + 1)
+    e_th = np.exp(1j * np.multiply.outer(theta, us))  # [K, 2n+1]
+    e_ph = np.exp(1j * np.multiply.outer(phi, us))
+    return np.real(np.einsum("uv,ku,kv->k", grid, e_th, e_ph))
+
+
+class TestThetaFourier:
+    @pytest.mark.parametrize("l,m", [(l, m) for l in range(7) for m in range(l + 1)])
+    def test_reconstructs_theta_part(self, l, m):
+        c = fr.theta_fourier(l, m)
+        theta = np.linspace(0.05, math.pi - 0.05, 37)
+        us = np.arange(-l, l + 1)
+        rec = np.real(np.exp(1j * np.multiply.outer(theta, us)) @ c)
+        exact = so3.assoc_legendre(l, m, np.cos(theta)) * so3.sh_norm(l, m)
+        np.testing.assert_allclose(rec, exact, atol=1e-12)
+
+    @pytest.mark.parametrize("l,m", [(2, 0), (3, 1), (4, 3), (5, 2)])
+    def test_parity_structure(self, l, m):
+        """even m: coefficients real & even in u; odd m: imaginary & odd."""
+        c = fr.theta_fourier(l, m)
+        rev = c[::-1]
+        if m % 2 == 0:
+            assert np.abs(c.imag).max() < 1e-12
+            np.testing.assert_allclose(c, rev, atol=1e-12)
+        else:
+            assert np.abs(c.real).max() < 1e-12
+            np.testing.assert_allclose(c, -rev, atol=1e-12)
+
+    @pytest.mark.parametrize("l,m", [(0, 0), (1, 0), (2, 1), (4, 2), (5, 5)])
+    def test_theta_projection_vs_quadrature(self, l, m):
+        """t_u = int_0^pi e^{iu th} N P sin(th) dth, checked by quadrature."""
+        n_grid = l + 2
+        t = fr.theta_projection(l, m, n_grid)
+        # Gauss-Legendre on [0, pi]
+        x, w = np.polynomial.legendre.leggauss(64)
+        th = (x + 1) * (math.pi / 2)
+        ww = w * (math.pi / 2)
+        f = so3.assoc_legendre(l, m, np.cos(th)) * so3.sh_norm(l, m) * np.sin(th)
+        for u in range(-n_grid, n_grid + 1):
+            quad = np.sum(ww * f * np.exp(1j * u * th))
+            np.testing.assert_allclose(t[n_grid + u], quad, atol=1e-10)
+
+
+class TestSh2f:
+    @pytest.mark.parametrize("L", [0, 1, 2, 3, 5])
+    def test_function_values_match(self, L):
+        x = RNG.standard_normal(so3.num_coeffs(L))
+        grid = fr.sh2f(x, L)
+        th = RNG.uniform(0.05, math.pi - 0.05, 25)
+        ph = RNG.uniform(0, 2 * math.pi, 25)
+        f_sh = (so3.real_sh_all(L, th, ph) * x).sum(-1)
+        np.testing.assert_allclose(_eval_grid(grid, th, ph), f_sh, atol=1e-12)
+
+    @pytest.mark.parametrize("L", [1, 3, 5])
+    def test_v_sparsity(self, L):
+        """column v of sh2f(e_{lm}) non-zero only for v = +-m (paper Sec 3.2)."""
+        for l, m in so3.lm_iter(L):
+            x = np.zeros(so3.num_coeffs(L))
+            x[so3.lm_index(l, m)] = 1.0
+            grid = fr.sh2f(x, L)
+            for v in range(-L, L + 1):
+                col = grid[:, L + v]
+                if abs(v) != abs(m):
+                    assert np.abs(col).max() < 1e-14, (l, m, v)
+
+    @pytest.mark.parametrize("L", [1, 2, 4])
+    def test_hermitian_symmetry(self, L):
+        """real spatial function => U[-u,-v] = conj(U[u,v])."""
+        x = RNG.standard_normal(so3.num_coeffs(L))
+        g = fr.sh2f(x, L)
+        np.testing.assert_allclose(g[::-1, ::-1], np.conj(g), atol=1e-13)
+
+    @pytest.mark.parametrize("L", [0, 1, 2, 4, 6])
+    def test_panels_match_dense(self, L):
+        x = RNG.standard_normal((3, so3.num_coeffs(L)))
+        np.testing.assert_allclose(
+            fr.apply_sh2f_panels(x, L), fr.sh2f(x, L), atol=1e-12
+        )
+
+    def test_linear(self):
+        L = 3
+        x, y = RNG.standard_normal((2, so3.num_coeffs(L)))
+        np.testing.assert_allclose(
+            fr.sh2f(2.0 * x - y, L), 2.0 * fr.sh2f(x, L) - fr.sh2f(y, L), atol=1e-12
+        )
+
+
+class TestF2sh:
+    @pytest.mark.parametrize("L", [0, 1, 2, 3, 5, 7])
+    def test_round_trip_identity(self, L):
+        x = RNG.standard_normal(so3.num_coeffs(L))
+        np.testing.assert_allclose(fr.f2sh(fr.sh2f(x, L), L), x, atol=1e-12)
+
+    @pytest.mark.parametrize("L", [1, 2, 4])
+    def test_panels_match_dense(self, L):
+        x = RNG.standard_normal((2, so3.num_coeffs(L)))
+        g = fr.sh2f(x, L)
+        np.testing.assert_allclose(
+            fr.apply_f2sh_panels(g, L), fr.f2sh(g, L), atol=1e-12
+        )
+
+    def test_truncation_projects(self):
+        """f2sh to a lower degree = orthogonal projection (drop high l)."""
+        L = 4
+        x = RNG.standard_normal(so3.num_coeffs(L))
+        g = fr.sh2f(x, L)
+        lo = fr.f2sh(g, 2)
+        np.testing.assert_allclose(lo, x[: so3.num_coeffs(2)], atol=1e-12)
+
+
+class TestConv2d:
+    def test_full_matches_numpy_1d_outer(self):
+        a = RNG.standard_normal((3, 3)) + 1j * RNG.standard_normal((3, 3))
+        b = RNG.standard_normal((5, 5)) + 1j * RNG.standard_normal((5, 5))
+        out = fr.conv2d_full(a, b)
+        # brute force
+        ref = np.zeros((7, 7), dtype=complex)
+        for i in range(3):
+            for j in range(3):
+                for k in range(5):
+                    for l in range(5):
+                        ref[i + k, j + l] += a[i, j] * b[k, l]
+        np.testing.assert_allclose(out, ref, atol=1e-13)
+
+    def test_fft_matches_direct(self):
+        a = RNG.standard_normal((7, 7)) + 1j * RNG.standard_normal((7, 7))
+        b = RNG.standard_normal((9, 9)) + 1j * RNG.standard_normal((9, 9))
+        np.testing.assert_allclose(
+            fr.conv2d_fft(a, b), fr.conv2d_full(a, b), atol=1e-12
+        )
+
+    def test_delta_identity(self):
+        d = np.zeros((3, 3), dtype=complex)
+        d[1, 1] = 1.0
+        b = RNG.standard_normal((5, 5)).astype(complex)
+        out = fr.conv2d_full(d, b)
+        np.testing.assert_allclose(out[1:6, 1:6], b, atol=1e-14)
+
+    def test_commutative(self):
+        a = RNG.standard_normal((5, 5)).astype(complex)
+        b = RNG.standard_normal((7, 7)).astype(complex)
+        np.testing.assert_allclose(
+            fr.conv2d_full(a, b), fr.conv2d_full(b, a), atol=1e-12
+        )
+
+
+class TestGauntTensorProduct:
+    @pytest.mark.parametrize(
+        "L1,L2,L3",
+        [(0, 0, 0), (1, 1, 2), (2, 2, 4), (3, 2, 4), (2, 3, 1), (4, 4, 4)],
+    )
+    def test_pipeline_equals_direct_contraction(self, L1, L2, L3):
+        """THE core correctness claim: Fourier pipeline == Gaunt contraction."""
+        x1 = RNG.standard_normal((4, so3.num_coeffs(L1)))
+        x2 = RNG.standard_normal((4, so3.num_coeffs(L2)))
+        a = fr.gaunt_tp(x1, L1, x2, L2, L3)
+        b = fr.gaunt_tp_direct(x1, L1, x2, L2, L3)
+        np.testing.assert_allclose(a, b, atol=1e-11)
+
+    @pytest.mark.parametrize("L1,L2,L3", [(2, 2, 2), (3, 3, 3)])
+    def test_fft_path_matches(self, L1, L2, L3):
+        x1 = RNG.standard_normal(so3.num_coeffs(L1))
+        x2 = RNG.standard_normal(so3.num_coeffs(L2))
+        np.testing.assert_allclose(
+            fr.gaunt_tp(x1, L1, x2, L2, L3, use_fft=True),
+            fr.gaunt_tp(x1, L1, x2, L2, L3, use_fft=False),
+            atol=1e-11,
+        )
+
+    def test_multiplying_by_constant_function(self):
+        """F2 = c * Y_0^0 with c = sqrt(4pi) is the constant 1: TP = x."""
+        L = 3
+        x = RNG.standard_normal(so3.num_coeffs(L))
+        one = np.zeros(1)
+        one[0] = math.sqrt(4 * math.pi)
+        out = fr.gaunt_tp(x, L, one, 0, L)
+        np.testing.assert_allclose(out, x, atol=1e-12)
+
+    @pytest.mark.parametrize("L", [1, 2, 3])
+    def test_equivariance(self, L):
+        """Gaunt TP commutes with rotations (paper Appendix D)."""
+        rot = so3.random_rotation(np.random.default_rng(11))
+        d = so3.wigner_d_real_block(L, rot)
+        d_out = so3.wigner_d_real_block(2 * L, rot)
+        x1 = RNG.standard_normal(so3.num_coeffs(L))
+        x2 = RNG.standard_normal(so3.num_coeffs(L))
+        a = fr.gaunt_tp(d @ x1, L, d @ x2, L, 2 * L)
+        b = d_out @ fr.gaunt_tp(x1, L, x2, L, 2 * L)
+        np.testing.assert_allclose(a, b, atol=1e-10)
+
+    @pytest.mark.parametrize("L", [1, 2])
+    def test_parity_invariance(self, L):
+        """Gaunt TP commutes with the point reflection (O(3), not just SO(3)):
+        parity acts as (-1)^l per irrep."""
+        def par(L_, x):
+            out = x.copy()
+            for l, m in so3.lm_iter(L_):
+                out[so3.lm_index(l, m)] *= (-1.0) ** l
+            return out
+
+        x1 = RNG.standard_normal(so3.num_coeffs(L))
+        x2 = RNG.standard_normal(so3.num_coeffs(L))
+        a = fr.gaunt_tp(par(L, x1), L, par(L, x2), L, 2 * L)
+        b = par(2 * L, fr.gaunt_tp(x1, L, x2, L, 2 * L))
+        np.testing.assert_allclose(a, b, atol=1e-11)
+
+    def test_pointwise_product_semantics(self):
+        """coefficients of F1*F2: evaluate both sides on the sphere."""
+        L = 2
+        x1 = RNG.standard_normal(so3.num_coeffs(L))
+        x2 = RNG.standard_normal(so3.num_coeffs(L))
+        x3 = fr.gaunt_tp(x1, L, x2, L, 2 * L)
+        th = RNG.uniform(0.1, math.pi - 0.1, 30)
+        ph = RNG.uniform(0, 2 * math.pi, 30)
+        f1 = (so3.real_sh_all(L, th, ph) * x1).sum(-1)
+        f2 = (so3.real_sh_all(L, th, ph) * x2).sum(-1)
+        f3 = (so3.real_sh_all(2 * L, th, ph) * x3).sum(-1)
+        np.testing.assert_allclose(f3, f1 * f2, atol=1e-11)
+
+    def test_associativity_through_grids(self):
+        """(x1*x2)*x3 == x1*(x2*x3) as functions — basis for the many-body
+        divide-and-conquer (paper Appendix C)."""
+        L = 2
+        xs = RNG.standard_normal((3, so3.num_coeffs(L)))
+        g = [fr.sh2f(x, L) for x in xs]
+        a = fr.conv2d_full(fr.conv2d_full(g[0], g[1]), g[2])
+        b = fr.conv2d_full(g[0], fr.conv2d_full(g[1], g[2]))
+        np.testing.assert_allclose(a, b, atol=1e-12)
+        np.testing.assert_allclose(fr.f2sh(a, 2), fr.f2sh(b, 2), atol=1e-12)
+
+
+class TestEscnSparsity:
+    def test_aligned_filter_grid_single_column(self):
+        """SH of the z-aligned vector have m=0 only => Fourier grid of the
+        filter is non-zero only at v=0 (paper Sec 3.3, Equivariant Conv)."""
+        L = 4
+        y = so3.real_sh_xyz(L, np.array([0.0, 0.0, 1.0]))
+        g = fr.sh2f(y, L)
+        for v in range(-L, L + 1):
+            if v != 0:
+                assert np.abs(g[:, L + v]).max() < 1e-12
+        assert np.abs(g[:, L]).max() > 1e-3
+
+
+class TestPackedTables:
+    def test_shapes_and_dtype(self):
+        t = fr.packed_tables_f32(3, 2, 4)
+        assert t["p1"].shape == (4, 7, 4, 2) and t["p1"].dtype == np.float32
+        assert t["p2"].shape == (3, 5, 3, 2)
+        assert t["t3"].shape == (5, 5, 11, 2)
+
+    def test_p_zero_below_s(self):
+        t = fr.packed_tables_f32(3, 3, 3)
+        p = t["p1"]
+        for s in range(4):
+            for l in range(s):
+                assert np.abs(p[s, :, l]).max() == 0.0

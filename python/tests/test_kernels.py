@@ -1,0 +1,321 @@
+"""Pallas kernels vs pure-jnp oracles (the core L1 correctness signal)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import so3
+from compile.kernels import cg_tp as ck
+from compile.kernels import gaunt_tp as gk
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(b, L, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal((b, so3.num_coeffs(L))), dtype)
+
+
+# --------------------------------------------------------------------------
+# sh2f / f2sh pallas stages
+# --------------------------------------------------------------------------
+
+
+class TestSh2fPallas:
+    @pytest.mark.parametrize("L", [0, 1, 2, 4, 6])
+    def test_matches_dense_ref(self, L):
+        x = _rand(3, L)
+        g_re, g_im = gk.sh2f_pallas(x, L)
+        want = ref.sh2f_ref(x, L)
+        np.testing.assert_allclose(g_re, jnp.real(want), atol=2e-5)
+        np.testing.assert_allclose(g_im, jnp.imag(want), atol=2e-5)
+
+    def test_float64(self):
+        x = _rand(2, 3, jnp.float64)
+        g_re, g_im = gk.sh2f_pallas(x, 3)
+        want = ref.sh2f_ref(x, 3)
+        np.testing.assert_allclose(g_re, jnp.real(want), atol=1e-12)
+        np.testing.assert_allclose(g_im, jnp.imag(want), atol=1e-12)
+
+    def test_batch_not_multiple_of_block(self):
+        x = _rand(37, 2)
+        g_re, _ = gk.sh2f_pallas(x, 2, block_b=16)
+        want = ref.sh2f_ref(x, 2)
+        np.testing.assert_allclose(g_re, jnp.real(want), atol=2e-5)
+
+    def test_under_jit(self):
+        x = _rand(4, 3)
+        f = jax.jit(lambda a: gk.sh2f_pallas(a, 3))
+        g_re, g_im = f(x)
+        want = ref.sh2f_ref(x, 3)
+        np.testing.assert_allclose(g_re, jnp.real(want), atol=2e-5)
+
+
+class TestF2shPallas:
+    @pytest.mark.parametrize("L", [0, 1, 2, 4, 6])
+    def test_round_trip(self, L):
+        x = _rand(3, L)
+        g_re, g_im = gk.sh2f_pallas(x, L)
+        back = gk.f2sh_pallas(g_re, g_im, L)
+        np.testing.assert_allclose(back, x, atol=3e-5)
+
+    @pytest.mark.parametrize("L_out", [0, 1, 3])
+    def test_truncation(self, L_out):
+        x = _rand(2, 4)
+        g_re, g_im = gk.sh2f_pallas(x, 4)
+        out = gk.f2sh_pallas(g_re, g_im, L_out)
+        np.testing.assert_allclose(out, x[:, : so3.num_coeffs(L_out)], atol=3e-5)
+
+
+class TestConv2dPallas:
+    @pytest.mark.parametrize("n1,n2", [(3, 3), (5, 7), (9, 5)])
+    def test_matches_ref(self, n1, n2):
+        a = jnp.asarray(RNG.standard_normal((2, n1, n1, 2)), jnp.float32)
+        b = jnp.asarray(RNG.standard_normal((2, n2, n2, 2)), jnp.float32)
+        o_re, o_im = gk.conv2d_pallas(a[..., 0], a[..., 1], b[..., 0], b[..., 1])
+        want = ref.conv2d_ref(
+            (a[..., 0] + 1j * a[..., 1]).astype(jnp.complex64),
+            (b[..., 0] + 1j * b[..., 1]).astype(jnp.complex64),
+        )
+        np.testing.assert_allclose(o_re, jnp.real(want), atol=2e-5)
+        np.testing.assert_allclose(o_im, jnp.imag(want), atol=2e-5)
+
+    def test_fft_path_matches_direct(self):
+        a = jnp.asarray(RNG.standard_normal((3, 7, 7, 2)), jnp.float32)
+        b = jnp.asarray(RNG.standard_normal((3, 7, 7, 2)), jnp.float32)
+        d_re, d_im = gk.conv2d_pallas(a[..., 0], a[..., 1], b[..., 0], b[..., 1])
+        f_re, f_im = gk.conv2d_fft_xla(a[..., 0], a[..., 1], b[..., 0], b[..., 1])
+        np.testing.assert_allclose(d_re, f_re, atol=3e-5)
+        np.testing.assert_allclose(d_im, f_im, atol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# full Gaunt TP kernel
+# --------------------------------------------------------------------------
+
+
+class TestGauntTpPallas:
+    @pytest.mark.parametrize(
+        "L1,L2,L3", [(0, 0, 0), (1, 1, 2), (2, 2, 2), (3, 2, 4), (2, 3, 1),
+                     (4, 4, 4)]
+    )
+    @pytest.mark.parametrize("method", ["fft", "direct"])
+    def test_matches_gaunt_contraction(self, L1, L2, L3, method):
+        x1, x2 = _rand(4, L1), _rand(4, L2)
+        f = gk.make_gaunt_tp(L1, L2, L3, method)
+        out = f(x1, x2)
+        want = ref.gaunt_tp_ref(x1, x2, L1, L2, L3)
+        np.testing.assert_allclose(out, want, atol=5e-5)
+
+    def test_matches_fourier_ref(self):
+        x1, x2 = _rand(2, 3), _rand(2, 3)
+        f = gk.make_gaunt_tp(3, 3, 3)
+        np.testing.assert_allclose(
+            f(x1, x2), ref.gaunt_tp_fourier_ref(x1, x2, 3, 3, 3), atol=5e-5
+        )
+
+    def test_bilinear(self):
+        f = gk.make_gaunt_tp(2, 2, 2)
+        x1, x1b, x2 = _rand(3, 2), _rand(3, 2), _rand(3, 2)
+        np.testing.assert_allclose(
+            f(2.0 * x1 + x1b, x2),
+            2.0 * f(x1, x2) + f(x1b, x2),
+            atol=1e-4,
+        )
+
+    def test_symmetric_when_same_degrees(self):
+        f = gk.make_gaunt_tp(2, 2, 3)
+        x1, x2 = _rand(3, 2), _rand(3, 2)
+        np.testing.assert_allclose(f(x1, x2), f(x2, x1), atol=2e-5)
+
+    def test_equivariance(self):
+        L = 2
+        rot = so3.random_rotation(np.random.default_rng(3))
+        d = jnp.asarray(so3.wigner_d_real_block(L, rot), jnp.float32)
+        d_out = jnp.asarray(so3.wigner_d_real_block(2 * L, rot), jnp.float32)
+        x1, x2 = _rand(3, L), _rand(3, L)
+        f = gk.make_gaunt_tp(L, L, 2 * L)
+        a = f(x1 @ d.T, x2 @ d.T)
+        b = f(x1, x2) @ d_out.T
+        np.testing.assert_allclose(a, b, atol=1e-4)
+
+    def test_grad_matches_oracle(self):
+        L = 2
+        x1, x2 = _rand(3, L), _rand(3, L)
+        f = gk.make_gaunt_tp(L, L, 2 * L)
+
+        def loss(a, b):
+            return jnp.sum(jnp.sin(f(a, b)))
+
+        def loss_ref(a, b):
+            return jnp.sum(jnp.sin(ref.gaunt_tp_ref(a, b, L, L, 2 * L)))
+
+        g1, g2 = jax.grad(loss, (0, 1))(x1, x2)
+        r1, r2 = jax.grad(loss_ref, (0, 1))(x1, x2)
+        np.testing.assert_allclose(g1, r1, atol=1e-4)
+        np.testing.assert_allclose(g2, r2, atol=1e-4)
+
+    def test_jittable(self):
+        f = jax.jit(gk.make_gaunt_tp(2, 2, 2))
+        x1, x2 = _rand(5, 2), _rand(5, 2)
+        np.testing.assert_allclose(
+            f(x1, x2), ref.gaunt_tp_ref(x1, x2, 2, 2, 2), atol=5e-5
+        )
+
+    def test_channelwise(self):
+        B, C, L = 2, 3, 2
+        x1 = jnp.asarray(RNG.standard_normal((B, C, so3.num_coeffs(L))), jnp.float32)
+        x2 = jnp.asarray(RNG.standard_normal((B, C, so3.num_coeffs(L))), jnp.float32)
+        out = gk.gaunt_tp_channelwise(x1, x2, L, L, L)
+        want = ref.gaunt_tp_ref(x1, x2, L, L, L)
+        np.testing.assert_allclose(out, want, atol=5e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        L1=st.integers(0, 3),
+        L2=st.integers(0, 3),
+        b=st.integers(1, 9),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, L1, L2, b, seed):
+        """Property sweep: kernel == oracle over random shapes/degrees."""
+        r = np.random.default_rng(seed)
+        L3 = min(L1 + L2, 3)
+        x1 = jnp.asarray(r.standard_normal((b, so3.num_coeffs(L1))), jnp.float32)
+        x2 = jnp.asarray(r.standard_normal((b, so3.num_coeffs(L2))), jnp.float32)
+        f = gk.make_gaunt_tp(L1, L2, L3)
+        np.testing.assert_allclose(
+            f(x1, x2), ref.gaunt_tp_ref(x1, x2, L1, L2, L3), atol=1e-4
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_scaling_invariant(self, seed):
+        """G(a x1, b x2) = ab G(x1, x2)."""
+        r = np.random.default_rng(seed)
+        x1, x2 = (jnp.asarray(r.standard_normal((2, 9)), jnp.float32) for _ in "ab")
+        a, b = float(r.uniform(0.5, 2)), float(r.uniform(0.5, 2))
+        f = gk.make_gaunt_tp(2, 2, 2)
+        np.testing.assert_allclose(
+            f(a * x1, b * x2), a * b * f(x1, x2), rtol=2e-4, atol=1e-4
+        )
+
+
+# --------------------------------------------------------------------------
+# CG TP baseline kernel
+# --------------------------------------------------------------------------
+
+
+class TestCgTpPallas:
+    @pytest.mark.parametrize("L1,L2,L3", [(1, 1, 2), (2, 2, 2), (3, 2, 4)])
+    def test_matches_ref(self, L1, L2, L3):
+        x1, x2 = _rand(4, L1), _rand(4, L2)
+        f = ck.make_cg_tp(L1, L2, L3)
+        np.testing.assert_allclose(
+            f(x1, x2), ref.cg_tp_ref(x1, x2, L1, L2, L3), atol=5e-5
+        )
+
+    def test_equivariance(self):
+        L = 2
+        rot = so3.random_rotation(np.random.default_rng(5))
+        d = jnp.asarray(so3.wigner_d_real_block(L, rot), jnp.float32)
+        d_out = jnp.asarray(so3.wigner_d_real_block(2 * L, rot), jnp.float32)
+        x1, x2 = _rand(3, L), _rand(3, L)
+        f = ck.make_cg_tp(L, L, 2 * L)
+        np.testing.assert_allclose(
+            f(x1 @ d.T, x2 @ d.T), f(x1, x2) @ d_out.T, atol=1e-4
+        )
+
+    def test_grad(self):
+        f = ck.make_cg_tp(2, 2, 2)
+        x1, x2 = _rand(2, 2), _rand(2, 2)
+
+        def loss(a, b):
+            return jnp.sum(f(a, b) ** 2)
+
+        def loss_ref(a, b):
+            return jnp.sum(ref.cg_tp_ref(a, b, 2, 2, 2) ** 2)
+
+        g = jax.grad(loss, (0, 1))(x1, x2)
+        r = jax.grad(loss_ref, (0, 1))(x1, x2)
+        np.testing.assert_allclose(g[0], r[0], atol=1e-4)
+        np.testing.assert_allclose(g[1], r[1], atol=1e-4)
+
+    def test_differs_from_gaunt(self):
+        """CG includes odd-parity paths the Gaunt TP excludes: the two
+        products must NOT coincide (1,1)->1 (the cross-product path)."""
+        x1, x2 = _rand(1, 1), _rand(1, 1)
+        # zero the l=0 parts so only the pure (1,1)->1 path remains
+        x1 = x1.at[:, 0].set(0.0)
+        x2 = x2.at[:, 0].set(0.0)
+        cg = ck.make_cg_tp(1, 1, 1)(x1, x2)
+        ga = gk.make_gaunt_tp(1, 1, 1)(x1, x2)
+        l1_cg = cg[0, 1:4]
+        l1_ga = ga[0, 1:4]
+        assert float(jnp.abs(l1_cg).max()) > 1e-3  # CG has the l=1 output
+        assert float(jnp.abs(l1_ga).max()) < 1e-5  # Gaunt kills it (parity)
+
+
+# --------------------------------------------------------------------------
+# many-body helpers
+# --------------------------------------------------------------------------
+
+
+class TestManyBody:
+    def test_ref_three_body_symmetric(self):
+        x = _rand(2, 1)
+        a = ref.many_body_ref([x, x, x], 1, 2)
+        # fully symmetric product of the same function: order irrelevant
+        b = ref.many_body_ref([x, x, x], 1, 2)
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+    def test_divide_and_conquer_matches_fold(self):
+        """(x1*x2)*(x3*x4) == ((x1*x2)*x3)*x4 — associativity backs the
+        paper's parallelization (Appendix C)."""
+        L = 1
+        xs = [_rand(2, L) for _ in range(4)]
+        fold = ref.many_body_ref(xs, L, 2)
+        f12 = gk.make_gaunt_tp(L, L, 2 * L)
+        f34 = gk.make_gaunt_tp(L, L, 2 * L)
+        top = gk.make_gaunt_tp(2 * L, 2 * L, 2)
+        dc = top(f12(xs[0], xs[1]), f34(xs[2], xs[3]))
+        np.testing.assert_allclose(dc, fold, atol=1e-4)
+
+
+class TestScaleByDegree:
+    def test_segments(self):
+        x = jnp.ones((1, 9))
+        w = jnp.asarray([[2.0, 3.0, 4.0]])
+        out = ref.scale_by_degree(x, w, 2)
+        np.testing.assert_allclose(
+            out[0], [2, 3, 3, 3, 4, 4, 4, 4, 4], atol=1e-6
+        )
+
+    def test_weighted_tp_reparameterization(self):
+        """w_l1 w_l2 w_l weighting == scaling inputs/outputs (paper Eqn. 57)."""
+        L = 2
+        x1, x2 = _rand(2, L), _rand(2, L)
+        w1 = jnp.asarray(RNG.standard_normal((1, L + 1)), jnp.float32)
+        w2 = jnp.asarray(RNG.standard_normal((1, L + 1)), jnp.float32)
+        w3 = jnp.asarray(RNG.standard_normal((1, 2 * L + 1)), jnp.float32)
+        f = gk.make_gaunt_tp(L, L, 2 * L)
+        out = ref.scale_by_degree(
+            f(ref.scale_by_degree(x1, w1, L), ref.scale_by_degree(x2, w2, L)),
+            w3, 2 * L,
+        )
+        # against direct weighted contraction
+        g = np.asarray(so3.gaunt_tensor_real(L, L, 2 * L))
+        want = np.zeros((2, so3.num_coeffs(2 * L)))
+        for l1 in range(L + 1):
+            for l2 in range(L + 1):
+                for l3 in range(2 * L + 1):
+                    wgt = float(w1[0, l1] * w2[0, l2] * w3[0, l3])
+                    s3 = slice(so3.lm_index(l3, -l3), so3.lm_index(l3, l3) + 1)
+                    s1 = slice(so3.lm_index(l1, -l1), so3.lm_index(l1, l1) + 1)
+                    s2 = slice(so3.lm_index(l2, -l2), so3.lm_index(l2, l2) + 1)
+                    want[:, s3] += wgt * np.einsum(
+                        "kij,bi,bj->bk", g[s3, s1, s2],
+                        np.asarray(x1)[:, s1], np.asarray(x2)[:, s2],
+                    )
+        np.testing.assert_allclose(out, want, atol=1e-4)

@@ -1,0 +1,236 @@
+"""Layer-2 model tests: GauntNet force field + SEGNN-lite."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import so3
+
+RNG = np.random.default_rng(17)
+
+CFG = M.Config(L=2, channels=4, n_atoms=8, n_edges=24, n_layers=2, tp="gaunt")
+
+
+def _system(cfg=CFG, seed=0, n_real_atoms=None, n_real_edges=None):
+    rng = np.random.default_rng(seed)
+    n = n_real_atoms or cfg.n_atoms
+    e = n_real_edges or cfg.n_edges
+    pos = np.zeros((cfg.n_atoms, 3), np.float32)
+    pos[:n] = rng.uniform(-2, 2, (n, 3))
+    species = np.zeros(cfg.n_atoms, np.int32)
+    species[:n] = rng.integers(0, cfg.n_species, n)
+    edges = np.zeros((cfg.n_edges, 2), np.int32)
+    k = 0
+    while k < e:
+        i, j = rng.integers(0, n, 2)
+        if i != j:
+            edges[k] = (i, j)
+            k += 1
+    am = np.zeros(cfg.n_atoms, np.float32)
+    am[:n] = 1.0
+    em = np.zeros(cfg.n_edges, np.float32)
+    em[:e] = 1.0
+    return (jnp.asarray(pos), jnp.asarray(species), jnp.asarray(edges),
+            jnp.asarray(em), jnp.asarray(am))
+
+
+class TestShCartesian:
+    @pytest.mark.parametrize("L", [1, 2, 3])
+    def test_matches_numpy_tables(self, L):
+        pts = RNG.standard_normal((10, 3)).astype(np.float32)
+        got = M.sh_cartesian(L, jnp.asarray(pts))
+        want = so3.real_sh_xyz_poly(L, pts.astype(np.float64))
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+    def test_gradient_finite_at_zero(self):
+        g = jax.grad(lambda r: jnp.sum(M.sh_cartesian(2, r)))(jnp.zeros(3))
+        assert bool(jnp.isfinite(g).all())
+
+    def test_scale_invariant(self):
+        r = jnp.asarray(RNG.standard_normal((5, 3)), jnp.float32)
+        a = M.sh_cartesian(2, r)
+        b = M.sh_cartesian(2, 3.7 * r)
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+class TestBessel:
+    def test_zero_at_cutoff(self):
+        rb = M.bessel_basis(jnp.asarray([3.9999]), 4, 4.0)
+        assert float(jnp.abs(rb).max()) < 1e-3
+
+    def test_finite_at_zero_distance(self):
+        rb = M.bessel_basis(jnp.asarray([0.0]), 4, 4.0)
+        assert bool(jnp.isfinite(rb).all())
+
+    def test_shapes(self):
+        rb = M.bessel_basis(jnp.asarray([1.0, 2.0, 3.0]), 6, 4.0)
+        assert rb.shape == (3, 6)
+
+
+class TestEnergyForces:
+    def test_energy_invariant_forces_equivariant(self):
+        p = M.init_params(0, CFG)
+        sys_ = _system()
+        e, f = M.energy_forces(p, *sys_, CFG)
+        rot = so3.random_rotation(np.random.default_rng(1))
+        rj = jnp.asarray(rot, jnp.float32)
+        pos2 = sys_[0] @ rj.T
+        e2, f2 = M.energy_forces(p, pos2, *sys_[1:], CFG)
+        assert abs(float(e - e2)) < 1e-4
+        np.testing.assert_allclose(f2, f @ rj.T, atol=1e-4)
+
+    def test_translation_invariance(self):
+        p = M.init_params(0, CFG)
+        sys_ = _system()
+        e, f = M.energy_forces(p, *sys_, CFG)
+        shift = jnp.asarray([1.0, -2.0, 0.5], jnp.float32)
+        e2, f2 = M.energy_forces(p, sys_[0] + shift, *sys_[1:], CFG)
+        assert abs(float(e - e2)) < 1e-4
+        np.testing.assert_allclose(f, f2, atol=1e-4)
+
+    def test_parity_invariance(self):
+        """E(3) (not just SE(3)): energy invariant under point reflection."""
+        p = M.init_params(0, CFG)
+        sys_ = _system()
+        e, _ = M.energy_forces(p, *sys_, CFG)
+        e2, _ = M.energy_forces(p, -sys_[0], *sys_[1:], CFG)
+        assert abs(float(e - e2)) < 1e-4
+
+    def test_forces_are_gradient(self):
+        p = M.init_params(0, CFG)
+        pos, species, edges, em, am = _system()
+        _, f = M.energy_forces(p, pos, species, edges, em, am, CFG)
+        h = 1e-3
+        for (atom, axis) in [(0, 0), (3, 2)]:
+            pp = pos.at[atom, axis].add(h)
+            ep = M.energy_fn(p, pp, species, edges, em, am, CFG)
+            pm = pos.at[atom, axis].add(-h)
+            em_ = M.energy_fn(p, pm, species, edges, em, am, CFG)
+            fd = -(float(ep) - float(em_)) / (2 * h)
+            assert abs(float(f[atom, axis]) - fd) < 5e-2 * (1 + abs(fd))
+
+    def test_padding_invariance(self):
+        """Extra padded atoms/edges must not change real outputs."""
+        p = M.init_params(0, CFG)
+        sys_full = _system(n_real_atoms=5, n_real_edges=12)
+        e1, f1 = M.energy_forces(p, *sys_full, CFG)
+        # perturb the PADDED atom positions; outputs must not move
+        pos2 = np.asarray(sys_full[0]).copy()
+        pos2[5:] += 17.0
+        e2, f2 = M.energy_forces(p, jnp.asarray(pos2), *sys_full[1:], CFG)
+        assert abs(float(e1 - e2)) < 1e-4
+        np.testing.assert_allclose(f1[:5], f2[:5], atol=1e-4)
+
+    def test_masked_forces_zero(self):
+        p = M.init_params(0, CFG)
+        sys_ = _system(n_real_atoms=5)
+        _, f = M.energy_forces(p, *sys_, CFG)
+        np.testing.assert_allclose(f[5:], 0.0, atol=1e-6)
+
+    def test_cg_variant_runs(self):
+        cfg = M.Config(**{**CFG.__dict__, "tp": "cg"})
+        p = M.init_params(0, cfg)
+        e, f = M.energy_forces(p, *_system(cfg), cfg)
+        assert np.isfinite(float(e)) and bool(jnp.isfinite(f).all())
+
+    def test_gaunt_and_cg_differ(self):
+        cfg_cg = M.Config(**{**CFG.__dict__, "tp": "cg"})
+        p = M.init_params(0, CFG)
+        sys_ = _system()
+        e1, _ = M.energy_forces(p, *sys_, CFG)
+        e2, _ = M.energy_forces(p, *sys_, cfg_cg)
+        assert abs(float(e1 - e2)) > 1e-6  # different parameterizations
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        p = M.init_params(0, CFG)
+        pos, species, edges, em, am = _system()
+        batch = dict(
+            pos=pos[None], species=species[None], edges=edges[None],
+            edge_mask=em[None], atom_mask=am[None],
+            energy=jnp.asarray([2.0], jnp.float32),
+            forces=jnp.asarray(RNG.standard_normal((1, 8, 3)) * 0.1,
+                               jnp.float32),
+        )
+        opt = M.adam_init(p)
+        step = jax.jit(lambda p_, o_, b_: M.ff_train_step(p_, o_, b_, CFG))
+        _, _, l0 = step(p, opt, batch)
+        p2, o2 = p, opt
+        for _ in range(10):
+            p2, o2, loss = step(p2, o2, batch)
+        assert float(loss) < float(l0)
+
+    def test_adam_moments_shapes(self):
+        p = M.init_params(0, CFG)
+        opt = M.adam_init(p)
+        flat_p = jax.tree.leaves(p)
+        flat_m = jax.tree.leaves(opt["m"])
+        assert len(flat_p) == len(flat_m)
+        for a, b in zip(flat_p, flat_m):
+            assert a.shape == b.shape
+
+
+class TestNbody:
+    CFGN = M.Config(L=1, channels=4, n_atoms=5, n_edges=20, n_layers=2,
+                    tp="gaunt", readout="vector", vec_in=True, n_species=2,
+                    r_cut=20.0)
+
+    def _nbody_inputs(self, seed=0):
+        rng = np.random.default_rng(seed)
+        pos = jnp.asarray(rng.uniform(-1, 1, (5, 3)), jnp.float32)
+        vel = jnp.asarray(rng.uniform(-1, 1, (5, 3)) * 0.1, jnp.float32)
+        ch = jnp.asarray(rng.integers(0, 2, 5), jnp.int32)
+        e5 = jnp.asarray([(i, j) for i in range(5) for j in range(5) if i != j],
+                         jnp.int32)
+        return pos, vel, ch, e5, jnp.ones(20), jnp.ones(5)
+
+    def test_equivariance(self):
+        p = M.init_params(1, self.CFGN)
+        pos, vel, ch, e5, em, am = self._nbody_inputs()
+        out = M.nbody_forecast(p, pos, vel, ch, e5, em, am, self.CFGN)
+        rot = so3.random_rotation(np.random.default_rng(2))
+        rj = jnp.asarray(rot, jnp.float32)
+        out2 = M.nbody_forecast(p, pos @ rj.T, vel @ rj.T, ch, e5, em, am,
+                                self.CFGN)
+        np.testing.assert_allclose(out2, out @ rj.T, atol=1e-4)
+
+    def test_zero_model_returns_inertial_forecast(self):
+        """With zeroed readout weights, prediction = pos + vel."""
+        p = M.init_params(1, self.CFGN)
+        p = dict(p)
+        p["out_vec"] = jnp.zeros_like(p["out_vec"])
+        pos, vel, ch, e5, em, am = self._nbody_inputs()
+        out = M.nbody_forecast(p, pos, vel, ch, e5, em, am, self.CFGN)
+        np.testing.assert_allclose(out, pos + vel, atol=1e-6)
+
+    def test_train_step(self):
+        p = M.init_params(1, self.CFGN)
+        pos, vel, ch, e5, em, am = self._nbody_inputs()
+        batch = dict(pos=pos[None], vel=vel[None], charge=ch[None],
+                     edges=e5[None], edge_mask=em[None], atom_mask=am[None],
+                     target=(pos + vel)[None])
+        opt = M.adam_init(p)
+        step = jax.jit(lambda p_, o_, b_:
+                       M.nbody_train_step(p_, o_, b_, self.CFGN))
+        _, _, l0 = step(p, opt, batch)
+        p2, o2 = p, opt
+        for _ in range(8):
+            p2, o2, loss = step(p2, o2, batch)
+        assert float(loss) < float(l0)
+
+
+class TestMixChannels:
+    def test_identity_weights(self):
+        x = jnp.asarray(RNG.standard_normal((3, 4, 9)), jnp.float32)
+        w = jnp.stack([jnp.eye(4)] * 3)
+        np.testing.assert_allclose(M._mix_channels(x, w, 2), x, atol=1e-6)
+
+    def test_per_degree_blocks(self):
+        x = jnp.asarray(RNG.standard_normal((1, 2, 9)), jnp.float32)
+        w = jnp.stack([2.0 * jnp.eye(2), 3.0 * jnp.eye(2), 5.0 * jnp.eye(2)])
+        out = M._mix_channels(x, w, 2)
+        np.testing.assert_allclose(out[..., 0], 2 * x[..., 0], atol=1e-5)
+        np.testing.assert_allclose(out[..., 1:4], 3 * x[..., 1:4], atol=1e-5)
+        np.testing.assert_allclose(out[..., 4:], 5 * x[..., 4:], atol=1e-5)

@@ -1,0 +1,446 @@
+"""Tests for the SO(3) representation-theory substrate (so3.py)."""
+import math
+
+import numpy as np
+import pytest
+
+from compile import so3
+
+
+RNG = np.random.default_rng(42)
+
+
+def _sphere_grid(deg):
+    th, ph, w, dphi = so3.sphere_quadrature(deg)
+    TH, PH = np.meshgrid(th, ph, indexing="ij")
+    return TH, PH, w[:, None] * dphi
+
+
+# --------------------------------------------------------------------------
+# associated Legendre
+# --------------------------------------------------------------------------
+
+
+class TestAssocLegendre:
+    @pytest.mark.parametrize("l,m", [(l, m) for l in range(9) for m in range(l + 1)])
+    def test_matches_scipy(self, l, m):
+        from scipy.special import lpmv
+
+        x = np.linspace(-0.999, 0.999, 31)
+        ours = so3.assoc_legendre(l, m, x)
+        # scipy includes the Condon-Shortley phase (-1)^m; we do not.
+        theirs = lpmv(m, l, x) * ((-1.0) ** m)
+        np.testing.assert_allclose(ours, theirs, rtol=1e-7, atol=1e-9)
+
+    def test_p00_is_one(self):
+        np.testing.assert_allclose(so3.assoc_legendre(0, 0, np.array([0.3])), [1.0])
+
+    def test_p10_is_x(self):
+        x = np.linspace(-1, 1, 5)
+        np.testing.assert_allclose(so3.assoc_legendre(1, 0, x), x)
+
+    def test_p11_is_sin(self):
+        x = np.linspace(-0.9, 0.9, 5)
+        np.testing.assert_allclose(
+            so3.assoc_legendre(1, 1, x), np.sqrt(1 - x * x), rtol=1e-12
+        )
+
+    @pytest.mark.parametrize("l", range(1, 8))
+    def test_orthogonality_in_l(self, l):
+        # int_-1^1 P_l^0 P_{l'}^0 dx = 2/(2l+1) delta
+        x, w = np.polynomial.legendre.leggauss(l + 4)
+        a = so3.assoc_legendre(l, 0, x)
+        b = so3.assoc_legendre(l - 1, 0, x)
+        assert abs(np.sum(w * a * b)) < 1e-12
+        np.testing.assert_allclose(np.sum(w * a * a), 2.0 / (2 * l + 1), rtol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# real spherical harmonics
+# --------------------------------------------------------------------------
+
+
+class TestRealSH:
+    @pytest.mark.parametrize("L", [0, 1, 2, 3, 5, 8])
+    def test_orthonormality(self, L):
+        TH, PH, W = _sphere_grid(2 * L)
+        y = so3.real_sh_all(L, TH, PH)
+        g = np.einsum("kja,kjb,kj->ab", y, y, W)
+        np.testing.assert_allclose(g, np.eye(g.shape[0]), atol=1e-12)
+
+    def test_y00_constant(self):
+        v = so3.real_sh_angular(0, 0, np.array([0.3]), np.array([1.0]))
+        np.testing.assert_allclose(v, [1.0 / math.sqrt(4 * math.pi)])
+
+    def test_y1_components_are_axes(self):
+        # l=1 real SH are proportional to (y, z, x) in m = (-1, 0, 1) order
+        pts = RNG.standard_normal((20, 3))
+        pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+        y = so3.real_sh_xyz(1, pts)
+        c = math.sqrt(3.0 / (4 * math.pi))
+        np.testing.assert_allclose(y[:, 1], c * pts[:, 1], atol=1e-12)
+        np.testing.assert_allclose(y[:, 2], c * pts[:, 2], atol=1e-12)
+        np.testing.assert_allclose(y[:, 3], c * pts[:, 0], atol=1e-12)
+
+    @pytest.mark.parametrize("l", range(6))
+    def test_parity(self, l):
+        # Y^l(-r) = (-1)^l Y^l(r)   (paper Section 2)
+        pts = RNG.standard_normal((10, 3))
+        a = so3.real_sh_xyz(l, pts)
+        b = so3.real_sh_xyz(l, -pts)
+        sl = slice(so3.lm_index(l, -l), so3.lm_index(l, l) + 1)
+        np.testing.assert_allclose(b[:, sl], ((-1.0) ** l) * a[:, sl], atol=1e-12)
+
+    @pytest.mark.parametrize("L", [1, 2, 4, 6])
+    def test_polynomial_form_matches_angular(self, L):
+        pts = RNG.standard_normal((50, 3))
+        np.testing.assert_allclose(
+            so3.real_sh_xyz_poly(L, pts),
+            so3.real_sh_xyz(L, pts),
+            atol=1e-10,
+        )
+
+    def test_complex_sh_matches_scipy(self):
+        from scipy.special import sph_harm_y
+
+        th = np.linspace(0.1, 3.0, 7)
+        ph = np.linspace(0.0, 6.0, 7)
+        for l in range(5):
+            for m in range(-l, l + 1):
+                np.testing.assert_allclose(
+                    so3.complex_sh(l, m, th, ph),
+                    sph_harm_y(l, m, th, ph),
+                    atol=1e-12,
+                    err_msg=f"l={l} m={m}",
+                )
+
+    def test_real_to_complex_u_unitary(self):
+        for l in range(5):
+            u = so3.real_to_complex_u(l)
+            np.testing.assert_allclose(
+                u @ u.conj().T, np.eye(2 * l + 1), atol=1e-12
+            )
+
+    def test_real_to_complex_u_consistent(self):
+        th = np.linspace(0.2, 2.9, 6)
+        ph = np.linspace(0.1, 6.0, 6)
+        for l in range(4):
+            u = so3.real_to_complex_u(l)
+            yc = np.array(
+                [so3.complex_sh(l, mu, th, ph) for mu in range(-l, l + 1)]
+            )
+            yr = np.array(
+                [so3.real_sh_angular(l, m, th, ph) for m in range(-l, l + 1)]
+            )
+            np.testing.assert_allclose(u @ yc, yr.astype(complex), atol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# Wigner 3j / CG
+# --------------------------------------------------------------------------
+
+
+class TestWigner3j:
+    def test_known_values(self):
+        # standard tabulated values
+        np.testing.assert_allclose(so3.wigner_3j(1, 1, 0, 0, 0, 0), -1 / math.sqrt(3))
+        np.testing.assert_allclose(so3.wigner_3j(1, 1, 2, 0, 0, 0), math.sqrt(2 / 15))
+        np.testing.assert_allclose(so3.wigner_3j(2, 2, 2, 0, 0, 0), -math.sqrt(2 / 35))
+        np.testing.assert_allclose(
+            so3.wigner_3j(1, 1, 1, 1, -1, 0), 1 / math.sqrt(6)
+        )
+
+    def test_selection_rules(self):
+        assert so3.wigner_3j(1, 1, 3, 0, 0, 0) == 0.0  # triangle violated
+        assert so3.wigner_3j(1, 1, 1, 1, 1, 1) == 0.0  # m-sum nonzero
+        assert so3.wigner_3j(1, 2, 2, 2, 0, -2) == 0.0  # |m1| > l1
+
+    def test_odd_sum_zero_at_m0(self):
+        assert so3.wigner_3j(1, 1, 1, 0, 0, 0) == 0.0
+        assert so3.wigner_3j(2, 2, 1, 0, 0, 0) == 0.0
+
+    @pytest.mark.parametrize("l1,l2", [(1, 1), (2, 1), (2, 2), (3, 2)])
+    def test_orthogonality(self, l1, l2):
+        # sum_{m1 m2} (2l+1) 3j(m1 m2 m) 3j(m1 m2 m') = delta_ll' delta_mm'
+        for l in range(abs(l1 - l2), l1 + l2 + 1):
+            for lp in range(abs(l1 - l2), l1 + l2 + 1):
+                for m in range(-l, l + 1):
+                    for mp in range(-lp, lp + 1):
+                        s = sum(
+                            so3.wigner_3j(l1, l2, l, m1, m2, m)
+                            * so3.wigner_3j(l1, l2, lp, m1, m2, mp)
+                            for m1 in range(-l1, l1 + 1)
+                            for m2 in range(-l2, l2 + 1)
+                        )
+                        expect = (1.0 / (2 * l + 1)) if (l, m) == (lp, mp) else 0.0
+                        assert abs(s - expect) < 1e-11
+
+    def test_column_permutation_symmetry(self):
+        # even permutation invariance
+        v1 = so3.wigner_3j(3, 2, 1, 1, -2, 1)
+        v2 = so3.wigner_3j(2, 1, 3, -2, 1, 1)
+        v3 = so3.wigner_3j(1, 3, 2, 1, 1, -2)
+        np.testing.assert_allclose([v2, v3], [v1, v1], atol=1e-13)
+        # odd permutation: factor (-1)^(l1+l2+l3)
+        v4 = so3.wigner_3j(2, 3, 1, -2, 1, 1)
+        np.testing.assert_allclose(v4, ((-1.0) ** 6) * v1, atol=1e-13)
+
+    def test_m_negation_symmetry(self):
+        l1, l2, l3 = 3, 2, 2
+        for m1 in range(-l1, l1 + 1):
+            for m2 in range(-l2, l2 + 1):
+                m3 = -(m1 + m2)
+                if abs(m3) > l3:
+                    continue
+                a = so3.wigner_3j(l1, l2, l3, m1, m2, m3)
+                b = so3.wigner_3j(l1, l2, l3, -m1, -m2, -m3)
+                np.testing.assert_allclose(b, ((-1.0) ** (l1 + l2 + l3)) * a,
+                                           atol=1e-13)
+
+
+class TestClebschGordan:
+    def test_known_values(self):
+        # <1 0 1 0 | 2 0> = sqrt(2/3)
+        np.testing.assert_allclose(
+            so3.clebsch_gordan(1, 0, 1, 0, 2, 0), math.sqrt(2 / 3)
+        )
+        # <1 1 1 -1 | 0 0> = 1/sqrt(3)
+        np.testing.assert_allclose(
+            so3.clebsch_gordan(1, 1, 1, -1, 0, 0), 1 / math.sqrt(3)
+        )
+        # <1/2-analog not applicable (integer l only)
+        np.testing.assert_allclose(
+            so3.clebsch_gordan(1, 1, 1, 0, 2, 1), 1 / math.sqrt(2)
+        )
+
+    @pytest.mark.parametrize("l1,l2", [(1, 1), (2, 1), (2, 2)])
+    def test_orthogonality_rows(self, l1, l2):
+        # paper Eqn. (20), first identity
+        for l in range(abs(l1 - l2), l1 + l2 + 1):
+            for lp in range(abs(l1 - l2), l1 + l2 + 1):
+                for m in range(-l, l + 1):
+                    for mp in range(-lp, lp + 1):
+                        s = sum(
+                            so3.clebsch_gordan(l1, m1, l2, m2, l, m)
+                            * so3.clebsch_gordan(l1, m1, l2, m2, lp, mp)
+                            for m1 in range(-l1, l1 + 1)
+                            for m2 in range(-l2, l2 + 1)
+                        )
+                        expect = 1.0 if (l, m) == (lp, mp) else 0.0
+                        assert abs(s - expect) < 1e-11
+
+    def test_completeness(self):
+        # paper Eqn. (20), second identity
+        l1, l2 = 2, 1
+        for m1 in range(-l1, l1 + 1):
+            for m2 in range(-l2, l2 + 1):
+                for m1p in range(-l1, l1 + 1):
+                    for m2p in range(-l2, l2 + 1):
+                        s = sum(
+                            so3.clebsch_gordan(l1, m1, l2, m2, l, m1 + m2)
+                            * so3.clebsch_gordan(l1, m1p, l2, m2p, l, m1p + m2p)
+                            for l in range(abs(l1 - l2), l1 + l2 + 1)
+                            if abs(m1 + m2) <= l and m1 + m2 == m1p + m2p
+                        )
+                        expect = 1.0 if (m1, m2) == (m1p, m2p) else 0.0
+                        assert abs(s - expect) < 1e-11
+
+
+# --------------------------------------------------------------------------
+# Gaunt coefficients
+# --------------------------------------------------------------------------
+
+
+class TestGaunt:
+    def test_complex_gaunt_matches_quadrature(self):
+        from scipy.special import sph_harm_y
+
+        TH, PH, W = _sphere_grid(9)
+        cases = [
+            (1, 0, 1, 0, 2, 0),
+            (1, 1, 1, -1, 2, 0),
+            (2, 1, 2, -2, 2, 1),
+            (3, 1, 2, -2, 3, 1),
+            (2, 2, 2, 2, 4, -4),
+        ]
+        for l1, m1, l2, m2, l3, m3 in cases:
+            f = (
+                sph_harm_y(l1, m1, TH, PH)
+                * sph_harm_y(l2, m2, TH, PH)
+                * sph_harm_y(l3, m3, TH, PH)
+            )
+            quad = np.einsum("kj,kj->", f, W.astype(complex) * np.ones_like(PH))
+            formula = so3.gaunt_complex(l1, m1, l2, m2, l3, m3)
+            np.testing.assert_allclose(quad.real, formula, atol=1e-12)
+            assert abs(quad.imag) < 1e-12
+
+    def test_wigner_eckart_ratio_constant(self):
+        """Paper Eqn. (3): G / CG is constant over (m1, m2, m) per (l1,l2,l)."""
+        for l1, l2, l in [(1, 1, 2), (2, 1, 3), (2, 2, 2), (3, 2, 3)]:
+            ratios = []
+            for m1 in range(-l1, l1 + 1):
+                for m2 in range(-l2, l2 + 1):
+                    m = m1 + m2
+                    if abs(m) > l:
+                        continue
+                    cg = so3.clebsch_gordan(l1, m1, l2, m2, l, m)
+                    # complex Gaunt with m3 = -m carries the bra <l m|
+                    ga = so3.gaunt_complex(l1, m1, l2, m2, l, -m) * ((-1.0) ** m)
+                    if abs(cg) > 1e-12:
+                        ratios.append(ga / cg)
+            assert len(ratios) > 0
+            np.testing.assert_allclose(ratios, ratios[0], atol=1e-12)
+
+    @pytest.mark.parametrize("L", [1, 2, 3])
+    def test_real_gaunt_two_routes_agree(self, L):
+        a = so3.gaunt_tensor_real(L, L, L)
+        b = so3.gaunt_tensor_real_from_3j(L, L, L)
+        np.testing.assert_allclose(a, b, atol=1e-12)
+
+    def test_real_gaunt_symmetric_in_inputs(self):
+        g = so3.gaunt_tensor_real(2, 2, 3)
+        np.testing.assert_allclose(g, np.transpose(g, (0, 2, 1)), atol=1e-14)
+
+    def test_real_gaunt_l0_is_identity_scaled(self):
+        # Y_0^0 = 1/sqrt(4pi): G[(l,m), (0,0), (l,m)] = 1/sqrt(4pi)
+        g = so3.gaunt_tensor_real(0, 3, 3)
+        c = 1.0 / math.sqrt(4 * math.pi)
+        np.testing.assert_allclose(g[:, 0, :], c * np.eye(16), atol=1e-12)
+
+    def test_real_gaunt_odd_parity_vanishes(self):
+        # l1 + l2 + l3 odd => zero (Gaunt TP excludes pseudo-irreps)
+        g = so3.gaunt_tensor_real(1, 1, 1)
+        blk = g[
+            so3.lm_index(1, -1) : so3.lm_index(1, 1) + 1,
+            so3.lm_index(1, -1) : so3.lm_index(1, 1) + 1,
+            so3.lm_index(1, -1) : so3.lm_index(1, 1) + 1,
+        ]
+        assert np.abs(blk).max() == 0.0
+
+
+# --------------------------------------------------------------------------
+# real w3j / CG tensor
+# --------------------------------------------------------------------------
+
+
+class TestRealW3j:
+    @pytest.mark.parametrize(
+        "l1,l2,l3", [(1, 1, 0), (1, 1, 1), (1, 1, 2), (2, 1, 1), (2, 2, 3), (3, 2, 2)]
+    )
+    def test_equivariance(self, l1, l2, l3):
+        """D^{l3} contraction == contraction of (D^{l1} x, D^{l2} y)."""
+        w = so3.w3j_real(l1, l2, l3)
+        rng = np.random.default_rng(7)
+        rot = so3.random_rotation(rng)
+        d1 = so3.wigner_d_real(l1, rot)
+        d2 = so3.wigner_d_real(l2, rot)
+        d3 = so3.wigner_d_real(l3, rot)
+        # condition: sum_{xy} D1[x,a] D2[y,b] w[x,y,c] = sum_d w[a,b,d] D3[c,d]
+        lhs = np.einsum("xa,yb,xyc->abc", d1, d2, w)
+        rhs = np.einsum("abd,cd->abc", w, d3)
+        np.testing.assert_allclose(lhs, rhs, atol=1e-10)
+
+    def test_norm(self):
+        for l1, l2, l3 in [(1, 1, 2), (2, 2, 2), (1, 1, 1)]:
+            w = so3.w3j_real(l1, l2, l3)
+            np.testing.assert_allclose(np.sum(w * w), 1.0, atol=1e-10)
+
+    def test_cross_product_is_111(self):
+        # the (1,1)->1 coupling must be proportional to the cross product
+        w = so3.w3j_real(1, 1, 1)
+        rng = np.random.default_rng(3)
+        a3, b3 = rng.standard_normal(3), rng.standard_normal(3)
+        # irrep order (m=-1,0,1) = (y, z, x)
+        a = np.array([a3[1], a3[2], a3[0]])
+        b = np.array([b3[1], b3[2], b3[0]])
+        out = np.einsum("xyc,x,y->c", w, a, b)
+        cr = np.cross(a3, b3)
+        cr_i = np.array([cr[1], cr[2], cr[0]])
+        # proportional
+        k = out @ cr_i / (cr_i @ cr_i)
+        np.testing.assert_allclose(out, k * cr_i, atol=1e-10)
+        assert abs(k) > 1e-3
+
+    def test_cg_tensor_gaunt_proportionality(self):
+        """Per (l1,l2,l3) block with even parity, Gaunt tensor is a scalar
+        multiple of the real CG tensor (Wigner-Eckart in the real basis)."""
+        g = so3.gaunt_tensor_real(2, 2, 2)
+        for l1, l2, l3 in [(1, 1, 2), (2, 2, 2), (2, 1, 1), (0, 2, 2)]:
+            w = np.transpose(so3.w3j_real(l1, l2, l3), (2, 0, 1))
+            sl3 = slice(so3.lm_index(l3, -l3), so3.lm_index(l3, l3) + 1)
+            sl1 = slice(so3.lm_index(l1, -l1), so3.lm_index(l1, l1) + 1)
+            sl2 = slice(so3.lm_index(l2, -l2), so3.lm_index(l2, l2) + 1)
+            blk = g[sl3, sl1, sl2]
+            k = np.sum(blk * w) / np.sum(w * w)
+            np.testing.assert_allclose(blk, k * w, atol=1e-10)
+
+
+# --------------------------------------------------------------------------
+# rotations / Wigner-D
+# --------------------------------------------------------------------------
+
+
+class TestRotations:
+    def test_rotation_matrices_orthogonal(self):
+        rng = np.random.default_rng(0)
+        for _ in range(10):
+            r = so3.random_rotation(rng)
+            np.testing.assert_allclose(r @ r.T, np.eye(3), atol=1e-12)
+            np.testing.assert_allclose(np.linalg.det(r), 1.0, atol=1e-12)
+
+    def test_euler_zyz(self):
+        r = so3.euler_zyz(0.3, 0.0, -0.3)
+        np.testing.assert_allclose(r, np.eye(3), atol=1e-12)
+
+    @pytest.mark.parametrize("l", range(5))
+    def test_wigner_d_is_representation(self, l):
+        rng = np.random.default_rng(l)
+        r1, r2 = so3.random_rotation(rng), so3.random_rotation(rng)
+        d12 = so3.wigner_d_real(l, r1 @ r2)
+        np.testing.assert_allclose(
+            d12, so3.wigner_d_real(l, r1) @ so3.wigner_d_real(l, r2), atol=1e-10
+        )
+
+    @pytest.mark.parametrize("l", range(5))
+    def test_wigner_d_orthogonal(self, l):
+        rng = np.random.default_rng(100 + l)
+        d = so3.wigner_d_real(l, so3.random_rotation(rng))
+        np.testing.assert_allclose(d @ d.T, np.eye(2 * l + 1), atol=1e-10)
+
+    def test_wigner_d_equivariance_on_sh(self):
+        rng = np.random.default_rng(5)
+        rot = so3.random_rotation(rng)
+        pts = rng.standard_normal((8, 3))
+        for l in range(4):
+            sl = slice(so3.lm_index(l, -l), so3.lm_index(l, l) + 1)
+            ya = so3.real_sh_xyz(l, pts @ rot.T)[:, sl]
+            yb = so3.real_sh_xyz(l, pts)[:, sl] @ so3.wigner_d_real(l, rot).T
+            np.testing.assert_allclose(ya, yb, atol=1e-10)
+
+    def test_align_to_y(self):
+        rng = np.random.default_rng(9)
+        for _ in range(20):
+            v = rng.standard_normal(3)
+            r = so3.align_to_y(v)
+            np.testing.assert_allclose(r @ r.T, np.eye(3), atol=1e-10)
+            np.testing.assert_allclose(
+                r @ (v / np.linalg.norm(v)), [0.0, 1.0, 0.0], atol=1e-10
+            )
+
+    def test_align_to_y_antiparallel(self):
+        r = so3.align_to_y(np.array([0.0, -1.0, 0.0]))
+        np.testing.assert_allclose(r @ np.array([0.0, -1.0, 0.0]),
+                                   [0.0, 1.0, 0.0], atol=1e-12)
+
+    def test_escn_filter_sparsity(self):
+        """Passaro & Zitnick: SH of the aligned edge vector is delta_{m0}
+        in the m-order convention where the filter axis is y... our SH uses
+        the z-axis convention, so align to z gives delta_{m0}; the library's
+        align_to_y matches eSCN's convention via the D-matrix. Verify the
+        z-form here: Y_m^l(0,0,1) = 0 for m != 0."""
+        y = so3.real_sh_xyz(4, np.array([[0.0, 0.0, 1.0]]))[0]
+        for l, m in so3.lm_iter(4):
+            if m != 0:
+                assert abs(y[so3.lm_index(l, m)]) < 1e-12
+            else:
+                assert abs(y[so3.lm_index(l, 0)]) > 1e-6

@@ -1,0 +1,56 @@
+//! End-to-end serving benchmark: throughput/latency of the coordinator
+//! under closed-loop load (the system-level claim: L3 overhead is small
+//! next to executable runtime).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gaunt_tp::coordinator::batcher::BatchPolicy;
+use gaunt_tp::coordinator::{ForceFieldServer, ServerConfig};
+use gaunt_tp::data::gen_bpa_dataset;
+use gaunt_tp::runtime::Engine;
+
+fn main() {
+    let engine = match Engine::new("artifacts") {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            println!("artifacts missing: {e}");
+            return;
+        }
+    };
+    println!("== e2e service benchmark ==");
+    let structures = gen_bpa_dataset(&[0.05], 16, 5).remove(0);
+    for (max_batch, n_workers) in [(1usize, 1usize), (4, 1), (8, 1), (8, 2)] {
+        let server = ForceFieldServer::start(
+            engine.clone(),
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch,
+                    max_wait: Duration::from_millis(2),
+                    max_queue: 8192,
+                },
+                n_workers,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let n_requests = 96usize;
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n_requests)
+            .map(|i| {
+                let g = &structures[i % structures.len()];
+                server.submit(g.pos.clone(), g.species.clone()).unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "batch<= {max_batch} workers={n_workers}: {:.1} req/s | {}",
+            n_requests as f64 / wall,
+            server.metrics().report()
+        );
+        server.shutdown();
+    }
+}

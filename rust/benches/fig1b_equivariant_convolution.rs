@@ -1,0 +1,58 @@
+//! Fig. 1 panel 2 — Equivariant Convolution efficiency.
+//!
+//! Feature (x) spherical-harmonic filter per edge: the eSCN SO(2)
+//! restriction baseline vs the paper's Gaunt pipeline with the aligned-
+//! filter (single Fourier column) speed-up.  Aligned-frame numbers isolate
+//! the contraction cost (the rotation round trip is common to both); the
+//! `+rot` rows include it.
+
+use gaunt_tp::num_coeffs;
+use gaunt_tp::tp::escn::{EscnPlan, GauntConvPlan};
+use gaunt_tp::tp::{CgPlan, ConvMethod, GauntPlan};
+use gaunt_tp::so3::sh::real_sh_all_xyz;
+use gaunt_tp::util::bench::{consume, BenchTable};
+use gaunt_tp::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let mut t = BenchTable::new("fig1b: equivariant convolution (per edge)");
+    for l in [1usize, 2, 3, 4, 5, 6] {
+        let n = num_coeffs(l);
+        let x = rng.normals(n);
+        let dir = rng.unit3();
+
+        // naive e3nn-style: full CG contraction with the full SH filter
+        let cg = CgPlan::new(l, l, l);
+        let ysh = real_sh_all_xyz(l, dir);
+        t.run(&format!("e3nn_full_filter  L={l}"), 100, || {
+            consume(cg.apply_sparse(&x, &ysh));
+        });
+
+        // eSCN: aligned-frame SO(2) contraction
+        let escn = EscnPlan::new(l, l, l);
+        let h: Vec<f64> = (0..escn.n_paths()).map(|_| 1.0).collect();
+        t.run(&format!("escn_aligned      L={l}"), 100, || {
+            consume(escn.apply_aligned(&x, &h));
+        });
+        t.run(&format!("escn_aligned+rot  L={l}"), 100, || {
+            consume(escn.apply(&x, dir, &h));
+        });
+
+        // Gaunt conv: aligned filter => single-column convolution
+        let gconv = GauntConvPlan::new(l, l, l);
+        let h2: Vec<f64> = (0..=l).map(|_| 1.0).collect();
+        t.run(&format!("gaunt_conv        L={l}"), 100, || {
+            consume(gconv.apply_aligned(&x, &h2));
+        });
+        t.run(&format!("gaunt_conv+rot    L={l}"), 100, || {
+            consume(gconv.apply(&x, dir, &h2));
+        });
+
+        // Gaunt without the eSCN sparsity (full filter through the plan)
+        let gfull = GauntPlan::new(l, l, l, ConvMethod::Auto);
+        t.run(&format!("gaunt_full_filter L={l}"), 100, || {
+            consume(gfull.apply(&x, &ysh));
+        });
+    }
+    t.write_tsv("fig1b");
+}

@@ -1,0 +1,69 @@
+//! Fig. 1 panels 3-4 — Equivariant Many-body Interaction efficiency.
+//!
+//! (a) fix nu = 3, sweep L;  (b) fix L = 2, sweep nu — against the
+//! e3nn-style pairwise CG fold and the MACE-style precomputed composite
+//! tensor (which trades memory for speed; its footprint is reported).
+
+use gaunt_tp::num_coeffs;
+use gaunt_tp::tp::many_body::{
+    many_body_cg_fold, many_body_gaunt, MaceStylePlan,
+};
+use gaunt_tp::util::bench::{consume, BenchTable};
+use gaunt_tp::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+
+    let mut t = BenchTable::new("fig1c-a: many-body, nu=3, sweep L");
+    for l in [1usize, 2, 3] {
+        let xs: Vec<Vec<f64>> =
+            (0..3).map(|_| rng.normals(num_coeffs(l))).collect();
+        t.run(&format!("e3nn_cg_fold    L={l}"), 120, || {
+            consume(many_body_cg_fold(&xs, l, l, 3 * l));
+        });
+        let mace = MaceStylePlan::new(3, l, l);
+        t.run(
+            &format!("mace_precomp    L={l} (mem {} KiB)",
+                     mace.memory_bytes() / 1024),
+            120,
+            || {
+                consume(mace.apply_self(&xs[0]));
+            },
+        );
+        t.run(&format!("gaunt_seq       L={l}"), 120, || {
+            consume(many_body_gaunt(&xs, l, l, false));
+        });
+        t.run(&format!("gaunt_dc        L={l}"), 120, || {
+            consume(many_body_gaunt(&xs, l, l, true));
+        });
+    }
+    t.write_tsv("fig1c_sweep_l");
+
+    let mut t2 = BenchTable::new("fig1c-b: many-body, L=2, sweep nu");
+    let l = 2usize;
+    for nu in [2usize, 3, 4] {
+        let xs: Vec<Vec<f64>> =
+            (0..nu).map(|_| rng.normals(num_coeffs(l))).collect();
+        t2.run(&format!("e3nn_cg_fold    nu={nu}"), 120, || {
+            consume(many_body_cg_fold(&xs, l, l, nu * l));
+        });
+        if nu <= 3 {
+            let mace = MaceStylePlan::new(nu, l, l);
+            t2.run(
+                &format!("mace_precomp    nu={nu} (mem {} KiB)",
+                         mace.memory_bytes() / 1024),
+                120,
+                || {
+                    consume(mace.apply_self(&xs[0]));
+                },
+            );
+        }
+        t2.run(&format!("gaunt_seq       nu={nu}"), 120, || {
+            consume(many_body_gaunt(&xs, l, l, false));
+        });
+        t2.run(&format!("gaunt_dc        nu={nu}"), 120, || {
+            consume(many_body_gaunt(&xs, l, l, true));
+        });
+    }
+    t2.write_tsv("fig1c_sweep_nu");
+}

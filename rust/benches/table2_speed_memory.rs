@@ -1,0 +1,64 @@
+//! Table 2 (bottom rows) — training-step speed-up and memory cost of the
+//! Gaunt parameterization vs the CG baseline, measured end-to-end on the
+//! compiled train-step artifacts, plus the many-body memory comparison
+//! (MACE-style precomputed tensors vs the Gaunt pipeline's tables).
+
+use gaunt_tp::data::{gen_bpa_dataset, PaddedBatch};
+use gaunt_tp::experiments::ff_batch_tensors;
+use gaunt_tp::runtime::Engine;
+use gaunt_tp::tp::many_body::MaceStylePlan;
+use gaunt_tp::fourier::tables::{f2sh_panels, sh2f_panels};
+use gaunt_tp::util::bench::{consume, BenchTable};
+
+fn main() {
+    let mut t = BenchTable::new("table2: train-step speed (batch 8) + memory");
+    match Engine::new("artifacts") {
+        Ok(engine) => {
+            let graphs = gen_bpa_dataset(&[0.05], 8, 3).remove(0);
+            let pb = PaddedBatch::from_graphs(&graphs, 8, 32, 128, 4.0);
+            for variant in ["gaunt", "cg"] {
+                let exe = match engine.load(&format!("ff_train_step_{variant}")) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        println!("skipping {variant}: {e}");
+                        continue;
+                    }
+                };
+                let state: Vec<_> = engine
+                    .load_state_blob(&format!("ff_state_init_{variant}"))
+                    .unwrap()
+                    .into_iter()
+                    .map(|(_, x)| x)
+                    .collect();
+                let mut inputs = state.clone();
+                inputs.extend(ff_batch_tensors(&pb, true));
+                t.run(&format!("train_step_{variant}"), 2500, || {
+                    consume(exe.run(&inputs).unwrap());
+                });
+            }
+        }
+        Err(e) => println!("(artifacts missing: {e})"),
+    }
+
+    // memory: MACE-style composite coupling tensors vs Gaunt tables
+    println!("\n-- memory footprint (nu=3 many-body) --");
+    for l in [1usize, 2, 3] {
+        let mace = MaceStylePlan::new(3, l, l);
+        let p = sh2f_panels(l);
+        let f = f2sh_panels(l, 3 * l);
+        let gaunt_bytes: usize = p
+            .panels
+            .iter()
+            .chain(f.panels.iter())
+            .map(|v| v.len() * 16)
+            .sum();
+        println!(
+            "L={l}: mace_precomputed = {:>10} B   gaunt_tables = {:>8} B   \
+             ratio {:.1}x",
+            mace.memory_bytes(),
+            gaunt_bytes,
+            mace.memory_bytes() as f64 / gaunt_bytes as f64
+        );
+    }
+    t.write_tsv("table2_speed");
+}

@@ -1,0 +1,223 @@
+//! Dynamic batcher: Condvar-guarded queue with a size-or-deadline flush
+//! policy (the standard serving trade-off: fill batches for throughput,
+//! bound queueing delay for latency) and backpressure via a queue cap.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::request::Envelope;
+
+/// Flush policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// flush as soon as this many requests are queued
+    pub max_batch: usize,
+    /// flush when the oldest request has waited this long
+    pub max_wait: Duration,
+    /// reject new requests beyond this depth (backpressure)
+    pub max_queue: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            max_queue: 1024,
+        }
+    }
+}
+
+struct Inner {
+    queue: VecDeque<Envelope>,
+    closed: bool,
+}
+
+/// Thread-safe dynamic batcher.
+pub struct Batcher {
+    policy: BatchPolicy,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue; `Err` when the queue is full (backpressure) or closed.
+    pub fn push(&self, env: Envelope) -> Result<(), Envelope> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.queue.len() >= self.policy.max_queue {
+            return Err(env);
+        }
+        g.queue.push_back(env);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue; wakes all waiting workers.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until a batch is ready per the policy (or the queue closes).
+    /// Returns `None` when closed and drained.  FIFO order is preserved.
+    pub fn next_batch(&self) -> Option<Vec<Envelope>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.queue.is_empty() {
+                let oldest = g.queue.front().unwrap().enqueued;
+                let waited = oldest.elapsed();
+                if g.queue.len() >= self.policy.max_batch
+                    || waited >= self.policy.max_wait
+                    || g.closed
+                {
+                    let take = g.queue.len().min(self.policy.max_batch);
+                    return Some(g.queue.drain(..take).collect());
+                }
+                // wait out the remaining deadline (or a new arrival)
+                let remain = self.policy.max_wait - waited;
+                let (g2, _timeout) = self.cv.wait_timeout(g, remain).unwrap();
+                g = g2;
+            } else {
+                if g.closed {
+                    return None;
+                }
+                g = self.cv.wait(g).unwrap();
+            }
+        }
+    }
+
+    /// Non-blocking: take up to max_batch requests if any are queued.
+    pub fn try_batch(&self) -> Option<Vec<Envelope>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.queue.is_empty() {
+            return None;
+        }
+        let take = g.queue.len().min(self.policy.max_batch);
+        Some(g.queue.drain(..take).collect())
+    }
+
+    /// Time the oldest queued request has been waiting.
+    pub fn oldest_wait(&self) -> Option<Duration> {
+        let g = self.inner.lock().unwrap();
+        g.queue.front().map(|e| e.enqueued.elapsed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ForceRequest;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+    use std::sync::Arc;
+
+    fn env(id: u64) -> Envelope {
+        let (tx, _rx) = channel();
+        Envelope {
+            req: ForceRequest { id, pos: vec![], species: vec![] },
+            reply: tx,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn flushes_on_size() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_secs(10),
+            max_queue: 100,
+        });
+        for i in 0..3 {
+            b.push(env(i)).map_err(|_| ()).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        // FIFO
+        assert_eq!(batch[0].req.id, 0);
+        assert_eq!(batch[2].req.id, 2);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(5),
+            max_queue: 100,
+        });
+        b.push(env(1)).map_err(|_| ()).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn backpressure_rejects() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            max_queue: 2,
+        });
+        assert!(b.push(env(0)).is_ok());
+        assert!(b.push(env(1)).is_ok());
+        assert!(b.push(env(2)).is_err());
+    }
+
+    #[test]
+    fn close_unblocks_workers() {
+        let b = Arc::new(Batcher::new(BatchPolicy::default()));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn preserves_fifo_across_batches() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            max_queue: 100,
+        });
+        for i in 0..5 {
+            b.push(env(i)).map_err(|_| ()).unwrap();
+        }
+        let mut seen = Vec::new();
+        while let Some(batch) = b.try_batch() {
+            for e in batch {
+                seen.push(e.req.id);
+            }
+        }
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn push_after_close_fails() {
+        let b = Batcher::new(BatchPolicy::default());
+        b.close();
+        assert!(b.push(env(0)).is_err());
+    }
+}

@@ -1,0 +1,160 @@
+//! Serving metrics: counters + a fixed-bucket latency histogram with
+//! percentile estimation.  Lock-free on the hot path (atomics).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Exponential latency buckets from 1 µs to ~67 s.
+const N_BUCKETS: usize = 27;
+
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        // bucket i covers [1000 * 2^i, 1000 * 2^{i+1}) ns
+        let us = (ns / 1000).max(1);
+        (63 - us.leading_zeros() as usize).min(N_BUCKETS - 1)
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Percentile estimate (upper bucket edge), q in [0, 1].
+    pub fn percentile_ns(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1000.0 * (1u64 << (i + 1)) as f64;
+            }
+        }
+        1000.0 * (1u64 << N_BUCKETS) as f64
+    }
+}
+
+/// Aggregate service metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub padding_waste: AtomicU64,
+    pub latency: LatencyHistogram,
+    pub exec_latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Default::default()
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} responses={} rejected={} batches={} mean_batch={:.2} \
+             pad_waste={} p50={:.2}ms p99={:.2}ms mean={:.2}ms exec_p50={:.2}ms",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.padding_waste.load(Ordering::Relaxed),
+            self.latency.percentile_ns(0.5) / 1e6,
+            self.latency.percentile_ns(0.99) / 1e6,
+            self.latency.mean_ns() / 1e6,
+            self.exec_latency.percentile_ns(0.5) / 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 10_000); // 10µs .. 10ms
+        }
+        let p50 = h.percentile_ns(0.5);
+        let p99 = h.percentile_ns(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 1e6 && p50 <= 2e7, "p50 {p50}");
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let h = LatencyHistogram::new();
+        h.record_ns(1_000_000);
+        h.record_ns(3_000_000);
+        assert!((h.mean_ns() - 2e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile_ns(0.5), 0.0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn metrics_report_renders() {
+        let m = Metrics::new();
+        m.requests.fetch_add(10, Ordering::Relaxed);
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.batched_requests.fetch_add(10, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("requests=10"));
+        assert!(r.contains("mean_batch=5.00"));
+    }
+}

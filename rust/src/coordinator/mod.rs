@@ -1,0 +1,24 @@
+//! Layer-3 coordinator: a force-field serving + training system in the
+//! vLLM mold (request router, dynamic batcher, worker pool, metrics),
+//! built on std threads (tokio is unavailable offline; the event loop is
+//! a Condvar-driven queue, see DESIGN.md §3).
+//!
+//! Dataflow (serving):
+//!   client -> [`server::ForceFieldServer::submit`] -> [`batcher`] queue
+//!   -> worker thread: [`router`] picks the smallest executable variant
+//!   that fits -> pad ([`crate::data::PaddedBatch`]) -> PJRT execute ->
+//!   unpad -> respond through the per-request channel.
+//!
+//! Dataflow (training): [`trainer::Trainer`] drives the fused
+//! `ff_train_step_*` artifact over shuffled minibatches.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod trainer;
+
+pub use request::{ForceRequest, ForceResponse};
+pub use server::{ForceFieldServer, ServerConfig};
+pub use trainer::Trainer;

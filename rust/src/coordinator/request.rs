@@ -1,0 +1,55 @@
+//! Request/response types for the force-field service.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// A single-structure inference request.
+#[derive(Clone, Debug)]
+pub struct ForceRequest {
+    pub id: u64,
+    pub pos: Vec<[f64; 3]>,
+    pub species: Vec<usize>,
+}
+
+/// The model's answer.
+#[derive(Clone, Debug)]
+pub struct ForceResponse {
+    pub id: u64,
+    pub energy: f64,
+    pub forces: Vec<[f64; 3]>,
+    /// queueing + execution latency in seconds
+    pub latency_s: f64,
+}
+
+/// Internal envelope: request + reply channel + enqueue timestamp.
+pub struct Envelope {
+    pub req: ForceRequest,
+    pub reply: Sender<Result<ForceResponse, String>>,
+    pub enqueued: Instant,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn envelope_reply_round_trip() {
+        let (tx, rx) = channel();
+        let env = Envelope {
+            req: ForceRequest { id: 7, pos: vec![[0.0; 3]], species: vec![0] },
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        env.reply
+            .send(Ok(ForceResponse {
+                id: env.req.id,
+                energy: -1.0,
+                forces: vec![[0.0; 3]],
+                latency_s: 0.001,
+            }))
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, 7);
+    }
+}

@@ -1,0 +1,120 @@
+//! Executable-variant router: the artifacts ship several batch-size
+//! variants of the same model (`ff_fwd_B1`, `ff_fwd_B4`, `ff_fwd_B8`);
+//! the router picks the cheapest cover for a pending batch.
+
+/// A compiled variant (batch capacity + name).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Variant {
+    pub name: String,
+    pub batch: usize,
+}
+
+/// Router over batch-size variants.
+#[derive(Clone, Debug, Default)]
+pub struct Router {
+    /// sorted ascending by batch
+    variants: Vec<Variant>,
+}
+
+impl Router {
+    pub fn new(mut variants: Vec<Variant>) -> Self {
+        assert!(!variants.is_empty(), "router needs at least one variant");
+        variants.sort_by_key(|v| v.batch);
+        Router { variants }
+    }
+
+    pub fn variants(&self) -> &[Variant] {
+        &self.variants
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.variants.last().map(|v| v.batch).unwrap_or(0)
+    }
+
+    /// Smallest variant with capacity >= n (or the largest available).
+    pub fn pick(&self, n: usize) -> &Variant {
+        self.variants
+            .iter()
+            .find(|v| v.batch >= n)
+            .unwrap_or_else(|| self.variants.last().unwrap())
+    }
+
+    /// Split n requests into chunks, each assigned the smallest fitting
+    /// variant: greedy largest-first then a tight tail.
+    pub fn plan(&self, n: usize) -> Vec<(&Variant, usize)> {
+        let mut plan = Vec::new();
+        let mut left = n;
+        let biggest = self.max_batch();
+        while left > 0 {
+            if left >= biggest {
+                plan.push((self.pick(biggest), biggest));
+                left -= biggest;
+            } else {
+                let v = self.pick(left);
+                plan.push((v, left));
+                left = 0;
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, PropConfig};
+
+    fn router() -> Router {
+        Router::new(vec![
+            Variant { name: "b4".into(), batch: 4 },
+            Variant { name: "b1".into(), batch: 1 },
+            Variant { name: "b8".into(), batch: 8 },
+        ])
+    }
+
+    #[test]
+    fn picks_smallest_fitting() {
+        let r = router();
+        assert_eq!(r.pick(1).batch, 1);
+        assert_eq!(r.pick(2).batch, 4);
+        assert_eq!(r.pick(4).batch, 4);
+        assert_eq!(r.pick(5).batch, 8);
+        assert_eq!(r.pick(100).batch, 8); // saturates at largest
+    }
+
+    #[test]
+    fn plan_covers_exactly() {
+        let r = router();
+        for n in 1..40 {
+            let plan = r.plan(n);
+            let total: usize = plan.iter().map(|(_, k)| k).sum();
+            assert_eq!(total, n, "plan must cover all requests");
+            for (v, k) in &plan {
+                assert!(v.batch >= *k, "chunk exceeds variant capacity");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_is_greedy_minimal_padding_property() {
+        check("router-padding-bounded", PropConfig { cases: 64, seed: 1 },
+              |rng, _| {
+            let r = router();
+            let n = 1 + rng.below(64);
+            let plan = r.plan(n);
+            let padded: usize = plan.iter().map(|(v, _)| v.batch).sum();
+            // waste is bounded by the largest variant
+            if padded - n < 8 {
+                Ok(())
+            } else {
+                Err(format!("padding waste {} for n={n}", padded - n))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_router_panics() {
+        let _ = Router::new(vec![]);
+    }
+}

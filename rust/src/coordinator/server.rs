@@ -1,0 +1,277 @@
+//! The force-field serving coordinator: worker pool over the dynamic
+//! batcher, routing each flushed batch to the smallest compiled variant.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::request::{Envelope, ForceRequest, ForceResponse};
+use super::router::{Router, Variant};
+use crate::data::{Graph, PaddedBatch};
+use crate::runtime::{Engine, Executable, Tensor};
+use crate::util::json::Json;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub policy: BatchPolicy,
+    pub n_workers: usize,
+    /// neighbor cutoff used to build edges (must match training)
+    pub r_cut: f64,
+    /// artifact name prefix for variants (default "ff_fwd_B")
+    pub variant_prefix: String,
+    /// state blob holding model parameters
+    pub state_blob: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            policy: BatchPolicy::default(),
+            n_workers: 2,
+            r_cut: 4.0,
+            variant_prefix: "ff_fwd_B".to_string(),
+            state_blob: "ff_state_init".to_string(),
+        }
+    }
+}
+
+struct Shared {
+    engine: Arc<Engine>,
+    router: Router,
+    /// model + optimizer state tensors, in artifact input order
+    state: RwLock<Arc<Vec<Tensor>>>,
+    metrics: Metrics,
+    n_atoms: usize,
+    n_edges: usize,
+    r_cut: f64,
+}
+
+/// The serving coordinator.
+pub struct ForceFieldServer {
+    batcher: Arc<Batcher>,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl ForceFieldServer {
+    /// Discover `ff_fwd_B*` variants in the manifest, load parameters, and
+    /// spawn the worker pool.
+    pub fn start(engine: Arc<Engine>, cfg: ServerConfig) -> Result<Self> {
+        let mut variants = Vec::new();
+        let mut n_atoms = 0usize;
+        let mut n_edges = 0usize;
+        for name in engine.artifact_names() {
+            if let Some(rest) = name.strip_prefix(&cfg.variant_prefix) {
+                if let Ok(b) = rest.parse::<usize>() {
+                    let meta = engine.artifact_meta(&name).cloned()
+                        .unwrap_or(Json::Null);
+                    n_atoms = meta.get("n_atoms").and_then(Json::as_usize)
+                        .unwrap_or(32);
+                    n_edges = meta.get("n_edges").and_then(Json::as_usize)
+                        .unwrap_or(128);
+                    variants.push(Variant { name: name.clone(), batch: b });
+                }
+            }
+        }
+        if variants.is_empty() {
+            return Err(anyhow!(
+                "no '{}*' artifacts found (run `make artifacts`)",
+                cfg.variant_prefix
+            ));
+        }
+        // eagerly compile all variants (cold-start off the request path)
+        for v in &variants {
+            engine.load(&v.name)?;
+        }
+        let state: Vec<Tensor> = engine
+            .load_state_blob(&cfg.state_blob)?
+            .into_iter()
+            .map(|(_, t)| t)
+            .collect();
+        let shared = Arc::new(Shared {
+            engine: engine.clone(),
+            router: Router::new(variants),
+            state: RwLock::new(Arc::new(state)),
+            metrics: Metrics::new(),
+            n_atoms,
+            n_edges,
+            r_cut: cfg.r_cut,
+        });
+        let batcher = Arc::new(Batcher::new(cfg.policy));
+        let mut workers = Vec::new();
+        for w in 0..cfg.n_workers.max(1) {
+            let b = batcher.clone();
+            let s = shared.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("ff-worker-{w}"))
+                    .spawn(move || worker_loop(&b, &s))
+                    .expect("spawn worker"),
+            );
+        }
+        Ok(ForceFieldServer {
+            batcher,
+            shared,
+            workers,
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// Replace the model state (e.g. after training).  Takes the full
+    /// state tensor list in artifact order.
+    pub fn set_state(&self, state: Vec<Tensor>) {
+        *self.shared.state.write().unwrap() = Arc::new(state);
+    }
+
+    /// Submit asynchronously; the receiver yields the response.
+    pub fn submit(
+        &self,
+        pos: Vec<[f64; 3]>,
+        species: Vec<usize>,
+    ) -> Result<Receiver<Result<ForceResponse, String>>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let env = Envelope {
+            req: ForceRequest { id, pos, species },
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.batcher.push(env).map_err(|_| {
+            self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            anyhow!("queue full (backpressure) or server closed")
+        })?;
+        Ok(rx)
+    }
+
+    /// Submit and wait.
+    pub fn infer_blocking(
+        &self,
+        pos: Vec<[f64; 3]>,
+        species: Vec<usize>,
+    ) -> Result<ForceResponse> {
+        let rx = self.submit(pos, species)?;
+        rx.recv()
+            .map_err(|e| anyhow!("server dropped request: {e}"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.shared.metrics
+    }
+
+    pub fn max_atoms(&self) -> usize {
+        self.shared.n_atoms
+    }
+
+    /// Drain and stop the workers.
+    pub fn shutdown(self) {
+        self.batcher.close();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(batcher: &Batcher, s: &Shared) {
+    while let Some(batch) = batcher.next_batch() {
+        // route: split the flushed batch into variant-sized chunks
+        let plan = s.router.plan(batch.len());
+        let mut offset = 0usize;
+        for (variant, k) in plan {
+            let chunk = &batch[offset..offset + k];
+            offset += k;
+            run_chunk(s, variant, chunk);
+        }
+    }
+}
+
+fn run_chunk(s: &Shared, variant: &Variant, chunk: &[Envelope]) {
+    let t_exec = Instant::now();
+    let result = execute_chunk(s, variant, chunk);
+    let exec_ns = t_exec.elapsed().as_nanos() as u64;
+    s.metrics.exec_latency.record_ns(exec_ns);
+    s.metrics.batches.fetch_add(1, Ordering::Relaxed);
+    s.metrics
+        .batched_requests
+        .fetch_add(chunk.len() as u64, Ordering::Relaxed);
+    s.metrics
+        .padding_waste
+        .fetch_add((variant.batch - chunk.len()) as u64, Ordering::Relaxed);
+    match result {
+        Ok(responses) => {
+            for (env, mut resp) in chunk.iter().zip(responses) {
+                let lat = env.enqueued.elapsed();
+                resp.latency_s = lat.as_secs_f64();
+                s.metrics.latency.record_ns(lat.as_nanos() as u64);
+                s.metrics.responses.fetch_add(1, Ordering::Relaxed);
+                let _ = env.reply.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            let msg = format!("execution failed: {e}");
+            for env in chunk {
+                let _ = env.reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+fn execute_chunk(
+    s: &Shared,
+    variant: &Variant,
+    chunk: &[Envelope],
+) -> Result<Vec<ForceResponse>> {
+    let exe: Arc<Executable> = s.engine.load(&variant.name)?;
+    // build graphs (no labels at serving time)
+    let graphs: Vec<Graph> = chunk
+        .iter()
+        .map(|env| Graph {
+            pos: env.req.pos.clone(),
+            species: env.req.species.clone(),
+            energy: 0.0,
+            forces: vec![[0.0; 3]; env.req.pos.len()],
+        })
+        .collect();
+    let pb = PaddedBatch::from_graphs(
+        &graphs, variant.batch, s.n_atoms, s.n_edges, s.r_cut,
+    );
+    let state = s.state.read().unwrap().clone();
+    let mut inputs: Vec<Tensor> = state.as_ref().clone();
+    inputs.push(Tensor::F32(pb.pos.clone()));
+    inputs.push(Tensor::I32(pb.species.clone()));
+    inputs.push(Tensor::I32(pb.edges.clone()));
+    inputs.push(Tensor::F32(pb.edge_mask.clone()));
+    inputs.push(Tensor::F32(pb.atom_mask.clone()));
+    let outputs = exe.run(&inputs)?;
+    let energy = outputs[0].as_f32()?;
+    let forces = outputs[1].as_f32()?;
+    let mut responses = Vec::with_capacity(chunk.len());
+    for (g_idx, env) in chunk.iter().enumerate() {
+        let na = pb.true_atoms[g_idx];
+        let mut f = Vec::with_capacity(na);
+        for a in 0..na {
+            let base = (g_idx * s.n_atoms + a) * 3;
+            f.push([
+                forces[base] as f64,
+                forces[base + 1] as f64,
+                forces[base + 2] as f64,
+            ]);
+        }
+        responses.push(ForceResponse {
+            id: env.req.id,
+            energy: energy[g_idx] as f64,
+            forces: f,
+            latency_s: 0.0,
+        });
+    }
+    Ok(responses)
+}

@@ -1,0 +1,121 @@
+//! Training-loop driver over a fused AOT train-step artifact.
+//!
+//! The artifact is one XLA computation: (state..., batch...) ->
+//! (state'..., loss) with Adam folded in.  Rust owns the loop, the data
+//! pipeline, shuffling, and logging; Python was only the compiler.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Engine, Executable, Tensor};
+use crate::util::json::Json;
+
+/// Generic trainer over a train-step artifact.
+pub struct Trainer {
+    exe: Arc<Executable>,
+    /// current (params + optimizer) state, artifact input order
+    state: Vec<Tensor>,
+    n_state: usize,
+    /// loss history (one entry per step)
+    pub losses: Vec<f64>,
+}
+
+impl Trainer {
+    /// Load an artifact (e.g. "ff_train_step_gaunt") and its initial state
+    /// blob (e.g. "ff_state_init_gaunt").
+    pub fn new(engine: &Engine, artifact: &str, state_blob: &str) -> Result<Self> {
+        let exe = engine.load(artifact)?;
+        let n_state = exe
+            .meta
+            .get("n_state")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("{artifact}: meta.n_state missing"))?;
+        let state: Vec<Tensor> = engine
+            .load_state_blob(state_blob)?
+            .into_iter()
+            .map(|(_, t)| t)
+            .collect();
+        if state.len() != n_state {
+            return Err(anyhow!(
+                "state blob has {} tensors, artifact expects {}",
+                state.len(),
+                n_state
+            ));
+        }
+        Ok(Trainer { exe, state, n_state, losses: Vec::new() })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.exe
+            .meta
+            .get("batch")
+            .and_then(Json::as_usize)
+            .unwrap_or(1)
+    }
+
+    pub fn n_state(&self) -> usize {
+        self.n_state
+    }
+
+    /// One optimization step; `batch` are the artifact's batch inputs in
+    /// manifest order (after the state inputs).  Returns the loss.
+    pub fn step(&mut self, batch: Vec<Tensor>) -> Result<f64> {
+        let expected = self.exe.inputs.len() - self.n_state;
+        if batch.len() != expected {
+            return Err(anyhow!(
+                "step: expected {expected} batch tensors, got {}",
+                batch.len()
+            ));
+        }
+        let mut inputs = self.state.clone();
+        inputs.extend(batch);
+        let mut outputs = self.exe.run(&inputs)?;
+        let loss_t = outputs.pop().ok_or_else(|| anyhow!("no loss output"))?;
+        let loss = loss_t.as_f32()?[0] as f64;
+        if !loss.is_finite() {
+            return Err(anyhow!("non-finite loss at step {}", self.losses.len()));
+        }
+        self.state = outputs;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Current state tensors (params + opt), artifact input order — the
+    /// same prefix order the `ff_fwd_*` artifacts expect.
+    pub fn state(&self) -> &[Tensor] {
+        &self.state
+    }
+
+    pub fn take_state(self) -> Vec<Tensor> {
+        self.state
+    }
+
+    /// Mean loss over the trailing window.
+    pub fn recent_loss(&self, window: usize) -> f64 {
+        mean_tail(&self.losses, window)
+    }
+}
+
+/// Mean of the last `window` entries (NaN when empty).
+pub fn mean_tail(xs: &[f64], window: usize) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let k = xs.len().saturating_sub(window);
+    let tail = &xs[k..];
+    tail.iter().sum::<f64>() / tail.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_tail_windows() {
+        let losses = [4.0, 2.0, 2.0];
+        assert!((mean_tail(&losses, 2) - 2.0).abs() < 1e-12);
+        assert!((mean_tail(&losses, 10) - 8.0 / 3.0).abs() < 1e-12);
+        assert!(mean_tail(&[], 3).is_nan());
+    }
+}

@@ -1,0 +1,107 @@
+//! Evaluation metrics: the OC20 S2EF metric set (Table 1) + MAEs (Table 2).
+
+/// Mean absolute error of two equal-length slices.
+pub fn mae(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(truth).map(|(a, b)| (a - b).abs()).sum::<f64>()
+        / pred.len() as f64
+}
+
+/// Per-component force MAE over a set of (pred, truth) force arrays.
+pub fn force_mae(pred: &[Vec<[f64; 3]>], truth: &[Vec<[f64; 3]>]) -> f64 {
+    let mut acc = 0.0;
+    let mut count = 0usize;
+    for (p, t) in pred.iter().zip(truth) {
+        for (a, b) in p.iter().zip(t) {
+            for k in 0..3 {
+                acc += (a[k] - b[k]).abs();
+                count += 1;
+            }
+        }
+    }
+    if count == 0 { 0.0 } else { acc / count as f64 }
+}
+
+/// Mean cosine similarity between predicted and true per-atom forces.
+pub fn force_cos(pred: &[Vec<[f64; 3]>], truth: &[Vec<[f64; 3]>]) -> f64 {
+    let mut acc = 0.0;
+    let mut count = 0usize;
+    for (p, t) in pred.iter().zip(truth) {
+        for (a, b) in p.iter().zip(t) {
+            let na = (a[0] * a[0] + a[1] * a[1] + a[2] * a[2]).sqrt();
+            let nb = (b[0] * b[0] + b[1] * b[1] + b[2] * b[2]).sqrt();
+            if na < 1e-12 || nb < 1e-12 {
+                continue;
+            }
+            acc += (a[0] * b[0] + a[1] * b[1] + a[2] * b[2]) / (na * nb);
+            count += 1;
+        }
+    }
+    if count == 0 { 0.0 } else { acc / count as f64 }
+}
+
+/// Energy & Forces within Threshold: fraction of structures with
+/// |dE| < e_thresh AND max per-atom force error < f_thresh (OC20's EFwT).
+pub fn efwt(
+    e_pred: &[f64], e_truth: &[f64],
+    f_pred: &[Vec<[f64; 3]>], f_truth: &[Vec<[f64; 3]>],
+    e_thresh: f64, f_thresh: f64,
+) -> f64 {
+    let mut ok = 0usize;
+    for i in 0..e_pred.len() {
+        if (e_pred[i] - e_truth[i]).abs() >= e_thresh {
+            continue;
+        }
+        let mut worst = 0.0f64;
+        for (a, b) in f_pred[i].iter().zip(&f_truth[i]) {
+            let d = ((a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2)
+                + (a[2] - b[2]).powi(2))
+            .sqrt();
+            worst = worst.max(d);
+        }
+        if worst < f_thresh {
+            ok += 1;
+        }
+    }
+    ok as f64 / e_pred.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mae_basic() {
+        assert_eq!(mae(&[1.0, 2.0], &[1.0, 4.0]), 1.0);
+        assert_eq!(mae(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn force_cos_perfect_and_opposite() {
+        let f = vec![vec![[1.0, 0.0, 0.0], [0.0, 2.0, 0.0]]];
+        assert!((force_cos(&f, &f) - 1.0).abs() < 1e-12);
+        let neg = vec![vec![[-1.0, 0.0, 0.0], [0.0, -2.0, 0.0]]];
+        assert!((force_cos(&f, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn force_mae_counts_components() {
+        let a = vec![vec![[1.0, 1.0, 1.0]]];
+        let b = vec![vec![[0.0, 0.0, 0.0]]];
+        assert!((force_mae(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efwt_thresholds() {
+        let ep = vec![0.0, 0.0];
+        let et = vec![0.01, 0.5];
+        let fp = vec![vec![[0.0; 3]]; 2];
+        let ft = vec![vec![[0.001, 0.0, 0.0]], vec![[0.0; 3]]];
+        // first passes (dE 0.01 < 0.02, dF small); second fails on energy
+        let v = efwt(&ep, &et, &fp, &ft, 0.02, 0.03);
+        assert!((v - 0.5).abs() < 1e-12);
+    }
+}

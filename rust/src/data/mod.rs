@@ -1,0 +1,321 @@
+//! Datasets, padding to the static shapes the compiled executables expect,
+//! and evaluation metrics (Energy/Force MAE, Force cos, EFwT — the OC20
+//! metric set of Table 1).
+
+pub mod metrics;
+
+use crate::md::integrator::{Integrator, Thermostat};
+use crate::md::molecule::Molecule;
+use crate::md::neighbor::neighbors_cell;
+use crate::util::rng::Rng;
+
+/// One labeled configuration (ground truth from the classical potential —
+/// our offline stand-in for DFT labels, see DESIGN.md §3).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub pos: Vec<[f64; 3]>,
+    pub species: Vec<usize>,
+    pub energy: f64,
+    pub forces: Vec<[f64; 3]>,
+}
+
+impl Graph {
+    pub fn n_atoms(&self) -> usize {
+        self.pos.len()
+    }
+}
+
+/// A batch padded to static (B, N, E) shapes, laid out exactly like the
+/// `ff_*` artifact inputs (f32/i32 row-major).
+#[derive(Clone, Debug)]
+pub struct PaddedBatch {
+    pub b: usize,
+    pub n_atoms: usize,
+    pub n_edges: usize,
+    pub pos: Vec<f32>,       // [B, N, 3]
+    pub species: Vec<i32>,   // [B, N]
+    pub edges: Vec<i32>,     // [B, E, 2]
+    pub edge_mask: Vec<f32>, // [B, E]
+    pub atom_mask: Vec<f32>, // [B, N]
+    pub energy: Vec<f32>,    // [B]
+    pub forces: Vec<f32>,    // [B, N, 3]
+    /// true atom counts per row (for unpadding results)
+    pub true_atoms: Vec<usize>,
+    /// number of graphs actually occupied (rest are pure padding rows)
+    pub occupied: usize,
+    /// edges dropped because the graph exceeded the static edge budget
+    pub dropped_edges: usize,
+}
+
+impl PaddedBatch {
+    /// Pad `graphs` (at most `b`) into the static shape; builds edge lists
+    /// with a cutoff-radius neighbor search.
+    pub fn from_graphs(
+        graphs: &[Graph], b: usize, n_atoms: usize, n_edges: usize,
+        r_cut: f64,
+    ) -> PaddedBatch {
+        assert!(graphs.len() <= b, "batch overflow");
+        let mut pb = PaddedBatch {
+            b,
+            n_atoms,
+            n_edges,
+            pos: vec![0.0; b * n_atoms * 3],
+            species: vec![0; b * n_atoms],
+            edges: vec![0; b * n_edges * 2],
+            edge_mask: vec![0.0; b * n_edges],
+            atom_mask: vec![0.0; b * n_atoms],
+            energy: vec![0.0; b],
+            forces: vec![0.0; b * n_atoms * 3],
+            true_atoms: vec![0; b],
+            occupied: graphs.len(),
+            dropped_edges: 0,
+        };
+        for (g_idx, g) in graphs.iter().enumerate() {
+            let na = g.n_atoms().min(n_atoms);
+            pb.true_atoms[g_idx] = na;
+            for a in 0..na {
+                let base = (g_idx * n_atoms + a) * 3;
+                for k in 0..3 {
+                    pb.pos[base + k] = g.pos[a][k] as f32;
+                    pb.forces[base + k] = g.forces[a][k] as f32;
+                }
+                pb.species[g_idx * n_atoms + a] = g.species[a] as i32;
+                pb.atom_mask[g_idx * n_atoms + a] = 1.0;
+            }
+            pb.energy[g_idx] = g.energy as f32;
+            let nb = neighbors_cell(&g.pos[..na], r_cut);
+            let mut e_idx = 0;
+            for (i, j) in nb {
+                if e_idx >= n_edges {
+                    pb.dropped_edges += 1;
+                    continue;
+                }
+                let base = (g_idx * n_edges + e_idx) * 2;
+                pb.edges[base] = i as i32;
+                pb.edges[base + 1] = j as i32;
+                pb.edge_mask[g_idx * n_edges + e_idx] = 1.0;
+                e_idx += 1;
+            }
+        }
+        pb
+    }
+}
+
+/// Sample `n_per_temp` configurations of the 3BPA-lite molecule at each
+/// thermostat temperature, labeled by the classical potential — the
+/// Table 2 protocol (train at temps[0], test in- and out-of-distribution).
+pub fn gen_bpa_dataset(temps: &[f64], n_per_temp: usize, seed: u64)
+    -> Vec<Vec<Graph>> {
+    let mol = Molecule::bpa_lite();
+    let mut out = Vec::with_capacity(temps.len());
+    for (ti, &temp) in temps.iter().enumerate() {
+        let mut rng = Rng::new(seed.wrapping_add(1000 * ti as u64));
+        let mut md = Integrator::new(
+            mol.pos.clone(), mol.species.clone(), &mol.potential, 0.002,
+            Thermostat::Langevin { gamma: 1.0, temperature: temp },
+        );
+        md.thermalize(temp, &mut rng);
+        // equilibrate
+        for _ in 0..1500 {
+            md.step(&mol.potential, &mut rng);
+        }
+        let mut graphs = Vec::with_capacity(n_per_temp);
+        while graphs.len() < n_per_temp {
+            // decorrelate between samples
+            for _ in 0..100 {
+                md.step(&mol.potential, &mut rng);
+            }
+            let (e, f) =
+                mol.potential.energy_forces(&md.pos, &md.species);
+            graphs.push(Graph {
+                pos: md.pos.clone(),
+                species: md.species.clone(),
+                energy: e,
+                forces: f,
+            });
+        }
+        out.push(graphs);
+    }
+    out
+}
+
+/// Dihedral-slice analog: rigidly rotate ring B about the linker axis —
+/// samples a PES slice unlike anything in training.  The sweep covers
+/// ±60° (full revolutions produce steric clashes with astronomically
+/// repulsive LJ energies that would swamp any regression metric; real
+/// 3BPA dihedral scans likewise stay in the sterically allowed range).
+pub fn gen_dihedral_slices(n: usize) -> Vec<Graph> {
+    let mol = Molecule::bpa_lite();
+    let pivot = mol.pos[9]; // end of linker chain
+    let mut out = Vec::with_capacity(n);
+    let max_ang = std::f64::consts::PI / 3.0;
+    for k in 0..n {
+        let ang = -max_ang + 2.0 * max_ang * k as f64 / (n - 1).max(1) as f64;
+        let mut pos = mol.pos.clone();
+        for p in pos.iter_mut().skip(10) {
+            // rotate about the x-axis through pivot
+            let dy = p[1] - pivot[1];
+            let dz = p[2] - pivot[2];
+            let (s, c) = ang.sin_cos();
+            p[1] = pivot[1] + c * dy - s * dz;
+            p[2] = pivot[2] + s * dy + c * dz;
+        }
+        let (e, f) = mol.potential.energy_forces(&pos, &mol.species);
+        // guard: skip sterically clashed geometries
+        if e < 1e4 {
+            out.push(Graph {
+                pos,
+                species: mol.species.clone(),
+                energy: e,
+                forces: f,
+            });
+        }
+    }
+    out
+}
+
+/// OC20-analog dataset: adsorbate-on-slab configurations perturbed and
+/// relaxed for a few steps, labels from the classical potential.
+pub fn gen_adsorbate_dataset(n: usize, seed: u64) -> Vec<Graph> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let mol = Molecule::adsorbate_slab(3, 3, rng.uniform(-0.3, 0.3));
+        let mut md = Integrator::new(
+            mol.pos.clone(), mol.species.clone(), &mol.potential, 0.002,
+            Thermostat::Langevin { gamma: 2.0, temperature: 0.08 },
+        );
+        md.thermalize(0.08, &mut rng);
+        let steps = 100 + rng.below(400);
+        for _ in 0..steps {
+            md.step(&mol.potential, &mut rng);
+        }
+        let (e, f) = mol.potential.energy_forces(&md.pos, &md.species);
+        if e.is_finite() {
+            out.push(Graph {
+                pos: md.pos.clone(),
+                species: md.species.clone(),
+                energy: e,
+                forces: f,
+            });
+        }
+    }
+    out
+}
+
+/// Normalization statistics (energy is regressed per atom).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyStats {
+    pub mean_per_atom: f64,
+    pub std_per_atom: f64,
+}
+
+pub fn energy_stats(graphs: &[Graph]) -> EnergyStats {
+    let per_atom: Vec<f64> = graphs
+        .iter()
+        .map(|g| g.energy / g.n_atoms() as f64)
+        .collect();
+    let mean = per_atom.iter().sum::<f64>() / per_atom.len() as f64;
+    let var = per_atom.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / per_atom.len() as f64;
+    EnergyStats { mean_per_atom: mean, std_per_atom: var.sqrt().max(1e-9) }
+}
+
+/// Shift/scale a dataset's labels in place: e' = (e - n*mean)/std, f' = f/std.
+pub fn normalize_graphs(graphs: &mut [Graph], stats: EnergyStats) {
+    for g in graphs.iter_mut() {
+        g.energy = (g.energy - g.n_atoms() as f64 * stats.mean_per_atom)
+            / stats.std_per_atom;
+        for f in g.forces.iter_mut() {
+            for k in 0..3 {
+                f[k] /= stats.std_per_atom;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_shapes() {
+        let ds = gen_bpa_dataset(&[0.05], 3, 0);
+        let pb = PaddedBatch::from_graphs(&ds[0], 4, 32, 128, 4.0);
+        assert_eq!(pb.pos.len(), 4 * 32 * 3);
+        assert_eq!(pb.edges.len(), 4 * 128 * 2);
+        assert_eq!(pb.occupied, 3);
+        assert_eq!(pb.true_atoms[0], 14);
+        assert_eq!(pb.true_atoms[3], 0); // padding row
+        // masks consistent
+        let atoms0: f32 = pb.atom_mask[0..32].iter().sum();
+        assert_eq!(atoms0, 14.0);
+        let atoms3: f32 = pb.atom_mask[3 * 32..4 * 32].iter().sum();
+        assert_eq!(atoms3, 0.0);
+    }
+
+    #[test]
+    fn padded_edges_in_range() {
+        let ds = gen_bpa_dataset(&[0.05], 2, 1);
+        let pb = PaddedBatch::from_graphs(&ds[0], 2, 32, 128, 4.0);
+        for g in 0..2 {
+            for e in 0..128 {
+                if pb.edge_mask[g * 128 + e] > 0.0 {
+                    let i = pb.edges[(g * 128 + e) * 2];
+                    let j = pb.edges[(g * 128 + e) * 2 + 1];
+                    assert!(i >= 0 && (i as usize) < 14);
+                    assert!(j >= 0 && (j as usize) < 14);
+                    assert_ne!(i, j);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bpa_dataset_temperatures_distinct() {
+        let ds = gen_bpa_dataset(&[0.02, 0.3], 5, 2);
+        // higher-T configurations have higher mean energy
+        let mean_e = |gs: &[Graph]| -> f64 {
+            gs.iter().map(|g| g.energy).sum::<f64>() / gs.len() as f64
+        };
+        assert!(mean_e(&ds[1]) > mean_e(&ds[0]));
+    }
+
+    #[test]
+    fn dihedral_slices_vary() {
+        let sl = gen_dihedral_slices(8);
+        // clash guard may drop extreme angles, but most slices survive
+        assert!(sl.len() >= 4, "only {} slices", sl.len());
+        assert!(sl.iter().all(|g| g.energy < 1e4));
+        let e: Vec<f64> = sl.iter().map(|g| g.energy).collect();
+        let spread = e.iter().cloned().fold(f64::MIN, f64::max)
+            - e.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 1e-3, "slices should change the energy");
+    }
+
+    #[test]
+    fn adsorbate_dataset_valid() {
+        let ds = gen_adsorbate_dataset(3, 0);
+        for g in &ds {
+            assert_eq!(g.n_atoms(), 21);
+            assert!(g.energy.is_finite());
+            assert_eq!(g.forces.len(), 21);
+        }
+    }
+
+    #[test]
+    fn normalization_round_trip() {
+        let mut ds = gen_bpa_dataset(&[0.05], 4, 3).remove(0);
+        let stats = energy_stats(&ds);
+        let orig_e: Vec<f64> = ds.iter().map(|g| g.energy).collect();
+        normalize_graphs(&mut ds, stats);
+        let norm_stats = energy_stats(&ds);
+        assert!(norm_stats.mean_per_atom.abs() < 1e-9);
+        // invert
+        for (g, &e0) in ds.iter_mut().zip(&orig_e) {
+            let e = g.energy * stats.std_per_atom
+                + g.n_atoms() as f64 * stats.mean_per_atom;
+            assert!((e - e0).abs() < 1e-9);
+        }
+    }
+}

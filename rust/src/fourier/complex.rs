@@ -1,0 +1,125 @@
+//! Minimal complex arithmetic (num-complex is unavailable offline).
+
+use std::ops::{Add, AddAssign, Mul, Neg, Sub};
+
+/// Complex number with f64 parts.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+pub const ONE: C64 = C64 { re: 1.0, im: 0.0 };
+pub const I: C64 = C64 { re: 0.0, im: 1.0 };
+
+impl C64 {
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        C64 { re, im }
+    }
+
+    #[inline]
+    pub fn real(re: f64) -> Self {
+        C64 { re, im: 0.0 }
+    }
+
+    /// e^{i theta}
+    #[inline]
+    pub fn cis(theta: f64) -> Self {
+        C64 { re: theta.cos(), im: theta.sin() }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        C64 { re: self.re, im: -self.im }
+    }
+
+    #[inline]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.norm_sqr().sqrt()
+    }
+
+    #[inline]
+    pub fn scale(self, k: f64) -> Self {
+        C64 { re: self.re * k, im: self.im * k }
+    }
+}
+
+impl Add for C64 {
+    type Output = C64;
+    #[inline]
+    fn add(self, o: C64) -> C64 {
+        C64 { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl AddAssign for C64 {
+    #[inline]
+    fn add_assign(&mut self, o: C64) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl Sub for C64 {
+    type Output = C64;
+    #[inline]
+    fn sub(self, o: C64) -> C64 {
+        C64 { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl Mul for C64 {
+    type Output = C64;
+    #[inline]
+    fn mul(self, o: C64) -> C64 {
+        C64 {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl Neg for C64 {
+    type Output = C64;
+    #[inline]
+    fn neg(self) -> C64 {
+        C64 { re: -self.re, im: -self.im }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_axioms() {
+        let a = C64::new(1.5, -2.0);
+        let b = C64::new(-0.5, 3.0);
+        assert_eq!(a + b, b + a);
+        assert_eq!(a * b, b * a);
+        let d = (a * b) - C64::new(1.5 * -0.5 - (-2.0) * 3.0, 1.5 * 3.0 + -2.0 * -0.5);
+        assert!(d.abs() < 1e-15);
+    }
+
+    #[test]
+    fn cis_is_unit() {
+        for k in 0..10 {
+            let c = C64::cis(0.7 * k as f64);
+            assert!((c.abs() - 1.0).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn conj_mul_is_norm() {
+        let a = C64::new(3.0, 4.0);
+        let n = a * a.conj();
+        assert!((n.re - 25.0).abs() < 1e-12 && n.im.abs() < 1e-12);
+    }
+}

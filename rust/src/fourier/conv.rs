@@ -1,0 +1,141 @@
+//! Full 2D convolution of complex coefficient grids: direct (small L) and
+//! FFT-based (the paper's O(L^2 log L) path).
+
+use super::complex::C64;
+use super::fft::fft2;
+
+/// Direct full convolution of an n1 x n1 grid with an n2 x n2 grid
+/// (row-major), producing (n1+n2-1)^2.
+pub fn conv2d_direct(a: &[C64], n1: usize, b: &[C64], n2: usize) -> Vec<C64> {
+    debug_assert_eq!(a.len(), n1 * n1);
+    debug_assert_eq!(b.len(), n2 * n2);
+    let n = n1 + n2 - 1;
+    let mut out = vec![C64::default(); n * n];
+    for i in 0..n1 {
+        for j in 0..n1 {
+            let av = a[i * n1 + j];
+            if av.norm_sqr() == 0.0 {
+                continue;
+            }
+            for k in 0..n2 {
+                let orow = &mut out[(i + k) * n..];
+                let brow = &b[k * n2..(k + 1) * n2];
+                for (l, bv) in brow.iter().enumerate() {
+                    orow[j + l] += av * *bv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// FFT-based full convolution; identical output to [`conv2d_direct`].
+pub fn conv2d_fft(a: &[C64], n1: usize, b: &[C64], n2: usize) -> Vec<C64> {
+    let n = n1 + n2 - 1;
+    // zero-pad to n x n (fft2 handles arbitrary sizes via Bluestein; pad to
+    // next power of two rows/cols for speed)
+    let m = n.next_power_of_two();
+    let mut pa = vec![C64::default(); m * m];
+    let mut pb = vec![C64::default(); m * m];
+    for i in 0..n1 {
+        pa[i * m..i * m + n1].copy_from_slice(&a[i * n1..(i + 1) * n1]);
+    }
+    for i in 0..n2 {
+        pb[i * m..i * m + n2].copy_from_slice(&b[i * n2..(i + 1) * n2]);
+    }
+    let fa = fft2(&pa, m, m, false);
+    let fb = fft2(&pb, m, m, false);
+    let prod: Vec<C64> = fa.iter().zip(&fb).map(|(x, y)| *x * *y).collect();
+    let full = fft2(&prod, m, m, true);
+    let mut out = vec![C64::default(); n * n];
+    for i in 0..n {
+        out[i * n..(i + 1) * n].copy_from_slice(&full[i * m..i * m + n]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_grid(rng: &mut Rng, n: usize) -> Vec<C64> {
+        (0..n * n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    #[test]
+    fn direct_matches_brute_force() {
+        let mut rng = Rng::new(0);
+        let a = rand_grid(&mut rng, 3);
+        let b = rand_grid(&mut rng, 5);
+        let out = conv2d_direct(&a, 3, &b, 5);
+        let n = 7;
+        for p in 0..n {
+            for q in 0..n {
+                let mut acc = C64::default();
+                for i in 0..3 {
+                    for j in 0..3 {
+                        let (k, l) = (p as i64 - i as i64, q as i64 - j as i64);
+                        if (0..5).contains(&k) && (0..5).contains(&l) {
+                            acc += a[i * 3 + j] * b[(k * 5 + l) as usize];
+                        }
+                    }
+                }
+                assert!((out[p * n + q] - acc).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn fft_matches_direct() {
+        let mut rng = Rng::new(1);
+        for (n1, n2) in [(3usize, 3usize), (5, 7), (9, 9), (1, 5)] {
+            let a = rand_grid(&mut rng, n1);
+            let b = rand_grid(&mut rng, n2);
+            let d = conv2d_direct(&a, n1, &b, n2);
+            let f = conv2d_fft(&a, n1, &b, n2);
+            for (x, y) in d.iter().zip(&f) {
+                assert!((*x - *y).abs() < 1e-9, "n1={n1} n2={n2}");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_is_identity() {
+        let mut rng = Rng::new(2);
+        let mut d = vec![C64::default(); 9];
+        d[4] = C64::real(1.0); // center of 3x3
+        let b = rand_grid(&mut rng, 5);
+        let out = conv2d_direct(&d, 3, &b, 5);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert!((out[(i + 1) * 7 + (j + 1)] - b[i * 5 + j]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn commutative() {
+        let mut rng = Rng::new(3);
+        let a = rand_grid(&mut rng, 5);
+        let b = rand_grid(&mut rng, 7);
+        let ab = conv2d_direct(&a, 5, &b, 7);
+        let ba = conv2d_direct(&b, 7, &a, 5);
+        for (x, y) in ab.iter().zip(&ba) {
+            assert!((*x - *y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn associative() {
+        let mut rng = Rng::new(4);
+        let a = rand_grid(&mut rng, 3);
+        let b = rand_grid(&mut rng, 3);
+        let c = rand_grid(&mut rng, 3);
+        let ab_c = conv2d_direct(&conv2d_direct(&a, 3, &b, 3), 5, &c, 3);
+        let a_bc = conv2d_direct(&a, 3, &conv2d_direct(&b, 3, &c, 3), 5);
+        for (x, y) in ab_c.iter().zip(&a_bc) {
+            assert!((*x - *y).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Complex FFT from scratch: iterative radix-2 Cooley-Tukey for powers of
+//! two, Bluestein's algorithm for arbitrary lengths, and 2D transforms.
+
+use super::complex::C64;
+
+/// In-place radix-2 DIT FFT; `n` must be a power of two.
+/// `inverse` applies the conjugate transform WITHOUT the 1/n scaling.
+pub fn fft_pow2(buf: &mut [C64], inverse: bool) {
+    let n = buf.len();
+    debug_assert!(n.is_power_of_two());
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            buf.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wl = C64::cis(ang);
+        let mut i = 0;
+        while i < n {
+            let mut w = C64::real(1.0);
+            for k in 0..len / 2 {
+                let u = buf[i + k];
+                let v = buf[i + k + len / 2] * w;
+                buf[i + k] = u + v;
+                buf[i + k + len / 2] = u - v;
+                w = w * wl;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// DFT of arbitrary length via Bluestein (chirp-z), O(n log n).
+pub fn dft(input: &[C64], inverse: bool) -> Vec<C64> {
+    let n = input.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n.is_power_of_two() {
+        let mut buf = input.to_vec();
+        fft_pow2(&mut buf, inverse);
+        return buf;
+    }
+    // Bluestein: x_k w^{k^2/2} convolved with chirp
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let m = (2 * n - 1).next_power_of_two();
+    let mut a = vec![C64::default(); m];
+    let mut b = vec![C64::default(); m];
+    let mut chirp = vec![C64::default(); n];
+    for k in 0..n {
+        // k^2 mod 2n to keep angles accurate
+        let kk = (k * k) % (2 * n);
+        let ang = sign * std::f64::consts::PI * kk as f64 / n as f64;
+        chirp[k] = C64::cis(ang);
+        a[k] = input[k] * chirp[k];
+        b[k] = chirp[k].conj();
+        if k > 0 {
+            b[m - k] = chirp[k].conj();
+        }
+    }
+    fft_pow2(&mut a, false);
+    fft_pow2(&mut b, false);
+    for i in 0..m {
+        a[i] = a[i] * b[i];
+    }
+    fft_pow2(&mut a, true);
+    let scale = 1.0 / m as f64;
+    (0..n).map(|k| (a[k].scale(scale)) * chirp[k]).collect()
+}
+
+/// Forward DFT (no scaling).
+pub fn fft(input: &[C64]) -> Vec<C64> {
+    dft(input, false)
+}
+
+/// Inverse DFT with the 1/n scaling.
+pub fn ifft(input: &[C64]) -> Vec<C64> {
+    let n = input.len();
+    let mut out = dft(input, true);
+    let s = 1.0 / n as f64;
+    for v in out.iter_mut() {
+        *v = v.scale(s);
+    }
+    out
+}
+
+/// 2D FFT of a row-major rows x cols grid (in place semantics via return).
+pub fn fft2(grid: &[C64], rows: usize, cols: usize, inverse: bool) -> Vec<C64> {
+    debug_assert_eq!(grid.len(), rows * cols);
+    let mut tmp: Vec<C64> = Vec::with_capacity(rows * cols);
+    // rows
+    for r in 0..rows {
+        tmp.extend(dft(&grid[r * cols..(r + 1) * cols], inverse));
+    }
+    // cols
+    let mut out = vec![C64::default(); rows * cols];
+    let mut col_buf = vec![C64::default(); rows];
+    for c in 0..cols {
+        for r in 0..rows {
+            col_buf[r] = tmp[r * cols + c];
+        }
+        let f = dft(&col_buf, inverse);
+        for r in 0..rows {
+            out[r * cols + c] = f[r];
+        }
+    }
+    if inverse {
+        let s = 1.0 / (rows * cols) as f64;
+        for v in out.iter_mut() {
+            *v = v.scale(s);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_dft(x: &[C64]) -> Vec<C64> {
+        let n = x.len();
+        (0..n)
+            .map(|k| {
+                let mut acc = C64::default();
+                for (j, v) in x.iter().enumerate() {
+                    let ang = -2.0 * std::f64::consts::PI * (k * j) as f64
+                        / n as f64;
+                    acc += *v * C64::cis(ang);
+                }
+                acc
+            })
+            .collect()
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<C64> {
+        (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    #[test]
+    fn pow2_matches_naive() {
+        let mut rng = Rng::new(0);
+        for n in [1usize, 2, 4, 8, 16, 64] {
+            let x = rand_vec(&mut rng, n);
+            let got = fft(&x);
+            let want = naive_dft(&x);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((*g - *w).abs() < 1e-9 * n as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn bluestein_matches_naive() {
+        let mut rng = Rng::new(1);
+        for n in [3usize, 5, 7, 9, 11, 13, 17, 33] {
+            let x = rand_vec(&mut rng, n);
+            let got = fft(&x);
+            let want = naive_dft(&x);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!((*g - *w).abs() < 1e-8, "n={n} idx={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let mut rng = Rng::new(2);
+        for n in [4usize, 7, 16, 21] {
+            let x = rand_vec(&mut rng, n);
+            let y = ifft(&fft(&x));
+            for (a, b) in x.iter().zip(&y) {
+                assert!((*a - *b).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let mut rng = Rng::new(3);
+        let x = rand_vec(&mut rng, 32);
+        let f = fft(&x);
+        let e_time: f64 = x.iter().map(|v| v.norm_sqr()).sum();
+        let e_freq: f64 = f.iter().map(|v| v.norm_sqr()).sum::<f64>() / 32.0;
+        assert!((e_time - e_freq).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delta_transforms_to_ones() {
+        let mut x = vec![C64::default(); 8];
+        x[0] = C64::real(1.0);
+        for v in fft(&x) {
+            assert!((v - C64::real(1.0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let mut rng = Rng::new(5);
+        let a = rand_vec(&mut rng, 12);
+        let b = rand_vec(&mut rng, 12);
+        let sum: Vec<C64> = a.iter().zip(&b).map(|(x, y)| *x + *y).collect();
+        let fa = fft(&a);
+        let fb = fft(&b);
+        let fs = fft(&sum);
+        for i in 0..12 {
+            assert!((fs[i] - (fa[i] + fb[i])).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fft2_round_trip() {
+        let mut rng = Rng::new(6);
+        let (r, c) = (5usize, 9usize);
+        let g = rand_vec(&mut rng, r * c);
+        let f = fft2(&g, r, c, false);
+        let back = fft2(&f, r, c, true);
+        for (a, b) in g.iter().zip(&back) {
+            assert!((*a - *b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fft2_separable_vs_naive() {
+        // direct 2D DFT on a tiny grid
+        let mut rng = Rng::new(7);
+        let (rows, cols) = (3usize, 4usize);
+        let g = rand_vec(&mut rng, rows * cols);
+        let f = fft2(&g, rows, cols, false);
+        for p in 0..rows {
+            for q in 0..cols {
+                let mut acc = C64::default();
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let ang = -2.0 * std::f64::consts::PI
+                            * ((p * r) as f64 / rows as f64
+                                + (q * c) as f64 / cols as f64);
+                        acc += g[r * cols + c] * C64::cis(ang);
+                    }
+                }
+                assert!((f[p * cols + q] - acc).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! 2D Fourier substrate: complex arithmetic, FFTs, the SH <-> Fourier
+//! conversion tables, and grid convolutions (paper Section 3.2).
+
+pub mod complex;
+pub mod conv;
+pub mod fft;
+pub mod tables;
+
+pub use complex::C64;
+pub use conv::{conv2d_direct, conv2d_fft};
+pub use fft::{fft, fft2, ifft};
+pub use tables::{f2sh_panels, sh2f_panels, theta_fourier, theta_projection};

@@ -1,0 +1,195 @@
+//! SH <-> 2D-Fourier conversion tables (mirrors `python/compile/fourier.py`).
+//!
+//! * `theta_fourier(l, m)` — coefficients of the signed torus extension of
+//!   `N P_l^m(cos th)` (trig polynomial of degree l; FFT-sampled, exact).
+//! * `theta_projection(l, m, N)` — `int_0^pi e^{iu th} N P sin(th) dth`
+//!   via trig-poly algebra and the analytic integral
+//!   I(0)=pi, I(odd n)=2i/n, I(even n)=0.
+//! * packed per-|v| panels consumed by the O(L^3) fast path in `tp::gaunt`.
+
+use super::complex::C64;
+use super::fft::fft;
+use crate::so3::sh::{assoc_legendre, sh_norm};
+
+pub const SQRT2_OVER_2: f64 = std::f64::consts::FRAC_1_SQRT_2;
+
+/// Coefficients c_u (u = -l..l) of the theta-part trig polynomial.
+pub fn theta_fourier(l: usize, m: usize) -> Vec<C64> {
+    let n = 4 * l + 8;
+    let mut g = vec![C64::default(); n];
+    for (k, gk) in g.iter_mut().enumerate() {
+        let theta = 2.0 * std::f64::consts::PI * k as f64 / n as f64;
+        let mut v = assoc_legendre(l, m, theta.cos()) * sh_norm(l, m as i64);
+        if m % 2 == 1 && theta.sin() < 0.0 {
+            v = -v;
+        }
+        *gk = C64::real(v);
+    }
+    let c = fft(&g);
+    let scale = 1.0 / n as f64;
+    let mut out = vec![C64::default(); 2 * l + 1];
+    for u in -(l as i64)..=(l as i64) {
+        let idx = u.rem_euclid(n as i64) as usize;
+        out[(l as i64 + u) as usize] = c[idx].scale(scale);
+    }
+    out
+}
+
+/// t_u = int_0^pi e^{iu th} N P_l^m(cos th) sin th dth for u=-N..N.
+pub fn theta_projection(l: usize, m: usize, n_grid: usize) -> Vec<C64> {
+    let n = 4 * (l + 1) + 8;
+    let mut h = vec![C64::default(); n];
+    for (k, hk) in h.iter_mut().enumerate() {
+        let theta = 2.0 * std::f64::consts::PI * k as f64 / n as f64;
+        let mut v = assoc_legendre(l, m, theta.cos()) * sh_norm(l, m as i64)
+            * theta.sin();
+        if m % 2 == 1 && theta.sin() < 0.0 {
+            v = -v;
+        }
+        *hk = C64::real(v);
+    }
+    let c = fft(&h);
+    let scale = 1.0 / n as f64;
+    let deg = l as i64 + 1;
+    let integral = |nn: i64| -> C64 {
+        if nn == 0 {
+            C64::real(std::f64::consts::PI)
+        } else if nn % 2 == 0 {
+            C64::default()
+        } else {
+            C64::new(0.0, 2.0 / nn as f64)
+        }
+    };
+    let mut out = vec![C64::default(); 2 * n_grid + 1];
+    for u in -(n_grid as i64)..=(n_grid as i64) {
+        let mut acc = C64::default();
+        for k in -deg..=deg {
+            let dk = c[k.rem_euclid(n as i64) as usize].scale(scale);
+            acc += dk * integral(u + k);
+        }
+        out[(n_grid as i64 + u) as usize] = acc;
+    }
+    out
+}
+
+/// sh2f panels: P[s][u * (L+1) + l] complex, s = 0..=L, u index 0..2L.
+/// Zero where l < s.
+pub struct Sh2fPanels {
+    pub l_max: usize,
+    /// panels[s] is a (2L+1) x (L+1) row-major complex matrix over (u, l)
+    pub panels: Vec<Vec<C64>>,
+}
+
+pub fn sh2f_panels(l_max: usize) -> Sh2fPanels {
+    let nu = 2 * l_max + 1;
+    let nl = l_max + 1;
+    let mut panels = Vec::with_capacity(nl);
+    for s in 0..=l_max {
+        let mut p = vec![C64::default(); nu * nl];
+        for l in s..=l_max {
+            let pf = theta_fourier(l, s); // u = -l..l
+            for (k, v) in pf.iter().enumerate() {
+                let u_idx = l_max - l + k;
+                p[u_idx * nl + l] = *v;
+            }
+        }
+        panels.push(p);
+    }
+    Sh2fPanels { l_max, panels }
+}
+
+/// f2sh panels: T[s][l * (2N+1) + u] complex over (l, u), s = 0..=L_out.
+pub struct F2shPanels {
+    pub l_out: usize,
+    pub n_grid: usize,
+    pub panels: Vec<Vec<C64>>,
+}
+
+pub fn f2sh_panels(l_out: usize, n_grid: usize) -> F2shPanels {
+    let nu = 2 * n_grid + 1;
+    let nl = l_out + 1;
+    let mut panels = Vec::with_capacity(nl);
+    for s in 0..=l_out {
+        let mut t = vec![C64::default(); nl * nu];
+        for l in s..=l_out {
+            let tp = theta_projection(l, s, n_grid);
+            t[l * nu..(l + 1) * nu].copy_from_slice(&tp);
+        }
+        panels.push(t);
+    }
+    F2shPanels { l_out, n_grid, panels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::so3::quadrature::gauss_legendre;
+
+    #[test]
+    fn theta_fourier_reconstructs() {
+        for (l, m) in [(0usize, 0usize), (2, 0), (3, 1), (4, 3), (5, 5)] {
+            let c = theta_fourier(l, m);
+            for k in 0..17 {
+                let theta = 0.05 + (std::f64::consts::PI - 0.1) * k as f64 / 16.0;
+                let mut rec = C64::default();
+                for u in -(l as i64)..=(l as i64) {
+                    rec += c[(l as i64 + u) as usize] * C64::cis(u as f64 * theta);
+                }
+                let want = assoc_legendre(l, m, theta.cos()) * sh_norm(l, m as i64);
+                assert!((rec.re - want).abs() < 1e-11, "l={l} m={m}");
+                assert!(rec.im.abs() < 1e-11);
+            }
+        }
+    }
+
+    #[test]
+    fn theta_fourier_parity() {
+        // even m: real, even in u; odd m: imaginary, odd in u
+        let c = theta_fourier(4, 2);
+        for (k, v) in c.iter().enumerate() {
+            assert!(v.im.abs() < 1e-12);
+            assert!((v.re - c[c.len() - 1 - k].re).abs() < 1e-12);
+        }
+        let c = theta_fourier(5, 3);
+        for (k, v) in c.iter().enumerate() {
+            assert!(v.re.abs() < 1e-12);
+            assert!((v.im + c[c.len() - 1 - k].im).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn theta_projection_vs_quadrature() {
+        let (xs, ws) = gauss_legendre(64);
+        for (l, m) in [(0usize, 0usize), (2, 1), (3, 3), (5, 2)] {
+            let n_grid = l + 2;
+            let t = theta_projection(l, m, n_grid);
+            for u in -(n_grid as i64)..=(n_grid as i64) {
+                // quadrature over [0, pi]
+                let mut acc = C64::default();
+                for (x, w) in xs.iter().zip(&ws) {
+                    let th = (x + 1.0) * std::f64::consts::FRAC_PI_2;
+                    let f = assoc_legendre(l, m, th.cos())
+                        * sh_norm(l, m as i64)
+                        * th.sin();
+                    acc += C64::cis(u as f64 * th)
+                        .scale(f * w * std::f64::consts::FRAC_PI_2);
+                }
+                let got = t[(n_grid as i64 + u) as usize];
+                assert!((got - acc).abs() < 1e-9, "l={l} m={m} u={u}");
+            }
+        }
+    }
+
+    #[test]
+    fn panels_zero_below_s() {
+        let p = sh2f_panels(3);
+        let nl = 4;
+        for s in 0..4usize {
+            for l in 0..s {
+                for u in 0..7 {
+                    assert_eq!(p.panels[s][u * nl + l], C64::default());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! # gaunt-tp
+//!
+//! Production-oriented reproduction of *"Enabling Efficient Equivariant
+//! Operations in the Fourier Basis via Gaunt Tensor Products"* (ICLR 2024).
+//!
+//! Three layers (see DESIGN.md):
+//!
+//! * **Layer 1/2** (build-time Python): Pallas kernels + JAX models, AOT
+//!   lowered to HLO text in `artifacts/` by `python/compile/aot.py`.
+//! * **Layer 3** (this crate): the runtime — a PJRT engine that loads the
+//!   artifacts ([`runtime`]), a serving coordinator with dynamic batching
+//!   ([`coordinator`]), and a complete *native* implementation of the
+//!   paper's math ([`so3`], [`fourier`], [`tp`]) used as an independent
+//!   correctness oracle and as the benchmark substrate for every figure
+//!   and table in the paper.
+//!
+//! Simulation substrates the evaluation needs ([`md`], [`nbody`]) are
+//! implemented from scratch, as are the infrastructure pieces the offline
+//! environment lacks ([`util`]: PRNG, JSON, property testing, benching).
+
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod fourier;
+pub mod md;
+pub mod nbody;
+pub mod runtime;
+pub mod so3;
+pub mod tp;
+pub mod util;
+
+/// Flat irrep index of (l, m) in the `(L+1)^2` layout (m = -l..l).
+#[inline]
+pub fn lm_index(l: usize, m: i64) -> usize {
+    debug_assert!(m.unsigned_abs() as usize <= l);
+    l * l + (l as i64 + m) as usize
+}
+
+/// Dimension of a feature holding irreps of degree 0..=L.
+#[inline]
+pub fn num_coeffs(l_max: usize) -> usize {
+    (l_max + 1) * (l_max + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lm_index_layout() {
+        assert_eq!(lm_index(0, 0), 0);
+        assert_eq!(lm_index(1, -1), 1);
+        assert_eq!(lm_index(1, 0), 2);
+        assert_eq!(lm_index(1, 1), 3);
+        assert_eq!(lm_index(2, -2), 4);
+        assert_eq!(lm_index(2, 2), 8);
+    }
+
+    #[test]
+    fn num_coeffs_matches_sum() {
+        for l in 0..8usize {
+            let total: usize = (0..=l).map(|k| 2 * k + 1).sum();
+            assert_eq!(num_coeffs(l), total);
+        }
+    }
+}

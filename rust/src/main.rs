@@ -1,0 +1,90 @@
+//! gaunt-tp CLI — leader entrypoint.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!   info                      list artifacts + platform
+//!   check                     load & smoke-run every artifact
+//!   serve [--requests N]      run the batched force-field service demo
+//!   train --variant {gaunt|cg} [--steps N]   train GauntNet on the
+//!                             synthetic adsorbate dataset
+//!   experiment <fig1d|table1|table2>   regenerate a paper artifact
+//!   md-demo                   short MD run of the 3BPA-lite molecule
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use gaunt_tp::experiments;
+use gaunt_tp::runtime::Engine;
+
+fn arg_value(args: &[String], key: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn artifacts_dir(args: &[String]) -> String {
+    arg_value(args, "--artifacts").unwrap_or_else(|| "artifacts".to_string())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => {
+            let engine = Engine::new(artifacts_dir(&args))?;
+            println!("platform: {}", engine.platform());
+            let mut names = engine.artifact_names();
+            names.sort();
+            println!("artifacts ({}):", names.len());
+            for n in names {
+                println!("  {n}");
+            }
+            Ok(())
+        }
+        "check" => {
+            let engine = Arc::new(Engine::new(artifacts_dir(&args))?);
+            experiments::check_artifacts(&engine)
+        }
+        "serve" => {
+            let n: usize = arg_value(&args, "--requests")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(64);
+            let engine = Arc::new(Engine::new(artifacts_dir(&args))?);
+            experiments::serve_demo(engine, n)
+        }
+        "train" => {
+            let variant = arg_value(&args, "--variant")
+                .unwrap_or_else(|| "gaunt".to_string());
+            let steps: usize = arg_value(&args, "--steps")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(200);
+            let engine = Arc::new(Engine::new(artifacts_dir(&args))?);
+            experiments::train_forcefield(&engine, &variant, steps, true)
+                .map(|_| ())
+        }
+        "experiment" => {
+            let which = args
+                .get(1)
+                .ok_or_else(|| anyhow!("experiment needs a name"))?;
+            let engine = Arc::new(Engine::new(artifacts_dir(&args))?);
+            match which.as_str() {
+                "fig1d" => experiments::fig1d_sanity_check(&engine),
+                "table1" => experiments::table1_oc_analog(&engine),
+                "table2" => experiments::table2_bpa_analog(&engine),
+                other => Err(anyhow!("unknown experiment '{other}'")),
+            }
+        }
+        "md-demo" => experiments::md_demo(),
+        _ => {
+            println!(
+                "gaunt-tp — Gaunt Tensor Products (ICLR 2024) reproduction\n\
+                 usage: gaunt-tp <info|check|serve|train|experiment|md-demo> \
+                 [--artifacts DIR]\n\
+                 \x20 serve --requests N\n\
+                 \x20 train --variant gaunt|cg --steps N\n\
+                 \x20 experiment fig1d|table1|table2"
+            );
+            Ok(())
+        }
+    }
+}

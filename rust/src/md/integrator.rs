@@ -1,0 +1,230 @@
+//! Time integration: velocity Verlet (NVE) and Langevin (BAOAB, NVT).
+
+use super::potential::Potential;
+use crate::util::rng::Rng;
+
+/// Thermostat selection.
+#[derive(Clone, Copy, Debug)]
+pub enum Thermostat {
+    /// Microcanonical (energy conserving).
+    None,
+    /// Langevin BAOAB with friction gamma and temperature T (k_B = 1).
+    Langevin { gamma: f64, temperature: f64 },
+}
+
+/// MD state + integrator.
+pub struct Integrator {
+    pub pos: Vec<[f64; 3]>,
+    pub vel: Vec<[f64; 3]>,
+    pub species: Vec<usize>,
+    pub mass: f64,
+    pub dt: f64,
+    pub thermostat: Thermostat,
+    forces: Vec<[f64; 3]>,
+    pub potential_energy: f64,
+}
+
+impl Integrator {
+    pub fn new(
+        pos: Vec<[f64; 3]>,
+        species: Vec<usize>,
+        pot: &Potential,
+        dt: f64,
+        thermostat: Thermostat,
+    ) -> Self {
+        let n = pos.len();
+        let (e, f) = pot.energy_forces(&pos, &species);
+        Integrator {
+            pos,
+            vel: vec![[0.0; 3]; n],
+            species,
+            mass: 1.0,
+            dt,
+            thermostat,
+            forces: f,
+            potential_energy: e,
+        }
+    }
+
+    /// Draw Maxwell-Boltzmann velocities at temperature T.
+    pub fn thermalize(&mut self, temperature: f64, rng: &mut Rng) {
+        let s = (temperature / self.mass).sqrt();
+        for v in self.vel.iter_mut() {
+            for k in 0..3 {
+                v[k] = s * rng.normal();
+            }
+        }
+        self.remove_com_velocity();
+    }
+
+    fn remove_com_velocity(&mut self) {
+        let n = self.vel.len() as f64;
+        let mut com = [0.0f64; 3];
+        for v in &self.vel {
+            for k in 0..3 {
+                com[k] += v[k] / n;
+            }
+        }
+        for v in self.vel.iter_mut() {
+            for k in 0..3 {
+                v[k] -= com[k];
+            }
+        }
+    }
+
+    /// One integration step.
+    pub fn step(&mut self, pot: &Potential, rng: &mut Rng) {
+        let dt = self.dt;
+        let m = self.mass;
+        // B: half kick
+        for (v, f) in self.vel.iter_mut().zip(&self.forces) {
+            for k in 0..3 {
+                v[k] += 0.5 * dt * f[k] / m;
+            }
+        }
+        // A: half drift
+        for (p, v) in self.pos.iter_mut().zip(&self.vel) {
+            for k in 0..3 {
+                p[k] += 0.5 * dt * v[k];
+            }
+        }
+        // O: thermostat
+        if let Thermostat::Langevin { gamma, temperature } = self.thermostat {
+            let c1 = (-gamma * dt).exp();
+            let c2 = ((1.0 - c1 * c1) * temperature / m).sqrt();
+            for v in self.vel.iter_mut() {
+                for vk in v.iter_mut() {
+                    *vk = c1 * *vk + c2 * rng.normal();
+                }
+            }
+        }
+        // A: half drift
+        for (p, v) in self.pos.iter_mut().zip(&self.vel) {
+            for k in 0..3 {
+                p[k] += 0.5 * dt * v[k];
+            }
+        }
+        // force refresh + B: half kick
+        let (e, f) = pot.energy_forces(&self.pos, &self.species);
+        self.potential_energy = e;
+        self.forces = f;
+        for (v, f) in self.vel.iter_mut().zip(&self.forces) {
+            for k in 0..3 {
+                v[k] += 0.5 * dt * f[k] / m;
+            }
+        }
+    }
+
+    pub fn kinetic_energy(&self) -> f64 {
+        0.5 * self.mass
+            * self
+                .vel
+                .iter()
+                .map(|v| v[0] * v[0] + v[1] * v[1] + v[2] * v[2])
+                .sum::<f64>()
+    }
+
+    /// Instantaneous temperature (k_B = 1): 2 KE / (3 N).
+    pub fn temperature(&self) -> f64 {
+        2.0 * self.kinetic_energy() / (3.0 * self.pos.len() as f64)
+    }
+
+    pub fn total_energy(&self) -> f64 {
+        self.kinetic_energy() + self.potential_energy
+    }
+
+    pub fn forces(&self) -> &[[f64; 3]] {
+        &self.forces
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::potential::Potential;
+
+    fn lj_cluster(n_side: usize, spacing: f64) -> Vec<[f64; 3]> {
+        let mut pos = Vec::new();
+        for i in 0..n_side {
+            for j in 0..n_side {
+                for k in 0..n_side {
+                    pos.push([i as f64 * spacing, j as f64 * spacing,
+                              k as f64 * spacing]);
+                }
+            }
+        }
+        pos
+    }
+
+    #[test]
+    fn nve_conserves_energy() {
+        let pot = Potential::lj(1.0, 1.0, 3.0);
+        let pos = lj_cluster(2, 1.12);
+        let species = vec![0; pos.len()];
+        let mut rng = Rng::new(0);
+        let mut md = Integrator::new(pos, species, &pot, 0.002, Thermostat::None);
+        md.thermalize(0.1, &mut rng);
+        let e0 = md.total_energy();
+        for _ in 0..2000 {
+            md.step(&pot, &mut rng);
+        }
+        let e1 = md.total_energy();
+        let drift = (e1 - e0).abs() / e0.abs().max(1.0);
+        assert!(drift < 1e-3, "NVE drift {drift}");
+    }
+
+    #[test]
+    fn langevin_reaches_target_temperature() {
+        let pot = Potential::lj(1.0, 1.0, 3.0);
+        let pos = lj_cluster(2, 1.2);
+        let species = vec![0; pos.len()];
+        let mut rng = Rng::new(1);
+        let target = 0.35;
+        let mut md = Integrator::new(
+            pos, species, &pot, 0.004,
+            Thermostat::Langevin { gamma: 2.0, temperature: target },
+        );
+        md.thermalize(target, &mut rng);
+        // equilibrate then average
+        for _ in 0..2000 {
+            md.step(&pot, &mut rng);
+        }
+        let mut t_acc = 0.0;
+        let samples = 4000;
+        for _ in 0..samples {
+            md.step(&pot, &mut rng);
+            t_acc += md.temperature();
+        }
+        let t_avg = t_acc / samples as f64;
+        assert!(
+            (t_avg - target).abs() < 0.12 * target + 0.05,
+            "T_avg {t_avg} vs target {target}"
+        );
+    }
+
+    #[test]
+    fn thermalize_removes_com_motion() {
+        let pot = Potential::lj(1.0, 1.0, 3.0);
+        let pos = lj_cluster(2, 1.2);
+        let mut rng = Rng::new(2);
+        let mut md = Integrator::new(pos, vec![0; 8], &pot, 0.002,
+                                     Thermostat::None);
+        md.thermalize(1.0, &mut rng);
+        for k in 0..3 {
+            let s: f64 = md.vel.iter().map(|v| v[k]).sum();
+            assert!(s.abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn kinetic_energy_matches_temperature() {
+        let pot = Potential::lj(1.0, 1.0, 3.0);
+        let pos = lj_cluster(2, 1.2);
+        let mut rng = Rng::new(3);
+        let mut md = Integrator::new(pos, vec![0; 8], &pot, 0.002,
+                                     Thermostat::None);
+        md.thermalize(0.5, &mut rng);
+        let t = md.temperature();
+        assert!((t - 2.0 * md.kinetic_energy() / (3.0 * 8.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,19 @@
+//! Molecular-dynamics substrate, from scratch.
+//!
+//! The paper's evaluations need datasets we cannot download offline (OC20
+//! DFT relaxations, 3BPA MD test sets at 300/600/1200 K).  This module is
+//! the substitute data engine (DESIGN.md §3): classical potentials with
+//! exact forces, a velocity-Verlet / Langevin integrator, neighbor search,
+//! and a flexible-molecule builder, used to sample configuration datasets
+//! with in- and out-of-distribution temperature splits exactly like the
+//! 3BPA protocol.
+
+pub mod integrator;
+pub mod molecule;
+pub mod neighbor;
+pub mod potential;
+pub mod relax;
+
+pub use integrator::{Integrator, Thermostat};
+pub use molecule::Molecule;
+pub use potential::{Potential, PotentialKind};

@@ -1,0 +1,262 @@
+//! Flexible-molecule builder — the "3BPA-lite" workload.
+//!
+//! 3BPA (3-(benzyloxy)pyridin-2-amine) is a flexible drug-like molecule
+//! whose MD at rising temperatures explores increasingly strained
+//! conformations.  We build a synthetic analog with the same *mechanical*
+//! character: two rigid rings connected by a rotatable linker chain, with
+//! harmonic bonds, a Morse backbone, and LJ nonbonded interactions —
+//! enough structure that (a) low-T sampling stays near the basin and
+//! (b) high-T sampling is genuinely out-of-distribution, reproducing the
+//! 3BPA evaluation protocol (DESIGN.md §3).
+
+use super::potential::{Potential, PotentialKind};
+
+/// A molecule: initial geometry + species + its potential.
+#[derive(Clone, Debug)]
+pub struct Molecule {
+    pub pos: Vec<[f64; 3]>,
+    pub species: Vec<usize>,
+    pub potential: Potential,
+}
+
+impl Molecule {
+    /// The synthetic flexible molecule ("3BPA-lite"): ring A (6 atoms,
+    /// species 0) — linker chain (3 atoms, species 1) — ring B (5 atoms,
+    /// species 2), 14 atoms total.
+    pub fn bpa_lite() -> Molecule {
+        let mut pos: Vec<[f64; 3]> = Vec::new();
+        let mut species: Vec<usize> = Vec::new();
+        let mut bonds: Vec<(usize, usize, PotentialKind)> = Vec::new();
+        let ring_bond = |k: f64, r0: f64| PotentialKind::Harmonic { k, r0 };
+        let backbone = PotentialKind::Morse { d: 3.0, a: 1.8, r0: 1.5 };
+
+        // ring A: hexagon radius 1.4 in the xy-plane
+        let ra = 1.4;
+        for i in 0..6 {
+            let ang = std::f64::consts::PI / 3.0 * i as f64;
+            pos.push([ra * ang.cos(), ra * ang.sin(), 0.0]);
+            species.push(0);
+        }
+        for i in 0..6 {
+            bonds.push((i, (i + 1) % 6, ring_bond(60.0, 1.4)));
+            // cross-brace to keep the ring rigid-ish
+            bonds.push((i, (i + 2) % 6, ring_bond(15.0, 2.42)));
+        }
+        // linker chain: 3 atoms extending along +x
+        let chain_start = pos.len();
+        for i in 0..3 {
+            pos.push([ra + 1.5 * (i + 1) as f64, 0.0, 0.2 * i as f64]);
+            species.push(1);
+        }
+        bonds.push((0, chain_start, backbone));
+        bonds.push((chain_start, chain_start + 1, backbone));
+        bonds.push((chain_start + 1, chain_start + 2, backbone));
+        // ring B: pentagon attached to the chain end, offset in z
+        let rb = 1.2;
+        let cx = ra + 4.5 + rb;
+        let ring_b_start = pos.len();
+        for i in 0..5 {
+            let ang = 2.0 * std::f64::consts::PI / 5.0 * i as f64;
+            pos.push([cx + rb * ang.cos(), rb * ang.sin(), 1.0]);
+            species.push(2);
+        }
+        for i in 0..5 {
+            bonds.push((
+                ring_b_start + i,
+                ring_b_start + (i + 1) % 5,
+                ring_bond(60.0, 1.41),
+            ));
+            bonds.push((
+                ring_b_start + i,
+                ring_b_start + (i + 2) % 5,
+                ring_bond(15.0, 2.28),
+            ));
+        }
+        bonds.push((chain_start + 2, ring_b_start, backbone));
+
+        // nonbonded: species-pair LJ table (3 species)
+        let mut nonbonded = Vec::new();
+        for s1 in 0..3usize {
+            for s2 in 0..3usize {
+                let sigma = 1.0 + 0.1 * (s1 + s2) as f64;
+                let eps = 0.05 + 0.02 * ((s1 * s2) as f64);
+                nonbonded.push(PotentialKind::LennardJones {
+                    eps,
+                    sigma,
+                    r_cut: 4.0,
+                });
+            }
+        }
+        Molecule {
+            pos,
+            species,
+            potential: Potential {
+                n_species: 3,
+                nonbonded,
+                bonds,
+                exclude_bonded_nonbonded: true,
+            },
+        }
+    }
+
+    /// Adsorbate-on-slab workload (the OC20-analog of Table 1): a small
+    /// LJ molecule above a 2-layer crystalline slab, mixed species.
+    pub fn adsorbate_slab(nx: usize, ny: usize, seed_offset: f64) -> Molecule {
+        let mut pos = Vec::new();
+        let mut species = Vec::new();
+        let a = 1.3; // lattice constant
+        for layer in 0..2usize {
+            for i in 0..nx {
+                for j in 0..ny {
+                    let off = if layer == 1 { 0.5 * a } else { 0.0 };
+                    pos.push([
+                        i as f64 * a + off,
+                        j as f64 * a + off,
+                        -(layer as f64) * a,
+                    ]);
+                    species.push(layer); // species 0 = surface, 1 = subsurface
+                }
+            }
+        }
+        // adsorbate: 3-atom bent molecule above the center
+        let cx = (nx - 1) as f64 * a / 2.0 + seed_offset;
+        let cy = (ny - 1) as f64 * a / 2.0;
+        let ads = [
+            [cx, cy, 1.6],
+            [cx + 1.1, cy, 2.1],
+            [cx - 0.6, cy + 0.9, 2.2],
+        ];
+        let base = pos.len();
+        for p in ads {
+            pos.push(p);
+            species.push(2);
+        }
+        let mut bonds = vec![
+            (base, base + 1, PotentialKind::Morse { d: 4.0, a: 2.0, r0: 1.2 }),
+            (base, base + 2, PotentialKind::Morse { d: 4.0, a: 2.0, r0: 1.2 }),
+        ];
+        // pin the slab lightly to its lattice sites via bonds to neighbors
+        for i in 0..(2 * nx * ny) {
+            if i + 1 < 2 * nx * ny {
+                bonds.push((i, i + 1, PotentialKind::Harmonic { k: 8.0, r0: a }));
+            }
+        }
+        let mut nonbonded = Vec::new();
+        for s1 in 0..4usize {
+            for s2 in 0..4usize {
+                nonbonded.push(PotentialKind::LennardJones {
+                    eps: 0.08 + 0.05 * ((s1 + s2) % 3) as f64,
+                    sigma: 1.1 + 0.05 * ((s1 * s2) % 2) as f64,
+                    r_cut: 3.5,
+                });
+            }
+        }
+        Molecule {
+            pos,
+            species,
+            potential: Potential {
+                n_species: 4,
+                nonbonded,
+                bonds,
+                exclude_bonded_nonbonded: true,
+            },
+        }
+    }
+
+    pub fn n_atoms(&self) -> usize {
+        self.pos.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::integrator::{Integrator, Thermostat};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bpa_lite_geometry() {
+        let m = Molecule::bpa_lite();
+        assert_eq!(m.n_atoms(), 14);
+        assert_eq!(m.species.len(), 14);
+        assert!(m.potential.bonds.len() > 20);
+        // three species present
+        for s in 0..3 {
+            assert!(m.species.contains(&s));
+        }
+    }
+
+    #[test]
+    fn bpa_lite_is_stable_at_low_t() {
+        // the molecule should not fly apart in a short low-T run
+        let m = Molecule::bpa_lite();
+        let mut rng = Rng::new(0);
+        let mut md = Integrator::new(
+            m.pos.clone(), m.species.clone(), &m.potential, 0.002,
+            Thermostat::Langevin { gamma: 1.0, temperature: 0.05 },
+        );
+        md.thermalize(0.05, &mut rng);
+        for _ in 0..2000 {
+            md.step(&m.potential, &mut rng);
+        }
+        // max pair distance stays bounded (molecule intact)
+        let mut max_d = 0.0f64;
+        for i in 0..md.pos.len() {
+            for j in 0..md.pos.len() {
+                let d = [
+                    md.pos[i][0] - md.pos[j][0],
+                    md.pos[i][1] - md.pos[j][1],
+                    md.pos[i][2] - md.pos[j][2],
+                ];
+                max_d = max_d.max(
+                    (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt(),
+                );
+            }
+        }
+        assert!(max_d < 20.0, "molecule exploded: span {max_d}");
+    }
+
+    #[test]
+    fn higher_temperature_explores_more() {
+        // variance of positions at high T > low T (the OOD premise)
+        let m = Molecule::bpa_lite();
+        let spread = |temp: f64| -> f64 {
+            let mut rng = Rng::new(7);
+            let mut md = Integrator::new(
+                m.pos.clone(), m.species.clone(), &m.potential, 0.002,
+                Thermostat::Langevin { gamma: 1.0, temperature: temp },
+            );
+            md.thermalize(temp, &mut rng);
+            let mut acc = 0.0;
+            let mut count = 0;
+            for step in 0..3000 {
+                md.step(&m.potential, &mut rng);
+                if step > 500 && step % 50 == 0 {
+                    // RMS displacement from the initial geometry
+                    let mut d2 = 0.0;
+                    for (p, q) in md.pos.iter().zip(&m.pos) {
+                        for k in 0..3 {
+                            d2 += (p[k] - q[k]) * (p[k] - q[k]);
+                        }
+                    }
+                    acc += (d2 / md.pos.len() as f64).sqrt();
+                    count += 1;
+                }
+            }
+            acc / count as f64
+        };
+        let lo = spread(0.02);
+        let hi = spread(0.3);
+        assert!(hi > lo, "high-T spread {hi} <= low-T {lo}");
+    }
+
+    #[test]
+    fn adsorbate_slab_shapes() {
+        let m = Molecule::adsorbate_slab(3, 3, 0.0);
+        assert_eq!(m.n_atoms(), 2 * 9 + 3);
+        assert_eq!(*m.species.iter().max().unwrap(), 2);
+        let (e, f) = m.potential.energy_forces(&m.pos, &m.species);
+        assert!(e.is_finite());
+        assert!(f.iter().all(|v| v.iter().all(|x| x.is_finite())));
+    }
+}

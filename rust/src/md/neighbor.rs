@@ -1,0 +1,131 @@
+//! Neighbor search: brute force and cell lists.  The coordinator uses
+//! this to build the (padded) edge lists the compiled model consumes.
+
+/// All directed pairs (i, j), i != j, with |r_i - r_j| < r_cut.
+pub fn neighbors_brute(pos: &[[f64; 3]], r_cut: f64) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let rc2 = r_cut * r_cut;
+    for i in 0..pos.len() {
+        for j in 0..pos.len() {
+            if i == j {
+                continue;
+            }
+            let d2 = dist2(pos[i], pos[j]);
+            if d2 < rc2 {
+                out.push((i, j));
+            }
+        }
+    }
+    out
+}
+
+/// Cell-list neighbor search — O(N) for homogeneous densities.
+pub fn neighbors_cell(pos: &[[f64; 3]], r_cut: f64) -> Vec<(usize, usize)> {
+    if pos.is_empty() {
+        return Vec::new();
+    }
+    let mut lo = [f64::INFINITY; 3];
+    let mut hi = [f64::NEG_INFINITY; 3];
+    for p in pos {
+        for k in 0..3 {
+            lo[k] = lo[k].min(p[k]);
+            hi[k] = hi[k].max(p[k]);
+        }
+    }
+    let cell = r_cut.max(1e-9);
+    let dims: [usize; 3] = std::array::from_fn(|k| {
+        (((hi[k] - lo[k]) / cell).floor() as usize + 1).max(1)
+    });
+    let cell_of = |p: &[f64; 3]| -> [usize; 3] {
+        std::array::from_fn(|k| {
+            (((p[k] - lo[k]) / cell).floor() as usize).min(dims[k] - 1)
+        })
+    };
+    let idx = |c: [usize; 3]| (c[0] * dims[1] + c[1]) * dims[2] + c[2];
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); dims[0] * dims[1] * dims[2]];
+    for (i, p) in pos.iter().enumerate() {
+        buckets[idx(cell_of(p))].push(i);
+    }
+    let rc2 = r_cut * r_cut;
+    let mut out = Vec::new();
+    for (i, p) in pos.iter().enumerate() {
+        let c = cell_of(p);
+        for dx in -1i64..=1 {
+            for dy in -1i64..=1 {
+                for dz in -1i64..=1 {
+                    let nc = [
+                        c[0] as i64 + dx,
+                        c[1] as i64 + dy,
+                        c[2] as i64 + dz,
+                    ];
+                    if nc.iter().zip(&dims).any(|(v, d)| *v < 0 || *v >= *d as i64)
+                    {
+                        continue;
+                    }
+                    let b = idx([nc[0] as usize, nc[1] as usize, nc[2] as usize]);
+                    for &j in &buckets[b] {
+                        if j != i && dist2(*p, pos[j]) < rc2 {
+                            out.push((i, j));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[inline]
+fn dist2(a: [f64; 3], b: [f64; 3]) -> f64 {
+    let d = [a[0] - b[0], a[1] - b[1], a[2] - b[2]];
+    d[0] * d[0] + d[1] * d[1] + d[2] * d[2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, PropConfig};
+
+    #[test]
+    fn brute_simple() {
+        let pos = vec![[0.0, 0.0, 0.0], [1.0, 0.0, 0.0], [5.0, 0.0, 0.0]];
+        let n = neighbors_brute(&pos, 2.0);
+        assert_eq!(n, vec![(0, 1), (1, 0)]);
+    }
+
+    #[test]
+    fn cell_matches_brute_property() {
+        check("cell-list == brute-force", PropConfig { cases: 24, seed: 5 },
+              |rng, case| {
+            let n = 4 + case % 40;
+            let pos: Vec<[f64; 3]> = (0..n)
+                .map(|_| [rng.uniform(-3.0, 3.0), rng.uniform(-3.0, 3.0),
+                          rng.uniform(-3.0, 3.0)])
+                .collect();
+            let rc = rng.uniform(0.5, 2.5);
+            let mut a = neighbors_brute(&pos, rc);
+            let mut b = neighbors_cell(&pos, rc);
+            a.sort_unstable();
+            b.sort_unstable();
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("mismatch: brute {} vs cell {}", a.len(), b.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn directed_symmetry() {
+        let pos = vec![[0.0; 3], [0.5, 0.5, 0.5], [0.9, 0.0, 0.1]];
+        let n = neighbors_cell(&pos, 1.5);
+        for (i, j) in &n {
+            assert!(n.contains(&(*j, *i)));
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(neighbors_cell(&[], 1.0).is_empty());
+    }
+}

@@ -1,0 +1,212 @@
+//! Classical potentials with analytic forces: Lennard-Jones, Morse,
+//! harmonic bonds/angles.  These produce the ground-truth energies/forces
+//! for the synthetic OC20/3BPA-analog datasets.
+
+/// Pairwise potential kinds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PotentialKind {
+    /// 4 eps ((s/r)^12 - (s/r)^6), smoothly cut at r_cut.
+    LennardJones { eps: f64, sigma: f64, r_cut: f64 },
+    /// D (1 - e^{-a(r - r0)})^2 - D.
+    Morse { d: f64, a: f64, r0: f64 },
+    /// (k/2)(r - r0)^2 (used for bonded terms).
+    Harmonic { k: f64, r0: f64 },
+}
+
+impl PotentialKind {
+    /// (energy, dE/dr) at scalar distance r.
+    pub fn energy_deriv(&self, r: f64) -> (f64, f64) {
+        match *self {
+            PotentialKind::LennardJones { eps, sigma, r_cut } => {
+                if r >= r_cut {
+                    return (0.0, 0.0);
+                }
+                let sr6 = (sigma / r).powi(6);
+                let sr12 = sr6 * sr6;
+                // shift so e(r_cut) = 0 (keeps energies continuous)
+                let src6 = (sigma / r_cut).powi(6);
+                let shift = 4.0 * eps * (src6 * src6 - src6);
+                let e = 4.0 * eps * (sr12 - sr6) - shift;
+                let de = 4.0 * eps * (-12.0 * sr12 + 6.0 * sr6) / r;
+                (e, de)
+            }
+            PotentialKind::Morse { d, a, r0 } => {
+                let x = (-a * (r - r0)).exp();
+                let e = d * (1.0 - x) * (1.0 - x) - d;
+                let de = 2.0 * d * a * (1.0 - x) * x;
+                (e, de)
+            }
+            PotentialKind::Harmonic { k, r0 } => {
+                let e = 0.5 * k * (r - r0) * (r - r0);
+                let de = k * (r - r0);
+                (e, de)
+            }
+        }
+    }
+}
+
+/// A full system potential: per-species-pair nonbonded terms + explicit
+/// bonded terms.
+#[derive(Clone, Debug)]
+pub struct Potential {
+    pub n_species: usize,
+    /// nonbonded[s1 * n_species + s2]
+    pub nonbonded: Vec<PotentialKind>,
+    /// (i, j, kind) explicit bonds (applied in addition to nonbonded)
+    pub bonds: Vec<(usize, usize, PotentialKind)>,
+    /// bonded pairs excluded from nonbonded interactions
+    pub exclude_bonded_nonbonded: bool,
+}
+
+impl Potential {
+    /// Homogeneous LJ for quick tests.
+    pub fn lj(eps: f64, sigma: f64, r_cut: f64) -> Self {
+        Potential {
+            n_species: 1,
+            nonbonded: vec![PotentialKind::LennardJones { eps, sigma, r_cut }],
+            bonds: Vec::new(),
+            exclude_bonded_nonbonded: false,
+        }
+    }
+
+    fn is_bonded(&self, i: usize, j: usize) -> bool {
+        self.bonds
+            .iter()
+            .any(|(a, b, _)| (*a == i && *b == j) || (*a == j && *b == i))
+    }
+
+    /// Total energy + forces.  `species[i]` indexes the nonbonded table.
+    pub fn energy_forces(&self, pos: &[[f64; 3]], species: &[usize])
+        -> (f64, Vec<[f64; 3]>) {
+        let n = pos.len();
+        let mut e = 0.0;
+        let mut f = vec![[0.0f64; 3]; n];
+        let add_pair = |i: usize, j: usize, kind: &PotentialKind,
+                            e: &mut f64, f: &mut Vec<[f64; 3]>| {
+            let d = [
+                pos[i][0] - pos[j][0],
+                pos[i][1] - pos[j][1],
+                pos[i][2] - pos[j][2],
+            ];
+            let r = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt().max(1e-9);
+            let (pe, de) = kind.energy_deriv(r);
+            *e += pe;
+            // F_i = -dE/dr * d/r ; F_j = -F_i
+            let s = -de / r;
+            for k in 0..3 {
+                f[i][k] += s * d[k];
+                f[j][k] -= s * d[k];
+            }
+        };
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if self.exclude_bonded_nonbonded && self.is_bonded(i, j) {
+                    continue;
+                }
+                let kind = self.nonbonded
+                    [species[i] * self.n_species + species[j]];
+                add_pair(i, j, &kind, &mut e, &mut f);
+            }
+        }
+        for (i, j, kind) in &self.bonds {
+            add_pair(*i, *j, kind, &mut e, &mut f);
+        }
+        (e, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lj_minimum_at_r_min() {
+        let p = PotentialKind::LennardJones { eps: 1.0, sigma: 1.0, r_cut: 10.0 };
+        let r_min = 2f64.powf(1.0 / 6.0);
+        let (_, d) = p.energy_deriv(r_min);
+        assert!(d.abs() < 1e-10);
+        let (e, _) = p.energy_deriv(r_min);
+        assert!((e + 1.0).abs() < 1e-3); // ~ -eps (small cutoff shift)
+    }
+
+    #[test]
+    fn lj_cutoff_continuous() {
+        let p = PotentialKind::LennardJones { eps: 1.0, sigma: 1.0, r_cut: 2.5 };
+        let (e_in, _) = p.energy_deriv(2.4999);
+        let (e_out, _) = p.energy_deriv(2.5001);
+        assert!(e_in.abs() < 1e-2 && e_out == 0.0);
+    }
+
+    #[test]
+    fn morse_minimum_at_r0() {
+        let p = PotentialKind::Morse { d: 2.0, a: 1.5, r0: 1.2 };
+        let (e, de) = p.energy_deriv(1.2);
+        assert!((e + 2.0).abs() < 1e-12);
+        assert!(de.abs() < 1e-12);
+    }
+
+    #[test]
+    fn harmonic_quadratic() {
+        let p = PotentialKind::Harmonic { k: 3.0, r0: 1.0 };
+        let (e, de) = p.energy_deriv(1.5);
+        assert!((e - 0.375).abs() < 1e-12);
+        assert!((de - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forces_are_negative_gradient() {
+        // finite-difference check on a random cluster
+        let mut rng = Rng::new(0);
+        let pot = Potential::lj(1.0, 1.0, 5.0);
+        let n = 6;
+        let pos: Vec<[f64; 3]> = (0..n)
+            .map(|_| [rng.uniform(0.0, 3.0), rng.uniform(0.0, 3.0),
+                      rng.uniform(0.0, 3.0)])
+            .collect();
+        let species = vec![0usize; n];
+        let (_, f) = pot.energy_forces(&pos, &species);
+        let h = 1e-6;
+        for i in 0..n {
+            for k in 0..3 {
+                let mut pp = pos.clone();
+                pp[i][k] += h;
+                let (ep, _) = pot.energy_forces(&pp, &species);
+                pp[i][k] -= 2.0 * h;
+                let (em, _) = pot.energy_forces(&pp, &species);
+                let fd = -(ep - em) / (2.0 * h);
+                assert!(
+                    (f[i][k] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                    "atom {i} axis {k}: {} vs {}",
+                    f[i][k],
+                    fd
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forces_sum_to_zero() {
+        let mut rng = Rng::new(1);
+        let pot = Potential::lj(0.5, 1.1, 4.0);
+        let pos: Vec<[f64; 3]> = (0..8)
+            .map(|_| [rng.normal(), rng.normal(), rng.normal()])
+            .collect();
+        let (_, f) = pot.energy_forces(&pos, &vec![0; 8]);
+        for k in 0..3 {
+            let s: f64 = f.iter().map(|v| v[k]).sum();
+            assert!(s.abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn bonded_terms_apply() {
+        let mut pot = Potential::lj(1.0, 1.0, 5.0);
+        pot.bonds.push((0, 1, PotentialKind::Harmonic { k: 10.0, r0: 1.0 }));
+        pot.exclude_bonded_nonbonded = true;
+        let pos = vec![[0.0, 0.0, 0.0], [1.5, 0.0, 0.0]];
+        let (e, f) = pot.energy_forces(&pos, &[0, 0]);
+        assert!((e - 0.5 * 10.0 * 0.25).abs() < 1e-12);
+        assert!((f[0][0] - 5.0).abs() < 1e-12); // pulled toward the bond
+    }
+}

@@ -1,0 +1,246 @@
+//! Structure relaxation — the OC20 workload (find the minimum-energy
+//! geometry of an adsorbate-catalyst complex by following forces).
+//!
+//! FIRE (Fast Inertial Relaxation Engine, Bitzek et al. 2006): MD-like
+//! descent with adaptive time step and velocity mixing; the standard
+//! relaxer in atomistic pipelines (ASE's default alongside L-BFGS).
+//! Force providers are pluggable, so the same driver runs on the
+//! classical potential (ground truth) or the served GauntNet model.
+
+/// Force provider abstraction: positions -> (energy, forces).
+pub trait ForceProvider {
+    fn energy_forces(&mut self, pos: &[[f64; 3]]) -> (f64, Vec<[f64; 3]>);
+}
+
+impl<F> ForceProvider for F
+where
+    F: FnMut(&[[f64; 3]]) -> (f64, Vec<[f64; 3]>),
+{
+    fn energy_forces(&mut self, pos: &[[f64; 3]]) -> (f64, Vec<[f64; 3]>) {
+        self(pos)
+    }
+}
+
+/// FIRE hyperparameters (standard values from the paper).
+#[derive(Clone, Copy, Debug)]
+pub struct FireConfig {
+    pub dt_start: f64,
+    pub dt_max: f64,
+    pub n_min: usize,
+    pub f_inc: f64,
+    pub f_dec: f64,
+    pub alpha_start: f64,
+    pub f_alpha: f64,
+    /// stop when max |F_i| < fmax
+    pub fmax: f64,
+    pub max_steps: usize,
+}
+
+impl Default for FireConfig {
+    fn default() -> Self {
+        FireConfig {
+            dt_start: 0.02,
+            dt_max: 0.2,
+            n_min: 5,
+            f_inc: 1.1,
+            f_dec: 0.5,
+            alpha_start: 0.1,
+            f_alpha: 0.99,
+            fmax: 1e-3,
+            max_steps: 2000,
+        }
+    }
+}
+
+/// Relaxation outcome.
+#[derive(Clone, Debug)]
+pub struct RelaxResult {
+    pub pos: Vec<[f64; 3]>,
+    pub energy: f64,
+    pub max_force: f64,
+    pub steps: usize,
+    pub converged: bool,
+    /// energy at every step (monotone-ish descent diagnostic)
+    pub energy_trace: Vec<f64>,
+}
+
+fn max_force_norm(f: &[[f64; 3]]) -> f64 {
+    f.iter()
+        .map(|v| (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt())
+        .fold(0.0, f64::max)
+}
+
+/// Run FIRE relaxation from `pos0`.
+pub fn fire_relax<P: ForceProvider>(
+    provider: &mut P,
+    pos0: &[[f64; 3]],
+    cfg: FireConfig,
+) -> RelaxResult {
+    let n = pos0.len();
+    let mut pos = pos0.to_vec();
+    let mut vel = vec![[0.0f64; 3]; n];
+    let mut dt = cfg.dt_start;
+    let mut alpha = cfg.alpha_start;
+    let mut n_pos = 0usize;
+    let (mut energy, mut forces) = provider.energy_forces(&pos);
+    let mut trace = vec![energy];
+    let mut steps = 0usize;
+    while steps < cfg.max_steps {
+        let fmax = max_force_norm(&forces);
+        if fmax < cfg.fmax {
+            return RelaxResult {
+                pos,
+                energy,
+                max_force: fmax,
+                steps,
+                converged: true,
+                energy_trace: trace,
+            };
+        }
+        // P = F . v
+        let p: f64 = forces
+            .iter()
+            .zip(&vel)
+            .map(|(f, v)| f[0] * v[0] + f[1] * v[1] + f[2] * v[2])
+            .sum();
+        if p > 0.0 {
+            n_pos += 1;
+            // velocity mixing toward the force direction
+            let vnorm: f64 = vel
+                .iter()
+                .map(|v| v[0] * v[0] + v[1] * v[1] + v[2] * v[2])
+                .sum::<f64>()
+                .sqrt();
+            let fnorm: f64 = forces
+                .iter()
+                .map(|f| f[0] * f[0] + f[1] * f[1] + f[2] * f[2])
+                .sum::<f64>()
+                .sqrt()
+                .max(1e-30);
+            for (v, f) in vel.iter_mut().zip(&forces) {
+                for k in 0..3 {
+                    v[k] = (1.0 - alpha) * v[k] + alpha * vnorm * f[k] / fnorm;
+                }
+            }
+            if n_pos > cfg.n_min {
+                dt = (dt * cfg.f_inc).min(cfg.dt_max);
+                alpha *= cfg.f_alpha;
+            }
+        } else {
+            n_pos = 0;
+            dt *= cfg.f_dec;
+            alpha = cfg.alpha_start;
+            for v in vel.iter_mut() {
+                *v = [0.0; 3];
+            }
+        }
+        // MD (Euler semi-implicit) step
+        for i in 0..n {
+            for k in 0..3 {
+                vel[i][k] += dt * forces[i][k];
+                pos[i][k] += dt * vel[i][k];
+            }
+        }
+        let (e, f) = provider.energy_forces(&pos);
+        energy = e;
+        forces = f;
+        trace.push(e);
+        steps += 1;
+    }
+    let fmax = max_force_norm(&forces);
+    RelaxResult {
+        pos,
+        energy,
+        max_force: fmax,
+        steps,
+        converged: fmax < cfg.fmax,
+        energy_trace: trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::potential::{Potential, PotentialKind};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn relaxes_lj_dimer_to_minimum() {
+        let pot = Potential::lj(1.0, 1.0, 10.0);
+        let species = vec![0, 0];
+        let mut provider = |pos: &[[f64; 3]]| pot.energy_forces(pos, &species);
+        let pos0 = vec![[0.0, 0.0, 0.0], [1.6, 0.0, 0.0]];
+        let res = fire_relax(&mut provider, &pos0, FireConfig::default());
+        assert!(res.converged, "did not converge: fmax {}", res.max_force);
+        let d = {
+            let v = [
+                res.pos[1][0] - res.pos[0][0],
+                res.pos[1][1] - res.pos[0][1],
+                res.pos[1][2] - res.pos[0][2],
+            ];
+            (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt()
+        };
+        let r_min = 2f64.powf(1.0 / 6.0);
+        assert!((d - r_min).abs() < 1e-2, "dimer distance {d} vs {r_min}");
+    }
+
+    #[test]
+    fn energy_decreases_overall() {
+        let pot = Potential::lj(1.0, 1.0, 5.0);
+        let mut rng = Rng::new(0);
+        let pos0: Vec<[f64; 3]> = (0..6)
+            .map(|_| [rng.uniform(0.0, 2.5), rng.uniform(0.0, 2.5),
+                      rng.uniform(0.0, 2.5)])
+            .collect();
+        let species = vec![0; 6];
+        let mut provider = |pos: &[[f64; 3]]| pot.energy_forces(pos, &species);
+        let res = fire_relax(&mut provider, &pos0,
+                             FireConfig { max_steps: 3000, ..Default::default() });
+        assert!(res.energy < res.energy_trace[0],
+                "E {} -> {}", res.energy_trace[0], res.energy);
+    }
+
+    #[test]
+    fn harmonic_bond_relaxes_to_rest_length() {
+        let mut pot = Potential::lj(0.0, 1.0, 0.1); // effectively no LJ
+        pot.bonds.push((0, 1, PotentialKind::Harmonic { k: 5.0, r0: 1.3 }));
+        let species = vec![0, 0];
+        let mut provider = |pos: &[[f64; 3]]| pot.energy_forces(pos, &species);
+        let res = fire_relax(
+            &mut provider,
+            &[[0.0; 3], [2.0, 0.0, 0.0]],
+            FireConfig::default(),
+        );
+        assert!(res.converged);
+        assert!((res.pos[1][0] - res.pos[0][0] - 1.3).abs() < 1e-2);
+    }
+
+    #[test]
+    fn already_converged_returns_immediately() {
+        let pot = Potential::lj(1.0, 1.0, 10.0);
+        let species = vec![0, 0];
+        let r_min = 2f64.powf(1.0 / 6.0);
+        let mut provider = |pos: &[[f64; 3]]| pot.energy_forces(pos, &species);
+        let res = fire_relax(
+            &mut provider,
+            &[[0.0; 3], [r_min, 0.0, 0.0]],
+            FireConfig { fmax: 1e-2, ..Default::default() },
+        );
+        assert!(res.converged);
+        assert_eq!(res.steps, 0);
+    }
+
+    #[test]
+    fn respects_max_steps() {
+        let pot = Potential::lj(1.0, 1.0, 5.0);
+        let species = vec![0, 0];
+        let mut provider = |pos: &[[f64; 3]]| pot.energy_forces(pos, &species);
+        let res = fire_relax(
+            &mut provider,
+            &[[0.0; 3], [3.0, 0.0, 0.0]],
+            FireConfig { max_steps: 3, fmax: 1e-12, ..Default::default() },
+        );
+        assert_eq!(res.steps, 3);
+        assert!(!res.converged);
+    }
+}

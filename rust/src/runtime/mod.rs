@@ -1,0 +1,298 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py`, compiles them once on the CPU PJRT client,
+//! and executes them from the serving hot path.
+//!
+//! Python never runs here — HLO text is the interchange format (see
+//! DESIGN.md §2 for why text, not serialized protos).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Supported tensor dtypes (all the artifacts use f32/i32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn from_str(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// Shape + dtype + name of one executable input/output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let dtype = DType::from_str(
+            j.get("dtype").and_then(Json::as_str).unwrap_or("float32"),
+        )?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// Host tensor (row-major).
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(v) => xla::Literal::vec1(v),
+            Tensor::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+        Ok(match spec.dtype {
+            DType::F32 => Tensor::F32(lit.to_vec::<f32>()?),
+            DType::I32 => Tensor::I32(lit.to_vec::<i32>()?),
+        })
+    }
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the PJRT CPU client is internally synchronized; the handles are
+// reference-counted pointers into the runtime.  We only ever execute
+// through &self, and PJRT allows concurrent Execute calls.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Validate inputs against the manifest specs and execute.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.inputs) {
+            if t.len() != spec.numel() {
+                bail!(
+                    "{}: input '{}' expects {} elements (shape {:?}), got {}",
+                    self.name, spec.name, spec.numel(), spec.shape, t.len()
+                );
+            }
+            literals.push(t.to_literal(spec)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.outputs)
+            .map(|(l, s)| Tensor::from_literal(l, s))
+            .collect()
+    }
+}
+
+/// The engine: PJRT client + artifact registry + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+    manifest: Json,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+// SAFETY: see Executable.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("reading {manifest_path:?} (run `make artifacts`)")
+        })?;
+        let manifest = parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            artifacts_dir: dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of all artifacts in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Manifest metadata of one artifact.
+    pub fn artifact_meta(&self, name: &str) -> Option<&Json> {
+        self.manifest.get("artifacts")?.get(name)?.get("meta")
+    }
+
+    /// Load (compile-once, cached) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .get("artifacts")
+            .and_then(|a| a.get(name))
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let file = entry
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("artifact '{name}' missing file"))?;
+        let path = self.artifacts_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let inputs = entry
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = entry
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let meta = entry.get("meta").cloned().unwrap_or(Json::Null);
+        let arc = Arc::new(Executable {
+            name: name.to_string(),
+            inputs,
+            outputs,
+            meta,
+            exe,
+        });
+        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Load a state blob (e.g. `ff_state_init`): named tensors in manifest
+    /// order (these are the flattened params + optimizer state).
+    pub fn load_state_blob(&self, name: &str) -> Result<Vec<(String, Tensor)>> {
+        let entry = self
+            .manifest
+            .get("state_blobs")
+            .and_then(|a| a.get(name))
+            .ok_or_else(|| anyhow!("state blob '{name}' not in manifest"))?;
+        let file = entry
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("blob '{name}' missing file"))?;
+        let bytes = std::fs::read(self.artifacts_dir.join(file))?;
+        let mut out = Vec::new();
+        for t in entry.get("tensors").and_then(Json::as_arr).unwrap_or(&[]) {
+            let tname = t.get("name").and_then(Json::as_str).unwrap_or("");
+            let off = t.get("offset").and_then(Json::as_usize).unwrap_or(0);
+            let nbytes = t.get("nbytes").and_then(Json::as_usize).unwrap_or(0);
+            let dtype = t.get("dtype").and_then(Json::as_str).unwrap_or("float32");
+            let raw = bytes
+                .get(off..off + nbytes)
+                .ok_or_else(|| anyhow!("blob '{name}' truncated"))?;
+            let tensor = match DType::from_str(dtype)? {
+                DType::F32 => Tensor::F32(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+                DType::I32 => Tensor::I32(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+            };
+            out.push((tname.to_string(), tensor));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,369 @@
+//! Real Gaunt tensors and real CG coupling tensors.
+//!
+//! The real Gaunt tensor `G[k, i, j] = int Y^R_k Y^R_i Y^R_j dOmega` is the
+//! coupling of the paper's Gaunt Tensor Product; computed here by exact
+//! quadrature (Gauss-Legendre x trapezoid, exact for band-limited
+//! integrands).  The real CG tensor (the e3nn-style baseline coupling) is
+//! built from the complex Wigner 3j via the real<->complex SH unitary.
+
+use super::quadrature::sphere_quadrature;
+use super::sh::real_sh_all_angular;
+use super::wigner::wigner_3j;
+use crate::fourier::complex::C64;
+use crate::{lm_index, num_coeffs};
+
+/// Real Gaunt tensor, shape [(L3+1)^2, (L1+1)^2, (L2+1)^2] row-major
+/// (k fastest-varying last: index = (k*n1 + i)*n2 + j).
+pub fn gaunt_tensor_real(l1_max: usize, l2_max: usize, l3_max: usize) -> Vec<f64> {
+    let deg = l1_max + l2_max + l3_max;
+    let (nodes, dphi) = sphere_quadrature(deg);
+    let n1 = num_coeffs(l1_max);
+    let n2 = num_coeffs(l2_max);
+    let n3 = num_coeffs(l3_max);
+    let mut out = vec![0.0; n3 * n1 * n2];
+    for (theta, phi, w) in &nodes {
+        let y1 = real_sh_all_angular(l1_max, *theta, *phi);
+        let y2 = real_sh_all_angular(l2_max, *theta, *phi);
+        let y3 = real_sh_all_angular(l3_max, *theta, *phi);
+        let ww = w * dphi;
+        for (k, y3k) in y3.iter().enumerate() {
+            let wk = ww * y3k;
+            if wk.abs() < 1e-300 {
+                continue;
+            }
+            let block = &mut out[k * n1 * n2..(k + 1) * n1 * n2];
+            for (i, y1i) in y1.iter().enumerate() {
+                let wi = wk * y1i;
+                let row = &mut block[i * n2..(i + 1) * n2];
+                for (j, y2j) in y2.iter().enumerate() {
+                    row[j] += wi * y2j;
+                }
+            }
+        }
+    }
+    for v in out.iter_mut() {
+        if v.abs() < 1e-12 {
+            *v = 0.0;
+        }
+    }
+    out
+}
+
+/// Sparse entry list of a coupling tensor: (k, i, j, value).
+pub fn sparsify(t: &[f64], n3: usize, n1: usize, n2: usize)
+    -> Vec<(u32, u32, u32, f64)> {
+    let mut out = Vec::new();
+    for k in 0..n3 {
+        for i in 0..n1 {
+            for j in 0..n2 {
+                let v = t[(k * n1 + i) * n2 + j];
+                if v != 0.0 {
+                    out.push((k as u32, i as u32, j as u32, v));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// U with Y^R_m = sum_mu U[m, mu] Y^C_mu  (rows/cols -l..l), row-major.
+fn real_to_complex_u(l: usize) -> Vec<C64> {
+    let dim = 2 * l + 1;
+    let mut u = vec![C64::default(); dim * dim];
+    let c = l; // center
+    u[c * dim + c] = C64::real(1.0);
+    let s = 0.5f64.sqrt();
+    for m in 1..=l {
+        let sgn = if m % 2 == 0 { 1.0 } else { -1.0 };
+        u[(c + m) * dim + (c + m)] = C64::real(s * sgn);
+        u[(c + m) * dim + (c - m)] = C64::real(s);
+        u[(c - m) * dim + (c + m)] = C64::new(0.0, -s * sgn);
+        u[(c - m) * dim + (c - m)] = C64::new(0.0, s);
+    }
+    u
+}
+
+/// Real-basis Wigner 3j tensor for (l1, l2, l3): [2l1+1, 2l2+1, 2l3+1]
+/// row-major; normalized so the sum of squares is 1 inside the triangle.
+pub fn w3j_real(l1: usize, l2: usize, l3: usize) -> Vec<f64> {
+    let (d1, d2, d3) = (2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1);
+    let mut out = vec![0.0; d1 * d2 * d3];
+    if l3 < l1.abs_diff(l2) || l3 > l1 + l2 {
+        return out;
+    }
+    let u1 = real_to_complex_u(l1);
+    let u2 = real_to_complex_u(l2);
+    let u3 = real_to_complex_u(l3);
+    // complex 3j tensor t[mu1, mu2, mu3]
+    let mut t = vec![C64::default(); d1 * d2 * d3];
+    for m1 in -(l1 as i64)..=(l1 as i64) {
+        for m2 in -(l2 as i64)..=(l2 as i64) {
+            let m3 = -(m1 + m2);
+            if m3.abs() > l3 as i64 {
+                continue;
+            }
+            let v = wigner_3j(l1 as i64, l2 as i64, l3 as i64, m1, m2, m3);
+            let i1 = (l1 as i64 + m1) as usize;
+            let i2 = (l2 as i64 + m2) as usize;
+            let i3 = (l3 as i64 + m3) as usize;
+            t[(i1 * d2 + i2) * d3 + i3] = C64::real(v);
+        }
+    }
+    // out[a,b,c] = sum u1[a,x] u2[b,y] u3[c,z] t[x,y,z]
+    let even = (l1 + l2 + l3) % 2 == 0;
+    for a in 0..d1 {
+        for b in 0..d2 {
+            for c in 0..d3 {
+                let mut acc = C64::default();
+                for x in 0..d1 {
+                    let ua = u1[a * d1 + x];
+                    if ua.norm_sqr() == 0.0 {
+                        continue;
+                    }
+                    for y in 0..d2 {
+                        let ub = u2[b * d2 + y];
+                        if ub.norm_sqr() == 0.0 {
+                            continue;
+                        }
+                        let uab = ua * ub;
+                        for z in 0..d3 {
+                            let uc = u3[c * d3 + z];
+                            if uc.norm_sqr() == 0.0 {
+                                continue;
+                            }
+                            acc += uab * uc * t[(x * d2 + y) * d3 + z];
+                        }
+                    }
+                }
+                let v = if even { acc.re } else { acc.im };
+                out[(a * d2 + b) * d3 + c] = if v.abs() < 1e-12 { 0.0 } else { v };
+            }
+        }
+    }
+    out
+}
+
+/// Full real CG coupling tensor C[k, i, j] (the O(L^6) baseline's
+/// coefficients, paper Eqn. (1)) with sqrt(2l3+1) path normalization.
+pub fn cg_tensor_real(l1_max: usize, l2_max: usize, l3_max: usize) -> Vec<f64> {
+    let n1 = num_coeffs(l1_max);
+    let n2 = num_coeffs(l2_max);
+    let n3 = num_coeffs(l3_max);
+    let mut out = vec![0.0; n3 * n1 * n2];
+    for l1 in 0..=l1_max {
+        for l2 in 0..=l2_max {
+            let lo = l1.abs_diff(l2);
+            let hi = (l1 + l2).min(l3_max);
+            for l3 in lo..=hi {
+                let w = w3j_real(l1, l2, l3);
+                let (d1, d2, d3) = (2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1);
+                let norm = ((2 * l3 + 1) as f64).sqrt();
+                let b1 = lm_index(l1, -(l1 as i64));
+                let b2 = lm_index(l2, -(l2 as i64));
+                let b3 = lm_index(l3, -(l3 as i64));
+                for a in 0..d1 {
+                    for b in 0..d2 {
+                        for c in 0..d3 {
+                            out[((b3 + c) * n1 + (b1 + a)) * n2 + (b2 + b)] +=
+                                norm * w[(a * d2 + b) * d3 + c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::so3::rotation::{wigner_d_real, Rot3};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gaunt_l0_is_scaled_identity() {
+        let g = gaunt_tensor_real(0, 2, 2);
+        let c = 1.0 / (4.0 * std::f64::consts::PI).sqrt();
+        let n = num_coeffs(2);
+        for k in 0..n {
+            for j in 0..n {
+                let v = g[(k * 1) * n + j]; // n1 = 1
+                let want = if k == j { c } else { 0.0 };
+                assert!((v - want).abs() < 1e-11);
+            }
+        }
+    }
+
+    #[test]
+    fn gaunt_symmetric_in_inputs() {
+        let g = gaunt_tensor_real(2, 2, 2);
+        let n = num_coeffs(2);
+        for k in 0..n {
+            for i in 0..n {
+                for j in 0..n {
+                    let a = g[(k * n + i) * n + j];
+                    let b = g[(k * n + j) * n + i];
+                    assert!((a - b).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gaunt_fully_symmetric() {
+        // integral of three SH: symmetric under any permutation of (k,i,j)
+        let g = gaunt_tensor_real(2, 2, 2);
+        let n = num_coeffs(2);
+        for k in 0..n {
+            for i in 0..n {
+                for j in 0..n {
+                    let a = g[(k * n + i) * n + j];
+                    let b = g[(i * n + k) * n + j];
+                    assert!((a - b).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gaunt_odd_parity_vanishes() {
+        let g = gaunt_tensor_real(1, 1, 1);
+        let n = num_coeffs(1);
+        // pure l=1 x l=1 -> l=1 block must vanish
+        for k in 1..4 {
+            for i in 1..4 {
+                for j in 1..4 {
+                    assert_eq!(g[(k * n + i) * n + j], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn w3j_real_norm() {
+        for (l1, l2, l3) in [(1, 1, 2), (2, 2, 2), (1, 1, 1), (2, 1, 1)] {
+            let w = w3j_real(l1, l2, l3);
+            let s: f64 = w.iter().map(|x| x * x).sum();
+            assert!((s - 1.0).abs() < 1e-10, "{l1}{l2}{l3}: {s}");
+        }
+    }
+
+    #[test]
+    fn w3j_real_equivariant() {
+        let mut rng = Rng::new(17);
+        let rot = Rot3::random(&mut rng);
+        for (l1, l2, l3) in [(1, 1, 1), (1, 1, 2), (2, 1, 2), (2, 2, 2)] {
+            let w = w3j_real(l1, l2, l3);
+            let (d1m, d2m, d3m) = (2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1);
+            let d1 = wigner_d_real(l1, &rot);
+            let d2 = wigner_d_real(l2, &rot);
+            let d3 = wigner_d_real(l3, &rot);
+            // sum_{xy} D1[x,a] D2[y,b] w[x,y,c] == sum_d w[a,b,d] D3[c,d]
+            for a in 0..d1m {
+                for b in 0..d2m {
+                    for c in 0..d3m {
+                        let mut lhs = 0.0;
+                        for x in 0..d1m {
+                            for y in 0..d2m {
+                                lhs += d1[x * d1m + a] * d2[y * d2m + b]
+                                    * w[(x * d2m + y) * d3m + c];
+                            }
+                        }
+                        let mut rhs = 0.0;
+                        for d in 0..d3m {
+                            rhs += w[(a * d2m + b) * d3m + d] * d3[c * d3m + d];
+                        }
+                        assert!((lhs - rhs).abs() < 1e-8,
+                                "({l1},{l2},{l3}) [{a},{b},{c}]: {lhs} vs {rhs}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cg_111_is_cross_product() {
+        let c = cg_tensor_real(1, 1, 1);
+        let n = num_coeffs(1);
+        // contract two pure-l1 vectors; result l=1 part ∝ cross product
+        let mut rng = Rng::new(4);
+        let a3 = [rng.normal(), rng.normal(), rng.normal()];
+        let b3 = [rng.normal(), rng.normal(), rng.normal()];
+        // irrep order (m=-1,0,1) = (y,z,x)
+        let a = [0.0, a3[1], a3[2], a3[0]];
+        let b = [0.0, b3[1], b3[2], b3[0]];
+        let mut out = [0.0f64; 4];
+        for k in 0..4 {
+            for i in 0..4 {
+                for j in 0..4 {
+                    out[k] += c[(k * n + i) * n + j] * a[i] * b[j];
+                }
+            }
+        }
+        let cr = [
+            a3[1] * b3[2] - a3[2] * b3[1],
+            a3[2] * b3[0] - a3[0] * b3[2],
+            a3[0] * b3[1] - a3[1] * b3[0],
+        ];
+        let cr_irrep = [cr[1], cr[2], cr[0]];
+        // proportionality
+        let dot_oc: f64 = out[1..].iter().zip(&cr_irrep).map(|(x, y)| x * y).sum();
+        let dot_cc: f64 = cr_irrep.iter().map(|x| x * x).sum();
+        let k = dot_oc / dot_cc;
+        assert!(k.abs() > 1e-3);
+        for i in 0..3 {
+            assert!((out[1 + i] - k * cr_irrep[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gaunt_blocks_proportional_to_cg_blocks() {
+        // Wigner-Eckart in the real basis: even-parity blocks of the Gaunt
+        // tensor are scalar multiples of the real w3j blocks.
+        let g = gaunt_tensor_real(2, 2, 2);
+        let n = num_coeffs(2);
+        for (l1, l2, l3) in [(1usize, 1usize, 2usize), (2, 2, 2), (0, 2, 2)] {
+            let w = w3j_real(l1, l2, l3);
+            let (d1, d2, d3) = (2 * l1 + 1, 2 * l2 + 1, 2 * l3 + 1);
+            let b1 = lm_index(l1, -(l1 as i64));
+            let b2 = lm_index(l2, -(l2 as i64));
+            let b3 = lm_index(l3, -(l3 as i64));
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for a in 0..d1 {
+                for b in 0..d2 {
+                    for c in 0..d3 {
+                        let gv = g[((b3 + c) * n + (b1 + a)) * n + (b2 + b)];
+                        let wv = w[(a * d2 + b) * d3 + c];
+                        num += gv * wv;
+                        den += wv * wv;
+                    }
+                }
+            }
+            let k = num / den;
+            for a in 0..d1 {
+                for b in 0..d2 {
+                    for c in 0..d3 {
+                        let gv = g[((b3 + c) * n + (b1 + a)) * n + (b2 + b)];
+                        let wv = w[(a * d2 + b) * d3 + c];
+                        assert!((gv - k * wv).abs() < 1e-9);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparsify_round_trip() {
+        let g = gaunt_tensor_real(1, 1, 2);
+        let (n1, n2, n3) = (num_coeffs(1), num_coeffs(1), num_coeffs(2));
+        let sp = sparsify(&g, n3, n1, n2);
+        assert!(!sp.is_empty());
+        let mut dense = vec![0.0; n3 * n1 * n2];
+        for (k, i, j, v) in &sp {
+            dense[((*k as usize) * n1 + *i as usize) * n2 + *j as usize] = *v;
+        }
+        assert_eq!(dense, g);
+    }
+}

@@ -1,0 +1,175 @@
+//! Small dense linear algebra: row-major matrices, Gaussian elimination,
+//! least squares via normal equations.  Only used for modest sizes
+//! ((2l+1) <= ~17), where this is plenty accurate and fast.
+
+/// Solve A x = b in place (Gaussian elimination, partial pivoting).
+/// `a` is n x n row-major; `b` has n entries.  Returns x.
+pub fn solve(a: &mut [f64], b: &mut [f64], n: usize) -> Result<Vec<f64>, String> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        let mut best = a[col * n + col].abs();
+        for r in (col + 1)..n {
+            let v = a[r * n + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-300 {
+            return Err(format!("singular matrix at column {col}"));
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            b.swap(col, piv);
+        }
+        let d = a[col * n + col];
+        for r in (col + 1)..n {
+            let f = a[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r * n + c] -= f * a[col * n + c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut s = b[row];
+        for c in (row + 1)..n {
+            s -= a[row * n + c] * x[c];
+        }
+        x[row] = s / a[row * n + row];
+    }
+    Ok(x)
+}
+
+/// Least squares min ||A x - b||: A is m x n row-major (m >= n).
+pub fn lstsq(a: &[f64], b: &[f64], m: usize, n: usize) -> Result<Vec<f64>, String> {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), m);
+    // normal equations: (A^T A) x = A^T b
+    let mut ata = vec![0.0; n * n];
+    let mut atb = vec![0.0; n];
+    for r in 0..m {
+        for i in 0..n {
+            let ari = a[r * n + i];
+            atb[i] += ari * b[r];
+            for j in i..n {
+                ata[i * n + j] += ari * a[r * n + j];
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            ata[i * n + j] = ata[j * n + i];
+        }
+    }
+    solve(&mut ata, &mut atb, n)
+}
+
+/// C = A (m x k) * B (k x n), row-major.
+pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// y = A (m x n) * x.
+pub fn matvec(a: &[f64], x: &[f64], m: usize, n: usize) -> Vec<f64> {
+    let mut y = vec![0.0; m];
+    for i in 0..m {
+        let row = &a[i * n..(i + 1) * n];
+        y[i] = row.iter().zip(x).map(|(p, q)| p * q).sum();
+    }
+    y
+}
+
+/// Transpose of an m x n row-major matrix.
+pub fn transpose(a: &[f64], m: usize, n: usize) -> Vec<f64> {
+    let mut t = vec![0.0; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            t[j * m + i] = a[i * n + j];
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_identity() {
+        let mut a = vec![1.0, 0.0, 0.0, 1.0];
+        let mut b = vec![3.0, -4.0];
+        let x = solve(&mut a, &mut b, 2).unwrap();
+        assert_eq!(x, vec![3.0, -4.0]);
+    }
+
+    #[test]
+    fn solve_general() {
+        // [2 1; 1 3] x = [5; 10] -> x = [1, 3]
+        let mut a = vec![2.0, 1.0, 1.0, 3.0];
+        let mut b = vec![5.0, 10.0];
+        let x = solve(&mut a, &mut b, 2).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_singular_fails() {
+        let mut a = vec![1.0, 2.0, 2.0, 4.0];
+        let mut b = vec![1.0, 2.0];
+        assert!(solve(&mut a, &mut b, 2).is_err());
+    }
+
+    #[test]
+    fn lstsq_overdetermined() {
+        // fit y = 2x + 1 through noisy-free points
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for x in xs {
+            a.extend_from_slice(&[x, 1.0]);
+            b.push(2.0 * x + 1.0);
+        }
+        let sol = lstsq(&a, &b, 4, 2).unwrap();
+        assert!((sol[0] - 2.0).abs() < 1e-12 && (sol[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matmul_matvec_agree() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let x = vec![1.0, 0.5, -1.0];
+        let y1 = matvec(&a, &x, 2, 3);
+        let y2 = matmul(&a, &x, 2, 3, 1);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let t = transpose(&a, 2, 3);
+        let tt = transpose(&t, 3, 2);
+        assert_eq!(a, tt);
+    }
+}

@@ -1,0 +1,18 @@
+//! SO(3)/O(3) representation theory, natively in Rust.
+//!
+//! Mirrors `python/compile/so3.py` exactly (same conventions: orthonormal
+//! real SH, no Condon-Shortley phase, flat `(L+1)^2` irrep layout) so the
+//! two implementations cross-validate through the golden vectors in
+//! `artifacts/golden/`.
+
+pub mod gaunt;
+pub mod linalg;
+pub mod quadrature;
+pub mod rotation;
+pub mod sh;
+pub mod wigner;
+
+pub use gaunt::{cg_tensor_real, gaunt_tensor_real};
+pub use rotation::{align_to_y, wigner_d_real, wigner_d_real_block, Rot3};
+pub use sh::{assoc_legendre, real_sh_all_xyz, real_sh_angular, sh_norm};
+pub use wigner::{clebsch_gordan, gaunt_complex, wigner_3j};

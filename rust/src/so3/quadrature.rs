@@ -1,0 +1,105 @@
+//! Gauss-Legendre quadrature nodes (Newton iteration on P_n) and the
+//! product rule on the sphere used to build exact Gaunt tensors.
+
+/// Legendre polynomial P_n(x) and derivative P_n'(x).
+fn legendre_pd(n: usize, x: f64) -> (f64, f64) {
+    let mut p0 = 1.0f64;
+    let mut p1 = x;
+    if n == 0 {
+        return (1.0, 0.0);
+    }
+    for k in 2..=n {
+        let kf = k as f64;
+        let p2 = ((2.0 * kf - 1.0) * x * p1 - (kf - 1.0) * p0) / kf;
+        p0 = p1;
+        p1 = p2;
+    }
+    // derivative from the recurrence: (x^2-1) P_n' = n (x P_n - P_{n-1})
+    let d = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+    (p1, d)
+}
+
+/// Gauss-Legendre nodes and weights on [-1, 1].
+pub fn gauss_legendre(n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut xs = vec![0.0; n];
+    let mut ws = vec![0.0; n];
+    for i in 0..n {
+        // Tricomi initial guess
+        let mut x = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5))
+            .cos();
+        for _ in 0..100 {
+            let (p, d) = legendre_pd(n, x);
+            let dx = p / d;
+            x -= dx;
+            if dx.abs() < 1e-15 {
+                break;
+            }
+        }
+        let (_, d) = legendre_pd(n, x);
+        xs[i] = x;
+        ws[i] = 2.0 / ((1.0 - x * x) * d * d);
+    }
+    (xs, ws)
+}
+
+/// Quadrature exact for spherical-harmonic products of total degree <= deg.
+///
+/// Returns ((theta, phi, w_theta) nodes, dphi) with the integral of f over
+/// S^2 equal to sum over nodes of `w_theta * dphi * f(theta, phi)`.
+pub fn sphere_quadrature(deg: usize) -> (Vec<(f64, f64, f64)>, f64) {
+    let n_theta = deg / 2 + 2;
+    let (xs, ws) = gauss_legendre(n_theta);
+    let n_phi = deg + 2;
+    let dphi = 2.0 * std::f64::consts::PI / n_phi as f64;
+    let mut nodes = Vec::with_capacity(n_theta * n_phi);
+    for (x, w) in xs.iter().zip(&ws) {
+        let theta = x.clamp(-1.0, 1.0).acos();
+        for j in 0..n_phi {
+            nodes.push((theta, j as f64 * dphi, *w));
+        }
+    }
+    (nodes, dphi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nodes_integrate_polynomials_exactly() {
+        let (xs, ws) = gauss_legendre(6);
+        // integral x^k over [-1,1]
+        for k in 0..=11usize {
+            let got: f64 = xs.iter().zip(&ws).map(|(x, w)| w * x.powi(k as i32)).sum();
+            let want = if k % 2 == 1 { 0.0 } else { 2.0 / (k as f64 + 1.0) };
+            assert!((got - want).abs() < 1e-12, "k={k}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_two() {
+        for n in [2, 5, 9, 16] {
+            let (_, ws) = gauss_legendre(n);
+            let s: f64 = ws.iter().sum();
+            assert!((s - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sphere_area() {
+        let (nodes, dphi) = sphere_quadrature(4);
+        let area: f64 = nodes.iter().map(|(_, _, w)| w * dphi).sum();
+        assert!((area - 4.0 * std::f64::consts::PI).abs() < 1e-10);
+    }
+
+    #[test]
+    fn sphere_integrates_z_squared() {
+        // int z^2 dOmega = 4 pi / 3
+        let (nodes, dphi) = sphere_quadrature(4);
+        let got: f64 = nodes
+            .iter()
+            .map(|(th, _, w)| w * dphi * th.cos() * th.cos())
+            .sum();
+        assert!((got - 4.0 * std::f64::consts::PI / 3.0).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,387 @@
+//! 3D rotations, Euler angles, and real Wigner-D matrices.
+
+use super::linalg;
+use super::sh::real_sh_all_xyz;
+use crate::util::rng::Rng;
+use crate::{lm_index, num_coeffs};
+
+/// 3x3 rotation matrix, row-major.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rot3(pub [[f64; 3]; 3]);
+
+impl Rot3 {
+    pub fn identity() -> Self {
+        Rot3([[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]])
+    }
+
+    pub fn rot_z(a: f64) -> Self {
+        let (s, c) = a.sin_cos();
+        Rot3([[c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0]])
+    }
+
+    pub fn rot_y(a: f64) -> Self {
+        let (s, c) = a.sin_cos();
+        Rot3([[c, 0.0, s], [0.0, 1.0, 0.0], [-s, 0.0, c]])
+    }
+
+    /// ZYZ Euler composition Rz(alpha) Ry(beta) Rz(gamma).
+    pub fn euler_zyz(alpha: f64, beta: f64, gamma: f64) -> Self {
+        Rot3::rot_z(alpha) * Rot3::rot_y(beta) * Rot3::rot_z(gamma)
+    }
+
+    /// Haar-ish random rotation (QR of a Gaussian matrix, det fixed to +1).
+    pub fn random(rng: &mut Rng) -> Self {
+        // Gram-Schmidt on 3 Gaussian vectors
+        let mut a = [[0.0f64; 3]; 3];
+        loop {
+            for row in a.iter_mut() {
+                for v in row.iter_mut() {
+                    *v = rng.normal();
+                }
+            }
+            // orthonormalize rows
+            let ok = gram_schmidt(&mut a);
+            if ok {
+                break;
+            }
+        }
+        // det +1
+        let d = det3(&a);
+        if d < 0.0 {
+            for v in a[0].iter_mut() {
+                *v = -*v;
+            }
+        }
+        Rot3(a)
+    }
+
+    pub fn apply(&self, v: [f64; 3]) -> [f64; 3] {
+        let m = &self.0;
+        [
+            m[0][0] * v[0] + m[0][1] * v[1] + m[0][2] * v[2],
+            m[1][0] * v[0] + m[1][1] * v[1] + m[1][2] * v[2],
+            m[2][0] * v[0] + m[2][1] * v[1] + m[2][2] * v[2],
+        ]
+    }
+
+    pub fn transpose(&self) -> Self {
+        let m = &self.0;
+        Rot3([
+            [m[0][0], m[1][0], m[2][0]],
+            [m[0][1], m[1][1], m[2][1]],
+            [m[0][2], m[1][2], m[2][2]],
+        ])
+    }
+
+    pub fn det(&self) -> f64 {
+        det3(&self.0)
+    }
+}
+
+impl std::ops::Mul for Rot3 {
+    type Output = Rot3;
+    fn mul(self, o: Rot3) -> Rot3 {
+        let mut r = [[0.0; 3]; 3];
+        for i in 0..3 {
+            for j in 0..3 {
+                for (k, ok) in o.0.iter().enumerate() {
+                    r[i][j] += self.0[i][k] * ok[j];
+                }
+            }
+        }
+        Rot3(r)
+    }
+}
+
+fn det3(m: &[[f64; 3]; 3]) -> f64 {
+    m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+        - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+        + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+}
+
+fn gram_schmidt(a: &mut [[f64; 3]; 3]) -> bool {
+    for i in 0..3 {
+        let mut v = a[i];
+        for j in 0..i {
+            let d = dot(&a[j], &a[i]);
+            for k in 0..3 {
+                v[k] -= d * a[j][k];
+            }
+        }
+        let n = dot(&v, &v).sqrt();
+        if n < 1e-6 {
+            return false;
+        }
+        for (k, vk) in v.iter().enumerate() {
+            a[i][k] = vk / n;
+        }
+    }
+    true
+}
+
+fn dot(a: &[f64; 3], b: &[f64; 3]) -> f64 {
+    a[0] * b[0] + a[1] * b[1] + a[2] * b[2]
+}
+
+/// Rotation R with R r/||r|| = (0, 1, 0) — the eSCN alignment trick.
+pub fn align_to_y(r: [f64; 3]) -> Rot3 {
+    let n = dot(&r, &r).sqrt();
+    let u = [r[0] / n, r[1] / n, r[2] / n];
+    let y = [0.0, 1.0, 0.0];
+    let c = dot(&u, &y);
+    if c < -1.0 + 1e-12 {
+        return Rot3([[1.0, 0.0, 0.0], [0.0, -1.0, 0.0], [0.0, 0.0, -1.0]]);
+    }
+    let v = [u[1] * y[2] - u[2] * y[1], u[2] * y[0] - u[0] * y[2],
+             u[0] * y[1] - u[1] * y[0]];
+    let vx = [
+        [0.0, -v[2], v[1]],
+        [v[2], 0.0, -v[0]],
+        [-v[1], v[0], 0.0],
+    ];
+    let mut out = [[0.0f64; 3]; 3];
+    // I + vx + vx^2/(1+c)
+    for i in 0..3 {
+        for j in 0..3 {
+            let mut vx2 = 0.0;
+            for (k, vxk) in vx.iter().enumerate() {
+                vx2 += vx[i][k] * vxk[j];
+            }
+            out[i][j] = (i == j) as u8 as f64 + vx[i][j] + vx2 / (1.0 + c);
+        }
+    }
+    Rot3(out)
+}
+
+/// Cached fit data for [`wigner_d_real`]: fixed sample directions and the
+/// precomputed pseudo-inverse of the unrotated SH sample matrix.  Turns
+/// each D^l(R) evaluation into one SH sweep over the rotated points plus a
+/// small matmul (perf pass #1, see EXPERIMENTS.md §Perf).
+struct DFit {
+    pts: Vec<[f64; 3]>,
+    /// dim x npts pseudo-inverse (Y^T Y)^{-1} Y^T, row-major
+    pinv: Vec<f64>,
+}
+
+fn d_fit(l: usize) -> std::sync::Arc<DFit> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex, OnceLock};
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<DFit>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(f) = cache.lock().unwrap().get(&l) {
+        return f.clone();
+    }
+    let dim = 2 * l + 1;
+    let npts = dim + 6; // mildly overdetermined for conditioning
+    let mut rng = Rng::new(12345 + l as u64);
+    let base = lm_index(l, -(l as i64));
+    let mut pts = Vec::with_capacity(npts);
+    let mut y = vec![0.0; npts * dim];
+    for p in 0..npts {
+        let u = rng.unit3();
+        let a = real_sh_all_xyz(l, u);
+        y[p * dim..(p + 1) * dim].copy_from_slice(&a[base..base + dim]);
+        pts.push(u);
+    }
+    // pinv = (Y^T Y)^{-1} Y^T: solve dim systems with RHS = columns of Y^T
+    let mut ata = vec![0.0; dim * dim];
+    for p in 0..npts {
+        for i in 0..dim {
+            for j in i..dim {
+                ata[i * dim + j] += y[p * dim + i] * y[p * dim + j];
+            }
+        }
+    }
+    for i in 0..dim {
+        for j in 0..i {
+            ata[i * dim + j] = ata[j * dim + i];
+        }
+    }
+    let mut pinv = vec![0.0; dim * npts];
+    for col in 0..npts {
+        let mut a = ata.clone();
+        let mut b: Vec<f64> = (0..dim).map(|i| y[col * dim + i]).collect();
+        let x = linalg::solve(&mut a, &mut b, dim).expect("wigner_d fit");
+        for (row, v) in x.iter().enumerate() {
+            pinv[row * npts + col] = *v;
+        }
+    }
+    let fit = Arc::new(DFit { pts, pinv });
+    cache.lock().unwrap().insert(l, fit.clone());
+    fit
+}
+
+/// Real Wigner-D matrix D^l(R) with Y^l(R r) = D^l(R) Y^l(r), solved to
+/// machine precision against cached sample directions.
+pub fn wigner_d_real(l: usize, rot: &Rot3) -> Vec<f64> {
+    let dim = 2 * l + 1;
+    let fit = d_fit(l);
+    let npts = fit.pts.len();
+    let base = lm_index(l, -(l as i64));
+    let mut yr = vec![0.0; npts * dim];
+    for (p, u) in fit.pts.iter().enumerate() {
+        let b = real_sh_all_xyz(l, rot.apply(*u));
+        yr[p * dim..(p + 1) * dim].copy_from_slice(&b[base..base + dim]);
+    }
+    // M = pinv (dim x npts) * Yr (npts x dim); D = M^T
+    let m = linalg::matmul(&fit.pinv, &yr, dim, npts, dim);
+    linalg::transpose(&m, dim, dim)
+}
+
+/// Block-diagonal real Wigner-D on a full (L+1)^2 feature, row-major.
+pub fn wigner_d_real_block(l_max: usize, rot: &Rot3) -> Vec<f64> {
+    let n = num_coeffs(l_max);
+    let mut out = vec![0.0; n * n];
+    for l in 0..=l_max {
+        let d = wigner_d_real(l, rot);
+        let dim = 2 * l + 1;
+        let base = lm_index(l, -(l as i64));
+        for i in 0..dim {
+            for j in 0..dim {
+                out[(base + i) * n + (base + j)] = d[i * dim + j];
+            }
+        }
+    }
+    out
+}
+
+/// Apply a block Wigner-D (row-major n x n) to a feature vector.
+pub fn apply_block(d: &[f64], x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    linalg::matvec(d, x, n, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rotations_orthogonal() {
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let r = Rot3::random(&mut rng);
+            let rt = r.transpose();
+            let p = r * rt;
+            for i in 0..3 {
+                for j in 0..3 {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((p.0[i][j] - want).abs() < 1e-12);
+                }
+            }
+            assert!((r.det() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn euler_identity() {
+        let r = Rot3::euler_zyz(0.4, 0.0, -0.4);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((r.0[i][j] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn align_to_y_works() {
+        let mut rng = Rng::new(5);
+        for _ in 0..30 {
+            let v = [rng.normal(), rng.normal(), rng.normal()];
+            let r = align_to_y(v);
+            let n = dot(&v, &v).sqrt();
+            let u = r.apply([v[0] / n, v[1] / n, v[2] / n]);
+            assert!(u[0].abs() < 1e-10 && (u[1] - 1.0).abs() < 1e-10
+                    && u[2].abs() < 1e-10);
+            assert!((r.det() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn align_antiparallel() {
+        let r = align_to_y([0.0, -1.0, 0.0]);
+        let u = r.apply([0.0, -1.0, 0.0]);
+        assert!((u[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wigner_d_is_representation() {
+        let mut rng = Rng::new(3);
+        let r1 = Rot3::random(&mut rng);
+        let r2 = Rot3::random(&mut rng);
+        for l in 0..4usize {
+            let dim = 2 * l + 1;
+            let d1 = wigner_d_real(l, &r1);
+            let d2 = wigner_d_real(l, &r2);
+            let d12 = wigner_d_real(l, &(r1 * r2));
+            let prod = linalg::matmul(&d1, &d2, dim, dim, dim);
+            for i in 0..dim * dim {
+                assert!((d12[i] - prod[i]).abs() < 1e-9, "l={l} idx={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn wigner_d_equivariance() {
+        let mut rng = Rng::new(7);
+        let rot = Rot3::random(&mut rng);
+        for l in 0..4usize {
+            let dim = 2 * l + 1;
+            let d = wigner_d_real(l, &rot);
+            let base = lm_index(l, -(l as i64));
+            for _ in 0..5 {
+                let u = rng.unit3();
+                let a = real_sh_all_xyz(l, rot.apply(u));
+                let b = real_sh_all_xyz(l, u);
+                let rotated = linalg::matvec(&d, &b[base..base + dim], dim, dim);
+                for i in 0..dim {
+                    assert!((a[base + i] - rotated[i]).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wigner_d_orthogonal() {
+        let mut rng = Rng::new(9);
+        let rot = Rot3::random(&mut rng);
+        for l in 0..4usize {
+            let dim = 2 * l + 1;
+            let d = wigner_d_real(l, &rot);
+            let dt = linalg::transpose(&d, dim, dim);
+            let p = linalg::matmul(&d, &dt, dim, dim, dim);
+            for i in 0..dim {
+                for j in 0..dim {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((p[i * dim + j] - want).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn escn_alignment_sparsifies_filter() {
+        // after aligning the edge to y... our SH convention has the m=0
+        // column along z; verify the *z*-aligned variant sparsifies, which
+        // is what tp::escn uses.
+        let mut rng = Rng::new(11);
+        for _ in 0..5 {
+            let v = [rng.normal(), rng.normal(), rng.normal()];
+            // rotation sending v to +z: align_to_y composed with y->z swap
+            let ry = align_to_y(v);
+            let y2z = Rot3([[1.0, 0.0, 0.0], [0.0, 0.0, -1.0], [0.0, 1.0, 0.0]]);
+            let r = y2z * ry;
+            let u = r.apply(v);
+            let n = dot(&u, &u).sqrt();
+            assert!((u[2] / n - 1.0).abs() < 1e-9);
+            let ysh = real_sh_all_xyz(3, u);
+            for l in 0..=3usize {
+                for m in -(l as i64)..=(l as i64) {
+                    if m != 0 {
+                        assert!(ysh[lm_index(l, m)].abs() < 1e-9);
+                    }
+                }
+            }
+        }
+    }
+}

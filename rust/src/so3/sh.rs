@@ -1,0 +1,191 @@
+//! Associated Legendre functions and orthonormal real spherical harmonics.
+//!
+//! Conventions identical to `so3.py`: no Condon-Shortley phase,
+//! `Y_m^l = N_l^{|m|} P_l^{|m|}(cos th) * {sqrt2 cos(m ph) | 1 | sqrt2 sin(|m| ph)}`.
+
+use crate::{lm_index, num_coeffs};
+
+/// n! as f64 (exact for n <= 22, adequate to ~1e-15 relative beyond).
+pub fn factorial(n: i64) -> f64 {
+    if n < 0 {
+        return 0.0;
+    }
+    let mut f = 1.0f64;
+    for k in 2..=n {
+        f *= k as f64;
+    }
+    f
+}
+
+/// P_l^m(x) for 0 <= m <= l, no Condon-Shortley phase.
+pub fn assoc_legendre(l: usize, m: usize, x: f64) -> f64 {
+    debug_assert!(m <= l);
+    let somx2 = (1.0 - x * x).max(0.0).sqrt();
+    let mut pmm = 1.0f64;
+    let mut fact = 1.0f64;
+    for _ in 0..m {
+        pmm *= fact * somx2;
+        fact += 2.0;
+    }
+    if l == m {
+        return pmm;
+    }
+    let mut pmmp1 = x * (2 * m + 1) as f64 * pmm;
+    if l == m + 1 {
+        return pmmp1;
+    }
+    let mut pll = pmmp1;
+    for ll in (m + 2)..=l {
+        pll = (x * (2 * ll - 1) as f64 * pmmp1 - (ll + m - 1) as f64 * pmm)
+            / (ll - m) as f64;
+        pmm = pmmp1;
+        pmmp1 = pll;
+    }
+    pll
+}
+
+/// Orthonormalization constant N_l^{|m|}.
+pub fn sh_norm(l: usize, m: i64) -> f64 {
+    let am = m.unsigned_abs() as i64;
+    ((2 * l as i64 + 1) as f64 / (4.0 * std::f64::consts::PI)
+        * factorial(l as i64 - am)
+        / factorial(l as i64 + am))
+    .sqrt()
+}
+
+/// Real orthonormal Y_m^l(theta, phi).
+pub fn real_sh_angular(l: usize, m: i64, theta: f64, phi: f64) -> f64 {
+    let am = m.unsigned_abs() as usize;
+    let p = assoc_legendre(l, am, theta.cos()) * sh_norm(l, m);
+    if m > 0 {
+        p * std::f64::consts::SQRT_2 * (m as f64 * phi).cos()
+    } else if m < 0 {
+        p * std::f64::consts::SQRT_2 * (am as f64 * phi).sin()
+    } else {
+        p
+    }
+}
+
+/// All real SH up to degree L at a Cartesian direction (normalized inside).
+pub fn real_sh_all_xyz(l_max: usize, r: [f64; 3]) -> Vec<f64> {
+    let n = (r[0] * r[0] + r[1] * r[1] + r[2] * r[2]).sqrt().max(1e-30);
+    let u = [r[0] / n, r[1] / n, r[2] / n];
+    let theta = u[2].clamp(-1.0, 1.0).acos();
+    let phi = u[1].atan2(u[0]);
+    let mut out = vec![0.0; num_coeffs(l_max)];
+    for l in 0..=l_max {
+        for m in -(l as i64)..=(l as i64) {
+            out[lm_index(l, m)] = real_sh_angular(l, m, theta, phi);
+        }
+    }
+    out
+}
+
+/// All real SH up to degree L at spherical coordinates.
+pub fn real_sh_all_angular(l_max: usize, theta: f64, phi: f64) -> Vec<f64> {
+    let mut out = vec![0.0; num_coeffs(l_max)];
+    for l in 0..=l_max {
+        for m in -(l as i64)..=(l as i64) {
+            out[lm_index(l, m)] = real_sh_angular(l, m, theta, phi);
+        }
+    }
+    out
+}
+
+/// Evaluate a feature x (flat irrep layout) as a function on the sphere.
+pub fn eval_sh_series(x: &[f64], l_max: usize, theta: f64, phi: f64) -> f64 {
+    let y = real_sh_all_angular(l_max, theta, phi);
+    x.iter().zip(&y).map(|(a, b)| a * b).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::so3::quadrature::sphere_quadrature;
+
+    #[test]
+    fn legendre_base_cases() {
+        assert!((assoc_legendre(0, 0, 0.3) - 1.0).abs() < 1e-15);
+        assert!((assoc_legendre(1, 0, 0.3) - 0.3).abs() < 1e-15);
+        let x = 0.6f64;
+        assert!((assoc_legendre(1, 1, x) - (1.0 - x * x).sqrt()).abs() < 1e-14);
+        // P_2^0 = (3x^2 - 1)/2
+        assert!((assoc_legendre(2, 0, x) - (3.0 * x * x - 1.0) / 2.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn y00_constant() {
+        let v = real_sh_angular(0, 0, 0.7, 1.3);
+        assert!((v - 1.0 / (4.0 * std::f64::consts::PI).sqrt()).abs() < 1e-14);
+    }
+
+    #[test]
+    fn y1_is_axes() {
+        let c = (3.0 / (4.0 * std::f64::consts::PI)).sqrt();
+        let pts: [[f64; 3]; 3] =
+            [[0.3, -0.5, 0.81], [1.0, 0.0, 0.0], [0.0, 0.0, 1.0]];
+        for p in pts {
+            let n = (p[0] * p[0] + p[1] * p[1] + p[2] * p[2]).sqrt();
+            let u = [p[0] / n, p[1] / n, p[2] / n];
+            let y = real_sh_all_xyz(1, p);
+            assert!((y[1] - c * u[1]).abs() < 1e-12, "m=-1 ~ y");
+            assert!((y[2] - c * u[2]).abs() < 1e-12, "m=0 ~ z");
+            assert!((y[3] - c * u[0]).abs() < 1e-12, "m=1 ~ x");
+        }
+    }
+
+    #[test]
+    fn orthonormality_via_quadrature() {
+        let l_max = 4;
+        let (nodes, dphi) = sphere_quadrature(2 * l_max);
+        let n = num_coeffs(l_max);
+        let mut gram = vec![0.0; n * n];
+        for (theta, phi, w) in &nodes {
+            let y = real_sh_all_angular(l_max, *theta, *phi);
+            for i in 0..n {
+                for j in 0..n {
+                    gram[i * n + j] += w * dphi * y[i] * y[j];
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (gram[i * n + j] - want).abs() < 1e-10,
+                    "gram[{i}][{j}] = {}",
+                    gram[i * n + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parity() {
+        let p = [0.4, -0.7, 0.59];
+        let q = [-p[0], -p[1], -p[2]];
+        for l in 0..5usize {
+            let a = real_sh_all_xyz(l, p);
+            let b = real_sh_all_xyz(l, q);
+            let sign = if l % 2 == 0 { 1.0 } else { -1.0 };
+            for m in -(l as i64)..=(l as i64) {
+                let i = lm_index(l, m);
+                assert!((b[i] - sign * a[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn z_axis_kills_nonzero_m() {
+        let y = real_sh_all_xyz(4, [0.0, 0.0, 1.0]);
+        for l in 0..=4usize {
+            for m in -(l as i64)..=(l as i64) {
+                if m != 0 {
+                    assert!(y[lm_index(l, m)].abs() < 1e-12);
+                } else {
+                    assert!(y[lm_index(l, 0)].abs() > 1e-6);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Wigner 3j symbols, Clebsch-Gordan coefficients, complex Gaunt formula
+//! (paper Eqns. 22-24).
+
+use super::sh::factorial;
+
+/// Wigner 3j symbol via the Racah explicit sum (paper Eqn. (23)).
+pub fn wigner_3j(l1: i64, l2: i64, l3: i64, m1: i64, m2: i64, m3: i64) -> f64 {
+    if m1 + m2 + m3 != 0 {
+        return 0.0;
+    }
+    if l3 < (l1 - l2).abs() || l3 > l1 + l2 {
+        return 0.0;
+    }
+    if m1.abs() > l1 || m2.abs() > l2 || m3.abs() > l3 {
+        return 0.0;
+    }
+    let pref = (factorial(l1 + l2 - l3) * factorial(l1 - l2 + l3)
+        * factorial(-l1 + l2 + l3)
+        / factorial(l1 + l2 + l3 + 1))
+    .sqrt()
+        * (factorial(l1 - m1)
+            * factorial(l1 + m1)
+            * factorial(l2 - m2)
+            * factorial(l2 + m2)
+            * factorial(l3 - m3)
+            * factorial(l3 + m3))
+        .sqrt();
+    let k_min = 0.max(l2 - l3 - m1).max(l1 - l3 + m2);
+    let k_max = (l1 + l2 - l3).min(l1 - m1).min(l2 + m2);
+    let mut s = 0.0;
+    let mut k = k_min;
+    while k <= k_max {
+        let den = factorial(k)
+            * factorial(l1 + l2 - l3 - k)
+            * factorial(l1 - m1 - k)
+            * factorial(l2 + m2 - k)
+            * factorial(l3 - l2 + m1 + k)
+            * factorial(l3 - l1 - m2 + k);
+        let sign = if k % 2 == 0 { 1.0 } else { -1.0 };
+        s += sign / den;
+        k += 1;
+    }
+    let phase = if (l1 - l2 - m3).rem_euclid(2) == 0 { 1.0 } else { -1.0 };
+    phase * pref * s
+}
+
+/// Clebsch-Gordan coefficient C^{(l,m)}_{(l1,m1)(l2,m2)} (paper Eqn. (22)).
+pub fn clebsch_gordan(l1: i64, m1: i64, l2: i64, m2: i64, l: i64, m: i64) -> f64 {
+    if m1 + m2 != m {
+        return 0.0;
+    }
+    let phase = if (-l1 + l2 - m).rem_euclid(2) == 0 { 1.0 } else { -1.0 };
+    phase * ((2 * l + 1) as f64).sqrt() * wigner_3j(l1, l2, l, m1, m2, -m)
+}
+
+/// Complex Gaunt coefficient (integral of three complex SH, Eqn. (24)).
+pub fn gaunt_complex(l1: i64, m1: i64, l2: i64, m2: i64, l3: i64, m3: i64) -> f64 {
+    (((2 * l1 + 1) * (2 * l2 + 1) * (2 * l3 + 1)) as f64
+        / (4.0 * std::f64::consts::PI))
+        .sqrt()
+        * wigner_3j(l1, l2, l3, 0, 0, 0)
+        * wigner_3j(l1, l2, l3, m1, m2, m3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_3j_values() {
+        assert!((wigner_3j(1, 1, 0, 0, 0, 0) + 1.0 / 3f64.sqrt()).abs() < 1e-13);
+        assert!((wigner_3j(1, 1, 2, 0, 0, 0) - (2.0 / 15.0f64).sqrt()).abs() < 1e-13);
+        assert!((wigner_3j(2, 2, 2, 0, 0, 0) + (2.0 / 35.0f64).sqrt()).abs() < 1e-13);
+        assert!((wigner_3j(1, 1, 1, 1, -1, 0) - 1.0 / 6f64.sqrt()).abs() < 1e-13);
+    }
+
+    #[test]
+    fn selection_rules() {
+        assert_eq!(wigner_3j(1, 1, 3, 0, 0, 0), 0.0);
+        assert_eq!(wigner_3j(1, 1, 1, 1, 1, 1), 0.0);
+        assert_eq!(wigner_3j(1, 2, 2, 2, 0, -2), 0.0);
+        assert_eq!(wigner_3j(1, 1, 1, 0, 0, 0), 0.0); // odd sum at m=0
+    }
+
+    #[test]
+    fn orthogonality() {
+        let (l1, l2) = (2i64, 1i64);
+        for l in (l1 - l2).abs()..=(l1 + l2) {
+            for lp in (l1 - l2).abs()..=(l1 + l2) {
+                for m in -l..=l {
+                    for mp in -lp..=lp {
+                        let mut s = 0.0;
+                        for m1 in -l1..=l1 {
+                            for m2 in -l2..=l2 {
+                                s += wigner_3j(l1, l2, l, m1, m2, m)
+                                    * wigner_3j(l1, l2, lp, m1, m2, mp);
+                            }
+                        }
+                        let want = if l == lp && m == mp {
+                            1.0 / (2 * l + 1) as f64
+                        } else {
+                            0.0
+                        };
+                        assert!((s - want).abs() < 1e-12);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cg_known_values() {
+        assert!((clebsch_gordan(1, 0, 1, 0, 2, 0) - (2.0 / 3.0f64).sqrt()).abs()
+            < 1e-13);
+        assert!((clebsch_gordan(1, 1, 1, -1, 0, 0) - 1.0 / 3f64.sqrt()).abs()
+            < 1e-13);
+        assert!((clebsch_gordan(1, 1, 1, 0, 2, 1) - 1.0 / 2f64.sqrt()).abs()
+            < 1e-13);
+    }
+
+    #[test]
+    fn cg_orthogonality_rows() {
+        let (l1, l2) = (2i64, 2i64);
+        for l in 0..=4i64 {
+            for m in -l..=l {
+                let mut s = 0.0;
+                for m1 in -l1..=l1 {
+                    for m2 in -l2..=l2 {
+                        let c = clebsch_gordan(l1, m1, l2, m2, l, m);
+                        s += c * c;
+                    }
+                }
+                assert!((s - 1.0).abs() < 1e-12, "l={l} m={m}: {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn wigner_eckart_ratio_constant() {
+        // paper Eqn. (3): complex Gaunt / CG constant over m per (l1,l2,l)
+        for (l1, l2, l) in [(1i64, 1i64, 2i64), (2, 1, 3), (2, 2, 2)] {
+            let mut ratio: Option<f64> = None;
+            for m1 in -l1..=l1 {
+                for m2 in -l2..=l2 {
+                    let m = m1 + m2;
+                    if m.abs() > l {
+                        continue;
+                    }
+                    let cg = clebsch_gordan(l1, m1, l2, m2, l, m);
+                    if cg.abs() < 1e-12 {
+                        continue;
+                    }
+                    let sign = if m.rem_euclid(2) == 0 { 1.0 } else { -1.0 };
+                    let ga = gaunt_complex(l1, m1, l2, m2, l, -m) * sign;
+                    let r = ga / cg;
+                    match ratio {
+                        None => ratio = Some(r),
+                        Some(r0) => assert!((r - r0).abs() < 1e-11),
+                    }
+                }
+            }
+            assert!(ratio.is_some());
+        }
+    }
+}

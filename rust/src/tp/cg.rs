@@ -1,0 +1,162 @@
+//! The Clebsch-Gordan full tensor product — the paper's O(L^6) baseline
+//! (Eqn. (1)), in the two forms real implementations use:
+//!
+//! * dense contraction over the full coupling tensor, and
+//! * sparse iteration over the non-zero coefficients (what e3nn's
+//!   compiled tensor product effectively does).
+
+use crate::so3::gaunt::{cg_tensor_real, sparsify};
+use crate::num_coeffs;
+
+/// Precomputed CG tensor-product plan for fixed (L1, L2, L3).
+pub struct CgPlan {
+    pub l1: usize,
+    pub l2: usize,
+    pub l3: usize,
+    n1: usize,
+    n2: usize,
+    n3: usize,
+    dense: Vec<f64>,
+    sparse: Vec<(u32, u32, u32, f64)>,
+}
+
+impl CgPlan {
+    pub fn new(l1: usize, l2: usize, l3: usize) -> Self {
+        let dense = cg_tensor_real(l1, l2, l3);
+        let (n1, n2, n3) = (num_coeffs(l1), num_coeffs(l2), num_coeffs(l3));
+        let sparse = sparsify(&dense, n3, n1, n2);
+        CgPlan { l1, l2, l3, n1, n2, n3, dense, sparse }
+    }
+
+    /// Number of non-zero coupling coefficients (the true O(L^6) witness).
+    pub fn nnz(&self) -> usize {
+        self.sparse.len()
+    }
+
+    /// Dense contraction (cache-friendly triple loop).
+    pub fn apply_dense(&self, x1: &[f64], x2: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.n3];
+        for (k, o) in out.iter_mut().enumerate() {
+            let block = &self.dense[k * self.n1 * self.n2..];
+            let mut acc = 0.0;
+            for (i, xi) in x1.iter().enumerate() {
+                if *xi == 0.0 {
+                    continue;
+                }
+                let row = &block[i * self.n2..(i + 1) * self.n2];
+                let mut s = 0.0;
+                for (j, xj) in x2.iter().enumerate() {
+                    s += row[j] * xj;
+                }
+                acc += xi * s;
+            }
+            *o = acc;
+        }
+        out
+    }
+
+    /// Sparse contraction over the non-zero coefficients.
+    pub fn apply_sparse(&self, x1: &[f64], x2: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.n3];
+        for (k, i, j, v) in &self.sparse {
+            out[*k as usize] += v * x1[*i as usize] * x2[*j as usize];
+        }
+        out
+    }
+
+    /// Batched sparse apply.
+    pub fn apply_batch(&self, x1: &[f64], x2: &[f64], rows: usize) -> Vec<f64> {
+        let mut out = vec![0.0; rows * self.n3];
+        for r in 0..rows {
+            let o = &mut out[r * self.n3..(r + 1) * self.n3];
+            let a = &x1[r * self.n1..(r + 1) * self.n1];
+            let b = &x2[r * self.n2..(r + 1) * self.n2];
+            for (k, i, j, v) in &self.sparse {
+                o[*k as usize] += v * a[*i as usize] * b[*j as usize];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::so3::linalg::matvec;
+    use crate::so3::rotation::{wigner_d_real_block, Rot3};
+    use crate::util::prop::max_abs_diff;
+    use crate::util::rng::Rng;
+    use crate::lm_index;
+
+    #[test]
+    fn sparse_matches_dense() {
+        let mut rng = Rng::new(0);
+        for (l1, l2, l3) in [(1usize, 1usize, 2usize), (2, 2, 2), (3, 2, 4)] {
+            let plan = CgPlan::new(l1, l2, l3);
+            let x1 = rng.normals(num_coeffs(l1));
+            let x2 = rng.normals(num_coeffs(l2));
+            let a = plan.apply_dense(&x1, &x2);
+            let b = plan.apply_sparse(&x1, &x2);
+            assert!(max_abs_diff(&a, &b) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn equivariant() {
+        let mut rng = Rng::new(1);
+        let l = 2usize;
+        let rot = Rot3::random(&mut rng);
+        let d = wigner_d_real_block(l, &rot);
+        let d_out = wigner_d_real_block(2 * l, &rot);
+        let plan = CgPlan::new(l, l, 2 * l);
+        let n = num_coeffs(l);
+        let x1 = rng.normals(n);
+        let x2 = rng.normals(n);
+        let a = plan.apply_sparse(&matvec(&d, &x1, n, n), &matvec(&d, &x2, n, n));
+        let b0 = plan.apply_sparse(&x1, &x2);
+        let nn = num_coeffs(2 * l);
+        let b = matvec(&d_out, &b0, nn, nn);
+        assert!(max_abs_diff(&a, &b) < 1e-8);
+    }
+
+    #[test]
+    fn includes_odd_parity_paths_gaunt_excludes() {
+        // pure (1,1)->1 (cross product) is present in CG, absent in Gaunt
+        let plan = CgPlan::new(1, 1, 1);
+        let mut x1 = vec![0.0; 4];
+        let mut x2 = vec![0.0; 4];
+        x1[lm_index(1, 1)] = 1.0; // x-direction
+        x2[lm_index(1, -1)] = 1.0; // y-direction
+        let out = plan.apply_sparse(&x1, &x2);
+        let l1_norm: f64 = out[1..4].iter().map(|v| v * v).sum();
+        assert!(l1_norm > 1e-6, "CG (1,1)->1 path missing");
+        let gplan = crate::tp::GauntPlan::new(1, 1, 1,
+                                              crate::tp::ConvMethod::Direct);
+        let gout = gplan.apply(&x1, &x2);
+        let g_norm: f64 = gout[1..4].iter().map(|v| v * v).sum();
+        assert!(g_norm < 1e-12, "Gaunt should kill odd parity");
+    }
+
+    #[test]
+    fn nnz_grows_like_l6() {
+        // sanity on the complexity witness: nnz(L)/nnz(L-1) should grow
+        let n2 = CgPlan::new(2, 2, 2).nnz();
+        let n4 = CgPlan::new(4, 4, 4).nnz();
+        assert!(n4 > 8 * n2, "nnz {n2} -> {n4}");
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::new(2);
+        let plan = CgPlan::new(2, 2, 2);
+        let n = num_coeffs(2);
+        let x1 = rng.normals(3 * n);
+        let x2 = rng.normals(3 * n);
+        let batch = plan.apply_batch(&x1, &x2, 3);
+        for r in 0..3 {
+            let single =
+                plan.apply_sparse(&x1[r * n..(r + 1) * n], &x2[r * n..(r + 1) * n]);
+            assert!(max_abs_diff(&batch[r * n..(r + 1) * n], &single) < 1e-12);
+        }
+    }
+}

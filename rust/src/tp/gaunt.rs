@@ -1,0 +1,397 @@
+//! The Gaunt Tensor Product fast path (paper Section 3.2): O(L^3).
+//!
+//! Pipeline per pair of inputs:
+//!   1. sh2f  — per-|v| panel contraction (exploits the m = +-v sparsity),
+//!   2. conv  — 2D convolution of the coefficient grids (direct for small
+//!              L, FFT for large),
+//!   3. f2sh  — per-|v| back-projection onto SH coefficients.
+//!
+//! A [`GauntPlan`] precomputes all tables for fixed (L1, L2, L3) and keeps
+//! scratch buffers so the hot path is allocation-free.
+
+use crate::fourier::complex::C64;
+use crate::fourier::conv::{conv2d_direct, conv2d_fft};
+use crate::fourier::tables::{
+    f2sh_panels, sh2f_panels, F2shPanels, Sh2fPanels, SQRT2_OVER_2,
+};
+use crate::{lm_index, num_coeffs};
+
+/// Which convolution backend the plan uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvMethod {
+    Direct,
+    Fft,
+    /// Direct below the crossover degree, FFT above (the shipped default).
+    Auto,
+}
+
+/// Precomputed plan for x1 (deg <= L1) (x) x2 (deg <= L2) -> deg <= L3.
+pub struct GauntPlan {
+    pub l1: usize,
+    pub l2: usize,
+    pub l3: usize,
+    pub method: ConvMethod,
+    p1: Sh2fPanels,
+    p2: Sh2fPanels,
+    t3: F2shPanels,
+    n_grid: usize, // product grid half-width = l1 + l2
+}
+
+impl GauntPlan {
+    pub fn new(l1: usize, l2: usize, l3: usize, method: ConvMethod) -> Self {
+        let n_grid = l1 + l2;
+        GauntPlan {
+            l1,
+            l2,
+            l3,
+            method,
+            p1: sh2f_panels(l1),
+            p2: sh2f_panels(l2),
+            t3: f2sh_panels(l3, n_grid),
+            n_grid,
+        }
+    }
+
+    /// SH coefficients -> complex Fourier grid (2L+1)^2 (row-major [u][v]).
+    pub fn sh2f(panels: &Sh2fPanels, x: &[f64]) -> Vec<C64> {
+        let l_max = panels.l_max;
+        let nu = 2 * l_max + 1;
+        let nl = l_max + 1;
+        debug_assert_eq!(x.len(), num_coeffs(l_max));
+        // W[l, s]
+        let mut w = vec![C64::default(); nl * nl];
+        for l in 0..=l_max {
+            w[l * nl] = C64::real(x[lm_index(l, 0)]);
+            for s in 1..=l {
+                w[l * nl + s] = C64::new(
+                    SQRT2_OVER_2 * x[lm_index(l, s as i64)],
+                    -SQRT2_OVER_2 * x[lm_index(l, -(s as i64))],
+                );
+            }
+        }
+        let mut grid = vec![C64::default(); nu * nu];
+        for s in 0..=l_max {
+            let p = &panels.panels[s];
+            for u in 0..nu {
+                let row = &p[u * nl..(u + 1) * nl];
+                let mut accp = C64::default();
+                let mut accm = C64::default();
+                for l in s..=l_max {
+                    let pv = row[l];
+                    if pv.norm_sqr() == 0.0 {
+                        continue;
+                    }
+                    let wv = w[l * nl + s];
+                    accp += pv * wv;
+                    accm += pv * wv.conj();
+                }
+                grid[u * nu + (l_max + s)] = accp;
+                if s > 0 {
+                    grid[u * nu + (l_max - s)] = accm;
+                }
+            }
+        }
+        grid
+    }
+
+    /// Product grid (2N+1)^2 -> SH coefficients (deg <= L3).
+    pub fn f2sh(&self, grid: &[C64]) -> Vec<f64> {
+        let n = self.n_grid;
+        let nu = 2 * n + 1;
+        debug_assert_eq!(grid.len(), nu * nu);
+        let l_out = self.l3;
+        let mut x = vec![0.0; num_coeffs(l_out)];
+        let pi = std::f64::consts::PI;
+        let s2pi = std::f64::consts::SQRT_2 * pi;
+        for s in 0..=l_out {
+            let t = &self.t3.panels[s];
+            if s == 0 {
+                for l in 0..=l_out {
+                    let trow = &t[l * nu..(l + 1) * nu];
+                    let mut acc = 0.0;
+                    for u in 0..nu {
+                        let g = grid[u * nu + n];
+                        let tv = trow[u];
+                        acc += tv.re * g.re - tv.im * g.im;
+                    }
+                    x[lm_index(l, 0)] = 2.0 * pi * acc;
+                }
+            } else {
+                for l in s..=l_out {
+                    let trow = &t[l * nu..(l + 1) * nu];
+                    let mut accp = 0.0; // Re sum T (gp + gm)
+                    let mut accm = 0.0; // Re sum iT (gp - gm)
+                    for u in 0..nu {
+                        let gp = grid[u * nu + n + s];
+                        let gm = grid[u * nu + n - s];
+                        let sp = gp + gm;
+                        let sm = gp - gm;
+                        let tv = trow[u];
+                        accp += tv.re * sp.re - tv.im * sp.im;
+                        accm += -(tv.im * sm.re + tv.re * sm.im);
+                    }
+                    x[lm_index(l, s as i64)] = s2pi * accp;
+                    x[lm_index(l, -(s as i64))] = s2pi * accm;
+                }
+            }
+        }
+        x
+    }
+
+    fn convolve(&self, a: &[C64], b: &[C64]) -> Vec<C64> {
+        let n1 = 2 * self.l1 + 1;
+        let n2 = 2 * self.l2 + 1;
+        let use_fft = match self.method {
+            ConvMethod::Direct => false,
+            ConvMethod::Fft => true,
+            ConvMethod::Auto => self.l1 + self.l2 >= 12,
+        };
+        if use_fft {
+            conv2d_fft(a, n1, b, n2)
+        } else {
+            conv2d_direct(a, n1, b, n2)
+        }
+    }
+
+    /// The Gaunt Tensor Product of one pair of features.
+    pub fn apply(&self, x1: &[f64], x2: &[f64]) -> Vec<f64> {
+        let u1 = Self::sh2f(&self.p1, x1);
+        let u2 = Self::sh2f(&self.p2, x2);
+        let u3 = self.convolve(&u1, &u2);
+        self.f2sh(&u3)
+    }
+
+    /// Weighted variant (paper Sec. 3.3 reparameterization): per-degree
+    /// weights w1[l1], w2[l2], w3[l3] multiply inputs/outputs.
+    pub fn apply_weighted(
+        &self,
+        x1: &[f64],
+        w1: &[f64],
+        x2: &[f64],
+        w2: &[f64],
+        w3: &[f64],
+    ) -> Vec<f64> {
+        let s1 = scale_by_degree(x1, w1, self.l1);
+        let s2 = scale_by_degree(x2, w2, self.l2);
+        let mut out = self.apply(&s1, &s2);
+        scale_by_degree_inplace(&mut out, w3, self.l3);
+        out
+    }
+
+    /// Batched apply (rows of x1/x2 are independent features).
+    pub fn apply_batch(&self, x1: &[f64], x2: &[f64], rows: usize) -> Vec<f64> {
+        let n1 = num_coeffs(self.l1);
+        let n2 = num_coeffs(self.l2);
+        let n3 = num_coeffs(self.l3);
+        let mut out = vec![0.0; rows * n3];
+        for r in 0..rows {
+            let y = self.apply(&x1[r * n1..(r + 1) * n1], &x2[r * n2..(r + 1) * n2]);
+            out[r * n3..(r + 1) * n3].copy_from_slice(&y);
+        }
+        out
+    }
+}
+
+/// Multiply each degree-l segment of x by w[l].
+pub fn scale_by_degree(x: &[f64], w: &[f64], l_max: usize) -> Vec<f64> {
+    let mut out = x.to_vec();
+    scale_by_degree_inplace(&mut out, w, l_max);
+    out
+}
+
+pub fn scale_by_degree_inplace(x: &mut [f64], w: &[f64], l_max: usize) {
+    for l in 0..=l_max {
+        let base = lm_index(l, -(l as i64));
+        for k in 0..(2 * l + 1) {
+            x[base + k] *= w[l];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::so3::gaunt::gaunt_tensor_real;
+    use crate::so3::rotation::{wigner_d_real_block, Rot3};
+    use crate::so3::linalg::matvec;
+    use crate::util::prop::{check, max_abs_diff, PropConfig};
+    use crate::util::rng::Rng;
+
+    fn direct_contraction(
+        x1: &[f64], l1: usize, x2: &[f64], l2: usize, l3: usize,
+    ) -> Vec<f64> {
+        let g = gaunt_tensor_real(l1, l2, l3);
+        let (n1, n2, n3) = (num_coeffs(l1), num_coeffs(l2), num_coeffs(l3));
+        let mut out = vec![0.0; n3];
+        for k in 0..n3 {
+            for i in 0..n1 {
+                for j in 0..n2 {
+                    out[k] += g[(k * n1 + i) * n2 + j] * x1[i] * x2[j];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_direct_contraction() {
+        let mut rng = Rng::new(0);
+        for (l1, l2, l3) in [(0usize, 0usize, 0usize), (1, 1, 2), (2, 2, 2),
+                             (3, 2, 4), (2, 3, 1), (4, 4, 4)] {
+            let x1 = rng.normals(num_coeffs(l1));
+            let x2 = rng.normals(num_coeffs(l2));
+            for method in [ConvMethod::Direct, ConvMethod::Fft] {
+                let plan = GauntPlan::new(l1, l2, l3, method);
+                let got = plan.apply(&x1, &x2);
+                let want = direct_contraction(&x1, l1, &x2, l2, l3);
+                assert!(
+                    max_abs_diff(&got, &want) < 1e-9,
+                    "({l1},{l2},{l3}) {method:?}: {}",
+                    max_abs_diff(&got, &want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multiplication_by_constant_is_identity() {
+        let mut rng = Rng::new(1);
+        let l = 3;
+        let x = rng.normals(num_coeffs(l));
+        let one = vec![(4.0 * std::f64::consts::PI).sqrt()];
+        let plan = GauntPlan::new(l, 0, l, ConvMethod::Direct);
+        let out = plan.apply(&x, &one);
+        assert!(max_abs_diff(&out, &x) < 1e-10);
+    }
+
+    #[test]
+    fn equivariance_property() {
+        check("gaunt-tp-equivariance", PropConfig { cases: 16, seed: 2 },
+              |rng, _| {
+            let l = 2usize;
+            let rot = Rot3::random(rng);
+            let d = wigner_d_real_block(l, &rot);
+            let d_out = wigner_d_real_block(2 * l, &rot);
+            let x1 = rng.normals(num_coeffs(l));
+            let x2 = rng.normals(num_coeffs(l));
+            let n = num_coeffs(l);
+            let plan = GauntPlan::new(l, l, 2 * l, ConvMethod::Auto);
+            let a = plan.apply(
+                &matvec(&d, &x1, n, n),
+                &matvec(&d, &x2, n, n),
+            );
+            let b0 = plan.apply(&x1, &x2);
+            let nn = num_coeffs(2 * l);
+            let b = matvec(&d_out, &b0, nn, nn);
+            if max_abs_diff(&a, &b) < 1e-8 {
+                Ok(())
+            } else {
+                Err(format!("equivariance violated: {}", max_abs_diff(&a, &b)))
+            }
+        });
+    }
+
+    #[test]
+    fn bilinearity_property() {
+        check("gaunt-tp-bilinear", PropConfig { cases: 32, seed: 3 },
+              |rng, _| {
+            let plan = GauntPlan::new(2, 2, 3, ConvMethod::Direct);
+            let n = num_coeffs(2);
+            let x1: Vec<f64> = rng.normals(n);
+            let x1b: Vec<f64> = rng.normals(n);
+            let x2: Vec<f64> = rng.normals(n);
+            let a = rng.uniform(-2.0, 2.0);
+            let lhs_in: Vec<f64> =
+                x1.iter().zip(&x1b).map(|(p, q)| a * p + q).collect();
+            let lhs = plan.apply(&lhs_in, &x2);
+            let r1 = plan.apply(&x1, &x2);
+            let r2 = plan.apply(&x1b, &x2);
+            let rhs: Vec<f64> = r1.iter().zip(&r2).map(|(p, q)| a * p + q).collect();
+            if max_abs_diff(&lhs, &rhs) < 1e-9 {
+                Ok(())
+            } else {
+                Err("not bilinear".into())
+            }
+        });
+    }
+
+    #[test]
+    fn pointwise_product_semantics() {
+        use crate::so3::sh::eval_sh_series;
+        let mut rng = Rng::new(4);
+        let l = 2;
+        let x1 = rng.normals(num_coeffs(l));
+        let x2 = rng.normals(num_coeffs(l));
+        let plan = GauntPlan::new(l, l, 2 * l, ConvMethod::Fft);
+        let x3 = plan.apply(&x1, &x2);
+        for _ in 0..20 {
+            let theta = rng.uniform(0.1, 3.0);
+            let phi = rng.uniform(0.0, 6.28);
+            let f1 = eval_sh_series(&x1, l, theta, phi);
+            let f2 = eval_sh_series(&x2, l, theta, phi);
+            let f3 = eval_sh_series(&x3, 2 * l, theta, phi);
+            assert!((f3 - f1 * f2).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn weighted_variant() {
+        let mut rng = Rng::new(5);
+        let l = 2;
+        let x1 = rng.normals(num_coeffs(l));
+        let x2 = rng.normals(num_coeffs(l));
+        let w1 = rng.normals(l + 1);
+        let w2 = rng.normals(l + 1);
+        let w3 = rng.normals(2 * l + 1);
+        let plan = GauntPlan::new(l, l, 2 * l, ConvMethod::Direct);
+        let got = plan.apply_weighted(&x1, &w1, &x2, &w2, &w3);
+        // reference: weight the direct contraction per (l1,l2,l3) block
+        let g = gaunt_tensor_real(l, l, 2 * l);
+        let (n1, n2, n3) = (num_coeffs(l), num_coeffs(l), num_coeffs(2 * l));
+        let mut want = vec![0.0; n3];
+        for l3 in 0..=(2 * l) {
+            for m3 in -(l3 as i64)..=(l3 as i64) {
+                let k = lm_index(l3, m3);
+                for l1 in 0..=l {
+                    for m1 in -(l1 as i64)..=(l1 as i64) {
+                        let i = lm_index(l1, m1);
+                        for l2 in 0..=l {
+                            for m2 in -(l2 as i64)..=(l2 as i64) {
+                                let j = lm_index(l2, m2);
+                                want[k] += w1[l1] * w2[l2] * w3[l3]
+                                    * g[(k * n1 + i) * n2 + j]
+                                    * x1[i] * x2[j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert!(max_abs_diff(&got, &want) < 1e-9);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::new(6);
+        let plan = GauntPlan::new(2, 2, 2, ConvMethod::Auto);
+        let n = num_coeffs(2);
+        let rows = 5;
+        let x1 = rng.normals(rows * n);
+        let x2 = rng.normals(rows * n);
+        let batch = plan.apply_batch(&x1, &x2, rows);
+        for r in 0..rows {
+            let single = plan.apply(&x1[r * n..(r + 1) * n], &x2[r * n..(r + 1) * n]);
+            assert!(max_abs_diff(&batch[r * n..(r + 1) * n], &single) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn truncation_matches_projection() {
+        let mut rng = Rng::new(7);
+        let x1 = rng.normals(num_coeffs(3));
+        let x2 = rng.normals(num_coeffs(2));
+        let full = GauntPlan::new(3, 2, 5, ConvMethod::Fft).apply(&x1, &x2);
+        let trunc = GauntPlan::new(3, 2, 2, ConvMethod::Fft).apply(&x1, &x2);
+        assert!(max_abs_diff(&trunc, &full[..num_coeffs(2)]) < 1e-10);
+    }
+}

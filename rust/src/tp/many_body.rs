@@ -1,0 +1,381 @@
+//! Equivariant Many-body Interactions: nu-fold tensor products
+//! (paper Sec. 3.3 + Appendix C).
+//!
+//! Three evaluation strategies, matching the paper's comparison:
+//!
+//! * [`many_body_cg_fold`] — e3nn-style left fold of pairwise CG products
+//!   with growing intermediate degree (the slow baseline),
+//! * [`MaceStylePlan`] — MACE-style: precompute the *composed* coupling
+//!   tensor C[k, i1..i_nu] once and contract (fast apply, memory grows as
+//!   O(n^nu) — the "trades space for speed" row of Table 2),
+//! * [`many_body_gaunt`] — the paper's method: convert once, chain 2D
+//!   convolutions in the Fourier domain (sequential or divide-and-conquer
+//!   order), project back once.
+
+use crate::fourier::complex::C64;
+use crate::fourier::conv::conv2d_direct;
+use crate::so3::gaunt::gaunt_tensor_real;
+use crate::tp::cg::CgPlan;
+use crate::tp::gaunt::GauntPlan;
+use crate::fourier::tables::{f2sh_panels, sh2f_panels};
+use crate::num_coeffs;
+
+/// e3nn-style fold: ((x1 (x) x2) (x) x3) ... with CG couplings, keeping all
+/// intermediate degrees up to `cap` (= min(sum of degrees, l_cap)).
+pub fn many_body_cg_fold(xs: &[Vec<f64>], l: usize, l_out: usize,
+                         l_cap: usize) -> Vec<f64> {
+    assert!(!xs.is_empty());
+    let mut acc = xs[0].clone();
+    let mut l_acc = l;
+    for x in &xs[1..] {
+        let l_next = (l_acc + l).min(l_cap);
+        let plan = CgPlan::new(l_acc, l, l_next);
+        acc = plan.apply_sparse(&acc, x);
+        l_acc = l_next;
+    }
+    acc.truncate(num_coeffs(l_out));
+    acc
+}
+
+/// Gaunt-parameterized fold (same shape, Gaunt couplings) — the oracle for
+/// the Fourier-domain strategies.
+pub fn many_body_gaunt_fold(xs: &[Vec<f64>], l: usize, l_out: usize) -> Vec<f64> {
+    assert!(!xs.is_empty());
+    let mut acc = xs[0].clone();
+    let mut l_acc = l;
+    for x in &xs[1..] {
+        let plan = GauntPlan::new(l_acc, l, l_acc + l,
+                                  crate::tp::ConvMethod::Auto);
+        acc = plan.apply(&acc, x);
+        l_acc += l;
+    }
+    acc.truncate(num_coeffs(l_out));
+    acc
+}
+
+/// The paper's many-body path: sh2f each operand once, convolve the grids
+/// (sequential chain or divide-and-conquer tree), f2sh once at the end.
+pub fn many_body_gaunt(xs: &[Vec<f64>], l: usize, l_out: usize,
+                       divide_and_conquer: bool) -> Vec<f64> {
+    assert!(!xs.is_empty());
+    let nu = xs.len();
+    let panels = sh2f_panels(l);
+    let mut grids: Vec<(Vec<C64>, usize)> = xs
+        .iter()
+        .map(|x| (GauntPlan::sh2f(&panels, x), 2 * l + 1))
+        .collect();
+    let merged = if divide_and_conquer {
+        // pairwise tree reduction
+        while grids.len() > 1 {
+            let mut next = Vec::with_capacity(grids.len().div_ceil(2));
+            let mut it = grids.into_iter();
+            while let Some((a, na)) = it.next() {
+                match it.next() {
+                    Some((b, nb)) => {
+                        let out = conv2d_direct(&a, na, &b, nb);
+                        next.push((out, na + nb - 1));
+                    }
+                    None => next.push((a, na)),
+                }
+            }
+            grids = next;
+        }
+        grids.pop().unwrap()
+    } else {
+        let mut it = grids.into_iter();
+        let (mut acc, mut n) = it.next().unwrap();
+        for (b, nb) in it {
+            acc = conv2d_direct(&acc, n, &b, nb);
+            n = n + nb - 1;
+        }
+        (acc, n)
+    };
+    let (grid, n_side) = merged;
+    let n_grid = (n_side - 1) / 2;
+    debug_assert_eq!(n_grid, nu * l);
+    let t3 = f2sh_panels(l_out, n_grid);
+    f2sh_apply_panels(&t3, &grid, l_out, n_grid)
+}
+
+fn f2sh_apply_panels(
+    t3: &crate::fourier::tables::F2shPanels, grid: &[C64], l_out: usize,
+    n: usize,
+) -> Vec<f64> {
+    let nu = 2 * n + 1;
+    let mut x = vec![0.0; num_coeffs(l_out)];
+    let pi = std::f64::consts::PI;
+    let s2pi = std::f64::consts::SQRT_2 * pi;
+    for s in 0..=l_out {
+        let t = &t3.panels[s];
+        for l in s..=l_out {
+            let trow = &t[l * nu..(l + 1) * nu];
+            if s == 0 {
+                let mut acc = 0.0;
+                for u in 0..nu {
+                    let g = grid[u * nu + n];
+                    acc += trow[u].re * g.re - trow[u].im * g.im;
+                }
+                x[crate::lm_index(l, 0)] = 2.0 * pi * acc;
+            } else {
+                let mut accp = 0.0;
+                let mut accm = 0.0;
+                for u in 0..nu {
+                    let gp = grid[u * nu + n + s];
+                    let gm = grid[u * nu + n - s];
+                    let sp = gp + gm;
+                    let sm = gp - gm;
+                    accp += trow[u].re * sp.re - trow[u].im * sp.im;
+                    accm += -(trow[u].im * sm.re + trow[u].re * sm.im);
+                }
+                x[crate::lm_index(l, s as i64)] = s2pi * accp;
+                x[crate::lm_index(l, -(s as i64))] = s2pi * accm;
+            }
+        }
+    }
+    x
+}
+
+/// MACE-style precomputed composite coupling: C[k, i1, ..., i_nu] built by
+/// composing pairwise Gaunt tensors once; apply is a dense contraction.
+/// Memory O(n_out * n^nu) — the space-for-speed trade of Table 2.
+pub struct MaceStylePlan {
+    pub nu: usize,
+    pub l: usize,
+    pub l_out: usize,
+    n_in: usize,
+    n_out: usize,
+    /// tensor[k * n^nu + multi-index(i1..i_nu)]
+    tensor: Vec<f64>,
+}
+
+impl MaceStylePlan {
+    pub fn new(nu: usize, l: usize, l_out: usize) -> Self {
+        assert!(nu >= 2);
+        let n_in = num_coeffs(l);
+        // start with pairwise tensor to degree 2l, then absorb one operand
+        // at a time (intermediate degree grows exactly, no truncation until
+        // the last step).
+        let mut l_acc = 2 * l;
+        let mut t = gaunt_tensor_real(l, l, l_acc); // [k, i, j]
+        let mut rank = 2usize;
+        while rank < nu {
+            let l_next = if rank + 1 == nu { l_out } else { l_acc + l };
+            let g = gaunt_tensor_real(l_acc, l, l_next); // [k2, p, i_new]
+            let n_acc = num_coeffs(l_acc);
+            let n_next = num_coeffs(l_next);
+            let width = n_in.pow(rank as u32);
+            let mut t2 = vec![0.0; n_next * width * n_in];
+            for k2 in 0..n_next {
+                for p in 0..n_acc {
+                    for inew in 0..n_in {
+                        let gv = g[(k2 * n_acc + p) * n_in + inew];
+                        if gv == 0.0 {
+                            continue;
+                        }
+                        let src = &t[p * width..(p + 1) * width];
+                        let dst = &mut t2
+                            [(k2 * width * n_in)..((k2 + 1) * width * n_in)];
+                        for (w, sv) in src.iter().enumerate() {
+                            if *sv != 0.0 {
+                                dst[w * n_in + inew] += gv * sv;
+                            }
+                        }
+                    }
+                }
+            }
+            t = t2;
+            l_acc = l_next;
+            rank += 1;
+        }
+        // if nu == 2, truncate the pairwise tensor to l_out
+        let (tensor, l_final) = if nu == 2 {
+            let n_out = num_coeffs(l_out);
+            (t[..n_out * n_in * n_in].to_vec(), l_out)
+        } else {
+            (t, l_acc)
+        };
+        debug_assert_eq!(l_final, l_out);
+        MaceStylePlan {
+            nu,
+            l,
+            l_out,
+            n_in,
+            n_out: num_coeffs(l_out),
+            tensor,
+        }
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.tensor.len() * std::mem::size_of::<f64>()
+    }
+
+    /// Contract against nu copies (here: the same feature, as in MACE's
+    /// B-features) — specialized for nu in 2..=4.
+    pub fn apply_self(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.n_in;
+        let mut out = vec![0.0; self.n_out];
+        match self.nu {
+            2 => {
+                for k in 0..self.n_out {
+                    let blk = &self.tensor[k * n * n..(k + 1) * n * n];
+                    let mut acc = 0.0;
+                    for i in 0..n {
+                        if x[i] == 0.0 {
+                            continue;
+                        }
+                        let row = &blk[i * n..(i + 1) * n];
+                        let mut s = 0.0;
+                        for j in 0..n {
+                            s += row[j] * x[j];
+                        }
+                        acc += x[i] * s;
+                    }
+                    out[k] = acc;
+                }
+            }
+            3 => {
+                let w = n * n * n;
+                for k in 0..self.n_out {
+                    let blk = &self.tensor[k * w..(k + 1) * w];
+                    let mut acc = 0.0;
+                    for i in 0..n {
+                        let xi = x[i];
+                        if xi == 0.0 {
+                            continue;
+                        }
+                        for j in 0..n {
+                            let xij = xi * x[j];
+                            if xij == 0.0 {
+                                continue;
+                            }
+                            let row = &blk[(i * n + j) * n..(i * n + j + 1) * n];
+                            let mut s = 0.0;
+                            for p in 0..n {
+                                s += row[p] * x[p];
+                            }
+                            acc += xij * s;
+                        }
+                    }
+                    out[k] = acc;
+                }
+            }
+            4 => {
+                let w = n * n * n * n;
+                for k in 0..self.n_out {
+                    let blk = &self.tensor[k * w..(k + 1) * w];
+                    let mut acc = 0.0;
+                    for i in 0..n {
+                        let xi = x[i];
+                        if xi == 0.0 {
+                            continue;
+                        }
+                        for j in 0..n {
+                            let xij = xi * x[j];
+                            for p in 0..n {
+                                let xijp = xij * x[p];
+                                if xijp == 0.0 {
+                                    continue;
+                                }
+                                let row = &blk[((i * n + j) * n + p) * n..];
+                                let mut s = 0.0;
+                                for q in 0..n {
+                                    s += row[q] * x[q];
+                                }
+                                acc += xijp * s;
+                            }
+                        }
+                    }
+                    out[k] = acc;
+                }
+            }
+            _ => panic!("MaceStylePlan supports nu in 2..=4"),
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::max_abs_diff;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gaunt_grid_chain_matches_fold() {
+        let mut rng = Rng::new(0);
+        let l = 1usize;
+        for nu in 2..=4usize {
+            let xs: Vec<Vec<f64>> =
+                (0..nu).map(|_| rng.normals(num_coeffs(l))).collect();
+            let want = many_body_gaunt_fold(&xs, l, 2);
+            let seq = many_body_gaunt(&xs, l, 2, false);
+            let dc = many_body_gaunt(&xs, l, 2, true);
+            assert!(max_abs_diff(&want, &seq) < 1e-9, "seq nu={nu}");
+            assert!(max_abs_diff(&want, &dc) < 1e-9, "dc nu={nu}");
+        }
+    }
+
+    #[test]
+    fn dc_equals_sequential_l2() {
+        let mut rng = Rng::new(1);
+        let l = 2usize;
+        let xs: Vec<Vec<f64>> =
+            (0..3).map(|_| rng.normals(num_coeffs(l))).collect();
+        let seq = many_body_gaunt(&xs, l, 2, false);
+        let dc = many_body_gaunt(&xs, l, 2, true);
+        assert!(max_abs_diff(&seq, &dc) < 1e-9);
+    }
+
+    #[test]
+    fn mace_style_matches_gaunt_fold() {
+        let mut rng = Rng::new(2);
+        for (nu, l) in [(2usize, 2usize), (3, 1), (3, 2), (4, 1)] {
+            let x = rng.normals(num_coeffs(l));
+            let xs: Vec<Vec<f64>> = (0..nu).map(|_| x.clone()).collect();
+            let want = many_body_gaunt_fold(&xs, l, l);
+            let plan = MaceStylePlan::new(nu, l, l);
+            let got = plan.apply_self(&x);
+            assert!(max_abs_diff(&got, &want) < 1e-8,
+                    "nu={nu} l={l}: {}", max_abs_diff(&got, &want));
+        }
+    }
+
+    #[test]
+    fn mace_style_memory_grows() {
+        let m2 = MaceStylePlan::new(2, 1, 2).memory_bytes();
+        let m3 = MaceStylePlan::new(3, 1, 2).memory_bytes();
+        assert!(m3 > 2 * m2);
+    }
+
+    #[test]
+    fn cg_fold_differs_from_gaunt_fold() {
+        // CG keeps odd-parity paths; the two many-body features disagree
+        let mut rng = Rng::new(3);
+        let l = 1usize;
+        let xs: Vec<Vec<f64>> =
+            (0..3).map(|_| rng.normals(num_coeffs(l))).collect();
+        let cg = many_body_cg_fold(&xs, l, 2, 3);
+        let ga = many_body_gaunt_fold(&xs, l, 2);
+        assert!(max_abs_diff(&cg, &ga) > 1e-3);
+    }
+
+    #[test]
+    fn many_body_equivariance() {
+        use crate::so3::linalg::matvec;
+        use crate::so3::rotation::{wigner_d_real_block, Rot3};
+        let mut rng = Rng::new(4);
+        let l = 1usize;
+        let rot = Rot3::random(&mut rng);
+        let d = wigner_d_real_block(l, &rot);
+        let d_out = wigner_d_real_block(2, &rot);
+        let n = num_coeffs(l);
+        let xs: Vec<Vec<f64>> = (0..3).map(|_| rng.normals(n)).collect();
+        let rotated: Vec<Vec<f64>> =
+            xs.iter().map(|x| matvec(&d, x, n, n)).collect();
+        let a = many_body_gaunt(&rotated, l, 2, true);
+        let b0 = many_body_gaunt(&xs, l, 2, true);
+        let nn = num_coeffs(2);
+        let b = matvec(&d_out, &b0, nn, nn);
+        assert!(max_abs_diff(&a, &b) < 1e-8);
+    }
+}

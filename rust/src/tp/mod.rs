@@ -1,0 +1,20 @@
+//! Tensor products of irreps — the paper's subject.
+//!
+//! * [`cg`] — the O(L^6) Clebsch-Gordan full tensor product (the e3nn-style
+//!   baseline of Fig. 1), dense and sparse variants.
+//! * [`gaunt`] — the paper's O(L^3) Gaunt Tensor Product: per-|v| panel
+//!   conversions + 2D convolution (direct or FFT).
+//! * [`escn`] — Equivariant Convolutions (feature (x) SH filter): the eSCN
+//!   SO(2)-restriction baseline and the Gaunt-accelerated variant
+//!   (paper Sec. 3.3).
+//! * [`many_body`] — Equivariant Many-body Interactions: nu-fold products,
+//!   sequential vs divide-and-conquer grid-domain evaluation, plus the
+//!   MACE-style precomputed-tensor emulation (trades memory for speed).
+
+pub mod cg;
+pub mod escn;
+pub mod gaunt;
+pub mod many_body;
+
+pub use cg::CgPlan;
+pub use gaunt::{ConvMethod, GauntPlan};

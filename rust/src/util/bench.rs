@@ -1,0 +1,146 @@
+//! Micro-bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are plain `main()` bins (harness = false) that
+//! call [`bench`] / [`BenchTable`]: warmup, adaptive iteration count,
+//! median + MAD reporting, and machine-readable TSV output so the
+//! experiment scripts can regenerate the paper's figures.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+/// One measured result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn pretty(&self) -> String {
+        format!(
+            "{:<44} {:>12}  (±{:>9}, {} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mad_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Measure `f` with warmup; targets ~`budget_ms` of sampling.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> Measurement {
+    // warmup + calibrate
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let budget_ns = (budget_ms as f64) * 1e6;
+    let samples = 15usize;
+    let iters_per_sample =
+        ((budget_ns / once / samples as f64).floor() as usize).clamp(1, 1_000_000);
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters_per_sample {
+            f();
+        }
+        per_iter.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+    }
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = per_iter[per_iter.len() / 2];
+    let mut devs: Vec<f64> = per_iter.iter().map(|x| (x - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    Measurement {
+        name: name.to_string(),
+        median_ns: median,
+        mad_ns: mad,
+        iters: iters_per_sample * samples,
+    }
+}
+
+/// Keep the optimizer honest.
+pub fn consume<T>(x: T) -> T {
+    black_box(x)
+}
+
+/// Collects rows, prints a table, and writes TSV next to the bench.
+pub struct BenchTable {
+    pub title: String,
+    pub rows: Vec<Measurement>,
+}
+
+impl BenchTable {
+    pub fn new(title: &str) -> Self {
+        println!("\n== {title} ==");
+        BenchTable { title: title.to_string(), rows: Vec::new() }
+    }
+
+    pub fn add(&mut self, m: Measurement) {
+        println!("{}", m.pretty());
+        self.rows.push(m);
+    }
+
+    pub fn run<F: FnMut()>(&mut self, name: &str, budget_ms: u64, f: F) {
+        let m = bench(name, budget_ms, f);
+        self.add(m);
+    }
+
+    /// Write `target/bench-results/<file>.tsv`.
+    pub fn write_tsv(&self, file: &str) {
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let mut out = String::from("name\tmedian_ns\tmad_ns\titers\n");
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\n",
+                r.name, r.median_ns, r.mad_ns, r.iters
+            ));
+        }
+        let path = dir.join(format!("{file}.tsv"));
+        if let Err(e) = std::fs::write(&path, out) {
+            eprintln!("warn: could not write {path:?}: {e}");
+        } else {
+            println!("[tsv] {path:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_time() {
+        let m = bench("spin", 5, || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(consume(i));
+            }
+            consume(s);
+        });
+        assert!(m.median_ns > 0.0);
+        assert!(m.iters >= 15);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5.0e4).contains("µs"));
+        assert!(fmt_ns(5.0e7).contains("ms"));
+        assert!(fmt_ns(5.0e9).contains("s"));
+    }
+}

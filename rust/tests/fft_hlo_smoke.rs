@@ -1,0 +1,30 @@
+//! Early toolchain check: XLA 0.5.1 CPU runtime must execute the HLO `fft`
+//! op — the Gaunt Tensor Product fast path multiplies 2D-Fourier
+//! coefficient grids via FFT-based convolution.
+use anyhow::Result;
+
+#[test]
+fn fft_hlo_executes_on_cpu() -> Result<()> {
+    let path = "/tmp/fft_hlo.txt";
+    if !std::path::Path::new(path).exists() {
+        eprintln!("skipping: {path} not present (run python /tmp/fft_check.py)");
+        return Ok(());
+    }
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    // delta at (0,0) convolved with anything = identity
+    let mut x = vec![0f32; 64];
+    x[0] = 1.0;
+    let y: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    let lx = xla::Literal::vec1(&x).reshape(&[8, 8])?;
+    let ly = xla::Literal::vec1(&y).reshape(&[8, 8])?;
+    let out = exe.execute::<xla::Literal>(&[lx, ly])?[0][0]
+        .to_literal_sync()?
+        .to_tuple1()?;
+    let v = out.to_vec::<f32>()?;
+    for (i, (a, b)) in v.iter().zip(y.iter()).enumerate() {
+        assert!((a - b).abs() < 1e-3, "idx {i}: {a} vs {b}");
+    }
+    Ok(())
+}

@@ -1,0 +1,172 @@
+//! Cross-language validation: the native Rust implementation must agree
+//! with the Python build-time implementation on the golden vectors
+//! exported by `python -m compile.aot` (artifacts/golden/so3_golden.json).
+//!
+//! These tests skip gracefully when artifacts are absent (pre-`make
+//! artifacts` checkouts) so `cargo test` stays green everywhere.
+
+use gaunt_tp::fourier::tables::{f2sh_panels, sh2f_panels};
+use gaunt_tp::num_coeffs;
+use gaunt_tp::so3::gaunt::{cg_tensor_real, gaunt_tensor_real};
+use gaunt_tp::so3::rotation::{wigner_d_real_block, Rot3};
+use gaunt_tp::so3::sh::real_sh_all_xyz;
+use gaunt_tp::so3::wigner::wigner_3j;
+use gaunt_tp::tp::{ConvMethod, GauntPlan};
+use gaunt_tp::util::json::{parse, Json};
+
+fn load_golden() -> Option<Json> {
+    let text = std::fs::read_to_string("artifacts/golden/so3_golden.json").ok()?;
+    parse(&text).ok()
+}
+
+macro_rules! golden {
+    ($g:ident) => {
+        match load_golden() {
+            Some(v) => v,
+            None => {
+                eprintln!("skipping: golden vectors not present");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn wigner_3j_matches_python() {
+    let g = golden!(g);
+    let rows = g.get("wigner3j").and_then(Json::as_arr).unwrap();
+    assert!(rows.len() > 50);
+    for row in rows {
+        let v: Vec<f64> = row.as_f64_vec().unwrap();
+        let got = wigner_3j(
+            v[0] as i64, v[1] as i64, v[2] as i64,
+            v[3] as i64, v[4] as i64, v[5] as i64,
+        );
+        assert!(
+            (got - v[6]).abs() < 1e-11,
+            "3j({},{},{};{},{},{}) = {} vs python {}",
+            v[0], v[1], v[2], v[3], v[4], v[5], got, v[6]
+        );
+    }
+}
+
+#[test]
+fn gaunt_tensor_matches_python() {
+    let g = golden!(g);
+    let want = g.get("gaunt_222").and_then(Json::as_f64_vec).unwrap();
+    let got = gaunt_tensor_real(2, 2, 2);
+    assert_eq!(got.len(), want.len());
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-10);
+    }
+}
+
+#[test]
+fn cg_tensor_matches_python() {
+    let g = golden!(g);
+    let want = g.get("cg_222").and_then(Json::as_f64_vec).unwrap();
+    let got = cg_tensor_real(2, 2, 2);
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-10, "idx {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn spherical_harmonics_match_python() {
+    let g = golden!(g);
+    let pts = g.get("sh_points").and_then(Json::as_f64_vec).unwrap();
+    let want = g.get("sh_L3").and_then(Json::as_f64_vec).unwrap();
+    let n = num_coeffs(3);
+    for (p_idx, chunk) in pts.chunks(3).enumerate() {
+        let y = real_sh_all_xyz(3, [chunk[0], chunk[1], chunk[2]]);
+        for k in 0..n {
+            assert!(
+                (y[k] - want[p_idx * n + k]).abs() < 1e-10,
+                "point {p_idx} coeff {k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sh2f_panels_match_python() {
+    let g = golden!(g);
+    let re = g.get("sh2f_panels_L3_re").and_then(Json::as_f64_vec).unwrap();
+    let im = g.get("sh2f_panels_L3_im").and_then(Json::as_f64_vec).unwrap();
+    let p = sh2f_panels(3);
+    // python layout: [s, u, l] over (4, 7, 4)
+    let (nu, nl) = (7usize, 4usize);
+    for s in 0..4 {
+        for u in 0..nu {
+            for l in 0..nl {
+                let idx = (s * nu + u) * nl + l;
+                let c = p.panels[s][u * nl + l];
+                assert!((c.re - re[idx]).abs() < 1e-10, "re s={s} u={u} l={l}");
+                assert!((c.im - im[idx]).abs() < 1e-10, "im s={s} u={u} l={l}");
+            }
+        }
+    }
+}
+
+#[test]
+fn f2sh_panels_match_python() {
+    let g = golden!(g);
+    let re = g.get("f2sh_panels_L3_N6_re").and_then(Json::as_f64_vec).unwrap();
+    let im = g.get("f2sh_panels_L3_N6_im").and_then(Json::as_f64_vec).unwrap();
+    let t = f2sh_panels(3, 6);
+    // python layout: [s, l, u] over (4, 4, 13)
+    let (nl, nu) = (4usize, 13usize);
+    for s in 0..4 {
+        for l in 0..nl {
+            for u in 0..nu {
+                let idx = (s * nl + l) * nu + u;
+                let c = t.panels[s][l * nu + u];
+                assert!((c.re - re[idx]).abs() < 1e-10, "re s={s} l={l} u={u}");
+                assert!((c.im - im[idx]).abs() < 1e-10, "im s={s} l={l} u={u}");
+            }
+        }
+    }
+}
+
+#[test]
+fn gaunt_tp_io_pairs_match_python() {
+    let g = golden!(g);
+    let x1 = g.get("tp_x1").and_then(Json::as_f64_vec).unwrap();
+    let x2 = g.get("tp_x2").and_then(Json::as_f64_vec).unwrap();
+    let y3 = g.get("tp_y_L3").and_then(Json::as_f64_vec).unwrap();
+    let y6 = g.get("tp_y_L6").and_then(Json::as_f64_vec).unwrap();
+    let n = num_coeffs(3);
+    let plan3 = GauntPlan::new(3, 3, 3, ConvMethod::Fft);
+    let plan6 = GauntPlan::new(3, 3, 6, ConvMethod::Direct);
+    for r in 0..3 {
+        let a = &x1[r * n..(r + 1) * n];
+        let b = &x2[r * n..(r + 1) * n];
+        let got3 = plan3.apply(a, b);
+        for k in 0..n {
+            assert!((got3[k] - y3[r * n + k]).abs() < 1e-9);
+        }
+        let got6 = plan6.apply(a, b);
+        let n6 = num_coeffs(6);
+        for k in 0..n6 {
+            assert!((got6[k] - y6[r * n6 + k]).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn wigner_d_matches_python() {
+    let g = golden!(g);
+    let rot_flat = g.get("rot").and_then(Json::as_f64_vec).unwrap();
+    let want = g.get("wigner_d_block_L2").and_then(Json::as_f64_vec).unwrap();
+    let rot = Rot3([
+        [rot_flat[0], rot_flat[1], rot_flat[2]],
+        [rot_flat[3], rot_flat[4], rot_flat[5]],
+        [rot_flat[6], rot_flat[7], rot_flat[8]],
+    ]);
+    let got = wigner_d_real_block(2, &rot);
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-8, "idx {i}: {a} vs {b}");
+    }
+}

@@ -1,0 +1,247 @@
+//! Integration tests over the PJRT runtime + coordinator with the real
+//! compiled artifacts.  Each test skips gracefully when `artifacts/` has
+//! not been built yet.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gaunt_tp::coordinator::batcher::BatchPolicy;
+use gaunt_tp::coordinator::{ForceFieldServer, ServerConfig, Trainer};
+use gaunt_tp::data::{gen_bpa_dataset, PaddedBatch};
+use gaunt_tp::experiments::ff_batch_tensors;
+use gaunt_tp::num_coeffs;
+use gaunt_tp::runtime::{Engine, Tensor};
+use gaunt_tp::tp::{CgPlan, ConvMethod, GauntPlan};
+use gaunt_tp::util::rng::Rng;
+
+fn engine() -> Option<Arc<Engine>> {
+    match Engine::new("artifacts") {
+        Ok(e) => Some(Arc::new(e)),
+        Err(err) => {
+            eprintln!("skipping (no artifacts): {err}");
+            None
+        }
+    }
+}
+
+#[test]
+fn gaunt_kernel_artifact_matches_native() {
+    let Some(engine) = engine() else { return };
+    let exe = match engine.load("gaunt_tp_L3_B64") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let n = num_coeffs(3);
+    let mut rng = Rng::new(42);
+    let x1: Vec<f32> = rng.normals_f32(64 * n);
+    let x2: Vec<f32> = rng.normals_f32(64 * n);
+    let out = exe
+        .run(&[Tensor::F32(x1.clone()), Tensor::F32(x2.clone())])
+        .unwrap();
+    let y = out[0].as_f32().unwrap();
+    let plan = GauntPlan::new(3, 3, 3, ConvMethod::Fft);
+    for r in [0usize, 17, 63] {
+        let a: Vec<f64> = x1[r * n..(r + 1) * n].iter().map(|&v| v as f64).collect();
+        let b: Vec<f64> = x2[r * n..(r + 1) * n].iter().map(|&v| v as f64).collect();
+        let want = plan.apply(&a, &b);
+        for k in 0..n {
+            assert!(
+                (y[r * n + k] as f64 - want[k]).abs() < 2e-4,
+                "row {r} coeff {k}: {} vs {}",
+                y[r * n + k],
+                want[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn cg_kernel_artifact_matches_native() {
+    let Some(engine) = engine() else { return };
+    let exe = match engine.load("cg_tp_L2_B64") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let n = num_coeffs(2);
+    let mut rng = Rng::new(7);
+    let x1: Vec<f32> = rng.normals_f32(64 * n);
+    let x2: Vec<f32> = rng.normals_f32(64 * n);
+    let out = exe
+        .run(&[Tensor::F32(x1.clone()), Tensor::F32(x2.clone())])
+        .unwrap();
+    let y = out[0].as_f32().unwrap();
+    let plan = CgPlan::new(2, 2, 2);
+    for r in [0usize, 31] {
+        let a: Vec<f64> = x1[r * n..(r + 1) * n].iter().map(|&v| v as f64).collect();
+        let b: Vec<f64> = x2[r * n..(r + 1) * n].iter().map(|&v| v as f64).collect();
+        let want = plan.apply_sparse(&a, &b);
+        for k in 0..n {
+            assert!((y[r * n + k] as f64 - want[k]).abs() < 2e-4);
+        }
+    }
+}
+
+#[test]
+fn wrong_input_count_rejected() {
+    let Some(engine) = engine() else { return };
+    let Ok(exe) = engine.load("gaunt_tp_L2_B64") else { return };
+    let err = exe.run(&[Tensor::F32(vec![0.0; 64 * 9])]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn wrong_shape_rejected() {
+    let Some(engine) = engine() else { return };
+    let Ok(exe) = engine.load("gaunt_tp_L2_B64") else { return };
+    let err = exe.run(&[
+        Tensor::F32(vec![0.0; 10]),
+        Tensor::F32(vec![0.0; 64 * 9]),
+    ]);
+    assert!(err.is_err(), "shape mismatch must be rejected before PJRT");
+}
+
+#[test]
+fn train_step_decreases_loss() {
+    let Some(engine) = engine() else { return };
+    let mut trainer =
+        match Trainer::new(&engine, "ff_train_step_gaunt", "ff_state_init_gaunt") {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("skipping: {e}");
+                return;
+            }
+        };
+    let graphs = gen_bpa_dataset(&[0.05], 8, 1).remove(0);
+    let pb = PaddedBatch::from_graphs(&graphs, 8, 32, 128, 4.0);
+    let batch = ff_batch_tensors(&pb, true);
+    let first = trainer.step(batch.clone()).unwrap();
+    for _ in 0..15 {
+        trainer.step(batch.clone()).unwrap();
+    }
+    let last = trainer.step(batch).unwrap();
+    assert!(
+        last < first,
+        "loss should decrease on a fixed batch: {first} -> {last}"
+    );
+}
+
+#[test]
+fn forces_are_negative_energy_gradient_through_stack() {
+    // finite-difference check END TO END: perturb one coordinate, compare
+    // dE/dx from the fwd artifact against the returned force.
+    let Some(engine) = engine() else { return };
+    let Ok(exe) = engine.load("ff_fwd_B1") else { return };
+    let state: Vec<Tensor> = engine
+        .load_state_blob("ff_state_init")
+        .unwrap()
+        .into_iter()
+        .map(|(_, t)| t)
+        .collect();
+    let graphs = gen_bpa_dataset(&[0.05], 1, 2).remove(0);
+    let run = |pos_override: Option<(usize, usize, f64)>| -> (f64, Vec<f32>) {
+        let mut g = graphs[0].clone();
+        if let Some((atom, axis, delta)) = pos_override {
+            g.pos[atom][axis] += delta;
+        }
+        let pb = PaddedBatch::from_graphs(
+            std::slice::from_ref(&g), 1, 32, 128, 4.0,
+        );
+        let mut inputs = state.clone();
+        inputs.extend(ff_batch_tensors(&pb, false));
+        let out = exe.run(&inputs).unwrap();
+        (
+            out[0].as_f32().unwrap()[0] as f64,
+            out[1].as_f32().unwrap().to_vec(),
+        )
+    };
+    let (_, forces) = run(None);
+    let h = 1e-3;
+    for (atom, axis) in [(0usize, 0usize), (5, 1), (13, 2)] {
+        let (ep, _) = run(Some((atom, axis, h)));
+        let (em, _) = run(Some((atom, axis, -h)));
+        let fd = -(ep - em) / (2.0 * h);
+        let f = forces[(atom * 3 + axis)] as f64;
+        assert!(
+            (f - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+            "atom {atom} axis {axis}: force {f} vs -dE/dx {fd}"
+        );
+    }
+}
+
+#[test]
+fn server_end_to_end() {
+    let Some(engine) = engine() else { return };
+    let server = match ForceFieldServer::start(
+        engine,
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+                max_queue: 256,
+            },
+            n_workers: 2,
+            ..Default::default()
+        },
+    ) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let graphs = gen_bpa_dataset(&[0.05], 20, 3).remove(0);
+    // batched path must agree with single-shot path
+    let single = server
+        .infer_blocking(graphs[0].pos.clone(), graphs[0].species.clone())
+        .unwrap();
+    let rxs: Vec<_> = graphs
+        .iter()
+        .map(|g| server.submit(g.pos.clone(), g.species.clone()).unwrap())
+        .collect();
+    let responses: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().unwrap())
+        .collect();
+    assert_eq!(responses.len(), 20);
+    // request 0 is the same structure as the single-shot call
+    let batched = &responses[0];
+    assert!((batched.energy - single.energy).abs() < 1e-3,
+            "batched vs single energy: {} vs {}", batched.energy, single.energy);
+    for (a, b) in batched.forces.iter().zip(&single.forces) {
+        for k in 0..3 {
+            assert!((a[k] - b[k]).abs() < 1e-3,
+                    "padding/batching must not change results");
+        }
+    }
+    assert!(server.metrics().mean_batch_size() >= 1.0);
+    server.shutdown();
+}
+
+#[test]
+fn nbody_artifacts_run() {
+    let Some(engine) = engine() else { return };
+    for tp in ["gaunt", "cg"] {
+        let name = format!("nbody_fwd_{tp}");
+        let Ok(exe) = engine.load(&name) else {
+            eprintln!("skipping {name}");
+            return;
+        };
+        let inputs: Vec<Tensor> = exe
+            .inputs
+            .iter()
+            .map(|s| match s.dtype {
+                gaunt_tp::runtime::DType::F32 => Tensor::F32(vec![0.1; s.numel()]),
+                gaunt_tp::runtime::DType::I32 => Tensor::I32(vec![0; s.numel()]),
+            })
+            .collect();
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,31 @@
+# Top-level driver for the gaunt-tp repo.
+#
+#   make verify     - the tier-1 gate: release build + full test suite,
+#                     from a clean offline checkout (no network needed)
+#   make build      - release build only
+#   make test       - test suite only
+#   make bench      - run every native bench target
+#   make artifacts  - (needs JAX) AOT-compile the Pallas/XLA artifacts
+#                     with python/compile/aot.py into rust/artifacts/
+
+RUST_DIR := rust
+
+.PHONY: verify build test bench artifacts clean
+
+verify:
+	bash scripts/verify.sh
+
+build:
+	cd $(RUST_DIR) && cargo build --release
+
+test:
+	cd $(RUST_DIR) && cargo test -q
+
+bench:
+	cd $(RUST_DIR) && cargo bench
+
+artifacts:
+	cd python && python -m compile.aot --out ../$(RUST_DIR)/artifacts
+
+clean:
+	cd $(RUST_DIR) && cargo clean

@@ -7,7 +7,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use gaunt_tp::util::error::Result;
 use gaunt_tp::coordinator::batcher::BatchPolicy;
 use gaunt_tp::coordinator::{ForceFieldServer, ServerConfig};
 use gaunt_tp::data::gen_bpa_dataset;

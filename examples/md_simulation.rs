@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use gaunt_tp::util::error::Result;
 use gaunt_tp::coordinator::{ForceFieldServer, ServerConfig};
 use gaunt_tp::md::{Integrator, Molecule, Thermostat};
 use gaunt_tp::runtime::Engine;

@@ -3,7 +3,7 @@
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
-use anyhow::Result;
+use gaunt_tp::util::error::Result;
 use gaunt_tp::runtime::{Engine, Tensor};
 use gaunt_tp::tp::{ConvMethod, GauntPlan};
 use gaunt_tp::util::rng::Rng;

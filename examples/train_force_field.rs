@@ -7,7 +7,7 @@
 //!     make artifacts && cargo run --release --example train_force_field
 //!     [-- --steps 300 --variant gaunt]
 
-use anyhow::Result;
+use gaunt_tp::util::error::Result;
 use gaunt_tp::experiments::{eval_forcefield, train_forcefield};
 use gaunt_tp::data::{gen_adsorbate_dataset, normalize_graphs};
 use gaunt_tp::runtime::Engine;

@@ -9,8 +9,10 @@
 
 use gaunt_tp::num_coeffs;
 use gaunt_tp::runtime::{Engine, Tensor};
+use gaunt_tp::tp::engine::{cg_apply_batch_par, gaunt_apply_batch_par, PlanCache};
 use gaunt_tp::tp::{CgPlan, ConvMethod, GauntPlan};
 use gaunt_tp::util::bench::{consume, BenchTable};
+use gaunt_tp::util::pool;
 use gaunt_tp::util::rng::Rng;
 
 fn main() {
@@ -48,6 +50,35 @@ fn main() {
             consume(gf.apply_batch(&x1, &x2, batch));
         });
     }
+    // engine rows: cached plans + multi-threaded batched apply (the
+    // serving configuration; single-thread rows above are the baseline)
+    let threads = pool::default_threads();
+    let batch_par = 64usize;
+    let cache = PlanCache::global();
+    for l in [2usize, 4, 6, 8] {
+        let n = num_coeffs(l);
+        let x1 = rng.normals(batch_par * n);
+        let x2 = rng.normals(batch_par * n);
+        let gf = cache.gaunt(l, l, l, ConvMethod::Fft);
+        t.run(
+            &format!("gaunt_fft_par   L={l} B={batch_par} x{threads}"),
+            150,
+            || {
+                consume(gaunt_apply_batch_par(&gf, &x1, &x2, batch_par, 0));
+            },
+        );
+        if l <= 6 {
+            let cg = cache.cg(l, l, l);
+            t.run(
+                &format!("cg_sparse_par   L={l} B={batch_par} x{threads}"),
+                150,
+                || {
+                    consume(cg_apply_batch_par(&cg, &x1, &x2, batch_par, 0));
+                },
+            );
+        }
+    }
+
     // compiled end-to-end kernels (same execution stack for both methods)
     if let Ok(engine) = Engine::new("artifacts") {
         let mut rng = Rng::new(1);

@@ -7,10 +7,12 @@
 //! `+rot` rows include it.
 
 use gaunt_tp::num_coeffs;
+use gaunt_tp::tp::engine::{escn_apply_batch_par, PlanCache};
 use gaunt_tp::tp::escn::{EscnPlan, GauntConvPlan};
 use gaunt_tp::tp::{CgPlan, ConvMethod, GauntPlan};
 use gaunt_tp::so3::sh::real_sh_all_xyz;
 use gaunt_tp::util::bench::{consume, BenchTable};
+use gaunt_tp::util::pool;
 use gaunt_tp::util::rng::Rng;
 
 fn main() {
@@ -53,6 +55,30 @@ fn main() {
         t.run(&format!("gaunt_full_filter L={l}"), 100, || {
             consume(gfull.apply(&x, &ysh));
         });
+    }
+
+    // batched edge convolution through the engine: a realistic message-
+    // passing layer convolves many edges at once — single-thread vs the
+    // sharded worker pool over cached plans
+    let threads = pool::default_threads();
+    let edges = 64usize;
+    let cache = PlanCache::global();
+    for l in [2usize, 4] {
+        let n = num_coeffs(l);
+        let escn = cache.escn(l, l, l);
+        let h: Vec<f64> = (0..escn.n_paths()).map(|_| 1.0).collect();
+        let xs = rng.normals(edges * n);
+        let dirs: Vec<[f64; 3]> = (0..edges).map(|_| rng.unit3()).collect();
+        t.run(&format!("escn_batch        L={l} E={edges} x1"), 100, || {
+            consume(escn.apply_batch(&xs, &dirs, &h));
+        });
+        t.run(
+            &format!("escn_batch_par    L={l} E={edges} x{threads}"),
+            100,
+            || {
+                consume(escn_apply_batch_par(&escn, &xs, &dirs, &h, 0));
+            },
+        );
     }
     t.write_tsv("fig1b");
 }

@@ -5,10 +5,15 @@
 
 use gaunt_tp::data::{gen_bpa_dataset, PaddedBatch};
 use gaunt_tp::experiments::ff_batch_tensors;
+use gaunt_tp::num_coeffs;
 use gaunt_tp::runtime::Engine;
+use gaunt_tp::tp::engine::{gaunt_apply_batch_par, PlanCache};
 use gaunt_tp::tp::many_body::MaceStylePlan;
+use gaunt_tp::tp::ConvMethod;
 use gaunt_tp::fourier::tables::{f2sh_panels, sh2f_panels};
 use gaunt_tp::util::bench::{consume, BenchTable};
+use gaunt_tp::util::pool;
+use gaunt_tp::util::rng::Rng;
 
 fn main() {
     let mut t = BenchTable::new("table2: train-step speed (batch 8) + memory");
@@ -39,6 +44,40 @@ fn main() {
         }
         Err(e) => println!("(artifacts missing: {e})"),
     }
+
+    // batched-TP speed: single-thread vs the engine's sharded worker pool
+    // over cached plans (the serving configuration) — the native speed
+    // rows of Table 2
+    let threads = pool::default_threads();
+    let rows = 128usize;
+    let mut rng = Rng::new(0);
+    let mut tp = BenchTable::new(&format!(
+        "table2: batched Gaunt TP, rows={rows}, 1 vs {threads} threads"
+    ));
+    for l in [2usize, 4, 6] {
+        let n = num_coeffs(l);
+        let x1 = rng.normals(rows * n);
+        let x2 = rng.normals(rows * n);
+        let plan = PlanCache::global().gaunt(l, l, l, ConvMethod::Auto);
+        tp.run(&format!("gaunt_batch     L={l} x1"), 300, || {
+            consume(plan.apply_batch(&x1, &x2, rows));
+        });
+        tp.run(&format!("gaunt_batch_par L={l} x{threads}"), 300, || {
+            consume(gaunt_apply_batch_par(&plan, &x1, &x2, rows, 0));
+        });
+    }
+    println!("\n-- multi-thread speedup (rows/s ratio) --");
+    for pair in tp.rows.chunks(2) {
+        if pair.len() == 2 {
+            println!(
+                "{:<32} -> {:<32} speedup {:.2}x",
+                pair[0].name,
+                pair[1].name,
+                pair[0].median_ns / pair[1].median_ns
+            );
+        }
+    }
+    tp.write_tsv("table2_tp_scaling");
 
     // memory: MACE-style composite coupling tensors vs Gaunt tables
     println!("\n-- memory footprint (nu=3 many-body) --");

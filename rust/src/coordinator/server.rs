@@ -1,5 +1,13 @@
 //! The force-field serving coordinator: worker pool over the dynamic
 //! batcher, routing each flushed batch to the smallest compiled variant.
+//!
+//! Inference is pluggable through [`Backend`]: the production path runs
+//! compiled PJRT artifacts ([`ForceFieldServer::start`]); the native path
+//! ([`ForceFieldServer::start_native`]) serves an analytic equivariant
+//! surrogate evaluated entirely with the native O(L^3) Gaunt pipeline —
+//! every batch goes through [`PlanCache`] and the multi-threaded batched
+//! TP of [`crate::tp::engine`], so the full coordinator stack (batcher ->
+//! router -> worker pool -> backend) is exercisable offline.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -7,14 +15,18 @@ use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
-
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::request::{Envelope, ForceRequest, ForceResponse};
 use super::router::{Router, Variant};
 use crate::data::{Graph, PaddedBatch};
-use crate::runtime::{Engine, Executable, Tensor};
+use crate::err;
+use crate::num_coeffs;
+use crate::runtime::{Engine, Tensor};
+use crate::so3::sh::real_sh_all_xyz;
+use crate::tp::engine::{gaunt_apply_batch_par, PlanCache};
+use crate::tp::ConvMethod;
+use crate::util::error::Result;
 use crate::util::json::Json;
 
 /// Server configuration.
@@ -42,8 +54,155 @@ impl Default for ServerConfig {
     }
 }
 
-struct Shared {
+/// Pluggable batched inference: one padded batch in, flat `(energy [B],
+/// forces [B*N*3])` f32 buffers out.  Implementations must be pure per
+/// occupied row (padding rows must not change occupied rows' results).
+pub trait Backend: Send + Sync {
+    /// Run one padded batch through `variant`.
+    fn run(
+        &self, variant: &Variant, pb: &PaddedBatch, state: &[Tensor],
+    ) -> Result<(Vec<f32>, Vec<f32>)>;
+}
+
+/// The compiled-artifact backend (PJRT executables).
+struct XlaBackend {
     engine: Arc<Engine>,
+}
+
+impl Backend for XlaBackend {
+    fn run(
+        &self, variant: &Variant, pb: &PaddedBatch, state: &[Tensor],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let exe = self.engine.load(&variant.name)?;
+        let mut inputs: Vec<Tensor> = state.to_vec();
+        inputs.push(Tensor::F32(pb.pos.clone()));
+        inputs.push(Tensor::I32(pb.species.clone()));
+        inputs.push(Tensor::I32(pb.edges.clone()));
+        inputs.push(Tensor::F32(pb.edge_mask.clone()));
+        inputs.push(Tensor::F32(pb.atom_mask.clone()));
+        let outputs = exe.run(&inputs)?;
+        let energy = outputs[0].as_f32()?.to_vec();
+        let forces = outputs[1].as_f32()?.to_vec();
+        Ok((energy, forces))
+    }
+}
+
+/// Native Gaunt-TP backend: a fixed (untrained but exactly equivariant)
+/// analytic model served without any compiled artifact.
+///
+/// Per atom i: a feature `h_i = sum_j w(r_ij) Y(r_ij_hat)` over masked
+/// edges, then the rotation-invariant atomic energy `e_i` is the l=0
+/// channel of the **batched Gaunt self-product** `h_i (x) h_i` — computed
+/// for every atom of every graph in the flushed batch with one
+/// [`gaunt_apply_batch_par`] call through the global [`PlanCache`].
+/// Forces are pair terms `c(r) (1 + e_i + e_j) r_hat_ij`: the scalar is
+/// symmetric under i <-> j while the direction flips, so the reverse edge
+/// contributes the exact opposite force — they rotate with the structure
+/// and sum to zero.
+pub struct NativeGauntBackend {
+    /// feature degree L of the per-atom spherical-harmonic features
+    pub l: usize,
+    /// worker threads for the batched TP (0 = all cores)
+    pub threads: usize,
+    /// per-species energy offset scale
+    pub species_scale: f64,
+}
+
+impl Default for NativeGauntBackend {
+    fn default() -> Self {
+        NativeGauntBackend { l: 2, threads: 0, species_scale: 0.1 }
+    }
+}
+
+impl Backend for NativeGauntBackend {
+    fn run(
+        &self, _variant: &Variant, pb: &PaddedBatch, _state: &[Tensor],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if pb.dropped_edges > 0 {
+            // a one-directional drop would break the reverse-edge force
+            // cancellation — fail loudly instead of answering wrongly
+            return Err(err!(
+                "native backend: {} edges exceeded the {}-slot budget; \
+                 refusing to serve a truncated (asymmetric) edge list",
+                pb.dropped_edges, pb.n_edges
+            ));
+        }
+        let n_feat = num_coeffs(self.l);
+        let plan =
+            PlanCache::global().gaunt(self.l, self.l, self.l, ConvMethod::Auto);
+        let (b, n_atoms, n_edges) = (pb.b, pb.n_atoms, pb.n_edges);
+        // decode the masked edge list once: (graph, i, j, displacement, r^2)
+        let mut edges: Vec<(usize, usize, usize, [f64; 3], f64)> = Vec::new();
+        for g in 0..b {
+            for e in 0..n_edges {
+                if pb.edge_mask[g * n_edges + e] == 0.0 {
+                    continue;
+                }
+                let i = pb.edges[(g * n_edges + e) * 2] as usize;
+                let j = pb.edges[(g * n_edges + e) * 2 + 1] as usize;
+                let bi = (g * n_atoms + i) * 3;
+                let bj = (g * n_atoms + j) * 3;
+                let d = [
+                    (pb.pos[bi] - pb.pos[bj]) as f64,
+                    (pb.pos[bi + 1] - pb.pos[bj + 1]) as f64,
+                    (pb.pos[bi + 2] - pb.pos[bj + 2]) as f64,
+                ];
+                let r2 = d[0] * d[0] + d[1] * d[1] + d[2] * d[2];
+                edges.push((g, i, j, d, r2));
+            }
+        }
+        // 1. per-atom SH features accumulated over the edge list
+        let mut feats = vec![0.0f64; b * n_atoms * n_feat];
+        for &(g, i, _j, d, r2) in &edges {
+            let w = 1.0 / (1.0 + r2);
+            let y = real_sh_all_xyz(self.l, d);
+            let row = &mut feats
+                [(g * n_atoms + i) * n_feat..(g * n_atoms + i + 1) * n_feat];
+            for (rv, yv) in row.iter_mut().zip(&y) {
+                *rv += w * yv;
+            }
+        }
+        // 2. one multi-threaded batched Gaunt self-TP over all atom rows
+        //    (zero padding rows stay exactly zero)
+        let rows = b * n_atoms;
+        let tp = gaunt_apply_batch_par(&plan, &feats, &feats, rows, self.threads);
+        // 3. invariant atomic energies -> per-graph energy
+        let mut e_atom = vec![0.0f64; rows];
+        let mut energy = vec![0.0f32; b];
+        for g in 0..b {
+            let mut acc = 0.0f64;
+            for a in 0..n_atoms {
+                if pb.atom_mask[g * n_atoms + a] == 0.0 {
+                    continue;
+                }
+                let e = tp[(g * n_atoms + a) * n_feat];
+                e_atom[g * n_atoms + a] = e;
+                let s = pb.species[g * n_atoms + a] as f64;
+                acc += self.species_scale * (s + 1.0) + e;
+            }
+            energy[g] = acc as f32;
+        }
+        // 4. equivariant pair forces from the same decoded edge list
+        let mut forces = vec![0.0f32; b * n_atoms * 3];
+        for &(g, i, j, d, r2) in &edges {
+            let r = r2.sqrt().max(1e-12);
+            let c = 1.0 / (1.0 + r2);
+            // symmetric scalar x antisymmetric direction => Newton's
+            // third law holds exactly for the directed edge pair
+            let s_pair = 1.0
+                + e_atom[g * n_atoms + i]
+                + e_atom[g * n_atoms + j];
+            let bi = (g * n_atoms + i) * 3;
+            for k in 0..3 {
+                forces[bi + k] += (c * s_pair * d[k] / r) as f32;
+            }
+        }
+        Ok((energy, forces))
+    }
+}
+
+struct Shared {
+    backend: Arc<dyn Backend>,
     router: Router,
     /// model + optimizer state tensors, in artifact input order
     state: RwLock<Arc<Vec<Tensor>>>,
@@ -63,7 +222,7 @@ pub struct ForceFieldServer {
 
 impl ForceFieldServer {
     /// Discover `ff_fwd_B*` variants in the manifest, load parameters, and
-    /// spawn the worker pool.
+    /// spawn the worker pool over the compiled-artifact backend.
     pub fn start(engine: Arc<Engine>, cfg: ServerConfig) -> Result<Self> {
         let mut variants = Vec::new();
         let mut n_atoms = 0usize;
@@ -82,7 +241,7 @@ impl ForceFieldServer {
             }
         }
         if variants.is_empty() {
-            return Err(anyhow!(
+            return Err(err!(
                 "no '{}*' artifacts found (run `make artifacts`)",
                 cfg.variant_prefix
             ));
@@ -96,8 +255,33 @@ impl ForceFieldServer {
             .into_iter()
             .map(|(_, t)| t)
             .collect();
+        let backend: Arc<dyn Backend> = Arc::new(XlaBackend { engine });
+        Self::start_with_backend(backend, variants, state, n_atoms, n_edges, cfg)
+    }
+
+    /// Spawn the worker pool over the native Gaunt-TP backend — no
+    /// compiled artifacts required; every flushed batch runs through the
+    /// global [`PlanCache`] and the multi-threaded batched TP.
+    pub fn start_native(
+        backend: NativeGauntBackend, cfg: ServerConfig,
+    ) -> Result<Self> {
+        let variants = vec![
+            Variant { name: "native_B1".to_string(), batch: 1 },
+            Variant { name: "native_B4".to_string(), batch: 4 },
+            Variant { name: "native_B8".to_string(), batch: 8 },
+        ];
+        let backend: Arc<dyn Backend> = Arc::new(backend);
+        // 256 edge slots: a fully connected 16-atom structure fits with no
+        // truncation, keeping the directed edge list exactly symmetric
+        Self::start_with_backend(backend, variants, Vec::new(), 32, 256, cfg)
+    }
+
+    fn start_with_backend(
+        backend: Arc<dyn Backend>, variants: Vec<Variant>, state: Vec<Tensor>,
+        n_atoms: usize, n_edges: usize, cfg: ServerConfig,
+    ) -> Result<Self> {
         let shared = Arc::new(Shared {
-            engine: engine.clone(),
+            backend,
             router: Router::new(variants),
             state: RwLock::new(Arc::new(state)),
             metrics: Metrics::new(),
@@ -132,11 +316,23 @@ impl ForceFieldServer {
     }
 
     /// Submit asynchronously; the receiver yields the response.
+    ///
+    /// Structures larger than the server's static atom capacity are
+    /// rejected here — padding would otherwise silently truncate them.
     pub fn submit(
         &self,
         pos: Vec<[f64; 3]>,
         species: Vec<usize>,
     ) -> Result<Receiver<Result<ForceResponse, String>>> {
+        if pos.len() > self.shared.n_atoms {
+            self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(err!(
+                "structure has {} atoms, server capacity is {} \
+                 (see max_atoms())",
+                pos.len(),
+                self.shared.n_atoms
+            ));
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         let env = Envelope {
@@ -147,7 +343,7 @@ impl ForceFieldServer {
         self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
         self.batcher.push(env).map_err(|_| {
             self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            anyhow!("queue full (backpressure) or server closed")
+            err!("queue full (backpressure) or server closed")
         })?;
         Ok(rx)
     }
@@ -160,8 +356,8 @@ impl ForceFieldServer {
     ) -> Result<ForceResponse> {
         let rx = self.submit(pos, species)?;
         rx.recv()
-            .map_err(|e| anyhow!("server dropped request: {e}"))?
-            .map_err(|e| anyhow!(e))
+            .map_err(|e| err!("server dropped request: {e}"))?
+            .map_err(|e| err!("{e}"))
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -230,7 +426,6 @@ fn execute_chunk(
     variant: &Variant,
     chunk: &[Envelope],
 ) -> Result<Vec<ForceResponse>> {
-    let exe: Arc<Executable> = s.engine.load(&variant.name)?;
     // build graphs (no labels at serving time)
     let graphs: Vec<Graph> = chunk
         .iter()
@@ -245,15 +440,7 @@ fn execute_chunk(
         &graphs, variant.batch, s.n_atoms, s.n_edges, s.r_cut,
     );
     let state = s.state.read().unwrap().clone();
-    let mut inputs: Vec<Tensor> = state.as_ref().clone();
-    inputs.push(Tensor::F32(pb.pos.clone()));
-    inputs.push(Tensor::I32(pb.species.clone()));
-    inputs.push(Tensor::I32(pb.edges.clone()));
-    inputs.push(Tensor::F32(pb.edge_mask.clone()));
-    inputs.push(Tensor::F32(pb.atom_mask.clone()));
-    let outputs = exe.run(&inputs)?;
-    let energy = outputs[0].as_f32()?;
-    let forces = outputs[1].as_f32()?;
+    let (energy, forces) = s.backend.run(variant, &pb, state.as_ref())?;
     let mut responses = Vec::with_capacity(chunk.len());
     for (g_idx, env) in chunk.iter().enumerate() {
         let na = pb.true_atoms[g_idx];

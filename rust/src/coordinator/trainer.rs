@@ -6,9 +6,9 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
-
+use crate::err;
 use crate::runtime::{Engine, Executable, Tensor};
+use crate::util::error::Result;
 use crate::util::json::Json;
 
 /// Generic trainer over a train-step artifact.
@@ -30,14 +30,14 @@ impl Trainer {
             .meta
             .get("n_state")
             .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow!("{artifact}: meta.n_state missing"))?;
+            .ok_or_else(|| err!("{artifact}: meta.n_state missing"))?;
         let state: Vec<Tensor> = engine
             .load_state_blob(state_blob)?
             .into_iter()
             .map(|(_, t)| t)
             .collect();
         if state.len() != n_state {
-            return Err(anyhow!(
+            return Err(err!(
                 "state blob has {} tensors, artifact expects {}",
                 state.len(),
                 n_state
@@ -63,7 +63,7 @@ impl Trainer {
     pub fn step(&mut self, batch: Vec<Tensor>) -> Result<f64> {
         let expected = self.exe.inputs.len() - self.n_state;
         if batch.len() != expected {
-            return Err(anyhow!(
+            return Err(err!(
                 "step: expected {expected} batch tensors, got {}",
                 batch.len()
             ));
@@ -71,10 +71,10 @@ impl Trainer {
         let mut inputs = self.state.clone();
         inputs.extend(batch);
         let mut outputs = self.exe.run(&inputs)?;
-        let loss_t = outputs.pop().ok_or_else(|| anyhow!("no loss output"))?;
+        let loss_t = outputs.pop().ok_or_else(|| err!("no loss output"))?;
         let loss = loss_t.as_f32()?[0] as f64;
         if !loss.is_finite() {
-            return Err(anyhow!("non-finite loss at step {}", self.losses.len()));
+            return Err(err!("non-finite loss at step {}", self.losses.len()));
         }
         self.state = outputs;
         self.losses.push(loss);

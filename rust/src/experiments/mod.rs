@@ -6,10 +6,11 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
-
 use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::server::NativeGauntBackend;
 use crate::coordinator::{ForceFieldServer, ServerConfig, Trainer};
+use crate::err;
+use crate::util::error::Result;
 use crate::data::metrics::{efwt, force_cos, force_mae, mae};
 use crate::data::{
     energy_stats, gen_adsorbate_dataset, gen_bpa_dataset, gen_dihedral_slices,
@@ -60,7 +61,7 @@ pub fn eval_forcefield(
         .meta
         .get("batch")
         .and_then(Json::as_usize)
-        .ok_or_else(|| anyhow!("fwd artifact missing batch meta"))?;
+        .ok_or_else(|| err!("fwd artifact missing batch meta"))?;
     let mut e_pred = Vec::new();
     let mut e_true = Vec::new();
     let mut f_pred: Vec<Vec<[f64; 3]>> = Vec::new();
@@ -147,21 +148,25 @@ pub fn check_artifacts(engine: &Arc<Engine>) -> Result<()> {
 // serving demo (the vLLM-style path)
 // ---------------------------------------------------------------------
 
-pub fn serve_demo(engine: Arc<Engine>, n_requests: usize) -> Result<()> {
-    let server = ForceFieldServer::start(
-        engine,
-        ServerConfig {
-            policy: BatchPolicy {
-                max_batch: 8,
-                max_wait: std::time::Duration::from_millis(4),
-                max_queue: 4096,
-            },
-            n_workers: 2,
-            r_cut: R_CUT,
-            ..Default::default()
+/// The demo's batch policy (shared by the XLA and native variants).
+fn serve_demo_config() -> ServerConfig {
+    ServerConfig {
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(4),
+            max_queue: 4096,
         },
-    )?;
-    // clients: MD-sampled structures
+        n_workers: 2,
+        r_cut: R_CUT,
+        ..Default::default()
+    }
+}
+
+/// Drive a started server with MD-sampled client structures and report
+/// throughput + metrics; consumes (and shuts down) the server.
+fn run_serve_demo(
+    server: ForceFieldServer, n_requests: usize, label: &str,
+) -> Result<()> {
     let graphs = gen_bpa_dataset(&[0.05], n_requests, 7).remove(0);
     let t0 = Instant::now();
     let receivers: Vec<_> = graphs
@@ -170,17 +175,94 @@ pub fn serve_demo(engine: Arc<Engine>, n_requests: usize) -> Result<()> {
         .collect();
     let mut ok = 0usize;
     for rx in receivers {
-        let resp = rx.recv().unwrap().map_err(|e| anyhow!(e))?;
-        assert_eq!(resp.forces.len(), 14);
+        let resp = rx.recv().unwrap().map_err(|e| err!("{e}"))?;
+        assert_eq!(resp.forces.len(), graphs[0].n_atoms());
         ok += 1;
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "served {ok} requests in {dt:.3}s  ({:.1} req/s)",
+        "served {ok} requests{label} in {dt:.3}s  ({:.1} req/s)",
         ok as f64 / dt
     );
     println!("metrics: {}", server.metrics().report());
     server.shutdown();
+    Ok(())
+}
+
+pub fn serve_demo(engine: Arc<Engine>, n_requests: usize) -> Result<()> {
+    let server = ForceFieldServer::start(engine, serve_demo_config())?;
+    run_serve_demo(server, n_requests, "")
+}
+
+/// Serving demo on the native Gaunt-TP backend: the full coordinator
+/// stack (batcher -> router -> worker pool) with every batch executed by
+/// the engine's cached plans + multi-threaded batched TP — runs offline,
+/// no compiled artifacts required.
+pub fn serve_demo_native(n_requests: usize) -> Result<()> {
+    let server = ForceFieldServer::start_native(
+        NativeGauntBackend::default(),
+        serve_demo_config(),
+    )?;
+    run_serve_demo(server, n_requests, " natively")?;
+    let cache = crate::tp::engine::PlanCache::global();
+    println!(
+        "plan cache: {} plans, {} builds, {} hits",
+        cache.len(),
+        cache.builds(),
+        cache.hits()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// batched-TP throughput (table 2 native rows: 1 thread vs all cores)
+// ---------------------------------------------------------------------
+
+/// Batched Gaunt-TP throughput, single-thread vs multi-thread, using the
+/// global plan cache — the native rows of the speed/memory table.
+pub fn tp_throughput(rows: usize) -> Result<()> {
+    use crate::tp::engine::{self, PlanCache};
+    use crate::tp::ConvMethod;
+    use crate::util::pool;
+
+    let threads = pool::default_threads();
+    println!("batched Gaunt TP throughput: {rows} rows, 1 vs {threads} threads");
+    let mut out = Vec::new();
+    for l in [2usize, 4, 6] {
+        let n = crate::num_coeffs(l);
+        let mut rng = Rng::new(100 + l as u64);
+        let x1 = rng.normals(rows * n);
+        let x2 = rng.normals(rows * n);
+        let plan = PlanCache::global().gaunt(l, l, l, ConvMethod::Auto);
+        // best-of-3 wallclock per mode
+        let mut t_serial = f64::INFINITY;
+        let mut t_par = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            let a = plan.apply_batch(&x1, &x2, rows);
+            t_serial = t_serial.min(t0.elapsed().as_secs_f64());
+            let t0 = Instant::now();
+            let b = engine::gaunt_apply_batch_par(&plan, &x1, &x2, rows, 0);
+            t_par = t_par.min(t0.elapsed().as_secs_f64());
+            assert_eq!(a, b, "parallel path diverged from serial");
+        }
+        let speedup = t_serial / t_par;
+        println!(
+            "L={l}: {:>10.1} rows/s x1   {:>10.1} rows/s x{threads}   \
+             speedup {speedup:.2}x",
+            rows as f64 / t_serial,
+            rows as f64 / t_par,
+        );
+        out.push(Json::obj(vec![
+            ("l", Json::Num(l as f64)),
+            ("rows", Json::Num(rows as f64)),
+            ("threads", Json::Num(threads as f64)),
+            ("s_serial", Json::Num(t_serial)),
+            ("s_par", Json::Num(t_par)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    write_result_json("tp_throughput", &Json::Arr(out));
     Ok(())
 }
 

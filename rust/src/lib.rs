@@ -16,7 +16,14 @@
 //!
 //! Simulation substrates the evaluation needs ([`md`], [`nbody`]) are
 //! implemented from scratch, as are the infrastructure pieces the offline
-//! environment lacks ([`util`]: PRNG, JSON, property testing, benching).
+//! environment lacks ([`util`]: PRNG, JSON, property testing, benching,
+//! error handling, worker pool) and the typed seam standing in for the
+//! native XLA/PJRT bindings ([`xla`], see DESIGN.md section 5).
+//!
+//! The crate builds with **zero external dependencies** so `cargo build`
+//! works from a clean checkout with no network; serving-grade execution
+//! (plan memoization + multi-threaded batched tensor products) lives in
+//! [`tp::engine`].
 
 pub mod coordinator;
 pub mod data;
@@ -28,6 +35,7 @@ pub mod runtime;
 pub mod so3;
 pub mod tp;
 pub mod util;
+pub mod xla;
 
 /// Flat irrep index of (l, m) in the `(L+1)^2` layout (m = -l..l).
 #[inline]

@@ -3,18 +3,21 @@
 //! Subcommands (hand-rolled parsing; clap is unavailable offline):
 //!   info                      list artifacts + platform
 //!   check                     load & smoke-run every artifact
-//!   serve [--requests N]      run the batched force-field service demo
+//!   serve [--requests N] [--native]   run the batched force-field
+//!                             service demo (--native: no artifacts
+//!                             needed, native Gaunt-TP backend)
 //!   train --variant {gaunt|cg} [--steps N]   train GauntNet on the
 //!                             synthetic adsorbate dataset
-//!   experiment <fig1d|table1|table2>   regenerate a paper artifact
+//!   experiment <fig1d|table1|table2|tp-throughput>   regenerate a paper
+//!                             artifact (tp-throughput runs offline)
 //!   md-demo                   short MD run of the 3BPA-lite molecule
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
-
+use gaunt_tp::err;
 use gaunt_tp::experiments;
 use gaunt_tp::runtime::Engine;
+use gaunt_tp::util::error::Result;
 
 fn arg_value(args: &[String], key: &str) -> Option<String> {
     args.iter()
@@ -49,8 +52,12 @@ fn main() -> Result<()> {
             let n: usize = arg_value(&args, "--requests")
                 .and_then(|v| v.parse().ok())
                 .unwrap_or(64);
-            let engine = Arc::new(Engine::new(artifacts_dir(&args))?);
-            experiments::serve_demo(engine, n)
+            if args.iter().any(|a| a == "--native") {
+                experiments::serve_demo_native(n)
+            } else {
+                let engine = Arc::new(Engine::new(artifacts_dir(&args))?);
+                experiments::serve_demo(engine, n)
+            }
         }
         "train" => {
             let variant = arg_value(&args, "--variant")
@@ -65,13 +72,19 @@ fn main() -> Result<()> {
         "experiment" => {
             let which = args
                 .get(1)
-                .ok_or_else(|| anyhow!("experiment needs a name"))?;
+                .ok_or_else(|| err!("experiment needs a name"))?;
+            if which == "tp-throughput" {
+                let rows: usize = arg_value(&args, "--rows")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(256);
+                return experiments::tp_throughput(rows);
+            }
             let engine = Arc::new(Engine::new(artifacts_dir(&args))?);
             match which.as_str() {
                 "fig1d" => experiments::fig1d_sanity_check(&engine),
                 "table1" => experiments::table1_oc_analog(&engine),
                 "table2" => experiments::table2_bpa_analog(&engine),
-                other => Err(anyhow!("unknown experiment '{other}'")),
+                other => Err(err!("unknown experiment '{other}'")),
             }
         }
         "md-demo" => experiments::md_demo(),
@@ -80,9 +93,9 @@ fn main() -> Result<()> {
                 "gaunt-tp — Gaunt Tensor Products (ICLR 2024) reproduction\n\
                  usage: gaunt-tp <info|check|serve|train|experiment|md-demo> \
                  [--artifacts DIR]\n\
-                 \x20 serve --requests N\n\
+                 \x20 serve --requests N [--native]\n\
                  \x20 train --variant gaunt|cg --steps N\n\
-                 \x20 experiment fig1d|table1|table2"
+                 \x20 experiment fig1d|table1|table2|tp-throughput"
             );
             Ok(())
         }

@@ -9,9 +9,10 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::{parse, Json};
+use crate::xla;
+use crate::{bail, err};
 
 /// Supported tensor dtypes (all the artifacts use f32/i32).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -48,7 +49,7 @@ impl TensorSpec {
         let shape = j
             .get("shape")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("missing shape"))?
+            .ok_or_else(|| err!("missing shape"))?
             .iter()
             .filter_map(Json::as_usize)
             .collect();
@@ -183,7 +184,7 @@ impl Engine {
         let text = std::fs::read_to_string(&manifest_path).with_context(|| {
             format!("reading {manifest_path:?} (run `make artifacts`)")
         })?;
-        let manifest = parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let manifest = parse(&text).map_err(|e| err!("manifest: {e}"))?;
         let client = xla::PjRtClient::cpu()?;
         Ok(Engine {
             client,
@@ -220,14 +221,14 @@ impl Engine {
             .manifest
             .get("artifacts")
             .and_then(|a| a.get(name))
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            .ok_or_else(|| err!("artifact '{name}' not in manifest"))?;
         let file = entry
             .get("file")
             .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("artifact '{name}' missing file"))?;
+            .ok_or_else(|| err!("artifact '{name}' missing file"))?;
         let path = self.artifacts_dir.join(file);
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            path.to_str().ok_or_else(|| err!("bad path"))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
@@ -264,11 +265,11 @@ impl Engine {
             .manifest
             .get("state_blobs")
             .and_then(|a| a.get(name))
-            .ok_or_else(|| anyhow!("state blob '{name}' not in manifest"))?;
+            .ok_or_else(|| err!("state blob '{name}' not in manifest"))?;
         let file = entry
             .get("file")
             .and_then(Json::as_str)
-            .ok_or_else(|| anyhow!("blob '{name}' missing file"))?;
+            .ok_or_else(|| err!("blob '{name}' missing file"))?;
         let bytes = std::fs::read(self.artifacts_dir.join(file))?;
         let mut out = Vec::new();
         for t in entry.get("tensors").and_then(Json::as_arr).unwrap_or(&[]) {
@@ -278,7 +279,7 @@ impl Engine {
             let dtype = t.get("dtype").and_then(Json::as_str).unwrap_or("float32");
             let raw = bytes
                 .get(off..off + nbytes)
-                .ok_or_else(|| anyhow!("blob '{name}' truncated"))?;
+                .ok_or_else(|| err!("blob '{name}' truncated"))?;
             let tensor = match DType::from_str(dtype)? {
                 DType::F32 => Tensor::F32(
                     raw.chunks_exact(4)

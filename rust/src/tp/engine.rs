@@ -1,0 +1,302 @@
+//! Serving-grade batched tensor-product engine.
+//!
+//! Two pieces turn the one-shot plans of [`cg`](crate::tp::cg) /
+//! [`gaunt`](crate::tp::gaunt) / [`escn`](crate::tp::escn) into something
+//! a coordinator can run under heavy traffic:
+//!
+//! * [`PlanCache`] — a process-wide memo of built plans keyed by
+//!   `(degrees, method)`.  Plan construction is the expensive part of a
+//!   tensor product (tables, coupling tensors: milliseconds to seconds at
+//!   high L); apply is microseconds.  e3nn-style systems win by compiling
+//!   the coupling once — this is that, with build-once-under-contention
+//!   semantics: concurrent requests for a missing key serialize on one
+//!   build and share the resulting `Arc`.
+//! * Parallel batch applies — [`gaunt_apply_batch_par`],
+//!   [`cg_apply_batch_par`], [`escn_apply_batch_par`] shard independent
+//!   batch rows across cores through [`crate::util::pool`], bitwise
+//!   identical to the serial path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::num_coeffs;
+use crate::tp::cg::CgPlan;
+use crate::tp::escn::EscnPlan;
+use crate::tp::gaunt::{ConvMethod, GauntPlan};
+use crate::util::pool;
+
+/// Cache key: plan family + the degrees (and conv method) that fully
+/// determine a plan's tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlanKey {
+    /// Clebsch-Gordan full TP plan.
+    Cg { l1: usize, l2: usize, l3: usize },
+    /// Gaunt TP plan (method changes the convolution backend).
+    Gaunt { l1: usize, l2: usize, l3: usize, method: ConvMethod },
+    /// eSCN SO(2)-restricted convolution plan.
+    Escn { l_in: usize, l_filter: usize, l_out: usize },
+}
+
+#[derive(Clone)]
+enum CachedPlan {
+    Cg(Arc<CgPlan>),
+    Gaunt(Arc<GauntPlan>),
+    Escn(Arc<EscnPlan>),
+}
+
+/// Process-wide memo of tensor-product plans.
+///
+/// Reads take a shared lock (the hot path: one `HashMap` probe + `Arc`
+/// clone).  A miss upgrades to the write lock, re-checks, and builds the
+/// plan while holding it — exactly one thread builds each key under
+/// contention.  Note the trade-off: a build stalls *all* cache reads for
+/// its duration (high-L plans can take seconds), which is acceptable as
+/// a cold-start cost today; if warm-path stalls ever matter, move to
+/// per-key once-cells built outside the map lock.
+pub struct PlanCache {
+    plans: RwLock<HashMap<PlanKey, CachedPlan>>,
+    builds: AtomicUsize,
+    hits: AtomicUsize,
+}
+
+impl PlanCache {
+    /// An empty cache (prefer [`PlanCache::global`] outside tests).
+    pub fn new() -> PlanCache {
+        PlanCache {
+            plans: RwLock::new(HashMap::new()),
+            builds: AtomicUsize::new(0),
+            hits: AtomicUsize::new(0),
+        }
+    }
+
+    /// The process-wide cache used by the coordinator, experiments, and
+    /// benches.
+    pub fn global() -> &'static PlanCache {
+        static GLOBAL: OnceLock<PlanCache> = OnceLock::new();
+        GLOBAL.get_or_init(PlanCache::new)
+    }
+
+    fn lookup(&self, key: &PlanKey) -> Option<CachedPlan> {
+        let found = self.plans.read().unwrap().get(key).cloned();
+        if found.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// Memoized [`CgPlan`] for `(l1, l2, l3)`.
+    pub fn cg(&self, l1: usize, l2: usize, l3: usize) -> Arc<CgPlan> {
+        let key = PlanKey::Cg { l1, l2, l3 };
+        if let Some(CachedPlan::Cg(p)) = self.lookup(&key) {
+            return p;
+        }
+        let mut w = self.plans.write().unwrap();
+        if let Some(CachedPlan::Cg(p)) = w.get(&key) {
+            return p.clone();
+        }
+        let p = Arc::new(CgPlan::new(l1, l2, l3));
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        w.insert(key, CachedPlan::Cg(p.clone()));
+        p
+    }
+
+    /// Memoized [`GauntPlan`] for `(l1, l2, l3, method)`.
+    pub fn gaunt(
+        &self, l1: usize, l2: usize, l3: usize, method: ConvMethod,
+    ) -> Arc<GauntPlan> {
+        let key = PlanKey::Gaunt { l1, l2, l3, method };
+        if let Some(CachedPlan::Gaunt(p)) = self.lookup(&key) {
+            return p;
+        }
+        let mut w = self.plans.write().unwrap();
+        if let Some(CachedPlan::Gaunt(p)) = w.get(&key) {
+            return p.clone();
+        }
+        let p = Arc::new(GauntPlan::new(l1, l2, l3, method));
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        w.insert(key, CachedPlan::Gaunt(p.clone()));
+        p
+    }
+
+    /// Memoized [`EscnPlan`] for `(l_in, l_filter, l_out)`.
+    pub fn escn(
+        &self, l_in: usize, l_filter: usize, l_out: usize,
+    ) -> Arc<EscnPlan> {
+        let key = PlanKey::Escn { l_in, l_filter, l_out };
+        if let Some(CachedPlan::Escn(p)) = self.lookup(&key) {
+            return p;
+        }
+        let mut w = self.plans.write().unwrap();
+        if let Some(CachedPlan::Escn(p)) = w.get(&key) {
+            return p.clone();
+        }
+        let p = Arc::new(EscnPlan::new(l_in, l_filter, l_out));
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        w.insert(key, CachedPlan::Escn(p.clone()));
+        p
+    }
+
+    /// Number of plans actually constructed (one per distinct key, even
+    /// under contention).
+    pub fn builds(&self) -> usize {
+        self.builds.load(Ordering::Relaxed)
+    }
+
+    /// Number of read-path hits served without building.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.plans.read().unwrap().len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached plan (outstanding `Arc`s stay valid).
+    pub fn clear(&self) {
+        self.plans.write().unwrap().clear();
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new()
+    }
+}
+
+/// Batched Gaunt TP sharded across `threads` workers (`0` = all cores).
+/// Row-for-row identical to [`GauntPlan::apply_batch`].
+pub fn gaunt_apply_batch_par(
+    plan: &GauntPlan, x1: &[f64], x2: &[f64], rows: usize, threads: usize,
+) -> Vec<f64> {
+    let n1 = num_coeffs(plan.l1);
+    let n2 = num_coeffs(plan.l2);
+    let n3 = num_coeffs(plan.l3);
+    debug_assert_eq!(x1.len(), rows * n1);
+    debug_assert_eq!(x2.len(), rows * n2);
+    let mut out = vec![0.0; rows * n3];
+    let threads = pool::resolve_threads(threads);
+    pool::shard_rows(&mut out, n3, threads, |r, row| {
+        let y = plan.apply(&x1[r * n1..(r + 1) * n1], &x2[r * n2..(r + 1) * n2]);
+        row.copy_from_slice(&y);
+    });
+    out
+}
+
+/// Batched sparse CG TP sharded across `threads` workers (`0` = all
+/// cores).  Row-for-row identical to [`CgPlan::apply_batch`].
+pub fn cg_apply_batch_par(
+    plan: &CgPlan, x1: &[f64], x2: &[f64], rows: usize, threads: usize,
+) -> Vec<f64> {
+    let n1 = num_coeffs(plan.l1);
+    let n2 = num_coeffs(plan.l2);
+    let n3 = num_coeffs(plan.l3);
+    debug_assert_eq!(x1.len(), rows * n1);
+    debug_assert_eq!(x2.len(), rows * n2);
+    let mut out = vec![0.0; rows * n3];
+    let threads = pool::resolve_threads(threads);
+    pool::shard_rows(&mut out, n3, threads, |r, row| {
+        let y = plan
+            .apply_sparse(&x1[r * n1..(r + 1) * n1], &x2[r * n2..(r + 1) * n2]);
+        row.copy_from_slice(&y);
+    });
+    out
+}
+
+/// Batched eSCN edge convolution sharded across `threads` workers (`0` =
+/// all cores): row `r` convolves `x[r]` along `dirs[r]` with shared path
+/// weights `h`.  Row-for-row identical to [`EscnPlan::apply_batch`].
+pub fn escn_apply_batch_par(
+    plan: &EscnPlan, x: &[f64], dirs: &[[f64; 3]], h: &[f64], threads: usize,
+) -> Vec<f64> {
+    let n_in = num_coeffs(plan.l_in);
+    let n_out = num_coeffs(plan.l_out);
+    let rows = dirs.len();
+    debug_assert_eq!(x.len(), rows * n_in);
+    let mut out = vec![0.0; rows * n_out];
+    let threads = pool::resolve_threads(threads);
+    pool::shard_rows(&mut out, n_out, threads, |r, row| {
+        let y = plan.apply(&x[r * n_in..(r + 1) * n_in], dirs[r], h);
+        row.copy_from_slice(&y);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::max_abs_diff;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cache_returns_shared_plans_and_counts_builds() {
+        let cache = PlanCache::new();
+        let a = cache.gaunt(2, 2, 2, ConvMethod::Direct);
+        let b = cache.gaunt(2, 2, 2, ConvMethod::Direct);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.builds(), 1);
+        assert!(cache.hits() >= 1);
+        // a different method is a different key
+        let c = cache.gaunt(2, 2, 2, ConvMethod::Fft);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.builds(), 2);
+        let _ = cache.cg(1, 1, 2);
+        let _ = cache.escn(1, 1, 1);
+        assert_eq!(cache.builds(), 4);
+        assert_eq!(cache.len(), 4);
+        cache.clear();
+        assert!(cache.is_empty());
+        // outstanding Arcs survive the clear
+        let mut rng = Rng::new(0);
+        let x = rng.normals(num_coeffs(2));
+        let y = rng.normals(num_coeffs(2));
+        assert_eq!(a.apply(&x, &y).len(), num_coeffs(2));
+    }
+
+    #[test]
+    fn gaunt_par_matches_serial() {
+        let mut rng = Rng::new(1);
+        let plan = GauntPlan::new(2, 2, 3, ConvMethod::Auto);
+        let rows = 9;
+        let x1 = rng.normals(rows * num_coeffs(2));
+        let x2 = rng.normals(rows * num_coeffs(2));
+        let serial = plan.apply_batch(&x1, &x2, rows);
+        for threads in [1usize, 2, 4, 0] {
+            let par = gaunt_apply_batch_par(&plan, &x1, &x2, rows, threads);
+            assert!(max_abs_diff(&serial, &par) == 0.0, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn cg_par_matches_serial() {
+        let mut rng = Rng::new(2);
+        let plan = CgPlan::new(2, 2, 2);
+        let rows = 7;
+        let n = num_coeffs(2);
+        let x1 = rng.normals(rows * n);
+        let x2 = rng.normals(rows * n);
+        let serial = plan.apply_batch(&x1, &x2, rows);
+        let par = cg_apply_batch_par(&plan, &x1, &x2, rows, 0);
+        assert!(max_abs_diff(&serial, &par) == 0.0);
+    }
+
+    #[test]
+    fn escn_par_matches_serial() {
+        let mut rng = Rng::new(3);
+        let plan = EscnPlan::new(2, 2, 2);
+        let rows = 6;
+        let n = num_coeffs(2);
+        let x = rng.normals(rows * n);
+        let dirs: Vec<[f64; 3]> = (0..rows).map(|_| rng.unit3()).collect();
+        let h: Vec<f64> = (0..plan.n_paths()).map(|_| rng.normal()).collect();
+        let serial = plan.apply_batch(&x, &dirs, &h);
+        let par = escn_apply_batch_par(&plan, &x, &dirs, &h, 0);
+        assert!(max_abs_diff(&serial, &par) == 0.0);
+    }
+}

@@ -128,6 +128,23 @@ impl EscnPlan {
         let n_out = num_coeffs(self.l_out);
         matvec(&d_out, &y_rot, n_out, n_out)
     }
+
+    /// Batched full convolution: row `r` convolves `x[r]` along `dirs[r]`
+    /// with shared path weights `h` (rows of x are independent edges).
+    pub fn apply_batch(
+        &self, x: &[f64], dirs: &[[f64; 3]], h: &[f64],
+    ) -> Vec<f64> {
+        let n_in = num_coeffs(self.l_in);
+        let n_out = num_coeffs(self.l_out);
+        let rows = dirs.len();
+        debug_assert_eq!(x.len(), rows * n_in);
+        let mut out = vec![0.0; rows * n_out];
+        for (r, dir) in dirs.iter().enumerate() {
+            let y = self.apply(&x[r * n_in..(r + 1) * n_in], *dir, h);
+            out[r * n_out..(r + 1) * n_out].copy_from_slice(&y);
+        }
+        out
+    }
 }
 
 /// Gaunt-accelerated equivariant convolution (paper Sec. 3.3).

@@ -17,7 +17,7 @@ use crate::fourier::tables::{
 use crate::{lm_index, num_coeffs};
 
 /// Which convolution backend the plan uses.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ConvMethod {
     Direct,
     Fft,

@@ -10,11 +10,16 @@
 //! * [`many_body`] — Equivariant Many-body Interactions: nu-fold products,
 //!   sequential vs divide-and-conquer grid-domain evaluation, plus the
 //!   MACE-style precomputed-tensor emulation (trades memory for speed).
+//! * [`engine`] — the serving-grade execution engine: a process-wide
+//!   [`engine::PlanCache`] (build plans once, share under contention) and
+//!   multi-threaded batched applies for all three plan families.
 
 pub mod cg;
+pub mod engine;
 pub mod escn;
 pub mod gaunt;
 pub mod many_body;
 
 pub use cg::CgPlan;
+pub use engine::PlanCache;
 pub use gaunt::{ConvMethod, GauntPlan};

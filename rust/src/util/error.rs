@@ -1,0 +1,151 @@
+//! Minimal error handling (external error crates are unavailable in the
+//! offline build).
+//!
+//! One string-backed [`Error`] type, a [`Result`] alias with a defaulted
+//! error parameter, a [`Context`] extension trait providing the familiar
+//! `context`/`with_context`, and the `err!`/`bail!` macros (exported at
+//! the crate root) for formatted construction and early return.
+
+use std::fmt;
+
+/// A boxed-free, string-backed error.  Context is prepended on the way up
+/// (`"reading manifest: No such file"`), which is all this crate needs:
+/// errors here are diagnostics for operators, not control flow.
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer: `"<context>: <self>"`.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+/// Crate-wide result alias; the error parameter defaults to [`Error`] so
+/// `Result<T>` is the common spelling, while `Result<T, Other>` works.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `context`/`with_context` to results and options.
+pub trait Context<T> {
+    /// Replace/annotate the error with a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Replace/annotate the error with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{c}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format an [`Error`] from format-string arguments.  Lives at the crate
+/// root: `use gaunt_tp::err;`
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(Error::msg("inner"))
+    }
+
+    #[test]
+    fn display_and_context() {
+        let e = Error::msg("boom").context("outer");
+        assert_eq!(e.to_string(), "outer: boom");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<()> = fails().context("stage");
+        assert_eq!(r.unwrap_err().to_string(), "stage: inner");
+        let o: Option<u32> = None;
+        let r = o.with_context(|| format!("missing {}", 7));
+        assert_eq!(r.unwrap_err().to_string(), "missing 7");
+        assert_eq!(Some(3u32).context("never").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = err!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        fn bails(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged {flag}");
+            }
+            Ok(1)
+        }
+        assert!(bails(false).is_ok());
+        assert_eq!(bails(true).unwrap_err().to_string(), "flagged true");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read_missing() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(read_missing().is_err());
+    }
+}

@@ -1,7 +1,11 @@
 //! Infrastructure substrates the offline environment lacks as crates:
-//! PRNG, JSON, a mini property-testing driver, and a micro-bench harness.
+//! PRNG, JSON, a mini property-testing driver, a micro-bench harness,
+//! error handling ([`error`], no external error crate), and a scoped
+//! worker pool ([`pool`], replacing rayon for the one shape we need).
 
 pub mod bench;
+pub mod error;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,111 @@
+//! Scoped worker pool (std::thread based; rayon is unavailable offline).
+//!
+//! The one parallel shape this crate needs: shard the rows of a row-major
+//! output buffer across cores, each worker filling a disjoint chunk of
+//! rows.  Built on `std::thread::scope`, so workers may borrow the plans
+//! and input slices of the caller without `'static` bounds, and every
+//! worker is joined before the call returns (no detached threads, no
+//! channels on the hot path).
+
+/// Number of hardware threads available to this process (>= 1).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Resolve a requested worker count: `0` means "all available cores".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        default_threads()
+    } else {
+        requested
+    }
+}
+
+/// Fill the rows of `out` (row-major, `row_len` wide) in parallel:
+/// `work(row_index, out_row)` is invoked exactly once per row, sharded
+/// contiguously across at most `threads` scoped workers.  Rows are
+/// disjoint `&mut` chunks, so workers never contend on the output, and
+/// determinism is exact: the result is identical to the serial loop.
+pub fn shard_rows<F>(out: &mut [f64], row_len: usize, threads: usize, work: F)
+where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    assert!(row_len > 0, "shard_rows: row_len must be positive");
+    debug_assert_eq!(out.len() % row_len, 0);
+    let rows = out.len() / row_len;
+    if rows == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, rows);
+    if threads == 1 {
+        for (r, row) in out.chunks_mut(row_len).enumerate() {
+            work(r, row);
+        }
+        return;
+    }
+    let chunk_rows = rows.div_ceil(threads);
+    let work = &work;
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(chunk_rows * row_len).enumerate() {
+            s.spawn(move || {
+                let base = ci * chunk_rows;
+                for (i, row) in chunk.chunks_mut(row_len).enumerate() {
+                    work(base + i, row);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(rows: usize, row_len: usize, threads: usize) -> Vec<f64> {
+        let mut out = vec![0.0; rows * row_len];
+        shard_rows(&mut out, row_len, threads, |r, row| {
+            for (k, v) in row.iter_mut().enumerate() {
+                *v = (r * row_len + k) as f64;
+            }
+        });
+        out
+    }
+
+    #[test]
+    fn matches_serial_for_any_thread_count() {
+        let want = run(13, 5, 1);
+        for threads in [0usize, 2, 3, 4, 7, 13, 64] {
+            assert_eq!(run(13, 5, threads), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn every_row_visited_exactly_once() {
+        let rows = 29;
+        let mut out = vec![0.0; rows * 2];
+        shard_rows(&mut out, 2, 4, |r, row| {
+            row[0] += 1.0;
+            row[1] = r as f64;
+        });
+        for r in 0..rows {
+            assert_eq!(out[2 * r], 1.0, "row {r} visited more than once");
+            assert_eq!(out[2 * r + 1], r as f64);
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let mut out: Vec<f64> = Vec::new();
+        shard_rows(&mut out, 3, 8, |_, _| panic!("no rows to visit"));
+        assert_eq!(run(1, 4, 8), run(1, 4, 1));
+    }
+
+    #[test]
+    fn thread_helpers() {
+        assert!(default_threads() >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(0), default_threads());
+    }
+}

@@ -1,0 +1,131 @@
+//! Concurrency contract of the tensor-product engine: the plan cache
+//! builds each key exactly once under contention, every thread sees the
+//! same shared plan, and the multi-threaded batch applies are bitwise
+//! identical to the serial path.
+
+use std::sync::Arc;
+
+use gaunt_tp::num_coeffs;
+use gaunt_tp::tp::engine::{
+    cg_apply_batch_par, escn_apply_batch_par, gaunt_apply_batch_par, PlanCache,
+};
+use gaunt_tp::tp::escn::EscnPlan;
+use gaunt_tp::tp::{CgPlan, ConvMethod, GauntPlan};
+use gaunt_tp::util::prop::max_abs_diff;
+use gaunt_tp::util::rng::Rng;
+
+/// 8 threads hammer a fresh cache over a small key set: exactly one build
+/// per key must happen, and every thread's outputs must equal the serial
+/// reference computed from plans built outside the cache.
+#[test]
+fn plan_cache_one_build_per_key_under_contention() {
+    let keys: Vec<(usize, usize, usize, ConvMethod)> = vec![
+        (1, 1, 2, ConvMethod::Direct),
+        (2, 2, 2, ConvMethod::Direct),
+        (2, 2, 2, ConvMethod::Fft),
+        (2, 1, 3, ConvMethod::Auto),
+        (3, 3, 4, ConvMethod::Fft),
+    ];
+    // serial reference outputs on fixed inputs
+    let mut refs = Vec::new();
+    for &(l1, l2, l3, method) in &keys {
+        let mut rng = Rng::new((l1 * 100 + l2 * 10 + l3) as u64);
+        let x1 = rng.normals(num_coeffs(l1));
+        let x2 = rng.normals(num_coeffs(l2));
+        let want = GauntPlan::new(l1, l2, l3, method).apply(&x1, &x2);
+        refs.push((x1, x2, want));
+    }
+    let cache = Arc::new(PlanCache::new());
+    let keys = Arc::new(keys);
+    let refs = Arc::new(refs);
+    let mut handles = Vec::new();
+    for t in 0..8 {
+        let cache = cache.clone();
+        let keys = keys.clone();
+        let refs = refs.clone();
+        handles.push(std::thread::spawn(move || {
+            for round in 0..20 {
+                // permute the key order per thread to vary contention
+                for k in 0..keys.len() {
+                    let idx = (k + t + round) % keys.len();
+                    let (l1, l2, l3, method) = keys[idx];
+                    let plan = cache.gaunt(l1, l2, l3, method);
+                    let (x1, x2, want) = &refs[idx];
+                    let got = plan.apply(x1, x2);
+                    assert!(
+                        max_abs_diff(&got, want) < 1e-12,
+                        "thread {t}: cached plan diverged on key {idx}"
+                    );
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        cache.builds(),
+        keys.len(),
+        "cache must build each of the {} keys exactly once",
+        keys.len()
+    );
+    assert_eq!(cache.len(), keys.len());
+    assert!(cache.hits() > 0);
+}
+
+/// Two lookups of the same key return literally the same Arc.
+#[test]
+fn plan_cache_shares_plan_instances() {
+    let cache = PlanCache::new();
+    let a = cache.gaunt(2, 2, 2, ConvMethod::Auto);
+    let b = cache.gaunt(2, 2, 2, ConvMethod::Auto);
+    assert!(Arc::ptr_eq(&a, &b));
+    let c = cache.cg(2, 2, 2);
+    let d = cache.cg(2, 2, 2);
+    assert!(Arc::ptr_eq(&c, &d));
+    let e = cache.escn(2, 2, 2);
+    let f = cache.escn(2, 2, 2);
+    assert!(Arc::ptr_eq(&e, &f));
+    assert_eq!(cache.builds(), 3);
+}
+
+/// The global cache is one process-wide instance.
+#[test]
+fn global_cache_is_shared() {
+    let a = PlanCache::global().gaunt(1, 1, 1, ConvMethod::Direct);
+    let b = PlanCache::global().gaunt(1, 1, 1, ConvMethod::Direct);
+    assert!(Arc::ptr_eq(&a, &b));
+}
+
+/// Parallel batch applies equal the serial path bit-for-bit for all three
+/// plan families and every thread count.
+#[test]
+fn parallel_batches_match_serial_for_all_families() {
+    let mut rng = Rng::new(9);
+    let rows = 11usize;
+
+    let gplan = GauntPlan::new(3, 2, 4, ConvMethod::Auto);
+    let gx1 = rng.normals(rows * num_coeffs(3));
+    let gx2 = rng.normals(rows * num_coeffs(2));
+    let g_serial = gplan.apply_batch(&gx1, &gx2, rows);
+
+    let cplan = CgPlan::new(2, 2, 3);
+    let cx1 = rng.normals(rows * num_coeffs(2));
+    let cx2 = rng.normals(rows * num_coeffs(2));
+    let c_serial = cplan.apply_batch(&cx1, &cx2, rows);
+
+    let eplan = EscnPlan::new(2, 2, 2);
+    let ex = rng.normals(rows * num_coeffs(2));
+    let dirs: Vec<[f64; 3]> = (0..rows).map(|_| rng.unit3()).collect();
+    let h: Vec<f64> = (0..eplan.n_paths()).map(|_| rng.normal()).collect();
+    let e_serial = eplan.apply_batch(&ex, &dirs, &h);
+
+    for threads in [1usize, 2, 3, 8, 0] {
+        let g = gaunt_apply_batch_par(&gplan, &gx1, &gx2, rows, threads);
+        assert_eq!(g, g_serial, "gaunt threads={threads}");
+        let c = cg_apply_batch_par(&cplan, &cx1, &cx2, rows, threads);
+        assert_eq!(c, c_serial, "cg threads={threads}");
+        let e = escn_apply_batch_par(&eplan, &ex, &dirs, &h, threads);
+        assert_eq!(e, e_serial, "escn threads={threads}");
+    }
+}

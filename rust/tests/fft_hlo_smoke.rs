@@ -1,18 +1,33 @@
-//! Early toolchain check: XLA 0.5.1 CPU runtime must execute the HLO `fft`
+//! Early toolchain check: the PJRT runtime must execute the HLO `fft`
 //! op — the Gaunt Tensor Product fast path multiplies 2D-Fourier
 //! coefficient grids via FFT-based convolution.
-use anyhow::Result;
+//!
+//! Skips (loudly) when the HLO file is absent or when the offline xla
+//! stub is active (see DESIGN.md section 5); with a real PJRT backend the
+//! numeric assertions run.
+use gaunt_tp::util::error::Result;
+use gaunt_tp::xla;
 
 #[test]
 fn fft_hlo_executes_on_cpu() -> Result<()> {
     let path = "/tmp/fft_hlo.txt";
     if !std::path::Path::new(path).exists() {
-        eprintln!("skipping: {path} not present (run python /tmp/fft_check.py)");
+        eprintln!("SKIP fft_hlo_executes_on_cpu: {path} not present \
+                   (run python /tmp/fft_check.py)");
         return Ok(());
     }
     let client = xla::PjRtClient::cpu()?;
     let proto = xla::HloModuleProto::from_text_file(path)?;
-    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let exe = match client.compile(&xla::XlaComputation::from_proto(&proto)) {
+        Ok(exe) => exe,
+        // only the offline stub's unavailability is a skip; a real PJRT
+        // backend failing to compile the FFT HLO must FAIL the test
+        Err(e) if e.to_string().contains("offline") => {
+            eprintln!("SKIP fft_hlo_executes_on_cpu: {e}");
+            return Ok(());
+        }
+        Err(e) => return Err(e.into()),
+    };
     // delta at (0,0) convolved with anything = identity
     let mut x = vec![0f32; 64];
     x[0] = 1.0;

@@ -1,0 +1,132 @@
+//! Property tests for `fourier::fft`: roundtrip, linearity, Parseval, and
+//! the Bluestein path for non-power-of-two (incl. prime) lengths — the
+//! transform underneath the paper's O(L^2 log L) convolution.
+
+use gaunt_tp::fourier::complex::C64;
+use gaunt_tp::fourier::fft::{fft, fft2, ifft};
+use gaunt_tp::util::prop::{check, PropConfig};
+use gaunt_tp::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<C64> {
+    (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+}
+
+fn naive_dft(x: &[C64]) -> Vec<C64> {
+    let n = x.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = C64::default();
+            for (j, v) in x.iter().enumerate() {
+                let ang =
+                    -2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64;
+                acc += *v * C64::cis(ang);
+            }
+            acc
+        })
+        .collect()
+}
+
+#[test]
+fn roundtrip_all_sizes_1_to_40() {
+    check("fft-roundtrip", PropConfig { cases: 40, seed: 1 }, |rng, case| {
+        let n = case + 1; // covers pow2, even, odd, prime sizes
+        let x = rand_vec(rng, n);
+        let y = ifft(&fft(&x));
+        for (i, (a, b)) in x.iter().zip(&y).enumerate() {
+            if (*a - *b).abs() > 1e-9 {
+                return Err(format!("n={n} idx={i}: roundtrip off"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn linearity_property() {
+    check("fft-linearity", PropConfig { cases: 24, seed: 2 }, |rng, case| {
+        let n = 3 + case; // mixed pow2 / non-pow2
+        let a = rand_vec(rng, n);
+        let b = rand_vec(rng, n);
+        let alpha = rng.uniform(-2.0, 2.0);
+        let combo: Vec<C64> = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| x.scale(alpha) + *y)
+            .collect();
+        let fa = fft(&a);
+        let fb = fft(&b);
+        let fc = fft(&combo);
+        for i in 0..n {
+            let want = fa[i].scale(alpha) + fb[i];
+            if (fc[i] - want).abs() > 1e-8 {
+                return Err(format!("n={n} idx={i}: not linear"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parseval_property() {
+    check("fft-parseval", PropConfig { cases: 24, seed: 3 }, |rng, case| {
+        let n = 2 + case;
+        let x = rand_vec(rng, n);
+        let f = fft(&x);
+        let e_time: f64 = x.iter().map(|v| v.norm_sqr()).sum();
+        let e_freq: f64 =
+            f.iter().map(|v| v.norm_sqr()).sum::<f64>() / n as f64;
+        if (e_time - e_freq).abs() > 1e-8 * (1.0 + e_time) {
+            return Err(format!("n={n}: {e_time} vs {e_freq}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn bluestein_matches_naive_on_primes() {
+    let mut rng = Rng::new(4);
+    for n in [2usize, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 53] {
+        let x = rand_vec(&mut rng, n);
+        let got = fft(&x);
+        let want = naive_dft(&x);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((*g - *w).abs() < 1e-8, "prime n={n} idx={i}");
+        }
+    }
+}
+
+#[test]
+fn fft2_roundtrip_non_power_of_two_grids() {
+    let mut rng = Rng::new(5);
+    for (rows, cols) in [(3usize, 5usize), (7, 7), (6, 10), (9, 4), (1, 13)] {
+        let g = rand_vec(&mut rng, rows * cols);
+        let f = fft2(&g, rows, cols, false);
+        let back = fft2(&f, rows, cols, true);
+        for (i, (a, b)) in g.iter().zip(&back).enumerate() {
+            assert!(
+                (*a - *b).abs() < 1e-9,
+                "{rows}x{cols} idx={i}: 2D roundtrip off"
+            );
+        }
+    }
+}
+
+#[test]
+fn shift_theorem_on_bluestein_sizes() {
+    // x delayed by one sample multiplies spectrum by e^{-2 pi i k / n}
+    let mut rng = Rng::new(6);
+    for n in [5usize, 9, 12, 21] {
+        let x = rand_vec(&mut rng, n);
+        let mut shifted = vec![C64::default(); n];
+        for i in 0..n {
+            shifted[(i + 1) % n] = x[i];
+        }
+        let fx = fft(&x);
+        let fs = fft(&shifted);
+        for k in 0..n {
+            let phase =
+                C64::cis(-2.0 * std::f64::consts::PI * k as f64 / n as f64);
+            assert!((fs[k] - fx[k] * phase).abs() < 1e-8, "n={n} k={k}");
+        }
+    }
+}

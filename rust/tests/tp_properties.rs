@@ -1,0 +1,110 @@
+//! Property tests for the tentpole: plans served by the cache must agree
+//! with the coupling-tensor baseline and stay equivariant under random
+//! rotations — for both convolution backends.
+
+use gaunt_tp::num_coeffs;
+use gaunt_tp::so3::gaunt::gaunt_tensor_real;
+use gaunt_tp::so3::linalg::matvec;
+use gaunt_tp::so3::rotation::{wigner_d_real_block, Rot3};
+use gaunt_tp::tp::engine::PlanCache;
+use gaunt_tp::tp::ConvMethod;
+use gaunt_tp::util::prop::{check, max_abs_diff, PropConfig};
+
+/// The CG-projected baseline: contract the exact Gaunt coupling tensor
+/// (the even-parity, Wigner-Eckart-scaled projection of the CG tensor)
+/// directly — O(L^6), used only as an oracle.
+fn baseline(x1: &[f64], l1: usize, x2: &[f64], l2: usize, l3: usize) -> Vec<f64> {
+    let g = gaunt_tensor_real(l1, l2, l3);
+    let (n1, n2, n3) = (num_coeffs(l1), num_coeffs(l2), num_coeffs(l3));
+    let mut out = vec![0.0; n3];
+    for k in 0..n3 {
+        for i in 0..n1 {
+            for j in 0..n2 {
+                out[k] += g[(k * n1 + i) * n2 + j] * x1[i] * x2[j];
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn cached_plans_match_cg_projected_baseline() {
+    check(
+        "cache-gaunt-vs-baseline",
+        PropConfig { cases: 12, seed: 0xBEEF },
+        |rng, case| {
+            let l1 = 1 + case % 3;
+            let l2 = 1 + (case / 2) % 3;
+            let l3 = 1 + (case / 4) % 4;
+            let x1 = rng.normals(num_coeffs(l1));
+            let x2 = rng.normals(num_coeffs(l2));
+            let want = baseline(&x1, l1, &x2, l2, l3);
+            for method in [ConvMethod::Direct, ConvMethod::Fft] {
+                let plan = PlanCache::global().gaunt(l1, l2, l3, method);
+                let got = plan.apply(&x1, &x2);
+                let d = max_abs_diff(&got, &want);
+                if d > 1e-9 {
+                    return Err(format!(
+                        "({l1},{l2},{l3}) {method:?}: |diff| = {d}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cached_plans_equivariant_under_random_rotations() {
+    check(
+        "cache-gaunt-equivariance",
+        PropConfig { cases: 10, seed: 0xD1CE },
+        |rng, case| {
+            let l = 1 + case % 3;
+            let rot = Rot3::random(rng);
+            let d_in = wigner_d_real_block(l, &rot);
+            let d_out = wigner_d_real_block(2 * l, &rot);
+            let n = num_coeffs(l);
+            let nn = num_coeffs(2 * l);
+            let x1 = rng.normals(n);
+            let x2 = rng.normals(n);
+            for method in [ConvMethod::Direct, ConvMethod::Fft] {
+                let plan = PlanCache::global().gaunt(l, l, 2 * l, method);
+                let rotated_inputs = plan.apply(
+                    &matvec(&d_in, &x1, n, n),
+                    &matvec(&d_in, &x2, n, n),
+                );
+                let rotated_output =
+                    matvec(&d_out, &plan.apply(&x1, &x2), nn, nn);
+                let d = max_abs_diff(&rotated_inputs, &rotated_output);
+                if d > 1e-8 {
+                    return Err(format!("L={l} {method:?}: |diff| = {d}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Truncated outputs from the cache agree with prefixes of wider plans —
+/// two different cache keys, one algebraic identity.
+#[test]
+fn cached_truncation_matches_projection() {
+    let cache = PlanCache::global();
+    check(
+        "cache-truncation",
+        PropConfig { cases: 8, seed: 0xFADE },
+        |rng, _| {
+            let x1 = rng.normals(num_coeffs(3));
+            let x2 = rng.normals(num_coeffs(2));
+            let full = cache.gaunt(3, 2, 5, ConvMethod::Fft).apply(&x1, &x2);
+            let trunc = cache.gaunt(3, 2, 2, ConvMethod::Fft).apply(&x1, &x2);
+            let d = max_abs_diff(&trunc, &full[..num_coeffs(2)]);
+            if d < 1e-10 {
+                Ok(())
+            } else {
+                Err(format!("truncation mismatch {d}"))
+            }
+        },
+    );
+}

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verification, runnable from a clean offline checkout:
+#   cargo build --release && cargo test -q
+# No network, no crate registry, no Python artifacts required — tests that
+# need AOT artifacts print an explicit SKIP line and pass.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "verify: OK"

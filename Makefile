@@ -5,12 +5,15 @@
 #   make build      - release build only
 #   make test       - test suite only
 #   make bench      - run every native bench target
+#   make bench-snapshot - run the fig1a/fig1b/table2 benches and write
+#                     machine-readable BENCH_fourier.json at the repo
+#                     root (SMOKE=1 for a 1 ms plumbing check)
 #   make artifacts  - (needs JAX) AOT-compile the Pallas/XLA artifacts
 #                     with python/compile/aot.py into rust/artifacts/
 
 RUST_DIR := rust
 
-.PHONY: verify build test bench artifacts clean
+.PHONY: verify build test bench bench-snapshot artifacts clean
 
 verify:
 	bash scripts/verify.sh
@@ -23,6 +26,9 @@ test:
 
 bench:
 	cd $(RUST_DIR) && cargo bench
+
+bench-snapshot:
+	bash scripts/bench_snapshot.sh
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(RUST_DIR)/artifacts

@@ -6,12 +6,20 @@
 //! reports GPU wallclock; we reproduce the *scaling shape and crossovers*
 //! on CPU (DESIGN.md §3), plus the end-to-end compiled (Pallas->XLA)
 //! kernels where artifacts exist.
+//!
+//! Before/after rows for the Fourier plan layer: `gaunt_fft_legacy` is
+//! the allocating sh2f -> conv2d_fft -> f2sh pipeline (the pre-plan
+//! implementation), `gaunt_fft` the planned Hermitian path.
+//!
+//! `--smoke`: one tiny size, 1 ms budgets, no TSV (CI liveness check).
 
+use gaunt_tp::fourier::conv::conv2d_fft;
+use gaunt_tp::fourier::tables::sh2f_panels;
 use gaunt_tp::num_coeffs;
 use gaunt_tp::runtime::{Engine, Tensor};
 use gaunt_tp::tp::engine::{cg_apply_batch_par, gaunt_apply_batch_par, PlanCache};
 use gaunt_tp::tp::{CgPlan, ConvMethod, GauntPlan};
-use gaunt_tp::util::bench::{consume, BenchTable};
+use gaunt_tp::util::bench::{budget_ms, consume, smoke, BenchTable};
 use gaunt_tp::util::pool;
 use gaunt_tp::util::rng::Rng;
 
@@ -21,17 +29,20 @@ fn main() {
         "fig1a: feature interaction, full TP x->x (batch of 16 pairs)",
     );
     let batch = 16usize;
-    for l in [1usize, 2, 3, 4, 5, 6, 8] {
+    let ls: &[usize] =
+        if smoke() { &[2] } else { &[1, 2, 3, 4, 5, 6, 8] };
+    let budget = budget_ms(150);
+    for &l in ls {
         let n = num_coeffs(l);
         let x1 = rng.normals(batch * n);
         let x2 = rng.normals(batch * n);
         // CG baseline (sparse nonzero iteration, as e3nn compiles it)
         let cg = CgPlan::new(l, l, l);
-        t.run(&format!("cg_sparse       L={l} (nnz={})", cg.nnz()), 150, || {
+        t.run(&format!("cg_sparse       L={l} (nnz={})", cg.nnz()), budget, || {
             consume(cg.apply_batch(&x1, &x2, batch));
         });
-        if l <= 5 {
-            t.run(&format!("cg_dense        L={l}"), 150, || {
+        if l <= 5 && !smoke() {
+            t.run(&format!("cg_dense        L={l}"), budget, || {
                 let mut out = Vec::new();
                 for r in 0..batch {
                     out = cg.apply_dense(&x1[r * n..(r + 1) * n],
@@ -42,61 +53,83 @@ fn main() {
         }
         // Gaunt TP
         let gd = GauntPlan::new(l, l, l, ConvMethod::Direct);
-        t.run(&format!("gaunt_direct    L={l}"), 150, || {
+        t.run(&format!("gaunt_direct    L={l}"), budget, || {
             consume(gd.apply_batch(&x1, &x2, batch));
         });
         let gf = GauntPlan::new(l, l, l, ConvMethod::Fft);
-        t.run(&format!("gaunt_fft       L={l}"), 150, || {
+        t.run(&format!("gaunt_fft       L={l}"), budget, || {
             consume(gf.apply_batch(&x1, &x2, batch));
+        });
+        // legacy (pre-plan) FFT pipeline: allocating conv2d_fft with
+        // per-stage twiddle recomputation — the "before" row
+        let panels = sh2f_panels(l);
+        let n_side = 2 * l + 1;
+        t.run(&format!("gaunt_fft_legacy L={l}"), budget, || {
+            let mut out = Vec::new();
+            for r in 0..batch {
+                let u1 = GauntPlan::sh2f(&panels, &x1[r * n..(r + 1) * n]);
+                let u2 = GauntPlan::sh2f(&panels, &x2[r * n..(r + 1) * n]);
+                let u3 = conv2d_fft(&u1, n_side, &u2, n_side);
+                out = gf.f2sh(&u3);
+            }
+            consume(out);
         });
     }
     // engine rows: cached plans + multi-threaded batched apply (the
     // serving configuration; single-thread rows above are the baseline)
-    let threads = pool::default_threads();
-    let batch_par = 64usize;
-    let cache = PlanCache::global();
-    for l in [2usize, 4, 6, 8] {
-        let n = num_coeffs(l);
-        let x1 = rng.normals(batch_par * n);
-        let x2 = rng.normals(batch_par * n);
-        let gf = cache.gaunt(l, l, l, ConvMethod::Fft);
-        t.run(
-            &format!("gaunt_fft_par   L={l} B={batch_par} x{threads}"),
-            150,
-            || {
-                consume(gaunt_apply_batch_par(&gf, &x1, &x2, batch_par, 0));
-            },
-        );
-        if l <= 6 {
-            let cg = cache.cg(l, l, l);
+    if !smoke() {
+        let threads = pool::default_threads();
+        let batch_par = 64usize;
+        let cache = PlanCache::global();
+        for l in [2usize, 4, 6, 8] {
+            let n = num_coeffs(l);
+            let x1 = rng.normals(batch_par * n);
+            let x2 = rng.normals(batch_par * n);
+            let gf = cache.gaunt(l, l, l, ConvMethod::Fft);
             t.run(
-                &format!("cg_sparse_par   L={l} B={batch_par} x{threads}"),
-                150,
+                &format!("gaunt_fft_par   L={l} B={batch_par} x{threads}"),
+                budget,
                 || {
-                    consume(cg_apply_batch_par(&cg, &x1, &x2, batch_par, 0));
+                    consume(gaunt_apply_batch_par(&gf, &x1, &x2, batch_par, 0));
                 },
             );
+            if l <= 6 {
+                let cg = cache.cg(l, l, l);
+                t.run(
+                    &format!("cg_sparse_par   L={l} B={batch_par} x{threads}"),
+                    budget,
+                    || {
+                        consume(cg_apply_batch_par(&cg, &x1, &x2, batch_par, 0));
+                    },
+                );
+            }
         }
     }
 
     // compiled end-to-end kernels (same execution stack for both methods)
-    if let Ok(engine) = Engine::new("artifacts") {
-        let mut rng = Rng::new(1);
-        for l in [1usize, 2, 3, 4] {
-            let n = num_coeffs(l);
-            for op in ["gaunt_tp", "cg_tp"] {
-                let name = format!("{op}_L{l}_B64");
-                if let Ok(exe) = engine.load(&name) {
-                    let x1 = Tensor::F32(rng.normals_f32(64 * n));
-                    let x2 = Tensor::F32(rng.normals_f32(64 * n));
-                    t.run(&format!("xla_{op:<10} L={l} B=64"), 200, || {
-                        consume(exe.run(&[x1.clone(), x2.clone()]).unwrap());
-                    });
+    if !smoke() {
+        if let Ok(engine) = Engine::new("artifacts") {
+            let mut rng = Rng::new(1);
+            for l in [1usize, 2, 3, 4] {
+                let n = num_coeffs(l);
+                for op in ["gaunt_tp", "cg_tp"] {
+                    let name = format!("{op}_L{l}_B64");
+                    if let Ok(exe) = engine.load(&name) {
+                        let x1 = Tensor::F32(rng.normals_f32(64 * n));
+                        let x2 = Tensor::F32(rng.normals_f32(64 * n));
+                        t.run(&format!("xla_{op:<10} L={l} B=64"), 200, || {
+                            consume(exe.run(&[x1.clone(), x2.clone()]).unwrap());
+                        });
+                    }
                 }
             }
+        } else {
+            println!("(artifacts/ missing — skipping compiled-kernel rows)");
         }
-    } else {
-        println!("(artifacts/ missing — skipping compiled-kernel rows)");
     }
-    t.write_tsv("fig1a");
+    if smoke() {
+        println!("[smoke] fig1a OK ({} rows)", t.rows.len());
+    } else {
+        t.write_tsv("fig1a");
+    }
 }

@@ -5,20 +5,31 @@
 //! filter (single Fourier column) speed-up.  Aligned-frame numbers isolate
 //! the contraction cost (the rotation round trip is common to both); the
 //! `+rot` rows include it.
+//!
+//! `gaunt_conv_fft` exercises the plan-cached filter-spectrum path (the
+//! filter is never transformed at apply time) against the direct
+//! single-column sweep — the measurement behind
+//! `escn::GAUNT_CONV_FFT_CROSSOVER`.
+//!
+//! `--smoke`: one tiny size, 1 ms budgets, no TSV (CI liveness check).
 
 use gaunt_tp::num_coeffs;
-use gaunt_tp::tp::engine::{escn_apply_batch_par, PlanCache};
+use gaunt_tp::tp::engine::{
+    escn_apply_batch_par, gaunt_conv_apply_batch_par, PlanCache,
+};
 use gaunt_tp::tp::escn::{EscnPlan, GauntConvPlan};
 use gaunt_tp::tp::{CgPlan, ConvMethod, GauntPlan};
 use gaunt_tp::so3::sh::real_sh_all_xyz;
-use gaunt_tp::util::bench::{consume, BenchTable};
+use gaunt_tp::util::bench::{budget_ms, consume, smoke, BenchTable};
 use gaunt_tp::util::pool;
 use gaunt_tp::util::rng::Rng;
 
 fn main() {
     let mut rng = Rng::new(0);
     let mut t = BenchTable::new("fig1b: equivariant convolution (per edge)");
-    for l in [1usize, 2, 3, 4, 5, 6] {
+    let ls: &[usize] = if smoke() { &[2] } else { &[1, 2, 3, 4, 5, 6] };
+    let budget = budget_ms(100);
+    for &l in ls {
         let n = num_coeffs(l);
         let x = rng.normals(n);
         let dir = rng.unit3();
@@ -26,33 +37,43 @@ fn main() {
         // naive e3nn-style: full CG contraction with the full SH filter
         let cg = CgPlan::new(l, l, l);
         let ysh = real_sh_all_xyz(l, dir);
-        t.run(&format!("e3nn_full_filter  L={l}"), 100, || {
+        t.run(&format!("e3nn_full_filter  L={l}"), budget, || {
             consume(cg.apply_sparse(&x, &ysh));
         });
 
         // eSCN: aligned-frame SO(2) contraction
         let escn = EscnPlan::new(l, l, l);
         let h: Vec<f64> = (0..escn.n_paths()).map(|_| 1.0).collect();
-        t.run(&format!("escn_aligned      L={l}"), 100, || {
+        t.run(&format!("escn_aligned      L={l}"), budget, || {
             consume(escn.apply_aligned(&x, &h));
         });
-        t.run(&format!("escn_aligned+rot  L={l}"), 100, || {
+        t.run(&format!("escn_aligned+rot  L={l}"), budget, || {
             consume(escn.apply(&x, dir, &h));
         });
 
-        // Gaunt conv: aligned filter => single-column convolution
+        // Gaunt conv: aligned filter => single-column convolution, vs the
+        // cached-filter-spectrum FFT evaluation of the same contraction
+        // (both over a held scratch, so the rows measure compute, not
+        // allocator traffic)
         let gconv = GauntConvPlan::new(l, l, l);
         let h2: Vec<f64> = (0..=l).map(|_| 1.0).collect();
-        t.run(&format!("gaunt_conv        L={l}"), 100, || {
-            consume(gconv.apply_aligned(&x, &h2));
+        let mut gscratch = gconv.scratch();
+        let mut gout = vec![0.0; n];
+        t.run(&format!("gaunt_conv        L={l}"), budget, || {
+            gconv.apply_aligned_direct_into(&x, &h2, &mut gout, &mut gscratch);
+            consume(&gout);
         });
-        t.run(&format!("gaunt_conv+rot    L={l}"), 100, || {
-            consume(gconv.apply(&x, dir, &h2));
+        t.run(&format!("gaunt_conv_fft    L={l}"), budget, || {
+            gconv.apply_aligned_fft_into(&x, &h2, &mut gout, &mut gscratch);
+            consume(&gout);
+        });
+        t.run(&format!("gaunt_conv+rot    L={l}"), budget, || {
+            consume(gconv.apply_with(&x, dir, &h2, &mut gscratch));
         });
 
         // Gaunt without the eSCN sparsity (full filter through the plan)
         let gfull = GauntPlan::new(l, l, l, ConvMethod::Auto);
-        t.run(&format!("gaunt_full_filter L={l}"), 100, || {
+        t.run(&format!("gaunt_full_filter L={l}"), budget, || {
             consume(gfull.apply(&x, &ysh));
         });
     }
@@ -60,25 +81,42 @@ fn main() {
     // batched edge convolution through the engine: a realistic message-
     // passing layer convolves many edges at once — single-thread vs the
     // sharded worker pool over cached plans
-    let threads = pool::default_threads();
-    let edges = 64usize;
-    let cache = PlanCache::global();
-    for l in [2usize, 4] {
-        let n = num_coeffs(l);
-        let escn = cache.escn(l, l, l);
-        let h: Vec<f64> = (0..escn.n_paths()).map(|_| 1.0).collect();
-        let xs = rng.normals(edges * n);
-        let dirs: Vec<[f64; 3]> = (0..edges).map(|_| rng.unit3()).collect();
-        t.run(&format!("escn_batch        L={l} E={edges} x1"), 100, || {
-            consume(escn.apply_batch(&xs, &dirs, &h));
-        });
-        t.run(
-            &format!("escn_batch_par    L={l} E={edges} x{threads}"),
-            100,
-            || {
-                consume(escn_apply_batch_par(&escn, &xs, &dirs, &h, 0));
-            },
-        );
+    if !smoke() {
+        let threads = pool::default_threads();
+        let edges = 64usize;
+        let cache = PlanCache::global();
+        for l in [2usize, 4] {
+            let n = num_coeffs(l);
+            let escn = cache.escn(l, l, l);
+            let h: Vec<f64> = (0..escn.n_paths()).map(|_| 1.0).collect();
+            let xs = rng.normals(edges * n);
+            let dirs: Vec<[f64; 3]> = (0..edges).map(|_| rng.unit3()).collect();
+            t.run(&format!("escn_batch        L={l} E={edges} x1"), budget, || {
+                consume(escn.apply_batch(&xs, &dirs, &h));
+            });
+            t.run(
+                &format!("escn_batch_par    L={l} E={edges} x{threads}"),
+                budget,
+                || {
+                    consume(escn_apply_batch_par(&escn, &xs, &dirs, &h, 0));
+                },
+            );
+            let gconv = cache.gaunt_conv(l, l, l);
+            let h2: Vec<f64> = (0..=l).map(|_| 1.0).collect();
+            t.run(
+                &format!("gaunt_conv_par    L={l} E={edges} x{threads}"),
+                budget,
+                || {
+                    consume(gaunt_conv_apply_batch_par(
+                        &gconv, &xs, &dirs, &h2, 0,
+                    ));
+                },
+            );
+        }
     }
-    t.write_tsv("fig1b");
+    if smoke() {
+        println!("[smoke] fig1b OK ({} rows)", t.rows.len());
+    } else {
+        t.write_tsv("fig1b");
+    }
 }

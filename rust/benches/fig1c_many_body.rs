@@ -3,48 +3,74 @@
 //! (a) fix nu = 3, sweep L;  (b) fix L = 2, sweep nu — against the
 //! e3nn-style pairwise CG fold and the MACE-style precomputed composite
 //! tensor (which trades memory for speed; its footprint is reported).
+//!
+//! `gaunt_plan` / `gaunt_plan_self` are the planned final-size-transform
+//! rows (pointwise sample products instead of chained grid convolutions;
+//! the self-product does a single transform + pointwise nu-th power).
+//!
+//! `--smoke`: one tiny size, 1 ms budgets, no TSV (CI liveness check).
 
 use gaunt_tp::num_coeffs;
 use gaunt_tp::tp::many_body::{
-    many_body_cg_fold, many_body_gaunt, MaceStylePlan,
+    many_body_cg_fold, many_body_gaunt, MaceStylePlan, ManyBodyPlan,
 };
-use gaunt_tp::util::bench::{consume, BenchTable};
+use gaunt_tp::util::bench::{budget_ms, consume, smoke, BenchTable};
 use gaunt_tp::util::rng::Rng;
 
 fn main() {
     let mut rng = Rng::new(0);
+    let budget = budget_ms(120);
 
     let mut t = BenchTable::new("fig1c-a: many-body, nu=3, sweep L");
-    for l in [1usize, 2, 3] {
+    let ls: &[usize] = if smoke() { &[1] } else { &[1, 2, 3] };
+    for &l in ls {
         let xs: Vec<Vec<f64>> =
             (0..3).map(|_| rng.normals(num_coeffs(l))).collect();
-        t.run(&format!("e3nn_cg_fold    L={l}"), 120, || {
+        t.run(&format!("e3nn_cg_fold    L={l}"), budget, || {
             consume(many_body_cg_fold(&xs, l, l, 3 * l));
         });
         let mace = MaceStylePlan::new(3, l, l);
         t.run(
             &format!("mace_precomp    L={l} (mem {} KiB)",
                      mace.memory_bytes() / 1024),
-            120,
+            budget,
             || {
                 consume(mace.apply_self(&xs[0]));
             },
         );
-        t.run(&format!("gaunt_seq       L={l}"), 120, || {
+        t.run(&format!("gaunt_seq       L={l}"), budget, || {
             consume(many_body_gaunt(&xs, l, l, false));
         });
-        t.run(&format!("gaunt_dc        L={l}"), 120, || {
+        t.run(&format!("gaunt_dc        L={l}"), budget, || {
             consume(many_body_gaunt(&xs, l, l, true));
         });
+        let plan = ManyBodyPlan::new(3, l, l);
+        let mut scratch = plan.scratch();
+        let mut out = vec![0.0; num_coeffs(l)];
+        t.run(&format!("gaunt_plan      L={l}"), budget, || {
+            plan.apply_into(&xs, &mut out, &mut scratch);
+            consume(&out);
+        });
+        t.run(&format!("gaunt_plan_self L={l}"), budget, || {
+            plan.apply_self_into(&xs[0], &mut out, &mut scratch);
+            consume(&out);
+        });
     }
-    t.write_tsv("fig1c_sweep_l");
+    if !smoke() {
+        t.write_tsv("fig1c_sweep_l");
+    }
+
+    if smoke() {
+        println!("[smoke] fig1c OK ({} rows)", t.rows.len());
+        return;
+    }
 
     let mut t2 = BenchTable::new("fig1c-b: many-body, L=2, sweep nu");
     let l = 2usize;
     for nu in [2usize, 3, 4] {
         let xs: Vec<Vec<f64>> =
             (0..nu).map(|_| rng.normals(num_coeffs(l))).collect();
-        t2.run(&format!("e3nn_cg_fold    nu={nu}"), 120, || {
+        t2.run(&format!("e3nn_cg_fold    nu={nu}"), budget, || {
             consume(many_body_cg_fold(&xs, l, l, nu * l));
         });
         if nu <= 3 {
@@ -52,17 +78,28 @@ fn main() {
             t2.run(
                 &format!("mace_precomp    nu={nu} (mem {} KiB)",
                          mace.memory_bytes() / 1024),
-                120,
+                budget,
                 || {
                     consume(mace.apply_self(&xs[0]));
                 },
             );
         }
-        t2.run(&format!("gaunt_seq       nu={nu}"), 120, || {
+        t2.run(&format!("gaunt_seq       nu={nu}"), budget, || {
             consume(many_body_gaunt(&xs, l, l, false));
         });
-        t2.run(&format!("gaunt_dc        nu={nu}"), 120, || {
+        t2.run(&format!("gaunt_dc        nu={nu}"), budget, || {
             consume(many_body_gaunt(&xs, l, l, true));
+        });
+        let plan = ManyBodyPlan::new(nu, l, l);
+        let mut scratch = plan.scratch();
+        let mut out = vec![0.0; num_coeffs(l)];
+        t2.run(&format!("gaunt_plan      nu={nu}"), budget, || {
+            plan.apply_into(&xs, &mut out, &mut scratch);
+            consume(&out);
+        });
+        t2.run(&format!("gaunt_plan_self nu={nu}"), budget, || {
+            plan.apply_self_into(&xs[0], &mut out, &mut scratch);
+            consume(&out);
         });
     }
     t2.write_tsv("fig1c_sweep_nu");

@@ -2,47 +2,174 @@
 //! Gaunt parameterization vs the CG baseline, measured end-to-end on the
 //! compiled train-step artifacts, plus the many-body memory comparison
 //! (MACE-style precomputed tensors vs the Gaunt pipeline's tables).
+//!
+//! Also the Fourier-plan-layer acceptance measurement: per-L single-pair
+//! Gaunt TP through (a) the planned Hermitian FFT path, (b) the legacy
+//! allocating `conv2d_fft` path, and (c) the direct convolution — with
+//! explicit `speedup_*` ratio rows in the TSV and the measured
+//! Direct/FFT crossover (the constant behind `ConvMethod::Auto`,
+//! `gaunt::AUTO_FFT_CROSSOVER`).
+//!
+//! `--smoke`: one tiny size, 1 ms budgets, no TSV (CI liveness check).
 
 use gaunt_tp::data::{gen_bpa_dataset, PaddedBatch};
 use gaunt_tp::experiments::ff_batch_tensors;
+use gaunt_tp::fourier::conv::conv2d_fft;
 use gaunt_tp::num_coeffs;
 use gaunt_tp::runtime::Engine;
 use gaunt_tp::tp::engine::{gaunt_apply_batch_par, PlanCache};
 use gaunt_tp::tp::many_body::MaceStylePlan;
-use gaunt_tp::tp::ConvMethod;
+use gaunt_tp::tp::{ConvMethod, GauntPlan};
 use gaunt_tp::fourier::tables::{f2sh_panels, sh2f_panels};
-use gaunt_tp::util::bench::{consume, BenchTable};
+use gaunt_tp::util::bench::{budget_ms, consume, smoke, BenchTable,
+                            Measurement};
 use gaunt_tp::util::pool;
 use gaunt_tp::util::rng::Rng;
 
 fn main() {
+    let budget = budget_ms(300);
     let mut t = BenchTable::new("table2: train-step speed (batch 8) + memory");
-    match Engine::new("artifacts") {
-        Ok(engine) => {
-            let graphs = gen_bpa_dataset(&[0.05], 8, 3).remove(0);
-            let pb = PaddedBatch::from_graphs(&graphs, 8, 32, 128, 4.0);
-            for variant in ["gaunt", "cg"] {
-                let exe = match engine.load(&format!("ff_train_step_{variant}")) {
-                    Ok(e) => e,
-                    Err(e) => {
-                        println!("skipping {variant}: {e}");
-                        continue;
-                    }
-                };
-                let state: Vec<_> = engine
-                    .load_state_blob(&format!("ff_state_init_{variant}"))
-                    .unwrap()
-                    .into_iter()
-                    .map(|(_, x)| x)
-                    .collect();
-                let mut inputs = state.clone();
-                inputs.extend(ff_batch_tensors(&pb, true));
-                t.run(&format!("train_step_{variant}"), 2500, || {
-                    consume(exe.run(&inputs).unwrap());
-                });
+    if !smoke() {
+        match Engine::new("artifacts") {
+            Ok(engine) => {
+                let graphs = gen_bpa_dataset(&[0.05], 8, 3).remove(0);
+                let pb = PaddedBatch::from_graphs(&graphs, 8, 32, 128, 4.0);
+                for variant in ["gaunt", "cg"] {
+                    let exe = match engine
+                        .load(&format!("ff_train_step_{variant}"))
+                    {
+                        Ok(e) => e,
+                        Err(e) => {
+                            println!("skipping {variant}: {e}");
+                            continue;
+                        }
+                    };
+                    let state: Vec<_> = engine
+                        .load_state_blob(&format!("ff_state_init_{variant}"))
+                        .unwrap()
+                        .into_iter()
+                        .map(|(_, x)| x)
+                        .collect();
+                    let mut inputs = state.clone();
+                    inputs.extend(ff_batch_tensors(&pb, true));
+                    t.run(&format!("train_step_{variant}"), 2500, || {
+                        consume(exe.run(&inputs).unwrap());
+                    });
+                }
             }
+            Err(e) => println!("(artifacts missing: {e})"),
         }
-        Err(e) => println!("(artifacts missing: {e})"),
+    }
+
+    // ------------------------------------------------------------------
+    // Fourier plan layer: planned FFT vs legacy conv2d_fft vs direct,
+    // single pair per iteration, per degree L (l1 = l2 = l3 = L).
+    // ------------------------------------------------------------------
+    let mut rng = Rng::new(0);
+    let mut fp = BenchTable::new(
+        "table2: Gaunt conv backends per L (planned vs legacy vs direct)",
+    );
+    let ls: &[usize] = if smoke() { &[2] } else { &[2, 3, 4, 5, 6, 8] };
+    let mut trio: Vec<(usize, f64, f64, f64)> = Vec::new();
+    for &l in ls {
+        let n = num_coeffs(l);
+        let x1 = rng.normals(n);
+        let x2 = rng.normals(n);
+        let planned = GauntPlan::new(l, l, l, ConvMethod::Fft);
+        let mut scratch = planned.scratch();
+        let mut out = vec![0.0; n];
+        let m_planned = {
+            let m = gaunt_tp::util::bench::bench(
+                &format!("gaunt_fft_planned L={l}"),
+                budget,
+                || {
+                    planned.apply_into(&x1, &x2, &mut out, &mut scratch);
+                    consume(&out);
+                },
+            );
+            fp.add(m.clone());
+            m
+        };
+        let panels = sh2f_panels(l);
+        let n_side = 2 * l + 1;
+        let m_legacy = {
+            let m = gaunt_tp::util::bench::bench(
+                &format!("gaunt_fft_legacy  L={l}"),
+                budget,
+                || {
+                    let u1 = GauntPlan::sh2f(&panels, &x1);
+                    let u2 = GauntPlan::sh2f(&panels, &x2);
+                    let u3 = conv2d_fft(&u1, n_side, &u2, n_side);
+                    consume(planned.f2sh(&u3));
+                },
+            );
+            fp.add(m.clone());
+            m
+        };
+        let direct = GauntPlan::new(l, l, l, ConvMethod::Direct);
+        let mut dscratch = direct.scratch();
+        let m_direct = {
+            let m = gaunt_tp::util::bench::bench(
+                &format!("gaunt_direct      L={l}"),
+                budget,
+                || {
+                    direct.apply_into(&x1, &x2, &mut out, &mut dscratch);
+                    consume(&out);
+                },
+            );
+            fp.add(m.clone());
+            m
+        };
+        trio.push((
+            l,
+            m_planned.median_ns,
+            m_legacy.median_ns,
+            m_direct.median_ns,
+        ));
+    }
+    // ratio rows (median_ns carries the ratio; mad 0, iters 0 marks them
+    // as derived) + measured crossover
+    println!("\n-- planned-FFT speedups (ratio > 1 means planned wins) --");
+    let mut crossover: Option<usize> = None;
+    for &(l, p, leg, d) in &trio {
+        let vs_legacy = leg / p;
+        let vs_direct = d / p;
+        println!(
+            "L={l}: legacy/planned = {vs_legacy:.2}x   \
+             direct/planned = {vs_direct:.2}x"
+        );
+        fp.add(Measurement {
+            name: format!("speedup_legacy_over_planned L={l}"),
+            median_ns: vs_legacy,
+            mad_ns: 0.0,
+            iters: 0,
+        });
+        fp.add(Measurement {
+            name: format!("speedup_direct_over_planned L={l}"),
+            median_ns: vs_direct,
+            mad_ns: 0.0,
+            iters: 0,
+        });
+        if crossover.is_none() && vs_direct >= 1.0 {
+            crossover = Some(l);
+        }
+    }
+    match crossover {
+        Some(l) => println!(
+            "measured Direct->FFT crossover: L = {l} (l1 + l2 = {}); \
+             ConvMethod::Auto ships AUTO_FFT_CROSSOVER = {}",
+            2 * l,
+            gaunt_tp::tp::gaunt::AUTO_FFT_CROSSOVER
+        ),
+        None => println!(
+            "direct conv won at every measured L (crossover above L = {}); \
+             ConvMethod::Auto ships AUTO_FFT_CROSSOVER = {}",
+            ls.last().unwrap(),
+            gaunt_tp::tp::gaunt::AUTO_FFT_CROSSOVER
+        ),
+    }
+    if !smoke() {
+        fp.write_tsv("table2_fourier_plan");
     }
 
     // batched-TP speed: single-thread vs the engine's sharded worker pool
@@ -50,19 +177,19 @@ fn main() {
     // rows of Table 2
     let threads = pool::default_threads();
     let rows = 128usize;
-    let mut rng = Rng::new(0);
     let mut tp = BenchTable::new(&format!(
         "table2: batched Gaunt TP, rows={rows}, 1 vs {threads} threads"
     ));
-    for l in [2usize, 4, 6] {
+    let ls_tp: &[usize] = if smoke() { &[2] } else { &[2, 4, 6] };
+    for &l in ls_tp {
         let n = num_coeffs(l);
         let x1 = rng.normals(rows * n);
         let x2 = rng.normals(rows * n);
         let plan = PlanCache::global().gaunt(l, l, l, ConvMethod::Auto);
-        tp.run(&format!("gaunt_batch     L={l} x1"), 300, || {
+        tp.run(&format!("gaunt_batch     L={l} x1"), budget, || {
             consume(plan.apply_batch(&x1, &x2, rows));
         });
-        tp.run(&format!("gaunt_batch_par L={l} x{threads}"), 300, || {
+        tp.run(&format!("gaunt_batch_par L={l} x{threads}"), budget, || {
             consume(gaunt_apply_batch_par(&plan, &x1, &x2, rows, 0));
         });
     }
@@ -77,27 +204,36 @@ fn main() {
             );
         }
     }
-    tp.write_tsv("table2_tp_scaling");
+    if !smoke() {
+        tp.write_tsv("table2_tp_scaling");
+    }
 
     // memory: MACE-style composite coupling tensors vs Gaunt tables
-    println!("\n-- memory footprint (nu=3 many-body) --");
-    for l in [1usize, 2, 3] {
-        let mace = MaceStylePlan::new(3, l, l);
-        let p = sh2f_panels(l);
-        let f = f2sh_panels(l, 3 * l);
-        let gaunt_bytes: usize = p
-            .panels
-            .iter()
-            .chain(f.panels.iter())
-            .map(|v| v.len() * 16)
-            .sum();
+    if !smoke() {
+        println!("\n-- memory footprint (nu=3 many-body) --");
+        for l in [1usize, 2, 3] {
+            let mace = MaceStylePlan::new(3, l, l);
+            let p = sh2f_panels(l);
+            let f = f2sh_panels(l, 3 * l);
+            let gaunt_bytes: usize = p
+                .panels
+                .iter()
+                .chain(f.panels.iter())
+                .map(|v| v.len() * 16)
+                .sum();
+            println!(
+                "L={l}: mace_precomputed = {:>10} B   gaunt_tables = {:>8} B   \
+                 ratio {:.1}x",
+                mace.memory_bytes(),
+                gaunt_bytes,
+                mace.memory_bytes() as f64 / gaunt_bytes as f64
+            );
+        }
+        t.write_tsv("table2_speed");
+    } else {
         println!(
-            "L={l}: mace_precomputed = {:>10} B   gaunt_tables = {:>8} B   \
-             ratio {:.1}x",
-            mace.memory_bytes(),
-            gaunt_bytes,
-            mace.memory_bytes() as f64 / gaunt_bytes as f64
+            "[smoke] table2 OK ({} rows)",
+            t.rows.len() + fp.rows.len() + tp.rows.len()
         );
     }
-    t.write_tsv("table2_speed");
 }

@@ -114,6 +114,17 @@ impl Default for NativeGauntBackend {
     }
 }
 
+impl NativeGauntBackend {
+    /// Pre-build this backend's Gaunt plan in the global [`PlanCache`]
+    /// (tables + FFT workspaces) so the first request does not pay the
+    /// plan-construction stall — the native analog of the XLA path's
+    /// eager `engine.load()` of every variant.
+    pub fn warm(&self) {
+        let _ = PlanCache::global().gaunt(self.l, self.l, self.l,
+                                          ConvMethod::Auto);
+    }
+}
+
 impl Backend for NativeGauntBackend {
     fn run(
         &self, _variant: &Variant, pb: &PaddedBatch, _state: &[Tensor],
@@ -270,6 +281,10 @@ impl ForceFieldServer {
             Variant { name: "native_B4".to_string(), batch: 4 },
             Variant { name: "native_B8".to_string(), batch: 8 },
         ];
+        // cold-start off the request path, like the XLA variants' eager
+        // compile: build the plan (tables + FFT workspaces) before the
+        // first batch is flushed
+        backend.warm();
         let backend: Arc<dyn Backend> = Arc::new(backend);
         // 256 edge slots: a fully connected 16-atom structure fits with no
         // truncation, keeping the directed edge list exactly symmetric

@@ -1,16 +1,34 @@
 //! Full 2D convolution of complex coefficient grids: direct (small L) and
 //! FFT-based (the paper's O(L^2 log L) path).
+//!
+//! The allocating [`conv2d_fft`] here is the LEGACY FFT path (five fresh
+//! vectors and three full complex 2D transforms per call) — kept as the
+//! "before" row of the benches and as a cross-check oracle.  Hot paths
+//! use the planned, allocation-free [`super::plan::ConvPlan`] instead.
 
 use super::complex::C64;
 use super::fft::fft2;
+use super::plan::ConvPlan;
 
 /// Direct full convolution of an n1 x n1 grid with an n2 x n2 grid
 /// (row-major), producing (n1+n2-1)^2.
 pub fn conv2d_direct(a: &[C64], n1: usize, b: &[C64], n2: usize) -> Vec<C64> {
+    let n = n1 + n2 - 1;
+    let mut out = vec![C64::default(); n * n];
+    conv2d_direct_into(a, n1, b, n2, &mut out);
+    out
+}
+
+/// [`conv2d_direct`] into a caller-provided output buffer (overwritten);
+/// allocation-free.
+pub fn conv2d_direct_into(
+    a: &[C64], n1: usize, b: &[C64], n2: usize, out: &mut [C64],
+) {
     debug_assert_eq!(a.len(), n1 * n1);
     debug_assert_eq!(b.len(), n2 * n2);
     let n = n1 + n2 - 1;
-    let mut out = vec![C64::default(); n * n];
+    debug_assert_eq!(out.len(), n * n);
+    out.fill(C64::default());
     for i in 0..n1 {
         for j in 0..n1 {
             let av = a[i * n1 + j];
@@ -26,6 +44,19 @@ pub fn conv2d_direct(a: &[C64], n1: usize, b: &[C64], n2: usize) -> Vec<C64> {
             }
         }
     }
+}
+
+/// One-shot planned convolution (generic complex grids): identical output
+/// to [`conv2d_fft`] through the [`ConvPlan`] tables.  Builds a plan and
+/// scratch per call — for repeated shapes hold a `ConvPlan` and reuse its
+/// scratch instead.
+pub fn conv2d_fft_planned(
+    a: &[C64], n1: usize, b: &[C64], n2: usize,
+) -> Vec<C64> {
+    let plan = ConvPlan::new(n1, n2);
+    let mut scratch = plan.scratch();
+    let mut out = vec![C64::default(); plan.n_out * plan.n_out];
+    plan.conv_into(a, b, &mut out, &mut scratch);
     out
 }
 
@@ -95,6 +126,20 @@ mod tests {
             let d = conv2d_direct(&a, n1, &b, n2);
             let f = conv2d_fft(&a, n1, &b, n2);
             for (x, y) in d.iter().zip(&f) {
+                assert!((*x - *y).abs() < 1e-9, "n1={n1} n2={n2}");
+            }
+        }
+    }
+
+    #[test]
+    fn planned_matches_legacy_fft() {
+        let mut rng = Rng::new(7);
+        for (n1, n2) in [(3usize, 3usize), (5, 7), (9, 9), (1, 5), (2, 4)] {
+            let a = rand_grid(&mut rng, n1);
+            let b = rand_grid(&mut rng, n2);
+            let legacy = conv2d_fft(&a, n1, &b, n2);
+            let planned = conv2d_fft_planned(&a, n1, &b, n2);
+            for (x, y) in legacy.iter().zip(&planned) {
                 assert!((*x - *y).abs() < 1e-9, "n1={n1} n2={n2}");
             }
         }

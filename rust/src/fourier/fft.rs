@@ -1,48 +1,226 @@
 //! Complex FFT from scratch: iterative radix-2 Cooley-Tukey for powers of
 //! two, Bluestein's algorithm for arbitrary lengths, and 2D transforms.
+//!
+//! The hot paths go through [`FftPlan`]: per-size precomputed twiddle and
+//! bit-reversal tables (every twiddle is a direct `cis` evaluation — no
+//! incremental `w = w * wl` accumulation, whose rounding drift grows with
+//! the butterfly length), in-place 1D/2D transforms over caller-provided
+//! scratch, and a two-for-one real-input 2D forward transform.  Plans are
+//! read-only after construction and shared process-wide via
+//! [`FftPlan::shared`], so concurrent workers reuse one table set.
+
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
 
 use super::complex::C64;
 
+/// Precomputed radix-2 FFT tables for one power-of-two size.
+///
+/// Read-only after construction (safe to share across threads via `Arc`);
+/// all transforms are in place over caller-owned buffers and perform no
+/// allocation.  Forward is the unscaled DFT; `inverse` applies the
+/// conjugate transform, also WITHOUT the 1/n scaling (callers fold the
+/// scale into their own extraction step).
+pub struct FftPlan {
+    n: usize,
+    /// bit-reversal permutation: `bitrev[i]` is `i` with log2(n) bits
+    /// reversed.
+    bitrev: Vec<u32>,
+    /// Forward twiddles `tw[k] = e^{-2 pi i k / n}` for `k < n/2`, each
+    /// computed directly by `cis` (exact table, no incremental drift).
+    /// The stage with butterfly length `len` uses `tw[k * (n / len)]`.
+    tw: Vec<C64>,
+}
+
+impl FftPlan {
+    /// Build the tables for size `n` (must be a power of two, n >= 1).
+    pub fn new(n: usize) -> FftPlan {
+        assert!(n.is_power_of_two(), "FftPlan: n={n} is not a power of two");
+        let mut bitrev = vec![0u32; n];
+        let mut j = 0usize;
+        for i in 1..n {
+            let mut bit = n >> 1;
+            while j & bit != 0 {
+                j ^= bit;
+                bit >>= 1;
+            }
+            j |= bit;
+            bitrev[i] = j as u32;
+        }
+        let tw: Vec<C64> = (0..n / 2)
+            .map(|k| {
+                C64::cis(-2.0 * std::f64::consts::PI * k as f64 / n as f64)
+            })
+            .collect();
+        FftPlan { n, bitrev, tw }
+    }
+
+    /// Transform size (always >= 1; n = 1 is the valid trivial plan, so
+    /// there is deliberately no `is_empty`).
+    #[allow(clippy::len_without_is_empty)]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Process-wide shared plan for size `n` — built once per size, then
+    /// served as an `Arc` clone from a read lock.
+    pub fn shared(n: usize) -> Arc<FftPlan> {
+        // validate BEFORE touching the lock, and construct OUTSIDE it: a
+        // panic while holding the write lock would poison the cache and
+        // take down every FFT in the process, not just the bad caller.
+        assert!(
+            n.is_power_of_two(),
+            "FftPlan::shared: n={n} is not a power of two"
+        );
+        static CACHE: OnceLock<RwLock<HashMap<usize, Arc<FftPlan>>>> =
+            OnceLock::new();
+        let cache = CACHE.get_or_init(|| RwLock::new(HashMap::new()));
+        if let Some(p) = cache.read().unwrap().get(&n) {
+            return p.clone();
+        }
+        let p = Arc::new(FftPlan::new(n));
+        let mut w = cache.write().unwrap();
+        // two threads may race past the read miss and both build; the
+        // tables are identical and cheap, so first insert wins
+        w.entry(n).or_insert(p).clone()
+    }
+
+    /// In-place unscaled DFT (forward) or conjugate DFT (inverse) of
+    /// `buf` (`buf.len()` must equal the plan size).  Allocation-free.
+    pub fn process(&self, buf: &mut [C64], inverse: bool) {
+        let n = self.n;
+        debug_assert_eq!(buf.len(), n, "FftPlan::process: wrong buffer size");
+        if n <= 1 {
+            return;
+        }
+        for i in 1..n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                buf.swap(i, j);
+            }
+        }
+        let mut len = 2;
+        while len <= n {
+            let stride = n / len;
+            let half = len / 2;
+            let mut i = 0;
+            while i < n {
+                for k in 0..half {
+                    let w = if inverse {
+                        self.tw[k * stride].conj()
+                    } else {
+                        self.tw[k * stride]
+                    };
+                    let u = buf[i + k];
+                    let v = buf[i + k + half] * w;
+                    buf[i + k] = u + v;
+                    buf[i + k + half] = u - v;
+                }
+                i += len;
+            }
+            len <<= 1;
+        }
+    }
+
+    /// Unscaled forward DFT in place.
+    pub fn forward(&self, buf: &mut [C64]) {
+        self.process(buf, false);
+    }
+
+    /// Unscaled conjugate (inverse without 1/n) DFT in place.
+    pub fn inverse(&self, buf: &mut [C64]) {
+        self.process(buf, true);
+    }
+
+    /// In-place 2D transform of a square row-major `n x n` grid using this
+    /// plan for both axes.  UNSCALED in both directions (unlike the
+    /// allocating [`fft2`], which folds 1/(rows*cols) into the inverse) —
+    /// callers fold the scale into extraction.  `col_buf` is caller
+    /// scratch of length `n`; the call is allocation-free.
+    pub fn fft2_inplace(
+        &self, grid: &mut [C64], inverse: bool, col_buf: &mut [C64],
+    ) {
+        let n = self.n;
+        debug_assert_eq!(grid.len(), n * n);
+        debug_assert_eq!(col_buf.len(), n);
+        for r in 0..n {
+            self.process(&mut grid[r * n..(r + 1) * n], inverse);
+        }
+        for c in 0..n {
+            for r in 0..n {
+                col_buf[r] = grid[r * n + c];
+            }
+            self.process(col_buf, inverse);
+            for r in 0..n {
+                grid[r * n + c] = col_buf[r];
+            }
+        }
+    }
+
+    /// Unscaled forward 2D DFT of a REAL square `n x n` grid into the
+    /// complex grid `out`, exploiting realness: row transforms are done
+    /// two-for-one (rows 2a and 2a+1 packed as the real/imaginary parts of
+    /// one complex row, separated afterwards by Hermitian symmetry), which
+    /// halves the row-transform work.  `col_buf` is caller scratch of
+    /// length `n`; the call is allocation-free.
+    pub fn fwd2_real_into(
+        &self, q: &[f64], out: &mut [C64], col_buf: &mut [C64],
+    ) {
+        let n = self.n;
+        debug_assert_eq!(q.len(), n * n);
+        debug_assert_eq!(out.len(), n * n);
+        debug_assert_eq!(col_buf.len(), n);
+        if n == 1 {
+            out[0] = C64::real(q[0]);
+            return;
+        }
+        // row pairs: y = row_{2a} + i row_{2a+1}; after Y = FWD[y],
+        //   FWD[row_{2a}](t)   = (Y(t) + conj(Y(-t))) / 2
+        //   FWD[row_{2a+1}](t) = (Y(t) - conj(Y(-t))) / (2i)
+        for a in 0..n / 2 {
+            let r0 = 2 * a;
+            let r1 = 2 * a + 1;
+            for t in 0..n {
+                col_buf[t] = C64::new(q[r0 * n + t], q[r1 * n + t]);
+            }
+            self.process(col_buf, false);
+            for t in 0..n {
+                let tm = if t == 0 { 0 } else { n - t };
+                let y = col_buf[t];
+                let ym = col_buf[tm].conj();
+                let s = y + ym;
+                let d = y - ym;
+                out[r0 * n + t] = s.scale(0.5);
+                // (-i/2) * d
+                out[r1 * n + t] = C64::new(0.5 * d.im, -0.5 * d.re);
+            }
+        }
+        // column transforms on the now-complex rows
+        for c in 0..n {
+            for r in 0..n {
+                col_buf[r] = out[r * n + c];
+            }
+            self.process(col_buf, false);
+            for r in 0..n {
+                out[r * n + c] = col_buf[r];
+            }
+        }
+    }
+}
+
 /// In-place radix-2 DIT FFT; `n` must be a power of two.
 /// `inverse` applies the conjugate transform WITHOUT the 1/n scaling.
+///
+/// Delegates to the process-wide [`FftPlan::shared`] tables, so every
+/// caller (Bluestein, table construction, legacy `fft2`) gets the
+/// drift-free precomputed twiddles.
 pub fn fft_pow2(buf: &mut [C64], inverse: bool) {
     let n = buf.len();
     debug_assert!(n.is_power_of_two());
     if n <= 1 {
         return;
     }
-    // bit-reversal permutation
-    let mut j = 0usize;
-    for i in 1..n {
-        let mut bit = n >> 1;
-        while j & bit != 0 {
-            j ^= bit;
-            bit >>= 1;
-        }
-        j |= bit;
-        if i < j {
-            buf.swap(i, j);
-        }
-    }
-    let sign = if inverse { 1.0 } else { -1.0 };
-    let mut len = 2;
-    while len <= n {
-        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
-        let wl = C64::cis(ang);
-        let mut i = 0;
-        while i < n {
-            let mut w = C64::real(1.0);
-            for k in 0..len / 2 {
-                let u = buf[i + k];
-                let v = buf[i + k + len / 2] * w;
-                buf[i + k] = u + v;
-                buf[i + k + len / 2] = u - v;
-                w = w * wl;
-            }
-            i += len;
-        }
-        len <<= 1;
-    }
+    FftPlan::shared(n).process(buf, inverse);
 }
 
 /// DFT of arbitrary length via Bluestein (chirp-z), O(n log n).
@@ -232,6 +410,94 @@ mod tests {
         let back = fft2(&f, r, c, true);
         for (a, b) in g.iter().zip(&back) {
             assert!((*a - *b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn large_n_matches_naive_dft() {
+        // the old incremental-twiddle butterflies (w = w * wl) accumulated
+        // rounding drift over long stages; the planned tables must track
+        // the naive DFT tightly even at large n.
+        let mut rng = Rng::new(8);
+        let n = 2048usize;
+        let x = rand_vec(&mut rng, n);
+        let got = fft(&x);
+        let want = naive_dft(&x);
+        let scale: f64 = x.iter().map(|v| v.abs()).sum::<f64>().max(1.0);
+        for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (*g - *w).abs() < 1e-10 * scale,
+                "n={n} bin {k}: |err| = {}",
+                (*g - *w).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn large_n_round_trip_tight() {
+        let mut rng = Rng::new(9);
+        let n = 1usize << 14;
+        let x = rand_vec(&mut rng, n);
+        let y = ifft(&fft(&x));
+        for (a, b) in x.iter().zip(&y) {
+            assert!((*a - *b).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn plan_twiddles_are_exact_cis() {
+        let plan = FftPlan::new(256);
+        for k in 0..128usize {
+            let want =
+                C64::cis(-2.0 * std::f64::consts::PI * k as f64 / 256.0);
+            assert_eq!(plan.tw[k], want, "twiddle {k} not a direct cis");
+        }
+        assert_eq!(plan.bitrev[1], 128);
+        assert_eq!(plan.bitrev[128], 1);
+        assert_eq!(plan.bitrev[255], 255);
+    }
+
+    #[test]
+    fn shared_plan_is_memoized() {
+        let a = FftPlan::shared(64);
+        let b = FftPlan::shared(64);
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+        assert_eq!(a.len(), 64);
+    }
+
+    #[test]
+    fn fft2_inplace_matches_allocating_fft2() {
+        let mut rng = Rng::new(10);
+        let n = 8usize;
+        let plan = FftPlan::new(n);
+        let g = rand_vec(&mut rng, n * n);
+        let mut col = vec![C64::default(); n];
+        for inverse in [false, true] {
+            let want_raw = fft2(&g, n, n, inverse);
+            let mut got = g.clone();
+            plan.fft2_inplace(&mut got, inverse, &mut col);
+            // fft2 scales the inverse by 1/n^2; fft2_inplace is unscaled
+            let s = if inverse { (n * n) as f64 } else { 1.0 };
+            for (a, b) in got.iter().zip(&want_raw) {
+                assert!((*a - b.scale(s)).abs() < 1e-9, "inverse={inverse}");
+            }
+        }
+    }
+
+    #[test]
+    fn fwd2_real_matches_complex_path() {
+        let mut rng = Rng::new(11);
+        for n in [1usize, 2, 4, 8, 16] {
+            let plan = FftPlan::new(n);
+            let q: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+            let qc: Vec<C64> = q.iter().map(|v| C64::real(*v)).collect();
+            let want = fft2(&qc, n, n, false);
+            let mut got = vec![C64::default(); n * n];
+            let mut col = vec![C64::default(); n];
+            plan.fwd2_real_into(&q, &mut got, &mut col);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((*a - *b).abs() < 1e-9, "n={n} idx={i}");
+            }
         }
     }
 

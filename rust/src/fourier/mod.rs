@@ -1,12 +1,19 @@
 //! 2D Fourier substrate: complex arithmetic, FFTs, the SH <-> Fourier
-//! conversion tables, and grid convolutions (paper Section 3.2).
+//! conversion tables, grid convolutions (paper Section 3.2), and the
+//! planned allocation-free workspace layer ([`plan`]) the hot paths run
+//! on (DESIGN.md §4.1).
 
 pub mod complex;
 pub mod conv;
 pub mod fft;
+pub mod plan;
 pub mod tables;
 
 pub use complex::C64;
-pub use conv::{conv2d_direct, conv2d_fft};
-pub use fft::{fft, fft2, ifft};
-pub use tables::{f2sh_panels, sh2f_panels, theta_fourier, theta_projection};
+pub use conv::{conv2d_direct, conv2d_fft, conv2d_fft_planned};
+pub use fft::{fft, fft2, ifft, FftPlan};
+pub use plan::{ConvPlan, ConvScratch};
+pub use tables::{
+    f2sh_contract, f2sh_panels, sh2f_panels, theta_fourier, theta_projection,
+    F2shPanelsT,
+};

@@ -1,0 +1,450 @@
+//! Planned, allocation-free 2D convolution workspaces.
+//!
+//! [`ConvPlan`] precomputes everything a repeated full 2D convolution of
+//! fixed-size coefficient grids needs — the padded power-of-two transform
+//! size, the shared [`FftPlan`] tables for it, and the centered→cyclic
+//! wrap maps — so the per-pair hot path touches only caller-owned scratch
+//! ([`ConvScratch`]) and performs zero allocations.
+//!
+//! Two apply paths:
+//!
+//! * [`ConvPlan::conv_into`] — generic complex grids: two planned forward
+//!   2D FFTs, pointwise product, planned inverse (the legacy
+//!   `conv2d_fft` pipeline minus its five per-call allocations and
+//!   per-stage twiddle recomputation).
+//! * [`ConvPlan::conv_hermitian_into`] — grids with the conjugate
+//!   symmetry `g(-u,-v) = conj(g(u,v))` of 2D Fourier coefficients of
+//!   REAL functions (every grid the Gaunt pipeline produces from real SH
+//!   coefficients, and every convolution of such grids).  Embedding the
+//!   centered grid into Z_m x Z_m by wrapping negative frequencies makes
+//!   its unscaled inverse DFT a REAL sample array, so
+//!     - ONE packed inverse FFT `INV2[G1 + i G2]` transforms BOTH
+//!       operands (`f1 = Re z`, `f2 = Im z`),
+//!     - the spectral product is a real x real pointwise multiply,
+//!     - the forward transform back is a real-input FFT with two-for-one
+//!       packed rows ([`FftPlan::fwd2_real_into`]).
+//!   Per pair that is ~2.5 m row/column transforms instead of the legacy
+//!   path's 6 m, with no phase factors (the wrap embedding absorbs the
+//!   centering shift exactly).
+//!
+//! Derivation of the Hermitian path (1D, per axis; 2D is the tensor
+//! product).  With `FWD[x](t) = sum_j x_j e^{-2 pi i j t / m}` and
+//! `INV = conj-FWD` (both unscaled), for wrapped Hermitian `G`:
+//! `f = INV[G]` is real, `f(j) = FWD[G](-j)`.  So
+//! `q := f1 f2 = FWD[G1 (*) G2](-j) = INV[h](j)` for the cyclic
+//! convolution `h = G1 (*) G2`, hence `FWD[q] = m h` (m^2 in 2D).  With
+//! `m >= n1 + n2 - 1` the cyclic convolution equals the linear one.
+
+use std::sync::Arc;
+
+use super::complex::C64;
+use super::fft::FftPlan;
+
+/// Caller-owned scratch buffers for [`ConvPlan`] applies.  One per worker
+/// thread; every buffer is sized at construction and never reallocated.
+pub struct ConvScratch {
+    /// packed complex workspace (m x m)
+    pub z: Vec<C64>,
+    /// spectrum workspace (m x m)
+    pub h: Vec<C64>,
+    /// real sample product (m x m)
+    pub q: Vec<f64>,
+    /// column gather buffer (m)
+    pub col: Vec<C64>,
+}
+
+impl ConvScratch {
+    fn new(m: usize) -> ConvScratch {
+        ConvScratch {
+            z: vec![C64::default(); m * m],
+            h: vec![C64::default(); m * m],
+            q: vec![0.0; m * m],
+            col: vec![C64::default(); m],
+        }
+    }
+
+    /// Zero-sized scratch for consumers that may never take an FFT path
+    /// (grow it with [`ConvScratch::ensure`] before first use).
+    pub fn empty() -> ConvScratch {
+        ConvScratch {
+            z: Vec::new(),
+            h: Vec::new(),
+            q: Vec::new(),
+            col: Vec::new(),
+        }
+    }
+
+    /// Grow the buffers to transform size `m` if they are not already
+    /// there (no-op afterwards, so steady state stays allocation-free).
+    pub fn ensure(&mut self, m: usize) {
+        if self.z.len() != m * m {
+            self.z.resize(m * m, C64::default());
+            self.h.resize(m * m, C64::default());
+            self.q.resize(m * m, 0.0);
+            self.col.resize(m, C64::default());
+        }
+    }
+}
+
+/// Precomputed workspace for full 2D convolutions of an `n1 x n1` grid
+/// with an `n2 x n2` grid (both row-major), producing `n_out x n_out`
+/// with `n_out = n1 + n2 - 1`.  Read-only after construction; share via
+/// `Arc` and give each worker its own [`ConvScratch`].
+pub struct ConvPlan {
+    pub n1: usize,
+    pub n2: usize,
+    pub n_out: usize,
+    /// padded transform size (power of two >= n_out)
+    pub m: usize,
+    pub(crate) fft: Arc<FftPlan>,
+    /// centered->cyclic row/col index maps: operand entries at centered
+    /// frequency u (index i, u = i - (n-1)/2) land at u mod m.  Only
+    /// valid for odd sizes (centered grids); even sizes fall back to the
+    /// offset embedding in the generic path.
+    pub(crate) wrap1: Vec<usize>,
+    pub(crate) wrap2: Vec<usize>,
+    pub(crate) wrap_out: Vec<usize>,
+}
+
+/// Centered->cyclic index map: entry i (centered frequency i - (n-1)/2)
+/// lands at index `(i - (n-1)/2) mod m`.  The single source of the wrap
+/// convention every Hermitian-path consumer shares.
+pub(crate) fn wrap_map(n: usize, m: usize) -> Vec<usize> {
+    let c = (n - 1) / 2;
+    (0..n).map(|i| (i + m - c) % m).collect()
+}
+
+impl ConvPlan {
+    pub fn new(n1: usize, n2: usize) -> ConvPlan {
+        assert!(n1 >= 1 && n2 >= 1);
+        let n_out = n1 + n2 - 1;
+        let m = n_out.next_power_of_two();
+        ConvPlan {
+            n1,
+            n2,
+            n_out,
+            m,
+            fft: FftPlan::shared(m),
+            wrap1: wrap_map(n1, m),
+            wrap2: wrap_map(n2, m),
+            wrap_out: wrap_map(n_out, m),
+        }
+    }
+
+    /// Plan for a chained pointwise-product pipeline (many-body): each
+    /// operand is `n1 x n1`, the chain's final product grid is
+    /// `n_out x n_out` (>= n1).  The equivalent pairwise shape would be
+    /// n2 = n_out - n1 + 1; the wrap maps and transform size cover the
+    /// whole chain.
+    pub fn for_chain(n1: usize, n_out: usize) -> ConvPlan {
+        assert!(n1 >= 1 && n_out >= n1);
+        let n2 = n_out - n1 + 1;
+        let m = n_out.next_power_of_two();
+        ConvPlan {
+            n1,
+            n2,
+            n_out,
+            m,
+            fft: FftPlan::shared(m),
+            wrap1: wrap_map(n1, m),
+            wrap2: wrap_map(n2, m),
+            wrap_out: wrap_map(n_out, m),
+        }
+    }
+
+    /// Fresh scratch sized for this plan (one per worker thread).
+    pub fn scratch(&self) -> ConvScratch {
+        ConvScratch::new(self.m)
+    }
+
+    /// Generic planned full convolution of complex grids; identical
+    /// output to [`super::conv::conv2d_direct`] up to rounding.
+    /// Allocation-free: all workspace lives in `scratch`.
+    pub fn conv_into(
+        &self, a: &[C64], b: &[C64], out: &mut [C64],
+        scratch: &mut ConvScratch,
+    ) {
+        let (n1, n2, n, m) = (self.n1, self.n2, self.n_out, self.m);
+        debug_assert_eq!(a.len(), n1 * n1);
+        debug_assert_eq!(b.len(), n2 * n2);
+        debug_assert_eq!(out.len(), n * n);
+        if m == 1 {
+            out[0] = a[0] * b[0];
+            return;
+        }
+        // offset (top-left) embedding: no centering assumption needed
+        let z = &mut scratch.z;
+        let h = &mut scratch.h;
+        z.fill(C64::default());
+        h.fill(C64::default());
+        for i in 0..n1 {
+            z[i * m..i * m + n1].copy_from_slice(&a[i * n1..(i + 1) * n1]);
+        }
+        for i in 0..n2 {
+            h[i * m..i * m + n2].copy_from_slice(&b[i * n2..(i + 1) * n2]);
+        }
+        self.fft.fft2_inplace(z, false, &mut scratch.col);
+        self.fft.fft2_inplace(h, false, &mut scratch.col);
+        for (zv, hv) in z.iter_mut().zip(h.iter()) {
+            *zv = *zv * *hv;
+        }
+        self.fft.fft2_inplace(z, true, &mut scratch.col);
+        let s = 1.0 / (m * m) as f64;
+        for i in 0..n {
+            for j in 0..n {
+                out[i * n + j] = z[i * m + j].scale(s);
+            }
+        }
+    }
+
+    /// Hermitian fast path: both operands must be centered odd-size grids
+    /// with (approximate) conjugate symmetry `g(-u,-v) = conj(g(u,v))`
+    /// — 2D Fourier coefficients of real functions.  Output is their
+    /// full linear convolution, identical to the generic path up to
+    /// rounding of the (physically zero) anti-Hermitian component.
+    /// Allocation-free.
+    pub fn conv_hermitian_into(
+        &self, a: &[C64], b: &[C64], out: &mut [C64],
+        scratch: &mut ConvScratch,
+    ) {
+        let (n1, n2, n, m) = (self.n1, self.n2, self.n_out, self.m);
+        debug_assert_eq!(a.len(), n1 * n1);
+        debug_assert_eq!(b.len(), n2 * n2);
+        debug_assert_eq!(out.len(), n * n);
+        debug_assert!(n1 % 2 == 1 && n2 % 2 == 1,
+                      "hermitian path needs centered odd-size grids");
+        if m == 1 {
+            out[0] = a[0] * b[0];
+            return;
+        }
+        // z = wrap(a) + i wrap(b); the wrap maps send centered frequency
+        // (u, v) to (u mod m, v mod m), so INV2[wrap(g)] is the real
+        // sample array of g's function — no phase factors.
+        let z = &mut scratch.z;
+        z.fill(C64::default());
+        for i in 0..n1 {
+            let r = self.wrap1[i] * m;
+            for j in 0..n1 {
+                z[r + self.wrap1[j]] = a[i * n1 + j];
+            }
+        }
+        for i in 0..n2 {
+            let r = self.wrap2[i] * m;
+            for j in 0..n2 {
+                let g = b[i * n2 + j];
+                // += i * g  (operand cells can coincide with a's)
+                let cell = &mut z[r + self.wrap2[j]];
+                cell.re -= g.im;
+                cell.im += g.re;
+            }
+        }
+        self.fft.fft2_inplace(z, true, &mut scratch.col);
+        // f1 = Re z, f2 = Im z (both real by Hermitian symmetry)
+        for (qv, zv) in scratch.q.iter_mut().zip(z.iter()) {
+            *qv = zv.re * zv.im;
+        }
+        self.fft.fwd2_real_into(&scratch.q, &mut scratch.h, &mut scratch.col);
+        let s = 1.0 / (m * m) as f64;
+        for i in 0..n {
+            let r = self.wrap_out[i] * m;
+            for j in 0..n {
+                out[i * n + j] = scratch.h[r + self.wrap_out[j]].scale(s);
+            }
+        }
+    }
+
+    /// Unscaled real sample array `f = INV2[wrap(g)]` of one centered
+    /// Hermitian grid (the reusable half of the pair trick): the caller
+    /// can cache `f` for a fixed operand and combine it against many
+    /// partners, or chain pointwise products of several sample arrays and
+    /// transform back once (many-body).  Writes `f` into `q` (m x m);
+    /// uses `z`/`col` as workspace.  Allocates only the wrap map for
+    /// `ng`; use [`ConvPlan::samples_op1_into`] for the allocation-free
+    /// plan-operand case.
+    pub fn samples_into(
+        &self, g: &[C64], ng: usize, q: &mut [f64], scratch: &mut ConvScratch,
+    ) {
+        debug_assert!(ng % 2 == 1 && ng <= self.m);
+        let wrap = wrap_map(ng, self.m);
+        self.samples_with_map(g, ng, &wrap, q, scratch);
+    }
+
+    /// [`ConvPlan::samples_into`] for a grid of exactly the plan's first
+    /// operand size `n1`, using the precomputed wrap map: allocation-free.
+    pub fn samples_op1_into(
+        &self, g: &[C64], q: &mut [f64], scratch: &mut ConvScratch,
+    ) {
+        self.samples_with_map(g, self.n1, &self.wrap1, q, scratch);
+    }
+
+    fn samples_with_map(
+        &self, g: &[C64], ng: usize, wrap: &[usize], q: &mut [f64],
+        scratch: &mut ConvScratch,
+    ) {
+        let m = self.m;
+        debug_assert_eq!(g.len(), ng * ng);
+        debug_assert_eq!(q.len(), m * m);
+        debug_assert_eq!(wrap.len(), ng);
+        let z = &mut scratch.z;
+        z.fill(C64::default());
+        for i in 0..ng {
+            let r = wrap[i] * m;
+            for j in 0..ng {
+                z[r + wrap[j]] = g[i * ng + j];
+            }
+        }
+        self.fft.fft2_inplace(z, true, &mut scratch.col);
+        for (qv, zv) in q.iter_mut().zip(z.iter()) {
+            *qv = zv.re;
+        }
+    }
+
+    /// Transform a real sample-product array back to the centered output
+    /// grid: `out = wrap^{-1}[FWD2[q] / m^2]`.  The counterpart of
+    /// [`ConvPlan::samples_into`] for cached-spectrum / chained-product
+    /// pipelines.  Allocation-free.
+    pub fn grid_from_samples_into(
+        &self, q: &[f64], out: &mut [C64], scratch: &mut ConvScratch,
+    ) {
+        let (n, m) = (self.n_out, self.m);
+        debug_assert_eq!(q.len(), m * m);
+        debug_assert_eq!(out.len(), n * n);
+        if m == 1 {
+            out[0] = C64::real(q[0]);
+            return;
+        }
+        self.fft.fwd2_real_into(q, &mut scratch.h, &mut scratch.col);
+        let s = 1.0 / (m * m) as f64;
+        for i in 0..n {
+            let r = self.wrap_out[i] * m;
+            for j in 0..n {
+                out[i * n + j] = scratch.h[r + self.wrap_out[j]].scale(s);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fourier::conv::conv2d_direct;
+    use crate::util::rng::Rng;
+
+    fn rand_grid(rng: &mut Rng, n: usize) -> Vec<C64> {
+        (0..n * n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    /// Random centered grid with exact conjugate symmetry
+    /// g(-u,-v) = conj(g(u,v)).
+    fn rand_hermitian_grid(rng: &mut Rng, n: usize) -> Vec<C64> {
+        let mut g = rand_grid(rng, n);
+        let last = n - 1;
+        for i in 0..n {
+            for j in 0..n {
+                let (mi, mj) = (last - i, last - j);
+                if (i, j) < (mi, mj) {
+                    g[mi * n + mj] = g[i * n + j].conj();
+                } else if (i, j) == (mi, mj) {
+                    g[i * n + j] = C64::real(g[i * n + j].re);
+                }
+            }
+        }
+        g
+    }
+
+    fn max_diff(a: &[C64], b: &[C64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (*x - *y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn generic_planned_matches_direct() {
+        let mut rng = Rng::new(0);
+        for (n1, n2) in [(1usize, 1usize), (1, 5), (3, 3), (4, 6), (5, 7), (9, 9)] {
+            let a = rand_grid(&mut rng, n1);
+            let b = rand_grid(&mut rng, n2);
+            let plan = ConvPlan::new(n1, n2);
+            let mut scratch = plan.scratch();
+            let mut out = vec![C64::default(); plan.n_out * plan.n_out];
+            plan.conv_into(&a, &b, &mut out, &mut scratch);
+            let want = conv2d_direct(&a, n1, &b, n2);
+            assert!(max_diff(&out, &want) < 1e-9, "n1={n1} n2={n2}");
+        }
+    }
+
+    #[test]
+    fn hermitian_matches_direct_on_symmetric_grids() {
+        let mut rng = Rng::new(1);
+        for (n1, n2) in [(1usize, 1usize), (1, 5), (3, 3), (3, 7), (5, 5), (7, 9)] {
+            let a = rand_hermitian_grid(&mut rng, n1);
+            let b = rand_hermitian_grid(&mut rng, n2);
+            let plan = ConvPlan::new(n1, n2);
+            let mut scratch = plan.scratch();
+            let mut out = vec![C64::default(); plan.n_out * plan.n_out];
+            plan.conv_hermitian_into(&a, &b, &mut out, &mut scratch);
+            let want = conv2d_direct(&a, n1, &b, n2);
+            assert!(
+                max_diff(&out, &want) < 1e-9,
+                "n1={n1} n2={n2}: {}",
+                max_diff(&out, &want)
+            );
+        }
+    }
+
+    #[test]
+    fn hermitian_output_is_hermitian() {
+        let mut rng = Rng::new(2);
+        let plan = ConvPlan::new(5, 5);
+        let a = rand_hermitian_grid(&mut rng, 5);
+        let b = rand_hermitian_grid(&mut rng, 5);
+        let mut scratch = plan.scratch();
+        let n = plan.n_out;
+        let mut out = vec![C64::default(); n * n];
+        plan.conv_hermitian_into(&a, &b, &mut out, &mut scratch);
+        for i in 0..n {
+            for j in 0..n {
+                let m = out[(n - 1 - i) * n + (n - 1 - j)].conj();
+                assert!((out[i * n + j] - m).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn samples_round_trip_through_pointwise_product() {
+        // samples_into + pointwise product + grid_from_samples_into must
+        // equal the one-shot hermitian convolution
+        let mut rng = Rng::new(3);
+        let (n1, n2) = (5usize, 3usize);
+        let a = rand_hermitian_grid(&mut rng, n1);
+        let b = rand_hermitian_grid(&mut rng, n2);
+        let plan = ConvPlan::new(n1, n2);
+        let mut scratch = plan.scratch();
+        let m = plan.m;
+        let mut fa = vec![0.0; m * m];
+        let mut fb = vec![0.0; m * m];
+        plan.samples_into(&a, n1, &mut fa, &mut scratch);
+        plan.samples_into(&b, n2, &mut fb, &mut scratch);
+        for (x, y) in fa.iter_mut().zip(&fb) {
+            *x *= *y;
+        }
+        let n = plan.n_out;
+        let mut got = vec![C64::default(); n * n];
+        plan.grid_from_samples_into(&fa, &mut got, &mut scratch);
+        let want = conv2d_direct(&a, n1, &b, n2);
+        assert!(max_diff(&got, &want) < 1e-9, "{}", max_diff(&got, &want));
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        let mut rng = Rng::new(4);
+        let plan = ConvPlan::new(5, 5);
+        let a = rand_hermitian_grid(&mut rng, 5);
+        let b = rand_hermitian_grid(&mut rng, 5);
+        let mut scratch = plan.scratch();
+        let n = plan.n_out;
+        let mut out1 = vec![C64::default(); n * n];
+        let mut out2 = vec![C64::default(); n * n];
+        plan.conv_hermitian_into(&a, &b, &mut out1, &mut scratch);
+        plan.conv_hermitian_into(&a, &b, &mut out2, &mut scratch);
+        assert_eq!(max_diff(&out1, &out2), 0.0);
+    }
+}

@@ -120,6 +120,96 @@ pub fn f2sh_panels(l_out: usize, n_grid: usize) -> F2shPanels {
     F2shPanels { l_out, n_grid, panels }
 }
 
+/// Transposed f2sh panels: Tt[s][u * (L_out+1) + l] over (u, l).
+///
+/// The back-projection contracts the product grid row by row; with this
+/// layout both the grid walk (u outer) and the table walk (l inner) are
+/// unit-stride, replacing the stride-(2N+1) column scans of the original
+/// [`F2shPanels`] orientation (kept for the Python golden comparisons).
+pub struct F2shPanelsT {
+    pub l_out: usize,
+    pub n_grid: usize,
+    /// panels[s] is a (2N+1) x (L_out+1) row-major matrix over (u, l)
+    pub panels: Vec<Vec<C64>>,
+}
+
+impl F2shPanelsT {
+    /// Transpose the (l, u)-major panels into (u, l)-major.
+    pub fn from_panels(t: &F2shPanels) -> F2shPanelsT {
+        let nu = 2 * t.n_grid + 1;
+        let nl = t.l_out + 1;
+        let panels = t
+            .panels
+            .iter()
+            .map(|p| {
+                let mut q = vec![C64::default(); nu * nl];
+                for l in 0..nl {
+                    for u in 0..nu {
+                        q[u * nl + l] = p[l * nu + u];
+                    }
+                }
+                q
+            })
+            .collect();
+        F2shPanelsT { l_out: t.l_out, n_grid: t.n_grid, panels }
+    }
+
+    /// Build directly for `(l_out, n_grid)`.
+    pub fn build(l_out: usize, n_grid: usize) -> F2shPanelsT {
+        F2shPanelsT::from_panels(&f2sh_panels(l_out, n_grid))
+    }
+}
+
+/// Row-major f2sh contraction shared by the Gaunt, eSCN, and many-body
+/// pipelines: project a centered `(2N+1)^2` product grid onto real SH
+/// coefficients of degree <= `l_out` (requires `l_out <= n_grid`).
+///
+/// Traversal is u-outer so the grid is read one contiguous row at a time
+/// and each panel row `Tt[s][u]` is read unit-stride in l; the `2 pi` /
+/// `sqrt(2) pi` normalization is applied in a final scale pass.  `out`
+/// must hold `(l_out+1)^2` values; the call is allocation-free.
+pub fn f2sh_contract(t3t: &F2shPanelsT, grid: &[C64], out: &mut [f64]) {
+    let n = t3t.n_grid;
+    let l_out = t3t.l_out;
+    let nu = 2 * n + 1;
+    let nl = l_out + 1;
+    debug_assert_eq!(grid.len(), nu * nu);
+    debug_assert_eq!(out.len(), nl * nl);
+    debug_assert!(l_out <= n);
+    out.fill(0.0);
+    for u in 0..nu {
+        let grow = &grid[u * nu..(u + 1) * nu];
+        // s = 0: the v = 0 column
+        let g = grow[n];
+        let t0 = &t3t.panels[0][u * nl..(u + 1) * nl];
+        for (l, tv) in t0.iter().enumerate() {
+            out[crate::lm_index(l, 0)] += tv.re * g.re - tv.im * g.im;
+        }
+        for s in 1..=l_out {
+            let gp = grow[n + s];
+            let gm = grow[n - s];
+            let sp = gp + gm;
+            let sm = gp - gm;
+            let ts = &t3t.panels[s][u * nl..(u + 1) * nl];
+            for l in s..=l_out {
+                let tv = ts[l];
+                out[crate::lm_index(l, s as i64)] +=
+                    tv.re * sp.re - tv.im * sp.im;
+                out[crate::lm_index(l, -(s as i64))] -=
+                    tv.im * sm.re + tv.re * sm.im;
+            }
+        }
+    }
+    // normalization: m = 0 channels get 2 pi, |m| > 0 get sqrt(2) pi
+    let two_pi = 2.0 * std::f64::consts::PI;
+    let s2pi = std::f64::consts::SQRT_2 * std::f64::consts::PI;
+    for l in 0..=l_out {
+        for m in -(l as i64)..=(l as i64) {
+            out[crate::lm_index(l, m)] *= if m == 0 { two_pi } else { s2pi };
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,6 +267,54 @@ mod tests {
                 let got = t[(n_grid as i64 + u) as usize];
                 assert!((got - acc).abs() < 1e-9, "l={l} m={m} u={u}");
             }
+        }
+    }
+
+    #[test]
+    fn f2sh_contract_matches_column_major_reference() {
+        // reference: the original (l, u)-major traversal with per-term
+        // normalization, as GauntPlan::f2sh shipped it
+        use crate::util::rng::Rng;
+        let (l_out, n) = (3usize, 4usize);
+        let nu = 2 * n + 1;
+        let mut rng = Rng::new(0);
+        let grid: Vec<C64> =
+            (0..nu * nu).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let t3 = f2sh_panels(l_out, n);
+        let pi = std::f64::consts::PI;
+        let s2pi = std::f64::consts::SQRT_2 * pi;
+        let mut want = vec![0.0; (l_out + 1) * (l_out + 1)];
+        for s in 0..=l_out {
+            let t = &t3.panels[s];
+            for l in s..=l_out {
+                let trow = &t[l * nu..(l + 1) * nu];
+                if s == 0 {
+                    let mut acc = 0.0;
+                    for u in 0..nu {
+                        let g = grid[u * nu + n];
+                        acc += trow[u].re * g.re - trow[u].im * g.im;
+                    }
+                    want[crate::lm_index(l, 0)] = 2.0 * pi * acc;
+                } else {
+                    let (mut accp, mut accm) = (0.0, 0.0);
+                    for u in 0..nu {
+                        let gp = grid[u * nu + n + s];
+                        let gm = grid[u * nu + n - s];
+                        let sp = gp + gm;
+                        let sm = gp - gm;
+                        accp += trow[u].re * sp.re - trow[u].im * sp.im;
+                        accm += -(trow[u].im * sm.re + trow[u].re * sm.im);
+                    }
+                    want[crate::lm_index(l, s as i64)] = s2pi * accp;
+                    want[crate::lm_index(l, -(s as i64))] = s2pi * accm;
+                }
+            }
+        }
+        let t3t = F2shPanelsT::from_panels(&t3);
+        let mut got = vec![0.0; (l_out + 1) * (l_out + 1)];
+        f2sh_contract(&t3t, &grid, &mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-10 * (1.0 + b.abs()));
         }
     }
 

@@ -22,8 +22,9 @@ use std::sync::{Arc, OnceLock, RwLock};
 
 use crate::num_coeffs;
 use crate::tp::cg::CgPlan;
-use crate::tp::escn::EscnPlan;
+use crate::tp::escn::{EscnPlan, GauntConvPlan};
 use crate::tp::gaunt::{ConvMethod, GauntPlan};
+use crate::tp::many_body::ManyBodyPlan;
 use crate::util::pool;
 
 /// Cache key: plan family + the degrees (and conv method) that fully
@@ -36,6 +37,11 @@ pub enum PlanKey {
     Gaunt { l1: usize, l2: usize, l3: usize, method: ConvMethod },
     /// eSCN SO(2)-restricted convolution plan.
     Escn { l_in: usize, l_filter: usize, l_out: usize },
+    /// Gaunt-accelerated aligned-filter convolution plan (cached filter
+    /// spectra live in the plan).
+    GauntConv { l_in: usize, l_filter: usize, l_out: usize },
+    /// Many-body Fourier-domain plan (single final-size transforms).
+    ManyBody { nu: usize, l: usize, l_out: usize },
 }
 
 #[derive(Clone)]
@@ -43,6 +49,8 @@ enum CachedPlan {
     Cg(Arc<CgPlan>),
     Gaunt(Arc<GauntPlan>),
     Escn(Arc<EscnPlan>),
+    GauntConv(Arc<GauntConvPlan>),
+    ManyBody(Arc<ManyBodyPlan>),
 }
 
 /// Process-wide memo of tensor-product plans.
@@ -137,6 +145,49 @@ impl PlanCache {
         p
     }
 
+    /// Memoized [`GauntConvPlan`] for `(l_in, l_filter, l_out)`.
+    pub fn gaunt_conv(
+        &self, l_in: usize, l_filter: usize, l_out: usize,
+    ) -> Arc<GauntConvPlan> {
+        let key = PlanKey::GauntConv { l_in, l_filter, l_out };
+        if let Some(CachedPlan::GauntConv(p)) = self.lookup(&key) {
+            return p;
+        }
+        let mut w = self.plans.write().unwrap();
+        if let Some(CachedPlan::GauntConv(p)) = w.get(&key) {
+            return p.clone();
+        }
+        let p = Arc::new(GauntConvPlan::new(l_in, l_filter, l_out));
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        w.insert(key, CachedPlan::GauntConv(p.clone()));
+        p
+    }
+
+    /// Memoized [`ManyBodyPlan`] for `(nu, l, l_out)`.
+    pub fn many_body(
+        &self, nu: usize, l: usize, l_out: usize,
+    ) -> Arc<ManyBodyPlan> {
+        // ManyBodyPlan::new asserts on these; fail here, BEFORE the
+        // write lock, so a bad request cannot poison the shared cache
+        assert!(
+            nu >= 1 && l_out <= nu * l,
+            "many_body plan: need nu >= 1 and l_out <= nu*l \
+             (got nu={nu}, l={l}, l_out={l_out})"
+        );
+        let key = PlanKey::ManyBody { nu, l, l_out };
+        if let Some(CachedPlan::ManyBody(p)) = self.lookup(&key) {
+            return p;
+        }
+        let mut w = self.plans.write().unwrap();
+        if let Some(CachedPlan::ManyBody(p)) = w.get(&key) {
+            return p.clone();
+        }
+        let p = Arc::new(ManyBodyPlan::new(nu, l, l_out));
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        w.insert(key, CachedPlan::ManyBody(p.clone()));
+        p
+    }
+
     /// Number of plans actually constructed (one per distinct key, even
     /// under contention).
     pub fn builds(&self) -> usize {
@@ -172,6 +223,11 @@ impl Default for PlanCache {
 
 /// Batched Gaunt TP sharded across `threads` workers (`0` = all cores).
 /// Row-for-row identical to [`GauntPlan::apply_batch`].
+///
+/// Workers share the plan's read-only tables and each own one
+/// [`GauntScratch`](crate::tp::gaunt::GauntScratch) (allocated once per
+/// worker via [`pool::shard_rows_with`]), so the fused per-row apply has
+/// zero steady-state allocations.
 pub fn gaunt_apply_batch_par(
     plan: &GauntPlan, x1: &[f64], x2: &[f64], rows: usize, threads: usize,
 ) -> Vec<f64> {
@@ -182,10 +238,20 @@ pub fn gaunt_apply_batch_par(
     debug_assert_eq!(x2.len(), rows * n2);
     let mut out = vec![0.0; rows * n3];
     let threads = pool::resolve_threads(threads);
-    pool::shard_rows(&mut out, n3, threads, |r, row| {
-        let y = plan.apply(&x1[r * n1..(r + 1) * n1], &x2[r * n2..(r + 1) * n2]);
-        row.copy_from_slice(&y);
-    });
+    pool::shard_rows_with(
+        &mut out,
+        n3,
+        threads,
+        || plan.scratch(),
+        |r, row, scratch| {
+            plan.apply_into(
+                &x1[r * n1..(r + 1) * n1],
+                &x2[r * n2..(r + 1) * n2],
+                row,
+                scratch,
+            );
+        },
+    );
     out
 }
 
@@ -206,6 +272,38 @@ pub fn cg_apply_batch_par(
             .apply_sparse(&x1[r * n1..(r + 1) * n1], &x2[r * n2..(r + 1) * n2]);
         row.copy_from_slice(&y);
     });
+    out
+}
+
+/// Batched Gaunt-accelerated edge convolution sharded across `threads`
+/// workers (`0` = all cores): row `r` convolves `x[r]` along `dirs[r]`
+/// with shared per-degree filter weights `h2`, through the plan's cached
+/// aligned-filter spectra.  Each worker owns one
+/// [`GauntConvScratch`](crate::tp::escn::GauntConvScratch), so the
+/// aligned-frame contraction is allocation-free per row (the per-edge
+/// Wigner rotation blocks still allocate in the so3 layer).
+pub fn gaunt_conv_apply_batch_par(
+    plan: &GauntConvPlan, x: &[f64], dirs: &[[f64; 3]], h2: &[f64],
+    threads: usize,
+) -> Vec<f64> {
+    let n_in = num_coeffs(plan.l_in);
+    let n_out = num_coeffs(plan.l_out);
+    let rows = dirs.len();
+    debug_assert_eq!(x.len(), rows * n_in);
+    let mut out = vec![0.0; rows * n_out];
+    let threads = pool::resolve_threads(threads);
+    pool::shard_rows_with(
+        &mut out,
+        n_out,
+        threads,
+        || plan.scratch(),
+        |r, row, scratch| {
+            let y = plan.apply_with(
+                &x[r * n_in..(r + 1) * n_in], dirs[r], h2, scratch,
+            );
+            row.copy_from_slice(&y);
+        },
+    );
     out
 }
 
@@ -283,6 +381,37 @@ mod tests {
         let x2 = rng.normals(rows * n);
         let serial = plan.apply_batch(&x1, &x2, rows);
         let par = cg_apply_batch_par(&plan, &x1, &x2, rows, 0);
+        assert!(max_abs_diff(&serial, &par) == 0.0);
+    }
+
+    #[test]
+    fn gaunt_conv_and_many_body_plans_are_cached() {
+        let cache = PlanCache::new();
+        let a = cache.gaunt_conv(2, 2, 2);
+        let b = cache.gaunt_conv(2, 2, 2);
+        assert!(Arc::ptr_eq(&a, &b));
+        let m1 = cache.many_body(3, 1, 2);
+        let m2 = cache.many_body(3, 1, 2);
+        assert!(Arc::ptr_eq(&m1, &m2));
+        assert_eq!(cache.builds(), 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn gaunt_conv_par_matches_serial() {
+        let mut rng = Rng::new(4);
+        let plan = GauntConvPlan::new(2, 2, 3);
+        let rows = 6;
+        let n = num_coeffs(2);
+        let x = rng.normals(rows * n);
+        let dirs: Vec<[f64; 3]> = (0..rows).map(|_| rng.unit3()).collect();
+        let h2: Vec<f64> = (0..=2).map(|_| rng.normal()).collect();
+        let mut serial = vec![0.0; rows * num_coeffs(3)];
+        for (r, dir) in dirs.iter().enumerate() {
+            let y = plan.apply(&x[r * n..(r + 1) * n], *dir, &h2);
+            serial[r * y.len()..(r + 1) * y.len()].copy_from_slice(&y);
+        }
+        let par = gaunt_conv_apply_batch_par(&plan, &x, &dirs, &h2, 0);
         assert!(max_abs_diff(&serial, &par) == 0.0);
     }
 

@@ -22,8 +22,9 @@ use crate::so3::rotation::{align_to_y, wigner_d_real_block, Rot3};
 use crate::so3::sh::{real_sh_all_xyz, sh_norm};
 use crate::so3::linalg::matvec;
 use crate::fourier::complex::C64;
-use crate::fourier::tables::{f2sh_panels, sh2f_panels, theta_fourier, F2shPanels,
-                             Sh2fPanels};
+use crate::fourier::plan::{ConvPlan, ConvScratch};
+use crate::fourier::tables::{f2sh_contract, sh2f_panels, theta_fourier,
+                             F2shPanelsT, Sh2fPanels};
 use crate::tp::gaunt::GauntPlan;
 use crate::{lm_index, num_coeffs};
 
@@ -147,50 +148,176 @@ impl EscnPlan {
     }
 }
 
+/// Degree sum at and above which [`GauntConvPlan::apply_aligned`] routes
+/// through the cached-spectrum FFT path instead of the direct
+/// single-column sweep.
+///
+/// The aligned filter's single Fourier column makes the direct sweep
+/// O(L^3) with a tiny constant (~8 (2Lf+1)(2Li+1)^2 flops), so the FFT
+/// path — ~17.5 m^2 log2 m with m = 2^ceil(log2(2(Li+Lf)+1)) — only
+/// catches up around l_in + l_filter ~ 36 on the flop model.
+/// `fig1b_equivariant_convolution` benches both so the constant can be
+/// re-pinned from measurement.
+pub const GAUNT_CONV_FFT_CROSSOVER: usize = 36;
+
+/// Caller-owned scratch for [`GauntConvPlan`] applies: one per worker
+/// thread.  Direct-sweep buffers are sized up front; the FFT-path
+/// workspaces grow on the first FFT-path call and are never resized
+/// after, so steady state is allocation-free on either path.  The
+/// rotation round trip of the full `apply` still allocates its Wigner
+/// blocks (so3 layer).
+pub struct GauntConvScratch {
+    /// sh2f staging
+    w: Vec<C64>,
+    /// input Fourier grid (2 l_in + 1)^2
+    u1: Vec<C64>,
+    /// combined filter column (2 l_filter + 1)
+    fcol: Vec<C64>,
+    /// product grid (2 n_grid + 1)^2
+    u3: Vec<C64>,
+    /// input sample array (m^2, FFT path)
+    f1: Vec<f64>,
+    /// combined filter profile (m, FFT path)
+    prof: Vec<f64>,
+    /// planned-convolution workspace
+    conv: ConvScratch,
+}
+
 /// Gaunt-accelerated equivariant convolution (paper Sec. 3.3).
+///
+/// Besides the conversion tables, the plan caches the aligned filter's
+/// FORWARD SPECTRUM at build time: the filter's Fourier grid has a
+/// single non-zero column (v = 0), so its real sample array is a 1D
+/// profile per filter degree (`phi[l2][j]`), independent of the second
+/// grid axis.  The FFT apply path never transforms the filter — it
+/// combines the cached profiles with the per-call `h2` weights in
+/// O(L m) and row-scales the input's sample array.
 pub struct GauntConvPlan {
     pub l_in: usize,
     pub l_filter: usize,
     pub l_out: usize,
     p_in: Sh2fPanels,
-    t_out: F2shPanels,
+    t_out: F2shPanelsT,
     /// theta-Fourier columns of the aligned filter per degree l2:
     /// col[l2][u] over u = -l2..l2 (filter magnitude folded in).
     filter_cols: Vec<Vec<C64>>,
+    /// planned convolution workspace (wrap maps + shared FFT tables)
+    conv: ConvPlan,
+    /// cached filter sample profiles phi[l2][j] = Re INV[col_l2](j),
+    /// length m each — the filter's FFT, done once at plan build.
+    phi: Vec<Vec<f64>>,
     n_grid: usize,
 }
 
 impl GauntConvPlan {
     pub fn new(l_in: usize, l_filter: usize, l_out: usize) -> Self {
         let n_grid = l_in + l_filter;
+        let conv = ConvPlan::new(2 * l_in + 1, 2 * l_filter + 1);
+        let m = conv.m;
         let mut filter_cols = Vec::with_capacity(l_filter + 1);
+        let mut phi = Vec::with_capacity(l_filter + 1);
         for l2 in 0..=l_filter {
             // aligned filter coefficient: x_{l2,0} = Y_{l2,0}(+z) = sqrt((2l+1)/4pi)
             let mag = sh_norm(l2, 0) * crate::so3::sh::assoc_legendre(l2, 0, 1.0);
             let col: Vec<C64> =
                 theta_fourier(l2, 0).iter().map(|c| c.scale(mag)).collect();
+            // phi_l2(j) = Re sum_u col[u] e^{+2 pi i u j / m}: the filter
+            // column's (real) sample profile on the wrapped torus grid
+            let prof: Vec<f64> = (0..m)
+                .map(|j| {
+                    let mut acc = C64::default();
+                    for (k, c) in col.iter().enumerate() {
+                        let u = k as f64 - l2 as f64;
+                        acc += *c * C64::cis(
+                            2.0 * std::f64::consts::PI * u * j as f64
+                                / m as f64,
+                        );
+                    }
+                    acc.re
+                })
+                .collect();
             filter_cols.push(col);
+            phi.push(prof);
         }
         GauntConvPlan {
             l_in,
             l_filter,
             l_out,
             p_in: sh2f_panels(l_in),
-            t_out: f2sh_panels(l_out, n_grid),
+            t_out: F2shPanelsT::build(l_out, n_grid),
             filter_cols,
+            conv,
+            phi,
             n_grid,
         }
     }
 
+    /// Fresh scratch sized for this plan (one per worker thread).  The
+    /// FFT-path buffers (`f1`, `prof`, the conv workspace) start empty
+    /// and are grown on the first `apply_aligned_fft_into` call — plans
+    /// below the crossover never touch them, so per-worker memory stays
+    /// proportional to the path actually taken.
+    pub fn scratch(&self) -> GauntConvScratch {
+        let nl = self.l_in + 1;
+        let n1 = 2 * self.l_in + 1;
+        let nf = 2 * self.l_filter + 1;
+        let nu3 = 2 * self.n_grid + 1;
+        GauntConvScratch {
+            w: vec![C64::default(); nl * nl],
+            u1: vec![C64::default(); n1 * n1],
+            fcol: vec![C64::default(); nf],
+            u3: vec![C64::default(); nu3 * nu3],
+            f1: Vec::new(),
+            prof: Vec::new(),
+            conv: ConvScratch::empty(),
+        }
+    }
+
     /// Aligned-frame fast path: full sh2f on x, O(L^2) filter conversion,
-    /// single-column convolution, f2sh.
+    /// single-column convolution (or the cached-spectrum FFT path above
+    /// the crossover), f2sh.
     /// `h2[l2]` are per-filter-degree weights (the paper's w_{l2}).
     pub fn apply_aligned(&self, x: &[f64], h2: &[f64]) -> Vec<f64> {
-        let u1 = GauntPlan::sh2f(&self.p_in, x);
+        let mut out = vec![0.0; num_coeffs(self.l_out)];
+        let mut scratch = self.scratch();
+        self.apply_aligned_into(x, h2, &mut out, &mut scratch);
+        out
+    }
+
+    /// Aligned-frame fast path over caller scratch — the ONE place the
+    /// direct-vs-FFT crossover dispatch lives.
+    pub fn apply_aligned_into(
+        &self, x: &[f64], h2: &[f64], out: &mut [f64],
+        scratch: &mut GauntConvScratch,
+    ) {
+        if self.l_in + self.l_filter >= GAUNT_CONV_FFT_CROSSOVER {
+            self.apply_aligned_fft_into(x, h2, out, scratch);
+        } else {
+            self.apply_aligned_direct_into(x, h2, out, scratch);
+        }
+    }
+
+    /// Direct single-column sweep (the small-L winner).
+    pub fn apply_aligned_direct(&self, x: &[f64], h2: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; num_coeffs(self.l_out)];
+        let mut scratch = self.scratch();
+        self.apply_aligned_direct_into(x, h2, &mut out, &mut scratch);
+        out
+    }
+
+    /// [`GauntConvPlan::apply_aligned_direct`] over caller scratch:
+    /// allocation-free.
+    pub fn apply_aligned_direct_into(
+        &self, x: &[f64], h2: &[f64], out: &mut [f64],
+        scratch: &mut GauntConvScratch,
+    ) {
+        GauntPlan::sh2f_into(&self.p_in, x, &mut scratch.u1, &mut scratch.w);
+        let u1 = &scratch.u1;
         let n1 = 2 * self.l_in + 1;
         // filter column F[u], u = -l_filter..l_filter, v = 0 only
         let nf = 2 * self.l_filter + 1;
-        let mut fcol = vec![C64::default(); nf];
+        let fcol = &mut scratch.fcol;
+        fcol.fill(C64::default());
         for (l2, col) in self.filter_cols.iter().enumerate() {
             let w = h2[l2];
             if w == 0.0 {
@@ -203,7 +330,8 @@ impl GauntConvPlan {
         // single-column convolution: U3[u3, N+v'] = sum_u2 F[u2] U1[u3-u2, c1+v']
         let n = self.n_grid;
         let nu3 = 2 * n + 1;
-        let mut u3 = vec![C64::default(); nu3 * nu3];
+        let u3 = &mut scratch.u3;
+        u3.fill(C64::default());
         for u2 in 0..nf {
             let f = fcol[u2];
             if f.norm_sqr() == 0.0 {
@@ -219,60 +347,86 @@ impl GauntConvPlan {
                 }
             }
         }
-        // f2sh (reuse GauntPlan::f2sh logic through a tiny shim)
-        f2sh_apply(&self.t_out, &u3, self.l_out, n)
+        f2sh_contract(&self.t_out, u3, out);
+    }
+
+    /// Cached-spectrum FFT path: transform the input grid to real
+    /// samples, row-scale by the h2-combined cached filter profile (the
+    /// filter itself is never transformed at apply time), transform
+    /// back, project.
+    pub fn apply_aligned_fft(&self, x: &[f64], h2: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; num_coeffs(self.l_out)];
+        let mut scratch = self.scratch();
+        self.apply_aligned_fft_into(x, h2, &mut out, &mut scratch);
+        out
+    }
+
+    /// [`GauntConvPlan::apply_aligned_fft`] over caller scratch:
+    /// allocation-free.
+    pub fn apply_aligned_fft_into(
+        &self, x: &[f64], h2: &[f64], out: &mut [f64],
+        scratch: &mut GauntConvScratch,
+    ) {
+        let m = self.conv.m;
+        // lazily sized: only this path pays for the m^2 workspaces, and
+        // only on its first use (steady state stays allocation-free)
+        if scratch.f1.len() != m * m {
+            scratch.f1.resize(m * m, 0.0);
+            scratch.prof.resize(m, 0.0);
+            scratch.conv.ensure(m);
+        }
+        GauntPlan::sh2f_into(&self.p_in, x, &mut scratch.u1, &mut scratch.w);
+        self.conv
+            .samples_op1_into(&scratch.u1, &mut scratch.f1, &mut scratch.conv);
+        // h2-weighted cached filter profile
+        let f1 = &mut scratch.f1;
+        let prof = &mut scratch.prof;
+        prof.fill(0.0);
+        for (l2, p) in self.phi.iter().enumerate() {
+            let w = h2[l2];
+            if w == 0.0 {
+                continue;
+            }
+            for (a, b) in prof.iter_mut().zip(p) {
+                *a += w * *b;
+            }
+        }
+        // q(j, k) = f1(j, k) * phi(j): the filter's samples are constant
+        // along the second axis (single non-zero Fourier column)
+        for j in 0..m {
+            let pj = prof[j];
+            for v in f1[j * m..(j + 1) * m].iter_mut() {
+                *v *= pj;
+            }
+        }
+        self.conv
+            .grid_from_samples_into(&scratch.f1, &mut scratch.u3, &mut scratch.conv);
+        f2sh_contract(&self.t_out, &scratch.u3, out);
     }
 
     /// Full edge convolution with rotation round trip.
     pub fn apply(&self, x: &[f64], dir: [f64; 3], h2: &[f64]) -> Vec<f64> {
+        let mut scratch = self.scratch();
+        self.apply_with(x, dir, h2, &mut scratch)
+    }
+
+    /// [`GauntConvPlan::apply`] over caller scratch: the aligned-frame
+    /// contraction reuses the scratch; the Wigner rotation blocks are
+    /// still allocated per call (so3 layer).
+    pub fn apply_with(
+        &self, x: &[f64], dir: [f64; 3], h2: &[f64],
+        scratch: &mut GauntConvScratch,
+    ) -> Vec<f64> {
         let rot = align_to_z(dir);
         let d_in = wigner_d_real_block(self.l_in, &rot);
         let n_in = num_coeffs(self.l_in);
         let x_rot = matvec(&d_in, x, n_in, n_in);
-        let y_rot = self.apply_aligned(&x_rot, h2);
+        let mut y_rot = vec![0.0; num_coeffs(self.l_out)];
+        self.apply_aligned_into(&x_rot, h2, &mut y_rot, scratch);
         let d_out = wigner_d_real_block(self.l_out, &rot.transpose());
         let n_out = num_coeffs(self.l_out);
         matvec(&d_out, &y_rot, n_out, n_out)
     }
-}
-
-/// Shared f2sh panel application (same math as GauntPlan::f2sh).
-fn f2sh_apply(t3: &F2shPanels, grid: &[C64], l_out: usize, n: usize) -> Vec<f64> {
-    let nu = 2 * n + 1;
-    let mut x = vec![0.0; num_coeffs(l_out)];
-    let pi = std::f64::consts::PI;
-    let s2pi = std::f64::consts::SQRT_2 * pi;
-    for s in 0..=l_out {
-        let t = &t3.panels[s];
-        if s == 0 {
-            for l in 0..=l_out {
-                let trow = &t[l * nu..(l + 1) * nu];
-                let mut acc = 0.0;
-                for u in 0..nu {
-                    let g = grid[u * nu + n];
-                    acc += trow[u].re * g.re - trow[u].im * g.im;
-                }
-                x[lm_index(l, 0)] = 2.0 * pi * acc;
-            }
-        } else {
-            for l in s..=l_out {
-                let trow = &t[l * nu..(l + 1) * nu];
-                let mut accp = 0.0;
-                let mut accm = 0.0;
-                for u in 0..nu {
-                    let gp = grid[u * nu + n + s];
-                    let gm = grid[u * nu + n - s];
-                    let sp = gp + gm;
-                    let sm = gp - gm;
-                    accp += trow[u].re * sp.re - trow[u].im * sp.im;
-                    accm += -(trow[u].im * sm.re + trow[u].re * sm.im);
-                }
-                x[lm_index(l, s as i64)] = s2pi * accp;
-                x[lm_index(l, -(s as i64))] = s2pi * accm;
-            }
-        }
-    }
-    x
 }
 
 /// Reference equivariant convolution: direct CG contraction with the full
@@ -404,6 +558,24 @@ mod tests {
         let got = plan.apply_aligned(&x, &h2);
         let want = conv_reference_gaunt(&x, li, [0.0, 0.0, 1.0], lf, lo, &h2);
         assert!(max_abs_diff(&got, &want) < 1e-9);
+    }
+
+    #[test]
+    fn gaunt_conv_fft_path_matches_direct_sweep() {
+        // the cached-spectrum FFT path and the single-column sweep are
+        // two evaluations of the same convolution
+        for (li, lf, lo) in [(2usize, 2usize, 3usize), (3, 2, 3), (1, 3, 4)] {
+            let plan = GauntConvPlan::new(li, lf, lo);
+            let mut rng = Rng::new(5);
+            let x = rng.normals(num_coeffs(li));
+            let h2: Vec<f64> = (0..=lf).map(|_| rng.normal()).collect();
+            let a = plan.apply_aligned_direct(&x, &h2);
+            let b = plan.apply_aligned_fft(&x, &h2);
+            assert!(max_abs_diff(&a, &b) < 1e-9,
+                    "({li},{lf},{lo}): {}", max_abs_diff(&a, &b));
+            let want = conv_reference_gaunt(&x, li, [0.0, 0.0, 1.0], lf, lo, &h2);
+            assert!(max_abs_diff(&b, &want) < 1e-8);
+        }
     }
 
     #[test]

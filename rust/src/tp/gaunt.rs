@@ -3,16 +3,22 @@
 //! Pipeline per pair of inputs:
 //!   1. sh2f  — per-|v| panel contraction (exploits the m = +-v sparsity),
 //!   2. conv  — 2D convolution of the coefficient grids (direct for small
-//!              L, FFT for large),
-//!   3. f2sh  — per-|v| back-projection onto SH coefficients.
+//!              L, planned Hermitian FFT for large — see
+//!              [`crate::fourier::plan::ConvPlan`]),
+//!   3. f2sh  — row-major per-|v| back-projection onto SH coefficients
+//!              ([`crate::fourier::tables::f2sh_contract`]).
 //!
-//! A [`GauntPlan`] precomputes all tables for fixed (L1, L2, L3) and keeps
-//! scratch buffers so the hot path is allocation-free.
+//! A [`GauntPlan`] precomputes all tables for fixed (L1, L2, L3); the
+//! fused [`GauntPlan::apply_into`] runs the whole pipeline over a
+//! caller-owned [`GauntScratch`] with zero allocations, so batched
+//! applies (and the engine's sharded workers, each holding one scratch)
+//! have no steady-state allocation at all.
 
 use crate::fourier::complex::C64;
-use crate::fourier::conv::{conv2d_direct, conv2d_fft};
+use crate::fourier::conv::conv2d_direct_into;
+use crate::fourier::plan::{ConvPlan, ConvScratch};
 use crate::fourier::tables::{
-    f2sh_panels, sh2f_panels, F2shPanels, Sh2fPanels, SQRT2_OVER_2,
+    f2sh_contract, sh2f_panels, F2shPanelsT, Sh2fPanels, SQRT2_OVER_2,
 };
 use crate::{lm_index, num_coeffs};
 
@@ -25,6 +31,34 @@ pub enum ConvMethod {
     Auto,
 }
 
+/// Degree sum at and above which `ConvMethod::Auto` switches from the
+/// direct O(L^4) convolution to the planned Hermitian FFT path.
+///
+/// Re-tuned for the planned path: the legacy allocating `conv2d_fft`
+/// crossed over around l1 + l2 = 12; the planned path does ~2.5 m
+/// instead of 6 m length-m transforms per pair and allocates nothing,
+/// moving the modeled flop crossover to l1 + l2 ~ 10 (direct:
+/// ~6 (2L+1)^4 flops; planned FFT: ~17.5 m^2 log2 m with m =
+/// 2^ceil(log2(2L+1)), L = l1 + l2).  `table2_speed_memory` measures and
+/// prints the actual per-L ratios so this constant can be re-pinned on
+/// real hardware.
+pub const AUTO_FFT_CROSSOVER: usize = 10;
+
+/// Caller-owned scratch for the fused Gaunt pipeline: one per worker
+/// thread; all buffers are sized at plan granularity and never resized,
+/// so steady-state applies allocate nothing.
+pub struct GauntScratch {
+    /// sh2f staging W[l, s] (max of the two operand sizes)
+    w: Vec<C64>,
+    /// operand Fourier grids
+    g1: Vec<C64>,
+    g2: Vec<C64>,
+    /// product grid (2(l1+l2)+1)^2
+    out_grid: Vec<C64>,
+    /// planned-convolution workspace
+    conv: ConvScratch,
+}
+
 /// Precomputed plan for x1 (deg <= L1) (x) x2 (deg <= L2) -> deg <= L3.
 pub struct GauntPlan {
     pub l1: usize,
@@ -33,7 +67,8 @@ pub struct GauntPlan {
     pub method: ConvMethod,
     p1: Sh2fPanels,
     p2: Sh2fPanels,
-    t3: F2shPanels,
+    t3t: F2shPanelsT,
+    conv: ConvPlan,
     n_grid: usize, // product grid half-width = l1 + l2
 }
 
@@ -47,19 +82,49 @@ impl GauntPlan {
             method,
             p1: sh2f_panels(l1),
             p2: sh2f_panels(l2),
-            t3: f2sh_panels(l3, n_grid),
+            t3t: F2shPanelsT::build(l3, n_grid),
+            conv: ConvPlan::new(2 * l1 + 1, 2 * l2 + 1),
             n_grid,
         }
     }
 
-    /// SH coefficients -> complex Fourier grid (2L+1)^2 (row-major [u][v]).
-    pub fn sh2f(panels: &Sh2fPanels, x: &[f64]) -> Vec<C64> {
+    /// Fresh scratch sized for this plan (one per worker thread).  A
+    /// plan whose method resolves to the direct convolution never
+    /// touches the FFT workspace, so it is skipped entirely (the plan's
+    /// method is fixed at construction).
+    pub fn scratch(&self) -> GauntScratch {
+        let n1 = 2 * self.l1 + 1;
+        let n2 = 2 * self.l2 + 1;
+        let nu3 = 2 * self.n_grid + 1;
+        let nw = (self.l1 + 1).max(self.l2 + 1);
+        GauntScratch {
+            w: vec![C64::default(); nw * nw],
+            g1: vec![C64::default(); n1 * n1],
+            g2: vec![C64::default(); n2 * n2],
+            out_grid: vec![C64::default(); nu3 * nu3],
+            conv: if self.uses_fft() {
+                self.conv.scratch()
+            } else {
+                ConvScratch::empty()
+            },
+        }
+    }
+
+    /// SH coefficients -> complex Fourier grid (2L+1)^2 (row-major
+    /// [u][v]) into caller buffers: `grid` is the (2L+1)^2 output, `w`
+    /// the (L+1)^2 staging area.  Allocation-free.
+    pub fn sh2f_into(
+        panels: &Sh2fPanels, x: &[f64], grid: &mut [C64], w: &mut [C64],
+    ) {
         let l_max = panels.l_max;
         let nu = 2 * l_max + 1;
         let nl = l_max + 1;
         debug_assert_eq!(x.len(), num_coeffs(l_max));
+        debug_assert_eq!(grid.len(), nu * nu);
+        debug_assert!(w.len() >= nl * nl);
         // W[l, s]
-        let mut w = vec![C64::default(); nl * nl];
+        let w = &mut w[..nl * nl];
+        w.fill(C64::default());
         for l in 0..=l_max {
             w[l * nl] = C64::real(x[lm_index(l, 0)]);
             for s in 1..=l {
@@ -69,7 +134,7 @@ impl GauntPlan {
                 );
             }
         }
-        let mut grid = vec![C64::default(); nu * nu];
+        grid.fill(C64::default());
         for s in 0..=l_max {
             let p = &panels.panels[s];
             for u in 0..nu {
@@ -91,74 +156,81 @@ impl GauntPlan {
                 }
             }
         }
+    }
+
+    /// SH coefficients -> complex Fourier grid (allocating wrapper around
+    /// [`GauntPlan::sh2f_into`]).
+    pub fn sh2f(panels: &Sh2fPanels, x: &[f64]) -> Vec<C64> {
+        let l_max = panels.l_max;
+        let nu = 2 * l_max + 1;
+        let nl = l_max + 1;
+        let mut grid = vec![C64::default(); nu * nu];
+        let mut w = vec![C64::default(); nl * nl];
+        Self::sh2f_into(panels, x, &mut grid, &mut w);
         grid
+    }
+
+    /// Product grid (2N+1)^2 -> SH coefficients (deg <= L3), into a
+    /// caller buffer of `num_coeffs(L3)`.  Allocation-free row-major
+    /// traversal over the transposed panels.
+    pub fn f2sh_into(&self, grid: &[C64], out: &mut [f64]) {
+        f2sh_contract(&self.t3t, grid, out);
     }
 
     /// Product grid (2N+1)^2 -> SH coefficients (deg <= L3).
     pub fn f2sh(&self, grid: &[C64]) -> Vec<f64> {
-        let n = self.n_grid;
-        let nu = 2 * n + 1;
-        debug_assert_eq!(grid.len(), nu * nu);
-        let l_out = self.l3;
-        let mut x = vec![0.0; num_coeffs(l_out)];
-        let pi = std::f64::consts::PI;
-        let s2pi = std::f64::consts::SQRT_2 * pi;
-        for s in 0..=l_out {
-            let t = &self.t3.panels[s];
-            if s == 0 {
-                for l in 0..=l_out {
-                    let trow = &t[l * nu..(l + 1) * nu];
-                    let mut acc = 0.0;
-                    for u in 0..nu {
-                        let g = grid[u * nu + n];
-                        let tv = trow[u];
-                        acc += tv.re * g.re - tv.im * g.im;
-                    }
-                    x[lm_index(l, 0)] = 2.0 * pi * acc;
-                }
-            } else {
-                for l in s..=l_out {
-                    let trow = &t[l * nu..(l + 1) * nu];
-                    let mut accp = 0.0; // Re sum T (gp + gm)
-                    let mut accm = 0.0; // Re sum iT (gp - gm)
-                    for u in 0..nu {
-                        let gp = grid[u * nu + n + s];
-                        let gm = grid[u * nu + n - s];
-                        let sp = gp + gm;
-                        let sm = gp - gm;
-                        let tv = trow[u];
-                        accp += tv.re * sp.re - tv.im * sp.im;
-                        accm += -(tv.im * sm.re + tv.re * sm.im);
-                    }
-                    x[lm_index(l, s as i64)] = s2pi * accp;
-                    x[lm_index(l, -(s as i64))] = s2pi * accm;
-                }
-            }
-        }
+        let mut x = vec![0.0; num_coeffs(self.l3)];
+        self.f2sh_into(grid, &mut x);
         x
     }
 
-    fn convolve(&self, a: &[C64], b: &[C64]) -> Vec<C64> {
-        let n1 = 2 * self.l1 + 1;
-        let n2 = 2 * self.l2 + 1;
-        let use_fft = match self.method {
+    /// Whether this plan's method resolves to the FFT backend.
+    pub fn uses_fft(&self) -> bool {
+        match self.method {
             ConvMethod::Direct => false,
             ConvMethod::Fft => true,
-            ConvMethod::Auto => self.l1 + self.l2 >= 12,
-        };
-        if use_fft {
-            conv2d_fft(a, n1, b, n2)
-        } else {
-            conv2d_direct(a, n1, b, n2)
+            ConvMethod::Auto => self.l1 + self.l2 >= AUTO_FFT_CROSSOVER,
         }
+    }
+
+    fn convolve_into(
+        &self, a: &[C64], b: &[C64], out: &mut [C64], conv: &mut ConvScratch,
+    ) {
+        let n1 = 2 * self.l1 + 1;
+        let n2 = 2 * self.l2 + 1;
+        if self.uses_fft() {
+            // sh2f grids of real SH coefficients are Hermitian:
+            // g(-u,-v) = conj(g(u,v))
+            self.conv.conv_hermitian_into(a, b, out, conv);
+        } else {
+            conv2d_direct_into(a, n1, b, n2, out);
+        }
+    }
+
+    /// The fused Gaunt Tensor Product of one pair of features, written
+    /// into `out` (`num_coeffs(L3)`), with every intermediate living in
+    /// `scratch`: zero allocations in steady state.
+    pub fn apply_into(
+        &self, x1: &[f64], x2: &[f64], out: &mut [f64],
+        scratch: &mut GauntScratch,
+    ) {
+        Self::sh2f_into(&self.p1, x1, &mut scratch.g1, &mut scratch.w);
+        Self::sh2f_into(&self.p2, x2, &mut scratch.g2, &mut scratch.w);
+        self.convolve_into(
+            &scratch.g1,
+            &scratch.g2,
+            &mut scratch.out_grid,
+            &mut scratch.conv,
+        );
+        self.f2sh_into(&scratch.out_grid, out);
     }
 
     /// The Gaunt Tensor Product of one pair of features.
     pub fn apply(&self, x1: &[f64], x2: &[f64]) -> Vec<f64> {
-        let u1 = Self::sh2f(&self.p1, x1);
-        let u2 = Self::sh2f(&self.p2, x2);
-        let u3 = self.convolve(&u1, &u2);
-        self.f2sh(&u3)
+        let mut out = vec![0.0; num_coeffs(self.l3)];
+        let mut scratch = self.scratch();
+        self.apply_into(x1, x2, &mut out, &mut scratch);
+        out
     }
 
     /// Weighted variant (paper Sec. 3.3 reparameterization): per-degree
@@ -178,15 +250,20 @@ impl GauntPlan {
         out
     }
 
-    /// Batched apply (rows of x1/x2 are independent features).
+    /// Batched apply (rows of x1/x2 are independent features).  One
+    /// scratch is allocated up front and reused for every row: the
+    /// steady-state per-row cost is allocation-free.
     pub fn apply_batch(&self, x1: &[f64], x2: &[f64], rows: usize) -> Vec<f64> {
         let n1 = num_coeffs(self.l1);
         let n2 = num_coeffs(self.l2);
         let n3 = num_coeffs(self.l3);
         let mut out = vec![0.0; rows * n3];
+        let mut scratch = self.scratch();
         for r in 0..rows {
-            let y = self.apply(&x1[r * n1..(r + 1) * n1], &x2[r * n2..(r + 1) * n2]);
-            out[r * n3..(r + 1) * n3].copy_from_slice(&y);
+            let (x1r, x2r) =
+                (&x1[r * n1..(r + 1) * n1], &x2[r * n2..(r + 1) * n2]);
+            self.apply_into(x1r, x2r, &mut out[r * n3..(r + 1) * n3],
+                            &mut scratch);
         }
         out
     }
@@ -383,6 +460,47 @@ mod tests {
             let single = plan.apply(&x1[r * n..(r + 1) * n], &x2[r * n..(r + 1) * n]);
             assert!(max_abs_diff(&batch[r * n..(r + 1) * n], &single) < 1e-12);
         }
+    }
+
+    #[test]
+    fn apply_into_matches_apply_and_scratch_reuse_is_exact() {
+        let mut rng = Rng::new(8);
+        let plan = GauntPlan::new(3, 2, 4, ConvMethod::Fft);
+        let x1 = rng.normals(num_coeffs(3));
+        let x2 = rng.normals(num_coeffs(2));
+        let want = plan.apply(&x1, &x2);
+        let mut scratch = plan.scratch();
+        let mut out = vec![0.0; num_coeffs(4)];
+        // dirty the scratch with one unrelated pair, then reuse it
+        let y1 = rng.normals(num_coeffs(3));
+        let y2 = rng.normals(num_coeffs(2));
+        plan.apply_into(&y1, &y2, &mut out, &mut scratch);
+        plan.apply_into(&x1, &x2, &mut out, &mut scratch);
+        assert!(max_abs_diff(&out, &want) == 0.0, "scratch state leaked");
+    }
+
+    #[test]
+    fn auto_crossover_resolution() {
+        assert!(!GauntPlan::new(2, 2, 2, ConvMethod::Auto).uses_fft());
+        assert!(!GauntPlan::new(4, 4, 4, ConvMethod::Auto).uses_fft());
+        assert!(GauntPlan::new(5, 5, 5, ConvMethod::Auto).uses_fft());
+        assert!(GauntPlan::new(6, 4, 6, ConvMethod::Auto).uses_fft());
+        assert!(GauntPlan::new(3, 3, 3, ConvMethod::Fft).uses_fft());
+        assert!(!GauntPlan::new(8, 8, 8, ConvMethod::Direct).uses_fft());
+    }
+
+    #[test]
+    fn fft_and_direct_agree_above_crossover() {
+        let mut rng = Rng::new(9);
+        let l = 6usize;
+        let x1 = rng.normals(num_coeffs(l));
+        let x2 = rng.normals(num_coeffs(l));
+        let auto = GauntPlan::new(l, l, l, ConvMethod::Auto);
+        assert!(auto.uses_fft());
+        let got = auto.apply(&x1, &x2);
+        let want = GauntPlan::new(l, l, l, ConvMethod::Direct).apply(&x1, &x2);
+        assert!(max_abs_diff(&got, &want) < 1e-8,
+                "{}", max_abs_diff(&got, &want));
     }
 
     #[test]

@@ -11,13 +11,20 @@
 //! * [`many_body_gaunt`] — the paper's method: convert once, chain 2D
 //!   convolutions in the Fourier domain (sequential or divide-and-conquer
 //!   order), project back once.
+//! * [`ManyBodyPlan`] — the planned fast path: transform every operand
+//!   once to real samples on the FINAL-size torus grid (pairwise
+//!   two-for-one packed FFTs), collapse the whole chain to a pointwise
+//!   real product, transform back once; the self-product variant does a
+//!   single transform and a pointwise nu-th power.
 
 use crate::fourier::complex::C64;
 use crate::fourier::conv::conv2d_direct;
+use crate::fourier::plan::{ConvPlan, ConvScratch};
 use crate::so3::gaunt::gaunt_tensor_real;
 use crate::tp::cg::CgPlan;
 use crate::tp::gaunt::GauntPlan;
-use crate::fourier::tables::{f2sh_panels, sh2f_panels};
+use crate::fourier::tables::{f2sh_contract, sh2f_panels, F2shPanelsT,
+                             Sh2fPanels};
 use crate::num_coeffs;
 
 /// e3nn-style fold: ((x1 (x) x2) (x) x3) ... with CG couplings, keeping all
@@ -93,46 +100,182 @@ pub fn many_body_gaunt(xs: &[Vec<f64>], l: usize, l_out: usize,
     let (grid, n_side) = merged;
     let n_grid = (n_side - 1) / 2;
     debug_assert_eq!(n_grid, nu * l);
-    let t3 = f2sh_panels(l_out, n_grid);
-    f2sh_apply_panels(&t3, &grid, l_out, n_grid)
+    let t3t = F2shPanelsT::build(l_out, n_grid);
+    let mut x = vec![0.0; num_coeffs(l_out)];
+    f2sh_contract(&t3t, &grid, &mut x);
+    x
 }
 
-fn f2sh_apply_panels(
-    t3: &crate::fourier::tables::F2shPanels, grid: &[C64], l_out: usize,
-    n: usize,
-) -> Vec<f64> {
-    let nu = 2 * n + 1;
-    let mut x = vec![0.0; num_coeffs(l_out)];
-    let pi = std::f64::consts::PI;
-    let s2pi = std::f64::consts::SQRT_2 * pi;
-    for s in 0..=l_out {
-        let t = &t3.panels[s];
-        for l in s..=l_out {
-            let trow = &t[l * nu..(l + 1) * nu];
-            if s == 0 {
-                let mut acc = 0.0;
-                for u in 0..nu {
-                    let g = grid[u * nu + n];
-                    acc += trow[u].re * g.re - trow[u].im * g.im;
+/// Planned many-body pipeline: every operand is transformed ONCE to real
+/// samples on the final-size torus grid (power-of-two m >= 2 nu l + 1),
+/// the nu-fold convolution collapses to a pointwise product of real
+/// sample arrays, and one real-input forward FFT + f2sh projects back.
+///
+/// Versus the grid-domain chaining of [`many_body_gaunt`] (whose k-th
+/// sequential convolution costs O((2kl+1)^2 (2l+1)^2)), this is
+/// O(nu m^2 log m) total — and the operands' spectra are computed
+/// pairwise two-for-one (grids from real SH coefficients are Hermitian,
+/// so `INV2[G_a + i G_b]` transforms two at once).  For the MACE-style
+/// self-product (all operands equal), [`ManyBodyPlan::apply_self`] does
+/// ONE transform and a pointwise nu-th power.
+pub struct ManyBodyPlan {
+    pub nu: usize,
+    pub l: usize,
+    pub l_out: usize,
+    panels: Sh2fPanels,
+    t3t: F2shPanelsT,
+    n_in: usize,   // 2l + 1
+    n_side: usize, // 2 nu l + 1
+    /// chain workspace: wrap maps for operand and final-product sizes,
+    /// padded transform size, shared FFT tables (the same machinery the
+    /// pairwise Hermitian path uses — one source of the wrap convention)
+    chain: ConvPlan,
+}
+
+/// Caller-owned scratch for [`ManyBodyPlan`] applies: one per worker
+/// thread; sized at plan build, never resized.
+pub struct ManyBodyScratch {
+    /// sh2f staging
+    w: Vec<C64>,
+    /// operand Fourier grids (pair packing)
+    g1: Vec<C64>,
+    g2: Vec<C64>,
+    /// running real sample product (m x m)
+    prod: Vec<f64>,
+    /// final product grid (n_side x n_side)
+    grid: Vec<C64>,
+    /// planned-convolution workspace (packed transforms + projection)
+    conv: ConvScratch,
+}
+
+impl ManyBodyPlan {
+    pub fn new(nu: usize, l: usize, l_out: usize) -> Self {
+        assert!(nu >= 1);
+        assert!(l_out <= nu * l,
+                "l_out={l_out} exceeds the nu*l={} product degree", nu * l);
+        let n_in = 2 * l + 1;
+        let n_side = 2 * nu * l + 1;
+        ManyBodyPlan {
+            nu,
+            l,
+            l_out,
+            panels: sh2f_panels(l),
+            t3t: F2shPanelsT::build(l_out, nu * l),
+            n_in,
+            n_side,
+            chain: ConvPlan::for_chain(n_in, n_side),
+        }
+    }
+
+    /// Fresh scratch sized for this plan (one per worker thread).
+    pub fn scratch(&self) -> ManyBodyScratch {
+        let nl = self.l + 1;
+        let m = self.chain.m;
+        ManyBodyScratch {
+            w: vec![C64::default(); nl * nl],
+            g1: vec![C64::default(); self.n_in * self.n_in],
+            g2: vec![C64::default(); self.n_in * self.n_in],
+            prod: vec![0.0; m * m],
+            grid: vec![C64::default(); self.n_side * self.n_side],
+            conv: self.chain.scratch(),
+        }
+    }
+
+    /// Wrap-embed `grid` (n_in x n_in, centered) into `z` (m x m) via the
+    /// chain plan's operand wrap map: `add_i` accumulates `i * grid` (the
+    /// imaginary slot of the packed pair), plain assignment otherwise (z
+    /// is pre-zeroed).
+    fn wrap_grid(&self, grid: &[C64], z: &mut [C64], add_i: bool) {
+        let (n, m) = (self.n_in, self.chain.m);
+        let wrap = &self.chain.wrap1;
+        for i in 0..n {
+            let r = wrap[i] * m;
+            for j in 0..n {
+                let g = grid[i * n + j];
+                let cell = &mut z[r + wrap[j]];
+                if add_i {
+                    cell.re -= g.im;
+                    cell.im += g.re;
+                } else {
+                    *cell = g;
                 }
-                x[crate::lm_index(l, 0)] = 2.0 * pi * acc;
-            } else {
-                let mut accp = 0.0;
-                let mut accm = 0.0;
-                for u in 0..nu {
-                    let gp = grid[u * nu + n + s];
-                    let gm = grid[u * nu + n - s];
-                    let sp = gp + gm;
-                    let sm = gp - gm;
-                    accp += trow[u].re * sp.re - trow[u].im * sp.im;
-                    accm += -(trow[u].im * sm.re + trow[u].re * sm.im);
-                }
-                x[crate::lm_index(l, s as i64)] = s2pi * accp;
-                x[crate::lm_index(l, -(s as i64))] = s2pi * accm;
             }
         }
     }
-    x
+
+    /// Back half shared by apply / apply_self: product samples ->
+    /// centered grid (via the chain plan) -> SH.
+    fn project_into(&self, scratch: &mut ManyBodyScratch, out: &mut [f64]) {
+        self.chain
+            .grid_from_samples_into(&scratch.prod, &mut scratch.grid,
+                                    &mut scratch.conv);
+        f2sh_contract(&self.t3t, &scratch.grid, out);
+    }
+
+    /// nu-fold Gaunt product of `xs` (each `num_coeffs(l)` long),
+    /// truncated to degree `l_out`.  Matches [`many_body_gaunt_fold`].
+    pub fn apply(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        let mut out = vec![0.0; num_coeffs(self.l_out)];
+        let mut scratch = self.scratch();
+        self.apply_into(xs, &mut out, &mut scratch);
+        out
+    }
+
+    /// [`ManyBodyPlan::apply`] over caller scratch: allocation-free.
+    pub fn apply_into(
+        &self, xs: &[Vec<f64>], out: &mut [f64],
+        scratch: &mut ManyBodyScratch,
+    ) {
+        assert_eq!(xs.len(), self.nu);
+        scratch.prod.fill(1.0);
+        for pair in xs.chunks(2) {
+            let z = &mut scratch.conv.z;
+            z.fill(C64::default());
+            GauntPlan::sh2f_into(&self.panels, &pair[0], &mut scratch.g1,
+                                 &mut scratch.w);
+            self.wrap_grid(&scratch.g1, z, false);
+            if pair.len() == 2 {
+                GauntPlan::sh2f_into(&self.panels, &pair[1], &mut scratch.g2,
+                                     &mut scratch.w);
+                self.wrap_grid(&scratch.g2, z, true);
+            }
+            self.chain.fft.fft2_inplace(z, true, &mut scratch.conv.col);
+            if pair.len() == 2 {
+                for (p, zv) in scratch.prod.iter_mut().zip(z.iter()) {
+                    *p *= zv.re * zv.im;
+                }
+            } else {
+                for (p, zv) in scratch.prod.iter_mut().zip(z.iter()) {
+                    *p *= zv.re;
+                }
+            }
+        }
+        self.project_into(scratch, out);
+    }
+
+    /// MACE-style self-product `x (x) x (x) ... (x) x` (nu factors): ONE
+    /// transform, a pointwise nu-th power, one transform back.
+    pub fn apply_self(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; num_coeffs(self.l_out)];
+        let mut scratch = self.scratch();
+        self.apply_self_into(x, &mut out, &mut scratch);
+        out
+    }
+
+    /// [`ManyBodyPlan::apply_self`] over caller scratch: allocation-free.
+    pub fn apply_self_into(
+        &self, x: &[f64], out: &mut [f64], scratch: &mut ManyBodyScratch,
+    ) {
+        GauntPlan::sh2f_into(&self.panels, x, &mut scratch.g1, &mut scratch.w);
+        let z = &mut scratch.conv.z;
+        z.fill(C64::default());
+        self.wrap_grid(&scratch.g1, z, false);
+        self.chain.fft.fft2_inplace(z, true, &mut scratch.conv.col);
+        for (p, zv) in scratch.prod.iter_mut().zip(z.iter()) {
+            *p = zv.re.powi(self.nu as i32);
+        }
+        self.project_into(scratch, out);
+    }
 }
 
 /// MACE-style precomputed composite coupling: C[k, i1, ..., i_nu] built by
@@ -337,6 +480,45 @@ mod tests {
             let got = plan.apply_self(&x);
             assert!(max_abs_diff(&got, &want) < 1e-8,
                     "nu={nu} l={l}: {}", max_abs_diff(&got, &want));
+        }
+    }
+
+    #[test]
+    fn planned_pipeline_matches_fold() {
+        let mut rng = Rng::new(5);
+        for (nu, l, l_out) in [(1usize, 2usize, 2usize), (2, 1, 2), (2, 2, 3),
+                               (3, 1, 2), (3, 2, 4), (4, 1, 3)] {
+            let xs: Vec<Vec<f64>> =
+                (0..nu).map(|_| rng.normals(num_coeffs(l))).collect();
+            let want = if nu == 1 {
+                let mut t = xs[0].clone();
+                t.truncate(num_coeffs(l_out.min(l)));
+                t.resize(num_coeffs(l_out), 0.0);
+                t
+            } else {
+                many_body_gaunt_fold(&xs, l, l_out)
+            };
+            let plan = ManyBodyPlan::new(nu, l, l_out);
+            let got = plan.apply(&xs);
+            assert!(max_abs_diff(&got, &want) < 1e-8,
+                    "nu={nu} l={l} l_out={l_out}: {}",
+                    max_abs_diff(&got, &want));
+        }
+    }
+
+    #[test]
+    fn planned_self_product_matches_apply() {
+        let mut rng = Rng::new(6);
+        for (nu, l) in [(2usize, 2usize), (3, 1), (3, 2), (4, 1)] {
+            let x = rng.normals(num_coeffs(l));
+            let xs: Vec<Vec<f64>> = (0..nu).map(|_| x.clone()).collect();
+            let plan = ManyBodyPlan::new(nu, l, l);
+            let a = plan.apply(&xs);
+            let b = plan.apply_self(&x);
+            assert!(max_abs_diff(&a, &b) < 1e-9, "nu={nu} l={l}");
+            let want = many_body_gaunt_fold(&xs, l, l);
+            assert!(max_abs_diff(&b, &want) < 1e-8,
+                    "nu={nu} l={l}: {}", max_abs_diff(&b, &want));
         }
     }
 

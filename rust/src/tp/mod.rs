@@ -22,4 +22,6 @@ pub mod many_body;
 
 pub use cg::CgPlan;
 pub use engine::PlanCache;
-pub use gaunt::{ConvMethod, GauntPlan};
+pub use escn::{GauntConvPlan, GauntConvScratch};
+pub use gaunt::{ConvMethod, GauntPlan, GauntScratch};
+pub use many_body::{ManyBodyPlan, ManyBodyScratch};

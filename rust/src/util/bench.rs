@@ -77,6 +77,20 @@ pub fn consume<T>(x: T) -> T {
     black_box(x)
 }
 
+/// Whether the bench binary was invoked with `--smoke` (e.g. via
+/// `cargo bench --bench <name> -- --smoke`): run ONE tiny size per table
+/// with a minimal budget, as a fast CI check that the bench still builds
+/// and executes.  `scripts/verify.sh` runs every bench this way so a
+/// broken bench fails tier-1 instead of only at figure-generation time.
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// `base_ms` normally, 1 ms in smoke mode.
+pub fn budget_ms(base_ms: u64) -> u64 {
+    if smoke() { 1 } else { base_ms }
+}
+
 /// Collects rows, prints a table, and writes TSV next to the bench.
 pub struct BenchTable {
     pub title: String,

@@ -32,6 +32,24 @@ pub fn shard_rows<F>(out: &mut [f64], row_len: usize, threads: usize, work: F)
 where
     F: Fn(usize, &mut [f64]) + Sync,
 {
+    shard_rows_with(out, row_len, threads, || (), |r, row, _state| {
+        work(r, row)
+    });
+}
+
+/// [`shard_rows`] with per-worker mutable state: `init()` runs once on
+/// each worker (and once on the caller for the serial path) to build a
+/// private state value — typically a plan scratch — which is then passed
+/// to every `work(row_index, out_row, &mut state)` call that worker
+/// executes.  This is how batched tensor products stay allocation-free
+/// in steady state: the scratch is allocated once per worker, not once
+/// per row, and workers never share it.
+pub fn shard_rows_with<S, I, F>(
+    out: &mut [f64], row_len: usize, threads: usize, init: I, work: F,
+) where
+    I: Fn() -> S + Sync,
+    F: Fn(usize, &mut [f64], &mut S) + Sync,
+{
     assert!(row_len > 0, "shard_rows: row_len must be positive");
     debug_assert_eq!(out.len() % row_len, 0);
     let rows = out.len() / row_len;
@@ -40,19 +58,22 @@ where
     }
     let threads = threads.clamp(1, rows);
     if threads == 1 {
+        let mut state = init();
         for (r, row) in out.chunks_mut(row_len).enumerate() {
-            work(r, row);
+            work(r, row, &mut state);
         }
         return;
     }
     let chunk_rows = rows.div_ceil(threads);
     let work = &work;
+    let init = &init;
     std::thread::scope(|s| {
         for (ci, chunk) in out.chunks_mut(chunk_rows * row_len).enumerate() {
             s.spawn(move || {
                 let base = ci * chunk_rows;
+                let mut state = init();
                 for (i, row) in chunk.chunks_mut(row_len).enumerate() {
-                    work(base + i, row);
+                    work(base + i, row, &mut state);
                 }
             });
         }
@@ -100,6 +121,34 @@ mod tests {
         let mut out: Vec<f64> = Vec::new();
         shard_rows(&mut out, 3, 8, |_, _| panic!("no rows to visit"));
         assert_eq!(run(1, 4, 8), run(1, 4, 1));
+    }
+
+    #[test]
+    fn per_worker_state_initialized_once_per_worker() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let inits = AtomicUsize::new(0);
+        let rows = 16usize;
+        let mut out = vec![0.0; rows * 2];
+        shard_rows_with(
+            &mut out,
+            2,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                vec![0.0f64; 8] // stand-in for a plan scratch
+            },
+            |r, row, state| {
+                state[0] += 1.0; // rows on one worker share the state
+                row[0] = r as f64;
+                row[1] = state[0];
+            },
+        );
+        // one init per worker, not per row
+        assert!(inits.load(Ordering::Relaxed) <= 4);
+        for r in 0..rows {
+            assert_eq!(out[2 * r], r as f64);
+            assert!(out[2 * r + 1] >= 1.0);
+        }
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Allocation regression tests for the fused Gaunt hot path.
+//!
+//! A counting global allocator (installed for THIS test binary only)
+//! proves the plan-layer claim directly: once a [`GauntScratch`] exists,
+//! `GauntPlan::apply_into` performs ZERO allocations — for the direct
+//! and the planned-FFT convolution backends alike — and
+//! `GauntPlan::apply_batch` allocates O(1) (output + scratch), not
+//! O(rows).
+//!
+//! Each assertion brackets its measurement window with two counter
+//! reads; the tests serialize on a shared lock so one test's allocations
+//! never land in another's window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self, ptr: *mut u8, layout: Layout, new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use std::sync::Mutex;
+
+use gaunt_tp::num_coeffs;
+use gaunt_tp::tp::{ConvMethod, GauntConvPlan, GauntPlan, ManyBodyPlan};
+use gaunt_tp::util::rng::Rng;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// The test runner executes `#[test]`s concurrently; both tests below
+/// read the global counter, so they serialize on this lock to keep each
+/// other's allocations out of their measurement windows.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// All steady-state assertions in ONE test: the suite runs tests on
+/// multiple threads, and any concurrent test's allocations would show up
+/// in our counter window.
+#[test]
+fn gaunt_hot_path_steady_state_is_allocation_free() {
+    let _guard = SERIAL.lock().unwrap();
+    let mut rng = Rng::new(0);
+
+    for (l, method) in [
+        (2usize, ConvMethod::Direct),
+        (4, ConvMethod::Fft),
+        (6, ConvMethod::Auto), // resolves to FFT above the crossover
+    ] {
+        let n = num_coeffs(l);
+        let plan = GauntPlan::new(l, l, l, method);
+        let x1 = rng.normals(n);
+        let x2 = rng.normals(n);
+        let mut out = vec![0.0; n];
+        let mut scratch = plan.scratch();
+        // warm once: shared FFT tables for this size are built on first
+        // use; after this the path must be quiet
+        plan.apply_into(&x1, &x2, &mut out, &mut scratch);
+        let before = allocs();
+        for _ in 0..16 {
+            plan.apply_into(&x1, &x2, &mut out, &mut scratch);
+        }
+        let delta = allocs() - before;
+        assert_eq!(
+            delta, 0,
+            "L={l} {method:?}: {delta} allocations in 16 steady-state \
+             apply_into calls (expected 0)"
+        );
+    }
+
+    // aligned-frame Gaunt convolution: direct sweep and cached-spectrum
+    // FFT paths over one scratch
+    {
+        let (li, lf, lo) = (3usize, 2usize, 3usize);
+        let plan = GauntConvPlan::new(li, lf, lo);
+        let x = rng.normals(num_coeffs(li));
+        let h2: Vec<f64> = (0..=lf).map(|_| 1.0).collect();
+        let mut out = vec![0.0; num_coeffs(lo)];
+        let mut scratch = plan.scratch();
+        plan.apply_aligned_direct_into(&x, &h2, &mut out, &mut scratch);
+        plan.apply_aligned_fft_into(&x, &h2, &mut out, &mut scratch);
+        let before = allocs();
+        for _ in 0..8 {
+            plan.apply_aligned_direct_into(&x, &h2, &mut out, &mut scratch);
+            plan.apply_aligned_fft_into(&x, &h2, &mut out, &mut scratch);
+        }
+        let delta = allocs() - before;
+        assert_eq!(
+            delta, 0,
+            "gaunt-conv aligned paths: {delta} steady-state allocations"
+        );
+    }
+
+    // many-body planned pipeline (chain + self-product)
+    {
+        let (nu, l, lo) = (3usize, 2usize, 3usize);
+        let plan = ManyBodyPlan::new(nu, l, lo);
+        let xs: Vec<Vec<f64>> =
+            (0..nu).map(|_| rng.normals(num_coeffs(l))).collect();
+        let mut out = vec![0.0; num_coeffs(lo)];
+        let mut scratch = plan.scratch();
+        plan.apply_into(&xs, &mut out, &mut scratch);
+        plan.apply_self_into(&xs[0], &mut out, &mut scratch);
+        let before = allocs();
+        for _ in 0..8 {
+            plan.apply_into(&xs, &mut out, &mut scratch);
+            plan.apply_self_into(&xs[0], &mut out, &mut scratch);
+        }
+        let delta = allocs() - before;
+        assert_eq!(
+            delta, 0,
+            "many-body planned pipeline: {delta} steady-state allocations"
+        );
+    }
+}
+
+#[test]
+fn apply_batch_allocations_do_not_scale_with_rows() {
+    let _guard = SERIAL.lock().unwrap();
+    let mut rng = Rng::new(1);
+    let l = 4usize;
+    let n = num_coeffs(l);
+    let plan = GauntPlan::new(l, l, l, ConvMethod::Fft);
+    let count_batch = |rows: usize, rng: &mut Rng| -> usize {
+        let x1 = rng.normals(rows * n);
+        let x2 = rng.normals(rows * n);
+        // warm shared tables
+        let _ = plan.apply_batch(&x1, &x2, rows);
+        let before = allocs();
+        let out = plan.apply_batch(&x1, &x2, rows);
+        let delta = allocs() - before;
+        assert_eq!(out.len(), rows * n);
+        delta
+    };
+    let one = count_batch(1, &mut rng);
+    let many = count_batch(64, &mut rng);
+    // output + scratch only: identical allocation count regardless of
+    // batch size (the 64-row batch reuses one scratch for every row)
+    assert_eq!(
+        one, many,
+        "apply_batch allocations scale with rows: {one} for 1 row vs \
+         {many} for 64 rows"
+    );
+}

@@ -1,14 +1,42 @@
 //! Property tests for `fourier::fft`: roundtrip, linearity, Parseval, and
 //! the Bluestein path for non-power-of-two (incl. prime) lengths — the
-//! transform underneath the paper's O(L^2 log L) convolution.
+//! transform underneath the paper's O(L^2 log L) convolution — plus the
+//! planned workspace layer: `FftPlan` in-place transforms, the real-input
+//! two-for-one forward, and the Hermitian convolution fast path against
+//! both the direct and the generic complex planned paths.
 
 use gaunt_tp::fourier::complex::C64;
-use gaunt_tp::fourier::fft::{fft, fft2, ifft};
+use gaunt_tp::fourier::conv::{conv2d_direct, conv2d_fft, conv2d_fft_planned};
+use gaunt_tp::fourier::fft::{fft, fft2, ifft, FftPlan};
+use gaunt_tp::fourier::plan::ConvPlan;
 use gaunt_tp::util::prop::{check, PropConfig};
 use gaunt_tp::util::rng::Rng;
 
 fn rand_vec(rng: &mut Rng, n: usize) -> Vec<C64> {
     (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+}
+
+/// Random centered odd-size grid with exact conjugate symmetry
+/// g(-u,-v) = conj(g(u,v)) — the shape of every grid the Gaunt pipeline
+/// produces from real SH coefficients.
+fn rand_hermitian_grid(rng: &mut Rng, n: usize) -> Vec<C64> {
+    let mut g = rand_vec(rng, n * n);
+    let last = n - 1;
+    for i in 0..n {
+        for j in 0..n {
+            let (mi, mj) = (last - i, last - j);
+            if (i, j) < (mi, mj) {
+                g[mi * n + mj] = g[i * n + j].conj();
+            } else if (i, j) == (mi, mj) {
+                g[i * n + j] = C64::real(g[i * n + j].re);
+            }
+        }
+    }
+    g
+}
+
+fn max_cdiff(a: &[C64], b: &[C64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (*x - *y).abs()).fold(0.0, f64::max)
 }
 
 fn naive_dft(x: &[C64]) -> Vec<C64> {
@@ -108,6 +136,118 @@ fn fft2_roundtrip_non_power_of_two_grids() {
                 "{rows}x{cols} idx={i}: 2D roundtrip off"
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Planned workspace layer
+// ---------------------------------------------------------------------
+
+#[test]
+fn planned_fft2_inplace_round_trips() {
+    let mut rng = Rng::new(20);
+    for n in [1usize, 2, 4, 8, 16, 32] {
+        let plan = FftPlan::shared(n);
+        let g = rand_vec(&mut rng, n * n);
+        let mut buf = g.clone();
+        let mut col = vec![C64::default(); n];
+        plan.fft2_inplace(&mut buf, false, &mut col);
+        plan.fft2_inplace(&mut buf, true, &mut col);
+        let s = 1.0 / (n * n) as f64;
+        for (a, b) in g.iter().zip(&buf) {
+            assert!((*a - b.scale(s)).abs() < 1e-10, "n={n}");
+        }
+    }
+}
+
+#[test]
+fn real_forward_matches_complex_forward() {
+    check("fwd2-real-vs-complex", PropConfig { cases: 10, seed: 21 },
+          |rng, case| {
+        let n = 1usize << (case % 5); // 1, 2, 4, 8, 16
+        let plan = FftPlan::shared(n);
+        let q: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let qc: Vec<C64> = q.iter().map(|v| C64::real(*v)).collect();
+        let want = fft2(&qc, n, n, false);
+        let mut got = vec![C64::default(); n * n];
+        let mut col = vec![C64::default(); n];
+        plan.fwd2_real_into(&q, &mut got, &mut col);
+        if max_cdiff(&got, &want) > 1e-9 {
+            return Err(format!("n={n}: real-input forward diverges"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hermitian_conv_matches_direct_and_generic() {
+    // the tentpole identity: on conjugate-symmetric grids the packed
+    // two-for-one Hermitian path, the generic planned complex path, the
+    // legacy conv2d_fft, and the direct convolution all agree
+    let mut rng = Rng::new(22);
+    for (n1, n2) in [(1usize, 1usize), (3, 3), (3, 5), (5, 5), (5, 9), (7, 7)] {
+        let a = rand_hermitian_grid(&mut rng, n1);
+        let b = rand_hermitian_grid(&mut rng, n2);
+        let plan = ConvPlan::new(n1, n2);
+        let mut scratch = plan.scratch();
+        let n = plan.n_out;
+        let mut herm = vec![C64::default(); n * n];
+        plan.conv_hermitian_into(&a, &b, &mut herm, &mut scratch);
+        let mut generic = vec![C64::default(); n * n];
+        plan.conv_into(&a, &b, &mut generic, &mut scratch);
+        let direct = conv2d_direct(&a, n1, &b, n2);
+        let legacy = conv2d_fft(&a, n1, &b, n2);
+        assert!(max_cdiff(&herm, &direct) < 1e-9,
+                "hermitian vs direct n1={n1} n2={n2}: {}",
+                max_cdiff(&herm, &direct));
+        assert!(max_cdiff(&generic, &direct) < 1e-9,
+                "generic vs direct n1={n1} n2={n2}");
+        assert!(max_cdiff(&herm, &legacy) < 1e-9,
+                "hermitian vs legacy n1={n1} n2={n2}");
+    }
+}
+
+#[test]
+fn hermitian_conv_bilinear_property() {
+    check("hermitian-conv-bilinear", PropConfig { cases: 12, seed: 23 },
+          |rng, _| {
+        let (n1, n2) = (5usize, 3usize);
+        let a1 = rand_hermitian_grid(rng, n1);
+        let a2 = rand_hermitian_grid(rng, n1);
+        let b = rand_hermitian_grid(rng, n2);
+        let alpha = rng.uniform(-2.0, 2.0);
+        let combo: Vec<C64> = a1
+            .iter()
+            .zip(&a2)
+            .map(|(x, y)| x.scale(alpha) + *y)
+            .collect();
+        let plan = ConvPlan::new(n1, n2);
+        let mut scratch = plan.scratch();
+        let n = plan.n_out;
+        let mut lhs = vec![C64::default(); n * n];
+        let mut r1 = vec![C64::default(); n * n];
+        let mut r2 = vec![C64::default(); n * n];
+        plan.conv_hermitian_into(&combo, &b, &mut lhs, &mut scratch);
+        plan.conv_hermitian_into(&a1, &b, &mut r1, &mut scratch);
+        plan.conv_hermitian_into(&a2, &b, &mut r2, &mut scratch);
+        let rhs: Vec<C64> =
+            r1.iter().zip(&r2).map(|(x, y)| x.scale(alpha) + *y).collect();
+        if max_cdiff(&lhs, &rhs) > 1e-8 {
+            return Err("hermitian conv not bilinear".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn planned_one_shot_matches_legacy_on_random_grids() {
+    let mut rng = Rng::new(24);
+    for (n1, n2) in [(2usize, 4usize), (3, 3), (4, 6), (5, 7)] {
+        let a = rand_vec(&mut rng, n1 * n1);
+        let b = rand_vec(&mut rng, n2 * n2);
+        let legacy = conv2d_fft(&a, n1, &b, n2);
+        let planned = conv2d_fft_planned(&a, n1, &b, n2);
+        assert!(max_cdiff(&legacy, &planned) < 1e-9, "n1={n1} n2={n2}");
     }
 }
 

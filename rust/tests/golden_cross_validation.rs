@@ -154,6 +154,19 @@ fn f2sh_panels_match_python() {
     }
 }
 
+/// The legacy (pre-plan) FFT pipeline, composed from public pieces:
+/// sh2f -> allocating `conv2d_fft` -> f2sh.  Kept pinned to the same
+/// goldens as the planned path so both conv backends stay interchangeable.
+fn legacy_fft_pipeline(plan: &GauntPlan, a: &[f64], b: &[f64]) -> Vec<f64> {
+    use gaunt_tp::fourier::conv::conv2d_fft;
+    let p1 = gaunt_tp::fourier::tables::sh2f_panels(plan.l1);
+    let p2 = gaunt_tp::fourier::tables::sh2f_panels(plan.l2);
+    let u1 = GauntPlan::sh2f(&p1, a);
+    let u2 = GauntPlan::sh2f(&p2, b);
+    let u3 = conv2d_fft(&u1, 2 * plan.l1 + 1, &u2, 2 * plan.l2 + 1);
+    plan.f2sh(&u3)
+}
+
 #[test]
 fn gaunt_tp_io_pairs_match_python() {
     let g = golden!("gaunt_tp_io_pairs_match_python");
@@ -167,14 +180,20 @@ fn gaunt_tp_io_pairs_match_python() {
     for r in 0..3 {
         let a = &x1[r * n..(r + 1) * n];
         let b = &x2[r * n..(r + 1) * n];
+        // planned Hermitian FFT path
         let got3 = plan3.apply(a, b);
+        // legacy allocating FFT path, pinned to the SAME golden
+        let leg3 = legacy_fft_pipeline(&plan3, a, b);
         for k in 0..n {
-            assert!((got3[k] - y3[r * n + k]).abs() < 1e-9);
+            assert!((got3[k] - y3[r * n + k]).abs() < 1e-9, "planned k={k}");
+            assert!((leg3[k] - y3[r * n + k]).abs() < 1e-9, "legacy k={k}");
         }
         let got6 = plan6.apply(a, b);
+        let leg6 = legacy_fft_pipeline(&plan6, a, b);
         let n6 = num_coeffs(6);
         for k in 0..n6 {
             assert!((got6[k] - y6[r * n6 + k]).abs() < 1e-9);
+            assert!((leg6[k] - y6[r * n6 + k]).abs() < 1e-9);
         }
     }
 }
@@ -304,5 +323,16 @@ fn native_golden_gaunt_pipeline_matches_tensor_l4() {
                 got[k], want[k]
             );
         }
+    }
+    // the legacy allocating FFT pipeline stays pinned to the same native
+    // golden as the planned paths
+    let plan = GauntPlan::new(l, l, l, ConvMethod::Fft);
+    let legacy = legacy_fft_pipeline(&plan, &x1, &x2);
+    for k in 0..n {
+        assert!(
+            (legacy[k] - want[k]).abs() < 1e-9,
+            "legacy pipeline coeff {k}: {} vs {}",
+            legacy[k], want[k]
+        );
     }
 }

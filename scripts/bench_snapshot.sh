@@ -1,0 +1,105 @@
+#!/usr/bin/env bash
+# Bench snapshot: run the fig1a / fig1b / table2 benches and write a
+# machine-readable BENCH_fourier.json at the repo root, so the perf
+# trajectory of the Fourier hot path is tracked PR over PR.
+#
+#   make bench-snapshot          # full measurement (minutes)
+#   SMOKE=1 make bench-snapshot  # 1 ms budgets — plumbing check only;
+#                                # BENCH_fourier.json is left untouched
+#
+# The JSON carries every TSV row the benches emit (name, median_ns,
+# mad_ns, iters).  The before/after story is IN the row names:
+#   fig1a:  gaunt_fft_legacy (before) vs gaunt_fft (after)
+#   fig1b:  gaunt_conv (direct sweep) vs gaunt_conv_fft (cached spectra)
+#   table2: gaunt_fft_legacy/gaunt_fft_planned/gaunt_direct per L, plus
+#           speedup_* ratio rows and the measured Auto crossover.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+ROOT="$PWD"
+OUT="$ROOT/BENCH_fourier.json"
+RESULTS="$ROOT/rust/target/bench-results"
+
+SMOKE="${SMOKE:-}"
+ARGS=()
+if [ -n "$SMOKE" ]; then
+    ARGS=(-- --smoke)
+    echo "== bench snapshot (SMOKE: plumbing check, no TSVs) =="
+else
+    echo "== bench snapshot (full measurement) =="
+fi
+
+cd rust
+for b in fig1a_feature_interaction fig1b_equivariant_convolution \
+         table2_speed_memory; do
+    echo "== cargo bench --bench $b =="
+    cargo bench --bench "$b" "${ARGS[@]+"${ARGS[@]}"}"
+done
+cd "$ROOT"
+
+if [ -n "$SMOKE" ]; then
+    # smoke runs write no TSVs; harvesting would repackage whatever a
+    # PREVIOUS full run left in $RESULTS as if it were this run's data.
+    # Leave BENCH_fourier.json untouched.
+    echo "[smoke] benches OK; BENCH_fourier.json left untouched"
+    exit 0
+fi
+
+python3 - "$OUT" "$RESULTS" <<'EOF'
+import json, os, sys, time
+
+out_path, results = sys.argv[1], sys.argv[2]
+
+# bench key -> TSV stems that feed it
+wanted = {
+    "fig1a": ["fig1a"],
+    "fig1b": ["fig1b"],
+    "table2": ["table2_fourier_plan", "table2_tp_scaling", "table2_speed"],
+}
+
+benches = {}
+for bench, stems in wanted.items():
+    rows = []
+    for stem in stems:
+        path = os.path.join(results, stem + ".tsv")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            header = f.readline().strip().split("\t")
+            for line in f:
+                parts = line.rstrip("\n").split("\t")
+                if len(parts) != len(header):
+                    continue
+                row = dict(zip(header, parts))
+                rows.append({
+                    "source": stem,
+                    "name": row["name"],
+                    "median_ns": float(row["median_ns"]),
+                    "mad_ns": float(row["mad_ns"]),
+                    "iters": int(row["iters"]),
+                })
+    benches[bench] = rows
+
+doc = {
+    "schema": 1,
+    "generated_unix": int(time.time()),
+    "measured": all(benches.values()),
+    "note": ("medians in nanoseconds; speedup_* rows carry a ratio in "
+             "median_ns (iters = 0 marks derived rows)"),
+    "before_after": {
+        "fig1a": ["gaunt_fft_legacy (before)", "gaunt_fft (after)"],
+        "fig1b": ["gaunt_conv (direct sweep)",
+                  "gaunt_conv_fft (cached filter spectra)"],
+        "table2": ["gaunt_fft_legacy (before)",
+                   "gaunt_fft_planned (after)",
+                   "speedup_legacy_over_planned (ratio)"],
+    },
+    "benches": benches,
+}
+with open(out_path, "w") as f:
+    json.dump(doc, f, indent=1)
+    f.write("\n")
+print(f"[json] {out_path} "
+      f"({sum(len(v) for v in benches.values())} rows, "
+      f"measured={doc['measured']})")
+EOF

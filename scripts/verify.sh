@@ -3,6 +3,10 @@
 #   cargo build --release && cargo test -q
 # No network, no crate registry, no Python artifacts required — tests that
 # need AOT artifacts print an explicit SKIP line and pass.
+#
+# After the test suite, every figure/table bench binary runs one tiny
+# size (`-- --smoke`, 1 ms budgets, no TSV output) so a broken bench
+# fails here instead of only at figure-generation time.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -12,5 +16,12 @@ cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== bench --smoke (one tiny size per bench binary) =="
+for b in fig1a_feature_interaction fig1b_equivariant_convolution \
+         fig1c_many_body table2_speed_memory; do
+    echo "-- $b --smoke --"
+    cargo bench --bench "$b" -- --smoke
+done
 
 echo "verify: OK"

@@ -10,13 +10,21 @@
 #                     root (SMOKE=1 for a 1 ms plumbing check)
 #   make artifacts  - (needs JAX) AOT-compile the Pallas/XLA artifacts
 #                     with python/compile/aot.py into rust/artifacts/
+#   make model-golden - (numpy only, no JAX) regenerate the frozen-weights
+#                     model energy/forces golden for the cross-language test
+#   make ci         - the full gate: tier-1 (which runs every test file,
+#                     model_symmetries/grad_check/alloc_regression/
+#                     golden_cross_validation included) + every --smoke
+#                     bench, all chained inside scripts/verify.sh
 
 RUST_DIR := rust
 
-.PHONY: verify build test bench bench-snapshot artifacts clean
+.PHONY: verify build test bench bench-snapshot artifacts model-golden ci clean
 
 verify:
 	bash scripts/verify.sh
+
+ci: verify
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -32,6 +40,10 @@ bench-snapshot:
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(RUST_DIR)/artifacts
+	cd python && python -m compile.model_golden --out ../$(RUST_DIR)/artifacts
+
+model-golden:
+	cd python && python -m compile.model_golden --out ../$(RUST_DIR)/artifacts
 
 clean:
 	cd $(RUST_DIR) && cargo clean

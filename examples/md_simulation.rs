@@ -1,50 +1,117 @@
-//! Model-in-the-loop molecular dynamics: run MD on the 3BPA-lite molecule
-//! where the forces come from the *served* GauntNet model (through the
-//! full coordinator: batcher -> router -> PJRT), and compare the
-//! trajectory against ground-truth classical-potential MD.
+//! Model-in-the-loop molecular dynamics, fully native: quick-train the
+//! Gaunt-engine model on 3BPA-lite labels, then
 //!
-//!     make artifacts && cargo run --release --example md_simulation
+//! 1. drive BAOAB MD *locally* with [`LearnedPotential`] through
+//!    `Integrator::step_with` (plus a FIRE relaxation on the learned
+//!    surface), and
+//! 2. drive velocity-Verlet MD through the *served* model — every force
+//!    evaluation a round trip through the full coordinator (batcher ->
+//!    router -> worker pool -> `NativeGauntBackend` with the trained
+//!    model) — comparing both against ground-truth classical MD.
+//!
+//!     cargo run --release --example md_simulation
+//!     GTP_STEPS=200 GTP_TRAIN_STEPS=80 ... for longer runs
 
 use std::sync::Arc;
 
-use gaunt_tp::util::error::Result;
+use gaunt_tp::coordinator::server::NativeGauntBackend;
+use gaunt_tp::coordinator::trainer::{NativeTrainConfig, NativeTrainer};
 use gaunt_tp::coordinator::{ForceFieldServer, ServerConfig};
-use gaunt_tp::md::{Integrator, Molecule, Thermostat};
-use gaunt_tp::runtime::Engine;
+use gaunt_tp::data::{energy_stats, gen_bpa_dataset, normalize_graphs};
+use gaunt_tp::md::{fire_relax, FireConfig, Integrator, LearnedPotential,
+                   Molecule, Thermostat};
+use gaunt_tp::model::{Model, ModelConfig};
+use gaunt_tp::util::error::Result;
 use gaunt_tp::util::rng::Rng;
 
+fn env_flag(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
 fn main() -> Result<()> {
-    let engine = Arc::new(Engine::new("artifacts")?);
-    let server = ForceFieldServer::start(engine, ServerConfig::default())?;
+    let steps = env_flag("GTP_STEPS", 40);
+    let train_steps = env_flag("GTP_TRAIN_STEPS", 30);
+
+    // --- quick-train the learned potential ---
+    println!("== quick-training the learned potential ({train_steps} steps) ==");
+    let mut graphs = gen_bpa_dataset(&[0.05], 16, 21).remove(0);
+    let stats = energy_stats(&graphs);
+    normalize_graphs(&mut graphs, stats);
+    let cfg = ModelConfig { r_cut: 3.0, ..Default::default() };
+    let model = Model::new(cfg, 13);
+    model.warm();
+    let mut trainer =
+        NativeTrainer::new(model, NativeTrainConfig::default());
+    for step in 0..train_steps {
+        let at = (step * 4) % graphs.len();
+        let batch: Vec<_> = (0..4)
+            .map(|k| graphs[(at + k) % graphs.len()].clone())
+            .collect();
+        let loss = trainer.step(&batch);
+        if step % 10 == 0 {
+            println!("  train step {step:>3}: loss {loss:.5}");
+        }
+    }
+    let model = Arc::new(trainer.into_model());
 
     let mol = Molecule::bpa_lite();
     let mut rng = Rng::new(3);
     let dt = 0.002f64;
-    // each step is one served inference (~seconds on the CPU interpret
-    // path); override with GTP_STEPS for longer runs
-    let steps = std::env::var("GTP_STEPS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(40usize);
 
-    // ground-truth MD
+    // --- FIRE relaxation on the learned surface (md::relax) ---
+    let mut learned =
+        LearnedPotential::new(model.clone(), mol.species.clone());
+    let relax = fire_relax(
+        &mut learned,
+        &mol.pos,
+        FireConfig { max_steps: 60, ..Default::default() },
+    );
+    println!(
+        "FIRE on the learned surface: E {:.4} -> {:.4} in {} steps \
+         (fmax {:.3})",
+        relax.energy_trace[0], relax.energy, relax.steps, relax.max_force
+    );
+    assert!(relax.energy.is_finite());
+
+    // --- local MD with the learned potential (Integrator::step_with) ---
+    let mut md_learned = Integrator::new_with(
+        mol.pos.clone(), mol.species.clone(), &mut learned, dt,
+        Thermostat::None,
+    );
+    md_learned.thermalize(0.05, &mut rng);
+    let vel0 = md_learned.vel.clone();
+    let e_start = md_learned.total_energy();
+    for _ in 0..steps {
+        md_learned.step_with(&mut learned, &mut rng);
+    }
+    println!(
+        "local learned-potential MD: {steps} BAOAB steps, total energy \
+         {:.4} -> {:.4}",
+        e_start,
+        md_learned.total_energy()
+    );
+    assert!(md_learned.pos.iter()
+        .all(|p| p.iter().all(|x| x.is_finite())));
+
+    // --- served MD: every force a round trip through the coordinator ---
+    let server = ForceFieldServer::start_native(
+        NativeGauntBackend::with_model(model.clone()),
+        ServerConfig { r_cut: model.cfg.r_cut, ..Default::default() },
+    )?;
     let mut md_ref = Integrator::new(
         mol.pos.clone(), mol.species.clone(), &mol.potential, dt,
         Thermostat::None,
     );
-    md_ref.thermalize(0.05, &mut rng);
-    let vel0 = md_ref.vel.clone();
-
-    // model-driven MD: identical start, forces from the service
+    md_ref.vel = vel0.clone();
     let mut pos = mol.pos.clone();
-    let mut vel = vel0.clone();
+    let mut vel = vel0;
     let mass = 1.0f64;
     let mut f_model = server
         .infer_blocking(pos.clone(), mol.species.clone())?
         .forces;
-    println!("step |  model-E  | drift from reference trajectory");
+    println!("step |  served-E | drift from classical reference");
     for step in 0..steps {
-        // velocity Verlet with model forces
+        // velocity Verlet with served model forces
         for i in 0..pos.len() {
             for k in 0..3 {
                 vel[i][k] += 0.5 * dt * f_model[i][k] / mass;
@@ -58,7 +125,6 @@ fn main() -> Result<()> {
                 vel[i][k] += 0.5 * dt * f_model[i][k] / mass;
             }
         }
-        // advance the reference
         md_ref.step(&mol.potential, &mut rng);
         if step % 10 == 0 || step + 1 == steps {
             let mut d2 = 0.0;
@@ -75,15 +141,10 @@ fn main() -> Result<()> {
         }
         assert!(
             pos.iter().all(|p| p.iter().all(|x| x.is_finite())),
-            "model-driven MD diverged to non-finite positions"
+            "served-model MD diverged to non-finite positions"
         );
     }
     println!("\nservice metrics: {}", server.metrics().report());
-    println!(
-        "note: the shipped state is untrained — run \
-         `cargo run --release --example train_force_field` and wire the \
-         trained state via ForceFieldServer::set_state for physical forces."
-    );
     server.shutdown();
     Ok(())
 }

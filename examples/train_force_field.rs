@@ -1,47 +1,133 @@
-//! End-to-end training driver (the repo's full-stack proof): generate a
-//! synthetic adsorbate dataset with the MD substrate, train GauntNet for a
-//! few hundred steps through the fused AOT train-step artifact (Pallas
-//! Gaunt kernels + JAX autodiff + Adam, all inside one XLA computation
-//! executed from Rust), log the loss curve, and report test metrics.
+//! End-to-end force-field training, fully native (the repo's full-stack
+//! proof, no compiled artifacts needed): sample a labeled 3BPA-lite
+//! dataset with the MD substrate, train the Gaunt-engine model with the
+//! native trainer (energy + force loss, Adam, analytic backward passes
+//! through every planned tensor product), checkpoint to JSON, evaluate
+//! on held-out structures, then serve the trained model through the full
+//! coordinator stack (batcher -> router -> worker pool ->
+//! `NativeGauntBackend`).
 //!
-//!     make artifacts && cargo run --release --example train_force_field
-//!     [-- --steps 300 --variant gaunt]
+//!     cargo run --release --example train_force_field [-- --steps 120]
+//!
+//! (The XLA-artifact training path lives in `experiments::train_forcefield`
+//! behind `make artifacts`; this example is its offline twin.)
 
+use std::sync::Arc;
+
+use gaunt_tp::coordinator::server::NativeGauntBackend;
+use gaunt_tp::coordinator::trainer::{NativeTrainConfig, NativeTrainer};
+use gaunt_tp::coordinator::{ForceFieldServer, ServerConfig};
+use gaunt_tp::data::{energy_stats, gen_bpa_dataset, normalize_graphs, Graph};
+use gaunt_tp::model::{Model, ModelConfig};
 use gaunt_tp::util::error::Result;
-use gaunt_tp::experiments::{eval_forcefield, train_forcefield};
-use gaunt_tp::data::{gen_adsorbate_dataset, normalize_graphs};
-use gaunt_tp::runtime::Engine;
+use gaunt_tp::util::rng::Rng;
+
+fn flag(args: &[String], name: &str, default: usize) -> usize {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn eval(model: &Model, set: &[Graph]) -> (f64, f64) {
+    let mut e_mae = 0.0;
+    let mut f_mae = 0.0;
+    let mut f_n = 0usize;
+    for g in set {
+        let (e, f) = model.energy_forces(&g.pos, &g.species);
+        e_mae += (e - g.energy).abs() / g.n_atoms() as f64;
+        for (fi, fr) in f.iter().zip(&g.forces) {
+            for ax in 0..3 {
+                f_mae += (fi[ax] - fr[ax]).abs();
+                f_n += 1;
+            }
+        }
+    }
+    (e_mae / set.len() as f64, f_mae / f_n as f64)
+}
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
-    let steps = args
-        .iter()
-        .position(|a| a == "--steps")
-        .and_then(|i| args.get(i + 1))
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(200usize);
-    let variant = args
-        .iter()
-        .position(|a| a == "--variant")
-        .and_then(|i| args.get(i + 1).cloned())
-        .unwrap_or_else(|| "gaunt".to_string());
+    let steps = flag(&args, "--steps", 120);
+    let batch_size = flag(&args, "--batch", 4).max(1);
 
-    let engine = Engine::new("artifacts")?;
-    println!("== end-to-end GauntNet training ({variant}, {steps} steps) ==");
-    let (state, stats, per_step) =
-        train_forcefield(&engine, &variant, steps, true)?;
+    println!("== native GauntNet training ({steps} steps, batch {batch_size}) ==");
+    // labeled data from the MD substrate (classical potential = "DFT")
+    let mut graphs = gen_bpa_dataset(&[0.05], 40, 11).remove(0);
+    let stats = energy_stats(&graphs[..32]);
+    normalize_graphs(&mut graphs, stats);
+    let (train, test) = graphs.split_at(32);
+    let train = train.to_vec();
+    let test = test.to_vec();
 
-    // held-out evaluation
-    let mut test = gen_adsorbate_dataset(24, 777);
-    normalize_graphs(&mut test, stats);
-    let fwd = if variant == "gaunt" { "ff_fwd_B8" } else { "ff_fwd_cg_B8" };
-    let (e_mae, f_mae, f_cos, efwt) = eval_forcefield(&engine, fwd, &state, &test)?;
-    println!("\n== held-out test (24 structures) ==");
-    println!("energy MAE / atom : {e_mae:.4} (normalized units)");
-    println!("force MAE         : {f_mae:.4}");
-    println!("force cos         : {f_cos:.3}");
-    println!("EFwT              : {:.1}%", 100.0 * efwt);
-    println!("throughput        : {:.2} s/step (batch 8)", per_step);
-    println!("\nloss curve logged above; see EXPERIMENTS.md §e2e for the record.");
+    let cfg = ModelConfig { r_cut: 3.0, ..Default::default() };
+    let model = Model::new(cfg, 7);
+    model.warm();
+    let mut trainer = NativeTrainer::new(model, NativeTrainConfig {
+        lr: 4e-3,
+        ..Default::default()
+    });
+
+    let (e0, f0) = eval(&trainer.model, &test);
+    println!("before: test energy MAE/atom {e0:.4}, force MAE {f0:.4}");
+
+    let mut rng = Rng::new(0);
+    let mut order: Vec<usize> = (0..train.len()).collect();
+    let t0 = std::time::Instant::now();
+    let mut first_loss = f64::NAN;
+    for step in 0..steps {
+        if step % (train.len() / batch_size).max(1) == 0 {
+            rng.shuffle(&mut order);
+        }
+        let at = (step * batch_size) % train.len();
+        let batch: Vec<Graph> = (0..batch_size)
+            .map(|k| train[order[(at + k) % train.len()]].clone())
+            .collect();
+        let loss = trainer.step(&batch);
+        if step == 0 {
+            first_loss = loss;
+        }
+        if step % 10 == 0 || step + 1 == steps {
+            println!("step {step:>4}: loss {loss:.5} (recent {:.5})",
+                     trainer.recent_loss(10));
+        }
+    }
+    let per_step = t0.elapsed().as_secs_f64() / steps as f64;
+    let last = trainer.recent_loss(10);
+    println!("loss {first_loss:.5} -> {last:.5}  ({per_step:.3} s/step)");
+    assert!(
+        last < first_loss,
+        "training did not decrease the loss ({first_loss} -> {last})"
+    );
+
+    let (e1, f1) = eval(&trainer.model, &test);
+    println!("after:  test energy MAE/atom {e1:.4}, force MAE {f1:.4}");
+
+    // checkpoint through util::json
+    let ckpt = "target/model_native.json";
+    let _ = std::fs::create_dir_all("target");
+    trainer.checkpoint(ckpt)?;
+    println!("checkpoint -> {ckpt}");
+
+    // serve the trained model through the full coordinator stack
+    let model = Arc::new(trainer.into_model());
+    let server = ForceFieldServer::start_native(
+        NativeGauntBackend::with_model(model.clone()),
+        ServerConfig { r_cut: model.cfg.r_cut, ..Default::default() },
+    )?;
+    let mut served_err = 0.0f64;
+    for g in &test {
+        let resp = server.infer_blocking(g.pos.clone(), g.species.clone())?;
+        let (e_local, _) = model.energy_forces(&g.pos, &g.species);
+        served_err = served_err.max((resp.energy - e_local).abs());
+    }
+    println!(
+        "served {} held-out structures through NativeGauntBackend \
+         (max |served - local| = {served_err:.2e})",
+        test.len()
+    );
+    println!("service metrics: {}", server.metrics().report());
+    server.shutdown();
     Ok(())
 }

@@ -1,0 +1,609 @@
+"""Numpy mirror of the native Rust force-field model + golden generator.
+
+The Rust crate's `model` subsystem (MACE-style message passing, every
+contraction a Gaunt product) is implemented here a second time, directly
+against the slow-but-exact real Gaunt tensors of `compile.so3`.  Two jobs:
+
+1. **Golden generator** (`python -m compile.model_golden --out
+   ../rust/artifacts`): emits `golden/model_golden.json` — one frozen
+   configuration (explicit weights, positions, species) with the reference
+   energy and analytic forces.  `rust/tests/golden_cross_validation.rs`
+   replays it through the native pipeline.
+2. **Math validator** (`--check`): finite-difference checks of the SH
+   Cartesian gradient, of the model forces (-dE/dx), of the parameter
+   gradient, an equivariance check, and a descent check of the trainer
+   update — the same identities the Rust tests pin.
+
+Model math (mirrored exactly by `rust/src/model/`):
+
+* every feature is one channel of real SH coefficients, degree <= L;
+* edge filter: f_e[lm] = h2_e[l2] Y_lm(u_e), h2_e = W_rad @ rb(r_e);
+* message: m_e = P_L(h_j * f_e) — a Gaunt product (the Rust side runs it
+  through GauntConvPlan's aligned-filter fast path);
+* node update: a_i = sum_e m_e, b_i = P_L(a_i^nu) (ManyBodyPlan
+  self-product), h' = res (.) h + mix_a (.) a + mix_b (.) b per degree;
+* readout: e_i = bias[s_i] + c_lin h[0] + c_quad (h (x) h)[0].
+
+Backward passes use the full permutation symmetry of the real Gaunt
+tensor G[k,i,j] = int Y_k Y_i Y_j dOmega: every VJP of a Gaunt product is
+itself a Gaunt product with the degrees rotated, so the Rust backward
+runs on the same planned engine as the forward.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+import numpy as np
+
+try:  # runnable as `python -m compile.model_golden` or as a plain script
+    from . import so3
+except ImportError:  # pragma: no cover
+    import so3  # type: ignore
+
+SQRT_4PI = math.sqrt(4.0 * math.pi)
+
+
+# --------------------------------------------------------------------------
+# real SH values + Cartesian gradients (pole-free polynomial recurrence)
+# --------------------------------------------------------------------------
+
+
+def _double_fact_odd(m: int) -> float:
+    """(2m-1)!! with the empty product = 1."""
+    out = 1.0
+    for k in range(1, m + 1):
+        out *= 2 * k - 1
+    return out
+
+
+def real_sh_grad_xyz(l_max: int, d: np.ndarray):
+    """Y(d/|d|) for all (l, m) <= l_max plus the gradient w.r.t. d.
+
+    Uses the factorization (no Condon-Shortley, orthonormal real SH)
+        Y_{l,+m} = N sqrt(2) T_l^m(z) C_m(x, y),   m > 0
+        Y_{l,0}  = N T_l^0(z)
+        Y_{l,-m} = N sqrt(2) T_l^m(z) S_m(x, y),   m > 0
+    on the unit sphere, where C_m + i S_m = (x + i y)^m and
+    T_l^m(z) = P_l^m(z) / (1-z^2)^{m/2} is a polynomial obeying the same
+    upward recurrence as P_l^m.  All three factors are polynomials in the
+    Cartesian coordinates, so the ambient gradient is exact and finite
+    everywhere (including the poles); the gradient w.r.t. the
+    *unnormalized* d follows from the projection (I - u u^T)/r.
+
+    Returns (y [(L+1)^2], g [(L+1)^2, 3]).
+    """
+    d = np.asarray(d, dtype=np.float64)
+    r = float(np.linalg.norm(d))
+    u = d / r
+    x, yy, z = u
+    n = so3.num_coeffs(l_max)
+    val = np.zeros(n)
+    amb = np.zeros((n, 3))  # ambient dF at u
+    # C_m, S_m and their m-1 predecessors
+    cm, sm = 1.0, 0.0
+    cm1, sm1 = 0.0, 0.0
+    for m in range(l_max + 1):
+        if m > 0:
+            cm1, sm1 = cm, sm
+            cm, sm = cm * x - sm * yy, cm * yy + sm * x
+        # T recurrence over l for this m, with dT/dz
+        t_prev, td_prev = 0.0, 0.0  # T_{l-2}, T'_{l-2}
+        t, td = _double_fact_odd(m), 0.0  # T_m^m, constant in z
+        for l in range(m, l_max + 1):
+            if l > m:
+                if l == m + 1:
+                    t_next = z * (2 * m + 1) * t
+                    td_next = (2 * m + 1) * t
+                else:
+                    t_next = (z * (2 * l - 1) * t - (l + m - 1) * t_prev) / (l - m)
+                    td_next = (
+                        (2 * l - 1) * (t + z * td) - (l + m - 1) * td_prev
+                    ) / (l - m)
+                t_prev, td_prev = t, td
+                t, td = t_next, td_next
+            norm = so3.sh_norm(l, m)
+            pre = norm * (math.sqrt(2.0) if m > 0 else 1.0)
+            ip = so3.lm_index(l, m)
+            val[ip] = pre * t * cm
+            amb[ip] = pre * np.array([t * m * cm1, -t * m * sm1, td * cm])
+            if m > 0:
+                im = so3.lm_index(l, -m)
+                val[im] = pre * t * sm
+                amb[im] = pre * np.array([t * m * sm1, t * m * cm1, td * sm])
+    # chain rule through u = d/r:  g = (dF - (dF.u) u) / r
+    g = (amb - np.outer(amb @ u, u)) / r
+    return val, g
+
+
+# --------------------------------------------------------------------------
+# radial basis
+# --------------------------------------------------------------------------
+
+
+def radial_basis(n_radial: int, r_cut: float, r: float):
+    """Gaussian RBF with a smooth polynomial cutoff envelope.
+
+    rb_k(r) = exp(-beta (r - mu_k)^2) * (1 - (r/rc)^2)^2, mu_k linspace
+    over [0, rc], beta = (n/rc)^2.  Value AND d/dr (both vanish at rc, so
+    the learned energy stays C^1 as edges cross the cutoff).
+    """
+    if r >= r_cut:
+        return np.zeros(n_radial), np.zeros(n_radial)
+    mu = np.linspace(0.0, r_cut, n_radial)
+    beta = (n_radial / r_cut) ** 2
+    t = r / r_cut
+    env = (1.0 - t * t) ** 2
+    denv = -4.0 * t * (1.0 - t * t) / r_cut
+    gauss = np.exp(-beta * (r - mu) ** 2)
+    dgauss = -2.0 * beta * (r - mu) * gauss
+    return gauss * env, dgauss * env + gauss * denv
+
+
+# --------------------------------------------------------------------------
+# model: parameters, forward, backward
+# --------------------------------------------------------------------------
+
+
+class Config:
+    def __init__(self, l=2, l_filter=2, nu=2, n_layers=2, n_species=3,
+                 n_radial=6, r_cut=3.5):
+        assert nu >= 2
+        self.l, self.l_filter, self.nu = l, l_filter, nu
+        self.n_layers, self.n_species, self.n_radial = n_layers, n_species, n_radial
+        self.r_cut = r_cut
+        # degree of the saved a^(nu-1) power (Gaunt selection rules cut
+        # anything above 2L out of the many-body VJP)
+        self.l_pow = min((nu - 1) * l, 2 * l)
+
+    @property
+    def nf(self):
+        return so3.num_coeffs(self.l)
+
+    @property
+    def nff(self):
+        return so3.num_coeffs(self.l_filter)
+
+    def layer_sizes(self):
+        return [("w_rad", (self.l_filter + 1) * self.n_radial),
+                ("mix_res", self.l + 1), ("mix_a", self.l + 1),
+                ("mix_b", self.l + 1)]
+
+    def n_params(self):
+        per_layer = sum(n for _, n in self.layer_sizes())
+        return 2 * self.n_species + self.n_layers * per_layer + 2
+
+
+def param_views(cfg: Config, p: np.ndarray):
+    """Split the flat parameter vector into named views (shared layout
+    with rust/src/model/mod.rs)."""
+    views = {}
+    off = 0
+    views["species_embed"] = p[off:off + cfg.n_species]; off += cfg.n_species
+    views["species_bias"] = p[off:off + cfg.n_species]; off += cfg.n_species
+    views["layers"] = []
+    for _ in range(cfg.n_layers):
+        lay = {}
+        for name, n in cfg.layer_sizes():
+            lay[name] = p[off:off + n]; off += n
+        lay["w_rad"] = lay["w_rad"]  # flat [l2 * n_radial + k]
+        views["layers"].append(lay)
+    views["readout"] = p[off:off + 2]; off += 2
+    assert off == p.size
+    return views
+
+
+def init_params(cfg: Config, rng: np.random.Generator) -> np.ndarray:
+    p = np.zeros(cfg.n_params())
+    v = param_views(cfg, p)
+    v["species_embed"][:] = 1.0 + 0.3 * rng.standard_normal(cfg.n_species)
+    v["species_bias"][:] = 0.1 * rng.standard_normal(cfg.n_species)
+    for lay in v["layers"]:
+        lay["w_rad"][:] = rng.standard_normal(lay["w_rad"].size) * (
+            0.8 / math.sqrt(cfg.n_radial))
+        lay["mix_res"][:] = 1.0
+        lay["mix_a"][:] = 0.5 + 0.1 * rng.standard_normal(cfg.l + 1)
+        lay["mix_b"][:] = 0.3 + 0.1 * rng.standard_normal(cfg.l + 1)
+    v["readout"][:] = [0.5, 0.5]
+    return p
+
+
+def degree_scale(cfg: Config, w: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Per-degree scaling: out[(l,m)] = w[l] x[(l,m)]."""
+    out = np.zeros_like(x)
+    for l in range(cfg.l + 1):
+        sl = slice(so3.lm_index(l, -l), so3.lm_index(l, l) + 1)
+        out[sl] = w[l] * x[sl]
+    return out
+
+
+def degree_dot(cfg: Config, g: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """d/dw of <g, w (.) x>: per-degree inner products."""
+    out = np.zeros(cfg.l + 1)
+    for l in range(cfg.l + 1):
+        sl = slice(so3.lm_index(l, -l), so3.lm_index(l, l) + 1)
+        out[l] = float(g[sl] @ x[sl])
+    return out
+
+
+def gaunt_prod(l1, l2, l3, x, w):
+    """P_{l3}(f_x f_w): the real Gaunt product (the planned engine's job
+    on the Rust side)."""
+    G = so3.gaunt_tensor_real(l1, l2, l3)
+    return np.einsum("kij,i,j->k", G, x, w)
+
+
+def self_power(cfg: Config, a: np.ndarray, nu: int, l_out: int) -> np.ndarray:
+    """P_{l_out}(f_a^nu) via the exact pairwise fold (ManyBodyPlan oracle)."""
+    acc, l_acc = a, cfg.l
+    for _ in range(nu - 1):
+        l_next = l_acc + cfg.l
+        acc = gaunt_prod(l_acc, cfg.l, l_next, acc, a)
+        l_acc = l_next
+    return acc[: so3.num_coeffs(l_out)]
+
+
+def build_edges(pos: np.ndarray, r_cut: float):
+    """All directed pairs within the cutoff (mirrors md::neighbor)."""
+    n = len(pos)
+    edges = []
+    for i in range(n):
+        for j in range(n):
+            if i != j and np.linalg.norm(pos[i] - pos[j]) < r_cut:
+                edges.append((i, j))
+    return edges
+
+
+def forward(cfg: Config, p: np.ndarray, pos, species, edges):
+    """Forward pass; returns (E, cache-for-backward)."""
+    v = param_views(cfg, p)
+    n_atoms, nf = len(pos), cfg.nf
+    # per-edge geometry (position-dependent, shared by all layers)
+    geo = []
+    for (i, j) in edges:
+        d = pos[i] - pos[j]
+        r = float(np.linalg.norm(d))
+        y, gy = real_sh_grad_xyz(cfg.l_filter, d)
+        rb, drb = radial_basis(cfg.n_radial, cfg.r_cut, r)
+        geo.append(dict(i=i, j=j, d=d, r=r, u=d / r, y=y, gy=gy, rb=rb, drb=drb))
+    h = [np.zeros((n_atoms, nf))]
+    h[0][:, 0] = v["species_embed"][species]
+    layers_cache = []
+    for lay in v["layers"]:
+        w_rad = lay["w_rad"].reshape(cfg.l_filter + 1, cfg.n_radial)
+        a = np.zeros((n_atoms, nf))
+        h2s = []
+        for e in geo:
+            h2 = w_rad @ e["rb"]  # per-filter-degree weights
+            f = np.zeros(cfg.nff)
+            for l2 in range(cfg.l_filter + 1):
+                sl = slice(so3.lm_index(l2, -l2), so3.lm_index(l2, l2) + 1)
+                f[sl] = h2[l2] * e["y"][sl]
+            m = gaunt_prod(cfg.l, cfg.l_filter, cfg.l, h[-1][e["j"]], f)
+            a[e["i"]] += m
+            h2s.append(h2)
+        b = np.zeros((n_atoms, nf))
+        pw = np.zeros((n_atoms, so3.num_coeffs(cfg.l_pow)))
+        for i in range(n_atoms):
+            b[i] = self_power(cfg, a[i], cfg.nu, cfg.l)
+            pw[i] = self_power(cfg, a[i], cfg.nu - 1, cfg.l_pow)
+        hn = np.zeros((n_atoms, nf))
+        for i in range(n_atoms):
+            hn[i] = (degree_scale(cfg, lay["mix_res"], h[-1][i])
+                     + degree_scale(cfg, lay["mix_a"], a[i])
+                     + degree_scale(cfg, lay["mix_b"], b[i]))
+        h.append(hn)
+        layers_cache.append(dict(a=a, b=b, pw=pw, h2s=h2s))
+    c_lin, c_quad = v["readout"]
+    inv = np.einsum("if,if->i", h[-1], h[-1]) / SQRT_4PI
+    e_atom = v["species_bias"][species] + c_lin * h[-1][:, 0] + c_quad * inv
+    E = float(e_atom.sum())
+    return E, dict(geo=geo, h=h, layers=layers_cache, inv=inv)
+
+
+def backward(cfg: Config, p: np.ndarray, pos, species, edges, cache):
+    """Reverse pass: returns (forces [N,3], dE/dparams)."""
+    v = param_views(cfg, p)
+    gp = np.zeros_like(p)
+    gv = param_views(cfg, gp)
+    n_atoms = len(pos)
+    geo, h, layers_cache = cache["geo"], cache["h"], cache["layers"]
+    c_lin, c_quad = v["readout"]
+    # readout
+    gv["readout"][0] = h[-1][:, 0].sum()
+    gv["readout"][1] = cache["inv"].sum()
+    np.add.at(gv["species_bias"], species, 1.0)
+    g_h = (2.0 * c_quad / SQRT_4PI) * h[-1].copy()
+    g_h[:, 0] += c_lin
+    forces = np.zeros((n_atoms, 3))
+    for t in range(cfg.n_layers - 1, -1, -1):
+        lay, lc = v["layers"][t], layers_cache[t]
+        w_rad = lay["w_rad"].reshape(cfg.l_filter + 1, cfg.n_radial)
+        g_hprev = np.zeros((n_atoms, cfg.nf))
+        g_a = np.zeros((n_atoms, cfg.nf))
+        for i in range(n_atoms):
+            gv["layers"][t]["mix_res"] += degree_dot(cfg, g_h[i], h[t][i])
+            gv["layers"][t]["mix_a"] += degree_dot(cfg, g_h[i], lc["a"][i])
+            gv["layers"][t]["mix_b"] += degree_dot(cfg, g_h[i], lc["b"][i])
+            g_hprev[i] = degree_scale(cfg, lay["mix_res"], g_h[i])
+            g_a[i] = degree_scale(cfg, lay["mix_a"], g_h[i])
+            g_b = degree_scale(cfg, lay["mix_b"], g_h[i])
+            # many-body VJP: d P_L(f^nu)/da pulled back through the
+            # symmetric Gaunt tensor = nu * P_L(f_g * f_pow)
+            g_a[i] += cfg.nu * gaunt_prod(cfg.l, cfg.l_pow, cfg.l,
+                                          g_b, lc["pw"][i])
+        gw = np.zeros_like(w_rad)
+        for e_idx, e in enumerate(geo):
+            i, j = e["i"], e["j"]
+            g_m = g_a[i]
+            h2 = lc["h2s"][e_idx]
+            f = np.zeros(cfg.nff)
+            for l2 in range(cfg.l_filter + 1):
+                sl = slice(so3.lm_index(l2, -l2), so3.lm_index(l2, l2) + 1)
+                f[sl] = h2[l2] * e["y"][sl]
+            # message VJPs (degree-rotated Gaunt products)
+            g_hprev[j] += gaunt_prod(cfg.l, cfg.l_filter, cfg.l, g_m, f)
+            g_f = gaunt_prod(cfg.l, cfg.l, cfg.l_filter, g_m, h[t][j])
+            # filter chain: f[lm] = h2[l2] y[lm]
+            g_d = np.zeros(3)
+            g_r = 0.0
+            for l2 in range(cfg.l_filter + 1):
+                sl = slice(so3.lm_index(l2, -l2), so3.lm_index(l2, l2) + 1)
+                g_h2 = float(g_f[sl] @ e["y"][sl])
+                gw[l2] += g_h2 * e["rb"]
+                g_r += g_h2 * float(w_rad[l2] @ e["drb"])
+                g_d += h2[l2] * (g_f[sl] @ e["gy"][sl])
+            g_d += g_r * e["u"]
+            # d = pos_i - pos_j; F = -dE/dpos
+            forces[i] -= g_d
+            forces[j] += g_d
+        gv["layers"][t]["w_rad"] += gw.ravel()
+        g_h = g_hprev
+    np.add.at(gv["species_embed"], species, g_h[:, 0])
+    return forces, gp
+
+
+def energy_forces_grad(cfg, p, pos, species, edges):
+    E, cache = forward(cfg, p, pos, species, edges)
+    forces, gp = backward(cfg, p, pos, species, edges, cache)
+    return E, forces, gp
+
+
+# --------------------------------------------------------------------------
+# trainer mirror (energy + force loss; force term via central-difference
+# Hessian-vector products on the parameter gradient)
+# --------------------------------------------------------------------------
+
+
+def loss_and_grad(cfg, p, graphs, w_energy=1.0, w_force=1.0, fd_eps=1e-4):
+    loss, grad = 0.0, np.zeros_like(p)
+    for (pos, species, edges, e_ref, f_ref) in graphs:
+        n = len(pos)
+        E, F, gp = energy_forces_grad(cfg, p, pos, species, edges)
+        de = (E - e_ref) / n
+        loss += w_energy * de * de
+        grad += (2.0 * w_energy * de / n) * gp
+        v = F - f_ref
+        loss += w_force * float((v * v).sum()) / (3 * n)
+        vn = float(np.linalg.norm(v))
+        if vn > 0.0:
+            vhat = v / vn
+            scale = 2.0 * w_force * vn / (3 * n)
+            # d/dtheta [ (F - F*) . F ] = -v . d(grad_x E)/dtheta
+            #   = -(d/deps) dE/dtheta at x + eps vhat   (Pearlmutter HVP,
+            # realized as a central difference on the exact theta-gradient)
+            _, _, gp_p = energy_forces_grad(cfg, p, pos + fd_eps * vhat,
+                                            species, edges)
+            _, _, gp_m = energy_forces_grad(cfg, p, pos - fd_eps * vhat,
+                                            species, edges)
+            grad += scale * (-(gp_p - gp_m) / (2.0 * fd_eps))
+    k = len(graphs)
+    return loss / k, grad / k
+
+
+# --------------------------------------------------------------------------
+# checks
+# --------------------------------------------------------------------------
+
+
+def _toy_structure(rng, n_atoms=6, spread=1.6):
+    pos = spread * rng.standard_normal((n_atoms, 3))
+    species = rng.integers(0, 3, n_atoms)
+    return pos, species
+
+
+def check_sh_grad(rng):
+    lmax, h = 4, 1e-6
+    worst = 0.0
+    for _ in range(20):
+        d = rng.standard_normal(3) * rng.uniform(0.5, 3.0)
+        y, g = real_sh_grad_xyz(lmax, d)
+        y_ref = so3.real_sh_xyz(lmax, d)
+        assert np.abs(y - y_ref).max() < 1e-11, "sh values disagree"
+        for k in range(3):
+            dp = d.copy(); dp[k] += h
+            dm = d.copy(); dm[k] -= h
+            fd = (so3.real_sh_xyz(lmax, dp) - so3.real_sh_xyz(lmax, dm)) / (2 * h)
+            worst = max(worst, float(np.abs(g[:, k] - fd).max()))
+    # pole directions (the angular form is singular there; ours must not be)
+    for d in ([0.0, 0.0, 1.7], [0.0, 0.0, -2.1], [1e-9, 0.0, 1.0]):
+        y, g = real_sh_grad_xyz(lmax, np.array(d))
+        assert np.all(np.isfinite(y)) and np.all(np.isfinite(g))
+    print(f"[check] SH cartesian gradient vs FD: max err {worst:.2e}")
+    assert worst < 1e-7
+
+
+def check_forces(rng):
+    cfg = Config()
+    p = init_params(cfg, rng)
+    pos, species = _toy_structure(rng)
+    edges = build_edges(pos, cfg.r_cut)
+    E, F, _ = energy_forces_grad(cfg, p, pos, species, edges)
+    h, worst = 1e-5, 0.0
+    for i in range(len(pos)):
+        for k in range(3):
+            pp = pos.copy(); pp[i, k] += h
+            pm = pos.copy(); pm[i, k] -= h
+            ep, _ = forward(cfg, p, pp, species, build_edges(pp, cfg.r_cut))
+            em, _ = forward(cfg, p, pm, species, build_edges(pm, cfg.r_cut))
+            fd = -(ep - em) / (2 * h)
+            worst = max(worst, abs(F[i, k] - fd) / (1.0 + abs(fd)))
+    print(f"[check] forces vs -dE/dx (E={E:.4f}): max rel err {worst:.2e}")
+    assert worst < 1e-6
+    # translation invariance + zero net force
+    e2, _ = forward(cfg, p, pos + np.array([0.3, -1.0, 0.7]), species, edges)
+    assert abs(e2 - E) < 1e-10 * (1 + abs(E))
+    assert np.abs(F.sum(axis=0)).max() < 1e-9
+
+
+def check_param_grad(rng):
+    cfg = Config(n_layers=2)
+    p = init_params(cfg, rng)
+    pos, species = _toy_structure(rng)
+    edges = build_edges(pos, cfg.r_cut)
+    _, _, gp = energy_forces_grad(cfg, p, pos, species, edges)
+    h, worst = 1e-6, 0.0
+    for idx in rng.choice(p.size, size=min(30, p.size), replace=False):
+        pp = p.copy(); pp[idx] += h
+        pm = p.copy(); pm[idx] -= h
+        ep, _ = forward(cfg, pp, pos, species, edges)
+        em, _ = forward(cfg, pm, pos, species, edges)
+        fd = (ep - em) / (2 * h)
+        worst = max(worst, abs(gp[idx] - fd) / (1.0 + abs(fd)))
+    print(f"[check] dE/dtheta vs FD: max rel err {worst:.2e}")
+    assert worst < 1e-6
+
+
+def check_equivariance(rng):
+    cfg = Config()
+    p = init_params(cfg, rng)
+    pos, species = _toy_structure(rng)
+    edges = build_edges(pos, cfg.r_cut)
+    E, F, _ = energy_forces_grad(cfg, p, pos, species, edges)
+    R = so3.random_rotation(rng)
+    E2, F2, _ = energy_forces_grad(cfg, p, pos @ R.T, species, edges)
+    de = abs(E2 - E) / (1 + abs(E))
+    df = np.abs(F2 - F @ R.T).max() / (1 + np.abs(F).max())
+    print(f"[check] rotation: dE {de:.2e}, dF {df:.2e}")
+    assert de < 1e-9 and df < 1e-9
+    perm = rng.permutation(len(pos))
+    E3, F3, _ = energy_forces_grad(cfg, p, pos[perm], species[perm],
+                                   build_edges(pos[perm], cfg.r_cut))
+    assert abs(E3 - E) < 1e-9 * (1 + abs(E))
+    assert np.abs(F3 - F[perm]).max() < 1e-9 * (1 + np.abs(F).max())
+
+
+def check_total_loss_grad(rng):
+    """The trainer's energy+force gradient (with the FD-HVP force term)
+    must match a finite difference of the total loss itself."""
+    cfg = Config(n_layers=1)
+    p = init_params(cfg, rng)
+    graphs = []
+    for _ in range(2):
+        pos, species = _toy_structure(rng, n_atoms=4)
+        edges = build_edges(pos, cfg.r_cut)
+        e_ref = float(rng.standard_normal())
+        f_ref = 0.1 * rng.standard_normal((4, 3))
+        graphs.append((pos, species, edges, e_ref, f_ref))
+    loss, grad = loss_and_grad(cfg, p, graphs)
+    h, worst = 1e-5, 0.0
+    for idx in rng.choice(p.size, size=12, replace=False):
+        pp = p.copy(); pp[idx] += h
+        pm = p.copy(); pm[idx] -= h
+        lp, _ = loss_and_grad(cfg, pp, graphs)
+        lm, _ = loss_and_grad(cfg, pm, graphs)
+        fd = (lp - lm) / (2 * h)
+        worst = max(worst, abs(grad[idx] - fd) / (1.0 + abs(fd)))
+    print(f"[check] d(loss)/dtheta (energy+force, FD-HVP): max rel err {worst:.2e}")
+    assert worst < 1e-4
+
+
+def check_descent(rng):
+    cfg = Config(n_layers=1)
+    p = init_params(cfg, rng)
+    graphs = []
+    for _ in range(3):
+        pos, species = _toy_structure(rng, n_atoms=5)
+        edges = build_edges(pos, cfg.r_cut)
+        # synthetic labels from a perturbed copy of the model (realizable)
+        p_star = p + 0.2 * rng.standard_normal(p.size)
+        e_ref, f_ref, _ = energy_forces_grad(cfg, p_star, pos, species, edges)
+        graphs.append((pos, species, edges, e_ref, f_ref))
+    # Adam, mirroring coordinator::trainer defaults
+    m, v2 = np.zeros_like(p), np.zeros_like(p)
+    lr, b1, b2, eps = 5e-3, 0.9, 0.999, 1e-8
+    l0, _ = loss_and_grad(cfg, p, graphs)
+    losses = [l0]
+    for step in range(1, 11):
+        _, g = loss_and_grad(cfg, p, graphs)
+        m = b1 * m + (1 - b1) * g
+        v2 = b2 * v2 + (1 - b2) * g * g
+        mh, vh = m / (1 - b1 ** step), v2 / (1 - b2 ** step)
+        p = p - lr * mh / (np.sqrt(vh) + eps)
+        l, _ = loss_and_grad(cfg, p, graphs)
+        losses.append(l)
+    print(f"[check] Adam descent: loss {losses[0]:.5f} -> {losses[-1]:.5f}")
+    assert losses[1] < losses[0] and losses[-1] < losses[0]
+
+
+def run_checks():
+    rng = np.random.default_rng(7)
+    check_sh_grad(rng)
+    check_forces(rng)
+    check_param_grad(rng)
+    check_equivariance(rng)
+    check_total_loss_grad(rng)
+    check_descent(rng)
+    print("[check] all model-math checks passed")
+
+
+# --------------------------------------------------------------------------
+# golden emission
+# --------------------------------------------------------------------------
+
+
+def emit_model_golden(out_dir: str):
+    cfg = Config(l=2, l_filter=2, nu=2, n_layers=2, n_species=3,
+                 n_radial=6, r_cut=3.5)
+    rng = np.random.default_rng(20240123)
+    p = init_params(cfg, rng)
+    # 8-atom frozen cluster, everything inside the cutoff ball
+    pos = 1.3 * rng.standard_normal((8, 3))
+    species = rng.integers(0, cfg.n_species, 8)
+    edges = build_edges(pos, cfg.r_cut)
+    E, F, _ = energy_forces_grad(cfg, p, pos, species, edges)
+    doc = {
+        "config": {"l": cfg.l, "l_filter": cfg.l_filter, "nu": cfg.nu,
+                   "n_layers": cfg.n_layers, "n_species": cfg.n_species,
+                   "n_radial": cfg.n_radial, "r_cut": cfg.r_cut},
+        "params": p.tolist(),
+        "pos": pos.ravel().tolist(),
+        "species": species.tolist(),
+        "n_edges": len(edges),
+        "energy": E,
+        "forces": F.ravel().tolist(),
+    }
+    os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+    path = os.path.join(out_dir, "golden", "model_golden.json")
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    print(f"[model-golden] wrote {path} (E = {E:.6f}, {len(edges)} edges)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../rust/artifacts",
+                    help="artifact dir receiving golden/model_golden.json")
+    ap.add_argument("--check", action="store_true",
+                    help="run the FD/equivariance/descent validators only")
+    args = ap.parse_args()
+    if args.check:
+        run_checks()
+    else:
+        emit_model_golden(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+//! Serving-path model inference benchmark: atoms/sec of the full learned
+//! force field (energy + analytic forces through every planned Gaunt
+//! plan), single-threaded vs all cores, plus the energy-only forward.
+//!
+//! Feeds the `model` rows of BENCH_fourier.json via
+//! `scripts/bench_snapshot.sh`; the multi-thread speedup is the
+//! `pool::shard_rows_with` (one scratch per worker) claim measured
+//! end to end.
+//!
+//! `--smoke`: one tiny batch, 1 ms budgets, no TSV (CI liveness check).
+
+use gaunt_tp::data::gen_bpa_dataset;
+use gaunt_tp::model::{
+    energy_forces_batch_par, GraphRef, Model, ModelConfig,
+};
+use gaunt_tp::util::bench::{budget_ms, consume, smoke, BenchTable};
+use gaunt_tp::util::pool;
+
+fn main() {
+    let mut t = BenchTable::new("model inference (learned force field)");
+    let n_graphs = if smoke() { 2 } else { 16 };
+    let budget = budget_ms(200);
+    let graphs_data = gen_bpa_dataset(&[0.05], n_graphs, 5).remove(0);
+    let model = Model::new(ModelConfig { r_cut: 3.0, ..Default::default() },
+                           7);
+    model.warm();
+    let edge_lists: Vec<Vec<(usize, usize)>> = graphs_data
+        .iter()
+        .map(|g| model.build_edges(&g.pos))
+        .collect();
+    let graphs: Vec<GraphRef<'_>> = graphs_data
+        .iter()
+        .zip(&edge_lists)
+        .map(|(g, edges)| GraphRef {
+            pos: &g.pos,
+            species: &g.species,
+            edges,
+        })
+        .collect();
+    let atoms_total: usize = graphs_data.iter().map(|g| g.n_atoms()).sum();
+
+    // energy-only forward, one graph, one scratch (the zero-alloc path)
+    {
+        let mut scratch = model.scratch();
+        let g0 = &graphs[0];
+        t.run("model_energy_fwd  1 graph", budget, || {
+            consume(model.energy_into(g0.pos, g0.species, g0.edges,
+                                      &mut scratch));
+        });
+        let mut forces = vec![0.0; 3 * g0.pos.len()];
+        t.run("model_energy_forces  1 graph", budget, || {
+            consume(model.energy_forces_into(
+                g0.pos, g0.species, g0.edges, &mut forces, &mut scratch,
+            ));
+        });
+    }
+
+    // batched energy+forces, 1 thread vs all cores
+    let mut rates = Vec::new();
+    for (label, threads) in [("1 thread", 1usize),
+                             ("all cores", 0usize)] {
+        let m = gaunt_tp::util::bench::bench(
+            &format!("model_batch_B{n_graphs}  {label}"),
+            budget,
+            || {
+                consume(energy_forces_batch_par(&model, &graphs, threads));
+            },
+        );
+        let atoms_per_sec = atoms_total as f64 / (m.median_ns * 1e-9);
+        println!("    -> {atoms_per_sec:.0} atoms/sec ({label})");
+        rates.push(atoms_per_sec);
+        t.add(m);
+    }
+    if !smoke() {
+        println!(
+            "batched speedup {:.2}x on {} cores",
+            rates[1] / rates[0],
+            pool::default_threads()
+        );
+        t.write_tsv("model_inference");
+    }
+}

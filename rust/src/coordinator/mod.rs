@@ -10,7 +10,11 @@
 //!   unpad -> respond through the per-request channel.
 //!
 //! Dataflow (training): [`trainer::Trainer`] drives the fused
-//! `ff_train_step_*` artifact over shuffled minibatches.
+//! `ff_train_step_*` artifact over shuffled minibatches, and
+//! [`trainer::NativeTrainer`] runs the artifact-free loop over the
+//! native Gaunt-engine model (energy + force loss, Adam, JSON
+//! checkpoints) whose result feeds straight into
+//! [`server::NativeGauntBackend`].
 
 pub mod batcher;
 pub mod metrics;
@@ -20,5 +24,5 @@ pub mod server;
 pub mod trainer;
 
 pub use request::{ForceRequest, ForceResponse};
-pub use server::{ForceFieldServer, ServerConfig};
-pub use trainer::Trainer;
+pub use server::{ForceFieldServer, NativeGauntBackend, ServerConfig};
+pub use trainer::{NativeTrainConfig, NativeTrainer, Trainer};

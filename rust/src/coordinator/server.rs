@@ -21,6 +21,7 @@ use super::request::{Envelope, ForceRequest, ForceResponse};
 use super::router::{Router, Variant};
 use crate::data::{Graph, PaddedBatch};
 use crate::err;
+use crate::model::{batch_row_len, energy_forces_batch_par, GraphRef, Model};
 use crate::num_coeffs;
 use crate::runtime::{Engine, Tensor};
 use crate::so3::sh::real_sh_all_xyz;
@@ -87,41 +88,143 @@ impl Backend for XlaBackend {
     }
 }
 
-/// Native Gaunt-TP backend: a fixed (untrained but exactly equivariant)
-/// analytic model served without any compiled artifact.
+/// Native Gaunt-TP backend, in two modes:
 ///
-/// Per atom i: a feature `h_i = sum_j w(r_ij) Y(r_ij_hat)` over masked
-/// edges, then the rotation-invariant atomic energy `e_i` is the l=0
-/// channel of the **batched Gaunt self-product** `h_i (x) h_i` — computed
-/// for every atom of every graph in the flushed batch with one
-/// [`gaunt_apply_batch_par`] call through the global [`PlanCache`].
-/// Forces are pair terms `c(r) (1 + e_i + e_j) r_hat_ij`: the scalar is
-/// symmetric under i <-> j while the direction flips, so the reverse edge
-/// contributes the exact opposite force — they rotate with the structure
-/// and sum to zero.
+/// * **Surrogate** (no model): a fixed, untrained but exactly
+///   equivariant analytic model.  Per atom i: a feature `h_i = sum_j
+///   w(r_ij) Y(r_ij_hat)` over masked edges, then the rotation-invariant
+///   atomic energy is the l=0 channel of the **batched Gaunt
+///   self-product** `h_i (x) h_i` via one [`gaunt_apply_batch_par`] call
+///   through the global [`PlanCache`].  Forces are symmetric pair terms
+///   (exact Newton's third law).
+/// * **Learned** ([`NativeGauntBackend::with_model`]): the trained
+///   [`Model`] — each flushed batch is decoded once and its graphs are
+///   sharded across workers by [`energy_forces_batch_par`]
+///   (`pool::shard_rows_with`: one model scratch per worker, per-graph
+///   inference allocation-free), energies AND analytic forces end to
+///   end through the planned Gaunt engine.
 pub struct NativeGauntBackend {
-    /// feature degree L of the per-atom spherical-harmonic features
+    /// feature degree L of the surrogate's per-atom SH features
     pub l: usize,
     /// worker threads for the batched TP (0 = all cores)
     pub threads: usize,
-    /// per-species energy offset scale
+    /// per-species energy offset scale (surrogate mode)
     pub species_scale: f64,
+    /// trained model; `None` serves the analytic surrogate
+    pub model: Option<Arc<Model>>,
 }
 
 impl Default for NativeGauntBackend {
     fn default() -> Self {
-        NativeGauntBackend { l: 2, threads: 0, species_scale: 0.1 }
+        NativeGauntBackend { l: 2, threads: 0, species_scale: 0.1,
+                             model: None }
     }
 }
 
 impl NativeGauntBackend {
-    /// Pre-build this backend's Gaunt plan in the global [`PlanCache`]
-    /// (tables + FFT workspaces) so the first request does not pay the
-    /// plan-construction stall — the native analog of the XLA path's
-    /// eager `engine.load()` of every variant.
+    /// Serve a trained (or freshly initialized) model.
+    pub fn with_model(model: Arc<Model>) -> NativeGauntBackend {
+        NativeGauntBackend { model: Some(model), ..Default::default() }
+    }
+
+    /// Pre-build every plan this backend will touch — the native analog
+    /// of the XLA path's eager `engine.load()` of every variant.  In
+    /// model mode this runs one tiny inference so the shared FFT tables
+    /// and Wigner fit caches exist before the first real batch.
     pub fn warm(&self) {
-        let _ = PlanCache::global().gaunt(self.l, self.l, self.l,
-                                          ConvMethod::Auto);
+        match &self.model {
+            Some(m) => m.warm(),
+            None => {
+                let _ = PlanCache::global().gaunt(self.l, self.l, self.l,
+                                                  ConvMethod::Auto);
+            }
+        }
+    }
+
+    /// Decode a padded batch and run the learned model, graphs sharded
+    /// across the worker pool.
+    fn run_model(
+        &self, model: &Arc<Model>, pb: &PaddedBatch,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (b, n_atoms, n_edges) = (pb.b, pb.n_atoms, pb.n_edges);
+        // decode once per batch: positions, species, masked edge lists
+        let mut pos: Vec<Vec<[f64; 3]>> = Vec::with_capacity(b);
+        let mut species: Vec<Vec<usize>> = Vec::with_capacity(b);
+        let mut edges: Vec<Vec<(usize, usize)>> = Vec::with_capacity(b);
+        for g in 0..b {
+            // the capacity that matters is each graph's TRUE atom count,
+            // not the server's static padding width
+            let na = pb.true_atoms[g];
+            if na > model.cfg.max_atoms {
+                return Err(err!(
+                    "graph {g} has {na} atoms, model capacity is {}",
+                    model.cfg.max_atoms
+                ));
+            }
+            let mut p = Vec::with_capacity(na);
+            let mut sp = Vec::with_capacity(na);
+            for a in 0..na {
+                let base = (g * n_atoms + a) * 3;
+                p.push([
+                    pb.pos[base] as f64,
+                    pb.pos[base + 1] as f64,
+                    pb.pos[base + 2] as f64,
+                ]);
+                // validate species HERE: the model's own range check is a
+                // debug_assert, compiled out of release serving binaries,
+                // and an out-of-range id would silently index unrelated
+                // parameters (a negative one would wrap and panic)
+                let s = pb.species[g * n_atoms + a];
+                if s < 0 || s as usize >= model.cfg.n_species {
+                    return Err(err!(
+                        "graph {g} atom {a}: species {s} outside the \
+                         model's 0..{} range",
+                        model.cfg.n_species
+                    ));
+                }
+                sp.push(s as usize);
+            }
+            let mut el = Vec::new();
+            for e in 0..n_edges {
+                if pb.edge_mask[g * n_edges + e] == 0.0 {
+                    continue;
+                }
+                el.push((
+                    pb.edges[(g * n_edges + e) * 2] as usize,
+                    pb.edges[(g * n_edges + e) * 2 + 1] as usize,
+                ));
+            }
+            if el.len() > model.cfg.max_edges {
+                return Err(err!(
+                    "graph {g} has {} edges, model capacity is {}",
+                    el.len(), model.cfg.max_edges
+                ));
+            }
+            pos.push(p);
+            species.push(sp);
+            edges.push(el);
+        }
+        let graphs: Vec<GraphRef<'_>> = (0..b)
+            .map(|g| GraphRef {
+                pos: &pos[g],
+                species: &species[g],
+                edges: &edges[g],
+            })
+            .collect();
+        let rows = energy_forces_batch_par(model, &graphs, self.threads);
+        let row_len = batch_row_len(model);
+        let mut energy = vec![0.0f32; b];
+        let mut forces = vec![0.0f32; b * n_atoms * 3];
+        for g in 0..b {
+            energy[g] = rows[g * row_len] as f32;
+            for a in 0..pos[g].len() {
+                for ax in 0..3 {
+                    forces[(g * n_atoms + a) * 3 + ax] =
+                        rows[g * row_len + 1 + 3 * a + ax] as f32;
+                }
+            }
+        }
+        Ok((energy, forces))
     }
 }
 
@@ -130,14 +233,24 @@ impl Backend for NativeGauntBackend {
         &self, _variant: &Variant, pb: &PaddedBatch, _state: &[Tensor],
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         if pb.dropped_edges > 0 {
-            // a one-directional drop would break the reverse-edge force
-            // cancellation — fail loudly instead of answering wrongly
+            // shared guard: a one-directional drop would break Newton's
+            // third law in both modes
             return Err(err!(
                 "native backend: {} edges exceeded the {}-slot budget; \
                  refusing to serve a truncated (asymmetric) edge list",
                 pb.dropped_edges, pb.n_edges
             ));
         }
+        if let Some(model) = &self.model {
+            return self.run_model(model, pb);
+        }
+        self.run_surrogate(pb)
+    }
+}
+
+impl NativeGauntBackend {
+    /// The untrained analytic surrogate (the pre-model serving path).
+    fn run_surrogate(&self, pb: &PaddedBatch) -> Result<(Vec<f32>, Vec<f32>)> {
         let n_feat = num_coeffs(self.l);
         let plan =
             PlanCache::global().gaunt(self.l, self.l, self.l, ConvMethod::Auto);
@@ -274,13 +387,20 @@ impl ForceFieldServer {
     /// compiled artifacts required; every flushed batch runs through the
     /// global [`PlanCache`] and the multi-threaded batched TP.
     pub fn start_native(
-        backend: NativeGauntBackend, cfg: ServerConfig,
+        backend: NativeGauntBackend, mut cfg: ServerConfig,
     ) -> Result<Self> {
         let variants = vec![
             Variant { name: "native_B1".to_string(), batch: 1 },
             Variant { name: "native_B4".to_string(), batch: 4 },
             Variant { name: "native_B8".to_string(), batch: 8 },
         ];
+        if let Some(m) = &backend.model {
+            // the neighbor list is built server-side at cfg.r_cut; a
+            // mismatch with the model's training cutoff would silently
+            // drop (or add zero-weight) edges — derive it from the model
+            // so ServerConfig::default() is always correct
+            cfg.r_cut = m.cfg.r_cut;
+        }
         // cold-start off the request path, like the XLA variants' eager
         // compile: build the plan (tables + FFT workspaces) before the
         // first batch is flushed

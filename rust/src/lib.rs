@@ -14,6 +14,14 @@
 //!   correctness oracle and as the benchmark substrate for every figure
 //!   and table in the paper.
 //!
+//! The force-field workload is opened end-to-end by [`model`]: a
+//! MACE-style equivariant message-passing model whose every contraction
+//! (edge convolution, many-body products, readout, and all backward
+//! passes) runs on the planned Gaunt engine — trained by
+//! [`coordinator::trainer::NativeTrainer`], driven in MD through
+//! [`md::potential::LearnedPotential`], and served batched+multi-threaded
+//! by the native backend.
+//!
 //! Simulation substrates the evaluation needs ([`md`], [`nbody`]) are
 //! implemented from scratch, as are the infrastructure pieces the offline
 //! environment lacks ([`util`]: PRNG, JSON, property testing, benching,
@@ -30,6 +38,7 @@ pub mod data;
 pub mod experiments;
 pub mod fourier;
 pub mod md;
+pub mod model;
 pub mod nbody;
 pub mod runtime;
 pub mod so3;

@@ -1,6 +1,13 @@
 //! Time integration: velocity Verlet (NVE) and Langevin (BAOAB, NVT).
+//!
+//! Forces come either from a classical [`Potential`] ([`Integrator::step`])
+//! or from any [`ForceProvider`] ([`Integrator::step_with`]) — in
+//! particular [`crate::md::potential::LearnedPotential`], so the trained
+//! Gaunt-engine model drives MD through the exact same BAOAB scheme as
+//! the ground truth.
 
 use super::potential::Potential;
+use super::relax::ForceProvider;
 use crate::util::rng::Rng;
 
 /// Thermostat selection.
@@ -72,8 +79,33 @@ impl Integrator {
         }
     }
 
-    /// One integration step.
-    pub fn step(&mut self, pot: &Potential, rng: &mut Rng) {
+    /// Build the integrator with forces from an arbitrary provider
+    /// (e.g. the learned potential).
+    pub fn new_with<P: ForceProvider>(
+        pos: Vec<[f64; 3]>,
+        species: Vec<usize>,
+        provider: &mut P,
+        dt: f64,
+        thermostat: Thermostat,
+    ) -> Self {
+        let n = pos.len();
+        let (e, f) = provider.energy_forces(&pos);
+        Integrator {
+            pos,
+            vel: vec![[0.0; 3]; n],
+            species,
+            mass: 1.0,
+            dt,
+            thermostat,
+            forces: f,
+            potential_energy: e,
+        }
+    }
+
+    /// One BAOAB step with forces from an arbitrary [`ForceProvider`].
+    pub fn step_with<P: ForceProvider>(
+        &mut self, provider: &mut P, rng: &mut Rng,
+    ) {
         let dt = self.dt;
         let m = self.mass;
         // B: half kick
@@ -105,7 +137,7 @@ impl Integrator {
             }
         }
         // force refresh + B: half kick
-        let (e, f) = pot.energy_forces(&self.pos, &self.species);
+        let (e, f) = provider.energy_forces(&self.pos);
         self.potential_energy = e;
         self.forces = f;
         for (v, f) in self.vel.iter_mut().zip(&self.forces) {
@@ -113,6 +145,19 @@ impl Integrator {
                 v[k] += 0.5 * dt * f[k] / m;
             }
         }
+    }
+
+    /// One integration step with the classical potential.  Delegates to
+    /// [`Integrator::step_with`] so classical and learned-potential MD
+    /// share ONE BAOAB implementation (the species list is lent to the
+    /// provider closure for the duration of the step; `step_with` never
+    /// reads `self.species`).
+    pub fn step(&mut self, pot: &Potential, rng: &mut Rng) {
+        let species = std::mem::take(&mut self.species);
+        let mut provider =
+            |pos: &[[f64; 3]]| pot.energy_forces(pos, &species);
+        self.step_with(&mut provider, rng);
+        self.species = species;
     }
 
     pub fn kinetic_energy(&self) -> f64 {
@@ -154,6 +199,31 @@ mod tests {
             }
         }
         pos
+    }
+
+    #[test]
+    fn step_with_provider_matches_classical_step() {
+        let pot = Potential::lj(1.0, 1.0, 3.0);
+        let pos = lj_cluster(2, 1.15);
+        let species = vec![0usize; pos.len()];
+        let mut rng_a = Rng::new(5);
+        let mut rng_b = Rng::new(5);
+        let mut md_a = Integrator::new(pos.clone(), species.clone(), &pot,
+                                       0.003, Thermostat::None);
+        let sp = species.clone();
+        let p2 = pot.clone();
+        let mut provider = move |x: &[[f64; 3]]| p2.energy_forces(x, &sp);
+        let mut md_b = Integrator::new_with(pos, species, &mut provider,
+                                            0.003, Thermostat::None);
+        md_a.thermalize(0.1, &mut rng_a);
+        md_b.thermalize(0.1, &mut rng_b);
+        for _ in 0..50 {
+            md_a.step(&pot, &mut rng_a);
+            md_b.step_with(&mut provider, &mut rng_b);
+        }
+        assert_eq!(md_a.pos, md_b.pos);
+        assert_eq!(md_a.vel, md_b.vel);
+        assert_eq!(md_a.potential_energy, md_b.potential_energy);
     }
 
     #[test]

@@ -16,4 +16,6 @@ pub mod relax;
 
 pub use integrator::{Integrator, Thermostat};
 pub use molecule::Molecule;
-pub use potential::{Potential, PotentialKind};
+pub use potential::{LearnedPotential, Potential, PotentialKind,
+                    SystemPotential};
+pub use relax::{fire_relax, FireConfig, ForceProvider, RelaxResult};

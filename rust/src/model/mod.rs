@@ -1,0 +1,988 @@
+//! The learned force field: a MACE-style equivariant message-passing
+//! model whose every tensor contraction routes through the planned Gaunt
+//! engine (DESIGN.md §"The model stack").
+//!
+//! One channel of real SH coefficients per atom (degree <= L).  Per
+//! interaction layer:
+//!
+//! 1. **Edge embedding** — radial basis [`radial::RadialBasis`] x
+//!    spherical harmonics of the edge direction
+//!    ([`crate::so3::sh::real_sh_grad_xyz_into`]: values AND Cartesian
+//!    gradients, so the force backward pass is analytic end to end).
+//! 2. **eSCN-style equivariant convolution** — the per-edge message
+//!    `m_e = P_L(h_j * f_e)` with the degree-weighted filter
+//!    `f_e[lm] = h2_e[l2] Y_lm(u_e)`, evaluated by
+//!    [`GauntConvPlan::apply_full_into`] (aligned-filter fast path,
+//!    allocation-free rotation round trip).
+//! 3. **Many-body update** — `b_i = P_L(a_i^nu)` through
+//!    [`ManyBodyPlan::apply_self_into`] (one transform, pointwise
+//!    nu-th power), then a per-degree residual mix
+//!    `h' = res (.) h + mix_a (.) a + mix_b (.) b`.
+//! 4. **Invariant readout** — `e_i = bias[s_i] + c_lin h[0] +
+//!    c_quad (h (x) h)[0]`, the quadratic invariant evaluated by a
+//!    `(L, L, 0)` [`GauntPlan`].
+//!
+//! **Backward convention.** The real Gaunt tensor `G[k,i,j] = int Y_k
+//! Y_i Y_j dOmega` is symmetric under any permutation of its three
+//! slots, so every VJP of a Gaunt product is itself a Gaunt product with
+//! the degrees rotated:
+//!
+//! ```text
+//!   y = P_{L3}(f_x f_w)          (plan (L1, L2, L3))
+//!   dL/dx = P_{L1}(f_g f_w)      (plan (L3, L2, L1))
+//!   dL/dw = P_{L2}(f_g f_x)      (plan (L3, L1, L2))
+//!   b = P_L(f_a^nu)              (ManyBodyPlan)
+//!   dL/da = nu P_L(f_g f_a^{nu-1})   (a^{nu-1} from a (nu-1)-fold
+//!            self-product, truncated to 2L by the selection rules)
+//! ```
+//!
+//! so the backward pass runs on the same cached plans as the forward.
+//! Position gradients (= -forces) flow through the radial basis
+//! derivative and the pole-free SH Cartesian gradient.  Every identity
+//! is validated against central differences by
+//! `python/compile/model_golden.py --check` and `tests/grad_check.rs`.
+//!
+//! All `_into` entry points are **allocation-free in steady state**
+//! (asserted by `tests/alloc_regression.rs`): plans come from the global
+//! [`PlanCache`], intermediates live in a caller-owned [`ModelScratch`],
+//! and batched inference shards graphs across workers with one scratch
+//! each via [`crate::util::pool::shard_rows_with`].
+
+pub mod radial;
+
+use std::sync::Arc;
+
+use crate::err;
+use crate::md::neighbor::neighbors_cell;
+use crate::so3::sh::real_sh_grad_xyz_into;
+use crate::tp::engine::PlanCache;
+use crate::tp::escn::{GauntConvPlan, GauntConvScratch};
+use crate::tp::gaunt::{ConvMethod, GauntPlan, GauntScratch};
+use crate::tp::many_body::{ManyBodyPlan, ManyBodyScratch};
+use crate::util::error::Result;
+use crate::util::json::{self, Json};
+use crate::util::pool;
+use crate::util::rng::Rng;
+use crate::{lm_index, num_coeffs};
+use radial::RadialBasis;
+
+/// 1 / sqrt(4 pi): the value of Y_00, used by the closed-form VJP of the
+/// quadratic readout invariant `(h (x) h)[0] = sum_j h_j^2 / sqrt(4 pi)`.
+const INV_SQRT_4PI: f64 = 0.28209479177387814;
+
+/// Hyperparameters of the learned force field.  `max_atoms`/`max_edges`
+/// size the scratch buffers (a single inference may not exceed them —
+/// the serving path checks and refuses loudly).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// feature degree L
+    pub l: usize,
+    /// filter degree of the edge convolution
+    pub l_filter: usize,
+    /// many-body correlation order (>= 2)
+    pub nu: usize,
+    /// interaction layers
+    pub n_layers: usize,
+    pub n_species: usize,
+    /// radial basis size
+    pub n_radial: usize,
+    /// neighbor cutoff (the radial envelope vanishes smoothly here)
+    pub r_cut: f64,
+    /// convolution backend for every Gaunt plan (forward conv dispatch
+    /// and all backward-pass plans)
+    pub method: ConvMethod,
+    pub max_atoms: usize,
+    pub max_edges: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            l: 2,
+            l_filter: 2,
+            nu: 2,
+            n_layers: 2,
+            n_species: 3,
+            n_radial: 6,
+            r_cut: 3.5,
+            method: ConvMethod::Auto,
+            max_atoms: 32,
+            max_edges: 1024,
+        }
+    }
+}
+
+impl ModelConfig {
+    /// Feature width `(L+1)^2`.
+    pub fn nf(&self) -> usize {
+        num_coeffs(self.l)
+    }
+
+    /// Filter feature width.
+    pub fn nff(&self) -> usize {
+        num_coeffs(self.l_filter)
+    }
+
+    /// Degree of the saved `a^(nu-1)` power: Gaunt selection rules cut
+    /// everything above 2L out of the many-body VJP.
+    pub fn l_pow(&self) -> usize {
+        ((self.nu - 1) * self.l).min(2 * self.l)
+    }
+
+    fn per_layer_params(&self) -> usize {
+        (self.l_filter + 1) * self.n_radial + 3 * (self.l + 1)
+    }
+
+    /// Total parameter count (layout documented at [`Model::params`]).
+    pub fn n_params(&self) -> usize {
+        2 * self.n_species + self.n_layers * self.per_layer_params() + 2
+    }
+}
+
+/// Parameter layout offsets (shared with
+/// `python/compile/model_golden.py::param_views`):
+/// `[species_embed S][species_bias S]` then per layer
+/// `[w_rad (Lf+1)*K][mix_res L+1][mix_a L+1][mix_b L+1]`, then
+/// `[c_lin, c_quad]`.
+struct Offsets {
+    embed: usize,
+    bias: usize,
+    layer0: usize,
+    per_layer: usize,
+    w_rad: usize,
+    mix_res: usize,
+    mix_a: usize,
+    mix_b: usize,
+    readout: usize,
+}
+
+impl Offsets {
+    fn new(cfg: &ModelConfig) -> Offsets {
+        let w_rad_len = (cfg.l_filter + 1) * cfg.n_radial;
+        let per_layer = cfg.per_layer_params();
+        Offsets {
+            embed: 0,
+            bias: cfg.n_species,
+            layer0: 2 * cfg.n_species,
+            per_layer,
+            w_rad: 0,
+            mix_res: w_rad_len,
+            mix_a: w_rad_len + (cfg.l + 1),
+            mix_b: w_rad_len + 2 * (cfg.l + 1),
+            readout: 2 * cfg.n_species + cfg.n_layers * per_layer,
+        }
+    }
+
+    fn layer(&self, t: usize) -> usize {
+        self.layer0 + t * self.per_layer
+    }
+}
+
+/// The learned force field (parameters + resolved plans).  Cheap to
+/// share behind an `Arc`; per-thread mutable state lives in
+/// [`ModelScratch`].
+pub struct Model {
+    pub cfg: ModelConfig,
+    /// flat parameter vector (layout above)
+    pub params: Vec<f64>,
+    rb: RadialBasis,
+    off: Offsets,
+    /// forward conv plan (aligned-filter fast path), (L, Lf, L)
+    conv: Arc<GauntConvPlan>,
+    /// message VJP w.r.t. the source feature, plan (L, Lf, L)
+    vjp_x: Arc<GauntPlan>,
+    /// message VJP w.r.t. the filter, plan (L, L, Lf)
+    vjp_f: Arc<GauntPlan>,
+    /// many-body self-product, (nu, L, L)
+    mb: Arc<ManyBodyPlan>,
+    /// the (nu-1)-fold power for the many-body VJP (None when nu == 2:
+    /// the power is `a` itself)
+    mb_pow: Option<Arc<ManyBodyPlan>>,
+    /// many-body VJP, plan (L, l_pow, L)
+    vjp_mb: Arc<GauntPlan>,
+    /// quadratic readout invariant, plan (L, L, 0)
+    quad: Arc<GauntPlan>,
+}
+
+/// Caller-owned workspace: every intermediate of one forward+backward
+/// pass, sized once from the config — one per worker thread.
+pub struct ModelScratch {
+    // plan scratches
+    conv_s: GauntConvScratch,
+    vjp_x_s: GauntScratch,
+    vjp_f_s: GauntScratch,
+    vjp_mb_s: GauntScratch,
+    quad_s: GauntScratch,
+    mb_s: ManyBodyScratch,
+    mb_pow_s: Option<ManyBodyScratch>,
+    // per-edge geometry (shared by all layers)
+    er: Vec<f64>,          // [max_e] edge length
+    eu: Vec<[f64; 3]>,     // [max_e] unit direction (pos_i - pos_j)/r
+    ey: Vec<f64>,          // [max_e * nff] SH values of the direction
+    egy: Vec<[f64; 3]>,    // [max_e * nff] SH Cartesian gradients
+    erb: Vec<f64>,         // [max_e * K] radial basis values
+    edrb: Vec<f64>,        // [max_e * K] radial basis derivatives
+    eh2: Vec<f64>,         // [n_layers * max_e * (Lf+1)] filter weights
+    // per-atom state (saved for the backward pass)
+    h: Vec<f64>,           // [(n_layers+1) * max_a * nf]
+    a: Vec<f64>,           // [n_layers * max_a * nf] aggregated messages
+    b: Vec<f64>,           // [n_layers * max_a * nf] many-body features
+    pw: Vec<f64>,          // [n_layers * max_a * npow] a^(nu-1) powers
+    inv: Vec<f64>,         // [max_a] quadratic readout invariants
+    // backward work buffers
+    g_h: Vec<f64>,         // [max_a * nf]
+    g_hprev: Vec<f64>,     // [max_a * nf]
+    g_a: Vec<f64>,         // [max_a * nf]
+    g_b: Vec<f64>,         // [nf]
+    g_f: Vec<f64>,         // [nff]
+    msg: Vec<f64>,         // [nf] message / VJP staging
+    filt: Vec<f64>,        // [nff] filter coefficients
+    one: Vec<f64>,         // [1] quad-plan output
+    /// internal parameter-gradient buffer for force-only calls
+    gparams: Vec<f64>,
+}
+
+/// Per-degree scaled accumulate: `out[(l,m)] += w[l] * x[(l,m)]`.
+#[inline]
+fn deg_scale_add(l_max: usize, w: &[f64], x: &[f64], out: &mut [f64]) {
+    for l in 0..=l_max {
+        let base = lm_index(l, -(l as i64));
+        for k in 0..(2 * l + 1) {
+            out[base + k] += w[l] * x[base + k];
+        }
+    }
+}
+
+/// Per-degree inner products: `out_w[l] += <g, x>_l` (the d/dw of
+/// `<g, w (.) x>`).
+#[inline]
+fn deg_dot_add(l_max: usize, g: &[f64], x: &[f64], out_w: &mut [f64]) {
+    for l in 0..=l_max {
+        let base = lm_index(l, -(l as i64));
+        let mut acc = 0.0;
+        for k in 0..(2 * l + 1) {
+            acc += g[base + k] * x[base + k];
+        }
+        out_w[l] += acc;
+    }
+}
+
+impl Model {
+    /// Random initialization (scales mirrored from the Python reference:
+    /// O(1) scalars, residual mixes at 1, modest message/many-body
+    /// mixes).
+    pub fn new(cfg: ModelConfig, seed: u64) -> Model {
+        let mut rng = Rng::new(seed);
+        let mut params = vec![0.0; cfg.n_params()];
+        let off = Offsets::new(&cfg);
+        for s in 0..cfg.n_species {
+            params[off.embed + s] = 1.0 + 0.3 * rng.normal();
+            params[off.bias + s] = 0.1 * rng.normal();
+        }
+        let w_scale = 0.8 / (cfg.n_radial as f64).sqrt();
+        for t in 0..cfg.n_layers {
+            let lt = off.layer(t);
+            for k in 0..(cfg.l_filter + 1) * cfg.n_radial {
+                params[lt + off.w_rad + k] = w_scale * rng.normal();
+            }
+            for l in 0..=cfg.l {
+                params[lt + off.mix_res + l] = 1.0;
+                params[lt + off.mix_a + l] = 0.5 + 0.1 * rng.normal();
+                params[lt + off.mix_b + l] = 0.3 + 0.1 * rng.normal();
+            }
+        }
+        params[off.readout] = 0.5;
+        params[off.readout + 1] = 0.5;
+        Model::from_params(cfg, params)
+    }
+
+    /// Build from an explicit parameter vector (checkpoints, goldens).
+    pub fn from_params(cfg: ModelConfig, params: Vec<f64>) -> Model {
+        assert!(cfg.nu >= 2, "many-body order must be >= 2");
+        assert!(cfg.n_layers >= 1);
+        // the filter VJP projects a degree-2L product grid onto degree
+        // l_filter, which the f2sh panels require to fit inside the grid
+        assert!(cfg.l_filter <= 2 * cfg.l,
+                "l_filter must be <= 2*l (got l_filter={}, l={})",
+                cfg.l_filter, cfg.l);
+        assert_eq!(params.len(), cfg.n_params(), "parameter layout mismatch");
+        let cache = PlanCache::global();
+        let (l, lf, lp) = (cfg.l, cfg.l_filter, cfg.l_pow());
+        Model {
+            rb: RadialBasis::new(cfg.n_radial, cfg.r_cut),
+            off: Offsets::new(&cfg),
+            conv: cache.gaunt_conv(l, lf, l),
+            vjp_x: cache.gaunt(l, lf, l, cfg.method),
+            vjp_f: cache.gaunt(l, l, lf, cfg.method),
+            mb: cache.many_body(cfg.nu, l, l),
+            mb_pow: if cfg.nu > 2 {
+                Some(cache.many_body(cfg.nu - 1, l, lp))
+            } else {
+                None
+            },
+            vjp_mb: cache.gaunt(l, lp, l, cfg.method),
+            quad: cache.gaunt(l, l, 0, cfg.method),
+            cfg,
+            params,
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Fresh scratch sized for this model (one per worker thread).
+    pub fn scratch(&self) -> ModelScratch {
+        let c = &self.cfg;
+        let (nf, nff, npow) = (c.nf(), c.nff(), num_coeffs(c.l_pow()));
+        let (ma, me, nl) = (c.max_atoms, c.max_edges, c.n_layers);
+        ModelScratch {
+            conv_s: self.conv.scratch(),
+            vjp_x_s: self.vjp_x.scratch(),
+            vjp_f_s: self.vjp_f.scratch(),
+            vjp_mb_s: self.vjp_mb.scratch(),
+            quad_s: self.quad.scratch(),
+            mb_s: self.mb.scratch(),
+            mb_pow_s: self.mb_pow.as_ref().map(|p| p.scratch()),
+            er: vec![0.0; me],
+            eu: vec![[0.0; 3]; me],
+            ey: vec![0.0; me * nff],
+            egy: vec![[0.0; 3]; me * nff],
+            erb: vec![0.0; me * c.n_radial],
+            edrb: vec![0.0; me * c.n_radial],
+            eh2: vec![0.0; nl * me * (c.l_filter + 1)],
+            h: vec![0.0; (nl + 1) * ma * nf],
+            a: vec![0.0; nl * ma * nf],
+            b: vec![0.0; nl * ma * nf],
+            pw: vec![0.0; nl * ma * npow],
+            inv: vec![0.0; ma],
+            g_h: vec![0.0; ma * nf],
+            g_hprev: vec![0.0; ma * nf],
+            g_a: vec![0.0; ma * nf],
+            g_b: vec![0.0; nf],
+            g_f: vec![0.0; nff],
+            msg: vec![0.0; nf],
+            filt: vec![0.0; nff],
+            one: vec![0.0; 1],
+            gparams: vec![0.0; self.params.len()],
+        }
+    }
+
+    /// Pre-build every lazily constructed shared table (FFT twiddles,
+    /// Wigner fit caches) by running one tiny inference — the serving
+    /// analog of the XLA path's eager compile.
+    pub fn warm(&self) {
+        let d = 0.4 * self.cfg.r_cut;
+        let pos = [[0.0, 0.0, 0.0], [d, 0.25 * d, 0.1 * d]];
+        let species = [0usize, 0];
+        let edges = [(0usize, 1usize), (1usize, 0usize)];
+        let mut scratch = self.scratch();
+        let mut forces = [0.0; 6];
+        let _ = self.energy_forces_into(&pos, &species, &edges, &mut forces,
+                                        &mut scratch);
+    }
+
+    /// Directed neighbor list for one structure at the model's cutoff.
+    pub fn build_edges(&self, pos: &[[f64; 3]]) -> Vec<(usize, usize)> {
+        neighbors_cell(pos, self.cfg.r_cut)
+    }
+
+    fn check_sizes(&self, pos: &[[f64; 3]], species: &[usize],
+                   edges: &[(usize, usize)]) {
+        assert_eq!(pos.len(), species.len());
+        assert!(pos.len() <= self.cfg.max_atoms,
+                "{} atoms exceed max_atoms {}", pos.len(), self.cfg.max_atoms);
+        assert!(edges.len() <= self.cfg.max_edges,
+                "{} edges exceed max_edges {}", edges.len(),
+                self.cfg.max_edges);
+        debug_assert!(species.iter().all(|&s| s < self.cfg.n_species));
+        debug_assert!(edges.iter().all(|&(i, j)| {
+            i != j && i < pos.len() && j < pos.len()
+        }));
+    }
+
+    /// Forward pass over caller scratch: total energy, zero allocations
+    /// in steady state.  `edges` is a directed neighbor list (both
+    /// directions present, as produced by [`Model::build_edges`]).
+    pub fn energy_into(
+        &self, pos: &[[f64; 3]], species: &[usize],
+        edges: &[(usize, usize)], s: &mut ModelScratch,
+    ) -> f64 {
+        self.check_sizes(pos, species, edges);
+        let c = &self.cfg;
+        let (nf, nff, nh2) = (c.nf(), c.nff(), c.l_filter + 1);
+        let (ma, k) = (c.max_atoms, c.n_radial);
+        let n_atoms = pos.len();
+        let p = &self.params;
+        // --- edge geometry (shared by every layer) ---
+        for (e, &(i, j)) in edges.iter().enumerate() {
+            let d = [
+                pos[i][0] - pos[j][0],
+                pos[i][1] - pos[j][1],
+                pos[i][2] - pos[j][2],
+            ];
+            let r = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt()
+                .max(1e-12);
+            s.er[e] = r;
+            s.eu[e] = [d[0] / r, d[1] / r, d[2] / r];
+            real_sh_grad_xyz_into(
+                c.l_filter, d,
+                &mut s.ey[e * nff..(e + 1) * nff],
+                &mut s.egy[e * nff..(e + 1) * nff],
+            );
+            self.rb.eval_into(
+                r,
+                &mut s.erb[e * k..(e + 1) * k],
+                &mut s.edrb[e * k..(e + 1) * k],
+            );
+        }
+        // --- node init: species embedding in the scalar channel ---
+        for i in 0..n_atoms {
+            let row = &mut s.h[i * nf..(i + 1) * nf];
+            row.fill(0.0);
+            row[0] = p[self.off.embed + species[i]];
+        }
+        // --- interaction layers ---
+        for t in 0..c.n_layers {
+            let lt = self.off.layer(t);
+            let w_rad = &p[lt + self.off.w_rad
+                ..lt + self.off.w_rad + nh2 * k];
+            let h_t = t * ma * nf;
+            s.a[t * ma * nf..t * ma * nf + n_atoms * nf].fill(0.0);
+            for (e, &(i, j)) in edges.iter().enumerate() {
+                // per-filter-degree weights from the radial basis
+                let h2 = &mut s.eh2[(t * c.max_edges + e) * nh2
+                    ..(t * c.max_edges + e + 1) * nh2];
+                let rb = &s.erb[e * k..(e + 1) * k];
+                for (l2, h2v) in h2.iter_mut().enumerate() {
+                    *h2v = w_rad[l2 * k..(l2 + 1) * k]
+                        .iter()
+                        .zip(rb)
+                        .map(|(w, r)| w * r)
+                        .sum();
+                }
+                // eSCN-style message through the aligned-filter fast path
+                self.conv.apply_full_into(
+                    &s.h[h_t + j * nf..h_t + (j + 1) * nf],
+                    s.eu[e],
+                    h2,
+                    c.method,
+                    &mut s.msg,
+                    &mut s.conv_s,
+                );
+                let a_i = &mut s.a[(t * ma + i) * nf..(t * ma + i + 1) * nf];
+                for (av, mv) in a_i.iter_mut().zip(&s.msg) {
+                    *av += mv;
+                }
+            }
+            // many-body update + per-degree residual mix
+            let npow = num_coeffs(c.l_pow());
+            for i in 0..n_atoms {
+                let a_i = &s.a[(t * ma + i) * nf..(t * ma + i + 1) * nf];
+                self.mb.apply_self_into(
+                    a_i,
+                    &mut s.b[(t * ma + i) * nf..(t * ma + i + 1) * nf],
+                    &mut s.mb_s,
+                );
+                let pw_i = &mut s.pw
+                    [(t * ma + i) * npow..(t * ma + i + 1) * npow];
+                match (&self.mb_pow, &mut s.mb_pow_s) {
+                    (Some(plan), Some(ps)) => {
+                        plan.apply_self_into(a_i, pw_i, ps)
+                    }
+                    // nu == 2: the (nu-1)-fold power is `a` itself
+                    _ => pw_i.copy_from_slice(a_i),
+                }
+            }
+            for i in 0..n_atoms {
+                let (head, tail) = s.h.split_at_mut((t + 1) * ma * nf);
+                let h_prev = &head[h_t + i * nf..h_t + (i + 1) * nf];
+                let h_next = &mut tail[i * nf..(i + 1) * nf];
+                h_next.fill(0.0);
+                deg_scale_add(c.l, &p[lt + self.off.mix_res..], h_prev,
+                              h_next);
+                deg_scale_add(
+                    c.l, &p[lt + self.off.mix_a..],
+                    &s.a[(t * ma + i) * nf..(t * ma + i + 1) * nf], h_next,
+                );
+                deg_scale_add(
+                    c.l, &p[lt + self.off.mix_b..],
+                    &s.b[(t * ma + i) * nf..(t * ma + i + 1) * nf], h_next,
+                );
+            }
+        }
+        // --- invariant readout ---
+        let (c_lin, c_quad) =
+            (p[self.off.readout], p[self.off.readout + 1]);
+        let h_t = c.n_layers * ma * nf;
+        let mut energy = 0.0;
+        for i in 0..n_atoms {
+            let h_i = &s.h[h_t + i * nf..h_t + (i + 1) * nf];
+            self.quad.apply_into(h_i, h_i, &mut s.one, &mut s.quad_s);
+            s.inv[i] = s.one[0];
+            energy += p[self.off.bias + species[i]] + c_lin * h_i[0]
+                + c_quad * s.one[0];
+        }
+        energy
+    }
+
+    /// Reverse pass.  ACCUMULATES into `forces` (flat `3 * n_atoms`,
+    /// `F = -dE/dx`) and `gparams` (`n_params`); the caller zeroes them.
+    /// Must run over the scratch a matching [`Model::energy_into`] just
+    /// filled.  Zero allocations in steady state.
+    fn backward(
+        &self, pos: &[[f64; 3]], species: &[usize],
+        edges: &[(usize, usize)], s: &mut ModelScratch,
+        forces: &mut [f64], gparams: &mut [f64],
+    ) {
+        let c = &self.cfg;
+        let (nf, nff, nh2) = (c.nf(), c.nff(), c.l_filter + 1);
+        let (ma, k) = (c.max_atoms, c.n_radial);
+        let n_atoms = pos.len();
+        debug_assert!(forces.len() >= 3 * n_atoms);
+        debug_assert_eq!(gparams.len(), self.params.len());
+        let p = &self.params;
+        let (c_lin, c_quad) =
+            (p[self.off.readout], p[self.off.readout + 1]);
+        // --- readout cotangents ---
+        let h_t = c.n_layers * ma * nf;
+        for i in 0..n_atoms {
+            let h_i = &s.h[h_t + i * nf..h_t + (i + 1) * nf];
+            gparams[self.off.readout] += h_i[0];
+            gparams[self.off.readout + 1] += s.inv[i];
+            gparams[self.off.bias + species[i]] += 1.0;
+            // d inv/dh = 2 h / sqrt(4 pi): the closed form of the
+            // (0, L, L) Gaunt VJP (Y_00 is constant)
+            let g_i = &mut s.g_h[i * nf..(i + 1) * nf];
+            for (gv, hv) in g_i.iter_mut().zip(h_i) {
+                *gv = 2.0 * c_quad * INV_SQRT_4PI * hv;
+            }
+            g_i[0] += c_lin;
+        }
+        // --- layers, top down ---
+        let npow = num_coeffs(c.l_pow());
+        for t in (0..c.n_layers).rev() {
+            let lt = self.off.layer(t);
+            let h_base = t * ma * nf;
+            s.g_hprev[..n_atoms * nf].fill(0.0);
+            s.g_a[..n_atoms * nf].fill(0.0);
+            for i in 0..n_atoms {
+                let g_h_i = &s.g_h[i * nf..(i + 1) * nf];
+                let h_i = &s.h[h_base + i * nf..h_base + (i + 1) * nf];
+                let a_i = &s.a[(t * ma + i) * nf..(t * ma + i + 1) * nf];
+                let b_i = &s.b[(t * ma + i) * nf..(t * ma + i + 1) * nf];
+                deg_dot_add(c.l, g_h_i, h_i,
+                            &mut gparams[lt + self.off.mix_res..
+                                         lt + self.off.mix_res + c.l + 1]);
+                deg_dot_add(c.l, g_h_i, a_i,
+                            &mut gparams[lt + self.off.mix_a..
+                                         lt + self.off.mix_a + c.l + 1]);
+                deg_dot_add(c.l, g_h_i, b_i,
+                            &mut gparams[lt + self.off.mix_b..
+                                         lt + self.off.mix_b + c.l + 1]);
+                deg_scale_add(c.l, &p[lt + self.off.mix_res..], g_h_i,
+                              &mut s.g_hprev[i * nf..(i + 1) * nf]);
+                deg_scale_add(c.l, &p[lt + self.off.mix_a..], g_h_i,
+                              &mut s.g_a[i * nf..(i + 1) * nf]);
+                s.g_b.fill(0.0);
+                deg_scale_add(c.l, &p[lt + self.off.mix_b..], g_h_i,
+                              &mut s.g_b);
+                // many-body VJP: nu * P_L(f_g f_a^{nu-1})
+                self.vjp_mb.apply_into(
+                    &s.g_b,
+                    &s.pw[(t * ma + i) * npow..(t * ma + i + 1) * npow],
+                    &mut s.msg,
+                    &mut s.vjp_mb_s,
+                );
+                let g_a_i =
+                    &mut s.g_a[i * nf..(i + 1) * nf];
+                for (gv, mv) in g_a_i.iter_mut().zip(&s.msg) {
+                    *gv += c.nu as f64 * mv;
+                }
+            }
+            // --- edges: message VJPs + geometry chain to the forces ---
+            for (e, &(i, j)) in edges.iter().enumerate() {
+                let h2 = &s.eh2[(t * c.max_edges + e) * nh2
+                    ..(t * c.max_edges + e + 1) * nh2];
+                let y_e = &s.ey[e * nff..(e + 1) * nff];
+                let gy_e = &s.egy[e * nff..(e + 1) * nff];
+                // rebuild the filter coefficients f_e[lm] = h2[l2] y[lm]
+                for l2 in 0..nh2 {
+                    let base = lm_index(l2, -(l2 as i64));
+                    for m in 0..(2 * l2 + 1) {
+                        s.filt[base + m] = h2[l2] * y_e[base + m];
+                    }
+                }
+                let g_m = &s.g_a[i * nf..(i + 1) * nf];
+                // VJP w.r.t. the source feature h_j: P_L(f_g f_filter)
+                self.vjp_x.apply_into(g_m, &s.filt, &mut s.msg,
+                                      &mut s.vjp_x_s);
+                let g_hj =
+                    &mut s.g_hprev[j * nf..(j + 1) * nf];
+                for (gv, mv) in g_hj.iter_mut().zip(&s.msg) {
+                    *gv += mv;
+                }
+                // VJP w.r.t. the filter: P_Lf(f_g f_hj)
+                self.vjp_f.apply_into(
+                    g_m,
+                    &s.h[h_base + j * nf..h_base + (j + 1) * nf],
+                    &mut s.g_f,
+                    &mut s.vjp_f_s,
+                );
+                // chain through h2 (radial) and y (angular)
+                let rb = &s.erb[e * k..(e + 1) * k];
+                let drb = &s.edrb[e * k..(e + 1) * k];
+                let mut g_r = 0.0;
+                let mut g_d = [0.0f64; 3];
+                for l2 in 0..nh2 {
+                    let base = lm_index(l2, -(l2 as i64));
+                    let mut g_h2 = 0.0;
+                    for m in 0..(2 * l2 + 1) {
+                        g_h2 += s.g_f[base + m] * y_e[base + m];
+                        for ax in 0..3 {
+                            g_d[ax] += h2[l2] * s.g_f[base + m]
+                                * gy_e[base + m][ax];
+                        }
+                    }
+                    let gw = &mut gparams[lt + self.off.w_rad + l2 * k
+                        ..lt + self.off.w_rad + (l2 + 1) * k];
+                    for (gwv, rbv) in gw.iter_mut().zip(rb) {
+                        *gwv += g_h2 * rbv;
+                    }
+                    let w_row = &p[lt + self.off.w_rad + l2 * k
+                        ..lt + self.off.w_rad + (l2 + 1) * k];
+                    g_r += g_h2
+                        * w_row.iter().zip(drb).map(|(w, d)| w * d)
+                            .sum::<f64>();
+                }
+                for ax in 0..3 {
+                    g_d[ax] += g_r * s.eu[e][ax];
+                    // d = pos_i - pos_j and F = -dE/dpos
+                    forces[3 * i + ax] -= g_d[ax];
+                    forces[3 * j + ax] += g_d[ax];
+                }
+            }
+            std::mem::swap(&mut s.g_h, &mut s.g_hprev);
+        }
+        // --- species embedding (scalar channel of h_0) ---
+        for i in 0..n_atoms {
+            gparams[self.off.embed + species[i]] += s.g_h[i * nf];
+        }
+    }
+
+    /// Energy + forces over caller scratch: zero steady-state
+    /// allocations.  `forces` is flat `3 * n_atoms` and is overwritten.
+    pub fn energy_forces_into(
+        &self, pos: &[[f64; 3]], species: &[usize],
+        edges: &[(usize, usize)], forces: &mut [f64],
+        s: &mut ModelScratch,
+    ) -> f64 {
+        let e = self.energy_into(pos, species, edges, s);
+        forces[..3 * pos.len()].fill(0.0);
+        let mut gp = std::mem::take(&mut s.gparams);
+        gp.fill(0.0);
+        self.backward(pos, species, edges, s, forces, &mut gp);
+        s.gparams = gp;
+        e
+    }
+
+    /// Energy + forces + parameter gradient (the trainer's primitive).
+    /// ACCUMULATES into `forces` and `gparams`; the caller zeroes them.
+    pub fn grad_into(
+        &self, pos: &[[f64; 3]], species: &[usize],
+        edges: &[(usize, usize)], forces: &mut [f64],
+        gparams: &mut [f64], s: &mut ModelScratch,
+    ) -> f64 {
+        let e = self.energy_into(pos, species, edges, s);
+        self.backward(pos, species, edges, s, forces, gparams);
+        e
+    }
+
+    /// Convenience forward (builds the neighbor list and a scratch).
+    pub fn energy(&self, pos: &[[f64; 3]], species: &[usize]) -> f64 {
+        let edges = self.build_edges(pos);
+        let mut s = self.scratch();
+        self.energy_into(pos, species, &edges, &mut s)
+    }
+
+    /// Convenience energy + forces (builds the neighbor list and a
+    /// scratch; use the `_into` variants on hot paths).
+    pub fn energy_forces(
+        &self, pos: &[[f64; 3]], species: &[usize],
+    ) -> (f64, Vec<[f64; 3]>) {
+        let edges = self.build_edges(pos);
+        let mut s = self.scratch();
+        let mut flat = vec![0.0; 3 * pos.len()];
+        let e = self.energy_forces_into(pos, species, &edges, &mut flat,
+                                        &mut s);
+        let forces = flat
+            .chunks_exact(3)
+            .map(|c3| [c3[0], c3[1], c3[2]])
+            .collect();
+        (e, forces)
+    }
+
+    // --- serialization (util::json; no serde offline) ---
+
+    /// Checkpoint as a JSON document (config + flat parameters).
+    pub fn to_json(&self) -> Json {
+        let c = &self.cfg;
+        let method = match c.method {
+            ConvMethod::Direct => "direct",
+            ConvMethod::Fft => "fft",
+            ConvMethod::Auto => "auto",
+        };
+        Json::obj(vec![
+            ("config", Json::obj(vec![
+                ("l", Json::Num(c.l as f64)),
+                ("l_filter", Json::Num(c.l_filter as f64)),
+                ("nu", Json::Num(c.nu as f64)),
+                ("n_layers", Json::Num(c.n_layers as f64)),
+                ("n_species", Json::Num(c.n_species as f64)),
+                ("n_radial", Json::Num(c.n_radial as f64)),
+                ("r_cut", Json::Num(c.r_cut)),
+                ("method", Json::Str(method.to_string())),
+                ("max_atoms", Json::Num(c.max_atoms as f64)),
+                ("max_edges", Json::Num(c.max_edges as f64)),
+            ])),
+            ("params", Json::arr_f64(&self.params)),
+        ])
+    }
+
+    /// Rebuild a model from [`Model::to_json`] output.
+    pub fn from_json(doc: &Json) -> Result<Model> {
+        let cj = doc.get("config").ok_or_else(|| err!("missing config"))?;
+        let get = |k: &str| -> Result<usize> {
+            cj.get(k).and_then(Json::as_usize)
+                .ok_or_else(|| err!("config.{k} missing"))
+        };
+        let method = match cj.get("method").and_then(Json::as_str) {
+            Some("direct") => ConvMethod::Direct,
+            Some("fft") => ConvMethod::Fft,
+            _ => ConvMethod::Auto,
+        };
+        let cfg = ModelConfig {
+            l: get("l")?,
+            l_filter: get("l_filter")?,
+            nu: get("nu")?,
+            n_layers: get("n_layers")?,
+            n_species: get("n_species")?,
+            n_radial: get("n_radial")?,
+            r_cut: cj.get("r_cut").and_then(Json::as_f64)
+                .ok_or_else(|| err!("config.r_cut missing"))?,
+            method,
+            max_atoms: get("max_atoms")?,
+            max_edges: get("max_edges")?,
+        };
+        let params = doc
+            .get("params")
+            .and_then(Json::as_f64_vec)
+            .ok_or_else(|| err!("missing params"))?;
+        if params.len() != cfg.n_params() {
+            return Err(err!(
+                "checkpoint has {} params, config wants {}",
+                params.len(), cfg.n_params()
+            ));
+        }
+        Ok(Model::from_params(cfg, params))
+    }
+
+    /// Write a JSON checkpoint to disk.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| err!("checkpoint write {path}: {e}"))
+    }
+
+    /// Load a JSON checkpoint from disk.
+    pub fn load(path: &str) -> Result<Model> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err!("checkpoint read {path}: {e}"))?;
+        let doc = json::parse(&text).map_err(|e| err!("{path}: {e}"))?;
+        Model::from_json(&doc)
+    }
+}
+
+/// One structure by reference, for batched inference.
+#[derive(Clone, Copy)]
+pub struct GraphRef<'a> {
+    pub pos: &'a [[f64; 3]],
+    pub species: &'a [usize],
+    pub edges: &'a [(usize, usize)],
+}
+
+/// Row width of [`energy_forces_batch_par`] output:
+/// `[energy, f_x0, f_y0, f_z0, ...]` padded to the model's atom capacity.
+pub fn batch_row_len(model: &Model) -> usize {
+    1 + 3 * model.cfg.max_atoms
+}
+
+/// Batched energy + forces, graphs sharded across `threads` workers
+/// (`0` = all cores) with ONE scratch per worker
+/// ([`pool::shard_rows_with`]) — the serving path's inference primitive:
+/// steady-state per-graph work is allocation-free and bitwise identical
+/// to the serial loop.  Row `g` of the result is
+/// `[E_g, forces (3 * max_atoms, zero-padded)]`.
+pub fn energy_forces_batch_par(
+    model: &Model, graphs: &[GraphRef<'_>], threads: usize,
+) -> Vec<f64> {
+    let row_len = batch_row_len(model);
+    let mut out = vec![0.0; graphs.len() * row_len];
+    if graphs.is_empty() {
+        return out;
+    }
+    let threads = pool::resolve_threads(threads);
+    pool::shard_rows_with(
+        &mut out,
+        row_len,
+        threads,
+        || model.scratch(),
+        |g, row, scratch| {
+            let gr = &graphs[g];
+            if gr.pos.is_empty() {
+                return;
+            }
+            let (e_slot, f_slot) = row.split_at_mut(1);
+            e_slot[0] = model.energy_forces_into(
+                gr.pos, gr.species, gr.edges,
+                &mut f_slot[..3 * gr.pos.len()], scratch,
+            );
+        },
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::max_abs_diff;
+
+    fn toy(seed: u64, n: usize) -> (Vec<[f64; 3]>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let pos = (0..n)
+            .map(|_| [1.5 * rng.normal(), 1.5 * rng.normal(),
+                      1.5 * rng.normal()])
+            .collect();
+        let species = (0..n).map(|_| rng.below(3)).collect();
+        (pos, species)
+    }
+
+    #[test]
+    fn param_count_matches_layout() {
+        let cfg = ModelConfig::default();
+        let m = Model::new(cfg, 0);
+        assert_eq!(m.params.len(), cfg.n_params());
+        // S=3 embed + 3 bias + 2 layers * (3*6 w_rad + 3*3 mixes) + 2
+        assert_eq!(cfg.n_params(), 6 + 2 * (18 + 9) + 2);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let m = Model::new(ModelConfig { nu: 3, ..Default::default() }, 5);
+        let m2 = Model::from_json(&m.to_json()).unwrap();
+        assert_eq!(m.cfg, m2.cfg);
+        assert_eq!(m.params, m2.params);
+        let (pos, species) = toy(1, 5);
+        let (e1, f1) = m.energy_forces(&pos, &species);
+        let (e2, f2) = m2.energy_forces(&pos, &species);
+        assert_eq!(e1, e2);
+        assert_eq!(f1, f2);
+    }
+
+    #[test]
+    fn energy_into_matches_energy_forces_into() {
+        let m = Model::new(ModelConfig::default(), 2);
+        let (pos, species) = toy(3, 6);
+        let edges = m.build_edges(&pos);
+        let mut s = m.scratch();
+        let e1 = m.energy_into(&pos, &species, &edges, &mut s);
+        let mut f = vec![0.0; 3 * pos.len()];
+        let e2 = m.energy_forces_into(&pos, &species, &edges, &mut f,
+                                      &mut s);
+        assert_eq!(e1, e2);
+        assert!(f.iter().any(|v| v.abs() > 1e-9), "forces all zero");
+        // Newton's third law: internal forces sum to zero
+        for ax in 0..3 {
+            let tot: f64 = f.chunks_exact(3).map(|c| c[ax]).sum();
+            assert!(tot.abs() < 1e-9, "net force {tot} on axis {ax}");
+        }
+    }
+
+    #[test]
+    fn batch_par_matches_serial() {
+        let m = Model::new(ModelConfig::default(), 7);
+        let structures: Vec<_> = (0..5).map(|k| toy(40 + k, 6)).collect();
+        let edge_lists: Vec<_> = structures
+            .iter()
+            .map(|(pos, _)| m.build_edges(pos))
+            .collect();
+        let graphs: Vec<GraphRef<'_>> = structures
+            .iter()
+            .zip(&edge_lists)
+            .map(|((pos, species), edges)| GraphRef {
+                pos, species, edges,
+            })
+            .collect();
+        let serial = energy_forces_batch_par(&m, &graphs, 1);
+        for threads in [2usize, 4, 0] {
+            let par = energy_forces_batch_par(&m, &graphs, threads);
+            assert!(max_abs_diff(&serial, &par) == 0.0,
+                    "threads={threads}");
+        }
+        // rows decode to the per-graph convenience results
+        let row_len = batch_row_len(&m);
+        for (g, (pos, species)) in structures.iter().enumerate() {
+            let (e, f) = m.energy_forces(pos, species);
+            assert!((serial[g * row_len] - e).abs() < 1e-12);
+            for (i, fi) in f.iter().enumerate() {
+                for ax in 0..3 {
+                    assert!(
+                        (serial[g * row_len + 1 + 3 * i + ax] - fi[ax])
+                            .abs() < 1e-12
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn direct_and_fft_methods_agree() {
+        let (pos, species) = toy(9, 6);
+        let mut results = Vec::new();
+        for method in [ConvMethod::Direct, ConvMethod::Fft] {
+            let m = Model::new(
+                ModelConfig { method, ..Default::default() }, 11);
+            results.push(m.energy_forces(&pos, &species));
+        }
+        let (e_d, f_d) = &results[0];
+        let (e_f, f_f) = &results[1];
+        assert!((e_d - e_f).abs() < 1e-8 * (1.0 + e_d.abs()));
+        for (a, b) in f_d.iter().zip(f_f) {
+            for ax in 0..3 {
+                assert!((a[ax] - b[ax]).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn isolated_atoms_have_bias_only_energy() {
+        let m = Model::new(ModelConfig::default(), 13);
+        // two atoms far outside the cutoff: no edges, a = b = 0, and the
+        // energy reduces to biases + readout of the bare embedding
+        let pos = vec![[0.0; 3], [100.0, 0.0, 0.0]];
+        let species = vec![0usize, 1];
+        let (e, f) = m.energy_forces(&pos, &species);
+        assert!(f.iter().all(|v| v.iter().all(|x| x.abs() < 1e-12)));
+        let p = &m.params;
+        let off = Offsets::new(&m.cfg);
+        let mut want = 0.0;
+        for &sp in &species {
+            let mut h0 = p[off.embed + sp];
+            for t in 0..m.cfg.n_layers {
+                h0 *= p[off.layer(t) + off.mix_res];
+            }
+            want += p[off.bias + sp] + p[off.readout] * h0
+                + p[off.readout + 1] * h0 * h0 * INV_SQRT_4PI;
+        }
+        assert!((e - want).abs() < 1e-10, "{e} vs {want}");
+    }
+}

@@ -1,0 +1,107 @@
+//! Radial basis for the edge embedding: Gaussian RBFs under a smooth
+//! polynomial cutoff envelope.
+//!
+//! `rb_k(r) = exp(-beta (r - mu_k)^2) * (1 - (r/rc)^2)^2` with centers
+//! `mu_k` spread evenly over `[0, rc]` and `beta = (K/rc)^2`.  Both the
+//! value and the derivative vanish at the cutoff, so the learned energy
+//! stays C^1 as atoms cross the neighbor-list boundary — without that,
+//! the finite-difference force checks (and MD energy conservation) would
+//! see kinks every time an edge appears or disappears.
+//!
+//! Mirrored bit-for-bit by `python/compile/model_golden.py::radial_basis`.
+
+/// Gaussian RBF bank with a smooth cutoff.
+#[derive(Clone, Debug)]
+pub struct RadialBasis {
+    pub n: usize,
+    pub r_cut: f64,
+    centers: Vec<f64>,
+    beta: f64,
+}
+
+impl RadialBasis {
+    pub fn new(n: usize, r_cut: f64) -> RadialBasis {
+        assert!(n >= 2, "radial basis needs >= 2 centers");
+        assert!(r_cut > 0.0);
+        let centers = (0..n)
+            .map(|k| k as f64 * r_cut / (n - 1) as f64)
+            .collect();
+        RadialBasis { n, r_cut, centers, beta: (n as f64 / r_cut).powi(2) }
+    }
+
+    /// Values and d/dr of every basis function at `r`, into caller
+    /// buffers of `n` entries each (allocation-free).
+    pub fn eval_into(&self, r: f64, val: &mut [f64], dval: &mut [f64]) {
+        debug_assert!(val.len() >= self.n && dval.len() >= self.n);
+        if r >= self.r_cut {
+            val[..self.n].fill(0.0);
+            dval[..self.n].fill(0.0);
+            return;
+        }
+        let t = r / self.r_cut;
+        let env = (1.0 - t * t) * (1.0 - t * t);
+        let denv = -4.0 * t * (1.0 - t * t) / self.r_cut;
+        for k in 0..self.n {
+            let dr = r - self.centers[k];
+            let g = (-self.beta * dr * dr).exp();
+            let dg = -2.0 * self.beta * dr * g;
+            val[k] = g * env;
+            dval[k] = dg * env + g * denv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derivative_matches_finite_differences() {
+        let rb = RadialBasis::new(6, 3.5);
+        let h = 1e-6;
+        let mut v = vec![0.0; 6];
+        let mut d = vec![0.0; 6];
+        let mut vp = vec![0.0; 6];
+        let mut vm = vec![0.0; 6];
+        let mut scratch = vec![0.0; 6];
+        for r in [0.1, 0.9, 1.7, 2.6, 3.3] {
+            rb.eval_into(r, &mut v, &mut d);
+            rb.eval_into(r + h, &mut vp, &mut scratch);
+            rb.eval_into(r - h, &mut vm, &mut scratch);
+            for k in 0..6 {
+                let fd = (vp[k] - vm[k]) / (2.0 * h);
+                assert!(
+                    (d[k] - fd).abs() < 1e-6 * (1.0 + fd.abs()),
+                    "r={r} k={k}: {} vs {fd}",
+                    d[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn smooth_at_cutoff() {
+        let rb = RadialBasis::new(5, 2.0);
+        let mut v = vec![0.0; 5];
+        let mut d = vec![0.0; 5];
+        rb.eval_into(1.999999, &mut v, &mut d);
+        // value and slope both -> 0 at rc (C^1 across the cutoff)
+        assert!(v.iter().all(|x| x.abs() < 1e-9));
+        assert!(d.iter().all(|x| x.abs() < 1e-4));
+        rb.eval_into(2.5, &mut v, &mut d);
+        assert!(v.iter().all(|&x| x == 0.0));
+        assert!(d.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn covers_the_range() {
+        let rb = RadialBasis::new(8, 4.0);
+        let mut v = vec![0.0; 8];
+        let mut d = vec![0.0; 8];
+        for i in 1..20 {
+            let r = 3.6 * i as f64 / 20.0;
+            rb.eval_into(r, &mut v, &mut d);
+            assert!(v.iter().cloned().fold(0.0, f64::max) > 1e-3, "r={r}");
+        }
+    }
+}

@@ -77,6 +77,16 @@ pub fn lstsq(a: &[f64], b: &[f64], m: usize, n: usize) -> Result<Vec<f64>, Strin
 /// C = A (m x k) * B (k x n), row-major.
 pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
     let mut c = vec![0.0; m * n];
+    matmul_into(a, b, m, k, n, &mut c);
+    c
+}
+
+/// [`matmul`] into a caller buffer of `m * n` (allocation-free).
+pub fn matmul_into(
+    a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f64],
+) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
+    c[..m * n].fill(0.0);
     for i in 0..m {
         for p in 0..k {
             let aip = a[i * k + p];
@@ -90,17 +100,22 @@ pub fn matmul(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
             }
         }
     }
-    c
 }
 
 /// y = A (m x n) * x.
 pub fn matvec(a: &[f64], x: &[f64], m: usize, n: usize) -> Vec<f64> {
     let mut y = vec![0.0; m];
+    matvec_into(a, x, m, n, &mut y);
+    y
+}
+
+/// [`matvec`] into a caller buffer of `m` entries (allocation-free).
+pub fn matvec_into(a: &[f64], x: &[f64], m: usize, n: usize, y: &mut [f64]) {
+    debug_assert!(a.len() >= m * n && x.len() >= n && y.len() >= m);
     for i in 0..m {
         let row = &a[i * n..(i + 1) * n];
         y[i] = row.iter().zip(x).map(|(p, q)| p * q).sum();
     }
-    y
 }
 
 /// Transpose of an m x n row-major matrix.

@@ -13,6 +13,12 @@ pub mod sh;
 pub mod wigner;
 
 pub use gaunt::{cg_tensor_real, gaunt_tensor_real};
-pub use rotation::{align_to_y, wigner_d_real, wigner_d_real_block, Rot3};
-pub use sh::{assoc_legendre, real_sh_all_xyz, real_sh_angular, sh_norm};
+pub use rotation::{
+    align_to_y, wigner_d_real, wigner_d_real_block, wigner_d_real_block_into,
+    wigner_d_real_into, Rot3, WignerScratch,
+};
+pub use sh::{
+    assoc_legendre, real_sh_all_xyz, real_sh_all_xyz_into,
+    real_sh_angular, real_sh_grad_xyz_into, sh_norm,
+};
 pub use wigner::{clebsch_gordan, gaunt_complex, wigner_3j};

@@ -1,7 +1,7 @@
 //! 3D rotations, Euler angles, and real Wigner-D matrices.
 
 use super::linalg;
-use super::sh::real_sh_all_xyz;
+use super::sh::{real_sh_all_xyz, real_sh_all_xyz_into};
 use crate::util::rng::Rng;
 use crate::{lm_index, num_coeffs};
 
@@ -211,38 +211,108 @@ fn d_fit(l: usize) -> std::sync::Arc<DFit> {
     fit
 }
 
+/// Caller-owned scratch for the allocation-free Wigner-D evaluations:
+/// sized once for a maximum degree, reused for every rotation.  One per
+/// worker thread (the model's conv layer holds one per
+/// [`crate::tp::escn::GauntConvScratch`]).
+pub struct WignerScratch {
+    l_max: usize,
+    /// full SH sweep at one sample direction
+    sh: Vec<f64>,
+    /// rotated sample matrix (npts x dim)
+    yr: Vec<f64>,
+    /// pinv * yr product (dim x dim, pre-transpose)
+    m: Vec<f64>,
+    /// per-degree block staging for the block-diagonal assembly
+    blk: Vec<f64>,
+}
+
+impl WignerScratch {
+    /// Scratch serving every `wigner_d_real_into` call with `l <= l_max`.
+    pub fn new(l_max: usize) -> WignerScratch {
+        let dim = 2 * l_max + 1;
+        // size from the authoritative fit (which this also pre-warms)
+        // rather than duplicating its overdetermination margin; sample
+        // counts grow with l, so the l_max fit bounds every smaller l
+        let npts = d_fit(l_max).pts.len();
+        WignerScratch {
+            l_max,
+            sh: vec![0.0; num_coeffs(l_max)],
+            yr: vec![0.0; npts * dim],
+            m: vec![0.0; dim * dim],
+            blk: vec![0.0; dim * dim],
+        }
+    }
+}
+
 /// Real Wigner-D matrix D^l(R) with Y^l(R r) = D^l(R) Y^l(r), solved to
 /// machine precision against cached sample directions.
 pub fn wigner_d_real(l: usize, rot: &Rot3) -> Vec<f64> {
     let dim = 2 * l + 1;
+    let mut out = vec![0.0; dim * dim];
+    let mut ws = WignerScratch::new(l);
+    wigner_d_real_into(l, rot, &mut out, &mut ws);
+    out
+}
+
+/// [`wigner_d_real`] into a caller buffer of `(2l+1)^2`: allocation-free
+/// once the per-degree fit cache is warm (first call per `l` builds it).
+pub fn wigner_d_real_into(
+    l: usize, rot: &Rot3, out: &mut [f64], ws: &mut WignerScratch,
+) {
+    let dim = 2 * l + 1;
+    debug_assert!(l <= ws.l_max, "WignerScratch sized for l_max {}", ws.l_max);
+    debug_assert!(out.len() >= dim * dim);
     let fit = d_fit(l);
     let npts = fit.pts.len();
     let base = lm_index(l, -(l as i64));
-    let mut yr = vec![0.0; npts * dim];
+    let sh = &mut ws.sh[..num_coeffs(l)];
+    let yr = &mut ws.yr[..npts * dim];
     for (p, u) in fit.pts.iter().enumerate() {
-        let b = real_sh_all_xyz(l, rot.apply(*u));
-        yr[p * dim..(p + 1) * dim].copy_from_slice(&b[base..base + dim]);
+        real_sh_all_xyz_into(l, rot.apply(*u), sh);
+        yr[p * dim..(p + 1) * dim].copy_from_slice(&sh[base..base + dim]);
     }
     // M = pinv (dim x npts) * Yr (npts x dim); D = M^T
-    let m = linalg::matmul(&fit.pinv, &yr, dim, npts, dim);
-    linalg::transpose(&m, dim, dim)
+    let m = &mut ws.m[..dim * dim];
+    linalg::matmul_into(&fit.pinv, yr, dim, npts, dim, m);
+    for i in 0..dim {
+        for j in 0..dim {
+            out[j * dim + i] = m[i * dim + j];
+        }
+    }
 }
 
 /// Block-diagonal real Wigner-D on a full (L+1)^2 feature, row-major.
 pub fn wigner_d_real_block(l_max: usize, rot: &Rot3) -> Vec<f64> {
     let n = num_coeffs(l_max);
     let mut out = vec![0.0; n * n];
+    let mut ws = WignerScratch::new(l_max);
+    wigner_d_real_block_into(l_max, rot, &mut out, &mut ws);
+    out
+}
+
+/// [`wigner_d_real_block`] into a caller buffer of `(L+1)^2 x (L+1)^2`:
+/// allocation-free once the fit caches are warm.
+pub fn wigner_d_real_block_into(
+    l_max: usize, rot: &Rot3, out: &mut [f64], ws: &mut WignerScratch,
+) {
+    let n = num_coeffs(l_max);
+    debug_assert!(out.len() >= n * n);
+    out[..n * n].fill(0.0);
     for l in 0..=l_max {
-        let d = wigner_d_real(l, rot);
         let dim = 2 * l + 1;
+        // stage the degree block in ws.blk, then scatter; the borrow is
+        // re-taken per degree so ws.m/ws.yr stay usable inside
+        let mut blk = std::mem::take(&mut ws.blk);
+        wigner_d_real_into(l, rot, &mut blk, ws);
         let base = lm_index(l, -(l as i64));
         for i in 0..dim {
             for j in 0..dim {
-                out[(base + i) * n + (base + j)] = d[i * dim + j];
+                out[(base + i) * n + (base + j)] = blk[i * dim + j];
             }
         }
+        ws.blk = blk;
     }
-    out
 }
 
 /// Apply a block Wigner-D (row-major n x n) to a feature vector.
@@ -356,6 +426,30 @@ mod tests {
                     assert!((p[i * dim + j] - want).abs() < 1e-9);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating() {
+        let mut rng = Rng::new(21);
+        let l_max = 3;
+        let n = num_coeffs(l_max);
+        let mut ws = WignerScratch::new(l_max);
+        for _ in 0..4 {
+            let rot = Rot3::random(&mut rng);
+            // per-degree
+            for l in 0..=l_max {
+                let dim = 2 * l + 1;
+                let want = wigner_d_real(l, &rot);
+                let mut got = vec![0.0; dim * dim];
+                wigner_d_real_into(l, &rot, &mut got, &mut ws);
+                assert_eq!(want, got, "l={l}");
+            }
+            // block
+            let want = wigner_d_real_block(l_max, &rot);
+            let mut got = vec![1.0; n * n]; // dirty buffer: must be cleared
+            wigner_d_real_block_into(l_max, &rot, &mut got, &mut ws);
+            assert_eq!(want, got);
         }
     }
 

@@ -68,17 +68,118 @@ pub fn real_sh_angular(l: usize, m: i64, theta: f64, phi: f64) -> f64 {
 
 /// All real SH up to degree L at a Cartesian direction (normalized inside).
 pub fn real_sh_all_xyz(l_max: usize, r: [f64; 3]) -> Vec<f64> {
+    let mut out = vec![0.0; num_coeffs(l_max)];
+    real_sh_all_xyz_into(l_max, r, &mut out);
+    out
+}
+
+/// [`real_sh_all_xyz`] into a caller buffer of `num_coeffs(l_max)`:
+/// allocation-free (the hot-path variant the model forward and the
+/// allocation-free Wigner-D evaluation use).
+pub fn real_sh_all_xyz_into(l_max: usize, r: [f64; 3], out: &mut [f64]) {
+    debug_assert!(out.len() >= num_coeffs(l_max));
     let n = (r[0] * r[0] + r[1] * r[1] + r[2] * r[2]).sqrt().max(1e-30);
     let u = [r[0] / n, r[1] / n, r[2] / n];
     let theta = u[2].clamp(-1.0, 1.0).acos();
     let phi = u[1].atan2(u[0]);
-    let mut out = vec![0.0; num_coeffs(l_max)];
     for l in 0..=l_max {
         for m in -(l as i64)..=(l as i64) {
             out[lm_index(l, m)] = real_sh_angular(l, m, theta, phi);
         }
     }
-    out
+}
+
+/// Values AND Cartesian gradients of every real SH composed with the
+/// direction normalization: `val[(l,m)] = Y_lm(d/|d|)` and
+/// `grad[(l,m)] = d/dd Y_lm(d/|d|)` — the derivative the force backward
+/// pass needs through the edge embedding.
+///
+/// Pole-free evaluation: with our conventions (orthonormal real SH, no
+/// Condon-Shortley phase)
+///
+/// ```text
+///   Y_{l,+m} = N sqrt(2) T_l^m(z) C_m(x, y)   (m > 0)
+///   Y_{l,0}  = N T_l^0(z)
+///   Y_{l,-m} = N sqrt(2) T_l^m(z) S_m(x, y)   (m > 0)
+/// ```
+///
+/// on the unit sphere, where `C_m + i S_m = (x + i y)^m` and
+/// `T_l^m(z) = P_l^m(z) / (1 - z^2)^{m/2}` is a *polynomial* obeying the
+/// same upward recurrence as `P_l^m` (seeded by `T_m^m = (2m-1)!!`).
+/// Every factor is polynomial in the Cartesian components, so the
+/// ambient gradient is exact and finite everywhere — including the +-z
+/// poles where the angular (theta, phi) form is singular.  The gradient
+/// w.r.t. the unnormalized displacement follows from the projection
+/// `(I - u u^T)/r`.  Validated against central differences by
+/// `python/compile/model_golden.py --check` and `tests/grad_check.rs`.
+pub fn real_sh_grad_xyz_into(
+    l_max: usize, d: [f64; 3], val: &mut [f64], grad: &mut [[f64; 3]],
+) {
+    let nc = num_coeffs(l_max);
+    debug_assert!(val.len() >= nc && grad.len() >= nc);
+    let r = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt().max(1e-30);
+    let u = [d[0] / r, d[1] / r, d[2] / r];
+    let (x, y, z) = (u[0], u[1], u[2]);
+    // C_m, S_m (and their m-1 predecessors for the x/y derivatives)
+    let (mut cm, mut sm) = (1.0f64, 0.0f64);
+    let (mut cm1, mut sm1) = (0.0f64, 0.0f64);
+    let mut dfact = 1.0f64; // (2m-1)!!
+    for m in 0..=l_max {
+        if m > 0 {
+            cm1 = cm;
+            sm1 = sm;
+            let c_next = cm * x - sm * y;
+            sm = cm * y + sm * x;
+            cm = c_next;
+            dfact *= (2 * m - 1) as f64;
+        }
+        // T_l^m recurrence in l (same as assoc_legendre's, divided by
+        // sin^m theta), carried with its z-derivative
+        let (mut t_prev, mut td_prev) = (0.0f64, 0.0f64);
+        let (mut t, mut td) = (dfact, 0.0f64);
+        for l in m..=l_max {
+            if l > m {
+                let (t_next, td_next) = if l == m + 1 {
+                    (z * (2 * m + 1) as f64 * t, (2 * m + 1) as f64 * t)
+                } else {
+                    let a = (2 * l - 1) as f64;
+                    let b = (l + m - 1) as f64;
+                    let c = (l - m) as f64;
+                    (
+                        (z * a * t - b * t_prev) / c,
+                        (a * (t + z * td) - b * td_prev) / c,
+                    )
+                };
+                t_prev = t;
+                td_prev = td;
+                t = t_next;
+                td = td_next;
+            }
+            let pre = sh_norm(l, m as i64)
+                * if m > 0 { std::f64::consts::SQRT_2 } else { 1.0 };
+            let mf = m as f64;
+            // (value, ambient dF at u) -> project through (I - u u^T)/r
+            let mut emit = |idx: usize, plane: f64, df: [f64; 3]| {
+                val[idx] = pre * t * plane;
+                let dot = df[0] * u[0] + df[1] * u[1] + df[2] * u[2];
+                for k in 0..3 {
+                    grad[idx][k] = pre * (df[k] - dot * u[k]) / r;
+                }
+            };
+            emit(
+                lm_index(l, m as i64),
+                cm,
+                [t * mf * cm1, -t * mf * sm1, td * cm],
+            );
+            if m > 0 {
+                emit(
+                    lm_index(l, -(m as i64)),
+                    sm,
+                    [t * mf * sm1, t * mf * cm1, td * sm],
+                );
+            }
+        }
+    }
 }
 
 /// All real SH up to degree L at spherical coordinates.
@@ -173,6 +274,83 @@ mod tests {
                 assert!((b[i] - sign * a[i]).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn grad_xyz_matches_values_and_finite_differences() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(17);
+        let l_max = 4;
+        let n = num_coeffs(l_max);
+        let h = 1e-6;
+        for _ in 0..12 {
+            let scale = rng.uniform(0.4, 2.5);
+            let d = [
+                scale * rng.normal(),
+                scale * rng.normal(),
+                scale * rng.normal(),
+            ];
+            let mut val = vec![0.0; n];
+            let mut grad = vec![[0.0; 3]; n];
+            real_sh_grad_xyz_into(l_max, d, &mut val, &mut grad);
+            // values must agree with the angular evaluation exactly
+            let want = real_sh_all_xyz(l_max, d);
+            for k in 0..n {
+                assert!((val[k] - want[k]).abs() < 1e-11, "value {k}");
+            }
+            // gradient vs central differences of the angular form
+            for ax in 0..3 {
+                let mut dp = d;
+                dp[ax] += h;
+                let mut dm = d;
+                dm[ax] -= h;
+                let yp = real_sh_all_xyz(l_max, dp);
+                let ym = real_sh_all_xyz(l_max, dm);
+                for k in 0..n {
+                    let fd = (yp[k] - ym[k]) / (2.0 * h);
+                    assert!(
+                        (grad[k][ax] - fd).abs() < 1e-6 * (1.0 + fd.abs()),
+                        "coeff {k} axis {ax}: {} vs fd {}",
+                        grad[k][ax],
+                        fd
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grad_xyz_finite_at_poles() {
+        // the angular form is singular at the poles; the polynomial
+        // factorization must not be
+        let n = num_coeffs(4);
+        for d in [[0.0, 0.0, 1.7], [0.0, 0.0, -2.1], [1e-12, 0.0, 1.0]] {
+            let mut val = vec![0.0; n];
+            let mut grad = vec![[0.0; 3]; n];
+            real_sh_grad_xyz_into(4, d, &mut val, &mut grad);
+            assert!(val.iter().all(|v| v.is_finite()));
+            assert!(grad.iter().all(|g| g.iter().all(|v| v.is_finite())));
+        }
+        // directional check at a near-pole direction: gradients along z
+        // of Y_{1,0} = c * z/r: d/dz (z/r) at (0,0,r) is 0
+        let mut val = vec![0.0; num_coeffs(1)];
+        let mut grad = vec![[0.0; 3]; num_coeffs(1)];
+        real_sh_grad_xyz_into(1, [0.0, 0.0, 2.0], &mut val, &mut grad);
+        assert!(grad[2][2].abs() < 1e-14);
+        // while d/dx (x/r) = 1/r there for Y_{1,1}
+        let c = (3.0 / (4.0 * std::f64::consts::PI)).sqrt();
+        assert!((grad[3][0] - c / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn into_variant_matches_allocating() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let d = [rng.normal(), rng.normal(), rng.normal()];
+        let want = real_sh_all_xyz(3, d);
+        let mut got = vec![0.0; num_coeffs(3)];
+        real_sh_all_xyz_into(3, d, &mut got);
+        assert_eq!(want, got);
     }
 
     #[test]

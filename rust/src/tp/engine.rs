@@ -280,8 +280,9 @@ pub fn cg_apply_batch_par(
 /// with shared per-degree filter weights `h2`, through the plan's cached
 /// aligned-filter spectra.  Each worker owns one
 /// [`GauntConvScratch`](crate::tp::escn::GauntConvScratch), so the
-/// aligned-frame contraction is allocation-free per row (the per-edge
-/// Wigner rotation blocks still allocate in the so3 layer).
+/// aligned-frame contraction AND the per-edge Wigner rotation round
+/// trip are allocation-free per row (only the per-row output `Vec` of
+/// `apply_with` remains).
 pub fn gaunt_conv_apply_batch_par(
     plan: &GauntConvPlan, x: &[f64], dirs: &[[f64; 3]], h2: &[f64],
     threads: usize,

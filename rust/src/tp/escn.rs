@@ -18,9 +18,13 @@
 //! differ by a fixed frame change and are operationally identical).
 
 use crate::so3::gaunt::cg_tensor_real;
-use crate::so3::rotation::{align_to_y, wigner_d_real_block, Rot3};
+use crate::so3::rotation::{
+    align_to_y, wigner_d_real_block, wigner_d_real_block_into, Rot3,
+    WignerScratch,
+};
 use crate::so3::sh::{real_sh_all_xyz, sh_norm};
-use crate::so3::linalg::matvec;
+use crate::so3::linalg::{matvec, matvec_into};
+use crate::tp::gaunt::ConvMethod;
 use crate::fourier::complex::C64;
 use crate::fourier::plan::{ConvPlan, ConvScratch};
 use crate::fourier::tables::{f2sh_contract, sh2f_panels, theta_fourier,
@@ -164,8 +168,10 @@ pub const GAUNT_CONV_FFT_CROSSOVER: usize = 36;
 /// thread.  Direct-sweep buffers are sized up front; the FFT-path
 /// workspaces grow on the first FFT-path call and are never resized
 /// after, so steady state is allocation-free on either path.  The
-/// rotation round trip of the full `apply` still allocates its Wigner
-/// blocks (so3 layer).
+/// rotation round trip ([`GauntConvPlan::apply_full_into`]) reuses the
+/// Wigner-D buffers held here, so the FULL per-edge convolution —
+/// alignment, aligned contraction, inverse rotation — is allocation-free
+/// once the per-degree Wigner fit caches are warm.
 pub struct GauntConvScratch {
     /// sh2f staging
     w: Vec<C64>,
@@ -181,6 +187,14 @@ pub struct GauntConvScratch {
     prof: Vec<f64>,
     /// planned-convolution workspace
     conv: ConvScratch,
+    /// block Wigner-D staging (max of input/output block sizes)
+    d_blk: Vec<f64>,
+    /// rotated input feature
+    x_rot: Vec<f64>,
+    /// aligned-frame output feature
+    y_rot: Vec<f64>,
+    /// Wigner-D evaluation workspace
+    wig: WignerScratch,
 }
 
 /// Gaunt-accelerated equivariant convolution (paper Sec. 3.3).
@@ -262,6 +276,9 @@ impl GauntConvPlan {
         let n1 = 2 * self.l_in + 1;
         let nf = 2 * self.l_filter + 1;
         let nu3 = 2 * self.n_grid + 1;
+        let n_in = num_coeffs(self.l_in);
+        let n_out = num_coeffs(self.l_out);
+        let n_blk = (n_in * n_in).max(n_out * n_out);
         GauntConvScratch {
             w: vec![C64::default(); nl * nl],
             u1: vec![C64::default(); n1 * n1],
@@ -270,6 +287,10 @@ impl GauntConvPlan {
             f1: Vec::new(),
             prof: Vec::new(),
             conv: ConvScratch::empty(),
+            d_blk: vec![0.0; n_blk],
+            x_rot: vec![0.0; n_in],
+            y_rot: vec![0.0; n_out],
+            wig: WignerScratch::new(self.l_in.max(self.l_out)),
         }
     }
 
@@ -410,22 +431,58 @@ impl GauntConvPlan {
         self.apply_with(x, dir, h2, &mut scratch)
     }
 
-    /// [`GauntConvPlan::apply`] over caller scratch: the aligned-frame
-    /// contraction reuses the scratch; the Wigner rotation blocks are
-    /// still allocated per call (so3 layer).
+    /// [`GauntConvPlan::apply`] over caller scratch (crossover-dispatched
+    /// aligned backend).
     pub fn apply_with(
         &self, x: &[f64], dir: [f64; 3], h2: &[f64],
         scratch: &mut GauntConvScratch,
     ) -> Vec<f64> {
+        let mut out = vec![0.0; num_coeffs(self.l_out)];
+        self.apply_full_into(x, dir, h2, ConvMethod::Auto, &mut out, scratch);
+        out
+    }
+
+    /// The FULL edge convolution — alignment rotation, aligned-frame
+    /// contraction, inverse rotation — over caller scratch, with zero
+    /// steady-state allocations (the Wigner rotation blocks now live in
+    /// the scratch; the per-degree fit caches are built on first use).
+    ///
+    /// `method` picks the aligned backend: `Direct` forces the
+    /// single-column sweep, `Fft` the cached-spectrum FFT path, `Auto`
+    /// the [`GAUNT_CONV_FFT_CROSSOVER`] dispatch.  This is the model
+    /// layer's per-edge message primitive.
+    pub fn apply_full_into(
+        &self, x: &[f64], dir: [f64; 3], h2: &[f64], method: ConvMethod,
+        out: &mut [f64], scratch: &mut GauntConvScratch,
+    ) {
         let rot = align_to_z(dir);
-        let d_in = wigner_d_real_block(self.l_in, &rot);
         let n_in = num_coeffs(self.l_in);
-        let x_rot = matvec(&d_in, x, n_in, n_in);
-        let mut y_rot = vec![0.0; num_coeffs(self.l_out)];
-        self.apply_aligned_into(&x_rot, h2, &mut y_rot, scratch);
-        let d_out = wigner_d_real_block(self.l_out, &rot.transpose());
         let n_out = num_coeffs(self.l_out);
-        matvec(&d_out, &y_rot, n_out, n_out)
+        // take the rotation buffers out so the aligned `_into` calls can
+        // borrow the rest of the scratch (swap, not allocation)
+        let mut d_blk = std::mem::take(&mut scratch.d_blk);
+        let mut x_rot = std::mem::take(&mut scratch.x_rot);
+        let mut y_rot = std::mem::take(&mut scratch.y_rot);
+        wigner_d_real_block_into(self.l_in, &rot, &mut d_blk,
+                                 &mut scratch.wig);
+        matvec_into(&d_blk, x, n_in, n_in, &mut x_rot);
+        match method {
+            ConvMethod::Direct => {
+                self.apply_aligned_direct_into(&x_rot, h2, &mut y_rot, scratch)
+            }
+            ConvMethod::Fft => {
+                self.apply_aligned_fft_into(&x_rot, h2, &mut y_rot, scratch)
+            }
+            ConvMethod::Auto => {
+                self.apply_aligned_into(&x_rot, h2, &mut y_rot, scratch)
+            }
+        }
+        wigner_d_real_block_into(self.l_out, &rot.transpose(), &mut d_blk,
+                                 &mut scratch.wig);
+        matvec_into(&d_blk, &y_rot, n_out, n_out, &mut out[..n_out]);
+        scratch.d_blk = d_blk;
+        scratch.x_rot = x_rot;
+        scratch.y_rot = y_rot;
     }
 }
 
@@ -575,6 +632,31 @@ mod tests {
                     "({li},{lf},{lo}): {}", max_abs_diff(&a, &b));
             let want = conv_reference_gaunt(&x, li, [0.0, 0.0, 1.0], lf, lo, &h2);
             assert!(max_abs_diff(&b, &want) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn apply_full_into_matches_reference_for_both_methods() {
+        let (li, lf, lo) = (2usize, 2usize, 2usize);
+        let plan = GauntConvPlan::new(li, lf, lo);
+        let mut rng = Rng::new(6);
+        let mut scratch = plan.scratch();
+        for _ in 0..4 {
+            let x = rng.normals(num_coeffs(li));
+            let dir = [rng.normal(), rng.normal(), rng.normal()];
+            let h2: Vec<f64> = (0..=lf).map(|_| rng.normal()).collect();
+            let want = conv_reference_gaunt(&x, li, dir, lf, lo, &h2);
+            let mut out = vec![0.0; num_coeffs(lo)];
+            for method in [ConvMethod::Direct, ConvMethod::Fft,
+                           ConvMethod::Auto] {
+                plan.apply_full_into(&x, dir, &h2, method, &mut out,
+                                     &mut scratch);
+                assert!(max_abs_diff(&out, &want) < 1e-8,
+                        "{method:?}: {}", max_abs_diff(&out, &want));
+            }
+            // and the Vec-returning wrapper stays pinned to the same result
+            let via_with = plan.apply_with(&x, dir, &h2, &mut scratch);
+            assert!(max_abs_diff(&via_with, &want) < 1e-8);
         }
     }
 

@@ -41,6 +41,7 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 
 use std::sync::Mutex;
 
+use gaunt_tp::model::{Model, ModelConfig};
 use gaunt_tp::num_coeffs;
 use gaunt_tp::tp::{ConvMethod, GauntConvPlan, GauntPlan, ManyBodyPlan};
 use gaunt_tp::util::rng::Rng;
@@ -130,6 +131,50 @@ fn gaunt_hot_path_steady_state_is_allocation_free() {
         assert_eq!(
             delta, 0,
             "many-body planned pipeline: {delta} steady-state allocations"
+        );
+    }
+}
+
+/// The FULL model inference path — edge embedding, aligned-filter Gaunt
+/// conv (with its Wigner rotation round trip), many-body update,
+/// readout, AND the complete force backward pass — must be
+/// allocation-free per call once warm, for both conv backends.  This is
+/// the serving-path claim: `pool::shard_rows_with` gives each worker one
+/// [`ModelScratch`], so steady-state batched inference allocates
+/// nothing per graph.
+#[test]
+fn model_forward_and_forces_steady_state_are_allocation_free() {
+    let _guard = SERIAL.lock().unwrap();
+    let mut rng = Rng::new(7);
+    let n_atoms = 6;
+    let pos: Vec<[f64; 3]> = (0..n_atoms)
+        .map(|_| [1.5 * rng.normal(), 1.5 * rng.normal(),
+                  1.5 * rng.normal()])
+        .collect();
+    let species: Vec<usize> = (0..n_atoms).map(|_| rng.below(3)).collect();
+    for method in [ConvMethod::Direct, ConvMethod::Fft] {
+        let model = Model::new(
+            ModelConfig { method, nu: 3, ..Default::default() }, 1);
+        let edges = model.build_edges(&pos);
+        assert!(!edges.is_empty(), "toy structure has no edges");
+        let mut scratch = model.scratch();
+        let mut forces = vec![0.0; 3 * n_atoms];
+        // warm once: shared FFT tables and per-degree Wigner fit caches
+        // are built lazily on first use
+        let e = model.energy_forces_into(&pos, &species, &edges,
+                                         &mut forces, &mut scratch);
+        assert!(e.is_finite());
+        let before = allocs();
+        for _ in 0..8 {
+            let _ = model.energy_into(&pos, &species, &edges, &mut scratch);
+            let _ = model.energy_forces_into(&pos, &species, &edges,
+                                             &mut forces, &mut scratch);
+        }
+        let delta = allocs() - before;
+        assert_eq!(
+            delta, 0,
+            "{method:?}: {delta} allocations in 8 steady-state model \
+             energy+forces calls (expected 0)"
         );
     }
 }

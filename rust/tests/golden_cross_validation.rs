@@ -1,13 +1,19 @@
 //! Cross-language validation: the native Rust implementation must agree
 //! with the Python build-time implementation on the golden vectors
-//! exported by `python -m compile.aot` (artifacts/golden/so3_golden.json).
+//! exported by `python -m compile.aot` (artifacts/golden/so3_golden.json)
+//! and `python -m compile.model_golden`
+//! (artifacts/golden/model_golden.json — one frozen-weights model
+//! energy/forces snapshot).
 //!
-//! Skip policy: when the golden file is absent (pre-`make artifacts`
+//! Skip policy: when a golden file is absent (pre-`make artifacts`
 //! checkouts) each cross-language test prints exactly which file it is
-//! missing and returns — no silent empty passes, no `#[ignore]`.  When
-//! the file is present but a key is missing, the test FAILS loudly (a
-//! corrupt export must not look like a pass).  The `native_golden_*`
-//! tests at the bottom need no Python artifacts and always assert.
+//! missing and returns — no silent empty passes, no `#[ignore]`.
+//! Setting `GOLDENS_REQUIRED=1` (as `scripts/verify.sh` does whenever
+//! goldens are expected) turns every such skip into a HARD FAILURE, so a
+//! missing or misplaced export can never masquerade as a pass.  When a
+//! file is present but a key is missing, the test always FAILS loudly.
+//! The `native_golden_*` tests at the bottom need no Python artifacts
+//! and always assert.
 
 use gaunt_tp::fourier::tables::{f2sh_panels, sh2f_panels};
 use gaunt_tp::num_coeffs;
@@ -20,21 +26,38 @@ use gaunt_tp::util::json::{parse, Json};
 use gaunt_tp::lm_index;
 
 const GOLDEN_PATH: &str = "artifacts/golden/so3_golden.json";
+const MODEL_GOLDEN_PATH: &str = "artifacts/golden/model_golden.json";
 
-fn load_golden(test: &str) -> Option<Json> {
-    match std::fs::read_to_string(GOLDEN_PATH) {
+/// Whether missing goldens are hard failures (scripts/verify.sh sets
+/// this whenever the artifacts have been generated).
+fn goldens_required() -> bool {
+    std::env::var("GOLDENS_REQUIRED").map(|v| v == "1").unwrap_or(false)
+}
+
+fn load_golden_file(path: &str, test: &str) -> Option<Json> {
+    match std::fs::read_to_string(path) {
         Ok(text) => match parse(&text) {
             Ok(v) => Some(v),
-            Err(e) => panic!("{GOLDEN_PATH} exists but does not parse: {e}"),
+            Err(e) => panic!("{path} exists but does not parse: {e}"),
         },
         Err(_) => {
+            if goldens_required() {
+                panic!(
+                    "{test}: golden file {path} missing but \
+                     GOLDENS_REQUIRED=1 — regenerate with `make artifacts`"
+                );
+            }
             eprintln!(
-                "SKIP {test}: golden file {GOLDEN_PATH} missing \
+                "SKIP {test}: golden file {path} missing \
                  (build it with `make artifacts`)"
             );
             None
         }
     }
+}
+
+fn load_golden(test: &str) -> Option<Json> {
+    load_golden_file(GOLDEN_PATH, test)
 }
 
 /// Fetch a golden key; a present file with a missing key is a hard error.
@@ -212,6 +235,87 @@ fn wigner_d_matches_python() {
     assert_eq!(got.len(), want.len());
     for (i, (a, b)) in got.iter().zip(&want).enumerate() {
         assert!((a - b).abs() < 1e-8, "idx {i}: {a} vs {b}");
+    }
+}
+
+/// The full learned-model pipeline against the numpy mirror: frozen
+/// weights, a frozen 8-atom cluster, reference energy AND analytic
+/// forces from `python -m compile.model_golden` (whose math is validated
+/// against the exact real Gaunt tensors + finite differences on the
+/// Python side).  One number disagreeing anywhere in the stack — SH
+/// conventions, radial basis, conv, many-body, readout, any backward
+/// pass — fails this.
+#[test]
+fn model_energy_and_forces_match_python() {
+    use gaunt_tp::model::{Model, ModelConfig};
+    let g = match load_golden_file(MODEL_GOLDEN_PATH,
+                                   "model_energy_and_forces_match_python") {
+        Some(v) => v,
+        None => return,
+    };
+    let key = |k: &str| -> &Json {
+        g.get(k).unwrap_or_else(|| {
+            panic!(
+                "{MODEL_GOLDEN_PATH} present but key '{k}' missing — \
+                 regenerate with `make model-golden`"
+            )
+        })
+    };
+    let cj = key("config");
+    let geti = |k: &str| cj.get(k).and_then(Json::as_usize).unwrap();
+    let cfg = ModelConfig {
+        l: geti("l"),
+        l_filter: geti("l_filter"),
+        nu: geti("nu"),
+        n_layers: geti("n_layers"),
+        n_species: geti("n_species"),
+        n_radial: geti("n_radial"),
+        r_cut: cj.get("r_cut").and_then(Json::as_f64).unwrap(),
+        ..Default::default()
+    };
+    let params = key("params").as_f64_vec().unwrap();
+    let model = Model::from_params(cfg, params);
+    let pos_flat = key("pos").as_f64_vec().unwrap();
+    let pos: Vec<[f64; 3]> = pos_flat
+        .chunks_exact(3)
+        .map(|c| [c[0], c[1], c[2]])
+        .collect();
+    let species: Vec<usize> = key("species")
+        .as_f64_vec()
+        .unwrap()
+        .iter()
+        .map(|&s| s as usize)
+        .collect();
+    // neighbor lists must agree on the edge COUNT (order may differ)
+    let n_edges = key("n_edges").as_usize().unwrap();
+    assert_eq!(model.build_edges(&pos).len(), n_edges,
+               "neighbor count disagrees with the python mirror");
+    let (e, f) = model.energy_forces(&pos, &species);
+    let e_ref = key("energy").as_f64().unwrap();
+    assert!(
+        (e - e_ref).abs() < 1e-7 * (1.0 + e_ref.abs()),
+        "energy {e} vs python {e_ref}"
+    );
+    let f_ref = key("forces").as_f64_vec().unwrap();
+    for (i, fi) in f.iter().enumerate() {
+        for ax in 0..3 {
+            let want = f_ref[3 * i + ax];
+            assert!(
+                (fi[ax] - want).abs() < 1e-7 * (1.0 + want.abs()),
+                "force[{i}][{ax}] {} vs python {want}",
+                fi[ax]
+            );
+        }
+    }
+    // both conv backends stay pinned to the same golden
+    for method in [ConvMethod::Direct, ConvMethod::Fft] {
+        let m2 = Model::from_params(
+            ModelConfig { method, ..cfg },
+            model.params.clone(),
+        );
+        let (e2, _) = m2.energy_forces(&pos, &species);
+        assert!((e2 - e_ref).abs() < 1e-7 * (1.0 + e_ref.abs()),
+                "{method:?}: {e2} vs {e_ref}");
     }
 }
 

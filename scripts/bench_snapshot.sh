@@ -13,6 +13,8 @@
 #   fig1b:  gaunt_conv (direct sweep) vs gaunt_conv_fft (cached spectra)
 #   table2: gaunt_fft_legacy/gaunt_fft_planned/gaunt_direct per L, plus
 #           speedup_* ratio rows and the measured Auto crossover.
+#   model:  full learned-force-field inference (energy+forces through
+#           every planned Gaunt plan), 1 thread vs all cores.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -31,7 +33,7 @@ fi
 
 cd rust
 for b in fig1a_feature_interaction fig1b_equivariant_convolution \
-         table2_speed_memory; do
+         table2_speed_memory model_inference; do
     echo "== cargo bench --bench $b =="
     cargo bench --bench "$b" "${ARGS[@]+"${ARGS[@]}"}"
 done
@@ -55,6 +57,7 @@ wanted = {
     "fig1a": ["fig1a"],
     "fig1b": ["fig1b"],
     "table2": ["table2_fourier_plan", "table2_tp_scaling", "table2_speed"],
+    "model": ["model_inference"],
 }
 
 benches = {}
@@ -93,6 +96,8 @@ doc = {
         "table2": ["gaunt_fft_legacy (before)",
                    "gaunt_fft_planned (after)",
                    "speedup_legacy_over_planned (ratio)"],
+        "model": ["model_batch 1 thread (before)",
+                  "model_batch all cores (after)"],
     },
     "benches": benches,
 }

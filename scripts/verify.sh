@@ -11,6 +11,16 @@ set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
+# Once `make artifacts` has run (so3_golden.json is its witness), EVERY
+# golden is expected: missing ones — including a stale artifacts dir
+# lacking the newer model_golden.json — become hard failures instead of
+# printed skips.  Export GOLDENS_REQUIRED=1 yourself to force the strict
+# mode anywhere.
+if [ -f artifacts/golden/so3_golden.json ]; then
+    export GOLDENS_REQUIRED=1
+    echo "== goldens present: GOLDENS_REQUIRED=1 (skips become failures) =="
+fi
+
 echo "== cargo build --release =="
 cargo build --release
 
@@ -19,7 +29,7 @@ cargo test -q
 
 echo "== bench --smoke (one tiny size per bench binary) =="
 for b in fig1a_feature_interaction fig1b_equivariant_convolution \
-         fig1c_many_body table2_speed_memory; do
+         fig1c_many_body table2_speed_memory model_inference; do
     echo "-- $b --smoke --"
     cargo bench --bench "$b" -- --smoke
 done

@@ -5,9 +5,11 @@
 #   make build      - release build only
 #   make test       - test suite only
 #   make bench      - run every native bench target
-#   make bench-snapshot - run the fig1a/fig1b/table2 benches and write
-#                     machine-readable BENCH_fourier.json at the repo
-#                     root (SMOKE=1 for a 1 ms plumbing check)
+#   make bench-snapshot - run the fig1a/fig1b/table2/model benches and
+#                     write machine-readable BENCH_fourier.json at the
+#                     repo root, including the multi_channel section
+#                     (atoms/sec at 1/8/32 feature channels); SMOKE=1
+#                     for a 1 ms plumbing check
 #   make artifacts  - (needs JAX) AOT-compile the Pallas/XLA artifacts
 #                     with python/compile/aot.py into rust/artifacts/
 #   make model-golden - (numpy only, no JAX) regenerate the frozen-weights

@@ -7,7 +7,8 @@
 //! coordinator stack (batcher -> router -> worker pool ->
 //! `NativeGauntBackend`).
 //!
-//!     cargo run --release --example train_force_field [-- --steps 120]
+//!     cargo run --release --example train_force_field \
+//!         [-- --steps 120 --channels 2]
 //!
 //! (The XLA-artifact training path lives in `experiments::train_forcefield`
 //! behind `make artifacts`; this example is its offline twin.)
@@ -51,8 +52,14 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let steps = flag(&args, "--steps", 120);
     let batch_size = flag(&args, "--batch", 4).max(1);
+    // feature multiplicity: `--channels 8` trains the multi-channel
+    // Irreps model (8x0 + 8x1 + 8x2 node features)
+    let channels = flag(&args, "--channels", 1).max(1);
 
-    println!("== native GauntNet training ({steps} steps, batch {batch_size}) ==");
+    println!(
+        "== native GauntNet training ({steps} steps, batch {batch_size}, \
+         {channels} channel(s)) =="
+    );
     // labeled data from the MD substrate (classical potential = "DFT")
     let mut graphs = gen_bpa_dataset(&[0.05], 40, 11).remove(0);
     let stats = energy_stats(&graphs[..32]);
@@ -61,8 +68,9 @@ fn main() -> Result<()> {
     let train = train.to_vec();
     let test = test.to_vec();
 
-    let cfg = ModelConfig { r_cut: 3.0, ..Default::default() };
+    let cfg = ModelConfig { r_cut: 3.0, channels, ..Default::default() };
     let model = Model::new(cfg, 7);
+    println!("node irreps: {}", model.node_irreps());
     model.warm();
     let mut trainer = NativeTrainer::new(model, NativeTrainConfig {
         lr: 4e-3,

@@ -17,7 +17,8 @@ use gaunt_tp::fourier::conv::conv2d_fft;
 use gaunt_tp::fourier::tables::sh2f_panels;
 use gaunt_tp::num_coeffs;
 use gaunt_tp::runtime::{Engine, Tensor};
-use gaunt_tp::tp::engine::{cg_apply_batch_par, gaunt_apply_batch_par, PlanCache};
+use gaunt_tp::tp::engine::PlanCache;
+use gaunt_tp::tp::op::{apply_batch_par, BatchInputs};
 use gaunt_tp::tp::{CgPlan, ConvMethod, GauntPlan};
 use gaunt_tp::util::bench::{budget_ms, consume, smoke, BenchTable};
 use gaunt_tp::util::pool;
@@ -85,12 +86,17 @@ fn main() {
             let n = num_coeffs(l);
             let x1 = rng.normals(batch_par * n);
             let x2 = rng.normals(batch_par * n);
+            // cached plans dispatched through the ONE generic batched
+            // driver (the serving configuration)
             let gf = cache.gaunt(l, l, l, ConvMethod::Fft);
             t.run(
                 &format!("gaunt_fft_par   L={l} B={batch_par} x{threads}"),
                 budget,
                 || {
-                    consume(gaunt_apply_batch_par(&gf, &x1, &x2, batch_par, 0));
+                    consume(apply_batch_par(
+                        gf.as_ref(), &BatchInputs::pair(&x1, &x2),
+                        batch_par, 0,
+                    ));
                 },
             );
             if l <= 6 {
@@ -99,7 +105,10 @@ fn main() {
                     &format!("cg_sparse_par   L={l} B={batch_par} x{threads}"),
                     budget,
                     || {
-                        consume(cg_apply_batch_par(&cg, &x1, &x2, batch_par, 0));
+                        consume(apply_batch_par(
+                            cg.as_ref(), &BatchInputs::pair(&x1, &x2),
+                            batch_par, 0,
+                        ));
                     },
                 );
             }

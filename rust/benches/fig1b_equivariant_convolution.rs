@@ -14,9 +14,8 @@
 //! `--smoke`: one tiny size, 1 ms budgets, no TSV (CI liveness check).
 
 use gaunt_tp::num_coeffs;
-use gaunt_tp::tp::engine::{
-    escn_apply_batch_par, gaunt_conv_apply_batch_par, PlanCache,
-};
+use gaunt_tp::tp::engine::PlanCache;
+use gaunt_tp::tp::op::{apply_batch_par, BatchInputs};
 use gaunt_tp::tp::escn::{EscnPlan, GauntConvPlan};
 use gaunt_tp::tp::{CgPlan, ConvMethod, GauntPlan};
 use gaunt_tp::so3::sh::real_sh_all_xyz;
@@ -98,7 +97,10 @@ fn main() {
                 &format!("escn_batch_par    L={l} E={edges} x{threads}"),
                 budget,
                 || {
-                    consume(escn_apply_batch_par(&escn, &xs, &dirs, &h, 0));
+                    consume(apply_batch_par(
+                        escn.as_ref(), &BatchInputs::edges(&xs, &dirs, &h),
+                        edges, 0,
+                    ));
                 },
             );
             let gconv = cache.gaunt_conv(l, l, l);
@@ -107,8 +109,9 @@ fn main() {
                 &format!("gaunt_conv_par    L={l} E={edges} x{threads}"),
                 budget,
                 || {
-                    consume(gaunt_conv_apply_batch_par(
-                        &gconv, &xs, &dirs, &h2, 0,
+                    consume(apply_batch_par(
+                        gconv.as_ref(), &BatchInputs::edges(&xs, &dirs, &h2),
+                        edges, 0,
                     ));
                 },
             );

@@ -79,4 +79,46 @@ fn main() {
         );
         t.write_tsv("model_inference");
     }
+
+    // --- multi-channel scaling: atoms/sec of the full batched
+    // energy+forces path at 1 / 8 / 32 feature channels (the
+    // `multi_channel` section of BENCH_fourier.json) ---
+    let mut mc = BenchTable::new("multi_channel: model inference vs channels");
+    let chan_set: &[usize] = if smoke() { &[1, 2] } else { &[1, 8, 32] };
+    for &channels in chan_set {
+        let m = Model::new(
+            ModelConfig { r_cut: 3.0, channels, ..Default::default() },
+            7,
+        );
+        m.warm();
+        let edge_lists: Vec<Vec<(usize, usize)>> = graphs_data
+            .iter()
+            .map(|g| m.build_edges(&g.pos))
+            .collect();
+        let graphs: Vec<GraphRef<'_>> = graphs_data
+            .iter()
+            .zip(&edge_lists)
+            .map(|(g, edges)| GraphRef {
+                pos: &g.pos,
+                species: &g.species,
+                edges,
+            })
+            .collect();
+        let meas = gaunt_tp::util::bench::bench(
+            &format!("model_batch_B{n_graphs}  C={channels}"),
+            budget,
+            || {
+                consume(energy_forces_batch_par(&m, &graphs, 0));
+            },
+        );
+        let atoms_per_sec = atoms_total as f64 / (meas.median_ns * 1e-9);
+        println!("    -> {atoms_per_sec:.0} atoms/sec (C={channels})");
+        mc.add(meas);
+    }
+    if smoke() {
+        println!("[smoke] model_inference OK ({} + {} rows)",
+                 t.rows.len(), mc.rows.len());
+    } else {
+        mc.write_tsv("multi_channel");
+    }
 }

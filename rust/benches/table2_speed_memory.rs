@@ -17,7 +17,8 @@ use gaunt_tp::experiments::ff_batch_tensors;
 use gaunt_tp::fourier::conv::conv2d_fft;
 use gaunt_tp::num_coeffs;
 use gaunt_tp::runtime::Engine;
-use gaunt_tp::tp::engine::{gaunt_apply_batch_par, PlanCache};
+use gaunt_tp::tp::engine::PlanCache;
+use gaunt_tp::tp::op::{apply_batch_par, BatchInputs};
 use gaunt_tp::tp::many_body::MaceStylePlan;
 use gaunt_tp::tp::{ConvMethod, GauntPlan};
 use gaunt_tp::fourier::tables::{f2sh_panels, sh2f_panels};
@@ -190,7 +191,9 @@ fn main() {
             consume(plan.apply_batch(&x1, &x2, rows));
         });
         tp.run(&format!("gaunt_batch_par L={l} x{threads}"), budget, || {
-            consume(gaunt_apply_batch_par(&plan, &x1, &x2, rows, 0));
+            consume(apply_batch_par(
+                plan.as_ref(), &BatchInputs::pair(&x1, &x2), rows, 0,
+            ));
         });
     }
     println!("\n-- multi-thread speedup (rows/s ratio) --");

@@ -79,6 +79,13 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
     pub padding_waste: AtomicU64,
+    /// tensor-product plans built so far (gauge, mirrored from the
+    /// engine's `PlanCache` after each batch)
+    pub plan_builds: AtomicU64,
+    /// plan-cache read hits (gauge, mirrored)
+    pub plan_hits: AtomicU64,
+    /// plans currently cached (gauge, mirrored)
+    pub plan_entries: AtomicU64,
     pub latency: LatencyHistogram,
     pub exec_latency: LatencyHistogram,
 }
@@ -97,16 +104,30 @@ impl Metrics {
         }
     }
 
+    /// Mirror a plan-cache snapshot (builds/hits/cached entries) into
+    /// the serving gauges.  Called by the server after each batch so a
+    /// `report()` shows plan churn — a growing `plan_builds` under
+    /// steady traffic means requests keep hitting cold op keys.
+    pub fn observe_plans(&self, builds: u64, hits: u64, entries: u64) {
+        self.plan_builds.store(builds, Ordering::Relaxed);
+        self.plan_hits.store(hits, Ordering::Relaxed);
+        self.plan_entries.store(entries, Ordering::Relaxed);
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests={} responses={} rejected={} batches={} mean_batch={:.2} \
-             pad_waste={} p50={:.2}ms p99={:.2}ms mean={:.2}ms exec_p50={:.2}ms",
+             pad_waste={} plans={}/{}built hits={} p50={:.2}ms p99={:.2}ms \
+             mean={:.2}ms exec_p50={:.2}ms",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.padding_waste.load(Ordering::Relaxed),
+            self.plan_entries.load(Ordering::Relaxed),
+            self.plan_builds.load(Ordering::Relaxed),
+            self.plan_hits.load(Ordering::Relaxed),
             self.latency.percentile_ns(0.5) / 1e6,
             self.latency.percentile_ns(0.99) / 1e6,
             self.latency.mean_ns() / 1e6,
@@ -153,8 +174,20 @@ mod tests {
         m.requests.fetch_add(10, Ordering::Relaxed);
         m.batches.fetch_add(2, Ordering::Relaxed);
         m.batched_requests.fetch_add(10, Ordering::Relaxed);
+        m.observe_plans(4, 123, 4);
         let r = m.report();
         assert!(r.contains("requests=10"));
         assert!(r.contains("mean_batch=5.00"));
+        assert!(r.contains("plans=4/4built hits=123"), "{r}");
+    }
+
+    #[test]
+    fn observe_plans_is_a_gauge_not_a_counter() {
+        let m = Metrics::new();
+        m.observe_plans(2, 10, 2);
+        m.observe_plans(3, 50, 3);
+        assert_eq!(m.plan_builds.load(Ordering::Relaxed), 3);
+        assert_eq!(m.plan_hits.load(Ordering::Relaxed), 50);
+        assert_eq!(m.plan_entries.load(Ordering::Relaxed), 3);
     }
 }

@@ -24,5 +24,7 @@ pub mod server;
 pub mod trainer;
 
 pub use request::{ForceRequest, ForceResponse};
-pub use server::{ForceFieldServer, NativeGauntBackend, ServerConfig};
+pub use server::{
+    Backend, BackendSpec, ForceFieldServer, NativeGauntBackend, ServerConfig,
+};
 pub use trainer::{NativeTrainConfig, NativeTrainer, Trainer};

@@ -1,13 +1,20 @@
 //! The force-field serving coordinator: worker pool over the dynamic
 //! batcher, routing each flushed batch to the smallest compiled variant.
 //!
-//! Inference is pluggable through [`Backend`]: the production path runs
-//! compiled PJRT artifacts ([`ForceFieldServer::start`]); the native path
-//! ([`ForceFieldServer::start_native`]) serves an analytic equivariant
+//! Inference is pluggable through [`Backend`]: every server is started
+//! by the ONE constructor [`ForceFieldServer::start_with`], which takes
+//! a [`BackendSpec`] (backend + variants + state + padding shape) and
+//! owns the worker/queue setup.  [`ForceFieldServer::start`] (compiled
+//! PJRT artifacts) and [`ForceFieldServer::start_native`] (the native
+//! Gaunt-TP backend) are thin spec builders over it.  The native path
+//! serves either the learned [`Model`] or an analytic equivariant
 //! surrogate evaluated entirely with the native O(L^3) Gaunt pipeline —
-//! every batch goes through [`PlanCache`] and the multi-threaded batched
-//! TP of [`crate::tp::engine`], so the full coordinator stack (batcher ->
-//! router -> worker pool -> backend) is exercisable offline.
+//! every batch resolves its op through [`PlanCache::op`] and runs the
+//! generic batched driver of [`crate::tp::op`], so the full coordinator
+//! stack (batcher -> router -> worker pool -> backend) is exercisable
+//! offline.  Plan-cache statistics (builds/hits/entries per [`OpKey`])
+//! are folded into the server [`Metrics`] after every batch, so serving
+//! can observe plan churn.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -25,7 +32,8 @@ use crate::model::{batch_row_len, energy_forces_batch_par, GraphRef, Model};
 use crate::num_coeffs;
 use crate::runtime::{Engine, Tensor};
 use crate::so3::sh::real_sh_all_xyz;
-use crate::tp::engine::{gaunt_apply_batch_par, PlanCache};
+use crate::tp::engine::{CacheStats, OpKey, PlanCache};
+use crate::tp::op::{apply_batch_par, BatchInputs};
 use crate::tp::ConvMethod;
 use crate::util::error::Result;
 use crate::util::json::Json;
@@ -94,9 +102,10 @@ impl Backend for XlaBackend {
 ///   equivariant analytic model.  Per atom i: a feature `h_i = sum_j
 ///   w(r_ij) Y(r_ij_hat)` over masked edges, then the rotation-invariant
 ///   atomic energy is the l=0 channel of the **batched Gaunt
-///   self-product** `h_i (x) h_i` via one [`gaunt_apply_batch_par`] call
-///   through the global [`PlanCache`].  Forces are symmetric pair terms
-///   (exact Newton's third law).
+///   self-product** `h_i (x) h_i` via one generic
+///   [`apply_batch_par`] call over the op resolved through
+///   [`PlanCache::op`].  Forces are symmetric pair terms (exact
+///   Newton's third law).
 /// * **Learned** ([`NativeGauntBackend::with_model`]): the trained
 ///   [`Model`] — each flushed batch is decoded once and its graphs are
 ///   sharded across workers by [`energy_forces_batch_par`]
@@ -127,6 +136,17 @@ impl NativeGauntBackend {
         NativeGauntBackend { model: Some(model), ..Default::default() }
     }
 
+    /// The surrogate's op key: the batched Gaunt self-product every
+    /// flushed batch runs.
+    fn surrogate_key(&self) -> OpKey {
+        OpKey::Gaunt {
+            l1: self.l,
+            l2: self.l,
+            l3: self.l,
+            method: ConvMethod::Auto,
+        }
+    }
+
     /// Pre-build every plan this backend will touch — the native analog
     /// of the XLA path's eager `engine.load()` of every variant.  In
     /// model mode this runs one tiny inference so the shared FFT tables
@@ -135,8 +155,7 @@ impl NativeGauntBackend {
         match &self.model {
             Some(m) => m.warm(),
             None => {
-                let _ = PlanCache::global().gaunt(self.l, self.l, self.l,
-                                                  ConvMethod::Auto);
+                let _ = PlanCache::global().op(&self.surrogate_key());
             }
         }
     }
@@ -252,8 +271,9 @@ impl NativeGauntBackend {
     /// The untrained analytic surrogate (the pre-model serving path).
     fn run_surrogate(&self, pb: &PaddedBatch) -> Result<(Vec<f32>, Vec<f32>)> {
         let n_feat = num_coeffs(self.l);
-        let plan =
-            PlanCache::global().gaunt(self.l, self.l, self.l, ConvMethod::Auto);
+        // resolve through the uniform op entry point: the surrogate does
+        // not care which plan family evaluates its self-product
+        let op = PlanCache::global().op(&self.surrogate_key());
         let (b, n_atoms, n_edges) = (pb.b, pb.n_atoms, pb.n_edges);
         // decode the masked edge list once: (graph, i, j, displacement, r^2)
         let mut edges: Vec<(usize, usize, usize, [f64; 3], f64)> = Vec::new();
@@ -287,9 +307,12 @@ impl NativeGauntBackend {
             }
         }
         // 2. one multi-threaded batched Gaunt self-TP over all atom rows
-        //    (zero padding rows stay exactly zero)
+        //    through the generic op driver (zero padding rows stay zero)
         let rows = b * n_atoms;
-        let tp = gaunt_apply_batch_par(&plan, &feats, &feats, rows, self.threads);
+        let tp = apply_batch_par(
+            op.as_ref(), &BatchInputs::pair(&feats, &feats), rows,
+            self.threads,
+        );
         // 3. invariant atomic energies -> per-graph energy
         let mut e_atom = vec![0.0f64; rows];
         let mut energy = vec![0.0f32; b];
@@ -325,29 +348,26 @@ impl NativeGauntBackend {
     }
 }
 
-struct Shared {
-    backend: Arc<dyn Backend>,
-    router: Router,
+/// Everything [`ForceFieldServer::start_with`] needs besides the batch
+/// policy: the backend, its routing variants, the (possibly empty)
+/// state tensors, and the static padding shape.  Built by
+/// [`BackendSpec::xla`] / [`BackendSpec::native`]; custom backends can
+/// construct one directly.
+pub struct BackendSpec {
+    pub backend: Arc<dyn Backend>,
+    pub variants: Vec<Variant>,
     /// model + optimizer state tensors, in artifact input order
-    state: RwLock<Arc<Vec<Tensor>>>,
-    metrics: Metrics,
-    n_atoms: usize,
-    n_edges: usize,
-    r_cut: f64,
+    pub state: Vec<Tensor>,
+    /// static atom-padding width of every batch
+    pub n_atoms: usize,
+    /// static edge-slot budget of every batch
+    pub n_edges: usize,
 }
 
-/// The serving coordinator.
-pub struct ForceFieldServer {
-    batcher: Arc<Batcher>,
-    shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
-    next_id: AtomicU64,
-}
-
-impl ForceFieldServer {
-    /// Discover `ff_fwd_B*` variants in the manifest, load parameters, and
-    /// spawn the worker pool over the compiled-artifact backend.
-    pub fn start(engine: Arc<Engine>, cfg: ServerConfig) -> Result<Self> {
+impl BackendSpec {
+    /// Discover `ff_fwd_B*` variants in the manifest, eagerly compile
+    /// them, and load the state blob — the compiled-artifact spec.
+    pub fn xla(engine: Arc<Engine>, cfg: &ServerConfig) -> Result<BackendSpec> {
         let mut variants = Vec::new();
         let mut n_atoms = 0usize;
         let mut n_edges = 0usize;
@@ -379,49 +399,95 @@ impl ForceFieldServer {
             .into_iter()
             .map(|(_, t)| t)
             .collect();
-        let backend: Arc<dyn Backend> = Arc::new(XlaBackend { engine });
-        Self::start_with_backend(backend, variants, state, n_atoms, n_edges, cfg)
+        Ok(BackendSpec {
+            backend: Arc::new(XlaBackend { engine }),
+            variants,
+            state,
+            n_atoms,
+            n_edges,
+        })
     }
 
-    /// Spawn the worker pool over the native Gaunt-TP backend — no
-    /// compiled artifacts required; every flushed batch runs through the
-    /// global [`PlanCache`] and the multi-threaded batched TP.
-    pub fn start_native(
-        backend: NativeGauntBackend, mut cfg: ServerConfig,
-    ) -> Result<Self> {
+    /// The native Gaunt-TP spec: fixed routing variants, no state
+    /// tensors, plans warmed before the first batch.  Mutates
+    /// `cfg.r_cut` to the model's training cutoff when a model is
+    /// attached (a mismatch would silently drop — or add zero-weight —
+    /// edges, so `ServerConfig::default()` stays always-correct).
+    pub fn native(
+        backend: NativeGauntBackend, cfg: &mut ServerConfig,
+    ) -> BackendSpec {
         let variants = vec![
             Variant { name: "native_B1".to_string(), batch: 1 },
             Variant { name: "native_B4".to_string(), batch: 4 },
             Variant { name: "native_B8".to_string(), batch: 8 },
         ];
         if let Some(m) = &backend.model {
-            // the neighbor list is built server-side at cfg.r_cut; a
-            // mismatch with the model's training cutoff would silently
-            // drop (or add zero-weight) edges — derive it from the model
-            // so ServerConfig::default() is always correct
             cfg.r_cut = m.cfg.r_cut;
         }
         // cold-start off the request path, like the XLA variants' eager
-        // compile: build the plan (tables + FFT workspaces) before the
+        // compile: build the plans (tables + FFT workspaces) before the
         // first batch is flushed
         backend.warm();
-        let backend: Arc<dyn Backend> = Arc::new(backend);
         // 256 edge slots: a fully connected 16-atom structure fits with no
         // truncation, keeping the directed edge list exactly symmetric
-        Self::start_with_backend(backend, variants, Vec::new(), 32, 256, cfg)
+        BackendSpec {
+            backend: Arc::new(backend),
+            variants,
+            state: Vec::new(),
+            n_atoms: 32,
+            n_edges: 256,
+        }
+    }
+}
+
+struct Shared {
+    backend: Arc<dyn Backend>,
+    router: Router,
+    /// model + optimizer state tensors, in artifact input order
+    state: RwLock<Arc<Vec<Tensor>>>,
+    metrics: Metrics,
+    n_atoms: usize,
+    n_edges: usize,
+    r_cut: f64,
+}
+
+/// The serving coordinator.
+pub struct ForceFieldServer {
+    batcher: Arc<Batcher>,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl ForceFieldServer {
+    /// Compiled-artifact entry point: builds [`BackendSpec::xla`] and
+    /// hands it to the one constructor, [`ForceFieldServer::start_with`].
+    pub fn start(engine: Arc<Engine>, cfg: ServerConfig) -> Result<Self> {
+        let spec = BackendSpec::xla(engine, &cfg)?;
+        Self::start_with(spec, cfg)
     }
 
-    fn start_with_backend(
-        backend: Arc<dyn Backend>, variants: Vec<Variant>, state: Vec<Tensor>,
-        n_atoms: usize, n_edges: usize, cfg: ServerConfig,
+    /// Native entry point: builds [`BackendSpec::native`] (which warms
+    /// the plans and syncs `r_cut` to an attached model) and hands it to
+    /// [`ForceFieldServer::start_with`].
+    pub fn start_native(
+        backend: NativeGauntBackend, mut cfg: ServerConfig,
     ) -> Result<Self> {
+        let spec = BackendSpec::native(backend, &mut cfg);
+        Self::start_with(spec, cfg)
+    }
+
+    /// THE server constructor: every start path funnels here.  Spawns
+    /// the worker pool over the batcher and routes each flushed batch
+    /// through the spec's backend.
+    pub fn start_with(spec: BackendSpec, cfg: ServerConfig) -> Result<Self> {
         let shared = Arc::new(Shared {
-            backend,
-            router: Router::new(variants),
-            state: RwLock::new(Arc::new(state)),
+            backend: spec.backend,
+            router: Router::new(spec.variants),
+            state: RwLock::new(Arc::new(spec.state)),
             metrics: Metrics::new(),
-            n_atoms,
-            n_edges,
+            n_atoms: spec.n_atoms,
+            n_edges: spec.n_edges,
             r_cut: cfg.r_cut,
         });
         let batcher = Arc::new(Batcher::new(cfg.policy));
@@ -499,6 +565,13 @@ impl ForceFieldServer {
         &self.shared.metrics
     }
 
+    /// Snapshot of the global plan cache (builds/hits/len + per-[`OpKey`]
+    /// hit counts) — the same numbers folded into [`Metrics::report`]
+    /// after every batch, with the per-key breakdown.
+    pub fn plan_stats(&self) -> CacheStats {
+        PlanCache::global().stats()
+    }
+
     pub fn max_atoms(&self) -> usize {
         self.shared.n_atoms
     }
@@ -530,6 +603,14 @@ fn run_chunk(s: &Shared, variant: &Variant, chunk: &[Envelope]) {
     let result = execute_chunk(s, variant, chunk);
     let exec_ns = t_exec.elapsed().as_nanos() as u64;
     s.metrics.exec_latency.record_ns(exec_ns);
+    // fold the plan-cache counters into the serving metrics so report()
+    // shows plan churn next to latency (cheap: three atomic loads)
+    let cache = PlanCache::global();
+    s.metrics.observe_plans(
+        cache.builds() as u64,
+        cache.hits() as u64,
+        cache.len() as u64,
+    );
     s.metrics.batches.fetch_add(1, Ordering::Relaxed);
     s.metrics
         .batched_requests

@@ -8,7 +8,11 @@
 //! [`NativeTrainer`] needs no artifacts at all: it optimizes the native
 //! [`Model`] (every contraction on the planned Gaunt engine) against an
 //! energy + force loss with Adam (or SGD), and checkpoints to JSON
-//! through `util::json`.  The force-loss parameter gradient needs the
+//! through `util::json`.  The trainer is layout-agnostic: parameters
+//! are one flat vector whose interpretation (including multi-channel
+//! `Irreps` node features, `channels > 1`) is owned entirely by the
+//! model — checkpoints carry the layout in their config, so a trainer
+//! resumed from JSON always rebuilds the exact same model.  The force-loss parameter gradient needs the
 //! mixed second derivative d^2 E / dx dtheta; rather than a hand-rolled
 //! second reverse pass, it is evaluated as a Pearlmutter-style
 //! Hessian-vector product — a central difference of the EXACT analytic

@@ -204,13 +204,14 @@ pub fn serve_demo_native(n_requests: usize) -> Result<()> {
         serve_demo_config(),
     )?;
     run_serve_demo(server, n_requests, " natively")?;
-    let cache = crate::tp::engine::PlanCache::global();
+    let stats = crate::tp::engine::PlanCache::global().stats();
     println!(
         "plan cache: {} plans, {} builds, {} hits",
-        cache.len(),
-        cache.builds(),
-        cache.hits()
+        stats.len, stats.builds, stats.hits
     );
+    for ks in stats.per_key.iter().take(5) {
+        println!("  {:?}: {} hits", ks.key, ks.hits);
+    }
     Ok(())
 }
 
@@ -221,7 +222,8 @@ pub fn serve_demo_native(n_requests: usize) -> Result<()> {
 /// Batched Gaunt-TP throughput, single-thread vs multi-thread, using the
 /// global plan cache — the native rows of the speed/memory table.
 pub fn tp_throughput(rows: usize) -> Result<()> {
-    use crate::tp::engine::{self, PlanCache};
+    use crate::tp::engine::{OpKey, PlanCache};
+    use crate::tp::op::{apply_batch_par, BatchInputs};
     use crate::tp::ConvMethod;
     use crate::util::pool;
 
@@ -233,16 +235,21 @@ pub fn tp_throughput(rows: usize) -> Result<()> {
         let mut rng = Rng::new(100 + l as u64);
         let x1 = rng.normals(rows * n);
         let x2 = rng.normals(rows * n);
-        let plan = PlanCache::global().gaunt(l, l, l, ConvMethod::Auto);
+        // the serving configuration: resolve the op uniformly through
+        // the cache and run the generic batched driver
+        let op = PlanCache::global().op(&OpKey::Gaunt {
+            l1: l, l2: l, l3: l, method: ConvMethod::Auto,
+        });
+        let batch = BatchInputs::pair(&x1, &x2);
         // best-of-3 wallclock per mode
         let mut t_serial = f64::INFINITY;
         let mut t_par = f64::INFINITY;
         for _ in 0..3 {
             let t0 = Instant::now();
-            let a = plan.apply_batch(&x1, &x2, rows);
+            let a = apply_batch_par(op.as_ref(), &batch, rows, 1);
             t_serial = t_serial.min(t0.elapsed().as_secs_f64());
             let t0 = Instant::now();
-            let b = engine::gaunt_apply_batch_par(&plan, &x1, &x2, rows, 0);
+            let b = apply_batch_par(op.as_ref(), &batch, rows, 0);
             t_par = t_par.min(t0.elapsed().as_secs_f64());
             assert_eq!(a, b, "parallel path diverged from serial");
         }

@@ -2,25 +2,32 @@
 //! model whose every tensor contraction routes through the planned Gaunt
 //! engine (DESIGN.md §"The model stack").
 //!
-//! One channel of real SH coefficients per atom (degree <= L).  Per
-//! interaction layer:
+//! Node features are typed by an [`Irreps`]: `channels` channels of real
+//! SH coefficients per atom (degree <= L, layout
+//! [`Irreps::spherical`]`(channels, L)` — degree-major panels
+//! `[l][channel][m]`, so `channels = 1` is byte-compatible with the
+//! historical single-channel layout and its frozen goldens).  Channels
+//! evolve through per-`(channel, l)` path weights and shared plans; the
+//! readout sums each channel's invariants.  Per interaction layer:
 //!
 //! 1. **Edge embedding** — radial basis [`radial::RadialBasis`] x
 //!    spherical harmonics of the edge direction
 //!    ([`crate::so3::sh::real_sh_grad_xyz_into`]: values AND Cartesian
 //!    gradients, so the force backward pass is analytic end to end).
-//! 2. **eSCN-style equivariant convolution** — the per-edge message
-//!    `m_e = P_L(h_j * f_e)` with the degree-weighted filter
-//!    `f_e[lm] = h2_e[l2] Y_lm(u_e)`, evaluated by
+//! 2. **eSCN-style equivariant convolution** — the per-edge, per-channel
+//!    message `m_e^c = P_L(h_j^c * f_e^c)` with the degree-weighted
+//!    filter `f_e^c[lm] = h2_e[c, l2] Y_lm(u_e)`, evaluated by
 //!    [`GauntConvPlan::apply_full_into`] (aligned-filter fast path,
-//!    allocation-free rotation round trip).
-//! 3. **Many-body update** — `b_i = P_L(a_i^nu)` through
+//!    allocation-free rotation round trip; one shared plan, per-channel
+//!    radial weights).
+//! 3. **Many-body update** — `b_i^c = P_L((a_i^c)^nu)` through
 //!    [`ManyBodyPlan::apply_self_into`] (one transform, pointwise
-//!    nu-th power), then a per-degree residual mix
-//!    `h' = res (.) h + mix_a (.) a + mix_b (.) b`.
-//! 4. **Invariant readout** — `e_i = bias[s_i] + c_lin h[0] +
-//!    c_quad (h (x) h)[0]`, the quadratic invariant evaluated by a
-//!    `(L, L, 0)` [`GauntPlan`].
+//!    nu-th power), then a per-path residual mix
+//!    `h' = res (.) h + mix_a (.) a + mix_b (.) b` over the full
+//!    multi-channel layout ([`Irreps::scale_paths_add`]).
+//! 4. **Invariant readout** — `e_i = bias[s_i] + c_lin sum_c h^c[0] +
+//!    c_quad sum_c (h^c (x) h^c)[0]`, the quadratic invariant evaluated
+//!    by a `(L, L, 0)` [`GauntPlan`] per channel.
 //!
 //! **Backward convention.** The real Gaunt tensor `G[k,i,j] = int Y_k
 //! Y_i Y_j dOmega` is symmetric under any permutation of its three
@@ -36,17 +43,21 @@
 //!            self-product, truncated to 2L by the selection rules)
 //! ```
 //!
-//! so the backward pass runs on the same cached plans as the forward.
-//! Position gradients (= -forces) flow through the radial basis
-//! derivative and the pole-free SH Cartesian gradient.  Every identity
-//! is validated against central differences by
-//! `python/compile/model_golden.py --check` and `tests/grad_check.rs`.
+//! so the backward pass runs on the same cached plans as the forward —
+//! channels share the plans and differ only in the per-path weights
+//! (whose gradients are [`Irreps::dot_paths_add`], the exact adjoint of
+//! the mix).  Position gradients (= -forces) flow through the radial
+//! basis derivative and the pole-free SH Cartesian gradient.  Every
+//! identity is validated against central differences by
+//! `python/compile/model_golden.py --check` and `tests/grad_check.rs`
+//! (the `channels > 1` configurations by the latter).
 //!
 //! All `_into` entry points are **allocation-free in steady state**
 //! (asserted by `tests/alloc_regression.rs`): plans come from the global
-//! [`PlanCache`], intermediates live in a caller-owned [`ModelScratch`],
-//! and batched inference shards graphs across workers with one scratch
-//! each via [`crate::util::pool::shard_rows_with`].
+//! [`PlanCache`], intermediates live in a caller-owned [`ModelScratch`]
+//! (including the per-channel gather/scatter staging), and batched
+//! inference shards graphs across workers with one scratch each via
+//! [`crate::util::pool::shard_rows_with`].
 
 pub mod radial;
 
@@ -58,6 +69,7 @@ use crate::so3::sh::real_sh_grad_xyz_into;
 use crate::tp::engine::PlanCache;
 use crate::tp::escn::{GauntConvPlan, GauntConvScratch};
 use crate::tp::gaunt::{ConvMethod, GauntPlan, GauntScratch};
+use crate::tp::irreps::Irreps;
 use crate::tp::many_body::{ManyBodyPlan, ManyBodyScratch};
 use crate::util::error::Result;
 use crate::util::json::{self, Json};
@@ -81,6 +93,10 @@ pub struct ModelConfig {
     pub l_filter: usize,
     /// many-body correlation order (>= 2)
     pub nu: usize,
+    /// feature multiplicity: node features are
+    /// [`Irreps::spherical`]`(channels, l)` (1 = the historical
+    /// single-channel model, checkpoint-compatible)
+    pub channels: usize,
     /// interaction layers
     pub n_layers: usize,
     pub n_species: usize,
@@ -101,6 +117,7 @@ impl Default for ModelConfig {
             l: 2,
             l_filter: 2,
             nu: 2,
+            channels: 1,
             n_layers: 2,
             n_species: 3,
             n_radial: 6,
@@ -113,7 +130,7 @@ impl Default for ModelConfig {
 }
 
 impl ModelConfig {
-    /// Feature width `(L+1)^2`.
+    /// Per-channel feature width `(L+1)^2` (what every plan consumes).
     pub fn nf(&self) -> usize {
         num_coeffs(self.l)
     }
@@ -123,6 +140,17 @@ impl ModelConfig {
         num_coeffs(self.l_filter)
     }
 
+    /// Full node-feature layout: `channels` channels of degrees
+    /// `0..=l`, degree-major panels.
+    pub fn node_irreps(&self) -> Irreps {
+        Irreps::spherical(self.channels, self.l)
+    }
+
+    /// Flat node-feature width `channels * (L+1)^2`.
+    pub fn node_dim(&self) -> usize {
+        self.channels * self.nf()
+    }
+
     /// Degree of the saved `a^(nu-1)` power: Gaunt selection rules cut
     /// everything above 2L out of the many-body VJP.
     pub fn l_pow(&self) -> usize {
@@ -130,7 +158,8 @@ impl ModelConfig {
     }
 
     fn per_layer_params(&self) -> usize {
-        (self.l_filter + 1) * self.n_radial + 3 * (self.l + 1)
+        self.channels * ((self.l_filter + 1) * self.n_radial
+                         + 3 * (self.l + 1))
     }
 
     /// Total parameter count (layout documented at [`Model::params`]).
@@ -140,10 +169,12 @@ impl ModelConfig {
 }
 
 /// Parameter layout offsets (shared with
-/// `python/compile/model_golden.py::param_views`):
+/// `python/compile/model_golden.py::param_views`, whose single-channel
+/// layout is the `channels = 1` case):
 /// `[species_embed S][species_bias S]` then per layer
-/// `[w_rad (Lf+1)*K][mix_res L+1][mix_a L+1][mix_b L+1]`, then
-/// `[c_lin, c_quad]`.
+/// `[w_rad (Lf+1)*C*K  — row (l2, c) at (l2*C + c)*K]`
+/// `[mix_res C*(L+1)][mix_a C*(L+1)][mix_b C*(L+1)  — path (l, c) at
+/// l*C + c, the `Irreps` path order]`, then `[c_lin, c_quad]`.
 struct Offsets {
     embed: usize,
     bias: usize,
@@ -158,7 +189,8 @@ struct Offsets {
 
 impl Offsets {
     fn new(cfg: &ModelConfig) -> Offsets {
-        let w_rad_len = (cfg.l_filter + 1) * cfg.n_radial;
+        let w_rad_len = (cfg.l_filter + 1) * cfg.channels * cfg.n_radial;
+        let mix_len = cfg.channels * (cfg.l + 1);
         let per_layer = cfg.per_layer_params();
         Offsets {
             embed: 0,
@@ -167,8 +199,8 @@ impl Offsets {
             per_layer,
             w_rad: 0,
             mix_res: w_rad_len,
-            mix_a: w_rad_len + (cfg.l + 1),
-            mix_b: w_rad_len + 2 * (cfg.l + 1),
+            mix_a: w_rad_len + mix_len,
+            mix_b: w_rad_len + 2 * mix_len,
             readout: 2 * cfg.n_species + cfg.n_layers * per_layer,
         }
     }
@@ -187,6 +219,10 @@ pub struct Model {
     pub params: Vec<f64>,
     rb: RadialBasis,
     off: Offsets,
+    /// node-feature layout (degree-major channel panels)
+    nir: Irreps,
+    /// filter layout (single channel of degrees 0..=l_filter)
+    fir: Irreps,
     /// forward conv plan (aligned-filter fast path), (L, Lf, L)
     conv: Arc<GauntConvPlan>,
     /// message VJP w.r.t. the source feature, plan (L, Lf, L)
@@ -222,55 +258,33 @@ pub struct ModelScratch {
     egy: Vec<[f64; 3]>,    // [max_e * nff] SH Cartesian gradients
     erb: Vec<f64>,         // [max_e * K] radial basis values
     edrb: Vec<f64>,        // [max_e * K] radial basis derivatives
-    eh2: Vec<f64>,         // [n_layers * max_e * (Lf+1)] filter weights
-    // per-atom state (saved for the backward pass)
-    h: Vec<f64>,           // [(n_layers+1) * max_a * nf]
-    a: Vec<f64>,           // [n_layers * max_a * nf] aggregated messages
-    b: Vec<f64>,           // [n_layers * max_a * nf] many-body features
-    pw: Vec<f64>,          // [n_layers * max_a * npow] a^(nu-1) powers
+    eh2: Vec<f64>,         // [n_layers * max_e * C * (Lf+1)] filter weights
+    // per-atom state (saved for the backward pass); nd = C * (L+1)^2
+    h: Vec<f64>,           // [(n_layers+1) * max_a * nd]
+    a: Vec<f64>,           // [n_layers * max_a * nd] aggregated messages
+    b: Vec<f64>,           // [n_layers * max_a * nd] many-body features
+    pw: Vec<f64>,          // [n_layers * max_a * C * npow] a^(nu-1) powers
     inv: Vec<f64>,         // [max_a] quadratic readout invariants
     // backward work buffers
-    g_h: Vec<f64>,         // [max_a * nf]
-    g_hprev: Vec<f64>,     // [max_a * nf]
-    g_a: Vec<f64>,         // [max_a * nf]
-    g_b: Vec<f64>,         // [nf]
+    g_h: Vec<f64>,         // [max_a * nd]
+    g_hprev: Vec<f64>,     // [max_a * nd]
+    g_a: Vec<f64>,         // [max_a * nd]
+    g_b: Vec<f64>,         // [nd]
     g_f: Vec<f64>,         // [nff]
-    msg: Vec<f64>,         // [nf] message / VJP staging
+    msg: Vec<f64>,         // [nf] single-channel message / VJP staging
     filt: Vec<f64>,        // [nff] filter coefficients
+    ch_a: Vec<f64>,        // [nf] channel gather staging (primary)
+    ch_b: Vec<f64>,        // [nf] channel gather staging (secondary)
     one: Vec<f64>,         // [1] quad-plan output
     /// internal parameter-gradient buffer for force-only calls
     gparams: Vec<f64>,
 }
 
-/// Per-degree scaled accumulate: `out[(l,m)] += w[l] * x[(l,m)]`.
-#[inline]
-fn deg_scale_add(l_max: usize, w: &[f64], x: &[f64], out: &mut [f64]) {
-    for l in 0..=l_max {
-        let base = lm_index(l, -(l as i64));
-        for k in 0..(2 * l + 1) {
-            out[base + k] += w[l] * x[base + k];
-        }
-    }
-}
-
-/// Per-degree inner products: `out_w[l] += <g, x>_l` (the d/dw of
-/// `<g, w (.) x>`).
-#[inline]
-fn deg_dot_add(l_max: usize, g: &[f64], x: &[f64], out_w: &mut [f64]) {
-    for l in 0..=l_max {
-        let base = lm_index(l, -(l as i64));
-        let mut acc = 0.0;
-        for k in 0..(2 * l + 1) {
-            acc += g[base + k] * x[base + k];
-        }
-        out_w[l] += acc;
-    }
-}
-
 impl Model {
     /// Random initialization (scales mirrored from the Python reference:
     /// O(1) scalars, residual mixes at 1, modest message/many-body
-    /// mixes).
+    /// mixes).  For `channels = 1` and a fixed seed this reproduces the
+    /// historical single-channel initialization draw for draw.
     pub fn new(cfg: ModelConfig, seed: u64) -> Model {
         let mut rng = Rng::new(seed);
         let mut params = vec![0.0; cfg.n_params()];
@@ -280,15 +294,17 @@ impl Model {
             params[off.bias + s] = 0.1 * rng.normal();
         }
         let w_scale = 0.8 / (cfg.n_radial as f64).sqrt();
+        let w_rad_len = (cfg.l_filter + 1) * cfg.channels * cfg.n_radial;
+        let n_paths = cfg.channels * (cfg.l + 1);
         for t in 0..cfg.n_layers {
             let lt = off.layer(t);
-            for k in 0..(cfg.l_filter + 1) * cfg.n_radial {
+            for k in 0..w_rad_len {
                 params[lt + off.w_rad + k] = w_scale * rng.normal();
             }
-            for l in 0..=cfg.l {
-                params[lt + off.mix_res + l] = 1.0;
-                params[lt + off.mix_a + l] = 0.5 + 0.1 * rng.normal();
-                params[lt + off.mix_b + l] = 0.3 + 0.1 * rng.normal();
+            for pth in 0..n_paths {
+                params[lt + off.mix_res + pth] = 1.0;
+                params[lt + off.mix_a + pth] = 0.5 + 0.1 * rng.normal();
+                params[lt + off.mix_b + pth] = 0.3 + 0.1 * rng.normal();
             }
         }
         params[off.readout] = 0.5;
@@ -300,6 +316,7 @@ impl Model {
     pub fn from_params(cfg: ModelConfig, params: Vec<f64>) -> Model {
         assert!(cfg.nu >= 2, "many-body order must be >= 2");
         assert!(cfg.n_layers >= 1);
+        assert!(cfg.channels >= 1, "need at least one feature channel");
         // the filter VJP projects a degree-2L product grid onto degree
         // l_filter, which the f2sh panels require to fit inside the grid
         assert!(cfg.l_filter <= 2 * cfg.l,
@@ -311,6 +328,8 @@ impl Model {
         Model {
             rb: RadialBasis::new(cfg.n_radial, cfg.r_cut),
             off: Offsets::new(&cfg),
+            nir: cfg.node_irreps(),
+            fir: Irreps::single(lf),
             conv: cache.gaunt_conv(l, lf, l),
             vjp_x: cache.gaunt(l, lf, l, cfg.method),
             vjp_f: cache.gaunt(l, l, lf, cfg.method),
@@ -331,11 +350,18 @@ impl Model {
         self.params.len()
     }
 
+    /// The node-feature layout contract.
+    pub fn node_irreps(&self) -> &Irreps {
+        &self.nir
+    }
+
     /// Fresh scratch sized for this model (one per worker thread).
     pub fn scratch(&self) -> ModelScratch {
         let c = &self.cfg;
         let (nf, nff, npow) = (c.nf(), c.nff(), num_coeffs(c.l_pow()));
-        let (ma, me, nl) = (c.max_atoms, c.max_edges, c.n_layers);
+        let nd = c.node_dim();
+        let (ma, me, nl, cc) =
+            (c.max_atoms, c.max_edges, c.n_layers, c.channels);
         ModelScratch {
             conv_s: self.conv.scratch(),
             vjp_x_s: self.vjp_x.scratch(),
@@ -350,19 +376,21 @@ impl Model {
             egy: vec![[0.0; 3]; me * nff],
             erb: vec![0.0; me * c.n_radial],
             edrb: vec![0.0; me * c.n_radial],
-            eh2: vec![0.0; nl * me * (c.l_filter + 1)],
-            h: vec![0.0; (nl + 1) * ma * nf],
-            a: vec![0.0; nl * ma * nf],
-            b: vec![0.0; nl * ma * nf],
-            pw: vec![0.0; nl * ma * npow],
+            eh2: vec![0.0; nl * me * cc * (c.l_filter + 1)],
+            h: vec![0.0; (nl + 1) * ma * nd],
+            a: vec![0.0; nl * ma * nd],
+            b: vec![0.0; nl * ma * nd],
+            pw: vec![0.0; nl * ma * cc * npow],
             inv: vec![0.0; ma],
-            g_h: vec![0.0; ma * nf],
-            g_hprev: vec![0.0; ma * nf],
-            g_a: vec![0.0; ma * nf],
-            g_b: vec![0.0; nf],
+            g_h: vec![0.0; ma * nd],
+            g_hprev: vec![0.0; ma * nd],
+            g_a: vec![0.0; ma * nd],
+            g_b: vec![0.0; nd],
             g_f: vec![0.0; nff],
             msg: vec![0.0; nf],
             filt: vec![0.0; nff],
+            ch_a: vec![0.0; nf],
+            ch_b: vec![0.0; nf],
             one: vec![0.0; 1],
             gparams: vec![0.0; self.params.len()],
         }
@@ -410,8 +438,10 @@ impl Model {
     ) -> f64 {
         self.check_sizes(pos, species, edges);
         let c = &self.cfg;
-        let (nf, nff, nh2) = (c.nf(), c.nff(), c.l_filter + 1);
-        let (ma, k) = (c.max_atoms, c.n_radial);
+        let (nff, nh2, cc) = (c.nff(), c.l_filter + 1, c.channels);
+        let nd = c.node_dim();
+        let (ma, me, k) = (c.max_atoms, c.max_edges, c.n_radial);
+        let n_mix = self.nir.n_paths();
         let n_atoms = pos.len();
         let p = &self.params;
         // --- edge geometry (shared by every layer) ---
@@ -436,92 +466,123 @@ impl Model {
                 &mut s.edrb[e * k..(e + 1) * k],
             );
         }
-        // --- node init: species embedding in the scalar channel ---
+        // --- node init: species embedding in every channel's scalar ---
         for i in 0..n_atoms {
-            let row = &mut s.h[i * nf..(i + 1) * nf];
+            let row = &mut s.h[i * nd..(i + 1) * nd];
             row.fill(0.0);
-            row[0] = p[self.off.embed + species[i]];
+            row[..cc].fill(p[self.off.embed + species[i]]);
         }
         // --- interaction layers ---
         for t in 0..c.n_layers {
             let lt = self.off.layer(t);
             let w_rad = &p[lt + self.off.w_rad
-                ..lt + self.off.w_rad + nh2 * k];
-            let h_t = t * ma * nf;
-            s.a[t * ma * nf..t * ma * nf + n_atoms * nf].fill(0.0);
+                ..lt + self.off.w_rad + nh2 * cc * k];
+            let h_t = t * ma * nd;
+            s.a[t * ma * nd..t * ma * nd + n_atoms * nd].fill(0.0);
             for (e, &(i, j)) in edges.iter().enumerate() {
-                // per-filter-degree weights from the radial basis
-                let h2 = &mut s.eh2[(t * c.max_edges + e) * nh2
-                    ..(t * c.max_edges + e + 1) * nh2];
-                let rb = &s.erb[e * k..(e + 1) * k];
-                for (l2, h2v) in h2.iter_mut().enumerate() {
-                    *h2v = w_rad[l2 * k..(l2 + 1) * k]
-                        .iter()
-                        .zip(rb)
-                        .map(|(w, r)| w * r)
-                        .sum();
+                // per-(channel, filter-degree) weights from the radial
+                // basis: h2[c][l2] = <w_rad[(l2, c)], rb(r_e)>
+                {
+                    let h2_all = &mut s.eh2[(t * me + e) * cc * nh2
+                        ..(t * me + e + 1) * cc * nh2];
+                    let rb = &s.erb[e * k..(e + 1) * k];
+                    for ch in 0..cc {
+                        for l2 in 0..nh2 {
+                            h2_all[ch * nh2 + l2] = w_rad
+                                [(l2 * cc + ch) * k..(l2 * cc + ch + 1) * k]
+                                .iter()
+                                .zip(rb)
+                                .map(|(w, r)| w * r)
+                                .sum();
+                        }
+                    }
                 }
-                // eSCN-style message through the aligned-filter fast path
-                self.conv.apply_full_into(
-                    &s.h[h_t + j * nf..h_t + (j + 1) * nf],
-                    s.eu[e],
-                    h2,
-                    c.method,
-                    &mut s.msg,
-                    &mut s.conv_s,
-                );
-                let a_i = &mut s.a[(t * ma + i) * nf..(t * ma + i + 1) * nf];
-                for (av, mv) in a_i.iter_mut().zip(&s.msg) {
-                    *av += mv;
+                // eSCN-style message through the aligned-filter fast
+                // path, one shared plan applied per channel
+                for ch in 0..cc {
+                    {
+                        let h_j = &s.h[h_t + j * nd..h_t + (j + 1) * nd];
+                        self.nir.gather_channel(h_j, ch, &mut s.ch_a);
+                    }
+                    let h2 = &s.eh2[((t * me + e) * cc + ch) * nh2
+                        ..((t * me + e) * cc + ch + 1) * nh2];
+                    self.conv.apply_full_into(
+                        &s.ch_a,
+                        s.eu[e],
+                        h2,
+                        c.method,
+                        &mut s.msg,
+                        &mut s.conv_s,
+                    );
+                    let a_i =
+                        &mut s.a[(t * ma + i) * nd..(t * ma + i + 1) * nd];
+                    self.nir.scatter_channel_add(&s.msg, ch, a_i);
                 }
             }
-            // many-body update + per-degree residual mix
+            // many-body update per channel + per-path residual mix
             let npow = num_coeffs(c.l_pow());
             for i in 0..n_atoms {
-                let a_i = &s.a[(t * ma + i) * nf..(t * ma + i + 1) * nf];
-                self.mb.apply_self_into(
-                    a_i,
-                    &mut s.b[(t * ma + i) * nf..(t * ma + i + 1) * nf],
-                    &mut s.mb_s,
-                );
-                let pw_i = &mut s.pw
-                    [(t * ma + i) * npow..(t * ma + i + 1) * npow];
-                match (&self.mb_pow, &mut s.mb_pow_s) {
-                    (Some(plan), Some(ps)) => {
-                        plan.apply_self_into(a_i, pw_i, ps)
+                for ch in 0..cc {
+                    {
+                        let a_i =
+                            &s.a[(t * ma + i) * nd..(t * ma + i + 1) * nd];
+                        self.nir.gather_channel(a_i, ch, &mut s.ch_a);
                     }
-                    // nu == 2: the (nu-1)-fold power is `a` itself
-                    _ => pw_i.copy_from_slice(a_i),
+                    self.mb.apply_self_into(&s.ch_a, &mut s.msg, &mut s.mb_s);
+                    let b_i =
+                        &mut s.b[(t * ma + i) * nd..(t * ma + i + 1) * nd];
+                    self.nir.scatter_channel(&s.msg, ch, b_i);
+                    let pw_i = &mut s.pw[((t * ma + i) * cc + ch) * npow
+                        ..((t * ma + i) * cc + ch + 1) * npow];
+                    match (&self.mb_pow, &mut s.mb_pow_s) {
+                        (Some(plan), Some(ps)) => {
+                            plan.apply_self_into(&s.ch_a, pw_i, ps)
+                        }
+                        // nu == 2: the (nu-1)-fold power is `a` itself
+                        _ => pw_i.copy_from_slice(&s.ch_a),
+                    }
                 }
             }
             for i in 0..n_atoms {
-                let (head, tail) = s.h.split_at_mut((t + 1) * ma * nf);
-                let h_prev = &head[h_t + i * nf..h_t + (i + 1) * nf];
-                let h_next = &mut tail[i * nf..(i + 1) * nf];
+                let (head, tail) = s.h.split_at_mut((t + 1) * ma * nd);
+                let h_prev = &head[h_t + i * nd..h_t + (i + 1) * nd];
+                let h_next = &mut tail[i * nd..(i + 1) * nd];
                 h_next.fill(0.0);
-                deg_scale_add(c.l, &p[lt + self.off.mix_res..], h_prev,
-                              h_next);
-                deg_scale_add(
-                    c.l, &p[lt + self.off.mix_a..],
-                    &s.a[(t * ma + i) * nf..(t * ma + i + 1) * nf], h_next,
+                self.nir.scale_paths_add(
+                    &p[lt + self.off.mix_res..lt + self.off.mix_res + n_mix],
+                    h_prev, h_next,
                 );
-                deg_scale_add(
-                    c.l, &p[lt + self.off.mix_b..],
-                    &s.b[(t * ma + i) * nf..(t * ma + i + 1) * nf], h_next,
+                self.nir.scale_paths_add(
+                    &p[lt + self.off.mix_a..lt + self.off.mix_a + n_mix],
+                    &s.a[(t * ma + i) * nd..(t * ma + i + 1) * nd], h_next,
+                );
+                self.nir.scale_paths_add(
+                    &p[lt + self.off.mix_b..lt + self.off.mix_b + n_mix],
+                    &s.b[(t * ma + i) * nd..(t * ma + i + 1) * nd], h_next,
                 );
             }
         }
-        // --- invariant readout ---
+        // --- invariant readout (summed over channels) ---
         let (c_lin, c_quad) =
             (p[self.off.readout], p[self.off.readout + 1]);
-        let h_t = c.n_layers * ma * nf;
+        let h_t = c.n_layers * ma * nd;
         let mut energy = 0.0;
         for i in 0..n_atoms {
-            let h_i = &s.h[h_t + i * nf..h_t + (i + 1) * nf];
-            self.quad.apply_into(h_i, h_i, &mut s.one, &mut s.quad_s);
-            s.inv[i] = s.one[0];
-            energy += p[self.off.bias + species[i]] + c_lin * h_i[0]
-                + c_quad * s.one[0];
+            let mut inv_i = 0.0;
+            let mut lin_i = 0.0;
+            for ch in 0..cc {
+                {
+                    let h_i = &s.h[h_t + i * nd..h_t + (i + 1) * nd];
+                    self.nir.gather_channel(h_i, ch, &mut s.ch_a);
+                }
+                self.quad.apply_into(&s.ch_a, &s.ch_a, &mut s.one,
+                                     &mut s.quad_s);
+                inv_i += s.one[0];
+                lin_i += s.ch_a[0];
+            }
+            s.inv[i] = inv_i;
+            energy += p[self.off.bias + species[i]] + c_lin * lin_i
+                + c_quad * inv_i;
         }
         energy
     }
@@ -536,8 +597,10 @@ impl Model {
         forces: &mut [f64], gparams: &mut [f64],
     ) {
         let c = &self.cfg;
-        let (nf, nff, nh2) = (c.nf(), c.nff(), c.l_filter + 1);
-        let (ma, k) = (c.max_atoms, c.n_radial);
+        let (nff, nh2, cc) = (c.nff(), c.l_filter + 1, c.channels);
+        let nd = c.node_dim();
+        let (ma, me, k) = (c.max_atoms, c.max_edges, c.n_radial);
+        let n_mix = self.nir.n_paths();
         let n_atoms = pos.len();
         debug_assert!(forces.len() >= 3 * n_atoms);
         debug_assert_eq!(gparams.len(), self.params.len());
@@ -545,115 +608,135 @@ impl Model {
         let (c_lin, c_quad) =
             (p[self.off.readout], p[self.off.readout + 1]);
         // --- readout cotangents ---
-        let h_t = c.n_layers * ma * nf;
+        let h_t = c.n_layers * ma * nd;
         for i in 0..n_atoms {
-            let h_i = &s.h[h_t + i * nf..h_t + (i + 1) * nf];
-            gparams[self.off.readout] += h_i[0];
+            let h_i = &s.h[h_t + i * nd..h_t + (i + 1) * nd];
+            // channel scalars are the first `cc` entries (degree-0 panel)
+            gparams[self.off.readout] += h_i[..cc].iter().sum::<f64>();
             gparams[self.off.readout + 1] += s.inv[i];
             gparams[self.off.bias + species[i]] += 1.0;
-            // d inv/dh = 2 h / sqrt(4 pi): the closed form of the
-            // (0, L, L) Gaunt VJP (Y_00 is constant)
-            let g_i = &mut s.g_h[i * nf..(i + 1) * nf];
+            // d inv/dh = 2 h / sqrt(4 pi) componentwise: the closed form
+            // of the (0, L, L) Gaunt VJP (Y_00 is constant), channel by
+            // channel
+            let g_i = &mut s.g_h[i * nd..(i + 1) * nd];
             for (gv, hv) in g_i.iter_mut().zip(h_i) {
                 *gv = 2.0 * c_quad * INV_SQRT_4PI * hv;
             }
-            g_i[0] += c_lin;
+            for gv in g_i[..cc].iter_mut() {
+                *gv += c_lin;
+            }
         }
         // --- layers, top down ---
         let npow = num_coeffs(c.l_pow());
+        let nu_f = c.nu as f64;
         for t in (0..c.n_layers).rev() {
             let lt = self.off.layer(t);
-            let h_base = t * ma * nf;
-            s.g_hprev[..n_atoms * nf].fill(0.0);
-            s.g_a[..n_atoms * nf].fill(0.0);
+            let h_base = t * ma * nd;
+            s.g_hprev[..n_atoms * nd].fill(0.0);
+            s.g_a[..n_atoms * nd].fill(0.0);
             for i in 0..n_atoms {
-                let g_h_i = &s.g_h[i * nf..(i + 1) * nf];
-                let h_i = &s.h[h_base + i * nf..h_base + (i + 1) * nf];
-                let a_i = &s.a[(t * ma + i) * nf..(t * ma + i + 1) * nf];
-                let b_i = &s.b[(t * ma + i) * nf..(t * ma + i + 1) * nf];
-                deg_dot_add(c.l, g_h_i, h_i,
-                            &mut gparams[lt + self.off.mix_res..
-                                         lt + self.off.mix_res + c.l + 1]);
-                deg_dot_add(c.l, g_h_i, a_i,
-                            &mut gparams[lt + self.off.mix_a..
-                                         lt + self.off.mix_a + c.l + 1]);
-                deg_dot_add(c.l, g_h_i, b_i,
-                            &mut gparams[lt + self.off.mix_b..
-                                         lt + self.off.mix_b + c.l + 1]);
-                deg_scale_add(c.l, &p[lt + self.off.mix_res..], g_h_i,
-                              &mut s.g_hprev[i * nf..(i + 1) * nf]);
-                deg_scale_add(c.l, &p[lt + self.off.mix_a..], g_h_i,
-                              &mut s.g_a[i * nf..(i + 1) * nf]);
-                s.g_b.fill(0.0);
-                deg_scale_add(c.l, &p[lt + self.off.mix_b..], g_h_i,
-                              &mut s.g_b);
-                // many-body VJP: nu * P_L(f_g f_a^{nu-1})
-                self.vjp_mb.apply_into(
-                    &s.g_b,
-                    &s.pw[(t * ma + i) * npow..(t * ma + i + 1) * npow],
-                    &mut s.msg,
-                    &mut s.vjp_mb_s,
+                let g_h_i = &s.g_h[i * nd..(i + 1) * nd];
+                let h_i = &s.h[h_base + i * nd..h_base + (i + 1) * nd];
+                let a_i = &s.a[(t * ma + i) * nd..(t * ma + i + 1) * nd];
+                let b_i = &s.b[(t * ma + i) * nd..(t * ma + i + 1) * nd];
+                self.nir.dot_paths_add(
+                    g_h_i, h_i,
+                    &mut gparams[lt + self.off.mix_res
+                                 ..lt + self.off.mix_res + n_mix],
                 );
-                let g_a_i =
-                    &mut s.g_a[i * nf..(i + 1) * nf];
-                for (gv, mv) in g_a_i.iter_mut().zip(&s.msg) {
-                    *gv += c.nu as f64 * mv;
+                self.nir.dot_paths_add(
+                    g_h_i, a_i,
+                    &mut gparams[lt + self.off.mix_a
+                                 ..lt + self.off.mix_a + n_mix],
+                );
+                self.nir.dot_paths_add(
+                    g_h_i, b_i,
+                    &mut gparams[lt + self.off.mix_b
+                                 ..lt + self.off.mix_b + n_mix],
+                );
+                self.nir.scale_paths_add(
+                    &p[lt + self.off.mix_res..lt + self.off.mix_res + n_mix],
+                    g_h_i, &mut s.g_hprev[i * nd..(i + 1) * nd],
+                );
+                self.nir.scale_paths_add(
+                    &p[lt + self.off.mix_a..lt + self.off.mix_a + n_mix],
+                    g_h_i, &mut s.g_a[i * nd..(i + 1) * nd],
+                );
+                s.g_b.fill(0.0);
+                self.nir.scale_paths_add(
+                    &p[lt + self.off.mix_b..lt + self.off.mix_b + n_mix],
+                    g_h_i, &mut s.g_b,
+                );
+                // many-body VJP per channel: nu * P_L(f_g f_a^{nu-1})
+                for ch in 0..cc {
+                    self.nir.gather_channel(&s.g_b, ch, &mut s.ch_b);
+                    self.vjp_mb.apply_into(
+                        &s.ch_b,
+                        &s.pw[((t * ma + i) * cc + ch) * npow
+                              ..((t * ma + i) * cc + ch + 1) * npow],
+                        &mut s.msg,
+                        &mut s.vjp_mb_s,
+                    );
+                    for mv in s.msg.iter_mut() {
+                        *mv *= nu_f;
+                    }
+                    self.nir.scatter_channel_add(
+                        &s.msg, ch, &mut s.g_a[i * nd..(i + 1) * nd],
+                    );
                 }
             }
             // --- edges: message VJPs + geometry chain to the forces ---
             for (e, &(i, j)) in edges.iter().enumerate() {
-                let h2 = &s.eh2[(t * c.max_edges + e) * nh2
-                    ..(t * c.max_edges + e + 1) * nh2];
                 let y_e = &s.ey[e * nff..(e + 1) * nff];
                 let gy_e = &s.egy[e * nff..(e + 1) * nff];
-                // rebuild the filter coefficients f_e[lm] = h2[l2] y[lm]
-                for l2 in 0..nh2 {
-                    let base = lm_index(l2, -(l2 as i64));
-                    for m in 0..(2 * l2 + 1) {
-                        s.filt[base + m] = h2[l2] * y_e[base + m];
-                    }
-                }
-                let g_m = &s.g_a[i * nf..(i + 1) * nf];
-                // VJP w.r.t. the source feature h_j: P_L(f_g f_filter)
-                self.vjp_x.apply_into(g_m, &s.filt, &mut s.msg,
-                                      &mut s.vjp_x_s);
-                let g_hj =
-                    &mut s.g_hprev[j * nf..(j + 1) * nf];
-                for (gv, mv) in g_hj.iter_mut().zip(&s.msg) {
-                    *gv += mv;
-                }
-                // VJP w.r.t. the filter: P_Lf(f_g f_hj)
-                self.vjp_f.apply_into(
-                    g_m,
-                    &s.h[h_base + j * nf..h_base + (j + 1) * nf],
-                    &mut s.g_f,
-                    &mut s.vjp_f_s,
-                );
-                // chain through h2 (radial) and y (angular)
                 let rb = &s.erb[e * k..(e + 1) * k];
                 let drb = &s.edrb[e * k..(e + 1) * k];
                 let mut g_r = 0.0;
                 let mut g_d = [0.0f64; 3];
-                for l2 in 0..nh2 {
-                    let base = lm_index(l2, -(l2 as i64));
-                    let mut g_h2 = 0.0;
-                    for m in 0..(2 * l2 + 1) {
-                        g_h2 += s.g_f[base + m] * y_e[base + m];
-                        for ax in 0..3 {
-                            g_d[ax] += h2[l2] * s.g_f[base + m]
-                                * gy_e[base + m][ax];
+                for ch in 0..cc {
+                    let h2 = &s.eh2[((t * me + e) * cc + ch) * nh2
+                        ..((t * me + e) * cc + ch + 1) * nh2];
+                    // rebuild the filter f_e[lm] = h2[ch][l2] y[lm]
+                    s.filt.copy_from_slice(y_e);
+                    self.fir.scale_paths_inplace(&mut s.filt, h2);
+                    {
+                        let g_a_i = &s.g_a[i * nd..(i + 1) * nd];
+                        self.nir.gather_channel(g_a_i, ch, &mut s.ch_a);
+                    }
+                    // VJP w.r.t. the source feature h_j: P_L(f_g f_filt)
+                    self.vjp_x.apply_into(&s.ch_a, &s.filt, &mut s.msg,
+                                          &mut s.vjp_x_s);
+                    self.nir.scatter_channel_add(
+                        &s.msg, ch, &mut s.g_hprev[j * nd..(j + 1) * nd],
+                    );
+                    // VJP w.r.t. the filter: P_Lf(f_g f_hj)
+                    {
+                        let h_j = &s.h[h_base + j * nd..h_base + (j + 1) * nd];
+                        self.nir.gather_channel(h_j, ch, &mut s.ch_b);
+                    }
+                    self.vjp_f.apply_into(&s.ch_a, &s.ch_b, &mut s.g_f,
+                                          &mut s.vjp_f_s);
+                    // chain through h2 (radial) and y (angular)
+                    for l2 in 0..nh2 {
+                        let base = lm_index(l2, -(l2 as i64));
+                        let mut g_h2 = 0.0;
+                        for m in 0..(2 * l2 + 1) {
+                            g_h2 += s.g_f[base + m] * y_e[base + m];
+                            for ax in 0..3 {
+                                g_d[ax] += h2[l2] * s.g_f[base + m]
+                                    * gy_e[base + m][ax];
+                            }
                         }
+                        let row = lt + self.off.w_rad + (l2 * cc + ch) * k;
+                        let gw = &mut gparams[row..row + k];
+                        for (gwv, rbv) in gw.iter_mut().zip(rb) {
+                            *gwv += g_h2 * rbv;
+                        }
+                        let w_row = &p[row..row + k];
+                        g_r += g_h2
+                            * w_row.iter().zip(drb).map(|(w, d)| w * d)
+                                .sum::<f64>();
                     }
-                    let gw = &mut gparams[lt + self.off.w_rad + l2 * k
-                        ..lt + self.off.w_rad + (l2 + 1) * k];
-                    for (gwv, rbv) in gw.iter_mut().zip(rb) {
-                        *gwv += g_h2 * rbv;
-                    }
-                    let w_row = &p[lt + self.off.w_rad + l2 * k
-                        ..lt + self.off.w_rad + (l2 + 1) * k];
-                    g_r += g_h2
-                        * w_row.iter().zip(drb).map(|(w, d)| w * d)
-                            .sum::<f64>();
                 }
                 for ax in 0..3 {
                     g_d[ax] += g_r * s.eu[e][ax];
@@ -664,9 +747,10 @@ impl Model {
             }
             std::mem::swap(&mut s.g_h, &mut s.g_hprev);
         }
-        // --- species embedding (scalar channel of h_0) ---
+        // --- species embedding (every channel's scalar of h_0) ---
         for i in 0..n_atoms {
-            gparams[self.off.embed + species[i]] += s.g_h[i * nf];
+            gparams[self.off.embed + species[i]] +=
+                s.g_h[i * nd..i * nd + cc].iter().sum::<f64>();
         }
     }
 
@@ -724,7 +808,9 @@ impl Model {
 
     // --- serialization (util::json; no serde offline) ---
 
-    /// Checkpoint as a JSON document (config + flat parameters).
+    /// Checkpoint as a JSON document (config + flat parameters).  The
+    /// node layout is also embedded as an `irreps` string for human
+    /// readers and layout-checking tools.
     pub fn to_json(&self) -> Json {
         let c = &self.cfg;
         let method = match c.method {
@@ -737,6 +823,7 @@ impl Model {
                 ("l", Json::Num(c.l as f64)),
                 ("l_filter", Json::Num(c.l_filter as f64)),
                 ("nu", Json::Num(c.nu as f64)),
+                ("channels", Json::Num(c.channels as f64)),
                 ("n_layers", Json::Num(c.n_layers as f64)),
                 ("n_species", Json::Num(c.n_species as f64)),
                 ("n_radial", Json::Num(c.n_radial as f64)),
@@ -744,12 +831,15 @@ impl Model {
                 ("method", Json::Str(method.to_string())),
                 ("max_atoms", Json::Num(c.max_atoms as f64)),
                 ("max_edges", Json::Num(c.max_edges as f64)),
+                ("irreps", Json::Str(format!("{}", self.nir))),
             ])),
             ("params", Json::arr_f64(&self.params)),
         ])
     }
 
-    /// Rebuild a model from [`Model::to_json`] output.
+    /// Rebuild a model from [`Model::to_json`] output.  Checkpoints
+    /// written before the multi-channel layout (no `channels` key) load
+    /// as `channels = 1`, whose parameter layout is unchanged.
     pub fn from_json(doc: &Json) -> Result<Model> {
         let cj = doc.get("config").ok_or_else(|| err!("missing config"))?;
         let get = |k: &str| -> Result<usize> {
@@ -765,6 +855,8 @@ impl Model {
             l: get("l")?,
             l_filter: get("l_filter")?,
             nu: get("nu")?,
+            channels: cj.get("channels").and_then(Json::as_usize)
+                .unwrap_or(1),
             n_layers: get("n_layers")?,
             n_species: get("n_species")?,
             n_radial: get("n_radial")?,
@@ -774,6 +866,15 @@ impl Model {
             max_atoms: get("max_atoms")?,
             max_edges: get("max_edges")?,
         };
+        if let Some(text) = cj.get("irreps").and_then(Json::as_str) {
+            let declared = Irreps::parse(text)?;
+            if declared != cfg.node_irreps() {
+                return Err(err!(
+                    "checkpoint irreps '{text}' disagree with config \
+                     (expected {})", cfg.node_irreps()
+                ));
+            }
+        }
         let params = doc
             .get("params")
             .and_then(Json::as_f64_vec)
@@ -873,6 +974,11 @@ mod tests {
         assert_eq!(m.params.len(), cfg.n_params());
         // S=3 embed + 3 bias + 2 layers * (3*6 w_rad + 3*3 mixes) + 2
         assert_eq!(cfg.n_params(), 6 + 2 * (18 + 9) + 2);
+        // channels scale every per-layer family
+        let cfg2 = ModelConfig { channels: 2, ..Default::default() };
+        assert_eq!(cfg2.n_params(), 6 + 2 * 2 * (18 + 9) + 2);
+        assert_eq!(cfg2.node_dim(), 2 * cfg2.nf());
+        assert_eq!(cfg2.node_irreps().n_paths(), 2 * 3);
     }
 
     #[test]
@@ -886,6 +992,30 @@ mod tests {
         let (e2, f2) = m2.energy_forces(&pos, &species);
         assert_eq!(e1, e2);
         assert_eq!(f1, f2);
+        // multi-channel configs round-trip too (channels + irreps keys)
+        let m3 = Model::new(ModelConfig { channels: 3, ..Default::default() },
+                            6);
+        let m4 = Model::from_json(&m3.to_json()).unwrap();
+        assert_eq!(m3.cfg, m4.cfg);
+        assert_eq!(m3.params, m4.params);
+    }
+
+    #[test]
+    fn checkpoints_without_channels_load_as_single_channel() {
+        // a pre-multi-channel checkpoint: no `channels`, no `irreps`
+        let m = Model::new(ModelConfig::default(), 9);
+        let doc = m.to_json();
+        let text = doc.to_string()
+            .replace("\"channels\":1,", "")
+            .replace("\"irreps\":\"1x0 + 1x1 + 1x2\",", "");
+        let doc2 = json::parse(&text).unwrap();
+        // both keys must REALLY be gone, or this test silently stops
+        // exercising the legacy no-channels/no-irreps load path
+        assert_eq!(doc2.get("config").and_then(|c| c.get("channels")), None);
+        assert_eq!(doc2.get("config").and_then(|c| c.get("irreps")), None);
+        let m2 = Model::from_json(&doc2).unwrap();
+        assert_eq!(m2.cfg.channels, 1);
+        assert_eq!(m.params, m2.params);
     }
 
     #[test]
@@ -905,6 +1035,115 @@ mod tests {
             let tot: f64 = f.chunks_exact(3).map(|c| c[ax]).sum();
             assert!(tot.abs() < 1e-9, "net force {tot} on axis {ax}");
         }
+    }
+
+    #[test]
+    fn multi_channel_forward_backward_stay_consistent() {
+        // the multi-channel assembly obeys the same global checks as the
+        // single-channel model: energy reproducible, forces non-trivial,
+        // Newton's third law exact
+        for channels in [2usize, 3] {
+            let m = Model::new(
+                ModelConfig { channels, nu: 3, ..Default::default() }, 21);
+            let (pos, species) = toy(11, 6);
+            let edges = m.build_edges(&pos);
+            let mut s = m.scratch();
+            let e1 = m.energy_into(&pos, &species, &edges, &mut s);
+            let mut f = vec![0.0; 3 * pos.len()];
+            let e2 = m.energy_forces_into(&pos, &species, &edges, &mut f,
+                                          &mut s);
+            assert_eq!(e1, e2, "channels={channels}");
+            assert!(f.iter().any(|v| v.abs() > 1e-9),
+                    "channels={channels}: forces all zero");
+            for ax in 0..3 {
+                let tot: f64 = f.chunks_exact(3).map(|c| c[ax]).sum();
+                assert!(tot.abs() < 1e-9,
+                        "channels={channels}: net force {tot} axis {ax}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_channel_model_decomposes_into_per_channel_models() {
+        // channels interact only through the (linear) readout sum, so a
+        // C-channel model must equal the sum of the C single-channel
+        // models carved out of its parameter vector, minus the (C-1)
+        // extra bias copies — this pins the per-(channel, l) parameter
+        // layout exactly (a single mis-indexed weight breaks it)
+        let cc = 3usize;
+        let cfg = ModelConfig { channels: cc, nu: 3, ..Default::default() };
+        let multi = Model::new(cfg, 51);
+        let off_m = Offsets::new(&cfg);
+        let cfg1 = ModelConfig { channels: 1, ..cfg };
+        let off_s = Offsets::new(&cfg1);
+        let (k, nh2) = (cfg.n_radial, cfg.l_filter + 1);
+        let (pos, species) = toy(17, 6);
+        let (e_multi, f_multi) = multi.energy_forces(&pos, &species);
+        let bias_sum: f64 = species
+            .iter()
+            .map(|&s| multi.params[off_m.bias + s])
+            .sum();
+        let mut e_sum = 0.0;
+        let mut f_sum = vec![[0.0f64; 3]; pos.len()];
+        for c in 0..cc {
+            // carve channel c's parameters into the single-channel layout
+            let mut p1 = vec![0.0; cfg1.n_params()];
+            p1[..2 * cfg.n_species]
+                .copy_from_slice(&multi.params[..2 * cfg.n_species]);
+            for t in 0..cfg.n_layers {
+                let (lm, ls) = (off_m.layer(t), off_s.layer(t));
+                for l2 in 0..nh2 {
+                    for kk in 0..k {
+                        p1[ls + off_s.w_rad + l2 * k + kk] = multi.params
+                            [lm + off_m.w_rad + (l2 * cc + c) * k + kk];
+                    }
+                }
+                for l in 0..=cfg.l {
+                    p1[ls + off_s.mix_res + l] =
+                        multi.params[lm + off_m.mix_res + l * cc + c];
+                    p1[ls + off_s.mix_a + l] =
+                        multi.params[lm + off_m.mix_a + l * cc + c];
+                    p1[ls + off_s.mix_b + l] =
+                        multi.params[lm + off_m.mix_b + l * cc + c];
+                }
+            }
+            p1[off_s.readout] = multi.params[off_m.readout];
+            p1[off_s.readout + 1] = multi.params[off_m.readout + 1];
+            let single = Model::from_params(cfg1, p1);
+            let (e_c, f_c) = single.energy_forces(&pos, &species);
+            e_sum += e_c;
+            for (fs, fc) in f_sum.iter_mut().zip(&f_c) {
+                for ax in 0..3 {
+                    fs[ax] += fc[ax];
+                }
+            }
+        }
+        let want_e = e_sum - (cc as f64 - 1.0) * bias_sum;
+        assert!(
+            (e_multi - want_e).abs() < 1e-9 * (1.0 + want_e.abs()),
+            "multi-channel energy {e_multi} != decomposition {want_e}"
+        );
+        for (fm, fs) in f_multi.iter().zip(&f_sum) {
+            for ax in 0..3 {
+                assert!(
+                    (fm[ax] - fs[ax]).abs() < 1e-9,
+                    "force decomposition broke: {} vs {}", fm[ax], fs[ax]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn extra_channels_change_the_model() {
+        // channels see independent weights, so a 2-channel model is not
+        // the 1-channel model doubled
+        let (pos, species) = toy(13, 5);
+        let m1 = Model::new(ModelConfig::default(), 30);
+        let m2 = Model::new(ModelConfig { channels: 2, ..Default::default() },
+                            30);
+        let (e1, _) = m1.energy_forces(&pos, &species);
+        let (e2, _) = m2.energy_forces(&pos, &species);
+        assert!((e1 - e2).abs() > 1e-9, "{e1} vs {e2}");
     }
 
     #[test]

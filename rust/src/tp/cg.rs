@@ -58,10 +58,27 @@ impl CgPlan {
     /// Sparse contraction over the non-zero coefficients.
     pub fn apply_sparse(&self, x1: &[f64], x2: &[f64]) -> Vec<f64> {
         let mut out = vec![0.0; self.n3];
+        self.apply_sparse_into(x1, x2, &mut out);
+        out
+    }
+
+    /// [`CgPlan::apply_sparse`] into a caller buffer (overwritten).
+    /// Allocation-free.
+    pub fn apply_sparse_into(&self, x1: &[f64], x2: &[f64], out: &mut [f64]) {
+        out[..self.n3].fill(0.0);
         for (k, i, j, v) in &self.sparse {
             out[*k as usize] += v * x1[*i as usize] * x2[*j as usize];
         }
-        out
+    }
+
+    /// Exact VJP w.r.t. the first operand: `grad[i] = sum_{k,j}
+    /// C[k,i,j] g[k] x2[j]` over the same sparse coefficient list.
+    /// Overwrites `grad`; allocation-free.
+    pub fn vjp_x1_into(&self, g: &[f64], x2: &[f64], grad: &mut [f64]) {
+        grad[..self.n1].fill(0.0);
+        for (k, i, j, v) in &self.sparse {
+            grad[*i as usize] += v * g[*k as usize] * x2[*j as usize];
+        }
     }
 
     /// Batched sparse apply.

@@ -1,36 +1,38 @@
-//! Serving-grade batched tensor-product engine.
+//! Serving-grade plan cache for the unified equivariant-op layer.
 //!
-//! Two pieces turn the one-shot plans of [`cg`](crate::tp::cg) /
-//! [`gaunt`](crate::tp::gaunt) / [`escn`](crate::tp::escn) into something
-//! a coordinator can run under heavy traffic:
+//! [`PlanCache`] is a process-wide memo of built plans keyed by
+//! [`OpKey`] — plan construction is the expensive part of a tensor
+//! product (tables, coupling tensors: milliseconds to seconds at high
+//! L); apply is microseconds.  e3nn-style systems win by compiling the
+//! coupling once — this is that, with build-once-under-contention
+//! semantics: concurrent requests for a missing key serialize on one
+//! build and share the resulting `Arc`.
 //!
-//! * [`PlanCache`] — a process-wide memo of built plans keyed by
-//!   `(degrees, method)`.  Plan construction is the expensive part of a
-//!   tensor product (tables, coupling tensors: milliseconds to seconds at
-//!   high L); apply is microseconds.  e3nn-style systems win by compiling
-//!   the coupling once — this is that, with build-once-under-contention
-//!   semantics: concurrent requests for a missing key serialize on one
-//!   build and share the resulting `Arc`.
-//! * Parallel batch applies — [`gaunt_apply_batch_par`],
-//!   [`cg_apply_batch_par`], [`escn_apply_batch_par`] shard independent
-//!   batch rows across cores through [`crate::util::pool`], bitwise
-//!   identical to the serial path.
+//! Every cached plan implements
+//! [`EquivariantOp`](crate::tp::op::EquivariantOp), so callers that
+//! don't care which family they run dispatch uniformly through
+//! [`PlanCache::op`] and the generic batch drivers
+//! ([`crate::tp::op::apply_batch_par`]); the typed accessors remain for
+//! callers (the model) that need a concrete plan's extra surface.
+//!
+//! The cache keeps per-key hit counters ([`PlanCache::stats`]) so the
+//! serving layer can observe plan churn (cold keys, unexpected rebuild
+//! storms) through its metrics.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock, RwLock};
 
-use crate::num_coeffs;
 use crate::tp::cg::CgPlan;
 use crate::tp::escn::{EscnPlan, GauntConvPlan};
 use crate::tp::gaunt::{ConvMethod, GauntPlan};
 use crate::tp::many_body::ManyBodyPlan;
-use crate::util::pool;
+use crate::tp::op::EquivariantOp;
 
-/// Cache key: plan family + the degrees (and conv method) that fully
+/// Cache key: op family + the degrees (and conv method) that fully
 /// determine a plan's tables.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum PlanKey {
+pub enum OpKey {
     /// Clebsch-Gordan full TP plan.
     Cg { l1: usize, l2: usize, l3: usize },
     /// Gaunt TP plan (method changes the convolution backend).
@@ -53,6 +55,31 @@ enum CachedPlan {
     ManyBody(Arc<ManyBodyPlan>),
 }
 
+struct Entry {
+    plan: CachedPlan,
+    hits: AtomicUsize,
+}
+
+/// One key's row in a [`PlanCache::stats`] snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct KeyStats {
+    pub key: OpKey,
+    pub hits: usize,
+}
+
+/// Point-in-time cache statistics.
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    /// plans actually constructed (one per distinct key)
+    pub builds: usize,
+    /// read-path hits served without building
+    pub hits: usize,
+    /// cached plans currently held
+    pub len: usize,
+    /// per-key hit counts, hottest first
+    pub per_key: Vec<KeyStats>,
+}
+
 /// Process-wide memo of tensor-product plans.
 ///
 /// Reads take a shared lock (the hot path: one `HashMap` probe + `Arc`
@@ -63,7 +90,7 @@ enum CachedPlan {
 /// a cold-start cost today; if warm-path stalls ever matter, move to
 /// per-key once-cells built outside the map lock.
 pub struct PlanCache {
-    plans: RwLock<HashMap<PlanKey, CachedPlan>>,
+    plans: RwLock<HashMap<OpKey, Entry>>,
     builds: AtomicUsize,
     hits: AtomicUsize,
 }
@@ -85,82 +112,101 @@ impl PlanCache {
         GLOBAL.get_or_init(PlanCache::new)
     }
 
-    fn lookup(&self, key: &PlanKey) -> Option<CachedPlan> {
-        let found = self.plans.read().unwrap().get(key).cloned();
-        if found.is_some() {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+    /// The ONE memoization body every typed accessor shares: shared-lock
+    /// probe (counting the hit), write-lock re-check (ALSO counted — a
+    /// request served by another thread's fresh build is a hit), build
+    /// + insert otherwise.
+    fn get_or_build<T>(
+        &self,
+        key: OpKey,
+        extract: impl Fn(&CachedPlan) -> Option<Arc<T>>,
+        wrap: impl FnOnce(Arc<T>) -> CachedPlan,
+        build: impl FnOnce() -> T,
+    ) -> Arc<T> {
+        {
+            let guard = self.plans.read().unwrap();
+            if let Some(e) = guard.get(&key) {
+                if let Some(p) = extract(&e.plan) {
+                    e.hits.fetch_add(1, Ordering::Relaxed);
+                    drop(guard);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return p;
+                }
+            }
         }
-        found
+        let mut w = self.plans.write().unwrap();
+        if let Some(e) = w.get(&key) {
+            if let Some(p) = extract(&e.plan) {
+                e.hits.fetch_add(1, Ordering::Relaxed);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return p;
+            }
+        }
+        let p = Arc::new(build());
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        w.insert(key, Entry {
+            plan: wrap(p.clone()),
+            hits: AtomicUsize::new(0),
+        });
+        p
     }
 
     /// Memoized [`CgPlan`] for `(l1, l2, l3)`.
     pub fn cg(&self, l1: usize, l2: usize, l3: usize) -> Arc<CgPlan> {
-        let key = PlanKey::Cg { l1, l2, l3 };
-        if let Some(CachedPlan::Cg(p)) = self.lookup(&key) {
-            return p;
-        }
-        let mut w = self.plans.write().unwrap();
-        if let Some(CachedPlan::Cg(p)) = w.get(&key) {
-            return p.clone();
-        }
-        let p = Arc::new(CgPlan::new(l1, l2, l3));
-        self.builds.fetch_add(1, Ordering::Relaxed);
-        w.insert(key, CachedPlan::Cg(p.clone()));
-        p
+        self.get_or_build(
+            OpKey::Cg { l1, l2, l3 },
+            |c| match c {
+                CachedPlan::Cg(p) => Some(p.clone()),
+                _ => None,
+            },
+            CachedPlan::Cg,
+            || CgPlan::new(l1, l2, l3),
+        )
     }
 
     /// Memoized [`GauntPlan`] for `(l1, l2, l3, method)`.
     pub fn gaunt(
         &self, l1: usize, l2: usize, l3: usize, method: ConvMethod,
     ) -> Arc<GauntPlan> {
-        let key = PlanKey::Gaunt { l1, l2, l3, method };
-        if let Some(CachedPlan::Gaunt(p)) = self.lookup(&key) {
-            return p;
-        }
-        let mut w = self.plans.write().unwrap();
-        if let Some(CachedPlan::Gaunt(p)) = w.get(&key) {
-            return p.clone();
-        }
-        let p = Arc::new(GauntPlan::new(l1, l2, l3, method));
-        self.builds.fetch_add(1, Ordering::Relaxed);
-        w.insert(key, CachedPlan::Gaunt(p.clone()));
-        p
+        self.get_or_build(
+            OpKey::Gaunt { l1, l2, l3, method },
+            |c| match c {
+                CachedPlan::Gaunt(p) => Some(p.clone()),
+                _ => None,
+            },
+            CachedPlan::Gaunt,
+            || GauntPlan::new(l1, l2, l3, method),
+        )
     }
 
     /// Memoized [`EscnPlan`] for `(l_in, l_filter, l_out)`.
     pub fn escn(
         &self, l_in: usize, l_filter: usize, l_out: usize,
     ) -> Arc<EscnPlan> {
-        let key = PlanKey::Escn { l_in, l_filter, l_out };
-        if let Some(CachedPlan::Escn(p)) = self.lookup(&key) {
-            return p;
-        }
-        let mut w = self.plans.write().unwrap();
-        if let Some(CachedPlan::Escn(p)) = w.get(&key) {
-            return p.clone();
-        }
-        let p = Arc::new(EscnPlan::new(l_in, l_filter, l_out));
-        self.builds.fetch_add(1, Ordering::Relaxed);
-        w.insert(key, CachedPlan::Escn(p.clone()));
-        p
+        self.get_or_build(
+            OpKey::Escn { l_in, l_filter, l_out },
+            |c| match c {
+                CachedPlan::Escn(p) => Some(p.clone()),
+                _ => None,
+            },
+            CachedPlan::Escn,
+            || EscnPlan::new(l_in, l_filter, l_out),
+        )
     }
 
     /// Memoized [`GauntConvPlan`] for `(l_in, l_filter, l_out)`.
     pub fn gaunt_conv(
         &self, l_in: usize, l_filter: usize, l_out: usize,
     ) -> Arc<GauntConvPlan> {
-        let key = PlanKey::GauntConv { l_in, l_filter, l_out };
-        if let Some(CachedPlan::GauntConv(p)) = self.lookup(&key) {
-            return p;
-        }
-        let mut w = self.plans.write().unwrap();
-        if let Some(CachedPlan::GauntConv(p)) = w.get(&key) {
-            return p.clone();
-        }
-        let p = Arc::new(GauntConvPlan::new(l_in, l_filter, l_out));
-        self.builds.fetch_add(1, Ordering::Relaxed);
-        w.insert(key, CachedPlan::GauntConv(p.clone()));
-        p
+        self.get_or_build(
+            OpKey::GauntConv { l_in, l_filter, l_out },
+            |c| match c {
+                CachedPlan::GauntConv(p) => Some(p.clone()),
+                _ => None,
+            },
+            CachedPlan::GauntConv,
+            || GauntConvPlan::new(l_in, l_filter, l_out),
+        )
     }
 
     /// Memoized [`ManyBodyPlan`] for `(nu, l, l_out)`.
@@ -174,18 +220,35 @@ impl PlanCache {
             "many_body plan: need nu >= 1 and l_out <= nu*l \
              (got nu={nu}, l={l}, l_out={l_out})"
         );
-        let key = PlanKey::ManyBody { nu, l, l_out };
-        if let Some(CachedPlan::ManyBody(p)) = self.lookup(&key) {
-            return p;
+        self.get_or_build(
+            OpKey::ManyBody { nu, l, l_out },
+            |c| match c {
+                CachedPlan::ManyBody(p) => Some(p.clone()),
+                _ => None,
+            },
+            CachedPlan::ManyBody,
+            || ManyBodyPlan::new(nu, l, l_out),
+        )
+    }
+
+    /// The uniform entry point: resolve ANY key to its cached plan as a
+    /// type-erased [`EquivariantOp`].  Coordinator, benches, and CLI
+    /// dispatch through this; the typed accessors above remain for
+    /// callers that need a concrete plan's extra surface.
+    pub fn op(&self, key: &OpKey) -> Arc<dyn EquivariantOp> {
+        match *key {
+            OpKey::Cg { l1, l2, l3 } => self.cg(l1, l2, l3),
+            OpKey::Gaunt { l1, l2, l3, method } => {
+                self.gaunt(l1, l2, l3, method)
+            }
+            OpKey::Escn { l_in, l_filter, l_out } => {
+                self.escn(l_in, l_filter, l_out)
+            }
+            OpKey::GauntConv { l_in, l_filter, l_out } => {
+                self.gaunt_conv(l_in, l_filter, l_out)
+            }
+            OpKey::ManyBody { nu, l, l_out } => self.many_body(nu, l, l_out),
         }
-        let mut w = self.plans.write().unwrap();
-        if let Some(CachedPlan::ManyBody(p)) = w.get(&key) {
-            return p.clone();
-        }
-        let p = Arc::new(ManyBodyPlan::new(nu, l, l_out));
-        self.builds.fetch_add(1, Ordering::Relaxed);
-        w.insert(key, CachedPlan::ManyBody(p.clone()));
-        p
     }
 
     /// Number of plans actually constructed (one per distinct key, even
@@ -209,6 +272,26 @@ impl PlanCache {
         self.len() == 0
     }
 
+    /// Snapshot of builds/hits/len plus per-key hit counts (hottest
+    /// first) — what the serving metrics report.
+    pub fn stats(&self) -> CacheStats {
+        let guard = self.plans.read().unwrap();
+        let mut per_key: Vec<KeyStats> = guard
+            .iter()
+            .map(|(key, e)| KeyStats {
+                key: *key,
+                hits: e.hits.load(Ordering::Relaxed),
+            })
+            .collect();
+        per_key.sort_by(|a, b| b.hits.cmp(&a.hits));
+        CacheStats {
+            builds: self.builds(),
+            hits: self.hits(),
+            len: guard.len(),
+            per_key,
+        }
+    }
+
     /// Drop every cached plan (outstanding `Arc`s stay valid).
     pub fn clear(&self) {
         self.plans.write().unwrap().clear();
@@ -221,115 +304,11 @@ impl Default for PlanCache {
     }
 }
 
-/// Batched Gaunt TP sharded across `threads` workers (`0` = all cores).
-/// Row-for-row identical to [`GauntPlan::apply_batch`].
-///
-/// Workers share the plan's read-only tables and each own one
-/// [`GauntScratch`](crate::tp::gaunt::GauntScratch) (allocated once per
-/// worker via [`pool::shard_rows_with`]), so the fused per-row apply has
-/// zero steady-state allocations.
-pub fn gaunt_apply_batch_par(
-    plan: &GauntPlan, x1: &[f64], x2: &[f64], rows: usize, threads: usize,
-) -> Vec<f64> {
-    let n1 = num_coeffs(plan.l1);
-    let n2 = num_coeffs(plan.l2);
-    let n3 = num_coeffs(plan.l3);
-    debug_assert_eq!(x1.len(), rows * n1);
-    debug_assert_eq!(x2.len(), rows * n2);
-    let mut out = vec![0.0; rows * n3];
-    let threads = pool::resolve_threads(threads);
-    pool::shard_rows_with(
-        &mut out,
-        n3,
-        threads,
-        || plan.scratch(),
-        |r, row, scratch| {
-            plan.apply_into(
-                &x1[r * n1..(r + 1) * n1],
-                &x2[r * n2..(r + 1) * n2],
-                row,
-                scratch,
-            );
-        },
-    );
-    out
-}
-
-/// Batched sparse CG TP sharded across `threads` workers (`0` = all
-/// cores).  Row-for-row identical to [`CgPlan::apply_batch`].
-pub fn cg_apply_batch_par(
-    plan: &CgPlan, x1: &[f64], x2: &[f64], rows: usize, threads: usize,
-) -> Vec<f64> {
-    let n1 = num_coeffs(plan.l1);
-    let n2 = num_coeffs(plan.l2);
-    let n3 = num_coeffs(plan.l3);
-    debug_assert_eq!(x1.len(), rows * n1);
-    debug_assert_eq!(x2.len(), rows * n2);
-    let mut out = vec![0.0; rows * n3];
-    let threads = pool::resolve_threads(threads);
-    pool::shard_rows(&mut out, n3, threads, |r, row| {
-        let y = plan
-            .apply_sparse(&x1[r * n1..(r + 1) * n1], &x2[r * n2..(r + 1) * n2]);
-        row.copy_from_slice(&y);
-    });
-    out
-}
-
-/// Batched Gaunt-accelerated edge convolution sharded across `threads`
-/// workers (`0` = all cores): row `r` convolves `x[r]` along `dirs[r]`
-/// with shared per-degree filter weights `h2`, through the plan's cached
-/// aligned-filter spectra.  Each worker owns one
-/// [`GauntConvScratch`](crate::tp::escn::GauntConvScratch), so the
-/// aligned-frame contraction AND the per-edge Wigner rotation round
-/// trip are allocation-free per row (only the per-row output `Vec` of
-/// `apply_with` remains).
-pub fn gaunt_conv_apply_batch_par(
-    plan: &GauntConvPlan, x: &[f64], dirs: &[[f64; 3]], h2: &[f64],
-    threads: usize,
-) -> Vec<f64> {
-    let n_in = num_coeffs(plan.l_in);
-    let n_out = num_coeffs(plan.l_out);
-    let rows = dirs.len();
-    debug_assert_eq!(x.len(), rows * n_in);
-    let mut out = vec![0.0; rows * n_out];
-    let threads = pool::resolve_threads(threads);
-    pool::shard_rows_with(
-        &mut out,
-        n_out,
-        threads,
-        || plan.scratch(),
-        |r, row, scratch| {
-            let y = plan.apply_with(
-                &x[r * n_in..(r + 1) * n_in], dirs[r], h2, scratch,
-            );
-            row.copy_from_slice(&y);
-        },
-    );
-    out
-}
-
-/// Batched eSCN edge convolution sharded across `threads` workers (`0` =
-/// all cores): row `r` convolves `x[r]` along `dirs[r]` with shared path
-/// weights `h`.  Row-for-row identical to [`EscnPlan::apply_batch`].
-pub fn escn_apply_batch_par(
-    plan: &EscnPlan, x: &[f64], dirs: &[[f64; 3]], h: &[f64], threads: usize,
-) -> Vec<f64> {
-    let n_in = num_coeffs(plan.l_in);
-    let n_out = num_coeffs(plan.l_out);
-    let rows = dirs.len();
-    debug_assert_eq!(x.len(), rows * n_in);
-    let mut out = vec![0.0; rows * n_out];
-    let threads = pool::resolve_threads(threads);
-    pool::shard_rows(&mut out, n_out, threads, |r, row| {
-        let y = plan.apply(&x[r * n_in..(r + 1) * n_in], dirs[r], h);
-        row.copy_from_slice(&y);
-    });
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::num_coeffs;
+    use crate::tp::op::{apply_batch_par, BatchInputs, Inputs};
     use crate::util::prop::max_abs_diff;
     use crate::util::rng::Rng;
 
@@ -359,74 +338,90 @@ mod tests {
     }
 
     #[test]
-    fn gaunt_par_matches_serial() {
-        let mut rng = Rng::new(1);
-        let plan = GauntPlan::new(2, 2, 3, ConvMethod::Auto);
-        let rows = 9;
-        let x1 = rng.normals(rows * num_coeffs(2));
-        let x2 = rng.normals(rows * num_coeffs(2));
-        let serial = plan.apply_batch(&x1, &x2, rows);
-        for threads in [1usize, 2, 4, 0] {
-            let par = gaunt_apply_batch_par(&plan, &x1, &x2, rows, threads);
-            assert!(max_abs_diff(&serial, &par) == 0.0, "threads={threads}");
+    fn op_entry_point_resolves_every_family_to_the_same_plan() {
+        let cache = PlanCache::new();
+        let keys = [
+            OpKey::Cg { l1: 1, l2: 1, l3: 2 },
+            OpKey::Gaunt { l1: 2, l2: 2, l3: 2, method: ConvMethod::Auto },
+            OpKey::Escn { l_in: 1, l_filter: 1, l_out: 1 },
+            OpKey::GauntConv { l_in: 1, l_filter: 1, l_out: 2 },
+            OpKey::ManyBody { nu: 2, l: 1, l_out: 2 },
+        ];
+        for key in &keys {
+            let op1 = cache.op(key);
+            let op2 = cache.op(key);
+            assert_eq!(op1.key(), *key);
+            // same underlying plan (the data pointers coincide)
+            assert!(std::ptr::eq(
+                Arc::as_ptr(&op1) as *const u8,
+                Arc::as_ptr(&op2) as *const u8,
+            ));
         }
+        assert_eq!(cache.builds(), keys.len());
+        assert_eq!(cache.len(), keys.len());
+        // dims come from the typed layout contract
+        let op = cache.op(&keys[1]);
+        assert_eq!(op.irreps_in().dim(), num_coeffs(2));
+        assert_eq!(op.irreps_out().dim(), num_coeffs(2));
     }
 
     #[test]
-    fn cg_par_matches_serial() {
-        let mut rng = Rng::new(2);
-        let plan = CgPlan::new(2, 2, 2);
-        let rows = 7;
+    fn per_key_stats_track_hits() {
+        let cache = PlanCache::new();
+        let hot = OpKey::Gaunt {
+            l1: 2, l2: 2, l3: 2, method: ConvMethod::Direct,
+        };
+        let cold = OpKey::Cg { l1: 1, l2: 1, l3: 1 };
+        let _ = cache.op(&hot); // build
+        let _ = cache.op(&cold); // build
+        for _ in 0..5 {
+            let _ = cache.op(&hot); // hits
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.builds, 2);
+        assert_eq!(stats.len, 2);
+        assert_eq!(stats.hits, 5);
+        assert_eq!(stats.per_key.len(), 2);
+        // hottest first
+        assert_eq!(stats.per_key[0].key, hot);
+        assert_eq!(stats.per_key[0].hits, 5);
+        assert_eq!(stats.per_key[1].hits, 0);
+    }
+
+    #[test]
+    fn cached_op_applies_match_the_typed_plans() {
+        let cache = PlanCache::new();
+        let mut rng = Rng::new(1);
+        let n = num_coeffs(2);
+        let x1 = rng.normals(n);
+        let x2 = rng.normals(n);
+        let plan = cache.gaunt(2, 2, 3, ConvMethod::Auto);
+        let want = plan.apply(&x1, &x2);
+        let op = cache.op(&OpKey::Gaunt {
+            l1: 2, l2: 2, l3: 3, method: ConvMethod::Auto,
+        });
+        let got = op.apply_op(Inputs::pair(&x1, &x2));
+        assert!(max_abs_diff(&got, &want) == 0.0);
+    }
+
+    #[test]
+    fn generic_batch_over_cached_ops_matches_serial() {
+        let cache = PlanCache::new();
+        let mut rng = Rng::new(4);
+        let rows = 9usize;
         let n = num_coeffs(2);
         let x1 = rng.normals(rows * n);
         let x2 = rng.normals(rows * n);
+        let op = cache.op(&OpKey::Gaunt {
+            l1: 2, l2: 2, l3: 3, method: ConvMethod::Auto,
+        });
+        let plan = cache.gaunt(2, 2, 3, ConvMethod::Auto);
         let serial = plan.apply_batch(&x1, &x2, rows);
-        let par = cg_apply_batch_par(&plan, &x1, &x2, rows, 0);
-        assert!(max_abs_diff(&serial, &par) == 0.0);
-    }
-
-    #[test]
-    fn gaunt_conv_and_many_body_plans_are_cached() {
-        let cache = PlanCache::new();
-        let a = cache.gaunt_conv(2, 2, 2);
-        let b = cache.gaunt_conv(2, 2, 2);
-        assert!(Arc::ptr_eq(&a, &b));
-        let m1 = cache.many_body(3, 1, 2);
-        let m2 = cache.many_body(3, 1, 2);
-        assert!(Arc::ptr_eq(&m1, &m2));
-        assert_eq!(cache.builds(), 2);
-        assert_eq!(cache.len(), 2);
-    }
-
-    #[test]
-    fn gaunt_conv_par_matches_serial() {
-        let mut rng = Rng::new(4);
-        let plan = GauntConvPlan::new(2, 2, 3);
-        let rows = 6;
-        let n = num_coeffs(2);
-        let x = rng.normals(rows * n);
-        let dirs: Vec<[f64; 3]> = (0..rows).map(|_| rng.unit3()).collect();
-        let h2: Vec<f64> = (0..=2).map(|_| rng.normal()).collect();
-        let mut serial = vec![0.0; rows * num_coeffs(3)];
-        for (r, dir) in dirs.iter().enumerate() {
-            let y = plan.apply(&x[r * n..(r + 1) * n], *dir, &h2);
-            serial[r * y.len()..(r + 1) * y.len()].copy_from_slice(&y);
+        for threads in [1usize, 2, 4, 0] {
+            let par = apply_batch_par(
+                op.as_ref(), &BatchInputs::pair(&x1, &x2), rows, threads,
+            );
+            assert!(max_abs_diff(&serial, &par) == 0.0, "threads={threads}");
         }
-        let par = gaunt_conv_apply_batch_par(&plan, &x, &dirs, &h2, 0);
-        assert!(max_abs_diff(&serial, &par) == 0.0);
-    }
-
-    #[test]
-    fn escn_par_matches_serial() {
-        let mut rng = Rng::new(3);
-        let plan = EscnPlan::new(2, 2, 2);
-        let rows = 6;
-        let n = num_coeffs(2);
-        let x = rng.normals(rows * n);
-        let dirs: Vec<[f64; 3]> = (0..rows).map(|_| rng.unit3()).collect();
-        let h: Vec<f64> = (0..plan.n_paths()).map(|_| rng.normal()).collect();
-        let serial = plan.apply_batch(&x, &dirs, &h);
-        let par = escn_apply_batch_par(&plan, &x, &dirs, &h, 0);
-        assert!(max_abs_diff(&serial, &par) == 0.0);
     }
 }

@@ -19,11 +19,10 @@
 
 use crate::so3::gaunt::cg_tensor_real;
 use crate::so3::rotation::{
-    align_to_y, wigner_d_real_block, wigner_d_real_block_into, Rot3,
-    WignerScratch,
+    align_to_y, wigner_d_real_block_into, Rot3, WignerScratch,
 };
 use crate::so3::sh::{real_sh_all_xyz, sh_norm};
-use crate::so3::linalg::{matvec, matvec_into};
+use crate::so3::linalg::matvec_into;
 use crate::tp::gaunt::ConvMethod;
 use crate::fourier::complex::C64;
 use crate::fourier::plan::{ConvPlan, ConvScratch};
@@ -57,6 +56,20 @@ pub struct EscnPlan {
     pub l_filter: usize,
     pub l_out: usize,
     paths: Vec<Path>,
+}
+
+/// Caller-owned scratch for [`EscnPlan`]'s full (rotated) convolution
+/// and its VJP: Wigner-D staging + rotated feature buffers, one per
+/// worker thread.
+pub struct EscnScratch {
+    /// block Wigner-D staging (max of input/output block sizes)
+    d_blk: Vec<f64>,
+    /// aligned-frame input feature
+    x_rot: Vec<f64>,
+    /// aligned-frame output feature
+    y_rot: Vec<f64>,
+    /// Wigner-D evaluation workspace
+    wig: WignerScratch,
 }
 
 impl EscnPlan {
@@ -101,8 +114,16 @@ impl EscnPlan {
     /// Contraction in the ALIGNED frame (filter = sum_l2 h-weighted Y(z)).
     /// `h[(l1, l2, l3)]` are per-path weights in path order.
     pub fn apply_aligned(&self, x: &[f64], h: &[f64]) -> Vec<f64> {
-        debug_assert_eq!(h.len(), self.paths.len());
         let mut out = vec![0.0; num_coeffs(self.l_out)];
+        self.apply_aligned_into(x, h, &mut out);
+        out
+    }
+
+    /// [`EscnPlan::apply_aligned`] into a caller buffer (overwritten).
+    /// Allocation-free.
+    pub fn apply_aligned_into(&self, x: &[f64], h: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(h.len(), self.paths.len());
+        out[..num_coeffs(self.l_out)].fill(0.0);
         for (p, w) in self.paths.iter().zip(h) {
             if *w == 0.0 {
                 continue;
@@ -118,20 +139,93 @@ impl EscnPlan {
                 out[lm_index(p.l3, -m)] += w * (d * xm - a * xp);
             }
         }
-        out
+    }
+
+    /// Exact transpose of [`EscnPlan::apply_aligned_into`] in its first
+    /// argument: `out = A(h)^T g`.  The aligned contraction is linear in
+    /// `x`, so this IS the aligned-frame VJP.  Allocation-free.
+    pub fn apply_aligned_transpose_into(
+        &self, g: &[f64], h: &[f64], out: &mut [f64],
+    ) {
+        debug_assert_eq!(h.len(), self.paths.len());
+        out[..num_coeffs(self.l_in)].fill(0.0);
+        for (p, w) in self.paths.iter().zip(h) {
+            if *w == 0.0 {
+                continue;
+            }
+            let mm = p.l1.min(p.l3);
+            out[lm_index(p.l1, 0)] += w * p.diag[0] * g[lm_index(p.l3, 0)];
+            for m in 1..=(mm as i64) {
+                let (d, a) = (p.diag[m as usize], p.anti[m as usize]);
+                let (gp, gm) = (g[lm_index(p.l3, m)], g[lm_index(p.l3, -m)]);
+                // transpose of the forward 2x2 block
+                out[lm_index(p.l1, m)] += w * (d * gp - a * gm);
+                out[lm_index(p.l1, -m)] += w * (a * gp + d * gm);
+            }
+        }
     }
 
     /// Full edge convolution: rotate into the aligned frame, contract,
     /// rotate back.  `dir` is the edge direction, `h` per-path weights.
     pub fn apply(&self, x: &[f64], dir: [f64; 3], h: &[f64]) -> Vec<f64> {
-        let rot = align_to_z(dir);
-        let d_in = wigner_d_real_block(self.l_in, &rot);
+        let mut out = vec![0.0; num_coeffs(self.l_out)];
+        let mut scratch = self.scratch();
+        self.apply_into(x, dir, h, &mut out, &mut scratch);
+        out
+    }
+
+    /// Fresh scratch for the allocation-free rotation round trip (one
+    /// per worker thread).
+    pub fn scratch(&self) -> EscnScratch {
         let n_in = num_coeffs(self.l_in);
-        let x_rot = matvec(&d_in, x, n_in, n_in);
-        let y_rot = self.apply_aligned(&x_rot, h);
-        let d_out = wigner_d_real_block(self.l_out, &rot.transpose());
         let n_out = num_coeffs(self.l_out);
-        matvec(&d_out, &y_rot, n_out, n_out)
+        EscnScratch {
+            d_blk: vec![0.0; (n_in * n_in).max(n_out * n_out)],
+            x_rot: vec![0.0; n_in],
+            y_rot: vec![0.0; n_out],
+            wig: WignerScratch::new(self.l_in.max(self.l_out)),
+        }
+    }
+
+    /// [`EscnPlan::apply`] over caller scratch: alignment rotation,
+    /// aligned SO(2) contraction, inverse rotation — zero steady-state
+    /// allocations once the per-degree Wigner fit caches are warm.
+    pub fn apply_into(
+        &self, x: &[f64], dir: [f64; 3], h: &[f64], out: &mut [f64],
+        s: &mut EscnScratch,
+    ) {
+        let rot = align_to_z(dir);
+        let n_in = num_coeffs(self.l_in);
+        let n_out = num_coeffs(self.l_out);
+        wigner_d_real_block_into(self.l_in, &rot, &mut s.d_blk, &mut s.wig);
+        matvec_into(&s.d_blk, x, n_in, n_in, &mut s.x_rot);
+        // split borrows: contract from x_rot into y_rot
+        let (x_rot, y_rot) = (&s.x_rot, &mut s.y_rot);
+        self.apply_aligned_into(x_rot, h, y_rot);
+        wigner_d_real_block_into(self.l_out, &rot.transpose(), &mut s.d_blk,
+                                 &mut s.wig);
+        matvec_into(&s.d_blk, &s.y_rot, n_out, n_out, &mut out[..n_out]);
+    }
+
+    /// Exact VJP of [`EscnPlan::apply_into`] w.r.t. the input feature:
+    /// the full convolution is `M x` with `M = D_out(R^T) A(h) D_in(R)`,
+    /// and the real Wigner blocks are orthogonal (`D(R)^T = D(R^T)`), so
+    /// `M^T g = D_in(R^T) A(h)^T D_out(R) g`.  Allocation-free over the
+    /// same scratch.
+    pub fn vjp_into(
+        &self, dir: [f64; 3], h: &[f64], g: &[f64], grad: &mut [f64],
+        s: &mut EscnScratch,
+    ) {
+        let rot = align_to_z(dir);
+        let n_in = num_coeffs(self.l_in);
+        let n_out = num_coeffs(self.l_out);
+        wigner_d_real_block_into(self.l_out, &rot, &mut s.d_blk, &mut s.wig);
+        matvec_into(&s.d_blk, g, n_out, n_out, &mut s.y_rot);
+        let (y_rot, x_rot) = (&s.y_rot, &mut s.x_rot);
+        self.apply_aligned_transpose_into(y_rot, h, x_rot);
+        wigner_d_real_block_into(self.l_in, &rot.transpose(), &mut s.d_blk,
+                                 &mut s.wig);
+        matvec_into(&s.d_blk, &s.x_rot, n_in, n_in, &mut grad[..n_in]);
     }
 
     /// Batched full convolution: row `r` convolves `x[r]` along `dirs[r]`
@@ -535,12 +629,8 @@ pub fn conv_reference_gaunt(
     h2: &[f64],
 ) -> Vec<f64> {
     let mut ysh = real_sh_all_xyz(l_filter, dir);
-    for l2 in 0..=l_filter {
-        let base = lm_index(l2, -(l2 as i64));
-        for k in 0..(2 * l2 + 1) {
-            ysh[base + k] *= h2[l2];
-        }
-    }
+    crate::tp::irreps::Irreps::single(l_filter)
+        .scale_paths_inplace(&mut ysh, h2);
     let plan = GauntPlan::new(l_in, l_filter, l_out,
                               crate::tp::ConvMethod::Direct);
     plan.apply(x, &ysh)
@@ -549,6 +639,8 @@ pub fn conv_reference_gaunt(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::so3::linalg::matvec;
+    use crate::so3::rotation::wigner_d_real_block;
     use crate::util::prop::max_abs_diff;
     use crate::util::rng::Rng;
 
@@ -657,6 +749,31 @@ mod tests {
             // and the Vec-returning wrapper stays pinned to the same result
             let via_with = plan.apply_with(&x, dir, &h2, &mut scratch);
             assert!(max_abs_diff(&via_with, &want) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn escn_vjp_is_the_exact_transpose() {
+        // <g, M x> == <M^T g, x>: the adjoint identity that makes
+        // vjp_into exact for the linear edge convolution
+        let (li, lf, lo) = (2usize, 2usize, 3usize);
+        let plan = EscnPlan::new(li, lf, lo);
+        let mut rng = Rng::new(7);
+        let dir = rng.unit3();
+        let h: Vec<f64> = (0..plan.n_paths()).map(|_| rng.normal()).collect();
+        let (n_in, n_out) = (num_coeffs(li), num_coeffs(lo));
+        let mut scratch = plan.scratch();
+        for _ in 0..4 {
+            let x = rng.normals(n_in);
+            let g = rng.normals(n_out);
+            let mut y = vec![0.0; n_out];
+            plan.apply_into(&x, dir, &h, &mut y, &mut scratch);
+            let mut gx = vec![0.0; n_in];
+            plan.vjp_into(dir, &h, &g, &mut gx, &mut scratch);
+            let lhs: f64 = g.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let rhs: f64 = gx.iter().zip(&x).map(|(a, b)| a * b).sum();
+            assert!((lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()),
+                    "{lhs} vs {rhs}");
         }
     }
 

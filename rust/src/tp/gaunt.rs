@@ -20,6 +20,7 @@ use crate::fourier::plan::{ConvPlan, ConvScratch};
 use crate::fourier::tables::{
     f2sh_contract, sh2f_panels, F2shPanelsT, Sh2fPanels, SQRT2_OVER_2,
 };
+use crate::tp::irreps::Irreps;
 use crate::{lm_index, num_coeffs};
 
 /// Which convolution backend the plan uses.
@@ -234,7 +235,11 @@ impl GauntPlan {
     }
 
     /// Weighted variant (paper Sec. 3.3 reparameterization): per-degree
-    /// weights w1[l1], w2[l2], w3[l3] multiply inputs/outputs.
+    /// weights w1[l1], w2[l2], w3[l3] multiply inputs/outputs.  The
+    /// per-degree reweighting is the single-channel case of
+    /// [`Irreps::scale_paths_inplace`] — the one shared scaling helper
+    /// (the model's per-path residual mixes are the same call at
+    /// `mul > 1`).
     pub fn apply_weighted(
         &self,
         x1: &[f64],
@@ -243,10 +248,12 @@ impl GauntPlan {
         w2: &[f64],
         w3: &[f64],
     ) -> Vec<f64> {
-        let s1 = scale_by_degree(x1, w1, self.l1);
-        let s2 = scale_by_degree(x2, w2, self.l2);
+        let mut s1 = x1.to_vec();
+        Irreps::single(self.l1).scale_paths_inplace(&mut s1, w1);
+        let mut s2 = x2.to_vec();
+        Irreps::single(self.l2).scale_paths_inplace(&mut s2, w2);
         let mut out = self.apply(&s1, &s2);
-        scale_by_degree_inplace(&mut out, w3, self.l3);
+        Irreps::single(self.l3).scale_paths_inplace(&mut out, w3);
         out
     }
 
@@ -266,22 +273,6 @@ impl GauntPlan {
                             &mut scratch);
         }
         out
-    }
-}
-
-/// Multiply each degree-l segment of x by w[l].
-pub fn scale_by_degree(x: &[f64], w: &[f64], l_max: usize) -> Vec<f64> {
-    let mut out = x.to_vec();
-    scale_by_degree_inplace(&mut out, w, l_max);
-    out
-}
-
-pub fn scale_by_degree_inplace(x: &mut [f64], w: &[f64], l_max: usize) {
-    for l in 0..=l_max {
-        let base = lm_index(l, -(l as i64));
-        for k in 0..(2 * l + 1) {
-            x[base + k] *= w[l];
-        }
     }
 }
 

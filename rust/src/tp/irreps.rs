@@ -1,0 +1,503 @@
+//! The typed irrep layout every equivariant operation speaks.
+//!
+//! An [`Irreps`] is an ordered list of `mul x l` segments (e3nn's
+//! `"32x0 + 16x1 + 8x2"` notation, minus parity — the Gaunt basis is
+//! parity-even by construction).  It is the *contract* between modules:
+//! a flat `&[f64]` feature is interpreted against an `Irreps`, and every
+//! [`EquivariantOp`](crate::tp::op::EquivariantOp) declares its input and
+//! output layouts through one.
+//!
+//! # Layout invariants
+//!
+//! * Segments are stored in declaration order; segment `s` starts at
+//!   [`Irreps::offset`]`(s)` and holds `mul` *slots* of `2l+1`
+//!   coefficients each (slot stride = `2l+1`): index of `(s, channel c,
+//!   m)` is `offset(s) + c*(2l+1) + (l + m)`.  Within a segment the
+//!   layout is **mul-major** (all of channel 0's block, then channel
+//!   1's, ...).
+//! * [`Irreps::single`]`(L)` — one channel of every degree `0..=L` — is
+//!   byte-compatible with the crate's historical `(L+1)^2` feature
+//!   layout ([`crate::lm_index`]), so all pre-`Irreps` plans consume
+//!   exactly the `mul = 1` case.
+//! * [`Irreps::spherical`]`(C, L)` — `C` channels of every degree — is
+//!   the multi-channel node-feature layout: degree-major panels
+//!   `[l][channel][m]`, each panel a contiguous `C x (2l+1)` block.
+//! * A *path* is one `(segment, channel)` pair; paths are numbered
+//!   segment-major ([`Irreps::n_paths`] total).  Per-path weight vectors
+//!   (the paper's per-degree `w_l`, generalized to per-`(channel, l)`)
+//!   use this order everywhere: for `spherical(C, L)` the weight of
+//!   `(l, c)` sits at `l*C + c`, which for `C = 1` degenerates to the
+//!   historical per-degree indexing.
+
+use std::fmt;
+
+use crate::err;
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// One `mul x l` run of identical irreps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct IrrepSeg {
+    /// multiplicity (number of channels of this degree)
+    pub mul: usize,
+    /// degree
+    pub l: usize,
+}
+
+impl IrrepSeg {
+    /// Coefficients per channel.
+    #[inline]
+    pub fn width(&self) -> usize {
+        2 * self.l + 1
+    }
+
+    /// Total coefficients of the segment.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.mul * self.width()
+    }
+}
+
+/// A typed feature layout: ordered `mul x l` segments with precomputed
+/// offsets.  Cheap to clone; equality is structural.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Irreps {
+    segs: Vec<IrrepSeg>,
+    /// running start offset per segment (len = segs.len() + 1; the last
+    /// entry is the total dimension)
+    offsets: Vec<usize>,
+}
+
+impl Irreps {
+    /// Build from `(mul, l)` pairs, in order.  Zero-multiplicity
+    /// segments are dropped (they occupy no coefficients).
+    pub fn new(segs: impl IntoIterator<Item = (usize, usize)>) -> Irreps {
+        let segs: Vec<IrrepSeg> = segs
+            .into_iter()
+            .filter(|&(mul, _)| mul > 0)
+            .map(|(mul, l)| IrrepSeg { mul, l })
+            .collect();
+        let mut offsets = Vec::with_capacity(segs.len() + 1);
+        let mut at = 0usize;
+        for s in &segs {
+            offsets.push(at);
+            at += s.dim();
+        }
+        offsets.push(at);
+        Irreps { segs, offsets }
+    }
+
+    /// One channel of every degree `0..=l_max` — the historical
+    /// `(L+1)^2` feature layout.
+    pub fn single(l_max: usize) -> Irreps {
+        Irreps::spherical(1, l_max)
+    }
+
+    /// `mul` channels of every degree `0..=l_max`, degree-major panels.
+    pub fn spherical(mul: usize, l_max: usize) -> Irreps {
+        Irreps::new((0..=l_max).map(|l| (mul, l)))
+    }
+
+    /// The segments, in layout order.
+    pub fn segs(&self) -> &[IrrepSeg] {
+        &self.segs
+    }
+
+    /// Total flat dimension.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Highest degree present (0 for the empty layout).
+    pub fn l_max(&self) -> usize {
+        self.segs.iter().map(|s| s.l).max().unwrap_or(0)
+    }
+
+    /// Number of `(segment, channel)` paths.
+    pub fn n_paths(&self) -> usize {
+        self.segs.iter().map(|s| s.mul).sum()
+    }
+
+    /// Start offset of segment `s`.
+    #[inline]
+    pub fn offset(&self, s: usize) -> usize {
+        self.offsets[s]
+    }
+
+    /// Flat index range of channel `c` of segment `s` (one `2l+1` slot).
+    #[inline]
+    pub fn slot(&self, s: usize, c: usize) -> std::ops::Range<usize> {
+        let seg = &self.segs[s];
+        debug_assert!(c < seg.mul, "channel {c} out of range (mul {})",
+                      seg.mul);
+        let base = self.offsets[s] + c * seg.width();
+        base..base + seg.width()
+    }
+
+    /// `Some(mul)` when every segment has the same multiplicity and the
+    /// degrees are exactly `0..=l_max` in order — the layout
+    /// [`Irreps::spherical`] produces.
+    pub fn uniform_mul(&self) -> Option<usize> {
+        let mul = self.segs.first()?.mul;
+        for (l, s) in self.segs.iter().enumerate() {
+            if s.mul != mul || s.l != l {
+                return None;
+            }
+        }
+        Some(mul)
+    }
+
+    /// The `mul = 1` version of this layout (what one gathered channel
+    /// looks like).
+    pub fn one_channel(&self) -> Irreps {
+        Irreps::new(self.segs.iter().map(|s| (1, s.l)))
+    }
+
+    // --- path-weight ops (the shared per-degree scaling helper) ---
+
+    /// `x[(s, c, m)] *= w[path(s, c)]` — the per-path reweighting used by
+    /// the weighted Gaunt TP and the model's residual mixes.
+    pub fn scale_paths_inplace(&self, x: &mut [f64], w: &[f64]) {
+        debug_assert_eq!(x.len(), self.dim());
+        debug_assert!(w.len() >= self.n_paths());
+        let mut p = 0usize;
+        for (s, seg) in self.segs.iter().enumerate() {
+            let base = self.offsets[s];
+            let wd = seg.width();
+            for c in 0..seg.mul {
+                let wv = w[p];
+                p += 1;
+                for v in x[base + c * wd..base + (c + 1) * wd].iter_mut() {
+                    *v *= wv;
+                }
+            }
+        }
+    }
+
+    /// `out[(s, c, m)] += w[path(s, c)] * x[(s, c, m)]` — scaled
+    /// accumulate over the same layout.
+    pub fn scale_paths_add(&self, w: &[f64], x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.dim());
+        debug_assert_eq!(out.len(), self.dim());
+        debug_assert!(w.len() >= self.n_paths());
+        let mut p = 0usize;
+        for (s, seg) in self.segs.iter().enumerate() {
+            let base = self.offsets[s];
+            let wd = seg.width();
+            for c in 0..seg.mul {
+                let wv = w[p];
+                p += 1;
+                let r = base + c * wd..base + (c + 1) * wd;
+                for (o, v) in out[r.clone()].iter_mut().zip(&x[r]) {
+                    *o += wv * v;
+                }
+            }
+        }
+    }
+
+    /// `out_w[path(s, c)] += <g, x>_(s, c)` — per-path inner products,
+    /// the exact adjoint of [`Irreps::scale_paths_add`] w.r.t. `w`.
+    pub fn dot_paths_add(&self, g: &[f64], x: &[f64], out_w: &mut [f64]) {
+        debug_assert_eq!(g.len(), self.dim());
+        debug_assert_eq!(x.len(), self.dim());
+        debug_assert!(out_w.len() >= self.n_paths());
+        let mut p = 0usize;
+        for (s, seg) in self.segs.iter().enumerate() {
+            let base = self.offsets[s];
+            let wd = seg.width();
+            for c in 0..seg.mul {
+                let r = base + c * wd..base + (c + 1) * wd;
+                let mut acc = 0.0;
+                for (gv, xv) in g[r.clone()].iter().zip(&x[r]) {
+                    acc += gv * xv;
+                }
+                out_w[p] += acc;
+                p += 1;
+            }
+        }
+    }
+
+    // --- channel views (multi-channel <-> single-channel staging) ---
+
+    /// Copy channel `c` of every segment into `out`, which uses this
+    /// layout's [`Irreps::one_channel`] ordering.  Requires `c <
+    /// seg.mul` for every segment.
+    pub fn gather_channel(&self, x: &[f64], c: usize, out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.dim());
+        let mut at = 0usize;
+        for s in 0..self.segs.len() {
+            let slot = self.slot(s, c);
+            let wd = slot.len();
+            out[at..at + wd].copy_from_slice(&x[slot]);
+            at += wd;
+        }
+        // (allocation-free even under debug_assertions: this sits on the
+        // model's per-edge hot path, which the counting-allocator
+        // regression tests measure in the dev profile)
+        debug_assert_eq!(
+            at,
+            self.segs.iter().map(|s| s.width()).sum::<usize>()
+        );
+    }
+
+    /// Overwrite channel `c` of every segment from `src` (in
+    /// [`Irreps::one_channel`] ordering).
+    pub fn scatter_channel(&self, src: &[f64], c: usize, x: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.dim());
+        let mut at = 0usize;
+        for s in 0..self.segs.len() {
+            let slot = self.slot(s, c);
+            let wd = slot.len();
+            x[slot].copy_from_slice(&src[at..at + wd]);
+            at += wd;
+        }
+    }
+
+    /// Accumulate `src` into channel `c` of every segment.
+    pub fn scatter_channel_add(&self, src: &[f64], c: usize, x: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.dim());
+        let mut at = 0usize;
+        for s in 0..self.segs.len() {
+            let slot = self.slot(s, c);
+            let wd = slot.len();
+            for (xv, sv) in x[slot].iter_mut().zip(&src[at..at + wd]) {
+                *xv += sv;
+            }
+            at += wd;
+        }
+    }
+
+    // --- text / JSON round trips ---
+
+    /// Parse `"32x0 + 16x1 + 8x2"` (whitespace optional; a bare degree
+    /// means multiplicity 1, so `"0+1+2"` is [`Irreps::single`]`(2)`).
+    pub fn parse(text: &str) -> Result<Irreps> {
+        let mut segs = Vec::new();
+        for part in text.split('+') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(err!("irreps '{text}': empty segment"));
+            }
+            let (mul, l) = match part.split_once(['x', 'X']) {
+                Some((m, l)) => (
+                    m.trim().parse::<usize>().map_err(|_| {
+                        err!("irreps '{text}': bad multiplicity '{m}'")
+                    })?,
+                    l.trim(),
+                ),
+                None => (1, part),
+            };
+            let l = l.parse::<usize>()
+                .map_err(|_| err!("irreps '{text}': bad degree '{l}'"))?;
+            segs.push((mul, l));
+        }
+        Ok(Irreps::new(segs))
+    }
+
+    /// JSON as an array of `[mul, l]` pairs.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.segs
+                .iter()
+                .map(|s| Json::Arr(vec![
+                    Json::Num(s.mul as f64),
+                    Json::Num(s.l as f64),
+                ]))
+                .collect(),
+        )
+    }
+
+    /// Rebuild from [`Irreps::to_json`] output.
+    pub fn from_json(doc: &Json) -> Result<Irreps> {
+        let arr = doc.as_arr().ok_or_else(|| err!("irreps: not an array"))?;
+        let mut segs = Vec::with_capacity(arr.len());
+        for pair in arr {
+            let mul = pair.idx(0).and_then(Json::as_usize)
+                .ok_or_else(|| err!("irreps: bad [mul, l] pair"))?;
+            let l = pair.idx(1).and_then(Json::as_usize)
+                .ok_or_else(|| err!("irreps: bad [mul, l] pair"))?;
+            segs.push((mul, l));
+        }
+        Ok(Irreps::new(segs))
+    }
+}
+
+impl fmt::Display for Irreps {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, s) in self.segs.iter().enumerate() {
+            if i > 0 {
+                write!(f, " + ")?;
+            }
+            write!(f, "{}x{}", s.mul, s.l)?;
+        }
+        if self.segs.is_empty() {
+            write!(f, "0x0")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::{lm_index, num_coeffs};
+
+    #[test]
+    fn single_matches_lm_index_layout() {
+        let ir = Irreps::single(3);
+        assert_eq!(ir.dim(), num_coeffs(3));
+        assert_eq!(ir.l_max(), 3);
+        assert_eq!(ir.n_paths(), 4);
+        for l in 0..=3usize {
+            assert_eq!(ir.offset(l), lm_index(l, -(l as i64)));
+            assert_eq!(ir.slot(l, 0),
+                       lm_index(l, -(l as i64))..lm_index(l, l as i64) + 1);
+        }
+        assert_eq!(ir.uniform_mul(), Some(1));
+    }
+
+    #[test]
+    fn spherical_layout_offsets_and_paths() {
+        let ir = Irreps::spherical(4, 2);
+        assert_eq!(ir.dim(), 4 * num_coeffs(2));
+        assert_eq!(ir.n_paths(), 12);
+        // degree-major panels: [l=0: 4x1][l=1: 4x3][l=2: 4x5]
+        assert_eq!(ir.offset(0), 0);
+        assert_eq!(ir.offset(1), 4);
+        assert_eq!(ir.offset(2), 4 + 12);
+        assert_eq!(ir.slot(1, 2), 4 + 6..4 + 9);
+        assert_eq!(ir.uniform_mul(), Some(4));
+        assert_eq!(ir.one_channel(), Irreps::single(2));
+    }
+
+    #[test]
+    fn parse_display_round_trip() {
+        for text in ["32x0 + 16x1 + 8x2", "1x0", "2x0 + 2x1 + 2x2 + 2x3"] {
+            let ir = Irreps::parse(text).unwrap();
+            assert_eq!(format!("{ir}"), text);
+            assert_eq!(Irreps::parse(&format!("{ir}")).unwrap(), ir);
+        }
+        // bare degrees mean mul = 1; zero-mul segments are dropped
+        assert_eq!(Irreps::parse("0+1+2").unwrap(), Irreps::single(2));
+        assert_eq!(Irreps::parse("3x1 + 0x2").unwrap(),
+                   Irreps::new([(3, 1)]));
+        assert!(Irreps::parse("3y2").is_err());
+        assert!(Irreps::parse("3x").is_err());
+        assert!(Irreps::parse("").is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let ir = Irreps::new([(32, 0), (16, 1), (8, 2)]);
+        let back = Irreps::from_json(&ir.to_json()).unwrap();
+        assert_eq!(ir, back);
+        assert!(Irreps::from_json(&Json::Num(3.0)).is_err());
+    }
+
+    #[test]
+    fn non_uniform_is_detected() {
+        assert_eq!(Irreps::new([(32, 0), (16, 1)]).uniform_mul(), None);
+        assert_eq!(Irreps::new([(2, 0), (2, 2)]).uniform_mul(), None);
+        assert_eq!(Irreps::new([(2, 1), (2, 0)]).uniform_mul(), None);
+    }
+
+    #[test]
+    fn path_scaling_matches_manual_loops() {
+        let mut rng = Rng::new(0);
+        let ir = Irreps::spherical(3, 2);
+        let x = rng.normals(ir.dim());
+        let w = rng.normals(ir.n_paths());
+        // scale_paths_inplace vs elementwise reference
+        let mut got = x.clone();
+        ir.scale_paths_inplace(&mut got, &w);
+        for (s, seg) in ir.segs().iter().enumerate() {
+            for c in 0..seg.mul {
+                for i in ir.slot(s, c) {
+                    let want = x[i] * w[s * seg.mul + c];
+                    assert_eq!(got[i], want);
+                }
+            }
+        }
+        // scale_paths_add == base + scaled
+        let base = rng.normals(ir.dim());
+        let mut acc = base.clone();
+        ir.scale_paths_add(&w, &x, &mut acc);
+        for i in 0..ir.dim() {
+            assert!((acc[i] - (base[i] + got[i])).abs() < 1e-15);
+        }
+        // dot_paths_add is the w-adjoint of scale_paths_add
+        let g = rng.normals(ir.dim());
+        let mut wg = vec![0.0; ir.n_paths()];
+        ir.dot_paths_add(&g, &x, &mut wg);
+        // <g, w (.) x> = <wg, w> for every w
+        let lhs: f64 = g.iter().zip(&got).map(|(a, b)| a * b).sum();
+        let rhs: f64 = wg.iter().zip(&w).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-10 * (1.0 + lhs.abs()));
+    }
+
+    #[test]
+    fn single_channel_paths_are_per_degree() {
+        // for mul = 1 the path ops reduce to the historical per-degree
+        // scaling on the lm_index layout
+        let mut rng = Rng::new(1);
+        let l_max = 3usize;
+        let ir = Irreps::single(l_max);
+        let x = rng.normals(ir.dim());
+        let w = rng.normals(l_max + 1);
+        let mut got = x.clone();
+        ir.scale_paths_inplace(&mut got, &w);
+        for l in 0..=l_max {
+            for m in -(l as i64)..=(l as i64) {
+                let i = lm_index(l, m);
+                assert_eq!(got[i], x[i] * w[l]);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_scatter_round_trip() {
+        let mut rng = Rng::new(2);
+        let ir = Irreps::spherical(3, 2);
+        let nf = num_coeffs(2);
+        let x = rng.normals(ir.dim());
+        let mut chans = vec![vec![0.0; nf]; 3];
+        for (c, ch) in chans.iter_mut().enumerate() {
+            ir.gather_channel(&x, c, ch);
+        }
+        // gathered channel c of degree l equals the [l][c][m] panel slice
+        for (s, seg) in ir.segs().iter().enumerate() {
+            for c in 0..seg.mul {
+                let single_off = Irreps::single(ir.l_max()).offset(s);
+                assert_eq!(
+                    &chans[c][single_off..single_off + seg.width()],
+                    &x[ir.slot(s, c)]
+                );
+            }
+        }
+        // scatter rebuilds the exact original
+        let mut back = vec![0.0; ir.dim()];
+        for (c, ch) in chans.iter().enumerate() {
+            ir.scatter_channel(ch, c, &mut back);
+        }
+        assert_eq!(back, x);
+        // scatter_add doubles
+        for (c, ch) in chans.iter().enumerate() {
+            ir.scatter_channel_add(ch, c, &mut back);
+        }
+        for (b, xv) in back.iter().zip(&x) {
+            assert!((b - 2.0 * xv).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn mul_one_gather_is_identity() {
+        let mut rng = Rng::new(3);
+        let ir = Irreps::single(2);
+        let x = rng.normals(ir.dim());
+        let mut out = vec![0.0; ir.dim()];
+        ir.gather_channel(&x, 0, &mut out);
+        assert_eq!(out, x);
+    }
+}

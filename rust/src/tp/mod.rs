@@ -1,5 +1,10 @@
 //! Tensor products of irreps — the paper's subject.
 //!
+//! * [`irreps`] — the typed `mul x l` feature layout ([`Irreps`]) every
+//!   equivariant module declares its contract in.
+//! * [`op`] — the unified [`EquivariantOp`] interface (typed layouts,
+//!   caller-owned scratch, exact VJPs) all five plan families implement,
+//!   plus the generic batched drivers.
 //! * [`cg`] — the O(L^6) Clebsch-Gordan full tensor product (the e3nn-style
 //!   baseline of Fig. 1), dense and sparse variants.
 //! * [`gaunt`] — the paper's O(L^3) Gaunt Tensor Product: per-|v| panel
@@ -11,17 +16,24 @@
 //!   sequential vs divide-and-conquer grid-domain evaluation, plus the
 //!   MACE-style precomputed-tensor emulation (trades memory for speed).
 //! * [`engine`] — the serving-grade execution engine: a process-wide
-//!   [`engine::PlanCache`] (build plans once, share under contention) and
-//!   multi-threaded batched applies for all three plan families.
+//!   [`engine::PlanCache`] keyed by [`OpKey`], resolving any key to a
+//!   shared `Arc<dyn EquivariantOp>` with per-key hit statistics.
 
 pub mod cg;
 pub mod engine;
 pub mod escn;
 pub mod gaunt;
+pub mod irreps;
 pub mod many_body;
+pub mod op;
 
 pub use cg::CgPlan;
-pub use engine::PlanCache;
-pub use escn::{GauntConvPlan, GauntConvScratch};
+pub use engine::{CacheStats, OpKey, PlanCache};
+pub use escn::{EscnPlan, EscnScratch, GauntConvPlan, GauntConvScratch};
 pub use gaunt::{ConvMethod, GauntPlan, GauntScratch};
+pub use irreps::{IrrepSeg, Irreps};
 pub use many_body::{ManyBodyPlan, ManyBodyScratch};
+pub use op::{
+    apply_batch, apply_batch_par, BatchInputs, EquivariantOp, Inputs,
+    OpScratch,
+};

@@ -1,0 +1,723 @@
+//! The one interface every tensor-product flavor serves:
+//! [`EquivariantOp`].
+//!
+//! The paper's thesis is that full TPs, equivariant convolutions, and
+//! many-body contractions are all *the same operation* — multiplication
+//! of sphere functions.  This module makes that uniformity an API: all
+//! five plan types ([`CgPlan`], [`GauntPlan`], [`EscnPlan`],
+//! [`GauntConvPlan`], [`ManyBodyPlan`]) implement one trait with
+//!
+//! * typed [`Irreps`] input/output layouts (the contract callers size
+//!   buffers against),
+//! * a uniform scratch story ([`OpScratch`]: caller-owned, one per
+//!   worker, zero steady-state allocations),
+//! * a uniform apply (`apply_into` over an [`Inputs`] bundle), and
+//! * an **exact** VJP w.r.t. the primary operand (`vjp_into`): every
+//!   backward of a Gaunt product is itself a Gaunt product with the
+//!   degrees rotated (the `G[k,i,j]` permutation symmetry — see
+//!   `model`'s module docs), resolved through the global
+//!   [`PlanCache`]; the CG and eSCN backwards are sparse/orthogonal
+//!   transposes.
+//!
+//! The generic [`apply_batch`] / [`apply_batch_par`] helpers replace the
+//! per-family `*_apply_batch_par` free functions: one sharded driver
+//! (`pool::shard_rows_with`, one scratch per worker) serves every op.
+
+use std::f64::consts::PI;
+use std::sync::Arc;
+
+use crate::num_coeffs;
+use crate::tp::cg::CgPlan;
+use crate::tp::engine::{OpKey, PlanCache};
+use crate::tp::escn::{EscnPlan, EscnScratch, GauntConvPlan, GauntConvScratch};
+use crate::tp::gaunt::{ConvMethod, GauntPlan, GauntScratch};
+use crate::tp::irreps::Irreps;
+use crate::tp::many_body::{ManyBodyPlan, ManyBodyScratch};
+use crate::util::pool;
+
+/// The operand bundle of one apply.  Which fields an op reads is part of
+/// its contract: pair ops ([`CgPlan`], [`GauntPlan`]) read `x1`/`x2`;
+/// edge convolutions ([`EscnPlan`], [`GauntConvPlan`]) read
+/// `x1`/`dir`/`weights`; the many-body self-product reads `x1` alone.
+#[derive(Clone, Copy)]
+pub struct Inputs<'a> {
+    /// primary operand, laid out as [`EquivariantOp::irreps_in`]
+    pub x1: &'a [f64],
+    /// secondary operand ([`EquivariantOp::irreps_in2`])
+    pub x2: Option<&'a [f64]>,
+    /// edge direction (ops with [`EquivariantOp::needs_dir`])
+    pub dir: Option<[f64; 3]>,
+    /// per-path weights, [`EquivariantOp::n_weights`] long
+    pub weights: Option<&'a [f64]>,
+}
+
+impl<'a> Inputs<'a> {
+    /// A two-operand product (CG / Gaunt TP).
+    pub fn pair(x1: &'a [f64], x2: &'a [f64]) -> Inputs<'a> {
+        Inputs { x1, x2: Some(x2), dir: None, weights: None }
+    }
+
+    /// An edge convolution: feature, direction, shared weights.
+    pub fn edge(
+        x: &'a [f64], dir: [f64; 3], weights: &'a [f64],
+    ) -> Inputs<'a> {
+        Inputs { x1: x, x2: None, dir: Some(dir), weights: Some(weights) }
+    }
+
+    /// A single-operand op (many-body self-product).
+    pub fn single(x: &'a [f64]) -> Inputs<'a> {
+        Inputs { x1: x, x2: None, dir: None, weights: None }
+    }
+
+    fn x2(&self) -> &'a [f64] {
+        self.x2.expect("this op requires a second operand (Inputs::pair)")
+    }
+
+    fn dir(&self) -> [f64; 3] {
+        self.dir.expect("this op requires an edge direction (Inputs::edge)")
+    }
+
+    fn weights(&self) -> &'a [f64] {
+        self.weights.expect("this op requires a weights vector")
+    }
+}
+
+/// Caller-owned workspace for one [`EquivariantOp`]: every buffer any
+/// apply or VJP of that op touches — one per worker thread, reused
+/// across calls, so steady state is allocation-free.  Forward buffers
+/// are sized at [`EquivariantOp::scratch`] time; **VJP-only resources
+/// (the degree-rotated sibling plans and their scratch) are created
+/// lazily on the first `vjp_into` call**, so forward-only callers (the
+/// batched serving drivers) never pay for a backward they don't run,
+/// and repeat VJPs reuse the cached sibling `Arc` without touching the
+/// global cache lock.  The fields are a union over the op families;
+/// each impl fills only what it needs.
+pub struct OpScratch {
+    /// forward scratch of a Gaunt-family plan
+    gaunt: Option<GauntScratch>,
+    /// the degree-rotated VJP sibling plan (lazily resolved once)
+    gaunt_vjp_plan: Option<Arc<GauntPlan>>,
+    /// scratch of the VJP sibling plan (lazy)
+    gaunt_vjp: Option<GauntScratch>,
+    /// Gaunt-conv forward scratch (aligned path + rotation round trip)
+    conv: Option<GauntConvScratch>,
+    /// many-body forward scratch
+    many: Option<ManyBodyScratch>,
+    /// (nu-1)-fold power plan for the many-body VJP (lazy)
+    many_pow_plan: Option<Arc<ManyBodyPlan>>,
+    /// (nu-1)-fold power scratch for the many-body VJP (lazy)
+    many_pow: Option<ManyBodyScratch>,
+    /// eSCN rotation round-trip scratch
+    escn: Option<EscnScratch>,
+    /// flat staging (filter coefficients, power features; lazy)
+    buf: Vec<f64>,
+    /// filter layout for per-degree reweighting (GauntConv VJP; lazy)
+    filter_irreps: Option<Irreps>,
+}
+
+impl OpScratch {
+    /// A scratch with no buffers (ops that need none, e.g. the sparse
+    /// CG contraction).
+    pub fn empty() -> OpScratch {
+        OpScratch {
+            gaunt: None,
+            gaunt_vjp_plan: None,
+            gaunt_vjp: None,
+            conv: None,
+            many: None,
+            many_pow_plan: None,
+            many_pow: None,
+            escn: None,
+            buf: Vec::new(),
+            filter_irreps: None,
+        }
+    }
+}
+
+/// One equivariant operation with a typed layout contract.
+///
+/// **Scratch ownership.** The op owns no mutable state; callers hold an
+/// [`OpScratch`] per worker (from [`EquivariantOp::scratch`]) and thread
+/// it through `apply_into`/`vjp_into`.  After a first warm call, neither
+/// entry point allocates.
+///
+/// **Backward convention.** `vjp_into(inputs, g, scratch, grad)` writes
+/// `grad = d<g, op(inputs)>/d x1` (the gradient w.r.t. the primary
+/// operand, overwriting `grad`), holding every other input fixed.
+pub trait EquivariantOp: Send + Sync {
+    /// The cache key identifying this op (also usable with
+    /// [`PlanCache::op`]).
+    fn key(&self) -> OpKey;
+
+    /// Layout of the primary operand `x1`.
+    fn irreps_in(&self) -> Irreps;
+
+    /// Layout of the output.
+    fn irreps_out(&self) -> Irreps;
+
+    /// Layout of the secondary operand, for pair ops.
+    fn irreps_in2(&self) -> Option<Irreps> {
+        None
+    }
+
+    /// Length of the per-apply weights vector (0 when unused).
+    fn n_weights(&self) -> usize {
+        0
+    }
+
+    /// Whether the op consumes an edge direction.
+    fn needs_dir(&self) -> bool {
+        false
+    }
+
+    /// Fresh scratch sized for this op (one per worker thread).
+    fn scratch(&self) -> OpScratch;
+
+    /// Apply into a caller buffer of `irreps_out().dim()` (overwritten).
+    fn apply_into(
+        &self, inputs: Inputs<'_>, scratch: &mut OpScratch, out: &mut [f64],
+    );
+
+    /// Exact gradient of `<cotangent, op(inputs)>` w.r.t. `x1`, written
+    /// into `grad` (`irreps_in().dim()`, overwritten).
+    fn vjp_into(
+        &self, inputs: Inputs<'_>, cotangent: &[f64],
+        scratch: &mut OpScratch, grad: &mut [f64],
+    );
+
+    /// Allocating convenience apply.
+    fn apply_op(&self, inputs: Inputs<'_>) -> Vec<f64> {
+        let mut out = vec![0.0; self.irreps_out().dim()];
+        let mut scratch = self.scratch();
+        self.apply_into(inputs, &mut scratch, &mut out);
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// impls: the five plan families
+// ---------------------------------------------------------------------
+
+impl EquivariantOp for CgPlan {
+    fn key(&self) -> OpKey {
+        OpKey::Cg { l1: self.l1, l2: self.l2, l3: self.l3 }
+    }
+
+    fn irreps_in(&self) -> Irreps {
+        Irreps::single(self.l1)
+    }
+
+    fn irreps_out(&self) -> Irreps {
+        Irreps::single(self.l3)
+    }
+
+    fn irreps_in2(&self) -> Option<Irreps> {
+        Some(Irreps::single(self.l2))
+    }
+
+    fn scratch(&self) -> OpScratch {
+        OpScratch::empty()
+    }
+
+    fn apply_into(
+        &self, inputs: Inputs<'_>, _scratch: &mut OpScratch, out: &mut [f64],
+    ) {
+        self.apply_sparse_into(inputs.x1, inputs.x2(), out);
+    }
+
+    fn vjp_into(
+        &self, inputs: Inputs<'_>, cotangent: &[f64],
+        _scratch: &mut OpScratch, grad: &mut [f64],
+    ) {
+        self.vjp_x1_into(cotangent, inputs.x2(), grad);
+    }
+}
+
+impl EquivariantOp for GauntPlan {
+    fn key(&self) -> OpKey {
+        OpKey::Gaunt {
+            l1: self.l1,
+            l2: self.l2,
+            l3: self.l3,
+            method: self.method,
+        }
+    }
+
+    fn irreps_in(&self) -> Irreps {
+        Irreps::single(self.l1)
+    }
+
+    fn irreps_out(&self) -> Irreps {
+        Irreps::single(self.l3)
+    }
+
+    fn irreps_in2(&self) -> Option<Irreps> {
+        Some(Irreps::single(self.l2))
+    }
+
+    fn scratch(&self) -> OpScratch {
+        let mut s = OpScratch::empty();
+        s.gaunt = Some(GauntPlan::scratch(self));
+        s
+    }
+
+    fn apply_into(
+        &self, inputs: Inputs<'_>, scratch: &mut OpScratch, out: &mut [f64],
+    ) {
+        GauntPlan::apply_into(
+            self,
+            inputs.x1,
+            inputs.x2(),
+            out,
+            scratch.gaunt.as_mut().expect("GauntPlan scratch"),
+        );
+    }
+
+    fn vjp_into(
+        &self, inputs: Inputs<'_>, cotangent: &[f64],
+        scratch: &mut OpScratch, grad: &mut [f64],
+    ) {
+        // dL/dx1 = P_{L1}(f_g f_x2): same product, degrees rotated.
+        // The sibling plan (L3, L2) -> L1 is resolved ONCE per scratch
+        // (first call) and cached, so repeat VJPs never touch the
+        // global cache lock.
+        if scratch.gaunt_vjp_plan.is_none() {
+            let sib = PlanCache::global()
+                .gaunt(self.l3, self.l2, self.l1, self.method);
+            scratch.gaunt_vjp = Some(sib.scratch());
+            scratch.gaunt_vjp_plan = Some(sib);
+        }
+        let sib = scratch.gaunt_vjp_plan.as_ref().unwrap().clone();
+        GauntPlan::apply_into(
+            &sib,
+            cotangent,
+            inputs.x2(),
+            grad,
+            scratch.gaunt_vjp.as_mut().expect("GauntPlan vjp scratch"),
+        );
+    }
+}
+
+impl EquivariantOp for EscnPlan {
+    fn key(&self) -> OpKey {
+        OpKey::Escn {
+            l_in: self.l_in,
+            l_filter: self.l_filter,
+            l_out: self.l_out,
+        }
+    }
+
+    fn irreps_in(&self) -> Irreps {
+        Irreps::single(self.l_in)
+    }
+
+    fn irreps_out(&self) -> Irreps {
+        Irreps::single(self.l_out)
+    }
+
+    fn n_weights(&self) -> usize {
+        self.n_paths()
+    }
+
+    fn needs_dir(&self) -> bool {
+        true
+    }
+
+    fn scratch(&self) -> OpScratch {
+        let mut s = OpScratch::empty();
+        s.escn = Some(EscnPlan::scratch(self));
+        s
+    }
+
+    fn apply_into(
+        &self, inputs: Inputs<'_>, scratch: &mut OpScratch, out: &mut [f64],
+    ) {
+        EscnPlan::apply_into(
+            self,
+            inputs.x1,
+            inputs.dir(),
+            inputs.weights(),
+            out,
+            scratch.escn.as_mut().expect("EscnPlan scratch"),
+        );
+    }
+
+    fn vjp_into(
+        &self, inputs: Inputs<'_>, cotangent: &[f64],
+        scratch: &mut OpScratch, grad: &mut [f64],
+    ) {
+        EscnPlan::vjp_into(
+            self,
+            inputs.dir(),
+            inputs.weights(),
+            cotangent,
+            grad,
+            scratch.escn.as_mut().expect("EscnPlan scratch"),
+        );
+    }
+}
+
+impl EquivariantOp for GauntConvPlan {
+    fn key(&self) -> OpKey {
+        OpKey::GauntConv {
+            l_in: self.l_in,
+            l_filter: self.l_filter,
+            l_out: self.l_out,
+        }
+    }
+
+    fn irreps_in(&self) -> Irreps {
+        Irreps::single(self.l_in)
+    }
+
+    fn irreps_out(&self) -> Irreps {
+        Irreps::single(self.l_out)
+    }
+
+    fn n_weights(&self) -> usize {
+        self.l_filter + 1
+    }
+
+    fn needs_dir(&self) -> bool {
+        true
+    }
+
+    fn scratch(&self) -> OpScratch {
+        let mut s = OpScratch::empty();
+        s.conv = Some(GauntConvPlan::scratch(self));
+        s
+    }
+
+    fn apply_into(
+        &self, inputs: Inputs<'_>, scratch: &mut OpScratch, out: &mut [f64],
+    ) {
+        self.apply_full_into(
+            inputs.x1,
+            inputs.dir(),
+            inputs.weights(),
+            ConvMethod::Auto,
+            out,
+            scratch.conv.as_mut().expect("GauntConvPlan scratch"),
+        );
+    }
+
+    fn vjp_into(
+        &self, inputs: Inputs<'_>, cotangent: &[f64],
+        scratch: &mut OpScratch, grad: &mut [f64],
+    ) {
+        // the conv is the Gaunt product with the full filter f[lm] =
+        // h2[l2] Y_lm(dir); its x-VJP is P_{L_in}(f_g f_filter).
+        // Backward resources are built on the first call and cached in
+        // the scratch.
+        if scratch.gaunt_vjp_plan.is_none() {
+            let sib = PlanCache::global().gaunt(
+                self.l_out, self.l_filter, self.l_in, ConvMethod::Auto,
+            );
+            scratch.gaunt_vjp = Some(sib.scratch());
+            scratch.gaunt_vjp_plan = Some(sib);
+            scratch.buf = vec![0.0; num_coeffs(self.l_filter)];
+            scratch.filter_irreps = Some(Irreps::single(self.l_filter));
+        }
+        let filt = &mut scratch.buf;
+        crate::so3::sh::real_sh_all_xyz_into(
+            self.l_filter, inputs.dir(), filt,
+        );
+        scratch
+            .filter_irreps
+            .as_ref()
+            .expect("GauntConvPlan vjp scratch")
+            .scale_paths_inplace(filt, inputs.weights());
+        let sib = scratch.gaunt_vjp_plan.as_ref().unwrap().clone();
+        GauntPlan::apply_into(
+            &sib,
+            cotangent,
+            &scratch.buf,
+            grad,
+            scratch.gaunt_vjp.as_mut().expect("GauntConvPlan vjp scratch"),
+        );
+    }
+}
+
+impl ManyBodyPlan {
+    /// Degree of the `x^(nu-1)` power feature the VJP contracts against:
+    /// Gaunt selection rules cut everything above `l_out + l` out of the
+    /// projection back onto degree `l`.
+    pub fn pow_degree(&self) -> usize {
+        ((self.nu - 1) * self.l).min(self.l_out + self.l)
+    }
+}
+
+impl EquivariantOp for ManyBodyPlan {
+    fn key(&self) -> OpKey {
+        OpKey::ManyBody { nu: self.nu, l: self.l, l_out: self.l_out }
+    }
+
+    fn irreps_in(&self) -> Irreps {
+        Irreps::single(self.l)
+    }
+
+    fn irreps_out(&self) -> Irreps {
+        Irreps::single(self.l_out)
+    }
+
+    fn scratch(&self) -> OpScratch {
+        let mut s = OpScratch::empty();
+        s.many = Some(ManyBodyPlan::scratch(self));
+        s
+    }
+
+    fn apply_into(
+        &self, inputs: Inputs<'_>, scratch: &mut OpScratch, out: &mut [f64],
+    ) {
+        self.apply_self_into(
+            inputs.x1,
+            out,
+            scratch.many.as_mut().expect("ManyBodyPlan scratch"),
+        );
+    }
+
+    fn vjp_into(
+        &self, inputs: Inputs<'_>, cotangent: &[f64],
+        scratch: &mut OpScratch, grad: &mut [f64],
+    ) {
+        // d<g, P(x^nu)>/dx = nu P_l(f_g f_x^{nu-1}), the power truncated
+        // to pow_degree() by the selection rules.  Backward resources
+        // are built on the first call and cached in the scratch.
+        let lp = self.pow_degree();
+        if scratch.gaunt_vjp_plan.is_none() {
+            if self.nu > 2 {
+                let pow = PlanCache::global()
+                    .many_body(self.nu - 1, self.l, lp);
+                scratch.many_pow = Some(pow.scratch());
+                scratch.many_pow_plan = Some(pow);
+            }
+            let sib = PlanCache::global()
+                .gaunt(self.l_out, lp, self.l, ConvMethod::Auto);
+            scratch.gaunt_vjp = Some(sib.scratch());
+            scratch.gaunt_vjp_plan = Some(sib);
+            scratch.buf = vec![0.0; num_coeffs(lp)];
+        }
+        match self.nu {
+            1 => {
+                // x^0 is the constant function 1 = sqrt(4 pi) Y_00
+                scratch.buf[0] = (4.0 * PI).sqrt();
+            }
+            2 => scratch.buf.copy_from_slice(inputs.x1),
+            _ => {
+                let pow = scratch.many_pow_plan.as_ref().unwrap().clone();
+                pow.apply_self_into(
+                    inputs.x1,
+                    &mut scratch.buf,
+                    scratch.many_pow.as_mut().expect("many-body pow scratch"),
+                );
+            }
+        }
+        let sib = scratch.gaunt_vjp_plan.as_ref().unwrap().clone();
+        GauntPlan::apply_into(
+            &sib,
+            cotangent,
+            &scratch.buf,
+            grad,
+            scratch.gaunt_vjp.as_mut().expect("many-body vjp scratch"),
+        );
+        let nu = self.nu as f64;
+        for v in grad.iter_mut() {
+            *v *= nu;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// generic batched drivers (replace the per-family *_apply_batch_par)
+// ---------------------------------------------------------------------
+
+/// Row-major batch operands: `x1`/`x2` hold `rows` features back to
+/// back, `dirs` one direction per row, `weights` shared by every row.
+#[derive(Clone, Copy)]
+pub struct BatchInputs<'a> {
+    pub x1: &'a [f64],
+    pub x2: Option<&'a [f64]>,
+    pub dirs: Option<&'a [[f64; 3]]>,
+    pub weights: Option<&'a [f64]>,
+}
+
+impl<'a> BatchInputs<'a> {
+    /// A batch of two-operand products.
+    pub fn pair(x1: &'a [f64], x2: &'a [f64]) -> BatchInputs<'a> {
+        BatchInputs { x1, x2: Some(x2), dirs: None, weights: None }
+    }
+
+    /// A batch of edge convolutions with shared weights.
+    pub fn edges(
+        x: &'a [f64], dirs: &'a [[f64; 3]], weights: &'a [f64],
+    ) -> BatchInputs<'a> {
+        BatchInputs { x1: x, x2: None, dirs: Some(dirs),
+                      weights: Some(weights) }
+    }
+
+    /// A batch of single-operand ops.
+    pub fn singles(x: &'a [f64]) -> BatchInputs<'a> {
+        BatchInputs { x1: x, x2: None, dirs: None, weights: None }
+    }
+}
+
+/// Batched apply of ANY [`EquivariantOp`], rows sharded across
+/// `threads` workers (`0` = all cores) with one [`OpScratch`] per worker
+/// — row-for-row identical to the serial loop.
+pub fn apply_batch_par(
+    op: &dyn EquivariantOp, batch: &BatchInputs<'_>, rows: usize,
+    threads: usize,
+) -> Vec<f64> {
+    let n1 = op.irreps_in().dim();
+    let n2 = op.irreps_in2().map(|ir| ir.dim()).unwrap_or(0);
+    let n_out = op.irreps_out().dim();
+    debug_assert_eq!(batch.x1.len(), rows * n1);
+    if let Some(x2) = batch.x2 {
+        debug_assert_eq!(x2.len(), rows * n2);
+    }
+    if op.needs_dir() {
+        debug_assert_eq!(batch.dirs.map(|d| d.len()), Some(rows));
+    }
+    let mut out = vec![0.0; rows * n_out];
+    let threads = pool::resolve_threads(threads);
+    pool::shard_rows_with(
+        &mut out,
+        n_out,
+        threads,
+        || op.scratch(),
+        |r, row, scratch| {
+            let inputs = Inputs {
+                x1: &batch.x1[r * n1..(r + 1) * n1],
+                x2: batch.x2.map(|x2| &x2[r * n2..(r + 1) * n2]),
+                dir: batch.dirs.map(|d| d[r]),
+                weights: batch.weights,
+            };
+            op.apply_into(inputs, scratch, row);
+        },
+    );
+    out
+}
+
+/// Serial batched apply (one scratch reused across rows).
+pub fn apply_batch(
+    op: &dyn EquivariantOp, batch: &BatchInputs<'_>, rows: usize,
+) -> Vec<f64> {
+    apply_batch_par(op, batch, rows, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::max_abs_diff;
+    use crate::util::rng::Rng;
+
+    /// Finite-difference check of `<g, op(x1 ...)>` against vjp_into.
+    fn check_vjp(op: &dyn EquivariantOp, inputs: Inputs<'_>, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let n1 = op.irreps_in().dim();
+        let n_out = op.irreps_out().dim();
+        let g = rng.normals(n_out);
+        let mut scratch = op.scratch();
+        let mut grad = vec![0.0; n1];
+        op.vjp_into(inputs, &g, &mut scratch, &mut grad);
+        let h = 1e-6;
+        let mut x = inputs.x1.to_vec();
+        let mut out = vec![0.0; n_out];
+        for i in 0..n1 {
+            let x0 = x[i];
+            x[i] = x0 + h;
+            op.apply_into(Inputs { x1: &x, ..inputs }, &mut scratch,
+                          &mut out);
+            let fp: f64 = g.iter().zip(&out).map(|(a, b)| a * b).sum();
+            x[i] = x0 - h;
+            op.apply_into(Inputs { x1: &x, ..inputs }, &mut scratch,
+                          &mut out);
+            let fm: f64 = g.iter().zip(&out).map(|(a, b)| a * b).sum();
+            x[i] = x0;
+            let fd = (fp - fm) / (2.0 * h);
+            assert!(
+                (grad[i] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                "component {i}: vjp {} vs fd {fd}", grad[i]
+            );
+        }
+    }
+
+    #[test]
+    fn pair_ops_match_their_legacy_applies() {
+        let mut rng = Rng::new(0);
+        let (l1, l2, l3) = (2usize, 2usize, 3usize);
+        let x1 = rng.normals(num_coeffs(l1));
+        let x2 = rng.normals(num_coeffs(l2));
+        let cg = CgPlan::new(l1, l2, l3);
+        let got = EquivariantOp::apply_op(&cg, Inputs::pair(&x1, &x2));
+        assert_eq!(got, cg.apply_sparse(&x1, &x2));
+        let gp = GauntPlan::new(l1, l2, l3, ConvMethod::Direct);
+        let got = EquivariantOp::apply_op(&gp, Inputs::pair(&x1, &x2));
+        assert!(max_abs_diff(&got, &gp.apply(&x1, &x2)) == 0.0);
+    }
+
+    #[test]
+    fn vjps_match_finite_differences() {
+        let mut rng = Rng::new(1);
+        let x = rng.normals(num_coeffs(2));
+        let x2 = rng.normals(num_coeffs(2));
+        let dir = rng.unit3();
+
+        let cg = CgPlan::new(2, 2, 2);
+        check_vjp(&cg, Inputs::pair(&x, &x2), 10);
+
+        let gp = GauntPlan::new(2, 2, 3, ConvMethod::Direct);
+        check_vjp(&gp, Inputs::pair(&x, &x2), 11);
+
+        let escn = EscnPlan::new(2, 2, 2);
+        let h: Vec<f64> = (0..escn.n_paths()).map(|_| rng.normal()).collect();
+        check_vjp(&escn, Inputs::edge(&x, dir, &h), 12);
+
+        let gc = GauntConvPlan::new(2, 2, 3);
+        let h2: Vec<f64> = (0..=2).map(|_| rng.normal()).collect();
+        check_vjp(&gc, Inputs::edge(&x, dir, &h2), 13);
+
+        for nu in [2usize, 3] {
+            let mb = ManyBodyPlan::new(nu, 2, 2);
+            check_vjp(&mb, Inputs::single(&x), 14 + nu as u64);
+        }
+    }
+
+    #[test]
+    fn generic_batch_par_matches_serial_for_every_family() {
+        let mut rng = Rng::new(2);
+        let rows = 7usize;
+        let n = num_coeffs(2);
+
+        let gp = GauntPlan::new(2, 2, 2, ConvMethod::Auto);
+        let x1 = rng.normals(rows * n);
+        let x2 = rng.normals(rows * n);
+        let serial = apply_batch(&gp, &BatchInputs::pair(&x1, &x2), rows);
+        assert!(max_abs_diff(&serial, &gp.apply_batch(&x1, &x2, rows)) == 0.0);
+        for threads in [2usize, 4, 0] {
+            let par = apply_batch_par(&gp, &BatchInputs::pair(&x1, &x2),
+                                      rows, threads);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+
+        let escn = EscnPlan::new(2, 2, 2);
+        let xs = rng.normals(rows * n);
+        let dirs: Vec<[f64; 3]> = (0..rows).map(|_| rng.unit3()).collect();
+        let h: Vec<f64> = (0..escn.n_paths()).map(|_| rng.normal()).collect();
+        let serial =
+            apply_batch(&escn, &BatchInputs::edges(&xs, &dirs, &h), rows);
+        assert!(
+            max_abs_diff(&serial, &escn.apply_batch(&xs, &dirs, &h)) < 1e-12
+        );
+        let par = apply_batch_par(&escn, &BatchInputs::edges(&xs, &dirs, &h),
+                                  rows, 0);
+        assert_eq!(par, serial);
+
+        let mb = ManyBodyPlan::new(3, 2, 2);
+        let serial = apply_batch(&mb, &BatchInputs::singles(&xs), rows);
+        for r in 0..rows {
+            let want = mb.apply_self(&xs[r * n..(r + 1) * n]);
+            assert!(max_abs_diff(&serial[r * n..(r + 1) * n], &want) == 0.0);
+        }
+    }
+}

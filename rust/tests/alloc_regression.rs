@@ -152,9 +152,17 @@ fn model_forward_and_forces_steady_state_are_allocation_free() {
                   1.5 * rng.normal()])
         .collect();
     let species: Vec<usize> = (0..n_atoms).map(|_| rng.below(3)).collect();
-    for method in [ConvMethod::Direct, ConvMethod::Fft] {
+    // channels > 1 exercises the per-channel gather/scatter staging of
+    // the Irreps layout — it must stay as quiet as the mul = 1 path
+    for (method, channels) in [
+        (ConvMethod::Direct, 1usize),
+        (ConvMethod::Fft, 1),
+        (ConvMethod::Direct, 2),
+        (ConvMethod::Fft, 2),
+    ] {
         let model = Model::new(
-            ModelConfig { method, nu: 3, ..Default::default() }, 1);
+            ModelConfig { method, channels, nu: 3, ..Default::default() },
+            1);
         let edges = model.build_edges(&pos);
         assert!(!edges.is_empty(), "toy structure has no edges");
         let mut scratch = model.scratch();
@@ -173,8 +181,8 @@ fn model_forward_and_forces_steady_state_are_allocation_free() {
         let delta = allocs() - before;
         assert_eq!(
             delta, 0,
-            "{method:?}: {delta} allocations in 8 steady-state model \
-             energy+forces calls (expected 0)"
+            "{method:?} C={channels}: {delta} allocations in 8 \
+             steady-state model energy+forces calls (expected 0)"
         );
     }
 }

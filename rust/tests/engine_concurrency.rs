@@ -1,22 +1,23 @@
 //! Concurrency contract of the tensor-product engine: the plan cache
 //! builds each key exactly once under contention, every thread sees the
-//! same shared plan, and the multi-threaded batch applies are bitwise
-//! identical to the serial path.
+//! same shared plan (through the typed accessors AND the uniform
+//! `op(&OpKey)` entry point), and the generic multi-threaded batch
+//! driver is bitwise identical to the serial path for every op family.
 
 use std::sync::Arc;
 
 use gaunt_tp::num_coeffs;
-use gaunt_tp::tp::engine::{
-    cg_apply_batch_par, escn_apply_batch_par, gaunt_apply_batch_par, PlanCache,
-};
+use gaunt_tp::tp::engine::{OpKey, PlanCache};
 use gaunt_tp::tp::escn::EscnPlan;
-use gaunt_tp::tp::{CgPlan, ConvMethod, GauntPlan};
+use gaunt_tp::tp::op::{apply_batch_par, BatchInputs};
+use gaunt_tp::tp::{CgPlan, ConvMethod, GauntPlan, ManyBodyPlan};
 use gaunt_tp::util::prop::max_abs_diff;
 use gaunt_tp::util::rng::Rng;
 
-/// 8 threads hammer a fresh cache over a small key set: exactly one build
-/// per key must happen, and every thread's outputs must equal the serial
-/// reference computed from plans built outside the cache.
+/// 8 threads hammer a fresh cache over a small key set THROUGH THE
+/// UNIFORM `op()` ENTRY POINT: exactly one build per key must happen,
+/// and every thread's outputs must equal the serial reference computed
+/// from plans built outside the cache.
 #[test]
 fn plan_cache_one_build_per_key_under_contention() {
     let keys: Vec<(usize, usize, usize, ConvMethod)> = vec![
@@ -49,9 +50,11 @@ fn plan_cache_one_build_per_key_under_contention() {
                 for k in 0..keys.len() {
                     let idx = (k + t + round) % keys.len();
                     let (l1, l2, l3, method) = keys[idx];
-                    let plan = cache.gaunt(l1, l2, l3, method);
+                    let op = cache.op(&OpKey::Gaunt { l1, l2, l3, method });
                     let (x1, x2, want) = &refs[idx];
-                    let got = plan.apply(x1, x2);
+                    let got = apply_batch_par(
+                        op.as_ref(), &BatchInputs::pair(x1, x2), 1, 1,
+                    );
                     assert!(
                         max_abs_diff(&got, want) < 1e-12,
                         "thread {t}: cached plan diverged on key {idx}"
@@ -71,9 +74,17 @@ fn plan_cache_one_build_per_key_under_contention() {
     );
     assert_eq!(cache.len(), keys.len());
     assert!(cache.hits() > 0);
+    // per-key stats saw the traffic: every key was hit many times
+    let stats = cache.stats();
+    assert_eq!(stats.len, keys.len());
+    assert_eq!(stats.per_key.len(), keys.len());
+    for ks in &stats.per_key {
+        assert!(ks.hits > 0, "{:?} never hit", ks.key);
+    }
 }
 
-/// Two lookups of the same key return literally the same Arc.
+/// Typed accessors and the uniform entry point share one instance per
+/// key: two lookups return literally the same Arc.
 #[test]
 fn plan_cache_shares_plan_instances() {
     let cache = PlanCache::new();
@@ -87,6 +98,15 @@ fn plan_cache_shares_plan_instances() {
     let f = cache.escn(2, 2, 2);
     assert!(Arc::ptr_eq(&e, &f));
     assert_eq!(cache.builds(), 3);
+    // op() resolves to the SAME plan the typed accessor built
+    let g = cache.op(&OpKey::Gaunt {
+        l1: 2, l2: 2, l3: 2, method: ConvMethod::Auto,
+    });
+    assert!(std::ptr::eq(
+        Arc::as_ptr(&a) as *const u8,
+        Arc::as_ptr(&g) as *const u8,
+    ));
+    assert_eq!(cache.builds(), 3, "op() must not rebuild an existing key");
 }
 
 /// The global cache is one process-wide instance.
@@ -97,10 +117,11 @@ fn global_cache_is_shared() {
     assert!(Arc::ptr_eq(&a, &b));
 }
 
-/// Parallel batch applies equal the serial path bit-for-bit for all three
-/// plan families and every thread count.
+/// The ONE generic batch driver equals each family's serial path
+/// bit-for-bit for every thread count (this is the replacement for the
+/// per-family `*_apply_batch_par` free functions).
 #[test]
-fn parallel_batches_match_serial_for_all_families() {
+fn generic_parallel_batches_match_serial_for_all_families() {
     let mut rng = Rng::new(9);
     let rows = 11usize;
 
@@ -120,12 +141,29 @@ fn parallel_batches_match_serial_for_all_families() {
     let h: Vec<f64> = (0..eplan.n_paths()).map(|_| rng.normal()).collect();
     let e_serial = eplan.apply_batch(&ex, &dirs, &h);
 
+    let mplan = ManyBodyPlan::new(3, 2, 3);
+    let mut m_serial = vec![0.0; rows * num_coeffs(3)];
+    {
+        let n = num_coeffs(2);
+        let n3 = num_coeffs(3);
+        for r in 0..rows {
+            let y = mplan.apply_self(&ex[r * n..(r + 1) * n]);
+            m_serial[r * n3..(r + 1) * n3].copy_from_slice(&y);
+        }
+    }
+
     for threads in [1usize, 2, 3, 8, 0] {
-        let g = gaunt_apply_batch_par(&gplan, &gx1, &gx2, rows, threads);
+        let g = apply_batch_par(&gplan, &BatchInputs::pair(&gx1, &gx2),
+                                rows, threads);
         assert_eq!(g, g_serial, "gaunt threads={threads}");
-        let c = cg_apply_batch_par(&cplan, &cx1, &cx2, rows, threads);
+        let c = apply_batch_par(&cplan, &BatchInputs::pair(&cx1, &cx2),
+                                rows, threads);
         assert_eq!(c, c_serial, "cg threads={threads}");
-        let e = escn_apply_batch_par(&eplan, &ex, &dirs, &h, threads);
+        let e = apply_batch_par(&eplan, &BatchInputs::edges(&ex, &dirs, &h),
+                                rows, threads);
         assert_eq!(e, e_serial, "escn threads={threads}");
+        let m = apply_batch_par(&mplan, &BatchInputs::singles(&ex),
+                                rows, threads);
+        assert_eq!(m, m_serial, "many-body threads={threads}");
     }
 }

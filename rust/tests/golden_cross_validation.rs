@@ -267,6 +267,9 @@ fn model_energy_and_forces_match_python() {
         l: geti("l"),
         l_filter: geti("l_filter"),
         nu: geti("nu"),
+        // pre-multi-channel goldens carry no `channels` key: they pin
+        // the single-channel layout, which is unchanged at channels = 1
+        channels: cj.get("channels").and_then(Json::as_usize).unwrap_or(1),
         n_layers: geti("n_layers"),
         n_species: geti("n_species"),
         n_radial: geti("n_radial"),

@@ -89,6 +89,56 @@ fn forces_match_finite_differences_nu3() {
 }
 
 #[test]
+fn forces_match_finite_differences_multi_channel() {
+    // mul > 1 node features: the per-channel message/many-body VJPs and
+    // the per-(channel, l) path-weight chain must stay exact on both
+    // convolution backends
+    for method in [ConvMethod::Direct, ConvMethod::Fft] {
+        let model = Model::new(
+            ModelConfig { channels: 2, n_layers: 2, method,
+                          ..Default::default() },
+            8,
+        );
+        let (pos, species) = toy_structure(6, 5);
+        check_forces_fd(&model, &pos, &species,
+                        &format!("C=2 {method:?}"));
+    }
+}
+
+#[test]
+fn parameter_gradient_matches_finite_differences_multi_channel() {
+    let model = Model::new(
+        ModelConfig { channels: 2, nu: 3, n_layers: 2,
+                      ..Default::default() },
+        16,
+    );
+    let (pos, species) = toy_structure(14, 5);
+    let edges = model.build_edges(&pos);
+    let mut scratch = model.scratch();
+    let mut forces = vec![0.0; 3 * pos.len()];
+    let mut gp = vec![0.0; model.n_params()];
+    let _ = model.grad_into(&pos, &species, &edges, &mut forces, &mut gp,
+                            &mut scratch);
+    let h = 1e-6;
+    let mut rng = Rng::new(19);
+    for _ in 0..model.n_params() / 3 {
+        let idx = rng.below(model.n_params());
+        let mut m2 = Model::from_params(model.cfg, model.params.clone());
+        m2.params[idx] += h;
+        let ep = m2.energy_into(&pos, &species, &edges, &mut scratch);
+        m2.params[idx] -= 2.0 * h;
+        let em = m2.energy_into(&pos, &species, &edges, &mut scratch);
+        let fd = (ep - em) / (2.0 * h);
+        assert!(
+            (gp[idx] - fd).abs() <= 1e-5 * (1.0 + fd.abs()),
+            "C=2 param {idx}: analytic {} vs fd {}",
+            gp[idx],
+            fd
+        );
+    }
+}
+
+#[test]
 fn parameter_gradient_matches_finite_differences() {
     let model = Model::new(ModelConfig { n_layers: 2, ..Default::default() },
                            6);

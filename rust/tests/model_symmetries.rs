@@ -156,6 +156,74 @@ fn net_force_and_net_torque_vanish() {
 }
 
 #[test]
+fn multi_channel_models_keep_every_invariance() {
+    // the acceptance gate for the Irreps layout: a model with mul > 1
+    // channels must pass the full rotation/translation/permutation
+    // suite on BOTH convolution backends
+    let mut rng = Rng::new(77);
+    for method in [ConvMethod::Direct, ConvMethod::Fft] {
+        let model = Model::new(
+            ModelConfig { method, channels: 3, nu: 3,
+                          ..Default::default() },
+            42,
+        );
+        let (pos, species) = toy_structure(9, 6);
+        let (e0, f0) = model.energy_forces(&pos, &species);
+        // rotation
+        let rot = Rot3::random(&mut rng);
+        let pos_r: Vec<[f64; 3]> = pos.iter().map(|&p| rot.apply(p)).collect();
+        let (e_r, f_r) = model.energy_forces(&pos_r, &species);
+        assert_energy_close(e0, e_r, &format!("{method:?} C=3 rotation"));
+        let f0_rot: Vec<[f64; 3]> = f0.iter().map(|&f| rot.apply(f)).collect();
+        assert_forces_close(&f_r, &f0_rot,
+                            &format!("{method:?} C=3 rotation"));
+        // translation
+        let t = [0.9, -1.4, 2.2];
+        let pos_t: Vec<[f64; 3]> = pos
+            .iter()
+            .map(|p| [p[0] + t[0], p[1] + t[1], p[2] + t[2]])
+            .collect();
+        let (e_t, f_t) = model.energy_forces(&pos_t, &species);
+        assert_energy_close(e0, e_t, &format!("{method:?} C=3 translation"));
+        assert_forces_close(&f_t, &f0,
+                            &format!("{method:?} C=3 translation"));
+        // permutation
+        let mut perm: Vec<usize> = (0..pos.len()).collect();
+        rng.shuffle(&mut perm);
+        let pos_p: Vec<[f64; 3]> = perm.iter().map(|&i| pos[i]).collect();
+        let species_p: Vec<usize> =
+            perm.iter().map(|&i| species[i]).collect();
+        let (e_p, f_p) = model.energy_forces(&pos_p, &species_p);
+        assert_energy_close(e0, e_p, &format!("{method:?} C=3 permutation"));
+        let f0_p: Vec<[f64; 3]> = perm.iter().map(|&i| f0[i]).collect();
+        assert_forces_close(&f_p, &f0_p,
+                            &format!("{method:?} C=3 permutation"));
+        // net force / net torque
+        let scale = f0
+            .iter()
+            .flat_map(|v| v.iter())
+            .fold(0.0f64, |m, x| m.max(x.abs()))
+            .max(1.0);
+        let mut net = [0.0f64; 3];
+        let mut torque = [0.0f64; 3];
+        for (p, fi) in pos.iter().zip(&f0) {
+            for ax in 0..3 {
+                net[ax] += fi[ax];
+            }
+            torque[0] += p[1] * fi[2] - p[2] * fi[1];
+            torque[1] += p[2] * fi[0] - p[0] * fi[2];
+            torque[2] += p[0] * fi[1] - p[1] * fi[0];
+        }
+        for ax in 0..3 {
+            assert!(net[ax].abs() < 1e-8 * scale,
+                    "{method:?} C=3: net force {net:?}");
+            assert!(torque[ax].abs() < 1e-7 * scale,
+                    "{method:?} C=3: net torque {torque:?}");
+        }
+    }
+}
+
+#[test]
 fn higher_order_many_body_and_deep_stacks_stay_equivariant() {
     // nu = 3 exercises the true ManyBodyPlan power path (nu = 2's
     // (nu-1)-power shortcut is a plain copy); 3 layers exercise the

@@ -73,6 +73,20 @@ fn native_server_end_to_end() {
     assert!(server.metrics().mean_batch_size() >= 1.0);
     // the hot path went through the global plan cache
     assert!(PlanCache::global().hits() + PlanCache::global().builds() > 0);
+    // ... and serving observes it: plan churn is folded into the
+    // metrics report after every batch, and the per-OpKey breakdown is
+    // one call away
+    let report = server.metrics().report();
+    assert!(report.contains("plans="),
+            "plan stats missing from report: {report}");
+    assert!(
+        server.metrics().plan_entries.load(std::sync::atomic::Ordering::Relaxed)
+            >= 1,
+        "metrics never observed the plan cache"
+    );
+    let stats = server.plan_stats();
+    assert!(stats.len >= 1);
+    assert!(!stats.per_key.is_empty());
     server.shutdown();
 }
 

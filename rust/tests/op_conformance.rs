@@ -1,0 +1,301 @@
+//! Generic conformance harness for EVERY [`EquivariantOp`] impl: one
+//! test drives the full contract over a representative key of each of
+//! the five plan families, resolved uniformly through
+//! [`PlanCache::op`]:
+//!
+//! 1. **Legacy agreement** — `apply_into` through the trait equals the
+//!    family's historical typed apply on random inputs.
+//! 2. **Equivariance** — rotating every input (features by the real
+//!    Wigner blocks of their `Irreps`, directions by the rotation
+//!    itself) rotates the output by its block.
+//! 3. **Zero steady-state allocations** — a counting global allocator
+//!    (installed for THIS binary only) proves `apply_into` AND
+//!    `vjp_into` allocate nothing once the scratch is warm.
+//! 4. **Exact VJPs** — `vjp_into` against central finite differences of
+//!    `<g, op(x)>`.
+//!
+//! `CONFORMANCE_SMOKE=1` (set by `scripts/verify.sh`) shrinks the key
+//! set and probe counts to a fast liveness pass.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self, ptr: *mut u8, layout: Layout, new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use std::sync::Mutex;
+
+/// The test runner executes `#[test]`s concurrently; the allocation
+/// window below must not see another test's traffic.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+use gaunt_tp::so3::linalg::matvec;
+use gaunt_tp::so3::rotation::{wigner_d_real_block, Rot3};
+use gaunt_tp::tp::engine::{OpKey, PlanCache};
+use gaunt_tp::tp::op::{EquivariantOp, Inputs};
+use gaunt_tp::tp::ConvMethod;
+use gaunt_tp::util::prop::max_abs_diff;
+use gaunt_tp::util::rng::Rng;
+
+fn smoke() -> bool {
+    std::env::var("CONFORMANCE_SMOKE").map_or(false, |v| v == "1")
+}
+
+fn keys() -> Vec<OpKey> {
+    if smoke() {
+        vec![
+            OpKey::Gaunt { l1: 2, l2: 2, l3: 2, method: ConvMethod::Direct },
+            OpKey::GauntConv { l_in: 2, l_filter: 2, l_out: 2 },
+        ]
+    } else {
+        vec![
+            OpKey::Cg { l1: 2, l2: 2, l3: 2 },
+            OpKey::Cg { l1: 1, l2: 2, l3: 3 },
+            OpKey::Gaunt { l1: 2, l2: 2, l3: 3, method: ConvMethod::Direct },
+            OpKey::Gaunt { l1: 3, l2: 2, l3: 4, method: ConvMethod::Fft },
+            OpKey::Gaunt { l1: 2, l2: 2, l3: 2, method: ConvMethod::Auto },
+            OpKey::Escn { l_in: 2, l_filter: 2, l_out: 2 },
+            OpKey::Escn { l_in: 1, l_filter: 2, l_out: 3 },
+            OpKey::GauntConv { l_in: 2, l_filter: 2, l_out: 3 },
+            OpKey::GauntConv { l_in: 3, l_filter: 1, l_out: 2 },
+            OpKey::ManyBody { nu: 2, l: 2, l_out: 2 },
+            OpKey::ManyBody { nu: 3, l: 2, l_out: 3 },
+        ]
+    }
+}
+
+/// Random inputs shaped by the op's own layout metadata.
+struct Operands {
+    x1: Vec<f64>,
+    x2: Option<Vec<f64>>,
+    dir: Option<[f64; 3]>,
+    weights: Option<Vec<f64>>,
+}
+
+impl Operands {
+    fn random(op: &dyn EquivariantOp, rng: &mut Rng) -> Operands {
+        Operands {
+            x1: rng.normals(op.irreps_in().dim()),
+            x2: op.irreps_in2().map(|ir| rng.normals(ir.dim())),
+            dir: op.needs_dir().then(|| rng.unit3()),
+            weights: (op.n_weights() > 0)
+                .then(|| rng.normals(op.n_weights())),
+        }
+    }
+
+    fn inputs(&self) -> Inputs<'_> {
+        Inputs {
+            x1: &self.x1,
+            x2: self.x2.as_deref(),
+            dir: self.dir,
+            weights: self.weights.as_deref(),
+        }
+    }
+}
+
+/// The family's historical typed apply — the oracle the trait path must
+/// reproduce exactly.
+fn legacy_apply(key: &OpKey, ops: &Operands) -> Vec<f64> {
+    let cache = PlanCache::global();
+    match *key {
+        OpKey::Cg { l1, l2, l3 } => cache
+            .cg(l1, l2, l3)
+            .apply_sparse(&ops.x1, ops.x2.as_ref().unwrap()),
+        OpKey::Gaunt { l1, l2, l3, method } => cache
+            .gaunt(l1, l2, l3, method)
+            .apply(&ops.x1, ops.x2.as_ref().unwrap()),
+        OpKey::Escn { l_in, l_filter, l_out } => {
+            cache.escn(l_in, l_filter, l_out).apply(
+                &ops.x1,
+                ops.dir.unwrap(),
+                ops.weights.as_ref().unwrap(),
+            )
+        }
+        OpKey::GauntConv { l_in, l_filter, l_out } => {
+            cache.gaunt_conv(l_in, l_filter, l_out).apply(
+                &ops.x1,
+                ops.dir.unwrap(),
+                ops.weights.as_ref().unwrap(),
+            )
+        }
+        OpKey::ManyBody { nu, l, l_out } => {
+            cache.many_body(nu, l, l_out).apply_self(&ops.x1)
+        }
+    }
+}
+
+/// Rotate a single-channel spherical feature by the block Wigner-D.
+fn rotate_feature(x: &[f64], l_max: usize, rot: &Rot3) -> Vec<f64> {
+    let d = wigner_d_real_block(l_max, rot);
+    matvec(&d, x, x.len(), x.len())
+}
+
+#[test]
+fn every_equivariant_op_satisfies_the_contract() {
+    let _guard = SERIAL.lock().unwrap();
+    let cache = PlanCache::global();
+    let mut rng = Rng::new(42);
+    let fd_probes = if smoke() { 4 } else { 12 };
+    let equi_cases = if smoke() { 1 } else { 3 };
+    for key in keys() {
+        let op = cache.op(&key);
+        let op = op.as_ref();
+        assert_eq!(op.key(), key);
+        let n_out = op.irreps_out().dim();
+        let l_in = op.irreps_in().l_max();
+        let l_out = op.irreps_out().l_max();
+        let ops = Operands::random(op, &mut rng);
+        let mut scratch = op.scratch();
+        let mut out = vec![0.0; n_out];
+
+        // 1. agreement with the legacy typed apply
+        op.apply_into(ops.inputs(), &mut scratch, &mut out);
+        let want = legacy_apply(&key, &ops);
+        assert!(
+            max_abs_diff(&out, &want) < 1e-10,
+            "{key:?}: trait apply diverges from legacy ({})",
+            max_abs_diff(&out, &want)
+        );
+
+        // 2. equivariance under random rotations
+        for _ in 0..equi_cases {
+            let rot = Rot3::random(&mut rng);
+            let rotated = Operands {
+                x1: rotate_feature(&ops.x1, l_in, &rot),
+                x2: ops.x2.as_ref().map(|x2| {
+                    rotate_feature(
+                        x2, op.irreps_in2().unwrap().l_max(), &rot,
+                    )
+                }),
+                dir: ops.dir.map(|d| rot.apply(d)),
+                weights: ops.weights.clone(),
+            };
+            let mut out_rot = vec![0.0; n_out];
+            op.apply_into(rotated.inputs(), &mut scratch, &mut out_rot);
+            let want_rot = rotate_feature(&out, l_out, &rot);
+            assert!(
+                max_abs_diff(&out_rot, &want_rot) < 1e-8,
+                "{key:?}: equivariance violated ({})",
+                max_abs_diff(&out_rot, &want_rot)
+            );
+        }
+
+        // 3. zero steady-state allocations for apply AND vjp (the first
+        // calls above warmed the scratch, shared FFT tables, Wigner fit
+        // caches, and the cached VJP sibling plans)
+        let g = rng.normals(n_out);
+        let mut grad = vec![0.0; op.irreps_in().dim()];
+        op.vjp_into(ops.inputs(), &g, &mut scratch, &mut grad);
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..8 {
+            op.apply_into(ops.inputs(), &mut scratch, &mut out);
+            op.vjp_into(ops.inputs(), &g, &mut scratch, &mut grad);
+        }
+        let delta = ALLOCS.load(Ordering::Relaxed) - before;
+        assert_eq!(
+            delta, 0,
+            "{key:?}: {delta} allocations in 8 steady-state \
+             apply_into+vjp_into rounds (expected 0)"
+        );
+
+        // 4. VJP vs central finite differences of <g, op(x1)>
+        let h = 1e-6;
+        let n1 = ops.x1.len();
+        let mut x = ops.x1.clone();
+        for probe in 0..fd_probes.min(n1) {
+            // spread probes across the components deterministically
+            let i = (probe * n1) / fd_probes.min(n1);
+            let x0 = x[i];
+            x[i] = x0 + h;
+            op.apply_into(
+                Inputs { x1: &x, ..ops.inputs() }, &mut scratch, &mut out,
+            );
+            let fp: f64 = g.iter().zip(&out).map(|(a, b)| a * b).sum();
+            x[i] = x0 - h;
+            op.apply_into(
+                Inputs { x1: &x, ..ops.inputs() }, &mut scratch, &mut out,
+            );
+            let fm: f64 = g.iter().zip(&out).map(|(a, b)| a * b).sum();
+            x[i] = x0;
+            let fd = (fp - fm) / (2.0 * h);
+            assert!(
+                (grad[i] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                "{key:?}: vjp[{i}] = {} but fd = {fd}", grad[i]
+            );
+        }
+    }
+}
+
+/// The batch driver refuses nothing the per-row path accepts: spot-check
+/// that uniform dispatch through `op()` + the generic driver reproduces
+/// the per-row trait applies for a mixed key set (the coordinator's
+/// dispatch pattern).
+#[test]
+fn uniform_dispatch_matches_per_row_applies() {
+    let _guard = SERIAL.lock().unwrap();
+    use gaunt_tp::tp::op::{apply_batch_par, BatchInputs};
+    let cache = PlanCache::global();
+    let mut rng = Rng::new(7);
+    let rows = 6usize;
+    for key in [
+        OpKey::Gaunt { l1: 2, l2: 2, l3: 2, method: ConvMethod::Auto },
+        OpKey::Escn { l_in: 2, l_filter: 2, l_out: 2 },
+    ] {
+        let op = cache.op(&key);
+        let n1 = op.irreps_in().dim();
+        let n_out = op.irreps_out().dim();
+        let x1 = rng.normals(rows * n1);
+        let x2 = op.irreps_in2().map(|ir| rng.normals(rows * ir.dim()));
+        let dirs: Vec<[f64; 3]> = (0..rows).map(|_| rng.unit3()).collect();
+        let weights = (op.n_weights() > 0)
+            .then(|| rng.normals(op.n_weights()));
+        let batch = BatchInputs {
+            x1: &x1,
+            x2: x2.as_deref(),
+            dirs: op.needs_dir().then_some(&dirs[..]),
+            weights: weights.as_deref(),
+        };
+        let got = apply_batch_par(op.as_ref(), &batch, rows, 0);
+        let mut scratch = op.scratch();
+        let n2 = op.irreps_in2().map(|ir| ir.dim()).unwrap_or(0);
+        for r in 0..rows {
+            let mut row = vec![0.0; n_out];
+            op.apply_into(
+                Inputs {
+                    x1: &x1[r * n1..(r + 1) * n1],
+                    x2: x2.as_ref().map(|v| &v[r * n2..(r + 1) * n2]),
+                    dir: op.needs_dir().then(|| dirs[r]),
+                    weights: weights.as_deref(),
+                },
+                &mut scratch,
+                &mut row,
+            );
+            assert!(
+                max_abs_diff(&row, &got[r * n_out..(r + 1) * n_out]) == 0.0,
+                "{key:?}: row {r} diverged"
+            );
+        }
+    }
+}

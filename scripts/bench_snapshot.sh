@@ -15,6 +15,8 @@
 #           speedup_* ratio rows and the measured Auto crossover.
 #   model:  full learned-force-field inference (energy+forces through
 #           every planned Gaunt plan), 1 thread vs all cores.
+#   multi_channel: the same inference at 1 / 8 / 32 feature channels
+#           (atoms/sec scaling of the Irreps multi-channel model).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -58,6 +60,7 @@ wanted = {
     "fig1b": ["fig1b"],
     "table2": ["table2_fourier_plan", "table2_tp_scaling", "table2_speed"],
     "model": ["model_inference"],
+    "multi_channel": ["multi_channel"],
 }
 
 benches = {}
@@ -98,6 +101,8 @@ doc = {
                    "speedup_legacy_over_planned (ratio)"],
         "model": ["model_batch 1 thread (before)",
                   "model_batch all cores (after)"],
+        "multi_channel": ["model_batch C=1 (baseline)",
+                          "model_batch C=8 / C=32 (multi-channel scaling)"],
     },
     "benches": benches,
 }

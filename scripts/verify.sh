@@ -27,6 +27,13 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== EquivariantOp conformance harness (smoke mode) =="
+# the full harness already ran inside `cargo test -q`; this re-runs it
+# in its fast CONFORMANCE_SMOKE configuration as an explicitly named
+# gate, so a contract regression is pinpointed even when the full suite
+# is skipped or trimmed
+CONFORMANCE_SMOKE=1 cargo test -q --test op_conformance
+
 echo "== bench --smoke (one tiny size per bench binary) =="
 for b in fig1a_feature_interaction fig1b_equivariant_convolution \
          fig1c_many_body table2_speed_memory model_inference; do

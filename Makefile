@@ -14,6 +14,9 @@
 #                     with python/compile/aot.py into rust/artifacts/
 #   make model-golden - (numpy only, no JAX) regenerate the frozen-weights
 #                     model energy/forces golden for the cross-language test
+#   make loadtest   - drive the typed serving Client with concurrent
+#                     mixed-size traffic through the shape-bucketed
+#                     native service (offline; p50/p99 + atom_fill)
 #   make ci         - the full gate: tier-1 (which runs every test file,
 #                     model_symmetries/grad_check/alloc_regression/
 #                     golden_cross_validation included) + every --smoke
@@ -21,7 +24,8 @@
 
 RUST_DIR := rust
 
-.PHONY: verify build test bench bench-snapshot artifacts model-golden ci clean
+.PHONY: verify build test bench bench-snapshot artifacts model-golden \
+        loadtest ci clean
 
 verify:
 	bash scripts/verify.sh
@@ -39,6 +43,10 @@ bench:
 
 bench-snapshot:
 	bash scripts/bench_snapshot.sh
+
+loadtest:
+	cd $(RUST_DIR) && cargo run --release -- loadtest --requests 256 \
+		--clients 4 --workers 2
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(RUST_DIR)/artifacts

@@ -1,23 +1,38 @@
-//! Serving benchmark example: drive the batched force-field service with
-//! concurrent clients and report latency/throughput — the paper's
-//! deployment setting (batch inference for relaxations/MD).
+//! Serving benchmark example for the typed multi-task protocol: drive a
+//! shape-bucketed native `Service` with concurrent clients submitting a
+//! mixed workload — single-structure `EnergyForces`, multi-structure
+//! `Batch`, an `EnergyOnly` stream with deadlines, and a streaming
+//! `MdRollout` — and report latency/throughput plus the padding
+//! accounting.  Runs fully offline (no artifacts needed).
 //!
-//!     make artifacts && cargo run --release --example force_field_service
+//!     cargo run --release --example force_field_service
 
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use gaunt_tp::util::error::Result;
 use gaunt_tp::coordinator::batcher::BatchPolicy;
-use gaunt_tp::coordinator::{ForceFieldServer, ServerConfig};
+use gaunt_tp::coordinator::server::{NativeGauntBackend, ServerConfig};
+use gaunt_tp::coordinator::{
+    Batch, EnergyForces, EnergyOnly, MdRollout, Request, Service,
+    ServiceError, Structure,
+};
 use gaunt_tp::data::gen_bpa_dataset;
-use gaunt_tp::runtime::Engine;
+use gaunt_tp::util::error::Result;
+use gaunt_tp::util::rng::Rng;
+
+fn small_cluster(seed: u64) -> Structure {
+    let mut rng = Rng::new(seed);
+    Structure::new(
+        (0..4)
+            .map(|_| [rng.normal(), rng.normal(), rng.normal()])
+            .collect(),
+        (0..4).map(|i| i % 3).collect(),
+    )
+}
 
 fn main() -> Result<()> {
-    let engine = Arc::new(Engine::new("artifacts")?);
-    let server = Arc::new(ForceFieldServer::start(
-        engine,
-        ServerConfig {
+    let service = Service::builder()
+        .native(NativeGauntBackend::default())
+        .config(ServerConfig {
             policy: BatchPolicy {
                 max_batch: 8,
                 max_wait: Duration::from_millis(4),
@@ -25,45 +40,116 @@ fn main() -> Result<()> {
             },
             n_workers: 2,
             ..Default::default()
-        },
-    )?);
+        })
+        .build()?;
+    println!("buckets:");
+    for b in service.buckets() {
+        println!(
+            "  <= {:>2} atoms ({} edge slots, max_batch {})",
+            b.max_atoms, b.max_edges, b.policy.max_batch
+        );
+    }
 
     let n_clients = 4usize;
     let per_client = 32usize;
-    let structures = gen_bpa_dataset(&[0.05], per_client, 13).remove(0);
+    let big = gen_bpa_dataset(&[0.05], per_client, 13).remove(0);
 
     println!(
-        "load test: {n_clients} concurrent clients x {per_client} requests"
+        "load test: {n_clients} concurrent clients x {per_client} \
+         mixed-size requests"
     );
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for c in 0..n_clients {
-        let srv = server.clone();
-        let structs = structures.clone();
-        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+        let client = service.client();
+        let structs = big.clone();
+        handles.push(std::thread::spawn(move || -> Vec<f64> {
             let mut lat = Vec::new();
-            for g in &structs {
-                let resp =
-                    srv.infer_blocking(g.pos.clone(), g.species.clone())?;
-                lat.push(resp.latency_s);
-                assert_eq!(resp.forces.len(), g.pos.len());
+            for (k, g) in structs.iter().enumerate() {
+                // bimodal: alternate the 14-atom MD sample with a
+                // 4-atom cluster so the bucket ladder earns its keep
+                let st = if k % 2 == 0 {
+                    Structure::new(g.pos.clone(), g.species.clone())
+                } else {
+                    small_cluster((c * per_client + k) as u64)
+                };
+                match client
+                    .submit(Request::new(EnergyForces(st)))
+                    .map(|t| t.wait())
+                {
+                    Ok(Ok(resp)) => {
+                        assert!(resp.energy.is_finite());
+                        lat.push(resp.latency_s);
+                    }
+                    Ok(Err(e)) => eprintln!("request failed: {e}"),
+                    Err(e) => eprintln!("submit rejected: {e}"),
+                }
             }
-            let _ = c;
-            Ok(lat)
+            lat
         }));
     }
     let mut all_lat = Vec::new();
     for h in handles {
-        all_lat.extend(h.join().unwrap()?);
+        all_lat.extend(h.join().unwrap());
     }
     let wall = t0.elapsed().as_secs_f64();
     all_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let total = n_clients * per_client;
+    let total = all_lat.len();
+    if total == 0 {
+        return Err(gaunt_tp::err!(
+            "no request completed — see the per-request errors above"
+        ));
+    }
+
+    // the other task shapes, through the same live service
+    let client = service.client();
+    let batch = client
+        .call(Request::new(Batch(
+            (0..6).map(|k| small_cluster(1000 + k)).collect(),
+        )))
+        .map_err(|e| gaunt_tp::err!("{e}"))?;
+    println!("batch task: {} structures in one submission", batch.len());
+
+    // an aggressive deadline may or may not expire under load — both
+    // outcomes are typed
+    match client.call(
+        Request::new(EnergyOnly(small_cluster(7)))
+            .deadline(Duration::from_micros(50)),
+    ) {
+        Ok(r) => println!("deadline'd energy request made it: {:.4}", r.energy),
+        Err(ServiceError::DeadlineExceeded) => {
+            println!("deadline'd energy request expired (typed error)")
+        }
+        Err(e) => return Err(gaunt_tp::err!("{e}")),
+    }
+
+    let mut ticket = client
+        .submit(Request::new(MdRollout {
+            structure: small_cluster(3),
+            steps: 25,
+            dt: 1e-3,
+        }))
+        .map_err(|e| gaunt_tp::err!("{e}"))?;
+    let mut frames = 0;
+    while ticket.next_frame().is_some() {
+        frames += 1;
+    }
+    let traj = ticket.wait().map_err(|e| gaunt_tp::err!("{e}"))?;
+    println!(
+        "rollout task: {frames} streamed frames, final E {:.4}",
+        traj.summary.final_energy
+    );
+
     println!("\n== results ==");
     println!("throughput : {:.1} structures/s", total as f64 / wall);
     println!("p50 latency: {:.2} ms", 1e3 * all_lat[total / 2]);
-    println!("p99 latency: {:.2} ms", 1e3 * all_lat[total * 99 / 100]);
-    println!("server     : {}", server.metrics().report());
-    Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+    println!(
+        "p99 latency: {:.2} ms",
+        1e3 * all_lat[(total * 99 / 100).min(total - 1)]
+    );
+    println!("atom fill  : {:.3} (1.0 = zero padding waste)",
+             service.metrics().atom_fill());
+    println!("server     : {}", service.metrics().report());
+    service.shutdown();
     Ok(())
 }

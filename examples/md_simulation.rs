@@ -4,19 +4,18 @@
 //! 1. drive BAOAB MD *locally* with [`LearnedPotential`] through
 //!    `Integrator::step_with` (plus a FIRE relaxation on the learned
 //!    surface), and
-//! 2. drive velocity-Verlet MD through the *served* model — every force
-//!    evaluation a round trip through the full coordinator (batcher ->
-//!    router -> worker pool -> `NativeGauntBackend` with the trained
-//!    model) — comparing both against ground-truth classical MD.
+//! 2. drive MD through the *served* model as ONE streaming `MdRollout`
+//!    task (the coordinator integrates server-side over the registered
+//!    model and streams a frame per step), plus a served `Relax` task —
+//!    comparing against ground-truth classical MD.
 //!
 //!     cargo run --release --example md_simulation
 //!     GTP_STEPS=200 GTP_TRAIN_STEPS=80 ... for longer runs
 
 use std::sync::Arc;
 
-use gaunt_tp::coordinator::server::NativeGauntBackend;
 use gaunt_tp::coordinator::trainer::{NativeTrainConfig, NativeTrainer};
-use gaunt_tp::coordinator::{ForceFieldServer, ServerConfig};
+use gaunt_tp::coordinator::{MdRollout, Relax, Request, Service, Structure};
 use gaunt_tp::data::{energy_stats, gen_bpa_dataset, normalize_graphs};
 use gaunt_tp::md::{fire_relax, FireConfig, Integrator, LearnedPotential,
                    Molecule, Thermostat};
@@ -79,7 +78,6 @@ fn main() -> Result<()> {
         Thermostat::None,
     );
     md_learned.thermalize(0.05, &mut rng);
-    let vel0 = md_learned.vel.clone();
     let e_start = md_learned.total_energy();
     for _ in 0..steps {
         md_learned.step_with(&mut learned, &mut rng);
@@ -93,58 +91,72 @@ fn main() -> Result<()> {
     assert!(md_learned.pos.iter()
         .all(|p| p.iter().all(|x| x.is_finite())));
 
-    // --- served MD: every force a round trip through the coordinator ---
-    let server = ForceFieldServer::start_native(
-        NativeGauntBackend::with_model(model.clone()),
-        ServerConfig { r_cut: model.cfg.r_cut, ..Default::default() },
-    )?;
+    // --- served MD: ONE streaming MdRollout task through the typed
+    //     service — the coordinator integrates on the worker and
+    //     streams a frame per step, instead of the client hand-rolling
+    //     velocity Verlet around blocking force calls ---
+    let service = Service::builder().model(model.clone()).build()?;
+    let client = service.client();
+    // classical reference trajectory from the same starting state
+    // (both start at rest: the served rollout initializes v = 0)
     let mut md_ref = Integrator::new(
         mol.pos.clone(), mol.species.clone(), &mol.potential, dt,
         Thermostat::None,
     );
-    md_ref.vel = vel0.clone();
-    let mut pos = mol.pos.clone();
-    let mut vel = vel0;
-    let mass = 1.0f64;
-    let mut f_model = server
-        .infer_blocking(pos.clone(), mol.species.clone())?
-        .forces;
+    let mut ticket = client
+        .submit(Request::new(MdRollout {
+            structure: Structure::new(mol.pos.clone(), mol.species.clone()),
+            steps,
+            dt,
+        }))
+        .map_err(|e| gaunt_tp::err!("{e}"))?;
     println!("step |  served-E | drift from classical reference");
-    for step in 0..steps {
-        // velocity Verlet with served model forces
-        for i in 0..pos.len() {
-            for k in 0..3 {
-                vel[i][k] += 0.5 * dt * f_model[i][k] / mass;
-                pos[i][k] += dt * vel[i][k];
-            }
-        }
-        let resp = server.infer_blocking(pos.clone(), mol.species.clone())?;
-        f_model = resp.forces;
-        for i in 0..pos.len() {
-            for k in 0..3 {
-                vel[i][k] += 0.5 * dt * f_model[i][k] / mass;
-            }
-        }
+    let mut n_frames = 0usize;
+    while let Some(frame) = ticket.next_frame() {
         md_ref.step(&mol.potential, &mut rng);
-        if step % 10 == 0 || step + 1 == steps {
+        if frame.step % 10 == 0 || frame.step + 1 == steps {
             let mut d2 = 0.0;
-            for (p, q) in pos.iter().zip(&md_ref.pos) {
+            for (p, q) in frame.pos.iter().zip(&md_ref.pos) {
                 for k in 0..3 {
                     d2 += (p[k] - q[k]) * (p[k] - q[k]);
                 }
             }
             println!(
-                "{step:>4} | {:>9.4} | RMSD {:.4}",
-                resp.energy,
-                (d2 / pos.len() as f64).sqrt()
+                "{:>4} | {:>9.4} | RMSD {:.4}",
+                frame.step,
+                frame.energy,
+                (d2 / frame.pos.len() as f64).sqrt()
             );
         }
         assert!(
-            pos.iter().all(|p| p.iter().all(|x| x.is_finite())),
+            frame.pos.iter().all(|p| p.iter().all(|x| x.is_finite())),
             "served-model MD diverged to non-finite positions"
         );
+        n_frames += 1;
     }
-    println!("\nservice metrics: {}", server.metrics().report());
-    server.shutdown();
+    let traj = ticket.wait().map_err(|e| gaunt_tp::err!("{e}"))?;
+    assert_eq!(n_frames, steps, "one streamed frame per step");
+    assert_eq!(traj.summary.steps, steps);
+    println!(
+        "rollout complete: {} frames, final total energy {:.4}",
+        n_frames, traj.summary.final_energy
+    );
+
+    // --- served relaxation: FIRE as a service task ---
+    let relax_served = client
+        .call(Request::new(Relax {
+            structure: Structure::new(mol.pos.clone(), mol.species.clone()),
+            max_steps: 60,
+        }))
+        .map_err(|e| gaunt_tp::err!("{e}"))?;
+    println!(
+        "served FIRE: E {:.4} -> {:.4} in {} steps (fmax {:.3})",
+        relax_served.energy_trace[0], relax_served.energy,
+        relax_served.steps, relax_served.max_force
+    );
+    assert!(relax_served.energy.is_finite());
+
+    println!("\nservice metrics: {}", service.metrics().report());
+    service.shutdown();
     Ok(())
 }

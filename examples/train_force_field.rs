@@ -3,9 +3,10 @@
 //! dataset with the MD substrate, train the Gaunt-engine model with the
 //! native trainer (energy + force loss, Adam, analytic backward passes
 //! through every planned tensor product), checkpoint to JSON, evaluate
-//! on held-out structures, then serve the trained model through the full
-//! coordinator stack (batcher -> router -> worker pool ->
-//! `NativeGauntBackend`).
+//! on held-out structures, then HOT-SWAP the trained checkpoint into a
+//! live typed `Service` (started on an untrained model) and watch the
+//! served test error drop — the checkpoint-to-production path of
+//! DESIGN.md §10, exercised end to end.
 //!
 //!     cargo run --release --example train_force_field \
 //!         [-- --steps 120 --channels 2]
@@ -15,9 +16,10 @@
 
 use std::sync::Arc;
 
-use gaunt_tp::coordinator::server::NativeGauntBackend;
 use gaunt_tp::coordinator::trainer::{NativeTrainConfig, NativeTrainer};
-use gaunt_tp::coordinator::{ForceFieldServer, ServerConfig};
+use gaunt_tp::coordinator::{
+    Batch, Client, EnergyForces, Request, ServerConfig, Service, Structure,
+};
 use gaunt_tp::data::{energy_stats, gen_bpa_dataset, normalize_graphs, Graph};
 use gaunt_tp::model::{Model, ModelConfig};
 use gaunt_tp::util::error::Result;
@@ -118,24 +120,61 @@ fn main() -> Result<()> {
     trainer.checkpoint(ckpt)?;
     println!("checkpoint -> {ckpt}");
 
-    // serve the trained model through the full coordinator stack
+    // serve through the typed service: start a live endpoint on a FRESH
+    // (untrained) model, then hot-swap the trained checkpoint in — the
+    // checkpoint-to-production path, no restart, no dropped requests
+    let service = Service::builder()
+        .model(Arc::new(Model::new(cfg, 99)))
+        .config(ServerConfig::default())
+        .build()?;
+    let client = service.client();
+    let served_mae = |client: &Client, label: &str| -> Result<f64> {
+        // one multi-structure Batch task for the whole held-out set
+        let rows = client
+            .call(Request::new(Batch(
+                test.iter()
+                    .map(|g| Structure::new(g.pos.clone(), g.species.clone()))
+                    .collect(),
+            )))
+            .map_err(|e| gaunt_tp::err!("{e}"))?;
+        let mae = rows
+            .iter()
+            .zip(&test)
+            .map(|(r, g)| (r.energy - g.energy).abs() / g.n_atoms() as f64)
+            .sum::<f64>()
+            / test.len() as f64;
+        println!("served test energy MAE/atom ({label}): {mae:.4}");
+        Ok(mae)
+    };
+    let mae_untrained = served_mae(&client, "untrained endpoint")?;
+    let version = trainer.promote_to(&service, "default");
+    println!("hot-swapped the trained checkpoint into the live service \
+              (endpoint version {version})");
+    let mae_trained = served_mae(&client, "after hot swap")?;
+    assert!(
+        mae_trained < mae_untrained,
+        "promotion must improve the served model \
+         ({mae_untrained:.4} -> {mae_trained:.4})"
+    );
+    // the served model is exactly the trainer's snapshot
     let model = Arc::new(trainer.into_model());
-    let server = ForceFieldServer::start_native(
-        NativeGauntBackend::with_model(model.clone()),
-        ServerConfig { r_cut: model.cfg.r_cut, ..Default::default() },
-    )?;
     let mut served_err = 0.0f64;
     for g in &test {
-        let resp = server.infer_blocking(g.pos.clone(), g.species.clone())?;
+        let resp = client
+            .call(Request::new(EnergyForces(Structure::new(
+                g.pos.clone(),
+                g.species.clone(),
+            ))))
+            .map_err(|e| gaunt_tp::err!("{e}"))?;
         let (e_local, _) = model.energy_forces(&g.pos, &g.species);
         served_err = served_err.max((resp.energy - e_local).abs());
     }
     println!(
-        "served {} held-out structures through NativeGauntBackend \
+        "served {} held-out structures through the hot-swapped endpoint \
          (max |served - local| = {served_err:.2e})",
         test.len()
     );
-    println!("service metrics: {}", server.metrics().report());
-    server.shutdown();
+    println!("service metrics: {}", service.metrics().report());
+    service.shutdown();
     Ok(())
 }

@@ -36,14 +36,14 @@ fn main() {
         .unwrap();
         let n_requests = 96usize;
         let t0 = Instant::now();
-        let rxs: Vec<_> = (0..n_requests)
+        let tickets: Vec<_> = (0..n_requests)
             .map(|i| {
                 let g = &structures[i % structures.len()];
                 server.submit(g.pos.clone(), g.species.clone()).unwrap()
             })
             .collect();
-        for rx in rxs {
-            rx.recv().unwrap().unwrap();
+        for t in tickets {
+            t.wait().unwrap();
         }
         let wall = t0.elapsed().as_secs_f64();
         println!(

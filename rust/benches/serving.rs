@@ -1,0 +1,141 @@
+//! Serving-protocol benchmark: p50/p99 request latency and
+//! structures/sec of the typed `Client` -> `Service` path under a
+//! bimodal (small/large structure) closed-loop load, comparing the
+//! pre-redesign single worst-case-width queue ("global") against
+//! shape-bucketed batching ("bucketed") at 1 and N workers.
+//!
+//! Feeds the `serving` section of BENCH_fourier.json via
+//! `scripts/bench_snapshot.sh`.  Derived rows (iters = 0) follow the
+//! table2 convention: `*_p50` / `*_p99` carry nanoseconds in
+//! `median_ns`; `*_rate` carries structures/sec; `*_atom_fill` carries
+//! the executed-slot fill ratio (higher = less padding waste).
+//!
+//! `--smoke`: a handful of requests, no TSV (CI liveness check).
+
+use std::time::{Duration, Instant};
+
+use gaunt_tp::coordinator::batcher::{BatchPolicy, BucketConfig};
+use gaunt_tp::coordinator::request::{EnergyForces, Request, Structure};
+use gaunt_tp::coordinator::server::{NativeGauntBackend, ServerConfig};
+use gaunt_tp::coordinator::Service;
+use gaunt_tp::util::bench::{smoke, BenchTable, Measurement};
+use gaunt_tp::util::pool;
+use gaunt_tp::util::rng::Rng;
+
+fn cluster(n: usize, seed: u64) -> Structure {
+    let mut rng = Rng::new(seed);
+    Structure::new(
+        (0..n)
+            .map(|i| {
+                [
+                    3.5 * (i % 3) as f64 + 0.1 * rng.normal(),
+                    3.5 * ((i / 3) % 3) as f64 + 0.1 * rng.normal(),
+                    3.5 * (i / 9) as f64 + 0.1 * rng.normal(),
+                ]
+            })
+            .collect(),
+        (0..n).map(|i| i % 3).collect(),
+    )
+}
+
+fn derived(name: String, value: f64) -> Measurement {
+    Measurement { name, median_ns: value, mad_ns: 0.0, iters: 0 }
+}
+
+fn run_config(
+    t: &mut BenchTable, label: &str, buckets: Vec<BucketConfig>,
+    n_workers: usize, n_requests: usize, structures: &[Structure],
+) {
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        max_queue: 65536,
+    };
+    let service = Service::builder()
+        .native(NativeGauntBackend::default())
+        .config(ServerConfig { policy, n_workers, ..Default::default() })
+        .buckets(buckets)
+        .build()
+        .expect("native service");
+    let client = service.client();
+    // closed loop from two submitter threads (keeps the queue non-empty
+    // without unbounded pile-up)
+    let t0 = Instant::now();
+    let mut lat: Vec<f64> = Vec::with_capacity(n_requests);
+    let mut handles = Vec::new();
+    for c in 0..2usize {
+        let client = client.clone();
+        let structs: Vec<Structure> = structures.to_vec();
+        let per = n_requests / 2;
+        handles.push(std::thread::spawn(move || -> Vec<f64> {
+            let mut lat = Vec::with_capacity(per);
+            for k in 0..per {
+                let st = structs[(2 * k + c) % structs.len()].clone();
+                match client
+                    .submit(Request::new(EnergyForces(st)))
+                    .map(|t| t.wait())
+                {
+                    Ok(Ok(resp)) => lat.push(resp.latency_s),
+                    _ => {}
+                }
+            }
+            lat
+        }));
+    }
+    for h in handles {
+        lat.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!(!lat.is_empty(), "no request completed");
+    let n = lat.len();
+    let p50_ns = 1e9 * lat[n / 2];
+    let p99_ns = 1e9 * lat[(n * 99 / 100).min(n - 1)];
+    let rate = n as f64 / wall;
+    let fill = service.metrics().atom_fill();
+    t.add(derived(format!("serving_{label}_w{n_workers}_p50"), p50_ns));
+    t.add(derived(format!("serving_{label}_w{n_workers}_p99"), p99_ns));
+    t.add(derived(format!("serving_{label}_w{n_workers}_rate"), rate));
+    t.add(derived(
+        format!("serving_{label}_w{n_workers}_atom_fill"),
+        fill,
+    ));
+    service.shutdown();
+}
+
+fn main() {
+    let mut t = BenchTable::new(
+        "serving protocol: global queue vs shape-bucketed batching",
+    );
+    let n_requests = if smoke() { 16 } else { 512 };
+    // bimodal: 4-atom and 24-atom structures, interleaved
+    let mut structures = Vec::new();
+    for k in 0..8u64 {
+        structures.push(cluster(4, 100 + k));
+        structures.push(cluster(24, 200 + k));
+    }
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        max_queue: 65536,
+    };
+    let global = vec![BucketConfig { max_atoms: 32, max_edges: 256, policy }];
+    let bucketed = vec![
+        BucketConfig { max_atoms: 8, max_edges: 56, policy },
+        BucketConfig { max_atoms: 32, max_edges: 256, policy },
+    ];
+    let n_cores = pool::default_threads().max(2);
+    for workers in [1usize, n_cores] {
+        run_config(
+            &mut t, "global_q", global.clone(), workers, n_requests,
+            &structures,
+        );
+        run_config(
+            &mut t, "bucketed", bucketed.clone(), workers, n_requests,
+            &structures,
+        );
+    }
+    if !smoke() {
+        t.write_tsv("serving");
+    }
+}

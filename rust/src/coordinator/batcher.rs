@@ -1,12 +1,31 @@
-//! Dynamic batcher: Condvar-guarded queue with a size-or-deadline flush
-//! policy (the standard serving trade-off: fill batches for throughput,
-//! bound queueing delay for latency) and backpressure via a queue cap.
+//! Dynamic batching, in two generations:
+//!
+//! * [`Batcher`] — the legacy single global queue over [`Envelope`]s
+//!   (kept as the compatibility substrate and for its tests).  Fixed
+//!   here: `close()` drains and **fails** every still-queued request
+//!   deterministically (the old close left them to luck — with no live
+//!   worker they leaked a forever-blocked `rx.recv()`), and the
+//!   size-or-deadline flush honors `max_wait` measured from the
+//!   *oldest* queued envelope even while new arrivals keep trickling in
+//!   (a slow-filling queue must flush on the first request's clock, not
+//!   the last's).
+//!
+//! * [`BucketedBatcher`] — the serving queue of the typed protocol:
+//!   requests are routed to per-atom-count **shape buckets**, each with
+//!   its own queue and [`BatchPolicy`], and each flushed batch is padded
+//!   only to its bucket's width.  Padding waste stops scaling with the
+//!   largest structure in flight: a 4-atom structure queued behind a
+//!   32-atom one no longer pays a 32-slot pad.
+//!
+//! Both share the size-or-deadline flush rule (fill batches for
+//! throughput, bound queueing delay for latency) and backpressure via a
+//! queue cap.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use super::request::Envelope;
+use super::request::{Envelope, Pending, ServiceError};
 
 /// Flush policy.
 #[derive(Clone, Copy, Debug)]
@@ -29,12 +48,16 @@ impl Default for BatchPolicy {
     }
 }
 
+// ---------------------------------------------------------------------
+// legacy global queue
+// ---------------------------------------------------------------------
+
 struct Inner {
     queue: VecDeque<Envelope>,
     closed: bool,
 }
 
-/// Thread-safe dynamic batcher.
+/// Thread-safe dynamic batcher (legacy single global queue).
 pub struct Batcher {
     policy: BatchPolicy,
     inner: Mutex<Inner>,
@@ -61,7 +84,7 @@ impl Batcher {
             return Err(env);
         }
         g.queue.push_back(env);
-        self.cv.notify_one();
+        self.cv.notify_all();
         Ok(())
     }
 
@@ -73,35 +96,50 @@ impl Batcher {
         self.len() == 0
     }
 
-    /// Close the queue; wakes all waiting workers.
+    /// Close the queue: wakes all waiting workers AND deterministically
+    /// fails every still-pending request with an `Err` reply.  After
+    /// `close()` returns, no caller can be left waiting on a request
+    /// that no worker will ever serve.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        let drained: Vec<Envelope> = {
+            let mut g = self.inner.lock().unwrap();
+            g.closed = true;
+            g.queue.drain(..).collect()
+        };
         self.cv.notify_all();
+        for mut env in drained {
+            env.reply.send(Err(
+                "service closed while the request was still queued"
+                    .to_string(),
+            ));
+        }
     }
 
-    /// Block until a batch is ready per the policy (or the queue closes).
-    /// Returns `None` when closed and drained.  FIFO order is preserved.
+    /// Block until a batch is ready per the policy (or the queue
+    /// closes).  Returns `None` once closed (close() already failed any
+    /// leftover requests, so there is nothing to drain).  FIFO order is
+    /// preserved, and the deadline flush always runs on the OLDEST
+    /// envelope's clock: new arrivals never re-arm the timer.
     pub fn next_batch(&self) -> Option<Vec<Envelope>> {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if !g.queue.is_empty() {
-                let oldest = g.queue.front().unwrap().enqueued;
-                let waited = oldest.elapsed();
+            if g.closed {
+                return None;
+            }
+            if let Some(front) = g.queue.front() {
+                let waited = front.enqueued.elapsed();
                 if g.queue.len() >= self.policy.max_batch
                     || waited >= self.policy.max_wait
-                    || g.closed
                 {
                     let take = g.queue.len().min(self.policy.max_batch);
                     return Some(g.queue.drain(..take).collect());
                 }
-                // wait out the remaining deadline (or a new arrival)
+                // wait out the oldest envelope's remaining deadline (or
+                // a new arrival that might complete the batch)
                 let remain = self.policy.max_wait - waited;
                 let (g2, _timeout) = self.cv.wait_timeout(g, remain).unwrap();
                 g = g2;
             } else {
-                if g.closed {
-                    return None;
-                }
                 g = self.cv.wait(g).unwrap();
             }
         }
@@ -124,21 +162,246 @@ impl Batcher {
     }
 }
 
+// ---------------------------------------------------------------------
+// shape-bucketed queue (the typed-protocol serving queue)
+// ---------------------------------------------------------------------
+
+/// One shape bucket: requests whose largest structure fits in
+/// `max_atoms` are queued here and padded to exactly this width.
+#[derive(Clone, Copy, Debug)]
+pub struct BucketConfig {
+    /// padding width of every batch flushed from this bucket
+    pub max_atoms: usize,
+    /// edge-slot budget of every batch flushed from this bucket
+    pub max_edges: usize,
+    pub policy: BatchPolicy,
+}
+
+struct BucketedInner {
+    queues: Vec<VecDeque<Pending>>,
+    closed: bool,
+}
+
+/// Per-atom-count-bucket queues with per-bucket flush policies.  A
+/// request is routed to the smallest bucket that fits its largest
+/// structure; each bucket flushes by its own size-or-deadline rule
+/// (deadline measured from the bucket's OLDEST request), so small
+/// structures neither wait on nor pad up to the big ones.
+pub struct BucketedBatcher {
+    buckets: Vec<BucketConfig>,
+    inner: Mutex<BucketedInner>,
+    cv: Condvar,
+}
+
+impl BucketedBatcher {
+    /// Buckets are sorted ascending by `max_atoms`; at least one is
+    /// required.
+    pub fn new(mut buckets: Vec<BucketConfig>) -> BucketedBatcher {
+        assert!(!buckets.is_empty(), "need at least one shape bucket");
+        buckets.sort_by_key(|b| b.max_atoms);
+        let n = buckets.len();
+        BucketedBatcher {
+            buckets,
+            inner: Mutex::new(BucketedInner {
+                queues: (0..n).map(|_| VecDeque::new()).collect(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn buckets(&self) -> &[BucketConfig] {
+        &self.buckets
+    }
+
+    pub fn bucket(&self, idx: usize) -> BucketConfig {
+        self.buckets[idx]
+    }
+
+    /// Largest structure any bucket can hold.
+    pub fn max_atoms(&self) -> usize {
+        self.buckets.last().map(|b| b.max_atoms).unwrap_or(0)
+    }
+
+    /// Index of the smallest bucket that fits `n_atoms`.
+    pub fn bucket_for(&self, n_atoms: usize) -> Option<usize> {
+        self.buckets.iter().position(|b| b.max_atoms >= n_atoms)
+    }
+
+    /// Enqueue into the smallest fitting bucket; `Err` carries the
+    /// rejected request back with the reason.
+    pub fn push(&self, p: Pending) -> Result<(), (Pending, String)> {
+        let idx = match self.bucket_for(p.n_atoms()) {
+            Some(i) => i,
+            None => {
+                let msg = format!(
+                    "no bucket fits a {}-atom structure (largest bucket \
+                     holds {})",
+                    p.n_atoms(),
+                    self.max_atoms()
+                );
+                return Err((p, msg));
+            }
+        };
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err((p, "service is shut down".to_string()));
+        }
+        if g.queues[idx].len() >= self.buckets[idx].policy.max_queue {
+            return Err((
+                p,
+                format!(
+                    "bucket {} (<= {} atoms) is full (backpressure, depth \
+                     {})",
+                    idx, self.buckets[idx].max_atoms,
+                    self.buckets[idx].policy.max_queue
+                ),
+            ));
+        }
+        g.queues[idx].push_back(p);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Total queued requests across every bucket.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Block until some bucket is flushable (size reached, or its
+    /// OLDEST request hit the bucket's `max_wait`).  Returns the bucket
+    /// index and the FIFO batch, or `None` once the queue is closed.
+    ///
+    /// Selection is latency-first: among OVERDUE buckets the
+    /// most-overdue wins (their fronts age, so under sustained overload
+    /// buckets alternate by age instead of one starving the others);
+    /// a merely-full bucket flushes immediately only when nothing is
+    /// overdue — a full small bucket can therefore never starve a
+    /// larger bucket past its `max_wait`.
+    pub fn next_batch(&self) -> Option<(usize, Vec<Pending>)> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            let mut overdue: Option<(usize, Duration)> = None;
+            let mut full: Option<usize> = None;
+            let mut min_remain: Option<Duration> = None;
+            let mut any_queued = false;
+            for (i, q) in g.queues.iter().enumerate() {
+                let front = match q.front() {
+                    Some(f) => f,
+                    None => continue,
+                };
+                any_queued = true;
+                let pol = &self.buckets[i].policy;
+                let waited = now.saturating_duration_since(front.enqueued);
+                if waited >= pol.max_wait {
+                    let over = waited - pol.max_wait;
+                    if overdue.map_or(true, |(_, best)| over > best) {
+                        overdue = Some((i, over));
+                    }
+                } else {
+                    if q.len() >= pol.max_batch && full.is_none() {
+                        full = Some(i);
+                    }
+                    let remain = pol.max_wait - waited;
+                    min_remain =
+                        Some(min_remain.map_or(remain, |m| m.min(remain)));
+                }
+            }
+            let ready = overdue.map(|(i, _)| i).or(full);
+            if let Some(i) = ready {
+                let take =
+                    g.queues[i].len().min(self.buckets[i].policy.max_batch);
+                let batch: Vec<Pending> = g.queues[i].drain(..take).collect();
+                return Some((i, batch));
+            }
+            g = if any_queued {
+                match min_remain {
+                    Some(d) => self.cv.wait_timeout(g, d).unwrap().0,
+                    None => self.cv.wait(g).unwrap(),
+                }
+            } else {
+                self.cv.wait(g).unwrap()
+            };
+        }
+    }
+
+    /// Close every bucket: wakes all workers and deterministically fails
+    /// every still-queued request with [`ServiceError::Shutdown`].
+    pub fn close(&self) {
+        let drained: Vec<Pending> = {
+            let mut g = self.inner.lock().unwrap();
+            g.closed = true;
+            let mut v = Vec::new();
+            for q in g.queues.iter_mut() {
+                v.extend(q.drain(..));
+            }
+            v
+        };
+        self.cv.notify_all();
+        for p in drained {
+            p.finish(Err(ServiceError::Shutdown));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::ForceRequest;
-    use std::sync::mpsc::channel;
-    use std::time::Instant;
+    use crate::coordinator::request::{
+        ForceRequest, ReplyGuard, ReplyMsg, ReplySlot, Structure, Task,
+    };
+    use std::sync::atomic::AtomicBool;
+    use std::sync::mpsc::{channel, Receiver};
     use std::sync::Arc;
 
     fn env(id: u64) -> Envelope {
         let (tx, _rx) = channel();
         Envelope {
             req: ForceRequest { id, pos: vec![], species: vec![] },
-            reply: tx,
+            reply: ReplyGuard::new(tx),
             enqueued: Instant::now(),
         }
+    }
+
+    fn env_with_rx(id: u64) -> (Envelope, Receiver<Result<crate::coordinator::request::ForceResponse, String>>) {
+        let (tx, rx) = channel();
+        (
+            Envelope {
+                req: ForceRequest { id, pos: vec![], species: vec![] },
+                reply: ReplyGuard::new(tx),
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    fn pending(id: u64, n_atoms: usize) -> (Pending, Receiver<ReplyMsg>) {
+        let (tx, rx) = channel();
+        (
+            Pending {
+                id,
+                task: Task::EnergyForces {
+                    structure: Structure {
+                        pos: vec![[0.0; 3]; n_atoms],
+                        species: vec![0; n_atoms],
+                    },
+                },
+                model: None,
+                enqueued: Instant::now(),
+                deadline: None,
+                cancel: Arc::new(AtomicBool::new(false)),
+                reply: ReplySlot::new(tx),
+            },
+            rx,
+        )
     }
 
     #[test]
@@ -174,6 +437,46 @@ mod tests {
     }
 
     #[test]
+    fn flush_deadline_runs_on_the_oldest_not_the_newest() {
+        // a slow-filling queue: new envelopes keep arriving every few
+        // ms, never reaching max_batch.  The flush must fire ~max_wait
+        // after the FIRST envelope — if arrivals re-armed the timer the
+        // batch would be starved for the whole push storm.
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 1000,
+            max_wait: Duration::from_millis(50),
+            max_queue: 10_000,
+        }));
+        let b2 = b.clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let pusher = std::thread::spawn(move || {
+            for i in 0..200u64 {
+                if stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                    break;
+                }
+                let _ = b2.push(env(i));
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        });
+        // wait until the first envelope is actually queued, THEN time
+        while b.is_empty() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        let elapsed = t0.elapsed();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(batch[0].req.id, 0, "oldest first");
+        assert!(
+            elapsed < Duration::from_millis(400),
+            "flush starved by slow-filling queue: waited {elapsed:?} \
+             (max_wait is 50ms)"
+        );
+        pusher.join().unwrap();
+    }
+
+    #[test]
     fn backpressure_rejects() {
         let b = Batcher::new(BatchPolicy {
             max_batch: 8,
@@ -193,6 +496,33 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         b.close();
         assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn close_fails_pending_requests_deterministically() {
+        // the other half of the client-hang fix: close() with a
+        // non-empty queue must fail every queued request THEN AND THERE
+        // — even with zero live workers, no caller is left hanging
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_secs(60),
+            max_queue: 100,
+        });
+        let (e0, rx0) = env_with_rx(0);
+        let (e1, rx1) = env_with_rx(1);
+        b.push(e0).map_err(|_| ()).unwrap();
+        b.push(e1).map_err(|_| ()).unwrap();
+        b.close();
+        for rx in [rx0, rx1] {
+            let got = rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("close must reply, not leak the request");
+            assert!(got.is_err());
+            assert!(got.unwrap_err().contains("closed"));
+        }
+        // and the queue really is drained: workers see None
+        assert!(b.next_batch().is_none());
+        assert!(b.is_empty());
     }
 
     #[test]
@@ -219,5 +549,162 @@ mod tests {
         let b = Batcher::new(BatchPolicy::default());
         b.close();
         assert!(b.push(env(0)).is_err());
+    }
+
+    // -- bucketed ------------------------------------------------------
+
+    fn two_buckets(small_wait_ms: u64, big_wait_ms: u64) -> BucketedBatcher {
+        BucketedBatcher::new(vec![
+            BucketConfig {
+                max_atoms: 8,
+                max_edges: 56,
+                policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(small_wait_ms),
+                    max_queue: 64,
+                },
+            },
+            BucketConfig {
+                max_atoms: 32,
+                max_edges: 256,
+                policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(big_wait_ms),
+                    max_queue: 64,
+                },
+            },
+        ])
+    }
+
+    #[test]
+    fn routes_by_atom_count() {
+        let b = two_buckets(1000, 1000);
+        assert_eq!(b.bucket_for(1), Some(0));
+        assert_eq!(b.bucket_for(8), Some(0));
+        assert_eq!(b.bucket_for(9), Some(1));
+        assert_eq!(b.bucket_for(32), Some(1));
+        assert_eq!(b.bucket_for(33), None);
+        assert_eq!(b.max_atoms(), 32);
+    }
+
+    #[test]
+    fn too_large_is_rejected_with_the_request() {
+        let b = two_buckets(1000, 1000);
+        let (p, _rx) = pending(0, 40);
+        let (p, why) = b.push(p).unwrap_err();
+        assert_eq!(p.id, 0);
+        assert!(why.contains("no bucket"), "{why}");
+    }
+
+    #[test]
+    fn buckets_flush_independently() {
+        // the small bucket fills to its max_batch and flushes at once;
+        // the big bucket's lone request waits out its own deadline
+        let b = two_buckets(2000, 2000);
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let (p, rx) = pending(i, 4);
+            b.push(p).map_err(|_| ()).unwrap();
+            rxs.push(rx);
+        }
+        let (p_big, _rx_big) = pending(99, 20);
+        b.push(p_big).map_err(|_| ()).unwrap();
+        let t0 = Instant::now();
+        let (idx, batch) = b.next_batch().unwrap();
+        assert_eq!(idx, 0, "full small bucket flushes first");
+        assert_eq!(batch.len(), 4);
+        assert!(t0.elapsed() < Duration::from_millis(500),
+                "size flush must not wait for any deadline");
+        assert_eq!(b.len(), 1, "big bucket still queued");
+    }
+
+    #[test]
+    fn per_bucket_deadline_uses_each_buckets_oldest() {
+        // small bucket: long deadline; big bucket: short — the big one
+        // must flush first even though the small request is older
+        let b = two_buckets(1500, 20);
+        let (p_small, _r1) = pending(1, 4);
+        b.push(p_small).map_err(|_| ()).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let (p_big, _r2) = pending(2, 20);
+        b.push(p_big).map_err(|_| ()).unwrap();
+        let (idx, batch) = b.next_batch().unwrap();
+        assert_eq!(idx, 1, "short-deadline bucket flushes first");
+        assert_eq!(batch[0].id, 2);
+    }
+
+    #[test]
+    fn full_small_bucket_cannot_starve_an_overdue_big_bucket() {
+        // small bucket: effectively no deadline, kept full; big bucket:
+        // 30ms deadline.  Once the big request is overdue it must win
+        // the next flush even though the small bucket is still full.
+        let b = BucketedBatcher::new(vec![
+            BucketConfig {
+                max_atoms: 8,
+                max_edges: 56,
+                policy: BatchPolicy {
+                    max_batch: 2,
+                    max_wait: Duration::from_secs(60),
+                    max_queue: 64,
+                },
+            },
+            BucketConfig {
+                max_atoms: 32,
+                max_edges: 256,
+                policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(30),
+                    max_queue: 64,
+                },
+            },
+        ]);
+        let mut rxs = Vec::new();
+        for i in 0..6 {
+            let (p, rx) = pending(i, 4);
+            b.push(p).map_err(|_| ()).unwrap();
+            rxs.push(rx);
+        }
+        let (p_big, _rx_big) = pending(99, 20);
+        b.push(p_big).map_err(|_| ()).unwrap();
+        // nothing overdue yet: full small-bucket flushes drain first
+        let (idx, _) = b.next_batch().unwrap();
+        assert_eq!(idx, 0);
+        std::thread::sleep(Duration::from_millis(40));
+        // the big request is now overdue; the still-full small bucket
+        // must not starve it
+        let (idx, batch) = b.next_batch().unwrap();
+        assert_eq!(idx, 1, "overdue bucket must beat a merely-full one");
+        assert_eq!(batch[0].id, 99);
+        assert_eq!(b.len(), 4, "small bucket still holds its backlog");
+    }
+
+    #[test]
+    fn close_fails_all_buckets_pending() {
+        let b = two_buckets(60_000, 60_000);
+        let (p1, rx1) = pending(1, 4);
+        let (p2, rx2) = pending(2, 20);
+        b.push(p1).map_err(|_| ()).unwrap();
+        b.push(p2).map_err(|_| ()).unwrap();
+        b.close();
+        for rx in [rx1, rx2] {
+            match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+                ReplyMsg::Done(Err(ServiceError::Shutdown)) => {}
+                other => panic!("expected Shutdown, got {other:?}"),
+            }
+        }
+        assert!(b.next_batch().is_none());
+        // push after close is rejected
+        let (p3, _rx3) = pending(3, 4);
+        assert!(b.push(p3).is_err());
+    }
+
+    #[test]
+    fn bucketed_close_unblocks_waiting_worker() {
+        let b = Arc::new(two_buckets(60_000, 60_000));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert!(h.join().unwrap().is_none());
     }
 }

@@ -76,9 +76,31 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub responses: AtomicU64,
     pub rejected: AtomicU64,
+    /// requests failed with `ServiceError::Canceled`
+    pub canceled: AtomicU64,
+    /// requests failed with `ServiceError::DeadlineExceeded`
+    pub expired: AtomicU64,
+    /// requests failed at execution time (backend `Exec` errors,
+    /// vanished endpoints) — together with `responses`, `rejected`,
+    /// `canceled`, and `expired` this reconciles against `requests`
+    /// (worker panics are the remainder, counted in `worker_panics`)
+    pub failed: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
     pub padding_waste: AtomicU64,
+    /// atom slots executed (batch rows x bucket width), the padding
+    /// denominator: `atom_fill = true_atom_slots / padded_atom_slots`
+    pub padded_atom_slots: AtomicU64,
+    /// occupied atom slots actually carried by those rows
+    pub true_atom_slots: AtomicU64,
+    /// MD frames streamed to rollout tickets
+    pub frames: AtomicU64,
+    /// relax tasks completed (any outcome)
+    pub relaxes: AtomicU64,
+    /// rollout tasks completed (any outcome)
+    pub rollouts: AtomicU64,
+    /// worker panics survived (requests were failed via reply-on-drop)
+    pub worker_panics: AtomicU64,
     /// tensor-product plans built so far (gauge, mirrored from the
     /// engine's `PlanCache` after each batch)
     pub plan_builds: AtomicU64,
@@ -114,17 +136,45 @@ impl Metrics {
         self.plan_entries.store(entries, Ordering::Relaxed);
     }
 
+    /// Record one executed padded chunk: `rows` occupied rows padded to
+    /// `row_slots` total rows of `width` atom slots each, carrying
+    /// `true_atoms` real atoms.
+    pub fn observe_padding(
+        &self, row_slots: u64, width: u64, true_atoms: u64,
+    ) {
+        self.padded_atom_slots
+            .fetch_add(row_slots * width, Ordering::Relaxed);
+        self.true_atom_slots.fetch_add(true_atoms, Ordering::Relaxed);
+    }
+
+    /// Fraction of executed atom slots that carried a real atom (1.0 =
+    /// no padding waste at all; 0.0 before anything executed).
+    pub fn atom_fill(&self) -> f64 {
+        let padded = self.padded_atom_slots.load(Ordering::Relaxed);
+        if padded == 0 {
+            return 0.0;
+        }
+        self.true_atom_slots.load(Ordering::Relaxed) as f64 / padded as f64
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests={} responses={} rejected={} batches={} mean_batch={:.2} \
-             pad_waste={} plans={}/{}built hits={} p50={:.2}ms p99={:.2}ms \
+            "requests={} responses={} rejected={} canceled={} expired={} \
+             failed={} batches={} mean_batch={:.2} \
+             pad_waste={} atom_fill={:.2} frames={} \
+             plans={}/{}built hits={} p50={:.2}ms p99={:.2}ms \
              mean={:.2}ms exec_p50={:.2}ms",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
+            self.canceled.load(Ordering::Relaxed),
+            self.expired.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.padding_waste.load(Ordering::Relaxed),
+            self.atom_fill(),
+            self.frames.load(Ordering::Relaxed),
             self.plan_entries.load(Ordering::Relaxed),
             self.plan_builds.load(Ordering::Relaxed),
             self.plan_hits.load(Ordering::Relaxed),
@@ -179,6 +229,17 @@ mod tests {
         assert!(r.contains("requests=10"));
         assert!(r.contains("mean_batch=5.00"));
         assert!(r.contains("plans=4/4built hits=123"), "{r}");
+    }
+
+    #[test]
+    fn atom_fill_tracks_padding() {
+        let m = Metrics::new();
+        assert_eq!(m.atom_fill(), 0.0);
+        // 4 rows padded to 8 atoms each, carrying 16 real atoms
+        m.observe_padding(4, 8, 16);
+        assert!((m.atom_fill() - 0.5).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("atom_fill=0.50"), "{r}");
     }
 
     #[test]

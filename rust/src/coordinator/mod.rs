@@ -1,30 +1,48 @@
 //! Layer-3 coordinator: a force-field serving + training system in the
-//! vLLM mold (request router, dynamic batcher, worker pool, metrics),
-//! built on std threads (tokio is unavailable offline; the event loop is
-//! a Condvar-driven queue, see DESIGN.md §3).
+//! vLLM mold (typed task protocol, shape-bucketed dynamic batching,
+//! versioned model registry, worker pool, metrics), built on std
+//! threads (tokio is unavailable offline; the event loop is a
+//! Condvar-driven queue, see DESIGN.md §3/§10).
 //!
 //! Dataflow (serving):
-//!   client -> [`server::ForceFieldServer::submit`] -> [`batcher`] queue
-//!   -> worker thread: [`router`] picks the smallest executable variant
-//!   that fits -> pad ([`crate::data::PaddedBatch`]) -> PJRT execute ->
-//!   unpad -> respond through the per-request channel.
+//!   client -> [`service::Client::submit`] (`Request<Task>` ->
+//!   [`request::Ticket`], reply-on-drop guaranteed) -> per-atom-count
+//!   bucket queue ([`batcher::BucketedBatcher`]) -> worker thread:
+//!   resolve the model endpoint ONCE per batch ([`registry::Registry`],
+//!   hot-swappable) -> [`router`] picks the smallest executable variant
+//!   that fits -> pad to the BUCKET width ([`crate::data::PaddedBatch`])
+//!   -> backend execute -> unpad -> typed reply.  Relax / MD-rollout
+//!   tasks run as long tasks on the worker, streaming frames.
 //!
 //! Dataflow (training): [`trainer::Trainer`] drives the fused
 //! `ff_train_step_*` artifact over shuffled minibatches, and
 //! [`trainer::NativeTrainer`] runs the artifact-free loop over the
 //! native Gaunt-engine model (energy + force loss, Adam, JSON
-//! checkpoints) whose result feeds straight into
-//! [`server::NativeGauntBackend`].
+//! checkpoints) whose checkpoints can be hot-promoted into a live
+//! [`service::Service`] via [`trainer::NativeTrainer::promote_to`].
+//!
+//! The legacy single-call façade ([`server::ForceFieldServer`],
+//! `start`/`start_native`/`start_with`) remains as a thin wrapper over
+//! [`service::Service::builder`].
 
 pub mod batcher;
 pub mod metrics;
+pub mod registry;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod service;
 pub mod trainer;
 
-pub use request::{ForceRequest, ForceResponse};
+pub use batcher::{BatchPolicy, BucketConfig};
+pub use registry::{ModelVersion, Registry, DEFAULT_ENDPOINT};
+pub use request::{
+    Batch, EnergyForces, EnergyOnly, EnergyOut, ForceRequest, ForceResponse,
+    Frame, MdRollout, Relax, Reply, Request, RolloutSummary, ServiceError,
+    Structure, Task, TaskSpec, Ticket, Trajectory,
+};
 pub use server::{
     Backend, BackendSpec, ForceFieldServer, NativeGauntBackend, ServerConfig,
 };
+pub use service::{Client, Service, ServiceBuilder};
 pub use trainer::{NativeTrainConfig, NativeTrainer, Trainer};

@@ -1,0 +1,177 @@
+//! Named-model registry with versioned endpoints and hot swap.
+//!
+//! Each endpoint is a name (`"default"` unless the request says
+//! otherwise) holding the *current* [`ModelVersion`] behind an
+//! `RwLock<Arc<_>>` — the ArcSwap pattern expressible without external
+//! crates: readers take the read lock only long enough to clone the
+//! `Arc` (no allocation, no contention with other readers), writers
+//! swap the `Arc` in one short write section.  [`Registry::register`]
+//! on an existing name IS the hot swap: checkpoints promoted from
+//! [`crate::coordinator::trainer::NativeTrainer`] become live without
+//! stopping the server.
+//!
+//! **Torn-batch freedom.**  Workers resolve an endpoint ONCE per padded
+//! batch (and once per relax/rollout) and keep the `Arc<ModelVersion>`
+//! for the whole execution; a swap mid-batch therefore changes which
+//! model the NEXT batch sees, never the rows of an in-flight one.
+//! In-flight versions are freed by the last `Arc` owner, so swaps are
+//! also safe against use-after-free by construction.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::model::Model;
+
+/// The endpoint every request without an explicit `model` name hits.
+pub const DEFAULT_ENDPOINT: &str = "default";
+
+/// One immutable (name, version, model) triple.  Workers hold this for
+/// the duration of a batch.
+pub struct ModelVersion {
+    pub name: String,
+    /// globally monotone: every `register` (first or swap) bumps it
+    pub version: u64,
+    pub model: Arc<Model>,
+}
+
+struct Endpoint {
+    current: RwLock<Arc<ModelVersion>>,
+}
+
+/// Named, versioned model endpoints with lock-free-read hot swap.
+pub struct Registry {
+    endpoints: RwLock<HashMap<String, Arc<Endpoint>>>,
+    version_counter: AtomicU64,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            endpoints: RwLock::new(HashMap::new()),
+            version_counter: AtomicU64::new(0),
+        }
+    }
+
+    /// Create or hot-swap the endpoint `name`; returns the new version.
+    /// Existing readers keep the version they already resolved.
+    pub fn register(&self, name: &str, model: Arc<Model>) -> u64 {
+        let version =
+            self.version_counter.fetch_add(1, Ordering::Relaxed) + 1;
+        let mv = Arc::new(ModelVersion {
+            name: name.to_string(),
+            version,
+            model,
+        });
+        // fast path: endpoint exists — swap under the endpoint's own
+        // write lock without touching the map
+        {
+            let map = self.endpoints.read().unwrap();
+            if let Some(ep) = map.get(name) {
+                *ep.current.write().unwrap() = mv;
+                return version;
+            }
+        }
+        // slow path: insert (double-checked against racing registers)
+        let mut map = self.endpoints.write().unwrap();
+        match map.get(name) {
+            Some(ep) => *ep.current.write().unwrap() = mv,
+            None => {
+                map.insert(
+                    name.to_string(),
+                    Arc::new(Endpoint { current: RwLock::new(mv) }),
+                );
+            }
+        }
+        version
+    }
+
+    /// Resolve an endpoint (None = [`DEFAULT_ENDPOINT`]) to its current
+    /// version.  The returned `Arc` pins that version for as long as the
+    /// caller holds it — this is the per-batch resolution point.
+    pub fn resolve(&self, name: Option<&str>) -> Option<Arc<ModelVersion>> {
+        let name = name.unwrap_or(DEFAULT_ENDPOINT);
+        let map = self.endpoints.read().unwrap();
+        map.get(name).map(|ep| ep.current.read().unwrap().clone())
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.endpoints.read().unwrap().contains_key(name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.endpoints.read().unwrap().is_empty()
+    }
+
+    /// (name, current version) for every endpoint, sorted by name.
+    pub fn endpoints(&self) -> Vec<(String, u64)> {
+        let map = self.endpoints.read().unwrap();
+        let mut out: Vec<(String, u64)> = map
+            .iter()
+            .map(|(k, ep)| (k.clone(), ep.current.read().unwrap().version))
+            .collect();
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn tiny_model(seed: u64) -> Arc<Model> {
+        Arc::new(Model::new(
+            ModelConfig { n_layers: 1, ..Default::default() },
+            seed,
+        ))
+    }
+
+    #[test]
+    fn register_resolve_and_swap_bump_versions() {
+        let r = Registry::new();
+        assert!(r.resolve(None).is_none());
+        let v1 = r.register(DEFAULT_ENDPOINT, tiny_model(1));
+        let got = r.resolve(None).unwrap();
+        assert_eq!(got.version, v1);
+        assert_eq!(got.name, DEFAULT_ENDPOINT);
+        let v2 = r.register(DEFAULT_ENDPOINT, tiny_model(2));
+        assert!(v2 > v1, "swap must bump the version");
+        assert_eq!(r.resolve(None).unwrap().version, v2);
+        // the old version stays alive for whoever pinned it
+        assert_eq!(got.version, v1);
+    }
+
+    #[test]
+    fn named_endpoints_are_independent() {
+        let r = Registry::new();
+        r.register("a", tiny_model(1));
+        let vb = r.register("b", tiny_model(2));
+        assert!(r.contains("a") && r.contains("b"));
+        assert!(!r.contains("c"));
+        assert!(r.resolve(Some("c")).is_none());
+        assert_eq!(r.resolve(Some("b")).unwrap().version, vb);
+        let eps = r.endpoints();
+        assert_eq!(eps.len(), 2);
+        assert_eq!(eps[0].0, "a");
+    }
+
+    #[test]
+    fn swap_is_visible_to_new_resolves_only() {
+        let r = Registry::new();
+        r.register(DEFAULT_ENDPOINT, tiny_model(1));
+        let pinned = r.resolve(None).unwrap();
+        let p1 = Arc::as_ptr(&pinned.model);
+        r.register(DEFAULT_ENDPOINT, tiny_model(2));
+        let fresh = r.resolve(None).unwrap();
+        assert!(!std::ptr::eq(p1, Arc::as_ptr(&fresh.model)));
+        // the pinned batch still sees its original model pointer
+        assert!(std::ptr::eq(p1, Arc::as_ptr(&pinned.model)));
+    }
+}

@@ -1,17 +1,230 @@
-//! Request/response types for the force-field service.
+//! The typed multi-task serving protocol.
+//!
+//! A request is a [`Task`] (what to compute) wrapped in a [`Request`]
+//! (how to serve it: deadline, model endpoint).  Submitting through
+//! [`crate::coordinator::service::Client`] returns a [`Ticket`] — a
+//! non-blocking, typed handle with `wait`/`try_poll`/`cancel` and, for
+//! streaming tasks, `next_frame`.
+//!
+//! **Reply-on-drop guarantee.**  Every queued request owns a
+//! [`ReplySlot`]; if the slot is dropped before a reply was sent — a
+//! worker panicked mid-batch, the queue was closed while the request was
+//! still pending, a batch errored — the slot's `Drop` sends
+//! [`ServiceError::Dropped`], so a caller blocked in [`Ticket::wait`]
+//! can NEVER hang.  The legacy [`Envelope`] carries the same guarantee
+//! through [`ReplyGuard`] (the original protocol leaked a
+//! forever-blocked `rx.recv()` whenever an envelope died between
+//! `submit` and the reply send).
+//!
+//! Typing is per task: each request struct ([`EnergyOnly`],
+//! [`EnergyForces`], [`Relax`], [`MdRollout`], [`Batch`]) implements
+//! [`TaskSpec`], which fixes the output type its ticket decodes to —
+//! submitting a `Relax` gives a `Ticket` that waits into a
+//! [`RelaxResult`], not a stringly-typed blob.
 
-use std::sync::mpsc::Sender;
-use std::time::Instant;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-/// A single-structure inference request.
+use crate::md::relax::RelaxResult;
+
+// ---------------------------------------------------------------------
+// errors
+// ---------------------------------------------------------------------
+
+/// Typed service errors — every way a request can fail to produce its
+/// task's output.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServiceError {
+    /// Refused at submit time (validation, backpressure, unknown model,
+    /// structure larger than the largest bucket).
+    Rejected(String),
+    /// The per-request deadline passed before the task finished.
+    DeadlineExceeded,
+    /// The caller canceled the ticket.
+    Canceled,
+    /// The service was shut down while the request was still queued.
+    Shutdown,
+    /// The request's reply slot was dropped without a reply (worker
+    /// panic or channel teardown) — the reply-on-drop guarantee turned a
+    /// would-be hang into this error.
+    Dropped(String),
+    /// The backend failed executing the task.
+    Exec(String),
+    /// The worker replied with a different task's reply shape (protocol
+    /// bug; should be unreachable).
+    Protocol(String),
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Rejected(m) => write!(f, "rejected: {m}"),
+            ServiceError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            ServiceError::Canceled => write!(f, "canceled by caller"),
+            ServiceError::Shutdown => {
+                write!(f, "service shut down while the request was queued")
+            }
+            ServiceError::Dropped(m) => {
+                write!(f, "dropped without a reply: {m}")
+            }
+            ServiceError::Exec(m) => write!(f, "execution failed: {m}"),
+            ServiceError::Protocol(m) => write!(f, "protocol error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+// ---------------------------------------------------------------------
+// tasks
+// ---------------------------------------------------------------------
+
+/// One atomic structure (positions + species), the unit every task is
+/// built from.
 #[derive(Clone, Debug)]
-pub struct ForceRequest {
-    pub id: u64,
+pub struct Structure {
     pub pos: Vec<[f64; 3]>,
     pub species: Vec<usize>,
 }
 
-/// The model's answer.
+impl Structure {
+    pub fn new(pos: Vec<[f64; 3]>, species: Vec<usize>) -> Structure {
+        Structure { pos, species }
+    }
+
+    pub fn n_atoms(&self) -> usize {
+        self.pos.len()
+    }
+}
+
+/// Most structures one [`Task::Batch`] may carry.  Backpressure counts
+/// queued *requests*, so an unbounded batch could smuggle arbitrary
+/// work (and memory) past every `max_queue` cap as one entry; larger
+/// workloads split into multiple `Batch` submissions.
+pub const MAX_BATCH_STRUCTURES: usize = 256;
+
+/// The wire-level task enum every request lowers to.
+#[derive(Clone, Debug)]
+pub enum Task {
+    /// Invariant energy only — the smallest reply payload (the backend
+    /// pass still computes forces; an energy-only fast path through
+    /// `Model::energy_into` is future work).
+    EnergyOnly { structure: Structure },
+    /// Energy + forces — the classic `ForceRequest` workload.
+    EnergyForces { structure: Structure },
+    /// FIRE relaxation on the served surface.
+    Relax { structure: Structure, max_steps: usize },
+    /// NVE rollout on the served surface, streaming one [`Frame`] per
+    /// step.
+    MdRollout { structure: Structure, steps: usize, dt: f64 },
+    /// Multi-structure submission, evaluated as one (or a few) padded
+    /// batches and answered atomically.
+    Batch { structures: Vec<Structure> },
+}
+
+impl Task {
+    /// The structures this task evaluates (batch rows in order).
+    pub fn structures(&self) -> Vec<&Structure> {
+        match self {
+            Task::EnergyOnly { structure }
+            | Task::EnergyForces { structure }
+            | Task::Relax { structure, .. }
+            | Task::MdRollout { structure, .. } => vec![structure],
+            Task::Batch { structures } => structures.iter().collect(),
+        }
+    }
+
+    /// Largest structure in the task — what picks the shape bucket.
+    pub fn n_atoms_max(&self) -> usize {
+        self.structures().iter().map(|s| s.n_atoms()).max().unwrap_or(0)
+    }
+
+    /// Short label for metrics/logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Task::EnergyOnly { .. } => "energy",
+            Task::EnergyForces { .. } => "energy_forces",
+            Task::Relax { .. } => "relax",
+            Task::MdRollout { .. } => "md_rollout",
+            Task::Batch { .. } => "batch",
+        }
+    }
+
+    /// Structural validation, done once at submit time so workers only
+    /// ever see well-formed tasks.
+    pub fn validate(&self) -> Result<(), String> {
+        fn check(st: &Structure) -> Result<(), String> {
+            if st.pos.is_empty() {
+                return Err("structure has no atoms".to_string());
+            }
+            if st.pos.len() != st.species.len() {
+                return Err(format!(
+                    "structure has {} atoms but {} species",
+                    st.pos.len(),
+                    st.species.len()
+                ));
+            }
+            Ok(())
+        }
+        match self {
+            Task::EnergyOnly { structure }
+            | Task::EnergyForces { structure } => check(structure),
+            Task::Relax { structure, max_steps } => {
+                check(structure)?;
+                if *max_steps == 0 {
+                    return Err("relax needs max_steps >= 1".to_string());
+                }
+                Ok(())
+            }
+            Task::MdRollout { structure, steps, dt } => {
+                check(structure)?;
+                if *steps == 0 {
+                    return Err("rollout needs steps >= 1".to_string());
+                }
+                if !dt.is_finite() || *dt <= 0.0 {
+                    return Err(format!("rollout needs a finite dt > 0, got {dt}"));
+                }
+                Ok(())
+            }
+            Task::Batch { structures } => {
+                if structures.is_empty() {
+                    return Err("batch submission with zero structures".into());
+                }
+                if structures.len() > MAX_BATCH_STRUCTURES {
+                    return Err(format!(
+                        "batch submission with {} structures exceeds the \
+                         {MAX_BATCH_STRUCTURES}-structure cap; split it \
+                         into multiple Batch requests",
+                        structures.len()
+                    ));
+                }
+                for st in structures {
+                    check(st)?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// replies
+// ---------------------------------------------------------------------
+
+/// Energy-only reply payload.
+#[derive(Clone, Debug)]
+pub struct EnergyOut {
+    pub id: u64,
+    pub energy: f64,
+    /// queueing + execution latency in seconds
+    pub latency_s: f64,
+}
+
+/// The model's energy+forces answer (also the legacy response type).
 #[derive(Clone, Debug)]
 pub struct ForceResponse {
     pub id: u64,
@@ -21,35 +234,676 @@ pub struct ForceResponse {
     pub latency_s: f64,
 }
 
-/// Internal envelope: request + reply channel + enqueue timestamp.
+/// One streamed MD frame.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub step: usize,
+    /// simulation time (step + 1) * dt
+    pub time: f64,
+    /// potential energy after the step
+    pub energy: f64,
+    pub kinetic: f64,
+    pub pos: Vec<[f64; 3]>,
+}
+
+/// Final summary of a rollout (frames were streamed separately).
+#[derive(Clone, Debug)]
+pub struct RolloutSummary {
+    pub id: u64,
+    /// steps actually integrated
+    pub steps: usize,
+    pub final_pos: Vec<[f64; 3]>,
+    /// total (kinetic + potential) energy at the end
+    pub final_energy: f64,
+}
+
+/// A rollout ticket's decoded output: the streamed frames (whatever the
+/// caller did not already drain through [`Ticket::next_frame`]) plus the
+/// summary.
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    pub frames: Vec<Frame>,
+    pub summary: RolloutSummary,
+}
+
+/// The wire-level reply enum (the typed counterpart of [`Task`]).
+#[derive(Clone, Debug)]
+pub enum Reply {
+    Energy(EnergyOut),
+    EnergyForces(ForceResponse),
+    Relaxed(RelaxResult),
+    Rollout(RolloutSummary),
+    Batch(Vec<ForceResponse>),
+}
+
+/// What travels over a ticket's channel: zero or more frames, then
+/// exactly one final message.
+#[derive(Debug)]
+pub enum ReplyMsg {
+    Frame(Frame),
+    Done(Result<Reply, ServiceError>),
+}
+
+// ---------------------------------------------------------------------
+// the reply slot (reply-on-drop)
+// ---------------------------------------------------------------------
+
+/// The server half of a ticket.  Guarantees exactly one final message:
+/// explicit via [`ReplySlot::finish`], or [`ServiceError::Dropped`] from
+/// `Drop` if the slot dies unreplied (worker panic, queue teardown).
+#[derive(Debug)]
+pub struct ReplySlot {
+    tx: Option<Sender<ReplyMsg>>,
+}
+
+impl ReplySlot {
+    pub fn new(tx: Sender<ReplyMsg>) -> ReplySlot {
+        ReplySlot { tx: Some(tx) }
+    }
+
+    /// Stream one frame (no-op after `finish`; send errors — the caller
+    /// dropped its ticket — are ignored).
+    pub fn frame(&self, f: Frame) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(ReplyMsg::Frame(f));
+        }
+    }
+
+    /// Send the final reply; subsequent calls (and the drop guard) are
+    /// no-ops.
+    pub fn finish(&mut self, r: Result<Reply, ServiceError>) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(ReplyMsg::Done(r));
+        }
+    }
+
+    pub fn replied(&self) -> bool {
+        self.tx.is_none()
+    }
+}
+
+impl Drop for ReplySlot {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(ReplyMsg::Done(Err(ServiceError::Dropped(
+                "reply slot dropped before a reply was sent (worker \
+                 failure or queue teardown)"
+                    .to_string(),
+            ))));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// pending (the queued form of a request)
+// ---------------------------------------------------------------------
+
+/// A submitted request as it sits in a bucket queue: task + serving
+/// context + the reply slot.
+#[derive(Debug)]
+pub struct Pending {
+    pub id: u64,
+    pub task: Task,
+    /// registry endpoint name (`None` = the default endpoint)
+    pub model: Option<String>,
+    pub enqueued: Instant,
+    pub deadline: Option<Instant>,
+    pub cancel: Arc<AtomicBool>,
+    pub reply: ReplySlot,
+}
+
+impl Pending {
+    pub fn n_atoms(&self) -> usize {
+        self.task.n_atoms_max()
+    }
+
+    pub fn canceled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.map_or(false, |d| now >= d)
+    }
+
+    /// Consume the pending with a final reply.
+    pub fn finish(mut self, r: Result<Reply, ServiceError>) {
+        self.reply.finish(r);
+    }
+}
+
+// ---------------------------------------------------------------------
+// typed request specs
+// ---------------------------------------------------------------------
+
+/// A typed task: lowers to a [`Task`] and fixes how its ticket decodes
+/// the final [`Reply`].
+pub trait TaskSpec: Send + 'static {
+    type Output;
+    fn into_task(self) -> Task;
+    fn decode(
+        reply: Reply, frames: Vec<Frame>,
+    ) -> Result<Self::Output, ServiceError>;
+}
+
+fn protocol_mismatch<O>(want: &str, got: &Reply) -> Result<O, ServiceError> {
+    Err(ServiceError::Protocol(format!(
+        "expected a {want} reply, got {got:?}"
+    )))
+}
+
+/// Energy only.
+pub struct EnergyOnly(pub Structure);
+
+impl TaskSpec for EnergyOnly {
+    type Output = EnergyOut;
+    fn into_task(self) -> Task {
+        Task::EnergyOnly { structure: self.0 }
+    }
+    fn decode(reply: Reply, _f: Vec<Frame>) -> Result<EnergyOut, ServiceError> {
+        match reply {
+            Reply::Energy(e) => Ok(e),
+            other => protocol_mismatch("Energy", &other),
+        }
+    }
+}
+
+/// Energy + forces.
+pub struct EnergyForces(pub Structure);
+
+impl TaskSpec for EnergyForces {
+    type Output = ForceResponse;
+    fn into_task(self) -> Task {
+        Task::EnergyForces { structure: self.0 }
+    }
+    fn decode(
+        reply: Reply, _f: Vec<Frame>,
+    ) -> Result<ForceResponse, ServiceError> {
+        match reply {
+            Reply::EnergyForces(r) => Ok(r),
+            other => protocol_mismatch("EnergyForces", &other),
+        }
+    }
+}
+
+/// FIRE relaxation served as a task.
+pub struct Relax {
+    pub structure: Structure,
+    pub max_steps: usize,
+}
+
+impl TaskSpec for Relax {
+    type Output = RelaxResult;
+    fn into_task(self) -> Task {
+        Task::Relax { structure: self.structure, max_steps: self.max_steps }
+    }
+    fn decode(
+        reply: Reply, _f: Vec<Frame>,
+    ) -> Result<RelaxResult, ServiceError> {
+        match reply {
+            Reply::Relaxed(r) => Ok(r),
+            other => protocol_mismatch("Relaxed", &other),
+        }
+    }
+}
+
+/// Streaming NVE rollout served as a task.
+pub struct MdRollout {
+    pub structure: Structure,
+    pub steps: usize,
+    pub dt: f64,
+}
+
+impl TaskSpec for MdRollout {
+    type Output = Trajectory;
+    fn into_task(self) -> Task {
+        Task::MdRollout {
+            structure: self.structure,
+            steps: self.steps,
+            dt: self.dt,
+        }
+    }
+    fn decode(
+        reply: Reply, frames: Vec<Frame>,
+    ) -> Result<Trajectory, ServiceError> {
+        match reply {
+            Reply::Rollout(summary) => Ok(Trajectory { frames, summary }),
+            other => protocol_mismatch("Rollout", &other),
+        }
+    }
+}
+
+/// Multi-structure batch submission.
+pub struct Batch(pub Vec<Structure>);
+
+impl TaskSpec for Batch {
+    type Output = Vec<ForceResponse>;
+    fn into_task(self) -> Task {
+        Task::Batch { structures: self.0 }
+    }
+    fn decode(
+        reply: Reply, _f: Vec<Frame>,
+    ) -> Result<Vec<ForceResponse>, ServiceError> {
+        match reply {
+            Reply::Batch(rs) => Ok(rs),
+            other => protocol_mismatch("Batch", &other),
+        }
+    }
+}
+
+/// A typed request: the task payload plus serving options.
+pub struct Request<T: TaskSpec> {
+    pub payload: T,
+    /// relative deadline, measured from submit
+    pub deadline: Option<Duration>,
+    /// registry endpoint name (`None` = the default endpoint)
+    pub model: Option<String>,
+}
+
+impl<T: TaskSpec> Request<T> {
+    pub fn new(payload: T) -> Request<T> {
+        Request { payload, deadline: None, model: None }
+    }
+
+    /// Fail the request with [`ServiceError::DeadlineExceeded`] if it
+    /// has not finished within `d` of submission.
+    pub fn deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Route to a named registry endpoint instead of the default model.
+    pub fn model(mut self, name: impl Into<String>) -> Self {
+        self.model = Some(name.into());
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// the ticket (client handle)
+// ---------------------------------------------------------------------
+
+/// The non-blocking client handle for one submitted request.
+///
+/// `wait` blocks for the typed output; `try_poll` is its non-blocking
+/// sibling; `next_frame` consumes streamed frames one at a time (for
+/// [`MdRollout`]); `cancel` requests cooperative cancellation (workers
+/// check between batches and between relax/MD steps).  Dropping the
+/// ticket also cancels.
+pub struct Ticket<T: TaskSpec> {
+    pub id: u64,
+    rx: Receiver<ReplyMsg>,
+    cancel: Arc<AtomicBool>,
+    frames: VecDeque<Frame>,
+    done: Option<Result<Reply, ServiceError>>,
+    /// the final result was already handed out through `try_poll`
+    delivered: bool,
+    _spec: PhantomData<fn() -> T>,
+}
+
+impl<T: TaskSpec> Ticket<T> {
+    /// Build the (ticket, pending) pair for one submission.
+    pub(crate) fn make(
+        id: u64, task: Task, model: Option<String>,
+        deadline: Option<Duration>,
+    ) -> (Ticket<T>, Pending) {
+        let (tx, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let now = Instant::now();
+        let pending = Pending {
+            id,
+            task,
+            model,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+            cancel: cancel.clone(),
+            reply: ReplySlot::new(tx),
+        };
+        let ticket = Ticket {
+            id,
+            rx,
+            cancel,
+            frames: VecDeque::new(),
+            done: None,
+            delivered: false,
+            _spec: PhantomData,
+        };
+        (ticket, pending)
+    }
+
+    /// Request cooperative cancellation.  The final reply becomes
+    /// [`ServiceError::Canceled`] unless the task already completed.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    fn absorb(&mut self, msg: ReplyMsg) {
+        match msg {
+            ReplyMsg::Frame(f) => self.frames.push_back(f),
+            ReplyMsg::Done(r) => self.done = Some(r),
+        }
+    }
+
+    fn disconnected(&mut self) {
+        if self.done.is_none() {
+            self.done = Some(Err(ServiceError::Dropped(
+                "reply channel closed without a final message".to_string(),
+            )));
+        }
+    }
+
+    /// Block until the final reply and decode it into the task's typed
+    /// output.  Never hangs on a dead worker: the reply-on-drop guard
+    /// turns worker failure into [`ServiceError::Dropped`].
+    pub fn wait(mut self) -> Result<T::Output, ServiceError> {
+        if self.delivered {
+            return Err(ServiceError::Protocol(
+                "result already taken through try_poll".to_string(),
+            ));
+        }
+        while self.done.is_none() {
+            match self.rx.recv() {
+                Ok(msg) => self.absorb(msg),
+                Err(_) => self.disconnected(),
+            }
+        }
+        let reply = self.done.take().unwrap()?;
+        T::decode(reply, Vec::from(std::mem::take(&mut self.frames)))
+    }
+
+    /// Non-blocking poll: `None` while the task is still in flight,
+    /// `Some(result)` exactly once; later calls return `None` again
+    /// (the result was consumed).
+    pub fn try_poll(&mut self) -> Option<Result<T::Output, ServiceError>> {
+        if self.delivered {
+            return None;
+        }
+        loop {
+            match self.rx.try_recv() {
+                Ok(msg) => self.absorb(msg),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    self.disconnected();
+                    break;
+                }
+            }
+        }
+        let done = self.done.take()?;
+        self.delivered = true;
+        Some(match done {
+            Ok(reply) => {
+                T::decode(reply, Vec::from(std::mem::take(&mut self.frames)))
+            }
+            Err(e) => Err(e),
+        })
+    }
+
+    /// Blocking frame stream: `Some(frame)` per streamed frame, `None`
+    /// once the final reply arrived (which [`Ticket::wait`] then
+    /// returns without blocking).
+    pub fn next_frame(&mut self) -> Option<Frame> {
+        if let Some(f) = self.frames.pop_front() {
+            return Some(f);
+        }
+        if self.done.is_some() || self.delivered {
+            return None;
+        }
+        loop {
+            match self.rx.recv() {
+                Ok(ReplyMsg::Frame(f)) => return Some(f),
+                Ok(ReplyMsg::Done(r)) => {
+                    self.done = Some(r);
+                    return None;
+                }
+                Err(_) => {
+                    self.disconnected();
+                    return None;
+                }
+            }
+        }
+    }
+}
+
+impl<T: TaskSpec> Drop for Ticket<T> {
+    fn drop(&mut self) {
+        // an abandoned ticket should not keep burning worker time
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------
+// legacy single-call protocol (compatibility layer)
+// ---------------------------------------------------------------------
+
+/// A single-structure inference request (legacy protocol).
+#[derive(Clone, Debug)]
+pub struct ForceRequest {
+    pub id: u64,
+    pub pos: Vec<[f64; 3]>,
+    pub species: Vec<usize>,
+}
+
+/// One-shot reply sender with the reply-on-drop guarantee: if the guard
+/// dies unreplied (worker panic, batch error, queue close), `Drop`
+/// sends `Err` so the paired `rx.recv()` returns instead of blocking
+/// forever.
+#[derive(Debug)]
+pub struct ReplyGuard {
+    tx: Option<Sender<Result<ForceResponse, String>>>,
+}
+
+impl ReplyGuard {
+    pub fn new(tx: Sender<Result<ForceResponse, String>>) -> ReplyGuard {
+        ReplyGuard { tx: Some(tx) }
+    }
+
+    /// Send the reply; at most one send wins, later calls are no-ops.
+    pub fn send(&mut self, r: Result<ForceResponse, String>) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(r);
+        }
+    }
+
+    pub fn replied(&self) -> bool {
+        self.tx.is_none()
+    }
+}
+
+impl Drop for ReplyGuard {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Err(
+                "request dropped without a reply (worker failure or \
+                 shutdown)"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// Internal envelope: request + guarded reply channel + enqueue
+/// timestamp (legacy protocol).
+#[derive(Debug)]
 pub struct Envelope {
     pub req: ForceRequest,
-    pub reply: Sender<Result<ForceResponse, String>>,
+    pub reply: ReplyGuard,
     pub enqueued: Instant,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+
+    fn structure(n: usize) -> Structure {
+        Structure {
+            pos: (0..n).map(|i| [i as f64, 0.0, 0.0]).collect(),
+            species: vec![0; n],
+        }
+    }
 
     #[test]
     fn envelope_reply_round_trip() {
         let (tx, rx) = channel();
-        let env = Envelope {
+        let mut env = Envelope {
             req: ForceRequest { id: 7, pos: vec![[0.0; 3]], species: vec![0] },
-            reply: tx,
+            reply: ReplyGuard::new(tx),
             enqueued: Instant::now(),
         };
-        env.reply
-            .send(Ok(ForceResponse {
-                id: env.req.id,
-                energy: -1.0,
-                forces: vec![[0.0; 3]],
-                latency_s: 0.001,
-            }))
-            .unwrap();
+        env.reply.send(Ok(ForceResponse {
+            id: env.req.id,
+            energy: -1.0,
+            forces: vec![[0.0; 3]],
+            latency_s: 0.001,
+        }));
         let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.id, 7);
+    }
+
+    #[test]
+    fn dropped_envelope_sends_err_instead_of_hanging() {
+        // the client-hang regression: an envelope that dies between
+        // submit and reply (worker panic, close with a non-empty queue)
+        // must fail the caller's recv(), not leak it forever
+        let (tx, rx) = channel();
+        let env = Envelope {
+            req: ForceRequest { id: 1, pos: vec![[0.0; 3]], species: vec![0] },
+            reply: ReplyGuard::new(tx),
+            enqueued: Instant::now(),
+        };
+        drop(env);
+        let got = rx.recv().expect("drop must send, not disconnect");
+        assert!(got.is_err(), "drop must reply with Err");
+        assert!(got.unwrap_err().contains("dropped"));
+    }
+
+    #[test]
+    fn reply_guard_sends_at_most_once() {
+        let (tx, rx) = channel();
+        let mut g = ReplyGuard::new(tx);
+        g.send(Err("first".into()));
+        g.send(Err("second".into()));
+        drop(g);
+        assert!(rx.recv().unwrap().unwrap_err().contains("first"));
+        assert!(rx.recv().is_err(), "exactly one message total");
+    }
+
+    #[test]
+    fn reply_slot_drop_fails_the_ticket() {
+        let (ticket, pending) =
+            Ticket::<EnergyForces>::make(3, Task::EnergyForces {
+                structure: structure(2),
+            }, None, None);
+        drop(pending);
+        match ticket.wait() {
+            Err(ServiceError::Dropped(_)) => {}
+            other => panic!("expected Dropped, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ticket_try_poll_and_frames() {
+        let (mut ticket, mut pending) = Ticket::<MdRollout>::make(
+            9,
+            Task::MdRollout { structure: structure(2), steps: 2, dt: 0.1 },
+            None,
+            None,
+        );
+        assert!(ticket.try_poll().is_none(), "still in flight");
+        pending.reply.frame(Frame {
+            step: 0,
+            time: 0.1,
+            energy: -1.0,
+            kinetic: 0.5,
+            pos: vec![[0.0; 3]; 2],
+        });
+        pending.reply.finish(Ok(Reply::Rollout(RolloutSummary {
+            id: 9,
+            steps: 1,
+            final_pos: vec![[0.0; 3]; 2],
+            final_energy: -0.5,
+        })));
+        let out = ticket.try_poll().expect("done").expect("ok");
+        assert_eq!(out.frames.len(), 1);
+        assert_eq!(out.summary.steps, 1);
+        // the result is delivered exactly once: polling again after the
+        // sender is gone must NOT fabricate a phantom Dropped error
+        drop(pending);
+        assert!(ticket.try_poll().is_none());
+        assert!(ticket.try_poll().is_none());
+    }
+
+    #[test]
+    fn next_frame_streams_then_ends() {
+        let (mut ticket, mut pending) = Ticket::<MdRollout>::make(
+            1,
+            Task::MdRollout { structure: structure(1), steps: 2, dt: 0.1 },
+            None,
+            None,
+        );
+        for step in 0..2 {
+            pending.reply.frame(Frame {
+                step,
+                time: 0.1 * (step + 1) as f64,
+                energy: 0.0,
+                kinetic: 0.0,
+                pos: vec![[0.0; 3]],
+            });
+        }
+        pending.reply.finish(Ok(Reply::Rollout(RolloutSummary {
+            id: 1,
+            steps: 2,
+            final_pos: vec![[0.0; 3]],
+            final_energy: 0.0,
+        })));
+        assert_eq!(ticket.next_frame().unwrap().step, 0);
+        assert_eq!(ticket.next_frame().unwrap().step, 1);
+        assert!(ticket.next_frame().is_none());
+        // the final reply is already buffered; wait returns immediately
+        let out = ticket.wait().unwrap();
+        assert_eq!(out.summary.steps, 2);
+        assert!(out.frames.is_empty(), "frames were drained by next_frame");
+    }
+
+    #[test]
+    fn task_validation_catches_malformed_submissions() {
+        let ok = Task::EnergyForces { structure: structure(3) };
+        assert!(ok.validate().is_ok());
+        let empty = Task::EnergyOnly {
+            structure: Structure { pos: vec![], species: vec![] },
+        };
+        assert!(empty.validate().is_err());
+        let mismatched = Task::EnergyForces {
+            structure: Structure { pos: vec![[0.0; 3]], species: vec![0, 1] },
+        };
+        assert!(mismatched.validate().is_err());
+        let bad_dt = Task::MdRollout {
+            structure: structure(2),
+            steps: 5,
+            dt: 0.0,
+        };
+        assert!(bad_dt.validate().is_err());
+        let empty_batch = Task::Batch { structures: vec![] };
+        assert!(empty_batch.validate().is_err());
+        let oversized_batch = Task::Batch {
+            structures: vec![structure(1); MAX_BATCH_STRUCTURES + 1],
+        };
+        assert!(oversized_batch.validate().is_err(),
+                "batches above the structure cap must be rejected");
+        let max_batch = Task::Batch {
+            structures: vec![structure(1); MAX_BATCH_STRUCTURES],
+        };
+        assert!(max_batch.validate().is_ok());
+        assert!(Task::Relax { structure: structure(2), max_steps: 0 }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn task_shape_helpers() {
+        let t = Task::Batch {
+            structures: vec![structure(2), structure(7), structure(4)],
+        };
+        assert_eq!(t.n_atoms_max(), 7);
+        assert_eq!(t.structures().len(), 3);
+        assert_eq!(t.label(), "batch");
     }
 }

@@ -1,32 +1,32 @@
-//! The force-field serving coordinator: worker pool over the dynamic
-//! batcher, routing each flushed batch to the smallest compiled variant.
+//! Backends and the legacy server façade.
 //!
-//! Inference is pluggable through [`Backend`]: every server is started
-//! by the ONE constructor [`ForceFieldServer::start_with`], which takes
-//! a [`BackendSpec`] (backend + variants + state + padding shape) and
-//! owns the worker/queue setup.  [`ForceFieldServer::start`] (compiled
-//! PJRT artifacts) and [`ForceFieldServer::start_native`] (the native
-//! Gaunt-TP backend) are thin spec builders over it.  The native path
-//! serves either the learned [`Model`] or an analytic equivariant
-//! surrogate evaluated entirely with the native O(L^3) Gaunt pipeline —
-//! every batch resolves its op through [`PlanCache::op`] and runs the
-//! generic batched driver of [`crate::tp::op`], so the full coordinator
-//! stack (batcher -> router -> worker pool -> backend) is exercisable
-//! offline.  Plan-cache statistics (builds/hits/entries per [`OpKey`])
-//! are folded into the server [`Metrics`] after every batch, so serving
-//! can observe plan churn.
+//! Inference is pluggable through [`Backend`]: one padded batch in,
+//! flat energy/force buffers out, with the executing model resolved
+//! per batch by the service (hot swap happens between batches, never
+//! inside one).  [`XlaBackend`] runs compiled PJRT artifacts;
+//! [`NativeGauntBackend`] serves either a learned [`Model`] or an
+//! analytic equivariant surrogate entirely on the native O(L^3) Gaunt
+//! pipeline.
+//!
+//! The serving engine itself lives in
+//! [`crate::coordinator::service::Service`] (typed multi-task protocol,
+//! shape-bucketed batching, model registry).  [`ForceFieldServer`] —
+//! `start` / `start_native` / `start_with` — remains as a thin
+//! compatibility wrapper over `Service::builder()` so existing callers
+//! migrate mechanically: `submit` now returns a typed
+//! [`Ticket`](crate::coordinator::request::Ticket) (call `.wait()`
+//! where you called `.recv().unwrap()`), and `infer_blocking` is
+//! unchanged.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver};
-use std::sync::{Arc, RwLock};
-use std::thread::JoinHandle;
-use std::time::Instant;
+use std::sync::Arc;
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::{BatchPolicy, BucketConfig};
 use super::metrics::Metrics;
-use super::request::{Envelope, ForceRequest, ForceResponse};
-use super::router::{Router, Variant};
-use crate::data::{Graph, PaddedBatch};
+use super::registry::Registry;
+use super::request::{EnergyForces, ForceResponse, Request, Structure, Ticket};
+use super::router::Variant;
+use super::service::{Client, Service};
+use crate::data::PaddedBatch;
 use crate::err;
 use crate::model::{batch_row_len, energy_forces_batch_par, GraphRef, Model};
 use crate::num_coeffs;
@@ -41,14 +41,21 @@ use crate::util::json::Json;
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// default flush policy (per-bucket policies can override via
+    /// `buckets`)
     pub policy: BatchPolicy,
     pub n_workers: usize,
-    /// neighbor cutoff used to build edges (must match training)
+    /// neighbor cutoff used to build edges (must match training; when a
+    /// model endpoint is resolved its own `r_cut` wins)
     pub r_cut: f64,
     /// artifact name prefix for variants (default "ff_fwd_B")
     pub variant_prefix: String,
     /// state blob holding model parameters
     pub state_blob: String,
+    /// explicit shape buckets; `None` = defaults derived from the
+    /// backend spec (single fixed bucket for compiled artifacts,
+    /// width-halving ladder for the native backend)
+    pub buckets: Option<Vec<BucketConfig>>,
 }
 
 impl Default for ServerConfig {
@@ -59,6 +66,7 @@ impl Default for ServerConfig {
             r_cut: 4.0,
             variant_prefix: "ff_fwd_B".to_string(),
             state_blob: "ff_state_init".to_string(),
+            buckets: None,
         }
     }
 }
@@ -66,10 +74,14 @@ impl Default for ServerConfig {
 /// Pluggable batched inference: one padded batch in, flat `(energy [B],
 /// forces [B*N*3])` f32 buffers out.  Implementations must be pure per
 /// occupied row (padding rows must not change occupied rows' results).
+/// `model` is the registry-resolved model for this batch (`None` for
+/// artifact state or the native surrogate); the service resolves it
+/// once per batch, which is what makes hot swap tear-free.
 pub trait Backend: Send + Sync {
     /// Run one padded batch through `variant`.
     fn run(
         &self, variant: &Variant, pb: &PaddedBatch, state: &[Tensor],
+        model: Option<&Arc<Model>>,
     ) -> Result<(Vec<f32>, Vec<f32>)>;
 }
 
@@ -81,6 +93,7 @@ struct XlaBackend {
 impl Backend for XlaBackend {
     fn run(
         &self, variant: &Variant, pb: &PaddedBatch, state: &[Tensor],
+        _model: Option<&Arc<Model>>,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         let exe = self.engine.load(&variant.name)?;
         let mut inputs: Vec<Tensor> = state.to_vec();
@@ -98,7 +111,7 @@ impl Backend for XlaBackend {
 
 /// Native Gaunt-TP backend, in two modes:
 ///
-/// * **Surrogate** (no model): a fixed, untrained but exactly
+/// * **Surrogate** (no model resolved): a fixed, untrained but exactly
 ///   equivariant analytic model.  Per atom i: a feature `h_i = sum_j
 ///   w(r_ij) Y(r_ij_hat)` over masked edges, then the rotation-invariant
 ///   atomic energy is the l=0 channel of the **batched Gaunt
@@ -106,12 +119,14 @@ impl Backend for XlaBackend {
 ///   [`apply_batch_par`] call over the op resolved through
 ///   [`PlanCache::op`].  Forces are symmetric pair terms (exact
 ///   Newton's third law).
-/// * **Learned** ([`NativeGauntBackend::with_model`]): the trained
-///   [`Model`] — each flushed batch is decoded once and its graphs are
-///   sharded across workers by [`energy_forces_batch_par`]
-///   (`pool::shard_rows_with`: one model scratch per worker, per-graph
-///   inference allocation-free), energies AND analytic forces end to
-///   end through the planned Gaunt engine.
+/// * **Learned**: the resolved [`Model`] — each flushed batch is
+///   decoded once and its graphs are sharded across workers by
+///   [`energy_forces_batch_par`] (`pool::shard_rows_with`: one model
+///   scratch per worker, per-graph inference allocation-free), energies
+///   AND analytic forces end to end through the planned Gaunt engine.
+///   The per-batch model normally arrives from the service registry
+///   (hot-swappable); `self.model` remains as the fixed fallback for
+///   directly-constructed specs.
 pub struct NativeGauntBackend {
     /// feature degree L of the surrogate's per-atom SH features
     pub l: usize,
@@ -119,7 +134,9 @@ pub struct NativeGauntBackend {
     pub threads: usize,
     /// per-species energy offset scale (surrogate mode)
     pub species_scale: f64,
-    /// trained model; `None` serves the analytic surrogate
+    /// fixed model; `None` serves the registry model or the analytic
+    /// surrogate.  `Service::builder()` moves this into the registry's
+    /// default endpoint so it becomes hot-swappable.
     pub model: Option<Arc<Model>>,
 }
 
@@ -250,6 +267,7 @@ impl NativeGauntBackend {
 impl Backend for NativeGauntBackend {
     fn run(
         &self, _variant: &Variant, pb: &PaddedBatch, _state: &[Tensor],
+        model: Option<&Arc<Model>>,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         if pb.dropped_edges > 0 {
             // shared guard: a one-directional drop would break Newton's
@@ -260,8 +278,9 @@ impl Backend for NativeGauntBackend {
                 pb.dropped_edges, pb.n_edges
             ));
         }
-        if let Some(model) = &self.model {
-            return self.run_model(model, pb);
+        // the per-batch registry resolution wins over the fixed model
+        if let Some(m) = model.or(self.model.as_ref()) {
+            return self.run_model(m, pb);
         }
         self.run_surrogate(pb)
     }
@@ -348,20 +367,23 @@ impl NativeGauntBackend {
     }
 }
 
-/// Everything [`ForceFieldServer::start_with`] needs besides the batch
-/// policy: the backend, its routing variants, the (possibly empty)
-/// state tensors, and the static padding shape.  Built by
-/// [`BackendSpec::xla`] / [`BackendSpec::native`]; custom backends can
-/// construct one directly.
+/// Everything `Service::builder()` needs besides the batch policy: the
+/// backend, its routing variants, the (possibly empty) state tensors,
+/// and the shape capacity.  Built by [`BackendSpec::xla`] /
+/// [`BackendSpec::native`]; custom backends can construct one directly.
 pub struct BackendSpec {
     pub backend: Arc<dyn Backend>,
     pub variants: Vec<Variant>,
     /// model + optimizer state tensors, in artifact input order
     pub state: Vec<Tensor>,
-    /// static atom-padding width of every batch
+    /// atom capacity (the largest bucket width)
     pub n_atoms: usize,
-    /// static edge-slot budget of every batch
+    /// edge-slot budget at full width
     pub n_edges: usize,
+    /// compiled artifacts bake their padding shape in: a fixed-shape
+    /// spec is served from ONE bucket of exactly (n_atoms, n_edges);
+    /// native backends accept any bucket ladder
+    pub fixed_shape: bool,
 }
 
 impl BackendSpec {
@@ -405,6 +427,7 @@ impl BackendSpec {
             state,
             n_atoms,
             n_edges,
+            fixed_shape: true,
         })
     }
 
@@ -436,117 +459,84 @@ impl BackendSpec {
             state: Vec::new(),
             n_atoms: 32,
             n_edges: 256,
+            fixed_shape: false,
         }
     }
 }
 
-struct Shared {
-    backend: Arc<dyn Backend>,
-    router: Router,
-    /// model + optimizer state tensors, in artifact input order
-    state: RwLock<Arc<Vec<Tensor>>>,
-    metrics: Metrics,
-    n_atoms: usize,
-    n_edges: usize,
-    r_cut: f64,
-}
-
-/// The serving coordinator.
+/// The legacy serving façade: a thin compatibility wrapper over
+/// [`Service`] keeping the historical constructor and call shapes
+/// alive.  New code should use `Service::builder()` and the typed task
+/// API directly (see DESIGN.md §10).
 pub struct ForceFieldServer {
-    batcher: Arc<Batcher>,
-    shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
-    next_id: AtomicU64,
+    service: Service,
 }
 
 impl ForceFieldServer {
     /// Compiled-artifact entry point: builds [`BackendSpec::xla`] and
-    /// hands it to the one constructor, [`ForceFieldServer::start_with`].
+    /// hands it to `Service::builder()`.
     pub fn start(engine: Arc<Engine>, cfg: ServerConfig) -> Result<Self> {
         let spec = BackendSpec::xla(engine, &cfg)?;
         Self::start_with(spec, cfg)
     }
 
-    /// Native entry point: builds [`BackendSpec::native`] (which warms
-    /// the plans and syncs `r_cut` to an attached model) and hands it to
-    /// [`ForceFieldServer::start_with`].
+    /// Native entry point.  The backend's fixed model (if any) is
+    /// promoted into the service registry's default endpoint, so a
+    /// server started this way is hot-swappable via
+    /// [`ForceFieldServer::promote`].
     pub fn start_native(
-        backend: NativeGauntBackend, mut cfg: ServerConfig,
+        backend: NativeGauntBackend, cfg: ServerConfig,
     ) -> Result<Self> {
-        let spec = BackendSpec::native(backend, &mut cfg);
-        Self::start_with(spec, cfg)
-    }
-
-    /// THE server constructor: every start path funnels here.  Spawns
-    /// the worker pool over the batcher and routes each flushed batch
-    /// through the spec's backend.
-    pub fn start_with(spec: BackendSpec, cfg: ServerConfig) -> Result<Self> {
-        let shared = Arc::new(Shared {
-            backend: spec.backend,
-            router: Router::new(spec.variants),
-            state: RwLock::new(Arc::new(spec.state)),
-            metrics: Metrics::new(),
-            n_atoms: spec.n_atoms,
-            n_edges: spec.n_edges,
-            r_cut: cfg.r_cut,
-        });
-        let batcher = Arc::new(Batcher::new(cfg.policy));
-        let mut workers = Vec::new();
-        for w in 0..cfg.n_workers.max(1) {
-            let b = batcher.clone();
-            let s = shared.clone();
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("ff-worker-{w}"))
-                    .spawn(move || worker_loop(&b, &s))
-                    .expect("spawn worker"),
-            );
-        }
         Ok(ForceFieldServer {
-            batcher,
-            shared,
-            workers,
-            next_id: AtomicU64::new(1),
+            service: Service::builder().native(backend).config(cfg).build()?,
         })
     }
 
-    /// Replace the model state (e.g. after training).  Takes the full
-    /// state tensor list in artifact order.
-    pub fn set_state(&self, state: Vec<Tensor>) {
-        *self.shared.state.write().unwrap() = Arc::new(state);
+    /// Spec entry point: every start path funnels into
+    /// `Service::builder()`.
+    pub fn start_with(spec: BackendSpec, cfg: ServerConfig) -> Result<Self> {
+        Ok(ForceFieldServer {
+            service: Service::builder().backend(spec).config(cfg).build()?,
+        })
     }
 
-    /// Submit asynchronously; the receiver yields the response.
+    /// The underlying typed service.
+    pub fn service(&self) -> &Service {
+        &self.service
+    }
+
+    /// A cheap cloneable handle for the typed task API.
+    pub fn client(&self) -> Client {
+        self.service.client()
+    }
+
+    /// Replace the artifact state tensors (e.g. after training).  Takes
+    /// the full state tensor list in artifact order.
+    pub fn set_state(&self, state: Vec<Tensor>) {
+        self.service.set_state(state);
+    }
+
+    /// Hot-swap a model into a named registry endpoint; returns the new
+    /// version.
+    pub fn promote(&self, name: &str, model: Arc<Model>) -> u64 {
+        self.service.promote(name, model)
+    }
+
+    /// Submit asynchronously; the returned typed ticket yields the
+    /// response via `wait()` / `try_poll()` (the legacy
+    /// `rx.recv().unwrap().unwrap()` becomes `ticket.wait().unwrap()`).
     ///
-    /// Structures larger than the server's static atom capacity are
-    /// rejected here — padding would otherwise silently truncate them.
+    /// Structures larger than the largest shape bucket are rejected
+    /// here — padding would otherwise silently truncate them.
     pub fn submit(
         &self,
         pos: Vec<[f64; 3]>,
         species: Vec<usize>,
-    ) -> Result<Receiver<Result<ForceResponse, String>>> {
-        if pos.len() > self.shared.n_atoms {
-            self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err(err!(
-                "structure has {} atoms, server capacity is {} \
-                 (see max_atoms())",
-                pos.len(),
-                self.shared.n_atoms
-            ));
-        }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = channel();
-        let env = Envelope {
-            req: ForceRequest { id, pos, species },
-            reply: tx,
-            enqueued: Instant::now(),
-        };
-        self.shared.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        self.batcher.push(env).map_err(|_| {
-            self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            err!("queue full (backpressure) or server closed")
-        })?;
-        Ok(rx)
+    ) -> Result<Ticket<EnergyForces>> {
+        self.service
+            .client()
+            .submit(Request::new(EnergyForces(Structure::new(pos, species))))
+            .map_err(|e| err!("{e}"))
     }
 
     /// Submit and wait.
@@ -555,14 +545,16 @@ impl ForceFieldServer {
         pos: Vec<[f64; 3]>,
         species: Vec<usize>,
     ) -> Result<ForceResponse> {
-        let rx = self.submit(pos, species)?;
-        rx.recv()
-            .map_err(|e| err!("server dropped request: {e}"))?
-            .map_err(|e| err!("{e}"))
+        self.submit(pos, species)?.wait().map_err(|e| err!("{e}"))
     }
 
     pub fn metrics(&self) -> &Metrics {
-        &self.shared.metrics
+        self.service.metrics()
+    }
+
+    /// The service's model registry (endpoints + versions).
+    pub fn registry(&self) -> &Registry {
+        self.service.registry()
     }
 
     /// Snapshot of the global plan cache (builds/hits/len + per-[`OpKey`]
@@ -573,108 +565,12 @@ impl ForceFieldServer {
     }
 
     pub fn max_atoms(&self) -> usize {
-        self.shared.n_atoms
+        self.service.max_atoms()
     }
 
-    /// Drain and stop the workers.
+    /// Drain and stop the workers (queued requests are failed
+    /// deterministically, never leaked).
     pub fn shutdown(self) {
-        self.batcher.close();
-        for w in self.workers {
-            let _ = w.join();
-        }
+        self.service.shutdown();
     }
-}
-
-fn worker_loop(batcher: &Batcher, s: &Shared) {
-    while let Some(batch) = batcher.next_batch() {
-        // route: split the flushed batch into variant-sized chunks
-        let plan = s.router.plan(batch.len());
-        let mut offset = 0usize;
-        for (variant, k) in plan {
-            let chunk = &batch[offset..offset + k];
-            offset += k;
-            run_chunk(s, variant, chunk);
-        }
-    }
-}
-
-fn run_chunk(s: &Shared, variant: &Variant, chunk: &[Envelope]) {
-    let t_exec = Instant::now();
-    let result = execute_chunk(s, variant, chunk);
-    let exec_ns = t_exec.elapsed().as_nanos() as u64;
-    s.metrics.exec_latency.record_ns(exec_ns);
-    // fold the plan-cache counters into the serving metrics so report()
-    // shows plan churn next to latency (cheap: three atomic loads)
-    let cache = PlanCache::global();
-    s.metrics.observe_plans(
-        cache.builds() as u64,
-        cache.hits() as u64,
-        cache.len() as u64,
-    );
-    s.metrics.batches.fetch_add(1, Ordering::Relaxed);
-    s.metrics
-        .batched_requests
-        .fetch_add(chunk.len() as u64, Ordering::Relaxed);
-    s.metrics
-        .padding_waste
-        .fetch_add((variant.batch - chunk.len()) as u64, Ordering::Relaxed);
-    match result {
-        Ok(responses) => {
-            for (env, mut resp) in chunk.iter().zip(responses) {
-                let lat = env.enqueued.elapsed();
-                resp.latency_s = lat.as_secs_f64();
-                s.metrics.latency.record_ns(lat.as_nanos() as u64);
-                s.metrics.responses.fetch_add(1, Ordering::Relaxed);
-                let _ = env.reply.send(Ok(resp));
-            }
-        }
-        Err(e) => {
-            let msg = format!("execution failed: {e}");
-            for env in chunk {
-                let _ = env.reply.send(Err(msg.clone()));
-            }
-        }
-    }
-}
-
-fn execute_chunk(
-    s: &Shared,
-    variant: &Variant,
-    chunk: &[Envelope],
-) -> Result<Vec<ForceResponse>> {
-    // build graphs (no labels at serving time)
-    let graphs: Vec<Graph> = chunk
-        .iter()
-        .map(|env| Graph {
-            pos: env.req.pos.clone(),
-            species: env.req.species.clone(),
-            energy: 0.0,
-            forces: vec![[0.0; 3]; env.req.pos.len()],
-        })
-        .collect();
-    let pb = PaddedBatch::from_graphs(
-        &graphs, variant.batch, s.n_atoms, s.n_edges, s.r_cut,
-    );
-    let state = s.state.read().unwrap().clone();
-    let (energy, forces) = s.backend.run(variant, &pb, state.as_ref())?;
-    let mut responses = Vec::with_capacity(chunk.len());
-    for (g_idx, env) in chunk.iter().enumerate() {
-        let na = pb.true_atoms[g_idx];
-        let mut f = Vec::with_capacity(na);
-        for a in 0..na {
-            let base = (g_idx * s.n_atoms + a) * 3;
-            f.push([
-                forces[base] as f64,
-                forces[base + 1] as f64,
-                forces[base + 2] as f64,
-            ]);
-        }
-        responses.push(ForceResponse {
-            id: env.req.id,
-            energy: energy[g_idx] as f64,
-            forces: f,
-            latency_s: 0.0,
-        });
-    }
-    Ok(responses)
 }

@@ -1,0 +1,762 @@
+//! The typed multi-task serving engine.
+//!
+//! ```text
+//!   Client::submit(Request<T>) ── Ticket<T>
+//!        │                           ▲ wait / try_poll / next_frame
+//!        ▼                           │ (reply-on-drop: never hangs)
+//!   BucketedBatcher (per-atom-count shape buckets, per-bucket policy)
+//!        │ next_batch()
+//!        ▼
+//!   worker pool ── catch_unwind ── resolve Registry endpoint ONCE
+//!        │                          (hot swap is between-batches only)
+//!        ├─ EnergyOnly/EnergyForces/Batch: route → pad to the BUCKET
+//!        │    width → Backend::run → unpad → typed replies
+//!        └─ Relax/MdRollout: long task on the worker — FIRE / BAOAB
+//!             over the resolved LearnedPotential (or the backend for
+//!             surrogate/XLA serving), frames streamed per step,
+//!             cancellation + deadline checked every force evaluation
+//! ```
+//!
+//! Build one with [`Service::builder`]: pick a backend
+//! ([`NativeGauntBackend`] or any [`BackendSpec`]), optionally a model
+//! (registered as the default endpoint, hot-swappable via
+//! [`Service::promote`]), shape buckets, and a worker count.  The
+//! legacy [`crate::coordinator::server::ForceFieldServer`] is a thin
+//! wrapper over this builder.
+//!
+//! Deadlines are checked at dequeue (a request that expired in the
+//! queue is failed without execution) and between every relax/rollout
+//! force evaluation; batched evaluations that started before the
+//! deadline run to completion.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::batcher::{BatchPolicy, BucketConfig, BucketedBatcher};
+use super::metrics::Metrics;
+use super::registry::{Registry, DEFAULT_ENDPOINT};
+use super::request::{
+    EnergyOut, ForceResponse, Frame, Pending, Reply, Request, RolloutSummary,
+    ServiceError, Task, TaskSpec, Ticket,
+};
+use super::router::Router;
+use super::server::{BackendSpec, NativeGauntBackend, ServerConfig};
+use crate::data::{Graph, PaddedBatch};
+use crate::md::integrator::{Integrator, Thermostat};
+use crate::md::potential::LearnedPotential;
+use crate::md::relax::{fire_relax, FireConfig};
+use crate::model::Model;
+use crate::runtime::Tensor;
+use crate::tp::engine::{CacheStats, PlanCache};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+struct ServiceShared {
+    backend: Arc<dyn super::server::Backend>,
+    router: Router,
+    queue: BucketedBatcher,
+    registry: Registry,
+    metrics: Metrics,
+    /// artifact state tensors (XLA path), swappable via `set_state`
+    state: RwLock<Arc<Vec<Tensor>>>,
+    /// fallback neighbor cutoff (a resolved model's own `r_cut` wins)
+    r_cut: f64,
+    next_id: AtomicU64,
+}
+
+/// The serving coordinator: typed tasks, shape-bucketed batching,
+/// versioned model endpoints with hot swap.
+pub struct Service {
+    shared: Arc<ServiceShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Service {
+    pub fn builder() -> ServiceBuilder {
+        ServiceBuilder::new()
+    }
+
+    /// A cheap cloneable submission handle.
+    pub fn client(&self) -> Client {
+        Client { shared: self.shared.clone() }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.shared.metrics
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.shared.registry
+    }
+
+    /// Hot-swap `model` into endpoint `name` (warming its plans first);
+    /// returns the new version.  In-flight batches keep the version
+    /// they resolved — a swap can never tear a batch.
+    pub fn promote(&self, name: &str, model: Arc<Model>) -> u64 {
+        model.warm();
+        self.shared.registry.register(name, model)
+    }
+
+    /// Replace the artifact state tensors (XLA serving path).
+    pub fn set_state(&self, state: Vec<Tensor>) {
+        *self.shared.state.write().unwrap() = Arc::new(state);
+    }
+
+    /// Snapshot of the global plan cache — the numbers folded into
+    /// [`Metrics::report`] after every batch, with per-key detail.
+    pub fn plan_stats(&self) -> CacheStats {
+        PlanCache::global().stats()
+    }
+
+    /// Largest structure any shape bucket accepts.
+    pub fn max_atoms(&self) -> usize {
+        self.shared.queue.max_atoms()
+    }
+
+    pub fn buckets(&self) -> &[BucketConfig] {
+        self.shared.queue.buckets()
+    }
+
+    /// Close the queue (failing every still-queued request
+    /// deterministically) and join the workers.
+    pub fn shutdown(self) {
+        self.shared.queue.close();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Cloneable, thread-safe submission handle.
+#[derive(Clone)]
+pub struct Client {
+    shared: Arc<ServiceShared>,
+}
+
+impl Client {
+    /// Submit a typed request; returns a non-blocking [`Ticket`].
+    /// Rejections (validation, unknown endpoint, oversize structure,
+    /// backpressure) are synchronous typed errors.
+    pub fn submit<T: TaskSpec>(
+        &self, req: Request<T>,
+    ) -> std::result::Result<Ticket<T>, ServiceError> {
+        let s = &self.shared;
+        let Request { payload, deadline, model } = req;
+        let task = payload.into_task();
+        if let Err(msg) = task.validate() {
+            s.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ServiceError::Rejected(msg));
+        }
+        let n = task.n_atoms_max();
+        if n > s.queue.max_atoms() {
+            s.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ServiceError::Rejected(format!(
+                "structure has {n} atoms, largest shape bucket holds {} \
+                 (see Service::max_atoms)",
+                s.queue.max_atoms()
+            )));
+        }
+        if let Some(name) = &model {
+            if !s.registry.contains(name) {
+                s.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(ServiceError::Rejected(format!(
+                    "unknown model endpoint '{name}'"
+                )));
+            }
+        }
+        let id = s.next_id.fetch_add(1, Ordering::Relaxed);
+        let (ticket, pending) = Ticket::<T>::make(id, task, model, deadline);
+        s.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        match s.queue.push(pending) {
+            Ok(()) => Ok(ticket),
+            Err((pending, why)) => {
+                s.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                // the ticket dies here; fail its channel explicitly so
+                // even a caller that raced a clone of it unblocks
+                pending.finish(Err(ServiceError::Rejected(why.clone())));
+                Err(ServiceError::Rejected(why))
+            }
+        }
+    }
+
+    /// Submit and wait — the one-call form.
+    pub fn call<T: TaskSpec>(
+        &self, req: Request<T>,
+    ) -> std::result::Result<T::Output, ServiceError> {
+        self.submit(req)?.wait()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.shared.metrics
+    }
+}
+
+// ---------------------------------------------------------------------
+// builder
+// ---------------------------------------------------------------------
+
+/// Builder for [`Service`] — the one construction path every serving
+/// entry point funnels through.
+pub struct ServiceBuilder {
+    spec: Option<BackendSpec>,
+    native: Option<NativeGauntBackend>,
+    model: Option<Arc<Model>>,
+    cfg: ServerConfig,
+    buckets: Option<Vec<BucketConfig>>,
+}
+
+impl ServiceBuilder {
+    fn new() -> ServiceBuilder {
+        ServiceBuilder {
+            spec: None,
+            native: None,
+            model: None,
+            cfg: ServerConfig::default(),
+            buckets: None,
+        }
+    }
+
+    /// Serve an explicit [`BackendSpec`] (compiled artifacts or a
+    /// custom backend).
+    pub fn backend(mut self, spec: BackendSpec) -> Self {
+        self.spec = Some(spec);
+        self
+    }
+
+    /// Serve the native Gaunt backend.  A fixed model attached to it is
+    /// moved into the registry's default endpoint (hot-swappable).
+    pub fn native(mut self, backend: NativeGauntBackend) -> Self {
+        self.native = Some(backend);
+        self
+    }
+
+    /// Register `model` as the default endpoint (implies the native
+    /// backend unless one was given).
+    pub fn model(mut self, model: Arc<Model>) -> Self {
+        self.model = Some(model);
+        self
+    }
+
+    pub fn config(mut self, cfg: ServerConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Default flush policy (buckets added later inherit it).
+    pub fn policy(mut self, policy: BatchPolicy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.n_workers = n;
+        self
+    }
+
+    pub fn r_cut(mut self, r_cut: f64) -> Self {
+        self.cfg.r_cut = r_cut;
+        self
+    }
+
+    /// Explicit shape-bucket ladder (replaces the defaults).
+    pub fn buckets(mut self, buckets: Vec<BucketConfig>) -> Self {
+        self.buckets = Some(buckets);
+        self
+    }
+
+    /// Append one shape bucket with the current default policy.
+    pub fn bucket(mut self, max_atoms: usize, max_edges: usize) -> Self {
+        let b = BucketConfig {
+            max_atoms,
+            max_edges,
+            policy: self.cfg.policy,
+        };
+        self.buckets.get_or_insert_with(Vec::new).push(b);
+        self
+    }
+
+    pub fn build(self) -> Result<Service> {
+        let ServiceBuilder { spec, native, model, mut cfg, buckets } = self;
+        // resolve the backend spec; extract a fixed native model so it
+        // lives in the registry (hot-swappable) instead of the backend
+        let (spec, model) = match spec {
+            Some(spec) => (spec, model),
+            None => {
+                let mut nb = native.unwrap_or_default();
+                let model = model.or_else(|| nb.model.take());
+                let spec = BackendSpec::native(nb, &mut cfg);
+                (spec, model)
+            }
+        };
+        if let Some(m) = &model {
+            // serving-side edge building must match the model's training
+            // cutoff, or edges are silently dropped/zero-weighted
+            cfg.r_cut = m.cfg.r_cut;
+        }
+        let buckets = if spec.fixed_shape {
+            // compiled artifacts bake their padding shape in: exactly
+            // one bucket of the artifact shape
+            vec![BucketConfig {
+                max_atoms: spec.n_atoms,
+                max_edges: spec.n_edges,
+                policy: cfg.policy,
+            }]
+        } else {
+            buckets
+                .or_else(|| cfg.buckets.clone())
+                .unwrap_or_else(|| {
+                    default_buckets(spec.n_atoms, spec.n_edges, cfg.policy)
+                })
+        };
+        let shared = Arc::new(ServiceShared {
+            backend: spec.backend,
+            router: Router::new(spec.variants),
+            queue: BucketedBatcher::new(buckets),
+            registry: Registry::new(),
+            metrics: Metrics::new(),
+            state: RwLock::new(Arc::new(spec.state)),
+            r_cut: cfg.r_cut,
+            next_id: AtomicU64::new(1),
+        });
+        if let Some(m) = model {
+            m.warm();
+            shared.registry.register(DEFAULT_ENDPOINT, m);
+        }
+        let mut workers = Vec::new();
+        for w in 0..cfg.n_workers.max(1) {
+            let s = shared.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("svc-worker-{w}"))
+                    .spawn(move || worker_loop(&s))
+                    .expect("spawn worker"),
+            );
+        }
+        Ok(Service { shared, workers })
+    }
+}
+
+/// Width-halving bucket ladder up to the spec capacity, each bucket's
+/// edge budget fully connected up to the spec's edge cap: capacity 32
+/// with 256 edge slots gives [8/56, 16/240, 32/256].
+fn default_buckets(
+    max_atoms: usize, max_edges: usize, policy: BatchPolicy,
+) -> Vec<BucketConfig> {
+    let mut out: Vec<BucketConfig> = Vec::new();
+    for w in [max_atoms / 4, max_atoms / 2, max_atoms] {
+        if w == 0 || out.iter().any(|b| b.max_atoms == w) {
+            continue;
+        }
+        let edges = (w * w.saturating_sub(1)).clamp(1, max_edges.max(1));
+        out.push(BucketConfig { max_atoms: w, max_edges: edges, policy });
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------
+
+fn worker_loop(s: &Arc<ServiceShared>) {
+    while let Some((bucket_idx, batch)) = s.queue.next_batch() {
+        // a panicking backend must not kill the worker — and the moved
+        // batch unwinds through the reply-on-drop guards, so every
+        // caller gets Err(Dropped) instead of a hang
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            process_batch(s, bucket_idx, batch);
+        }));
+        if outcome.is_err() {
+            s.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+fn process_batch(s: &Arc<ServiceShared>, bucket_idx: usize, batch: Vec<Pending>) {
+    let now = Instant::now();
+    let mut evals: Vec<Pending> = Vec::new();
+    let mut longs: Vec<Pending> = Vec::new();
+    for p in batch {
+        if p.canceled() {
+            s.metrics.canceled.fetch_add(1, Ordering::Relaxed);
+            p.finish(Err(ServiceError::Canceled));
+        } else if p.expired(now) {
+            s.metrics.expired.fetch_add(1, Ordering::Relaxed);
+            p.finish(Err(ServiceError::DeadlineExceeded));
+        } else if matches!(p.task, Task::Relax { .. } | Task::MdRollout { .. })
+        {
+            longs.push(p);
+        } else {
+            evals.push(p);
+        }
+    }
+    if !evals.is_empty() {
+        // group by endpoint so one padded batch never mixes two models
+        // (the torn-batch guarantee), preserving submission order
+        let mut groups: Vec<(Option<String>, Vec<Pending>)> = Vec::new();
+        for p in evals {
+            match groups.iter_mut().find(|(name, _)| *name == p.model) {
+                Some((_, v)) => v.push(p),
+                None => groups.push((p.model.clone(), vec![p])),
+            }
+        }
+        for (name, group) in groups {
+            run_eval_group(s, bucket_idx, name.as_deref(), group);
+        }
+    }
+    for p in longs {
+        run_long(s, bucket_idx, p);
+    }
+}
+
+/// Evaluate a group of batchable tasks (same endpoint) as padded
+/// chunks through the backend.
+fn run_eval_group(
+    s: &Arc<ServiceShared>, bucket_idx: usize, name: Option<&str>,
+    group: Vec<Pending>,
+) {
+    let bucket = s.queue.bucket(bucket_idx);
+    let mv = s.registry.resolve(name);
+    if name.is_some() && mv.is_none() {
+        // the endpoint vanished between submit and execution
+        let msg = format!("unknown model endpoint '{}'", name.unwrap());
+        for p in group {
+            s.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            p.finish(Err(ServiceError::Rejected(msg.clone())));
+        }
+        return;
+    }
+    let model = mv.as_ref().map(|v| v.model.clone());
+    let r_cut = model.as_ref().map(|m| m.cfg.r_cut).unwrap_or(s.r_cut);
+    // flatten every task's structures into batch rows
+    let mut graphs: Vec<Graph> = Vec::new();
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    for p in &group {
+        let start = graphs.len();
+        for st in p.task.structures() {
+            graphs.push(Graph {
+                pos: st.pos.clone(),
+                species: st.species.clone(),
+                energy: 0.0,
+                forces: vec![[0.0; 3]; st.pos.len()],
+            });
+        }
+        spans.push((start, graphs.len() - start));
+    }
+    // route into variant-sized chunks and execute; the model Arc
+    // resolved above is used for EVERY chunk of this group
+    let state = s.state.read().unwrap().clone();
+    type RowResult = std::result::Result<(f64, Vec<[f64; 3]>), String>;
+    let mut row_results: Vec<RowResult> = Vec::with_capacity(graphs.len());
+    let plan = s.router.plan(graphs.len());
+    let mut offset = 0usize;
+    for (variant, k) in plan {
+        let chunk = &graphs[offset..offset + k];
+        offset += k;
+        let t_exec = Instant::now();
+        let pb = PaddedBatch::from_graphs(
+            chunk, variant.batch, bucket.max_atoms, bucket.max_edges, r_cut,
+        );
+        let res =
+            s.backend.run(variant, &pb, state.as_ref(), model.as_ref());
+        s.metrics
+            .exec_latency
+            .record_ns(t_exec.elapsed().as_nanos() as u64);
+        observe_chunk(s, &pb, variant.batch, k);
+        match res {
+            Ok((energy, forces)) => {
+                for (g_idx, g) in chunk.iter().enumerate() {
+                    let na = g.pos.len();
+                    let mut f = Vec::with_capacity(na);
+                    for a in 0..na {
+                        let base = (g_idx * bucket.max_atoms + a) * 3;
+                        f.push([
+                            forces[base] as f64,
+                            forces[base + 1] as f64,
+                            forces[base + 2] as f64,
+                        ]);
+                    }
+                    row_results.push(Ok((energy[g_idx] as f64, f)));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e}");
+                for _ in 0..k {
+                    row_results.push(Err(msg.clone()));
+                }
+            }
+        }
+    }
+    // assemble the typed replies
+    for (p, (start, len)) in group.into_iter().zip(spans) {
+        let rows = &row_results[start..start + len];
+        if let Some(e) = rows.iter().find_map(|r| r.as_ref().err()) {
+            s.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            p.finish(Err(ServiceError::Exec(e.clone())));
+            continue;
+        }
+        let lat = p.enqueued.elapsed();
+        s.metrics.latency.record_ns(lat.as_nanos() as u64);
+        let latency_s = lat.as_secs_f64();
+        let id = p.id;
+        let reply = match &p.task {
+            Task::EnergyOnly { .. } => {
+                let (energy, _) = rows[0].as_ref().unwrap();
+                Reply::Energy(EnergyOut { id, energy: *energy, latency_s })
+            }
+            Task::EnergyForces { .. } => {
+                let (energy, forces) = rows[0].as_ref().unwrap();
+                Reply::EnergyForces(ForceResponse {
+                    id,
+                    energy: *energy,
+                    forces: forces.clone(),
+                    latency_s,
+                })
+            }
+            Task::Batch { .. } => Reply::Batch(
+                rows.iter()
+                    .map(|r| {
+                        let (energy, forces) = r.as_ref().unwrap();
+                        ForceResponse {
+                            id,
+                            energy: *energy,
+                            forces: forces.clone(),
+                            latency_s,
+                        }
+                    })
+                    .collect(),
+            ),
+            Task::Relax { .. } | Task::MdRollout { .. } => {
+                unreachable!("long tasks are never batch-evaluated")
+            }
+        };
+        s.metrics.responses.fetch_add(1, Ordering::Relaxed);
+        p.finish(Ok(reply));
+    }
+}
+
+/// Fold one executed chunk into the serving metrics (batch counters,
+/// padding accounting, plan-cache gauges).
+fn observe_chunk(
+    s: &ServiceShared, pb: &PaddedBatch, row_slots: usize, occupied: usize,
+) {
+    s.metrics.batches.fetch_add(1, Ordering::Relaxed);
+    s.metrics
+        .batched_requests
+        .fetch_add(occupied as u64, Ordering::Relaxed);
+    s.metrics
+        .padding_waste
+        .fetch_add((row_slots - occupied) as u64, Ordering::Relaxed);
+    let true_atoms: usize = pb.true_atoms.iter().sum();
+    s.metrics.observe_padding(
+        row_slots as u64,
+        pb.n_atoms as u64,
+        true_atoms as u64,
+    );
+    let cache = PlanCache::global();
+    s.metrics.observe_plans(
+        cache.builds() as u64,
+        cache.hits() as u64,
+        cache.len() as u64,
+    );
+}
+
+/// Evaluate one structure through the backend (the relax/rollout force
+/// provider when no learned model is resolved — surrogate or XLA).
+fn eval_single(
+    s: &ServiceShared, bucket: BucketConfig, state: &Arc<Vec<Tensor>>,
+    pos: &[[f64; 3]], species: &[usize],
+) -> Result<(f64, Vec<[f64; 3]>)> {
+    let g = Graph {
+        pos: pos.to_vec(),
+        species: species.to_vec(),
+        energy: 0.0,
+        forces: vec![[0.0; 3]; pos.len()],
+    };
+    let variant = s.router.pick(1);
+    let t_exec = Instant::now();
+    let pb = PaddedBatch::from_graphs(
+        std::slice::from_ref(&g), variant.batch, bucket.max_atoms,
+        bucket.max_edges, s.r_cut,
+    );
+    let (energy, forces) =
+        s.backend.run(variant, &pb, state.as_ref(), None)?;
+    s.metrics
+        .exec_latency
+        .record_ns(t_exec.elapsed().as_nanos() as u64);
+    observe_chunk(s, &pb, variant.batch, 1);
+    let na = pos.len();
+    let mut f = Vec::with_capacity(na);
+    for a in 0..na {
+        let base = a * 3;
+        f.push([
+            forces[base] as f64,
+            forces[base + 1] as f64,
+            forces[base + 2] as f64,
+        ]);
+    }
+    Ok((energy[0] as f64, f))
+}
+
+/// Run a relax or rollout task on this worker.  Force evaluations go
+/// through the resolved model's [`LearnedPotential`] (f64, zero-copy
+/// scratch reuse along the trajectory) or, without a model, through the
+/// backend one padded structure at a time.  Cancellation, deadline, and
+/// backend errors surface as typed errors; rollout frames stream as the
+/// integration advances.
+fn run_long(s: &Arc<ServiceShared>, bucket_idx: usize, p: Pending) {
+    let Pending { id, task, model: name, enqueued, deadline, cancel, reply } =
+        p;
+    let mut reply = reply;
+    let bucket = s.queue.bucket(bucket_idx);
+    let mv = s.registry.resolve(name.as_deref());
+    if name.is_some() && mv.is_none() {
+        s.metrics.failed.fetch_add(1, Ordering::Relaxed);
+        reply.finish(Err(ServiceError::Rejected(format!(
+            "unknown model endpoint '{}'",
+            name.unwrap()
+        ))));
+        return;
+    }
+    let model = mv.as_ref().map(|v| v.model.clone());
+    enum Long {
+        Relax { max_steps: usize },
+        Roll { steps: usize, dt: f64 },
+    }
+    let (pos0, species, kind) = match task {
+        Task::Relax { structure, max_steps } => {
+            (structure.pos, structure.species, Long::Relax { max_steps })
+        }
+        Task::MdRollout { structure, steps, dt } => {
+            (structure.pos, structure.species, Long::Roll { steps, dt })
+        }
+        _ => unreachable!("run_long only sees Relax/MdRollout"),
+    };
+    if let Some(m) = &model {
+        if species.len() > m.cfg.max_atoms {
+            s.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            reply.finish(Err(ServiceError::Exec(format!(
+                "structure has {} atoms, model capacity is {}",
+                species.len(),
+                m.cfg.max_atoms
+            ))));
+            return;
+        }
+    }
+    let mut learned =
+        model.as_ref().map(|m| LearnedPotential::new(m.clone(), species.clone()));
+    let state = s.state.read().unwrap().clone();
+    // first typed error wins; once set, the provider returns zero forces
+    // so FIRE/BAOAB wind down in O(1) steps instead of integrating noise
+    let err: RefCell<Option<ServiceError>> = RefCell::new(None);
+    let cancel_flag = cancel.clone();
+    let species_for_provider = species.clone();
+    let mut provider = |pos: &[[f64; 3]]| -> (f64, Vec<[f64; 3]>) {
+        let zeros = (0.0, vec![[0.0f64; 3]; pos.len()]);
+        if err.borrow().is_some() {
+            return zeros;
+        }
+        if cancel_flag.load(Ordering::Relaxed) {
+            *err.borrow_mut() = Some(ServiceError::Canceled);
+            return zeros;
+        }
+        if deadline.map_or(false, |d| Instant::now() >= d) {
+            *err.borrow_mut() = Some(ServiceError::DeadlineExceeded);
+            return zeros;
+        }
+        match &mut learned {
+            Some(lp) => lp.compute(pos),
+            None => match eval_single(
+                s, bucket, &state, pos, &species_for_provider,
+            ) {
+                Ok(r) => r,
+                Err(e) => {
+                    *err.borrow_mut() =
+                        Some(ServiceError::Exec(format!("{e}")));
+                    zeros
+                }
+            },
+        }
+    };
+    match kind {
+        Long::Relax { max_steps } => {
+            let res = fire_relax(
+                &mut provider,
+                &pos0,
+                FireConfig { max_steps, ..Default::default() },
+            );
+            s.metrics.relaxes.fetch_add(1, Ordering::Relaxed);
+            match err.into_inner() {
+                Some(e) => {
+                    count_failure(s, &e);
+                    reply.finish(Err(e));
+                }
+                None => {
+                    let lat = enqueued.elapsed();
+                    s.metrics.latency.record_ns(lat.as_nanos() as u64);
+                    s.metrics.responses.fetch_add(1, Ordering::Relaxed);
+                    reply.finish(Ok(Reply::Relaxed(res)));
+                }
+            }
+        }
+        Long::Roll { steps, dt } => {
+            // Thermostat::None consumes no randomness: the rollout is
+            // deterministic and exactly reproducible client-side
+            let mut rng = Rng::new(id);
+            let mut md = Integrator::new_with(
+                pos0, species.clone(), &mut provider, dt, Thermostat::None,
+            );
+            let mut streamed = 0usize;
+            md.rollout_with(&mut provider, &mut rng, steps, |step, md| {
+                if err.borrow().is_some() {
+                    return false;
+                }
+                reply.frame(Frame {
+                    step,
+                    time: (step + 1) as f64 * dt,
+                    energy: md.potential_energy,
+                    kinetic: md.kinetic_energy(),
+                    pos: md.pos.clone(),
+                });
+                streamed += 1;
+                s.metrics.frames.fetch_add(1, Ordering::Relaxed);
+                true
+            });
+            s.metrics.rollouts.fetch_add(1, Ordering::Relaxed);
+            match err.into_inner() {
+                Some(e) => {
+                    count_failure(s, &e);
+                    reply.finish(Err(e));
+                }
+                None => {
+                    let lat = enqueued.elapsed();
+                    s.metrics.latency.record_ns(lat.as_nanos() as u64);
+                    s.metrics.responses.fetch_add(1, Ordering::Relaxed);
+                    reply.finish(Ok(Reply::Rollout(RolloutSummary {
+                        id,
+                        steps: streamed,
+                        final_pos: md.pos.clone(),
+                        final_energy: md.total_energy(),
+                    })));
+                }
+            }
+        }
+    }
+}
+
+fn count_failure(s: &ServiceShared, e: &ServiceError) {
+    match e {
+        ServiceError::Canceled => {
+            s.metrics.canceled.fetch_add(1, Ordering::Relaxed);
+        }
+        ServiceError::DeadlineExceeded => {
+            s.metrics.expired.fetch_add(1, Ordering::Relaxed);
+        }
+        _ => {
+            s.metrics.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}

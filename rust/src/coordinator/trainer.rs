@@ -23,6 +23,7 @@
 
 use std::sync::Arc;
 
+use super::service::Service;
 use crate::data::Graph;
 use crate::err;
 use crate::model::{Model, ModelScratch};
@@ -353,6 +354,21 @@ impl NativeTrainer {
     /// Hand the trained model off (e.g. to the serving backend).
     pub fn into_model(self) -> Model {
         self.model
+    }
+
+    /// Immutable snapshot of the current model (config + parameters
+    /// copied) — what gets promoted into a live service without
+    /// stopping training.
+    pub fn snapshot_model(&self) -> Model {
+        self.model.snapshot()
+    }
+
+    /// Hot-promote the current parameters into a live service endpoint
+    /// (the checkpoint-to-production path); returns the new registry
+    /// version.  Training can keep stepping: the service serves the
+    /// snapshot, not the live parameters.
+    pub fn promote_to(&self, service: &Service, name: &str) -> u64 {
+        service.promote(name, Arc::new(self.snapshot_model()))
     }
 }
 

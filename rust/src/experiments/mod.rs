@@ -169,13 +169,13 @@ fn run_serve_demo(
 ) -> Result<()> {
     let graphs = gen_bpa_dataset(&[0.05], n_requests, 7).remove(0);
     let t0 = Instant::now();
-    let receivers: Vec<_> = graphs
+    let tickets: Vec<_> = graphs
         .iter()
         .map(|g| server.submit(g.pos.clone(), g.species.clone()).unwrap())
         .collect();
     let mut ok = 0usize;
-    for rx in receivers {
-        let resp = rx.recv().unwrap().map_err(|e| err!("{e}"))?;
+    for ticket in tickets {
+        let resp = ticket.wait().map_err(|e| err!("{e}"))?;
         assert_eq!(resp.forces.len(), graphs[0].n_atoms());
         ok += 1;
     }
@@ -212,6 +212,107 @@ pub fn serve_demo_native(n_requests: usize) -> Result<()> {
     for ks in stats.per_key.iter().take(5) {
         println!("  {:?}: {} hits", ks.key, ks.hits);
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// load test: the typed Client API under concurrent mixed-size traffic
+// ---------------------------------------------------------------------
+
+/// Drive a native [`Service`] with concurrent clients submitting a
+/// bimodal (small/large structure) `EnergyForces` stream through the
+/// typed [`Client`] handle, and report p50/p99 latency, throughput, and
+/// the padding accounting (`atom_fill`) of the shape-bucketed queue —
+/// the `make loadtest` entry point.
+pub fn loadtest(
+    n_requests: usize, n_clients: usize, n_workers: usize, bucketed: bool,
+) -> Result<()> {
+    use crate::coordinator::batcher::BucketConfig;
+    use crate::coordinator::request::{EnergyForces, Request, Structure};
+    use crate::coordinator::Service;
+
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: std::time::Duration::from_millis(2),
+        max_queue: 65536,
+    };
+    let mut builder = Service::builder()
+        .native(NativeGauntBackend::default())
+        .config(ServerConfig {
+            policy,
+            n_workers,
+            r_cut: R_CUT,
+            ..Default::default()
+        });
+    if !bucketed {
+        // the pre-redesign baseline: ONE worst-case-width queue
+        builder = builder.buckets(vec![BucketConfig {
+            max_atoms: 32,
+            max_edges: 256,
+            policy,
+        }]);
+    }
+    let service = builder.build()?;
+    println!(
+        "loadtest: {n_requests} requests x {n_clients} clients, \
+         {n_workers} workers, {} ({} buckets)",
+        if bucketed { "shape-bucketed" } else { "single global queue" },
+        service.buckets().len()
+    );
+
+    // bimodal workload: 14-atom MD samples + 4-atom clusters
+    let big = gen_bpa_dataset(&[0.05], 8, 7).remove(0);
+    let mut structures: Vec<Structure> = Vec::new();
+    let mut rng = Rng::new(42);
+    for (i, g) in big.iter().enumerate() {
+        structures.push(Structure::new(g.pos.clone(), g.species.clone()));
+        let small: Vec<[f64; 3]> = (0..4)
+            .map(|_| [rng.normal(), rng.normal(), rng.normal()])
+            .collect();
+        structures.push(Structure::new(small, vec![i % 3; 4]));
+    }
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients.max(1) {
+        let client = service.client();
+        let structs = structures.clone();
+        let per_client = n_requests / n_clients.max(1);
+        handles.push(std::thread::spawn(move || -> Vec<f64> {
+            let mut lat = Vec::with_capacity(per_client);
+            for k in 0..per_client {
+                let st = structs[(c + k) % structs.len()].clone();
+                match client
+                    .submit(Request::new(EnergyForces(st)))
+                    .map(|t| t.wait())
+                {
+                    Ok(Ok(resp)) => lat.push(resp.latency_s),
+                    Ok(Err(e)) => eprintln!("request failed: {e}"),
+                    Err(e) => eprintln!("submit rejected: {e}"),
+                }
+            }
+            lat
+        }));
+    }
+    let mut all_lat: Vec<f64> = Vec::new();
+    for h in handles {
+        all_lat.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    if all_lat.is_empty() {
+        return Err(err!("no request completed"));
+    }
+    all_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total = all_lat.len();
+    println!("throughput : {:.1} structures/s", total as f64 / wall);
+    println!("p50 latency: {:.3} ms", 1e3 * all_lat[total / 2]);
+    println!(
+        "p99 latency: {:.3} ms",
+        1e3 * all_lat[(total * 99 / 100).min(total - 1)]
+    );
+    println!("atom_fill  : {:.3}", service.metrics().atom_fill());
+    println!("metrics    : {}", service.metrics().report());
+    service.shutdown();
     Ok(())
 }
 

@@ -10,6 +10,12 @@
 //!                             synthetic adsorbate dataset
 //!   experiment <fig1d|table1|table2|tp-throughput>   regenerate a paper
 //!                             artifact (tp-throughput runs offline)
+//!   loadtest [--requests N] [--clients C] [--workers W] [--global-queue]
+//!                             drive the typed Client API with
+//!                             concurrent mixed-size traffic through the
+//!                             shape-bucketed native service (offline);
+//!                             --global-queue serves the single
+//!                             worst-case-width queue for comparison
 //!   md-demo                   short MD run of the 3BPA-lite molecule
 
 use std::sync::Arc;
@@ -87,15 +93,31 @@ fn main() -> Result<()> {
                 other => Err(err!("unknown experiment '{other}'")),
             }
         }
+        "loadtest" => {
+            let requests: usize = arg_value(&args, "--requests")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(256);
+            let clients: usize = arg_value(&args, "--clients")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(4);
+            let workers: usize = arg_value(&args, "--workers")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(2);
+            let bucketed = !args.iter().any(|a| a == "--global-queue");
+            experiments::loadtest(requests, clients, workers, bucketed)
+        }
         "md-demo" => experiments::md_demo(),
         _ => {
             println!(
                 "gaunt-tp — Gaunt Tensor Products (ICLR 2024) reproduction\n\
-                 usage: gaunt-tp <info|check|serve|train|experiment|md-demo> \
+                 usage: gaunt-tp \
+                 <info|check|serve|train|experiment|loadtest|md-demo> \
                  [--artifacts DIR]\n\
                  \x20 serve --requests N [--native]\n\
                  \x20 train --variant gaunt|cg --steps N\n\
-                 \x20 experiment fig1d|table1|table2|tp-throughput"
+                 \x20 experiment fig1d|table1|table2|tp-throughput\n\
+                 \x20 loadtest --requests N --clients C --workers W \
+                 [--global-queue]"
             );
             Ok(())
         }

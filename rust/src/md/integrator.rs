@@ -147,6 +147,28 @@ impl Integrator {
         }
     }
 
+    /// Drive up to `steps` BAOAB steps from an arbitrary provider,
+    /// invoking `on_frame(step, &self)` after each; returning `false`
+    /// from the callback stops the rollout early (cooperative
+    /// cancellation).  Returns the number of steps integrated.  This is
+    /// the substrate of the coordinator's streaming `MdRollout` task.
+    pub fn rollout_with<P, F>(
+        &mut self, provider: &mut P, rng: &mut Rng, steps: usize,
+        mut on_frame: F,
+    ) -> usize
+    where
+        P: ForceProvider,
+        F: FnMut(usize, &Integrator) -> bool,
+    {
+        for step in 0..steps {
+            self.step_with(provider, rng);
+            if !on_frame(step, self) {
+                return step + 1;
+            }
+        }
+        steps
+    }
+
     /// One integration step with the classical potential.  Delegates to
     /// [`Integrator::step_with`] so classical and learned-potential MD
     /// share ONE BAOAB implementation (the species list is lent to the
@@ -224,6 +246,37 @@ mod tests {
         assert_eq!(md_a.pos, md_b.pos);
         assert_eq!(md_a.vel, md_b.vel);
         assert_eq!(md_a.potential_energy, md_b.potential_energy);
+    }
+
+    #[test]
+    fn rollout_with_matches_manual_stepping_and_stops_early() {
+        let pot = Potential::lj(1.0, 1.0, 3.0);
+        let pos = lj_cluster(2, 1.15);
+        let species = vec![0usize; pos.len()];
+        let sp = species.clone();
+        let p2 = pot.clone();
+        let mut provider = move |x: &[[f64; 3]]| p2.energy_forces(x, &sp);
+        let mut rng_a = Rng::new(7);
+        let mut rng_b = Rng::new(7);
+        let mut md_a = Integrator::new_with(pos.clone(), species.clone(),
+                                            &mut provider, 0.003,
+                                            Thermostat::None);
+        let mut md_b = Integrator::new_with(pos, species, &mut provider,
+                                            0.003, Thermostat::None);
+        let mut frames = 0usize;
+        let done = md_a.rollout_with(&mut provider, &mut rng_a, 10,
+                                     |_, _| { frames += 1; true });
+        assert_eq!(done, 10);
+        assert_eq!(frames, 10);
+        for _ in 0..10 {
+            md_b.step_with(&mut provider, &mut rng_b);
+        }
+        assert_eq!(md_a.pos, md_b.pos);
+        assert_eq!(md_a.vel, md_b.vel);
+        // early stop via the callback
+        let done = md_b.rollout_with(&mut provider, &mut rng_b, 100,
+                                     |step, _| step < 2);
+        assert_eq!(done, 3, "stops after the callback returns false");
     }
 
     #[test]

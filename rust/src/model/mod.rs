@@ -350,6 +350,14 @@ impl Model {
         self.params.len()
     }
 
+    /// An independent copy of this model (config + parameters; plans
+    /// are shared through the global cache).  This is the promotion
+    /// unit for the serving registry: a trainer snapshots, the service
+    /// hot-swaps, and the trainer keeps mutating its own parameters.
+    pub fn snapshot(&self) -> Model {
+        Model::from_params(self.cfg, self.params.clone())
+    }
+
     /// The node-feature layout contract.
     pub fn node_irreps(&self) -> &Irreps {
         &self.nir

@@ -40,13 +40,13 @@ fn native_server_end_to_end() {
         .unwrap();
     assert!(single.energy.is_finite());
     assert_eq!(single.forces.len(), graphs[0].pos.len());
-    let rxs: Vec<_> = graphs
+    let tickets: Vec<_> = graphs
         .iter()
         .map(|g| server.submit(g.pos.clone(), g.species.clone()).unwrap())
         .collect();
-    let responses: Vec<_> = rxs
+    let responses: Vec<_> = tickets
         .into_iter()
-        .map(|rx| rx.recv().unwrap().unwrap())
+        .map(|t| t.wait().unwrap())
         .collect();
     assert_eq!(responses.len(), 20);
     for resp in &responses {
@@ -145,16 +145,16 @@ fn native_server_applies_backpressure() {
     // flood faster than one worker can drain a queue of depth 2; at least
     // one submit must be rejected OR all succeed if the worker keeps up —
     // either way the server must stay consistent and drain cleanly.
-    let mut receivers = Vec::new();
+    let mut tickets = Vec::new();
     let mut rejected = 0usize;
     for _ in 0..64 {
         match server.submit(g.pos.clone(), g.species.clone()) {
-            Ok(rx) => receivers.push(rx),
+            Ok(t) => tickets.push(t),
             Err(_) => rejected += 1,
         }
     }
-    for rx in receivers {
-        let resp = rx.recv().unwrap().unwrap();
+    for t in tickets {
+        let resp = t.wait().unwrap();
         assert!(resp.energy.is_finite());
     }
     let m = server.metrics();

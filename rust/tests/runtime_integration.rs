@@ -200,13 +200,13 @@ fn server_end_to_end() {
     let single = server
         .infer_blocking(graphs[0].pos.clone(), graphs[0].species.clone())
         .unwrap();
-    let rxs: Vec<_> = graphs
+    let tickets: Vec<_> = graphs
         .iter()
         .map(|g| server.submit(g.pos.clone(), g.species.clone()).unwrap())
         .collect();
-    let responses: Vec<_> = rxs
+    let responses: Vec<_> = tickets
         .into_iter()
-        .map(|rx| rx.recv().unwrap().unwrap())
+        .map(|t| t.wait().unwrap())
         .collect();
     assert_eq!(responses.len(), 20);
     // request 0 is the same structure as the single-shot call

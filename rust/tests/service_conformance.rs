@@ -1,0 +1,677 @@
+//! Conformance suite for the typed multi-task serving protocol:
+//!
+//! * every `Task` variant round-trips end-to-end through the native
+//!   Gaunt backend on ONE `Service` instance;
+//! * deadline expiry and cancellation come back as typed errors;
+//! * reply-on-drop holds under injected worker failure (a panicking
+//!   backend can never hang a caller, and the worker survives);
+//! * hot model swap mid-traffic never yields a torn batch;
+//! * shape-bucketed batching provably pads less than the single
+//!   worst-case-width queue on a bimodal size mix.
+//!
+//! `SERVE_SMOKE=1` shrinks workloads for the fast verify gate.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gaunt_tp::coordinator::batcher::{BatchPolicy, BucketConfig};
+use gaunt_tp::coordinator::request::{
+    Batch, EnergyForces, EnergyOnly, MdRollout, Relax, Request, ServiceError,
+    Structure,
+};
+use gaunt_tp::coordinator::router::Variant;
+use gaunt_tp::coordinator::server::{
+    Backend, BackendSpec, NativeGauntBackend, ServerConfig,
+};
+use gaunt_tp::coordinator::Service;
+use gaunt_tp::data::PaddedBatch;
+use gaunt_tp::md::{Integrator, LearnedPotential, Thermostat};
+use gaunt_tp::model::{Model, ModelConfig};
+use gaunt_tp::runtime::Tensor;
+use gaunt_tp::util::rng::Rng;
+
+fn smoke() -> bool {
+    std::env::var("SERVE_SMOKE").is_ok()
+}
+
+fn scaled(full: usize, smoke_n: usize) -> usize {
+    if smoke() { smoke_n } else { full }
+}
+
+/// A jittered-grid cluster with valid species (0..3).  Grid spacing 3.5
+/// with small jitter keeps the neighbor degree <= 6 at the serving
+/// cutoffs, so even 28-atom structures fit every bucket's edge budget.
+fn cluster(n: usize, seed: u64) -> Structure {
+    let mut rng = Rng::new(seed);
+    Structure::new(
+        (0..n)
+            .map(|i| {
+                [
+                    3.5 * (i % 3) as f64 + 0.1 * rng.normal(),
+                    3.5 * ((i / 3) % 3) as f64 + 0.1 * rng.normal(),
+                    3.5 * (i / 9) as f64 + 0.1 * rng.normal(),
+                ]
+            })
+            .collect(),
+        (0..n).map(|i| i % 3).collect(),
+    )
+}
+
+fn native_service(n_workers: usize) -> Service {
+    Service::builder()
+        .native(NativeGauntBackend::default())
+        .config(ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+                max_queue: 4096,
+            },
+            n_workers,
+            ..Default::default()
+        })
+        .build()
+        .expect("native service must start without artifacts")
+}
+
+// ---------------------------------------------------------------------
+// every Task variant end-to-end through one service
+// ---------------------------------------------------------------------
+
+#[test]
+fn all_task_variants_round_trip_through_one_service() {
+    let service = native_service(2);
+    let client = service.client();
+    let st = cluster(6, 3);
+
+    // EnergyForces: the baseline
+    let ef = client
+        .call(Request::new(EnergyForces(st.clone())))
+        .expect("energy_forces");
+    assert!(ef.energy.is_finite());
+    assert_eq!(ef.forces.len(), 6);
+    assert!(ef.latency_s >= 0.0);
+
+    // EnergyOnly agrees with EnergyForces on the same structure
+    let eo = client
+        .call(Request::new(EnergyOnly(st.clone())))
+        .expect("energy_only");
+    assert!(
+        (eo.energy - ef.energy).abs() < 1e-9,
+        "EnergyOnly {} vs EnergyForces {}",
+        eo.energy,
+        ef.energy
+    );
+
+    // Batch: every row matches its individual submission
+    let sts = vec![st.clone(), cluster(4, 5), cluster(9, 7)];
+    let batch = client
+        .call(Request::new(Batch(sts.clone())))
+        .expect("batch");
+    assert_eq!(batch.len(), 3);
+    for (row, s) in batch.iter().zip(&sts) {
+        let single = client
+            .call(Request::new(EnergyForces(s.clone())))
+            .unwrap();
+        assert!(
+            (row.energy - single.energy).abs() < 1e-6,
+            "batch row diverged: {} vs {}",
+            row.energy,
+            single.energy
+        );
+        assert_eq!(row.forces.len(), s.n_atoms());
+    }
+
+    // Relax: bounded steps, finite trace
+    let relax = client
+        .call(Request::new(Relax {
+            structure: st.clone(),
+            max_steps: scaled(20, 5),
+        }))
+        .expect("relax");
+    assert!(relax.energy.is_finite());
+    assert_eq!(relax.pos.len(), 6);
+    assert_eq!(relax.energy_trace.len(), relax.steps + 1);
+    assert!(relax.steps <= scaled(20, 5));
+
+    // MdRollout: streamed frames + summary
+    let steps = scaled(8, 4);
+    let mut ticket = client
+        .submit(Request::new(MdRollout {
+            structure: st.clone(),
+            steps,
+            dt: 1e-3,
+        }))
+        .unwrap();
+    let mut seen = 0usize;
+    while let Some(frame) = ticket.next_frame() {
+        assert_eq!(frame.step, seen);
+        assert!(frame.energy.is_finite());
+        assert_eq!(frame.pos.len(), 6);
+        assert!((frame.time - (seen + 1) as f64 * 1e-3).abs() < 1e-12);
+        seen += 1;
+    }
+    let traj = ticket.wait().expect("rollout");
+    assert_eq!(seen, steps, "one frame per step");
+    assert_eq!(traj.summary.steps, steps);
+    assert!(traj.frames.is_empty(), "frames were drained by next_frame");
+    assert!(traj
+        .summary
+        .final_pos
+        .iter()
+        .all(|p| p.iter().all(|x| x.is_finite())));
+
+    // try_poll resolves without blocking once the reply landed
+    let mut t2 = client
+        .submit(Request::new(EnergyOnly(st.clone())))
+        .unwrap();
+    let mut polled = None;
+    for _ in 0..2000 {
+        if let Some(r) = t2.try_poll() {
+            polled = Some(r);
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let polled = polled.expect("try_poll must resolve").expect("ok");
+    assert!((polled.energy - ef.energy).abs() < 1e-9);
+
+    assert!(
+        service.metrics().responses.load(std::sync::atomic::Ordering::Relaxed)
+            > 0
+    );
+    service.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// typed deadline + cancellation
+// ---------------------------------------------------------------------
+
+#[test]
+fn deadline_expiry_returns_a_typed_error() {
+    // one worker, a queue that flushes only after 100ms: a 1ms deadline
+    // is deterministically expired by dequeue time
+    let service = Service::builder()
+        .native(NativeGauntBackend::default())
+        .config(ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(100),
+                max_queue: 256,
+            },
+            n_workers: 1,
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+    let ticket = service
+        .client()
+        .submit(
+            Request::new(EnergyForces(cluster(4, 1)))
+                .deadline(Duration::from_millis(1)),
+        )
+        .unwrap();
+    match ticket.wait() {
+        Err(ServiceError::DeadlineExceeded) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert_eq!(
+        service.metrics().expired.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    service.shutdown();
+}
+
+#[test]
+fn cancellation_returns_a_typed_error() {
+    // cancel while the request is still queued (slow flush)
+    let service = Service::builder()
+        .native(NativeGauntBackend::default())
+        .config(ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(100),
+                max_queue: 256,
+            },
+            n_workers: 1,
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+    let ticket = service
+        .client()
+        .submit(Request::new(EnergyForces(cluster(4, 2))))
+        .unwrap();
+    ticket.cancel();
+    match ticket.wait() {
+        Err(ServiceError::Canceled) => {}
+        other => panic!("expected Canceled, got {other:?}"),
+    }
+    service.shutdown();
+}
+
+#[test]
+fn cancellation_interrupts_a_streaming_rollout() {
+    let service = native_service(1);
+    let client = service.client();
+    // far more steps than could ever finish before the cancel lands;
+    // the provider checks the flag every force evaluation
+    let mut ticket = client
+        .submit(Request::new(MdRollout {
+            structure: cluster(4, 9),
+            steps: 1_000_000,
+            dt: 1e-4,
+        }))
+        .unwrap();
+    let first = ticket.next_frame().expect("at least one frame streams");
+    assert_eq!(first.step, 0);
+    ticket.cancel();
+    // drain whatever was in flight; the stream must END (not hang)
+    while ticket.next_frame().is_some() {}
+    match ticket.wait() {
+        Err(ServiceError::Canceled) => {}
+        other => panic!("expected Canceled mid-rollout, got {other:?}"),
+    }
+    service.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// submit-side typed rejections
+// ---------------------------------------------------------------------
+
+#[test]
+fn malformed_and_oversize_submissions_are_rejected_synchronously() {
+    let service = native_service(1);
+    let client = service.client();
+    // species/pos mismatch
+    let bad = Structure::new(vec![[0.0; 3]; 3], vec![0; 2]);
+    match client.submit(Request::new(EnergyForces(bad))) {
+        Err(ServiceError::Rejected(m)) => assert!(m.contains("species"), "{m}"),
+        other => panic!("expected Rejected, got {:?}", other.err()),
+    }
+    // larger than the largest bucket
+    let big = cluster(service.max_atoms() + 1, 4);
+    match client.submit(Request::new(EnergyForces(big))) {
+        Err(ServiceError::Rejected(m)) => assert!(m.contains("bucket"), "{m}"),
+        other => panic!("expected Rejected, got {:?}", other.err()),
+    }
+    // unknown model endpoint
+    match client
+        .submit(Request::new(EnergyForces(cluster(4, 4))).model("nope"))
+    {
+        Err(ServiceError::Rejected(m)) => {
+            assert!(m.contains("unknown model"), "{m}")
+        }
+        other => panic!("expected Rejected, got {:?}", other.err()),
+    }
+    // zero-step rollout
+    match client.submit(Request::new(MdRollout {
+        structure: cluster(4, 4),
+        steps: 0,
+        dt: 1e-3,
+    })) {
+        Err(ServiceError::Rejected(_)) => {}
+        other => panic!("expected Rejected, got {:?}", other.err()),
+    }
+    service.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// reply-on-drop under injected worker failure
+// ---------------------------------------------------------------------
+
+struct PanickingBackend;
+
+impl Backend for PanickingBackend {
+    fn run(
+        &self, _v: &Variant, _pb: &PaddedBatch, _s: &[Tensor],
+        _m: Option<&Arc<Model>>,
+    ) -> gaunt_tp::util::error::Result<(Vec<f32>, Vec<f32>)> {
+        panic!("injected backend failure");
+    }
+}
+
+struct ErroringBackend;
+
+impl Backend for ErroringBackend {
+    fn run(
+        &self, _v: &Variant, _pb: &PaddedBatch, _s: &[Tensor],
+        _m: Option<&Arc<Model>>,
+    ) -> gaunt_tp::util::error::Result<(Vec<f32>, Vec<f32>)> {
+        Err(gaunt_tp::err!("injected backend error"))
+    }
+}
+
+fn spec_with(backend: Arc<dyn Backend>) -> BackendSpec {
+    BackendSpec {
+        backend,
+        variants: vec![
+            Variant { name: "inj_B1".to_string(), batch: 1 },
+            Variant { name: "inj_B4".to_string(), batch: 4 },
+        ],
+        state: Vec::new(),
+        n_atoms: 32,
+        n_edges: 256,
+        fixed_shape: false,
+    }
+}
+
+#[test]
+fn worker_panic_can_never_hang_a_caller() {
+    let service = Service::builder()
+        .backend(spec_with(Arc::new(PanickingBackend)))
+        .config(ServerConfig { n_workers: 1, ..Default::default() })
+        .build()
+        .unwrap();
+    let client = service.client();
+    // the panic unwinds through the reply slots: wait() returns an
+    // error instead of blocking forever
+    match client.call(Request::new(EnergyForces(cluster(4, 1)))) {
+        Err(ServiceError::Dropped(_)) => {}
+        other => panic!("expected Dropped after worker panic, got {other:?}"),
+    }
+    assert!(
+        service
+            .metrics()
+            .worker_panics
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= 1
+    );
+    // the worker survived the panic and keeps serving (and failing)
+    match client.call(Request::new(EnergyForces(cluster(4, 2)))) {
+        Err(ServiceError::Dropped(_)) => {}
+        other => panic!("worker died after panic: got {other:?}"),
+    }
+    service.shutdown();
+}
+
+#[test]
+fn backend_errors_are_typed_exec_errors() {
+    let service = Service::builder()
+        .backend(spec_with(Arc::new(ErroringBackend)))
+        .config(ServerConfig { n_workers: 1, ..Default::default() })
+        .build()
+        .unwrap();
+    match service
+        .client()
+        .call(Request::new(EnergyForces(cluster(4, 1))))
+    {
+        Err(ServiceError::Exec(m)) => assert!(m.contains("injected"), "{m}"),
+        other => panic!("expected Exec, got {other:?}"),
+    }
+    assert_eq!(
+        service.metrics().failed.load(std::sync::atomic::Ordering::Relaxed),
+        1,
+        "execution failures must land in the failed counter"
+    );
+    service.shutdown();
+}
+
+#[test]
+fn shutdown_fails_queued_requests_instead_of_leaking_them() {
+    // a service whose only worker never flushes before shutdown
+    let service = Service::builder()
+        .native(NativeGauntBackend::default())
+        .config(ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_secs(60),
+                max_queue: 256,
+            },
+            n_workers: 1,
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+    let t1 = service
+        .client()
+        .submit(Request::new(EnergyForces(cluster(4, 1))))
+        .unwrap();
+    let t2 = service
+        .client()
+        .submit(Request::new(EnergyForces(cluster(20, 2))))
+        .unwrap();
+    service.shutdown();
+    for t in [t1, t2] {
+        match t.wait() {
+            Err(ServiceError::Shutdown) => {}
+            other => panic!("expected Shutdown, got {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// hot swap: never a torn batch
+// ---------------------------------------------------------------------
+
+#[test]
+fn hot_swap_mid_traffic_never_tears_a_batch() {
+    let cfg = ModelConfig { n_layers: 1, ..Default::default() };
+    let model_a = Arc::new(Model::new(cfg, 1));
+    let model_b = Arc::new(Model::new(cfg, 2));
+    let st = cluster(5, 11);
+    let (e_a, _) = model_a.energy_forces(&st.pos, &st.species);
+    let (e_b, _) = model_b.energy_forces(&st.pos, &st.species);
+    assert!(
+        (e_a - e_b).abs() > 1e-9,
+        "seeds must give distinguishable models"
+    );
+
+    let service = Service::builder()
+        .model(model_a.clone())
+        .config(ServerConfig { n_workers: 2, ..Default::default() })
+        .build()
+        .unwrap();
+    let client = service.client();
+    let v0 = service.registry().endpoints()[0].1;
+
+    // swapper thread: a<->b as fast as it can while traffic flows.
+    // The stop flag is raised by a drop guard so that a FAILING
+    // assertion below (unwinding out of the scope closure) still stops
+    // the swapper — thread::scope joins it before propagating the
+    // panic, and without the guard the test would hang instead of fail.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    struct StopOnDrop(Arc<std::sync::atomic::AtomicBool>);
+    impl Drop for StopOnDrop {
+        fn drop(&mut self) {
+            self.0.store(true, std::sync::atomic::Ordering::Relaxed);
+        }
+    }
+    let n_waves = scaled(24, 6);
+    std::thread::scope(|scope| {
+        let _stop_guard = StopOnDrop(stop.clone());
+        let svc = &service;
+        let stop3 = stop.clone();
+        let (ma, mb) = (model_a.clone(), model_b.clone());
+        scope.spawn(move || {
+            let mut flip = false;
+            while !stop3.load(std::sync::atomic::Ordering::Relaxed) {
+                let m = if flip { ma.clone() } else { mb.clone() };
+                svc.promote("default", m);
+                flip = !flip;
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        });
+        for _ in 0..n_waves {
+            // 4 identical structures in ONE Batch task: they execute in
+            // one padded batch against ONE resolved model version, so
+            // all four energies must be identical — a torn batch would
+            // mix e_a and e_b rows
+            let rows = client
+                .call(Request::new(Batch(vec![
+                    st.clone(),
+                    st.clone(),
+                    st.clone(),
+                    st.clone(),
+                ])))
+                .expect("batch under hot swap");
+            for w in rows.windows(2) {
+                assert!(
+                    (w[0].energy - w[1].energy).abs() < 1e-9,
+                    "TORN BATCH: rows saw different model versions: {} vs {}",
+                    w[0].energy,
+                    w[1].energy
+                );
+            }
+            // and each wave matches one of the two registered models
+            let e = rows[0].energy;
+            assert!(
+                (e - e_a).abs() < 1e-4 * (1.0 + e_a.abs())
+                    || (e - e_b).abs() < 1e-4 * (1.0 + e_b.abs()),
+                "batch energy {e} matches neither model ({e_a} / {e_b})"
+            );
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    });
+    let v1 = service.registry().endpoints()[0].1;
+    assert!(v1 > v0, "swaps must bump the endpoint version");
+    service.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// bucketed batching pads strictly less than the global queue
+// ---------------------------------------------------------------------
+
+fn drive_bimodal(service: &Service, n_pairs: usize) {
+    // sequential closed loop: each request is flushed alone, so the
+    // padded-slot accounting is deterministic (1 row x bucket width per
+    // request) and the comparison below cannot be blurred by row
+    // padding from racy batch coalescing
+    let client = service.client();
+    for k in 0..n_pairs {
+        client
+            .call(Request::new(EnergyForces(cluster(4, 100 + k as u64))))
+            .unwrap();
+        client
+            .call(Request::new(EnergyForces(cluster(28, 200 + k as u64))))
+            .unwrap();
+    }
+}
+
+#[test]
+fn bucketed_batching_pads_strictly_less_than_the_global_queue() {
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        max_queue: 4096,
+    };
+    let global = Service::builder()
+        .native(NativeGauntBackend::default())
+        .policy(policy)
+        .workers(2)
+        // the pre-redesign shape: ONE bucket at the worst-case width
+        .buckets(vec![BucketConfig {
+            max_atoms: 32,
+            max_edges: 256,
+            policy,
+        }])
+        .build()
+        .unwrap();
+    let bucketed = Service::builder()
+        .native(NativeGauntBackend::default())
+        .policy(policy)
+        .workers(2)
+        .buckets(vec![
+            BucketConfig { max_atoms: 8, max_edges: 56, policy },
+            BucketConfig { max_atoms: 32, max_edges: 256, policy },
+        ])
+        .build()
+        .unwrap();
+
+    let n_pairs = scaled(24, 8);
+    drive_bimodal(&global, n_pairs);
+    drive_bimodal(&bucketed, n_pairs);
+
+    let load = |s: &Service| {
+        let m = s.metrics();
+        (
+            m.padded_atom_slots.load(std::sync::atomic::Ordering::Relaxed),
+            m.true_atom_slots.load(std::sync::atomic::Ordering::Relaxed),
+        )
+    };
+    let (pad_g, true_g) = load(&global);
+    let (pad_b, true_b) = load(&bucketed);
+    assert_eq!(
+        true_g, true_b,
+        "both services carried the same real atoms"
+    );
+    assert!(
+        pad_b < pad_g,
+        "bucketed batching must pad strictly less: bucketed {pad_b} vs \
+         global {pad_g} padded slots for {true_g} real atoms"
+    );
+    let fill_g = global.metrics().atom_fill();
+    let fill_b = bucketed.metrics().atom_fill();
+    assert!(
+        fill_b > fill_g,
+        "bucketed fill {fill_b:.3} must beat global fill {fill_g:.3}"
+    );
+    global.shutdown();
+    bucketed.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// relax/rollout are exactly the MD substrate over LearnedPotential
+// ---------------------------------------------------------------------
+
+#[test]
+fn served_rollout_reproduces_local_learned_potential_md() {
+    let cfg = ModelConfig { n_layers: 1, ..Default::default() };
+    let model = Arc::new(Model::new(cfg, 7));
+    let service = Service::builder()
+        .model(model.clone())
+        .config(ServerConfig { n_workers: 1, ..Default::default() })
+        .build()
+        .unwrap();
+    let st = cluster(5, 21);
+    let steps = scaled(10, 4);
+    let dt = 1e-3;
+    let traj = service
+        .client()
+        .call(Request::new(MdRollout {
+            structure: st.clone(),
+            steps,
+            dt,
+        }))
+        .expect("served rollout");
+    assert_eq!(traj.frames.len(), steps);
+
+    // the served task IS Integrator+LearnedPotential: reproduce locally
+    let mut lp = LearnedPotential::new(model.clone(), st.species.clone());
+    let mut rng = Rng::new(0); // unused by Thermostat::None
+    let mut md = Integrator::new_with(
+        st.pos.clone(),
+        st.species.clone(),
+        &mut lp,
+        dt,
+        Thermostat::None,
+    );
+    for frame in &traj.frames {
+        md.step_with(&mut lp, &mut rng);
+        assert!(
+            (frame.energy - md.potential_energy).abs() < 1e-9,
+            "served frame {} energy {} vs local {}",
+            frame.step,
+            frame.energy,
+            md.potential_energy
+        );
+        for (a, b) in frame.pos.iter().zip(&md.pos) {
+            for k in 0..3 {
+                assert!(
+                    (a[k] - b[k]).abs() < 1e-9,
+                    "served rollout diverged from local LearnedPotential MD"
+                );
+            }
+        }
+    }
+    // relax through the same endpoint stays finite and traces steps
+    let relax = service
+        .client()
+        .call(Request::new(Relax {
+            structure: st,
+            max_steps: scaled(15, 5),
+        }))
+        .expect("served relax");
+    assert!(relax.energy.is_finite());
+    assert_eq!(relax.energy_trace.len(), relax.steps + 1);
+    service.shutdown();
+}

@@ -17,6 +17,9 @@
 #           every planned Gaunt plan), 1 thread vs all cores.
 #   multi_channel: the same inference at 1 / 8 / 32 feature channels
 #           (atoms/sec scaling of the Irreps multi-channel model).
+#   serving: p50/p99 request latency, structures/sec, and atom-slot
+#           fill of the typed serving protocol, single worst-case-width
+#           queue vs shape-bucketed batching at 1 and N workers.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -35,7 +38,7 @@ fi
 
 cd rust
 for b in fig1a_feature_interaction fig1b_equivariant_convolution \
-         table2_speed_memory model_inference; do
+         table2_speed_memory model_inference serving; do
     echo "== cargo bench --bench $b =="
     cargo bench --bench "$b" "${ARGS[@]+"${ARGS[@]}"}"
 done
@@ -61,6 +64,7 @@ wanted = {
     "table2": ["table2_fourier_plan", "table2_tp_scaling", "table2_speed"],
     "model": ["model_inference"],
     "multi_channel": ["multi_channel"],
+    "serving": ["serving"],
 }
 
 benches = {}
@@ -103,6 +107,10 @@ doc = {
                   "model_batch all cores (after)"],
         "multi_channel": ["model_batch C=1 (baseline)",
                           "model_batch C=8 / C=32 (multi-channel scaling)"],
+        "serving": ["serving_global_q_* (single worst-case-width queue)",
+                    "serving_bucketed_* (shape-bucketed batching); "
+                    "*_p50/*_p99 in ns, *_rate in structures/sec, "
+                    "*_atom_fill a ratio (iters = 0 marks derived rows)"],
     },
     "benches": benches,
 }

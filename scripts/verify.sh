@@ -34,9 +34,16 @@ echo "== EquivariantOp conformance harness (smoke mode) =="
 # is skipped or trimmed
 CONFORMANCE_SMOKE=1 cargo test -q --test op_conformance
 
+echo "== serving-protocol conformance suite (SERVE_SMOKE fast mode) =="
+# same idea for the typed serving protocol: every Task variant, typed
+# deadline/cancel errors, reply-on-drop under injected worker failure,
+# tear-free hot swap, and the bucketed-vs-global padding guarantee, at
+# reduced workload sizes
+SERVE_SMOKE=1 cargo test -q --test service_conformance
+
 echo "== bench --smoke (one tiny size per bench binary) =="
 for b in fig1a_feature_interaction fig1b_equivariant_convolution \
-         fig1c_many_body table2_speed_memory model_inference; do
+         fig1c_many_body table2_speed_memory model_inference serving; do
     echo "-- $b --smoke --"
     cargo bench --bench "$b" -- --smoke
 done

@@ -10,6 +10,9 @@
 #                     repo root, including the multi_channel section
 #                     (atoms/sec at 1/8/32 feature channels); SMOKE=1
 #                     for a 1 ms plumbing check
+#   make bench-compare - diff the working-tree BENCH_fourier.json against
+#                     the one at OLD (default HEAD); fails if any
+#                     speedup_* ratio row regressed by more than 10%
 #   make artifacts  - (needs JAX) AOT-compile the Pallas/XLA artifacts
 #                     with python/compile/aot.py into rust/artifacts/
 #   make model-golden - (numpy only, no JAX) regenerate the frozen-weights
@@ -24,8 +27,10 @@
 
 RUST_DIR := rust
 
-.PHONY: verify build test bench bench-snapshot artifacts model-golden \
-        loadtest ci clean
+.PHONY: verify build test bench bench-snapshot bench-compare artifacts \
+        model-golden loadtest ci clean
+
+OLD ?= HEAD
 
 verify:
 	bash scripts/verify.sh
@@ -43,6 +48,9 @@ bench:
 
 bench-snapshot:
 	bash scripts/bench_snapshot.sh
+
+bench-compare:
+	python3 scripts/bench_compare.py $(OLD) BENCH_fourier.json
 
 loadtest:
 	cd $(RUST_DIR) && cargo run --release -- loadtest --requests 256 \

@@ -1,0 +1,179 @@
+//! SIMD hot-path kernels: each vectorized kernel against the scalar
+//! oracle it replaced, with explicit `speedup_*` ratio rows in the TSV
+//! (derived rows carry the ratio in `median_ns` with mad 0, iters 0 —
+//! the same convention as `table2_speed_memory`).
+//!
+//! Three kernels from the Fourier hot path (butterflies, pointwise
+//! spectral product, f2sh back-projection) plus the cache-blocked
+//! column pass of the 2D FFT.  On f64 every SIMD path is bit-identical
+//! to its oracle (`tests/simd_conformance.rs`), so these ratios measure
+//! pure speed, never a numeric trade.
+//!
+//! `--smoke`: one tiny size per kernel, 1 ms budgets, no TSV.
+
+use gaunt_tp::fourier::{
+    f2sh_contract, f2sh_contract_scalar, C64, F2shPanelsT, FftPlan,
+    COL_BLOCK,
+};
+use gaunt_tp::num_coeffs;
+use gaunt_tp::util::bench::{bench, budget_ms, consume, smoke, BenchTable,
+                            Measurement};
+use gaunt_tp::util::rng::Rng;
+use gaunt_tp::util::simd::ACTIVE_IMPL;
+
+fn ratio_row(t: &mut BenchTable, name: String, before: f64, after: f64) {
+    t.add(Measurement {
+        name,
+        median_ns: before / after,
+        mad_ns: 0.0,
+        iters: 0,
+    });
+}
+
+fn main() {
+    let budget = budget_ms(200);
+    let mut rng = Rng::new(0);
+    println!("active SIMD implementation: {ACTIVE_IMPL}");
+
+    let mut t = BenchTable::new("simd kernels: vectorized vs scalar oracle");
+
+    // 1. 1D FFT butterflies ------------------------------------------------
+    let fft_sizes: &[usize] = if smoke() { &[64] } else { &[64, 256, 1024] };
+    for &n in fft_sizes {
+        let plan = FftPlan::shared(n);
+        let data: Vec<C64> = (0..n)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        let mut buf = data.clone();
+        let m_scalar = bench(&format!("fft_scalar n={n}"), budget, || {
+            buf.copy_from_slice(&data);
+            plan.process_scalar(&mut buf, false);
+            consume(&buf);
+        });
+        t.add(m_scalar.clone());
+        let m_simd = bench(&format!("fft_simd   n={n}"), budget, || {
+            buf.copy_from_slice(&data);
+            plan.process(&mut buf, false);
+            consume(&buf);
+        });
+        t.add(m_simd.clone());
+        ratio_row(
+            &mut t,
+            format!("speedup_fft n={n}"),
+            m_scalar.median_ns,
+            m_simd.median_ns,
+        );
+    }
+
+    // 2. pointwise spectral product ---------------------------------------
+    // the ConvPlan inner loop in isolation: scalar C64 multiply vs the
+    // lane complex_mul over the same interleaved buffers
+    let pw_sizes: &[usize] = if smoke() { &[256] } else { &[256, 4096, 65536] };
+    for &len in pw_sizes {
+        let a0: Vec<C64> = (0..len)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        let b: Vec<C64> = (0..len)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        let mut a = a0.clone();
+        let m_scalar = bench(&format!("pointwise_scalar len={len}"), budget, || {
+            a.copy_from_slice(&a0);
+            for (x, y) in a.iter_mut().zip(&b) {
+                *x = *x * *y;
+            }
+            consume(&a);
+        });
+        t.add(m_scalar.clone());
+        let m_simd = bench(&format!("pointwise_simd   len={len}"), budget, || {
+            use gaunt_tp::fourier::{as_floats, as_floats_mut};
+            use gaunt_tp::util::simd::{F64x4, SimdLanes};
+            a.copy_from_slice(&a0);
+            let af = as_floats_mut(&mut a);
+            let bf = as_floats(&b);
+            let mut p = 0;
+            while p + 4 <= af.len() {
+                let av = F64x4::load(&af[p..]);
+                let bv = F64x4::load(&bf[p..]);
+                av.complex_mul(bv).store(&mut af[p..]);
+                p += 4;
+            }
+            consume(&a);
+        });
+        t.add(m_simd.clone());
+        ratio_row(
+            &mut t,
+            format!("speedup_pointwise len={len}"),
+            m_scalar.median_ns,
+            m_simd.median_ns,
+        );
+    }
+
+    // 3. f2sh back-projection ---------------------------------------------
+    let f2sh_cases: &[(usize, usize)] =
+        if smoke() { &[(2, 4)] } else { &[(2, 4), (4, 8), (6, 12), (8, 16)] };
+    for &(l_out, n_grid) in f2sh_cases {
+        let nu = 2 * n_grid + 1;
+        let grid: Vec<C64> = (0..nu * nu)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        let t3t = F2shPanelsT::build(l_out, n_grid);
+        let mut out = vec![0.0; num_coeffs(l_out)];
+        let m_scalar =
+            bench(&format!("f2sh_scalar L={l_out} N={n_grid}"), budget, || {
+                f2sh_contract_scalar(&t3t, &grid, &mut out);
+                consume(&out);
+            });
+        t.add(m_scalar.clone());
+        let m_simd =
+            bench(&format!("f2sh_simd   L={l_out} N={n_grid}"), budget, || {
+                f2sh_contract(&t3t, &grid, &mut out);
+                consume(&out);
+            });
+        t.add(m_simd.clone());
+        ratio_row(
+            &mut t,
+            format!("speedup_f2sh L={l_out}"),
+            m_scalar.median_ns,
+            m_simd.median_ns,
+        );
+    }
+
+    // 4. cache-blocked 2D FFT column pass ---------------------------------
+    // same fft2_inplace entry, scratch sized for block=1 (the old
+    // column-at-a-time behavior) vs block=COL_BLOCK
+    let fft2_sizes: &[usize] = if smoke() { &[16] } else { &[16, 64, 256] };
+    for &n in fft2_sizes {
+        let plan = FftPlan::shared(n);
+        let grid0: Vec<C64> = (0..n * n)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        let mut grid = grid0.clone();
+        let mut col1 = vec![C64::default(); n];
+        let mut colb = vec![C64::default(); n * COL_BLOCK];
+        let m_one = bench(&format!("fft2_colx1 n={n}"), budget, || {
+            grid.copy_from_slice(&grid0);
+            plan.fft2_inplace(&mut grid, false, &mut col1);
+            consume(&grid);
+        });
+        t.add(m_one.clone());
+        let m_blk = bench(&format!("fft2_colx{COL_BLOCK} n={n}"), budget, || {
+            grid.copy_from_slice(&grid0);
+            plan.fft2_inplace(&mut grid, false, &mut colb);
+            consume(&grid);
+        });
+        t.add(m_blk.clone());
+        ratio_row(
+            &mut t,
+            format!("speedup_colblock n={n}"),
+            m_one.median_ns,
+            m_blk.median_ns,
+        );
+    }
+
+    if !smoke() {
+        t.write_tsv("simd_kernels");
+    } else {
+        println!("[smoke] simd_kernels OK ({} rows)", t.rows.len());
+    }
+}

@@ -20,7 +20,7 @@ use gaunt_tp::runtime::Engine;
 use gaunt_tp::tp::engine::PlanCache;
 use gaunt_tp::tp::op::{apply_batch_par, BatchInputs};
 use gaunt_tp::tp::many_body::MaceStylePlan;
-use gaunt_tp::tp::{ConvMethod, GauntPlan};
+use gaunt_tp::tp::{ConvMethod, Gaunt32Plan, GauntPlan};
 use gaunt_tp::fourier::tables::{f2sh_panels, sh2f_panels};
 use gaunt_tp::util::bench::{budget_ms, consume, smoke, BenchTable,
                             Measurement};
@@ -71,7 +71,7 @@ fn main() {
         "table2: Gaunt conv backends per L (planned vs legacy vs direct)",
     );
     let ls: &[usize] = if smoke() { &[2] } else { &[2, 3, 4, 5, 6, 8] };
-    let mut trio: Vec<(usize, f64, f64, f64)> = Vec::new();
+    let mut trio: Vec<(usize, f64, f64, f64, f64)> = Vec::new();
     for &l in ls {
         let n = num_coeffs(l);
         let x1 = rng.normals(n);
@@ -121,23 +121,41 @@ fn main() {
             fp.add(m.clone());
             m
         };
+        // the serving-precision row: same FFT pipeline, f32 interior
+        let p32 = Gaunt32Plan::new(l, l, l, ConvMethod::Fft);
+        let mut s32 = p32.scratch();
+        let m_f32 = {
+            let m = gaunt_tp::util::bench::bench(
+                &format!("gaunt_fft_f32     L={l}"),
+                budget,
+                || {
+                    p32.apply_into(&x1, &x2, &mut out, &mut s32);
+                    consume(&out);
+                },
+            );
+            fp.add(m.clone());
+            m
+        };
         trio.push((
             l,
             m_planned.median_ns,
             m_legacy.median_ns,
             m_direct.median_ns,
+            m_f32.median_ns,
         ));
     }
     // ratio rows (median_ns carries the ratio; mad 0, iters 0 marks them
     // as derived) + measured crossover
     println!("\n-- planned-FFT speedups (ratio > 1 means planned wins) --");
     let mut crossover: Option<usize> = None;
-    for &(l, p, leg, d) in &trio {
+    for &(l, p, leg, d, f32ns) in &trio {
         let vs_legacy = leg / p;
         let vs_direct = d / p;
+        let vs_f32 = p / f32ns;
         println!(
             "L={l}: legacy/planned = {vs_legacy:.2}x   \
-             direct/planned = {vs_direct:.2}x"
+             direct/planned = {vs_direct:.2}x   \
+             f64/f32 = {vs_f32:.2}x"
         );
         fp.add(Measurement {
             name: format!("speedup_legacy_over_planned L={l}"),
@@ -148,6 +166,12 @@ fn main() {
         fp.add(Measurement {
             name: format!("speedup_direct_over_planned L={l}"),
             median_ns: vs_direct,
+            mad_ns: 0.0,
+            iters: 0,
+        });
+        fp.add(Measurement {
+            name: format!("speedup_f64_over_f32 L={l}"),
+            median_ns: vs_f32,
             mad_ns: 0.0,
             iters: 0,
         });

@@ -32,7 +32,7 @@ use crate::model::{batch_row_len, energy_forces_batch_par, GraphRef, Model};
 use crate::num_coeffs;
 use crate::runtime::{Engine, Tensor};
 use crate::so3::sh::real_sh_all_xyz;
-use crate::tp::engine::{CacheStats, OpKey, PlanCache};
+use crate::tp::engine::{CacheStats, OpKey, PlanCache, Precision};
 use crate::tp::op::{apply_batch_par, BatchInputs};
 use crate::tp::ConvMethod;
 use crate::util::error::Result;
@@ -56,6 +56,12 @@ pub struct ServerConfig {
     /// backend spec (single fixed bucket for compiled artifacts,
     /// width-halving ladder for the native backend)
     pub buckets: Option<Vec<BucketConfig>>,
+    /// serving arithmetic precision for the native Gaunt pipeline:
+    /// `F64` (default, bit-identical to training) or `F32` (single
+    /// precision interior; tolerances documented in DESIGN.md §11).
+    /// Compiled-artifact backends bake their own precision and ignore
+    /// this.
+    pub precision: Precision,
 }
 
 impl Default for ServerConfig {
@@ -67,6 +73,7 @@ impl Default for ServerConfig {
             variant_prefix: "ff_fwd_B".to_string(),
             state_blob: "ff_state_init".to_string(),
             buckets: None,
+            precision: Precision::F64,
         }
     }
 }
@@ -138,12 +145,16 @@ pub struct NativeGauntBackend {
     /// surrogate.  `Service::builder()` moves this into the registry's
     /// default endpoint so it becomes hot-swappable.
     pub model: Option<Arc<Model>>,
+    /// arithmetic precision of the surrogate's Gaunt self-product
+    /// (train f64, optionally serve f32); learned-model inference is
+    /// f64 regardless.
+    pub precision: Precision,
 }
 
 impl Default for NativeGauntBackend {
     fn default() -> Self {
         NativeGauntBackend { l: 2, threads: 0, species_scale: 0.1,
-                             model: None }
+                             model: None, precision: Precision::F64 }
     }
 }
 
@@ -154,7 +165,8 @@ impl NativeGauntBackend {
     }
 
     /// The surrogate's op key: the batched Gaunt self-product every
-    /// flushed batch runs.
+    /// flushed batch runs, lowered to the configured serving precision
+    /// (`F32` re-keys to [`OpKey::GauntF32`]).
     fn surrogate_key(&self) -> OpKey {
         OpKey::Gaunt {
             l1: self.l,
@@ -162,6 +174,7 @@ impl NativeGauntBackend {
             l3: self.l,
             method: ConvMethod::Auto,
         }
+        .with_precision(self.precision)
     }
 
     /// Pre-build every plan this backend will touch — the native analog
@@ -384,6 +397,9 @@ pub struct BackendSpec {
     /// spec is served from ONE bucket of exactly (n_atoms, n_edges);
     /// native backends accept any bucket ladder
     pub fixed_shape: bool,
+    /// arithmetic precision this spec serves at (surfaced in metrics /
+    /// introspection; compiled artifacts report `F64`)
+    pub precision: Precision,
 }
 
 impl BackendSpec {
@@ -428,6 +444,7 @@ impl BackendSpec {
             n_atoms,
             n_edges,
             fixed_shape: true,
+            precision: Precision::F64,
         })
     }
 
@@ -437,7 +454,7 @@ impl BackendSpec {
     /// attached (a mismatch would silently drop — or add zero-weight —
     /// edges, so `ServerConfig::default()` stays always-correct).
     pub fn native(
-        backend: NativeGauntBackend, cfg: &mut ServerConfig,
+        mut backend: NativeGauntBackend, cfg: &mut ServerConfig,
     ) -> BackendSpec {
         let variants = vec![
             Variant { name: "native_B1".to_string(), batch: 1 },
@@ -447,6 +464,11 @@ impl BackendSpec {
         if let Some(m) = &backend.model {
             cfg.r_cut = m.cfg.r_cut;
         }
+        // the config's serving precision wins over whatever the backend
+        // was constructed with, so `ServiceBuilder::precision` is the
+        // one knob
+        backend.precision = cfg.precision;
+        let precision = backend.precision;
         // cold-start off the request path, like the XLA variants' eager
         // compile: build the plans (tables + FFT workspaces) before the
         // first batch is flushed
@@ -460,6 +482,7 @@ impl BackendSpec {
             n_atoms: 32,
             n_edges: 256,
             fixed_shape: false,
+            precision,
         }
     }
 }

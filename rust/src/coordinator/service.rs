@@ -262,6 +262,14 @@ impl ServiceBuilder {
         self
     }
 
+    /// Serving arithmetic precision for the native Gaunt pipeline:
+    /// train f64, optionally serve `Precision::F32` (the op-conformance
+    /// suite pins the f32 tolerance tier; see DESIGN.md §11).
+    pub fn precision(mut self, p: crate::tp::engine::Precision) -> Self {
+        self.cfg.precision = p;
+        self
+    }
+
     /// Explicit shape-bucket ladder (replaces the defaults).
     pub fn buckets(mut self, buckets: Vec<BucketConfig>) -> Self {
         self.buckets = Some(buckets);

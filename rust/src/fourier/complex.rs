@@ -3,10 +3,34 @@
 use std::ops::{Add, AddAssign, Mul, Neg, Sub};
 
 /// Complex number with f64 parts.
+///
+/// `repr(C)` is load-bearing: the SIMD kernels view `&[C64]` as the
+/// interleaved float slice `[re0, im0, re1, im1, ...]` via
+/// [`as_floats`] / [`as_floats_mut`], which needs the field order and
+/// packing guaranteed.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C)]
 pub struct C64 {
     pub re: f64,
     pub im: f64,
+}
+
+/// View a complex slice as its interleaved `[re, im, re, im, ...]`
+/// floats (twice the length).
+#[inline(always)]
+pub fn as_floats(z: &[C64]) -> &[f64] {
+    // SAFETY: C64 is repr(C) { re: f64, im: f64 } — size 16, align 8,
+    // no padding — so N complex values are exactly 2N contiguous f64s.
+    unsafe { std::slice::from_raw_parts(z.as_ptr() as *const f64, z.len() * 2) }
+}
+
+/// Mutable interleaved-float view of a complex slice.
+#[inline(always)]
+pub fn as_floats_mut(z: &mut [C64]) -> &mut [f64] {
+    // SAFETY: as for `as_floats`; the borrow rules carry over unchanged.
+    unsafe {
+        std::slice::from_raw_parts_mut(z.as_mut_ptr() as *mut f64, z.len() * 2)
+    }
 }
 
 pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
@@ -121,5 +145,15 @@ mod tests {
         let a = C64::new(3.0, 4.0);
         let n = a * a.conj();
         assert!((n.re - 25.0).abs() < 1e-12 && n.im.abs() < 1e-12);
+    }
+
+    #[test]
+    fn float_view_is_interleaved_re_im() {
+        let mut z = vec![C64::new(1.0, 2.0), C64::new(3.0, 4.0)];
+        assert_eq!(as_floats(&z), &[1.0, 2.0, 3.0, 4.0]);
+        as_floats_mut(&mut z)[3] = -4.0;
+        assert_eq!(z[1], C64::new(3.0, -4.0));
+        assert_eq!(std::mem::size_of::<C64>(), 16);
+        assert_eq!(std::mem::align_of::<C64>(), 8);
     }
 }

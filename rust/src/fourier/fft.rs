@@ -12,7 +12,15 @@
 use std::collections::HashMap;
 use std::sync::{Arc, OnceLock, RwLock};
 
-use super::complex::C64;
+use super::complex::{as_floats_mut, C64};
+use crate::util::simd::{F64x4, SimdLanes};
+
+/// Preferred number of columns per transpose-blocked column pass.
+/// Scratch sized `n * COL_BLOCK` lets [`FftPlan::fft2_inplace`] /
+/// [`FftPlan::fwd2_real_into`] transform columns in cache-friendly
+/// contiguous tiles instead of one strided gather per column; any
+/// scratch length >= `n` still works (block count degrades gracefully).
+pub const COL_BLOCK: usize = 8;
 
 /// Precomputed radix-2 FFT tables for one power-of-two size.
 ///
@@ -87,7 +95,75 @@ impl FftPlan {
 
     /// In-place unscaled DFT (forward) or conjugate DFT (inverse) of
     /// `buf` (`buf.len()` must equal the plan size).  Allocation-free.
+    ///
+    /// The butterflies run two complex values per `F64x4` lane vector
+    /// (the k-loop batched across lanes).  Because the lane formula is
+    /// the same mul/sub/add sequence as `C64::mul` with no FMA, the
+    /// result is BIT-IDENTICAL to [`process_scalar`] — the conformance
+    /// tests assert exact equality, so goldens are unaffected.
     pub fn process(&self, buf: &mut [C64], inverse: bool) {
+        let n = self.n;
+        debug_assert_eq!(buf.len(), n, "FftPlan::process: wrong buffer size");
+        if n <= 1 {
+            return;
+        }
+        for i in 1..n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                buf.swap(i, j);
+            }
+        }
+        // len == 2 stage: w = 1, plain add/sub — nothing to vectorize.
+        let mut i = 0;
+        while i < n {
+            let u = buf[i];
+            let v = buf[i + 1];
+            buf[i] = u + v;
+            buf[i + 1] = u - v;
+            i += 2;
+        }
+        if n < 4 {
+            return;
+        }
+        // len >= 4 stages: half >= 2, so each lane vector holds the
+        // twiddles (w_k, w_{k+1}) as interleaved [re, im, re, im] and
+        // multiplies two adjacent butterflies at once.  half is a power
+        // of two — the k-loop has no scalar tail.
+        let bf = as_floats_mut(buf);
+        let mut len = 4;
+        while len <= n {
+            let stride = n / len;
+            let half = len / 2;
+            let mut i = 0;
+            while i < n {
+                let mut k = 0;
+                while k < half {
+                    let w0 = self.tw[k * stride];
+                    let w1 = self.tw[(k + 1) * stride];
+                    let (im0, im1) = if inverse {
+                        (-w0.im, -w1.im)
+                    } else {
+                        (w0.im, w1.im)
+                    };
+                    let wv = F64x4::load(&[w0.re, im0, w1.re, im1]);
+                    let pa = 2 * (i + k);
+                    let pb = 2 * (i + k + half);
+                    let a = F64x4::load(&bf[pa..]);
+                    let b = F64x4::load(&bf[pb..]);
+                    let t = wv.complex_mul(b);
+                    (a + t).store(&mut bf[pa..]);
+                    (a - t).store(&mut bf[pb..]);
+                    k += 2;
+                }
+                i += len;
+            }
+            len <<= 1;
+        }
+    }
+
+    /// The pre-SIMD butterfly loop, kept verbatim as the conformance
+    /// oracle and the "before" side of the SIMD benches.
+    pub fn process_scalar(&self, buf: &mut [C64], inverse: bool) {
         let n = self.n;
         debug_assert_eq!(buf.len(), n, "FftPlan::process: wrong buffer size");
         if n <= 1 {
@@ -132,29 +208,51 @@ impl FftPlan {
         self.process(buf, true);
     }
 
+    /// Transpose-blocked column transforms: gather a block of up to
+    /// `col_buf.len() / n` columns into contiguous length-`n` tiles of
+    /// `col_buf` (reading each grid row once, sequentially, instead of
+    /// one strided walk per column), transform the tiles in place, and
+    /// scatter back.  Any `col_buf.len() >= n` works; a length-`n`
+    /// scratch degenerates to the old one-column-at-a-time behavior.
+    fn col_pass(&self, grid: &mut [C64], inverse: bool, col_buf: &mut [C64]) {
+        let n = self.n;
+        debug_assert!(col_buf.len() >= n, "col scratch shorter than n");
+        let block = (col_buf.len() / n).clamp(1, n);
+        let mut c0 = 0;
+        while c0 < n {
+            let b = block.min(n - c0);
+            for r in 0..n {
+                for t in 0..b {
+                    col_buf[t * n + r] = grid[r * n + c0 + t];
+                }
+            }
+            for t in 0..b {
+                self.process(&mut col_buf[t * n..(t + 1) * n], inverse);
+            }
+            for r in 0..n {
+                for t in 0..b {
+                    grid[r * n + c0 + t] = col_buf[t * n + r];
+                }
+            }
+            c0 += b;
+        }
+    }
+
     /// In-place 2D transform of a square row-major `n x n` grid using this
     /// plan for both axes.  UNSCALED in both directions (unlike the
     /// allocating [`fft2`], which folds 1/(rows*cols) into the inverse) —
     /// callers fold the scale into extraction.  `col_buf` is caller
-    /// scratch of length `n`; the call is allocation-free.
+    /// scratch of length >= `n` (ideally `n * COL_BLOCK`, enabling the
+    /// transpose-blocked column pass); the call is allocation-free.
     pub fn fft2_inplace(
         &self, grid: &mut [C64], inverse: bool, col_buf: &mut [C64],
     ) {
         let n = self.n;
         debug_assert_eq!(grid.len(), n * n);
-        debug_assert_eq!(col_buf.len(), n);
         for r in 0..n {
             self.process(&mut grid[r * n..(r + 1) * n], inverse);
         }
-        for c in 0..n {
-            for r in 0..n {
-                col_buf[r] = grid[r * n + c];
-            }
-            self.process(col_buf, inverse);
-            for r in 0..n {
-                grid[r * n + c] = col_buf[r];
-            }
-        }
+        self.col_pass(grid, inverse, col_buf);
     }
 
     /// Unscaled forward 2D DFT of a REAL square `n x n` grid into the
@@ -162,14 +260,15 @@ impl FftPlan {
     /// two-for-one (rows 2a and 2a+1 packed as the real/imaginary parts of
     /// one complex row, separated afterwards by Hermitian symmetry), which
     /// halves the row-transform work.  `col_buf` is caller scratch of
-    /// length `n`; the call is allocation-free.
+    /// length >= `n` (ideally `n * COL_BLOCK` for the blocked column
+    /// pass); the call is allocation-free.
     pub fn fwd2_real_into(
         &self, q: &[f64], out: &mut [C64], col_buf: &mut [C64],
     ) {
         let n = self.n;
         debug_assert_eq!(q.len(), n * n);
         debug_assert_eq!(out.len(), n * n);
-        debug_assert_eq!(col_buf.len(), n);
+        debug_assert!(col_buf.len() >= n);
         if n == 1 {
             out[0] = C64::real(q[0]);
             return;
@@ -180,14 +279,15 @@ impl FftPlan {
         for a in 0..n / 2 {
             let r0 = 2 * a;
             let r1 = 2 * a + 1;
+            let row_buf = &mut col_buf[..n];
             for t in 0..n {
-                col_buf[t] = C64::new(q[r0 * n + t], q[r1 * n + t]);
+                row_buf[t] = C64::new(q[r0 * n + t], q[r1 * n + t]);
             }
-            self.process(col_buf, false);
+            self.process(row_buf, false);
             for t in 0..n {
                 let tm = if t == 0 { 0 } else { n - t };
-                let y = col_buf[t];
-                let ym = col_buf[tm].conj();
+                let y = row_buf[t];
+                let ym = row_buf[tm].conj();
                 let s = y + ym;
                 let d = y - ym;
                 out[r0 * n + t] = s.scale(0.5);
@@ -196,15 +296,7 @@ impl FftPlan {
             }
         }
         // column transforms on the now-complex rows
-        for c in 0..n {
-            for r in 0..n {
-                col_buf[r] = out[r * n + c];
-            }
-            self.process(col_buf, false);
-            for r in 0..n {
-                out[r * n + c] = col_buf[r];
-            }
-        }
+        self.col_pass(out, false, col_buf);
     }
 }
 
@@ -498,6 +590,62 @@ mod tests {
             for (i, (a, b)) in got.iter().zip(&want).enumerate() {
                 assert!((*a - *b).abs() < 1e-9, "n={n} idx={i}");
             }
+        }
+    }
+
+    #[test]
+    fn simd_butterflies_bit_match_scalar_oracle() {
+        // not "close": IDENTICAL.  The lane formula performs the same
+        // IEEE operations in the same order as the scalar butterflies,
+        // so goldens produced before the SIMD path must be unchanged.
+        let mut rng = Rng::new(12);
+        for n in [1usize, 2, 4, 8, 32, 256, 1024] {
+            let plan = FftPlan::new(n);
+            for inverse in [false, true] {
+                let x = rand_vec(&mut rng, n);
+                let mut got = x.clone();
+                let mut want = x.clone();
+                plan.process(&mut got, inverse);
+                plan.process_scalar(&mut want, inverse);
+                for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        g.re.to_bits() == w.re.to_bits()
+                            && g.im.to_bits() == w.im.to_bits(),
+                        "n={n} inverse={inverse} idx={k}: {g:?} vs {w:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_col_pass_matches_single_column_scratch() {
+        let mut rng = Rng::new(13);
+        for n in [2usize, 4, 8, 16] {
+            let plan = FftPlan::new(n);
+            let g = rand_vec(&mut rng, n * n);
+            for inverse in [false, true] {
+                let mut want = g.clone();
+                let mut col1 = vec![C64::default(); n];
+                plan.fft2_inplace(&mut want, inverse, &mut col1);
+                // oversized scratch in assorted multiples (and one
+                // non-multiple) of n must give bit-identical grids
+                for extra in [n, 3 * n, COL_BLOCK * n, n + 1] {
+                    let mut got = g.clone();
+                    let mut col = vec![C64::default(); extra];
+                    plan.fft2_inplace(&mut got, inverse, &mut col);
+                    assert_eq!(got, want, "n={n} scratch={extra}");
+                }
+            }
+            // real-input forward path too
+            let q: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+            let mut want = vec![C64::default(); n * n];
+            let mut col1 = vec![C64::default(); n];
+            plan.fwd2_real_into(&q, &mut want, &mut col1);
+            let mut got = vec![C64::default(); n * n];
+            let mut col = vec![C64::default(); COL_BLOCK * n];
+            plan.fwd2_real_into(&q, &mut got, &mut col);
+            assert_eq!(got, want, "fwd2_real n={n}");
         }
     }
 

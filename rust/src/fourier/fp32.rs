@@ -1,0 +1,593 @@
+//! f32 mirror of the Fourier hot path for the opt-in serving-precision
+//! mode (train f64, serve f32).
+//!
+//! This is a dedicated single-precision pipeline, NOT a genericization:
+//! [`C32`], [`Fft32Plan`], [`Conv32Plan`] and the direct convolution
+//! transliterate their f64 counterparts with f32 interiors.  All TABLES
+//! (twiddles, and the Gaunt panels in `tp::gaunt32`) are built in f64
+//! and rounded once, so the only f32 error is per-operation rounding in
+//! the apply path — the op-conformance suite pins the resulting
+//! tolerance tier (~1e-4 relative against the f64 plans at bench sizes).
+//!
+//! The butterflies and pointwise products ride the same
+//! [`crate::util::simd`] lane types as the f64 path, at twice the lane
+//! width ([`F32x8`]): serving in f32 halves both memory traffic and the
+//! SIMD op count per value, which is the whole point of the mode.
+
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use super::plan::wrap_map;
+use crate::util::simd::{F32x8, SimdLanes};
+
+/// Complex number with f32 parts (`repr(C)` for the interleaved float
+/// view, exactly like [`super::complex::C64`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C)]
+pub struct C32 {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl C32 {
+    #[inline]
+    pub fn new(re: f32, im: f32) -> Self {
+        C32 { re, im }
+    }
+
+    #[inline]
+    pub fn real(re: f32) -> Self {
+        C32 { re, im: 0.0 }
+    }
+
+    /// Round an f64 complex value once.
+    #[inline]
+    pub fn from_c64(z: super::complex::C64) -> Self {
+        C32 { re: z.re as f32, im: z.im as f32 }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        C32 { re: self.re, im: -self.im }
+    }
+
+    #[inline]
+    pub fn norm_sqr(self) -> f32 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn scale(self, k: f32) -> Self {
+        C32 { re: self.re * k, im: self.im * k }
+    }
+}
+
+impl std::ops::Add for C32 {
+    type Output = C32;
+    #[inline]
+    fn add(self, o: C32) -> C32 {
+        C32 { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl std::ops::AddAssign for C32 {
+    #[inline]
+    fn add_assign(&mut self, o: C32) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl std::ops::Sub for C32 {
+    type Output = C32;
+    #[inline]
+    fn sub(self, o: C32) -> C32 {
+        C32 { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl std::ops::Mul for C32 {
+    type Output = C32;
+    #[inline]
+    fn mul(self, o: C32) -> C32 {
+        C32 {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+/// Interleaved `[re, im, ...]` view of a complex f32 slice.
+#[inline(always)]
+pub fn as_floats32(z: &[C32]) -> &[f32] {
+    // SAFETY: C32 is repr(C) { re: f32, im: f32 } — size 8, align 4, no
+    // padding.
+    unsafe { std::slice::from_raw_parts(z.as_ptr() as *const f32, z.len() * 2) }
+}
+
+/// Mutable interleaved-float view of a complex f32 slice.
+#[inline(always)]
+pub fn as_floats32_mut(z: &mut [C32]) -> &mut [f32] {
+    // SAFETY: as for `as_floats32`.
+    unsafe {
+        std::slice::from_raw_parts_mut(z.as_mut_ptr() as *mut f32, z.len() * 2)
+    }
+}
+
+/// f32 radix-2 FFT plan: bit-reversal + twiddle tables for one
+/// power-of-two size.  Twiddles are f64 `cis` evaluations rounded once.
+pub struct Fft32Plan {
+    n: usize,
+    bitrev: Vec<u32>,
+    tw: Vec<C32>,
+}
+
+impl Fft32Plan {
+    pub fn new(n: usize) -> Fft32Plan {
+        assert!(n.is_power_of_two(), "Fft32Plan: n={n} is not a power of two");
+        let mut bitrev = vec![0u32; n];
+        let mut j = 0usize;
+        for i in 1..n {
+            let mut bit = n >> 1;
+            while j & bit != 0 {
+                j ^= bit;
+                bit >>= 1;
+            }
+            j |= bit;
+            bitrev[i] = j as u32;
+        }
+        let tw: Vec<C32> = (0..n / 2)
+            .map(|k| {
+                C32::from_c64(super::complex::C64::cis(
+                    -2.0 * std::f64::consts::PI * k as f64 / n as f64,
+                ))
+            })
+            .collect();
+        Fft32Plan { n, bitrev, tw }
+    }
+
+    #[allow(clippy::len_without_is_empty)]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Process-wide shared plan for size `n` (separate cache from the
+    /// f64 plans).
+    pub fn shared(n: usize) -> Arc<Fft32Plan> {
+        assert!(
+            n.is_power_of_two(),
+            "Fft32Plan::shared: n={n} is not a power of two"
+        );
+        static CACHE: OnceLock<RwLock<HashMap<usize, Arc<Fft32Plan>>>> =
+            OnceLock::new();
+        let cache = CACHE.get_or_init(|| RwLock::new(HashMap::new()));
+        if let Some(p) = cache.read().unwrap().get(&n) {
+            return p.clone();
+        }
+        let p = Arc::new(Fft32Plan::new(n));
+        let mut w = cache.write().unwrap();
+        w.entry(n).or_insert(p).clone()
+    }
+
+    /// In-place unscaled DFT (forward) or conjugate DFT (inverse);
+    /// allocation-free.  Stages with `half >= 4` run four butterflies
+    /// per [`F32x8`] lane vector; shorter stages stay scalar.
+    pub fn process(&self, buf: &mut [C32], inverse: bool) {
+        let n = self.n;
+        debug_assert_eq!(buf.len(), n, "Fft32Plan::process: wrong buffer size");
+        if n <= 1 {
+            return;
+        }
+        for i in 1..n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                buf.swap(i, j);
+            }
+        }
+        let mut len = 2;
+        while len <= n {
+            let stride = n / len;
+            let half = len / 2;
+            if half < 4 {
+                let mut i = 0;
+                while i < n {
+                    for k in 0..half {
+                        let w = if inverse {
+                            self.tw[k * stride].conj()
+                        } else {
+                            self.tw[k * stride]
+                        };
+                        let u = buf[i + k];
+                        let v = buf[i + k + half] * w;
+                        buf[i + k] = u + v;
+                        buf[i + k + half] = u - v;
+                    }
+                    i += len;
+                }
+            } else {
+                let bf = as_floats32_mut(buf);
+                let mut i = 0;
+                while i < n {
+                    let mut k = 0;
+                    while k < half {
+                        let mut wlanes = [0.0f32; 8];
+                        for (t, pair) in wlanes.chunks_exact_mut(2).enumerate()
+                        {
+                            let w = self.tw[(k + t) * stride];
+                            pair[0] = w.re;
+                            pair[1] = if inverse { -w.im } else { w.im };
+                        }
+                        let wv = F32x8::load(&wlanes);
+                        let pa = 2 * (i + k);
+                        let pb = 2 * (i + k + half);
+                        let a = F32x8::load(&bf[pa..]);
+                        let b = F32x8::load(&bf[pb..]);
+                        let t = wv.complex_mul(b);
+                        (a + t).store(&mut bf[pa..]);
+                        (a - t).store(&mut bf[pb..]);
+                        k += 4;
+                    }
+                    i += len;
+                }
+            }
+            len <<= 1;
+        }
+    }
+
+    /// Transpose-blocked column transforms (mirror of the f64
+    /// `FftPlan::col_pass`); any `col_buf.len() >= n` works.
+    fn col_pass(&self, grid: &mut [C32], inverse: bool, col_buf: &mut [C32]) {
+        let n = self.n;
+        debug_assert!(col_buf.len() >= n);
+        let block = (col_buf.len() / n).clamp(1, n);
+        let mut c0 = 0;
+        while c0 < n {
+            let b = block.min(n - c0);
+            for r in 0..n {
+                for t in 0..b {
+                    col_buf[t * n + r] = grid[r * n + c0 + t];
+                }
+            }
+            for t in 0..b {
+                self.process(&mut col_buf[t * n..(t + 1) * n], inverse);
+            }
+            for r in 0..n {
+                for t in 0..b {
+                    grid[r * n + c0 + t] = col_buf[t * n + r];
+                }
+            }
+            c0 += b;
+        }
+    }
+
+    /// In-place unscaled 2D transform of a square `n x n` grid.
+    pub fn fft2_inplace(
+        &self, grid: &mut [C32], inverse: bool, col_buf: &mut [C32],
+    ) {
+        let n = self.n;
+        debug_assert_eq!(grid.len(), n * n);
+        for r in 0..n {
+            self.process(&mut grid[r * n..(r + 1) * n], inverse);
+        }
+        self.col_pass(grid, inverse, col_buf);
+    }
+
+    /// Unscaled forward 2D DFT of a REAL square grid with two-for-one
+    /// packed rows (mirror of `FftPlan::fwd2_real_into`).
+    pub fn fwd2_real_into(
+        &self, q: &[f32], out: &mut [C32], col_buf: &mut [C32],
+    ) {
+        let n = self.n;
+        debug_assert_eq!(q.len(), n * n);
+        debug_assert_eq!(out.len(), n * n);
+        debug_assert!(col_buf.len() >= n);
+        if n == 1 {
+            out[0] = C32::real(q[0]);
+            return;
+        }
+        for a in 0..n / 2 {
+            let r0 = 2 * a;
+            let r1 = 2 * a + 1;
+            let row_buf = &mut col_buf[..n];
+            for t in 0..n {
+                row_buf[t] = C32::new(q[r0 * n + t], q[r1 * n + t]);
+            }
+            self.process(row_buf, false);
+            for t in 0..n {
+                let tm = if t == 0 { 0 } else { n - t };
+                let y = row_buf[t];
+                let ym = row_buf[tm].conj();
+                let s = y + ym;
+                let d = y - ym;
+                out[r0 * n + t] = s.scale(0.5);
+                // (-i/2) * d
+                out[r1 * n + t] = C32::new(0.5 * d.im, -0.5 * d.re);
+            }
+        }
+        self.col_pass(out, false, col_buf);
+    }
+}
+
+/// Caller-owned scratch for [`Conv32Plan`] applies.
+pub struct Conv32Scratch {
+    pub z: Vec<C32>,
+    pub h: Vec<C32>,
+    pub q: Vec<f32>,
+    pub col: Vec<C32>,
+}
+
+impl Conv32Scratch {
+    fn new(m: usize) -> Conv32Scratch {
+        Conv32Scratch {
+            z: vec![C32::default(); m * m],
+            h: vec![C32::default(); m * m],
+            q: vec![0.0; m * m],
+            col: vec![C32::default(); m * super::fft::COL_BLOCK],
+        }
+    }
+
+    /// Zero-sized scratch for consumers that may never take an FFT path.
+    pub fn empty() -> Conv32Scratch {
+        Conv32Scratch {
+            z: Vec::new(),
+            h: Vec::new(),
+            q: Vec::new(),
+            col: Vec::new(),
+        }
+    }
+}
+
+/// f32 mirror of [`super::plan::ConvPlan`], restricted to the Hermitian
+/// fast path (the only one the Gaunt serving pipeline uses).
+pub struct Conv32Plan {
+    pub n1: usize,
+    pub n2: usize,
+    pub n_out: usize,
+    pub m: usize,
+    fft: Arc<Fft32Plan>,
+    wrap1: Vec<usize>,
+    wrap2: Vec<usize>,
+    wrap_out: Vec<usize>,
+}
+
+impl Conv32Plan {
+    pub fn new(n1: usize, n2: usize) -> Conv32Plan {
+        assert!(n1 >= 1 && n2 >= 1);
+        let n_out = n1 + n2 - 1;
+        let m = n_out.next_power_of_two();
+        Conv32Plan {
+            n1,
+            n2,
+            n_out,
+            m,
+            fft: Fft32Plan::shared(m),
+            wrap1: wrap_map(n1, m),
+            wrap2: wrap_map(n2, m),
+            wrap_out: wrap_map(n_out, m),
+        }
+    }
+
+    /// Fresh scratch sized for this plan.
+    pub fn scratch(&self) -> Conv32Scratch {
+        Conv32Scratch::new(self.m)
+    }
+
+    /// Hermitian fast path, mirroring `ConvPlan::conv_hermitian_into`:
+    /// one packed inverse FFT for both operands, a real x real SIMD
+    /// pointwise product, one real-input forward.  Allocation-free.
+    pub fn conv_hermitian_into(
+        &self, a: &[C32], b: &[C32], out: &mut [C32],
+        scratch: &mut Conv32Scratch,
+    ) {
+        let (n1, n2, n, m) = (self.n1, self.n2, self.n_out, self.m);
+        debug_assert_eq!(a.len(), n1 * n1);
+        debug_assert_eq!(b.len(), n2 * n2);
+        debug_assert_eq!(out.len(), n * n);
+        debug_assert!(n1 % 2 == 1 && n2 % 2 == 1,
+                      "hermitian path needs centered odd-size grids");
+        if m == 1 {
+            out[0] = a[0] * b[0];
+            return;
+        }
+        let z = &mut scratch.z;
+        z.fill(C32::default());
+        for i in 0..n1 {
+            let r = self.wrap1[i] * m;
+            for j in 0..n1 {
+                z[r + self.wrap1[j]] = a[i * n1 + j];
+            }
+        }
+        for i in 0..n2 {
+            let r = self.wrap2[i] * m;
+            for j in 0..n2 {
+                let g = b[i * n2 + j];
+                let cell = &mut z[r + self.wrap2[j]];
+                cell.re -= g.im;
+                cell.im += g.re;
+            }
+        }
+        self.fft.fft2_inplace(z, true, &mut scratch.col);
+        // q = Re z * Im z, eight floats (four complexes) per step;
+        // m >= 2 is a power of two so 2*m*m splits into whole vectors
+        {
+            let zf = as_floats32(z);
+            let q = &mut scratch.q;
+            let mut p = 0;
+            while p < q.len() {
+                let a = F32x8::load(&zf[2 * p..]);
+                let b = F32x8::load(&zf[2 * p + 8..]);
+                let (re, im) = F32x8::unzip(a, b);
+                (re * im).store(&mut q[p..]);
+                p += 8;
+            }
+        }
+        self.fft.fwd2_real_into(&scratch.q, &mut scratch.h, &mut scratch.col);
+        let s = 1.0 / (m * m) as f32;
+        for i in 0..n {
+            let r = self.wrap_out[i] * m;
+            for j in 0..n {
+                out[i * n + j] = scratch.h[r + self.wrap_out[j]].scale(s);
+            }
+        }
+    }
+}
+
+/// f32 direct full convolution into a caller buffer (mirror of
+/// [`super::conv::conv2d_direct_into`]).
+pub fn conv2d_direct32_into(
+    a: &[C32], n1: usize, b: &[C32], n2: usize, out: &mut [C32],
+) {
+    debug_assert_eq!(a.len(), n1 * n1);
+    debug_assert_eq!(b.len(), n2 * n2);
+    let n = n1 + n2 - 1;
+    debug_assert_eq!(out.len(), n * n);
+    out.fill(C32::default());
+    for i in 0..n1 {
+        for j in 0..n1 {
+            let av = a[i * n1 + j];
+            if av.norm_sqr() == 0.0 {
+                continue;
+            }
+            for k in 0..n2 {
+                let orow = &mut out[(i + k) * n..];
+                let brow = &b[k * n2..(k + 1) * n2];
+                for (l, bv) in brow.iter().enumerate() {
+                    orow[j + l] += av * *bv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fourier::complex::C64;
+    use crate::fourier::conv::conv2d_direct;
+    use crate::util::rng::Rng;
+
+    fn rand_hermitian64(rng: &mut Rng, n: usize) -> Vec<C64> {
+        let mut g: Vec<C64> =
+            (0..n * n).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+        let last = n - 1;
+        for i in 0..n {
+            for j in 0..n {
+                let (mi, mj) = (last - i, last - j);
+                if (i, j) < (mi, mj) {
+                    g[mi * n + mj] = g[i * n + j].conj();
+                } else if (i, j) == (mi, mj) {
+                    g[i * n + j] = C64::real(g[i * n + j].re);
+                }
+            }
+        }
+        g
+    }
+
+    fn cast32(g: &[C64]) -> Vec<C32> {
+        g.iter().map(|z| C32::from_c64(*z)).collect()
+    }
+
+    #[test]
+    fn fft32_matches_f64_plan_within_f32_tolerance() {
+        use crate::fourier::fft::FftPlan;
+        let mut rng = Rng::new(30);
+        for n in [1usize, 2, 4, 8, 16, 64] {
+            let x64: Vec<C64> =
+                (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+            let p64 = FftPlan::new(n);
+            let p32 = Fft32Plan::new(n);
+            for inverse in [false, true] {
+                let mut want = x64.clone();
+                p64.process(&mut want, inverse);
+                let mut got = cast32(&x64);
+                p32.process(&mut got, inverse);
+                // unscaled DFT values grow like n; tolerance scales with
+                // the transform length
+                let tol = 1e-5 * n as f32;
+                for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        (g.re - w.re as f32).abs() < tol
+                            && (g.im - w.im as f32).abs() < tol,
+                        "n={n} inverse={inverse} idx={k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fft32_round_trip() {
+        let mut rng = Rng::new(31);
+        let n = 32usize;
+        let plan = Fft32Plan::new(n);
+        let x: Vec<C32> = (0..n)
+            .map(|_| C32::new(rng.normal() as f32, rng.normal() as f32))
+            .collect();
+        let mut y = x.clone();
+        plan.process(&mut y, false);
+        plan.process(&mut y, true);
+        let s = 1.0 / n as f32;
+        for (a, b) in x.iter().zip(&y) {
+            let r = b.scale(s);
+            assert!((a.re - r.re).abs() < 1e-4 && (a.im - r.im).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn conv32_hermitian_matches_f64_direct() {
+        let mut rng = Rng::new(32);
+        for (n1, n2) in [(1usize, 1usize), (3, 3), (3, 7), (5, 5), (7, 9)] {
+            let a64 = rand_hermitian64(&mut rng, n1);
+            let b64 = rand_hermitian64(&mut rng, n2);
+            let want = conv2d_direct(&a64, n1, &b64, n2);
+            let plan = Conv32Plan::new(n1, n2);
+            let mut scratch = plan.scratch();
+            let n = plan.n_out;
+            let mut out = vec![C32::default(); n * n];
+            plan.conv_hermitian_into(
+                &cast32(&a64), &cast32(&b64), &mut out, &mut scratch,
+            );
+            let scale: f32 = want
+                .iter()
+                .map(|z| z.abs() as f32)
+                .fold(1.0f32, f32::max);
+            for (k, (g, w)) in out.iter().zip(&want).enumerate() {
+                assert!(
+                    (g.re - w.re as f32).abs() < 2e-4 * scale
+                        && (g.im - w.im as f32).abs() < 2e-4 * scale,
+                    "n1={n1} n2={n2} idx={k}: {g:?} vs {w:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn direct32_matches_f64_direct() {
+        let mut rng = Rng::new(33);
+        let (n1, n2) = (3usize, 5usize);
+        let a64: Vec<C64> = (0..n1 * n1)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        let b64: Vec<C64> = (0..n2 * n2)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        let want = conv2d_direct(&a64, n1, &b64, n2);
+        let n = n1 + n2 - 1;
+        let mut out = vec![C32::default(); n * n];
+        conv2d_direct32_into(&cast32(&a64), n1, &cast32(&b64), n2, &mut out);
+        for (g, w) in out.iter().zip(&want) {
+            assert!(
+                (g.re - w.re as f32).abs() < 1e-4
+                    && (g.im - w.im as f32).abs() < 1e-4
+            );
+        }
+    }
+
+    #[test]
+    fn shared32_is_memoized() {
+        let a = Fft32Plan::shared(16);
+        let b = Fft32Plan::shared(16);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.len(), 16);
+    }
+}

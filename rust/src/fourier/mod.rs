@@ -6,14 +6,16 @@
 pub mod complex;
 pub mod conv;
 pub mod fft;
+pub mod fp32;
 pub mod plan;
 pub mod tables;
 
-pub use complex::C64;
+pub use complex::{as_floats, as_floats_mut, C64};
 pub use conv::{conv2d_direct, conv2d_fft, conv2d_fft_planned};
-pub use fft::{fft, fft2, ifft, FftPlan};
+pub use fft::{fft, fft2, ifft, FftPlan, COL_BLOCK};
+pub use fp32::{Conv32Plan, Conv32Scratch, Fft32Plan, C32};
 pub use plan::{ConvPlan, ConvScratch};
 pub use tables::{
-    f2sh_contract, f2sh_panels, sh2f_panels, theta_fourier, theta_projection,
-    F2shPanelsT,
+    f2sh_contract, f2sh_contract_scalar, f2sh_panels, sh2f_panels,
+    theta_fourier, theta_projection, F2shPanelsT,
 };

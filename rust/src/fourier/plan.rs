@@ -37,8 +37,9 @@
 
 use std::sync::Arc;
 
-use super::complex::C64;
-use super::fft::FftPlan;
+use super::complex::{as_floats, as_floats_mut, C64};
+use super::fft::{FftPlan, COL_BLOCK};
+use crate::util::simd::{F64x4, SimdLanes};
 
 /// Caller-owned scratch buffers for [`ConvPlan`] applies.  One per worker
 /// thread; every buffer is sized at construction and never reallocated.
@@ -49,7 +50,9 @@ pub struct ConvScratch {
     pub h: Vec<C64>,
     /// real sample product (m x m)
     pub q: Vec<f64>,
-    /// column gather buffer (m)
+    /// column tile buffer (m * COL_BLOCK) for the transpose-blocked
+    /// column passes; anything >= m works, bigger just means more
+    /// columns per cache-friendly tile
     pub col: Vec<C64>,
 }
 
@@ -59,7 +62,7 @@ impl ConvScratch {
             z: vec![C64::default(); m * m],
             h: vec![C64::default(); m * m],
             q: vec![0.0; m * m],
-            col: vec![C64::default(); m],
+            col: vec![C64::default(); m * COL_BLOCK],
         }
     }
 
@@ -81,7 +84,7 @@ impl ConvScratch {
             self.z.resize(m * m, C64::default());
             self.h.resize(m * m, C64::default());
             self.q.resize(m * m, 0.0);
-            self.col.resize(m, C64::default());
+            self.col.resize(m * COL_BLOCK, C64::default());
         }
     }
 }
@@ -185,8 +188,20 @@ impl ConvPlan {
         }
         self.fft.fft2_inplace(z, false, &mut scratch.col);
         self.fft.fft2_inplace(h, false, &mut scratch.col);
-        for (zv, hv) in z.iter_mut().zip(h.iter()) {
-            *zv = *zv * *hv;
+        // pointwise complex product, two complexes per lane vector; the
+        // lane formula is the same op sequence as `C64::mul`, so this is
+        // bit-identical to the scalar loop.  m >= 2 is a power of two,
+        // so 2*m*m floats split into whole vectors with no tail.
+        {
+            let zf = as_floats_mut(z);
+            let hf = as_floats(h);
+            let mut p = 0;
+            while p < zf.len() {
+                let zv = F64x4::load(&zf[p..]);
+                let hv = F64x4::load(&hf[p..]);
+                zv.complex_mul(hv).store(&mut zf[p..]);
+                p += 4;
+            }
         }
         self.fft.fft2_inplace(z, true, &mut scratch.col);
         let s = 1.0 / (m * m) as f64;
@@ -239,9 +254,20 @@ impl ConvPlan {
             }
         }
         self.fft.fft2_inplace(z, true, &mut scratch.col);
-        // f1 = Re z, f2 = Im z (both real by Hermitian symmetry)
-        for (qv, zv) in scratch.q.iter_mut().zip(z.iter()) {
-            *qv = zv.re * zv.im;
+        // f1 = Re z, f2 = Im z (both real by Hermitian symmetry): the
+        // real x real spectral product q = Re z * Im z, de-interleaving
+        // four complexes per step (m >= 2 power of two, so no tail).
+        {
+            let zf = as_floats(z);
+            let q = &mut scratch.q;
+            let mut p = 0;
+            while p < q.len() {
+                let a = F64x4::load(&zf[2 * p..]);
+                let b = F64x4::load(&zf[2 * p + 4..]);
+                let (re, im) = F64x4::unzip(a, b);
+                (re * im).store(&mut q[p..]);
+                p += 4;
+            }
         }
         self.fft.fwd2_real_into(&scratch.q, &mut scratch.h, &mut scratch.col);
         let s = 1.0 / (m * m) as f64;

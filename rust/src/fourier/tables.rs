@@ -7,9 +7,10 @@
 //!   I(0)=pi, I(odd n)=2i/n, I(even n)=0.
 //! * packed per-|v| panels consumed by the O(L^3) fast path in `tp::gaunt`.
 
-use super::complex::C64;
+use super::complex::{as_floats, C64};
 use super::fft::fft;
 use crate::so3::sh::{assoc_legendre, sh_norm};
+use crate::util::simd::{F64x4, SimdLanes};
 
 pub const SQRT2_OVER_2: f64 = std::f64::consts::FRAC_1_SQRT_2;
 
@@ -160,15 +161,88 @@ impl F2shPanelsT {
     }
 }
 
+/// Largest `l_out + 1` the SIMD contraction keeps its accumulators on
+/// the stack for; larger (never seen in practice — the paper tops out
+/// far below) falls back to [`f2sh_contract_scalar`].
+const F2SH_MAX_NL: usize = 64;
+
 /// Row-major f2sh contraction shared by the Gaunt, eSCN, and many-body
 /// pipelines: project a centered `(2N+1)^2` product grid onto real SH
 /// coefficients of degree <= `l_out` (requires `l_out <= n_grid`).
 ///
-/// Traversal is u-outer so the grid is read one contiguous row at a time
-/// and each panel row `Tt[s][u]` is read unit-stride in l; the `2 pi` /
-/// `sqrt(2) pi` normalization is applied in a final scale pass.  `out`
-/// must hold `(l_out+1)^2` values; the call is allocation-free.
+/// SIMD layout: s-outer / u-middle / l-inner with per-(l,s) stack
+/// accumulators, two panel entries per `F64x4` lane vector against a
+/// pair-splatted `sp` / `sm`.  For every output the per-u addition
+/// sequence performs the exact IEEE operations of
+/// [`f2sh_contract_scalar`] in the same order (negation commutes with
+/// rounding), so the two agree BIT-FOR-BIT — asserted by the tests.
+/// `out` must hold `(l_out+1)^2` values; the call is allocation-free.
 pub fn f2sh_contract(t3t: &F2shPanelsT, grid: &[C64], out: &mut [f64]) {
+    let l_out = t3t.l_out;
+    let nl = l_out + 1;
+    if nl > F2SH_MAX_NL {
+        f2sh_contract_scalar(t3t, grid, out);
+        return;
+    }
+    let n = t3t.n_grid;
+    let nu = 2 * n + 1;
+    debug_assert_eq!(grid.len(), nu * nu);
+    debug_assert_eq!(out.len(), nl * nl);
+    debug_assert!(l_out <= n);
+    out.fill(0.0);
+    // interleaved [re, im] accumulator per l; re carries the +m channel
+    // partial sums, im (of accm) the -m channel's
+    let mut accp = [0.0f64; 2 * F2SH_MAX_NL];
+    let mut accm = [0.0f64; 2 * F2SH_MAX_NL];
+    for s in 0..=l_out {
+        accp[..2 * nl].fill(0.0);
+        accm[..2 * nl].fill(0.0);
+        let panel = &t3t.panels[s];
+        for u in 0..nu {
+            let grow = &grid[u * nu..(u + 1) * nu];
+            let ts = as_floats(&panel[u * nl..(u + 1) * nl]);
+            let (sp, sm) = if s == 0 {
+                // the v = 0 column; sm is unused (its lanes are still
+                // computed but never extracted)
+                (grow[n], C64::default())
+            } else {
+                let gp = grow[n + s];
+                let gm = grow[n - s];
+                (gp + gm, gp - gm)
+            };
+            let spv = F64x4::load(&[sp.re, sp.im, sp.re, sp.im]);
+            let smv = F64x4::load(&[sm.re, sm.im, sm.re, sm.im]);
+            let mut l = s;
+            while l + 1 <= l_out {
+                let tv = F64x4::load(&ts[2 * l..]);
+                let pa = F64x4::load(&accp[2 * l..]);
+                (pa + tv.complex_mul(spv)).store(&mut accp[2 * l..]);
+                let ma = F64x4::load(&accm[2 * l..]);
+                (ma + tv.complex_mul(smv)).store(&mut accm[2 * l..]);
+                l += 2;
+            }
+            if l <= l_out {
+                // odd tail: only the extracted lanes need computing
+                let (tr, ti) = (ts[2 * l], ts[2 * l + 1]);
+                accp[2 * l] += tr * sp.re - ti * sp.im;
+                accm[2 * l + 1] += tr * sm.im + ti * sm.re;
+            }
+        }
+        for l in s..=l_out {
+            if s == 0 {
+                out[crate::lm_index(l, 0)] = accp[2 * l];
+            } else {
+                out[crate::lm_index(l, s as i64)] = accp[2 * l];
+                out[crate::lm_index(l, -(s as i64))] = -accm[2 * l + 1];
+            }
+        }
+    }
+    f2sh_normalize(l_out, out);
+}
+
+/// The pre-SIMD u-outer traversal, kept verbatim as the conformance
+/// oracle and the "before" side of the SIMD benches.
+pub fn f2sh_contract_scalar(t3t: &F2shPanelsT, grid: &[C64], out: &mut [f64]) {
     let n = t3t.n_grid;
     let l_out = t3t.l_out;
     let nu = 2 * n + 1;
@@ -200,7 +274,11 @@ pub fn f2sh_contract(t3t: &F2shPanelsT, grid: &[C64], out: &mut [f64]) {
             }
         }
     }
-    // normalization: m = 0 channels get 2 pi, |m| > 0 get sqrt(2) pi
+    f2sh_normalize(l_out, out);
+}
+
+/// normalization: m = 0 channels get 2 pi, |m| > 0 get sqrt(2) pi
+fn f2sh_normalize(l_out: usize, out: &mut [f64]) {
     let two_pi = 2.0 * std::f64::consts::PI;
     let s2pi = std::f64::consts::SQRT_2 * std::f64::consts::PI;
     for l in 0..=l_out {
@@ -315,6 +393,30 @@ mod tests {
         f2sh_contract(&t3t, &grid, &mut got);
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() < 1e-10 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn f2sh_contract_simd_bit_matches_scalar_oracle() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(21);
+        for (l_out, n) in [(0usize, 0usize), (1, 2), (2, 4), (3, 4), (5, 8)] {
+            let nu = 2 * n + 1;
+            let grid: Vec<C64> = (0..nu * nu)
+                .map(|_| C64::new(rng.normal(), rng.normal()))
+                .collect();
+            let t3t = F2shPanelsT::build(l_out, n);
+            let nc = (l_out + 1) * (l_out + 1);
+            let mut got = vec![0.0; nc];
+            let mut want = vec![0.0; nc];
+            f2sh_contract(&t3t, &grid, &mut got);
+            f2sh_contract_scalar(&t3t, &grid, &mut want);
+            for (k, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "l_out={l_out} n={n} idx={k}: {a:e} vs {b:e}"
+                );
+            }
         }
     }
 

@@ -32,7 +32,25 @@ pub fn neighbors_cell(pos: &[[f64; 3]], r_cut: f64) -> Vec<(usize, usize)> {
             hi[k] = hi[k].max(p[k]);
         }
     }
-    let cell = r_cut.max(1e-9);
+    // The grid is sized from bounding-box extent / cell width.  For a
+    // SPARSE system (two atoms 1e5 apart, r_cut = 0.5) that naive sizing
+    // asks for ~10^15 buckets — an OOM, not a slowdown.  Cap the total
+    // bucket count at a budget proportional to the atom count and grow
+    // the cell width until the grid fits.  A cell width >= r_cut keeps
+    // the 3x3x3 neighborhood walk correct (every pair within r_cut still
+    // lands in adjacent cells); bigger cells only cost extra distance
+    // checks, degrading smoothly toward brute force instead of crashing.
+    let budget = (4 * pos.len()).max(64) as f64;
+    let mut cell = r_cut.max(1e-9);
+    loop {
+        let est: f64 = (0..3)
+            .map(|k| ((hi[k] - lo[k]) / cell).floor() + 1.0)
+            .product();
+        if est <= budget || !est.is_finite() {
+            break;
+        }
+        cell *= 2.0;
+    }
     let dims: [usize; 3] = std::array::from_fn(|k| {
         (((hi[k] - lo[k]) / cell).floor() as usize + 1).max(1)
     });
@@ -127,5 +145,68 @@ mod tests {
     #[test]
     fn empty_input() {
         assert!(neighbors_cell(&[], 1.0).is_empty());
+    }
+
+    #[test]
+    fn sparse_extreme_extent_does_not_allocate_the_world() {
+        // Pre-fix this asked for ((1e5/0.5)+1)^2 * 1 ≈ 4e10 buckets from
+        // two atoms alone (and ~10^15 with a z extent too); now the cell
+        // width grows until the grid fits the 4*n_atoms budget.
+        let pos = vec![[0.0, 0.0, 0.0], [1.0e5, 1.0e5, 1.0e5]];
+        assert!(neighbors_cell(&pos, 0.5).is_empty());
+
+        // Same geometry, but with a close pair at each end: adjacency
+        // must survive the cell-width growth.
+        let pos = vec![
+            [0.0, 0.0, 0.0],
+            [0.3, 0.0, 0.0],
+            [1.0e5, 1.0e5, 1.0e5],
+            [1.0e5 + 0.3, 1.0e5, 1.0e5],
+        ];
+        let mut got = neighbors_cell(&pos, 0.5);
+        got.sort_unstable();
+        assert_eq!(got, vec![(0, 1), (1, 0), (2, 3), (3, 2)]);
+    }
+
+    #[test]
+    fn sparse_clusters_match_brute_property() {
+        // Widely separated dense clusters: the capped grid must agree
+        // with brute force exactly.
+        check(
+            "sparse cell-list == brute-force",
+            PropConfig { cases: 12, seed: 11 },
+            |rng, case| {
+                let clusters = 2 + case % 3;
+                let mut pos = Vec::new();
+                for c in 0..clusters {
+                    let center = [
+                        1.0e4 * c as f64,
+                        rng.uniform(-1.0e3, 1.0e3),
+                        rng.uniform(-1.0e3, 1.0e3),
+                    ];
+                    for _ in 0..(3 + case % 6) {
+                        pos.push([
+                            center[0] + rng.uniform(-1.0, 1.0),
+                            center[1] + rng.uniform(-1.0, 1.0),
+                            center[2] + rng.uniform(-1.0, 1.0),
+                        ]);
+                    }
+                }
+                let rc = rng.uniform(0.5, 2.0);
+                let mut a = neighbors_brute(&pos, rc);
+                let mut b = neighbors_cell(&pos, rc);
+                a.sort_unstable();
+                b.sort_unstable();
+                if a == b {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "mismatch: brute {} vs cell {}",
+                        a.len(),
+                        b.len()
+                    ))
+                }
+            },
+        );
     }
 }

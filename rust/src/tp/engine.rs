@@ -26,8 +26,23 @@ use std::sync::{Arc, OnceLock, RwLock};
 use crate::tp::cg::CgPlan;
 use crate::tp::escn::{EscnPlan, GauntConvPlan};
 use crate::tp::gaunt::{ConvMethod, GauntPlan};
+use crate::tp::gaunt32::Gaunt32Plan;
 use crate::tp::many_body::ManyBodyPlan;
 use crate::tp::op::EquivariantOp;
+
+/// Arithmetic precision an op family runs its interior in.  The API
+/// surface is `f64` either way; `F32` plans cast at the boundary and run
+/// transforms/contractions in single precision (serve fast, train
+/// exact).  Only the Gaunt family has an `F32` lowering today — see
+/// [`OpKey::with_precision`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Double precision end to end (the training default).
+    #[default]
+    F64,
+    /// Single-precision interior behind the `f64` slice API (serving).
+    F32,
+}
 
 /// Cache key: op family + the degrees (and conv method) that fully
 /// determine a plan's tables.
@@ -37,6 +52,10 @@ pub enum OpKey {
     Cg { l1: usize, l2: usize, l3: usize },
     /// Gaunt TP plan (method changes the convolution backend).
     Gaunt { l1: usize, l2: usize, l3: usize, method: ConvMethod },
+    /// Gaunt TP plan with an f32 interior (serving precision mode); the
+    /// conv method is always `Auto` — precision, not backend, is the
+    /// knob here.
+    GauntF32 { l1: usize, l2: usize, l3: usize },
     /// eSCN SO(2)-restricted convolution plan.
     Escn { l_in: usize, l_filter: usize, l_out: usize },
     /// Gaunt-accelerated aligned-filter convolution plan (cached filter
@@ -46,10 +65,39 @@ pub enum OpKey {
     ManyBody { nu: usize, l: usize, l_out: usize },
 }
 
+impl OpKey {
+    /// The precision this key's plan runs its interior in.
+    pub fn precision(&self) -> Precision {
+        match self {
+            OpKey::GauntF32 { .. } => Precision::F32,
+            _ => Precision::F64,
+        }
+    }
+
+    /// Re-key to the requested precision where the family supports it.
+    ///
+    /// `F32` lowers `Gaunt` keys to `GauntF32` (dropping the method —
+    /// the f32 plan picks `Auto`); families without an f32 lowering are
+    /// returned unchanged.  `F64` raises `GauntF32` back to
+    /// `Gaunt { method: Auto }`.
+    pub fn with_precision(self, p: Precision) -> OpKey {
+        match (p, self) {
+            (Precision::F32, OpKey::Gaunt { l1, l2, l3, .. }) => {
+                OpKey::GauntF32 { l1, l2, l3 }
+            }
+            (Precision::F64, OpKey::GauntF32 { l1, l2, l3 }) => {
+                OpKey::Gaunt { l1, l2, l3, method: ConvMethod::Auto }
+            }
+            (_, key) => key,
+        }
+    }
+}
+
 #[derive(Clone)]
 enum CachedPlan {
     Cg(Arc<CgPlan>),
     Gaunt(Arc<GauntPlan>),
+    GauntF32(Arc<Gaunt32Plan>),
     Escn(Arc<EscnPlan>),
     GauntConv(Arc<GauntConvPlan>),
     ManyBody(Arc<ManyBodyPlan>),
@@ -179,6 +227,22 @@ impl PlanCache {
         )
     }
 
+    /// Memoized [`Gaunt32Plan`] for `(l1, l2, l3)` (always `Auto`
+    /// method — the f32 serving lowering of the Gaunt family).
+    pub fn gaunt_f32(
+        &self, l1: usize, l2: usize, l3: usize,
+    ) -> Arc<Gaunt32Plan> {
+        self.get_or_build(
+            OpKey::GauntF32 { l1, l2, l3 },
+            |c| match c {
+                CachedPlan::GauntF32(p) => Some(p.clone()),
+                _ => None,
+            },
+            CachedPlan::GauntF32,
+            || Gaunt32Plan::new(l1, l2, l3, ConvMethod::Auto),
+        )
+    }
+
     /// Memoized [`EscnPlan`] for `(l_in, l_filter, l_out)`.
     pub fn escn(
         &self, l_in: usize, l_filter: usize, l_out: usize,
@@ -241,6 +305,7 @@ impl PlanCache {
             OpKey::Gaunt { l1, l2, l3, method } => {
                 self.gaunt(l1, l2, l3, method)
             }
+            OpKey::GauntF32 { l1, l2, l3 } => self.gaunt_f32(l1, l2, l3),
             OpKey::Escn { l_in, l_filter, l_out } => {
                 self.escn(l_in, l_filter, l_out)
             }
@@ -363,6 +428,44 @@ mod tests {
         let op = cache.op(&keys[1]);
         assert_eq!(op.irreps_in().dim(), num_coeffs(2));
         assert_eq!(op.irreps_out().dim(), num_coeffs(2));
+    }
+
+    #[test]
+    fn precision_rekeying_round_trips_the_gaunt_family() {
+        let key = OpKey::Gaunt {
+            l1: 2, l2: 3, l3: 4, method: ConvMethod::Fft,
+        };
+        assert_eq!(key.precision(), Precision::F64);
+        let f32_key = key.with_precision(Precision::F32);
+        assert_eq!(f32_key, OpKey::GauntF32 { l1: 2, l2: 3, l3: 4 });
+        assert_eq!(f32_key.precision(), Precision::F32);
+        // F32 → F64 lands on Auto (the method was dropped on lowering)
+        assert_eq!(
+            f32_key.with_precision(Precision::F64),
+            OpKey::Gaunt { l1: 2, l2: 3, l3: 4, method: ConvMethod::Auto },
+        );
+        // families without an f32 lowering are untouched
+        let cg = OpKey::Cg { l1: 1, l2: 1, l3: 2 };
+        assert_eq!(cg.with_precision(Precision::F32), cg);
+        // idempotent on already-lowered keys
+        assert_eq!(f32_key.with_precision(Precision::F32), f32_key);
+    }
+
+    #[test]
+    fn f32_keys_resolve_through_the_cache() {
+        let cache = PlanCache::new();
+        let key = OpKey::GauntF32 { l1: 2, l2: 2, l3: 2 };
+        let a = cache.gaunt_f32(2, 2, 2);
+        let op = cache.op(&key);
+        assert_eq!(op.key(), key);
+        assert!(std::ptr::eq(
+            Arc::as_ptr(&a) as *const u8,
+            Arc::as_ptr(&op) as *const u8,
+        ));
+        assert_eq!(cache.builds(), 1);
+        // distinct key from the f64 family at the same degrees
+        let _ = cache.gaunt(2, 2, 2, ConvMethod::Auto);
+        assert_eq!(cache.builds(), 2);
     }
 
     #[test]

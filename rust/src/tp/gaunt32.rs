@@ -1,0 +1,329 @@
+//! f32 serving-precision Gaunt plan (opt-in: train f64, serve f32).
+//!
+//! [`Gaunt32Plan`] mirrors [`super::gaunt::GauntPlan`] with an f32
+//! interior: all conversion tables are built by the f64 pipeline and
+//! rounded ONCE at construction, inputs are rounded at the API boundary
+//! (the slice types stay `&[f64]`, so the `EquivariantOp` trait is
+//! unchanged), and the sh2f -> conv -> f2sh pipeline runs entirely in
+//! [`C32`] through the [`F32x8`]-vectorized `fourier::fp32` kernels.
+//! The back-projection accumulates its (small) sums into the f64 output
+//! slots directly, so the only precision loss is the f32 rounding of the
+//! tables, inputs, and convolution interior — the op-conformance f32
+//! tier pins the resulting tolerance (~1e-4 relative at bench sizes).
+
+use crate::fourier::complex::C64;
+use crate::fourier::fp32::{
+    conv2d_direct32_into, Conv32Plan, Conv32Scratch, C32,
+};
+use crate::fourier::tables::{
+    f2sh_panels, sh2f_panels, F2shPanelsT, SQRT2_OVER_2,
+};
+use crate::tp::gaunt::ConvMethod;
+use crate::{lm_index, num_coeffs};
+
+/// f32 copy of [`crate::fourier::tables::Sh2fPanels`].
+pub struct Sh2fPanels32 {
+    pub l_max: usize,
+    /// panels[s] is a (2L+1) x (L+1) row-major matrix over (u, l)
+    pub panels: Vec<Vec<C32>>,
+}
+
+impl Sh2fPanels32 {
+    /// Build via the f64 table pipeline, rounding once.
+    pub fn build(l_max: usize) -> Sh2fPanels32 {
+        let p = sh2f_panels(l_max);
+        Sh2fPanels32 {
+            l_max,
+            panels: p.panels.iter().map(|v| cast_panel(v)).collect(),
+        }
+    }
+}
+
+/// f32 copy of the transposed f2sh panels.
+pub struct F2shPanelsT32 {
+    pub l_out: usize,
+    pub n_grid: usize,
+    /// panels[s] is a (2N+1) x (L_out+1) row-major matrix over (u, l)
+    pub panels: Vec<Vec<C32>>,
+}
+
+impl F2shPanelsT32 {
+    /// Build via the f64 table pipeline, rounding once.
+    pub fn build(l_out: usize, n_grid: usize) -> F2shPanelsT32 {
+        let t = F2shPanelsT::from_panels(&f2sh_panels(l_out, n_grid));
+        F2shPanelsT32 {
+            l_out,
+            n_grid,
+            panels: t.panels.iter().map(|v| cast_panel(v)).collect(),
+        }
+    }
+}
+
+fn cast_panel(p: &[C64]) -> Vec<C32> {
+    p.iter().map(|z| C32::from_c64(*z)).collect()
+}
+
+/// f32 mirror of the f2sh back-projection
+/// ([`crate::fourier::tables::f2sh_contract_scalar`]): f32 products,
+/// f64 accumulation into `out`, identical normalization.
+pub fn f2sh_contract32(t3t: &F2shPanelsT32, grid: &[C32], out: &mut [f64]) {
+    let n = t3t.n_grid;
+    let l_out = t3t.l_out;
+    let nu = 2 * n + 1;
+    let nl = l_out + 1;
+    debug_assert_eq!(grid.len(), nu * nu);
+    debug_assert_eq!(out.len(), nl * nl);
+    debug_assert!(l_out <= n);
+    out.fill(0.0);
+    for u in 0..nu {
+        let grow = &grid[u * nu..(u + 1) * nu];
+        let g = grow[n];
+        let t0 = &t3t.panels[0][u * nl..(u + 1) * nl];
+        for (l, tv) in t0.iter().enumerate() {
+            out[lm_index(l, 0)] += (tv.re * g.re - tv.im * g.im) as f64;
+        }
+        for s in 1..=l_out {
+            let gp = grow[n + s];
+            let gm = grow[n - s];
+            let sp = gp + gm;
+            let sm = gp - gm;
+            let ts = &t3t.panels[s][u * nl..(u + 1) * nl];
+            for l in s..=l_out {
+                let tv = ts[l];
+                out[lm_index(l, s as i64)] +=
+                    (tv.re * sp.re - tv.im * sp.im) as f64;
+                out[lm_index(l, -(s as i64))] -=
+                    (tv.im * sm.re + tv.re * sm.im) as f64;
+            }
+        }
+    }
+    let two_pi = 2.0 * std::f64::consts::PI;
+    let s2pi = std::f64::consts::SQRT_2 * std::f64::consts::PI;
+    for l in 0..=l_out {
+        for m in -(l as i64)..=(l as i64) {
+            out[lm_index(l, m)] *= if m == 0 { two_pi } else { s2pi };
+        }
+    }
+}
+
+/// Caller-owned scratch for the f32 pipeline: one per worker thread,
+/// sized at plan granularity, never resized (steady-state applies are
+/// allocation-free, same contract as [`super::gaunt::GauntScratch`]).
+pub struct Gaunt32Scratch {
+    /// sh2f staging W[l, s]
+    w: Vec<C32>,
+    /// operand Fourier grids
+    g1: Vec<C32>,
+    g2: Vec<C32>,
+    /// product grid (2(l1+l2)+1)^2
+    out_grid: Vec<C32>,
+    /// planned f32 convolution workspace
+    conv: Conv32Scratch,
+}
+
+/// Precomputed f32 plan for x1 (deg <= L1) (x) x2 (deg <= L2) -> L3.
+pub struct Gaunt32Plan {
+    pub l1: usize,
+    pub l2: usize,
+    pub l3: usize,
+    pub method: ConvMethod,
+    p1: Sh2fPanels32,
+    p2: Sh2fPanels32,
+    t3t: F2shPanelsT32,
+    conv: Conv32Plan,
+    n_grid: usize,
+}
+
+impl Gaunt32Plan {
+    pub fn new(l1: usize, l2: usize, l3: usize, method: ConvMethod) -> Self {
+        let n_grid = l1 + l2;
+        Gaunt32Plan {
+            l1,
+            l2,
+            l3,
+            method,
+            p1: Sh2fPanels32::build(l1),
+            p2: Sh2fPanels32::build(l2),
+            t3t: F2shPanelsT32::build(l3, n_grid),
+            conv: Conv32Plan::new(2 * l1 + 1, 2 * l2 + 1),
+            n_grid,
+        }
+    }
+
+    /// Fresh scratch sized for this plan (one per worker thread).
+    pub fn scratch(&self) -> Gaunt32Scratch {
+        let n1 = 2 * self.l1 + 1;
+        let n2 = 2 * self.l2 + 1;
+        let nu3 = 2 * self.n_grid + 1;
+        let nw = (self.l1 + 1).max(self.l2 + 1);
+        Gaunt32Scratch {
+            w: vec![C32::default(); nw * nw],
+            g1: vec![C32::default(); n1 * n1],
+            g2: vec![C32::default(); n2 * n2],
+            out_grid: vec![C32::default(); nu3 * nu3],
+            conv: if self.uses_fft() {
+                self.conv.scratch()
+            } else {
+                Conv32Scratch::empty()
+            },
+        }
+    }
+
+    /// Same crossover policy as the f64 plan.
+    pub fn uses_fft(&self) -> bool {
+        match self.method {
+            ConvMethod::Direct => false,
+            ConvMethod::Fft => true,
+            ConvMethod::Auto => {
+                self.l1 + self.l2 >= super::gaunt::AUTO_FFT_CROSSOVER
+            }
+        }
+    }
+
+    /// f64 SH coefficients -> f32 Fourier grid (rounding at the
+    /// boundary); mirror of `GauntPlan::sh2f_into`.
+    fn sh2f32_into(
+        panels: &Sh2fPanels32, x: &[f64], grid: &mut [C32], w: &mut [C32],
+    ) {
+        let l_max = panels.l_max;
+        let nu = 2 * l_max + 1;
+        let nl = l_max + 1;
+        debug_assert_eq!(x.len(), num_coeffs(l_max));
+        debug_assert_eq!(grid.len(), nu * nu);
+        debug_assert!(w.len() >= nl * nl);
+        let w = &mut w[..nl * nl];
+        w.fill(C32::default());
+        for l in 0..=l_max {
+            w[l * nl] = C32::real(x[lm_index(l, 0)] as f32);
+            for s in 1..=l {
+                w[l * nl + s] = C32::new(
+                    (SQRT2_OVER_2 * x[lm_index(l, s as i64)]) as f32,
+                    (-SQRT2_OVER_2 * x[lm_index(l, -(s as i64))]) as f32,
+                );
+            }
+        }
+        grid.fill(C32::default());
+        for s in 0..=l_max {
+            let p = &panels.panels[s];
+            for u in 0..nu {
+                let row = &p[u * nl..(u + 1) * nl];
+                let mut accp = C32::default();
+                let mut accm = C32::default();
+                for l in s..=l_max {
+                    let pv = row[l];
+                    if pv.norm_sqr() == 0.0 {
+                        continue;
+                    }
+                    let wv = w[l * nl + s];
+                    accp += pv * wv;
+                    accm += pv * wv.conj();
+                }
+                grid[u * nu + (l_max + s)] = accp;
+                if s > 0 {
+                    grid[u * nu + (l_max - s)] = accm;
+                }
+            }
+        }
+    }
+
+    fn convolve_into(
+        &self, a: &[C32], b: &[C32], out: &mut [C32],
+        conv: &mut Conv32Scratch,
+    ) {
+        let n1 = 2 * self.l1 + 1;
+        let n2 = 2 * self.l2 + 1;
+        if self.uses_fft() {
+            self.conv.conv_hermitian_into(a, b, out, conv);
+        } else {
+            conv2d_direct32_into(a, n1, b, n2, out);
+        }
+    }
+
+    /// Fused f32 Gaunt Tensor Product; f64 slice boundaries, f32
+    /// interior, zero steady-state allocations.
+    pub fn apply_into(
+        &self, x1: &[f64], x2: &[f64], out: &mut [f64],
+        scratch: &mut Gaunt32Scratch,
+    ) {
+        Self::sh2f32_into(&self.p1, x1, &mut scratch.g1, &mut scratch.w);
+        Self::sh2f32_into(&self.p2, x2, &mut scratch.g2, &mut scratch.w);
+        self.convolve_into(
+            &scratch.g1,
+            &scratch.g2,
+            &mut scratch.out_grid,
+            &mut scratch.conv,
+        );
+        f2sh_contract32(&self.t3t, &scratch.out_grid, out);
+    }
+
+    /// Allocating convenience wrapper.
+    pub fn apply(&self, x1: &[f64], x2: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; num_coeffs(self.l3)];
+        let mut scratch = self.scratch();
+        self.apply_into(x1, x2, &mut out, &mut scratch);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tp::gaunt::GauntPlan;
+    use crate::util::rng::Rng;
+
+    fn rel_err(got: &[f64], want: &[f64]) -> f64 {
+        let scale = want.iter().fold(1.0f64, |a, b| a.max(b.abs()));
+        got.iter()
+            .zip(want)
+            .map(|(g, w)| (g - w).abs())
+            .fold(0.0, f64::max)
+            / scale
+    }
+
+    #[test]
+    fn f32_plan_tracks_f64_plan() {
+        let mut rng = Rng::new(40);
+        for (l1, l2, l3) in
+            [(0usize, 0usize, 0usize), (1, 1, 2), (2, 2, 2), (3, 2, 4),
+             (4, 4, 4), (6, 6, 6)]
+        {
+            let x1 = rng.normals(num_coeffs(l1));
+            let x2 = rng.normals(num_coeffs(l2));
+            for method in [ConvMethod::Direct, ConvMethod::Fft] {
+                let p64 = GauntPlan::new(l1, l2, l3, method);
+                let p32 = Gaunt32Plan::new(l1, l2, l3, method);
+                let want = p64.apply(&x1, &x2);
+                let got = p32.apply(&x1, &x2);
+                let e = rel_err(&got, &want);
+                assert!(
+                    e < 5e-4,
+                    "({l1},{l2},{l3}) {method:?}: rel err {e:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_exact() {
+        let mut rng = Rng::new(41);
+        let plan = Gaunt32Plan::new(3, 2, 4, ConvMethod::Fft);
+        let x1 = rng.normals(num_coeffs(3));
+        let x2 = rng.normals(num_coeffs(2));
+        let want = plan.apply(&x1, &x2);
+        let mut scratch = plan.scratch();
+        let mut out = vec![0.0; num_coeffs(4)];
+        let y1 = rng.normals(num_coeffs(3));
+        let y2 = rng.normals(num_coeffs(2));
+        plan.apply_into(&y1, &y2, &mut out, &mut scratch);
+        plan.apply_into(&x1, &x2, &mut out, &mut scratch);
+        assert_eq!(out, want, "scratch state leaked");
+    }
+
+    #[test]
+    fn crossover_matches_f64_policy() {
+        assert!(!Gaunt32Plan::new(4, 4, 4, ConvMethod::Auto).uses_fft());
+        assert!(Gaunt32Plan::new(5, 5, 5, ConvMethod::Auto).uses_fft());
+        assert!(Gaunt32Plan::new(3, 3, 3, ConvMethod::Fft).uses_fft());
+        assert!(!Gaunt32Plan::new(8, 8, 8, ConvMethod::Direct).uses_fft());
+    }
+}

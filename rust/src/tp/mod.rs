@@ -23,14 +23,16 @@ pub mod cg;
 pub mod engine;
 pub mod escn;
 pub mod gaunt;
+pub mod gaunt32;
 pub mod irreps;
 pub mod many_body;
 pub mod op;
 
 pub use cg::CgPlan;
-pub use engine::{CacheStats, OpKey, PlanCache};
+pub use engine::{CacheStats, OpKey, PlanCache, Precision};
 pub use escn::{EscnPlan, EscnScratch, GauntConvPlan, GauntConvScratch};
 pub use gaunt::{ConvMethod, GauntPlan, GauntScratch};
+pub use gaunt32::{Gaunt32Plan, Gaunt32Scratch};
 pub use irreps::{IrrepSeg, Irreps};
 pub use many_body::{ManyBodyPlan, ManyBodyScratch};
 pub use op::{

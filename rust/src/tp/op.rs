@@ -31,6 +31,7 @@ use crate::tp::cg::CgPlan;
 use crate::tp::engine::{OpKey, PlanCache};
 use crate::tp::escn::{EscnPlan, EscnScratch, GauntConvPlan, GauntConvScratch};
 use crate::tp::gaunt::{ConvMethod, GauntPlan, GauntScratch};
+use crate::tp::gaunt32::{Gaunt32Plan, Gaunt32Scratch};
 use crate::tp::irreps::Irreps;
 use crate::tp::many_body::{ManyBodyPlan, ManyBodyScratch};
 use crate::util::pool;
@@ -99,6 +100,12 @@ pub struct OpScratch {
     gaunt_vjp_plan: Option<Arc<GauntPlan>>,
     /// scratch of the VJP sibling plan (lazy)
     gaunt_vjp: Option<GauntScratch>,
+    /// forward scratch of an f32 serving-mode Gaunt plan
+    gaunt32: Option<Gaunt32Scratch>,
+    /// degree-rotated f32 VJP sibling plan (lazily resolved once)
+    gaunt32_vjp_plan: Option<Arc<Gaunt32Plan>>,
+    /// scratch of the f32 VJP sibling plan (lazy)
+    gaunt32_vjp: Option<Gaunt32Scratch>,
     /// Gaunt-conv forward scratch (aligned path + rotation round trip)
     conv: Option<GauntConvScratch>,
     /// many-body forward scratch
@@ -123,6 +130,9 @@ impl OpScratch {
             gaunt: None,
             gaunt_vjp_plan: None,
             gaunt_vjp: None,
+            gaunt32: None,
+            gaunt32_vjp_plan: None,
+            gaunt32_vjp: None,
             conv: None,
             many: None,
             many_pow_plan: None,
@@ -294,6 +304,65 @@ impl EquivariantOp for GauntPlan {
             inputs.x2(),
             grad,
             scratch.gaunt_vjp.as_mut().expect("GauntPlan vjp scratch"),
+        );
+    }
+}
+
+impl EquivariantOp for Gaunt32Plan {
+    fn key(&self) -> OpKey {
+        OpKey::GauntF32 { l1: self.l1, l2: self.l2, l3: self.l3 }
+    }
+
+    fn irreps_in(&self) -> Irreps {
+        Irreps::single(self.l1)
+    }
+
+    fn irreps_out(&self) -> Irreps {
+        Irreps::single(self.l3)
+    }
+
+    fn irreps_in2(&self) -> Option<Irreps> {
+        Some(Irreps::single(self.l2))
+    }
+
+    fn scratch(&self) -> OpScratch {
+        let mut s = OpScratch::empty();
+        s.gaunt32 = Some(Gaunt32Plan::scratch(self));
+        s
+    }
+
+    fn apply_into(
+        &self, inputs: Inputs<'_>, scratch: &mut OpScratch, out: &mut [f64],
+    ) {
+        Gaunt32Plan::apply_into(
+            self,
+            inputs.x1,
+            inputs.x2(),
+            out,
+            scratch.gaunt32.as_mut().expect("Gaunt32Plan scratch"),
+        );
+    }
+
+    fn vjp_into(
+        &self, inputs: Inputs<'_>, cotangent: &[f64],
+        scratch: &mut OpScratch, grad: &mut [f64],
+    ) {
+        // Same degree-rotation identity as the f64 Gaunt VJP; the
+        // backward runs in the same precision as the forward so serving
+        // force evaluations stay f32-fast.
+        if scratch.gaunt32_vjp_plan.is_none() {
+            let sib = PlanCache::global()
+                .gaunt_f32(self.l3, self.l2, self.l1);
+            scratch.gaunt32_vjp = Some(sib.scratch());
+            scratch.gaunt32_vjp_plan = Some(sib);
+        }
+        let sib = scratch.gaunt32_vjp_plan.as_ref().unwrap().clone();
+        Gaunt32Plan::apply_into(
+            &sib,
+            cotangent,
+            inputs.x2(),
+            grad,
+            scratch.gaunt32_vjp.as_mut().expect("Gaunt32Plan vjp scratch"),
         );
     }
 }
@@ -681,6 +750,32 @@ mod tests {
             let mb = ManyBodyPlan::new(nu, 2, 2);
             check_vjp(&mb, Inputs::single(&x), 14 + nu as u64);
         }
+    }
+
+    #[test]
+    fn f32_gaunt_op_tracks_the_f64_plan() {
+        let mut rng = Rng::new(5);
+        let x1 = rng.normals(num_coeffs(2));
+        let x2 = rng.normals(num_coeffs(2));
+        let p64 = GauntPlan::new(2, 2, 3, ConvMethod::Auto);
+        let p32 = Gaunt32Plan::new(2, 2, 3, ConvMethod::Auto);
+        let want = p64.apply(&x1, &x2);
+        let got = EquivariantOp::apply_op(&p32, Inputs::pair(&x1, &x2));
+        let scale = want.iter().fold(1.0f64, |a, v| a.max(v.abs()));
+        assert!(max_abs_diff(&got, &want) < 5e-4 * scale);
+
+        // the f32 backward tracks the f64 backward (same rotation
+        // identity, single-precision interior)
+        let g = rng.normals(num_coeffs(3));
+        let mut grad64 = vec![0.0; num_coeffs(2)];
+        let mut grad32 = vec![0.0; num_coeffs(2)];
+        let mut s64 = EquivariantOp::scratch(&p64);
+        let mut s32 = EquivariantOp::scratch(&p32);
+        let inputs = Inputs::pair(&x1, &x2);
+        p64.vjp_into(inputs, &g, &mut s64, &mut grad64);
+        p32.vjp_into(inputs, &g, &mut s32, &mut grad32);
+        let gscale = grad64.iter().fold(1.0f64, |a, v| a.max(v.abs()));
+        assert!(max_abs_diff(&grad32, &grad64) < 1e-3 * gscale);
     }
 
     #[test]

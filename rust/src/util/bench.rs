@@ -43,14 +43,36 @@ pub fn fmt_ns(ns: f64) -> String {
 
 /// Measure `f` with warmup; targets ~`budget_ms` of sampling.
 pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> Measurement {
-    // warmup + calibrate
-    let t0 = Instant::now();
+    // Warmup.  The FIRST call pays for lazy plan/table construction
+    // (FftPlan::shared, PlanCache) and can be orders of magnitude slower
+    // than steady state; it must never feed calibration.  Run twice,
+    // then keep warming until ~2 ms of steady-state calls have elapsed.
     f();
-    let once = t0.elapsed().as_nanos().max(1) as f64;
+    f();
+    let warm = Instant::now();
+    while warm.elapsed().as_nanos() < 2_000_000 {
+        f();
+    }
+    // Calibrate from WARM timings: double the batch until one batch is
+    // long enough to trust, then size iters_per_sample so each sample
+    // lasts at least 100 µs — a floor that keeps timer granularity out
+    // of the medians for fast post-warmup kernels.
     let budget_ns = (budget_ms as f64) * 1e6;
     let samples = 15usize;
-    let iters_per_sample =
-        ((budget_ns / once / samples as f64).floor() as usize).clamp(1, 1_000_000);
+    let target_ns = (budget_ns / samples as f64).max(100_000.0);
+    let mut cal_iters = 1usize;
+    let iters_per_sample = loop {
+        let t0 = Instant::now();
+        for _ in 0..cal_iters {
+            f();
+        }
+        let t = t0.elapsed().as_nanos().max(1) as f64;
+        if t >= 0.8 * target_ns || cal_iters >= (1 << 20) {
+            let per_call = t / cal_iters as f64;
+            break ((target_ns / per_call).ceil() as usize).clamp(1, 1_000_000);
+        }
+        cal_iters *= 2;
+    };
     let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
     for _ in 0..samples {
         let t = Instant::now();
@@ -148,6 +170,32 @@ mod tests {
         });
         assert!(m.median_ns > 0.0);
         assert!(m.iters >= 15);
+    }
+
+    #[test]
+    fn calibration_ignores_cold_first_call() {
+        // First call simulates lazy plan construction (~5 ms); steady
+        // state is microseconds.  The old calibrator divided the budget
+        // by the COLD call and produced 1 iter/sample (15 total); the
+        // warm calibrator with a 100 µs sample floor must batch far
+        // more aggressively.
+        let mut first = true;
+        let m = bench("cold-then-fast", 5, || {
+            if first {
+                first = false;
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            let mut s = 0u64;
+            for i in 0..64u64 {
+                s = s.wrapping_add(consume(i));
+            }
+            consume(s);
+        });
+        assert!(
+            m.iters >= 150,
+            "cold first call still dominates calibration: {} iters",
+            m.iters
+        );
     }
 
     #[test]

@@ -1,0 +1,804 @@
+//! Zero-dependency explicit SIMD lanes for the Fourier hot path.
+//!
+//! Two portable lane types, [`F64x4`] and [`F32x8`], expose exactly the
+//! handful of operations the FFT butterflies, the pointwise spectral
+//! products, and the `f2sh` back-projection need: element-wise
+//! add/sub/mul plus the pair-shuffles that make an interleaved
+//! `[re0, im0, re1, im1, ...]` lane vector behave like packed complex
+//! numbers ([`SimdLanes::complex_mul`]).
+//!
+//! Dispatch is at COMPILE time, per `target_arch`:
+//!
+//! * `x86_64` — SSE2 (part of the x86-64 baseline, so no runtime feature
+//!   detection): `F64x4` is two `__m128d`, `F32x8` two `__m128`.
+//! * `aarch64` — NEON (baseline on AArch64): two `float64x2_t` /
+//!   `float32x4_t`.
+//! * anything else — the [`scalar`] fallback structs.
+//!
+//! The [`scalar`] module is ALWAYS compiled and implements the identical
+//! lane semantics with plain loops; it is both the fallback and the
+//! conformance oracle (`tests/simd_conformance.rs` bit-compares every
+//! op against it, including NaN/denormal/signed-zero inputs).  Every
+//! implementation sticks to IEEE-exact single operations — mul, add,
+//! sub, sign-flip — and deliberately avoids FMA, so the SIMD paths are
+//! BIT-IDENTICAL to the scalar fallback (and to the pre-SIMD scalar
+//! kernels) in f64, not merely close.
+
+use std::ops::{Add, Mul, Sub};
+
+/// Name of the lane implementation compiled into this build (for bench
+/// output and docs): `"sse2"`, `"neon"`, or `"scalar"`.
+#[cfg(target_arch = "x86_64")]
+pub const ACTIVE_IMPL: &str = "sse2";
+#[cfg(target_arch = "aarch64")]
+pub const ACTIVE_IMPL: &str = "neon";
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub const ACTIVE_IMPL: &str = "scalar";
+
+/// The lane-vector contract shared by the SIMD types and their scalar
+/// oracles.  "Pairs" means adjacent lanes `(2k, 2k+1)` — the interleaved
+/// re/im layout of a complex slice viewed as floats.
+pub trait SimdLanes:
+    Copy + Sized + Add<Output = Self> + Sub<Output = Self> + Mul<Output = Self>
+{
+    type Elem: Copy + Default + PartialEq + std::fmt::Debug;
+    const LANES: usize;
+
+    /// All lanes set to `v`.
+    fn splat(v: Self::Elem) -> Self;
+
+    /// Load `LANES` elements from the front of `src` (unaligned;
+    /// panics if `src` is shorter).
+    fn load(src: &[Self::Elem]) -> Self;
+
+    /// Store the lanes to the front of `dst` (unaligned; panics if
+    /// `dst` is shorter).
+    fn store(self, dst: &mut [Self::Elem]);
+
+    /// `[a0, a0, a2, a2, ...]` — broadcast each pair's even lane.
+    fn dup_even(self) -> Self;
+
+    /// `[a1, a1, a3, a3, ...]` — broadcast each pair's odd lane.
+    fn dup_odd(self) -> Self;
+
+    /// `[a1, a0, a3, a2, ...]` — swap the lanes of each pair.
+    fn swap_pairs(self) -> Self;
+
+    /// `[-a0, a1, -a2, a3, ...]` — sign-flip the even lanes (exact bit
+    /// flip, never a multiply, so NaN payloads survive).
+    fn neg_even(self) -> Self;
+
+    /// De-interleave the concatenation of `a` and `b`:
+    /// `(evens, odds)` with `evens = [a0, a2, .., b0, b2, ..]`.
+    fn unzip(a: Self, b: Self) -> (Self, Self);
+
+    /// Packed complex product of the pairs of `self` (as `[re, im]`)
+    /// with the pairs of `rhs`.  Defined ONCE here so every
+    /// implementation computes the same expression
+    /// `re = a.re*b.re - a.im*b.im`, `im = a.re*b.im + a.im*b.re` —
+    /// lane-for-lane the same mul/sub/add sequence as the scalar
+    /// complex multiply.
+    #[inline(always)]
+    fn complex_mul(self, rhs: Self) -> Self {
+        self.dup_even() * rhs + (self.dup_odd() * rhs.swap_pairs()).neg_even()
+    }
+
+    /// Lanes as a plain vector (test/debug convenience).
+    fn to_vec(self) -> Vec<Self::Elem> {
+        let mut out = vec![Self::Elem::default(); Self::LANES];
+        self.store(&mut out);
+        out
+    }
+}
+
+/// Plain-loop lane structs: the portable fallback and the conformance
+/// oracle the SIMD paths are bit-compared against.
+pub mod scalar {
+    use super::SimdLanes;
+    use std::ops::{Add, Mul, Sub};
+
+    macro_rules! scalar_lanes {
+        ($name:ident, $elem:ty, $lanes:expr) => {
+            #[derive(Clone, Copy, Debug)]
+            pub struct $name(pub [$elem; $lanes]);
+
+            impl Add for $name {
+                type Output = $name;
+                #[inline(always)]
+                fn add(self, o: $name) -> $name {
+                    let mut r = self.0;
+                    for (x, y) in r.iter_mut().zip(&o.0) {
+                        *x += *y;
+                    }
+                    $name(r)
+                }
+            }
+
+            impl Sub for $name {
+                type Output = $name;
+                #[inline(always)]
+                fn sub(self, o: $name) -> $name {
+                    let mut r = self.0;
+                    for (x, y) in r.iter_mut().zip(&o.0) {
+                        *x -= *y;
+                    }
+                    $name(r)
+                }
+            }
+
+            impl Mul for $name {
+                type Output = $name;
+                #[inline(always)]
+                fn mul(self, o: $name) -> $name {
+                    let mut r = self.0;
+                    for (x, y) in r.iter_mut().zip(&o.0) {
+                        *x *= *y;
+                    }
+                    $name(r)
+                }
+            }
+
+            impl SimdLanes for $name {
+                type Elem = $elem;
+                const LANES: usize = $lanes;
+
+                #[inline(always)]
+                fn splat(v: $elem) -> $name {
+                    $name([v; $lanes])
+                }
+
+                #[inline(always)]
+                fn load(src: &[$elem]) -> $name {
+                    let mut r = [<$elem>::default(); $lanes];
+                    r.copy_from_slice(&src[..$lanes]);
+                    $name(r)
+                }
+
+                #[inline(always)]
+                fn store(self, dst: &mut [$elem]) {
+                    dst[..$lanes].copy_from_slice(&self.0);
+                }
+
+                #[inline(always)]
+                fn dup_even(self) -> $name {
+                    let mut r = self.0;
+                    for k in 0..$lanes / 2 {
+                        r[2 * k + 1] = r[2 * k];
+                    }
+                    $name(r)
+                }
+
+                #[inline(always)]
+                fn dup_odd(self) -> $name {
+                    let mut r = self.0;
+                    for k in 0..$lanes / 2 {
+                        r[2 * k] = r[2 * k + 1];
+                    }
+                    $name(r)
+                }
+
+                #[inline(always)]
+                fn swap_pairs(self) -> $name {
+                    let mut r = self.0;
+                    for k in 0..$lanes / 2 {
+                        r.swap(2 * k, 2 * k + 1);
+                    }
+                    $name(r)
+                }
+
+                #[inline(always)]
+                fn neg_even(self) -> $name {
+                    let mut r = self.0;
+                    for k in 0..$lanes / 2 {
+                        r[2 * k] = -r[2 * k];
+                    }
+                    $name(r)
+                }
+
+                #[inline(always)]
+                fn unzip(a: $name, b: $name) -> ($name, $name) {
+                    let mut ev = [<$elem>::default(); $lanes];
+                    let mut od = [<$elem>::default(); $lanes];
+                    let h = $lanes / 2;
+                    for k in 0..h {
+                        ev[k] = a.0[2 * k];
+                        ev[h + k] = b.0[2 * k];
+                        od[k] = a.0[2 * k + 1];
+                        od[h + k] = b.0[2 * k + 1];
+                    }
+                    ($name(ev), $name(od))
+                }
+            }
+        };
+    }
+
+    scalar_lanes!(ScalarF64x4, f64, 4);
+    scalar_lanes!(ScalarF32x8, f32, 8);
+}
+
+#[cfg(target_arch = "x86_64")]
+mod sse2 {
+    use super::SimdLanes;
+    use core::arch::x86_64::*;
+    use std::ops::{Add, Mul, Sub};
+
+    /// Four f64 lanes as two SSE2 `__m128d` halves.
+    #[derive(Clone, Copy)]
+    pub struct F64x4(__m128d, __m128d);
+
+    impl Add for F64x4 {
+        type Output = F64x4;
+        #[inline(always)]
+        fn add(self, o: F64x4) -> F64x4 {
+            unsafe { F64x4(_mm_add_pd(self.0, o.0), _mm_add_pd(self.1, o.1)) }
+        }
+    }
+
+    impl Sub for F64x4 {
+        type Output = F64x4;
+        #[inline(always)]
+        fn sub(self, o: F64x4) -> F64x4 {
+            unsafe { F64x4(_mm_sub_pd(self.0, o.0), _mm_sub_pd(self.1, o.1)) }
+        }
+    }
+
+    impl Mul for F64x4 {
+        type Output = F64x4;
+        #[inline(always)]
+        fn mul(self, o: F64x4) -> F64x4 {
+            unsafe { F64x4(_mm_mul_pd(self.0, o.0), _mm_mul_pd(self.1, o.1)) }
+        }
+    }
+
+    impl SimdLanes for F64x4 {
+        type Elem = f64;
+        const LANES: usize = 4;
+
+        #[inline(always)]
+        fn splat(v: f64) -> F64x4 {
+            unsafe { F64x4(_mm_set1_pd(v), _mm_set1_pd(v)) }
+        }
+
+        #[inline(always)]
+        fn load(src: &[f64]) -> F64x4 {
+            assert!(src.len() >= 4);
+            unsafe {
+                F64x4(
+                    _mm_loadu_pd(src.as_ptr()),
+                    _mm_loadu_pd(src.as_ptr().add(2)),
+                )
+            }
+        }
+
+        #[inline(always)]
+        fn store(self, dst: &mut [f64]) {
+            assert!(dst.len() >= 4);
+            unsafe {
+                _mm_storeu_pd(dst.as_mut_ptr(), self.0);
+                _mm_storeu_pd(dst.as_mut_ptr().add(2), self.1);
+            }
+        }
+
+        #[inline(always)]
+        fn dup_even(self) -> F64x4 {
+            unsafe {
+                F64x4(
+                    _mm_unpacklo_pd(self.0, self.0),
+                    _mm_unpacklo_pd(self.1, self.1),
+                )
+            }
+        }
+
+        #[inline(always)]
+        fn dup_odd(self) -> F64x4 {
+            unsafe {
+                F64x4(
+                    _mm_unpackhi_pd(self.0, self.0),
+                    _mm_unpackhi_pd(self.1, self.1),
+                )
+            }
+        }
+
+        #[inline(always)]
+        fn swap_pairs(self) -> F64x4 {
+            unsafe {
+                F64x4(
+                    _mm_shuffle_pd::<0b01>(self.0, self.0),
+                    _mm_shuffle_pd::<0b01>(self.1, self.1),
+                )
+            }
+        }
+
+        #[inline(always)]
+        fn neg_even(self) -> F64x4 {
+            unsafe {
+                let m = _mm_set_pd(0.0, -0.0);
+                F64x4(_mm_xor_pd(self.0, m), _mm_xor_pd(self.1, m))
+            }
+        }
+
+        #[inline(always)]
+        fn unzip(a: F64x4, b: F64x4) -> (F64x4, F64x4) {
+            unsafe {
+                (
+                    F64x4(
+                        _mm_unpacklo_pd(a.0, a.1),
+                        _mm_unpacklo_pd(b.0, b.1),
+                    ),
+                    F64x4(
+                        _mm_unpackhi_pd(a.0, a.1),
+                        _mm_unpackhi_pd(b.0, b.1),
+                    ),
+                )
+            }
+        }
+    }
+
+    /// Eight f32 lanes as two SSE2 `__m128` halves.
+    #[derive(Clone, Copy)]
+    pub struct F32x8(__m128, __m128);
+
+    impl Add for F32x8 {
+        type Output = F32x8;
+        #[inline(always)]
+        fn add(self, o: F32x8) -> F32x8 {
+            unsafe { F32x8(_mm_add_ps(self.0, o.0), _mm_add_ps(self.1, o.1)) }
+        }
+    }
+
+    impl Sub for F32x8 {
+        type Output = F32x8;
+        #[inline(always)]
+        fn sub(self, o: F32x8) -> F32x8 {
+            unsafe { F32x8(_mm_sub_ps(self.0, o.0), _mm_sub_ps(self.1, o.1)) }
+        }
+    }
+
+    impl Mul for F32x8 {
+        type Output = F32x8;
+        #[inline(always)]
+        fn mul(self, o: F32x8) -> F32x8 {
+            unsafe { F32x8(_mm_mul_ps(self.0, o.0), _mm_mul_ps(self.1, o.1)) }
+        }
+    }
+
+    impl SimdLanes for F32x8 {
+        type Elem = f32;
+        const LANES: usize = 8;
+
+        #[inline(always)]
+        fn splat(v: f32) -> F32x8 {
+            unsafe { F32x8(_mm_set1_ps(v), _mm_set1_ps(v)) }
+        }
+
+        #[inline(always)]
+        fn load(src: &[f32]) -> F32x8 {
+            assert!(src.len() >= 8);
+            unsafe {
+                F32x8(
+                    _mm_loadu_ps(src.as_ptr()),
+                    _mm_loadu_ps(src.as_ptr().add(4)),
+                )
+            }
+        }
+
+        #[inline(always)]
+        fn store(self, dst: &mut [f32]) {
+            assert!(dst.len() >= 8);
+            unsafe {
+                _mm_storeu_ps(dst.as_mut_ptr(), self.0);
+                _mm_storeu_ps(dst.as_mut_ptr().add(4), self.1);
+            }
+        }
+
+        #[inline(always)]
+        fn dup_even(self) -> F32x8 {
+            unsafe {
+                F32x8(
+                    _mm_shuffle_ps::<0xA0>(self.0, self.0),
+                    _mm_shuffle_ps::<0xA0>(self.1, self.1),
+                )
+            }
+        }
+
+        #[inline(always)]
+        fn dup_odd(self) -> F32x8 {
+            unsafe {
+                F32x8(
+                    _mm_shuffle_ps::<0xF5>(self.0, self.0),
+                    _mm_shuffle_ps::<0xF5>(self.1, self.1),
+                )
+            }
+        }
+
+        #[inline(always)]
+        fn swap_pairs(self) -> F32x8 {
+            unsafe {
+                F32x8(
+                    _mm_shuffle_ps::<0xB1>(self.0, self.0),
+                    _mm_shuffle_ps::<0xB1>(self.1, self.1),
+                )
+            }
+        }
+
+        #[inline(always)]
+        fn neg_even(self) -> F32x8 {
+            unsafe {
+                let m = _mm_set_ps(0.0, -0.0, 0.0, -0.0);
+                F32x8(_mm_xor_ps(self.0, m), _mm_xor_ps(self.1, m))
+            }
+        }
+
+        #[inline(always)]
+        fn unzip(a: F32x8, b: F32x8) -> (F32x8, F32x8) {
+            unsafe {
+                (
+                    F32x8(
+                        _mm_shuffle_ps::<0x88>(a.0, a.1),
+                        _mm_shuffle_ps::<0x88>(b.0, b.1),
+                    ),
+                    F32x8(
+                        _mm_shuffle_ps::<0xDD>(a.0, a.1),
+                        _mm_shuffle_ps::<0xDD>(b.0, b.1),
+                    ),
+                )
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::SimdLanes;
+    use core::arch::aarch64::*;
+    use std::ops::{Add, Mul, Sub};
+
+    /// Four f64 lanes as two NEON `float64x2_t` halves.
+    #[derive(Clone, Copy)]
+    pub struct F64x4(float64x2_t, float64x2_t);
+
+    impl Add for F64x4 {
+        type Output = F64x4;
+        #[inline(always)]
+        fn add(self, o: F64x4) -> F64x4 {
+            unsafe { F64x4(vaddq_f64(self.0, o.0), vaddq_f64(self.1, o.1)) }
+        }
+    }
+
+    impl Sub for F64x4 {
+        type Output = F64x4;
+        #[inline(always)]
+        fn sub(self, o: F64x4) -> F64x4 {
+            unsafe { F64x4(vsubq_f64(self.0, o.0), vsubq_f64(self.1, o.1)) }
+        }
+    }
+
+    impl Mul for F64x4 {
+        type Output = F64x4;
+        #[inline(always)]
+        fn mul(self, o: F64x4) -> F64x4 {
+            unsafe { F64x4(vmulq_f64(self.0, o.0), vmulq_f64(self.1, o.1)) }
+        }
+    }
+
+    impl SimdLanes for F64x4 {
+        type Elem = f64;
+        const LANES: usize = 4;
+
+        #[inline(always)]
+        fn splat(v: f64) -> F64x4 {
+            unsafe { F64x4(vdupq_n_f64(v), vdupq_n_f64(v)) }
+        }
+
+        #[inline(always)]
+        fn load(src: &[f64]) -> F64x4 {
+            assert!(src.len() >= 4);
+            unsafe {
+                F64x4(vld1q_f64(src.as_ptr()), vld1q_f64(src.as_ptr().add(2)))
+            }
+        }
+
+        #[inline(always)]
+        fn store(self, dst: &mut [f64]) {
+            assert!(dst.len() >= 4);
+            unsafe {
+                vst1q_f64(dst.as_mut_ptr(), self.0);
+                vst1q_f64(dst.as_mut_ptr().add(2), self.1);
+            }
+        }
+
+        #[inline(always)]
+        fn dup_even(self) -> F64x4 {
+            unsafe {
+                F64x4(vtrn1q_f64(self.0, self.0), vtrn1q_f64(self.1, self.1))
+            }
+        }
+
+        #[inline(always)]
+        fn dup_odd(self) -> F64x4 {
+            unsafe {
+                F64x4(vtrn2q_f64(self.0, self.0), vtrn2q_f64(self.1, self.1))
+            }
+        }
+
+        #[inline(always)]
+        fn swap_pairs(self) -> F64x4 {
+            unsafe {
+                F64x4(
+                    vextq_f64::<1>(self.0, self.0),
+                    vextq_f64::<1>(self.1, self.1),
+                )
+            }
+        }
+
+        #[inline(always)]
+        fn neg_even(self) -> F64x4 {
+            unsafe {
+                let mask = [0x8000_0000_0000_0000u64, 0u64];
+                let m = vld1q_u64(mask.as_ptr());
+                let flip = |v: float64x2_t| {
+                    vreinterpretq_f64_u64(veorq_u64(
+                        vreinterpretq_u64_f64(v),
+                        m,
+                    ))
+                };
+                F64x4(flip(self.0), flip(self.1))
+            }
+        }
+
+        #[inline(always)]
+        fn unzip(a: F64x4, b: F64x4) -> (F64x4, F64x4) {
+            unsafe {
+                (
+                    F64x4(vuzp1q_f64(a.0, a.1), vuzp1q_f64(b.0, b.1)),
+                    F64x4(vuzp2q_f64(a.0, a.1), vuzp2q_f64(b.0, b.1)),
+                )
+            }
+        }
+    }
+
+    /// Eight f32 lanes as two NEON `float32x4_t` halves.
+    #[derive(Clone, Copy)]
+    pub struct F32x8(float32x4_t, float32x4_t);
+
+    impl Add for F32x8 {
+        type Output = F32x8;
+        #[inline(always)]
+        fn add(self, o: F32x8) -> F32x8 {
+            unsafe { F32x8(vaddq_f32(self.0, o.0), vaddq_f32(self.1, o.1)) }
+        }
+    }
+
+    impl Sub for F32x8 {
+        type Output = F32x8;
+        #[inline(always)]
+        fn sub(self, o: F32x8) -> F32x8 {
+            unsafe { F32x8(vsubq_f32(self.0, o.0), vsubq_f32(self.1, o.1)) }
+        }
+    }
+
+    impl Mul for F32x8 {
+        type Output = F32x8;
+        #[inline(always)]
+        fn mul(self, o: F32x8) -> F32x8 {
+            unsafe { F32x8(vmulq_f32(self.0, o.0), vmulq_f32(self.1, o.1)) }
+        }
+    }
+
+    impl SimdLanes for F32x8 {
+        type Elem = f32;
+        const LANES: usize = 8;
+
+        #[inline(always)]
+        fn splat(v: f32) -> F32x8 {
+            unsafe { F32x8(vdupq_n_f32(v), vdupq_n_f32(v)) }
+        }
+
+        #[inline(always)]
+        fn load(src: &[f32]) -> F32x8 {
+            assert!(src.len() >= 8);
+            unsafe {
+                F32x8(vld1q_f32(src.as_ptr()), vld1q_f32(src.as_ptr().add(4)))
+            }
+        }
+
+        #[inline(always)]
+        fn store(self, dst: &mut [f32]) {
+            assert!(dst.len() >= 8);
+            unsafe {
+                vst1q_f32(dst.as_mut_ptr(), self.0);
+                vst1q_f32(dst.as_mut_ptr().add(4), self.1);
+            }
+        }
+
+        #[inline(always)]
+        fn dup_even(self) -> F32x8 {
+            unsafe {
+                F32x8(vtrn1q_f32(self.0, self.0), vtrn1q_f32(self.1, self.1))
+            }
+        }
+
+        #[inline(always)]
+        fn dup_odd(self) -> F32x8 {
+            unsafe {
+                F32x8(vtrn2q_f32(self.0, self.0), vtrn2q_f32(self.1, self.1))
+            }
+        }
+
+        #[inline(always)]
+        fn swap_pairs(self) -> F32x8 {
+            unsafe { F32x8(vrev64q_f32(self.0), vrev64q_f32(self.1)) }
+        }
+
+        #[inline(always)]
+        fn neg_even(self) -> F32x8 {
+            unsafe {
+                let mask = [0x8000_0000u32, 0, 0x8000_0000, 0];
+                let m = vld1q_u32(mask.as_ptr());
+                let flip = |v: float32x4_t| {
+                    vreinterpretq_f32_u32(veorq_u32(
+                        vreinterpretq_u32_f32(v),
+                        m,
+                    ))
+                };
+                F32x8(flip(self.0), flip(self.1))
+            }
+        }
+
+        #[inline(always)]
+        fn unzip(a: F32x8, b: F32x8) -> (F32x8, F32x8) {
+            unsafe {
+                (
+                    F32x8(vuzp1q_f32(a.0, a.1), vuzp1q_f32(b.0, b.1)),
+                    F32x8(vuzp2q_f32(a.0, a.1), vuzp2q_f32(b.0, b.1)),
+                )
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use sse2::{F32x8, F64x4};
+
+#[cfg(target_arch = "aarch64")]
+pub use neon::{F32x8, F64x4};
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub use scalar::{ScalarF32x8 as F32x8, ScalarF64x4 as F64x4};
+
+#[cfg(test)]
+mod tests {
+    use super::scalar::{ScalarF32x8, ScalarF64x4};
+    use super::{F32x8, F64x4, SimdLanes};
+
+    /// Bit-exact comparison that treats any-NaN-vs-any-NaN as equal (the
+    /// payload of a NaN produced by an arithmetic op is implementation
+    /// flavored; everything else must match to the last bit).
+    fn same_f64(a: f64, b: f64) -> bool {
+        (a.is_nan() && b.is_nan()) || a.to_bits() == b.to_bits()
+    }
+
+    fn same_f32(a: f32, b: f32) -> bool {
+        (a.is_nan() && b.is_nan()) || a.to_bits() == b.to_bits()
+    }
+
+    const TRICKY64: [f64; 8] = [
+        1.5,
+        -2.25,
+        0.0,
+        -0.0,
+        f64::NAN,
+        f64::INFINITY,
+        f64::MIN_POSITIVE / 4.0, // denormal
+        -1.0e-300,
+    ];
+
+    #[test]
+    fn f64x4_ops_bit_match_scalar_oracle() {
+        for off in 0..TRICKY64.len() {
+            let a: Vec<f64> =
+                (0..4).map(|k| TRICKY64[(off + k) % TRICKY64.len()]).collect();
+            let b: Vec<f64> = (0..4)
+                .map(|k| TRICKY64[(off + k + 3) % TRICKY64.len()])
+                .collect();
+            let (va, vb) = (F64x4::load(&a), F64x4::load(&b));
+            let (sa, sb) = (ScalarF64x4::load(&a), ScalarF64x4::load(&b));
+            let cases: [(Vec<f64>, Vec<f64>, &str); 8] = [
+                ((va + vb).to_vec(), (sa + sb).to_vec(), "add"),
+                ((va - vb).to_vec(), (sa - sb).to_vec(), "sub"),
+                ((va * vb).to_vec(), (sa * sb).to_vec(), "mul"),
+                (va.dup_even().to_vec(), sa.dup_even().to_vec(), "dup_even"),
+                (va.dup_odd().to_vec(), sa.dup_odd().to_vec(), "dup_odd"),
+                (va.swap_pairs().to_vec(), sa.swap_pairs().to_vec(), "swap"),
+                (va.neg_even().to_vec(), sa.neg_even().to_vec(), "neg_even"),
+                (
+                    va.complex_mul(vb).to_vec(),
+                    sa.complex_mul(sb).to_vec(),
+                    "complex_mul",
+                ),
+            ];
+            for (got, want, op) in &cases {
+                for (g, w) in got.iter().zip(want) {
+                    assert!(same_f64(*g, *w), "{op}: {g:e} vs {w:e}");
+                }
+            }
+            let (ge, go) = F64x4::unzip(va, vb);
+            let (we, wo) = ScalarF64x4::unzip(sa, sb);
+            for (g, w) in ge.to_vec().iter().zip(&we.to_vec()) {
+                assert!(same_f64(*g, *w), "unzip evens");
+            }
+            for (g, w) in go.to_vec().iter().zip(&wo.to_vec()) {
+                assert!(same_f64(*g, *w), "unzip odds");
+            }
+        }
+    }
+
+    #[test]
+    fn f32x8_ops_bit_match_scalar_oracle() {
+        let tricky: [f32; 8] = [
+            1.5,
+            -2.25,
+            0.0,
+            -0.0,
+            f32::NAN,
+            f32::INFINITY,
+            f32::MIN_POSITIVE / 4.0,
+            -1.0e-38,
+        ];
+        for off in 0..tricky.len() {
+            let a: Vec<f32> =
+                (0..8).map(|k| tricky[(off + k) % tricky.len()]).collect();
+            let b: Vec<f32> =
+                (0..8).map(|k| tricky[(off + k + 5) % tricky.len()]).collect();
+            let (va, vb) = (F32x8::load(&a), F32x8::load(&b));
+            let (sa, sb) = (ScalarF32x8::load(&a), ScalarF32x8::load(&b));
+            let cases: [(Vec<f32>, Vec<f32>, &str); 8] = [
+                ((va + vb).to_vec(), (sa + sb).to_vec(), "add"),
+                ((va - vb).to_vec(), (sa - sb).to_vec(), "sub"),
+                ((va * vb).to_vec(), (sa * sb).to_vec(), "mul"),
+                (va.dup_even().to_vec(), sa.dup_even().to_vec(), "dup_even"),
+                (va.dup_odd().to_vec(), sa.dup_odd().to_vec(), "dup_odd"),
+                (va.swap_pairs().to_vec(), sa.swap_pairs().to_vec(), "swap"),
+                (va.neg_even().to_vec(), sa.neg_even().to_vec(), "neg_even"),
+                (
+                    va.complex_mul(vb).to_vec(),
+                    sa.complex_mul(sb).to_vec(),
+                    "complex_mul",
+                ),
+            ];
+            for (got, want, op) in &cases {
+                for (g, w) in got.iter().zip(want) {
+                    assert!(same_f32(*g, *w), "{op}: {g:e} vs {w:e}");
+                }
+            }
+            let (ge, go) = F32x8::unzip(va, vb);
+            let (we, wo) = ScalarF32x8::unzip(sa, sb);
+            for (g, w) in ge.to_vec().iter().zip(&we.to_vec()) {
+                assert!(same_f32(*g, *w), "unzip evens");
+            }
+            for (g, w) in go.to_vec().iter().zip(&wo.to_vec()) {
+                assert!(same_f32(*g, *w), "unzip odds");
+            }
+        }
+    }
+
+    #[test]
+    fn complex_mul_matches_complex_arithmetic() {
+        // [re0, im0, re1, im1] pairs against the scalar complex product
+        let a = [1.5f64, -2.0, 0.25, 3.0];
+        let b = [-0.5f64, 4.0, 2.0, -1.5];
+        let got = F64x4::load(&a).complex_mul(F64x4::load(&b)).to_vec();
+        for k in 0..2 {
+            let (ar, ai) = (a[2 * k], a[2 * k + 1]);
+            let (br, bi) = (b[2 * k], b[2 * k + 1]);
+            assert_eq!(got[2 * k], ar * br - ai * bi);
+            assert_eq!(got[2 * k + 1], ar * bi + ai * br);
+        }
+    }
+
+    #[test]
+    fn splat_fills_all_lanes() {
+        assert_eq!(F64x4::splat(2.5).to_vec(), vec![2.5; 4]);
+        assert_eq!(F32x8::splat(-1.25).to_vec(), vec![-1.25f32; 8]);
+    }
+}

@@ -11,7 +11,8 @@ use gaunt_tp::coordinator::server::NativeGauntBackend;
 use gaunt_tp::coordinator::{ForceFieldServer, ServerConfig};
 use gaunt_tp::data::gen_bpa_dataset;
 use gaunt_tp::so3::rotation::Rot3;
-use gaunt_tp::tp::engine::PlanCache;
+use gaunt_tp::tp::engine::{OpKey, PlanCache};
+use gaunt_tp::tp::Precision;
 use gaunt_tp::util::rng::Rng;
 
 fn start_server(n_workers: usize) -> ForceFieldServer {
@@ -123,6 +124,59 @@ fn native_server_is_equivariant() {
         }
     }
     server.shutdown();
+}
+
+#[test]
+fn f32_serving_mode_tracks_f64_results() {
+    // the same surrogate served at Precision::F32 must agree with the
+    // f64 server to single-precision tolerance, and its hot path must
+    // actually run through the GauntF32 plan family
+    let f64_srv = start_server(1);
+    let f32_srv = ForceFieldServer::start_native(
+        NativeGauntBackend { precision: Precision::F32, ..Default::default() },
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+                max_queue: 256,
+            },
+            n_workers: 1,
+            precision: Precision::F32,
+            ..Default::default()
+        },
+    )
+    .expect("f32 native server must start");
+    let graphs = gen_bpa_dataset(&[0.05], 4, 7).remove(0);
+    for g in &graphs {
+        let a = f64_srv
+            .infer_blocking(g.pos.clone(), g.species.clone())
+            .unwrap();
+        let b = f32_srv
+            .infer_blocking(g.pos.clone(), g.species.clone())
+            .unwrap();
+        assert!(
+            (a.energy - b.energy).abs() < 1e-3 * (1.0 + a.energy.abs()),
+            "f32 energy off: {} vs {}", b.energy, a.energy
+        );
+        for (fa, fb) in a.forces.iter().zip(&b.forces) {
+            for k in 0..3 {
+                assert!(
+                    (fa[k] - fb[k]).abs() < 1e-3 * (1.0 + fa[k].abs()),
+                    "f32 force off: {fb:?} vs {fa:?}"
+                );
+            }
+        }
+    }
+    // the f32 server's plan cache traffic includes a GauntF32 key
+    let stats = f32_srv.plan_stats();
+    assert!(
+        stats.per_key.iter().any(|ks| matches!(
+            ks.key, OpKey::GauntF32 { .. }
+        )),
+        "no GauntF32 plan in cache stats: {:?}", stats.per_key
+    );
+    f64_srv.shutdown();
+    f32_srv.shutdown();
 }
 
 #[test]

@@ -68,6 +68,7 @@ fn keys() -> Vec<OpKey> {
         vec![
             OpKey::Gaunt { l1: 2, l2: 2, l3: 2, method: ConvMethod::Direct },
             OpKey::GauntConv { l_in: 2, l_filter: 2, l_out: 2 },
+            OpKey::GauntF32 { l1: 2, l2: 2, l3: 2 },
         ]
     } else {
         vec![
@@ -76,6 +77,8 @@ fn keys() -> Vec<OpKey> {
             OpKey::Gaunt { l1: 2, l2: 2, l3: 3, method: ConvMethod::Direct },
             OpKey::Gaunt { l1: 3, l2: 2, l3: 4, method: ConvMethod::Fft },
             OpKey::Gaunt { l1: 2, l2: 2, l3: 2, method: ConvMethod::Auto },
+            OpKey::GauntF32 { l1: 2, l2: 2, l3: 3 },
+            OpKey::GauntF32 { l1: 3, l2: 2, l3: 4 },
             OpKey::Escn { l_in: 2, l_filter: 2, l_out: 2 },
             OpKey::Escn { l_in: 1, l_filter: 2, l_out: 3 },
             OpKey::GauntConv { l_in: 2, l_filter: 2, l_out: 3 },
@@ -83,6 +86,16 @@ fn keys() -> Vec<OpKey> {
             OpKey::ManyBody { nu: 2, l: 2, l_out: 2 },
             OpKey::ManyBody { nu: 3, l: 2, l_out: 3 },
         ]
+    }
+}
+
+/// Per-key numeric tiers: (legacy-agreement, equivariance) tolerances.
+/// f64 families are held to near-machine agreement; the f32 serving
+/// tier gets single-precision bounds (documented in DESIGN.md §11).
+fn tolerances(key: &OpKey) -> (f64, f64) {
+    match key {
+        OpKey::GauntF32 { .. } => (1e-10, 5e-4),
+        _ => (1e-10, 1e-8),
     }
 }
 
@@ -125,6 +138,9 @@ fn legacy_apply(key: &OpKey, ops: &Operands) -> Vec<f64> {
             .apply_sparse(&ops.x1, ops.x2.as_ref().unwrap()),
         OpKey::Gaunt { l1, l2, l3, method } => cache
             .gaunt(l1, l2, l3, method)
+            .apply(&ops.x1, ops.x2.as_ref().unwrap()),
+        OpKey::GauntF32 { l1, l2, l3 } => cache
+            .gaunt_f32(l1, l2, l3)
             .apply(&ops.x1, ops.x2.as_ref().unwrap()),
         OpKey::Escn { l_in, l_filter, l_out } => {
             cache.escn(l_in, l_filter, l_out).apply(
@@ -169,12 +185,13 @@ fn every_equivariant_op_satisfies_the_contract() {
         let ops = Operands::random(op, &mut rng);
         let mut scratch = op.scratch();
         let mut out = vec![0.0; n_out];
+        let (legacy_tol, equi_tol) = tolerances(&key);
 
         // 1. agreement with the legacy typed apply
         op.apply_into(ops.inputs(), &mut scratch, &mut out);
         let want = legacy_apply(&key, &ops);
         assert!(
-            max_abs_diff(&out, &want) < 1e-10,
+            max_abs_diff(&out, &want) < legacy_tol,
             "{key:?}: trait apply diverges from legacy ({})",
             max_abs_diff(&out, &want)
         );
@@ -196,7 +213,7 @@ fn every_equivariant_op_satisfies_the_contract() {
             op.apply_into(rotated.inputs(), &mut scratch, &mut out_rot);
             let want_rot = rotate_feature(&out, l_out, &rot);
             assert!(
-                max_abs_diff(&out_rot, &want_rot) < 1e-8,
+                max_abs_diff(&out_rot, &want_rot) < equi_tol,
                 "{key:?}: equivariance violated ({})",
                 max_abs_diff(&out_rot, &want_rot)
             );
@@ -220,7 +237,25 @@ fn every_equivariant_op_satisfies_the_contract() {
              apply_into+vjp_into rounds (expected 0)"
         );
 
-        // 4. VJP vs central finite differences of <g, op(x1)>
+        // 4. VJP correctness.  The f32 tier's finite differences would
+        // drown in single-precision forward noise (output rounding
+        // ~1e-7 against h=1e-6), so its gradient is checked against the
+        // exact f64 sibling plan's VJP instead of FD.
+        if let OpKey::GauntF32 { l1, l2, l3 } = key {
+            let p64 = cache.gaunt(l1, l2, l3, ConvMethod::Auto);
+            let mut s64 = EquivariantOp::scratch(p64.as_ref());
+            let mut grad64 = vec![0.0; op.irreps_in().dim()];
+            p64.vjp_into(ops.inputs(), &g, &mut s64, &mut grad64);
+            let scale = grad64
+                .iter()
+                .fold(1.0f64, |a, v| a.max(v.abs()));
+            assert!(
+                max_abs_diff(&grad, &grad64) < 1e-3 * scale,
+                "{key:?}: f32 vjp strays {} from the f64 gradient",
+                max_abs_diff(&grad, &grad64)
+            );
+            continue;
+        }
         let h = 1e-6;
         let n1 = ops.x1.len();
         let mut x = ops.x1.clone();

@@ -28,6 +28,7 @@ use gaunt_tp::data::PaddedBatch;
 use gaunt_tp::md::{Integrator, LearnedPotential, Thermostat};
 use gaunt_tp::model::{Model, ModelConfig};
 use gaunt_tp::runtime::Tensor;
+use gaunt_tp::tp::Precision;
 use gaunt_tp::util::rng::Rng;
 
 fn smoke() -> bool {
@@ -352,6 +353,7 @@ fn spec_with(backend: Arc<dyn Backend>) -> BackendSpec {
         n_atoms: 32,
         n_edges: 256,
         fixed_shape: false,
+        precision: Precision::F64,
     }
 }
 

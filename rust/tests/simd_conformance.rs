@@ -1,0 +1,214 @@
+//! Conformance suite for the `util::simd` lane layer and every kernel
+//! that dispatches onto it.  The contract under test is the one the
+//! committed benchmark snapshot depends on: on f64 the vectorized hot
+//! paths are BIT-IDENTICAL to their retained scalar oracles (no FMA, no
+//! reassociation), so a SIMD speedup row can never hide a numeric
+//! drift.  Covers:
+//!
+//! * every lane op of the active `F64x4`/`F32x8` against the portable
+//!   scalar fallback, over a value set with NaNs, signed zeros,
+//!   infinities, and denormals;
+//! * `FftPlan::process` vs `process_scalar` across sizes and directions;
+//! * planned convolution (the SIMD pointwise product) vs the direct
+//!   O(n^2) convolution reference;
+//! * `f2sh_contract` vs `f2sh_contract_scalar` on real panel data.
+
+use gaunt_tp::fourier::{
+    conv2d_direct, f2sh_contract, f2sh_contract_scalar, C64, ConvPlan,
+    F2shPanelsT, FftPlan,
+};
+use gaunt_tp::num_coeffs;
+use gaunt_tp::util::simd::{
+    scalar::{ScalarF32x8, ScalarF64x4},
+    SimdLanes, ACTIVE_IMPL, F32x8, F64x4,
+};
+use gaunt_tp::util::rng::Rng;
+
+/// Adversarial lane values: ordinary magnitudes plus every IEEE special
+/// the kernels could ever meet.
+const TRICKY: [f64; 12] = [
+    0.0,
+    -0.0,
+    1.0,
+    -2.5,
+    1.0e300,
+    -1.0e-300,
+    f64::INFINITY,
+    f64::NEG_INFINITY,
+    f64::NAN,
+    f64::MIN_POSITIVE,
+    4.9e-324, // smallest positive denormal
+    -4.9e-324,
+];
+
+fn bits_eq_f64(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+fn bits_eq_f32(a: f32, b: f32) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+#[test]
+fn active_impl_is_reported() {
+    assert!(["sse2", "neon", "scalar"].contains(&ACTIVE_IMPL));
+}
+
+#[test]
+fn f64_lanes_bitwise_match_scalar_fallback_on_special_values() {
+    let mut rng = Rng::new(3);
+    // sweep window pairs over TRICKY plus random fill
+    for trial in 0..64 {
+        let mut a = [0.0f64; 4];
+        let mut b = [0.0f64; 4];
+        for i in 0..4 {
+            a[i] = TRICKY[(trial + i) % TRICKY.len()];
+            b[i] = if trial % 2 == 0 {
+                TRICKY[(trial + 2 * i + 5) % TRICKY.len()]
+            } else {
+                rng.normal()
+            };
+        }
+        let (va, vb) = (F64x4::load(&a), F64x4::load(&b));
+        let (sa, sb) = (ScalarF64x4::load(&a), ScalarF64x4::load(&b));
+        let check = |got: F64x4, want: ScalarF64x4, what: &str| {
+            let (g, w) = (got.to_vec(), want.to_vec());
+            for i in 0..4 {
+                assert!(
+                    bits_eq_f64(g[i], w[i]),
+                    "{what} lane {i}: {ACTIVE_IMPL} {:e} vs scalar {:e} \
+                     (a={a:?} b={b:?})",
+                    g[i], w[i]
+                );
+            }
+        };
+        check(va + vb, sa + sb, "add");
+        check(va - vb, sa - sb, "sub");
+        check(va * vb, sa * sb, "mul");
+        check(va.dup_even(), sa.dup_even(), "dup_even");
+        check(va.dup_odd(), sa.dup_odd(), "dup_odd");
+        check(va.swap_pairs(), sa.swap_pairs(), "swap_pairs");
+        check(va.neg_even(), sa.neg_even(), "neg_even");
+        check(va.complex_mul(vb), sa.complex_mul(sb), "complex_mul");
+        let (re_v, im_v) = F64x4::unzip(va, vb);
+        let (re_s, im_s) = ScalarF64x4::unzip(sa, sb);
+        check(re_v, re_s, "unzip.re");
+        check(im_v, im_s, "unzip.im");
+    }
+}
+
+#[test]
+fn f32_lanes_bitwise_match_scalar_fallback_on_special_values() {
+    let mut rng = Rng::new(4);
+    for trial in 0..64 {
+        let mut a = [0.0f32; 8];
+        let mut b = [0.0f32; 8];
+        for i in 0..8 {
+            a[i] = TRICKY[(trial + i) % TRICKY.len()] as f32;
+            b[i] = if trial % 2 == 0 {
+                TRICKY[(trial + 3 * i + 7) % TRICKY.len()] as f32
+            } else {
+                rng.normal() as f32
+            };
+        }
+        let (va, vb) = (F32x8::load(&a), F32x8::load(&b));
+        let (sa, sb) = (ScalarF32x8::load(&a), ScalarF32x8::load(&b));
+        let check = |got: F32x8, want: ScalarF32x8, what: &str| {
+            let (g, w) = (got.to_vec(), want.to_vec());
+            for i in 0..8 {
+                assert!(
+                    bits_eq_f32(g[i], w[i]),
+                    "{what} lane {i}: {ACTIVE_IMPL} {:e} vs scalar {:e}",
+                    g[i], w[i]
+                );
+            }
+        };
+        check(va + vb, sa + sb, "add");
+        check(va - vb, sa - sb, "sub");
+        check(va * vb, sa * sb, "mul");
+        check(va.dup_even(), sa.dup_even(), "dup_even");
+        check(va.dup_odd(), sa.dup_odd(), "dup_odd");
+        check(va.swap_pairs(), sa.swap_pairs(), "swap_pairs");
+        check(va.neg_even(), sa.neg_even(), "neg_even");
+        check(va.complex_mul(vb), sa.complex_mul(sb), "complex_mul");
+        let (re_v, im_v) = F32x8::unzip(va, vb);
+        let (re_s, im_s) = ScalarF32x8::unzip(sa, sb);
+        check(re_v, re_s, "unzip.re");
+        check(im_v, im_s, "unzip.im");
+    }
+}
+
+#[test]
+fn fft_simd_path_bit_matches_scalar_oracle_at_every_size() {
+    let mut rng = Rng::new(11);
+    for n in [1usize, 2, 4, 8, 16, 64, 256, 2048] {
+        let plan = FftPlan::shared(n);
+        let data: Vec<C64> = (0..n)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        for inverse in [false, true] {
+            let mut simd = data.clone();
+            let mut scalar = data.clone();
+            plan.process(&mut simd, inverse);
+            plan.process_scalar(&mut scalar, inverse);
+            for (i, (s, sc)) in simd.iter().zip(&scalar).enumerate() {
+                assert!(
+                    s.re.to_bits() == sc.re.to_bits()
+                        && s.im.to_bits() == sc.im.to_bits(),
+                    "n={n} inverse={inverse} bin {i}: {s:?} vs {sc:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn planned_conv_with_simd_pointwise_matches_direct_reference() {
+    let mut rng = Rng::new(12);
+    for &(n1, n2) in &[(1usize, 1usize), (2, 3), (4, 4), (5, 9), (8, 8)] {
+        let a: Vec<C64> = (0..n1 * n1)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        let b: Vec<C64> = (0..n2 * n2)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        let want = conv2d_direct(&a, n1, &b, n2);
+        let plan = ConvPlan::new(n1, n2);
+        let mut scratch = plan.scratch();
+        let mut got = vec![C64::default(); plan.n_out * plan.n_out];
+        plan.conv_into(&a, &b, &mut got, &mut scratch);
+        let n_out = n1 + n2 - 1;
+        let scale = (n_out * n_out) as f64;
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g.re - w.re).abs() < 1e-9 * scale
+                    && (g.im - w.im).abs() < 1e-9 * scale,
+                "conv {n1}x{n2}: {g:?} vs {w:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn f2sh_simd_contract_bit_matches_scalar_on_random_grids() {
+    let mut rng = Rng::new(13);
+    for &(l_out, n_grid) in
+        &[(0usize, 0usize), (2, 2), (3, 4), (5, 6), (8, 8), (10, 12)]
+    {
+        let nu = 2 * n_grid + 1;
+        let grid: Vec<C64> = (0..nu * nu)
+            .map(|_| C64::new(rng.normal(), rng.normal()))
+            .collect();
+        let t3t = F2shPanelsT::build(l_out, n_grid);
+        let mut out_simd = vec![0.0; num_coeffs(l_out)];
+        let mut out_scalar = vec![0.0; num_coeffs(l_out)];
+        f2sh_contract(&t3t, &grid, &mut out_simd);
+        f2sh_contract_scalar(&t3t, &grid, &mut out_scalar);
+        for (i, (s, sc)) in out_simd.iter().zip(&out_scalar).enumerate() {
+            assert!(
+                s.to_bits() == sc.to_bits(),
+                "l_out={l_out} n_grid={n_grid} coeff {i}: {s:e} vs {sc:e}"
+            );
+        }
+    }
+}

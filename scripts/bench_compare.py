@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_fourier.json snapshots and fail on regression.
+
+    python3 scripts/bench_compare.py <old> <new> [--tolerance 0.10]
+
+<old>/<new> are snapshot paths; an argument that is not an existing
+file is treated as a git revision and BENCH_fourier.json is read from
+it (e.g. `HEAD`, `main~2`).  Typical PR gate:
+
+    python3 scripts/bench_compare.py HEAD BENCH_fourier.json
+
+Rules:
+  * the NEW snapshot must say "measured": true — a stub or partial
+    snapshot can never pass the gate;
+  * every `speedup_*` row present in BOTH snapshots must not regress by
+    more than the tolerance (default 10%): these rows carry ratios
+    (bigger = better), so new < (1 - tol) * old fails;
+  * rows that appear only in one snapshot are reported but never fail
+    the gate (benches legitimately come and go across PRs).
+
+Exit status: 0 clean, 1 regression or invalid snapshot, 2 usage/IO.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+
+def load(spec):
+    """Load a snapshot from a path, or from `git show <rev>:BENCH...`."""
+    if os.path.exists(spec):
+        with open(spec) as f:
+            return json.load(f), spec
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"{spec}:BENCH_fourier.json"],
+            capture_output=True, text=True, check=True,
+        ).stdout
+    except (subprocess.CalledProcessError, FileNotFoundError) as e:
+        print(f"error: {spec!r} is neither a file nor a git revision "
+              f"holding BENCH_fourier.json ({e})", file=sys.stderr)
+        sys.exit(2)
+    return json.loads(blob), f"{spec}:BENCH_fourier.json"
+
+
+def speedup_rows(doc):
+    """{(bench, row name): ratio} for every speedup_* row."""
+    out = {}
+    for bench, rows in doc.get("benches", {}).items():
+        for row in rows:
+            if row["name"].startswith("speedup_"):
+                out[(bench, row["name"])] = float(row["median_ns"])
+    return out
+
+
+def main(argv):
+    args = []
+    tol = 0.10
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a.startswith("--tolerance"):
+            if "=" in a:
+                tol = float(a.split("=", 1)[1])
+            else:
+                i += 1
+                tol = float(argv[i])
+        else:
+            args.append(a)
+        i += 1
+    if len(args) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+
+    old_doc, old_src = load(args[0])
+    new_doc, new_src = load(args[1])
+
+    if not new_doc.get("measured", False):
+        print(f"FAIL: {new_src} has measured != true — refusing to gate "
+              "on stub or partial numbers")
+        return 1
+
+    old = speedup_rows(old_doc)
+    new = speedup_rows(new_doc)
+    if not old_doc.get("measured", False):
+        print(f"note: {old_src} is an unmeasured stub; nothing to compare "
+              "against — gate passes on the new snapshot's validity alone")
+        return 0
+
+    shared = sorted(set(old) & set(new))
+    gone = sorted(set(old) - set(new))
+    fresh = sorted(set(new) - set(old))
+    failures = []
+    print(f"comparing {len(shared)} shared speedup rows "
+          f"({old_src} -> {new_src}, tolerance {tol:.0%})")
+    for key in shared:
+        bench, name = key
+        o, n = old[key], new[key]
+        verdict = "ok"
+        if n < (1.0 - tol) * o:
+            verdict = "REGRESSION"
+            failures.append((bench, name, o, n))
+        print(f"  [{bench}] {name:<44} {o:8.2f}x -> {n:8.2f}x  {verdict}")
+    for bench, name in gone:
+        print(f"  [{bench}] {name:<44} (dropped in new snapshot)")
+    for bench, name in fresh:
+        print(f"  [{bench}] {name:<44} (new row: {new[(bench, name)]:.2f}x)")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} speedup row(s) regressed more "
+              f"than {tol:.0%}:")
+        for bench, name, o, n in failures:
+            print(f"  [{bench}] {name}: {o:.2f}x -> {n:.2f}x "
+                  f"({(1 - n / o):.0%} slower)")
+        return 1
+    print("\nbench-compare: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

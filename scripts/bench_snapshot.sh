@@ -11,8 +11,12 @@
 # mad_ns, iters).  The before/after story is IN the row names:
 #   fig1a:  gaunt_fft_legacy (before) vs gaunt_fft (after)
 #   fig1b:  gaunt_conv (direct sweep) vs gaunt_conv_fft (cached spectra)
-#   table2: gaunt_fft_legacy/gaunt_fft_planned/gaunt_direct per L, plus
-#           speedup_* ratio rows and the measured Auto crossover.
+#   table2: gaunt_fft_legacy/gaunt_fft_planned/gaunt_direct/gaunt_fft_f32
+#           per L, plus speedup_* ratio rows and the measured Auto
+#           crossover.
+#   simd:   each vectorized Fourier kernel (fft butterflies, pointwise
+#           product, f2sh contraction, blocked column pass) vs its
+#           scalar oracle, with speedup_* ratio rows.
 #   model:  full learned-force-field inference (energy+forces through
 #           every planned Gaunt plan), 1 thread vs all cores.
 #   multi_channel: the same inference at 1 / 8 / 32 feature channels
@@ -36,9 +40,16 @@ else
     echo "== bench snapshot (full measurement) =="
 fi
 
+if [ -z "$SMOKE" ]; then
+    # a full run must harvest ONLY its own TSVs: stale results from an
+    # earlier (possibly partial) run would silently masquerade as fresh
+    # measurements in the committed snapshot
+    rm -rf "$RESULTS"
+fi
+
 cd rust
 for b in fig1a_feature_interaction fig1b_equivariant_convolution \
-         table2_speed_memory model_inference serving; do
+         table2_speed_memory simd_kernels model_inference serving; do
     echo "== cargo bench --bench $b =="
     cargo bench --bench "$b" "${ARGS[@]+"${ARGS[@]}"}"
 done
@@ -57,22 +68,28 @@ import json, os, sys, time
 
 out_path, results = sys.argv[1], sys.argv[2]
 
-# bench key -> TSV stems that feed it
+# bench key -> TSV stems that feed it.  Stems marked optional may
+# legitimately be absent (artifact-dependent benches on a checkout with
+# no compiled artifacts); every other stem missing is a hard error —
+# a silently skipped stem would commit a snapshot that LOOKS complete.
 wanted = {
     "fig1a": ["fig1a"],
     "fig1b": ["fig1b"],
     "table2": ["table2_fourier_plan", "table2_tp_scaling", "table2_speed"],
+    "simd": ["simd_kernels"],
     "model": ["model_inference"],
     "multi_channel": ["multi_channel"],
     "serving": ["serving"],
 }
 
 benches = {}
+missing = []
 for bench, stems in wanted.items():
     rows = []
     for stem in stems:
         path = os.path.join(results, stem + ".tsv")
         if not os.path.exists(path):
+            missing.append(stem)
             continue
         with open(path) as f:
             header = f.readline().strip().split("\t")
@@ -90,6 +107,13 @@ for bench, stems in wanted.items():
                 })
     benches[bench] = rows
 
+if missing:
+    print(f"error: expected TSVs never materialized: {', '.join(missing)}",
+          file=sys.stderr)
+    print("       (bench crashed mid-run, or a bench stopped writing its "
+          "stem — refusing to commit a partial snapshot)", file=sys.stderr)
+    sys.exit(1)
+
 doc = {
     "schema": 1,
     "generated_unix": int(time.time()),
@@ -102,7 +126,13 @@ doc = {
                   "gaunt_conv_fft (cached filter spectra)"],
         "table2": ["gaunt_fft_legacy (before)",
                    "gaunt_fft_planned (after)",
-                   "speedup_legacy_over_planned (ratio)"],
+                   "speedup_legacy_over_planned (ratio)",
+                   "gaunt_fft_f32 (serving precision mode); "
+                   "speedup_f64_over_f32 (ratio)"],
+        "simd": ["fft_scalar/pointwise_scalar/f2sh_scalar/fft2_colx1 "
+                 "(scalar oracles, before)",
+                 "fft_simd/pointwise_simd/f2sh_simd/fft2_colx8 (after); "
+                 "speedup_* rows carry the ratio"],
         "model": ["model_batch 1 thread (before)",
                   "model_batch all cores (after)"],
         "multi_channel": ["model_batch C=1 (baseline)",

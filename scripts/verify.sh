@@ -42,10 +42,18 @@ echo "== serving-protocol conformance suite (SERVE_SMOKE fast mode) =="
 SERVE_SMOKE=1 cargo test -q --test service_conformance
 
 echo "== bench --smoke (one tiny size per bench binary) =="
-for b in fig1a_feature_interaction fig1b_equivariant_convolution \
-         fig1c_many_body table2_speed_memory model_inference serving; do
+# fig1c is the one figure bench the snapshot pipeline below doesn't run
+for b in fig1c_many_body; do
     echo "-- $b --smoke --"
     cargo bench --bench "$b" -- --smoke
 done
+
+echo "== SMOKE=1 bench snapshot (the committed BENCH_fourier.json path) =="
+# runs fig1a/fig1b/table2/simd_kernels/model_inference/serving through
+# the REAL snapshot script, so a broken bench OR broken snapshot
+# plumbing fails tier-1 instead of only when someone regenerates the
+# committed baseline (smoke mode leaves BENCH_fourier.json untouched)
+cd ..
+SMOKE=1 bash scripts/bench_snapshot.sh
 
 echo "verify: OK"

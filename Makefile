@@ -20,6 +20,10 @@
 #   make loadtest   - drive the typed serving Client with concurrent
 #                     mixed-size traffic through the shape-bucketed
 #                     native service (offline; p50/p99 + atom_fill)
+#   make chaos      - full fault-injection conformance run: every
+#                     failpoint site fired under live traffic, then the
+#                     mixed-traffic schedule again under a fixed
+#                     FAILPOINTS env program (delay + error policies)
 #   make ci         - the full gate: tier-1 (which runs every test file,
 #                     model_symmetries/grad_check/alloc_regression/
 #                     golden_cross_validation included) + every --smoke
@@ -28,7 +32,7 @@
 RUST_DIR := rust
 
 .PHONY: verify build test bench bench-snapshot bench-compare artifacts \
-        model-golden loadtest ci clean
+        model-golden loadtest chaos ci clean
 
 OLD ?= HEAD
 
@@ -55,6 +59,11 @@ bench-compare:
 loadtest:
 	cd $(RUST_DIR) && cargo run --release -- loadtest --requests 256 \
 		--clients 4 --workers 2
+
+chaos:
+	cd $(RUST_DIR) && cargo test --test chaos_conformance
+	cd $(RUST_DIR) && FAILPOINTS="svc.worker.batch=every_nth(3):delay(2);backend.run=every_nth(5):error(injected by FAILPOINTS)" \
+		cargo test --test chaos_conformance fixed_env_schedule
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(RUST_DIR)/artifacts

@@ -15,7 +15,9 @@
 use std::time::{Duration, Instant};
 
 use gaunt_tp::coordinator::batcher::{BatchPolicy, BucketConfig};
-use gaunt_tp::coordinator::request::{EnergyForces, Request, Structure};
+use gaunt_tp::coordinator::request::{
+    EnergyForces, Request, ServiceError, Structure,
+};
 use gaunt_tp::coordinator::server::{NativeGauntBackend, ServerConfig};
 use gaunt_tp::coordinator::Service;
 use gaunt_tp::util::bench::{smoke, BenchTable, Measurement};
@@ -103,6 +105,80 @@ fn run_config(
     service.shutdown();
 }
 
+/// Resilience profile: p99 + success rate of the SAME small-queue
+/// service when politely loaded vs ~2x oversubscribed.  Under overload
+/// the admission controller sheds typed `Overloaded` instead of letting
+/// the queue (and the p99 of admitted work) grow without bound; the
+/// shed fraction is reported alongside so a regression that "improves"
+/// success by queueing forever is visible.  Runs with no failpoints
+/// armed — this is the production-code path.
+fn run_resilience(
+    t: &mut BenchTable, label: &str, submitters: usize, n_per: usize,
+    structures: &[Structure],
+) {
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        max_queue: 8,
+    };
+    let service = Service::builder()
+        .native(NativeGauntBackend::default())
+        .config(ServerConfig { policy, n_workers: 2, ..Default::default() })
+        .buckets(vec![BucketConfig { max_atoms: 32, max_edges: 256, policy }])
+        .build()
+        .expect("native service");
+    let client = service.client();
+    let mut handles = Vec::new();
+    for c in 0..submitters {
+        let client = client.clone();
+        let structs: Vec<Structure> = structures.to_vec();
+        // (latencies of completed requests, attempts, sheds)
+        handles.push(std::thread::spawn(move || -> (Vec<f64>, usize, usize) {
+            let mut lat = Vec::with_capacity(n_per);
+            let mut sheds = 0usize;
+            for k in 0..n_per {
+                let st = structs[(submitters * k + c) % structs.len()].clone();
+                match client.submit(Request::new(EnergyForces(st))) {
+                    Ok(ticket) => {
+                        if let Ok(resp) = ticket.wait() {
+                            lat.push(resp.latency_s);
+                        }
+                    }
+                    Err(ServiceError::Overloaded { retry_after }) => {
+                        sheds += 1;
+                        std::thread::sleep(retry_after);
+                    }
+                    Err(_) => {}
+                }
+            }
+            (lat, n_per, sheds)
+        }));
+    }
+    let mut lat: Vec<f64> = Vec::new();
+    let mut attempts = 0usize;
+    let mut sheds = 0usize;
+    for h in handles {
+        let (l, a, s) = h.join().unwrap();
+        lat.extend(l);
+        attempts += a;
+        sheds += s;
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!(!lat.is_empty(), "no request completed under {label}");
+    let n = lat.len();
+    let p99_ns = 1e9 * lat[(n * 99 / 100).min(n - 1)];
+    t.add(derived(format!("resilience_{label}_p99"), p99_ns));
+    t.add(derived(
+        format!("resilience_{label}_success"),
+        n as f64 / attempts as f64,
+    ));
+    t.add(derived(
+        format!("resilience_{label}_shed_frac"),
+        sheds as f64 / attempts as f64,
+    ));
+    service.shutdown();
+}
+
 fn main() {
     let mut t = BenchTable::new(
         "serving protocol: global queue vs shape-bucketed batching",
@@ -137,5 +213,18 @@ fn main() {
     }
     if !smoke() {
         t.write_tsv("serving");
+    }
+
+    // resilience: the same bimodal mix through a small-queue service,
+    // politely (2 closed-loop submitters vs 2 workers) and then ~2x
+    // oversubscribed (8 submitters against an 8-deep queue)
+    let mut r = BenchTable::new(
+        "resilience: admission control under overload (typed shedding)",
+    );
+    let n_per = if smoke() { 8 } else { 128 };
+    run_resilience(&mut r, "healthy", 2, n_per, &structures);
+    run_resilience(&mut r, "overload", 8, n_per, &structures);
+    if !smoke() {
+        r.write_tsv("resilience");
     }
 }

@@ -26,6 +26,33 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::request::{Envelope, Pending, ServiceError};
+use crate::util::{failpoint, sync};
+
+/// Why [`BucketedBatcher::push`] refused a request.  The service maps
+/// these to distinct [`ServiceError`]s: `NoFit` is a permanent
+/// rejection, `Full` is retryable backpressure, `Closed` is shutdown.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PushError {
+    /// No bucket is wide enough for the request's largest structure.
+    NoFit(String),
+    /// The target bucket hit its `max_queue` cap.
+    Full { bucket: usize, depth: usize },
+    /// The queue was closed by shutdown.
+    Closed,
+}
+
+impl std::fmt::Display for PushError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PushError::NoFit(m) => write!(f, "{m}"),
+            PushError::Full { bucket, depth } => write!(
+                f,
+                "bucket {bucket} is full (backpressure, depth {depth})"
+            ),
+            PushError::Closed => write!(f, "service is shut down"),
+        }
+    }
+}
 
 /// Flush policy.
 #[derive(Clone, Copy, Debug)]
@@ -79,7 +106,7 @@ impl Batcher {
 
     /// Enqueue; `Err` when the queue is full (backpressure) or closed.
     pub fn push(&self, env: Envelope) -> Result<(), Envelope> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = sync::lock(&self.inner);
         if g.closed || g.queue.len() >= self.policy.max_queue {
             return Err(env);
         }
@@ -89,7 +116,7 @@ impl Batcher {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        sync::lock(&self.inner).queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -102,7 +129,7 @@ impl Batcher {
     /// that no worker will ever serve.
     pub fn close(&self) {
         let drained: Vec<Envelope> = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = sync::lock(&self.inner);
             g.closed = true;
             g.queue.drain(..).collect()
         };
@@ -121,7 +148,7 @@ impl Batcher {
     /// preserved, and the deadline flush always runs on the OLDEST
     /// envelope's clock: new arrivals never re-arm the timer.
     pub fn next_batch(&self) -> Option<Vec<Envelope>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = sync::lock(&self.inner);
         loop {
             if g.closed {
                 return None;
@@ -137,17 +164,17 @@ impl Batcher {
                 // wait out the oldest envelope's remaining deadline (or
                 // a new arrival that might complete the batch)
                 let remain = self.policy.max_wait - waited;
-                let (g2, _timeout) = self.cv.wait_timeout(g, remain).unwrap();
+                let (g2, _timeout) = sync::cv_wait_timeout(&self.cv, g, remain);
                 g = g2;
             } else {
-                g = self.cv.wait(g).unwrap();
+                g = sync::cv_wait(&self.cv, g);
             }
         }
     }
 
     /// Non-blocking: take up to max_batch requests if any are queued.
     pub fn try_batch(&self) -> Option<Vec<Envelope>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = sync::lock(&self.inner);
         if g.queue.is_empty() {
             return None;
         }
@@ -157,7 +184,7 @@ impl Batcher {
 
     /// Time the oldest queued request has been waiting.
     pub fn oldest_wait(&self) -> Option<Duration> {
-        let g = self.inner.lock().unwrap();
+        let g = sync::lock(&self.inner);
         g.queue.front().map(|e| e.enqueued.elapsed())
     }
 }
@@ -229,8 +256,8 @@ impl BucketedBatcher {
     }
 
     /// Enqueue into the smallest fitting bucket; `Err` carries the
-    /// rejected request back with the reason.
-    pub fn push(&self, p: Pending) -> Result<(), (Pending, String)> {
+    /// rejected request back with a typed reason.
+    pub fn push(&self, p: Pending) -> Result<(), (Pending, PushError)> {
         let idx = match self.bucket_for(p.n_atoms()) {
             Some(i) => i,
             None => {
@@ -240,22 +267,20 @@ impl BucketedBatcher {
                     p.n_atoms(),
                     self.max_atoms()
                 );
-                return Err((p, msg));
+                return Err((p, PushError::NoFit(msg)));
             }
         };
-        let mut g = self.inner.lock().unwrap();
+        let mut g = sync::lock(&self.inner);
         if g.closed {
-            return Err((p, "service is shut down".to_string()));
+            return Err((p, PushError::Closed));
         }
         if g.queues[idx].len() >= self.buckets[idx].policy.max_queue {
             return Err((
                 p,
-                format!(
-                    "bucket {} (<= {} atoms) is full (backpressure, depth \
-                     {})",
-                    idx, self.buckets[idx].max_atoms,
-                    self.buckets[idx].policy.max_queue
-                ),
+                PushError::Full {
+                    bucket: idx,
+                    depth: self.buckets[idx].policy.max_queue,
+                },
             ));
         }
         g.queues[idx].push_back(p);
@@ -265,7 +290,13 @@ impl BucketedBatcher {
 
     /// Total queued requests across every bucket.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().queues.iter().map(|q| q.len()).sum()
+        sync::lock(&self.inner).queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Total queue capacity (sum of every bucket's `max_queue`) — the
+    /// denominator for admission-control watermarks.
+    pub fn capacity(&self) -> usize {
+        self.buckets.iter().map(|b| b.policy.max_queue).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -283,7 +314,7 @@ impl BucketedBatcher {
     /// overdue — a full small bucket can therefore never starve a
     /// larger bucket past its `max_wait`.
     pub fn next_batch(&self) -> Option<(usize, Vec<Pending>)> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = sync::lock(&self.inner);
         loop {
             if g.closed {
                 return None;
@@ -320,15 +351,21 @@ impl BucketedBatcher {
                 let take =
                     g.queues[i].len().min(self.buckets[i].policy.max_batch);
                 let batch: Vec<Pending> = g.queues[i].drain(..take).collect();
+                // chaos site: a `panic` policy here unwinds while the
+                // queue mutex is held, poisoning it — the recovery path
+                // (sync::lock everywhere) is what keeps the service
+                // alive afterwards.  The drained batch's reply slots
+                // fire Dropped on unwind, so no caller hangs.
+                let _ = failpoint::check("svc.batcher.flush");
                 return Some((i, batch));
             }
             g = if any_queued {
                 match min_remain {
-                    Some(d) => self.cv.wait_timeout(g, d).unwrap().0,
-                    None => self.cv.wait(g).unwrap(),
+                    Some(d) => sync::cv_wait_timeout(&self.cv, g, d).0,
+                    None => sync::cv_wait(&self.cv, g),
                 }
             } else {
-                self.cv.wait(g).unwrap()
+                sync::cv_wait(&self.cv, g)
             };
         }
     }
@@ -337,7 +374,7 @@ impl BucketedBatcher {
     /// every still-queued request with [`ServiceError::Shutdown`].
     pub fn close(&self) {
         let drained: Vec<Pending> = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = sync::lock(&self.inner);
             g.closed = true;
             let mut v = Vec::new();
             for q in g.queues.iter_mut() {
@@ -593,8 +630,34 @@ mod tests {
         let (p, _rx) = pending(0, 40);
         let (p, why) = b.push(p).unwrap_err();
         assert_eq!(p.id, 0);
-        assert!(why.contains("no bucket"), "{why}");
+        assert!(matches!(&why, PushError::NoFit(m) if m.contains("no bucket")),
+                "{why}");
     }
+
+    #[test]
+    fn full_bucket_reports_typed_backpressure() {
+        let b = BucketedBatcher::new(vec![BucketConfig {
+            max_atoms: 8,
+            max_edges: 56,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_secs(60),
+                max_queue: 1,
+            },
+        }]);
+        let (p0, _r0) = pending(0, 4);
+        b.push(p0).map_err(|_| ()).unwrap();
+        let (p1, _r1) = pending(1, 4);
+        let (_, why) = b.push(p1).unwrap_err();
+        assert_eq!(why, PushError::Full { bucket: 0, depth: 1 });
+        assert_eq!(b.capacity(), 1);
+    }
+
+    // NOTE: the poisoned-mutex recovery path (svc.batcher.flush panic
+    // failpoint) is exercised in tests/chaos_conformance.rs, which
+    // serializes failpoint use — the registry is process-global, so
+    // arming a panic policy here could fire in a concurrently running
+    // unit test's worker instead.
 
     #[test]
     fn buckets_flush_independently() {

@@ -101,6 +101,16 @@ pub struct Metrics {
     pub rollouts: AtomicU64,
     /// worker panics survived (requests were failed via reply-on-drop)
     pub worker_panics: AtomicU64,
+    /// workers respawned by the supervisor (after a panic death or a
+    /// hang detach)
+    pub restarts: AtomicU64,
+    /// workers the supervisor declared hung (heartbeat stale past the
+    /// hang timeout) and detached
+    pub hung_detected: AtomicU64,
+    /// requests shed by admission control (`ServiceError::Overloaded`);
+    /// every shed is also counted in `rejected`, so `requests` still
+    /// reconciles
+    pub shed: AtomicU64,
     /// tensor-product plans built so far (gauge, mirrored from the
     /// engine's `PlanCache` after each batch)
     pub plan_builds: AtomicU64,
@@ -160,8 +170,9 @@ impl Metrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} responses={} rejected={} canceled={} expired={} \
-             failed={} batches={} mean_batch={:.2} \
+             failed={} shed={} batches={} mean_batch={:.2} \
              pad_waste={} atom_fill={:.2} frames={} \
+             restarts={} hung={} \
              plans={}/{}built hits={} p50={:.2}ms p99={:.2}ms \
              mean={:.2}ms exec_p50={:.2}ms",
             self.requests.load(Ordering::Relaxed),
@@ -170,11 +181,14 @@ impl Metrics {
             self.canceled.load(Ordering::Relaxed),
             self.expired.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.padding_waste.load(Ordering::Relaxed),
             self.atom_fill(),
             self.frames.load(Ordering::Relaxed),
+            self.restarts.load(Ordering::Relaxed),
+            self.hung_detected.load(Ordering::Relaxed),
             self.plan_entries.load(Ordering::Relaxed),
             self.plan_builds.load(Ordering::Relaxed),
             self.plan_hits.load(Ordering::Relaxed),
@@ -229,6 +243,13 @@ mod tests {
         assert!(r.contains("requests=10"));
         assert!(r.contains("mean_batch=5.00"));
         assert!(r.contains("plans=4/4built hits=123"), "{r}");
+        m.restarts.fetch_add(2, Ordering::Relaxed);
+        m.hung_detected.fetch_add(1, Ordering::Relaxed);
+        m.shed.fetch_add(3, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("restarts=2"), "{r}");
+        assert!(r.contains("hung=1"), "{r}");
+        assert!(r.contains("shed=3"), "{r}");
     }
 
     #[test]

@@ -34,15 +34,18 @@ pub mod server;
 pub mod service;
 pub mod trainer;
 
-pub use batcher::{BatchPolicy, BucketConfig};
+pub use batcher::{BatchPolicy, BucketConfig, PushError};
 pub use registry::{ModelVersion, Registry, DEFAULT_ENDPOINT};
 pub use request::{
-    Batch, EnergyForces, EnergyOnly, EnergyOut, ForceRequest, ForceResponse,
-    Frame, MdRollout, Relax, Reply, Request, RolloutSummary, ServiceError,
-    Structure, Task, TaskSpec, Ticket, Trajectory,
+    Batch, EnergyForces, EnergyOnly, EnergyOut, ExecFault, ForceRequest,
+    ForceResponse, Frame, MdRollout, Relax, Reply, Request, RolloutSummary,
+    ServiceError, Structure, Task, TaskSpec, Ticket, Trajectory,
 };
 pub use server::{
     Backend, BackendSpec, ForceFieldServer, NativeGauntBackend, ServerConfig,
 };
-pub use service::{Client, Service, ServiceBuilder};
+pub use service::{
+    AdmissionConfig, Client, HealthState, RetryPolicy, Service,
+    ServiceBuilder, SupervisorConfig,
+};
 pub use trainer::{NativeTrainConfig, NativeTrainer, Trainer};

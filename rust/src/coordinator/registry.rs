@@ -21,7 +21,10 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::err;
 use crate::model::Model;
+use crate::util::error::Result;
+use crate::util::{failpoint, sync};
 
 /// The endpoint every request without an explicit `model` name hits.
 pub const DEFAULT_ENDPOINT: &str = "default";
@@ -61,7 +64,20 @@ impl Registry {
 
     /// Create or hot-swap the endpoint `name`; returns the new version.
     /// Existing readers keep the version they already resolved.
-    pub fn register(&self, name: &str, model: Arc<Model>) -> u64 {
+    ///
+    /// A model with any non-finite parameter is refused: promoting a
+    /// NaN checkpoint would turn every subsequent inference into a
+    /// non-finite reply, so the poison is stopped at the swap point and
+    /// the previous version keeps serving untouched.
+    pub fn register(&self, name: &str, model: Arc<Model>) -> Result<u64> {
+        if let Some(i) = model.params.iter().position(|p| !p.is_finite()) {
+            return Err(err!(
+                "refusing to register model at endpoint '{name}': \
+                 parameter {i} of {} is non-finite ({})",
+                model.params.len(),
+                model.params[i]
+            ));
+        }
         let version =
             self.version_counter.fetch_add(1, Ordering::Relaxed) + 1;
         let mv = Arc::new(ModelVersion {
@@ -72,16 +88,16 @@ impl Registry {
         // fast path: endpoint exists — swap under the endpoint's own
         // write lock without touching the map
         {
-            let map = self.endpoints.read().unwrap();
+            let map = sync::read(&self.endpoints);
             if let Some(ep) = map.get(name) {
-                *ep.current.write().unwrap() = mv;
-                return version;
+                *sync::write(&ep.current) = mv;
+                return Ok(version);
             }
         }
         // slow path: insert (double-checked against racing registers)
-        let mut map = self.endpoints.write().unwrap();
+        let mut map = sync::write(&self.endpoints);
         match map.get(name) {
-            Some(ep) => *ep.current.write().unwrap() = mv,
+            Some(ep) => *sync::write(&ep.current) = mv,
             None => {
                 map.insert(
                     name.to_string(),
@@ -89,32 +105,38 @@ impl Registry {
                 );
             }
         }
-        version
+        Ok(version)
     }
 
     /// Resolve an endpoint (None = [`DEFAULT_ENDPOINT`]) to its current
     /// version.  The returned `Arc` pins that version for as long as the
     /// caller holds it — this is the per-batch resolution point.
     pub fn resolve(&self, name: Option<&str>) -> Option<Arc<ModelVersion>> {
+        // chaos site: `error`/`nan` make the endpoint vanish for this
+        // resolution (workers reply with a typed rejection), `delay`
+        // stretches the resolution window for swap races
+        if failpoint::check("registry.resolve").is_some() {
+            return None;
+        }
         let name = name.unwrap_or(DEFAULT_ENDPOINT);
-        let map = self.endpoints.read().unwrap();
-        map.get(name).map(|ep| ep.current.read().unwrap().clone())
+        let map = sync::read(&self.endpoints);
+        map.get(name).map(|ep| sync::read(&ep.current).clone())
     }
 
     pub fn contains(&self, name: &str) -> bool {
-        self.endpoints.read().unwrap().contains_key(name)
+        sync::read(&self.endpoints).contains_key(name)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.endpoints.read().unwrap().is_empty()
+        sync::read(&self.endpoints).is_empty()
     }
 
     /// (name, current version) for every endpoint, sorted by name.
     pub fn endpoints(&self) -> Vec<(String, u64)> {
-        let map = self.endpoints.read().unwrap();
+        let map = sync::read(&self.endpoints);
         let mut out: Vec<(String, u64)> = map
             .iter()
-            .map(|(k, ep)| (k.clone(), ep.current.read().unwrap().version))
+            .map(|(k, ep)| (k.clone(), sync::read(&ep.current).version))
             .collect();
         out.sort();
         out
@@ -137,11 +159,11 @@ mod tests {
     fn register_resolve_and_swap_bump_versions() {
         let r = Registry::new();
         assert!(r.resolve(None).is_none());
-        let v1 = r.register(DEFAULT_ENDPOINT, tiny_model(1));
+        let v1 = r.register(DEFAULT_ENDPOINT, tiny_model(1)).unwrap();
         let got = r.resolve(None).unwrap();
         assert_eq!(got.version, v1);
         assert_eq!(got.name, DEFAULT_ENDPOINT);
-        let v2 = r.register(DEFAULT_ENDPOINT, tiny_model(2));
+        let v2 = r.register(DEFAULT_ENDPOINT, tiny_model(2)).unwrap();
         assert!(v2 > v1, "swap must bump the version");
         assert_eq!(r.resolve(None).unwrap().version, v2);
         // the old version stays alive for whoever pinned it
@@ -151,8 +173,8 @@ mod tests {
     #[test]
     fn named_endpoints_are_independent() {
         let r = Registry::new();
-        r.register("a", tiny_model(1));
-        let vb = r.register("b", tiny_model(2));
+        r.register("a", tiny_model(1)).unwrap();
+        let vb = r.register("b", tiny_model(2)).unwrap();
         assert!(r.contains("a") && r.contains("b"));
         assert!(!r.contains("c"));
         assert!(r.resolve(Some("c")).is_none());
@@ -165,13 +187,37 @@ mod tests {
     #[test]
     fn swap_is_visible_to_new_resolves_only() {
         let r = Registry::new();
-        r.register(DEFAULT_ENDPOINT, tiny_model(1));
+        r.register(DEFAULT_ENDPOINT, tiny_model(1)).unwrap();
         let pinned = r.resolve(None).unwrap();
         let p1 = Arc::as_ptr(&pinned.model);
-        r.register(DEFAULT_ENDPOINT, tiny_model(2));
+        r.register(DEFAULT_ENDPOINT, tiny_model(2)).unwrap();
         let fresh = r.resolve(None).unwrap();
         assert!(!std::ptr::eq(p1, Arc::as_ptr(&fresh.model)));
         // the pinned batch still sees its original model pointer
         assert!(std::ptr::eq(p1, Arc::as_ptr(&pinned.model)));
+    }
+
+    #[test]
+    fn poisoned_snapshot_is_refused_and_old_version_keeps_serving() {
+        let r = Registry::new();
+        let v1 = r.register(DEFAULT_ENDPOINT, tiny_model(1)).unwrap();
+
+        let mut poisoned = Model::new(
+            ModelConfig { n_layers: 1, ..Default::default() },
+            2,
+        );
+        let mid = poisoned.params.len() / 2;
+        poisoned.params[mid] = f64::NAN;
+        let err = r
+            .register(DEFAULT_ENDPOINT, Arc::new(poisoned))
+            .expect_err("NaN snapshot must be refused at promote time");
+        let msg = err.to_string();
+        assert!(msg.contains("non-finite"), "{msg}");
+        assert!(msg.contains(&format!("parameter {mid}")), "{msg}");
+
+        // the hot swap never happened: the live version is unchanged
+        let live = r.resolve(None).unwrap();
+        assert_eq!(live.version, v1);
+        assert!(live.model.params.iter().all(|p| p.is_finite()));
     }
 }

@@ -35,6 +35,34 @@ use crate::md::relax::RelaxResult;
 // errors
 // ---------------------------------------------------------------------
 
+/// Why task execution failed — the typed payload of
+/// [`ServiceError::Exec`], so callers can tell an infrastructure fault
+/// (retry elsewhere) from a numerically diverged input (don't retry).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ExecFault {
+    /// The backend (or model resolution inside it) returned an error.
+    Backend(String),
+    /// The computed energies/forces/frames contained NaN or infinity;
+    /// the offending structure was quarantined at the worker boundary
+    /// before it could contaminate batchmates or stream onward.
+    NonFinite(String),
+    /// A long task (Relax/MdRollout) exhausted its runtime step/force-
+    /// evaluation budget without finishing.
+    BudgetExhausted(String),
+}
+
+impl std::fmt::Display for ExecFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecFault::Backend(m) => write!(f, "{m}"),
+            ExecFault::NonFinite(m) => write!(f, "non-finite output: {m}"),
+            ExecFault::BudgetExhausted(m) => {
+                write!(f, "step budget exhausted: {m}")
+            }
+        }
+    }
+}
+
 /// Typed service errors — every way a request can fail to produce its
 /// task's output.
 #[derive(Clone, Debug, PartialEq)]
@@ -42,6 +70,11 @@ pub enum ServiceError {
     /// Refused at submit time (validation, backpressure, unknown model,
     /// structure larger than the largest bucket).
     Rejected(String),
+    /// Shed by admission control: the service is over its queue-depth
+    /// watermark and this task's priority class is being dropped first.
+    /// Retryable — back off at least `retry_after` (see
+    /// `Client::submit_with_retry`).
+    Overloaded { retry_after: Duration },
     /// The per-request deadline passed before the task finished.
     DeadlineExceeded,
     /// The caller canceled the ticket.
@@ -52,8 +85,8 @@ pub enum ServiceError {
     /// panic or channel teardown) — the reply-on-drop guarantee turned a
     /// would-be hang into this error.
     Dropped(String),
-    /// The backend failed executing the task.
-    Exec(String),
+    /// Task execution failed (see [`ExecFault`] for the typed cause).
+    Exec(ExecFault),
     /// The worker replied with a different task's reply shape (protocol
     /// bug; should be unreachable).
     Protocol(String),
@@ -63,6 +96,12 @@ impl std::fmt::Display for ServiceError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ServiceError::Rejected(m) => write!(f, "rejected: {m}"),
+            ServiceError::Overloaded { retry_after } => write!(
+                f,
+                "overloaded: shed by admission control, retry after \
+                 {:.0} ms",
+                retry_after.as_secs_f64() * 1e3
+            ),
             ServiceError::DeadlineExceeded => write!(f, "deadline exceeded"),
             ServiceError::Canceled => write!(f, "canceled by caller"),
             ServiceError::Shutdown => {
@@ -106,6 +145,15 @@ impl Structure {
 /// work (and memory) past every `max_queue` cap as one entry; larger
 /// workloads split into multiple `Batch` submissions.
 pub const MAX_BATCH_STRUCTURES: usize = 256;
+
+/// Hard cap on `Relax::max_steps` — a step-budget watchdog so one
+/// runaway relaxation cannot monopolize a worker forever.
+pub const MAX_RELAX_STEPS: usize = 1_000_000;
+
+/// Hard cap on `MdRollout::steps` (rollouts are cancellable mid-flight,
+/// so the cap is generous, but it must exist: a `usize::MAX`-step
+/// rollout is a worker-forever bug, not a workload).
+pub const MAX_ROLLOUT_STEPS: usize = 10_000_000;
 
 /// The wire-level task enum every request lowers to.
 #[derive(Clone, Debug)]
@@ -154,6 +202,19 @@ impl Task {
         }
     }
 
+    /// Admission-control priority class: lower classes are shed first
+    /// when the service is over its queue watermarks.  Bulk batch work
+    /// (0) goes before interactive single evaluations (1); streaming
+    /// long tasks (2) are shed last — they are the most expensive to
+    /// restart client-side.
+    pub fn priority(&self) -> u8 {
+        match self {
+            Task::Batch { .. } => 0,
+            Task::EnergyOnly { .. } | Task::EnergyForces { .. } => 1,
+            Task::Relax { .. } | Task::MdRollout { .. } => 2,
+        }
+    }
+
     /// Structural validation, done once at submit time so workers only
     /// ever see well-formed tasks.
     pub fn validate(&self) -> Result<(), String> {
@@ -178,12 +239,24 @@ impl Task {
                 if *max_steps == 0 {
                     return Err("relax needs max_steps >= 1".to_string());
                 }
+                if *max_steps > MAX_RELAX_STEPS {
+                    return Err(format!(
+                        "relax max_steps {max_steps} exceeds the \
+                         {MAX_RELAX_STEPS}-step budget"
+                    ));
+                }
                 Ok(())
             }
             Task::MdRollout { structure, steps, dt } => {
                 check(structure)?;
                 if *steps == 0 {
                     return Err("rollout needs steps >= 1".to_string());
+                }
+                if *steps > MAX_ROLLOUT_STEPS {
+                    return Err(format!(
+                        "rollout steps {steps} exceeds the \
+                         {MAX_ROLLOUT_STEPS}-step budget"
+                    ));
                 }
                 if !dt.is_finite() || *dt <= 0.0 {
                     return Err(format!("rollout needs a finite dt > 0, got {dt}"));
@@ -379,6 +452,12 @@ impl Pending {
 /// the final [`Reply`].
 pub trait TaskSpec: Send + 'static {
     type Output;
+    /// Whether resubmitting this task after an ambiguous failure is
+    /// safe.  Pure evaluations are; streaming rollouts are not (a retry
+    /// would re-stream frames the caller may already have consumed).
+    /// `Client::submit_with_retry` refuses to retry non-idempotent
+    /// specs.
+    const IDEMPOTENT: bool = true;
     fn into_task(self) -> Task;
     fn decode(
         reply: Reply, frames: Vec<Frame>,
@@ -392,6 +471,7 @@ fn protocol_mismatch<O>(want: &str, got: &Reply) -> Result<O, ServiceError> {
 }
 
 /// Energy only.
+#[derive(Clone)]
 pub struct EnergyOnly(pub Structure);
 
 impl TaskSpec for EnergyOnly {
@@ -408,6 +488,7 @@ impl TaskSpec for EnergyOnly {
 }
 
 /// Energy + forces.
+#[derive(Clone)]
 pub struct EnergyForces(pub Structure);
 
 impl TaskSpec for EnergyForces {
@@ -426,6 +507,7 @@ impl TaskSpec for EnergyForces {
 }
 
 /// FIRE relaxation served as a task.
+#[derive(Clone)]
 pub struct Relax {
     pub structure: Structure,
     pub max_steps: usize,
@@ -446,7 +528,10 @@ impl TaskSpec for Relax {
     }
 }
 
-/// Streaming NVE rollout served as a task.
+/// Streaming NVE rollout served as a task.  Not idempotent: frames are
+/// streamed as they are computed, so a blind resubmission could hand
+/// the caller duplicated trajectory prefixes.
+#[derive(Clone)]
 pub struct MdRollout {
     pub structure: Structure,
     pub steps: usize,
@@ -455,6 +540,7 @@ pub struct MdRollout {
 
 impl TaskSpec for MdRollout {
     type Output = Trajectory;
+    const IDEMPOTENT: bool = false;
     fn into_task(self) -> Task {
         Task::MdRollout {
             structure: self.structure,
@@ -473,6 +559,7 @@ impl TaskSpec for MdRollout {
 }
 
 /// Multi-structure batch submission.
+#[derive(Clone)]
 pub struct Batch(pub Vec<Structure>);
 
 impl TaskSpec for Batch {
@@ -497,6 +584,16 @@ pub struct Request<T: TaskSpec> {
     pub deadline: Option<Duration>,
     /// registry endpoint name (`None` = the default endpoint)
     pub model: Option<String>,
+}
+
+impl<T: TaskSpec + Clone> Clone for Request<T> {
+    fn clone(&self) -> Self {
+        Request {
+            payload: self.payload.clone(),
+            deadline: self.deadline,
+            model: self.model.clone(),
+        }
+    }
 }
 
 impl<T: TaskSpec> Request<T> {
@@ -895,6 +992,37 @@ mod tests {
         assert!(Task::Relax { structure: structure(2), max_steps: 0 }
             .validate()
             .is_err());
+        // step-budget watchdogs: unbounded long tasks are refused at
+        // submit time, the documented caps still pass
+        assert!(Task::Relax {
+            structure: structure(2),
+            max_steps: MAX_RELAX_STEPS + 1,
+        }
+        .validate()
+        .is_err());
+        assert!(Task::Relax {
+            structure: structure(2),
+            max_steps: MAX_RELAX_STEPS,
+        }
+        .validate()
+        .is_ok());
+        assert!(Task::MdRollout {
+            structure: structure(2),
+            steps: MAX_ROLLOUT_STEPS + 1,
+            dt: 0.1,
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn task_priority_orders_shedding() {
+        let batch = Task::Batch { structures: vec![structure(1)] };
+        let eval = Task::EnergyForces { structure: structure(1) };
+        let roll =
+            Task::MdRollout { structure: structure(1), steps: 1, dt: 0.1 };
+        assert!(batch.priority() < eval.priority());
+        assert!(eval.priority() < roll.priority());
     }
 
     #[test]

@@ -25,7 +25,7 @@ use super::metrics::Metrics;
 use super::registry::Registry;
 use super::request::{EnergyForces, ForceResponse, Request, Structure, Ticket};
 use super::router::Variant;
-use super::service::{Client, Service};
+use super::service::{AdmissionConfig, Client, Service, SupervisorConfig};
 use crate::data::PaddedBatch;
 use crate::err;
 use crate::model::{batch_row_len, energy_forces_batch_par, GraphRef, Model};
@@ -36,6 +36,7 @@ use crate::tp::engine::{CacheStats, OpKey, PlanCache, Precision};
 use crate::tp::op::{apply_batch_par, BatchInputs};
 use crate::tp::ConvMethod;
 use crate::util::error::Result;
+use crate::util::failpoint;
 use crate::util::json::Json;
 
 /// Server configuration.
@@ -62,6 +63,11 @@ pub struct ServerConfig {
     /// Compiled-artifact backends bake their own precision and ignore
     /// this.
     pub precision: Precision,
+    /// worker supervision: heartbeat cadence, hang detection, and
+    /// bounded respawn backoff (see DESIGN.md §12)
+    pub supervisor: SupervisorConfig,
+    /// admission control: queue-depth watermarks and shed behavior
+    pub admission: AdmissionConfig,
 }
 
 impl Default for ServerConfig {
@@ -74,6 +80,8 @@ impl Default for ServerConfig {
             state_blob: "ff_state_init".to_string(),
             buckets: None,
             precision: Precision::F64,
+            supervisor: SupervisorConfig::default(),
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -291,11 +299,26 @@ impl Backend for NativeGauntBackend {
                 pb.dropped_edges, pb.n_edges
             ));
         }
-        // the per-batch registry resolution wins over the fixed model
-        if let Some(m) = model.or(self.model.as_ref()) {
-            return self.run_model(m, pb);
+        // chaos site: `error` fails the whole batch (typed Exec error at
+        // the service boundary), `nan` poisons row 0's energy so the
+        // worker's ExecGuard quarantines exactly that row, `delay`
+        // stretches execution for hang detection
+        let fault = failpoint::check("backend.run");
+        if let Some(failpoint::Fault::Error(m)) = fault {
+            return Err(err!("{m}"));
         }
-        self.run_surrogate(pb)
+        // the per-batch registry resolution wins over the fixed model
+        let mut out = if let Some(m) = model.or(self.model.as_ref()) {
+            self.run_model(m, pb)?
+        } else {
+            self.run_surrogate(pb)?
+        };
+        if matches!(fault, Some(failpoint::Fault::Nan)) {
+            if let Some(e) = out.0.first_mut() {
+                *e = f32::NAN;
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -540,8 +563,9 @@ impl ForceFieldServer {
     }
 
     /// Hot-swap a model into a named registry endpoint; returns the new
-    /// version.
-    pub fn promote(&self, name: &str, model: Arc<Model>) -> u64 {
+    /// version.  A snapshot with any non-finite parameter is refused
+    /// (the previous version keeps serving).
+    pub fn promote(&self, name: &str, model: Arc<Model>) -> Result<u64> {
         self.service.promote(name, model)
     }
 

@@ -29,19 +29,19 @@
 //! force evaluation; batched evaluations that started before the
 //! deadline run to completion.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use super::batcher::{BatchPolicy, BucketConfig, BucketedBatcher};
+use super::batcher::{BatchPolicy, BucketConfig, BucketedBatcher, PushError};
 use super::metrics::Metrics;
 use super::registry::{Registry, DEFAULT_ENDPOINT};
 use super::request::{
-    EnergyOut, ForceResponse, Frame, Pending, Reply, Request, RolloutSummary,
-    ServiceError, Task, TaskSpec, Ticket,
+    EnergyOut, ExecFault, ForceResponse, Frame, Pending, Reply, Request,
+    RolloutSummary, ServiceError, Task, TaskSpec, Ticket,
 };
 use super::router::Router;
 use super::server::{BackendSpec, NativeGauntBackend, ServerConfig};
@@ -54,6 +54,137 @@ use crate::runtime::Tensor;
 use crate::tp::engine::{CacheStats, PlanCache};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
+use crate::util::{failpoint, sync};
+
+// ---------------------------------------------------------------------
+// resilience configuration
+// ---------------------------------------------------------------------
+
+/// Supervisor tuning: how dead/hung workers are detected and respawned.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// run the supervisor thread at all
+    pub enabled: bool,
+    /// supervisor scan period (also bounds shutdown-join latency)
+    pub heartbeat_interval: Duration,
+    /// a busy worker whose heartbeat is staler than this is declared
+    /// hung, detached, and replaced
+    pub hang_timeout: Duration,
+    /// lifetime respawn budget per worker slot — a crash loop must
+    /// converge to a smaller pool, not spin forever
+    pub max_restarts: u32,
+    /// first respawn delay; doubles per restart of the slot
+    pub backoff_base: Duration,
+    /// respawn delay ceiling
+    pub backoff_cap: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            enabled: true,
+            heartbeat_interval: Duration::from_millis(20),
+            hang_timeout: Duration::from_secs(2),
+            max_restarts: 8,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Admission-control watermarks, as fractions of total queue capacity
+/// (the sum of every bucket's `max_queue`).
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// at or above this queue-depth fraction, shed priority-0 work
+    /// (Batch)
+    pub low_watermark: f64,
+    /// at or above this fraction, also shed priority-1 work
+    /// (EnergyOnly/EnergyForces); only streaming long tasks get through
+    pub high_watermark: f64,
+    /// the `retry_after` hint attached to `ServiceError::Overloaded`
+    pub retry_after: Duration,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            low_watermark: 0.5,
+            high_watermark: 0.75,
+            retry_after: Duration::from_millis(20),
+        }
+    }
+}
+
+/// The admission state machine's observable position.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// below the low watermark: everything is admitted
+    Healthy,
+    /// between watermarks (or above): lower-priority classes are shed
+    Shedding,
+    /// `Service::drain` was called: every new submission is refused,
+    /// queued work keeps executing
+    Draining,
+}
+
+/// Client-side retry tuning for [`Client::submit_with_retry`].
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// total submit attempts (first try included)
+    pub max_attempts: u32,
+    /// first backoff; doubles per attempt (full jitter on top)
+    pub base: Duration,
+    /// backoff ceiling
+    pub cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base: Duration::from_millis(5),
+            cap: Duration::from_millis(500),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// worker heartbeats
+// ---------------------------------------------------------------------
+
+/// Shared heartbeat cell between one worker thread and the supervisor.
+/// `beat_ms` is milliseconds since `ServiceShared.start` — relative so
+/// it fits an atomic without wall-clock syscalls on the hot path.
+struct WorkerBeat {
+    busy: AtomicBool,
+    beat_ms: AtomicU64,
+}
+
+impl WorkerBeat {
+    fn new(now_ms: u64) -> WorkerBeat {
+        WorkerBeat {
+            busy: AtomicBool::new(false),
+            beat_ms: AtomicU64::new(now_ms),
+        }
+    }
+
+    fn touch(&self, s: &ServiceShared) {
+        self.beat_ms
+            .store(s.start.elapsed().as_millis() as u64, Ordering::Relaxed);
+    }
+}
+
+/// One supervised worker position: its heartbeat, its live thread (if
+/// any), and its restart bookkeeping.
+struct WorkerSlot {
+    beat: Arc<WorkerBeat>,
+    handle: Option<JoinHandle<()>>,
+    restarts: u32,
+    /// ms-since-start timestamp before which this slot must not be
+    /// respawned (exponential backoff)
+    respawn_at: Option<u64>,
+}
 
 struct ServiceShared {
     backend: Arc<dyn super::server::Backend>,
@@ -66,13 +197,25 @@ struct ServiceShared {
     /// fallback neighbor cutoff (a resolved model's own `r_cut` wins)
     r_cut: f64,
     next_id: AtomicU64,
+    /// epoch for heartbeat timestamps
+    start: Instant,
+    /// total queue capacity (admission watermark denominator)
+    capacity: usize,
+    /// `Service::drain` was called: refuse all new submissions
+    draining: AtomicBool,
+    /// shutdown began: the supervisor must stop respawning
+    shutdown: AtomicBool,
+    slots: Mutex<Vec<WorkerSlot>>,
+    supervisor: SupervisorConfig,
+    admission: AdmissionConfig,
 }
 
 /// The serving coordinator: typed tasks, shape-bucketed batching,
-/// versioned model endpoints with hot swap.
+/// versioned model endpoints with hot swap, and a supervisor that
+/// respawns dead/hung workers.
 pub struct Service {
     shared: Arc<ServiceShared>,
-    workers: Vec<JoinHandle<()>>,
+    supervisor: Option<JoinHandle<()>>,
 }
 
 impl Service {
@@ -95,15 +238,29 @@ impl Service {
 
     /// Hot-swap `model` into endpoint `name` (warming its plans first);
     /// returns the new version.  In-flight batches keep the version
-    /// they resolved — a swap can never tear a batch.
-    pub fn promote(&self, name: &str, model: Arc<Model>) -> u64 {
+    /// they resolved — a swap can never tear a batch.  A snapshot with
+    /// non-finite parameters is refused (`Err`) and the old version
+    /// keeps serving.
+    pub fn promote(&self, name: &str, model: Arc<Model>) -> Result<u64> {
         model.warm();
         self.shared.registry.register(name, model)
     }
 
     /// Replace the artifact state tensors (XLA serving path).
     pub fn set_state(&self, state: Vec<Tensor>) {
-        *self.shared.state.write().unwrap() = Arc::new(state);
+        *sync::write(&self.shared.state) = Arc::new(state);
+    }
+
+    /// Stop admitting new work (every submission is rejected with a
+    /// "draining" message) while queued and in-flight tasks run to
+    /// completion.  Irreversible for this service instance.
+    pub fn drain(&self) {
+        self.shared.draining.store(true, Ordering::Relaxed);
+    }
+
+    /// Where the admission state machine currently sits.
+    pub fn health(&self) -> HealthState {
+        health_of(&self.shared)
     }
 
     /// Snapshot of the global plan cache — the numbers folded into
@@ -122,13 +279,37 @@ impl Service {
     }
 
     /// Close the queue (failing every still-queued request
-    /// deterministically) and join the workers.
+    /// deterministically), stop the supervisor, and join the workers.
     pub fn shutdown(self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
         self.shared.queue.close();
-        for w in self.workers {
-            let _ = w.join();
+        if let Some(h) = self.supervisor {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = {
+            let mut slots = sync::lock(&self.shared.slots);
+            slots.iter_mut().filter_map(|sl| sl.handle.take()).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        // workers detached after a hang keep running until the closed
+        // queue hands them None; they hold their own Arc<ServiceShared>
+        // and exit on their own, so they are not joined here
+    }
+}
+
+fn health_of(s: &ServiceShared) -> HealthState {
+    if s.draining.load(Ordering::Relaxed) {
+        return HealthState::Draining;
+    }
+    if s.capacity > 0 {
+        let frac = s.queue.len() as f64 / s.capacity as f64;
+        if frac >= s.admission.low_watermark {
+            return HealthState::Shedding;
         }
     }
+    HealthState::Healthy
 }
 
 /// Cloneable, thread-safe submission handle.
@@ -168,6 +349,30 @@ impl Client {
                 )));
             }
         }
+        // admission control: draining refuses everything; between the
+        // watermarks the lowest priority class is shed first, above the
+        // high watermark everything but streaming long tasks is shed.
+        // Every shed ALSO counts in `rejected` so `requests` (counted
+        // only for admitted submissions) keeps reconciling.
+        if s.draining.load(Ordering::Relaxed) {
+            s.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ServiceError::Rejected(
+                "service is draining; no new work is admitted".to_string(),
+            ));
+        }
+        if s.capacity > 0 {
+            let frac = s.queue.len() as f64 / s.capacity as f64;
+            let adm = &s.admission;
+            let shed = (frac >= adm.high_watermark && task.priority() <= 1)
+                || (frac >= adm.low_watermark && task.priority() == 0);
+            if shed {
+                s.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                s.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(ServiceError::Overloaded {
+                    retry_after: adm.retry_after,
+                });
+            }
+        }
         let id = s.next_id.fetch_add(1, Ordering::Relaxed);
         let (ticket, pending) = Ticket::<T>::make(id, task, model, deadline);
         s.metrics.requests.fetch_add(1, Ordering::Relaxed);
@@ -175,10 +380,67 @@ impl Client {
             Ok(()) => Ok(ticket),
             Err((pending, why)) => {
                 s.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                let e = match why {
+                    PushError::NoFit(m) => ServiceError::Rejected(m),
+                    PushError::Full { .. } => {
+                        s.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                        ServiceError::Overloaded {
+                            retry_after: s.admission.retry_after,
+                        }
+                    }
+                    PushError::Closed => ServiceError::Shutdown,
+                };
                 // the ticket dies here; fail its channel explicitly so
                 // even a caller that raced a clone of it unblocks
-                pending.finish(Err(ServiceError::Rejected(why.clone())));
-                Err(ServiceError::Rejected(why))
+                pending.finish(Err(e.clone()));
+                Err(e)
+            }
+        }
+    }
+
+    /// [`Client::submit`] with jittered-exponential-backoff retries on
+    /// [`ServiceError::Overloaded`].  Retries only idempotent specs
+    /// (`T::IDEMPOTENT`; an `MdRollout` retry could duplicate streamed
+    /// frames) and is deadline-aware: it gives up with
+    /// [`ServiceError::DeadlineExceeded`] rather than sleep past the
+    /// request's own deadline budget.  All other errors pass through
+    /// unretried.
+    pub fn submit_with_retry<T: TaskSpec + Clone>(
+        &self, req: Request<T>, policy: RetryPolicy,
+    ) -> std::result::Result<Ticket<T>, ServiceError> {
+        let started = Instant::now();
+        let mut rng = Rng::new(
+            self.shared.next_id.load(Ordering::Relaxed)
+                ^ 0x9e37_79b9_7f4a_7c15,
+        );
+        let mut attempt = 0u32;
+        loop {
+            match self.submit(req.clone()) {
+                Err(ServiceError::Overloaded { retry_after })
+                    if T::IDEMPOTENT =>
+                {
+                    attempt += 1;
+                    if attempt >= policy.max_attempts.max(1) {
+                        return Err(ServiceError::Overloaded { retry_after });
+                    }
+                    // exponential envelope, floored at the server's
+                    // hint, with full jitter so synchronized clients
+                    // don't re-stampede in lockstep
+                    let envelope = (policy.base.as_secs_f64()
+                        * 2f64.powi(attempt as i32 - 1))
+                    .min(policy.cap.as_secs_f64())
+                    .max(retry_after.as_secs_f64());
+                    let backoff = Duration::from_secs_f64(
+                        rng.uniform(envelope * 0.5, envelope),
+                    );
+                    if let Some(d) = req.deadline {
+                        if started.elapsed() + backoff >= d {
+                            return Err(ServiceError::DeadlineExceeded);
+                        }
+                    }
+                    std::thread::sleep(backoff);
+                }
+                other => return other,
             }
         }
     }
@@ -188,6 +450,11 @@ impl Client {
         &self, req: Request<T>,
     ) -> std::result::Result<T::Output, ServiceError> {
         self.submit(req)?.wait()
+    }
+
+    /// Where the admission state machine currently sits.
+    pub fn health(&self) -> HealthState {
+        health_of(&self.shared)
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -320,32 +587,142 @@ impl ServiceBuilder {
                     default_buckets(spec.n_atoms, spec.n_edges, cfg.policy)
                 })
         };
+        let queue = BucketedBatcher::new(buckets);
+        let capacity = queue.capacity();
         let shared = Arc::new(ServiceShared {
             backend: spec.backend,
             router: Router::new(spec.variants),
-            queue: BucketedBatcher::new(buckets),
+            queue,
             registry: Registry::new(),
             metrics: Metrics::new(),
             state: RwLock::new(Arc::new(spec.state)),
             r_cut: cfg.r_cut,
             next_id: AtomicU64::new(1),
+            start: Instant::now(),
+            capacity,
+            draining: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            slots: Mutex::new(Vec::new()),
+            supervisor: cfg.supervisor,
+            admission: cfg.admission,
         });
         if let Some(m) = model {
             m.warm();
-            shared.registry.register(DEFAULT_ENDPOINT, m);
+            shared.registry.register(DEFAULT_ENDPOINT, m)?;
         }
-        let mut workers = Vec::new();
-        for w in 0..cfg.n_workers.max(1) {
+        {
+            let mut slots = sync::lock(&shared.slots);
+            for w in 0..cfg.n_workers.max(1) {
+                slots.push(spawn_worker(&shared, w));
+            }
+        }
+        let supervisor = if cfg.supervisor.enabled {
             let s = shared.clone();
-            workers.push(
+            Some(
                 std::thread::Builder::new()
-                    .name(format!("svc-worker-{w}"))
-                    .spawn(move || worker_loop(&s))
-                    .expect("spawn worker"),
-            );
-        }
-        Ok(Service { shared, workers })
+                    .name("svc-supervisor".to_string())
+                    .spawn(move || supervisor_loop(&s))
+                    .expect("spawn supervisor"),
+            )
+        } else {
+            None
+        };
+        Ok(Service { shared, supervisor })
     }
+}
+
+/// Spawn one worker thread into a fresh [`WorkerSlot`].
+fn spawn_worker(shared: &Arc<ServiceShared>, idx: usize) -> WorkerSlot {
+    let now_ms = shared.start.elapsed().as_millis() as u64;
+    let beat = Arc::new(WorkerBeat::new(now_ms));
+    let s = shared.clone();
+    let b = beat.clone();
+    let handle = std::thread::Builder::new()
+        .name(format!("svc-worker-{idx}"))
+        .spawn(move || worker_loop(&s, &b))
+        .expect("spawn worker");
+    WorkerSlot { beat, handle: Some(handle), restarts: 0, respawn_at: None }
+}
+
+/// Supervisor: scan worker slots every `heartbeat_interval`, reap dead
+/// threads, detach hung ones, and respawn with exponential backoff up
+/// to `max_restarts` per slot.
+fn supervisor_loop(s: &Arc<ServiceShared>) {
+    let cfg = s.supervisor;
+    let hang_ms = cfg.hang_timeout.as_millis() as u64;
+    loop {
+        std::thread::sleep(cfg.heartbeat_interval);
+        if s.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        let now_ms = s.start.elapsed().as_millis() as u64;
+        let mut respawn: Vec<usize> = Vec::new();
+        {
+            let mut slots = sync::lock(&s.slots);
+            for (i, slot) in slots.iter_mut().enumerate() {
+                if let Some(h) = &slot.handle {
+                    if h.is_finished() {
+                        // the worker died (a panic escaped the batch
+                        // catch — e.g. inside the queue itself); reap
+                        // and schedule a replacement
+                        if let Some(h) = slot.handle.take() {
+                            let _ = h.join();
+                        }
+                        schedule_respawn(slot, now_ms, &cfg);
+                    } else if slot.beat.busy.load(Ordering::Relaxed)
+                        && now_ms
+                            .saturating_sub(
+                                slot.beat.beat_ms.load(Ordering::Relaxed),
+                            )
+                            > hang_ms
+                    {
+                        // hung: the heartbeat went stale mid-batch.
+                        // Detach the thread (it keeps exclusive
+                        // ownership of its batch, so replies stay
+                        // exactly-once; it exits when the queue closes)
+                        // and backfill the slot.
+                        s.metrics
+                            .hung_detected
+                            .fetch_add(1, Ordering::Relaxed);
+                        drop(slot.handle.take());
+                        schedule_respawn(slot, now_ms, &cfg);
+                    }
+                }
+                if slot.handle.is_none() {
+                    if let Some(at) = slot.respawn_at {
+                        if now_ms >= at && slot.restarts < cfg.max_restarts {
+                            respawn.push(i);
+                        }
+                    }
+                }
+            }
+            for &i in &respawn {
+                if s.shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                let fresh = spawn_worker(s, i);
+                let slot = &mut slots[i];
+                let restarts = slot.restarts + 1;
+                *slot = fresh;
+                slot.restarts = restarts;
+                s.metrics.restarts.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Exponential backoff: base * 2^restarts, capped.
+fn schedule_respawn(
+    slot: &mut WorkerSlot, now_ms: u64, cfg: &SupervisorConfig,
+) {
+    if slot.respawn_at.is_some() {
+        return;
+    }
+    let base = cfg.backoff_base.as_millis() as u64;
+    let cap = cfg.backoff_cap.as_millis() as u64;
+    let exp = slot.restarts.min(20);
+    let delay = base.saturating_mul(1u64 << exp).min(cap.max(base));
+    slot.respawn_at = Some(now_ms + delay);
 }
 
 /// Width-halving bucket ladder up to the spec capacity, each bucket's
@@ -369,13 +746,32 @@ fn default_buckets(
 // worker side
 // ---------------------------------------------------------------------
 
-fn worker_loop(s: &Arc<ServiceShared>) {
-    while let Some((bucket_idx, batch)) = s.queue.next_batch() {
+fn worker_loop(s: &Arc<ServiceShared>, beat: &WorkerBeat) {
+    loop {
+        beat.busy.store(false, Ordering::Relaxed);
+        beat.touch(s);
+        let Some((bucket_idx, batch)) = s.queue.next_batch() else {
+            return;
+        };
+        beat.busy.store(true, Ordering::Relaxed);
+        beat.touch(s);
+        // chaos site OUTSIDE the catch below: a `panic` policy here (or
+        // escaping next_batch above) kills this worker thread outright,
+        // exercising supervisor dead-detection + respawn; the batch
+        // unwinds through reply-on-drop, so callers get Dropped, never
+        // a hang.  An `error` policy fails the whole batch typed.
+        match failpoint::check("svc.worker.tick") {
+            Some(failpoint::Fault::Error(m)) => {
+                fail_batch(s, batch, ExecFault::Backend(m));
+                continue;
+            }
+            Some(failpoint::Fault::Nan) | None => {}
+        }
         // a panicking backend must not kill the worker — and the moved
         // batch unwinds through the reply-on-drop guards, so every
         // caller gets Err(Dropped) instead of a hang
         let outcome = catch_unwind(AssertUnwindSafe(|| {
-            process_batch(s, bucket_idx, batch);
+            process_batch(s, beat, bucket_idx, batch);
         }));
         if outcome.is_err() {
             s.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
@@ -383,7 +779,28 @@ fn worker_loop(s: &Arc<ServiceShared>) {
     }
 }
 
-fn process_batch(s: &Arc<ServiceShared>, bucket_idx: usize, batch: Vec<Pending>) {
+/// Fail every request of a batch with the same typed execution fault.
+fn fail_batch(s: &ServiceShared, batch: Vec<Pending>, fault: ExecFault) {
+    for p in batch {
+        s.metrics.failed.fetch_add(1, Ordering::Relaxed);
+        p.finish(Err(ServiceError::Exec(fault.clone())));
+    }
+}
+
+fn process_batch(
+    s: &Arc<ServiceShared>, beat: &WorkerBeat, bucket_idx: usize,
+    batch: Vec<Pending>,
+) {
+    // chaos site INSIDE the panic catch: `delay` stretches batch
+    // execution (hang detection, cancel races), `error` fails the batch
+    // typed while the worker survives
+    match failpoint::check("svc.worker.batch") {
+        Some(failpoint::Fault::Error(m)) => {
+            fail_batch(s, batch, ExecFault::Backend(m));
+            return;
+        }
+        Some(failpoint::Fault::Nan) | None => {}
+    }
     let now = Instant::now();
     let mut evals: Vec<Pending> = Vec::new();
     let mut longs: Vec<Pending> = Vec::new();
@@ -412,19 +829,19 @@ fn process_batch(s: &Arc<ServiceShared>, bucket_idx: usize, batch: Vec<Pending>)
             }
         }
         for (name, group) in groups {
-            run_eval_group(s, bucket_idx, name.as_deref(), group);
+            run_eval_group(s, beat, bucket_idx, name.as_deref(), group);
         }
     }
     for p in longs {
-        run_long(s, bucket_idx, p);
+        run_long(s, beat, bucket_idx, p);
     }
 }
 
 /// Evaluate a group of batchable tasks (same endpoint) as padded
 /// chunks through the backend.
 fn run_eval_group(
-    s: &Arc<ServiceShared>, bucket_idx: usize, name: Option<&str>,
-    group: Vec<Pending>,
+    s: &Arc<ServiceShared>, beat: &WorkerBeat, bucket_idx: usize,
+    name: Option<&str>, group: Vec<Pending>,
 ) {
     let bucket = s.queue.bucket(bucket_idx);
     let mv = s.registry.resolve(name);
@@ -456,14 +873,15 @@ fn run_eval_group(
     }
     // route into variant-sized chunks and execute; the model Arc
     // resolved above is used for EVERY chunk of this group
-    let state = s.state.read().unwrap().clone();
-    type RowResult = std::result::Result<(f64, Vec<[f64; 3]>), String>;
+    let state = sync::read(&s.state).clone();
+    type RowResult = std::result::Result<(f64, Vec<[f64; 3]>), ExecFault>;
     let mut row_results: Vec<RowResult> = Vec::with_capacity(graphs.len());
     let plan = s.router.plan(graphs.len());
     let mut offset = 0usize;
     for (variant, k) in plan {
         let chunk = &graphs[offset..offset + k];
         offset += k;
+        beat.touch(s);
         let t_exec = Instant::now();
         let pb = PaddedBatch::from_graphs(
             chunk, variant.batch, bucket.max_atoms, bucket.max_edges, r_cut,
@@ -476,24 +894,39 @@ fn run_eval_group(
         observe_chunk(s, &pb, variant.batch, k);
         match res {
             Ok((energy, forces)) => {
+                // ExecGuard: validate each row at the worker boundary.
+                // A non-finite energy/force (f32 overflow, diverged
+                // input, injected NaN) fails ONLY its own row — the
+                // quarantine keeps batchmates' finite results intact.
                 for (g_idx, g) in chunk.iter().enumerate() {
                     let na = g.pos.len();
                     let mut f = Vec::with_capacity(na);
+                    let mut finite = energy[g_idx].is_finite();
                     for a in 0..na {
                         let base = (g_idx * bucket.max_atoms + a) * 3;
-                        f.push([
+                        let row = [
                             forces[base] as f64,
                             forces[base + 1] as f64,
                             forces[base + 2] as f64,
-                        ]);
+                        ];
+                        finite &= row.iter().all(|c| c.is_finite());
+                        f.push(row);
                     }
-                    row_results.push(Ok((energy[g_idx] as f64, f)));
+                    if finite {
+                        row_results.push(Ok((energy[g_idx] as f64, f)));
+                    } else {
+                        row_results.push(Err(ExecFault::NonFinite(format!(
+                            "energy/forces for the {na}-atom structure in \
+                             batch row {g_idx} are not finite; the row was \
+                             quarantined"
+                        ))));
+                    }
                 }
             }
             Err(e) => {
-                let msg = format!("{e}");
+                let fault = ExecFault::Backend(format!("{e}"));
                 for _ in 0..k {
-                    row_results.push(Err(msg.clone()));
+                    row_results.push(Err(fault.clone()));
                 }
             }
         }
@@ -615,7 +1048,9 @@ fn eval_single(
 /// backend one padded structure at a time.  Cancellation, deadline, and
 /// backend errors surface as typed errors; rollout frames stream as the
 /// integration advances.
-fn run_long(s: &Arc<ServiceShared>, bucket_idx: usize, p: Pending) {
+fn run_long(
+    s: &Arc<ServiceShared>, beat: &WorkerBeat, bucket_idx: usize, p: Pending,
+) {
     let Pending { id, task, model: name, enqueued, deadline, cancel, reply } =
         p;
     let mut reply = reply;
@@ -646,17 +1081,28 @@ fn run_long(s: &Arc<ServiceShared>, bucket_idx: usize, p: Pending) {
     if let Some(m) = &model {
         if species.len() > m.cfg.max_atoms {
             s.metrics.failed.fetch_add(1, Ordering::Relaxed);
-            reply.finish(Err(ServiceError::Exec(format!(
-                "structure has {} atoms, model capacity is {}",
-                species.len(),
-                m.cfg.max_atoms
+            reply.finish(Err(ServiceError::Exec(ExecFault::Backend(
+                format!(
+                    "structure has {} atoms, model capacity is {}",
+                    species.len(),
+                    m.cfg.max_atoms
+                ),
             ))));
             return;
         }
     }
     let mut learned =
         model.as_ref().map(|m| LearnedPotential::new(m.clone(), species.clone()));
-    let state = s.state.read().unwrap().clone();
+    let state = sync::read(&s.state).clone();
+    // runtime force-evaluation budget: the submit-time step caps bound
+    // the REQUESTED work, this bounds the ACTUAL work — an integrator
+    // bug (or a pathological surface) re-evaluating without advancing
+    // must surface as a typed fault, not a worker pinned forever
+    let budget: u64 = match &kind {
+        Long::Relax { max_steps } => (*max_steps as u64 + 2) * 4,
+        Long::Roll { steps, .. } => (*steps as u64 + 2) * 4,
+    };
+    let force_evals = Cell::new(0u64);
     // first typed error wins; once set, the provider returns zero forces
     // so FIRE/BAOAB wind down in O(1) steps instead of integrating noise
     let err: RefCell<Option<ServiceError>> = RefCell::new(None);
@@ -667,6 +1113,7 @@ fn run_long(s: &Arc<ServiceShared>, bucket_idx: usize, p: Pending) {
         if err.borrow().is_some() {
             return zeros;
         }
+        beat.touch(s);
         if cancel_flag.load(Ordering::Relaxed) {
             *err.borrow_mut() = Some(ServiceError::Canceled);
             return zeros;
@@ -675,19 +1122,57 @@ fn run_long(s: &Arc<ServiceShared>, bucket_idx: usize, p: Pending) {
             *err.borrow_mut() = Some(ServiceError::DeadlineExceeded);
             return zeros;
         }
-        match &mut learned {
+        force_evals.set(force_evals.get() + 1);
+        if force_evals.get() > budget {
+            *err.borrow_mut() = Some(ServiceError::Exec(
+                ExecFault::BudgetExhausted(format!(
+                    "long task spent {} force evaluations (budget {budget})",
+                    force_evals.get()
+                )),
+            ));
+            return zeros;
+        }
+        let (mut e, f) = match &mut learned {
             Some(lp) => lp.compute(pos),
             None => match eval_single(
                 s, bucket, &state, pos, &species_for_provider,
             ) {
                 Ok(r) => r,
-                Err(e) => {
-                    *err.borrow_mut() =
-                        Some(ServiceError::Exec(format!("{e}")));
-                    zeros
+                Err(backend_err) => {
+                    *err.borrow_mut() = Some(ServiceError::Exec(
+                        ExecFault::Backend(format!("{backend_err}")),
+                    ));
+                    return zeros;
                 }
             },
+        };
+        // chaos site: `nan` poisons this evaluation's energy (the
+        // containment below turns it into a typed NonFinite), `error`
+        // fails the task typed
+        match failpoint::check("svc.rollout.force") {
+            Some(failpoint::Fault::Nan) => e = f64::NAN,
+            Some(failpoint::Fault::Error(m)) => {
+                *err.borrow_mut() =
+                    Some(ServiceError::Exec(ExecFault::Backend(m)));
+                return zeros;
+            }
+            None => {}
         }
+        // ExecGuard for long tasks: a diverged or poisoned force
+        // evaluation stops the trajectory with a typed fault instead of
+        // integrating NaNs into every later frame
+        if !e.is_finite()
+            || f.iter().any(|v| v.iter().any(|c| !c.is_finite()))
+        {
+            *err.borrow_mut() =
+                Some(ServiceError::Exec(ExecFault::NonFinite(format!(
+                    "force evaluation {} returned non-finite \
+                     energy/forces; trajectory stopped",
+                    force_evals.get()
+                ))));
+            return zeros;
+        }
+        (e, f)
     };
     match kind {
         Long::Relax { max_steps } => {
@@ -720,6 +1205,25 @@ fn run_long(s: &Arc<ServiceShared>, bucket_idx: usize, p: Pending) {
             let mut streamed = 0usize;
             md.rollout_with(&mut provider, &mut rng, steps, |step, md| {
                 if err.borrow().is_some() {
+                    return false;
+                }
+                // frame-level ExecGuard: even with finite forces the
+                // integration itself can diverge (dt too large); a
+                // non-finite frame must never be streamed to the client
+                let kinetic = md.kinetic_energy();
+                if !md.potential_energy.is_finite()
+                    || !kinetic.is_finite()
+                    || md
+                        .pos
+                        .iter()
+                        .any(|v| v.iter().any(|c| !c.is_finite()))
+                {
+                    *err.borrow_mut() = Some(ServiceError::Exec(
+                        ExecFault::NonFinite(format!(
+                            "integration diverged at step {step}: frame \
+                             contains non-finite values"
+                        )),
+                    ));
                     return false;
                 }
                 reply.frame(Frame {

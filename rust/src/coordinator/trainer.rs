@@ -366,8 +366,10 @@ impl NativeTrainer {
     /// Hot-promote the current parameters into a live service endpoint
     /// (the checkpoint-to-production path); returns the new registry
     /// version.  Training can keep stepping: the service serves the
-    /// snapshot, not the live parameters.
-    pub fn promote_to(&self, service: &Service, name: &str) -> u64 {
+    /// snapshot, not the live parameters.  A snapshot whose parameters
+    /// went non-finite (diverged training) is refused and the endpoint
+    /// keeps serving its previous version.
+    pub fn promote_to(&self, service: &Service, name: &str) -> Result<u64> {
         service.promote(name, Arc::new(self.snapshot_model()))
     }
 }
@@ -438,6 +440,50 @@ mod tests {
         let tr2 = NativeTrainer::from_checkpoint(
             &path, NativeTrainConfig::default()).unwrap();
         assert_eq!(tr.model.params, tr2.model.params);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_checkpoint_is_refused() {
+        let cfg = ModelConfig { n_layers: 1, ..Default::default() };
+        let tr = NativeTrainer::new(Model::new(cfg, 11),
+                                    NativeTrainConfig::default());
+        let path = std::env::temp_dir().join("gaunt_tp_ckpt_trunc.json");
+        let path = path.to_str().unwrap().to_string();
+        tr.checkpoint(&path).unwrap();
+        // the atomic write leaves no temp file behind
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        let text = std::fs::read_to_string(&path).unwrap();
+        // chop the tail off, as a crash mid-write (without the atomic
+        // temp-file + rename protocol) would
+        std::fs::write(&path, &text[..text.len() * 2 / 3]).unwrap();
+        let err = NativeTrainer::from_checkpoint(
+            &path, NativeTrainConfig::default())
+            .expect_err("truncated checkpoint must be refused");
+        assert!(err.to_string().contains("Corrupt checkpoint"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tampered_checkpoint_fails_the_checksum() {
+        let cfg = ModelConfig { n_layers: 1, ..Default::default() };
+        let tr = NativeTrainer::new(Model::new(cfg, 13),
+                                    NativeTrainConfig::default());
+        let path = std::env::temp_dir().join("gaunt_tp_ckpt_tamper.json");
+        let path = path.to_str().unwrap().to_string();
+        tr.checkpoint(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let cs = crate::model::params_checksum(&tr.model.params);
+        assert!(text.contains(&cs), "checkpoint must embed its checksum");
+        assert_ne!(cs, "0000000000000000");
+        std::fs::write(&path, text.replace(&cs, "0000000000000000"))
+            .unwrap();
+        let err = NativeTrainer::from_checkpoint(
+            &path, NativeTrainConfig::default())
+            .expect_err("checksum mismatch must be refused");
+        let msg = err.to_string();
+        assert!(msg.contains("Corrupt checkpoint"), "{msg}");
+        assert!(msg.contains("checksum mismatch"), "{msg}");
         let _ = std::fs::remove_file(&path);
     }
 

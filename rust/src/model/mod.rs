@@ -72,6 +72,7 @@ use crate::tp::gaunt::{ConvMethod, GauntPlan, GauntScratch};
 use crate::tp::irreps::Irreps;
 use crate::tp::many_body::{ManyBodyPlan, ManyBodyScratch};
 use crate::util::error::Result;
+use crate::util::failpoint;
 use crate::util::json::{self, Json};
 use crate::util::pool;
 use crate::util::rng::Rng;
@@ -816,9 +817,10 @@ impl Model {
 
     // --- serialization (util::json; no serde offline) ---
 
-    /// Checkpoint as a JSON document (config + flat parameters).  The
-    /// node layout is also embedded as an `irreps` string for human
-    /// readers and layout-checking tools.
+    /// Checkpoint as a JSON document (config + flat parameters + an
+    /// FNV-1a checksum over the parameter bits).  The node layout is
+    /// also embedded as an `irreps` string for human readers and
+    /// layout-checking tools.
     pub fn to_json(&self) -> Json {
         let c = &self.cfg;
         let method = match c.method {
@@ -842,6 +844,7 @@ impl Model {
                 ("irreps", Json::Str(format!("{}", self.nir))),
             ])),
             ("params", Json::arr_f64(&self.params)),
+            ("checksum", Json::Str(params_checksum(&self.params))),
         ])
     }
 
@@ -893,22 +896,88 @@ impl Model {
                 params.len(), cfg.n_params()
             ));
         }
+        // verify the parameter checksum when present (checkpoints written
+        // before the checksum era have no field and are accepted as-is);
+        // a mismatch means the file was truncated or bit-rotted after the
+        // atomic rename — refuse it rather than serve garbage
+        if let Some(stored) = doc.get("checksum").and_then(Json::as_str) {
+            let actual = params_checksum(&params);
+            if stored != actual {
+                return Err(err!(
+                    "parameter checksum mismatch (stored {stored}, \
+                     recomputed {actual})"
+                ));
+            }
+        }
         Ok(Model::from_params(cfg, params))
     }
 
-    /// Write a JSON checkpoint to disk.
+    /// Write a JSON checkpoint to disk **atomically**: the document goes
+    /// to a temp file in the same directory, is fsynced, and only then
+    /// renamed over `path`.  A crash (or an injected `ckpt.write` fault)
+    /// at any point leaves either the old checkpoint or the new one —
+    /// never a torn file.
     pub fn save(&self, path: &str) -> Result<()> {
-        std::fs::write(path, self.to_json().to_string())
-            .map_err(|e| err!("checkpoint write {path}: {e}"))
+        use std::io::Write as _;
+        let tmp = format!("{path}.tmp");
+        let text = self.to_json().to_string();
+        let res = (|| -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(text.as_bytes())?;
+            f.sync_all()?;
+            Ok(())
+        })();
+        if let Err(e) = res {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(err!("checkpoint write {path}: {e}"));
+        }
+        // chaos site: simulate a crash between the durable temp write
+        // and the rename — the original checkpoint must stay intact
+        if let Some(failpoint::Fault::Error(m)) =
+            failpoint::check("ckpt.write")
+        {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(err!("checkpoint write {path}: {m}"));
+        }
+        std::fs::rename(&tmp, path).map_err(|e| {
+            let _ = std::fs::remove_file(&tmp);
+            err!("checkpoint write {path}: rename failed: {e}")
+        })
     }
 
-    /// Load a JSON checkpoint from disk.
+    /// Load a JSON checkpoint from disk.  Parse failures, layout
+    /// mismatches, and checksum mismatches all surface as a typed
+    /// "Corrupt checkpoint" error naming the path.
     pub fn load(path: &str) -> Result<Model> {
+        if let Some(f) = failpoint::check("ckpt.load") {
+            let m = match f {
+                failpoint::Fault::Error(m) => m,
+                failpoint::Fault::Nan => "injected load fault".to_string(),
+            };
+            return Err(err!("Corrupt checkpoint {path}: {m}"));
+        }
         let text = std::fs::read_to_string(path)
             .map_err(|e| err!("checkpoint read {path}: {e}"))?;
-        let doc = json::parse(&text).map_err(|e| err!("{path}: {e}"))?;
+        let doc = json::parse(&text)
+            .map_err(|e| err!("Corrupt checkpoint {path}: {e}"))?;
         Model::from_json(&doc)
+            .map_err(|e| err!("Corrupt checkpoint {path}: {e}"))
     }
+}
+
+/// FNV-1a 64 over the parameter bit patterns (sign-of-zero normalized,
+/// since the JSON integer fast path prints `-0.0` as `0`).  Fast,
+/// dependency-free, and stable across platforms — this is an integrity
+/// check against truncation/bit rot, not a cryptographic digest.
+pub fn params_checksum(params: &[f64]) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for p in params {
+        for b in (*p + 0.0).to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    format!("{h:016x}")
 }
 
 /// One structure by reference, for batched inference.

@@ -1,0 +1,441 @@
+//! Deterministic, zero-dependency fault injection (the `fail`-crate
+//! idea, hand-rolled for the offline workspace).
+//!
+//! A **site** is a named point in the code — `"backend.run"`,
+//! `"svc.worker.tick"` — that calls [`check`] on its hot path.  When no
+//! policy is configured for any site, `check` compiles down to one
+//! relaxed atomic load and a branch: no allocation, no lock, no string
+//! hashing.  That is the whole cost the serving hot paths pay in
+//! production.
+//!
+//! A **policy** attaches a behavior to a site:
+//!
+//! ```text
+//!   panic                abort the site by panicking (unwind)
+//!   error                return Fault::Error with a default message
+//!   error(msg)           return Fault::Error(msg)
+//!   delay(ms)            sleep `ms` milliseconds, then pass
+//!   nan                  return Fault::Nan (the site poisons its output)
+//! ```
+//!
+//! with optional modifiers, e.g. `one_shot:panic` (fire once, then
+//! disarm) or `every_nth(3):error(boom)` (fire on every 3rd call).
+//!
+//! Configuration comes from either the `FAILPOINTS` environment
+//! variable (`site=policy;site2=policy2`, parsed lazily on the first
+//! armed check) or the test-scoped [`scoped`] guard API, which removes
+//! its site again on drop.  `Fault::Error`/`Fault::Nan` are *returned*
+//! to the site so it can surface a typed error through its own error
+//! channel; `panic` and `delay` take effect inside `check` itself.
+//!
+//! Site naming convention (DESIGN.md §12): `area.component.event`,
+//! lower-case, dot-separated, e.g. `svc.worker.tick`,
+//! `svc.batcher.flush`, `registry.resolve`, `ckpt.write`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, PoisonError};
+use std::time::Duration;
+
+/// Sentinel: the `FAILPOINTS` env var has not been parsed yet.  Any
+/// non-zero value routes the first check through the slow path exactly
+/// once; after parsing, `ARMED` holds the live site count (0 = free).
+const UNINIT: usize = usize::MAX;
+
+static ARMED: AtomicUsize = AtomicUsize::new(UNINIT);
+
+/// site name -> live policy + counters
+static REGISTRY: Mutex<Option<HashMap<String, Site>>> = Mutex::new(None);
+
+/// What a triggered failpoint asks its site to do.  `panic`/`delay`
+/// policies never reach the caller (they act inside [`check`]); the
+/// returned variants are the ones a site must translate into its own
+/// typed error channel.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// Surface this message as the site's typed error.
+    Error(String),
+    /// Poison the site's numeric output with a NaN (exercises the
+    /// non-finite containment layer downstream).
+    Nan,
+}
+
+/// The behavior half of a policy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Behavior {
+    Panic,
+    Error(String),
+    /// sleep this long, then let the site proceed normally
+    Delay(u64),
+    Nan,
+}
+
+/// A parsed per-site policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Policy {
+    pub behavior: Behavior,
+    /// fire at most once, then disarm (the site stays registered so
+    /// hit/call counters keep counting)
+    pub one_shot: bool,
+    /// fire only on every Nth call to the site (1 = every call)
+    pub every_nth: u64,
+}
+
+struct Site {
+    policy: Policy,
+    /// calls to `check` for this site (armed or not)
+    calls: u64,
+    /// times the policy actually fired
+    hits: u64,
+    /// a one_shot policy that already fired
+    spent: bool,
+}
+
+enum Deferred {
+    Panic(String),
+    Delay(u64),
+}
+
+/// Parse one policy string: `[one_shot:|every_nth(N):]behavior`.
+pub fn parse_policy(s: &str) -> Result<Policy, String> {
+    let mut rest = s.trim();
+    let mut one_shot = false;
+    let mut every_nth = 1u64;
+    loop {
+        if let Some(r) = rest.strip_prefix("one_shot:") {
+            one_shot = true;
+            rest = r.trim();
+        } else if let Some(r) = rest.strip_prefix("every_nth(") {
+            let (n, r2) = r
+                .split_once("):")
+                .ok_or_else(|| format!("bad every_nth modifier in '{s}'"))?;
+            every_nth = n
+                .trim()
+                .parse::<u64>()
+                .map_err(|_| format!("bad every_nth count in '{s}'"))?
+                .max(1);
+            rest = r2.trim();
+        } else {
+            break;
+        }
+    }
+    let behavior = if rest == "panic" {
+        Behavior::Panic
+    } else if rest == "nan" {
+        Behavior::Nan
+    } else if rest == "error" {
+        Behavior::Error("injected failpoint error".to_string())
+    } else if let Some(arg) = rest
+        .strip_prefix("error(")
+        .and_then(|r| r.strip_suffix(')'))
+    {
+        Behavior::Error(arg.to_string())
+    } else if let Some(arg) = rest
+        .strip_prefix("delay(")
+        .and_then(|r| r.strip_suffix(')'))
+    {
+        Behavior::Delay(
+            arg.trim()
+                .parse::<u64>()
+                .map_err(|_| format!("bad delay ms in '{s}'"))?,
+        )
+    } else {
+        return Err(format!(
+            "unknown failpoint behavior '{rest}' (want panic | error | \
+             error(msg) | delay(ms) | nan)"
+        ));
+    };
+    Ok(Policy { behavior, one_shot, every_nth })
+}
+
+fn registry_lock(
+) -> std::sync::MutexGuard<'static, Option<HashMap<String, Site>>> {
+    // a panic policy firing inside the lock scope poisons this mutex by
+    // design; recovery keeps the framework usable afterwards
+    REGISTRY.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Parse `FAILPOINTS` exactly once (idempotent; races resolve to one
+/// winner under the registry lock).  Malformed entries are skipped —
+/// fault injection must never break a production start-up.
+fn init_from_env(map: &mut HashMap<String, Site>) {
+    if ARMED.load(Ordering::Relaxed) != UNINIT {
+        return;
+    }
+    if let Ok(spec) = std::env::var("FAILPOINTS") {
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if let Some((site, policy)) = part.split_once('=') {
+                if let Ok(policy) = parse_policy(policy) {
+                    map.insert(
+                        site.trim().to_string(),
+                        Site { policy, calls: 0, hits: 0, spent: false },
+                    );
+                }
+            }
+        }
+    }
+    ARMED.store(map.len(), Ordering::Relaxed);
+}
+
+/// The hot-path check every instrumented site calls.  Returns `None`
+/// (by far the common case, one relaxed load) unless a policy is
+/// armed for `site` and fires on this call.
+#[inline]
+pub fn check(site: &str) -> Option<Fault> {
+    if ARMED.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    check_slow(site)
+}
+
+#[cold]
+fn check_slow(site: &str) -> Option<Fault> {
+    let deferred = {
+        let mut g = registry_lock();
+        let map = g.get_or_insert_with(HashMap::new);
+        init_from_env(map);
+        let s = map.get_mut(site)?;
+        s.calls += 1;
+        if s.spent {
+            return None;
+        }
+        if s.policy.every_nth > 1 && s.calls % s.policy.every_nth != 0 {
+            return None;
+        }
+        if s.policy.one_shot {
+            s.spent = true;
+        }
+        s.hits += 1;
+        match &s.policy.behavior {
+            Behavior::Error(m) => return Some(Fault::Error(m.clone())),
+            Behavior::Nan => return Some(Fault::Nan),
+            Behavior::Panic => Deferred::Panic(site.to_string()),
+            Behavior::Delay(ms) => Deferred::Delay(*ms),
+        }
+        // the lock is released HERE, before panicking or sleeping:
+        // a panic policy must not poison the framework's own registry,
+        // and a delay must not serialize unrelated sites
+    };
+    match deferred {
+        Deferred::Panic(site) => {
+            panic!("failpoint '{site}': injected panic")
+        }
+        Deferred::Delay(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            None
+        }
+    }
+}
+
+/// RAII guard from [`scoped`]: removes its site again on drop.
+pub struct Guard {
+    site: String,
+}
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        remove(&self.site);
+    }
+}
+
+/// Arm `site` with `policy` (parsed per the module grammar) for the
+/// guard's lifetime — the test-scoped configuration API.
+///
+/// Panics on an unparsable policy string: this is test infrastructure,
+/// a typo should fail loudly.
+pub fn scoped(site: &str, policy: &str) -> Guard {
+    let policy = parse_policy(policy)
+        .unwrap_or_else(|e| panic!("failpoint::scoped({site}): {e}"));
+    let mut g = registry_lock();
+    let map = g.get_or_insert_with(HashMap::new);
+    init_from_env(map);
+    let fresh = map
+        .insert(
+            site.to_string(),
+            Site { policy, calls: 0, hits: 0, spent: false },
+        )
+        .is_none();
+    if fresh {
+        ARMED.fetch_add(1, Ordering::Relaxed);
+    }
+    Guard { site: site.to_string() }
+}
+
+/// Disarm `site` (no-op when it was never armed).
+pub fn remove(site: &str) {
+    let mut g = registry_lock();
+    if let Some(map) = g.as_mut() {
+        if map.remove(site).is_some() {
+            ARMED.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Times the policy at `site` actually fired (0 when never armed).
+pub fn hits(site: &str) -> u64 {
+    let g = registry_lock();
+    g.as_ref()
+        .and_then(|m| m.get(site))
+        .map(|s| s.hits)
+        .unwrap_or(0)
+}
+
+/// Calls [`check`] made against `site` while it was armed.
+pub fn calls(site: &str) -> u64 {
+    let g = registry_lock();
+    g.as_ref()
+        .and_then(|m| m.get(site))
+        .map(|s| s.calls)
+        .unwrap_or(0)
+}
+
+/// Disarm every site (env-configured ones included).  `ARMED` lands on
+/// 0, not the parse-pending sentinel, so a later check stays on the
+/// fast path instead of re-reading the environment.
+pub fn clear() {
+    let mut g = registry_lock();
+    let map = g.get_or_insert_with(HashMap::new);
+    init_from_env(map);
+    map.clear();
+    ARMED.store(0, Ordering::Relaxed);
+}
+
+/// True when any site is armed (after lazy env parsing, without
+/// triggering it).
+pub fn any_armed() -> bool {
+    match ARMED.load(Ordering::Relaxed) {
+        0 => false,
+        UNINIT => {
+            let mut g = registry_lock();
+            let map = g.get_or_insert_with(HashMap::new);
+            init_from_env(map);
+            !map.is_empty()
+        }
+        _ => true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::MutexGuard;
+
+    // the registry is process-global; serialize the unit tests so one
+    // test's guards never leak into another's assertions
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+    fn serial() -> MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    #[test]
+    fn unarmed_check_is_none() {
+        let _s = serial();
+        clear();
+        assert_eq!(check("tests.nowhere"), None);
+        assert_eq!(hits("tests.nowhere"), 0);
+    }
+
+    #[test]
+    fn policy_grammar_round_trips() {
+        let p = parse_policy("panic").unwrap();
+        assert_eq!(p.behavior, Behavior::Panic);
+        assert!(!p.one_shot);
+        assert_eq!(p.every_nth, 1);
+        let p = parse_policy("one_shot:error(boom)").unwrap();
+        assert!(p.one_shot);
+        assert_eq!(p.behavior, Behavior::Error("boom".to_string()));
+        let p = parse_policy("every_nth(3):nan").unwrap();
+        assert_eq!(p.every_nth, 3);
+        assert_eq!(p.behavior, Behavior::Nan);
+        let p = parse_policy("one_shot:every_nth(2):delay(7)").unwrap();
+        assert!(p.one_shot);
+        assert_eq!(p.every_nth, 2);
+        assert_eq!(p.behavior, Behavior::Delay(7));
+        assert!(parse_policy("explode").is_err());
+        assert!(parse_policy("delay(forever)").is_err());
+        assert!(parse_policy("every_nth(x):panic").is_err());
+    }
+
+    #[test]
+    fn scoped_guard_arms_and_disarms() {
+        let _s = serial();
+        clear();
+        {
+            let _g = scoped("tests.err", "error(injected)");
+            match check("tests.err") {
+                Some(Fault::Error(m)) => assert_eq!(m, "injected"),
+                other => panic!("expected Error fault, got {other:?}"),
+            }
+            assert_eq!(hits("tests.err"), 1);
+            assert_eq!(calls("tests.err"), 1);
+        }
+        // guard dropped: site disarmed, fast path again
+        assert_eq!(check("tests.err"), None);
+        assert_eq!(hits("tests.err"), 0);
+    }
+
+    #[test]
+    fn one_shot_fires_exactly_once() {
+        let _s = serial();
+        clear();
+        let _g = scoped("tests.once", "one_shot:nan");
+        assert_eq!(check("tests.once"), Some(Fault::Nan));
+        assert_eq!(check("tests.once"), None);
+        assert_eq!(check("tests.once"), None);
+        assert_eq!(hits("tests.once"), 1);
+        assert_eq!(calls("tests.once"), 3);
+    }
+
+    #[test]
+    fn every_nth_fires_on_multiples() {
+        let _s = serial();
+        clear();
+        let _g = scoped("tests.nth", "every_nth(3):error(tick)");
+        let fired: Vec<bool> =
+            (0..9).map(|_| check("tests.nth").is_some()).collect();
+        assert_eq!(
+            fired,
+            vec![false, false, true, false, false, true, false, false, true]
+        );
+        assert_eq!(hits("tests.nth"), 3);
+    }
+
+    #[test]
+    fn panic_policy_unwinds_and_registry_survives() {
+        let _s = serial();
+        clear();
+        let _g = scoped("tests.boom", "one_shot:panic");
+        let r = std::panic::catch_unwind(|| check("tests.boom"));
+        assert!(r.is_err(), "panic policy must unwind");
+        // the registry mutex was released before the panic: counters
+        // still readable, later checks pass
+        assert_eq!(hits("tests.boom"), 1);
+        assert_eq!(check("tests.boom"), None, "one_shot spent");
+    }
+
+    #[test]
+    fn delay_policy_sleeps_then_passes() {
+        let _s = serial();
+        clear();
+        let _g = scoped("tests.slow", "delay(20)");
+        let t0 = std::time::Instant::now();
+        assert_eq!(check("tests.slow"), None);
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn rearming_a_site_replaces_its_policy() {
+        let _s = serial();
+        clear();
+        let _g1 = scoped("tests.swap", "error(first)");
+        let _g2 = scoped("tests.swap", "error(second)");
+        match check("tests.swap") {
+            Some(Fault::Error(m)) => assert_eq!(m, "second"),
+            other => panic!("expected replaced policy, got {other:?}"),
+        }
+    }
+}

@@ -5,8 +5,10 @@
 
 pub mod bench;
 pub mod error;
+pub mod failpoint;
 pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod simd;
+pub mod sync;

@@ -1,0 +1,82 @@
+//! Poison-recovering lock helpers.
+//!
+//! A `Mutex`/`RwLock` is *poisoned* when a thread panics while holding
+//! it; every later `lock().unwrap()` then panics too, cascading one
+//! worker's panic into a bricked service.  For the serving runtime the
+//! data under these locks stays structurally valid across an unwind —
+//! queues of owned `Pending`s (whose reply-on-drop guards already fired
+//! for anything mid-flight), `Arc` swaps, counter maps — so the right
+//! recovery is to take the guard anyway and keep serving.  These
+//! helpers centralize the `unwrap_or_else(PoisonError::into_inner)`
+//! idiom so no lock in `coordinator` ever re-panics on poison.
+
+use std::sync::{
+    Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard,
+    RwLockWriteGuard, WaitTimeoutResult,
+};
+use std::time::Duration;
+
+/// `Mutex::lock` that recovers from poisoning instead of panicking.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `RwLock::read` with poison recovery.
+pub fn read<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `RwLock::write` with poison recovery.
+pub fn write<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait` with poison recovery.
+pub fn cv_wait<'a, T>(
+    cv: &Condvar, g: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait_timeout` with poison recovery.
+pub fn cv_wait_timeout<'a, T>(
+    cv: &Condvar, g: MutexGuard<'a, T>, d: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(g, d).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let mut g = lock(&m);
+        *g += 1;
+        assert_eq!(*g, 42);
+    }
+
+    #[test]
+    fn rwlock_recovers_from_poison() {
+        let l = Arc::new(RwLock::new(7));
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        assert_eq!(*read(&l), 7);
+        *write(&l) = 8;
+        assert_eq!(*read(&l), 8);
+    }
+}

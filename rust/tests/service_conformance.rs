@@ -16,8 +16,8 @@ use std::time::Duration;
 
 use gaunt_tp::coordinator::batcher::{BatchPolicy, BucketConfig};
 use gaunt_tp::coordinator::request::{
-    Batch, EnergyForces, EnergyOnly, MdRollout, Relax, Request, ServiceError,
-    Structure,
+    Batch, EnergyForces, EnergyOnly, ExecFault, MdRollout, Relax, Request,
+    ServiceError, Structure,
 };
 use gaunt_tp::coordinator::router::Variant;
 use gaunt_tp::coordinator::server::{
@@ -251,6 +251,106 @@ fn cancellation_returns_a_typed_error() {
 }
 
 #[test]
+fn cancel_racing_the_batch_flush_yields_exactly_one_terminal_reply() {
+    // a fast-flushing single worker so the cancel genuinely races the
+    // dequeue: depending on timing the request is either canceled while
+    // queued, canceled at execution admission, or completes normally.
+    // The contract is that EVERY outcome is a single terminal reply —
+    // Ok or Canceled, never a hang, never Dropped.
+    let service = Service::builder()
+        .native(NativeGauntBackend::default())
+        .config(ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(50),
+                max_queue: 256,
+            },
+            n_workers: 1,
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+    let client = service.client();
+    let n = scaled(60, 12);
+    let mut completed = 0usize;
+    let mut canceled = 0usize;
+    for k in 0..n {
+        let ticket = client
+            .submit(Request::new(EnergyForces(cluster(4, 1000 + k as u64))))
+            .unwrap();
+        if k % 3 != 0 {
+            // vary the race window: sometimes cancel immediately,
+            // sometimes after the flush has likely started
+            std::thread::sleep(Duration::from_micros(20 * (k % 5) as u64));
+        }
+        ticket.cancel();
+        match ticket.wait() {
+            Ok(r) => {
+                assert!(r.energy.is_finite());
+                completed += 1;
+            }
+            Err(ServiceError::Canceled) => canceled += 1,
+            other => panic!(
+                "cancel/flush race produced a non-terminal outcome: \
+                 {other:?}"
+            ),
+        }
+    }
+    let m = service.metrics();
+    let responses =
+        m.responses.load(std::sync::atomic::Ordering::Relaxed) as usize;
+    let canceled_m =
+        m.canceled.load(std::sync::atomic::Ordering::Relaxed) as usize;
+    assert_eq!(
+        completed + canceled,
+        n,
+        "every racing request must resolve exactly once"
+    );
+    assert_eq!(responses, completed, "metrics must match observed replies");
+    assert_eq!(canceled_m, canceled, "metrics must match observed cancels");
+    service.shutdown();
+}
+
+#[test]
+fn poisoned_promote_is_refused_and_the_endpoint_keeps_serving() {
+    let cfg = ModelConfig { n_layers: 1, ..Default::default() };
+    let model = Arc::new(Model::new(cfg, 5));
+    let service = Service::builder()
+        .model(model.clone())
+        .config(ServerConfig { n_workers: 1, ..Default::default() })
+        .build()
+        .unwrap();
+    let client = service.client();
+    let st = cluster(5, 31);
+    let before = client
+        .call(Request::new(EnergyForces(st.clone())))
+        .expect("healthy endpoint serves");
+    let v0 = service.registry().endpoints()[0].1;
+
+    // a diverged snapshot: one NaN parameter
+    let mut bad = Model::new(cfg, 6);
+    let mid = bad.params.len() / 2;
+    bad.params[mid] = f64::NAN;
+    let err = service
+        .promote("default", Arc::new(bad))
+        .expect_err("NaN snapshot must be refused at the service boundary");
+    assert!(err.to_string().contains("non-finite"), "{err}");
+
+    // the refused promote changed nothing: same version, same numbers
+    assert_eq!(service.registry().endpoints()[0].1, v0);
+    let after = client
+        .call(Request::new(EnergyForces(st)))
+        .expect("endpoint keeps serving after the refused promote");
+    assert!(
+        (after.energy - before.energy).abs() < 1e-12,
+        "the live model must be untouched: {} vs {}",
+        after.energy,
+        before.energy
+    );
+    service.shutdown();
+}
+
+#[test]
 fn cancellation_interrupts_a_streaming_rollout() {
     let service = native_service(1);
     let client = service.client();
@@ -397,8 +497,10 @@ fn backend_errors_are_typed_exec_errors() {
         .client()
         .call(Request::new(EnergyForces(cluster(4, 1))))
     {
-        Err(ServiceError::Exec(m)) => assert!(m.contains("injected"), "{m}"),
-        other => panic!("expected Exec, got {other:?}"),
+        Err(ServiceError::Exec(ExecFault::Backend(m))) => {
+            assert!(m.contains("injected"), "{m}")
+        }
+        other => panic!("expected Exec(Backend), got {other:?}"),
     }
     assert_eq!(
         service.metrics().failed.load(std::sync::atomic::Ordering::Relaxed),
@@ -488,7 +590,7 @@ fn hot_swap_mid_traffic_never_tears_a_batch() {
             let mut flip = false;
             while !stop3.load(std::sync::atomic::Ordering::Relaxed) {
                 let m = if flip { ma.clone() } else { mb.clone() };
-                svc.promote("default", m);
+                svc.promote("default", m).expect("finite model promotes");
                 flip = !flip;
                 std::thread::sleep(Duration::from_micros(200));
             }

@@ -24,6 +24,9 @@
 #   serving: p50/p99 request latency, structures/sec, and atom-slot
 #           fill of the typed serving protocol, single worst-case-width
 #           queue vs shape-bucketed batching at 1 and N workers.
+#   resilience: p99 / success rate / shed fraction of a small-queue
+#           service under polite vs ~2x oversubscribed load (admission
+#           control sheds typed Overloaded instead of queueing forever).
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -80,6 +83,7 @@ wanted = {
     "model": ["model_inference"],
     "multi_channel": ["multi_channel"],
     "serving": ["serving"],
+    "resilience": ["resilience"],
 }
 
 benches = {}
@@ -141,6 +145,10 @@ doc = {
                     "serving_bucketed_* (shape-bucketed batching); "
                     "*_p50/*_p99 in ns, *_rate in structures/sec, "
                     "*_atom_fill a ratio (iters = 0 marks derived rows)"],
+        "resilience": ["resilience_healthy_* (polite closed-loop load)",
+                       "resilience_overload_* (~2x oversubscribed, typed "
+                       "shedding); *_p99 in ns, *_success and *_shed_frac "
+                       "ratios (iters = 0 marks derived rows)"],
     },
     "benches": benches,
 }

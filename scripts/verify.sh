@@ -41,6 +41,13 @@ echo "== serving-protocol conformance suite (SERVE_SMOKE fast mode) =="
 # reduced workload sizes
 SERVE_SMOKE=1 cargo test -q --test service_conformance
 
+echo "== chaos conformance suite (CHAOS_SMOKE fast mode) =="
+# fault-injection gate: every failpoint site fired under live traffic —
+# typed errors only, no hang, no lost reply, supervisor respawn after
+# worker death, quarantine of non-finite rows, overload shedding — at
+# reduced workload sizes
+CHAOS_SMOKE=1 cargo test -q --test chaos_conformance
+
 echo "== bench --smoke (one tiny size per bench binary) =="
 # fig1c is the one figure bench the snapshot pipeline below doesn't run
 for b in fig1c_many_body; do

@@ -1,0 +1,123 @@
+//! Neighbor-stack benchmark: open vs periodic cell-list builds, Verlet
+//! rebuild vs reuse, and a large periodic LJ rollout, at 10^3 / 10^4 /
+//! 10^5 atoms (simple-cubic LJ boxes at reduced density 0.8).
+//!
+//! Feeds the `md_neighbor` rows of BENCH_fourier.json via
+//! `scripts/bench_snapshot.sh`.  The headline claims measured here:
+//! the periodic build stays O(N) (ns/atom flat across three decades),
+//! a Verlet reuse step costs a displacement scan instead of a rebuild,
+//! and a 10^5-atom periodic rollout is a routine workload.
+//!
+//! `--smoke`: tiny sizes and budgets, a 3-step 10^5-atom rollout (the
+//! acceptance check that million-class periodic MD completes), no TSV.
+
+use std::time::Instant;
+
+use gaunt_tp::md::{
+    neighbors_cell, neighbors_periodic_cell, neighbors_periodic_par,
+    Integrator, Molecule, PeriodicPotential, Thermostat, VerletList,
+};
+use gaunt_tp::util::bench::{budget_ms, consume, smoke, BenchTable, Measurement};
+use gaunt_tp::util::rng::Rng;
+
+const RHO: f64 = 0.8;
+const R_CUT: f64 = 2.5;
+const SKIN: f64 = 0.4;
+
+fn main() {
+    let mut t = BenchTable::new("md_neighbor: cell lists / Verlet / rollout");
+    // n_side 10 / 22 / 47 -> 1_000 / 10_648 / 103_823 atoms
+    let sides: &[usize] = if smoke() { &[5] } else { &[10, 22, 47] };
+    let budget = budget_ms(150);
+
+    for &n_side in sides {
+        let (mol, cell) = Molecule::lj_box(n_side, RHO, R_CUT);
+        let n = mol.pos.len();
+        let pos = &mol.pos;
+
+        t.run(&format!("open_cell_list  n={n}"), budget, || {
+            consume(neighbors_cell(pos, R_CUT));
+        });
+        t.run(&format!("periodic_cell_list  n={n}"), budget, || {
+            consume(neighbors_periodic_cell(pos, &cell, R_CUT));
+        });
+        t.run(&format!("periodic_par_all_cores  n={n}"), budget, || {
+            consume(neighbors_periodic_par(pos, &cell, R_CUT, 0));
+        });
+
+        // Verlet: a rebuild step (positions jump past skin/2 every
+        // call) vs a reuse step (displacement scan only)
+        {
+            let mut vl = VerletList::periodic(cell.clone(), R_CUT, SKIN);
+            let a = pos.clone();
+            let mut b = pos.clone();
+            for p in b.iter_mut() {
+                p[0] += 0.6 * SKIN; // past skin/2: every alternation rebuilds
+            }
+            let mut flip = false;
+            t.run(&format!("verlet_rebuild  n={n}"), budget, || {
+                flip = !flip;
+                consume(vl.update(if flip { &b } else { &a }));
+            });
+            let rebuilds = vl.rebuilds;
+            assert!(rebuilds > 2, "rebuild bench never rebuilt");
+            vl.update(&a);
+            t.run(&format!("verlet_reuse  n={n}"), budget, || {
+                consume(vl.update(&a));
+            });
+            assert!(
+                vl.rebuilds <= rebuilds + 1,
+                "reuse bench kept rebuilding"
+            );
+        }
+    }
+
+    // --- large periodic LJ rollout: velocity-Verlet MD through the
+    // skin-buffered Verlet list at 10^5 atoms.  One manually timed
+    // row (a multi-second workload has no business inside the adaptive
+    // micro-bench calibrator). ---
+    {
+        let n_side = 47; // 103_823 atoms, in smoke mode too: this IS
+                         // the acceptance check that a 10^5-atom
+                         // periodic rollout completes
+        let steps = if smoke() { 3 } else { 25 };
+        let (mol, cell) = Molecule::lj_box(n_side, RHO, R_CUT);
+        let n = mol.pos.len();
+        let mut pp =
+            PeriodicPotential::new(mol.potential, mol.species.clone(), cell,
+                                   SKIN);
+        let mut rng = Rng::new(12);
+        let mut md = Integrator::new_with(
+            mol.pos, mol.species, &mut pp, 0.002, Thermostat::None,
+        );
+        md.thermalize(0.5, &mut rng);
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            md.step_with(&mut pp, &mut rng);
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / steps as f64;
+        assert!(
+            md.pos.iter().all(|p| p.iter().all(|v| v.is_finite())),
+            "periodic rollout diverged"
+        );
+        t.add(Measurement {
+            name: format!("periodic_lj_rollout_step  n={n}"),
+            median_ns: ns,
+            mad_ns: 0.0,
+            iters: steps,
+        });
+        println!(
+            "    -> {:.0} atom-steps/sec, {} rebuilds / {} reuses over \
+             {steps} steps",
+            n as f64 / (ns * 1e-9),
+            pp.list().rebuilds,
+            pp.list().reuses,
+        );
+    }
+
+    if smoke() {
+        println!("[smoke] md_neighbor OK ({} rows)", t.rows.len());
+    } else {
+        t.write_tsv("md_neighbor");
+    }
+}

@@ -35,6 +35,7 @@ fn main() {
             pos: &g.pos,
             species: &g.species,
             edges,
+            shifts: None,
         })
         .collect();
     let atoms_total: usize = graphs_data.iter().map(|g| g.n_atoms()).sum();
@@ -102,6 +103,7 @@ fn main() {
                 pos: &g.pos,
                 species: &g.species,
                 edges,
+                shifts: None,
             })
             .collect();
         let meas = gaunt_tp::util::bench::bench(

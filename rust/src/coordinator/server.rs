@@ -266,6 +266,7 @@ impl NativeGauntBackend {
                 pos: &pos[g],
                 species: &species[g],
                 edges: &edges[g],
+                shifts: None,
             })
             .collect();
         let rows = energy_forces_batch_par(model, &graphs, self.threads);

@@ -6,7 +6,8 @@ pub mod metrics;
 
 use crate::md::integrator::{Integrator, Thermostat};
 use crate::md::molecule::Molecule;
-use crate::md::neighbor::neighbors_cell;
+use crate::md::neighbor::{neighbors_cell, Cell};
+use crate::md::potential::PeriodicPotential;
 use crate::util::rng::Rng;
 
 /// One labeled configuration (ground truth from the classical potential —
@@ -203,6 +204,54 @@ pub fn gen_adsorbate_dataset(n: usize, seed: u64) -> Vec<Graph> {
     out
 }
 
+/// [`Molecule::lj_box`] at reduced density 0.8 with the standard LJ
+/// cutoff 2.5, clamped to the box's minimum-image bound so every box
+/// size down to a single unit cell stays valid.
+fn lj_box_mic(n_side: usize) -> (Molecule, Cell) {
+    let n = n_side * n_side * n_side;
+    let l = (n as f64 / 0.8).cbrt();
+    Molecule::lj_box(n_side, 0.8, 2.5f64.min(0.45 * l))
+}
+
+/// Periodic LJ bulk dataset: Langevin MD in a cubic box (forces through
+/// the Verlet-list periodic path), configurations labeled with the
+/// PERIODIC classical energy/forces and positions wrapped into the cell.
+/// Returns the graphs plus the shared [`Cell`] — feed both to
+/// [`crate::model::Model::build_edges_periodic`] for training/eval.
+pub fn gen_periodic_lj_dataset(
+    n_side: usize, n_configs: usize, temp: f64, seed: u64,
+) -> (Vec<Graph>, Cell) {
+    let (m, cell) = lj_box_mic(n_side);
+    let mut pp = PeriodicPotential::new(
+        m.potential.clone(), m.species.clone(), cell.clone(), 0.4);
+    let mut rng = Rng::new(seed);
+    let mut md = Integrator::new_with(
+        m.pos.clone(), m.species.clone(), &mut pp, 0.003,
+        Thermostat::Langevin { gamma: 1.0, temperature: temp },
+    );
+    md.thermalize(temp, &mut rng);
+    for _ in 0..300 {
+        md.step_with(&mut pp, &mut rng);
+    }
+    let mut out = Vec::with_capacity(n_configs);
+    while out.len() < n_configs {
+        for _ in 0..50 {
+            md.step_with(&mut pp, &mut rng);
+        }
+        let (e, f) = pp.energy_forces_ref(&md.pos);
+        let forces = f.to_vec();
+        // labels are wrap-invariant; store canonical in-cell positions
+        let pos: Vec<[f64; 3]> = md.pos.iter().map(|p| cell.wrap(*p)).collect();
+        out.push(Graph {
+            pos,
+            species: m.species.clone(),
+            energy: e,
+            forces,
+        });
+    }
+    (out, cell)
+}
+
 /// Normalization statistics (energy is regressed per atom).
 #[derive(Clone, Copy, Debug)]
 pub struct EnergyStats {
@@ -300,6 +349,39 @@ mod tests {
             assert_eq!(g.n_atoms(), 21);
             assert!(g.energy.is_finite());
             assert_eq!(g.forces.len(), 21);
+        }
+    }
+
+    #[test]
+    fn periodic_lj_dataset_labels_are_periodic_and_wrapped() {
+        let (ds, cell) = gen_periodic_lj_dataset(3, 2, 0.1, 0);
+        assert_eq!(ds.len(), 2);
+        let l = cell.lattice()[0][0];
+        for g in &ds {
+            assert_eq!(g.n_atoms(), 27);
+            assert!(g.energy.is_finite());
+            // positions wrapped into the home cell
+            for p in &g.pos {
+                for k in 0..3 {
+                    assert!(p[k] >= -1e-9 && p[k] < l + 1e-9);
+                }
+            }
+            // labels match a fresh periodic evaluation of the wrapped
+            // positions (wrap-invariance of the minimum-image energy)
+            let (m, _) = lj_box_mic(3);
+            let (e, f) = m.potential.energy_forces_periodic(
+                &g.pos, &g.species, &cell);
+            assert!((e - g.energy).abs() < 1e-9 * (1.0 + e.abs()));
+            for (a, b) in f.iter().zip(&g.forces) {
+                for k in 0..3 {
+                    assert!((a[k] - b[k]).abs() < 1e-9);
+                }
+            }
+            // net force vanishes under PBC
+            for k in 0..3 {
+                let s: f64 = g.forces.iter().map(|v| v[k]).sum();
+                assert!(s.abs() < 1e-9);
+            }
         }
     }
 

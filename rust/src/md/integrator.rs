@@ -53,8 +53,12 @@ impl Integrator {
         }
     }
 
-    /// Draw Maxwell-Boltzmann velocities at temperature T.
+    /// Draw Maxwell-Boltzmann velocities at temperature T.  No-op for
+    /// an empty system (n = 0 must not reach the COM division below).
     pub fn thermalize(&mut self, temperature: f64, rng: &mut Rng) {
+        if self.vel.is_empty() {
+            return;
+        }
         let s = (temperature / self.mass).sqrt();
         for v in self.vel.iter_mut() {
             for k in 0..3 {
@@ -66,6 +70,9 @@ impl Integrator {
 
     fn remove_com_velocity(&mut self) {
         let n = self.vel.len() as f64;
+        if n == 0.0 {
+            return; // 0/0 would seed every velocity with NaN
+        }
         let mut com = [0.0f64; 3];
         for v in &self.vel {
             for k in 0..3 {
@@ -191,8 +198,12 @@ impl Integrator {
                 .sum::<f64>()
     }
 
-    /// Instantaneous temperature (k_B = 1): 2 KE / (3 N).
+    /// Instantaneous temperature (k_B = 1): 2 KE / (3 N); 0 for an
+    /// empty system instead of 0/0 = NaN.
     pub fn temperature(&self) -> f64 {
+        if self.pos.is_empty() {
+            return 0.0;
+        }
         2.0 * self.kinetic_energy() / (3.0 * self.pos.len() as f64)
     }
 
@@ -337,6 +348,21 @@ mod tests {
             let s: f64 = md.vel.iter().map(|v| v[k]).sum();
             assert!(s.abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn empty_system_is_nan_free() {
+        let pot = Potential::lj(1.0, 1.0, 3.0);
+        let mut rng = Rng::new(9);
+        let mut md = Integrator::new(Vec::new(), Vec::new(), &pot, 0.002,
+                                     Thermostat::None);
+        // thermalize/remove_com used to hit 0/0 here and seed NaN
+        md.thermalize(1.0, &mut rng);
+        md.step(&pot, &mut rng);
+        assert!(md.vel.is_empty() && md.pos.is_empty());
+        assert_eq!(md.temperature(), 0.0);
+        assert_eq!(md.kinetic_energy(), 0.0);
+        assert!(md.total_energy().is_finite());
     }
 
     #[test]

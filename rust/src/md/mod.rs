@@ -3,10 +3,11 @@
 //! The paper's evaluations need datasets we cannot download offline (OC20
 //! DFT relaxations, 3BPA MD test sets at 300/600/1200 K).  This module is
 //! the substitute data engine (DESIGN.md §3): classical potentials with
-//! exact forces, a velocity-Verlet / Langevin integrator, neighbor search,
-//! and a flexible-molecule builder, used to sample configuration datasets
-//! with in- and out-of-distribution temperature splits exactly like the
-//! 3BPA protocol.
+//! exact forces, a velocity-Verlet / Langevin integrator, neighbor search
+//! (open-boundary AND periodic minimum-image cell lists with Verlet-skin
+//! reuse, DESIGN.md §13), and a flexible-molecule builder, used to sample
+//! configuration datasets with in- and out-of-distribution temperature
+//! splits exactly like the 3BPA protocol — plus OCP-style periodic slabs.
 
 pub mod integrator;
 pub mod molecule;
@@ -16,6 +17,10 @@ pub mod relax;
 
 pub use integrator::{Integrator, Thermostat};
 pub use molecule::Molecule;
-pub use potential::{LearnedPotential, Potential, PotentialKind,
-                    SystemPotential};
+pub use neighbor::{neighbors_brute, neighbors_cell,
+                   neighbors_periodic_brute, neighbors_periodic_cell,
+                   neighbors_periodic_par, Cell, CellListScratch, Edge,
+                   VerletList};
+pub use potential::{LearnedPotential, PeriodicPotential, Potential,
+                    PotentialKind, SystemPotential};
 pub use relax::{fire_relax, FireConfig, ForceProvider, RelaxResult};

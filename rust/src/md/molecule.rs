@@ -9,6 +9,7 @@
 //! (b) high-T sampling is genuinely out-of-distribution, reproducing the
 //! 3BPA evaluation protocol (DESIGN.md §3).
 
+use super::neighbor::Cell;
 use super::potential::{Potential, PotentialKind};
 
 /// A molecule: initial geometry + species + its potential.
@@ -163,6 +164,110 @@ impl Molecule {
         }
     }
 
+    /// Periodic bulk+adsorbate slab, the OCP-analog workload under real
+    /// boundary conditions: an `nx x ny` two-layer crystalline slab
+    /// periodic in x/y (the cell is commensurate with the lattice, so
+    /// the surface is seamless across images), vacuum above, and a
+    /// 3-atom adsorbate.  Returns the molecule plus its [`Cell`].
+    pub fn periodic_slab(nx: usize, ny: usize) -> (Molecule, Cell) {
+        assert!(nx >= 2 && ny >= 2, "periodic_slab: need at least 2x2");
+        let a = 1.3; // lattice constant
+        let lx = nx as f64 * a;
+        let ly = ny as f64 * a;
+        let lz = 12.0 * a; // slab + vacuum gap along z
+        let cell = Cell::orthorhombic(lx, ly, lz);
+        let mut pos = Vec::new();
+        let mut species = Vec::new();
+        for layer in 0..2usize {
+            for i in 0..nx {
+                for j in 0..ny {
+                    let off = if layer == 1 { 0.5 * a } else { 0.0 };
+                    pos.push([
+                        i as f64 * a + off,
+                        j as f64 * a + off,
+                        2.0 * a - layer as f64 * a,
+                    ]);
+                    species.push(layer);
+                }
+            }
+        }
+        // adsorbate above the slab center
+        let cx = lx / 2.0;
+        let cy = ly / 2.0;
+        let z0 = 2.0 * a + 1.6;
+        let base = pos.len();
+        for p in [
+            [cx, cy, z0],
+            [cx + 1.1, cy, z0 + 0.5],
+            [cx - 0.6, cy + 0.9, z0 + 0.6],
+        ] {
+            pos.push(p);
+            species.push(2);
+        }
+        let bonds = vec![
+            (base, base + 1, PotentialKind::Morse { d: 4.0, a: 2.0, r0: 1.2 }),
+            (base, base + 2, PotentialKind::Morse { d: 4.0, a: 2.0, r0: 1.2 }),
+        ];
+        // nonbonded LJ table, 3 species; cutoff must respect the
+        // minimum-image bound min(lx, ly, lz) / 2 for small slabs
+        let r_cut = 2.6f64.min(0.45 * lx.min(ly));
+        let mut nonbonded = Vec::new();
+        for s1 in 0..3usize {
+            for s2 in 0..3usize {
+                nonbonded.push(PotentialKind::LennardJones {
+                    eps: 0.08 + 0.05 * ((s1 + s2) % 3) as f64,
+                    sigma: 1.1,
+                    r_cut,
+                });
+            }
+        }
+        let m = Molecule {
+            pos,
+            species,
+            potential: Potential {
+                n_species: 3,
+                nonbonded,
+                bonds,
+                exclude_bonded_nonbonded: true,
+            },
+        };
+        (m, cell)
+    }
+
+    /// Homogeneous periodic LJ box at reduced density `rho`: `n_side`^3
+    /// atoms on a simple cubic lattice inside a cubic [`Cell`] — the
+    /// standard large-system benchmark fill (10^5 atoms = `n_side` 47).
+    pub fn lj_box(n_side: usize, rho: f64, r_cut: f64) -> (Molecule, Cell) {
+        assert!(n_side >= 1 && rho > 0.0);
+        let n = n_side * n_side * n_side;
+        let l = (n as f64 / rho).cbrt();
+        let cell = Cell::cubic(l);
+        assert!(
+            r_cut <= cell.max_cutoff(),
+            "lj_box: r_cut {r_cut} exceeds minimum-image bound {}",
+            cell.max_cutoff()
+        );
+        let spacing = l / n_side as f64;
+        let mut pos = Vec::with_capacity(n);
+        for i in 0..n_side {
+            for j in 0..n_side {
+                for k in 0..n_side {
+                    pos.push([
+                        (i as f64 + 0.5) * spacing,
+                        (j as f64 + 0.5) * spacing,
+                        (k as f64 + 0.5) * spacing,
+                    ]);
+                }
+            }
+        }
+        let m = Molecule {
+            pos,
+            species: vec![0; n],
+            potential: Potential::lj(1.0, 1.0, r_cut),
+        };
+        (m, cell)
+    }
+
     pub fn n_atoms(&self) -> usize {
         self.pos.len()
     }
@@ -258,5 +363,48 @@ mod tests {
         let (e, f) = m.potential.energy_forces(&m.pos, &m.species);
         assert!(e.is_finite());
         assert!(f.iter().all(|v| v.iter().all(|x| x.is_finite())));
+    }
+
+    #[test]
+    fn periodic_slab_is_consistent_with_its_cell() {
+        let (m, cell) = Molecule::periodic_slab(4, 4);
+        assert_eq!(m.n_atoms(), 2 * 16 + 3);
+        // cutoff respects the minimum-image bound
+        let rc = m.potential.nonbonded_cutoff().unwrap();
+        assert!(rc <= cell.max_cutoff());
+        // every atom sits inside the cell footprint in x/y
+        let l = cell.lattice();
+        for p in &m.pos {
+            assert!(p[0] > -1e-9 && p[0] < l[0][0] + 1e-9);
+            assert!(p[1] > -1e-9 && p[1] < l[1][1] + 1e-9);
+        }
+        let (e, f) =
+            m.potential.energy_forces_periodic(&m.pos, &m.species, &cell);
+        assert!(e.is_finite());
+        for k in 0..3 {
+            let s: f64 = f.iter().map(|v| v[k]).sum();
+            assert!(s.abs() < 1e-9, "net periodic force along {k}: {s}");
+        }
+    }
+
+    #[test]
+    fn lj_box_fills_the_cell() {
+        let (m, cell) = Molecule::lj_box(5, 0.8, 2.5);
+        assert_eq!(m.n_atoms(), 125);
+        let l = cell.lattice()[0][0];
+        assert!((l - (125.0f64 / 0.8).cbrt()).abs() < 1e-12);
+        for p in &m.pos {
+            for k in 0..3 {
+                assert!(p[k] > 0.0 && p[k] < l);
+            }
+        }
+        // lattice fill is a force-free configuration by symmetry
+        let (_, f) =
+            m.potential.energy_forces_periodic(&m.pos, &m.species, &cell);
+        for v in &f {
+            for x in v {
+                assert!(x.abs() < 1e-9, "lattice fill not force-free");
+            }
+        }
     }
 }

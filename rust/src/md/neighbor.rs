@@ -1,5 +1,29 @@
-//! Neighbor search: brute force and cell lists.  The coordinator uses
-//! this to build the (padded) edge lists the compiled model consumes.
+//! Neighbor search: brute force, cell lists, periodic boundary
+//! conditions, and skin-buffered Verlet lists.
+//!
+//! Three layers (DESIGN.md §13):
+//!
+//! * **Open boundary** — [`neighbors_brute`] / [`neighbors_cell`], the
+//!   original bounding-box grid the coordinator uses to build the
+//!   (padded) edge lists the compiled model consumes.  Unchanged
+//!   behavior, pinned by the golden cross-validation suite.
+//! * **Periodic** — a [`Cell`] lattice (orthorhombic or general
+//!   triclinic) with the minimum-image convention, and an O(N)
+//!   wrapped-cell builder ([`neighbors_periodic_cell`], parallel
+//!   variant [`neighbors_periodic_par`]) whose edges carry an integer
+//!   image **shift**: the displacement a consumer must use is
+//!   `pos[i] - pos[j] + shift · H` (rows of `H` are the lattice
+//!   vectors).  Exactness requires `r_cut <= min_width / 2` (asserted),
+//!   where a pair has at most one image in range — the contract every
+//!   property test checks against [`neighbors_periodic_brute`].
+//! * **Verlet** — [`VerletList`] builds at `r_cut + skin` and skips
+//!   rebuilds while every atom has moved less than `skin / 2` since the
+//!   reference build.  Reuse steps touch no allocator (gated by
+//!   `tests/alloc_regression.rs`); rebuilds reuse retained scratch and
+//!   edge capacity, so steady-state trajectories stop allocating once
+//!   the high-water mark is reached.
+
+use crate::util::pool;
 
 /// All directed pairs (i, j), i != j, with |r_i - r_j| < r_cut.
 pub fn neighbors_brute(pos: &[[f64; 3]], r_cut: f64) -> Vec<(usize, usize)> {
@@ -99,6 +123,612 @@ fn dist2(a: [f64; 3], b: [f64; 3]) -> f64 {
     d[0] * d[0] + d[1] * d[1] + d[2] * d[2]
 }
 
+#[inline]
+fn norm2(d: [f64; 3]) -> f64 {
+    d[0] * d[0] + d[1] * d[1] + d[2] * d[2]
+}
+
+// ---------------------------------------------------------------------
+// Periodic cells
+// ---------------------------------------------------------------------
+
+/// A periodic simulation cell: three lattice vectors (rows of `h`),
+/// orthorhombic or general triclinic.
+///
+/// Conventions (DESIGN.md §13):
+/// * Cartesian from fractional: `r = f · H` (i.e. `r_k = Σ_a f_a
+///   h[a][k]`); fractional from Cartesian via the cached inverse.
+/// * [`Cell::min_image`] maps a raw displacement `d_raw = r_i - r_j` to
+///   the minimum-image displacement `d = d_raw + shift · H` by rounding
+///   the fractional components — exact whenever the relevant cutoff is
+///   at most [`Cell::max_cutoff`] = half the minimum perpendicular
+///   width, the precondition asserted by every periodic builder.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    /// Rows are the lattice vectors a, b, c.
+    h: [[f64; 3]; 3],
+    /// Inverse of H^T: maps Cartesian to fractional coordinates.
+    hinv_t: [[f64; 3]; 3],
+    /// Perpendicular width of the cell along each lattice direction.
+    widths: [f64; 3],
+}
+
+impl Cell {
+    /// Orthorhombic cell with edge lengths `(lx, ly, lz)`.
+    pub fn orthorhombic(lx: f64, ly: f64, lz: f64) -> Cell {
+        Cell::triclinic([
+            [lx, 0.0, 0.0],
+            [0.0, ly, 0.0],
+            [0.0, 0.0, lz],
+        ])
+    }
+
+    /// Cubic cell with edge length `l`.
+    pub fn cubic(l: f64) -> Cell {
+        Cell::orthorhombic(l, l, l)
+    }
+
+    /// General triclinic cell; `h` rows are the lattice vectors.
+    /// Panics on a (near-)singular lattice.
+    pub fn triclinic(h: [[f64; 3]; 3]) -> Cell {
+        let cross = |a: [f64; 3], b: [f64; 3]| -> [f64; 3] {
+            [
+                a[1] * b[2] - a[2] * b[1],
+                a[2] * b[0] - a[0] * b[2],
+                a[0] * b[1] - a[1] * b[0],
+            ]
+        };
+        let dot = |a: [f64; 3], b: [f64; 3]| -> f64 {
+            a[0] * b[0] + a[1] * b[1] + a[2] * b[2]
+        };
+        let bxc = cross(h[1], h[2]);
+        let cxa = cross(h[2], h[0]);
+        let axb = cross(h[0], h[1]);
+        let vol = dot(h[0], bxc);
+        assert!(
+            vol.abs() > 1e-12,
+            "Cell::triclinic: singular lattice (volume {vol:.3e})"
+        );
+        // frac = (H^T)^{-1} r.  Columns of H^T are the lattice vectors,
+        // so rows of the inverse are the reciprocal vectors / volume.
+        let hinv_t = [
+            [bxc[0] / vol, bxc[1] / vol, bxc[2] / vol],
+            [cxa[0] / vol, cxa[1] / vol, cxa[2] / vol],
+            [axb[0] / vol, axb[1] / vol, axb[2] / vol],
+        ];
+        let widths = [
+            vol.abs() / norm2(bxc).sqrt(),
+            vol.abs() / norm2(cxa).sqrt(),
+            vol.abs() / norm2(axb).sqrt(),
+        ];
+        Cell { h, hinv_t, widths }
+    }
+
+    /// The lattice vectors (rows).
+    pub fn lattice(&self) -> &[[f64; 3]; 3] {
+        &self.h
+    }
+
+    pub fn volume(&self) -> f64 {
+        (self.widths[0] * norm2(crossn(self.h[1], self.h[2])).sqrt()).abs()
+    }
+
+    /// Minimum perpendicular width across the three lattice directions.
+    pub fn min_width(&self) -> f64 {
+        self.widths[0].min(self.widths[1]).min(self.widths[2])
+    }
+
+    /// Largest cutoff for which the minimum-image convention is exact
+    /// (a pair then has at most one periodic image in range).
+    pub fn max_cutoff(&self) -> f64 {
+        0.5 * self.min_width()
+    }
+
+    /// Fractional coordinates of a Cartesian point.
+    #[inline]
+    pub fn frac(&self, r: [f64; 3]) -> [f64; 3] {
+        std::array::from_fn(|a| {
+            self.hinv_t[a][0] * r[0]
+                + self.hinv_t[a][1] * r[1]
+                + self.hinv_t[a][2] * r[2]
+        })
+    }
+
+    /// Cartesian point from fractional coordinates.
+    #[inline]
+    pub fn cart(&self, f: [f64; 3]) -> [f64; 3] {
+        std::array::from_fn(|k| {
+            f[0] * self.h[0][k] + f[1] * self.h[1][k] + f[2] * self.h[2][k]
+        })
+    }
+
+    /// The Cartesian lattice translation `shift · H`.
+    #[inline]
+    pub fn shift_vector(&self, shift: [i32; 3]) -> [f64; 3] {
+        self.cart([shift[0] as f64, shift[1] as f64, shift[2] as f64])
+    }
+
+    /// Wrap a Cartesian point into the home cell (fractional [0, 1)).
+    pub fn wrap(&self, r: [f64; 3]) -> [f64; 3] {
+        let f = self.frac(r);
+        self.cart(std::array::from_fn(|a| wrap01(f[a])))
+    }
+
+    /// Minimum-image displacement: returns `(d, shift)` with
+    /// `d = d_raw + shift · H` the nearest-image displacement.  Exact
+    /// for distances below [`Cell::max_cutoff`].
+    #[inline]
+    pub fn min_image(&self, d_raw: [f64; 3]) -> ([f64; 3], [i32; 3]) {
+        let f = self.frac(d_raw);
+        let shift: [i32; 3] = std::array::from_fn(|a| -f[a].round() as i32);
+        let sv = self.shift_vector(shift);
+        (
+            [d_raw[0] + sv[0], d_raw[1] + sv[1], d_raw[2] + sv[2]],
+            shift,
+        )
+    }
+}
+
+#[inline]
+fn crossn(a: [f64; 3], b: [f64; 3]) -> [f64; 3] {
+    [
+        a[1] * b[2] - a[2] * b[1],
+        a[2] * b[0] - a[0] * b[2],
+        a[0] * b[1] - a[1] * b[0],
+    ]
+}
+
+/// Map a fractional coordinate into [0, 1), robust to the `x - floor(x)
+/// == 1.0` rounding corner for tiny negative inputs.
+#[inline]
+fn wrap01(x: f64) -> f64 {
+    let w = x - x.floor();
+    if w >= 1.0 { 0.0 } else { w }
+}
+
+/// One directed periodic edge: the consumer-side displacement is
+/// `pos[i] - pos[j] + shift · H` ([`Cell::shift_vector`]).  The reverse
+/// edge `(j, i, -shift)` is always present.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Edge {
+    pub i: usize,
+    pub j: usize,
+    pub shift: [i32; 3],
+}
+
+fn assert_mic_cutoff(cell: &Cell, r_cut: f64) {
+    assert!(
+        r_cut <= cell.max_cutoff() + 1e-9,
+        "periodic cutoff {r_cut} exceeds half the minimum cell width \
+         ({}): the minimum-image convention would miss images",
+        cell.max_cutoff()
+    );
+}
+
+/// Brute-force minimum-image oracle: all directed pairs (i, j), i != j,
+/// whose nearest-image distance is below `r_cut`.  O(N^2); the property
+/// suite's ground truth for the cell-list builders.
+pub fn neighbors_periodic_brute(
+    pos: &[[f64; 3]], cell: &Cell, r_cut: f64,
+) -> Vec<Edge> {
+    assert_mic_cutoff(cell, r_cut);
+    let rc2 = r_cut * r_cut;
+    let mut out = Vec::new();
+    for i in 0..pos.len() {
+        for j in 0..pos.len() {
+            if i == j {
+                continue;
+            }
+            let d_raw = [
+                pos[i][0] - pos[j][0],
+                pos[i][1] - pos[j][1],
+                pos[i][2] - pos[j][2],
+            ];
+            let (d, shift) = cell.min_image(d_raw);
+            if norm2(d) < rc2 {
+                out.push(Edge { i, j, shift });
+            }
+        }
+    }
+    out
+}
+
+/// Retained workspace of the periodic (and Verlet) cell builders:
+/// linked-cell `head`/`next` arrays plus the wrapped fractional
+/// coordinates, reused across rebuilds so steady-state trajectories do
+/// not allocate.
+#[derive(Clone, Debug, Default)]
+pub struct CellListScratch {
+    head: Vec<i32>,
+    next: Vec<i32>,
+    fw: Vec<[f64; 3]>,
+}
+
+/// Grid dimensions for a periodic cell list: as many bins per axis as
+/// fit a perpendicular width of `r_cut` (so the wrapped 3x3x3 walk is
+/// exact), capped at a total-bucket budget proportional to the atom
+/// count (a near-empty giant box must not allocate a giant grid —
+/// coarser bins only add distance checks, never miss pairs).
+fn periodic_grid_dims(cell: &Cell, r_cut: f64, n_atoms: usize) -> [usize; 3] {
+    let budget = (4 * n_atoms).max(64);
+    let mut dims: [usize; 3] = std::array::from_fn(|k| {
+        ((cell.widths[k] / r_cut).floor() as usize).max(1)
+    });
+    while dims[0] * dims[1] * dims[2] > budget {
+        let k = (0..3).max_by_key(|&k| dims[k]).unwrap();
+        if dims[k] == 1 {
+            break;
+        }
+        dims[k] = dims[k].div_ceil(2);
+    }
+    dims
+}
+
+/// Bin the wrapped fractional coordinates of `pos` into the linked-cell
+/// arrays of `scratch`; returns the grid dimensions.
+fn bin_atoms(
+    pos: &[[f64; 3]], cell: &Cell, r_cut: f64,
+    scratch: &mut CellListScratch,
+) -> [usize; 3] {
+    let dims = periodic_grid_dims(cell, r_cut, pos.len());
+    let n_buckets = dims[0] * dims[1] * dims[2];
+    scratch.head.clear();
+    scratch.head.resize(n_buckets, -1);
+    scratch.next.clear();
+    scratch.next.resize(pos.len(), -1);
+    scratch.fw.clear();
+    for (i, p) in pos.iter().enumerate() {
+        let f = cell.frac(*p);
+        let fw: [f64; 3] = std::array::from_fn(|a| wrap01(f[a]));
+        scratch.fw.push(fw);
+        let b = bucket_of(fw, dims);
+        scratch.next[i] = scratch.head[b];
+        scratch.head[b] = i as i32;
+    }
+    dims
+}
+
+#[inline]
+fn bucket_of(fw: [f64; 3], dims: [usize; 3]) -> usize {
+    let c: [usize; 3] = std::array::from_fn(|k| {
+        ((fw[k] * dims[k] as f64) as usize).min(dims[k] - 1)
+    });
+    (c[0] * dims[1] + c[1]) * dims[2] + c[2]
+}
+
+/// Walk the wrapped 3x3x3 neighborhood of atom `i` and append every
+/// in-range directed edge.  `cand`/`n_cand` deduplicate bucket indices:
+/// along an axis with fewer than three bins the wrapped offsets
+/// collide, and a duplicate bucket would emit duplicate edges.
+#[inline]
+fn walk_atom(
+    i: usize, pos: &[[f64; 3]], cell: &Cell, rc2: f64, dims: [usize; 3],
+    scratch: &CellListScratch, out: &mut Vec<Edge>,
+) {
+    let fw = scratch.fw[i];
+    let c: [i64; 3] = std::array::from_fn(|k| {
+        ((fw[k] * dims[k] as f64) as usize).min(dims[k] - 1) as i64
+    });
+    let mut cand = [0usize; 27];
+    let mut n_cand = 0usize;
+    for dx in -1i64..=1 {
+        for dy in -1i64..=1 {
+            for dz in -1i64..=1 {
+                let b = (
+                    (c[0] + dx).rem_euclid(dims[0] as i64) as usize
+                        * dims[1]
+                        + (c[1] + dy).rem_euclid(dims[1] as i64) as usize
+                ) * dims[2]
+                    + (c[2] + dz).rem_euclid(dims[2] as i64) as usize;
+                if !cand[..n_cand].contains(&b) {
+                    cand[n_cand] = b;
+                    n_cand += 1;
+                }
+            }
+        }
+    }
+    for &b in &cand[..n_cand] {
+        let mut jj = scratch.head[b];
+        while jj >= 0 {
+            let j = jj as usize;
+            if j != i {
+                let d_raw = [
+                    pos[i][0] - pos[j][0],
+                    pos[i][1] - pos[j][1],
+                    pos[i][2] - pos[j][2],
+                ];
+                let (d, shift) = cell.min_image(d_raw);
+                if norm2(d) < rc2 {
+                    out.push(Edge { i, j, shift });
+                }
+            }
+            jj = scratch.next[j];
+        }
+    }
+}
+
+/// Periodic cell-list build into caller-retained buffers: `out` is
+/// cleared and filled with every directed minimum-image edge below
+/// `r_cut`.  Allocation-free once `scratch` and `out` have reached
+/// their high-water capacity.
+pub fn neighbors_periodic_into(
+    pos: &[[f64; 3]], cell: &Cell, r_cut: f64,
+    scratch: &mut CellListScratch, out: &mut Vec<Edge>,
+) {
+    assert_mic_cutoff(cell, r_cut);
+    out.clear();
+    if pos.is_empty() {
+        return;
+    }
+    let dims = bin_atoms(pos, cell, r_cut, scratch);
+    let rc2 = r_cut * r_cut;
+    for i in 0..pos.len() {
+        walk_atom(i, pos, cell, rc2, dims, scratch, out);
+    }
+}
+
+/// Periodic O(N) cell-list neighbor search (serial convenience).
+pub fn neighbors_periodic_cell(
+    pos: &[[f64; 3]], cell: &Cell, r_cut: f64,
+) -> Vec<Edge> {
+    let mut scratch = CellListScratch::default();
+    let mut out = Vec::new();
+    neighbors_periodic_into(pos, cell, r_cut, &mut scratch, &mut out);
+    out
+}
+
+/// Parallel periodic build: the atom binning is shared, then the bucket
+/// range — the cell blocks — is sharded contiguously across `threads`
+/// workers ([`pool::shard_range`]); each worker walks the atoms of its
+/// block against the read-only grid into a private edge vector.  The
+/// concatenation order follows the block order, so the result is
+/// deterministic for a fixed thread count and equal as a SET to the
+/// serial build for any.
+pub fn neighbors_periodic_par(
+    pos: &[[f64; 3]], cell: &Cell, r_cut: f64, threads: usize,
+) -> Vec<Edge> {
+    assert_mic_cutoff(cell, r_cut);
+    if pos.is_empty() {
+        return Vec::new();
+    }
+    let mut scratch = CellListScratch::default();
+    let dims = bin_atoms(pos, cell, r_cut, &mut scratch);
+    let n_buckets = dims[0] * dims[1] * dims[2];
+    let rc2 = r_cut * r_cut;
+    let threads = pool::resolve_threads(threads);
+    let scratch_ref = &scratch;
+    let blocks = pool::shard_range(n_buckets, threads, Vec::new, |b, acc: &mut Vec<Edge>| {
+        let mut jj = scratch_ref.head[b];
+        while jj >= 0 {
+            let i = jj as usize;
+            walk_atom(i, pos, cell, rc2, dims, scratch_ref, acc);
+            jj = scratch_ref.next[i];
+        }
+    });
+    let mut out = Vec::with_capacity(blocks.iter().map(Vec::len).sum());
+    for b in blocks {
+        out.extend_from_slice(&b);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Verlet (skin) lists
+// ---------------------------------------------------------------------
+
+/// A skin-buffered neighbor list: built once at `r_cut + skin`, then
+/// reused while no atom has moved more than `skin / 2` from its
+/// position at build time (any pair can then have approached by at most
+/// `skin`, so every pair currently inside `r_cut` is still listed, with
+/// its image shift still the nearest image).  Consumers re-check the
+/// true distance per edge; [`VerletList::for_each_pair`] does exactly
+/// that over undirected pairs.
+///
+/// Reuse steps ([`VerletList::update`] returning `false`) never touch
+/// the allocator; rebuilds reuse the retained scratch and edge/ref
+/// capacity (asserted by `tests/alloc_regression.rs`).
+pub struct VerletList {
+    pub r_cut: f64,
+    pub skin: f64,
+    cell: Option<Cell>,
+    edges: Vec<Edge>,
+    ref_pos: Vec<[f64; 3]>,
+    scratch: CellListScratch,
+    built: bool,
+    /// Rebuild / reuse counters (rebuild-rate observability for the
+    /// `md_neighbor` bench).
+    pub rebuilds: usize,
+    pub reuses: usize,
+}
+
+impl VerletList {
+    /// Open-boundary list (all image shifts zero).
+    pub fn open(r_cut: f64, skin: f64) -> VerletList {
+        assert!(r_cut > 0.0 && skin >= 0.0);
+        VerletList {
+            r_cut,
+            skin,
+            cell: None,
+            edges: Vec::new(),
+            ref_pos: Vec::new(),
+            scratch: CellListScratch::default(),
+            built: false,
+            rebuilds: 0,
+            reuses: 0,
+        }
+    }
+
+    /// Periodic list.  Requires `r_cut + skin <= cell.max_cutoff()`:
+    /// the build radius itself must satisfy the minimum-image bound so
+    /// a stored image stays the nearest one across the skin lifetime.
+    pub fn periodic(cell: Cell, r_cut: f64, skin: f64) -> VerletList {
+        assert!(r_cut > 0.0 && skin >= 0.0);
+        assert_mic_cutoff(&cell, r_cut + skin);
+        VerletList { cell: Some(cell), ..VerletList::open(r_cut, skin) }
+    }
+
+    pub fn cell(&self) -> Option<&Cell> {
+        self.cell.as_ref()
+    }
+
+    /// The current candidate edges (directed, within `r_cut + skin` at
+    /// the last rebuild).  Consumers must re-check distances.
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// Ensure the list is valid for `pos`; returns `true` if it was
+    /// rebuilt, `false` on a (allocation-free) reuse step.
+    pub fn update(&mut self, pos: &[[f64; 3]]) -> bool {
+        if self.needs_rebuild(pos) {
+            self.rebuild(pos);
+            self.rebuilds += 1;
+            true
+        } else {
+            self.reuses += 1;
+            false
+        }
+    }
+
+    fn needs_rebuild(&self, pos: &[[f64; 3]]) -> bool {
+        if !self.built || pos.len() != self.ref_pos.len() {
+            return true;
+        }
+        if self.skin == 0.0 {
+            return true;
+        }
+        let limit2 = 0.25 * self.skin * self.skin;
+        pos.iter()
+            .zip(&self.ref_pos)
+            .any(|(p, q)| dist2(*p, *q) >= limit2)
+    }
+
+    fn rebuild(&mut self, pos: &[[f64; 3]]) {
+        let r_build = self.r_cut + self.skin;
+        match &self.cell {
+            Some(cell) => {
+                neighbors_periodic_into(
+                    pos, cell, r_build, &mut self.scratch, &mut self.edges,
+                );
+            }
+            None => {
+                open_build_into(
+                    pos, r_build, &mut self.scratch, &mut self.edges,
+                );
+            }
+        }
+        self.ref_pos.clear();
+        self.ref_pos.extend_from_slice(pos);
+        self.built = true;
+    }
+
+    /// Visit every undirected pair currently within `r_cut`:
+    /// `f(i, j, d, r2)` with `d = pos[i] - pos[j] + shift · H` the
+    /// minimum-image displacement and `r2 = |d|^2 < r_cut^2`; each pair
+    /// is visited once, with `i < j`.  Allocation-free.
+    pub fn for_each_pair<F: FnMut(usize, usize, [f64; 3], f64)>(
+        &self, pos: &[[f64; 3]], mut f: F,
+    ) {
+        let rc2 = self.r_cut * self.r_cut;
+        for e in &self.edges {
+            if e.i >= e.j {
+                continue;
+            }
+            let mut d = [
+                pos[e.i][0] - pos[e.j][0],
+                pos[e.i][1] - pos[e.j][1],
+                pos[e.i][2] - pos[e.j][2],
+            ];
+            if let Some(cell) = &self.cell {
+                let sv = cell.shift_vector(e.shift);
+                d = [d[0] + sv[0], d[1] + sv[1], d[2] + sv[2]];
+            }
+            let r2 = norm2(d);
+            if r2 < rc2 {
+                f(e.i, e.j, d, r2);
+            }
+        }
+    }
+}
+
+/// Open-boundary analog of [`neighbors_periodic_into`]: the bounding-box
+/// grid of [`neighbors_cell`], rebuilt over retained linked-cell
+/// scratch; every edge carries a zero shift.
+fn open_build_into(
+    pos: &[[f64; 3]], r_cut: f64,
+    scratch: &mut CellListScratch, out: &mut Vec<Edge>,
+) {
+    out.clear();
+    if pos.is_empty() {
+        return;
+    }
+    let mut lo = [f64::INFINITY; 3];
+    let mut hi = [f64::NEG_INFINITY; 3];
+    for p in pos {
+        for k in 0..3 {
+            lo[k] = lo[k].min(p[k]);
+            hi[k] = hi[k].max(p[k]);
+        }
+    }
+    let budget = (4 * pos.len()).max(64) as f64;
+    let mut w = r_cut.max(1e-9);
+    loop {
+        let est: f64 = (0..3)
+            .map(|k| ((hi[k] - lo[k]) / w).floor() + 1.0)
+            .product();
+        if est <= budget || !est.is_finite() {
+            break;
+        }
+        w *= 2.0;
+    }
+    let dims: [usize; 3] = std::array::from_fn(|k| {
+        (((hi[k] - lo[k]) / w).floor() as usize + 1).max(1)
+    });
+    let cell_of = |p: &[f64; 3]| -> [i64; 3] {
+        std::array::from_fn(|k| {
+            ((((p[k] - lo[k]) / w).floor() as usize).min(dims[k] - 1)) as i64
+        })
+    };
+    let idx = |c: [usize; 3]| (c[0] * dims[1] + c[1]) * dims[2] + c[2];
+    let n_buckets = dims[0] * dims[1] * dims[2];
+    scratch.head.clear();
+    scratch.head.resize(n_buckets, -1);
+    scratch.next.clear();
+    scratch.next.resize(pos.len(), -1);
+    for (i, p) in pos.iter().enumerate() {
+        let c = cell_of(p);
+        let b = idx([c[0] as usize, c[1] as usize, c[2] as usize]);
+        scratch.next[i] = scratch.head[b];
+        scratch.head[b] = i as i32;
+    }
+    let rc2 = r_cut * r_cut;
+    for (i, p) in pos.iter().enumerate() {
+        let c = cell_of(p);
+        for dx in -1i64..=1 {
+            for dy in -1i64..=1 {
+                for dz in -1i64..=1 {
+                    let nc = [c[0] + dx, c[1] + dy, c[2] + dz];
+                    if nc.iter().zip(&dims).any(|(v, d)| *v < 0 || *v >= *d as i64)
+                    {
+                        continue;
+                    }
+                    let b = idx([
+                        nc[0] as usize, nc[1] as usize, nc[2] as usize,
+                    ]);
+                    let mut jj = scratch.head[b];
+                    while jj >= 0 {
+                        let j = jj as usize;
+                        if j != i && dist2(*p, pos[j]) < rc2 {
+                            out.push(Edge { i, j, shift: [0; 3] });
+                        }
+                        jj = scratch.next[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,6 +775,9 @@ mod tests {
     #[test]
     fn empty_input() {
         assert!(neighbors_cell(&[], 1.0).is_empty());
+        assert!(
+            neighbors_periodic_cell(&[], &Cell::cubic(5.0), 1.0).is_empty()
+        );
     }
 
     #[test]
@@ -166,6 +799,12 @@ mod tests {
         let mut got = neighbors_cell(&pos, 0.5);
         got.sort_unstable();
         assert_eq!(got, vec![(0, 1), (1, 0), (2, 3), (3, 2)]);
+
+        // periodic analog: a huge near-empty box must cap its grid too
+        let cell = Cell::cubic(1.0e5);
+        let pos = vec![[0.0; 3], [0.3, 0.0, 0.0]];
+        let got = neighbors_periodic_cell(&pos, &cell, 0.5);
+        assert_eq!(got.len(), 2);
     }
 
     #[test]
@@ -208,5 +847,192 @@ mod tests {
                 }
             },
         );
+    }
+
+    // --- periodic unit tests (the full property suite lives in
+    // tests/periodic_property.rs) ---
+
+    #[test]
+    fn cell_round_trips_and_widths() {
+        let cell = Cell::orthorhombic(4.0, 6.0, 10.0);
+        assert!((cell.min_width() - 4.0).abs() < 1e-12);
+        assert!((cell.max_cutoff() - 2.0).abs() < 1e-12);
+        let r = [1.3, -2.1, 17.9];
+        let back = cell.cart(cell.frac(r));
+        for k in 0..3 {
+            assert!((back[k] - r[k]).abs() < 1e-12);
+        }
+        let w = cell.wrap([5.0, -1.0, 21.0]);
+        assert!((w[0] - 1.0).abs() < 1e-12);
+        assert!((w[1] - 5.0).abs() < 1e-12);
+        assert!((w[2] - 1.0).abs() < 1e-12);
+
+        // triclinic: a sheared cube keeps volume, loses width
+        let tri = Cell::triclinic([
+            [4.0, 0.0, 0.0],
+            [2.0, 4.0, 0.0],
+            [0.0, 0.0, 4.0],
+        ]);
+        assert!(tri.min_width() < 4.0 - 1e-9);
+        let f = tri.frac([6.0, 4.0, 0.0]); // = a + b
+        assert!((f[0] - 1.0).abs() < 1e-12 && (f[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_image_picks_nearest() {
+        let cell = Cell::cubic(10.0);
+        let (d, s) = cell.min_image([9.0, 0.0, 0.0]);
+        assert!((d[0] + 1.0).abs() < 1e-12);
+        assert_eq!(s, [-1, 0, 0]);
+        let (d, s) = cell.min_image([-12.0, 4.0, 26.0]);
+        assert!((d[0] + 2.0).abs() < 1e-12);
+        assert!((d[1] - 4.0).abs() < 1e-12);
+        assert!((d[2] + 4.0).abs() < 1e-12);
+        assert_eq!(s, [1, 0, -3]);
+    }
+
+    #[test]
+    fn periodic_wraparound_pair_found() {
+        let cell = Cell::cubic(10.0);
+        // neighbors only through the boundary
+        let pos = vec![[0.2, 5.0, 5.0], [9.9, 5.0, 5.0]];
+        let mut got = neighbors_periodic_cell(&pos, &cell, 1.0);
+        got.sort_unstable();
+        assert_eq!(
+            got,
+            vec![
+                Edge { i: 0, j: 1, shift: [1, 0, 0] },
+                Edge { i: 1, j: 0, shift: [-1, 0, 0] },
+            ]
+        );
+        // consumer-side displacement reconstructs the true distance
+        let e = got[0];
+        let sv = cell.shift_vector(e.shift);
+        let d = [
+            pos[e.i][0] - pos[e.j][0] + sv[0],
+            pos[e.i][1] - pos[e.j][1] + sv[1],
+            pos[e.i][2] - pos[e.j][2] + sv[2],
+        ];
+        assert!((norm2(d).sqrt() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn periodic_matches_brute_oracle_property() {
+        check(
+            "periodic cell-list == minimum-image brute force",
+            PropConfig { cases: 20, seed: 17 },
+            |rng, case| {
+                let l = rng.uniform(4.0, 8.0);
+                let cell = if case % 3 == 0 {
+                    Cell::triclinic([
+                        [l, 0.0, 0.0],
+                        [0.3 * l, 1.1 * l, 0.0],
+                        [0.1 * l, 0.2 * l, 0.9 * l],
+                    ])
+                } else {
+                    Cell::orthorhombic(l, 1.2 * l, 0.8 * l)
+                };
+                let n = 6 + case % 30;
+                // positions deliberately NOT pre-wrapped
+                let pos: Vec<[f64; 3]> = (0..n)
+                    .map(|_| {
+                        [
+                            rng.uniform(-2.0 * l, 2.0 * l),
+                            rng.uniform(-2.0 * l, 2.0 * l),
+                            rng.uniform(-2.0 * l, 2.0 * l),
+                        ]
+                    })
+                    .collect();
+                // cutoffs all the way up to the MIC bound
+                let rc = rng.uniform(0.3, 1.0) * cell.max_cutoff();
+                let mut a = neighbors_periodic_brute(&pos, &cell, rc);
+                let mut b = neighbors_periodic_cell(&pos, &cell, rc);
+                let mut c = neighbors_periodic_par(&pos, &cell, rc, 3);
+                a.sort_unstable();
+                b.sort_unstable();
+                c.sort_unstable();
+                if a != b {
+                    return Err(format!(
+                        "cell-list mismatch: brute {} vs cell {}",
+                        a.len(), b.len()
+                    ));
+                }
+                if a != c {
+                    return Err(format!(
+                        "parallel mismatch: brute {} vs par {}",
+                        a.len(), c.len()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn verlet_reuses_until_skin_and_stays_exact() {
+        let cell = Cell::cubic(8.0);
+        let mut pos: Vec<[f64; 3]> = Vec::new();
+        for i in 0..4 {
+            for j in 0..4 {
+                for k in 0..4 {
+                    pos.push([2.0 * i as f64, 2.0 * j as f64,
+                              2.0 * k as f64]);
+                }
+            }
+        }
+        let mut vl = VerletList::periodic(cell.clone(), 2.2, 0.8);
+        assert!(vl.update(&pos), "first update must build");
+        assert!(!vl.update(&pos), "unmoved positions reuse the list");
+        // nudge every atom by less than skin/2: still a reuse
+        for p in pos.iter_mut() {
+            p[0] += 0.3;
+        }
+        assert!(!vl.update(&pos));
+        // the reused list is still exact at r_cut
+        let mut got = Vec::new();
+        vl.for_each_pair(&pos, |i, j, _, _| got.push((i, j)));
+        let mut want: Vec<(usize, usize)> =
+            neighbors_periodic_brute(&pos, &cell, 2.2)
+                .into_iter()
+                .filter(|e| e.i < e.j)
+                .map(|e| (e.i, e.j))
+                .collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
+        // a move past skin/2 triggers a rebuild
+        pos[0][1] += 0.5;
+        assert!(vl.update(&pos));
+        assert_eq!(vl.rebuilds, 2);
+        assert_eq!(vl.reuses, 2);
+    }
+
+    #[test]
+    fn verlet_open_matches_cell_list() {
+        let pos: Vec<[f64; 3]> = (0..20)
+            .map(|i| {
+                let x = i as f64;
+                [x * 0.7, (x * 1.3) % 5.0, (x * 2.1) % 4.0]
+            })
+            .collect();
+        let mut vl = VerletList::open(1.5, 0.4);
+        vl.update(&pos);
+        let mut got = Vec::new();
+        vl.for_each_pair(&pos, |i, j, _, _| got.push((i, j)));
+        let mut want: Vec<(usize, usize)> = neighbors_cell(&pos, 1.5)
+            .into_iter()
+            .filter(|(i, j)| i < j)
+            .collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimum-image")]
+    fn cutoff_beyond_mic_bound_panics() {
+        let cell = Cell::cubic(4.0);
+        let pos = vec![[0.0; 3], [1.0, 0.0, 0.0]];
+        let _ = neighbors_periodic_cell(&pos, &cell, 3.0);
     }
 }

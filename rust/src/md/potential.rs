@@ -13,12 +13,15 @@
 use std::sync::Arc;
 
 use crate::model::{Model, ModelScratch};
+use super::neighbor::{neighbors_cell, neighbors_periodic_cell, Cell,
+                      VerletList};
 use super::relax::ForceProvider;
 
 /// Pairwise potential kinds.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum PotentialKind {
-    /// 4 eps ((s/r)^12 - (s/r)^6), smoothly cut at r_cut.
+    /// 4 eps ((s/r)^12 - (s/r)^6) in shifted-force form: energy AND
+    /// dE/dr both reach zero at r_cut (C^1 cutoff).
     LennardJones { eps: f64, sigma: f64, r_cut: f64 },
     /// D (1 - e^{-a(r - r0)})^2 - D.
     Morse { d: f64, a: f64, r0: f64 },
@@ -36,11 +39,21 @@ impl PotentialKind {
                 }
                 let sr6 = (sigma / r).powi(6);
                 let sr12 = sr6 * sr6;
-                // shift so e(r_cut) = 0 (keeps energies continuous)
+                // Shifted-force form: e' = e - e_c - (r - r_cut) de_c,
+                // de' = de - de_c, so BOTH vanish at the cutoff.  The
+                // previous energy-only shift left dE/dr jumping by de_c
+                // at r_cut — a force discontinuity that injected energy
+                // every time a pair crossed the cutoff and drifted NVE
+                // trajectories.
                 let src6 = (sigma / r_cut).powi(6);
-                let shift = 4.0 * eps * (src6 * src6 - src6);
-                let e = 4.0 * eps * (sr12 - sr6) - shift;
-                let de = 4.0 * eps * (-12.0 * sr12 + 6.0 * sr6) / r;
+                let src12 = src6 * src6;
+                let e_cut = 4.0 * eps * (src12 - src6);
+                let de_cut =
+                    4.0 * eps * (-12.0 * src12 + 6.0 * src6) / r_cut;
+                let e = 4.0 * eps * (sr12 - sr6) - e_cut
+                    - (r - r_cut) * de_cut;
+                let de = 4.0 * eps * (-12.0 * sr12 + 6.0 * sr6) / r
+                    - de_cut;
                 (e, de)
             }
             PotentialKind::Morse { d, a, r0 } => {
@@ -56,6 +69,39 @@ impl PotentialKind {
             }
         }
     }
+
+    /// Interaction cutoff, if this kind has one (Morse/Harmonic do
+    /// not, so tables containing them cannot route through a
+    /// cutoff-radius neighbor list).
+    pub fn cutoff(&self) -> Option<f64> {
+        match *self {
+            PotentialKind::LennardJones { r_cut, .. } => Some(r_cut),
+            _ => None,
+        }
+    }
+}
+
+/// Accumulate one pair term with displacement `d = r_i - r_j` (+ image
+/// shift under PBC): `E += e(r)`, `F_i += -dE/dr * d / r`, `F_j -=` the
+/// same (Newton's third law is exact per pair).
+#[inline]
+fn accumulate_pair(
+    kind: &PotentialKind, d: [f64; 3], i: usize, j: usize,
+    e: &mut f64, f: &mut [[f64; 3]],
+) {
+    let r = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt().max(1e-9);
+    let (pe, de) = kind.energy_deriv(r);
+    *e += pe;
+    let s = -de / r;
+    for k in 0..3 {
+        f[i][k] += s * d[k];
+        f[j][k] -= s * d[k];
+    }
+}
+
+#[inline]
+fn sub(a: [f64; 3], b: [f64; 3]) -> [f64; 3] {
+    [a[0] - b[0], a[1] - b[1], a[2] - b[2]]
 }
 
 /// A full system potential: per-species-pair nonbonded terms + explicit
@@ -63,7 +109,10 @@ impl PotentialKind {
 #[derive(Clone, Debug)]
 pub struct Potential {
     pub n_species: usize,
-    /// nonbonded[s1 * n_species + s2]
+    /// Species-pair table, read through the SYMMETRIZED lookup
+    /// [`Potential::pair_kind`]: `(s1, s2)` and `(s2, s1)` resolve to
+    /// the same entry, so energies cannot depend on atom ordering even
+    /// when the raw table is asymmetric.
     pub nonbonded: Vec<PotentialKind>,
     /// (i, j, kind) explicit bonds (applied in addition to nonbonded)
     pub bonds: Vec<(usize, usize, PotentialKind)>,
@@ -82,49 +131,219 @@ impl Potential {
         }
     }
 
-    fn is_bonded(&self, i: usize, j: usize) -> bool {
-        self.bonds
-            .iter()
-            .any(|(a, b, _)| (*a == i && *b == j) || (*a == j && *b == i))
+    /// Symmetrized species-pair lookup (canonical min/max order).  The
+    /// old `nonbonded[s_i * n + s_j]` read the table only in `i < j`
+    /// atom order, so an asymmetric table silently made the energy a
+    /// function of atom indexing.
+    #[inline]
+    pub fn pair_kind(&self, si: usize, sj: usize) -> PotentialKind {
+        let (a, b) = if si <= sj { (si, sj) } else { (sj, si) };
+        self.nonbonded[a * self.n_species + b]
     }
 
-    /// Total energy + forces.  `species[i]` indexes the nonbonded table.
+    /// Largest nonbonded cutoff, provided EVERY nonbonded kind has one
+    /// — the precondition for routing nonbonded terms through a
+    /// cutoff-radius neighbor list.  `None` (a cutoff-free kind in the
+    /// table) falls back to the all-pairs loop.
+    pub fn nonbonded_cutoff(&self) -> Option<f64> {
+        let mut rc = 0.0f64;
+        for k in &self.nonbonded {
+            rc = rc.max(k.cutoff()?);
+        }
+        if rc > 0.0 { Some(rc) } else { None }
+    }
+
+    /// Normalized sorted bonded-pair set, built once per energy
+    /// evaluation for O(log B) exclusion checks — the old `is_bonded`
+    /// linearly scanned the bond list inside the O(N^2) pair loop
+    /// (O(N^2 B)).  Returns an unallocated empty Vec when exclusions
+    /// are off, keeping neighbor-list reuse steps allocation-free.
+    fn excluded_pairs(&self) -> Vec<(usize, usize)> {
+        if !self.exclude_bonded_nonbonded || self.bonds.is_empty() {
+            return Vec::new();
+        }
+        let mut ex: Vec<(usize, usize)> = self
+            .bonds
+            .iter()
+            .map(|&(a, b, _)| (a.min(b), a.max(b)))
+            .collect();
+        ex.sort_unstable();
+        ex.dedup();
+        ex
+    }
+
+    /// Total energy + forces (open boundary).  `species[i]` indexes the
+    /// nonbonded table (symmetrized).  Nonbonded terms route through
+    /// the O(N) cell-list neighbor search whenever every kind carries a
+    /// cutoff; pairs beyond it contribute exactly zero, so the result
+    /// matches the all-pairs loop.
     pub fn energy_forces(&self, pos: &[[f64; 3]], species: &[usize])
         -> (f64, Vec<[f64; 3]>) {
         let n = pos.len();
         let mut e = 0.0;
         let mut f = vec![[0.0f64; 3]; n];
-        let add_pair = |i: usize, j: usize, kind: &PotentialKind,
-                            e: &mut f64, f: &mut Vec<[f64; 3]>| {
-            let d = [
-                pos[i][0] - pos[j][0],
-                pos[i][1] - pos[j][1],
-                pos[i][2] - pos[j][2],
-            ];
-            let r = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt().max(1e-9);
-            let (pe, de) = kind.energy_deriv(r);
-            *e += pe;
-            // F_i = -dE/dr * d/r ; F_j = -F_i
-            let s = -de / r;
-            for k in 0..3 {
-                f[i][k] += s * d[k];
-                f[j][k] -= s * d[k];
-            }
+        let excl = self.excluded_pairs();
+        let excluded = |i: usize, j: usize| {
+            !excl.is_empty() && excl.binary_search(&(i, j)).is_ok()
         };
-        for i in 0..n {
-            for j in (i + 1)..n {
-                if self.exclude_bonded_nonbonded && self.is_bonded(i, j) {
-                    continue;
+        match self.nonbonded_cutoff() {
+            Some(rc) => {
+                for (i, j) in neighbors_cell(pos, rc) {
+                    if i < j && !excluded(i, j) {
+                        let kind = self.pair_kind(species[i], species[j]);
+                        accumulate_pair(&kind, sub(pos[i], pos[j]), i, j,
+                                        &mut e, &mut f);
+                    }
                 }
-                let kind = self.nonbonded
-                    [species[i] * self.n_species + species[j]];
-                add_pair(i, j, &kind, &mut e, &mut f);
+            }
+            None => {
+                for i in 0..n {
+                    for j in (i + 1)..n {
+                        if excluded(i, j) {
+                            continue;
+                        }
+                        let kind = self.pair_kind(species[i], species[j]);
+                        accumulate_pair(&kind, sub(pos[i], pos[j]), i, j,
+                                        &mut e, &mut f);
+                    }
+                }
             }
         }
         for (i, j, kind) in &self.bonds {
-            add_pair(*i, *j, kind, &mut e, &mut f);
+            accumulate_pair(kind, sub(pos[*i], pos[*j]), *i, *j,
+                            &mut e, &mut f);
         }
         (e, f)
+    }
+
+    /// Periodic energy + forces under the minimum-image convention:
+    /// nonbonded terms through the periodic cell list, bonded terms
+    /// through minimum-image displacements.  Every nonbonded kind must
+    /// carry a cutoff, and that cutoff must respect
+    /// [`Cell::max_cutoff`] (asserted by the builder).
+    pub fn energy_forces_periodic(
+        &self, pos: &[[f64; 3]], species: &[usize], cell: &Cell,
+    ) -> (f64, Vec<[f64; 3]>) {
+        let rc = self.nonbonded_cutoff().expect(
+            "energy_forces_periodic: every nonbonded kind needs a cutoff",
+        );
+        let mut e = 0.0;
+        let mut f = vec![[0.0f64; 3]; pos.len()];
+        let excl = self.excluded_pairs();
+        for edge in neighbors_periodic_cell(pos, cell, rc) {
+            let (i, j) = (edge.i, edge.j);
+            if i < j
+                && (excl.is_empty()
+                    || excl.binary_search(&(i, j)).is_err())
+            {
+                let kind = self.pair_kind(species[i], species[j]);
+                let sv = cell.shift_vector(edge.shift);
+                let d = [
+                    pos[i][0] - pos[j][0] + sv[0],
+                    pos[i][1] - pos[j][1] + sv[1],
+                    pos[i][2] - pos[j][2] + sv[2],
+                ];
+                accumulate_pair(&kind, d, i, j, &mut e, &mut f);
+            }
+        }
+        for (i, j, kind) in &self.bonds {
+            let (d, _) = cell.min_image(sub(pos[*i], pos[*j]));
+            accumulate_pair(kind, d, *i, *j, &mut e, &mut f);
+        }
+        (e, f)
+    }
+
+    /// Energy + forces through a caller-owned [`VerletList`] — the
+    /// large-system rollout hot path (open or periodic, per the list).
+    /// `forces` is cleared and refilled in place; once buffers are warm
+    /// a reuse step (`update` returning false) performs zero
+    /// allocations for potentials without bonded exclusions (gated by
+    /// `tests/alloc_regression.rs`).
+    pub fn energy_forces_with_list(
+        &self, pos: &[[f64; 3]], species: &[usize], list: &mut VerletList,
+        forces: &mut Vec<[f64; 3]>,
+    ) -> f64 {
+        let rc = self.nonbonded_cutoff().expect(
+            "energy_forces_with_list: every nonbonded kind needs a cutoff",
+        );
+        assert!(
+            rc <= list.r_cut + 1e-12,
+            "Verlet list cutoff {} below potential cutoff {rc}",
+            list.r_cut
+        );
+        list.update(pos);
+        forces.clear();
+        forces.resize(pos.len(), [0.0; 3]);
+        let mut e = 0.0;
+        let excl = self.excluded_pairs();
+        list.for_each_pair(pos, |i, j, d, _r2| {
+            if excl.is_empty() || excl.binary_search(&(i, j)).is_err() {
+                let kind = self.pair_kind(species[i], species[j]);
+                accumulate_pair(&kind, d, i, j, &mut e, forces);
+            }
+        });
+        for (i, j, kind) in &self.bonds {
+            let d = sub(pos[*i], pos[*j]);
+            let d = match list.cell() {
+                Some(cell) => cell.min_image(d).0,
+                None => d,
+            };
+            accumulate_pair(kind, d, *i, *j, &mut e, forces);
+        }
+        e
+    }
+}
+
+/// A classical potential bound to a periodic [`Cell`] and a
+/// skin-buffered [`VerletList`] — the rollout-ready [`ForceProvider`]
+/// for periodic MD.  Repeated evaluations reuse the neighbor list while
+/// every atom stays within `skin / 2` of its build position;
+/// [`PeriodicPotential::energy_forces_ref`] additionally reuses the
+/// retained force buffer, making reuse steps allocation-free.
+pub struct PeriodicPotential {
+    pub potential: Potential,
+    pub species: Vec<usize>,
+    list: VerletList,
+    forces: Vec<[f64; 3]>,
+}
+
+impl PeriodicPotential {
+    /// `skin` buffers rebuilds; `r_cut + skin` must respect the cell's
+    /// minimum-image bound (asserted by [`VerletList::periodic`]).
+    pub fn new(
+        potential: Potential, species: Vec<usize>, cell: Cell, skin: f64,
+    ) -> PeriodicPotential {
+        let rc = potential.nonbonded_cutoff().expect(
+            "PeriodicPotential: every nonbonded kind needs a cutoff",
+        );
+        PeriodicPotential {
+            potential,
+            species,
+            list: VerletList::periodic(cell, rc, skin),
+            forces: Vec::new(),
+        }
+    }
+
+    /// Energy + borrowed forces (the allocation-free reuse path).
+    pub fn energy_forces_ref(
+        &mut self, pos: &[[f64; 3]],
+    ) -> (f64, &[[f64; 3]]) {
+        let e = self.potential.energy_forces_with_list(
+            pos, &self.species, &mut self.list, &mut self.forces,
+        );
+        (e, &self.forces)
+    }
+
+    /// The underlying Verlet list (rebuild/reuse counters, cell).
+    pub fn list(&self) -> &VerletList {
+        &self.list
+    }
+}
+
+impl ForceProvider for PeriodicPotential {
+    fn energy_forces(&mut self, pos: &[[f64; 3]]) -> (f64, Vec<[f64; 3]>) {
+        let (e, f) = self.energy_forces_ref(pos);
+        (e, f.to_vec())
     }
 }
 
@@ -250,8 +469,10 @@ mod tests {
     fn lj_minimum_at_r_min() {
         let p = PotentialKind::LennardJones { eps: 1.0, sigma: 1.0, r_cut: 10.0 };
         let r_min = 2f64.powf(1.0 / 6.0);
+        // the shifted-force term tilts the well by -de_cut (~2.4e-6 at
+        // r_cut = 10), so the stationary point moves by that much
         let (_, d) = p.energy_deriv(r_min);
-        assert!(d.abs() < 1e-10);
+        assert!(d.abs() < 1e-5);
         let (e, _) = p.energy_deriv(r_min);
         assert!((e + 1.0).abs() < 1e-3); // ~ -eps (small cutoff shift)
     }
@@ -259,9 +480,224 @@ mod tests {
     #[test]
     fn lj_cutoff_continuous() {
         let p = PotentialKind::LennardJones { eps: 1.0, sigma: 1.0, r_cut: 2.5 };
-        let (e_in, _) = p.energy_deriv(2.4999);
-        let (e_out, _) = p.energy_deriv(2.5001);
-        assert!(e_in.abs() < 1e-2 && e_out == 0.0);
+        let (e_in, de_in) = p.energy_deriv(2.5 - 1e-7);
+        let (e_out, de_out) = p.energy_deriv(2.5 + 1e-7);
+        // shifted-force: BOTH energy and dE/dr are continuous (-> 0) at
+        // the cutoff.  The old energy-only shift left dE/dr jumping by
+        // ~ -0.039 here.
+        assert!(e_in.abs() < 1e-6 && e_out == 0.0);
+        assert!(de_in.abs() < 1e-5 && de_out == 0.0, "force jump at r_cut: {de_in}");
+    }
+
+    #[test]
+    fn lj_energy_and_force_vanish_smoothly_at_cutoff() {
+        // approach the cutoff from inside: |e| and |dE/dr| both shrink
+        // like (r_cut - r) and (r_cut - r) respectively
+        let p = PotentialKind::LennardJones { eps: 0.7, sigma: 1.1, r_cut: 3.0 };
+        let (e1, d1) = p.energy_deriv(3.0 - 1e-3);
+        let (e2, d2) = p.energy_deriv(3.0 - 1e-4);
+        assert!(e2.abs() < e1.abs() && d2.abs() < d1.abs());
+        assert!(d2.abs() < 1e-2 * (1.0 + d1.abs()));
+    }
+
+    #[test]
+    fn asymmetric_table_is_permutation_invariant() {
+        // deliberately asymmetric raw table: entry (0,1) != entry (1,0)
+        let lj_a = PotentialKind::LennardJones { eps: 1.0, sigma: 1.0, r_cut: 4.0 };
+        let lj_b = PotentialKind::LennardJones { eps: 0.25, sigma: 1.3, r_cut: 4.0 };
+        let lj_x = PotentialKind::LennardJones { eps: 2.0, sigma: 0.9, r_cut: 4.0 };
+        let pot = Potential {
+            n_species: 2,
+            nonbonded: vec![lj_a, lj_x, lj_b, lj_a],
+            bonds: Vec::new(),
+            exclude_bonded_nonbonded: false,
+        };
+        // symmetrized lookup: (0,1) and (1,0) must agree
+        assert_eq!(pot.pair_kind(0, 1), pot.pair_kind(1, 0));
+        let pos = vec![[0.0, 0.0, 0.0], [1.4, 0.0, 0.0], [0.3, 1.5, 0.2]];
+        let species = [0usize, 1, 0];
+        let (e, f) = pot.energy_forces(&pos, &species);
+        // reverse the atom order: energy identical, forces permuted
+        let rpos: Vec<[f64; 3]> = pos.iter().rev().copied().collect();
+        let rspecies: Vec<usize> = species.iter().rev().copied().collect();
+        let (er, fr) = pot.energy_forces(&rpos, &rspecies);
+        assert!((e - er).abs() < 1e-12, "{e} vs {er}");
+        for i in 0..3 {
+            for k in 0..3 {
+                assert!((f[i][k] - fr[2 - i][k]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cell_list_route_matches_all_pairs_reference() {
+        // same potential evaluated via the neighbor-list route and via a
+        // manual all-pairs double loop must agree exactly
+        let mut rng = Rng::new(7);
+        let pot = Potential::lj(1.0, 1.0, 2.5);
+        let n = 40;
+        let pos: Vec<[f64; 3]> = (0..n)
+            .map(|_| [rng.uniform(0.0, 6.0), rng.uniform(0.0, 6.0),
+                      rng.uniform(0.0, 6.0)])
+            .collect();
+        let species = vec![0usize; n];
+        let (e, f) = pot.energy_forces(&pos, &species);
+        let mut e_ref = 0.0;
+        let mut f_ref = vec![[0.0f64; 3]; n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let kind = pot.pair_kind(species[i], species[j]);
+                accumulate_pair(&kind, sub(pos[i], pos[j]), i, j,
+                                &mut e_ref, &mut f_ref);
+            }
+        }
+        assert!((e - e_ref).abs() < 1e-9 * (1.0 + e_ref.abs()),
+                "{e} vs {e_ref}");
+        for i in 0..n {
+            for k in 0..3 {
+                assert!((f[i][k] - f_ref[i][k]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn periodic_forces_sum_to_zero_and_match_brute() {
+        let mut rng = Rng::new(3);
+        let cell = Cell::orthorhombic(7.0, 8.0, 9.0);
+        let pot = Potential::lj(1.0, 1.0, 2.8);
+        let n = 30;
+        let pos: Vec<[f64; 3]> = (0..n)
+            .map(|_| [rng.uniform(0.0, 7.0), rng.uniform(0.0, 8.0),
+                      rng.uniform(0.0, 9.0)])
+            .collect();
+        let species = vec![0usize; n];
+        let (e, f) = pot.energy_forces_periodic(&pos, &species, &cell);
+        assert!(e.is_finite());
+        for k in 0..3 {
+            let s: f64 = f.iter().map(|v| v[k]).sum();
+            assert!(s.abs() < 1e-9, "net force along {k}: {s}");
+        }
+        // brute minimum-image reference
+        let mut e_ref = 0.0;
+        let mut f_ref = vec![[0.0f64; 3]; n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let (d, _) = cell.min_image(sub(pos[i], pos[j]));
+                let kind = pot.pair_kind(species[i], species[j]);
+                accumulate_pair(&kind, d, i, j, &mut e_ref, &mut f_ref);
+            }
+        }
+        assert!((e - e_ref).abs() < 1e-9 * (1.0 + e_ref.abs()));
+        for i in 0..n {
+            for k in 0..3 {
+                assert!((f[i][k] - f_ref[i][k]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn periodic_matches_open_for_isolated_cluster() {
+        // a cluster far smaller than the box never sees its images, so
+        // periodic and open evaluations coincide
+        let mut rng = Rng::new(11);
+        let pot = Potential::lj(1.0, 1.0, 2.5);
+        let n = 12;
+        let pos: Vec<[f64; 3]> = (0..n)
+            .map(|_| [20.0 + rng.uniform(0.0, 3.0),
+                      20.0 + rng.uniform(0.0, 3.0),
+                      20.0 + rng.uniform(0.0, 3.0)])
+            .collect();
+        let species = vec![0usize; n];
+        let cell = Cell::cubic(50.0);
+        let (e_open, f_open) = pot.energy_forces(&pos, &species);
+        let (e_per, f_per) = pot.energy_forces_periodic(&pos, &species, &cell);
+        assert!((e_open - e_per).abs() < 1e-10 * (1.0 + e_open.abs()));
+        for i in 0..n {
+            for k in 0..3 {
+                assert!((f_open[i][k] - f_per[i][k]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn with_list_matches_direct_periodic() {
+        let mut rng = Rng::new(5);
+        let cell = Cell::cubic(9.0);
+        let pot = Potential::lj(1.0, 1.0, 2.5);
+        let n = 25;
+        let mut pos: Vec<[f64; 3]> = (0..n)
+            .map(|_| [rng.uniform(0.0, 9.0), rng.uniform(0.0, 9.0),
+                      rng.uniform(0.0, 9.0)])
+            .collect();
+        let species = vec![0usize; n];
+        let mut list = VerletList::periodic(cell, 2.5, 0.6);
+        let mut forces = Vec::new();
+        for step in 0..5 {
+            let e = pot.energy_forces_with_list(
+                &pos, &species, &mut list, &mut forces);
+            let (e_ref, f_ref) =
+                pot.energy_forces_periodic(&pos, &species, &cell);
+            assert!((e - e_ref).abs() < 1e-9 * (1.0 + e_ref.abs()),
+                    "step {step}: {e} vs {e_ref}");
+            for i in 0..n {
+                for k in 0..3 {
+                    assert!((forces[i][k] - f_ref[i][k]).abs() < 1e-9);
+                }
+            }
+            // drift atoms a little (stays under skin/2 most steps, so
+            // both reuse AND rebuild paths are exercised across steps)
+            for p in pos.iter_mut() {
+                for v in p.iter_mut() {
+                    *v += rng.uniform(-0.12, 0.12);
+                }
+            }
+        }
+        assert!(list.rebuilds >= 1);
+    }
+
+    #[test]
+    fn periodic_potential_provider_runs_md() {
+        use crate::md::integrator::{Integrator, Thermostat};
+        let cell = Cell::cubic(6.0);
+        // 2x2x2 simple cubic lattice at spacing 3.0
+        let mut pos = Vec::new();
+        for x in 0..2 {
+            for y in 0..2 {
+                for z in 0..2 {
+                    pos.push([1.5 + 3.0 * x as f64, 1.5 + 3.0 * y as f64,
+                              1.5 + 3.0 * z as f64]);
+                }
+            }
+        }
+        let species = vec![0usize; pos.len()];
+        let mut pp = PeriodicPotential::new(
+            Potential::lj(1.0, 1.0, 2.5), species.clone(), cell, 0.4);
+        let (e0, f0) = pp.energy_forces(&pos);
+        assert!(e0.is_finite());
+        assert_eq!(f0.len(), pos.len());
+        let mut rng = Rng::new(42);
+        let mut md = Integrator::new_with(pos, species, &mut pp, 0.002,
+                                          Thermostat::None);
+        md.thermalize(0.1, &mut rng);
+        for _ in 0..50 {
+            md.step_with(&mut pp, &mut rng);
+        }
+        assert!(md.pos.iter().all(|p| p.iter().all(|v| v.is_finite())));
+        assert!(pp.list().rebuilds >= 1);
+    }
+
+    #[test]
+    fn excluded_pairs_sorted_and_deduped() {
+        let mut pot = Potential::lj(1.0, 1.0, 5.0);
+        pot.exclude_bonded_nonbonded = true;
+        pot.bonds.push((3, 1, PotentialKind::Harmonic { k: 1.0, r0: 1.0 }));
+        pot.bonds.push((0, 2, PotentialKind::Harmonic { k: 1.0, r0: 1.0 }));
+        pot.bonds.push((1, 3, PotentialKind::Harmonic { k: 1.0, r0: 1.0 }));
+        let ex = pot.excluded_pairs();
+        assert_eq!(ex, vec![(0, 2), (1, 3)]);
+        // exclusions off -> empty (and Vec::new() never allocates)
+        pot.exclude_bonded_nonbonded = false;
+        assert!(pot.excluded_pairs().is_empty());
     }
 
     #[test]

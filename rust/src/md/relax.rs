@@ -5,9 +5,15 @@
 //! descent with adaptive time step and velocity mixing; the standard
 //! relaxer in atomistic pipelines (ASE's default alongside L-BFGS).
 //! Force providers are pluggable, so the same driver runs on the
-//! classical potential (ground truth) or the served GauntNet model.
+//! classical potential (ground truth), the served GauntNet model, or a
+//! periodic system via [`crate::md::potential::PeriodicPotential`]
+//! (minimum-image forces through a skin-buffered Verlet list).
 
 /// Force provider abstraction: positions -> (energy, forces).
+/// Implementations under periodic boundary conditions carry their own
+/// [`crate::md::neighbor::Cell`]; positions may drift outside the box —
+/// providers apply minimum image internally and never wrap the caller's
+/// coordinates.
 pub trait ForceProvider {
     fn energy_forces(&mut self, pos: &[[f64; 3]]) -> (f64, Vec<[f64; 3]>);
 }

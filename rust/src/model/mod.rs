@@ -64,7 +64,8 @@ pub mod radial;
 use std::sync::Arc;
 
 use crate::err;
-use crate::md::neighbor::neighbors_cell;
+use crate::md::neighbor::{neighbors_cell, neighbors_periodic_cell,
+                          neighbors_periodic_par, Cell};
 use crate::so3::sh::real_sh_grad_xyz_into;
 use crate::tp::engine::PlanCache;
 use crate::tp::escn::{GauntConvPlan, GauntConvScratch};
@@ -424,6 +425,38 @@ impl Model {
         neighbors_cell(pos, self.cfg.r_cut)
     }
 
+    /// Periodic directed neighbor list at the model's cutoff: pairs plus
+    /// per-edge Cartesian image-shift vectors, the `shifts` input of
+    /// [`Model::energy_forces_into_shifted`].  Edge displacement
+    /// convention (DESIGN.md §13): `d = pos[i] - pos[j] + shift`.
+    pub fn build_edges_periodic(
+        &self, pos: &[[f64; 3]], cell: &Cell,
+    ) -> (Vec<(usize, usize)>, Vec<[f64; 3]>) {
+        let raw = neighbors_periodic_cell(pos, cell, self.cfg.r_cut);
+        Self::split_periodic_edges(raw, cell)
+    }
+
+    /// [`Model::build_edges_periodic`] with the cell-list walk sharded
+    /// across `threads` workers (`0` = all cores) by cell block.
+    pub fn build_edges_periodic_par(
+        &self, pos: &[[f64; 3]], cell: &Cell, threads: usize,
+    ) -> (Vec<(usize, usize)>, Vec<[f64; 3]>) {
+        let raw = neighbors_periodic_par(pos, cell, self.cfg.r_cut, threads);
+        Self::split_periodic_edges(raw, cell)
+    }
+
+    fn split_periodic_edges(
+        raw: Vec<crate::md::neighbor::Edge>, cell: &Cell,
+    ) -> (Vec<(usize, usize)>, Vec<[f64; 3]>) {
+        let mut pairs = Vec::with_capacity(raw.len());
+        let mut shifts = Vec::with_capacity(raw.len());
+        for e in raw {
+            pairs.push((e.i, e.j));
+            shifts.push(cell.shift_vector(e.shift));
+        }
+        (pairs, shifts)
+    }
+
     fn check_sizes(&self, pos: &[[f64; 3]], species: &[usize],
                    edges: &[(usize, usize)]) {
         assert_eq!(pos.len(), species.len());
@@ -445,6 +478,29 @@ impl Model {
         &self, pos: &[[f64; 3]], species: &[usize],
         edges: &[(usize, usize)], s: &mut ModelScratch,
     ) -> f64 {
+        self.energy_into_impl(pos, species, edges, None, s)
+    }
+
+    /// Periodic forward pass: like [`Model::energy_into`], but edge `e`
+    /// uses displacement `pos[i] - pos[j] + shifts[e]` (the Cartesian
+    /// image shift from [`Model::build_edges_periodic`]).  Everything
+    /// downstream of the edge geometry — layers, backward pass, forces
+    /// — is untouched: image shifts are position-independent constants,
+    /// so dE/d(pos) flows through the identical cached geometry.
+    pub fn energy_into_shifted(
+        &self, pos: &[[f64; 3]], species: &[usize],
+        edges: &[(usize, usize)], shifts: &[[f64; 3]],
+        s: &mut ModelScratch,
+    ) -> f64 {
+        assert_eq!(shifts.len(), edges.len());
+        self.energy_into_impl(pos, species, edges, Some(shifts), s)
+    }
+
+    fn energy_into_impl(
+        &self, pos: &[[f64; 3]], species: &[usize],
+        edges: &[(usize, usize)], shifts: Option<&[[f64; 3]]>,
+        s: &mut ModelScratch,
+    ) -> f64 {
         self.check_sizes(pos, species, edges);
         let c = &self.cfg;
         let (nff, nh2, cc) = (c.nff(), c.l_filter + 1, c.channels);
@@ -455,10 +511,11 @@ impl Model {
         let p = &self.params;
         // --- edge geometry (shared by every layer) ---
         for (e, &(i, j)) in edges.iter().enumerate() {
+            let sh = shifts.map_or([0.0; 3], |sv| sv[e]);
             let d = [
-                pos[i][0] - pos[j][0],
-                pos[i][1] - pos[j][1],
-                pos[i][2] - pos[j][2],
+                pos[i][0] - pos[j][0] + sh[0],
+                pos[i][1] - pos[j][1] + sh[1],
+                pos[i][2] - pos[j][2] + sh[2],
             ];
             let r = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt()
                 .max(1e-12);
@@ -779,6 +836,43 @@ impl Model {
         e
     }
 
+    /// Periodic energy + forces over caller scratch (see
+    /// [`Model::energy_into_shifted`] for the displacement convention).
+    /// The backward pass reads only the cached edge geometry, so no
+    /// shift plumbing is needed there; forces on atoms are exact
+    /// gradients of the periodic energy.
+    pub fn energy_forces_into_shifted(
+        &self, pos: &[[f64; 3]], species: &[usize],
+        edges: &[(usize, usize)], shifts: &[[f64; 3]],
+        forces: &mut [f64], s: &mut ModelScratch,
+    ) -> f64 {
+        let e = self.energy_into_shifted(pos, species, edges, shifts, s);
+        forces[..3 * pos.len()].fill(0.0);
+        let mut gp = std::mem::take(&mut s.gparams);
+        gp.fill(0.0);
+        self.backward(pos, species, edges, s, forces, &mut gp);
+        s.gparams = gp;
+        e
+    }
+
+    /// Convenience periodic energy + forces (builds the periodic
+    /// neighbor list and a scratch; use
+    /// [`Model::energy_forces_into_shifted`] on hot paths).
+    pub fn energy_forces_periodic(
+        &self, pos: &[[f64; 3]], species: &[usize], cell: &Cell,
+    ) -> (f64, Vec<[f64; 3]>) {
+        let (edges, shifts) = self.build_edges_periodic(pos, cell);
+        let mut s = self.scratch();
+        let mut flat = vec![0.0; 3 * pos.len()];
+        let e = self.energy_forces_into_shifted(
+            pos, species, &edges, &shifts, &mut flat, &mut s);
+        let forces = flat
+            .chunks_exact(3)
+            .map(|c3| [c3[0], c3[1], c3[2]])
+            .collect();
+        (e, forces)
+    }
+
     /// Energy + forces + parameter gradient (the trainer's primitive).
     /// ACCUMULATES into `forces` and `gparams`; the caller zeroes them.
     pub fn grad_into(
@@ -980,12 +1074,15 @@ pub fn params_checksum(params: &[f64]) -> String {
     format!("{h:016x}")
 }
 
-/// One structure by reference, for batched inference.
+/// One structure by reference, for batched inference.  `shifts` is
+/// `None` for open boundaries, or one Cartesian image-shift vector per
+/// edge for periodic structures ([`Model::build_edges_periodic`]).
 #[derive(Clone, Copy)]
 pub struct GraphRef<'a> {
     pub pos: &'a [[f64; 3]],
     pub species: &'a [usize],
     pub edges: &'a [(usize, usize)],
+    pub shifts: Option<&'a [[f64; 3]]>,
 }
 
 /// Row width of [`energy_forces_batch_par`] output:
@@ -1020,10 +1117,16 @@ pub fn energy_forces_batch_par(
                 return;
             }
             let (e_slot, f_slot) = row.split_at_mut(1);
-            e_slot[0] = model.energy_forces_into(
-                gr.pos, gr.species, gr.edges,
-                &mut f_slot[..3 * gr.pos.len()], scratch,
-            );
+            e_slot[0] = match gr.shifts {
+                Some(shifts) => model.energy_forces_into_shifted(
+                    gr.pos, gr.species, gr.edges, shifts,
+                    &mut f_slot[..3 * gr.pos.len()], scratch,
+                ),
+                None => model.energy_forces_into(
+                    gr.pos, gr.species, gr.edges,
+                    &mut f_slot[..3 * gr.pos.len()], scratch,
+                ),
+            };
         },
     );
     out
@@ -1235,7 +1338,7 @@ mod tests {
             .iter()
             .zip(&edge_lists)
             .map(|((pos, species), edges)| GraphRef {
-                pos, species, edges,
+                pos, species, edges, shifts: None,
             })
             .collect();
         let serial = energy_forces_batch_par(&m, &graphs, 1);
@@ -1257,6 +1360,122 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn periodic_edges_match_open_for_isolated_cluster() {
+        // a tight cluster in a huge box: periodic edges have all-zero
+        // shifts and the shifted forward pass reproduces the open one
+        let m = Model::new(ModelConfig { n_layers: 1, ..Default::default() },
+                           3);
+        let (pos, species) = toy(4, 5);
+        let cell = Cell::cubic(60.0);
+        let (edges_p, shifts) = m.build_edges_periodic(&pos, &cell);
+        assert!(shifts.iter().all(|s| s == &[0.0, 0.0, 0.0]));
+        let mut edges_open = m.build_edges(&pos);
+        let mut edges_sorted = edges_p.clone();
+        edges_open.sort_unstable();
+        edges_sorted.sort_unstable();
+        assert_eq!(edges_open, edges_sorted);
+        let (e_open, f_open) = m.energy_forces(&pos, &species);
+        let (e_per, f_per) = m.energy_forces_periodic(&pos, &species, &cell);
+        assert!((e_open - e_per).abs() < 1e-10 * (1.0 + e_open.abs()));
+        for (a, b) in f_open.iter().zip(&f_per) {
+            for ax in 0..3 {
+                assert!((a[ax] - b[ax]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn periodic_model_invariant_under_lattice_translation() {
+        let m = Model::new(ModelConfig { n_layers: 1, ..Default::default() },
+                           8);
+        let cell = Cell::cubic(8.0); // default r_cut 3.5 < L/2
+        let (pos, species) = toy(21, 6);
+        let (e, f) = m.energy_forces_periodic(&pos, &species, &cell);
+        // translating one atom by lattice vectors is a no-op
+        let mut pos2 = pos.clone();
+        pos2[2][0] += 8.0;
+        pos2[2][2] -= 16.0;
+        let (e2, f2) = m.energy_forces_periodic(&pos2, &species, &cell);
+        assert!((e - e2).abs() < 1e-9 * (1.0 + e.abs()), "{e} vs {e2}");
+        for (a, b) in f.iter().zip(&f2) {
+            for ax in 0..3 {
+                assert!((a[ax] - b[ax]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn periodic_forces_are_negative_gradient_of_periodic_energy() {
+        let m = Model::new(ModelConfig { n_layers: 1, ..Default::default() },
+                           5);
+        let cell = Cell::orthorhombic(8.0, 9.0, 10.0);
+        let (pos, species) = toy(17, 5);
+        let (_, f) = m.energy_forces_periodic(&pos, &species, &cell);
+        // central differences of the PERIODIC energy (fresh edge build
+        // per displacement, so edges crossing images are exercised)
+        let h = 1e-6;
+        for i in 0..pos.len() {
+            for ax in 0..3 {
+                let mut pp = pos.clone();
+                pp[i][ax] += h;
+                let (ep, _) = m.energy_forces_periodic(&pp, &species, &cell);
+                pp[i][ax] -= 2.0 * h;
+                let (em, _) = m.energy_forces_periodic(&pp, &species, &cell);
+                let fd = -(ep - em) / (2.0 * h);
+                assert!(
+                    (f[i][ax] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                    "atom {i} axis {ax}: {} vs {fd}", f[i][ax]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn periodic_batch_par_matches_shifted_serial() {
+        let m = Model::new(ModelConfig { n_layers: 1, ..Default::default() },
+                           12);
+        let cell = Cell::cubic(8.0);
+        let structures: Vec<_> = (0..3).map(|k| toy(50 + k, 5)).collect();
+        let built: Vec<_> = structures
+            .iter()
+            .map(|(pos, _)| m.build_edges_periodic(pos, &cell))
+            .collect();
+        let graphs: Vec<GraphRef<'_>> = structures
+            .iter()
+            .zip(&built)
+            .map(|((pos, species), (edges, shifts))| GraphRef {
+                pos, species, edges, shifts: Some(shifts),
+            })
+            .collect();
+        let serial = energy_forces_batch_par(&m, &graphs, 1);
+        let par = energy_forces_batch_par(&m, &graphs, 0);
+        assert_eq!(max_abs_diff(&serial, &par), 0.0);
+        let row_len = batch_row_len(&m);
+        for (g, (pos, species)) in structures.iter().enumerate() {
+            let (e, _) = m.energy_forces_periodic(pos, species, &cell);
+            assert!((serial[g * row_len] - e).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn periodic_edge_builder_parallel_matches_serial() {
+        let m = Model::new(ModelConfig::default(), 2);
+        let mut rng = Rng::new(31);
+        let cell = Cell::orthorhombic(9.0, 10.0, 11.0);
+        let pos: Vec<[f64; 3]> = (0..40)
+            .map(|_| [rng.uniform(0.0, 9.0), rng.uniform(0.0, 10.0),
+                      rng.uniform(0.0, 11.0)])
+            .collect();
+        let (mut ep, _) = m.build_edges_periodic(&pos, &cell);
+        for threads in [1usize, 2, 0] {
+            let (mut e2, _) = m.build_edges_periodic_par(&pos, &cell, threads);
+            ep.sort_unstable();
+            e2.sort_unstable();
+            assert_eq!(ep, e2, "threads={threads}");
         }
     }
 

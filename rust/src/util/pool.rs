@@ -80,6 +80,52 @@ pub fn shard_rows_with<S, I, F>(
     });
 }
 
+/// Shard the index range `0..n` into contiguous blocks across at most
+/// `threads` scoped workers.  Each worker builds one private accumulator
+/// with `init()` and folds every index of its block into it with
+/// `work(index, &mut acc)`; the accumulators come back in block order,
+/// so concatenating them is deterministic for a fixed thread count.
+/// This is the cell-block sharding shape of the periodic neighbor
+/// builder: the grid is read-only, the per-block edge vectors are
+/// private, and no index is visited twice.
+pub fn shard_range<S, I, F>(n: usize, threads: usize, init: I, work: F) -> Vec<S>
+where
+    S: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(usize, &mut S) + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        let mut acc = init();
+        for i in 0..n {
+            work(i, &mut acc);
+        }
+        return vec![acc];
+    }
+    let chunk = n.div_ceil(threads);
+    let n_blocks = n.div_ceil(chunk);
+    let work = &work;
+    let init = &init;
+    let mut out: Vec<Option<S>> = (0..n_blocks).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (bi, slot) in out.iter_mut().enumerate() {
+            s.spawn(move || {
+                let mut acc = init();
+                let lo = bi * chunk;
+                let hi = (lo + chunk).min(n);
+                for i in lo..hi {
+                    work(i, &mut acc);
+                }
+                *slot = Some(acc);
+            });
+        }
+    });
+    out.into_iter().map(|s| s.expect("worker filled its slot")).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +195,23 @@ mod tests {
             assert_eq!(out[2 * r], r as f64);
             assert!(out[2 * r + 1] >= 1.0);
         }
+    }
+
+    #[test]
+    fn shard_range_covers_every_index_once() {
+        for threads in [0usize, 1, 2, 3, 7, 16] {
+            let blocks = shard_range(23, resolve_threads(threads), Vec::new,
+                                     |i, acc: &mut Vec<usize>| acc.push(i));
+            let mut all: Vec<usize> =
+                blocks.into_iter().flatten().collect();
+            // block order concatenation is already sorted for
+            // contiguous blocks
+            assert_eq!(all, (0..23).collect::<Vec<_>>(),
+                       "threads={threads}");
+            all.sort_unstable();
+            assert_eq!(all, (0..23).collect::<Vec<_>>());
+        }
+        assert!(shard_range(0, 4, || 0u32, |_, _| {}).is_empty());
     }
 
     #[test]

@@ -41,6 +41,7 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 
 use std::sync::Mutex;
 
+use gaunt_tp::md::{Cell, Potential, VerletList};
 use gaunt_tp::model::{Model, ModelConfig};
 use gaunt_tp::num_coeffs;
 use gaunt_tp::tp::{ConvMethod, GauntConvPlan, GauntPlan, ManyBodyPlan};
@@ -185,6 +186,78 @@ fn model_forward_and_forces_steady_state_are_allocation_free() {
              steady-state model energy+forces calls (expected 0)"
         );
     }
+}
+
+/// The periodic MD hot path: once the Verlet list and force buffer have
+/// reached their high-water capacity, a reuse step (`update` returning
+/// false — every atom within skin/2 of the reference build) performs
+/// ZERO allocations through the full classical energy+forces
+/// evaluation, and even a REBUILD step stays quiet because the
+/// linked-cell scratch, edge vector, and reference positions are all
+/// retained at capacity.
+#[test]
+fn verlet_reuse_steps_are_allocation_free() {
+    let _guard = SERIAL.lock().unwrap();
+    let mut rng = Rng::new(3);
+    let cell = Cell::cubic(9.0);
+    let pot = Potential::lj(1.0, 1.0, 2.5);
+    let n = 60;
+    let mut pos: Vec<[f64; 3]> = (0..n)
+        .map(|_| [rng.uniform(0.0, 9.0), rng.uniform(0.0, 9.0),
+                  rng.uniform(0.0, 9.0)])
+        .collect();
+    let species = vec![0usize; n];
+    let mut list = VerletList::periodic(cell, 2.5, 0.6);
+    let mut forces = Vec::new();
+    // warm: first call builds the list and sizes every buffer
+    let e = pot.energy_forces_with_list(&pos, &species, &mut list,
+                                        &mut forces);
+    assert!(e.is_finite());
+    assert_eq!(list.rebuilds, 1);
+
+    // pure reuse steps: positions drift by well under skin/2
+    let before = allocs();
+    for step in 0..8 {
+        for p in pos.iter_mut() {
+            p[0] += 0.01;
+        }
+        let e = pot.energy_forces_with_list(&pos, &species, &mut list,
+                                            &mut forces);
+        assert!(e.is_finite(), "step {step}");
+    }
+    let delta = allocs() - before;
+    assert_eq!(list.reuses, 8, "drift exceeded the skin — bad test setup");
+    assert_eq!(
+        delta, 0,
+        "{delta} allocations in 8 Verlet-reuse energy+forces steps \
+         (expected 0)"
+    );
+
+    // rebuild steps reuse retained capacity: move past skin/2 so every
+    // update rebuilds; after one capacity-settling rebuild the counter
+    // must stay flat (edge count only shrinks or holds under uniform
+    // translation, so no buffer can outgrow its high-water mark)
+    for p in pos.iter_mut() {
+        p[1] += 0.4;
+    }
+    let _ = pot.energy_forces_with_list(&pos, &species, &mut list,
+                                        &mut forces);
+    let rebuilds_before = list.rebuilds;
+    let before = allocs();
+    for _ in 0..4 {
+        for p in pos.iter_mut() {
+            p[1] += 0.4;
+        }
+        let _ = pot.energy_forces_with_list(&pos, &species, &mut list,
+                                            &mut forces);
+    }
+    let delta = allocs() - before;
+    assert_eq!(list.rebuilds, rebuilds_before + 4);
+    assert_eq!(
+        delta, 0,
+        "{delta} allocations in 4 Verlet-rebuild steps over retained \
+         buffers (expected 0)"
+    );
 }
 
 #[test]

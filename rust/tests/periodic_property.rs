@@ -1,0 +1,278 @@
+//! Periodic neighbor-stack property suite (DESIGN.md §13).
+//!
+//! The contract under test: the O(N) periodic cell list (serial and
+//! cell-block-parallel) is EXACTLY the brute-force minimum-image oracle
+//! for any cell and any cutoff up to half the minimum width; lattice
+//! translations of individual atoms are unobservable; Verlet lists with
+//! a skin stay exact across the whole rebuild/reuse lifecycle; and
+//! classical forces under PBC sum to zero (Newton's third law survives
+//! image shifts).
+
+use gaunt_tp::md::neighbor::{
+    neighbors_periodic_brute, neighbors_periodic_cell,
+    neighbors_periodic_par, Cell, Edge, VerletList,
+};
+use gaunt_tp::md::Potential;
+use gaunt_tp::util::prop::{check, PropConfig};
+use gaunt_tp::util::rng::Rng;
+
+/// A random cell: orthorhombic or moderately sheared triclinic, with
+/// min width comfortably positive.
+fn random_cell(rng: &mut Rng, case: usize) -> Cell {
+    let l = rng.uniform(5.0, 9.0);
+    if case % 2 == 0 {
+        Cell::orthorhombic(l, rng.uniform(0.8, 1.4) * l,
+                           rng.uniform(0.8, 1.4) * l)
+    } else {
+        Cell::triclinic([
+            [l, 0.0, 0.0],
+            [rng.uniform(-0.3, 0.3) * l, 1.1 * l, 0.0],
+            [rng.uniform(-0.2, 0.2) * l, rng.uniform(-0.2, 0.2) * l, 0.9 * l],
+        ])
+    }
+}
+
+fn random_pos(rng: &mut Rng, cell: &Cell, n: usize) -> Vec<[f64; 3]> {
+    // sample in fractional space well OUTSIDE [0, 1): the builders must
+    // handle unwrapped coordinates
+    (0..n)
+        .map(|_| {
+            cell.cart([
+                rng.uniform(-1.5, 2.5),
+                rng.uniform(-1.5, 2.5),
+                rng.uniform(-1.5, 2.5),
+            ])
+        })
+        .collect()
+}
+
+fn sorted(mut e: Vec<Edge>) -> Vec<Edge> {
+    e.sort_unstable();
+    e
+}
+
+#[test]
+fn cell_list_equals_minimum_image_oracle() {
+    check(
+        "periodic cell list == MIC oracle (cutoffs up to L/2)",
+        PropConfig { cases: 40, seed: 101 },
+        |rng, case| {
+            let cell = random_cell(rng, case);
+            let pos = random_pos(rng, &cell, 5 + case % 40);
+            // bias toward the hard regime: cutoffs near the MIC bound
+            let frac = if case % 2 == 0 {
+                rng.uniform(0.85, 1.0)
+            } else {
+                rng.uniform(0.2, 0.85)
+            };
+            let rc = frac * cell.max_cutoff();
+            let want = sorted(neighbors_periodic_brute(&pos, &cell, rc));
+            let got = sorted(neighbors_periodic_cell(&pos, &cell, rc));
+            if want != got {
+                return Err(format!(
+                    "serial: oracle {} edges vs cell list {}",
+                    want.len(), got.len()
+                ));
+            }
+            for threads in [1usize, 2, 5] {
+                let got =
+                    sorted(neighbors_periodic_par(&pos, &cell, rc, threads));
+                if want != got {
+                    return Err(format!(
+                        "par({threads}): oracle {} edges vs {}",
+                        want.len(), got.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lattice_translations_are_unobservable() {
+    check(
+        "edges invariant under per-atom lattice translations",
+        PropConfig { cases: 24, seed: 202 },
+        |rng, case| {
+            let cell = random_cell(rng, case);
+            let pos = random_pos(rng, &cell, 4 + case % 20);
+            let rc = rng.uniform(0.3, 0.95) * cell.max_cutoff();
+            let base = sorted(neighbors_periodic_cell(&pos, &cell, rc));
+            // translate EACH atom by its own random lattice vector
+            let moved: Vec<[f64; 3]> = pos
+                .iter()
+                .map(|p| {
+                    let s = [
+                        rng.uniform(-3.0, 3.0).round() as i32,
+                        rng.uniform(-3.0, 3.0).round() as i32,
+                        rng.uniform(-3.0, 3.0).round() as i32,
+                    ];
+                    let sv = cell.shift_vector(s);
+                    [p[0] + sv[0], p[1] + sv[1], p[2] + sv[2]]
+                })
+                .collect();
+            let shifted = neighbors_periodic_cell(&moved, &cell, rc);
+            // shifts differ (they absorb the translations), but the
+            // pair set and every minimum-image DISTANCE must agree
+            let mut got: Vec<(usize, usize)> =
+                shifted.iter().map(|e| (e.i, e.j)).collect();
+            let mut want: Vec<(usize, usize)> =
+                base.iter().map(|e| (e.i, e.j)).collect();
+            got.sort_unstable();
+            want.sort_unstable();
+            if got != want {
+                return Err(format!(
+                    "pair sets differ: {} vs {}", want.len(), got.len()
+                ));
+            }
+            for e in &shifted {
+                let sv = cell.shift_vector(e.shift);
+                let d = [
+                    moved[e.i][0] - moved[e.j][0] + sv[0],
+                    moved[e.i][1] - moved[e.j][1] + sv[1],
+                    moved[e.i][2] - moved[e.j][2] + sv[2],
+                ];
+                let r2 = d[0] * d[0] + d[1] * d[1] + d[2] * d[2];
+                if r2 >= rc * rc {
+                    return Err(format!(
+                        "edge ({}, {}) shift {:?} reconstructs out-of-range \
+                         distance {}", e.i, e.j, e.shift, r2.sqrt()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn verlet_list_stays_exact_across_rebuild_boundaries() {
+    check(
+        "Verlet pair iteration == oracle at every step of a drift",
+        PropConfig { cases: 10, seed: 303 },
+        |rng, case| {
+            let cell = random_cell(rng, case);
+            let n = 12 + case % 24;
+            let mut pos = random_pos(rng, &cell, n);
+            let rc = 0.55 * cell.max_cutoff();
+            let skin = 0.25 * cell.max_cutoff();
+            let mut vl = VerletList::periodic(cell.clone(), rc, skin);
+            for step in 0..12 {
+                vl.update(&pos);
+                let mut got: Vec<(usize, usize)> = Vec::new();
+                vl.for_each_pair(&pos, |i, j, d, r2| {
+                    let n2 = d[0] * d[0] + d[1] * d[1] + d[2] * d[2];
+                    if (n2 - r2).abs() > 1e-12 {
+                        panic!("for_each_pair: r2 disagrees with d");
+                    }
+                    got.push((i, j));
+                });
+                got.sort_unstable();
+                let mut want: Vec<(usize, usize)> =
+                    neighbors_periodic_brute(&pos, &cell, rc)
+                        .into_iter()
+                        .filter(|e| e.i < e.j)
+                        .map(|e| (e.i, e.j))
+                        .collect();
+                want.sort_unstable();
+                if got != want {
+                    return Err(format!(
+                        "step {step} (rebuilds {}, reuses {}): {} pairs vs \
+                         oracle {}",
+                        vl.rebuilds, vl.reuses, got.len(), want.len()
+                    ));
+                }
+                // random drift, sized so some steps reuse and some
+                // rebuild — both sides of the boundary get exercised
+                for p in pos.iter_mut() {
+                    for v in p.iter_mut() {
+                        *v += rng.uniform(-0.3, 0.3) * skin;
+                    }
+                }
+            }
+            if vl.rebuilds < 2 || vl.reuses < 2 {
+                return Err(format!(
+                    "drift never crossed the boundary both ways: rebuilds \
+                     {}, reuses {}", vl.rebuilds, vl.reuses
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn periodic_forces_sum_to_zero() {
+    check(
+        "classical LJ forces under PBC sum to zero",
+        PropConfig { cases: 16, seed: 404 },
+        |rng, case| {
+            let cell = random_cell(rng, case);
+            let pos = random_pos(rng, &cell, 8 + case % 30);
+            let rc = 0.8 * cell.max_cutoff();
+            let pot = Potential::lj(1.0, 1.0, rc);
+            let species = vec![0usize; pos.len()];
+            let (e, f) = pot.energy_forces_periodic(&pos, &species, &cell);
+            if !e.is_finite() {
+                return Err("non-finite periodic energy".into());
+            }
+            for k in 0..3 {
+                let s: f64 = f.iter().map(|v| v[k]).sum();
+                let scale: f64 = f
+                    .iter()
+                    .map(|v| v[k].abs())
+                    .fold(0.0, f64::max)
+                    .max(1.0);
+                if s.abs() > 1e-9 * scale {
+                    return Err(format!(
+                        "net force along axis {k}: {s} (scale {scale})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn periodic_forces_match_finite_differences() {
+    // one deterministic case with central differences of the periodic
+    // energy — ties the force sign convention to the energy under PBC.
+    // Jittered lattice, not uniform-random positions: a near-overlapping
+    // pair would dominate the total energy and wash out the finite
+    // differences of every other atom.
+    let mut rng = Rng::new(55);
+    let cell = Cell::orthorhombic(6.0, 7.0, 8.0);
+    let pot = Potential::lj(1.0, 1.0, 2.5);
+    let mut pos: Vec<[f64; 3]> = Vec::new();
+    for ix in 0..2 {
+        for iy in 0..2 {
+            for iz in 0..3 {
+                pos.push([
+                    (ix as f64 + 0.5) * 3.0 + rng.uniform(-0.3, 0.3),
+                    (iy as f64 + 0.5) * 3.5 + rng.uniform(-0.3, 0.3),
+                    (iz as f64 + 0.5) * 8.0 / 3.0 + rng.uniform(-0.3, 0.3),
+                ]);
+            }
+        }
+    }
+    let n = pos.len();
+    let species = vec![0usize; n];
+    let (_, f) = pot.energy_forces_periodic(&pos, &species, &cell);
+    let h = 1e-6;
+    for i in 0..n {
+        for k in 0..3 {
+            let mut pp = pos.clone();
+            pp[i][k] += h;
+            let (ep, _) = pot.energy_forces_periodic(&pp, &species, &cell);
+            pp[i][k] -= 2.0 * h;
+            let (em, _) = pot.energy_forces_periodic(&pp, &species, &cell);
+            let fd = -(ep - em) / (2.0 * h);
+            assert!(
+                (f[i][k] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                "atom {i} axis {k}: {} vs {fd}", f[i][k]
+            );
+        }
+    }
+}

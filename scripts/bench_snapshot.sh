@@ -27,6 +27,8 @@
 #   resilience: p99 / success rate / shed fraction of a small-queue
 #           service under polite vs ~2x oversubscribed load (admission
 #           control sheds typed Overloaded instead of queueing forever).
+#   md_neighbor: open vs periodic cell-list builds, Verlet rebuild vs
+#           reuse, and ns/step of a 10^5-atom periodic LJ rollout.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -52,7 +54,8 @@ fi
 
 cd rust
 for b in fig1a_feature_interaction fig1b_equivariant_convolution \
-         table2_speed_memory simd_kernels model_inference serving; do
+         table2_speed_memory simd_kernels model_inference serving \
+         md_neighbor; do
     echo "== cargo bench --bench $b =="
     cargo bench --bench "$b" "${ARGS[@]+"${ARGS[@]}"}"
 done
@@ -84,6 +87,7 @@ wanted = {
     "multi_channel": ["multi_channel"],
     "serving": ["serving"],
     "resilience": ["resilience"],
+    "md_neighbor": ["md_neighbor"],
 }
 
 benches = {}
@@ -149,6 +153,11 @@ doc = {
                        "resilience_overload_* (~2x oversubscribed, typed "
                        "shedding); *_p99 in ns, *_success and *_shed_frac "
                        "ratios (iters = 0 marks derived rows)"],
+        "md_neighbor": ["open_cell_list / periodic_cell_list / "
+                        "periodic_par_all_cores (build cost per size)",
+                        "verlet_rebuild (before) vs verlet_reuse (after); "
+                        "periodic_lj_rollout_step is ns per MD step at "
+                        "10^5 atoms"],
     },
     "benches": benches,
 }

@@ -205,12 +205,16 @@ pub fn gen_adsorbate_dataset(n: usize, seed: u64) -> Vec<Graph> {
 }
 
 /// [`Molecule::lj_box`] at reduced density 0.8 with the standard LJ
-/// cutoff 2.5, clamped to the box's minimum-image bound so every box
-/// size down to a single unit cell stays valid.
-fn lj_box_mic(n_side: usize) -> (Molecule, Cell) {
+/// cutoff 2.5 and a Verlet skin, both clamped so `r_cut + skin` fits
+/// the box's minimum-image bound (`0.45 L + 0.05 L = 0.5 L =`
+/// [`Cell::max_cutoff`]) — every box size down to a single unit cell
+/// stays valid.  Returns `(molecule, cell, skin)`.
+fn lj_box_mic(n_side: usize) -> (Molecule, Cell, f64) {
     let n = n_side * n_side * n_side;
     let l = (n as f64 / 0.8).cbrt();
-    Molecule::lj_box(n_side, 0.8, 2.5f64.min(0.45 * l))
+    let skin = 0.4f64.min(0.05 * l);
+    let (m, cell) = Molecule::lj_box(n_side, 0.8, 2.5f64.min(0.45 * l));
+    (m, cell, skin)
 }
 
 /// Periodic LJ bulk dataset: Langevin MD in a cubic box (forces through
@@ -221,9 +225,9 @@ fn lj_box_mic(n_side: usize) -> (Molecule, Cell) {
 pub fn gen_periodic_lj_dataset(
     n_side: usize, n_configs: usize, temp: f64, seed: u64,
 ) -> (Vec<Graph>, Cell) {
-    let (m, cell) = lj_box_mic(n_side);
+    let (m, cell, skin) = lj_box_mic(n_side);
     let mut pp = PeriodicPotential::new(
-        m.potential.clone(), m.species.clone(), cell.clone(), 0.4);
+        m.potential.clone(), m.species.clone(), cell.clone(), skin);
     let mut rng = Rng::new(seed);
     let mut md = Integrator::new_with(
         m.pos.clone(), m.species.clone(), &mut pp, 0.003,
@@ -368,7 +372,7 @@ mod tests {
             }
             // labels match a fresh periodic evaluation of the wrapped
             // positions (wrap-invariance of the minimum-image energy)
-            let (m, _) = lj_box_mic(3);
+            let (m, _, _) = lj_box_mic(3);
             let (e, f) = m.potential.energy_forces_periodic(
                 &g.pos, &g.species, &cell);
             assert!((e - g.energy).abs() < 1e-9 * (1.0 + e.abs()));
@@ -382,6 +386,23 @@ mod tests {
                 let s: f64 = g.forces.iter().map(|v| v[k]).sum();
                 assert!(s.abs() < 1e-9);
             }
+        }
+    }
+
+    #[test]
+    fn periodic_lj_dataset_handles_small_boxes() {
+        // boxes where the standard cutoff 2.5 (and the default 0.4
+        // skin) would overflow the minimum-image bound: the clamped
+        // cutoff+skin must keep the Verlet builder's assert satisfied
+        // all the way down to a 2x2x2 box
+        for n_side in [2usize, 4] {
+            let (ds, cell) = gen_periodic_lj_dataset(n_side, 1, 0.1, 7);
+            assert_eq!(ds.len(), 1);
+            assert_eq!(ds[0].n_atoms(), n_side.pow(3));
+            assert!(ds[0].energy.is_finite());
+            let (m, _, skin) = lj_box_mic(n_side);
+            let rc = m.potential.nonbonded_cutoff().unwrap();
+            assert!(rc + skin <= cell.max_cutoff() + 1e-9);
         }
     }
 

@@ -153,12 +153,14 @@ impl Potential {
         if rc > 0.0 { Some(rc) } else { None }
     }
 
-    /// Normalized sorted bonded-pair set, built once per energy
-    /// evaluation for O(log B) exclusion checks — the old `is_bonded`
-    /// linearly scanned the bond list inside the O(N^2) pair loop
-    /// (O(N^2 B)).  Returns an unallocated empty Vec when exclusions
-    /// are off, keeping neighbor-list reuse steps allocation-free.
-    fn excluded_pairs(&self) -> Vec<(usize, usize)> {
+    /// Normalized sorted bonded-pair set for O(log B) exclusion checks
+    /// — the old `is_bonded` linearly scanned the bond list inside the
+    /// O(N^2) pair loop (O(N^2 B)).  Returns an unallocated empty Vec
+    /// when exclusions are off.  One-shot evaluators build it per call;
+    /// trajectory drivers (e.g. [`PeriodicPotential`]) compute it once
+    /// and feed [`Potential::energy_forces_with_list_excl`], keeping
+    /// reuse steps allocation-free for bonded systems too.
+    pub fn excluded_pairs(&self) -> Vec<(usize, usize)> {
         if !self.exclude_bonded_nonbonded || self.bonds.is_empty() {
             return Vec::new();
         }
@@ -255,13 +257,27 @@ impl Potential {
 
     /// Energy + forces through a caller-owned [`VerletList`] — the
     /// large-system rollout hot path (open or periodic, per the list).
-    /// `forces` is cleared and refilled in place; once buffers are warm
-    /// a reuse step (`update` returning false) performs zero
-    /// allocations for potentials without bonded exclusions (gated by
-    /// `tests/alloc_regression.rs`).
+    /// Rebuilds the bonded-exclusion set each call; trajectory loops
+    /// should precompute it once and use
+    /// [`Potential::energy_forces_with_list_excl`] directly.
     pub fn energy_forces_with_list(
         &self, pos: &[[f64; 3]], species: &[usize], list: &mut VerletList,
         forces: &mut Vec<[f64; 3]>,
+    ) -> f64 {
+        let excl = self.excluded_pairs();
+        self.energy_forces_with_list_excl(pos, species, list, forces, &excl)
+    }
+
+    /// [`Potential::energy_forces_with_list`] with a caller-supplied
+    /// exclusion set (sorted canonical `(min, max)` pairs, as returned
+    /// by [`Potential::excluded_pairs`]).  `forces` is cleared and
+    /// refilled in place; once buffers are warm a reuse step (`update`
+    /// returning false) performs zero allocations — including for
+    /// bonded systems, since the exclusion set is reused (gated by
+    /// `tests/alloc_regression.rs`).
+    pub fn energy_forces_with_list_excl(
+        &self, pos: &[[f64; 3]], species: &[usize], list: &mut VerletList,
+        forces: &mut Vec<[f64; 3]>, excl: &[(usize, usize)],
     ) -> f64 {
         let rc = self.nonbonded_cutoff().expect(
             "energy_forces_with_list: every nonbonded kind needs a cutoff",
@@ -275,7 +291,6 @@ impl Potential {
         forces.clear();
         forces.resize(pos.len(), [0.0; 3]);
         let mut e = 0.0;
-        let excl = self.excluded_pairs();
         list.for_each_pair(pos, |i, j, d, _r2| {
             if excl.is_empty() || excl.binary_search(&(i, j)).is_err() {
                 let kind = self.pair_kind(species[i], species[j]);
@@ -305,22 +320,30 @@ pub struct PeriodicPotential {
     pub species: Vec<usize>,
     list: VerletList,
     forces: Vec<[f64; 3]>,
+    /// Bonded-exclusion set, captured once at construction (bond
+    /// topology is fixed along a trajectory) so reuse steps never
+    /// re-sort it.
+    excl: Vec<(usize, usize)>,
 }
 
 impl PeriodicPotential {
     /// `skin` buffers rebuilds; `r_cut + skin` must respect the cell's
     /// minimum-image bound (asserted by [`VerletList::periodic`]).
+    /// The bonded-exclusion set is snapshotted here — mutate
+    /// `potential.bonds` only through a fresh `PeriodicPotential`.
     pub fn new(
         potential: Potential, species: Vec<usize>, cell: Cell, skin: f64,
     ) -> PeriodicPotential {
         let rc = potential.nonbonded_cutoff().expect(
             "PeriodicPotential: every nonbonded kind needs a cutoff",
         );
+        let excl = potential.excluded_pairs();
         PeriodicPotential {
             potential,
             species,
             list: VerletList::periodic(cell, rc, skin),
             forces: Vec::new(),
+            excl,
         }
     }
 
@@ -328,8 +351,9 @@ impl PeriodicPotential {
     pub fn energy_forces_ref(
         &mut self, pos: &[[f64; 3]],
     ) -> (f64, &[[f64; 3]]) {
-        let e = self.potential.energy_forces_with_list(
+        let e = self.potential.energy_forces_with_list_excl(
             pos, &self.species, &mut self.list, &mut self.forces,
+            &self.excl,
         );
         (e, &self.forces)
     }

@@ -41,7 +41,8 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 
 use std::sync::Mutex;
 
-use gaunt_tp::md::{Cell, Potential, VerletList};
+use gaunt_tp::md::{Cell, PeriodicPotential, Potential, PotentialKind,
+                   VerletList};
 use gaunt_tp::model::{Model, ModelConfig};
 use gaunt_tp::num_coeffs;
 use gaunt_tp::tp::{ConvMethod, GauntConvPlan, GauntPlan, ManyBodyPlan};
@@ -257,6 +258,54 @@ fn verlet_reuse_steps_are_allocation_free() {
         delta, 0,
         "{delta} allocations in 4 Verlet-rebuild steps over retained \
          buffers (expected 0)"
+    );
+}
+
+/// Same gate for a BONDED system through [`PeriodicPotential`]: the
+/// bonded-exclusion set is captured at construction, so reuse steps
+/// stay allocation-free even with `exclude_bonded_nonbonded` on (the
+/// per-call sort/dedup rebuild would otherwise allocate every step).
+#[test]
+fn periodic_potential_bonded_reuse_steps_are_allocation_free() {
+    let _guard = SERIAL.lock().unwrap();
+    let mut rng = Rng::new(9);
+    let cell = Cell::cubic(9.0);
+    let mut pot = Potential::lj(1.0, 1.0, 2.5);
+    let n = 40;
+    pot.exclude_bonded_nonbonded = true;
+    for i in 0..n / 2 {
+        pot.bonds.push((2 * i, 2 * i + 1,
+                        PotentialKind::Harmonic { k: 4.0, r0: 1.1 }));
+    }
+    let mut pos: Vec<[f64; 3]> = Vec::with_capacity(n);
+    for _ in 0..n / 2 {
+        let a = [rng.uniform(0.0, 9.0), rng.uniform(0.0, 9.0),
+                 rng.uniform(0.0, 9.0)];
+        pos.push(a);
+        pos.push([a[0] + 1.1, a[1], a[2]]);
+    }
+    let species = vec![0usize; n];
+    let mut pp = PeriodicPotential::new(pot, species, cell, 0.6);
+    // warm: first call builds the list and sizes every buffer
+    let (e, _) = pp.energy_forces_ref(&pos);
+    assert!(e.is_finite());
+    assert_eq!(pp.list().rebuilds, 1);
+
+    let before = allocs();
+    for step in 0..8 {
+        for p in pos.iter_mut() {
+            p[0] += 0.01;
+        }
+        let (e, _) = pp.energy_forces_ref(&pos);
+        assert!(e.is_finite(), "step {step}");
+    }
+    let delta = allocs() - before;
+    assert_eq!(pp.list().reuses, 8,
+               "drift exceeded the skin — bad test setup");
+    assert_eq!(
+        delta, 0,
+        "{delta} allocations in 8 bonded Verlet-reuse energy+forces \
+         steps (expected 0)"
     );
 }
 

@@ -20,6 +20,13 @@
 #   make loadtest   - drive the typed serving Client with concurrent
 #                     mixed-size traffic through the shape-bucketed
 #                     native service (offline; p50/p99 + atom_fill)
+#   make loadtest-net - the TRUE multi-process loadtest: 2 replica
+#                     processes + 1 front door + 2 client processes over
+#                     Unix sockets, one replica SIGKILLed mid-load; the
+#                     aggregated ledger must reconcile
+#   make serve-cluster - stand up a local cluster (1 front door + 2
+#                     self-spawned replicas over Unix sockets) and leave
+#                     it serving until Ctrl-C
 #   make chaos      - full fault-injection conformance run: every
 #                     failpoint site fired under live traffic, then the
 #                     mixed-traffic schedule again under a fixed
@@ -32,7 +39,7 @@
 RUST_DIR := rust
 
 .PHONY: verify build test bench bench-snapshot bench-compare artifacts \
-        model-golden loadtest chaos ci clean
+        model-golden loadtest loadtest-net serve-cluster chaos ci clean
 
 OLD ?= HEAD
 
@@ -59,6 +66,14 @@ bench-compare:
 loadtest:
 	cd $(RUST_DIR) && cargo run --release -- loadtest --requests 256 \
 		--clients 4 --workers 2
+
+loadtest-net:
+	cd $(RUST_DIR) && cargo run --release -- loadtest --net --replicas 2 \
+		--clients 2 --requests 40 --workers 2 --kill-one
+
+serve-cluster:
+	cd $(RUST_DIR) && cargo run --release -- frontdoor \
+		--listen unix:/tmp/gaunt-tp-frontdoor.sock --spawn-replicas 2
 
 chaos:
 	cd $(RUST_DIR) && cargo test --test chaos_conformance

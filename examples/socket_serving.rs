@@ -1,0 +1,166 @@
+//! Multi-process serving, end to end in one program: stand up two
+//! replicas and a front door over Unix-domain sockets (all in this
+//! process, but over REAL sockets — the same wire path `gaunt-tp
+//! replica` / `gaunt-tp frontdoor` serve across processes), then drive
+//! them with the socket client:
+//!
+//! * typed submissions through the front door, sharded by shape bucket;
+//! * a streaming `MdRollout` whose frames cross the wire one by one;
+//! * a deadline that expires server-side and comes back typed;
+//! * a wire cancel that releases the replica-side ticket;
+//! * a replica shutdown mid-load — the prober marks it down and the
+//!   front door reroutes, so every request still resolves.
+//!
+//!     cargo run --release --example socket_serving
+//!
+//! For separate processes, see `make serve-cluster` and
+//! `make loadtest-net`.
+
+use std::time::Duration;
+
+use gaunt_tp::coordinator::server::{NativeGauntBackend, ServerConfig};
+use gaunt_tp::coordinator::{
+    EnergyForces, MdRollout, Request, Service, ServiceError, Structure,
+};
+use gaunt_tp::net::loadtest::cluster;
+use gaunt_tp::net::{
+    temp_socket_path, Addr, FrontDoor, FrontDoorConfig, NetClient, Replica,
+};
+use gaunt_tp::util::error::{Error, Result};
+
+fn service() -> Result<Service> {
+    Service::builder()
+        .native(NativeGauntBackend::default())
+        .config(ServerConfig { n_workers: 2, ..Default::default() })
+        .build()
+}
+
+fn main() -> Result<()> {
+    // ---- the cluster: two replicas + a front door, Unix sockets ----
+    let r0 = Replica::serve(
+        service()?,
+        &[Addr::Unix(temp_socket_path("example-r0"))],
+        "r0",
+    )?;
+    let r1 = Replica::serve(
+        service()?,
+        &[Addr::Unix(temp_socket_path("example-r1"))],
+        "r1",
+    )?;
+    let fd = FrontDoor::serve(
+        &[r0.bound()[0].clone(), r1.bound()[0].clone()],
+        &[Addr::Unix(temp_socket_path("example-fd"))],
+        FrontDoorConfig::default(),
+    )?;
+    println!(
+        "front door {} -> [{}, {}]",
+        fd.bound()[0],
+        r0.bound()[0],
+        r1.bound()[0]
+    );
+
+    let nc = NetClient::connect(&fd.bound()[0])?;
+    println!(
+        "handshake: server takes <= {} atoms, buckets {:?}",
+        nc.max_atoms(),
+        nc.buckets()
+    );
+
+    // ---- typed submissions through the front door ----
+    let st: Structure = cluster(12, 7);
+    let f = nc
+        .submit(Request::new(EnergyForces(st.clone())))
+        .map_err(Error::msg)?
+        .wait()
+        .map_err(Error::msg)?;
+    println!(
+        "energy+forces: E = {:.6}, {} force rows",
+        f.energy,
+        f.forces.len()
+    );
+
+    // ---- streaming rollout: frames cross the wire as they compute ----
+    let mut md = nc
+        .submit(Request::new(MdRollout {
+            structure: st.clone(),
+            steps: 5,
+            dt: 1e-3,
+        }))
+        .map_err(Error::msg)?;
+    let mut streamed = 0usize;
+    while let Some(frame) = md.next_frame() {
+        streamed += 1;
+        println!("  frame {}: E = {:.6}", frame.step, frame.energy);
+    }
+    let traj = md.wait().map_err(Error::msg)?;
+    println!(
+        "rollout: {streamed} frames streamed, {} integrator steps",
+        traj.summary.steps
+    );
+
+    // ---- a deadline the work cannot meet comes back typed ----
+    let doomed = nc
+        .submit(
+            Request::new(MdRollout {
+                structure: cluster(20, 8),
+                steps: 3000,
+                dt: 1e-4,
+            })
+            .deadline(Duration::from_millis(1)),
+        )
+        .map_err(Error::msg)?;
+    match doomed.wait() {
+        Err(ServiceError::DeadlineExceeded) => {
+            println!("deadline: typed DeadlineExceeded across the wire")
+        }
+        other => println!("deadline: unexpected {other:?}"),
+    }
+
+    // ---- a wire cancel releases the replica-side ticket ----
+    let canceled = nc
+        .submit(Request::new(MdRollout {
+            structure: cluster(20, 9),
+            steps: 100_000,
+            dt: 1e-4,
+        }))
+        .map_err(Error::msg)?;
+    std::thread::sleep(Duration::from_millis(20));
+    canceled.cancel();
+    match canceled.wait() {
+        Err(ServiceError::Canceled) => {
+            println!("cancel: typed Canceled, replica worker released")
+        }
+        other => println!("cancel: unexpected {other:?}"),
+    }
+
+    // ---- kill a replica mid-load: the front door reroutes ----
+    r0.shutdown();
+    let mut ok = 0usize;
+    for k in 0..8u64 {
+        if nc
+            .submit(Request::new(EnergyForces(cluster(10, 100 + k))))
+            .and_then(|t| t.wait())
+            .is_ok()
+        {
+            ok += 1;
+        }
+    }
+    println!("after replica shutdown: {ok}/8 served by the survivor");
+
+    let stats = nc.stats(Duration::from_secs(5))?;
+    println!(
+        "fleet ledger: requests={} responses={} failed={} canceled={} \
+         expired={} (reconciles: {})",
+        stats.requests,
+        stats.responses,
+        stats.failed,
+        stats.canceled,
+        stats.expired,
+        stats.reconciles()
+    );
+
+    nc.close();
+    fd.shutdown();
+    r1.shutdown();
+    Ok(())
+}

@@ -12,6 +12,7 @@
 //!
 //! `--smoke`: a handful of requests, no TSV (CI liveness check).
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use gaunt_tp::coordinator::batcher::{BatchPolicy, BucketConfig};
@@ -20,6 +21,9 @@ use gaunt_tp::coordinator::request::{
 };
 use gaunt_tp::coordinator::server::{NativeGauntBackend, ServerConfig};
 use gaunt_tp::coordinator::Service;
+use gaunt_tp::net::{
+    temp_socket_path, Addr, FrontDoor, FrontDoorConfig, NetClient, Replica,
+};
 use gaunt_tp::util::bench::{smoke, BenchTable, Measurement};
 use gaunt_tp::util::pool;
 use gaunt_tp::util::rng::Rng;
@@ -179,6 +183,169 @@ fn run_resilience(
     service.shutdown();
 }
 
+fn socket_service(n_workers: usize) -> Service {
+    Service::builder()
+        .native(NativeGauntBackend::default())
+        .config(ServerConfig { n_workers, ..Default::default() })
+        .build()
+        .expect("native service")
+}
+
+/// Closed-loop p50/p99/rate of `submit` through a caller-supplied
+/// transport — the measured latency is the full client-side round trip,
+/// so the in-process row and the socket rows compare apples-to-apples.
+fn run_transport(
+    t: &mut BenchTable, label: &str, n_requests: usize,
+    structures: &[Structure],
+    submit_wait: Arc<dyn Fn(Structure) -> bool + Send + Sync>,
+) {
+    let t0 = Instant::now();
+    let mut lat: Vec<f64> = Vec::with_capacity(n_requests);
+    let mut handles = Vec::new();
+    for c in 0..2usize {
+        let submit_wait = submit_wait.clone();
+        let structs: Vec<Structure> = structures.to_vec();
+        let per = n_requests / 2;
+        handles.push(std::thread::spawn(move || -> Vec<f64> {
+            let mut lat = Vec::with_capacity(per);
+            for k in 0..per {
+                let st = structs[(2 * k + c) % structs.len()].clone();
+                let r0 = Instant::now();
+                if submit_wait(st) {
+                    lat.push(r0.elapsed().as_secs_f64());
+                }
+            }
+            lat
+        }));
+    }
+    for h in handles {
+        lat.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!(!lat.is_empty(), "no request completed over {label}");
+    let n = lat.len();
+    t.add(derived(format!("socket_{label}_p50"), 1e9 * lat[n / 2]));
+    t.add(derived(
+        format!("socket_{label}_p99"),
+        1e9 * lat[(n * 99 / 100).min(n - 1)],
+    ));
+    t.add(derived(format!("socket_{label}_rate"), n as f64 / wall));
+}
+
+/// The socket section: the SAME closed-loop workload through (a) the
+/// in-process typed client, (b) one replica over a Unix socket, (c) one
+/// replica over TCP loopback, (d) a front door sharding N replicas over
+/// Unix sockets.  The deltas price the wire hop (frame + JSON codec +
+/// syscalls) and show what replica sharding buys back.
+fn run_socket_section(
+    t: &mut BenchTable, n_requests: usize, structures: &[Structure],
+    n_replicas: usize,
+) {
+    // (a) in-process baseline
+    {
+        let service = socket_service(2);
+        let client = service.client();
+        let f = {
+            let client = client.clone();
+            Arc::new(move |st: Structure| {
+                client
+                    .submit(Request::new(EnergyForces(st)))
+                    .map(|tk| tk.wait().is_ok())
+                    .unwrap_or(false)
+            })
+        };
+        run_transport(t, "inproc", n_requests, structures, f);
+        service.shutdown();
+    }
+    // (b) one replica, Unix socket
+    {
+        let replica = Replica::serve(
+            socket_service(2),
+            &[Addr::Unix(temp_socket_path("bench-unix"))],
+            "bench-unix",
+        )
+        .expect("bind unix replica");
+        let nc =
+            Arc::new(NetClient::connect(&replica.bound()[0]).expect("connect"));
+        let f = {
+            let nc = nc.clone();
+            Arc::new(move |st: Structure| {
+                nc.submit(Request::new(EnergyForces(st)))
+                    .map(|tk| tk.wait().is_ok())
+                    .unwrap_or(false)
+            })
+        };
+        run_transport(t, "unix_r1", n_requests, structures, f);
+        nc.close();
+        replica.shutdown();
+    }
+    // (c) one replica, TCP loopback
+    {
+        let replica = Replica::serve(
+            socket_service(2),
+            &[Addr::Tcp("127.0.0.1:0".to_string())],
+            "bench-tcp",
+        )
+        .expect("bind tcp replica");
+        let nc =
+            Arc::new(NetClient::connect(&replica.bound()[0]).expect("connect"));
+        let f = {
+            let nc = nc.clone();
+            Arc::new(move |st: Structure| {
+                nc.submit(Request::new(EnergyForces(st)))
+                    .map(|tk| tk.wait().is_ok())
+                    .unwrap_or(false)
+            })
+        };
+        run_transport(t, "tcp_r1", n_requests, structures, f);
+        nc.close();
+        replica.shutdown();
+    }
+    // (d) front door over N replicas, Unix sockets
+    {
+        let replicas: Vec<Replica> = (0..n_replicas)
+            .map(|i| {
+                Replica::serve(
+                    socket_service(2),
+                    &[Addr::Unix(temp_socket_path(&format!("bench-fd-r{i}")))],
+                    &format!("bench-r{i}"),
+                )
+                .expect("bind fd replica")
+            })
+            .collect();
+        let addrs: Vec<Addr> =
+            replicas.iter().map(|r| r.bound()[0].clone()).collect();
+        let fd = FrontDoor::serve(
+            &addrs,
+            &[Addr::Unix(temp_socket_path("bench-fd"))],
+            FrontDoorConfig::default(),
+        )
+        .expect("front door up");
+        let nc = Arc::new(NetClient::connect(&fd.bound()[0]).expect("connect"));
+        let f = {
+            let nc = nc.clone();
+            Arc::new(move |st: Structure| {
+                nc.submit(Request::new(EnergyForces(st)))
+                    .map(|tk| tk.wait().is_ok())
+                    .unwrap_or(false)
+            })
+        };
+        run_transport(
+            t,
+            &format!("unix_r{n_replicas}_fd"),
+            n_requests,
+            structures,
+            f,
+        );
+        nc.close();
+        fd.shutdown();
+        for r in replicas {
+            r.shutdown();
+        }
+    }
+}
+
 fn main() {
     let mut t = BenchTable::new(
         "serving protocol: global queue vs shape-bucketed batching",
@@ -226,5 +393,17 @@ fn main() {
     run_resilience(&mut r, "overload", 8, n_per, &structures);
     if !smoke() {
         r.write_tsv("resilience");
+    }
+
+    // socket section: the wire-hop tax (in-process vs unix vs TCP
+    // loopback) and the sharding payback (front door over N replicas)
+    let mut s = BenchTable::new(
+        "socket serving: in-process vs unix vs tcp, 1 vs N replicas",
+    );
+    let n_socket = if smoke() { 12 } else { 256 };
+    let n_replicas = pool::default_threads().clamp(2, 4);
+    run_socket_section(&mut s, n_socket, &structures, n_replicas);
+    if !smoke() {
+        s.write_tsv("socket");
     }
 }

@@ -1,7 +1,14 @@
 //! Serving metrics: counters + a fixed-bucket latency histogram with
 //! percentile estimation.  Lock-free on the hot path (atomics).
+//!
+//! [`MetricsSnapshot`] is the serializable (JSON) projection: a replica
+//! answers a wire `stats` request with one, and the front door merges
+//! the snapshots of every live replica into a fleet-wide view
+//! ([`MetricsSnapshot::merge`]).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
 
 /// Exponential latency buckets from 1 µs to ~67 s.
 const N_BUCKETS: usize = 27;
@@ -200,6 +207,157 @@ impl Metrics {
     }
 }
 
+// ---------------------------------------------------------------------
+// wire-serializable snapshot
+// ---------------------------------------------------------------------
+
+/// A point-in-time copy of the counter ledger plus latency percentiles,
+/// cheap to serialize and to aggregate across replicas.  The ledger
+/// counters add under [`merge`](MetricsSnapshot::merge); the percentile
+/// fields take the max (a fleet p99 is at least its worst member's).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub rejected: u64,
+    pub canceled: u64,
+    pub expired: u64,
+    pub failed: u64,
+    pub shed: u64,
+    pub frames: u64,
+    pub worker_panics: u64,
+    pub restarts: u64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+/// (field name, is-counter) — one row per snapshot field, so to_json /
+/// from_json / merge can never drift from the struct.
+const SNAPSHOT_FIELDS: [(&str, bool); 12] = [
+    ("requests", true),
+    ("responses", true),
+    ("rejected", true),
+    ("canceled", true),
+    ("expired", true),
+    ("failed", true),
+    ("shed", true),
+    ("frames", true),
+    ("worker_panics", true),
+    ("restarts", true),
+    ("p50_ns", false),
+    ("p99_ns", false),
+];
+
+impl MetricsSnapshot {
+    fn field(&self, name: &str) -> f64 {
+        match name {
+            "requests" => self.requests as f64,
+            "responses" => self.responses as f64,
+            "rejected" => self.rejected as f64,
+            "canceled" => self.canceled as f64,
+            "expired" => self.expired as f64,
+            "failed" => self.failed as f64,
+            "shed" => self.shed as f64,
+            "frames" => self.frames as f64,
+            "worker_panics" => self.worker_panics as f64,
+            "restarts" => self.restarts as f64,
+            "p50_ns" => self.p50_ns,
+            "p99_ns" => self.p99_ns,
+            _ => unreachable!("unknown snapshot field {name}"),
+        }
+    }
+
+    fn set_field(&mut self, name: &str, v: f64) {
+        match name {
+            "requests" => self.requests = v as u64,
+            "responses" => self.responses = v as u64,
+            "rejected" => self.rejected = v as u64,
+            "canceled" => self.canceled = v as u64,
+            "expired" => self.expired = v as u64,
+            "failed" => self.failed = v as u64,
+            "shed" => self.shed = v as u64,
+            "frames" => self.frames = v as u64,
+            "worker_panics" => self.worker_panics = v as u64,
+            "restarts" => self.restarts = v as u64,
+            "p50_ns" => self.p50_ns = v,
+            "p99_ns" => self.p99_ns = v,
+            _ => unreachable!("unknown snapshot field {name}"),
+        }
+    }
+
+    /// Fold another replica's snapshot into this one: counters add,
+    /// percentiles take the max.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        for (name, is_counter) in SNAPSHOT_FIELDS {
+            let v = if is_counter {
+                self.field(name) + other.field(name)
+            } else {
+                self.field(name).max(other.field(name))
+            };
+            self.set_field(name, v);
+        }
+    }
+
+    /// `requests = responses + failed + canceled + expired` — whether
+    /// this ledger accounts for every admitted request (rejected/shed
+    /// submissions were never counted in `requests`).
+    pub fn reconciles(&self) -> bool {
+        self.requests
+            == self.responses + self.failed + self.canceled + self.expired
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            SNAPSHOT_FIELDS
+                .iter()
+                .map(|(name, _)| (name.to_string(), Json::Num(self.field(name))))
+                .collect(),
+        )
+    }
+
+    /// Decode a snapshot; unknown keys are ignored, missing keys read
+    /// as zero (forward/backward compatible across replica versions).
+    pub fn from_json(v: &Json) -> Result<MetricsSnapshot, String> {
+        let obj = v.as_obj().ok_or("metrics snapshot must be an object")?;
+        let mut s = MetricsSnapshot::default();
+        for (name, _) in SNAPSHOT_FIELDS {
+            if let Some(x) = obj.get(name) {
+                let n = x
+                    .as_f64()
+                    .ok_or_else(|| format!("snapshot field '{name}' not a number"))?;
+                if !n.is_finite() || n < 0.0 {
+                    return Err(format!(
+                        "snapshot field '{name}' out of range: {n}"
+                    ));
+                }
+                s.set_field(name, n);
+            }
+        }
+        Ok(s)
+    }
+}
+
+impl Metrics {
+    /// Copy the ledger counters + latency percentiles into a
+    /// serializable snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            canceled: self.canceled.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            frames: self.frames.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            restarts: self.restarts.load(Ordering::Relaxed),
+            p50_ns: self.latency.percentile_ns(0.5),
+            p99_ns: self.latency.percentile_ns(0.99),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -271,5 +429,53 @@ mod tests {
         assert_eq!(m.plan_builds.load(Ordering::Relaxed), 3);
         assert_eq!(m.plan_hits.load(Ordering::Relaxed), 50);
         assert_eq!(m.plan_entries.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        let m = Metrics::new();
+        m.requests.fetch_add(10, Ordering::Relaxed);
+        m.responses.fetch_add(7, Ordering::Relaxed);
+        m.failed.fetch_add(2, Ordering::Relaxed);
+        m.canceled.fetch_add(1, Ordering::Relaxed);
+        m.shed.fetch_add(3, Ordering::Relaxed);
+        m.latency.record_ns(2_000_000);
+        let s = m.snapshot();
+        assert!(s.reconciles(), "{s:?}");
+        let re = MetricsSnapshot::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, re);
+        // malformed documents are typed errors, not panics
+        assert!(MetricsSnapshot::from_json(&Json::Num(1.0)).is_err());
+        assert!(MetricsSnapshot::from_json(&Json::obj(vec![(
+            "requests",
+            Json::Str("x".into())
+        )]))
+        .is_err());
+    }
+
+    #[test]
+    fn snapshot_merge_adds_counters_and_maxes_percentiles() {
+        let mut a = MetricsSnapshot {
+            requests: 5,
+            responses: 5,
+            p50_ns: 1e6,
+            p99_ns: 3e6,
+            ..Default::default()
+        };
+        let b = MetricsSnapshot {
+            requests: 3,
+            responses: 2,
+            failed: 1,
+            p50_ns: 2e6,
+            p99_ns: 2e6,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.requests, 8);
+        assert_eq!(a.responses, 7);
+        assert_eq!(a.failed, 1);
+        assert_eq!(a.p50_ns, 2e6);
+        assert_eq!(a.p99_ns, 3e6);
+        assert!(a.reconciles());
     }
 }

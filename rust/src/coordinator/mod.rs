@@ -35,11 +35,13 @@ pub mod service;
 pub mod trainer;
 
 pub use batcher::{BatchPolicy, BucketConfig, PushError};
+pub use metrics::MetricsSnapshot;
 pub use registry::{ModelVersion, Registry, DEFAULT_ENDPOINT};
 pub use request::{
     Batch, EnergyForces, EnergyOnly, EnergyOut, ExecFault, ForceRequest,
-    ForceResponse, Frame, MdRollout, Relax, Reply, Request, RolloutSummary,
-    ServiceError, Structure, Task, TaskSpec, Ticket, Trajectory,
+    ForceResponse, Frame, MdRollout, RawTicket, Relax, Reply, Request,
+    RolloutSummary, ServiceError, Structure, Task, TaskSpec, Ticket,
+    Trajectory,
 };
 pub use server::{
     Backend, BackendSpec, ForceFieldServer, NativeGauntBackend, ServerConfig,

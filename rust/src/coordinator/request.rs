@@ -619,6 +619,52 @@ impl<T: TaskSpec> Request<T> {
 // the ticket (client handle)
 // ---------------------------------------------------------------------
 
+/// The untyped half of a ticket: the reply channel plus the cooperative
+/// cancel flag, with no compile-time output type.  This is what the wire
+/// path (`net::replica`) holds for a remotely submitted task — the
+/// replica pumps `rx` into wire frames without ever knowing which
+/// `TaskSpec` the far-end client used, and stores `cancel` so a wire
+/// `cancel` message (or the connection dying) releases the server-side
+/// task.  [`Ticket::from_raw`] upgrades one into the typed handle.
+///
+/// Unlike [`Ticket`], dropping a `RawTicket` does NOT cancel: the
+/// replica's connection handler owns explicit cancellation (per-seq
+/// cancel messages, cancel-all on teardown), and an implicit
+/// drop-cancel would race the forwarder thread's normal exit.
+#[derive(Debug)]
+pub struct RawTicket {
+    pub id: u64,
+    pub rx: Receiver<ReplyMsg>,
+    pub cancel: Arc<AtomicBool>,
+}
+
+impl RawTicket {
+    /// Build the (raw ticket, pending) pair for one submission.
+    pub fn make(
+        id: u64, task: Task, model: Option<String>,
+        deadline: Option<Duration>,
+    ) -> (RawTicket, Pending) {
+        let (tx, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let now = Instant::now();
+        let pending = Pending {
+            id,
+            task,
+            model,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+            cancel: cancel.clone(),
+            reply: ReplySlot::new(tx),
+        };
+        (RawTicket { id, rx, cancel }, pending)
+    }
+
+    /// Request cooperative cancellation.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+}
+
 /// The non-blocking client handle for one submitted request.
 ///
 /// `wait` blocks for the typed output; `try_poll` is its non-blocking
@@ -643,28 +689,23 @@ impl<T: TaskSpec> Ticket<T> {
         id: u64, task: Task, model: Option<String>,
         deadline: Option<Duration>,
     ) -> (Ticket<T>, Pending) {
-        let (tx, rx) = channel();
-        let cancel = Arc::new(AtomicBool::new(false));
-        let now = Instant::now();
-        let pending = Pending {
-            id,
-            task,
-            model,
-            enqueued: now,
-            deadline: deadline.map(|d| now + d),
-            cancel: cancel.clone(),
-            reply: ReplySlot::new(tx),
-        };
-        let ticket = Ticket {
-            id,
-            rx,
-            cancel,
+        let (raw, pending) = RawTicket::make(id, task, model, deadline);
+        (Ticket::from_raw(raw), pending)
+    }
+
+    /// Type an untyped handle.  The caller asserts the far end will
+    /// answer with `T`'s reply shape; a mismatch decodes into
+    /// [`ServiceError::Protocol`], never a panic.
+    pub fn from_raw(raw: RawTicket) -> Ticket<T> {
+        Ticket {
+            id: raw.id,
+            rx: raw.rx,
+            cancel: raw.cancel,
             frames: VecDeque::new(),
             done: None,
             delivered: false,
             _spec: PhantomData,
-        };
-        (ticket, pending)
+        }
     }
 
     /// Request cooperative cancellation.  The final reply becomes

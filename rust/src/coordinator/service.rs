@@ -40,8 +40,8 @@ use super::batcher::{BatchPolicy, BucketConfig, BucketedBatcher, PushError};
 use super::metrics::Metrics;
 use super::registry::{Registry, DEFAULT_ENDPOINT};
 use super::request::{
-    EnergyOut, ExecFault, ForceResponse, Frame, Pending, Reply, Request,
-    RolloutSummary, ServiceError, Task, TaskSpec, Ticket,
+    EnergyOut, ExecFault, ForceResponse, Frame, Pending, RawTicket, Reply,
+    Request, RolloutSummary, ServiceError, Task, TaskSpec, Ticket,
 };
 use super::router::Router;
 use super::server::{BackendSpec, NativeGauntBackend, ServerConfig};
@@ -325,9 +325,22 @@ impl Client {
     pub fn submit<T: TaskSpec>(
         &self, req: Request<T>,
     ) -> std::result::Result<Ticket<T>, ServiceError> {
-        let s = &self.shared;
         let Request { payload, deadline, model } = req;
-        let task = payload.into_task();
+        let raw = self.submit_task(payload.into_task(), deadline, model)?;
+        Ok(Ticket::from_raw(raw))
+    }
+
+    /// Untyped submission — the wire path.  `net::replica` decodes a
+    /// [`Task`] off a socket and admits it here without knowing its
+    /// output type at compile time; the returned [`RawTicket`] carries
+    /// the reply channel (pumped back over the wire) and the cancel
+    /// flag (set by a wire `cancel` or connection teardown).  Runs the
+    /// exact same validation/admission pipeline as [`Client::submit`]:
+    /// the two entry points can never drift.
+    pub fn submit_task(
+        &self, task: Task, deadline: Option<Duration>, model: Option<String>,
+    ) -> std::result::Result<RawTicket, ServiceError> {
+        let s = &self.shared;
         if let Err(msg) = task.validate() {
             s.metrics.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(ServiceError::Rejected(msg));
@@ -374,7 +387,7 @@ impl Client {
             }
         }
         let id = s.next_id.fetch_add(1, Ordering::Relaxed);
-        let (ticket, pending) = Ticket::<T>::make(id, task, model, deadline);
+        let (ticket, pending) = RawTicket::make(id, task, model, deadline);
         s.metrics.requests.fetch_add(1, Ordering::Relaxed);
         match s.queue.push(pending) {
             Ok(()) => Ok(ticket),
@@ -459,6 +472,45 @@ impl Client {
 
     pub fn metrics(&self) -> &Metrics {
         &self.shared.metrics
+    }
+
+    /// Requests currently queued (the admission watermark numerator) —
+    /// what a replica reports in its wire `pong`.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.len()
+    }
+
+    /// Total queue capacity (the watermark denominator).
+    pub fn capacity(&self) -> usize {
+        self.shared.capacity
+    }
+
+    /// Largest structure any shape bucket accepts (mirrors
+    /// [`Service::max_atoms`] on the cheap handle, for the wire
+    /// handshake).
+    pub fn max_atoms(&self) -> usize {
+        self.shared.queue.max_atoms()
+    }
+
+    /// The bucket atom-width ladder, smallest first — what the wire
+    /// `hello_ack` advertises so a front door can shard by shape.
+    pub fn bucket_widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self
+            .shared
+            .queue
+            .buckets()
+            .iter()
+            .map(|b| b.max_atoms)
+            .collect();
+        w.sort_unstable();
+        w
+    }
+
+    /// Stop admitting new work on the whole service (the handle-level
+    /// mirror of [`Service::drain`], so a wire `drain` message can
+    /// trigger it from a connection thread that only holds a `Client`).
+    pub fn drain(&self) {
+        self.shared.draining.store(true, Ordering::Relaxed);
     }
 }
 

@@ -40,6 +40,7 @@ pub mod fourier;
 pub mod md;
 pub mod model;
 pub mod nbody;
+pub mod net;
 pub mod runtime;
 pub mod so3;
 pub mod tp;

@@ -16,12 +16,31 @@
 //!                             shape-bucketed native service (offline);
 //!                             --global-queue serves the single
 //!                             worst-case-width queue for comparison
+//!   loadtest --net [--replicas M] [--clients C] [--requests N] [--kill-one]
+//!                             TRUE multi-process loadtest: spawns M
+//!                             replica processes + 1 front door + C
+//!                             client processes over unix sockets;
+//!                             --kill-one SIGKILLs a replica mid-load
+//!   replica --listen ADDR [--workers W] [--name S]   serve one native
+//!                             Service over a socket (ADDR = host:port
+//!                             or unix:/path)
+//!   frontdoor --listen ADDR (--replica ADDR)* [--spawn-replicas N]
+//!                             route across replicas; --spawn-replicas
+//!                             self-spawns N replica child processes
+//!   net-worker --connect ADDR [--requests N] ...   loadtest client
+//!                             process body; prints a NETLOAD ledger
 //!   md-demo                   short MD run of the 3BPA-lite molecule
 
 use std::sync::Arc;
 
+use gaunt_tp::coordinator::{NativeGauntBackend, ServerConfig, Service};
 use gaunt_tp::err;
 use gaunt_tp::experiments;
+use gaunt_tp::net::loadtest::{
+    run_client_worker, run_cluster_loadtest, LoadOpts,
+};
+use gaunt_tp::net::{temp_socket_path, Addr, FrontDoor, FrontDoorConfig,
+                    Replica};
 use gaunt_tp::runtime::Engine;
 use gaunt_tp::util::error::Result;
 
@@ -29,6 +48,33 @@ fn arg_value(args: &[String], key: &str) -> Option<String> {
     args.iter()
         .position(|a| a == key)
         .and_then(|i| args.get(i + 1).cloned())
+}
+
+/// All values of a repeatable flag (`--replica A --replica B`).
+fn arg_values(args: &[String], key: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 1 < args.len() {
+        if args[i] == key {
+            out.push(args[i + 1].clone());
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn parse_addr(s: &str) -> Result<Addr> {
+    Addr::parse(s).map_err(|e| err!("{e}"))
+}
+
+/// Build the native serving stack used by every socket subcommand.
+fn native_service(workers: usize) -> Result<Service> {
+    Service::builder()
+        .native(NativeGauntBackend::default())
+        .config(ServerConfig { n_workers: workers, ..Default::default() })
+        .build()
 }
 
 fn artifacts_dir(args: &[String]) -> String {
@@ -103,21 +149,178 @@ fn main() -> Result<()> {
             let workers: usize = arg_value(&args, "--workers")
                 .and_then(|v| v.parse().ok())
                 .unwrap_or(2);
+            if args.iter().any(|a| a == "--net") {
+                let opts = LoadOpts {
+                    replicas: arg_value(&args, "--replicas")
+                        .and_then(|v| v.parse().ok())
+                        .unwrap_or(2),
+                    clients,
+                    requests_per_client: requests,
+                    kill_one: args.iter().any(|a| a == "--kill-one"),
+                    workers,
+                    ..Default::default()
+                };
+                let exe = std::env::current_exe()
+                    .map_err(|e| err!("current_exe: {e}"))?;
+                let report = run_cluster_loadtest(&exe, &opts)
+                    .map_err(|e| err!("{e}"))?;
+                let t = &report.total;
+                println!(
+                    "multi-process loadtest: {} replicas x {} clients \
+                     ({} req/client){}",
+                    opts.replicas,
+                    opts.clients,
+                    opts.requests_per_client,
+                    if report.killed_replica {
+                        ", one replica KILLED mid-load"
+                    } else {
+                        ""
+                    }
+                );
+                println!(
+                    "  n={} ok={} rejected={} canceled={} expired={} \
+                     failed={}",
+                    t.n, t.ok, t.rejected, t.canceled, t.expired, t.failed
+                );
+                println!(
+                    "  success {:.1}%  p50 {:.2} ms  p99 {:.2} ms  wall \
+                     {:.2} s",
+                    report.success_rate() * 100.0,
+                    t.p50_ms,
+                    t.p99_ms,
+                    report.wall.as_secs_f64()
+                );
+                if let Some(s) = &report.frontdoor_stats {
+                    println!(
+                        "  front-door fleet ledger: requests={} \
+                         responses={} reconciles={}",
+                        s.requests,
+                        s.responses,
+                        s.reconciles()
+                    );
+                }
+                if !t.reconciles() {
+                    return Err(err!(
+                        "aggregated client ledger does not reconcile"
+                    ));
+                }
+                return Ok(());
+            }
             let bucketed = !args.iter().any(|a| a == "--global-queue");
             experiments::loadtest(requests, clients, workers, bucketed)
+        }
+        "replica" => {
+            let listen = arg_value(&args, "--listen")
+                .ok_or_else(|| err!("replica needs --listen ADDR"))?;
+            let addr = parse_addr(&listen)?;
+            let workers: usize = arg_value(&args, "--workers")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(2);
+            let name = arg_value(&args, "--name")
+                .unwrap_or_else(|| "replica".to_string());
+            let replica =
+                Replica::serve(native_service(workers)?, &[addr], &name)
+                    .map_err(|e| err!("bind: {e}"))?;
+            println!("replica '{name}' serving on {}", replica.bound()[0]);
+            // serve until killed (the loadtest orchestrator and
+            // `make serve-cluster` manage this process's lifetime)
+            loop {
+                std::thread::park();
+            }
+        }
+        "frontdoor" => {
+            let listen = arg_value(&args, "--listen")
+                .ok_or_else(|| err!("frontdoor needs --listen ADDR"))?;
+            let addr = parse_addr(&listen)?;
+            let mut replica_addrs = Vec::new();
+            for r in arg_values(&args, "--replica") {
+                replica_addrs.push(parse_addr(&r)?);
+            }
+            let spawn_n: usize = arg_value(&args, "--spawn-replicas")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0);
+            let mut children = Vec::new();
+            if spawn_n > 0 {
+                let exe = std::env::current_exe()
+                    .map_err(|e| err!("current_exe: {e}"))?;
+                for i in 0..spawn_n {
+                    let sock = temp_socket_path(&format!("cluster-r{i}"));
+                    let raddr = Addr::Unix(sock);
+                    let child = std::process::Command::new(&exe)
+                        .args([
+                            "replica",
+                            "--listen",
+                            &raddr.to_string(),
+                            "--name",
+                            &format!("r{i}"),
+                        ])
+                        .spawn()
+                        .map_err(|e| err!("spawn replica {i}: {e}"))?;
+                    children.push(child);
+                    replica_addrs.push(raddr);
+                }
+            }
+            if replica_addrs.is_empty() {
+                return Err(err!(
+                    "frontdoor needs --replica ADDR or --spawn-replicas N"
+                ));
+            }
+            let fd = FrontDoor::serve(
+                &replica_addrs,
+                &[addr],
+                FrontDoorConfig::default(),
+            )
+            .map_err(|e| err!("bind: {e}"))?;
+            println!(
+                "front door on {} routing to {} replica(s)",
+                fd.bound()[0],
+                replica_addrs.len()
+            );
+            loop {
+                std::thread::park();
+            }
+        }
+        "net-worker" => {
+            let connect = arg_value(&args, "--connect")
+                .ok_or_else(|| err!("net-worker needs --connect ADDR"))?;
+            let addr = parse_addr(&connect)?;
+            let requests: usize = arg_value(&args, "--requests")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(40);
+            let concurrency: usize = arg_value(&args, "--concurrency")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(4);
+            let deadline_ms: u64 = arg_value(&args, "--deadline-ms")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(10_000);
+            let seed: u64 = arg_value(&args, "--seed")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1);
+            let ledger = run_client_worker(
+                &addr, requests, concurrency, deadline_ms, seed,
+            )
+            .map_err(|e| err!("{e}"))?;
+            println!("NETLOAD {}", ledger.to_json().to_string());
+            Ok(())
         }
         "md-demo" => experiments::md_demo(),
         _ => {
             println!(
                 "gaunt-tp — Gaunt Tensor Products (ICLR 2024) reproduction\n\
                  usage: gaunt-tp \
-                 <info|check|serve|train|experiment|loadtest|md-demo> \
-                 [--artifacts DIR]\n\
+                 <info|check|serve|train|experiment|loadtest|replica|\
+                 frontdoor|md-demo> [--artifacts DIR]\n\
                  \x20 serve --requests N [--native]\n\
                  \x20 train --variant gaunt|cg --steps N\n\
                  \x20 experiment fig1d|table1|table2|tp-throughput\n\
                  \x20 loadtest --requests N --clients C --workers W \
-                 [--global-queue]"
+                 [--global-queue]\n\
+                 \x20 loadtest --net --replicas M --clients C --requests N \
+                 [--kill-one]\n\
+                 \x20 replica --listen unix:/tmp/r0.sock --workers W \
+                 --name r0\n\
+                 \x20 frontdoor --listen unix:/tmp/fd.sock \
+                 --replica unix:/tmp/r0.sock | --spawn-replicas N"
             );
             Ok(())
         }

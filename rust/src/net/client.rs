@@ -1,0 +1,497 @@
+//! The socket client: the in-process `Client` API, over a wire.
+//!
+//! [`NetClient::submit`] takes the same typed [`Request`] the
+//! in-process client takes and returns a [`NetTicket`] with the same
+//! surface (`wait` / `try_poll` / `next_frame` / `cancel`), so serving
+//! code is source-compatible across deployment shapes.  Under the hood
+//! a reader thread demultiplexes `Frame`/`Done` messages into
+//! per-submission channels via [`ReplySlot`] — which carries the
+//! reply-on-drop guarantee across the process boundary: if the
+//! connection dies, every in-flight ticket resolves to a typed error,
+//! never a hang.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::coordinator::request::{ReplyMsg, ReplySlot};
+use crate::coordinator::{
+    Frame, HealthState, MetricsSnapshot, Reply, Request, ServiceError, Task,
+    TaskSpec,
+};
+
+use super::frame::{read_frame, write_frame, VERSION};
+use super::proto::{encode_client, decode_server, ClientMsg, ServerMsg};
+use super::{Addr, Conn};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Handshake read budget: a server that accepts but never answers Hello
+/// must fail `connect`, not hang it.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+struct Shared {
+    /// write half; `None` once the connection is closed or dead
+    writer: Mutex<Option<Conn>>,
+    /// a second handle onto the socket, kept only to force-unblock the
+    /// reader thread on close
+    breaker: Mutex<Option<Conn>>,
+    pending: Mutex<HashMap<u64, ReplySlot>>,
+    next_seq: AtomicU64,
+    dead: AtomicBool,
+    pong_tx: Mutex<Option<Sender<(HealthState, usize)>>>,
+    stats_tx: Mutex<Option<Sender<MetricsSnapshot>>>,
+}
+
+impl Shared {
+    /// Encode + frame + send one message.  A failed write poisons the
+    /// connection (the reader teardown then fails all pending tickets).
+    fn send(&self, msg: &ClientMsg) -> Result<(), String> {
+        let mut w = lock(&self.writer);
+        let conn = w.as_mut().ok_or("connection closed")?;
+        match write_frame(conn, &encode_client(msg)) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.dead.store(true, Ordering::Relaxed);
+                if let Some(c) = w.take() {
+                    c.shutdown_both();
+                }
+                Err(e.to_string())
+            }
+        }
+    }
+
+    fn send_cancel(&self, seq: u64) {
+        let _ = self.send(&ClientMsg::Cancel { seq });
+    }
+
+    /// Fail every in-flight submission with `err` and mark the
+    /// connection dead.  Idempotent.
+    fn teardown(&self, err: ServiceError) {
+        self.dead.store(true, Ordering::Relaxed);
+        if let Some(c) = lock(&self.writer).take() {
+            c.shutdown_both();
+        }
+        lock(&self.breaker).take();
+        let slots: Vec<ReplySlot> =
+            lock(&self.pending).drain().map(|(_, s)| s).collect();
+        for mut slot in slots {
+            slot.finish(Err(err.clone()));
+        }
+    }
+}
+
+/// A connected socket client (one connection, many concurrent
+/// submissions).
+pub struct NetClient {
+    shared: Arc<Shared>,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+    max_atoms: usize,
+    buckets: Vec<usize>,
+}
+
+impl NetClient {
+    /// Connect and handshake with a default client name.
+    pub fn connect(addr: &Addr) -> Result<NetClient, String> {
+        NetClient::connect_named(addr, "net-client")
+    }
+
+    /// Connect, exchange `Hello`/`HelloAck`, and start the reader
+    /// thread.
+    pub fn connect_named(addr: &Addr, name: &str) -> Result<NetClient, String> {
+        let mut conn =
+            Conn::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let _ = conn.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+        write_frame(
+            &mut conn,
+            &encode_client(&ClientMsg::Hello {
+                version: VERSION as u64,
+                name: name.to_string(),
+            }),
+        )
+        .map_err(|e| format!("handshake send: {e}"))?;
+        let ack = read_frame(&mut conn)
+            .and_then(|p| decode_server(&p))
+            .map_err(|e| format!("handshake recv: {e}"))?;
+        let (max_atoms, buckets) = match ack {
+            ServerMsg::HelloAck { version, max_atoms, buckets } => {
+                if version != VERSION as u64 {
+                    return Err(format!(
+                        "server speaks protocol v{version}, client v{VERSION}"
+                    ));
+                }
+                (max_atoms, buckets)
+            }
+            other => {
+                return Err(format!("expected hello_ack, got {other:?}"))
+            }
+        };
+        let _ = conn.set_read_timeout(None);
+
+        let reader_conn =
+            conn.try_clone().map_err(|e| format!("clone socket: {e}"))?;
+        let breaker =
+            conn.try_clone().map_err(|e| format!("clone socket: {e}"))?;
+        let shared = Arc::new(Shared {
+            writer: Mutex::new(Some(conn)),
+            breaker: Mutex::new(Some(breaker)),
+            pending: Mutex::new(HashMap::new()),
+            next_seq: AtomicU64::new(1),
+            dead: AtomicBool::new(false),
+            pong_tx: Mutex::new(None),
+            stats_tx: Mutex::new(None),
+        });
+        let reader = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("net-client-reader".to_string())
+                .spawn(move || reader_loop(reader_conn, shared))
+                .map_err(|e| format!("spawn reader: {e}"))?
+        };
+        Ok(NetClient {
+            shared,
+            reader: Mutex::new(Some(reader)),
+            max_atoms,
+            buckets,
+        })
+    }
+
+    /// Largest structure the server admits (from the handshake).
+    pub fn max_atoms(&self) -> usize {
+        self.max_atoms
+    }
+
+    /// The server's shape-bucket widths (from the handshake).
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// The connection is known broken; every call will fail fast.
+    pub fn is_dead(&self) -> bool {
+        self.shared.dead.load(Ordering::Relaxed)
+    }
+
+    /// Submit an untyped task — the front door's path (it routes
+    /// [`Task`] values without knowing the client-side `TaskSpec`).
+    pub fn submit_task(
+        &self, task: Task, deadline_ms: Option<u64>, model: Option<String>,
+    ) -> Result<RawNetTicket, ServiceError> {
+        if self.is_dead() {
+            return Err(ServiceError::Dropped(
+                "connection is dead".to_string(),
+            ));
+        }
+        // fail malformed/oversized work without a round trip, exactly
+        // like the in-process client's submit path
+        task.validate().map_err(ServiceError::Rejected)?;
+        if task.n_atoms_max() > self.max_atoms {
+            return Err(ServiceError::Rejected(format!(
+                "structure of {} atoms exceeds the server's largest \
+                 bucket ({} atoms)",
+                task.n_atoms_max(),
+                self.max_atoms
+            )));
+        }
+        let seq = self.shared.next_seq.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        // register BEFORE sending: a reply can race back before the
+        // submit call returns
+        lock(&self.shared.pending).insert(seq, ReplySlot::new(tx));
+        let msg = ClientMsg::Submit { seq, deadline_ms, model, task };
+        if let Err(e) = self.shared.send(&msg) {
+            // the insert above turns into a phantom entry; remove it so
+            // teardown doesn't double-finish
+            if let Some(mut slot) = lock(&self.shared.pending).remove(&seq) {
+                slot.finish(Err(ServiceError::Dropped(e.clone())));
+            }
+            return Err(ServiceError::Dropped(e));
+        }
+        Ok(RawNetTicket { seq, rx, shared: self.shared.clone() })
+    }
+
+    /// Submit a typed request — source-compatible with the in-process
+    /// `Client::submit`.
+    pub fn submit<T: TaskSpec>(
+        &self, req: Request<T>,
+    ) -> Result<NetTicket<T>, ServiceError> {
+        let Request { payload, deadline, model } = req;
+        let deadline_ms = deadline.map(|d| (d.as_millis() as u64).max(1));
+        let raw = self.submit_task(payload.into_task(), deadline_ms, model)?;
+        Ok(NetTicket::from_raw(raw))
+    }
+
+    /// Health probe: the server's admission state + queue depth.
+    pub fn ping(
+        &self, timeout: Duration,
+    ) -> Result<(HealthState, usize), String> {
+        let (tx, rx) = channel();
+        *lock(&self.shared.pong_tx) = Some(tx);
+        self.shared.send(&ClientMsg::Ping)?;
+        match rx.recv_timeout(timeout) {
+            Ok(p) => Ok(p),
+            Err(RecvTimeoutError::Timeout) => {
+                lock(&self.shared.pong_tx).take();
+                Err("ping timed out".to_string())
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err("connection died during ping".to_string())
+            }
+        }
+    }
+
+    /// Fetch the server's metrics ledger.
+    pub fn stats(&self, timeout: Duration) -> Result<MetricsSnapshot, String> {
+        let (tx, rx) = channel();
+        *lock(&self.shared.stats_tx) = Some(tx);
+        self.shared.send(&ClientMsg::Stats)?;
+        match rx.recv_timeout(timeout) {
+            Ok(s) => Ok(s),
+            Err(RecvTimeoutError::Timeout) => {
+                lock(&self.shared.stats_tx).take();
+                Err("stats timed out".to_string())
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err("connection died during stats".to_string())
+            }
+        }
+    }
+
+    /// Ask the server to stop admitting new work.
+    pub fn drain(&self) -> Result<(), String> {
+        self.shared.send(&ClientMsg::Drain)
+    }
+
+    /// Send a wire cancel for an in-flight submission by sequence
+    /// number — the front door's path when a downstream cancel has to
+    /// chase a task that moved upstream.
+    pub(crate) fn send_wire_cancel(&self, seq: u64) {
+        self.shared.send_cancel(seq);
+    }
+
+    /// Graceful goodbye: in-flight tickets resolve to a typed error,
+    /// the reader thread is joined.
+    pub fn close(&self) {
+        let _ = self.shared.send(&ClientMsg::Bye);
+        self.shared.teardown(ServiceError::Dropped(
+            "client closed the connection".to_string(),
+        ));
+        let handle = lock(&self.reader).take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetClient {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+fn reader_loop(mut conn: Conn, shared: Arc<Shared>) {
+    loop {
+        let payload = match read_frame(&mut conn) {
+            Ok(p) => p,
+            Err(e) => {
+                // typed teardown: protocol damage is distinguishable
+                // from the peer dying
+                let err = match e {
+                    super::frame::WireError::Closed => ServiceError::Dropped(
+                        "server closed the connection".to_string(),
+                    ),
+                    super::frame::WireError::Io(ioe) => ServiceError::Dropped(
+                        format!("connection lost: {ioe}"),
+                    ),
+                    other => ServiceError::Protocol(other.to_string()),
+                };
+                shared.teardown(err);
+                return;
+            }
+        };
+        let msg = match decode_server(&payload) {
+            Ok(m) => m,
+            Err(e) => {
+                shared.teardown(ServiceError::Protocol(e.to_string()));
+                return;
+            }
+        };
+        match msg {
+            ServerMsg::Frame { seq, frame } => {
+                if let Some(slot) = lock(&shared.pending).get(&seq) {
+                    slot.frame(frame);
+                }
+            }
+            ServerMsg::Done { seq, result } => {
+                if let Some(mut slot) = lock(&shared.pending).remove(&seq) {
+                    slot.finish(result);
+                }
+            }
+            ServerMsg::Pong { health, queue_depth } => {
+                if let Some(tx) = lock(&shared.pong_tx).take() {
+                    let _ = tx.send((health, queue_depth));
+                }
+            }
+            ServerMsg::StatsAck { metrics } => {
+                if let Some(tx) = lock(&shared.stats_tx).take() {
+                    let _ = tx.send(metrics);
+                }
+            }
+            ServerMsg::HelloAck { .. } => {
+                // a second handshake ack is a server bug; ignore it
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// tickets
+// ---------------------------------------------------------------------
+
+/// The untyped wire ticket: the front door pumps these without knowing
+/// the originating `TaskSpec`.  [`RawNetTicket::cancel`] sends a wire
+/// `cancel`; dropping does NOT cancel (the owner decides).
+pub struct RawNetTicket {
+    pub seq: u64,
+    pub rx: Receiver<ReplyMsg>,
+    shared: Arc<Shared>,
+}
+
+impl RawNetTicket {
+    /// Request cooperative cancellation on the server.
+    pub fn cancel(&self) {
+        self.shared.send_cancel(self.seq);
+    }
+}
+
+/// The typed handle for one wire submission — same shape as the
+/// in-process `Ticket`: `wait` blocks for the typed output, `try_poll`
+/// polls, `next_frame` streams, `cancel`/drop release the server-side
+/// task.
+pub struct NetTicket<T: TaskSpec> {
+    raw: RawNetTicket,
+    frames: VecDeque<Frame>,
+    done: Option<Result<Reply, ServiceError>>,
+    delivered: bool,
+    _spec: PhantomData<fn() -> T>,
+}
+
+impl<T: TaskSpec> NetTicket<T> {
+    pub fn from_raw(raw: RawNetTicket) -> NetTicket<T> {
+        NetTicket {
+            raw,
+            frames: VecDeque::new(),
+            done: None,
+            delivered: false,
+            _spec: PhantomData,
+        }
+    }
+
+    pub fn seq(&self) -> u64 {
+        self.raw.seq
+    }
+
+    /// Request cooperative cancellation on the server; the final reply
+    /// becomes `Canceled` unless the task already finished.
+    pub fn cancel(&self) {
+        self.raw.cancel();
+    }
+
+    fn absorb(&mut self, msg: ReplyMsg) {
+        match msg {
+            ReplyMsg::Frame(f) => self.frames.push_back(f),
+            ReplyMsg::Done(r) => self.done = Some(r),
+        }
+    }
+
+    fn disconnected(&mut self) {
+        if self.done.is_none() {
+            self.done = Some(Err(ServiceError::Dropped(
+                "reply channel closed without a final message".to_string(),
+            )));
+        }
+    }
+
+    /// Block for the final reply and decode it into the task's typed
+    /// output.  Never hangs: connection teardown fails every pending
+    /// slot with a typed error.
+    pub fn wait(mut self) -> Result<T::Output, ServiceError> {
+        while self.done.is_none() {
+            match self.raw.rx.recv() {
+                Ok(msg) => self.absorb(msg),
+                Err(_) => self.disconnected(),
+            }
+        }
+        // mark delivered so Drop doesn't fire a spurious wire cancel
+        self.delivered = true;
+        match self.done.take().unwrap() {
+            Ok(r) => {
+                T::decode(r, Vec::from(std::mem::take(&mut self.frames)))
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Non-blocking poll: `Some(result)` exactly once when done.
+    pub fn try_poll(&mut self) -> Option<Result<T::Output, ServiceError>> {
+        if self.delivered {
+            return None;
+        }
+        loop {
+            match self.raw.rx.try_recv() {
+                Ok(msg) => self.absorb(msg),
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    self.disconnected();
+                    break;
+                }
+            }
+        }
+        let done = self.done.take()?;
+        self.delivered = true;
+        Some(match done {
+            Ok(reply) => {
+                T::decode(reply, Vec::from(std::mem::take(&mut self.frames)))
+            }
+            Err(e) => Err(e),
+        })
+    }
+
+    /// Blocking frame stream; `None` once the final reply arrived.
+    pub fn next_frame(&mut self) -> Option<Frame> {
+        if let Some(f) = self.frames.pop_front() {
+            return Some(f);
+        }
+        if self.done.is_some() || self.delivered {
+            return None;
+        }
+        loop {
+            match self.raw.rx.recv() {
+                Ok(ReplyMsg::Frame(f)) => return Some(f),
+                Ok(ReplyMsg::Done(r)) => {
+                    self.done = Some(r);
+                    return None;
+                }
+                Err(_) => {
+                    self.disconnected();
+                    return None;
+                }
+            }
+        }
+    }
+}
+
+impl<T: TaskSpec> Drop for NetTicket<T> {
+    fn drop(&mut self) {
+        // an abandoned in-flight ticket releases the server-side task;
+        // finished or delivered tickets don't send a stale cancel
+        if !self.delivered && self.done.is_none() {
+            self.raw.cancel();
+        }
+    }
+}

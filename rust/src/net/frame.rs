@@ -1,0 +1,257 @@
+//! Length-prefixed, versioned wire frames.
+//!
+//! Layout (12-byte header, then payload):
+//!
+//! ```text
+//!   0        4     5        8            12
+//!   +--------+-----+--------+------------+----------------+
+//!   | "GTPF" | ver | 3x0x00 | len (u32be)| UTF-8 JSON ... |
+//!   +--------+-----+--------+------------+----------------+
+//! ```
+//!
+//! Every failure mode is a typed [`WireError`]; a torn read is
+//! `Truncated`, a clean close between frames is `Closed` — readers
+//! never hang on a half-frame and never confuse the two.
+
+use std::io::{ErrorKind, Read, Write};
+
+use crate::util::failpoint;
+
+/// Frame magic: "Gaunt Tensor Product Frame".
+pub const MAGIC: [u8; 4] = *b"GTPF";
+/// Current protocol version; bumped on incompatible frame or message
+/// changes.  Negotiated in the Hello/HelloAck handshake.
+pub const VERSION: u8 = 1;
+/// Header bytes preceding every payload.
+pub const HEADER_LEN: usize = 12;
+/// Hard ceiling on a single payload (64 MiB) — a corrupt or hostile
+/// length prefix must not let a reader allocate unbounded memory.
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// Typed failure modes of the frame layer.
+#[derive(Debug)]
+pub enum WireError {
+    /// Clean EOF on a frame boundary — the peer closed normally.
+    Closed,
+    /// Underlying socket error.
+    Io(std::io::Error),
+    /// First four bytes were not `GTPF` — not speaking our protocol.
+    BadMagic([u8; 4]),
+    /// Peer speaks an incompatible frame version.
+    Version { got: u8, want: u8 },
+    /// Length prefix exceeds [`MAX_FRAME_LEN`].
+    TooLarge { len: usize },
+    /// EOF mid-frame: got fewer bytes than the header promised.
+    Truncated { got: usize, want: usize },
+    /// Payload failed to decode (bad UTF-8, bad JSON, bad message
+    /// shape).  Carries a human-readable reason.
+    Codec(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::Io(e) => write!(f, "socket error: {e}"),
+            WireError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:?} (want {MAGIC:?})")
+            }
+            WireError::Version { got, want } => {
+                write!(f, "protocol version mismatch: got {got}, want {want}")
+            }
+            WireError::TooLarge { len } => write!(
+                f,
+                "frame length {len} exceeds cap {MAX_FRAME_LEN}"
+            ),
+            WireError::Truncated { got, want } => {
+                write!(f, "truncated frame: got {got} of {want} bytes")
+            }
+            WireError::Codec(m) => write!(f, "codec error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// Write one frame (header + payload) and flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &str) -> Result<(), WireError> {
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME_LEN {
+        return Err(WireError::TooLarge { len: bytes.len() });
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4] = VERSION;
+    header[8..12].copy_from_slice(&(bytes.len() as u32).to_be_bytes());
+    // one buffered write so small frames go out as a single segment
+    let mut buf = Vec::with_capacity(HEADER_LEN + bytes.len());
+    buf.extend_from_slice(&header);
+    buf.extend_from_slice(bytes);
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read exactly `buf.len()` bytes; distinguishes clean EOF at offset 0
+/// (`Closed` if `at_boundary`) from EOF mid-read (`Truncated`).
+fn read_exact_or(
+    r: &mut impl Read, buf: &mut [u8], at_boundary: bool, want_total: usize,
+    already: usize,
+) -> Result<(), WireError> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if at_boundary && filled == 0 && already == 0 {
+                    Err(WireError::Closed)
+                } else {
+                    Err(WireError::Truncated {
+                        got: already + filled,
+                        want: want_total,
+                    })
+                };
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame, returning the payload string.
+///
+/// Failpoint `net.read_frame` (chaos suite): an `error` policy surfaces
+/// as `WireError::Codec` — the torn-frame simulation the conformance
+/// tests use to prove a protocol error is typed, not a deadlock.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<String, WireError> {
+    if let Some(fault) = failpoint::check("net.read_frame") {
+        match fault {
+            failpoint::Fault::Error(m) => {
+                return Err(WireError::Codec(format!(
+                    "injected torn frame: {m}"
+                )))
+            }
+            failpoint::Fault::Nan => {}
+        }
+    }
+    let mut header = [0u8; HEADER_LEN];
+    read_exact_or(r, &mut header, true, HEADER_LEN, 0)?;
+    if header[..4] != MAGIC {
+        let mut m = [0u8; 4];
+        m.copy_from_slice(&header[..4]);
+        return Err(WireError::BadMagic(m));
+    }
+    if header[4] != VERSION {
+        return Err(WireError::Version {
+            got: header[4],
+            want: VERSION,
+        });
+    }
+    let len = u32::from_be_bytes([header[8], header[9], header[10], header[11]])
+        as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::TooLarge { len });
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_or(r, &mut payload, false, HEADER_LEN + len, HEADER_LEN)?;
+    String::from_utf8(payload)
+        .map_err(|e| WireError::Codec(format!("payload is not UTF-8: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn encode(payload: &str) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, payload).unwrap();
+        buf
+    }
+
+    #[test]
+    fn roundtrip() {
+        for payload in ["", "x", "{\"k\":[1,2,3]}", &"y".repeat(100_000)] {
+            let buf = encode(payload);
+            assert_eq!(buf.len(), HEADER_LEN + payload.len());
+            let got = read_frame(&mut Cursor::new(&buf)).unwrap();
+            assert_eq!(got, payload);
+        }
+    }
+
+    #[test]
+    fn several_frames_back_to_back() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "one").unwrap();
+        write_frame(&mut buf, "two").unwrap();
+        let mut cur = Cursor::new(&buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), "one");
+        assert_eq!(read_frame(&mut cur).unwrap(), "two");
+        assert!(matches!(read_frame(&mut cur), Err(WireError::Closed)));
+    }
+
+    #[test]
+    fn clean_eof_is_closed_torn_is_truncated() {
+        // EOF exactly on the boundary
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&[] as &[u8])),
+            Err(WireError::Closed)
+        ));
+        // every proper prefix of a real frame is Truncated, never Closed
+        let buf = encode("{\"seq\":1}");
+        for cut in 1..buf.len() {
+            match read_frame(&mut Cursor::new(&buf[..cut])) {
+                Err(WireError::Truncated { got, want }) => {
+                    assert_eq!(got, cut);
+                    assert!(want == HEADER_LEN || want == buf.len());
+                }
+                other => panic!("cut={cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_typed() {
+        let mut buf = encode("hi");
+        buf[0] = b'X';
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&buf)),
+            Err(WireError::BadMagic(_))
+        ));
+        let mut buf = encode("hi");
+        buf[4] = 9;
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&buf)),
+            Err(WireError::Version { got: 9, want: VERSION })
+        ));
+    }
+
+    #[test]
+    fn oversize_length_prefix_is_rejected_without_allocating() {
+        let mut buf = encode("hi");
+        buf[8..12].copy_from_slice(&u32::MAX.to_be_bytes());
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&buf)),
+            Err(WireError::TooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn non_utf8_payload_is_a_codec_error() {
+        let mut buf = encode("ab");
+        let n = buf.len();
+        buf[n - 1] = 0xFF;
+        buf[n - 2] = 0xFE;
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&buf)),
+            Err(WireError::Codec(_))
+        ));
+    }
+}

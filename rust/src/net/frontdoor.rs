@@ -1,0 +1,697 @@
+//! The front door: one listening endpoint fronting N replicas.
+//!
+//! Routing (DESIGN.md §14): a submission goes to the live,
+//! non-draining replica whose largest shape bucket fits the task most
+//! tightly; ties break to the fewest outstanding submissions, then
+//! round-robin.  A prober thread pings every replica on a short
+//! interval — a failed probe marks the replica down (routes move away
+//! instantly) and keeps trying to reconnect, so a restarted replica
+//! rejoins without operator action.
+//!
+//! Failure semantics:
+//!
+//! * a replica dying mid-task surfaces upstream as `Dropped`; if the
+//!   task is idempotent (not `MdRollout`) and no frames were forwarded
+//!   yet, the front door retries it on another replica within the
+//!   deadline budget — otherwise the typed error forwards downstream;
+//! * admission backpressure (`Overloaded { retry_after }`) forwards
+//!   verbatim: wire-visible backpressure instead of silent queueing;
+//! * downstream `cancel` (or the downstream connection dying)
+//!   propagates upstream even across a failover, so replicas never run
+//!   work nobody is waiting for;
+//! * `drain` stops admission at the front door (typed `Rejected`),
+//!   while in-flight work finishes.
+
+use std::collections::HashMap;
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::ReplyMsg;
+use crate::coordinator::{HealthState, MetricsSnapshot, ServiceError, Task};
+
+use super::client::NetClient;
+use super::frame::{read_frame, write_frame, WireError, VERSION};
+use super::proto::{decode_client, encode_server, ClientMsg, ServerMsg};
+use super::{poke, spawn_acceptor, Addr, Conn, Listener};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Front-door tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontDoorConfig {
+    /// how often the prober pings each replica (and retries dead ones)
+    pub probe_interval: Duration,
+    /// ping budget before a replica is declared down
+    pub probe_timeout: Duration,
+    /// `retry_after` hint when no replica can take a submission
+    pub retry_after: Duration,
+}
+
+impl Default for FrontDoorConfig {
+    fn default() -> Self {
+        FrontDoorConfig {
+            probe_interval: Duration::from_millis(100),
+            probe_timeout: Duration::from_secs(2),
+            retry_after: Duration::from_millis(50),
+        }
+    }
+}
+
+/// One routed-to replica: its address plus live connection state.
+struct ReplicaHandle {
+    addr: Addr,
+    /// `Some` while the replica answers probes; `None` while down
+    client: Mutex<Option<Arc<NetClient>>>,
+    /// submissions currently routed here (the load-balance signal)
+    outstanding: AtomicUsize,
+    /// the replica reported `Draining` on its last pong
+    draining: AtomicBool,
+    /// largest admissible structure (from its handshake)
+    max_atoms: AtomicUsize,
+}
+
+impl ReplicaHandle {
+    fn live(&self) -> Option<Arc<NetClient>> {
+        lock(&self.client).as_ref().filter(|c| !c.is_dead()).cloned()
+    }
+
+    /// Remove from routing; in-flight pumps keep their own `Arc` and
+    /// resolve through the dead connection's typed teardown.
+    fn mark_down(&self) {
+        lock(&self.client).take();
+    }
+
+    fn try_connect(&self) {
+        let mut slot = lock(&self.client);
+        if slot.as_ref().map_or(false, |c| !c.is_dead()) {
+            return;
+        }
+        *slot = match NetClient::connect_named(&self.addr, "frontdoor") {
+            Ok(c) => {
+                self.max_atoms.store(c.max_atoms(), Ordering::Relaxed);
+                self.draining.store(false, Ordering::Relaxed);
+                Some(Arc::new(c))
+            }
+            Err(_) => None,
+        };
+    }
+}
+
+struct FdShared {
+    replicas: Vec<Arc<ReplicaHandle>>,
+    cfg: FrontDoorConfig,
+    stop: Arc<AtomicBool>,
+    draining: AtomicBool,
+    /// the front door's own request ledger (reconciles like a
+    /// service's: every admitted submission ends in exactly one bucket)
+    metrics: Metrics,
+    rr: AtomicUsize,
+    conns: Mutex<Vec<Conn>>,
+}
+
+impl FdShared {
+    /// All replicas currently usable for new work.
+    fn candidates(&self, n_atoms: usize) -> Vec<(usize, Arc<NetClient>)> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| !r.draining.load(Ordering::Relaxed))
+            .filter(|(_, r)| r.max_atoms.load(Ordering::Relaxed) >= n_atoms)
+            .filter_map(|(i, r)| r.live().map(|c| (i, c)))
+            .collect()
+    }
+
+    /// Pick the tightest-bucket, least-loaded candidate.
+    fn route(&self, n_atoms: usize) -> Option<(usize, Arc<NetClient>)> {
+        let mut cands = self.candidates(n_atoms);
+        if cands.is_empty() {
+            return None;
+        }
+        let key = |i: usize| {
+            let r = &self.replicas[i];
+            (
+                r.max_atoms.load(Ordering::Relaxed),
+                r.outstanding.load(Ordering::Relaxed),
+            )
+        };
+        cands.sort_by_key(|(i, _)| key(*i));
+        let best = key(cands[0].0);
+        let tied: Vec<_> =
+            cands.into_iter().filter(|(i, _)| key(*i) == best).collect();
+        let pick = self.rr.fetch_add(1, Ordering::Relaxed) % tied.len();
+        Some(tied.into_iter().nth(pick).unwrap())
+    }
+
+    fn aggregate_health(&self) -> HealthState {
+        if self.draining.load(Ordering::Relaxed) {
+            return HealthState::Draining;
+        }
+        let mut any_live = false;
+        for r in &self.replicas {
+            if r.live().is_some() && !r.draining.load(Ordering::Relaxed) {
+                any_live = true;
+            }
+        }
+        if any_live {
+            HealthState::Healthy
+        } else {
+            HealthState::Shedding
+        }
+    }
+
+    /// Own ledger merged with every live replica's.
+    fn aggregate_stats(&self) -> MetricsSnapshot {
+        let mut snap = self.metrics.snapshot();
+        for r in &self.replicas {
+            if let Some(c) = r.live() {
+                if let Ok(s) = c.stats(self.cfg.probe_timeout) {
+                    snap.merge(&s);
+                }
+            }
+        }
+        snap
+    }
+
+    fn hello_shape(&self) -> (usize, Vec<usize>) {
+        let mut max_atoms = 0usize;
+        let mut buckets: Vec<usize> = Vec::new();
+        for r in &self.replicas {
+            if let Some(c) = r.live() {
+                max_atoms = max_atoms.max(c.max_atoms());
+                for &b in c.buckets() {
+                    if !buckets.contains(&b) {
+                        buckets.push(b);
+                    }
+                }
+            }
+        }
+        if max_atoms == 0 {
+            // no replica is up yet; don't reject everything at
+            // handshake time — admission is rechecked per submission
+            max_atoms = 1 << 20;
+        }
+        buckets.sort_unstable();
+        (max_atoms, buckets)
+    }
+}
+
+/// A running front door.
+pub struct FrontDoor {
+    shared: Arc<FdShared>,
+    bound: Vec<Addr>,
+    acceptors: Vec<std::thread::JoinHandle<()>>,
+    prober: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FrontDoor {
+    /// Bind `listen` and start routing to `replica_addrs`.  Replicas
+    /// need not be up yet — the prober connects as they appear.
+    pub fn serve(
+        replica_addrs: &[Addr], listen: &[Addr], cfg: FrontDoorConfig,
+    ) -> io::Result<FrontDoor> {
+        let replicas: Vec<Arc<ReplicaHandle>> = replica_addrs
+            .iter()
+            .map(|addr| {
+                Arc::new(ReplicaHandle {
+                    addr: addr.clone(),
+                    client: Mutex::new(None),
+                    outstanding: AtomicUsize::new(0),
+                    draining: AtomicBool::new(false),
+                    max_atoms: AtomicUsize::new(0),
+                })
+            })
+            .collect();
+        let shared = Arc::new(FdShared {
+            replicas,
+            cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+            draining: AtomicBool::new(false),
+            metrics: Metrics::new(),
+            rr: AtomicUsize::new(0),
+            conns: Mutex::new(Vec::new()),
+        });
+        // eager first connect so the first submission doesn't wait a
+        // probe interval
+        for r in &shared.replicas {
+            r.try_connect();
+        }
+        let prober = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("frontdoor-prober".to_string())
+                .spawn(move || prober_loop(shared))
+                .expect("spawn prober")
+        };
+        let mut bound = Vec::new();
+        let mut acceptors = Vec::new();
+        for addr in listen {
+            let (listener, actual) = Listener::bind(addr)?;
+            let handler: Arc<dyn Fn(Conn) + Send + Sync> = {
+                let shared = shared.clone();
+                Arc::new(move |conn: Conn| handle_conn(conn, shared.clone()))
+            };
+            acceptors.push(spawn_acceptor(
+                listener,
+                shared.stop.clone(),
+                "frontdoor".to_string(),
+                handler,
+            ));
+            bound.push(actual);
+        }
+        Ok(FrontDoor { shared, bound, acceptors, prober: Some(prober) })
+    }
+
+    pub fn bound(&self) -> &[Addr] {
+        &self.bound
+    }
+
+    /// Stop admitting new submissions (typed `Rejected`); in-flight
+    /// work keeps running.
+    pub fn drain(&self) {
+        self.shared.draining.store(true, Ordering::Relaxed);
+    }
+
+    /// The front door's own (unmerged) ledger.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Replica indices currently live (for tests/CLI status).
+    pub fn live_replicas(&self) -> Vec<usize> {
+        self.shared
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.live().is_some())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        for addr in &self.bound {
+            poke(addr);
+        }
+        for h in self.acceptors.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(p) = self.prober.take() {
+            let _ = p.join();
+        }
+        for conn in lock(&self.shared.conns).drain(..) {
+            conn.shutdown_both();
+        }
+        for r in &self.shared.replicas {
+            r.mark_down();
+        }
+        for addr in &self.bound {
+            if let Addr::Unix(p) = addr {
+                let _ = std::fs::remove_file(p);
+            }
+        }
+    }
+}
+
+fn prober_loop(shared: Arc<FdShared>) {
+    while !shared.stop.load(Ordering::Relaxed) {
+        for r in &shared.replicas {
+            if shared.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let live = r.live();
+            match live {
+                None => r.try_connect(),
+                Some(c) => match c.ping(shared.cfg.probe_timeout) {
+                    Ok((health, _depth)) => {
+                        r.draining.store(
+                            health == HealthState::Draining,
+                            Ordering::Relaxed,
+                        );
+                    }
+                    Err(_) => r.mark_down(),
+                },
+            }
+        }
+        std::thread::sleep(shared.cfg.probe_interval);
+    }
+}
+
+// ---------------------------------------------------------------------
+// downstream connections
+// ---------------------------------------------------------------------
+
+/// Cancel state for one downstream submission, shared between the
+/// reader (which sees `cancel` messages / teardown) and the routing
+/// thread (which knows where the task currently lives).
+struct CancelCell {
+    canceled: AtomicBool,
+    upstream: Mutex<Option<(Arc<NetClient>, u64)>>,
+}
+
+impl CancelCell {
+    /// Flag + forward to wherever the task is right now.
+    fn cancel(&self) {
+        self.canceled.store(true, Ordering::Relaxed);
+        if let Some((client, seq)) = lock(&self.upstream).clone() {
+            client.send_wire_cancel(seq);
+        }
+    }
+}
+
+type Inflight = Arc<Mutex<HashMap<u64, Arc<CancelCell>>>>;
+
+fn handle_conn(conn: Conn, shared: Arc<FdShared>) {
+    if let Ok(c) = conn.try_clone() {
+        lock(&shared.conns).push(c);
+    }
+    let teardown_conn = match conn.try_clone() {
+        Ok(c) => c,
+        Err(_) => {
+            conn.shutdown_both();
+            return;
+        }
+    };
+    let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
+    conn_loop(conn, &shared, &inflight);
+    // downstream gone: propagate cancellation upstream for everything
+    // still in flight so no replica runs abandoned work
+    for (_, cell) in lock(&inflight).drain() {
+        cell.cancel();
+    }
+    teardown_conn.shutdown_both();
+}
+
+fn conn_loop(mut conn: Conn, shared: &Arc<FdShared>, inflight: &Inflight) {
+    let _ = conn.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+    match read_frame(&mut conn).and_then(|p| decode_client(&p)) {
+        Ok(ClientMsg::Hello { version, .. }) if version == VERSION as u64 => {}
+        _ => return,
+    }
+    let writer = match conn.try_clone() {
+        Ok(c) => Arc::new(Mutex::new(c)),
+        Err(_) => return,
+    };
+    let (max_atoms, buckets) = shared.hello_shape();
+    if send(&writer, &ServerMsg::HelloAck {
+        version: VERSION as u64,
+        max_atoms,
+        buckets,
+    })
+    .is_err()
+    {
+        return;
+    }
+    let _ = conn.set_read_timeout(None);
+
+    loop {
+        let msg = match read_frame(&mut conn) {
+            Ok(p) => match decode_client(&p) {
+                Ok(m) => m,
+                Err(_) => return,
+            },
+            Err(WireError::Closed) => return,
+            Err(_) => return,
+        };
+        match msg {
+            ClientMsg::Submit { seq, deadline_ms, model, task } => {
+                let cell = Arc::new(CancelCell {
+                    canceled: AtomicBool::new(false),
+                    upstream: Mutex::new(None),
+                });
+                lock(inflight).insert(seq, cell.clone());
+                let shared = shared.clone();
+                let writer = writer.clone();
+                let inflight = inflight.clone();
+                let _ = std::thread::Builder::new()
+                    .name(format!("route-{seq}"))
+                    .spawn(move || {
+                        serve_submit(
+                            &shared, &writer, seq, deadline_ms, model, task,
+                            &cell,
+                        );
+                        lock(&inflight).remove(&seq);
+                    });
+            }
+            ClientMsg::Cancel { seq } => {
+                if let Some(cell) = lock(inflight).get(&seq).cloned() {
+                    cell.cancel();
+                }
+            }
+            ClientMsg::Ping => {
+                let depth: usize = shared
+                    .replicas
+                    .iter()
+                    .map(|r| r.outstanding.load(Ordering::Relaxed))
+                    .sum();
+                if send(&writer, &ServerMsg::Pong {
+                    health: shared.aggregate_health(),
+                    queue_depth: depth,
+                })
+                .is_err()
+                {
+                    return;
+                }
+            }
+            ClientMsg::Stats => {
+                if send(&writer, &ServerMsg::StatsAck {
+                    metrics: shared.aggregate_stats(),
+                })
+                .is_err()
+                {
+                    return;
+                }
+            }
+            ClientMsg::Drain => {
+                shared.draining.store(true, Ordering::Relaxed);
+            }
+            ClientMsg::Bye => return,
+            ClientMsg::Hello { .. } => {}
+        }
+    }
+}
+
+fn send(writer: &Arc<Mutex<Conn>>, msg: &ServerMsg) -> Result<(), WireError> {
+    let mut w = lock(writer);
+    write_frame(&mut *w, &encode_server(msg))
+}
+
+/// Route one submission, with failover, and write exactly one `Done`
+/// downstream.  The front door's ledger is classified here — a single
+/// point, so `requests = responses + failed + canceled + expired`
+/// reconciles by construction.
+fn serve_submit(
+    shared: &Arc<FdShared>, writer: &Arc<Mutex<Conn>>, seq: u64,
+    deadline_ms: Option<u64>, model: Option<String>, task: Task,
+    cell: &Arc<CancelCell>,
+) {
+    let start = Instant::now();
+    let result = route_with_failover(
+        shared, writer, seq, deadline_ms, model, task, cell, start,
+    );
+    // ---- classify into the ledger, mirroring service semantics:
+    // rejections/sheds are NOT counted as admitted requests ----
+    let m = &shared.metrics;
+    match &result {
+        Ok(()) => {
+            m.requests.fetch_add(1, Ordering::Relaxed);
+            m.responses.fetch_add(1, Ordering::Relaxed);
+            m.latency.record_ns(start.elapsed().as_nanos() as u64);
+        }
+        Err(ServiceError::Canceled) => {
+            m.requests.fetch_add(1, Ordering::Relaxed);
+            m.canceled.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(ServiceError::DeadlineExceeded) => {
+            m.requests.fetch_add(1, Ordering::Relaxed);
+            m.expired.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(ServiceError::Rejected(_)) => {
+            m.rejected.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(ServiceError::Overloaded { .. }) => {
+            m.rejected.fetch_add(1, Ordering::Relaxed);
+            m.shed.fetch_add(1, Ordering::Relaxed);
+        }
+        Err(_) => {
+            m.requests.fetch_add(1, Ordering::Relaxed);
+            m.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    let final_result = match result {
+        Ok(()) => return, // Done(Ok) was already streamed downstream
+        Err(e) => Err(e),
+    };
+    let _ = send(writer, &ServerMsg::Done { seq, result: final_result });
+}
+
+/// The failover loop.  `Ok(())` means a successful `Done(Ok(..))` was
+/// already forwarded downstream (replies stream through as they
+/// arrive); `Err` is the typed failure for `serve_submit` to send.
+#[allow(clippy::too_many_arguments)]
+fn route_with_failover(
+    shared: &Arc<FdShared>, writer: &Arc<Mutex<Conn>>, seq: u64,
+    deadline_ms: Option<u64>, model: Option<String>, task: Task,
+    cell: &Arc<CancelCell>, start: Instant,
+) -> Result<(), ServiceError> {
+    // a retry may not duplicate observable effects: streaming tasks
+    // re-run frames the client may already hold
+    let idempotent = !matches!(task, Task::MdRollout { .. });
+    // at most one attempt per configured replica, plus one grace try
+    let max_attempts = shared.replicas.len().max(1) + 1;
+    for _attempt in 0..max_attempts {
+        if cell.canceled.load(Ordering::Relaxed) {
+            return Err(ServiceError::Canceled);
+        }
+        if shared.draining.load(Ordering::Relaxed) {
+            return Err(ServiceError::Rejected(
+                "front door is draining; no new work is admitted".to_string(),
+            ));
+        }
+        // remaining deadline budget, decremented across failovers
+        let remaining_ms = match deadline_ms {
+            None => None,
+            Some(total) => {
+                let elapsed = start.elapsed().as_millis() as u64;
+                if elapsed >= total {
+                    return Err(ServiceError::DeadlineExceeded);
+                }
+                Some(total - elapsed)
+            }
+        };
+        let (idx, client) = match shared.route(task.n_atoms_max()) {
+            Some(rc) => rc,
+            None => {
+                return Err(ServiceError::Overloaded {
+                    retry_after: shared.cfg.retry_after,
+                })
+            }
+        };
+        let handle = &shared.replicas[idx];
+        let raw = match client.submit_task(
+            task.clone(),
+            remaining_ms,
+            model.clone(),
+        ) {
+            Ok(raw) => raw,
+            Err(ServiceError::Dropped(_)) => {
+                // connection died under us: mark down and fail over
+                handle.mark_down();
+                continue;
+            }
+            // any other verdict (Rejected, Overloaded, ...) is the
+            // replica's typed answer; forward it
+            Err(e) => return Err(e),
+        };
+        // expose the upstream location so a downstream cancel reaches
+        // the replica that actually holds the task — and re-check the
+        // flag to close the race where cancel arrived mid-submit
+        *lock(&cell.upstream) = Some((client.clone(), raw.seq));
+        if cell.canceled.load(Ordering::Relaxed) {
+            client.send_wire_cancel(raw.seq);
+        }
+        handle.outstanding.fetch_add(1, Ordering::Relaxed);
+        let outcome = pump_replies(&raw.rx, writer, seq);
+        handle.outstanding.fetch_sub(1, Ordering::Relaxed);
+        *lock(&cell.upstream) = None;
+        match outcome {
+            PumpOutcome::DeliveredOk => return Ok(()),
+            PumpOutcome::Failed(e) => {
+                let retryable = matches!(e, ServiceError::Dropped(_));
+                if retryable {
+                    handle.mark_down();
+                    if cell.canceled.load(Ordering::Relaxed) {
+                        return Err(ServiceError::Canceled);
+                    }
+                    if idempotent {
+                        continue; // deadline budget re-checked on entry
+                    }
+                }
+                return Err(e);
+            }
+            PumpOutcome::FramesThenLost => {
+                // frames already reached the client; a retry would
+                // duplicate them, so surface the loss as typed Dropped
+                handle.mark_down();
+                return Err(ServiceError::Dropped(
+                    "replica died mid-stream after frames were forwarded"
+                        .to_string(),
+                ));
+            }
+            PumpOutcome::DownstreamGone(e) => {
+                // nobody is listening anymore; release the replica-side
+                // task and report canceled for the ledger
+                cell.cancel();
+                return Err(e);
+            }
+        }
+    }
+    Err(ServiceError::Overloaded { retry_after: shared.cfg.retry_after })
+}
+
+enum PumpOutcome {
+    /// `Done(Ok)` was forwarded downstream
+    DeliveredOk,
+    /// upstream finished with a typed error; no frames were forwarded
+    Failed(ServiceError),
+    /// upstream died after at least one frame went downstream
+    FramesThenLost,
+    /// the downstream write failed — the client connection is gone
+    DownstreamGone(ServiceError),
+}
+
+/// Forward one upstream reply stream downstream until `Done`.
+fn pump_replies(
+    rx: &std::sync::mpsc::Receiver<ReplyMsg>, writer: &Arc<Mutex<Conn>>,
+    seq: u64,
+) -> PumpOutcome {
+    let mut frames_forwarded = 0usize;
+    loop {
+        match rx.recv() {
+            Ok(ReplyMsg::Frame(f)) => {
+                if send(writer, &ServerMsg::Frame { seq, frame: f }).is_err() {
+                    return PumpOutcome::DownstreamGone(
+                        ServiceError::Canceled,
+                    );
+                }
+                frames_forwarded += 1;
+            }
+            Ok(ReplyMsg::Done(Ok(reply))) => {
+                return match send(writer, &ServerMsg::Done {
+                    seq,
+                    result: Ok(reply),
+                }) {
+                    Ok(()) => PumpOutcome::DeliveredOk,
+                    Err(_) => PumpOutcome::DownstreamGone(
+                        ServiceError::Canceled,
+                    ),
+                };
+            }
+            Ok(ReplyMsg::Done(Err(e))) => {
+                return if frames_forwarded > 0
+                    && matches!(e, ServiceError::Dropped(_))
+                {
+                    PumpOutcome::FramesThenLost
+                } else {
+                    PumpOutcome::Failed(e)
+                };
+            }
+            Err(_) => {
+                let e = ServiceError::Dropped(
+                    "upstream reply channel closed".to_string(),
+                );
+                return if frames_forwarded > 0 {
+                    PumpOutcome::FramesThenLost
+                } else {
+                    PumpOutcome::Failed(e)
+                };
+            }
+        }
+    }
+}

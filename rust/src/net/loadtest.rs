@@ -1,0 +1,518 @@
+//! The true multi-process loadtest: N client *processes* hammering M
+//! replica *processes* behind one front door, over real sockets.
+//!
+//! The orchestrator ([`run_cluster_loadtest`]) spawns everything from
+//! one binary (`gaunt-tp replica` / `gaunt-tp frontdoor` /
+//! `gaunt-tp net-worker`), so the integration test and `make loadtest`
+//! exercise genuinely separate address spaces — a replica being
+//! SIGKILLed mid-load is a real process death, not a simulated one.
+//!
+//! Ledger discipline: every client worker accounts for every request it
+//! issued (`n = ok + rejected + canceled + expired + failed`), workers
+//! print their ledger as one `NETLOAD {json}` line on stdout, and the
+//! orchestrator aggregates and re-checks the reconciliation.
+
+use std::io::Read;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    EnergyForces, MetricsSnapshot, Request, ServiceError, Structure,
+};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+use super::client::NetClient;
+use super::{temp_socket_path, Addr};
+
+/// One process's (or the aggregate's) request ledger.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClientLedger {
+    pub n: u64,
+    pub ok: u64,
+    /// typed `Rejected` + `Overloaded` (wire-visible backpressure)
+    pub rejected: u64,
+    pub canceled: u64,
+    pub expired: u64,
+    pub failed: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl ClientLedger {
+    /// Every issued request landed in exactly one outcome bucket.
+    pub fn reconciles(&self) -> bool {
+        self.n
+            == self.ok
+                + self.rejected
+                + self.canceled
+                + self.expired
+                + self.failed
+    }
+
+    pub fn merge(&mut self, other: &ClientLedger) {
+        self.n += other.n;
+        self.ok += other.ok;
+        self.rejected += other.rejected;
+        self.canceled += other.canceled;
+        self.expired += other.expired;
+        self.failed += other.failed;
+        self.p50_ms = self.p50_ms.max(other.p50_ms);
+        self.p99_ms = self.p99_ms.max(other.p99_ms);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("canceled", Json::Num(self.canceled as f64)),
+            ("expired", Json::Num(self.expired as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ClientLedger, String> {
+        let f = |key: &str| -> Result<f64, String> {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("ledger missing '{key}'"))
+        };
+        Ok(ClientLedger {
+            n: f("n")? as u64,
+            ok: f("ok")? as u64,
+            rejected: f("rejected")? as u64,
+            canceled: f("canceled")? as u64,
+            expired: f("expired")? as u64,
+            failed: f("failed")? as u64,
+            p50_ms: f("p50_ms")?,
+            p99_ms: f("p99_ms")?,
+        })
+    }
+}
+
+/// What one loadtest run produced.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub per_client: Vec<ClientLedger>,
+    pub total: ClientLedger,
+    /// the front door's merged fleet ledger, if reachable at the end
+    pub frontdoor_stats: Option<MetricsSnapshot>,
+    pub killed_replica: bool,
+    pub wall: Duration,
+}
+
+impl LoadReport {
+    pub fn success_rate(&self) -> f64 {
+        if self.total.n == 0 {
+            return 0.0;
+        }
+        self.total.ok as f64 / self.total.n as f64
+    }
+}
+
+/// Orchestrator knobs.
+#[derive(Clone, Debug)]
+pub struct LoadOpts {
+    pub replicas: usize,
+    pub clients: usize,
+    pub requests_per_client: usize,
+    /// per-request deadline budget
+    pub deadline_ms: u64,
+    /// SIGKILL one replica process mid-load (resilience demo)
+    pub kill_one: bool,
+    /// worker threads per replica process
+    pub workers: usize,
+    /// concurrent submission threads per client process — raise above
+    /// replica capacity to demonstrate 2x overload shedding
+    pub concurrency: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadOpts {
+    fn default() -> Self {
+        LoadOpts {
+            replicas: 2,
+            clients: 2,
+            requests_per_client: 40,
+            deadline_ms: 10_000,
+            kill_one: false,
+            workers: 2,
+            concurrency: 4,
+            seed: 20260807,
+        }
+    }
+}
+
+/// A jittered-grid cluster, matching the serving benches' workload.
+pub fn cluster(n: usize, seed: u64) -> Structure {
+    let mut rng = Rng::new(seed);
+    let side = (n as f64).cbrt().ceil() as usize;
+    let spacing = 3.5;
+    let mut pos = Vec::with_capacity(n);
+    let mut species = Vec::with_capacity(n);
+    'fill: for i in 0..side {
+        for j in 0..side {
+            for k in 0..side {
+                if pos.len() == n {
+                    break 'fill;
+                }
+                pos.push([
+                    i as f64 * spacing + rng.uniform(-0.3, 0.3),
+                    j as f64 * spacing + rng.uniform(-0.3, 0.3),
+                    k as f64 * spacing + rng.uniform(-0.3, 0.3),
+                ]);
+                species.push(pos.len() % 3);
+            }
+        }
+    }
+    Structure::new(pos, species)
+}
+
+fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * q).round() as usize;
+    sorted_ms[idx]
+}
+
+/// The body of one client process (also runnable in-process for unit
+/// tests): `concurrency` threads submit `n_requests` energy+forces
+/// tasks total and account for every outcome.
+pub fn run_client_worker(
+    addr: &Addr, n_requests: usize, concurrency: usize, deadline_ms: u64,
+    seed: u64,
+) -> Result<ClientLedger, String> {
+    let client = Arc::new(connect_with_retry(addr, Duration::from_secs(10))?);
+    let issued = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let ledger = Arc::new(Mutex::new(ClientLedger::default()));
+    let latencies: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut handles = Vec::new();
+    for t in 0..concurrency.max(1) {
+        let client = client.clone();
+        let issued = issued.clone();
+        let ledger = ledger.clone();
+        let latencies = latencies.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(seed ^ (t as u64).wrapping_mul(0x9e3779b9));
+            loop {
+                let i = issued
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n_requests {
+                    // un-claim the overshoot so `n` stays exact
+                    issued
+                        .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+                    return;
+                }
+                let n_atoms = 8 + rng.below(25);
+                let st = cluster(n_atoms, seed.wrapping_add(i as u64));
+                let started = Instant::now();
+                let req = Request::new(EnergyForces(st))
+                    .deadline(Duration::from_millis(deadline_ms));
+                let outcome = match client.submit(req) {
+                    Ok(ticket) => ticket.wait().map(|_| ()),
+                    Err(e) => Err(e),
+                };
+                let ms = started.elapsed().as_secs_f64() * 1e3;
+                let mut l = ledger.lock().unwrap_or_else(|e| e.into_inner());
+                l.n += 1;
+                match outcome {
+                    Ok(()) => {
+                        l.ok += 1;
+                        latencies
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .push(ms);
+                    }
+                    Err(
+                        ServiceError::Rejected(_)
+                        | ServiceError::Overloaded { .. },
+                    ) => l.rejected += 1,
+                    Err(ServiceError::Canceled) => l.canceled += 1,
+                    Err(ServiceError::DeadlineExceeded) => l.expired += 1,
+                    Err(_) => l.failed += 1,
+                }
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let mut out =
+        ledger.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    let mut lat = latencies.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out.p50_ms = percentile(&lat, 0.50);
+    out.p99_ms = percentile(&lat, 0.99);
+    client.close();
+    Ok(out)
+}
+
+/// Connect, retrying while the serving processes come up.
+pub fn connect_with_retry(
+    addr: &Addr, budget: Duration,
+) -> Result<NetClient, String> {
+    let deadline = Instant::now() + budget;
+    loop {
+        match NetClient::connect(addr) {
+            Ok(c) => return Ok(c),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(format!("{addr} never came up: {e}"));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+struct ChildGuard {
+    child: Child,
+    #[allow(dead_code)]
+    tag: String,
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn M replica processes + 1 front-door process + N client
+/// processes from `exe` (the `gaunt-tp` binary), run the load, and
+/// aggregate the ledgers.  Every child is killed on exit, success or
+/// not.
+pub fn run_cluster_loadtest(
+    exe: &Path, opts: &LoadOpts,
+) -> Result<LoadReport, String> {
+    let started = Instant::now();
+    let run_tag = std::process::id();
+
+    // ---- replicas ----
+    let mut replica_addrs: Vec<Addr> = Vec::new();
+    let mut replicas: Vec<ChildGuard> = Vec::new();
+    for i in 0..opts.replicas {
+        let sock = temp_socket_path(&format!("lt{run_tag}-r{i}"));
+        let addr = Addr::Unix(sock.clone());
+        let child = Command::new(exe)
+            .args([
+                "replica",
+                "--listen",
+                &addr.to_string(),
+                "--workers",
+                &opts.workers.to_string(),
+                "--name",
+                &format!("r{i}"),
+            ])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .map_err(|e| format!("spawn replica {i}: {e}"))?;
+        replicas.push(ChildGuard { child, tag: format!("replica-{i}") });
+        replica_addrs.push(addr);
+    }
+
+    // ---- front door ----
+    let fd_sock = temp_socket_path(&format!("lt{run_tag}-fd"));
+    let fd_addr = Addr::Unix(fd_sock.clone());
+    let mut fd_args: Vec<String> = vec![
+        "frontdoor".to_string(),
+        "--listen".to_string(),
+        fd_addr.to_string(),
+    ];
+    for a in &replica_addrs {
+        fd_args.push("--replica".to_string());
+        fd_args.push(a.to_string());
+    }
+    let fd_child = Command::new(exe)
+        .args(&fd_args)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .map_err(|e| format!("spawn frontdoor: {e}"))?;
+    let _fd_guard = ChildGuard { child: fd_child, tag: "frontdoor".into() };
+
+    // ---- readiness: the front door answers a ping and at least one
+    // replica is routable (probe one cheap submission) ----
+    {
+        let probe = connect_with_retry(&fd_addr, Duration::from_secs(15))?;
+        let ready_by = Instant::now() + Duration::from_secs(15);
+        loop {
+            let req = Request::new(EnergyForces(cluster(4, 1)))
+                .deadline(Duration::from_millis(2000));
+            match probe.submit(req).and_then(|t| t.wait()) {
+                Ok(_) => break,
+                Err(_) if Instant::now() < ready_by => {
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+                Err(e) => {
+                    return Err(format!("cluster never became ready: {e}"))
+                }
+            }
+        }
+        probe.close();
+    }
+
+    // ---- client processes ----
+    let mut clients: Vec<Child> = Vec::new();
+    for c in 0..opts.clients {
+        let child = Command::new(exe)
+            .args([
+                "net-worker",
+                "--connect",
+                &fd_addr.to_string(),
+                "--requests",
+                &opts.requests_per_client.to_string(),
+                "--concurrency",
+                &opts.concurrency.to_string(),
+                "--deadline-ms",
+                &opts.deadline_ms.to_string(),
+                "--seed",
+                &(opts.seed.wrapping_add(c as u64 * 7919)).to_string(),
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .map_err(|e| format!("spawn client {c}: {e}"))?;
+        clients.push(child);
+    }
+
+    // ---- optional mid-load replica kill ----
+    let mut killed = false;
+    if opts.kill_one && !replicas.is_empty() {
+        std::thread::sleep(Duration::from_millis(300));
+        let victim = &mut replicas[0];
+        let _ = victim.child.kill();
+        let _ = victim.child.wait();
+        killed = true;
+    }
+
+    // ---- harvest client ledgers ----
+    let mut per_client = Vec::new();
+    for (c, mut child) in clients.into_iter().enumerate() {
+        let mut out = String::new();
+        if let Some(stdout) = child.stdout.as_mut() {
+            let _ = stdout.read_to_string(&mut out);
+        }
+        let status =
+            child.wait().map_err(|e| format!("wait client {c}: {e}"))?;
+        let line = out
+            .lines()
+            .find_map(|l| l.trim().strip_prefix("NETLOAD "))
+            .ok_or_else(|| {
+                format!(
+                    "client {c} (exit {status}) printed no NETLOAD ledger; \
+                     stdout: {out:?}"
+                )
+            })?;
+        let v = json::parse(line)
+            .map_err(|e| format!("client {c} ledger: {e}"))?;
+        let ledger = ClientLedger::from_json(&v)
+            .map_err(|e| format!("client {c} ledger: {e}"))?;
+        if !ledger.reconciles() {
+            return Err(format!(
+                "client {c} ledger does not reconcile: {ledger:?}"
+            ));
+        }
+        per_client.push(ledger);
+    }
+    let mut total = ClientLedger::default();
+    for l in &per_client {
+        total.merge(l);
+    }
+
+    // ---- fleet stats from the front door ----
+    let frontdoor_stats = NetClient::connect(&fd_addr)
+        .ok()
+        .and_then(|c| {
+            let s = c.stats(Duration::from_secs(5)).ok();
+            c.close();
+            s
+        });
+
+    // children die via ChildGuard drops; unix socket files with them
+    let report = LoadReport {
+        per_client,
+        total,
+        frontdoor_stats,
+        killed_replica: killed,
+        wall: started.elapsed(),
+    };
+    let _ = std::fs::remove_file(&fd_sock);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_roundtrips_and_reconciles() {
+        let l = ClientLedger {
+            n: 10,
+            ok: 6,
+            rejected: 2,
+            canceled: 1,
+            expired: 1,
+            failed: 0,
+            p50_ms: 1.5,
+            p99_ms: 9.0,
+        };
+        assert!(l.reconciles());
+        let parsed = json::parse(&l.to_json().to_string()).unwrap();
+        let back = ClientLedger::from_json(&parsed).unwrap();
+        assert_eq!(back, l);
+        let mut bad = l.clone();
+        bad.ok += 1;
+        assert!(!bad.reconciles());
+    }
+
+    #[test]
+    fn ledgers_merge_additively() {
+        let mut a = ClientLedger {
+            n: 5,
+            ok: 5,
+            p50_ms: 1.0,
+            p99_ms: 2.0,
+            ..Default::default()
+        };
+        let b = ClientLedger {
+            n: 3,
+            ok: 2,
+            failed: 1,
+            p50_ms: 4.0,
+            p99_ms: 1.0,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.n, 8);
+        assert_eq!(a.ok, 7);
+        assert_eq!(a.failed, 1);
+        assert_eq!(a.p50_ms, 4.0);
+        assert_eq!(a.p99_ms, 2.0);
+        assert!(a.reconciles());
+    }
+
+    #[test]
+    fn cluster_generator_is_deterministic() {
+        let a = cluster(17, 42);
+        let b = cluster(17, 42);
+        assert_eq!(a.pos, b.pos);
+        assert_eq!(a.species, b.species);
+        assert_eq!(a.n_atoms(), 17);
+    }
+
+    #[test]
+    fn percentile_picks_sane_values() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.5), 50.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+}

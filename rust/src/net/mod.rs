@@ -1,0 +1,308 @@
+//! The wire layer: multi-process serving over TCP and Unix-domain
+//! sockets (DESIGN.md §14).
+//!
+//! ```text
+//!   NetClient ──[frame::write_frame]──▶ FrontDoor ──▶ Replica ──▶ Service
+//!       ▲                                  │shard by shape bucket,
+//!       │ Ticket-shaped API                │least-outstanding, health-
+//!       │ (wait/try_poll/next_frame/       │probed, reroutes around
+//!       │  cancel; reply-on-drop)          │dead replicas
+//! ```
+//!
+//! * [`frame`] — length-prefixed, versioned frames with typed
+//!   [`frame::WireError`]s (torn reads are `Truncated`, never a hang).
+//! * [`proto`] — `Task`/`Reply`/`ServiceError` <-> JSON via the
+//!   hardened `util::json` codec (zero new dependencies).
+//! * [`replica`] — a blocking socket server wrapping one
+//!   `coordinator::Service`; wire `cancel`/disconnect releases the
+//!   service-side ticket.
+//! * [`client`] — [`client::NetClient`], source-compatible with the
+//!   in-process `Client`: `submit(Request<T>)` returns a typed
+//!   [`client::NetTicket`].
+//! * [`frontdoor`] — multi-replica router: shape-bucket sharding,
+//!   health probes, wire-visible backpressure, reroute on replica
+//!   death, graceful drain.
+//! * [`loadtest`] — the true multi-process load generator (N client
+//!   processes x M replica processes) behind `make loadtest`.
+//!
+//! Everything is blocking std sockets + threads, matching the repo's
+//! no-tokio constraint; liveness comes from the same reply-on-drop
+//! discipline the in-process protocol uses.
+
+pub mod client;
+pub mod frame;
+pub mod frontdoor;
+pub mod loadtest;
+pub mod proto;
+pub mod replica;
+
+pub use client::{NetClient, NetTicket};
+pub use frame::{read_frame, write_frame, WireError};
+pub use frontdoor::{FrontDoor, FrontDoorConfig};
+pub use replica::Replica;
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::failpoint;
+
+// ---------------------------------------------------------------------
+// addresses
+// ---------------------------------------------------------------------
+
+/// A serving address: `host:port` for TCP, `unix:/path` for a
+/// Unix-domain socket.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Addr {
+    Tcp(String),
+    Unix(PathBuf),
+}
+
+impl Addr {
+    /// Parse `"unix:/path/to.sock"` or `"host:port"`.
+    pub fn parse(s: &str) -> Result<Addr, String> {
+        if let Some(p) = s.strip_prefix("unix:") {
+            if p.is_empty() {
+                return Err("empty unix socket path".to_string());
+            }
+            return Ok(Addr::Unix(PathBuf::from(p)));
+        }
+        if s.rsplit_once(':').map_or(false, |(h, p)| {
+            !h.is_empty() && p.parse::<u16>().is_ok()
+        }) {
+            return Ok(Addr::Tcp(s.to_string()));
+        }
+        Err(format!(
+            "bad address '{s}': expected host:port or unix:/path"
+        ))
+    }
+}
+
+impl std::fmt::Display for Addr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Addr::Tcp(a) => write!(f, "{a}"),
+            Addr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// A fresh per-process, per-call Unix socket path under the system temp
+/// dir — what the tests and the multi-process loadtest bind on.
+pub fn temp_socket_path(tag: &str) -> PathBuf {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "gtp-{tag}-{}-{n}.sock",
+        std::process::id()
+    ))
+}
+
+// ---------------------------------------------------------------------
+// connections + listeners
+// ---------------------------------------------------------------------
+
+/// One bidirectional byte stream, TCP or Unix-domain, unified behind
+/// `Read`/`Write` so the frame layer never cares which.
+#[derive(Debug)]
+pub enum Conn {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Conn {
+    pub fn connect(addr: &Addr) -> io::Result<Conn> {
+        match addr {
+            Addr::Tcp(a) => {
+                let s = TcpStream::connect(a)?;
+                // latency matters more than throughput for small frames
+                let _ = s.set_nodelay(true);
+                Ok(Conn::Tcp(s))
+            }
+            Addr::Unix(p) => UnixStream::connect(p).map(Conn::Unix),
+        }
+    }
+
+    /// An independently readable/writable handle onto the same socket
+    /// (reader thread + writer mutex pattern).
+    pub fn try_clone(&self) -> io::Result<Conn> {
+        match self {
+            Conn::Tcp(s) => s.try_clone().map(Conn::Tcp),
+            Conn::Unix(s) => s.try_clone().map(Conn::Unix),
+        }
+    }
+
+    /// Close both directions; blocked reads on any clone return EOF.
+    pub fn shutdown_both(&self) {
+        match self {
+            Conn::Tcp(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            Conn::Unix(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(d),
+            Conn::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound accept socket (TCP or Unix).
+pub enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+impl Listener {
+    /// Bind, returning the listener plus the ACTUAL address (a TCP bind
+    /// on port 0 resolves to the kernel-assigned port).  A stale Unix
+    /// socket file at the path is unlinked first.
+    pub fn bind(addr: &Addr) -> io::Result<(Listener, Addr)> {
+        match addr {
+            Addr::Tcp(a) => {
+                let l = TcpListener::bind(a)?;
+                let actual = Addr::Tcp(l.local_addr()?.to_string());
+                Ok((Listener::Tcp(l), actual))
+            }
+            Addr::Unix(p) => {
+                let _ = std::fs::remove_file(p);
+                let l = UnixListener::bind(p)?;
+                Ok((Listener::Unix(l), Addr::Unix(p.clone())))
+            }
+        }
+    }
+
+    pub fn accept(&self) -> io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                let _ = s.set_nodelay(true);
+                Conn::Tcp(s)
+            }),
+            Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+        }
+    }
+}
+
+/// One blocking accept loop on its own thread, spawning a detached
+/// handler thread per connection.  Failpoint `net.accept` (chaos
+/// suite): an `error` policy refuses the connection (dropped on the
+/// floor — clients see EOF and surface a typed error), `delay` stalls
+/// the accept path, `panic` kills the acceptor.
+pub(crate) fn spawn_acceptor(
+    listener: Listener, stop: Arc<AtomicBool>, tag: String,
+    handler: Arc<dyn Fn(Conn) + Send + Sync + 'static>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("{tag}-accept"))
+        .spawn(move || {
+            let mut conn_idx = 0usize;
+            loop {
+                let conn = match listener.accept() {
+                    Ok(c) => c,
+                    Err(_) => {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        // transient accept error (EMFILE, EINTR): don't
+                        // spin the core while the condition persists
+                        std::thread::sleep(Duration::from_millis(10));
+                        continue;
+                    }
+                };
+                if stop.load(Ordering::Relaxed) {
+                    // the shutdown poke connection itself lands here
+                    conn.shutdown_both();
+                    return;
+                }
+                match failpoint::check("net.accept") {
+                    Some(failpoint::Fault::Error(_)) => {
+                        conn.shutdown_both();
+                        continue;
+                    }
+                    Some(failpoint::Fault::Nan) | None => {}
+                }
+                conn_idx += 1;
+                let h = handler.clone();
+                let _ = std::thread::Builder::new()
+                    .name(format!("{tag}-conn-{conn_idx}"))
+                    .spawn(move || h(conn));
+            }
+        })
+        .expect("spawn acceptor thread")
+}
+
+/// Unblock a blocking `accept` after its stop flag was set, by making
+/// one throwaway connection.
+pub(crate) fn poke(addr: &Addr) {
+    if let Ok(c) = Conn::connect(addr) {
+        c.shutdown_both();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_parsing() {
+        assert_eq!(
+            Addr::parse("unix:/tmp/x.sock").unwrap(),
+            Addr::Unix(PathBuf::from("/tmp/x.sock"))
+        );
+        assert_eq!(
+            Addr::parse("127.0.0.1:8080").unwrap(),
+            Addr::Tcp("127.0.0.1:8080".to_string())
+        );
+        assert_eq!(
+            Addr::parse("localhost:0").unwrap(),
+            Addr::Tcp("localhost:0".to_string())
+        );
+        assert!(Addr::parse("unix:").is_err());
+        assert!(Addr::parse("nonsense").is_err());
+        assert!(Addr::parse("host:notaport").is_err());
+        // display round-trips
+        for s in ["unix:/tmp/y.sock", "127.0.0.1:9999"] {
+            assert_eq!(Addr::parse(s).unwrap().to_string(), s);
+        }
+    }
+
+    #[test]
+    fn temp_socket_paths_are_unique() {
+        assert_ne!(temp_socket_path("t"), temp_socket_path("t"));
+    }
+}

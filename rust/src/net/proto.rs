@@ -1,0 +1,858 @@
+//! Wire message shapes and their JSON codecs.
+//!
+//! Payloads are JSON via the hardened `util::json` parser
+//! ([`crate::util::json::parse_limited`]) — zero new dependencies, and
+//! a hostile peer can't stack-overflow or OOM the decoder.  Messages
+//! are tagged objects (`{"type": "submit", ...}`); tasks and replies
+//! are tagged by `"kind"`.  Positions travel as flat `[x0,y0,z0,...]`
+//! arrays.  Decode failures are [`WireError::Codec`] with the exact
+//! reason — the fuzz suite (`tests/json_fuzz.rs`) pins the no-panic
+//! guarantee.
+//!
+//! Numbers ride on f64 (`Json::Num`); per-connection sequence numbers
+//! start at 1 and stay far below the 2^53 integer-exactness bound.
+
+use std::time::Duration;
+
+use crate::coordinator::{
+    EnergyOut, ExecFault, ForceResponse, Frame, HealthState,
+    MetricsSnapshot, Reply, RolloutSummary, ServiceError, Structure, Task,
+};
+use crate::md::relax::RelaxResult;
+use crate::util::json::{self, Json, Limits};
+
+use super::frame::WireError;
+
+// ---------------------------------------------------------------------
+// message shapes
+// ---------------------------------------------------------------------
+
+/// Client -> server messages.
+#[derive(Clone, Debug)]
+pub enum ClientMsg {
+    /// First frame on every connection: the protocol version the client
+    /// speaks plus a display name for logs.
+    Hello { version: u64, name: String },
+    /// Submit one task.  `seq` is the per-connection correlation id the
+    /// server echoes on `Frame`/`Done`; deadlines travel in-band as a
+    /// relative budget in milliseconds (absolute instants don't survive
+    /// crossing a process boundary).
+    Submit {
+        seq: u64,
+        deadline_ms: Option<u64>,
+        model: Option<String>,
+        task: Task,
+    },
+    /// Cooperatively cancel an in-flight submission.
+    Cancel { seq: u64 },
+    /// Health probe; answered with [`ServerMsg::Pong`].
+    Ping,
+    /// Ask the server to stop admitting new work (graceful drain).
+    Drain,
+    /// Ask for the server's metrics ledger.
+    Stats,
+    /// Clean goodbye; the server closes the connection.
+    Bye,
+}
+
+/// Server -> client messages.
+#[derive(Clone, Debug)]
+pub enum ServerMsg {
+    /// Handshake answer: negotiated version plus serving shape info
+    /// (largest admissible structure, bucket widths) so clients can
+    /// reject oversized work without a round trip.
+    HelloAck { version: u64, max_atoms: usize, buckets: Vec<usize> },
+    /// One streamed MD frame for submission `seq`.
+    Frame { seq: u64, frame: Frame },
+    /// Final reply for submission `seq` — exactly one per accepted
+    /// submit, mirroring the in-process reply-on-drop guarantee.
+    Done { seq: u64, result: Result<Reply, ServiceError> },
+    /// Health probe answer; `health` makes the admission state
+    /// (healthy / shedding / draining) wire-visible.
+    Pong { health: HealthState, queue_depth: usize },
+    /// Metrics ledger answer.
+    StatsAck { metrics: MetricsSnapshot },
+}
+
+// ---------------------------------------------------------------------
+// field helpers (Result<_, String>; one Codec mapping at the top)
+// ---------------------------------------------------------------------
+
+fn need<'a>(v: &'a Json, key: &str) -> Result<&'a Json, String> {
+    v.get(key).ok_or_else(|| format!("missing field '{key}'"))
+}
+
+fn need_f64(v: &Json, key: &str) -> Result<f64, String> {
+    need(v, key)?
+        .as_f64()
+        .ok_or_else(|| format!("field '{key}' is not a number"))
+}
+
+fn need_u64(v: &Json, key: &str) -> Result<u64, String> {
+    let n = need_f64(v, key)?;
+    if !n.is_finite() || n < 0.0 || n != n.trunc() {
+        return Err(format!("field '{key}' is not a non-negative integer"));
+    }
+    Ok(n as u64)
+}
+
+fn need_usize(v: &Json, key: &str) -> Result<usize, String> {
+    Ok(need_u64(v, key)? as usize)
+}
+
+fn need_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, String> {
+    need(v, key)?
+        .as_str()
+        .ok_or_else(|| format!("field '{key}' is not a string"))
+}
+
+fn need_bool(v: &Json, key: &str) -> Result<bool, String> {
+    need(v, key)?
+        .as_bool()
+        .ok_or_else(|| format!("field '{key}' is not a bool"))
+}
+
+fn f64_list(v: &Json, key: &str) -> Result<Vec<f64>, String> {
+    let arr = need(v, key)?
+        .as_arr()
+        .ok_or_else(|| format!("field '{key}' is not an array"))?;
+    arr.iter()
+        .map(|x| x.as_f64().ok_or_else(|| format!("non-number in '{key}'")))
+        .collect()
+}
+
+fn pos_to_json(pos: &[[f64; 3]]) -> Json {
+    let mut flat = Vec::with_capacity(pos.len() * 3);
+    for p in pos {
+        flat.extend_from_slice(p);
+    }
+    Json::arr_f64(&flat)
+}
+
+fn pos_from_json(v: &Json, key: &str) -> Result<Vec<[f64; 3]>, String> {
+    let flat = f64_list(v, key)?;
+    if flat.len() % 3 != 0 {
+        return Err(format!(
+            "field '{key}' has {} values, not a multiple of 3",
+            flat.len()
+        ));
+    }
+    Ok(flat.chunks_exact(3).map(|c| [c[0], c[1], c[2]]).collect())
+}
+
+// ---------------------------------------------------------------------
+// structures + tasks
+// ---------------------------------------------------------------------
+
+fn structure_to_json(st: &Structure) -> Json {
+    let species: Vec<f64> = st.species.iter().map(|&s| s as f64).collect();
+    Json::obj(vec![
+        ("pos", pos_to_json(&st.pos)),
+        ("species", Json::arr_f64(&species)),
+    ])
+}
+
+fn structure_from_json(v: &Json) -> Result<Structure, String> {
+    let pos = pos_from_json(v, "pos")?;
+    let species = f64_list(v, "species")?
+        .into_iter()
+        .map(|s| {
+            if s.is_finite() && s >= 0.0 && s == s.trunc() {
+                Ok(s as usize)
+            } else {
+                Err(format!("bad species value {s}"))
+            }
+        })
+        .collect::<Result<Vec<usize>, String>>()?;
+    Ok(Structure { pos, species })
+}
+
+pub fn task_to_json(t: &Task) -> Json {
+    match t {
+        Task::EnergyOnly { structure } => Json::obj(vec![
+            ("kind", Json::Str("energy".into())),
+            ("structure", structure_to_json(structure)),
+        ]),
+        Task::EnergyForces { structure } => Json::obj(vec![
+            ("kind", Json::Str("energy_forces".into())),
+            ("structure", structure_to_json(structure)),
+        ]),
+        Task::Relax { structure, max_steps } => Json::obj(vec![
+            ("kind", Json::Str("relax".into())),
+            ("structure", structure_to_json(structure)),
+            ("max_steps", Json::Num(*max_steps as f64)),
+        ]),
+        Task::MdRollout { structure, steps, dt } => Json::obj(vec![
+            ("kind", Json::Str("md_rollout".into())),
+            ("structure", structure_to_json(structure)),
+            ("steps", Json::Num(*steps as f64)),
+            ("dt", Json::Num(*dt)),
+        ]),
+        Task::Batch { structures } => Json::obj(vec![
+            ("kind", Json::Str("batch".into())),
+            (
+                "structures",
+                Json::Arr(structures.iter().map(structure_to_json).collect()),
+            ),
+        ]),
+    }
+}
+
+pub fn task_from_json(v: &Json) -> Result<Task, String> {
+    match need_str(v, "kind")? {
+        "energy" => Ok(Task::EnergyOnly {
+            structure: structure_from_json(need(v, "structure")?)?,
+        }),
+        "energy_forces" => Ok(Task::EnergyForces {
+            structure: structure_from_json(need(v, "structure")?)?,
+        }),
+        "relax" => Ok(Task::Relax {
+            structure: structure_from_json(need(v, "structure")?)?,
+            max_steps: need_usize(v, "max_steps")?,
+        }),
+        "md_rollout" => {
+            let dt = need_f64(v, "dt")?;
+            Ok(Task::MdRollout {
+                structure: structure_from_json(need(v, "structure")?)?,
+                steps: need_usize(v, "steps")?,
+                dt,
+            })
+        }
+        "batch" => {
+            let arr = need(v, "structures")?
+                .as_arr()
+                .ok_or("field 'structures' is not an array")?;
+            Ok(Task::Batch {
+                structures: arr
+                    .iter()
+                    .map(structure_from_json)
+                    .collect::<Result<Vec<_>, _>>()?,
+            })
+        }
+        other => Err(format!("unknown task kind '{other}'")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// frames + replies
+// ---------------------------------------------------------------------
+
+fn frame_to_json(f: &Frame) -> Json {
+    Json::obj(vec![
+        ("step", Json::Num(f.step as f64)),
+        ("time", Json::Num(f.time)),
+        ("energy", Json::Num(f.energy)),
+        ("kinetic", Json::Num(f.kinetic)),
+        ("pos", pos_to_json(&f.pos)),
+    ])
+}
+
+fn frame_from_json(v: &Json) -> Result<Frame, String> {
+    Ok(Frame {
+        step: need_usize(v, "step")?,
+        time: need_f64(v, "time")?,
+        energy: need_f64(v, "energy")?,
+        kinetic: need_f64(v, "kinetic")?,
+        pos: pos_from_json(v, "pos")?,
+    })
+}
+
+fn force_response_to_json(r: &ForceResponse) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(r.id as f64)),
+        ("energy", Json::Num(r.energy)),
+        ("forces", pos_to_json(&r.forces)),
+        ("latency_s", Json::Num(r.latency_s)),
+    ])
+}
+
+fn force_response_from_json(v: &Json) -> Result<ForceResponse, String> {
+    Ok(ForceResponse {
+        id: need_u64(v, "id")?,
+        energy: need_f64(v, "energy")?,
+        forces: pos_from_json(v, "forces")?,
+        latency_s: need_f64(v, "latency_s")?,
+    })
+}
+
+fn reply_to_json(r: &Reply) -> Json {
+    match r {
+        Reply::Energy(e) => Json::obj(vec![
+            ("kind", Json::Str("energy".into())),
+            ("id", Json::Num(e.id as f64)),
+            ("energy", Json::Num(e.energy)),
+            ("latency_s", Json::Num(e.latency_s)),
+        ]),
+        Reply::EnergyForces(r) => {
+            let mut j = force_response_to_json(r);
+            if let Json::Obj(m) = &mut j {
+                m.insert(
+                    "kind".to_string(),
+                    Json::Str("energy_forces".into()),
+                );
+            }
+            j
+        }
+        Reply::Relaxed(r) => Json::obj(vec![
+            ("kind", Json::Str("relaxed".into())),
+            ("pos", pos_to_json(&r.pos)),
+            ("energy", Json::Num(r.energy)),
+            ("max_force", Json::Num(r.max_force)),
+            ("steps", Json::Num(r.steps as f64)),
+            ("converged", Json::Bool(r.converged)),
+            ("energy_trace", Json::arr_f64(&r.energy_trace)),
+        ]),
+        Reply::Rollout(s) => Json::obj(vec![
+            ("kind", Json::Str("rollout".into())),
+            ("id", Json::Num(s.id as f64)),
+            ("steps", Json::Num(s.steps as f64)),
+            ("final_pos", pos_to_json(&s.final_pos)),
+            ("final_energy", Json::Num(s.final_energy)),
+        ]),
+        Reply::Batch(rs) => Json::obj(vec![
+            ("kind", Json::Str("batch".into())),
+            (
+                "items",
+                Json::Arr(rs.iter().map(force_response_to_json).collect()),
+            ),
+        ]),
+    }
+}
+
+fn reply_from_json(v: &Json) -> Result<Reply, String> {
+    match need_str(v, "kind")? {
+        "energy" => Ok(Reply::Energy(EnergyOut {
+            id: need_u64(v, "id")?,
+            energy: need_f64(v, "energy")?,
+            latency_s: need_f64(v, "latency_s")?,
+        })),
+        "energy_forces" => {
+            Ok(Reply::EnergyForces(force_response_from_json(v)?))
+        }
+        "relaxed" => Ok(Reply::Relaxed(RelaxResult {
+            pos: pos_from_json(v, "pos")?,
+            energy: need_f64(v, "energy")?,
+            max_force: need_f64(v, "max_force")?,
+            steps: need_usize(v, "steps")?,
+            converged: need_bool(v, "converged")?,
+            energy_trace: f64_list(v, "energy_trace")?,
+        })),
+        "rollout" => Ok(Reply::Rollout(RolloutSummary {
+            id: need_u64(v, "id")?,
+            steps: need_usize(v, "steps")?,
+            final_pos: pos_from_json(v, "final_pos")?,
+            final_energy: need_f64(v, "final_energy")?,
+        })),
+        "batch" => {
+            let arr = need(v, "items")?
+                .as_arr()
+                .ok_or("field 'items' is not an array")?;
+            Ok(Reply::Batch(
+                arr.iter()
+                    .map(force_response_from_json)
+                    .collect::<Result<Vec<_>, _>>()?,
+            ))
+        }
+        other => Err(format!("unknown reply kind '{other}'")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// service errors
+// ---------------------------------------------------------------------
+
+fn error_to_json(e: &ServiceError) -> Json {
+    let (code, msg, retry_after_ms): (&str, String, Option<f64>) = match e {
+        ServiceError::Rejected(m) => ("rejected", m.clone(), None),
+        ServiceError::Overloaded { retry_after } => (
+            "overloaded",
+            String::new(),
+            Some(retry_after.as_secs_f64() * 1e3),
+        ),
+        ServiceError::DeadlineExceeded => {
+            ("deadline", String::new(), None)
+        }
+        ServiceError::Canceled => ("canceled", String::new(), None),
+        ServiceError::Shutdown => ("shutdown", String::new(), None),
+        ServiceError::Dropped(m) => ("dropped", m.clone(), None),
+        ServiceError::Exec(ExecFault::Backend(m)) => {
+            ("exec_backend", m.clone(), None)
+        }
+        ServiceError::Exec(ExecFault::NonFinite(m)) => {
+            ("exec_nonfinite", m.clone(), None)
+        }
+        ServiceError::Exec(ExecFault::BudgetExhausted(m)) => {
+            ("exec_budget", m.clone(), None)
+        }
+        ServiceError::Protocol(m) => ("protocol", m.clone(), None),
+    };
+    let mut pairs = vec![
+        ("code", Json::Str(code.to_string())),
+        ("msg", Json::Str(msg)),
+    ];
+    if let Some(ms) = retry_after_ms {
+        pairs.push(("retry_after_ms", Json::Num(ms)));
+    }
+    Json::obj(pairs)
+}
+
+fn error_from_json(v: &Json) -> Result<ServiceError, String> {
+    let msg = need_str(v, "msg")?.to_string();
+    match need_str(v, "code")? {
+        "rejected" => Ok(ServiceError::Rejected(msg)),
+        "overloaded" => {
+            let ms = v
+                .get("retry_after_ms")
+                .and_then(Json::as_f64)
+                .filter(|m| m.is_finite() && *m >= 0.0)
+                .unwrap_or(50.0);
+            Ok(ServiceError::Overloaded {
+                retry_after: Duration::from_secs_f64(ms / 1e3),
+            })
+        }
+        "deadline" => Ok(ServiceError::DeadlineExceeded),
+        "canceled" => Ok(ServiceError::Canceled),
+        "shutdown" => Ok(ServiceError::Shutdown),
+        "dropped" => Ok(ServiceError::Dropped(msg)),
+        "exec_backend" => {
+            Ok(ServiceError::Exec(ExecFault::Backend(msg)))
+        }
+        "exec_nonfinite" => {
+            Ok(ServiceError::Exec(ExecFault::NonFinite(msg)))
+        }
+        "exec_budget" => {
+            Ok(ServiceError::Exec(ExecFault::BudgetExhausted(msg)))
+        }
+        "protocol" => Ok(ServiceError::Protocol(msg)),
+        other => Err(format!("unknown error code '{other}'")),
+    }
+}
+
+fn health_to_str(h: HealthState) -> &'static str {
+    match h {
+        HealthState::Healthy => "healthy",
+        HealthState::Shedding => "shedding",
+        HealthState::Draining => "draining",
+    }
+}
+
+fn health_from_str(s: &str) -> Result<HealthState, String> {
+    match s {
+        "healthy" => Ok(HealthState::Healthy),
+        "shedding" => Ok(HealthState::Shedding),
+        "draining" => Ok(HealthState::Draining),
+        other => Err(format!("unknown health state '{other}'")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// top-level messages
+// ---------------------------------------------------------------------
+
+pub fn encode_client(m: &ClientMsg) -> String {
+    let j = match m {
+        ClientMsg::Hello { version, name } => Json::obj(vec![
+            ("type", Json::Str("hello".into())),
+            ("version", Json::Num(*version as f64)),
+            ("name", Json::Str(name.clone())),
+        ]),
+        ClientMsg::Submit { seq, deadline_ms, model, task } => {
+            let mut pairs = vec![
+                ("type", Json::Str("submit".into())),
+                ("seq", Json::Num(*seq as f64)),
+                ("task", task_to_json(task)),
+            ];
+            if let Some(d) = deadline_ms {
+                pairs.push(("deadline_ms", Json::Num(*d as f64)));
+            }
+            if let Some(name) = model {
+                pairs.push(("model", Json::Str(name.clone())));
+            }
+            Json::obj(pairs)
+        }
+        ClientMsg::Cancel { seq } => Json::obj(vec![
+            ("type", Json::Str("cancel".into())),
+            ("seq", Json::Num(*seq as f64)),
+        ]),
+        ClientMsg::Ping => Json::obj(vec![("type", Json::Str("ping".into()))]),
+        ClientMsg::Drain => {
+            Json::obj(vec![("type", Json::Str("drain".into()))])
+        }
+        ClientMsg::Stats => {
+            Json::obj(vec![("type", Json::Str("stats".into()))])
+        }
+        ClientMsg::Bye => Json::obj(vec![("type", Json::Str("bye".into()))]),
+    };
+    j.to_string()
+}
+
+pub fn decode_client(s: &str) -> Result<ClientMsg, WireError> {
+    decode_client_json(s).map_err(WireError::Codec)
+}
+
+fn decode_client_json(s: &str) -> Result<ClientMsg, String> {
+    let v = json::parse_limited(s, &Limits::default())
+        .map_err(|e| e.to_string())?;
+    match need_str(&v, "type")? {
+        "hello" => Ok(ClientMsg::Hello {
+            version: need_u64(&v, "version")?,
+            name: need_str(&v, "name")?.to_string(),
+        }),
+        "submit" => {
+            let deadline_ms = match v.get("deadline_ms") {
+                None | Some(Json::Null) => None,
+                Some(d) => {
+                    let n = d
+                        .as_f64()
+                        .filter(|n| {
+                            n.is_finite() && *n >= 0.0 && *n == n.trunc()
+                        })
+                        .ok_or("bad 'deadline_ms'")?;
+                    Some(n as u64)
+                }
+            };
+            let model = match v.get("model") {
+                None | Some(Json::Null) => None,
+                Some(m) => {
+                    Some(m.as_str().ok_or("bad 'model'")?.to_string())
+                }
+            };
+            Ok(ClientMsg::Submit {
+                seq: need_u64(&v, "seq")?,
+                deadline_ms,
+                model,
+                task: task_from_json(need(&v, "task")?)?,
+            })
+        }
+        "cancel" => Ok(ClientMsg::Cancel { seq: need_u64(&v, "seq")? }),
+        "ping" => Ok(ClientMsg::Ping),
+        "drain" => Ok(ClientMsg::Drain),
+        "stats" => Ok(ClientMsg::Stats),
+        "bye" => Ok(ClientMsg::Bye),
+        other => Err(format!("unknown client message type '{other}'")),
+    }
+}
+
+pub fn encode_server(m: &ServerMsg) -> String {
+    let j = match m {
+        ServerMsg::HelloAck { version, max_atoms, buckets } => {
+            let b: Vec<f64> = buckets.iter().map(|&x| x as f64).collect();
+            Json::obj(vec![
+                ("type", Json::Str("hello_ack".into())),
+                ("version", Json::Num(*version as f64)),
+                ("max_atoms", Json::Num(*max_atoms as f64)),
+                ("buckets", Json::arr_f64(&b)),
+            ])
+        }
+        ServerMsg::Frame { seq, frame } => Json::obj(vec![
+            ("type", Json::Str("frame".into())),
+            ("seq", Json::Num(*seq as f64)),
+            ("frame", frame_to_json(frame)),
+        ]),
+        ServerMsg::Done { seq, result } => {
+            let mut pairs = vec![
+                ("type", Json::Str("done".into())),
+                ("seq", Json::Num(*seq as f64)),
+            ];
+            match result {
+                Ok(r) => pairs.push(("ok", reply_to_json(r))),
+                Err(e) => pairs.push(("err", error_to_json(e))),
+            }
+            Json::obj(pairs)
+        }
+        ServerMsg::Pong { health, queue_depth } => Json::obj(vec![
+            ("type", Json::Str("pong".into())),
+            ("health", Json::Str(health_to_str(*health).to_string())),
+            ("queue_depth", Json::Num(*queue_depth as f64)),
+        ]),
+        ServerMsg::StatsAck { metrics } => Json::obj(vec![
+            ("type", Json::Str("stats_ack".into())),
+            ("metrics", metrics.to_json()),
+        ]),
+    };
+    j.to_string()
+}
+
+pub fn decode_server(s: &str) -> Result<ServerMsg, WireError> {
+    decode_server_json(s).map_err(WireError::Codec)
+}
+
+fn decode_server_json(s: &str) -> Result<ServerMsg, String> {
+    let v = json::parse_limited(s, &Limits::default())
+        .map_err(|e| e.to_string())?;
+    match need_str(&v, "type")? {
+        "hello_ack" => {
+            let buckets = f64_list(&v, "buckets")?
+                .into_iter()
+                .map(|b| {
+                    if b.is_finite() && b >= 0.0 && b == b.trunc() {
+                        Ok(b as usize)
+                    } else {
+                        Err(format!("bad bucket width {b}"))
+                    }
+                })
+                .collect::<Result<Vec<usize>, String>>()?;
+            Ok(ServerMsg::HelloAck {
+                version: need_u64(&v, "version")?,
+                max_atoms: need_usize(&v, "max_atoms")?,
+                buckets,
+            })
+        }
+        "frame" => Ok(ServerMsg::Frame {
+            seq: need_u64(&v, "seq")?,
+            frame: frame_from_json(need(&v, "frame")?)?,
+        }),
+        "done" => {
+            let seq = need_u64(&v, "seq")?;
+            let result = if let Some(ok) = v.get("ok") {
+                Ok(reply_from_json(ok)?)
+            } else if let Some(err) = v.get("err") {
+                Err(error_from_json(err)?)
+            } else {
+                return Err("done without 'ok' or 'err'".to_string());
+            };
+            Ok(ServerMsg::Done { seq, result })
+        }
+        "pong" => Ok(ServerMsg::Pong {
+            health: health_from_str(need_str(&v, "health")?)?,
+            queue_depth: need_usize(&v, "queue_depth")?,
+        }),
+        "stats_ack" => Ok(ServerMsg::StatsAck {
+            metrics: MetricsSnapshot::from_json(need(&v, "metrics")?)?,
+        }),
+        other => Err(format!("unknown server message type '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn structure(n: usize) -> Structure {
+        Structure {
+            pos: (0..n).map(|i| [i as f64 * 1.5, 0.25, -2.0]).collect(),
+            species: (0..n).map(|i| i % 3).collect(),
+        }
+    }
+
+    fn roundtrip_client(m: ClientMsg) -> ClientMsg {
+        decode_client(&encode_client(&m)).expect("client roundtrip")
+    }
+
+    fn roundtrip_server(m: ServerMsg) -> ServerMsg {
+        decode_server(&encode_server(&m)).expect("server roundtrip")
+    }
+
+    #[test]
+    fn every_task_kind_roundtrips() {
+        let tasks = vec![
+            Task::EnergyOnly { structure: structure(2) },
+            Task::EnergyForces { structure: structure(3) },
+            Task::Relax { structure: structure(2), max_steps: 50 },
+            Task::MdRollout { structure: structure(2), steps: 9, dt: 0.002 },
+            Task::Batch { structures: vec![structure(1), structure(4)] },
+        ];
+        for task in tasks {
+            let m = roundtrip_client(ClientMsg::Submit {
+                seq: 7,
+                deadline_ms: Some(250),
+                model: Some("prod".to_string()),
+                task: task.clone(),
+            });
+            match m {
+                ClientMsg::Submit { seq, deadline_ms, model, task: got } => {
+                    assert_eq!(seq, 7);
+                    assert_eq!(deadline_ms, Some(250));
+                    assert_eq!(model.as_deref(), Some("prod"));
+                    assert_eq!(got.label(), task.label());
+                    assert_eq!(got.n_atoms_max(), task.n_atoms_max());
+                    let (a, b) = (got.structures(), task.structures());
+                    assert_eq!(a.len(), b.len());
+                    for (x, y) in a.iter().zip(b.iter()) {
+                        assert_eq!(x.pos, y.pos);
+                        assert_eq!(x.species, y.species);
+                    }
+                }
+                other => panic!("expected Submit, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn submit_without_options_roundtrips() {
+        match roundtrip_client(ClientMsg::Submit {
+            seq: 1,
+            deadline_ms: None,
+            model: None,
+            task: Task::EnergyOnly { structure: structure(1) },
+        }) {
+            ClientMsg::Submit { deadline_ms: None, model: None, .. } => {}
+            other => panic!("options must stay None: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_messages_roundtrip() {
+        assert!(matches!(
+            roundtrip_client(ClientMsg::Hello {
+                version: 1,
+                name: "lt-3".to_string()
+            }),
+            ClientMsg::Hello { version: 1, .. }
+        ));
+        assert!(matches!(
+            roundtrip_client(ClientMsg::Cancel { seq: 12 }),
+            ClientMsg::Cancel { seq: 12 }
+        ));
+        assert!(matches!(roundtrip_client(ClientMsg::Ping), ClientMsg::Ping));
+        assert!(matches!(roundtrip_client(ClientMsg::Drain), ClientMsg::Drain));
+        assert!(matches!(roundtrip_client(ClientMsg::Stats), ClientMsg::Stats));
+        assert!(matches!(roundtrip_client(ClientMsg::Bye), ClientMsg::Bye));
+    }
+
+    #[test]
+    fn every_reply_kind_roundtrips() {
+        let replies = vec![
+            Reply::Energy(EnergyOut { id: 3, energy: -7.25, latency_s: 0.01 }),
+            Reply::EnergyForces(ForceResponse {
+                id: 4,
+                energy: -1.5,
+                forces: vec![[0.1, -0.5, 2.0]; 3],
+                latency_s: 0.02,
+            }),
+            Reply::Relaxed(RelaxResult {
+                pos: vec![[0.0, 1.0, 2.0]; 2],
+                energy: -3.0,
+                max_force: 0.001,
+                steps: 17,
+                converged: true,
+                energy_trace: vec![-1.0, -2.0, -3.0],
+            }),
+            Reply::Rollout(RolloutSummary {
+                id: 5,
+                steps: 100,
+                final_pos: vec![[1.0, 1.0, 1.0]],
+                final_energy: -0.5,
+            }),
+            Reply::Batch(vec![ForceResponse {
+                id: 6,
+                energy: 0.25,
+                forces: vec![[0.0, 0.0, 0.0]],
+                latency_s: 0.005,
+            }]),
+        ];
+        for reply in replies {
+            match roundtrip_server(ServerMsg::Done {
+                seq: 9,
+                result: Ok(reply.clone()),
+            }) {
+                ServerMsg::Done { seq: 9, result: Ok(got) } => {
+                    assert_eq!(format!("{got:?}"), format!("{reply:?}"));
+                }
+                other => panic!("expected Done(Ok), got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_error_code_roundtrips() {
+        let errors = vec![
+            ServiceError::Rejected("too big".to_string()),
+            ServiceError::Overloaded {
+                retry_after: Duration::from_millis(75),
+            },
+            ServiceError::DeadlineExceeded,
+            ServiceError::Canceled,
+            ServiceError::Shutdown,
+            ServiceError::Dropped("worker died".to_string()),
+            ServiceError::Exec(ExecFault::Backend("no model".to_string())),
+            ServiceError::Exec(ExecFault::NonFinite("nan".to_string())),
+            ServiceError::Exec(ExecFault::BudgetExhausted("5".to_string())),
+            ServiceError::Protocol("shape".to_string()),
+        ];
+        for e in errors {
+            match roundtrip_server(ServerMsg::Done {
+                seq: 2,
+                result: Err(e.clone()),
+            }) {
+                ServerMsg::Done { result: Err(got), .. } => {
+                    assert_eq!(got, e)
+                }
+                other => panic!("expected Done(Err), got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_frames_and_probes_roundtrip() {
+        match roundtrip_server(ServerMsg::Frame {
+            seq: 4,
+            frame: Frame {
+                step: 2,
+                time: 0.006,
+                energy: -1.25,
+                kinetic: 0.75,
+                pos: vec![[1.0, 2.0, 3.0]],
+            },
+        }) {
+            ServerMsg::Frame { seq: 4, frame } => {
+                assert_eq!(frame.step, 2);
+                assert_eq!(frame.pos, vec![[1.0, 2.0, 3.0]]);
+            }
+            other => panic!("expected Frame, got {other:?}"),
+        }
+        for h in
+            [HealthState::Healthy, HealthState::Shedding, HealthState::Draining]
+        {
+            match roundtrip_server(ServerMsg::Pong {
+                health: h,
+                queue_depth: 11,
+            }) {
+                ServerMsg::Pong { health, queue_depth: 11 } => {
+                    assert_eq!(health, h)
+                }
+                other => panic!("expected Pong, got {other:?}"),
+            }
+        }
+        match roundtrip_server(ServerMsg::HelloAck {
+            version: 1,
+            max_atoms: 256,
+            buckets: vec![32, 64, 256],
+        }) {
+            ServerMsg::HelloAck { version: 1, max_atoms: 256, buckets } => {
+                assert_eq!(buckets, vec![32, 64, 256])
+            }
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+        let mut snap = MetricsSnapshot::default();
+        snap.requests = 10;
+        snap.responses = 10;
+        snap.p99_ns = 1.5e6;
+        match roundtrip_server(ServerMsg::StatsAck { metrics: snap }) {
+            ServerMsg::StatsAck { metrics } => assert_eq!(metrics, snap),
+            other => panic!("expected StatsAck, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_are_typed_codec_errors() {
+        for bad in [
+            "",
+            "not json",
+            "{}",
+            "{\"type\":\"nope\"}",
+            "{\"type\":\"submit\",\"seq\":1}",
+            "{\"type\":\"submit\",\"seq\":-4,\"task\":{}}",
+            "{\"type\":\"submit\",\"seq\":1,\"task\":{\"kind\":\"energy\",\
+             \"structure\":{\"pos\":[1,2],\"species\":[0]}}}",
+        ] {
+            assert!(
+                matches!(decode_client(bad), Err(WireError::Codec(_))),
+                "input {bad:?} must be a codec error"
+            );
+        }
+        for bad in ["", "[]", "{\"type\":\"done\",\"seq\":1}"] {
+            assert!(matches!(decode_server(bad), Err(WireError::Codec(_))));
+        }
+    }
+}

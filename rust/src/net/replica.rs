@@ -1,0 +1,342 @@
+//! The replica: one `coordinator::Service` behind TCP and/or
+//! Unix-domain listeners.
+//!
+//! Each connection gets a handler thread (blocking reads) plus one
+//! lightweight forwarder thread per in-flight submission, pumping the
+//! service's reply channel into wire frames.  The server-side contract
+//! mirrors the in-process one:
+//!
+//! * every accepted `submit` gets exactly one `Done` (reply-on-drop
+//!   travels through the forwarder);
+//! * a wire `cancel` — or the connection dying, including a handler
+//!   panic injected via the `net.replica.crash` failpoint — sets the
+//!   cooperative cancel flag on every in-flight service ticket, so a
+//!   disconnected client never leaves an orphaned relaxation or
+//!   rollout burning a worker.
+
+use std::collections::HashMap;
+use std::io;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::coordinator::request::ReplyMsg;
+use crate::coordinator::service::{Client, Service};
+use crate::coordinator::ServiceError;
+use crate::util::failpoint;
+
+use super::frame::{read_frame, write_frame, WireError, VERSION};
+use super::proto::{decode_client, encode_server, ClientMsg, ServerMsg};
+use super::{poke, spawn_acceptor, Addr, Conn, Listener};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A connection must say Hello within this budget or it is dropped —
+/// an idle port-scanner can't pin a handler thread forever.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// A serving replica: the owned [`Service`] plus its listeners.
+pub struct Replica {
+    service: Option<Service>,
+    client: Client,
+    stop: Arc<AtomicBool>,
+    bound: Vec<Addr>,
+    acceptors: Vec<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<Conn>>>,
+}
+
+impl Replica {
+    /// Bind every address and start serving `service`.  Returns once
+    /// the listeners are live; the actual bound addresses (TCP port 0
+    /// resolved) are in [`Replica::bound`].
+    pub fn serve(
+        service: Service, addrs: &[Addr], name: &str,
+    ) -> io::Result<Replica> {
+        let client = service.client();
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<Conn>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut bound = Vec::new();
+        let mut acceptors = Vec::new();
+        for addr in addrs {
+            let (listener, actual) = Listener::bind(addr)?;
+            let handler: Arc<dyn Fn(Conn) + Send + Sync> = {
+                let client = client.clone();
+                let conns = conns.clone();
+                Arc::new(move |conn: Conn| {
+                    handle_conn(conn, client.clone(), conns.clone())
+                })
+            };
+            acceptors.push(spawn_acceptor(
+                listener,
+                stop.clone(),
+                format!("replica-{name}"),
+                handler,
+            ));
+            bound.push(actual);
+        }
+        Ok(Replica {
+            service: Some(service),
+            client,
+            stop,
+            bound,
+            acceptors,
+            conns,
+        })
+    }
+
+    /// The addresses actually bound (TCP port 0 resolved to the
+    /// kernel-assigned port).
+    pub fn bound(&self) -> &[Addr] {
+        &self.bound
+    }
+
+    /// An in-process submission handle onto the served service — what
+    /// the conformance tests use to observe server-side effects
+    /// (canceled counters, queue depth) of wire activity.
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    /// Stop admitting new work; queued work keeps executing.
+    pub fn drain(&self) {
+        self.client.drain();
+    }
+
+    /// Stop accepting, sever every live connection (in-flight wire
+    /// tickets resolve via reply-on-drop), then shut the service down.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for addr in &self.bound {
+            poke(addr);
+        }
+        for h in self.acceptors.drain(..) {
+            let _ = h.join();
+        }
+        for conn in lock(&self.conns).drain(..) {
+            conn.shutdown_both();
+        }
+        if let Some(service) = self.service.take() {
+            service.shutdown();
+        }
+        // unbound unix socket files should not litter the filesystem
+        for addr in &self.bound {
+            if let Addr::Unix(p) = addr {
+                let _ = std::fs::remove_file(p);
+            }
+        }
+    }
+}
+
+/// Per-connection state: one handler thread, many forwarders.
+fn handle_conn(conn: Conn, client: Client, conns: Arc<Mutex<Vec<Conn>>>) {
+    // register a handle for Replica::shutdown to sever
+    if let Ok(c) = conn.try_clone() {
+        lock(&conns).push(c);
+    }
+    let teardown_conn = match conn.try_clone() {
+        Ok(c) => c,
+        Err(_) => {
+            conn.shutdown_both();
+            return;
+        }
+    };
+    // every in-flight submission's cooperative cancel flag, keyed by
+    // wire seq — the one structure teardown needs
+    let inflight: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        conn_loop(conn, &client, &inflight)
+    }));
+    // teardown runs whether the loop exited cleanly, errored, or
+    // panicked (net.replica.crash): release every in-flight service
+    // ticket so a dead connection cannot orphan long tasks
+    for (_, cancel) in lock(&inflight).drain() {
+        cancel.store(true, Ordering::Relaxed);
+    }
+    teardown_conn.shutdown_both();
+    if result.is_err() {
+        // the panic already printed; the connection died with it
+    }
+}
+
+fn conn_loop(
+    mut conn: Conn, client: &Client,
+    inflight: &Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
+) {
+    // -------- handshake --------
+    let _ = conn.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+    let hello = match read_frame(&mut conn).and_then(|p| decode_client(&p)) {
+        Ok(ClientMsg::Hello { version, name: _ }) => version,
+        _ => return,
+    };
+    let writer = match conn.try_clone() {
+        Ok(c) => Arc::new(Mutex::new(c)),
+        Err(_) => return,
+    };
+    if hello != VERSION as u64 {
+        // answer with our version so the client can report the
+        // mismatch, then hang up
+        let _ = send(&writer, &ServerMsg::HelloAck {
+            version: VERSION as u64,
+            max_atoms: 0,
+            buckets: Vec::new(),
+        });
+        return;
+    }
+    if send(&writer, &ServerMsg::HelloAck {
+        version: VERSION as u64,
+        max_atoms: client.max_atoms(),
+        buckets: client.bucket_widths(),
+    })
+    .is_err()
+    {
+        return;
+    }
+    let _ = conn.set_read_timeout(None);
+
+    // -------- message loop --------
+    loop {
+        let msg = match read_frame(&mut conn) {
+            Ok(p) => match decode_client(&p) {
+                Ok(m) => m,
+                // a malformed payload is a protocol violation; there is
+                // no seq to correlate an error to, so hang up (the
+                // client surfaces a typed teardown)
+                Err(_) => return,
+            },
+            Err(WireError::Closed) => return,
+            Err(_) => return,
+        };
+        match msg {
+            ClientMsg::Submit { seq, deadline_ms, model, task } => {
+                // chaos site: a `panic` policy here simulates the
+                // replica crashing mid-submit — before the task is
+                // enqueued, so the failure is clean from the service's
+                // point of view and the front door can safely retry
+                if let Some(failpoint::Fault::Error(_)) =
+                    failpoint::check("net.replica.crash")
+                {
+                    return;
+                }
+                let deadline = deadline_ms.map(Duration::from_millis);
+                match client.submit_task(task, deadline, model) {
+                    Ok(raw) => {
+                        lock(inflight).insert(seq, raw.cancel.clone());
+                        spawn_forwarder(
+                            seq,
+                            raw.rx,
+                            raw.cancel,
+                            writer.clone(),
+                            inflight.clone(),
+                        );
+                    }
+                    Err(e) => {
+                        if send(&writer, &ServerMsg::Done {
+                            seq,
+                            result: Err(e),
+                        })
+                        .is_err()
+                        {
+                            return;
+                        }
+                    }
+                }
+            }
+            ClientMsg::Cancel { seq } => {
+                if let Some(flag) = lock(inflight).get(&seq) {
+                    flag.store(true, Ordering::Relaxed);
+                }
+            }
+            ClientMsg::Ping => {
+                if send(&writer, &ServerMsg::Pong {
+                    health: client.health(),
+                    queue_depth: client.queue_depth(),
+                })
+                .is_err()
+                {
+                    return;
+                }
+            }
+            ClientMsg::Stats => {
+                if send(&writer, &ServerMsg::StatsAck {
+                    metrics: client.metrics().snapshot(),
+                })
+                .is_err()
+                {
+                    return;
+                }
+            }
+            ClientMsg::Drain => client.drain(),
+            ClientMsg::Bye => return,
+            ClientMsg::Hello { .. } => {
+                // a second hello is a client bug; ignore it
+            }
+        }
+    }
+}
+
+fn send(writer: &Arc<Mutex<Conn>>, msg: &ServerMsg) -> Result<(), WireError> {
+    let mut w = lock(writer);
+    write_frame(&mut *w, &encode_server(msg))
+}
+
+/// Pump one submission's reply channel into wire frames.  Exactly one
+/// `Done` goes out per accepted submit (reply-on-drop upstream
+/// guarantees the channel always ends with one); if the client becomes
+/// unreachable mid-stream, the task is cooperatively canceled so it
+/// stops burning worker time.
+fn spawn_forwarder(
+    seq: u64, rx: std::sync::mpsc::Receiver<ReplyMsg>,
+    cancel: Arc<AtomicBool>, writer: Arc<Mutex<Conn>>,
+    inflight: Arc<Mutex<HashMap<u64, Arc<AtomicBool>>>>,
+) {
+    let _ = std::thread::Builder::new()
+        .name(format!("fwd-{seq}"))
+        .spawn(move || {
+            let mut client_gone = false;
+            loop {
+                match rx.recv() {
+                    Ok(ReplyMsg::Frame(f)) => {
+                        if client_gone {
+                            continue; // draining to Done
+                        }
+                        if send(&writer, &ServerMsg::Frame { seq, frame: f })
+                            .is_err()
+                        {
+                            client_gone = true;
+                            cancel.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    Ok(ReplyMsg::Done(result)) => {
+                        if !client_gone {
+                            let _ = send(&writer, &ServerMsg::Done {
+                                seq,
+                                result,
+                            });
+                        }
+                        break;
+                    }
+                    Err(_) => {
+                        // channel died without Done — upstream
+                        // reply-on-drop should make this unreachable,
+                        // but the wire contract still holds
+                        if !client_gone {
+                            let _ = send(&writer, &ServerMsg::Done {
+                                seq,
+                                result: Err(ServiceError::Dropped(
+                                    "reply channel closed without a final \
+                                     message"
+                                        .to_string(),
+                                )),
+                            });
+                        }
+                        break;
+                    }
+                }
+            }
+            lock(&inflight).remove(&seq);
+        });
+}

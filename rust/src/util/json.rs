@@ -1,7 +1,17 @@
 //! Minimal JSON: parser + writer (serde is unavailable offline).
 //!
-//! Covers exactly what the repo needs: the artifact `manifest.json`, the
-//! golden cross-language test vectors, and experiment result files.
+//! Covers what the repo needs: the artifact `manifest.json`, the golden
+//! cross-language test vectors, experiment result files — and, since the
+//! `net` subsystem, the **wire codec** for the multi-process serving
+//! protocol.  That last role means the parser runs against untrusted
+//! bytes, so it is hardened: [`parse_limited`] enforces a nesting-depth
+//! cap (the recursive-descent parser must never overflow the stack on
+//! `[[[[...`) and a document-size cap, and every failure is a typed
+//! [`JsonError`] — truncated input is distinguished from malformed
+//! input, and nothing panics.  The legacy [`parse`] keeps its
+//! `Result<Json, String>` signature but now delegates to the limited
+//! parser with [`Limits::default`], so every existing caller gets the
+//! stack-overflow protection for free.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -46,6 +56,13 @@ impl Json {
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
@@ -145,15 +162,82 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
-/// Parse a JSON document.
+// ---------------------------------------------------------------------
+// hardened parsing
+// ---------------------------------------------------------------------
+
+/// Typed parse failure, so untrusted-input callers (the wire codec) can
+/// tell a short read from garbage without string matching.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonError {
+    /// nesting exceeded `Limits::max_depth` (recursion guard)
+    TooDeep { max_depth: usize },
+    /// the document is longer than `Limits::max_bytes`
+    TooLarge { len: usize, max_bytes: usize },
+    /// the input ended mid-value (torn frame / short read)
+    Truncated(String),
+    /// malformed JSON syntax
+    Syntax(String),
+}
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::TooDeep { max_depth } => {
+                write!(f, "nesting deeper than the {max_depth}-level limit")
+            }
+            JsonError::TooLarge { len, max_bytes } => write!(
+                f,
+                "document of {len} bytes exceeds the {max_bytes}-byte limit"
+            ),
+            JsonError::Truncated(m) => write!(f, "truncated document: {m}"),
+            JsonError::Syntax(m) => write!(f, "syntax error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+/// Resource limits for parsing untrusted documents.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// maximum array/object nesting depth
+    pub max_depth: usize,
+    /// maximum document length in bytes
+    pub max_bytes: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        // 128 levels is far beyond any document this repo produces and
+        // far below what would threaten the thread stack; 256 MiB
+        // accommodates the largest Batch reply while refusing an
+        // adversarial length claim
+        Limits { max_depth: 128, max_bytes: 256 << 20 }
+    }
+}
+
+/// Parse a JSON document (default [`Limits`]; string errors).
 pub fn parse(src: &str) -> Result<Json, String> {
+    parse_limited(src, &Limits::default()).map_err(|e| e.to_string())
+}
+
+/// Parse a JSON document from untrusted input: typed errors, no panics,
+/// bounded depth and size.
+pub fn parse_limited(src: &str, limits: &Limits) -> Result<Json, JsonError> {
     let bytes = src.as_bytes();
-    let mut p = Parser { b: bytes, i: 0 };
+    if bytes.len() > limits.max_bytes {
+        return Err(JsonError::TooLarge {
+            len: bytes.len(),
+            max_bytes: limits.max_bytes,
+        });
+    }
+    let mut p = Parser { b: bytes, i: 0, depth: 0, max_depth: limits.max_depth };
     p.ws();
     let v = p.value()?;
     p.ws();
     if p.i != bytes.len() {
-        return Err(format!("trailing data at byte {}", p.i));
+        return Err(JsonError::Syntax(format!("trailing data at byte {}", p.i)));
     }
     Ok(v)
 }
@@ -161,6 +245,8 @@ pub fn parse(src: &str) -> Result<Json, String> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
+    max_depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -176,20 +262,32 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
-        if self.peek() == Some(c) {
-            self.i += 1;
-            Ok(())
-        } else {
-            Err(format!(
-                "expected '{}' at byte {} (got {:?})",
-                c as char, self.i,
-                self.peek().map(|x| x as char)
-            ))
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        match self.peek() {
+            Some(got) if got == c => {
+                self.i += 1;
+                Ok(())
+            }
+            Some(got) => Err(JsonError::Syntax(format!(
+                "expected '{}' at byte {} (got '{}')",
+                c as char, self.i, got as char
+            ))),
+            None => Err(JsonError::Truncated(format!(
+                "expected '{}' at byte {} (end of input)",
+                c as char, self.i
+            ))),
         }
     }
 
-    fn value(&mut self) -> Result<Json, String> {
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > self.max_depth {
+            return Err(JsonError::TooDeep { max_depth: self.max_depth });
+        }
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
         match self.peek() {
             Some(b'{') => self.object(),
             Some(b'[') => self.array(),
@@ -198,20 +296,29 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
             Some(_) => self.number(),
-            None => Err("unexpected end of input".into()),
+            None => {
+                Err(JsonError::Truncated("unexpected end of input".to_string()))
+            }
         }
     }
 
-    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
-        if self.b[self.i..].starts_with(word.as_bytes()) {
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
+        let rest = &self.b[self.i..];
+        if rest.starts_with(word.as_bytes()) {
             self.i += word.len();
             Ok(v)
+        } else if rest.len() < word.len()
+            && word.as_bytes().starts_with(rest)
+        {
+            Err(JsonError::Truncated(format!(
+                "input ends inside the literal '{word}'"
+            )))
         } else {
-            Err(format!("bad literal at byte {}", self.i))
+            Err(JsonError::Syntax(format!("bad literal at byte {}", self.i)))
         }
     }
 
-    fn number(&mut self) -> Result<Json, String> {
+    fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.i;
         while self.i < self.b.len()
             && matches!(self.b[self.i],
@@ -223,10 +330,12 @@ impl<'a> Parser<'a> {
             .ok()
             .and_then(|s| s.parse::<f64>().ok())
             .map(Json::Num)
-            .ok_or_else(|| format!("bad number at byte {start}"))
+            .ok_or_else(|| {
+                JsonError::Syntax(format!("bad number at byte {start}"))
+            })
     }
 
-    fn string(&mut self) -> Result<String, String> {
+    fn string(&mut self) -> Result<String, JsonError> {
         self.expect(b'"')?;
         let mut out = String::new();
         loop {
@@ -250,16 +359,35 @@ impl<'a> Parser<'a> {
                             let hex = self
                                 .b
                                 .get(self.i + 1..self.i + 5)
-                                .ok_or("bad \\u escape")?;
-                            let code = u32::from_str_radix(
-                                std::str::from_utf8(hex).map_err(|e| e.to_string())?,
-                                16,
-                            )
-                            .map_err(|e| e.to_string())?;
+                                .ok_or_else(|| {
+                                    JsonError::Truncated(
+                                        "input ends inside a \\u escape"
+                                            .to_string(),
+                                    )
+                                })?;
+                            let code = std::str::from_utf8(hex)
+                                .ok()
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .ok_or_else(|| {
+                                    JsonError::Syntax(format!(
+                                        "bad \\u escape at byte {}",
+                                        self.i
+                                    ))
+                                })?;
                             out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
                             self.i += 4;
                         }
-                        _ => return Err("bad escape".into()),
+                        Some(c) => {
+                            return Err(JsonError::Syntax(format!(
+                                "bad escape '\\{}' at byte {}",
+                                c as char, self.i
+                            )))
+                        }
+                        None => {
+                            return Err(JsonError::Truncated(
+                                "input ends inside an escape".to_string(),
+                            ))
+                        }
                     }
                     self.i += 1;
                 }
@@ -273,21 +401,28 @@ impl<'a> Parser<'a> {
                         self.i += 1;
                     }
                     out.push_str(
-                        std::str::from_utf8(&self.b[start..self.i])
-                            .map_err(|e| e.to_string())?,
+                        std::str::from_utf8(&self.b[start..self.i]).map_err(
+                            |e| JsonError::Syntax(format!("bad UTF-8: {e}")),
+                        )?,
                     );
                 }
-                None => return Err("unterminated string".into()),
+                None => {
+                    return Err(JsonError::Truncated(
+                        "unterminated string".to_string(),
+                    ))
+                }
             }
         }
     }
 
-    fn array(&mut self) -> Result<Json, String> {
+    fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut v = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -298,19 +433,33 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
-                _ => return Err(format!("bad array at byte {}", self.i)),
+                Some(_) => {
+                    return Err(JsonError::Syntax(format!(
+                        "bad array at byte {}",
+                        self.i
+                    )))
+                }
+                None => {
+                    return Err(JsonError::Truncated(format!(
+                        "input ends inside an array at byte {}",
+                        self.i
+                    )))
+                }
             }
         }
     }
 
-    fn object(&mut self) -> Result<Json, String> {
+    fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -326,9 +475,21 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
-                _ => return Err(format!("bad object at byte {}", self.i)),
+                Some(_) => {
+                    return Err(JsonError::Syntax(format!(
+                        "bad object at byte {}",
+                        self.i
+                    )))
+                }
+                None => {
+                    return Err(JsonError::Truncated(format!(
+                        "input ends inside an object at byte {}",
+                        self.i
+                    )))
+                }
             }
         }
     }
@@ -381,5 +542,67 @@ mod tests {
     fn f64_vec() {
         let v = parse("[1, 2, 3.5]").unwrap();
         assert_eq!(v.as_f64_vec().unwrap(), vec![1.0, 2.0, 3.5]);
+    }
+
+    #[test]
+    fn depth_limit_is_enforced_not_overflowed() {
+        // a pathological `[[[[...` must come back as a typed TooDeep,
+        // never as a stack overflow (this is the wire-codec guarantee)
+        let deep = "[".repeat(100_000);
+        match parse_limited(&deep, &Limits::default()) {
+            Err(JsonError::TooDeep { max_depth }) => {
+                assert_eq!(max_depth, Limits::default().max_depth)
+            }
+            other => panic!("expected TooDeep, got {other:?}"),
+        }
+        // documents AT the limit parse fine
+        let n = 16usize;
+        let ok = format!("{}{}", "[".repeat(n), "]".repeat(n));
+        let lim = Limits { max_depth: n, max_bytes: 1 << 20 };
+        assert!(parse_limited(&ok, &lim).is_ok());
+        let over = format!("{}{}", "[".repeat(n + 1), "]".repeat(n + 1));
+        assert!(matches!(
+            parse_limited(&over, &lim),
+            Err(JsonError::TooDeep { .. })
+        ));
+    }
+
+    #[test]
+    fn size_limit_is_enforced() {
+        let lim = Limits { max_depth: 8, max_bytes: 16 };
+        let doc = "\"0123456789abcdef0123\"";
+        match parse_limited(doc, &lim) {
+            Err(JsonError::TooLarge { len, max_bytes }) => {
+                assert_eq!(len, doc.len());
+                assert_eq!(max_bytes, 16);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_is_typed_distinct_from_syntax() {
+        // torn-frame shapes: every prefix cut is Truncated, not Syntax
+        for doc in [
+            "{\"a\": [1, 2",
+            "{\"a\"",
+            "\"unterminated",
+            "tru",
+            "[1, 2,",
+            "\"esc\\",
+            "\"esc\\u00",
+        ] {
+            match parse_limited(doc, &Limits::default()) {
+                Err(JsonError::Truncated(_)) => {}
+                other => panic!("{doc:?}: expected Truncated, got {other:?}"),
+            }
+        }
+        // garbage (not a prefix of a valid doc) stays Syntax
+        for doc in ["[1,]", "{\"a\" 1}", "@", "truce"] {
+            match parse_limited(doc, &Limits::default()) {
+                Err(JsonError::Syntax(_)) => {}
+                other => panic!("{doc:?}: expected Syntax, got {other:?}"),
+            }
+        }
     }
 }

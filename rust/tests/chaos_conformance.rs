@@ -34,6 +34,9 @@ use gaunt_tp::coordinator::{
     Service, SupervisorConfig,
 };
 use gaunt_tp::model::{Model, ModelConfig};
+use gaunt_tp::net::{
+    temp_socket_path, Addr, FrontDoor, FrontDoorConfig, NetClient, Replica,
+};
 use gaunt_tp::util::failpoint;
 use gaunt_tp::util::rng::Rng;
 
@@ -618,4 +621,134 @@ fn fixed_env_schedule_mixed_traffic() {
          (ok={ok} typed_failures={typed_failures})"
     );
     service.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// net failpoints: the wire path under chaos (DESIGN.md section 14)
+// ---------------------------------------------------------------------
+
+#[test]
+fn torn_frame_is_a_typed_teardown_not_a_deadlock() {
+    let _s = serial();
+    failpoint::clear();
+    let replica = Replica::serve(
+        chaos_service(1),
+        &[Addr::Unix(temp_socket_path("chaos-torn"))],
+        "chaos-torn",
+    )
+    .expect("bind replica");
+    let nc = NetClient::connect(&replica.bound()[0]).expect("connect");
+    // the handshake is done, so both reader loops are parked inside a
+    // frame read; tear the NEXT frame on whichever side reads first
+    let _g = failpoint::scoped("net.read_frame", "one_shot:error(torn)");
+    let outcome = nc
+        .submit(Request::new(EnergyForces(cluster(6, 611))))
+        .and_then(|t| t.wait());
+    match outcome {
+        // the reply may race ahead of the tear — a success is legal
+        Ok(r) => assert!(r.energy.is_finite()),
+        // replica-side tear: the severed connection surfaces as Dropped
+        // (or Canceled if the cancel-all beat the worker); client-side
+        // tear: protocol damage is its own typed class
+        Err(
+            ServiceError::Dropped(_)
+            | ServiceError::Protocol(_)
+            | ServiceError::Canceled,
+        ) => {}
+        Err(other) => panic!("torn frame must be typed, got {other:?}"),
+    }
+    assert!(failpoint::hits("net.read_frame") >= 1, "the tear must fire");
+    // nothing orphaned: the replica's queue drains and its ledger closes
+    let inproc = replica.client();
+    assert!(
+        wait_until(Duration::from_secs(10), || inproc.queue_depth() == 0),
+        "torn connection must not strand queued work"
+    );
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            inproc.metrics().snapshot().reconciles()
+        }),
+        "ledger must reconcile after the tear: {:?}",
+        inproc.metrics().snapshot()
+    );
+    // the replica keeps serving: a fresh connection works (one_shot
+    // policies stay registered but spent)
+    let nc2 = NetClient::connect(&replica.bound()[0]).expect("reconnect");
+    nc2.submit(Request::new(EnergyForces(cluster(5, 612))))
+        .expect("submit after tear")
+        .wait()
+        .expect("replica must keep serving after a torn connection");
+    nc2.close();
+    replica.shutdown();
+}
+
+#[test]
+fn replica_crash_failpoint_is_routed_around_by_the_front_door() {
+    let _s = serial();
+    failpoint::clear();
+    let r0 = Replica::serve(
+        chaos_service(1),
+        &[Addr::Unix(temp_socket_path("chaos-crash-r0"))],
+        "chaos-r0",
+    )
+    .expect("bind r0");
+    let r1 = Replica::serve(
+        chaos_service(1),
+        &[Addr::Unix(temp_socket_path("chaos-crash-r1"))],
+        "chaos-r1",
+    )
+    .expect("bind r1");
+    let fd = FrontDoor::serve(
+        &[r0.bound()[0].clone(), r1.bound()[0].clone()],
+        &[Addr::Unix(temp_socket_path("chaos-crash-fd"))],
+        FrontDoorConfig {
+            probe_interval: Duration::from_millis(20),
+            ..Default::default()
+        },
+    )
+    .expect("front door up");
+    let nc = NetClient::connect(&fd.bound()[0]).expect("connect fd");
+    nc.submit(Request::new(EnergyForces(cluster(6, 613))))
+        .expect("warmup submit")
+        .wait()
+        .expect("warmup reply");
+
+    // arm AFTER the cluster is live: the site sits in the replica's
+    // Submit arm, so health probes never trip it — only routed work
+    {
+        let _g = failpoint::scoped(
+            "net.replica.crash",
+            "one_shot:error(injected replica crash)",
+        );
+        let r = nc
+            .submit(Request::new(EnergyForces(cluster(7, 614))))
+            .expect("submit through fd")
+            .wait()
+            .expect("front door must reroute around the crashed replica");
+        assert!(r.energy.is_finite());
+        assert!(failpoint::hits("net.replica.crash") >= 1);
+    }
+    // same invariant through the panic path: the handler thread dies
+    // unwinding, catch_unwind tears the connection down, routing moves
+    {
+        let _g = failpoint::scoped("net.replica.crash", "one_shot:panic");
+        nc.submit(Request::new(EnergyForces(cluster(6, 615))))
+            .expect("submit through fd")
+            .wait()
+            .expect("reroute must also survive a panicking handler");
+    }
+    // the crashed connections healed (the replicas never died, only
+    // their conns) and the fleet keeps taking traffic
+    for k in 0..scaled(6, 3) as u64 {
+        nc.submit(Request::new(EnergyForces(cluster(5, 700 + k))))
+            .expect("steady-state submit")
+            .wait()
+            .expect("steady-state reply");
+    }
+    let stats = nc.stats(Duration::from_secs(5)).expect("fleet stats");
+    assert!(stats.reconciles(), "fleet ledger must reconcile: {stats:?}");
+    nc.close();
+    fd.shutdown();
+    r0.shutdown();
+    r1.shutdown();
 }

@@ -1,0 +1,211 @@
+//! Deterministic fuzz of the hardened JSON parser (`util::json`) and
+//! the wire codec built on it.
+//!
+//! The wire path feeds `parse_limited` bytes from the network, so the
+//! contract under test is: **no panic on any input, typed errors, and
+//! exact value roundtrip on valid documents**.  Mutations come from
+//! `util::rng` with fixed seeds — every failure reproduces.
+//!
+//! `JSON_FUZZ_FULL=1` scales the iteration counts up ~20x for soak
+//! runs; the default sizing keeps tier-1 fast.
+
+use gaunt_tp::coordinator::{Structure, Task};
+use gaunt_tp::net::proto::{encode_client, task_to_json, ClientMsg};
+use gaunt_tp::util::json::{self, Json, JsonError, Limits};
+use gaunt_tp::util::rng::Rng;
+
+fn scaled(base: usize) -> usize {
+    if std::env::var("JSON_FUZZ_FULL").is_ok() {
+        base * 20
+    } else {
+        base
+    }
+}
+
+/// A pool of valid documents shaped like real wire traffic plus
+/// rng-grown nasties (deep-ish nesting, unicode strings, big numbers).
+fn corpus(rng: &mut Rng) -> Vec<String> {
+    let st = Structure {
+        pos: vec![[1.25, -3.5, 0.0], [2.0, 2.0, 2.0]],
+        species: vec![0, 2],
+    };
+    let mut docs = vec![
+        "null".to_string(),
+        "true".to_string(),
+        "-12.5e-3".to_string(),
+        "\"hello \\\"world\\\" \\u00e9\"".to_string(),
+        "[]".to_string(),
+        "{}".to_string(),
+        "[1,[2,[3,[4,[5]]]]]".to_string(),
+        encode_client(&ClientMsg::Submit {
+            seq: 42,
+            deadline_ms: Some(250),
+            model: Some("prod".to_string()),
+            task: Task::MdRollout {
+                structure: st.clone(),
+                steps: 5,
+                dt: 0.002,
+            },
+        }),
+        encode_client(&ClientMsg::Hello {
+            version: 1,
+            name: "fuzz \n\t\"client\"".to_string(),
+        }),
+        task_to_json(&Task::Batch { structures: vec![st.clone(), st] })
+            .to_string(),
+    ];
+    // rng-grown random documents
+    for _ in 0..scaled(30) {
+        docs.push(grow(rng, 0).to_string());
+    }
+    docs
+}
+
+/// Grow a random JSON value, bounded depth.
+fn grow(rng: &mut Rng, depth: usize) -> Json {
+    let pick = if depth >= 6 { rng.below(4) } else { rng.below(6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => {
+            // mix integers, fractions, exponents, negatives
+            let base = rng.uniform(-1e9, 1e9);
+            Json::Num(if rng.below(3) == 0 { base.trunc() } else { base })
+        }
+        3 => {
+            let len = rng.below(12);
+            let s: String = (0..len)
+                .map(|_| {
+                    // printable ascii + a few escapes and non-ascii
+                    match rng.below(20) {
+                        0 => '"',
+                        1 => '\\',
+                        2 => '\n',
+                        3 => 'é',
+                        _ => (b'a' + rng.below(26) as u8) as char,
+                    }
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => {
+            let len = rng.below(5);
+            Json::Arr((0..len).map(|_| grow(rng, depth + 1)).collect())
+        }
+        _ => {
+            let len = rng.below(5);
+            Json::Obj(
+                (0..len)
+                    .map(|i| (format!("k{i}"), grow(rng, depth + 1)))
+                    .collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn valid_documents_roundtrip_exactly() {
+    let mut rng = Rng::new(0xF00D);
+    for doc in corpus(&mut rng) {
+        let v = json::parse(&doc)
+            .unwrap_or_else(|e| panic!("corpus doc must parse: {e}\n{doc}"));
+        let re = v.to_string();
+        let v2 = json::parse(&re)
+            .unwrap_or_else(|e| panic!("reserialized must parse: {e}\n{re}"));
+        assert_eq!(v, v2, "roundtrip drift on {doc}");
+    }
+}
+
+#[test]
+fn truncations_never_panic_and_prefix_cuts_are_typed() {
+    let mut rng = Rng::new(0xBEEF);
+    for doc in corpus(&mut rng) {
+        let cuts: Vec<usize> = if doc.len() <= 64 {
+            (0..doc.len()).collect()
+        } else {
+            (0..scaled(40)).map(|_| rng.below(doc.len())).collect()
+        };
+        for cut in cuts {
+            if !doc.is_char_boundary(cut) {
+                continue;
+            }
+            // must return *something* — a shorter valid document is
+            // fine, a typed error is fine, a panic is the bug
+            let _ = json::parse_limited(&doc[..cut], &Limits::default());
+        }
+    }
+    // cutting a structurally open document is Truncated, not Syntax
+    let doc = "{\"a\": [1, 2, {\"b\": \"xy";
+    match json::parse_limited(doc, &Limits::default()) {
+        Err(JsonError::Truncated(_)) => {}
+        other => panic!("open-structure cut must be Truncated: {other:?}"),
+    }
+}
+
+#[test]
+fn random_byte_flips_never_panic() {
+    let mut rng = Rng::new(0xCAFE);
+    let docs = corpus(&mut rng);
+    for doc in &docs {
+        if doc.is_empty() {
+            continue;
+        }
+        for _ in 0..scaled(60) {
+            let mut bytes = doc.as_bytes().to_vec();
+            let flips = 1 + rng.below(3);
+            for _ in 0..flips {
+                let i = rng.below(bytes.len());
+                bytes[i] = (rng.next_u64() & 0xFF) as u8;
+            }
+            // invalid UTF-8 can't even reach the parser (it takes
+            // &str); lossy-decode like a defensive caller would
+            let s = String::from_utf8_lossy(&bytes);
+            let _ = json::parse_limited(&s, &Limits::default());
+        }
+    }
+}
+
+#[test]
+fn random_splices_never_panic() {
+    let mut rng = Rng::new(0xD1CE);
+    let docs = corpus(&mut rng);
+    let shards = [
+        "{", "}", "[", "]", ",", ":", "\"", "\\", "null", "1e999", "-",
+        "\\u12", "{\"a\":", "[[", "\u{7f}",
+    ];
+    for doc in &docs {
+        for _ in 0..scaled(40) {
+            let mut s = doc.clone();
+            let shard = shards[rng.below(shards.len())];
+            let mut at = rng.below(s.len() + 1);
+            while !s.is_char_boundary(at) {
+                at -= 1;
+            }
+            s.insert_str(at, shard);
+            let _ = json::parse_limited(&s, &Limits::default());
+        }
+    }
+}
+
+#[test]
+fn depth_and_size_bombs_are_typed_not_crashes() {
+    // a recursion bomb far past the default depth limit: the parser
+    // must refuse it with TooDeep instead of overflowing the stack
+    let bomb = "[".repeat(500_000);
+    match json::parse_limited(&bomb, &Limits::default()) {
+        Err(JsonError::TooDeep { .. }) => {}
+        other => panic!("depth bomb must be TooDeep: {other:?}"),
+    }
+    let mixed = "{\"a\":".repeat(300_000);
+    match json::parse_limited(&mixed, &Limits::default()) {
+        Err(JsonError::TooDeep { .. }) => {}
+        other => panic!("object bomb must be TooDeep: {other:?}"),
+    }
+    // size cap
+    let limits = Limits { max_depth: 128, max_bytes: 64 };
+    let big = format!("\"{}\"", "x".repeat(256));
+    match json::parse_limited(&big, &limits) {
+        Err(JsonError::TooLarge { .. }) => {}
+        other => panic!("oversize doc must be TooLarge: {other:?}"),
+    }
+}

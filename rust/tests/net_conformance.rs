@@ -1,0 +1,475 @@
+//! Socket-serving conformance: the wire path must honor every contract
+//! the in-process `coordinator::Service` pins — typed errors, exactly
+//! one resolution per ticket, deadline/cancel propagation, ledger
+//! reconciliation — plus the new multi-process ones: a dead replica is
+//! routed around, a dead client releases its replica-side work, and a
+//! version-mismatched peer is refused with a typed handshake.
+//!
+//! `NET_SMOKE=1` shrinks the workloads for the fast verify gate.  The
+//! two `multi_process_*` tests spawn real replica/front-door/worker
+//! processes from the compiled `gaunt-tp` binary.
+
+use std::io::Write;
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use gaunt_tp::coordinator::{
+    EnergyForces, EnergyOnly, HealthState, MdRollout, NativeGauntBackend,
+    Relax, Request, ServerConfig, Service, ServiceError,
+};
+use gaunt_tp::net::loadtest::{cluster, run_cluster_loadtest, LoadOpts};
+use gaunt_tp::net::proto::{decode_server, encode_client, ClientMsg, ServerMsg};
+use gaunt_tp::net::{
+    read_frame, temp_socket_path, write_frame, Addr, FrontDoor,
+    FrontDoorConfig, NetClient, Replica,
+};
+
+// sockets, services, and the process-global failpoint registry all
+// want isolation: serialize the suite on one static mutex
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn smoke() -> bool {
+    std::env::var("NET_SMOKE").is_ok()
+}
+
+fn scaled(full: usize, smoke_n: usize) -> usize {
+    if smoke() { smoke_n } else { full }
+}
+
+fn service(workers: usize) -> Service {
+    Service::builder()
+        .native(NativeGauntBackend::default())
+        .config(ServerConfig { n_workers: workers, ..Default::default() })
+        .build()
+        .expect("native service must start")
+}
+
+fn unix_replica(tag: &str, workers: usize) -> Replica {
+    let addr = Addr::Unix(temp_socket_path(tag));
+    Replica::serve(service(workers), &[addr], tag).expect("bind unix replica")
+}
+
+/// Poll `cond` every 5ms until it holds or `deadline` passes.
+fn wait_until(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    cond()
+}
+
+// ---------------------------------------------------------------------
+// single replica over a socket: every task kind, both transports
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_task_kind_roundtrips_over_a_unix_socket() {
+    let _g = serial();
+    let replica = unix_replica("net-kinds", 2);
+    let nc = NetClient::connect(&replica.bound()[0]).expect("connect");
+
+    let st = cluster(10, 7);
+    let e = nc
+        .submit(Request::new(EnergyOnly(st.clone())))
+        .expect("submit energy")
+        .wait()
+        .expect("energy reply");
+    assert!(e.energy.is_finite());
+
+    let f = nc
+        .submit(Request::new(EnergyForces(st.clone())))
+        .expect("submit forces")
+        .wait()
+        .expect("forces reply");
+    assert_eq!(f.forces.len(), st.n_atoms());
+    assert!((f.energy - e.energy).abs() < 1e-9, "same structure, same E");
+
+    let r = nc
+        .submit(Request::new(Relax { structure: st.clone(), max_steps: 4 }))
+        .expect("submit relax")
+        .wait()
+        .expect("relax reply");
+    assert_eq!(r.pos.len(), st.n_atoms());
+    assert!(r.energy.is_finite());
+
+    let md = nc
+        .submit(Request::new(MdRollout {
+            structure: st.clone(),
+            steps: 3,
+            dt: 1e-3,
+        }))
+        .expect("submit rollout");
+    let traj = md.wait().expect("rollout reply");
+    assert_eq!(traj.summary.steps, 3);
+    assert!(!traj.frames.is_empty(), "frames must stream over the wire");
+    assert_eq!(traj.frames[0].pos.len(), st.n_atoms());
+
+    let batch = nc
+        .submit(Request::new(gaunt_tp::coordinator::Batch(vec![
+            cluster(6, 1),
+            cluster(9, 2),
+        ])))
+        .expect("submit batch")
+        .wait()
+        .expect("batch reply");
+    assert_eq!(batch.len(), 2);
+    assert_eq!(batch[1].forces.len(), 9);
+
+    nc.close();
+    replica.shutdown();
+}
+
+#[test]
+fn tcp_loopback_serves_the_same_contract() {
+    let _g = serial();
+    let addr = Addr::Tcp("127.0.0.1:0".to_string());
+    let replica =
+        Replica::serve(service(1), &[addr], "net-tcp").expect("bind tcp");
+    let nc = NetClient::connect(&replica.bound()[0]).expect("connect tcp");
+    let st = cluster(8, 3);
+    let f = nc
+        .submit(Request::new(EnergyForces(st.clone())))
+        .expect("submit")
+        .wait()
+        .expect("reply");
+    assert_eq!(f.forces.len(), st.n_atoms());
+    let (health, _depth) =
+        nc.ping(Duration::from_secs(5)).expect("ping over tcp");
+    assert_eq!(health, HealthState::Healthy);
+    nc.close();
+    replica.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// deadline + cancel propagation across the wire
+// ---------------------------------------------------------------------
+
+#[test]
+fn deadline_expires_across_the_wire_as_a_typed_error() {
+    let _g = serial();
+    let replica = unix_replica("net-deadline", 1);
+    let nc = NetClient::connect(&replica.bound()[0]).expect("connect");
+    // a rollout long enough that a 1ms budget cannot cover it
+    let req = Request::new(MdRollout {
+        structure: cluster(20, 11),
+        steps: scaled(3000, 600),
+        dt: 1e-4,
+    })
+    .deadline(Duration::from_millis(1));
+    match nc.submit(req).expect("submit").wait() {
+        Err(ServiceError::DeadlineExceeded) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    // the expiry is booked server-side, not just client-side
+    let m = replica.client().metrics().snapshot();
+    assert!(m.expired >= 1, "server must count the expiry: {m:?}");
+    nc.close();
+    replica.shutdown();
+}
+
+#[test]
+fn wire_cancel_releases_the_replica_side_ticket() {
+    let _g = serial();
+    let replica = unix_replica("net-cancel", 1);
+    let nc = NetClient::connect(&replica.bound()[0]).expect("connect");
+    let inproc = replica.client();
+    let before = inproc.metrics().snapshot().canceled;
+    let md = nc
+        .submit(Request::new(MdRollout {
+            structure: cluster(20, 13),
+            steps: scaled(200_000, 40_000),
+            dt: 1e-4,
+        }))
+        .expect("submit long rollout");
+    // let it start running, then cancel over the wire
+    std::thread::sleep(Duration::from_millis(30));
+    md.cancel();
+    match md.wait() {
+        Err(ServiceError::Canceled) => {}
+        Err(ServiceError::DeadlineExceeded) => {
+            panic!("cancel must not surface as a deadline")
+        }
+        other => panic!("expected Canceled, got {other:?}"),
+    }
+    // the cooperative flag reached the service: the worker stopped and
+    // booked the cancel — no orphaned rollout keeps a worker busy
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            inproc.metrics().snapshot().canceled > before
+        }),
+        "service never booked the wire cancel"
+    );
+    assert!(
+        wait_until(Duration::from_secs(10), || inproc.queue_depth() == 0),
+        "canceled work must leave the queue"
+    );
+    nc.close();
+    replica.shutdown();
+}
+
+#[test]
+fn client_disconnect_cancels_inflight_work() {
+    let _g = serial();
+    let replica = unix_replica("net-hangup", 1);
+    let inproc = replica.client();
+    let before = inproc.metrics().snapshot().canceled;
+    {
+        let nc = NetClient::connect(&replica.bound()[0]).expect("connect");
+        let _raw = nc
+            .submit_task(
+                gaunt_tp::coordinator::Task::MdRollout {
+                    structure: cluster(20, 17),
+                    steps: scaled(200_000, 40_000),
+                    dt: 1e-4,
+                },
+                None,
+                None,
+            )
+            .expect("submit");
+        std::thread::sleep(Duration::from_millis(30));
+        // drop the whole client: the connection dies with work in flight
+    }
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            inproc.metrics().snapshot().canceled > before
+        }),
+        "replica must cancel in-flight work when the client vanishes"
+    );
+    assert!(
+        wait_until(Duration::from_secs(10), || inproc.queue_depth() == 0),
+        "orphaned work must not linger in the queue"
+    );
+    replica.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// handshake
+// ---------------------------------------------------------------------
+
+#[test]
+fn version_mismatch_is_refused_with_a_typed_handshake() {
+    let _g = serial();
+    let replica = unix_replica("net-version", 1);
+    let path = match &replica.bound()[0] {
+        Addr::Unix(p) => p.clone(),
+        other => panic!("expected unix addr, got {other}"),
+    };
+    let mut conn = UnixStream::connect(&path).expect("raw connect");
+    let hello = encode_client(&ClientMsg::Hello {
+        version: 99,
+        name: "from-the-future".to_string(),
+    });
+    write_frame(&mut conn, &hello).expect("send hello");
+    conn.flush().unwrap();
+    let ack = read_frame(&mut conn).expect("read ack");
+    match decode_server(&ack).expect("decode ack") {
+        ServerMsg::HelloAck { version, max_atoms, .. } => {
+            assert_eq!(version, 1, "server must answer with ITS version");
+            assert_eq!(max_atoms, 0, "refusal advertises zero capacity");
+        }
+        other => panic!("expected HelloAck, got {other:?}"),
+    }
+    // the server hangs up after the refusal
+    match read_frame(&mut conn) {
+        Err(_) => {}
+        Ok(f) => panic!("refused connection must close, got frame {f:?}"),
+    }
+    replica.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// front door
+// ---------------------------------------------------------------------
+
+#[test]
+fn frontdoor_routes_probes_and_drains() {
+    let _g = serial();
+    let r0 = unix_replica("net-fd-r0", 1);
+    let r1 = unix_replica("net-fd-r1", 1);
+    let fd = FrontDoor::serve(
+        &[r0.bound()[0].clone(), r1.bound()[0].clone()],
+        &[Addr::Unix(temp_socket_path("net-fd"))],
+        FrontDoorConfig::default(),
+    )
+    .expect("front door up");
+    let nc = NetClient::connect(&fd.bound()[0]).expect("connect fd");
+
+    let n = scaled(24, 8);
+    let mut tickets = Vec::new();
+    for i in 0..n {
+        tickets.push(
+            nc.submit(Request::new(EnergyForces(cluster(6 + i % 9, i as u64))))
+                .expect("submit through fd"),
+        );
+    }
+    for t in tickets {
+        t.wait().expect("routed reply");
+    }
+    let (health, _) = nc.ping(Duration::from_secs(5)).expect("fd ping");
+    assert_eq!(health, HealthState::Healthy);
+
+    // the fleet ledger aggregates and reconciles
+    let stats = nc.stats(Duration::from_secs(5)).expect("fd stats");
+    assert!(stats.requests >= n as u64, "fleet stats must aggregate");
+    assert!(stats.reconciles(), "fleet ledger must reconcile: {stats:?}");
+    // both replicas' own ledgers reconcile too
+    for r in [&r0, &r1] {
+        assert!(r.client().metrics().snapshot().reconciles());
+    }
+
+    // drain: new work is refused with a typed error, service stays up
+    nc.drain().expect("send drain");
+    let refused = wait_until(Duration::from_secs(5), || {
+        matches!(
+            nc.submit(Request::new(EnergyForces(cluster(6, 99))))
+                .and_then(|t| t.wait()),
+            Err(ServiceError::Rejected(_))
+        )
+    });
+    assert!(refused, "draining front door must reject new work");
+
+    nc.close();
+    fd.shutdown();
+    r0.shutdown();
+    r1.shutdown();
+}
+
+#[test]
+fn frontdoor_with_no_live_replica_sheds_with_retry_after() {
+    let _g = serial();
+    // a front door pointed at an address nobody serves
+    let ghost = Addr::Unix(temp_socket_path("net-ghost"));
+    let fd = FrontDoor::serve(
+        &[ghost],
+        &[Addr::Unix(temp_socket_path("net-fd-empty"))],
+        FrontDoorConfig::default(),
+    )
+    .expect("front door up");
+    let nc = NetClient::connect(&fd.bound()[0]).expect("connect fd");
+    match nc
+        .submit(Request::new(EnergyForces(cluster(6, 5))))
+        .and_then(|t| t.wait())
+    {
+        Err(ServiceError::Overloaded { retry_after }) => {
+            assert!(retry_after > Duration::ZERO, "retry hint must be set");
+        }
+        other => panic!("expected Overloaded backpressure, got {other:?}"),
+    }
+    nc.close();
+    fd.shutdown();
+}
+
+#[test]
+fn frontdoor_reroutes_when_a_replica_is_shut_down() {
+    let _g = serial();
+    let r0 = unix_replica("net-rr-r0", 1);
+    let r1 = unix_replica("net-rr-r1", 1);
+    let cfg = FrontDoorConfig {
+        probe_interval: Duration::from_millis(20),
+        ..Default::default()
+    };
+    let fd = FrontDoor::serve(
+        &[r0.bound()[0].clone(), r1.bound()[0].clone()],
+        &[Addr::Unix(temp_socket_path("net-rr-fd"))],
+        cfg,
+    )
+    .expect("front door up");
+    let nc = NetClient::connect(&fd.bound()[0]).expect("connect fd");
+    // warm up: both replicas take traffic
+    for i in 0..scaled(8, 4) {
+        nc.submit(Request::new(EnergyForces(cluster(8, i as u64))))
+            .expect("warmup submit")
+            .wait()
+            .expect("warmup reply");
+    }
+    // kill one replica; the prober marks it down and routing moves
+    r0.shutdown();
+    let mut ok = 0usize;
+    let n = scaled(16, 6);
+    for i in 0..n {
+        let out = nc
+            .submit(Request::new(EnergyForces(cluster(8, 100 + i as u64))))
+            .and_then(|t| t.wait());
+        if out.is_ok() {
+            ok += 1;
+        }
+        // idempotent retries mean the common case is zero failures, but
+        // the contract is "typed error, never a hang" — wait() returned
+    }
+    assert!(
+        ok >= n - 1,
+        "with failover only ~one submission may race the death: {ok}/{n}"
+    );
+    assert!(
+        wait_until(Duration::from_secs(5), || fd.live_replicas() == 1),
+        "prober must mark the dead replica down"
+    );
+    nc.close();
+    fd.shutdown();
+    r1.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// the acceptance gate: real processes, real sockets
+// ---------------------------------------------------------------------
+
+fn acceptance_opts() -> LoadOpts {
+    LoadOpts {
+        replicas: 2,
+        clients: 2,
+        requests_per_client: scaled(40, 10),
+        workers: 1,
+        concurrency: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn multi_process_loadtest_reconciles() {
+    let _g = serial();
+    let exe = Path::new(env!("CARGO_BIN_EXE_gaunt-tp"));
+    let report = run_cluster_loadtest(exe, &acceptance_opts())
+        .expect("cluster loadtest must complete");
+    let t = &report.total;
+    assert_eq!(
+        t.n as usize,
+        2 * acceptance_opts().requests_per_client,
+        "every issued request must be accounted"
+    );
+    assert!(t.reconciles(), "client ledger must reconcile: {t:?}");
+    assert!(
+        report.success_rate() > 0.95,
+        "healthy cluster must serve nearly everything: {t:?}"
+    );
+    if let Some(s) = &report.frontdoor_stats {
+        assert!(s.reconciles(), "front-door fleet ledger: {s:?}");
+    }
+}
+
+#[test]
+fn multi_process_loadtest_survives_a_replica_kill() {
+    let _g = serial();
+    let exe = Path::new(env!("CARGO_BIN_EXE_gaunt-tp"));
+    let opts = LoadOpts { kill_one: true, ..acceptance_opts() };
+    // the loadtest returning AT ALL proves no client hung; the ledger
+    // proves nothing was silently lost
+    let report = run_cluster_loadtest(exe, &opts)
+        .expect("kill-one loadtest must complete");
+    let t = &report.total;
+    assert!(report.killed_replica, "the kill must actually have happened");
+    assert_eq!(t.n as usize, 2 * opts.requests_per_client);
+    assert!(t.reconciles(), "ledger must reconcile through a kill: {t:?}");
+    assert!(
+        report.success_rate() > 0.5,
+        "front door must recover the success rate after the kill: {t:?}"
+    );
+}

@@ -27,6 +27,9 @@
 #   resilience: p99 / success rate / shed fraction of a small-queue
 #           service under polite vs ~2x oversubscribed load (admission
 #           control sheds typed Overloaded instead of queueing forever).
+#   socket: the wire-hop tax — the same closed-loop load through the
+#           in-process client, one replica over a Unix socket, one over
+#           TCP loopback, and a front door sharding N replicas.
 #   md_neighbor: open vs periodic cell-list builds, Verlet rebuild vs
 #           reuse, and ns/step of a 10^5-atom periodic LJ rollout.
 set -euo pipefail
@@ -87,6 +90,7 @@ wanted = {
     "multi_channel": ["multi_channel"],
     "serving": ["serving"],
     "resilience": ["resilience"],
+    "socket": ["socket"],
     "md_neighbor": ["md_neighbor"],
 }
 
@@ -153,6 +157,12 @@ doc = {
                        "resilience_overload_* (~2x oversubscribed, typed "
                        "shedding); *_p99 in ns, *_success and *_shed_frac "
                        "ratios (iters = 0 marks derived rows)"],
+        "socket": ["socket_inproc_* (in-process typed client, before)",
+                   "socket_unix_r1_* / socket_tcp_r1_* (one replica over "
+                   "a real socket — the wire-hop tax)",
+                   "socket_unix_rN_fd_* (front door sharding N replicas); "
+                   "*_p50/*_p99 in ns, *_rate in structures/sec "
+                   "(iters = 0 marks derived rows)"],
         "md_neighbor": ["open_cell_list / periodic_cell_list / "
                         "periodic_par_all_cores (build cost per size)",
                         "verlet_rebuild (before) vs verlet_reuse (after); "

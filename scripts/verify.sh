@@ -48,6 +48,13 @@ echo "== chaos conformance suite (CHAOS_SMOKE fast mode) =="
 # reduced workload sizes
 CHAOS_SMOKE=1 cargo test -q --test chaos_conformance
 
+echo "== socket serving conformance suite (NET_SMOKE fast mode) =="
+# the multi-process gate: every task kind over Unix + TCP sockets,
+# deadline/cancel propagation across the wire, client-hangup releasing
+# replica-side work, front-door failover, and the real N-process
+# loadtest (ledger reconciliation + replica-kill recovery)
+NET_SMOKE=1 cargo test -q --test net_conformance
+
 echo "== bench --smoke (one tiny size per bench binary) =="
 # fig1c is the one figure bench the snapshot pipeline below doesn't run
 for b in fig1c_many_body; do

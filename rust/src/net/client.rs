@@ -45,8 +45,12 @@ struct Shared {
     pending: Mutex<HashMap<u64, ReplySlot>>,
     next_seq: AtomicU64,
     dead: AtomicBool,
-    pong_tx: Mutex<Option<Sender<(HealthState, usize)>>>,
-    stats_tx: Mutex<Option<Sender<MetricsSnapshot>>>,
+    /// FIFO queues of probe waiters: the server answers pings/stats in
+    /// request order on this one ordered connection, so concurrent
+    /// callers correlate by position — a single slot would let a second
+    /// caller overwrite the first's sender
+    pong_waiters: Mutex<VecDeque<Sender<(HealthState, usize)>>>,
+    stats_waiters: Mutex<VecDeque<Sender<MetricsSnapshot>>>,
 }
 
 impl Shared {
@@ -84,6 +88,10 @@ impl Shared {
         for mut slot in slots {
             slot.finish(Err(err.clone()));
         }
+        // dropping the senders fails blocked probe waiters with
+        // Disconnected — a truthful "connection died"
+        lock(&self.pong_waiters).clear();
+        lock(&self.stats_waiters).clear();
     }
 }
 
@@ -144,8 +152,8 @@ impl NetClient {
             pending: Mutex::new(HashMap::new()),
             next_seq: AtomicU64::new(1),
             dead: AtomicBool::new(false),
-            pong_tx: Mutex::new(None),
-            stats_tx: Mutex::new(None),
+            pong_waiters: Mutex::new(VecDeque::new()),
+            stats_waiters: Mutex::new(VecDeque::new()),
         });
         let reader = {
             let shared = shared.clone();
@@ -230,13 +238,18 @@ impl NetClient {
     pub fn ping(
         &self, timeout: Duration,
     ) -> Result<(HealthState, usize), String> {
+        if self.is_dead() {
+            return Err("connection is dead".to_string());
+        }
         let (tx, rx) = channel();
-        *lock(&self.shared.pong_tx) = Some(tx);
+        // enqueue BEFORE sending so the reply can't race the waiter in;
+        // on timeout the entry stays queued — the late pong still pops
+        // it (positional correlation) and its dead receiver eats it
+        lock(&self.shared.pong_waiters).push_back(tx);
         self.shared.send(&ClientMsg::Ping)?;
         match rx.recv_timeout(timeout) {
             Ok(p) => Ok(p),
             Err(RecvTimeoutError::Timeout) => {
-                lock(&self.shared.pong_tx).take();
                 Err("ping timed out".to_string())
             }
             Err(RecvTimeoutError::Disconnected) => {
@@ -247,13 +260,15 @@ impl NetClient {
 
     /// Fetch the server's metrics ledger.
     pub fn stats(&self, timeout: Duration) -> Result<MetricsSnapshot, String> {
+        if self.is_dead() {
+            return Err("connection is dead".to_string());
+        }
         let (tx, rx) = channel();
-        *lock(&self.shared.stats_tx) = Some(tx);
+        lock(&self.shared.stats_waiters).push_back(tx);
         self.shared.send(&ClientMsg::Stats)?;
         match rx.recv_timeout(timeout) {
             Ok(s) => Ok(s),
             Err(RecvTimeoutError::Timeout) => {
-                lock(&self.shared.stats_tx).take();
                 Err("stats timed out".to_string())
             }
             Err(RecvTimeoutError::Disconnected) => {
@@ -333,12 +348,12 @@ fn reader_loop(mut conn: Conn, shared: Arc<Shared>) {
                 }
             }
             ServerMsg::Pong { health, queue_depth } => {
-                if let Some(tx) = lock(&shared.pong_tx).take() {
+                if let Some(tx) = lock(&shared.pong_waiters).pop_front() {
                     let _ = tx.send((health, queue_depth));
                 }
             }
             ServerMsg::StatsAck { metrics } => {
-                if let Some(tx) = lock(&shared.stats_tx).take() {
+                if let Some(tx) = lock(&shared.stats_waiters).pop_front() {
                     let _ = tx.send(metrics);
                 }
             }

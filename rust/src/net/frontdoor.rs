@@ -35,7 +35,7 @@ use crate::coordinator::{HealthState, MetricsSnapshot, ServiceError, Task};
 use super::client::NetClient;
 use super::frame::{read_frame, write_frame, WireError, VERSION};
 use super::proto::{decode_client, encode_server, ClientMsg, ServerMsg};
-use super::{poke, spawn_acceptor, Addr, Conn, Listener};
+use super::{poke, spawn_acceptor, Addr, Conn, ConnRegistry, Listener};
 
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
@@ -113,7 +113,7 @@ struct FdShared {
     /// service's: every admitted submission ends in exactly one bucket)
     metrics: Metrics,
     rr: AtomicUsize,
-    conns: Mutex<Vec<Conn>>,
+    conns: ConnRegistry,
 }
 
 impl FdShared {
@@ -130,23 +130,35 @@ impl FdShared {
 
     /// Pick the tightest-bucket, least-loaded candidate.
     fn route(&self, n_atoms: usize) -> Option<(usize, Arc<NetClient>)> {
-        let mut cands = self.candidates(n_atoms);
-        if cands.is_empty() {
+        // snapshot each candidate's (bucket, outstanding) key once:
+        // the atomics move under concurrent routing, and a key re-read
+        // between the sort and the tie filter could match nothing
+        let mut keyed: Vec<((usize, usize), (usize, Arc<NetClient>))> = self
+            .candidates(n_atoms)
+            .into_iter()
+            .map(|(i, c)| {
+                let r = &self.replicas[i];
+                (
+                    (
+                        r.max_atoms.load(Ordering::Relaxed),
+                        r.outstanding.load(Ordering::Relaxed),
+                    ),
+                    (i, c),
+                )
+            })
+            .collect();
+        if keyed.is_empty() {
             return None;
         }
-        let key = |i: usize| {
-            let r = &self.replicas[i];
-            (
-                r.max_atoms.load(Ordering::Relaxed),
-                r.outstanding.load(Ordering::Relaxed),
-            )
-        };
-        cands.sort_by_key(|(i, _)| key(*i));
-        let best = key(cands[0].0);
-        let tied: Vec<_> =
-            cands.into_iter().filter(|(i, _)| key(*i) == best).collect();
+        keyed.sort_by_key(|(k, _)| *k);
+        let best = keyed[0].0;
+        let tied: Vec<_> = keyed
+            .into_iter()
+            .filter(|(k, _)| *k == best)
+            .map(|(_, rc)| rc)
+            .collect();
         let pick = self.rr.fetch_add(1, Ordering::Relaxed) % tied.len();
-        Some(tied.into_iter().nth(pick).unwrap())
+        tied.into_iter().nth(pick)
     }
 
     fn aggregate_health(&self) -> HealthState {
@@ -235,7 +247,7 @@ impl FrontDoor {
             draining: AtomicBool::new(false),
             metrics: Metrics::new(),
             rr: AtomicUsize::new(0),
-            conns: Mutex::new(Vec::new()),
+            conns: ConnRegistry::new(),
         });
         // eager first connect so the first submission doesn't wait a
         // probe interval
@@ -305,9 +317,7 @@ impl FrontDoor {
         if let Some(p) = self.prober.take() {
             let _ = p.join();
         }
-        for conn in lock(&self.shared.conns).drain(..) {
-            conn.shutdown_both();
-        }
+        self.shared.conns.sever_all();
         for r in &self.shared.replicas {
             r.mark_down();
         }
@@ -368,12 +378,13 @@ impl CancelCell {
 type Inflight = Arc<Mutex<HashMap<u64, Arc<CancelCell>>>>;
 
 fn handle_conn(conn: Conn, shared: Arc<FdShared>) {
-    if let Ok(c) = conn.try_clone() {
-        lock(&shared.conns).push(c);
-    }
+    // registered for FrontDoor::shutdown to sever; deregistered below
+    // so a long-lived front door doesn't leak one fd per connection
+    let reg = shared.conns.register(&conn);
     let teardown_conn = match conn.try_clone() {
         Ok(c) => c,
         Err(_) => {
+            shared.conns.deregister(reg);
             conn.shutdown_both();
             return;
         }
@@ -386,6 +397,7 @@ fn handle_conn(conn: Conn, shared: Arc<FdShared>) {
         cell.cancel();
     }
     teardown_conn.shutdown_both();
+    shared.conns.deregister(reg);
 }
 
 fn conn_loop(mut conn: Conn, shared: &Arc<FdShared>, inflight: &Inflight) {
@@ -599,10 +611,16 @@ fn route_with_failover(
         handle.outstanding.fetch_add(1, Ordering::Relaxed);
         let outcome = pump_replies(&raw.rx, writer, seq);
         handle.outstanding.fetch_sub(1, Ordering::Relaxed);
-        *lock(&cell.upstream) = None;
+        // `cell.upstream` still points at this replica here: the
+        // DownstreamGone arm must forward the wire cancel through it
+        // before it is cleared
         match outcome {
-            PumpOutcome::DeliveredOk => return Ok(()),
+            PumpOutcome::DeliveredOk => {
+                *lock(&cell.upstream) = None;
+                return Ok(());
+            }
             PumpOutcome::Failed(e) => {
+                *lock(&cell.upstream) = None;
                 let retryable = matches!(e, ServiceError::Dropped(_));
                 if retryable {
                     handle.mark_down();
@@ -618,6 +636,7 @@ fn route_with_failover(
             PumpOutcome::FramesThenLost => {
                 // frames already reached the client; a retry would
                 // duplicate them, so surface the loss as typed Dropped
+                *lock(&cell.upstream) = None;
                 handle.mark_down();
                 return Err(ServiceError::Dropped(
                     "replica died mid-stream after frames were forwarded"
@@ -626,8 +645,10 @@ fn route_with_failover(
             }
             PumpOutcome::DownstreamGone(e) => {
                 // nobody is listening anymore; release the replica-side
-                // task and report canceled for the ledger
+                // task while `upstream` still names it, then report
+                // canceled for the ledger
                 cell.cancel();
+                *lock(&cell.upstream) = None;
                 return Err(e);
             }
         }

@@ -41,12 +41,13 @@ pub use frame::{read_frame, write_frame, WireError};
 pub use frontdoor::{FrontDoor, FrontDoorConfig};
 pub use replica::Replica;
 
+use std::collections::HashMap;
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::util::failpoint;
@@ -178,6 +179,56 @@ impl Write for Conn {
         match self {
             Conn::Tcp(s) => s.flush(),
             Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Live-connection registry for a server's shutdown path: each handler
+/// registers a severable clone of its socket on entry and deregisters
+/// it on exit, so `sever_all` reaches every open connection without the
+/// registry leaking one fd per connection ever served.
+pub(crate) struct ConnRegistry {
+    next_id: AtomicU64,
+    conns: Mutex<HashMap<u64, Conn>>,
+}
+
+impl ConnRegistry {
+    pub(crate) fn new() -> ConnRegistry {
+        ConnRegistry {
+            next_id: AtomicU64::new(0),
+            conns: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Register a severable handle onto `conn`; `None` if the socket
+    /// could not be cloned (the caller serves unregistered).
+    pub(crate) fn register(&self, conn: &Conn) -> Option<u64> {
+        let clone = conn.try_clone().ok()?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.conns
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(id, clone);
+        Some(id)
+    }
+
+    /// Drop the registered clone once the handler is done with the
+    /// connection.
+    pub(crate) fn deregister(&self, id: Option<u64>) {
+        if let Some(id) = id {
+            self.conns
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .remove(&id);
+        }
+    }
+
+    /// Shut down every still-registered connection (server shutdown).
+    pub(crate) fn sever_all(&self) {
+        for (_, conn) in
+            self.conns.lock().unwrap_or_else(|e| e.into_inner()).drain()
+        {
+            conn.shutdown_both();
         }
     }
 }

@@ -28,7 +28,7 @@ use crate::util::failpoint;
 
 use super::frame::{read_frame, write_frame, WireError, VERSION};
 use super::proto::{decode_client, encode_server, ClientMsg, ServerMsg};
-use super::{poke, spawn_acceptor, Addr, Conn, Listener};
+use super::{poke, spawn_acceptor, Addr, Conn, ConnRegistry, Listener};
 
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
@@ -45,7 +45,7 @@ pub struct Replica {
     stop: Arc<AtomicBool>,
     bound: Vec<Addr>,
     acceptors: Vec<std::thread::JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<Conn>>>,
+    conns: Arc<ConnRegistry>,
 }
 
 impl Replica {
@@ -57,7 +57,7 @@ impl Replica {
     ) -> io::Result<Replica> {
         let client = service.client();
         let stop = Arc::new(AtomicBool::new(false));
-        let conns: Arc<Mutex<Vec<Conn>>> = Arc::new(Mutex::new(Vec::new()));
+        let conns = Arc::new(ConnRegistry::new());
         let mut bound = Vec::new();
         let mut acceptors = Vec::new();
         for addr in addrs {
@@ -115,9 +115,7 @@ impl Replica {
         for h in self.acceptors.drain(..) {
             let _ = h.join();
         }
-        for conn in lock(&self.conns).drain(..) {
-            conn.shutdown_both();
-        }
+        self.conns.sever_all();
         if let Some(service) = self.service.take() {
             service.shutdown();
         }
@@ -131,14 +129,14 @@ impl Replica {
 }
 
 /// Per-connection state: one handler thread, many forwarders.
-fn handle_conn(conn: Conn, client: Client, conns: Arc<Mutex<Vec<Conn>>>) {
-    // register a handle for Replica::shutdown to sever
-    if let Ok(c) = conn.try_clone() {
-        lock(&conns).push(c);
-    }
+fn handle_conn(conn: Conn, client: Client, conns: Arc<ConnRegistry>) {
+    // register a handle for Replica::shutdown to sever; deregistered
+    // below so a long-lived replica doesn't leak one fd per connection
+    let reg = conns.register(&conn);
     let teardown_conn = match conn.try_clone() {
         Ok(c) => c,
         Err(_) => {
+            conns.deregister(reg);
             conn.shutdown_both();
             return;
         }
@@ -157,6 +155,7 @@ fn handle_conn(conn: Conn, client: Client, conns: Arc<Mutex<Vec<Conn>>>) {
         cancel.store(true, Ordering::Relaxed);
     }
     teardown_conn.shutdown_both();
+    conns.deregister(reg);
     if result.is_err() {
         // the panic already printed; the connection died with it
     }
@@ -220,6 +219,14 @@ fn conn_loop(
                     failpoint::check("net.replica.crash")
                 {
                     return;
+                }
+                // a seq already in flight belongs to another
+                // submission; admitting the duplicate would orphan the
+                // original's cancel flag (whichever forwarder finishes
+                // first removes the shared entry).  Ignore it — a Done
+                // reply would finish the original's client-side slot.
+                if lock(inflight).contains_key(&seq) {
+                    continue;
                 }
                 let deadline = deadline_ms.map(Duration::from_millis);
                 match client.submit_task(task, deadline, model) {

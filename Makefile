@@ -17,6 +17,9 @@
 #                     with python/compile/aot.py into rust/artifacts/
 #   make model-golden - (numpy only, no JAX) regenerate the frozen-weights
 #                     model energy/forces golden for the cross-language test
+#   make vector-golden - (numpy only, no JAX) run the vector-signal mirror
+#                     checks and regenerate the VSH / vector-plan / dipole
+#                     golden for the cross-language test
 #   make loadtest   - drive the typed serving Client with concurrent
 #                     mixed-size traffic through the shape-bucketed
 #                     native service (offline; p50/p99 + atom_fill)
@@ -39,7 +42,8 @@
 RUST_DIR := rust
 
 .PHONY: verify build test bench bench-snapshot bench-compare artifacts \
-        model-golden loadtest loadtest-net serve-cluster chaos ci clean
+        model-golden vector-golden loadtest loadtest-net serve-cluster \
+        chaos ci clean
 
 OLD ?= HEAD
 
@@ -83,9 +87,13 @@ chaos:
 artifacts:
 	cd python && python -m compile.aot --out ../$(RUST_DIR)/artifacts
 	cd python && python -m compile.model_golden --out ../$(RUST_DIR)/artifacts
+	cd python && python -m compile.vector_golden --out ../$(RUST_DIR)/artifacts
 
 model-golden:
 	cd python && python -m compile.model_golden --out ../$(RUST_DIR)/artifacts
+
+vector-golden:
+	cd python && python -m compile.vector_golden --check --out ../$(RUST_DIR)/artifacts
 
 clean:
 	cd $(RUST_DIR) && cargo clean

@@ -1,0 +1,738 @@
+"""Numpy mirror of the Rust `tp::vector` subsystem (vector-signal Gaunt
+products over vector spherical harmonics).
+
+This file is the *specification*: every convention the Rust side bakes in
+(the real VSH basis, the Cartesian-component vector layout, the three
+plan kinds and their VJP siblings, the parity laws under improper
+rotations, the dipole readout head) is implemented here in numpy,
+validated by exact quadrature / finite differences, and frozen into
+`rust/artifacts/golden/vector_golden.json` for the Rust test suite
+(`tests/golden_cross_validation.rs`) to cross-check.
+
+Conventions
+-----------
+
+* A *vector signal* of degree <= L is stored as three Cartesian-component
+  scalar SH signals in the crate's `Irreps::spherical(3, L)` layout:
+  degree-major panels `[l][c][m]`, flat index `3 l^2 + c (2l+1) + (l+m)`.
+  The component index c is in real l=1 irrep order: c=0 is the y
+  component, c=1 is z, c=2 is x (so the constant field F(u) = u has
+  coefficients sqrt(4 pi / 3) on the diagonal (c, m = c-1) of its l=1
+  panel and nothing else).
+* Real vector spherical harmonics:
+      Y_{lm} rhat                    (radial,   parity (-1)^{l+1})
+      Psi_{lm} = r grad Y / sqrt(l(l+1))   (gradient, parity (-1)^{l+1})
+      Phi_{lm} = rhat x Psi_{lm}           (curl,     parity (-1)^l)
+  all orthonormal under the S^2 inner product of vector fields.
+* Plan kinds (pointwise products of fields, projected to degree l3):
+      sv    : scalar (x) vector -> vector      out_c = P_l3(s v_c)
+      dot   : vector (.) vector -> scalar      out   = sum_c P_l3(v_c w_c)
+      cross : vector (x) vector -> pseudovector
+* VJP siblings (the degree-rotation identity, closed under the family):
+      sv(l1,l2,l3)    vjp_x1 = dot(l3,l2,l1) applied to (g, x2)
+      dot(l1,l2,l3)   vjp_x1 = sv(l3,l2,l1)  applied to (g, x2)
+      cross(l1,l2,l3) vjp_x1 = cross(l2,l3,l1) applied to (x2, g)
+
+Run `python -m compile.vector_golden --check` to execute every assertion,
+`--out DIR` to additionally write `DIR/golden/vector_golden.json`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+import numpy as np
+
+from . import so3
+
+# irrep component index -> xyz axis (c0 = y, c1 = z, c2 = x), and back
+CART = (1, 2, 0)
+IRR = (2, 0, 1)
+
+SQRT_4PI = math.sqrt(4.0 * math.pi)
+
+
+# --------------------------------------------------------------------------
+# vector-signal layout (Irreps::spherical(3, L))
+# --------------------------------------------------------------------------
+
+
+def vec_dim(L: int) -> int:
+    return 3 * so3.num_coeffs(L)
+
+
+def vec_index(l: int, c: int, m: int) -> int:
+    return 3 * l * l + c * (2 * l + 1) + (l + m)
+
+
+def vec_panel(x: np.ndarray, l: int) -> np.ndarray:
+    """View of the degree-l panel of a flat vector feature, shape [3, 2l+1]."""
+    base = 3 * l * l
+    return x[base : base + 3 * (2 * l + 1)].reshape(3, 2 * l + 1)
+
+
+def vec_component(x: np.ndarray, L: int, c: int) -> np.ndarray:
+    """Extract component c as a flat scalar SH feature of degree <= L."""
+    out = np.zeros(so3.num_coeffs(L))
+    for l in range(L + 1):
+        out[so3.lm_index(l, -l) : so3.lm_index(l, l) + 1] = vec_panel(x, l)[c]
+    return out
+
+
+def vec_from_components(comps, L: int) -> np.ndarray:
+    """Assemble a flat vector feature from 3 scalar features (irrep order)."""
+    out = np.zeros(vec_dim(L))
+    for l in range(L + 1):
+        p = vec_panel(out, l)
+        for c in range(3):
+            p[c] = comps[c][so3.lm_index(l, -l) : so3.lm_index(l, l) + 1]
+    return out
+
+
+def rhat_signal() -> np.ndarray:
+    """The constant degree-1 vector signal F(u) = u."""
+    x = np.zeros(vec_dim(1))
+    for c in range(3):
+        x[vec_index(1, c, c - 1)] = SQRT_4PI / math.sqrt(3.0)
+    return x
+
+
+def field_eval(x: np.ndarray, L: int, u: np.ndarray) -> np.ndarray:
+    """Evaluate the vector field (xyz components) at unit points u[N, 3]."""
+    y = so3.real_sh_xyz(L, u)  # [N, (L+1)^2]
+    out = np.zeros_like(u)
+    for c in range(3):
+        out[:, CART[c]] = y @ vec_component(x, L, c)
+    return out
+
+
+# --------------------------------------------------------------------------
+# real vector spherical harmonics
+# --------------------------------------------------------------------------
+
+
+def sh_surface_grad(L: int, u: np.ndarray) -> np.ndarray:
+    """Surface gradient of every real SH at unit points: [N, (L+1)^2, 3].
+
+    Via the homogeneous monomial tables: Y_lm extends to a degree-l
+    homogeneous polynomial P; on the sphere grad_S Y = grad P - l P u
+    (already tangential by Euler's identity u . grad P = l P).
+    """
+    exps, coefs = so3.sh_monomial_table(L)
+    n = so3.num_coeffs(L)
+    u = np.asarray(u, dtype=np.float64)
+    out = np.zeros((u.shape[0], n, 3))
+    p_all = so3.real_sh_xyz_poly(L, u)
+    for l in range(L + 1):
+        e = exps[l]  # [nmono, 3]
+        sl = slice(so3.lm_index(l, -l), so3.lm_index(l, l) + 1)
+        grad = np.zeros((u.shape[0], 2 * l + 1, 3))
+        for axis in range(3):
+            de = e.copy()
+            de[:, axis] = np.maximum(de[:, axis] - 1, 0)
+            mono = np.prod(u[:, None, :] ** de[None, :, :], axis=2)
+            mono = mono * e[:, axis][None, :]
+            grad[:, :, axis] = mono @ coefs[l].T
+        out[:, sl, :] = grad - l * p_all[:, sl, None] * u[:, None, :]
+    return out
+
+
+def vsh_eval(kind: str, l: int, m: int, u: np.ndarray) -> np.ndarray:
+    """One real VSH at unit points u[N, 3] -> xyz vectors [N, 3]."""
+    u = np.asarray(u, dtype=np.float64)
+    i = so3.lm_index(l, m)
+    if kind == "Y":
+        return so3.real_sh_xyz_poly(l, u)[:, i, None] * u
+    if l == 0:
+        raise ValueError("Psi/Phi require l >= 1")
+    psi = sh_surface_grad(l, u)[:, i, :] / math.sqrt(l * (l + 1))
+    if kind == "Psi":
+        return psi
+    if kind == "Phi":
+        return np.cross(u, psi)
+    raise ValueError(f"unknown VSH kind {kind!r}")
+
+
+def vsh_set(l_y: int, l_psi: int, l_phi: int):
+    """The (kind, l, m) index list: Y to l_y, Psi/Phi from 1."""
+    out = []
+    for l in range(l_y + 1):
+        for m in range(-l, l + 1):
+            out.append(("Y", l, m))
+    for l in range(1, l_psi + 1):
+        for m in range(-l, l + 1):
+            out.append(("Psi", l, m))
+    for l in range(1, l_phi + 1):
+        for m in range(-l, l + 1):
+            out.append(("Phi", l, m))
+    return out
+
+
+def quad_points(deg: int):
+    """Quadrature nodes as unit vectors [K*J, 3] with weights [K*J]."""
+    theta, phi, w, dphi = so3.sphere_quadrature(deg)
+    th, ph = np.meshgrid(theta, phi, indexing="ij")
+    u = np.stack(
+        [
+            np.sin(th) * np.cos(ph),
+            np.sin(th) * np.sin(ph),
+            np.cos(th),
+        ],
+        axis=-1,
+    ).reshape(-1, 3)
+    wts = np.broadcast_to(w[:, None] * dphi, th.shape).reshape(-1)
+    return u, wts
+
+
+def vsh_dot_gaunt(L3: int, vset1, vset2, deg_margin: int = 4) -> np.ndarray:
+    """T[k3, J1, J2] = int Y_{k3} (V_{J1} . V_{J2}) dOmega by quadrature."""
+    lmax = max([l for _, l, _ in vset1] + [l for _, l, _ in vset2])
+    u, w = quad_points(L3 + 2 * lmax + deg_margin)
+    y3 = so3.real_sh_xyz(L3, u)  # [N, n3]
+    v1 = np.stack([vsh_eval(k, l, m, u) for (k, l, m) in vset1])  # [J1, N, 3]
+    v2 = np.stack([vsh_eval(k, l, m, u) for (k, l, m) in vset2])
+    t = np.einsum("nk,anx,bnx,n->kab", y3, v1, v2, w, optimize=True)
+    t[np.abs(t) < 1e-12] = 0.0
+    return t
+
+
+def vsh_project(F, vset, deg: int) -> np.ndarray:
+    """Project a vector field (callable u -> [N,3]) onto a VSH set."""
+    u, w = quad_points(deg)
+    fv = F(u)
+    return np.array(
+        [np.einsum("nx,nx,n->", vsh_eval(k, l, m, u), fv, w) for (k, l, m) in vset]
+    )
+
+
+def cart_feature_from_vsh(coeffs: np.ndarray, vset, L_out: int) -> np.ndarray:
+    """Convert VSH coefficients to the Cartesian-component layout (deg <= L_out)."""
+    lmax = max(l for _, l, _ in vset)
+    deg = L_out + lmax + 3
+    u, w = quad_points(deg)
+    fv = np.zeros((u.shape[0], 3))
+    for a, (k, l, m) in enumerate(vset):
+        fv += coeffs[a] * vsh_eval(k, l, m, u)
+    y = so3.real_sh_xyz(L_out, u)
+    comps = []
+    for c in range(3):
+        comps.append(np.einsum("ni,n,n->i", y, fv[:, CART[c]], w))
+    return vec_from_components(comps, L_out)
+
+
+# --------------------------------------------------------------------------
+# the three plan kinds (exact Gaunt-tensor mirrors of VectorGauntPlan)
+# --------------------------------------------------------------------------
+
+
+def eps_irrep() -> np.ndarray:
+    """Levi-Civita tensor re-indexed to irrep component order."""
+    eps = np.zeros((3, 3, 3))
+    for c in range(3):
+        for a in range(3):
+            for b in range(3):
+                i, j, k = CART[c], CART[a], CART[b]
+                if (i, j, k) in ((0, 1, 2), (1, 2, 0), (2, 0, 1)):
+                    eps[c, a, b] = 1.0
+                elif (i, j, k) in ((0, 2, 1), (2, 1, 0), (1, 0, 2)):
+                    eps[c, a, b] = -1.0
+    return eps
+
+
+EPS = eps_irrep()
+
+
+def apply_sv(l1: int, l2: int, l3: int, s: np.ndarray, v: np.ndarray) -> np.ndarray:
+    g = so3.gaunt_tensor_real(l1, l2, l3)
+    comps = [np.einsum("kij,i,j->k", g, s, vec_component(v, l2, c)) for c in range(3)]
+    return vec_from_components(comps, l3)
+
+
+def apply_dot(l1: int, l2: int, l3: int, v1: np.ndarray, v2: np.ndarray) -> np.ndarray:
+    g = so3.gaunt_tensor_real(l1, l2, l3)
+    out = np.zeros(so3.num_coeffs(l3))
+    for c in range(3):
+        out += np.einsum(
+            "kij,i,j->k", g, vec_component(v1, l1, c), vec_component(v2, l2, c)
+        )
+    return out
+
+
+def apply_cross(l1: int, l2: int, l3: int, v1: np.ndarray, v2: np.ndarray) -> np.ndarray:
+    g = so3.gaunt_tensor_real(l1, l2, l3)
+    c1 = [vec_component(v1, l1, c) for c in range(3)]
+    c2 = [vec_component(v2, l2, c) for c in range(3)]
+    comps = [np.zeros(so3.num_coeffs(l3)) for _ in range(3)]
+    for c in range(3):
+        for a in range(3):
+            for b in range(3):
+                e = EPS[c, a, b]
+                if e != 0.0:
+                    comps[c] += e * np.einsum("kij,i,j->k", g, c1[a], c2[b])
+    return vec_from_components(comps, l3)
+
+
+def plan_apply(kind: str, l1: int, l2: int, l3: int, x1, x2) -> np.ndarray:
+    if kind == "sv":
+        return apply_sv(l1, l2, l3, x1, x2)
+    if kind == "dot":
+        return apply_dot(l1, l2, l3, x1, x2)
+    if kind == "cross":
+        return apply_cross(l1, l2, l3, x1, x2)
+    raise ValueError(kind)
+
+
+def plan_vjp_x1(kind: str, l1: int, l2: int, l3: int, x2, g) -> np.ndarray:
+    """d<g, plan(x1, x2)>/dx1 via the degree-rotated sibling plans."""
+    if kind == "sv":
+        return apply_dot(l3, l2, l1, g, x2)
+    if kind == "dot":
+        return apply_sv(l3, l2, l1, g, x2)
+    if kind == "cross":
+        return apply_cross(l2, l3, l1, x2, g)
+    raise ValueError(kind)
+
+
+def plan_dims(kind: str, l1: int, l2: int, l3: int):
+    """(dim_x1, dim_x2, dim_out) for a plan kind."""
+    n = so3.num_coeffs
+    if kind == "sv":
+        return n(l1), vec_dim(l2), vec_dim(l3)
+    if kind == "dot":
+        return vec_dim(l1), vec_dim(l2), n(l3)
+    if kind == "cross":
+        return vec_dim(l1), vec_dim(l2), vec_dim(l3)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# transforms: proper and improper rotations with the right parity
+# --------------------------------------------------------------------------
+
+
+def transform_scalar(x: np.ndarray, L: int, o: np.ndarray) -> np.ndarray:
+    """Scalar signal under a (possibly improper) orthogonal map o."""
+    det = float(np.sign(np.linalg.det(o)))
+    r = o * det
+    out = np.zeros_like(x)
+    for l in range(L + 1):
+        sl = slice(so3.lm_index(l, -l), so3.lm_index(l, l) + 1)
+        out[sl] = (det**l) * (so3.wigner_d_real(l, r) @ x[sl])
+    return out
+
+
+def transform_vector(
+    x: np.ndarray, L: int, o: np.ndarray, pseudo: bool = False
+) -> np.ndarray:
+    """Vector signal under o: components mix with D^1, each degree with D^l.
+
+    A polar vector picks up det(o)^{l+1} per degree under an improper map,
+    a pseudovector det(o)^l.
+    """
+    det = float(np.sign(np.linalg.det(o)))
+    r = o * det
+    d1 = so3.wigner_d_real(1, r)
+    out = np.zeros_like(x)
+    for l in range(L + 1):
+        dl = so3.wigner_d_real(l, r)
+        f = det**l if pseudo else det ** (l + 1)
+        vec_panel(out, l)[:] = f * (d1 @ vec_panel(x, l) @ dl.T)
+    return out
+
+
+def plan_transform_io(kind: str, l1: int, l2: int, l3: int, x1, x2, o):
+    """(T x1, T x2, out-transformer) under the plan's parity typing."""
+    if kind == "sv":
+        return (
+            transform_scalar(x1, l1, o),
+            transform_vector(x2, l2, o),
+            lambda y: transform_vector(y, l3, o),
+        )
+    if kind == "dot":
+        return (
+            transform_vector(x1, l1, o),
+            transform_vector(x2, l2, o),
+            lambda y: transform_scalar(y, l3, o),
+        )
+    if kind == "cross":
+        return (
+            transform_vector(x1, l1, o),
+            transform_vector(x2, l2, o),
+            lambda y: transform_vector(y, l3, o, pseudo=True),
+        )
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# dipole readout head (mirror of model::DipoleHead)
+# --------------------------------------------------------------------------
+
+
+def dipole_forward(h: np.ndarray, channels: int, L: int, w: np.ndarray, c_dip: float):
+    """Per-atom dipole from node features h (Irreps::spherical(C, L) flat).
+
+    s^c = w[(l, c)]-scaled channel c of h (per-degree path weights),
+    t^c = sv(L, 1, L)(s^c, rhat),  d^c_k = <s^c, t^c_k>,
+    mu = c_dip * sum_c d^c mapped from irrep to xyz order.
+
+    Returns (mu_xyz[3], saved) with intermediates for the backward.
+    """
+    nf = so3.num_coeffs(L)
+    rhat = rhat_signal()
+    mu_irr = np.zeros(3)
+    saved = []
+    for c in range(channels):
+        s = np.zeros(nf)
+        for l in range(L + 1):
+            sl = slice(so3.lm_index(l, -l), so3.lm_index(l, l) + 1)
+            s[sl] = w[l * channels + c] * h[_spherical_slot(h, channels, L, l, c)]
+        t = apply_sv(L, 1, L, s, rhat)
+        d = np.array([s @ vec_component(t, L, k) for k in range(3)])
+        mu_irr += c_dip * d
+        saved.append((s, t, d))
+    mu = np.zeros(3)
+    for k in range(3):
+        mu[CART[k]] = mu_irr[k]
+    return mu, saved
+
+
+def _spherical_slot(h: np.ndarray, channels: int, L: int, l: int, c: int):
+    base = channels * l * l + c * (2 * l + 1)
+    return slice(base, base + 2 * l + 1)
+
+
+def dipole_grads(
+    h: np.ndarray, channels: int, L: int, w: np.ndarray, c_dip: float, g_mu: np.ndarray
+):
+    """Gradients of <g_mu, mu> w.r.t. (w, c_dip).  Mirrors the Rust backward:
+    the quadratic form in s gives dL/ds = c_dip * (sum_k g_k t_k + vjp of the
+    sv lift), then dL/dw via per-path dots against the unscaled channel."""
+    nf = so3.num_coeffs(L)
+    rhat = rhat_signal()
+    g_irr = np.array([g_mu[CART[k]] for k in range(3)])
+    _, saved = dipole_forward(h, channels, L, w, c_dip)
+    gw = np.zeros_like(w)
+    gc = 0.0
+    for c in range(channels):
+        s, t, d = saved[c]
+        gc += float(g_irr @ d)
+        # dL/ds from d_k = <s, t_k> (s appears twice: directly and inside t)
+        gs = np.zeros(nf)
+        for k in range(3):
+            gs += c_dip * g_irr[k] * vec_component(t, L, k)
+        gt = vec_from_components(
+            [c_dip * g_irr[k] * s for k in range(3)], L
+        )
+        gs += plan_vjp_x1("sv", L, 1, L, rhat, gt)
+        # dL/dw[(l, c)] = <gs_l, h^c_l>
+        for l in range(L + 1):
+            sl = slice(so3.lm_index(l, -l), so3.lm_index(l, l) + 1)
+            gw[l * channels + c] = gs[sl] @ h[_spherical_slot(h, channels, L, l, c)]
+    return gw, gc
+
+
+# --------------------------------------------------------------------------
+# checks
+# --------------------------------------------------------------------------
+
+
+def check_vsh_orthonormality(L: int = 3):
+    vset = vsh_set(L, L, L)
+    u, w = quad_points(2 * L + 6)
+    vals = np.stack([vsh_eval(k, l, m, u) for (k, l, m) in vset])
+    gram = np.einsum("anx,bnx,n->ab", vals, vals, w)
+    err = np.abs(gram - np.eye(len(vset))).max()
+    assert err < 1e-10, f"VSH not orthonormal: {err}"
+    return err
+
+
+def check_vsh_completeness(L: int = 2, seed: int = 0):
+    """A Cartesian vector signal of degree <= L expands exactly in
+    {Y, Psi <= L+1, Phi <= L} — the truncation the Rust layout relies on."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(vec_dim(L))
+    vset = vsh_set(L + 1, L + 1, L)
+    coeffs = vsh_project(lambda u: field_eval(x, L, u), vset, 2 * L + 8)
+    pts = rng.standard_normal((40, 3))
+    pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+    recon = np.zeros((40, 3))
+    for a, (k, l, m) in enumerate(vset):
+        recon += coeffs[a] * vsh_eval(k, l, m, pts)
+    err = np.abs(recon - field_eval(x, L, pts)).max()
+    assert err < 1e-9, f"VSH truncation incomplete: {err}"
+    return err
+
+
+def check_rhat_signal():
+    pts = np.random.default_rng(1).standard_normal((20, 3))
+    pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+    err = np.abs(field_eval(rhat_signal(), 1, pts) - pts).max()
+    assert err < 1e-12, f"rhat signal wrong: {err}"
+    return err
+
+
+def check_pointwise_semantics(seed: int = 2):
+    """For l3 = l1 + l2 the plan output *is* the pointwise product field."""
+    rng = np.random.default_rng(seed)
+    pts = rng.standard_normal((30, 3))
+    pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+    l1, l2 = 2, 1
+    l3 = l1 + l2
+    s = rng.standard_normal(so3.num_coeffs(l1))
+    v1 = rng.standard_normal(vec_dim(l1))
+    v2 = rng.standard_normal(vec_dim(l2))
+    sf = so3.real_sh_xyz(l1, pts) @ s
+    f1 = field_eval(v1, l1, pts)
+    f2 = field_eval(v2, l2, pts)
+
+    out = apply_sv(l1, l2, l3, s, v2)
+    err = np.abs(field_eval(out, l3, pts) - sf[:, None] * f2).max()
+    assert err < 1e-9, f"sv pointwise: {err}"
+
+    out = apply_dot(l1, l2, l3, v1, v2)
+    got = so3.real_sh_xyz(l3, pts) @ out
+    err = np.abs(got - np.einsum("nx,nx->n", f1, f2)).max()
+    assert err < 1e-9, f"dot pointwise: {err}"
+
+    out = apply_cross(l1, l2, l3, v1, v2)
+    err = np.abs(field_eval(out, l3, pts) - np.cross(f1, f2)).max()
+    assert err < 1e-9, f"cross pointwise: {err}"
+
+
+def check_equivariance(seed: int = 3, cases: int = 4):
+    """Proper AND improper equivariance for every kind (truncating l3)."""
+    rng = np.random.default_rng(seed)
+    triples = [("sv", 2, 2, 2), ("dot", 2, 1, 2), ("cross", 1, 2, 2),
+               ("cross", 2, 2, 1)]
+    worst = 0.0
+    for _ in range(cases):
+        r = so3.random_rotation(rng)
+        for o in (r, -r):
+            for kind, l1, l2, l3 in triples:
+                n1, n2, _ = plan_dims(kind, l1, l2, l3)
+                x1 = rng.standard_normal(n1)
+                x2 = rng.standard_normal(n2)
+                tx1, tx2, tout = plan_transform_io(kind, l1, l2, l3, x1, x2, o)
+                a = plan_apply(kind, l1, l2, l3, tx1, tx2)
+                b = tout(plan_apply(kind, l1, l2, l3, x1, x2))
+                err = np.abs(a - b).max()
+                worst = max(worst, err)
+                assert err < 1e-8, (
+                    f"{kind}({l1},{l2},{l3}) det={np.linalg.det(o):+.0f}: {err}"
+                )
+    return worst
+
+
+def check_vjps(seed: int = 4):
+    """Sibling-plan VJPs against finite differences of <g, apply(x1, x2)>."""
+    rng = np.random.default_rng(seed)
+    h = 1e-6
+    for kind, l1, l2, l3 in [("sv", 2, 1, 2), ("dot", 2, 1, 2),
+                             ("cross", 1, 1, 1), ("cross", 2, 1, 2)]:
+        n1, n2, n3 = plan_dims(kind, l1, l2, l3)
+        x1 = rng.standard_normal(n1)
+        x2 = rng.standard_normal(n2)
+        g = rng.standard_normal(n3)
+        grad = plan_vjp_x1(kind, l1, l2, l3, x2, g)
+        assert grad.shape == (n1,)
+        for i in range(n1):
+            xp = x1.copy(); xp[i] += h
+            xm = x1.copy(); xm[i] -= h
+            fd = (
+                g @ plan_apply(kind, l1, l2, l3, xp, x2)
+                - g @ plan_apply(kind, l1, l2, l3, xm, x2)
+            ) / (2 * h)
+            assert abs(grad[i] - fd) < 1e-5 * (1.0 + abs(fd)), (
+                f"{kind}({l1},{l2},{l3}) comp {i}: vjp {grad[i]} vs fd {fd}"
+            )
+
+
+def check_vsh_coupling_vs_plan(seed: int = 5):
+    """The VSH-basis dot coupling tensor agrees with the Cartesian route:
+    contract T[k3, J1, J2] with VSH coefficients == convert both operands to
+    the Cartesian layout and run the dot plan."""
+    rng = np.random.default_rng(seed)
+    lv, l3 = 1, 2
+    vset = vsh_set(lv, lv, lv)
+    t = vsh_dot_gaunt(l3, vset, vset)
+    a = rng.standard_normal(len(vset))
+    b = rng.standard_normal(len(vset))
+    want = np.einsum("kab,a,b->k", t, a, b)
+    lc = lv + 1  # Cartesian-layout degree that holds VSH of degree <= lv
+    xa = cart_feature_from_vsh(a, vset, lc)
+    xb = cart_feature_from_vsh(b, vset, lc)
+    got = apply_dot(lc, lc, l3, xa, xb)
+    err = np.abs(got - want).max()
+    assert err < 1e-8, f"VSH coupling vs Cartesian plan route: {err}"
+    return err
+
+
+def check_dipole(seed: int = 6):
+    """FD gradient check and O(3) equivariance of the dipole head."""
+    rng = np.random.default_rng(seed)
+    channels, L = 2, 2
+    nd = channels * so3.num_coeffs(L)
+    h = rng.standard_normal(nd)
+    w = rng.standard_normal(channels * (L + 1))
+    c_dip = 0.7
+    g_mu = rng.standard_normal(3)
+    gw, gc = dipole_grads(h, channels, L, w, c_dip, g_mu)
+    step = 1e-6
+    for i in range(len(w)):
+        wp = w.copy(); wp[i] += step
+        wm = w.copy(); wm[i] -= step
+        fd = (
+            g_mu @ dipole_forward(h, channels, L, wp, c_dip)[0]
+            - g_mu @ dipole_forward(h, channels, L, wm, c_dip)[0]
+        ) / (2 * step)
+        assert abs(gw[i] - fd) < 1e-5 * (1.0 + abs(fd)), f"dw[{i}]: {gw[i]} vs {fd}"
+    fd = (
+        g_mu @ dipole_forward(h, channels, L, w, c_dip + step)[0]
+        - g_mu @ dipole_forward(h, channels, L, w, c_dip - step)[0]
+    ) / (2 * step)
+    assert abs(gc - fd) < 1e-5 * (1.0 + abs(fd)), f"dc_dip: {gc} vs {fd}"
+
+    # mu is a polar vector: mu(T h) = O mu(h) for proper AND improper O
+    mu, _ = dipole_forward(h, channels, L, w, c_dip)
+    r = so3.random_rotation(rng)
+    for o in (r, -r):
+        th = np.zeros_like(h)
+        for c in range(channels):
+            hc = np.concatenate(
+                [h[_spherical_slot(h, channels, L, l, c)] for l in range(L + 1)]
+            )
+            rc = transform_scalar(hc, L, o)
+            for l in range(L + 1):
+                sl = slice(so3.lm_index(l, -l), so3.lm_index(l, l) + 1)
+                th[_spherical_slot(th, channels, L, l, c)] = rc[sl]
+        tmu, _ = dipole_forward(th, channels, L, w, c_dip)
+        err = np.abs(tmu - o @ mu).max()
+        assert err < 1e-8, f"dipole equivariance det={np.linalg.det(o):+.0f}: {err}"
+
+
+def run_checks(verbose: bool = True):
+    steps = [
+        ("VSH orthonormality", check_vsh_orthonormality),
+        ("VSH truncation completeness", check_vsh_completeness),
+        ("rhat constant signal", check_rhat_signal),
+        ("pointwise product semantics", check_pointwise_semantics),
+        ("O(3) equivariance (proper + improper)", check_equivariance),
+        ("sibling-plan VJPs vs FD", check_vjps),
+        ("VSH coupling tensor vs Cartesian route", check_vsh_coupling_vs_plan),
+        ("dipole head grads + equivariance", check_dipole),
+    ]
+    for name, fn in steps:
+        fn()
+        if verbose:
+            print(f"  ok: {name}")
+
+
+# --------------------------------------------------------------------------
+# golden emission
+# --------------------------------------------------------------------------
+
+
+def golden_doc() -> dict:
+    rng = np.random.default_rng(20260807)
+    doc: dict = {"meta": {"tol": 1e-9, "seed": 20260807}}
+
+    # VSH values at fixed points (Rust evaluates the same basis natively)
+    pts = rng.standard_normal((6, 3))
+    pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+    entries = []
+    for kind, l, m in vsh_set(3, 3, 3):
+        entries.append(
+            {
+                "kind": kind,
+                "l": l,
+                "m": m,
+                "values": vsh_eval(kind, l, m, pts).reshape(-1).tolist(),
+            }
+        )
+    doc["vsh"] = {"points": pts.reshape(-1).tolist(), "entries": entries}
+
+    # plan io pairs (apply + cotangent + vjp grad) per kind
+    plans = []
+    for kind, l1, l2, l3 in [
+        ("sv", 2, 2, 2),
+        ("sv", 1, 2, 3),
+        ("dot", 2, 2, 2),
+        ("dot", 2, 1, 3),
+        ("cross", 1, 1, 1),
+        ("cross", 2, 1, 2),
+    ]:
+        n1, n2, n3 = plan_dims(kind, l1, l2, l3)
+        x1 = rng.standard_normal(n1)
+        x2 = rng.standard_normal(n2)
+        g = rng.standard_normal(n3)
+        plans.append(
+            {
+                "kind": kind,
+                "l1": l1,
+                "l2": l2,
+                "l3": l3,
+                "x1": x1.tolist(),
+                "x2": x2.tolist(),
+                "out": plan_apply(kind, l1, l2, l3, x1, x2).tolist(),
+                "cotangent": g.tolist(),
+                "grad_x1": plan_vjp_x1(kind, l1, l2, l3, x2, g).tolist(),
+            }
+        )
+    doc["plans"] = plans
+
+    # VSH-basis dot coupling tensor (small: degrees <= 1, output <= 2)
+    vset = vsh_set(1, 1, 1)
+    t = vsh_dot_gaunt(2, vset, vset)
+    doc["vsh_dot_gaunt"] = {
+        "l3": 2,
+        "vset": [[k, l, m] for (k, l, m) in vset],
+        "tensor": t.reshape(-1).tolist(),
+    }
+
+    # dipole head forward + grads on fixed features
+    channels, L = 2, 2
+    h = rng.standard_normal(channels * so3.num_coeffs(L))
+    w = rng.standard_normal(channels * (L + 1))
+    c_dip = 0.7
+    g_mu = rng.standard_normal(3)
+    mu, _ = dipole_forward(h, channels, L, w, c_dip)
+    gw, gc = dipole_grads(h, channels, L, w, c_dip, g_mu)
+    doc["dipole"] = {
+        "channels": channels,
+        "l": L,
+        "h": h.tolist(),
+        "w": w.tolist(),
+        "c_dip": c_dip,
+        "mu": mu.tolist(),
+        "g_mu": g_mu.tolist(),
+        "grad_w": gw.tolist(),
+        "grad_c_dip": gc,
+    }
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true", help="run every assertion")
+    ap.add_argument("--out", help="artifacts dir (writes golden/vector_golden.json)")
+    args = ap.parse_args()
+    if not args.check and not args.out:
+        ap.error("pass --check and/or --out DIR")
+    if args.check:
+        print("vector_golden: running mirror checks")
+        run_checks()
+        print("vector_golden: ALL CHECKS PASSED")
+    if args.out:
+        doc = golden_doc()
+        path = os.path.join(args.out, "golden", "vector_golden.json")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        print(f"vector_golden: wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+//! Vector-signal Gaunt products — `tp::vector` scaling (DESIGN.md §15).
+//!
+//! The three vector operators (scalar x vector, vector . vector,
+//! vector x vector) route Cartesian components through the scalar
+//! sh2f -> conv -> f2sh pipeline, so each costs a small constant
+//! multiple of the scalar Gaunt product: O(L^3) overall.  The baseline
+//! is [`NaiveVectorTp`], the dense Gaunt-tensor contraction (O(L^6))
+//! the conformance tests oracle against — the same planned-vs-dense
+//! comparison Fig. 1 makes for scalar signals, here for vector ones.
+//!
+//! Rows per degree: naive dense, planned direct conv, planned FFT, for
+//! each kind; a `speedup` line per degree summarizes planned-best over
+//! naive.  `--smoke`: one tiny size, 1 ms budgets, no TSV.
+
+use gaunt_tp::num_coeffs;
+use gaunt_tp::tp::{ConvMethod, NaiveVectorTp, VectorGauntPlan, VectorKind};
+use gaunt_tp::util::bench::{budget_ms, consume, fmt_ns, smoke, BenchTable};
+use gaunt_tp::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let mut t = BenchTable::new(
+        "fig_vector: vector-signal Gaunt products, planned vs dense",
+    );
+    let ls: &[usize] = if smoke() { &[2] } else { &[1, 2, 3, 4, 6, 8] };
+    let budget = budget_ms(150);
+    let kinds = [
+        VectorKind::ScalarVector,
+        VectorKind::VectorDot,
+        VectorKind::VectorCross,
+    ];
+    for &l in ls {
+        let nf = num_coeffs(l);
+        let mut best_planned = f64::INFINITY;
+        let mut naive_ns = f64::INFINITY;
+        for kind in kinds {
+            let plan = VectorGauntPlan::new(kind, l, l, l, ConvMethod::Direct);
+            let (n1, n2, n3) = plan.dims();
+            let x1 = rng.normals(n1);
+            let x2 = rng.normals(n2);
+            // dense Gaunt-tensor baseline: build cost excluded, the
+            // contraction itself is the O(L^6) story.  Degrees past 6
+            // take whole seconds per call; skip the naive row there.
+            if l <= 6 {
+                let naive = NaiveVectorTp::new(kind, l, l, l);
+                let m = gaunt_tp::util::bench::bench(
+                    &format!("naive_dense  {:<5} L={l}", kind.name()),
+                    budget,
+                    || {
+                        consume(naive.apply(&x1, &x2));
+                    },
+                );
+                naive_ns = naive_ns.min(m.median_ns);
+                t.add(m);
+            }
+            for method in [ConvMethod::Direct, ConvMethod::Fft] {
+                let plan = VectorGauntPlan::new(kind, l, l, l, method);
+                let mut out = vec![0.0; n3];
+                let mut scratch = plan.scratch();
+                let label = match method {
+                    ConvMethod::Fft => "plan_fft",
+                    _ => "plan_direct",
+                };
+                let m = gaunt_tp::util::bench::bench(
+                    &format!("{label:<12} {:<5} L={l}", kind.name()),
+                    budget,
+                    || {
+                        plan.apply_into(&x1, &x2, &mut out, &mut scratch);
+                        consume(&out);
+                    },
+                );
+                best_planned = best_planned.min(m.median_ns);
+                t.add(m);
+            }
+        }
+        if naive_ns.is_finite() {
+            println!(
+                "  -> L={l} (nf={nf}): fastest planned {} vs fastest naive \
+                 {}  ({:.1}x)",
+                fmt_ns(best_planned),
+                fmt_ns(naive_ns),
+                naive_ns / best_planned
+            );
+        }
+    }
+    if smoke() {
+        println!("[smoke] fig_vector OK ({} rows)", t.rows.len());
+    } else {
+        t.write_tsv("fig_vector");
+    }
+}

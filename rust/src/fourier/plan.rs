@@ -325,6 +325,54 @@ impl ConvPlan {
         }
     }
 
+    /// Joint sample arrays of an operand pair through ONE packed inverse
+    /// FFT: `z = wrap1(a) + i wrap2(b)`, so `qa = Re INV2[z]` and
+    /// `qb = Im INV2[z]` are the real sample arrays of `a` and `b`
+    /// (both Hermitian by assumption).  Halves the forward-transform
+    /// count of pipelines that need both sample arrays separately —
+    /// e.g. the vector plans, which accumulate several pointwise
+    /// products before one shared [`ConvPlan::grid_from_samples_into`].
+    /// `a` must be `n1 x n1` and `b` `n2 x n2`.  Allocation-free.
+    pub fn samples_pair_into(
+        &self, a: &[C64], b: &[C64], qa: &mut [f64], qb: &mut [f64],
+        scratch: &mut ConvScratch,
+    ) {
+        let (n1, n2, m) = (self.n1, self.n2, self.m);
+        debug_assert_eq!(a.len(), n1 * n1);
+        debug_assert_eq!(b.len(), n2 * n2);
+        debug_assert_eq!(qa.len(), m * m);
+        debug_assert_eq!(qb.len(), m * m);
+        debug_assert!(n1 % 2 == 1 && n2 % 2 == 1,
+                      "hermitian path needs centered odd-size grids");
+        if m == 1 {
+            qa[0] = a[0].re;
+            qb[0] = b[0].re;
+            return;
+        }
+        let z = &mut scratch.z;
+        z.fill(C64::default());
+        for i in 0..n1 {
+            let r = self.wrap1[i] * m;
+            for j in 0..n1 {
+                z[r + self.wrap1[j]] = a[i * n1 + j];
+            }
+        }
+        for i in 0..n2 {
+            let r = self.wrap2[i] * m;
+            for j in 0..n2 {
+                let g = b[i * n2 + j];
+                let cell = &mut z[r + self.wrap2[j]];
+                cell.re -= g.im;
+                cell.im += g.re;
+            }
+        }
+        self.fft.fft2_inplace(z, true, &mut scratch.col);
+        for (p, zv) in z.iter().enumerate() {
+            qa[p] = zv.re;
+            qb[p] = zv.im;
+        }
+    }
+
     /// Transform a real sample-product array back to the centered output
     /// grid: `out = wrap^{-1}[FWD2[q] / m^2]`.  The counterpart of
     /// [`ConvPlan::samples_into`] for cached-spectrum / chained-product
@@ -457,6 +505,30 @@ mod tests {
         plan.grid_from_samples_into(&fa, &mut got, &mut scratch);
         let want = conv2d_direct(&a, n1, &b, n2);
         assert!(max_diff(&got, &want) < 1e-9, "{}", max_diff(&got, &want));
+    }
+
+    #[test]
+    fn samples_pair_matches_single_sampling() {
+        let mut rng = Rng::new(5);
+        for (n1, n2) in [(1usize, 1usize), (3, 3), (5, 3), (5, 7)] {
+            let a = rand_hermitian_grid(&mut rng, n1);
+            let b = rand_hermitian_grid(&mut rng, n2);
+            let plan = ConvPlan::new(n1, n2);
+            let mut scratch = plan.scratch();
+            let m = plan.m;
+            let (mut fa, mut fb) = (vec![0.0; m * m], vec![0.0; m * m]);
+            plan.samples_into(&a, n1, &mut fa, &mut scratch);
+            plan.samples_into(&b, n2, &mut fb, &mut scratch);
+            let (mut qa, mut qb) = (vec![0.0; m * m], vec![0.0; m * m]);
+            plan.samples_pair_into(&a, &b, &mut qa, &mut qb, &mut scratch);
+            let d = fa
+                .iter()
+                .zip(&qa)
+                .chain(fb.iter().zip(&qb))
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f64::max);
+            assert!(d < 1e-9, "n1={n1} n2={n2}: {d}");
+        }
     }
 
     #[test]

@@ -26,7 +26,9 @@
 //!                             or unix:/path)
 //!   frontdoor --listen ADDR (--replica ADDR)* [--spawn-replicas N]
 //!                             route across replicas; --spawn-replicas
-//!                             self-spawns N replica child processes
+//!                             self-spawns N replica child processes and
+//!                             supervises them (dead children respawn
+//!                             with bounded backoff and rejoin routing)
 //!   net-worker --connect ADDR [--requests N] ...   loadtest client
 //!                             process body; prints a NETLOAD ledger
 //!   md-demo                   short MD run of the 3BPA-lite molecule
@@ -40,7 +42,7 @@ use gaunt_tp::net::loadtest::{
     run_client_worker, run_cluster_loadtest, LoadOpts,
 };
 use gaunt_tp::net::{temp_socket_path, Addr, FrontDoor, FrontDoorConfig,
-                    Replica};
+                    Replica, RespawnPolicy};
 use gaunt_tp::runtime::Engine;
 use gaunt_tp::util::error::Result;
 
@@ -239,6 +241,7 @@ fn main() -> Result<()> {
             let spawn_n: usize = arg_value(&args, "--spawn-replicas")
                 .and_then(|v| v.parse().ok())
                 .unwrap_or(0);
+            // (replica index, child, respawn argv) for supervision
             let mut children = Vec::new();
             if spawn_n > 0 {
                 let exe = std::env::current_exe()
@@ -246,17 +249,19 @@ fn main() -> Result<()> {
                 for i in 0..spawn_n {
                     let sock = temp_socket_path(&format!("cluster-r{i}"));
                     let raddr = Addr::Unix(sock);
-                    let child = std::process::Command::new(&exe)
-                        .args([
-                            "replica",
-                            "--listen",
-                            &raddr.to_string(),
-                            "--name",
-                            &format!("r{i}"),
-                        ])
+                    let cmd: Vec<String> = vec![
+                        exe.to_string_lossy().into_owned(),
+                        "replica".to_string(),
+                        "--listen".to_string(),
+                        raddr.to_string(),
+                        "--name".to_string(),
+                        format!("r{i}"),
+                    ];
+                    let child = std::process::Command::new(&cmd[0])
+                        .args(&cmd[1..])
                         .spawn()
                         .map_err(|e| err!("spawn replica {i}: {e}"))?;
-                    children.push(child);
+                    children.push((replica_addrs.len(), child, cmd));
                     replica_addrs.push(raddr);
                 }
             }
@@ -271,6 +276,11 @@ fn main() -> Result<()> {
                 FrontDoorConfig::default(),
             )
             .map_err(|e| err!("bind: {e}"))?;
+            // spawned children are supervised: a dead one is respawned
+            // with bounded backoff and rejoins via the prober
+            for (idx, child, cmd) in children {
+                fd.supervise(idx, child, cmd, RespawnPolicy::default());
+            }
             println!(
                 "front door on {} routing to {} replica(s)",
                 fd.bound()[0],

@@ -1,0 +1,350 @@
+//! Vector (dipole) readout head on top of the model's node features.
+//!
+//! The head turns each atom's final equivariant features `h` (layout
+//! [`Irreps::spherical`]`(channels, L)`) into a per-atom polar vector:
+//!
+//! ```text
+//!   s^c   = w[(l, c)] (.) h^c            per-degree path weights
+//!   t^c   = sv(L, 1, L)(s^c, rhat)       lift against the identity
+//!                                        vector field F(u) = u
+//!   d^c_k = <s^c, t^c_k>                 k = irrep component (y, z, x)
+//!   mu    = c_dip sum_c d^c              mapped irrep -> xyz order
+//! ```
+//!
+//! `d^c` is quadratic in `s^c`, so it is the simplest rotation-covariant
+//! polar vector built from the features: under `h -> D(R) h` the lift is
+//! equivariant and the component-wise inner products rotate as a degree-1
+//! irrep, giving `mu(R h) = R mu(h)`; under inversion every `d_k` flips
+//! sign (the integrand `F(u) (Y-expansion of s^2)` is parity-odd), which
+//! is exactly the polar-vector law `mu -> det(O) O mu`.
+//!
+//! **Backward.** With cotangent `g` on `mu` (and `g_irr` its irrep-order
+//! shuffle), `d_k = <s, t_k>` sees `s` twice — directly and inside the
+//! lift — so
+//!
+//! ```text
+//!   dL/ds    = c_dip sum_k g_irr[k] t_k
+//!            + vjp_x1(sv)(gt, rhat),   gt_k = c_dip g_irr[k] s
+//!   dL/dw_lc = <(dL/ds)_l, h^c_l>
+//!   dL/dc    = sum_c <g_irr, d^c>
+//! ```
+//!
+//! where `vjp_x1(sv(L, 1, L)) = dot(L, 1, L)` by the degree-rotation
+//! identity ([`VectorGauntPlan::vjp_sibling_key`]).  Both plans come
+//! from the global [`PlanCache`]; all intermediates live in a
+//! caller-owned [`DipoleScratch`], so steady state allocates nothing.
+//!
+//! The head owns its own parameters (`w`, `c_dip`) — it never touches
+//! [`Model::params`](super::Model::params), so energy checkpoints and
+//! the frozen model goldens are unaffected.  Cross-validated against
+//! `python/compile/vector_golden.py` (`dipole` block) through
+//! `tests/golden_cross_validation.rs`.
+
+use std::sync::Arc;
+
+use crate::num_coeffs;
+use crate::tp::engine::PlanCache;
+use crate::tp::gaunt::ConvMethod;
+use crate::tp::irreps::Irreps;
+use crate::tp::vector::{
+    VectorGauntPlan, VectorIrreps, VectorKind, VectorScratch, CART,
+};
+use crate::util::rng::Rng;
+
+/// Learned dipole readout: per-(degree, channel) path weights plus a
+/// global scale, with the sv lift and its VJP sibling resolved once from
+/// the plan cache.  Cheap to share behind an `Arc`; per-thread state
+/// lives in [`DipoleScratch`].
+pub struct DipoleHead {
+    channels: usize,
+    l: usize,
+    /// path weights, index `l * channels + c` (length `channels (L+1)`)
+    pub w: Vec<f64>,
+    /// global output scale
+    pub c_dip: f64,
+    /// the lift `sv(L, 1, L)`
+    sv: Arc<VectorGauntPlan>,
+    /// its x1-VJP sibling `dot(L, 1, L)`
+    vjp: Arc<VectorGauntPlan>,
+    vir: VectorIrreps,
+    /// the constant field `F(u) = u` as a degree-1 vector signal
+    rhat: Vec<f64>,
+}
+
+/// Caller-owned workspace for one [`DipoleHead`] forward/backward: one
+/// per worker thread, sized at construction, never resized.
+pub struct DipoleScratch {
+    sv_s: VectorScratch,
+    vjp_s: VectorScratch,
+    /// scaled channel features (`(L+1)^2`)
+    s: Vec<f64>,
+    /// lifted vector signal (`3 (L+1)^2`)
+    t: Vec<f64>,
+    /// component gather / VJP-output staging (`(L+1)^2`)
+    tk: Vec<f64>,
+    /// lift cotangent (`3 (L+1)^2`)
+    gt: Vec<f64>,
+    /// feature cotangent (`(L+1)^2`)
+    gs: Vec<f64>,
+}
+
+impl DipoleHead {
+    /// Random initialization (O(1) path weights, like the model mixes).
+    pub fn new(
+        channels: usize, l: usize, method: ConvMethod, seed: u64,
+    ) -> DipoleHead {
+        let mut rng = Rng::new(seed);
+        let mut w = vec![0.0; channels * (l + 1)];
+        for wv in w.iter_mut() {
+            *wv = 1.0 + 0.3 * rng.normal();
+        }
+        let c_dip = 0.5 + 0.1 * rng.normal();
+        DipoleHead::with_params(channels, l, method, w, c_dip)
+    }
+
+    /// Head with explicit parameters (checkpoint restore, golden tests).
+    pub fn with_params(
+        channels: usize, l: usize, method: ConvMethod, w: Vec<f64>,
+        c_dip: f64,
+    ) -> DipoleHead {
+        assert_eq!(w.len(), channels * (l + 1), "w is per (degree, channel)");
+        let cache = PlanCache::global();
+        DipoleHead {
+            channels,
+            l,
+            w,
+            c_dip,
+            sv: cache.vector(VectorKind::ScalarVector, l, 1, l, method),
+            vjp: cache.vector(VectorKind::VectorDot, l, 1, l, method),
+            vir: VectorIrreps::new(l),
+            rhat: VectorIrreps::rhat_signal(),
+        }
+    }
+
+    /// Number of learned parameters (`w` plus `c_dip`).
+    pub fn n_params(&self) -> usize {
+        self.w.len() + 1
+    }
+
+    /// Expected node-feature layout.
+    pub fn irreps_in(&self) -> Irreps {
+        Irreps::spherical(self.channels, self.l)
+    }
+
+    /// Fresh scratch sized for this head (one per worker thread).
+    pub fn scratch(&self) -> DipoleScratch {
+        let nf = num_coeffs(self.l);
+        DipoleScratch {
+            sv_s: self.sv.scratch(),
+            vjp_s: self.vjp.scratch(),
+            s: vec![0.0; nf],
+            t: vec![0.0; 3 * nf],
+            tk: vec![0.0; nf],
+            gt: vec![0.0; 3 * nf],
+            gs: vec![0.0; nf],
+        }
+    }
+
+    /// `s^c = w[(l, c)] (.) h^c`: gather channel `c` with the per-degree
+    /// path weights applied.
+    fn gather_scaled(&self, h: &[f64], c: usize, out: &mut [f64]) {
+        for l in 0..=self.l {
+            let wv = self.w[l * self.channels + c];
+            let hb = self.channels * l * l + c * (2 * l + 1);
+            for m in 0..2 * l + 1 {
+                out[l * l + m] = wv * h[hb + m];
+            }
+        }
+    }
+
+    /// Per-atom dipole (Cartesian xyz) from one node-feature row.
+    /// Zero allocations in steady state.
+    pub fn dipole_into(&self, h: &[f64], s: &mut DipoleScratch) -> [f64; 3] {
+        debug_assert_eq!(h.len(), self.channels * num_coeffs(self.l));
+        let mut mu_irr = [0.0; 3];
+        for c in 0..self.channels {
+            self.gather_scaled(h, c, &mut s.s);
+            self.sv.apply_into(&s.s, &self.rhat, &mut s.t, &mut s.sv_s);
+            for (k, mv) in mu_irr.iter_mut().enumerate() {
+                self.vir.gather(&s.t, k, &mut s.tk);
+                let d: f64 =
+                    s.s.iter().zip(&s.tk).map(|(a, b)| a * b).sum();
+                *mv += self.c_dip * d;
+            }
+        }
+        let mut mu = [0.0; 3];
+        for k in 0..3 {
+            mu[CART[k]] = mu_irr[k];
+        }
+        mu
+    }
+
+    /// Gradients of `<g_mu, mu>` w.r.t. the head parameters, ACCUMULATED
+    /// into `gw` (length `channels (L+1)`) and `gc`; the caller zeroes
+    /// them.  Recomputes the per-channel forward intermediates in place
+    /// (they are two plan applies per channel — cheaper than persisting
+    /// `channels` copies).  Zero allocations in steady state.
+    pub fn grads_into(
+        &self, h: &[f64], g_mu: [f64; 3], gw: &mut [f64], gc: &mut f64,
+        s: &mut DipoleScratch,
+    ) {
+        debug_assert_eq!(gw.len(), self.w.len());
+        let g_irr = [g_mu[CART[0]], g_mu[CART[1]], g_mu[CART[2]]];
+        for c in 0..self.channels {
+            self.gather_scaled(h, c, &mut s.s);
+            self.sv.apply_into(&s.s, &self.rhat, &mut s.t, &mut s.sv_s);
+            // dL/ds from the direct slot of d_k = <s, t_k> (and dL/dc)
+            s.gs.fill(0.0);
+            for (k, &gk) in g_irr.iter().enumerate() {
+                self.vir.gather(&s.t, k, &mut s.tk);
+                let d: f64 =
+                    s.s.iter().zip(&s.tk).map(|(a, b)| a * b).sum();
+                *gc += gk * d;
+                for (gv, tv) in s.gs.iter_mut().zip(&s.tk) {
+                    *gv += self.c_dip * gk * tv;
+                }
+            }
+            // dL/ds through the lift: gt_k = c_dip g_irr[k] s, pulled
+            // back by the sibling dot(L, 1, L) plan
+            for (k, &gk) in g_irr.iter().enumerate() {
+                for (tv, sv) in s.tk.iter_mut().zip(&s.s) {
+                    *tv = self.c_dip * gk * sv;
+                }
+                self.vir.scatter(&s.tk, k, &mut s.gt);
+            }
+            self.vjp.apply_into(&s.gt, &self.rhat, &mut s.tk, &mut s.vjp_s);
+            for (gv, tv) in s.gs.iter_mut().zip(&s.tk) {
+                *gv += tv;
+            }
+            // dL/dw[(l, c)] = <gs_l, h^c_l>
+            for l in 0..=self.l {
+                let hb = self.channels * l * l + c * (2 * l + 1);
+                let mut acc = 0.0;
+                for m in 0..2 * l + 1 {
+                    acc += s.gs[l * l + m] * h[hb + m];
+                }
+                gw[l * self.channels + c] += acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::so3::rotation::Rot3;
+    use crate::tp::vector::transform_scalar;
+
+    const CHANNELS: usize = 2;
+    const L: usize = 2;
+
+    fn head() -> DipoleHead {
+        DipoleHead::new(CHANNELS, L, ConvMethod::Auto, 41)
+    }
+
+    fn features(seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..CHANNELS * num_coeffs(L)).map(|_| rng.normal()).collect()
+    }
+
+    /// Transform the spherical(C, L) feature row per channel by the
+    /// scalar law (Wigner-D with det^l parity).
+    fn transform_features(h: &[f64], o: &Rot3) -> Vec<f64> {
+        let nf = num_coeffs(L);
+        let mut out = vec![0.0; h.len()];
+        let mut ch = vec![0.0; nf];
+        let ir = Irreps::spherical(CHANNELS, L);
+        for c in 0..CHANNELS {
+            ir.gather_channel(h, c, &mut ch);
+            let t = transform_scalar(&ch, L, o);
+            ir.scatter_channel(&t, c, &mut out);
+        }
+        out
+    }
+
+    #[test]
+    fn parameter_gradients_match_finite_differences() {
+        let mut hd = head();
+        let h = features(7);
+        let mut s = hd.scratch();
+        let g_mu = [0.3, -1.1, 0.7];
+        let loss = |hd: &DipoleHead, s: &mut DipoleScratch| {
+            let mu = hd.dipole_into(&h, s);
+            g_mu[0] * mu[0] + g_mu[1] * mu[1] + g_mu[2] * mu[2]
+        };
+        let mut gw = vec![0.0; hd.w.len()];
+        let mut gc = 0.0;
+        hd.grads_into(&h, g_mu, &mut gw, &mut gc, &mut s);
+        let step = 1e-6;
+        for i in 0..gw.len() {
+            let w0 = hd.w[i];
+            hd.w[i] = w0 + step;
+            let up = loss(&hd, &mut s);
+            hd.w[i] = w0 - step;
+            let dn = loss(&hd, &mut s);
+            hd.w[i] = w0;
+            let fd = (up - dn) / (2.0 * step);
+            assert!(
+                (gw[i] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                "dw[{i}]: analytic {} vs fd {}", gw[i], fd
+            );
+        }
+        let c0 = hd.c_dip;
+        hd.c_dip = c0 + step;
+        let up = loss(&hd, &mut s);
+        hd.c_dip = c0 - step;
+        let dn = loss(&hd, &mut s);
+        hd.c_dip = c0;
+        let fd = (up - dn) / (2.0 * step);
+        assert!(
+            (gc - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+            "dc_dip: analytic {gc} vs fd {fd}"
+        );
+    }
+
+    #[test]
+    fn dipole_is_a_polar_vector_under_o3() {
+        let hd = head();
+        let h = features(11);
+        let mut s = hd.scratch();
+        let mu = hd.dipole_into(&h, &mut s);
+        let mut rng = Rng::new(23);
+        let r = Rot3::random(&mut rng);
+        // proper rotation and the same rotation composed with inversion
+        for (o, label) in [
+            (r, "proper"),
+            (Rot3([
+                [-r.0[0][0], -r.0[0][1], -r.0[0][2]],
+                [-r.0[1][0], -r.0[1][1], -r.0[1][2]],
+                [-r.0[2][0], -r.0[2][1], -r.0[2][2]],
+            ]), "improper"),
+        ] {
+            let th = transform_features(&h, &o);
+            let tmu = hd.dipole_into(&th, &mut s);
+            let want = o.apply(mu);
+            for k in 0..3 {
+                assert!(
+                    (tmu[k] - want[k]).abs() < 1e-9,
+                    "{label} dipole[{k}]: {} vs {}", tmu[k], want[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weights_give_zero_dipole_and_gradients_flow() {
+        let mut hd = head();
+        hd.w.iter_mut().for_each(|w| *w = 0.0);
+        let h = features(3);
+        let mut s = hd.scratch();
+        let mu = hd.dipole_into(&h, &mut s);
+        assert_eq!(mu, [0.0; 3]);
+        // d is quadratic in s, so at w = 0 every dw is zero too — but
+        // the accumulation contract must still hold (no NaNs, adds only)
+        let mut gw = vec![1.5; hd.w.len()];
+        let mut gc = 2.5;
+        hd.grads_into(&h, [1.0, 1.0, 1.0], &mut gw, &mut gc, &mut s);
+        assert!(gw.iter().all(|g| (*g - 1.5).abs() < 1e-12));
+        assert!((gc - 2.5).abs() < 1e-12);
+    }
+}

@@ -59,6 +59,7 @@
 //! inference shards graphs across workers with one scratch each via
 //! [`crate::util::pool::shard_rows_with`].
 
+pub mod dipole;
 pub mod radial;
 
 use std::sync::Arc;
@@ -78,6 +79,7 @@ use crate::util::json::{self, Json};
 use crate::util::pool;
 use crate::util::rng::Rng;
 use crate::{lm_index, num_coeffs};
+use dipole::{DipoleHead, DipoleScratch};
 use radial::RadialBasis;
 
 /// 1 / sqrt(4 pi): the value of Y_00, used by the closed-form VJP of the
@@ -494,6 +496,34 @@ impl Model {
     ) -> f64 {
         assert_eq!(shifts.len(), edges.len());
         self.energy_into_impl(pos, species, edges, Some(shifts), s)
+    }
+
+    /// Final node features of atom `i` (layout
+    /// [`ModelConfig::node_irreps`]) after the forward pass that filled
+    /// `s`.  Read-only view into the scratch, valid until the next
+    /// forward — the input of equivariant readout heads like
+    /// [`DipoleHead`].
+    pub fn node_features<'a>(
+        &self, s: &'a ModelScratch, i: usize,
+    ) -> &'a [f64] {
+        let nd = self.cfg.node_dim();
+        let h_t = self.cfg.n_layers * self.cfg.max_atoms * nd;
+        &s.h[h_t + i * nd..h_t + (i + 1) * nd]
+    }
+
+    /// Per-atom dipoles through a [`DipoleHead`], written to `out`
+    /// (flat `3 n_atoms`, xyz order).  Must run over the scratch a
+    /// matching forward pass just filled.  Zero allocations in steady
+    /// state.
+    pub fn dipoles_into(
+        &self, head: &DipoleHead, n_atoms: usize, s: &ModelScratch,
+        hs: &mut DipoleScratch, out: &mut [f64],
+    ) {
+        assert!(out.len() >= 3 * n_atoms);
+        for i in 0..n_atoms {
+            let mu = head.dipole_into(self.node_features(s, i), hs);
+            out[3 * i..3 * i + 3].copy_from_slice(&mu);
+        }
     }
 
     fn energy_into_impl(

@@ -21,9 +21,20 @@
 //!   work nobody is waiting for;
 //! * `drain` stops admission at the front door (typed `Rejected`),
 //!   while in-flight work finishes.
+//!
+//! **Supervision.** A front door that spawned its own replica processes
+//! (`frontdoor --spawn-replicas N`) can [`FrontDoor::supervise`] them:
+//! when the prober finds a supervised replica unreachable AND its child
+//! process has exited, it respawns the child from the recorded argv
+//! with bounded exponential backoff, up to [`RespawnPolicy::max_restarts`]
+//! total restarts — the restarted replica then rejoins routing through
+//! the normal probe/reconnect path, without operator action.  Replicas
+//! it did not spawn are never touched (their lifecycle belongs to
+//! whoever started them).
 
 use std::collections::HashMap;
 use std::io;
+use std::process::Child;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
@@ -64,6 +75,41 @@ impl Default for FrontDoorConfig {
     }
 }
 
+/// How the front door restarts replicas it spawned itself.
+#[derive(Clone, Copy, Debug)]
+pub struct RespawnPolicy {
+    /// total respawns allowed per replica before the supervisor gives
+    /// up (the replica then stays down like an unsupervised one)
+    pub max_restarts: usize,
+    /// delay before the second respawn attempt (the first is immediate)
+    pub backoff_initial: Duration,
+    /// backoff cap; the delay doubles per attempt up to this
+    pub backoff_max: Duration,
+}
+
+impl Default for RespawnPolicy {
+    fn default() -> Self {
+        RespawnPolicy {
+            max_restarts: 5,
+            backoff_initial: Duration::from_millis(200),
+            backoff_max: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Supervision state for one spawned replica child process.
+struct Supervisor {
+    /// respawn argv (`argv[0]` = executable path)
+    cmd: Vec<String>,
+    policy: RespawnPolicy,
+    /// the current child; `None` between a reaped exit and the respawn
+    child: Option<Child>,
+    restarts: usize,
+    backoff: Duration,
+    /// earliest time of the next respawn attempt
+    next_attempt: Instant,
+}
+
 /// One routed-to replica: its address plus live connection state.
 struct ReplicaHandle {
     addr: Addr,
@@ -75,6 +121,8 @@ struct ReplicaHandle {
     draining: AtomicBool,
     /// largest admissible structure (from its handshake)
     max_atoms: AtomicUsize,
+    /// `Some` when the front door owns this replica's process
+    supervisor: Mutex<Option<Supervisor>>,
 }
 
 impl ReplicaHandle {
@@ -101,6 +149,53 @@ impl ReplicaHandle {
             }
             Err(_) => None,
         };
+    }
+
+    /// A healthy reconnect ends the current backoff episode: the next
+    /// death starts the exponential schedule from the beginning.
+    fn note_healthy(&self) {
+        if let Some(sup) = lock(&self.supervisor).as_mut() {
+            sup.backoff = sup.policy.backoff_initial;
+        }
+    }
+
+    /// Respawn a supervised child that has actually exited.  Called by
+    /// the prober while the replica is unreachable; a child that is
+    /// still running (booting, or slow) is left alone — the probe will
+    /// reach it or its exit will land here on a later tick.
+    fn supervise_tick(&self) {
+        let mut slot = lock(&self.supervisor);
+        let Some(sup) = slot.as_mut() else { return };
+        if let Some(child) = sup.child.as_mut() {
+            match child.try_wait() {
+                Ok(None) => return, // alive; give it time to bind
+                Ok(Some(_)) | Err(_) => sup.child = None, // exited, reaped
+            }
+        }
+        let now = Instant::now();
+        if now < sup.next_attempt || sup.restarts >= sup.policy.max_restarts
+        {
+            return;
+        }
+        sup.restarts += 1;
+        sup.next_attempt = now + sup.backoff;
+        sup.backoff = (sup.backoff * 2).min(sup.policy.backoff_max);
+        if let Ok(child) = std::process::Command::new(&sup.cmd[0])
+            .args(&sup.cmd[1..])
+            .spawn()
+        {
+            sup.child = Some(child);
+        }
+    }
+
+    /// Kill and reap the supervised child, if any (shutdown path).
+    fn kill_supervised(&self) {
+        if let Some(sup) = lock(&self.supervisor).as_mut() {
+            if let Some(mut child) = sup.child.take() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
     }
 }
 
@@ -237,6 +332,7 @@ impl FrontDoor {
                     outstanding: AtomicUsize::new(0),
                     draining: AtomicBool::new(false),
                     max_atoms: AtomicUsize::new(0),
+                    supervisor: Mutex::new(None),
                 })
             })
             .collect();
@@ -295,6 +391,35 @@ impl FrontDoor {
         self.shared.metrics.snapshot()
     }
 
+    /// Adopt a replica child process this front door spawned: when the
+    /// prober finds replica `replica` unreachable and the child has
+    /// exited, it is respawned from `cmd` (`argv[0]` = executable) under
+    /// `policy`'s bounded backoff.  `replica` indexes the
+    /// `replica_addrs` given to [`FrontDoor::serve`].
+    pub fn supervise(
+        &self, replica: usize, child: Child, cmd: Vec<String>,
+        policy: RespawnPolicy,
+    ) {
+        assert!(!cmd.is_empty(), "respawn argv needs the executable");
+        *lock(&self.shared.replicas[replica].supervisor) = Some(Supervisor {
+            cmd,
+            policy,
+            child: Some(child),
+            restarts: 0,
+            backoff: policy.backoff_initial,
+            next_attempt: Instant::now(),
+        });
+    }
+
+    /// Per-replica respawn counts (0 for unsupervised replicas).
+    pub fn respawn_counts(&self) -> Vec<usize> {
+        self.shared
+            .replicas
+            .iter()
+            .map(|r| lock(&r.supervisor).as_ref().map_or(0, |s| s.restarts))
+            .collect()
+    }
+
     /// Replica indices currently live (for tests/CLI status).
     pub fn live_replicas(&self) -> Vec<usize> {
         self.shared
@@ -320,6 +445,7 @@ impl FrontDoor {
         self.shared.conns.sever_all();
         for r in &self.shared.replicas {
             r.mark_down();
+            r.kill_supervised();
         }
         for addr in &self.bound {
             if let Addr::Unix(p) = addr {
@@ -337,7 +463,14 @@ fn prober_loop(shared: Arc<FdShared>) {
             }
             let live = r.live();
             match live {
-                None => r.try_connect(),
+                None => {
+                    r.try_connect();
+                    if r.live().is_some() {
+                        r.note_healthy();
+                    } else {
+                        r.supervise_tick();
+                    }
+                }
                 Some(c) => match c.ping(shared.cfg.probe_timeout) {
                     Ok((health, _depth)) => {
                         r.draining.store(

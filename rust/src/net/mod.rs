@@ -38,7 +38,7 @@ pub mod replica;
 
 pub use client::{NetClient, NetTicket};
 pub use frame::{read_frame, write_frame, WireError};
-pub use frontdoor::{FrontDoor, FrontDoorConfig};
+pub use frontdoor::{FrontDoor, FrontDoorConfig, RespawnPolicy};
 pub use replica::Replica;
 
 use std::collections::HashMap;

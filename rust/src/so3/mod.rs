@@ -10,6 +10,7 @@ pub mod linalg;
 pub mod quadrature;
 pub mod rotation;
 pub mod sh;
+pub mod vsh;
 pub mod wigner;
 
 pub use gaunt::{cg_tensor_real, gaunt_tensor_real};
@@ -21,4 +22,5 @@ pub use sh::{
     assoc_legendre, real_sh_all_xyz, real_sh_all_xyz_into,
     real_sh_angular, real_sh_grad_xyz_into, sh_norm,
 };
+pub use vsh::{vsh_dot_gaunt, vsh_eval, vsh_set, VshEvaluator, VshKind};
 pub use wigner::{clebsch_gordan, gaunt_complex, wigner_3j};

@@ -1,0 +1,323 @@
+//! Real vector spherical harmonics (VSH) and their Gaunt-style couplings.
+//!
+//! The basis (conventions mirrored by `python/compile/vector_golden.py`,
+//! frozen in `artifacts/golden/vector_golden.json`):
+//!
+//! ```text
+//!   Y_{lm}(u)   = Y_lm(u) u                      radial,   parity (-1)^{l+1}
+//!   Psi_{lm}(u) = grad_S Y_lm / sqrt(l(l+1))     gradient, parity (-1)^{l+1}
+//!   Phi_{lm}(u) = u x Psi_{lm}                   curl,     parity (-1)^l
+//! ```
+//!
+//! where `grad_S` is the surface gradient on S^2 — exactly what
+//! [`real_sh_grad_xyz_into`] emits at unit radius (its projected ambient
+//! gradient `(I - u u^T) grad F / r`).  The family is orthonormal under
+//! the vector-field inner product `int V . W dOmega`, and truncation is
+//! exact: a Cartesian-component vector signal of degree <= L expands in
+//! `{Y, Psi: l <= L+1, Phi: l <= L}` (validated by the numpy mirror's
+//! completeness check).
+//!
+//! [`vsh_dot_gaunt`] builds the coupling tensor
+//! `T[k3, J1, J2] = int Y_{k3} (V_{J1} . V_{J2}) dOmega` by exact
+//! quadrature — the VSH-basis analogue of the scalar real Gaunt tensor,
+//! connecting VSH triple products to the scalar Gaunt machinery the
+//! `tp::vector` plans route through (DESIGN.md §15).
+
+use super::quadrature::sphere_quadrature;
+use super::sh::{real_sh_all_xyz_into, real_sh_grad_xyz_into};
+use crate::{lm_index, num_coeffs};
+
+/// The three VSH families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum VshKind {
+    /// `Y_lm(u) u` — the radial family (all l >= 0).
+    Radial,
+    /// `Psi_lm = grad_S Y_lm / sqrt(l(l+1))` — gradient family (l >= 1).
+    Gradient,
+    /// `Phi_lm = u x Psi_lm` — curl family (l >= 1).
+    Curl,
+}
+
+impl VshKind {
+    /// Parity factor of the degree-l member under inversion `u -> -u`:
+    /// radial/gradient pick up `(-1)^{l+1}`, curl `(-1)^l` (pseudo).
+    pub fn parity(self, l: usize) -> f64 {
+        let s = match self {
+            VshKind::Radial | VshKind::Gradient => l + 1,
+            VshKind::Curl => l,
+        };
+        if s % 2 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Golden-file name ("Y" / "Psi" / "Phi").
+    pub fn name(self) -> &'static str {
+        match self {
+            VshKind::Radial => "Y",
+            VshKind::Gradient => "Psi",
+            VshKind::Curl => "Phi",
+        }
+    }
+
+    /// Inverse of [`VshKind::name`].
+    pub fn from_name(s: &str) -> Option<VshKind> {
+        match s {
+            "Y" => Some(VshKind::Radial),
+            "Psi" => Some(VshKind::Gradient),
+            "Phi" => Some(VshKind::Curl),
+            _ => None,
+        }
+    }
+}
+
+/// The canonical (kind, l, m) index list: radial to `l_y`, gradient and
+/// curl from 1 to `l_psi` / `l_phi` (Psi/Phi vanish identically at l=0).
+pub fn vsh_set(
+    l_y: usize, l_psi: usize, l_phi: usize,
+) -> Vec<(VshKind, usize, i64)> {
+    let mut out = Vec::new();
+    for l in 0..=l_y {
+        for m in -(l as i64)..=(l as i64) {
+            out.push((VshKind::Radial, l, m));
+        }
+    }
+    for l in 1..=l_psi {
+        for m in -(l as i64)..=(l as i64) {
+            out.push((VshKind::Gradient, l, m));
+        }
+    }
+    for l in 1..=l_phi {
+        for m in -(l as i64)..=(l as i64) {
+            out.push((VshKind::Curl, l, m));
+        }
+    }
+    out
+}
+
+/// Shared-workspace VSH evaluator: one scalar-SH value+gradient sweep per
+/// point serves every (kind, l, m) read-out.  Allocation-free after
+/// construction.
+pub struct VshEvaluator {
+    l_max: usize,
+    u: [f64; 3],
+    val: Vec<f64>,
+    grad: Vec<[f64; 3]>,
+}
+
+impl VshEvaluator {
+    pub fn new(l_max: usize) -> VshEvaluator {
+        VshEvaluator {
+            l_max,
+            u: [0.0, 0.0, 1.0],
+            val: vec![0.0; num_coeffs(l_max)],
+            grad: vec![[0.0; 3]; num_coeffs(l_max)],
+        }
+    }
+
+    /// Position the evaluator at direction `d` (normalized inside).
+    pub fn move_to(&mut self, d: [f64; 3]) {
+        let n = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt().max(1e-30);
+        self.u = [d[0] / n, d[1] / n, d[2] / n];
+        real_sh_grad_xyz_into(self.l_max, self.u, &mut self.val, &mut self.grad);
+    }
+
+    /// The VSH value (xyz components) at the current point.
+    pub fn eval(&self, kind: VshKind, l: usize, m: i64) -> [f64; 3] {
+        debug_assert!(l <= self.l_max);
+        let i = lm_index(l, m);
+        let u = self.u;
+        if let VshKind::Radial = kind {
+            let y = self.val[i];
+            return [y * u[0], y * u[1], y * u[2]];
+        }
+        assert!(l >= 1, "Psi/Phi require l >= 1");
+        let s = 1.0 / ((l * (l + 1)) as f64).sqrt();
+        let g = self.grad[i];
+        let psi = [s * g[0], s * g[1], s * g[2]];
+        match kind {
+            VshKind::Gradient => psi,
+            VshKind::Curl => [
+                u[1] * psi[2] - u[2] * psi[1],
+                u[2] * psi[0] - u[0] * psi[2],
+                u[0] * psi[1] - u[1] * psi[0],
+            ],
+            VshKind::Radial => unreachable!(),
+        }
+    }
+}
+
+/// One real VSH at one direction (convenience wrapper over
+/// [`VshEvaluator`]).
+pub fn vsh_eval(kind: VshKind, l: usize, m: i64, d: [f64; 3]) -> [f64; 3] {
+    let mut ev = VshEvaluator::new(l);
+    ev.move_to(d);
+    ev.eval(kind, l, m)
+}
+
+/// The VSH dot-coupling tensor
+/// `T[k3, J1, J2] = int Y_{k3} (V_{J1} . V_{J2}) dOmega`, flat
+/// `[(l3+1)^2, set1.len(), set2.len()]` row-major, by quadrature exact
+/// for the band limit of the integrand.  Its `l3 = 0` row is
+/// `delta_{J1 J2} / sqrt(4 pi)` (VSH orthonormality) — the identity the
+/// unit tests pin.
+pub fn vsh_dot_gaunt(
+    l3: usize,
+    set1: &[(VshKind, usize, i64)],
+    set2: &[(VshKind, usize, i64)],
+) -> Vec<f64> {
+    let lmax = set1
+        .iter()
+        .chain(set2)
+        .map(|&(_, l, _)| l)
+        .max()
+        .unwrap_or(0);
+    // surface gradients of degree-l SH are degree <= l+1 polynomials in u
+    // on the sphere; 2(lmax+1) + l3 bounds the integrand's band limit
+    let (nodes, dphi) = sphere_quadrature(l3 + 2 * lmax + 4);
+    let (j1, j2) = (set1.len(), set2.len());
+    let n3 = num_coeffs(l3);
+    let mut out = vec![0.0; n3 * j1 * j2];
+    let mut ev = VshEvaluator::new(lmax);
+    let mut y3 = vec![0.0; n3];
+    let mut v1 = vec![[0.0f64; 3]; j1];
+    let mut v2 = vec![[0.0f64; 3]; j2];
+    for (theta, phi, w) in &nodes {
+        let (st, ct) = theta.sin_cos();
+        let (sp, cp) = phi.sin_cos();
+        let u = [st * cp, st * sp, ct];
+        ev.move_to(u);
+        real_sh_all_xyz_into(l3, u, &mut y3);
+        for (a, &(k, l, m)) in set1.iter().enumerate() {
+            v1[a] = ev.eval(k, l, m);
+        }
+        for (b, &(k, l, m)) in set2.iter().enumerate() {
+            v2[b] = ev.eval(k, l, m);
+        }
+        let ww = w * dphi;
+        for (k3, yk) in y3.iter().enumerate() {
+            let wk = ww * yk;
+            if wk.abs() < 1e-300 {
+                continue;
+            }
+            let block = &mut out[k3 * j1 * j2..(k3 + 1) * j1 * j2];
+            for (a, va) in v1.iter().enumerate() {
+                let row = &mut block[a * j2..(a + 1) * j2];
+                for (b, vb) in v2.iter().enumerate() {
+                    row[b] +=
+                        wk * (va[0] * vb[0] + va[1] * vb[1] + va[2] * vb[2]);
+                }
+            }
+        }
+    }
+    for v in out.iter_mut() {
+        if v.abs() < 1e-12 {
+            *v = 0.0;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SQRT_4PI: f64 = 3.5449077018110318;
+
+    fn quad_dirs(deg: usize) -> Vec<([f64; 3], f64)> {
+        let (nodes, dphi) = sphere_quadrature(deg);
+        nodes
+            .iter()
+            .map(|&(theta, phi, w)| {
+                let (st, ct) = theta.sin_cos();
+                let (sp, cp) = phi.sin_cos();
+                ([st * cp, st * sp, ct], w * dphi)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn orthonormal_under_quadrature() {
+        let l = 2;
+        let set = vsh_set(l, l, l);
+        let mut ev = VshEvaluator::new(l);
+        let n = set.len();
+        let mut gram = vec![0.0; n * n];
+        for (u, w) in quad_dirs(2 * l + 6) {
+            ev.move_to(u);
+            let vals: Vec<[f64; 3]> =
+                set.iter().map(|&(k, l, m)| ev.eval(k, l, m)).collect();
+            for a in 0..n {
+                for b in 0..n {
+                    gram[a * n + b] += w
+                        * (vals[a][0] * vals[b][0]
+                            + vals[a][1] * vals[b][1]
+                            + vals[a][2] * vals[b][2]);
+                }
+            }
+        }
+        for a in 0..n {
+            for b in 0..n {
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!(
+                    (gram[a * n + b] - want).abs() < 1e-10,
+                    "gram[{a},{b}] = {}",
+                    gram[a * n + b]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_gaunt_l0_row_is_orthonormality() {
+        let set = vsh_set(1, 1, 1);
+        let t = vsh_dot_gaunt(0, &set, &set);
+        let n = set.len();
+        for a in 0..n {
+            for b in 0..n {
+                let want = if a == b { 1.0 / SQRT_4PI } else { 0.0 };
+                assert!(
+                    (t[a * n + b] - want).abs() < 1e-10,
+                    "T[0,{a},{b}] = {}",
+                    t[a * n + b]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parity_signs() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(11);
+        let set = vsh_set(3, 3, 3);
+        let mut ev = VshEvaluator::new(3);
+        for _ in 0..5 {
+            let d = [rng.normal(), rng.normal(), rng.normal()];
+            for &(k, l, m) in &set {
+                ev.move_to(d);
+                let v = ev.eval(k, l, m);
+                ev.move_to([-d[0], -d[1], -d[2]]);
+                let vm = ev.eval(k, l, m);
+                let p = k.parity(l);
+                for x in 0..3 {
+                    assert!(
+                        (vm[x] - p * v[x]).abs() < 1e-10,
+                        "{k:?} l={l} m={m}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn radial_l0_is_unit_direction() {
+        let d = [0.3, -0.8, 0.52];
+        let n = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt();
+        let v = vsh_eval(VshKind::Radial, 0, 0, d);
+        for x in 0..3 {
+            assert!((v[x] - d[x] / n / SQRT_4PI).abs() < 1e-12);
+        }
+    }
+}

@@ -29,6 +29,7 @@ use crate::tp::gaunt::{ConvMethod, GauntPlan};
 use crate::tp::gaunt32::Gaunt32Plan;
 use crate::tp::many_body::ManyBodyPlan;
 use crate::tp::op::EquivariantOp;
+use crate::tp::vector::{VectorGauntPlan, VectorKind};
 
 /// Arithmetic precision an op family runs its interior in.  The API
 /// surface is `f64` either way; `F32` plans cast at the boundary and run
@@ -63,6 +64,10 @@ pub enum OpKey {
     GauntConv { l_in: usize, l_filter: usize, l_out: usize },
     /// Many-body Fourier-domain plan (single final-size transforms).
     ManyBody { nu: usize, l: usize, l_out: usize },
+    /// Vector-signal Gaunt plan (VSH tensor products; kind picks the
+    /// scalar (x) vector / dot / cross path).
+    Vector { kind: VectorKind, l1: usize, l2: usize, l3: usize,
+             method: ConvMethod },
 }
 
 impl OpKey {
@@ -101,6 +106,7 @@ enum CachedPlan {
     Escn(Arc<EscnPlan>),
     GauntConv(Arc<GauntConvPlan>),
     ManyBody(Arc<ManyBodyPlan>),
+    Vector(Arc<VectorGauntPlan>),
 }
 
 struct Entry {
@@ -295,6 +301,22 @@ impl PlanCache {
         )
     }
 
+    /// Memoized [`VectorGauntPlan`] for `(kind, l1, l2, l3, method)`.
+    pub fn vector(
+        &self, kind: VectorKind, l1: usize, l2: usize, l3: usize,
+        method: ConvMethod,
+    ) -> Arc<VectorGauntPlan> {
+        self.get_or_build(
+            OpKey::Vector { kind, l1, l2, l3, method },
+            |c| match c {
+                CachedPlan::Vector(p) => Some(p.clone()),
+                _ => None,
+            },
+            CachedPlan::Vector,
+            || VectorGauntPlan::new(kind, l1, l2, l3, method),
+        )
+    }
+
     /// The uniform entry point: resolve ANY key to its cached plan as a
     /// type-erased [`EquivariantOp`].  Coordinator, benches, and CLI
     /// dispatch through this; the typed accessors above remain for
@@ -313,6 +335,9 @@ impl PlanCache {
                 self.gaunt_conv(l_in, l_filter, l_out)
             }
             OpKey::ManyBody { nu, l, l_out } => self.many_body(nu, l, l_out),
+            OpKey::Vector { kind, l1, l2, l3, method } => {
+                self.vector(kind, l1, l2, l3, method)
+            }
         }
     }
 
@@ -465,6 +490,35 @@ mod tests {
         assert_eq!(cache.builds(), 1);
         // distinct key from the f64 family at the same degrees
         let _ = cache.gaunt(2, 2, 2, ConvMethod::Auto);
+        assert_eq!(cache.builds(), 2);
+    }
+
+    #[test]
+    fn vector_keys_resolve_through_the_cache() {
+        let cache = PlanCache::new();
+        let key = OpKey::Vector {
+            kind: VectorKind::VectorCross,
+            l1: 1, l2: 1, l3: 2,
+            method: ConvMethod::Auto,
+        };
+        let a = cache.vector(
+            VectorKind::VectorCross, 1, 1, 2, ConvMethod::Auto,
+        );
+        let op = cache.op(&key);
+        assert_eq!(op.key(), key);
+        assert!(std::ptr::eq(
+            Arc::as_ptr(&a) as *const u8,
+            Arc::as_ptr(&op) as *const u8,
+        ));
+        assert_eq!(cache.builds(), 1);
+        assert_eq!(op.irreps_in().dim(), 3 * num_coeffs(1));
+        assert_eq!(op.irreps_out().dim(), 3 * num_coeffs(2));
+        // precision re-keying leaves the vector family unchanged
+        assert_eq!(key.with_precision(Precision::F32), key);
+        // a different kind at the same degrees is a different key
+        let _ = cache.vector(
+            VectorKind::VectorDot, 1, 1, 2, ConvMethod::Auto,
+        );
         assert_eq!(cache.builds(), 2);
     }
 

@@ -15,6 +15,9 @@
 //! * [`many_body`] — Equivariant Many-body Interactions: nu-fold products,
 //!   sequential vs divide-and-conquer grid-domain evaluation, plus the
 //!   MACE-style precomputed-tensor emulation (trades memory for speed).
+//! * [`vector`] — vector-signal Gaunt products over vector spherical
+//!   harmonics: scalar (x) vector, dot, and cross plans routing each
+//!   Cartesian component through the same O(L^3) scalar pipeline.
 //! * [`engine`] — the serving-grade execution engine: a process-wide
 //!   [`engine::PlanCache`] keyed by [`OpKey`], resolving any key to a
 //!   shared `Arc<dyn EquivariantOp>` with per-key hit statistics.
@@ -27,6 +30,7 @@ pub mod gaunt32;
 pub mod irreps;
 pub mod many_body;
 pub mod op;
+pub mod vector;
 
 pub use cg::CgPlan;
 pub use engine::{CacheStats, OpKey, PlanCache, Precision};
@@ -38,4 +42,7 @@ pub use many_body::{ManyBodyPlan, ManyBodyScratch};
 pub use op::{
     apply_batch, apply_batch_par, BatchInputs, EquivariantOp, Inputs,
     OpScratch,
+};
+pub use vector::{
+    NaiveVectorTp, VectorGauntPlan, VectorIrreps, VectorKind, VectorScratch,
 };

@@ -34,6 +34,7 @@ use crate::tp::gaunt::{ConvMethod, GauntPlan, GauntScratch};
 use crate::tp::gaunt32::{Gaunt32Plan, Gaunt32Scratch};
 use crate::tp::irreps::Irreps;
 use crate::tp::many_body::{ManyBodyPlan, ManyBodyScratch};
+use crate::tp::vector::{VectorGauntPlan, VectorScratch};
 use crate::util::pool;
 
 /// The operand bundle of one apply.  Which fields an op reads is part of
@@ -116,6 +117,12 @@ pub struct OpScratch {
     many_pow: Option<ManyBodyScratch>,
     /// eSCN rotation round-trip scratch
     escn: Option<EscnScratch>,
+    /// vector-plan forward scratch
+    vector: Option<VectorScratch>,
+    /// degree-rotated vector VJP sibling plan (lazily resolved once)
+    vector_vjp_plan: Option<Arc<VectorGauntPlan>>,
+    /// scratch of the vector VJP sibling plan (lazy)
+    vector_vjp: Option<VectorScratch>,
     /// flat staging (filter coefficients, power features; lazy)
     buf: Vec<f64>,
     /// filter layout for per-degree reweighting (GauntConv VJP; lazy)
@@ -138,6 +145,9 @@ impl OpScratch {
             many_pow_plan: None,
             many_pow: None,
             escn: None,
+            vector: None,
+            vector_vjp_plan: None,
+            vector_vjp: None,
             buf: Vec::new(),
             filter_irreps: None,
         }
@@ -596,6 +606,77 @@ impl EquivariantOp for ManyBodyPlan {
     }
 }
 
+impl EquivariantOp for VectorGauntPlan {
+    fn key(&self) -> OpKey {
+        OpKey::Vector {
+            kind: self.kind,
+            l1: self.l1,
+            l2: self.l2,
+            l3: self.l3,
+            method: self.method,
+        }
+    }
+
+    fn irreps_in(&self) -> Irreps {
+        VectorGauntPlan::irreps_in(self).clone()
+    }
+
+    fn irreps_out(&self) -> Irreps {
+        VectorGauntPlan::irreps_out(self).clone()
+    }
+
+    fn irreps_in2(&self) -> Option<Irreps> {
+        Some(VectorGauntPlan::irreps_in2(self).clone())
+    }
+
+    fn scratch(&self) -> OpScratch {
+        let mut s = OpScratch::empty();
+        s.vector = Some(VectorGauntPlan::scratch(self));
+        s
+    }
+
+    fn apply_into(
+        &self, inputs: Inputs<'_>, scratch: &mut OpScratch, out: &mut [f64],
+    ) {
+        VectorGauntPlan::apply_into(
+            self,
+            inputs.x1,
+            inputs.x2(),
+            out,
+            scratch.vector.as_mut().expect("VectorGauntPlan scratch"),
+        );
+    }
+
+    fn vjp_into(
+        &self, inputs: Inputs<'_>, cotangent: &[f64],
+        scratch: &mut OpScratch, grad: &mut [f64],
+    ) {
+        // The VJP stays inside the vector family by degree rotation
+        // (sv^T = dot, dot^T = sv, cross^T = cross with the cotangent as
+        // second operand); the sibling is resolved once per scratch.
+        if scratch.vector_vjp_plan.is_none() {
+            let (kind, l1, l2, l3) = self.vjp_sibling_key();
+            let sib =
+                PlanCache::global().vector(kind, l1, l2, l3, self.method);
+            scratch.vector_vjp = Some(sib.scratch());
+            scratch.vector_vjp_plan = Some(sib);
+        }
+        let sib = scratch.vector_vjp_plan.as_ref().unwrap().clone();
+        let (a, b) = if self.vjp_operands_swapped() {
+            (inputs.x2(), cotangent)
+        } else {
+            (cotangent, inputs.x2())
+        };
+        VectorGauntPlan::apply_into(
+            &sib,
+            a,
+            b,
+            grad,
+            scratch.vector_vjp.as_mut().expect("VectorGauntPlan vjp scratch"),
+        );
+    }
+}
+
 // ---------------------------------------------------------------------
 // generic batched drivers (replace the per-family *_apply_batch_par)
 // ---------------------------------------------------------------------
@@ -750,6 +831,22 @@ mod tests {
             let mb = ManyBodyPlan::new(nu, 2, 2);
             check_vjp(&mb, Inputs::single(&x), 14 + nu as u64);
         }
+
+        use crate::tp::vector::VectorKind;
+        let v1 = rng.normals(3 * num_coeffs(2));
+        let v2 = rng.normals(3 * num_coeffs(1));
+        let sv = VectorGauntPlan::new(
+            VectorKind::ScalarVector, 2, 1, 2, ConvMethod::Auto,
+        );
+        check_vjp(&sv, Inputs::pair(&x, &v2), 17);
+        let dot = VectorGauntPlan::new(
+            VectorKind::VectorDot, 2, 1, 2, ConvMethod::Auto,
+        );
+        check_vjp(&dot, Inputs::pair(&v1, &v2), 18);
+        let cross = VectorGauntPlan::new(
+            VectorKind::VectorCross, 2, 1, 2, ConvMethod::Auto,
+        );
+        check_vjp(&cross, Inputs::pair(&v1, &v2), 19);
     }
 
     #[test]

@@ -1,0 +1,938 @@
+//! Vector-signal Gaunt products: O(L^3) tensor products of vector
+//! spherical signals through the scalar Fourier pipeline (DESIGN.md §15).
+//!
+//! A *vector signal* of degree <= L is three Cartesian-component scalar
+//! SH signals in the [`Irreps::spherical`]`(3, L)` layout — degree-major
+//! panels `[l][c][m]`, flat index `3 l^2 + c (2l+1) + (l+m)`.  The
+//! component index is in real l=1 irrep order: c=0 is the y component,
+//! c=1 is z, c=2 is x ([`CART`]/[`IRR`]).  Under a rotation R the
+//! degree-l panel transforms as `D^1(R) X D^l(R)^T` (components mix
+//! with D^1, each degree with D^l); under an improper map `o = -R` a
+//! polar signal picks up `det^{l+1}` per degree, a pseudovector signal
+//! `det^l`.
+//!
+//! Because each component is an ordinary scalar signal, every vector
+//! product reduces to component-wise *scalar* pointwise products, so the
+//! whole family routes through the existing `sh2f -> packed Hermitian
+//! conv -> f2sh` O(L^3) machinery of [`GauntPlan`]:
+//!
+//! ```text
+//!   sv    : scalar (x) vector -> vector         out_c = P_l3(s v_c)
+//!   dot   : vector (.) vector -> scalar         out   = sum_c P_l3(v_c w_c)
+//!   cross : vector (x) vector -> pseudovector   out_k = P_l3(v_a w_b - v_b w_a)
+//! ```
+//!
+//! with `(a, b) = (k+1, k+2) mod 3` — the Levi-Civita tensor is cyclic
+//! in the irrep component order because [`CART`] is an even permutation.
+//! On the FFT path the component sample arrays are produced pairwise by
+//! one joint packed transform ([`ConvPlan::samples_pair_into`]) and the
+//! pointwise products accumulate in sample space before ONE shared
+//! back-transform per output component: 6 / 4 / 6 length-m 2D transforms
+//! per sv / dot / cross apply (vs 6 / 6 / 12 via repeated pair convs).
+//!
+//! VJPs stay inside the family by degree rotation (all validated against
+//! finite differences by `python/compile/vector_golden.py`):
+//!
+//! ```text
+//!   sv(l1,l2,l3)^T    g = dot(l3,l2,l1)(g, x2)
+//!   dot(l1,l2,l3)^T   g = sv(l3,l2,l1)(g, x2)
+//!   cross(l1,l2,l3)^T g = cross(l2,l3,l1)(x2, g)
+//! ```
+
+use crate::fourier::complex::C64;
+use crate::fourier::conv::conv2d_direct_into;
+use crate::fourier::plan::{ConvPlan, ConvScratch};
+use crate::fourier::tables::{sh2f_panels, F2shPanelsT, Sh2fPanels};
+use crate::so3::gaunt::gaunt_tensor_real;
+use crate::so3::rotation::{wigner_d_real, Rot3};
+use crate::tp::gaunt::{ConvMethod, GauntPlan};
+use crate::tp::irreps::Irreps;
+use crate::num_coeffs;
+
+/// Irrep component index -> xyz axis (c0 = y, c1 = z, c2 = x).
+pub const CART: [usize; 3] = [1, 2, 0];
+/// xyz axis -> irrep component index (inverse of [`CART`]).
+pub const IRR: [usize; 3] = [2, 0, 1];
+
+/// The three vector plan kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum VectorKind {
+    /// scalar (x) vector -> vector (polar).
+    ScalarVector,
+    /// vector (.) vector -> scalar.
+    VectorDot,
+    /// vector (x) vector -> pseudovector.
+    VectorCross,
+}
+
+impl VectorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            VectorKind::ScalarVector => "sv",
+            VectorKind::VectorDot => "dot",
+            VectorKind::VectorCross => "cross",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<VectorKind> {
+        match s {
+            "sv" => Some(VectorKind::ScalarVector),
+            "dot" => Some(VectorKind::VectorDot),
+            "cross" => Some(VectorKind::VectorCross),
+            _ => None,
+        }
+    }
+}
+
+/// The vector-signal feature layout: a thin `Irreps::spherical(3, L)`
+/// wrapper naming the component semantics (channel = Cartesian component
+/// in irrep order) and the vector-specific helpers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VectorIrreps {
+    ir: Irreps,
+}
+
+impl VectorIrreps {
+    pub fn new(l_max: usize) -> VectorIrreps {
+        VectorIrreps { ir: Irreps::spherical(3, l_max) }
+    }
+
+    pub fn l_max(&self) -> usize {
+        self.ir.l_max()
+    }
+
+    /// Flat dimension `3 (L+1)^2`.
+    pub fn dim(&self) -> usize {
+        self.ir.dim()
+    }
+
+    /// The underlying typed layout.
+    pub fn irreps(&self) -> &Irreps {
+        &self.ir
+    }
+
+    /// Flat index of (degree l, component c, order m).
+    pub fn index(&self, l: usize, c: usize, m: i64) -> usize {
+        debug_assert!(l <= self.l_max() && c < 3 && m.unsigned_abs() as usize <= l);
+        3 * l * l + c * (2 * l + 1) + (l as i64 + m) as usize
+    }
+
+    /// Extract component `c` as a flat scalar feature (`(L+1)^2`).
+    pub fn gather(&self, x: &[f64], c: usize, out: &mut [f64]) {
+        self.ir.gather_channel(x, c, out);
+    }
+
+    /// Write component `c` from a flat scalar feature.
+    pub fn scatter(&self, src: &[f64], c: usize, x: &mut [f64]) {
+        self.ir.scatter_channel(src, c, x);
+    }
+
+    /// Accumulate component `c` from a flat scalar feature.
+    pub fn scatter_add(&self, src: &[f64], c: usize, x: &mut [f64]) {
+        self.ir.scatter_channel_add(src, c, x);
+    }
+
+    /// The constant vector field `F(u) = u` as a degree-1 signal:
+    /// `sqrt(4 pi / 3)` on the (c, m = c-1) diagonal of the l=1 panel.
+    pub fn rhat_signal() -> Vec<f64> {
+        let vir = VectorIrreps::new(1);
+        let mut x = vec![0.0; vir.dim()];
+        let a = (4.0 * std::f64::consts::PI / 3.0).sqrt();
+        for c in 0..3 {
+            x[vir.index(1, c, c as i64 - 1)] = a;
+        }
+        x
+    }
+}
+
+/// Caller-owned scratch for [`VectorGauntPlan::apply_into`]: one per
+/// worker thread, sized at construction, never resized.
+pub struct VectorScratch {
+    /// sh2f staging
+    w: Vec<C64>,
+    /// gathered operand components (scalar features)
+    comp1: Vec<f64>,
+    comp2: Vec<f64>,
+    /// per-component output staging
+    outc: Vec<f64>,
+    /// operand Fourier grids (3 slots each only where a path needs all
+    /// components simultaneously: the direct cross path)
+    g1: Vec<C64>,
+    g2: Vec<C64>,
+    /// product grid(s) (2(l1+l2)+1)^2
+    grid: Vec<C64>,
+    grid2: Vec<C64>,
+    /// FFT-path sample arrays (3 slots each for cross, 1 otherwise)
+    q1: Vec<f64>,
+    q2: Vec<f64>,
+    qa: Vec<f64>,
+    conv: ConvScratch,
+}
+
+/// Precomputed plan for one vector product kind at fixed degrees
+/// (x1: deg <= l1) (op) (x2: deg <= l2) -> deg <= l3.  Read-only after
+/// construction; share via `Arc`, give each worker its own
+/// [`VectorScratch`].
+pub struct VectorGauntPlan {
+    pub kind: VectorKind,
+    pub l1: usize,
+    pub l2: usize,
+    pub l3: usize,
+    pub method: ConvMethod,
+    p1: Sh2fPanels,
+    p2: Sh2fPanels,
+    t3t: F2shPanelsT,
+    conv: ConvPlan,
+    n_grid: usize,
+    ir1: Irreps,
+    ir2: Irreps,
+    ir3: Irreps,
+}
+
+impl VectorGauntPlan {
+    pub fn new(
+        kind: VectorKind, l1: usize, l2: usize, l3: usize, method: ConvMethod,
+    ) -> VectorGauntPlan {
+        let n_grid = l1 + l2;
+        let (ir1, ir3) = match kind {
+            VectorKind::ScalarVector => {
+                (Irreps::single(l1), Irreps::spherical(3, l3))
+            }
+            VectorKind::VectorDot => {
+                (Irreps::spherical(3, l1), Irreps::single(l3))
+            }
+            VectorKind::VectorCross => {
+                (Irreps::spherical(3, l1), Irreps::spherical(3, l3))
+            }
+        };
+        VectorGauntPlan {
+            kind,
+            l1,
+            l2,
+            l3,
+            method,
+            p1: sh2f_panels(l1),
+            p2: sh2f_panels(l2),
+            t3t: F2shPanelsT::build(l3, n_grid),
+            conv: ConvPlan::new(2 * l1 + 1, 2 * l2 + 1),
+            n_grid,
+            ir1,
+            ir2: Irreps::spherical(3, l2),
+            ir3,
+        }
+    }
+
+    /// Input-1 / input-2 / output layouts (the [`EquivariantOp`]
+    /// contract).
+    pub fn irreps_in(&self) -> &Irreps {
+        &self.ir1
+    }
+
+    pub fn irreps_in2(&self) -> &Irreps {
+        &self.ir2
+    }
+
+    pub fn irreps_out(&self) -> &Irreps {
+        &self.ir3
+    }
+
+    /// Whether this plan's method resolves to the FFT backend (same
+    /// crossover as the scalar plans).
+    pub fn uses_fft(&self) -> bool {
+        match self.method {
+            ConvMethod::Direct => false,
+            ConvMethod::Fft => true,
+            ConvMethod::Auto => {
+                self.l1 + self.l2 >= crate::tp::gaunt::AUTO_FFT_CROSSOVER
+            }
+        }
+    }
+
+    /// Fresh scratch sized for this plan (one per worker thread).
+    pub fn scratch(&self) -> VectorScratch {
+        let n1 = 2 * self.l1 + 1;
+        let n2 = 2 * self.l2 + 1;
+        let nu3 = 2 * self.n_grid + 1;
+        let nw = (self.l1 + 1).max(self.l2 + 1);
+        let fft = self.uses_fft();
+        let cross = self.kind == VectorKind::VectorCross;
+        let m2 = self.conv.m * self.conv.m;
+        let qslots = if cross { 3 } else { 1 };
+        // only the direct cross path holds all component grids at once
+        let gslots = if cross && !fft { 3 } else { 1 };
+        VectorScratch {
+            w: vec![C64::default(); nw * nw],
+            comp1: vec![0.0; num_coeffs(self.l1)],
+            comp2: vec![0.0; num_coeffs(self.l2)],
+            outc: vec![0.0; num_coeffs(self.l3)],
+            g1: vec![C64::default(); gslots * n1 * n1],
+            g2: vec![C64::default(); gslots * n2 * n2],
+            grid: vec![C64::default(); nu3 * nu3],
+            grid2: if !fft && self.kind != VectorKind::ScalarVector {
+                vec![C64::default(); nu3 * nu3]
+            } else {
+                Vec::new()
+            },
+            q1: if fft { vec![0.0; qslots * m2] } else { Vec::new() },
+            q2: if fft { vec![0.0; qslots * m2] } else { Vec::new() },
+            qa: if fft { vec![0.0; m2] } else { Vec::new() },
+            conv: if fft { self.conv.scratch() } else { ConvScratch::empty() },
+        }
+    }
+
+    /// Flat input/output dims `(dim_x1, dim_x2, dim_out)`.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.ir1.dim(), self.ir2.dim(), self.ir3.dim())
+    }
+
+    /// The fused vector product of one pair of features, written into
+    /// `out`, every intermediate in `scratch`: zero steady-state
+    /// allocations.
+    pub fn apply_into(
+        &self, x1: &[f64], x2: &[f64], out: &mut [f64],
+        scratch: &mut VectorScratch,
+    ) {
+        debug_assert_eq!(x1.len(), self.ir1.dim());
+        debug_assert_eq!(x2.len(), self.ir2.dim());
+        debug_assert_eq!(out.len(), self.ir3.dim());
+        if self.uses_fft() {
+            self.apply_fft(x1, x2, out, scratch);
+        } else {
+            self.apply_direct(x1, x2, out, scratch);
+        }
+    }
+
+    /// Allocating convenience wrapper around [`VectorGauntPlan::apply_into`].
+    pub fn apply(&self, x1: &[f64], x2: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.ir3.dim()];
+        let mut scratch = self.scratch();
+        self.apply_into(x1, x2, &mut out, &mut scratch);
+        out
+    }
+
+    fn apply_direct(
+        &self, x1: &[f64], x2: &[f64], out: &mut [f64],
+        scratch: &mut VectorScratch,
+    ) {
+        let n1 = 2 * self.l1 + 1;
+        let n2 = 2 * self.l2 + 1;
+        let s = scratch;
+        match self.kind {
+            VectorKind::ScalarVector => {
+                GauntPlan::sh2f_into(&self.p1, x1, &mut s.g1, &mut s.w);
+                let vir2 = &self.ir2;
+                let vir3 = &self.ir3;
+                for c in 0..3 {
+                    vir2.gather_channel(x2, c, &mut s.comp2);
+                    GauntPlan::sh2f_into(&self.p2, &s.comp2, &mut s.g2, &mut s.w);
+                    conv2d_direct_into(&s.g1, n1, &s.g2, n2, &mut s.grid);
+                    crate::fourier::tables::f2sh_contract(
+                        &self.t3t, &s.grid, &mut s.outc,
+                    );
+                    vir3.scatter_channel(&s.outc, c, out);
+                }
+            }
+            VectorKind::VectorDot => {
+                s.grid.fill(C64::default());
+                for c in 0..3 {
+                    self.ir1.gather_channel(x1, c, &mut s.comp1);
+                    self.ir2.gather_channel(x2, c, &mut s.comp2);
+                    GauntPlan::sh2f_into(&self.p1, &s.comp1, &mut s.g1, &mut s.w);
+                    GauntPlan::sh2f_into(&self.p2, &s.comp2, &mut s.g2, &mut s.w);
+                    conv2d_direct_into(&s.g1, n1, &s.g2, n2, &mut s.grid2);
+                    for (a, b) in s.grid.iter_mut().zip(&s.grid2) {
+                        *a += *b;
+                    }
+                }
+                crate::fourier::tables::f2sh_contract(&self.t3t, &s.grid, out);
+            }
+            VectorKind::VectorCross => {
+                // all six component grids up front, then the cyclic form
+                for c in 0..3 {
+                    self.ir1.gather_channel(x1, c, &mut s.comp1);
+                    self.ir2.gather_channel(x2, c, &mut s.comp2);
+                    GauntPlan::sh2f_into(
+                        &self.p1,
+                        &s.comp1,
+                        &mut s.g1[c * n1 * n1..(c + 1) * n1 * n1],
+                        &mut s.w,
+                    );
+                    GauntPlan::sh2f_into(
+                        &self.p2,
+                        &s.comp2,
+                        &mut s.g2[c * n2 * n2..(c + 1) * n2 * n2],
+                        &mut s.w,
+                    );
+                }
+                for k in 0..3 {
+                    let a = (k + 1) % 3;
+                    let b = (k + 2) % 3;
+                    conv2d_direct_into(
+                        &s.g1[a * n1 * n1..(a + 1) * n1 * n1],
+                        n1,
+                        &s.g2[b * n2 * n2..(b + 1) * n2 * n2],
+                        n2,
+                        &mut s.grid,
+                    );
+                    conv2d_direct_into(
+                        &s.g1[b * n1 * n1..(b + 1) * n1 * n1],
+                        n1,
+                        &s.g2[a * n2 * n2..(a + 1) * n2 * n2],
+                        n2,
+                        &mut s.grid2,
+                    );
+                    for (p, q) in s.grid.iter_mut().zip(&s.grid2) {
+                        *p -= *q;
+                    }
+                    crate::fourier::tables::f2sh_contract(
+                        &self.t3t, &s.grid, &mut s.outc,
+                    );
+                    self.ir3.scatter_channel(&s.outc, k, out);
+                }
+            }
+        }
+    }
+
+    fn apply_fft(
+        &self, x1: &[f64], x2: &[f64], out: &mut [f64],
+        scratch: &mut VectorScratch,
+    ) {
+        let m2 = self.conv.m * self.conv.m;
+        let s = scratch;
+        match self.kind {
+            VectorKind::ScalarVector => {
+                GauntPlan::sh2f_into(&self.p1, x1, &mut s.g1, &mut s.w);
+                for c in 0..3 {
+                    self.ir2.gather_channel(x2, c, &mut s.comp2);
+                    GauntPlan::sh2f_into(&self.p2, &s.comp2, &mut s.g2, &mut s.w);
+                    self.conv.samples_pair_into(
+                        &s.g1, &s.g2, &mut s.q1, &mut s.q2, &mut s.conv,
+                    );
+                    mul_into(&mut s.qa, &s.q1, &s.q2);
+                    self.conv.grid_from_samples_into(
+                        &s.qa, &mut s.grid, &mut s.conv,
+                    );
+                    crate::fourier::tables::f2sh_contract(
+                        &self.t3t, &s.grid, &mut s.outc,
+                    );
+                    self.ir3.scatter_channel(&s.outc, c, out);
+                }
+            }
+            VectorKind::VectorDot => {
+                s.qa.fill(0.0);
+                for c in 0..3 {
+                    self.ir1.gather_channel(x1, c, &mut s.comp1);
+                    self.ir2.gather_channel(x2, c, &mut s.comp2);
+                    GauntPlan::sh2f_into(&self.p1, &s.comp1, &mut s.g1, &mut s.w);
+                    GauntPlan::sh2f_into(&self.p2, &s.comp2, &mut s.g2, &mut s.w);
+                    self.conv.samples_pair_into(
+                        &s.g1, &s.g2, &mut s.q1, &mut s.q2, &mut s.conv,
+                    );
+                    mul_add(&mut s.qa, &s.q1, &s.q2);
+                }
+                self.conv.grid_from_samples_into(&s.qa, &mut s.grid, &mut s.conv);
+                crate::fourier::tables::f2sh_contract(&self.t3t, &s.grid, out);
+            }
+            VectorKind::VectorCross => {
+                for c in 0..3 {
+                    self.ir1.gather_channel(x1, c, &mut s.comp1);
+                    self.ir2.gather_channel(x2, c, &mut s.comp2);
+                    GauntPlan::sh2f_into(&self.p1, &s.comp1, &mut s.g1, &mut s.w);
+                    GauntPlan::sh2f_into(&self.p2, &s.comp2, &mut s.g2, &mut s.w);
+                    let (qa_c, qb_c) = (
+                        &mut s.q1[c * m2..(c + 1) * m2],
+                        &mut s.q2[c * m2..(c + 1) * m2],
+                    );
+                    self.conv.samples_pair_into(
+                        &s.g1, &s.g2, qa_c, qb_c, &mut s.conv,
+                    );
+                }
+                for k in 0..3 {
+                    let a = (k + 1) % 3;
+                    let b = (k + 2) % 3;
+                    mul_into(
+                        &mut s.qa,
+                        &s.q1[a * m2..(a + 1) * m2],
+                        &s.q2[b * m2..(b + 1) * m2],
+                    );
+                    mul_sub(
+                        &mut s.qa,
+                        &s.q1[b * m2..(b + 1) * m2],
+                        &s.q2[a * m2..(a + 1) * m2],
+                    );
+                    self.conv.grid_from_samples_into(
+                        &s.qa, &mut s.grid, &mut s.conv,
+                    );
+                    crate::fourier::tables::f2sh_contract(
+                        &self.t3t, &s.grid, &mut s.outc,
+                    );
+                    self.ir3.scatter_channel(&s.outc, k, out);
+                }
+            }
+        }
+    }
+
+    /// The degree-rotated sibling plan computing this plan's VJP w.r.t.
+    /// x1: `(kind', l1', l2', l3')` such that
+    /// `d<g, self(x1, x2)>/dx1 = sibling(arg_a, arg_b)` with the operand
+    /// order given by [`VectorGauntPlan::vjp_operands_swapped`].
+    pub fn vjp_sibling_key(&self) -> (VectorKind, usize, usize, usize) {
+        match self.kind {
+            VectorKind::ScalarVector => {
+                (VectorKind::VectorDot, self.l3, self.l2, self.l1)
+            }
+            VectorKind::VectorDot => {
+                (VectorKind::ScalarVector, self.l3, self.l2, self.l1)
+            }
+            VectorKind::VectorCross => {
+                (VectorKind::VectorCross, self.l2, self.l3, self.l1)
+            }
+        }
+    }
+
+    /// Whether the VJP sibling takes `(x2, g)` instead of `(g, x2)`
+    /// (true only for cross, whose sibling absorbs the cotangent as its
+    /// second operand).
+    pub fn vjp_operands_swapped(&self) -> bool {
+        self.kind == VectorKind::VectorCross
+    }
+}
+
+fn mul_into(out: &mut [f64], a: &[f64], b: &[f64]) {
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = x * y;
+    }
+}
+
+fn mul_add(out: &mut [f64], a: &[f64], b: &[f64]) {
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o += x * y;
+    }
+}
+
+fn mul_sub(out: &mut [f64], a: &[f64], b: &[f64]) {
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o -= x * y;
+    }
+}
+
+/// O(L^6) dense Gaunt-tensor reference: the CG-style baseline the
+/// conformance tests oracle against and `fig_vector` benchmarks.
+pub struct NaiveVectorTp {
+    pub kind: VectorKind,
+    pub l1: usize,
+    pub l2: usize,
+    pub l3: usize,
+    g: Vec<f64>,
+    ir1: Irreps,
+    ir2: Irreps,
+    ir3: Irreps,
+}
+
+impl NaiveVectorTp {
+    pub fn new(kind: VectorKind, l1: usize, l2: usize, l3: usize) -> Self {
+        let (ir1, ir3) = match kind {
+            VectorKind::ScalarVector => {
+                (Irreps::single(l1), Irreps::spherical(3, l3))
+            }
+            VectorKind::VectorDot => {
+                (Irreps::spherical(3, l1), Irreps::single(l3))
+            }
+            VectorKind::VectorCross => {
+                (Irreps::spherical(3, l1), Irreps::spherical(3, l3))
+            }
+        };
+        NaiveVectorTp {
+            kind,
+            l1,
+            l2,
+            l3,
+            g: gaunt_tensor_real(l1, l2, l3),
+            ir1,
+            ir2: Irreps::spherical(3, l2),
+            ir3,
+        }
+    }
+
+    fn contract(&self, s1: &[f64], s2: &[f64], out: &mut [f64], sign: f64) {
+        let (n1, n2) = (num_coeffs(self.l1), num_coeffs(self.l2));
+        for (k, o) in out.iter_mut().enumerate() {
+            let block = &self.g[k * n1 * n2..(k + 1) * n1 * n2];
+            let mut acc = 0.0;
+            for (i, x) in s1.iter().enumerate() {
+                if *x == 0.0 {
+                    continue;
+                }
+                let row = &block[i * n2..(i + 1) * n2];
+                for (j, y) in s2.iter().enumerate() {
+                    acc += row[j] * x * y;
+                }
+            }
+            *o += sign * acc;
+        }
+    }
+
+    pub fn apply(&self, x1: &[f64], x2: &[f64]) -> Vec<f64> {
+        let (n1, n2, n3) =
+            (num_coeffs(self.l1), num_coeffs(self.l2), num_coeffs(self.l3));
+        let mut out = vec![0.0; self.ir3.dim()];
+        let mut c1 = vec![0.0; n1];
+        let mut c2 = vec![0.0; n2];
+        let mut oc = vec![0.0; n3];
+        match self.kind {
+            VectorKind::ScalarVector => {
+                for c in 0..3 {
+                    self.ir2.gather_channel(x2, c, &mut c2);
+                    oc.fill(0.0);
+                    self.contract(x1, &c2, &mut oc, 1.0);
+                    self.ir3.scatter_channel(&oc, c, &mut out);
+                }
+            }
+            VectorKind::VectorDot => {
+                for c in 0..3 {
+                    self.ir1.gather_channel(x1, c, &mut c1);
+                    self.ir2.gather_channel(x2, c, &mut c2);
+                    self.contract(&c1, &c2, &mut out, 1.0);
+                }
+            }
+            VectorKind::VectorCross => {
+                let mut c1b = vec![0.0; n1];
+                let mut c2b = vec![0.0; n2];
+                for k in 0..3 {
+                    let a = (k + 1) % 3;
+                    let b = (k + 2) % 3;
+                    self.ir1.gather_channel(x1, a, &mut c1);
+                    self.ir2.gather_channel(x2, b, &mut c2);
+                    self.ir1.gather_channel(x1, b, &mut c1b);
+                    self.ir2.gather_channel(x2, a, &mut c2b);
+                    oc.fill(0.0);
+                    self.contract(&c1, &c2, &mut oc, 1.0);
+                    self.contract(&c1b, &c2b, &mut oc, -1.0);
+                    self.ir3.scatter_channel(&oc, k, &mut out);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Scalar signal under a (possibly improper) orthogonal map `o`: each
+/// degree-l block gets `det^l D^l(det * o)`.  Test/support helper shared
+/// by the conformance suites.
+pub fn transform_scalar(x: &[f64], l_max: usize, o: &Rot3) -> Vec<f64> {
+    let det = if o.det() >= 0.0 { 1.0 } else { -1.0 };
+    let r = Rot3([
+        [det * o.0[0][0], det * o.0[0][1], det * o.0[0][2]],
+        [det * o.0[1][0], det * o.0[1][1], det * o.0[1][2]],
+        [det * o.0[2][0], det * o.0[2][1], det * o.0[2][2]],
+    ]);
+    let mut out = vec![0.0; x.len()];
+    for l in 0..=l_max {
+        let d = wigner_d_real(l, &r);
+        let n = 2 * l + 1;
+        let base = l * l;
+        let f = if l % 2 == 1 { det } else { 1.0 };
+        for i in 0..n {
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += d[i * n + j] * x[base + j];
+            }
+            out[base + i] = f * acc;
+        }
+    }
+    out
+}
+
+/// Vector signal under `o`: components mix with D^1, each degree with
+/// D^l; a polar signal picks up `det^{l+1}` per degree under improper
+/// maps, a pseudovector `det^l`.
+pub fn transform_vector(
+    x: &[f64], l_max: usize, o: &Rot3, pseudo: bool,
+) -> Vec<f64> {
+    let det = if o.det() >= 0.0 { 1.0 } else { -1.0 };
+    let r = Rot3([
+        [det * o.0[0][0], det * o.0[0][1], det * o.0[0][2]],
+        [det * o.0[1][0], det * o.0[1][1], det * o.0[1][2]],
+        [det * o.0[2][0], det * o.0[2][1], det * o.0[2][2]],
+    ]);
+    let d1 = wigner_d_real(1, &r);
+    let mut out = vec![0.0; x.len()];
+    for l in 0..=l_max {
+        let dl = wigner_d_real(l, &r);
+        let n = 2 * l + 1;
+        let base = 3 * l * l;
+        let pow = if pseudo { l } else { l + 1 };
+        let f = if pow % 2 == 1 { det } else { 1.0 };
+        // out[c, i] = f * sum_{a, j} d1[c, a] x[a, j] dl[i, j]
+        for c in 0..3 {
+            for i in 0..n {
+                let mut acc = 0.0;
+                for a in 0..3 {
+                    let xa = &x[base + a * n..base + (a + 1) * n];
+                    let mut inner = 0.0;
+                    for (j, xv) in xa.iter().enumerate() {
+                        inner += dl[i * n + j] * xv;
+                    }
+                    acc += d1[c * 3 + a] * inner;
+                }
+                out[base + c * n + i] = f * acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::so3::sh::eval_sh_series;
+    use crate::util::prop::max_abs_diff;
+    use crate::util::rng::Rng;
+
+    const TRIPLES: [(VectorKind, usize, usize, usize); 6] = [
+        (VectorKind::ScalarVector, 2, 2, 2),
+        (VectorKind::ScalarVector, 1, 2, 3),
+        (VectorKind::VectorDot, 2, 2, 2),
+        (VectorKind::VectorDot, 2, 1, 3),
+        (VectorKind::VectorCross, 1, 1, 1),
+        (VectorKind::VectorCross, 2, 1, 2),
+    ];
+
+    fn rand_inputs(
+        plan: &VectorGauntPlan, rng: &mut Rng,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let (n1, n2, _) = plan.dims();
+        (rng.normals(n1), rng.normals(n2))
+    }
+
+    #[test]
+    fn matches_naive_reference() {
+        let mut rng = Rng::new(0);
+        for &(kind, l1, l2, l3) in &TRIPLES {
+            let naive = NaiveVectorTp::new(kind, l1, l2, l3);
+            for method in [ConvMethod::Direct, ConvMethod::Fft] {
+                let plan = VectorGauntPlan::new(kind, l1, l2, l3, method);
+                let (x1, x2) = rand_inputs(&plan, &mut rng);
+                let got = plan.apply(&x1, &x2);
+                let want = naive.apply(&x1, &x2);
+                assert!(
+                    max_abs_diff(&got, &want) < 1e-9,
+                    "{kind:?} ({l1},{l2},{l3}) {method:?}: {}",
+                    max_abs_diff(&got, &want)
+                );
+            }
+        }
+    }
+
+    fn eval_component(x: &[f64], l: usize, c: usize, theta: f64, phi: f64) -> f64 {
+        let ir = Irreps::spherical(3, l);
+        let mut comp = vec![0.0; num_coeffs(l)];
+        ir.gather_channel(x, c, &mut comp);
+        eval_sh_series(&comp, l, theta, phi)
+    }
+
+    /// xyz value of a vector signal at a direction.
+    fn eval_field(x: &[f64], l: usize, theta: f64, phi: f64) -> [f64; 3] {
+        let mut v = [0.0; 3];
+        for c in 0..3 {
+            v[CART[c]] = eval_component(x, l, c, theta, phi);
+        }
+        v
+    }
+
+    #[test]
+    fn pointwise_product_semantics() {
+        let mut rng = Rng::new(1);
+        // full-degree outputs so truncation is exact
+        let dot = VectorGauntPlan::new(
+            VectorKind::VectorDot, 2, 1, 3, ConvMethod::Direct,
+        );
+        let cross = VectorGauntPlan::new(
+            VectorKind::VectorCross, 2, 1, 3, ConvMethod::Direct,
+        );
+        let sv = VectorGauntPlan::new(
+            VectorKind::ScalarVector, 2, 1, 3, ConvMethod::Direct,
+        );
+        let s = rng.normals(num_coeffs(2));
+        let v1 = rng.normals(3 * num_coeffs(2));
+        let v2 = rng.normals(3 * num_coeffs(1));
+        let y_sv = sv.apply(&s, &v2);
+        let y_dot = dot.apply(&v1, &v2);
+        let y_cross = cross.apply(&v1, &v2);
+        for _ in 0..10 {
+            let theta = rng.uniform(0.1, 3.0);
+            let phi = rng.uniform(0.0, 6.28);
+            let fs = eval_sh_series(&s, 2, theta, phi);
+            let f1 = eval_field(&v1, 2, theta, phi);
+            let f2 = eval_field(&v2, 1, theta, phi);
+            let g_sv = eval_field(&y_sv, 3, theta, phi);
+            for k in 0..3 {
+                assert!((g_sv[k] - fs * f2[k]).abs() < 1e-9);
+            }
+            let g_dot = eval_sh_series(&y_dot, 3, theta, phi);
+            let dot_want =
+                f1[0] * f2[0] + f1[1] * f2[1] + f1[2] * f2[2];
+            assert!((g_dot - dot_want).abs() < 1e-9);
+            let g_cross = eval_field(&y_cross, 3, theta, phi);
+            let cross_want = [
+                f1[1] * f2[2] - f1[2] * f2[1],
+                f1[2] * f2[0] - f1[0] * f2[2],
+                f1[0] * f2[1] - f1[1] * f2[0],
+            ];
+            for k in 0..3 {
+                assert!((g_cross[k] - cross_want[k]).abs() < 1e-9);
+            }
+        }
+    }
+
+    fn transform_in1(
+        plan: &VectorGauntPlan, x: &[f64], o: &Rot3,
+    ) -> Vec<f64> {
+        match plan.kind {
+            VectorKind::ScalarVector => transform_scalar(x, plan.l1, o),
+            _ => transform_vector(x, plan.l1, o, false),
+        }
+    }
+
+    fn transform_out(plan: &VectorGauntPlan, y: &[f64], o: &Rot3) -> Vec<f64> {
+        match plan.kind {
+            VectorKind::ScalarVector => transform_vector(y, plan.l3, o, false),
+            VectorKind::VectorDot => transform_scalar(y, plan.l3, o),
+            VectorKind::VectorCross => transform_vector(y, plan.l3, o, true),
+        }
+    }
+
+    #[test]
+    fn equivariance_proper_and_improper() {
+        let mut rng = Rng::new(2);
+        for &(kind, l1, l2, l3) in &TRIPLES {
+            let plan = VectorGauntPlan::new(kind, l1, l2, l3, ConvMethod::Auto);
+            let (x1, x2) = rand_inputs(&plan, &mut rng);
+            let rot = Rot3::random(&mut rng);
+            for improper in [false, true] {
+                let o = if improper {
+                    Rot3([
+                        [-rot.0[0][0], -rot.0[0][1], -rot.0[0][2]],
+                        [-rot.0[1][0], -rot.0[1][1], -rot.0[1][2]],
+                        [-rot.0[2][0], -rot.0[2][1], -rot.0[2][2]],
+                    ])
+                } else {
+                    rot.clone()
+                };
+                let tx1 = transform_in1(&plan, &x1, &o);
+                let tx2 = transform_vector(&x2, l2, &o, false);
+                let lhs = plan.apply(&tx1, &tx2);
+                let rhs = transform_out(&plan, &plan.apply(&x1, &x2), &o);
+                assert!(
+                    max_abs_diff(&lhs, &rhs) < 1e-8,
+                    "{kind:?} ({l1},{l2},{l3}) improper={improper}: {}",
+                    max_abs_diff(&lhs, &rhs)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vjp_siblings_match_finite_differences() {
+        let mut rng = Rng::new(3);
+        let h = 1e-6;
+        for &(kind, l1, l2, l3) in &TRIPLES {
+            let plan = VectorGauntPlan::new(kind, l1, l2, l3, ConvMethod::Auto);
+            let (x1, x2) = rand_inputs(&plan, &mut rng);
+            let (_, _, n3) = plan.dims();
+            let g = rng.normals(n3);
+            let (sk, sl1, sl2, sl3) = plan.vjp_sibling_key();
+            let sib = VectorGauntPlan::new(sk, sl1, sl2, sl3, ConvMethod::Auto);
+            let grad = if plan.vjp_operands_swapped() {
+                sib.apply(&x2, &g)
+            } else {
+                sib.apply(&g, &x2)
+            };
+            for i in 0..x1.len().min(8) {
+                let mut xp = x1.clone();
+                xp[i] += h;
+                let mut xm = x1.clone();
+                xm[i] -= h;
+                let yp = plan.apply(&xp, &x2);
+                let ym = plan.apply(&xm, &x2);
+                let fd: f64 = yp
+                    .iter()
+                    .zip(&ym)
+                    .zip(&g)
+                    .map(|((p, m), gv)| gv * (p - m) / (2.0 * h))
+                    .sum();
+                assert!(
+                    (grad[i] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                    "{kind:?} ({l1},{l2},{l3}) i={i}: {} vs {}",
+                    grad[i],
+                    fd
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_with_rhat_extracts_radial_part() {
+        // <F(u), u> of the constant field F = u is |u|^2 = 1, whose
+        // degree-0 coefficient is sqrt(4 pi)
+        let rhat = VectorIrreps::rhat_signal();
+        let plan =
+            VectorGauntPlan::new(VectorKind::VectorDot, 1, 1, 0, ConvMethod::Direct);
+        let out = plan.apply(&rhat, &rhat);
+        assert!((out[0] - (4.0 * std::f64::consts::PI).sqrt()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn cross_of_parallel_fields_vanishes() {
+        let rhat = VectorIrreps::rhat_signal();
+        let plan = VectorGauntPlan::new(
+            VectorKind::VectorCross, 1, 1, 2, ConvMethod::Direct,
+        );
+        let out = plan.apply(&rhat, &rhat);
+        assert!(max_abs_diff(&out, &vec![0.0; out.len()]) < 1e-10);
+    }
+
+    #[test]
+    fn apply_into_scratch_reuse_is_exact() {
+        let mut rng = Rng::new(4);
+        for method in [ConvMethod::Direct, ConvMethod::Fft] {
+            let plan = VectorGauntPlan::new(
+                VectorKind::VectorCross, 2, 2, 3, method,
+            );
+            let (x1, x2) = rand_inputs(&plan, &mut rng);
+            let want = plan.apply(&x1, &x2);
+            let (y1, y2) = rand_inputs(&plan, &mut rng);
+            let mut scratch = plan.scratch();
+            let mut out = vec![0.0; want.len()];
+            plan.apply_into(&y1, &y2, &mut out, &mut scratch);
+            plan.apply_into(&x1, &x2, &mut out, &mut scratch);
+            assert!(
+                max_abs_diff(&out, &want) == 0.0,
+                "scratch state leaked ({method:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_matches_projection() {
+        let mut rng = Rng::new(5);
+        let full = VectorGauntPlan::new(
+            VectorKind::ScalarVector, 2, 2, 4, ConvMethod::Fft,
+        );
+        let trunc = VectorGauntPlan::new(
+            VectorKind::ScalarVector, 2, 2, 1, ConvMethod::Fft,
+        );
+        let (x1, x2) = rand_inputs(&full, &mut rng);
+        let y_full = full.apply(&x1, &x2);
+        let y_trunc = trunc.apply(&x1, &x2);
+        let ir4 = Irreps::spherical(3, 4);
+        let ir1 = Irreps::spherical(3, 1);
+        let mut c4 = vec![0.0; num_coeffs(4)];
+        let mut c1 = vec![0.0; num_coeffs(1)];
+        for c in 0..3 {
+            ir4.gather_channel(&y_full, c, &mut c4);
+            ir1.gather_channel(&y_trunc, c, &mut c1);
+            assert!(max_abs_diff(&c1, &c4[..num_coeffs(1)]) < 1e-10);
+        }
+    }
+}

@@ -114,6 +114,54 @@ fn gaunt_hot_path_steady_state_is_allocation_free() {
         );
     }
 
+    // vector-signal plans: every kind on both backends, forward AND the
+    // degree-rotated sibling VJP, over one caller-owned scratch each
+    {
+        use gaunt_tp::tp::{VectorGauntPlan, VectorKind};
+        for (kind, l1, l2, l3) in [
+            (VectorKind::ScalarVector, 2usize, 1usize, 2usize),
+            (VectorKind::VectorDot, 2, 2, 2),
+            (VectorKind::VectorCross, 2, 1, 2),
+        ] {
+            for method in [ConvMethod::Direct, ConvMethod::Fft] {
+                let plan = VectorGauntPlan::new(kind, l1, l2, l3, method);
+                let (d1, d2, d3) = plan.dims();
+                let x1 = rng.normals(d1);
+                let x2 = rng.normals(d2);
+                let g = rng.normals(d3);
+                let mut out = vec![0.0; d3];
+                let mut grad = vec![0.0; d1];
+                let mut scratch = plan.scratch();
+                // the VJP runs through the sibling plan directly: the
+                // operand order is the sibling's forward order
+                let (sk, s1, s2, s3) = plan.vjp_sibling_key();
+                let sib = VectorGauntPlan::new(sk, s1, s2, s3, method);
+                let mut sib_scratch = sib.scratch();
+                let (a, b): (&[f64], &[f64]) =
+                    if plan.vjp_operands_swapped() {
+                        (&x2, &g)
+                    } else {
+                        (&g, &x2)
+                    };
+                // warm once (shared FFT tables)
+                plan.apply_into(&x1, &x2, &mut out, &mut scratch);
+                sib.apply_into(a, b, &mut grad, &mut sib_scratch);
+                let before = allocs();
+                for _ in 0..8 {
+                    plan.apply_into(&x1, &x2, &mut out, &mut scratch);
+                    sib.apply_into(a, b, &mut grad, &mut sib_scratch);
+                }
+                let delta = allocs() - before;
+                assert_eq!(
+                    delta, 0,
+                    "vector {kind:?} ({l1},{l2},{l3}) {method:?}: {delta} \
+                     allocations in 8 steady-state apply+vjp rounds \
+                     (expected 0)"
+                );
+            }
+        }
+    }
+
     // many-body planned pipeline (chain + self-product)
     {
         let (nu, l, lo) = (3usize, 2usize, 3usize);

@@ -27,6 +27,7 @@ use gaunt_tp::lm_index;
 
 const GOLDEN_PATH: &str = "artifacts/golden/so3_golden.json";
 const MODEL_GOLDEN_PATH: &str = "artifacts/golden/model_golden.json";
+const VECTOR_GOLDEN_PATH: &str = "artifacts/golden/vector_golden.json";
 
 /// Whether missing goldens are hard failures (scripts/verify.sh sets
 /// this whenever the artifacts have been generated).
@@ -319,6 +320,164 @@ fn model_energy_and_forces_match_python() {
         let (e2, _) = m2.energy_forces(&pos, &species);
         assert!((e2 - e_ref).abs() < 1e-7 * (1.0 + e_ref.abs()),
                 "{method:?}: {e2} vs {e_ref}");
+    }
+}
+
+/// The vector-signal subsystem against the numpy mirror
+/// (`python -m compile.vector_golden`): real VSH values at six frozen
+/// directions, all three `tp::vector` plan kinds (forward AND
+/// sibling-plan VJP, on both conv backends), the VSH dot-coupling
+/// tensor, and the dipole readout head's forward + parameter
+/// gradients.  The Python side validates the same numbers against
+/// quadrature, finite differences, and O(3) transforms before
+/// exporting.
+#[test]
+fn vector_ops_match_python() {
+    use gaunt_tp::model::dipole::DipoleHead;
+    use gaunt_tp::so3::{vsh_dot_gaunt, vsh_set, VshEvaluator, VshKind};
+    use gaunt_tp::tp::{VectorGauntPlan, VectorKind};
+    let g = match load_golden_file(VECTOR_GOLDEN_PATH, "vector_ops_match_python")
+    {
+        Some(v) => v,
+        None => return,
+    };
+    let key = |k: &str| -> &Json {
+        g.get(k).unwrap_or_else(|| {
+            panic!(
+                "{VECTOR_GOLDEN_PATH} present but key '{k}' missing — \
+                 regenerate with `make vector-golden`"
+            )
+        })
+    };
+
+    // real vector spherical harmonics at the frozen directions
+    let vsh = key("vsh");
+    let pts = vsh.get("points").and_then(Json::as_f64_vec).unwrap();
+    let entries = vsh.get("entries").and_then(Json::as_arr).unwrap();
+    assert_eq!(entries.len(), vsh_set(3, 3, 3).len());
+    let mut ev = VshEvaluator::new(3);
+    for (p_idx, p) in pts.chunks_exact(3).enumerate() {
+        ev.move_to([p[0], p[1], p[2]]);
+        for e in entries {
+            let kind = VshKind::from_name(
+                e.get("kind").and_then(Json::as_str).unwrap(),
+            )
+            .unwrap();
+            let l = e.get("l").and_then(Json::as_usize).unwrap();
+            let m = e.get("m").and_then(Json::as_f64).unwrap() as i64;
+            let want = e.get("values").and_then(Json::as_f64_vec).unwrap();
+            let got = ev.eval(kind, l, m);
+            for ax in 0..3 {
+                assert!(
+                    (got[ax] - want[3 * p_idx + ax]).abs() < 1e-9,
+                    "vsh {}({l},{m}) point {p_idx} axis {ax}: {} vs {}",
+                    kind.name(), got[ax], want[3 * p_idx + ax]
+                );
+            }
+        }
+    }
+
+    // the three plan kinds: forward on both conv backends, then the
+    // degree-rotated sibling-plan VJP against the mirror's grad
+    for case in key("plans").as_arr().unwrap() {
+        let kind = VectorKind::from_name(
+            case.get("kind").and_then(Json::as_str).unwrap(),
+        )
+        .unwrap();
+        let l1 = case.get("l1").and_then(Json::as_usize).unwrap();
+        let l2 = case.get("l2").and_then(Json::as_usize).unwrap();
+        let l3 = case.get("l3").and_then(Json::as_usize).unwrap();
+        let x1 = case.get("x1").and_then(Json::as_f64_vec).unwrap();
+        let x2 = case.get("x2").and_then(Json::as_f64_vec).unwrap();
+        let want_out = case.get("out").and_then(Json::as_f64_vec).unwrap();
+        let cot = case.get("cotangent").and_then(Json::as_f64_vec).unwrap();
+        let want_grad =
+            case.get("grad_x1").and_then(Json::as_f64_vec).unwrap();
+        for method in [ConvMethod::Direct, ConvMethod::Fft] {
+            let plan = VectorGauntPlan::new(kind, l1, l2, l3, method);
+            let got = plan.apply(&x1, &x2);
+            assert_eq!(got.len(), want_out.len());
+            for (k, (a, b)) in got.iter().zip(&want_out).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-9,
+                    "{}({l1},{l2},{l3}) {method:?} out[{k}]: {a} vs {b}",
+                    kind.name()
+                );
+            }
+            let (sk, s1, s2, s3) = plan.vjp_sibling_key();
+            let sib = VectorGauntPlan::new(sk, s1, s2, s3, method);
+            let grad = if plan.vjp_operands_swapped() {
+                sib.apply(&x2, &cot)
+            } else {
+                sib.apply(&cot, &x2)
+            };
+            assert_eq!(grad.len(), want_grad.len());
+            for (k, (a, b)) in grad.iter().zip(&want_grad).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-9,
+                    "{}({l1},{l2},{l3}) {method:?} grad_x1[{k}]: {a} vs {b}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    // the VSH-basis dot-coupling tensor, index list pinned first
+    let vd = key("vsh_dot_gaunt");
+    let l3 = vd.get("l3").and_then(Json::as_usize).unwrap();
+    let vset = vsh_set(1, 1, 1);
+    let vset_g = vd.get("vset").and_then(Json::as_arr).unwrap();
+    assert_eq!(vset_g.len(), vset.len());
+    for (row, &(k, l, m)) in vset_g.iter().zip(&vset) {
+        let row = row.as_arr().unwrap();
+        assert_eq!(row[0].as_str().unwrap(), k.name());
+        assert_eq!(row[1].as_usize().unwrap(), l);
+        assert_eq!(row[2].as_f64().unwrap() as i64, m);
+    }
+    let want_t = vd.get("tensor").and_then(Json::as_f64_vec).unwrap();
+    let got_t = vsh_dot_gaunt(l3, &vset, &vset);
+    assert_eq!(got_t.len(), want_t.len());
+    for (i, (a, b)) in got_t.iter().zip(&want_t).enumerate() {
+        assert!((a - b).abs() < 1e-9, "vsh_dot_gaunt[{i}]: {a} vs {b}");
+    }
+
+    // dipole readout head: forward + parameter gradients, both backends
+    let d = key("dipole");
+    let channels = d.get("channels").and_then(Json::as_usize).unwrap();
+    let l = d.get("l").and_then(Json::as_usize).unwrap();
+    let h = d.get("h").and_then(Json::as_f64_vec).unwrap();
+    let w = d.get("w").and_then(Json::as_f64_vec).unwrap();
+    let c_dip = d.get("c_dip").and_then(Json::as_f64).unwrap();
+    let gmv = d.get("g_mu").and_then(Json::as_f64_vec).unwrap();
+    let g_mu = [gmv[0], gmv[1], gmv[2]];
+    let want_mu = d.get("mu").and_then(Json::as_f64_vec).unwrap();
+    let want_gw = d.get("grad_w").and_then(Json::as_f64_vec).unwrap();
+    let want_gc = d.get("grad_c_dip").and_then(Json::as_f64).unwrap();
+    for method in [ConvMethod::Direct, ConvMethod::Fft] {
+        let head =
+            DipoleHead::with_params(channels, l, method, w.clone(), c_dip);
+        let mut s = head.scratch();
+        let mu = head.dipole_into(&h, &mut s);
+        for ax in 0..3 {
+            assert!(
+                (mu[ax] - want_mu[ax]).abs() < 1e-9,
+                "{method:?} mu[{ax}]: {} vs {}",
+                mu[ax], want_mu[ax]
+            );
+        }
+        let mut gw = vec![0.0; w.len()];
+        let mut gc = 0.0;
+        head.grads_into(&h, g_mu, &mut gw, &mut gc, &mut s);
+        for (i, (a, b)) in gw.iter().zip(&want_gw).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-9,
+                "{method:?} grad_w[{i}]: {a} vs {b}"
+            );
+        }
+        assert!(
+            (gc - want_gc).abs() < 1e-9,
+            "{method:?} grad_c_dip: {gc} vs {want_gc}"
+        );
     }
 }
 

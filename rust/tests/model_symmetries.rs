@@ -241,6 +241,54 @@ fn higher_order_many_body_and_deep_stacks_stay_equivariant() {
 }
 
 #[test]
+fn dipole_readout_is_a_polar_vector_under_o3() {
+    // the vector readout head on top of the full model: under any
+    // orthogonal O (proper rotation or rotation-with-inversion) the
+    // per-atom dipole must follow the polar-vector law
+    // mu(O x) = O mu(x) — improper ops catch parity-sign errors the
+    // rotation-only checks cannot see
+    use gaunt_tp::model::dipole::DipoleHead;
+    let model = model_for(ConvMethod::Auto, 2, 2);
+    let head = DipoleHead::new(
+        model.cfg.channels, model.cfg.l, ConvMethod::Auto, 19);
+    let (pos, species) = toy_structure(12, 6);
+    let mut s = model.scratch();
+    let mut hs = head.scratch();
+    let edges = model.build_edges(&pos);
+    model.energy_into(&pos, &species, &edges, &mut s);
+    let mut mu0 = vec![0.0; 3 * pos.len()];
+    model.dipoles_into(&head, pos.len(), &s, &mut hs, &mut mu0);
+    let scale = mu0.iter().fold(0.0f64, |m, x| m.max(x.abs())).max(1e-3);
+    let mut rng = Rng::new(31);
+    let r = Rot3::random(&mut rng);
+    let m = &r.0;
+    let inv_r = Rot3([
+        [-m[0][0], -m[0][1], -m[0][2]],
+        [-m[1][0], -m[1][1], -m[1][2]],
+        [-m[2][0], -m[2][1], -m[2][2]],
+    ]);
+    for (o, label) in [(r, "proper"), (inv_r, "improper")] {
+        let pos_o: Vec<[f64; 3]> =
+            pos.iter().map(|&p| o.apply(p)).collect();
+        let edges_o = model.build_edges(&pos_o);
+        model.energy_into(&pos_o, &species, &edges_o, &mut s);
+        let mut mu_o = vec![0.0; 3 * pos.len()];
+        model.dipoles_into(&head, pos.len(), &s, &mut hs, &mut mu_o);
+        for i in 0..pos.len() {
+            let want =
+                o.apply([mu0[3 * i], mu0[3 * i + 1], mu0[3 * i + 2]]);
+            for ax in 0..3 {
+                assert!(
+                    (mu_o[3 * i + ax] - want[ax]).abs() <= REL_TOL * scale,
+                    "{label} dipole[{i}][{ax}]: {} vs {}",
+                    mu_o[3 * i + ax], want[ax]
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn served_energies_inherit_the_invariances() {
     // the same invariance must survive the full serving stack (padding,
     // f32 casts, batched multi-threaded inference)

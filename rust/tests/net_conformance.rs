@@ -23,7 +23,7 @@ use gaunt_tp::net::loadtest::{cluster, run_cluster_loadtest, LoadOpts};
 use gaunt_tp::net::proto::{decode_server, encode_client, ClientMsg, ServerMsg};
 use gaunt_tp::net::{
     read_frame, temp_socket_path, write_frame, Addr, FrontDoor,
-    FrontDoorConfig, NetClient, Replica,
+    FrontDoorConfig, NetClient, Replica, RespawnPolicy,
 };
 
 // sockets, services, and the process-global failpoint registry all
@@ -416,6 +416,88 @@ fn frontdoor_reroutes_when_a_replica_is_shut_down() {
     nc.close();
     fd.shutdown();
     r1.shutdown();
+}
+
+#[test]
+fn frontdoor_respawns_its_own_dead_spawned_replica() {
+    let _g = serial();
+    let exe = Path::new(env!("CARGO_BIN_EXE_gaunt-tp"));
+    // spawn one real replica process, exactly as `--spawn-replicas` does
+    let raddr = Addr::Unix(temp_socket_path("net-respawn-r0"));
+    let cmd: Vec<String> = vec![
+        exe.to_string_lossy().into_owned(),
+        "replica".to_string(),
+        "--listen".to_string(),
+        raddr.to_string(),
+        "--workers".to_string(),
+        "1".to_string(),
+        "--name".to_string(),
+        "respawn-r0".to_string(),
+    ];
+    let child = std::process::Command::new(&cmd[0])
+        .args(&cmd[1..])
+        .spawn()
+        .expect("spawn replica child");
+    let pid = child.id();
+    let cfg = FrontDoorConfig {
+        probe_interval: Duration::from_millis(20),
+        ..Default::default()
+    };
+    let fd = FrontDoor::serve(
+        &[raddr],
+        &[Addr::Unix(temp_socket_path("net-respawn-fd"))],
+        cfg,
+    )
+    .expect("front door up");
+    fd.supervise(0, child, cmd, RespawnPolicy {
+        max_restarts: 3,
+        backoff_initial: Duration::from_millis(50),
+        backoff_max: Duration::from_millis(400),
+    });
+    assert!(
+        wait_until(Duration::from_secs(15), || {
+            fd.live_replicas().len() == 1
+        }),
+        "spawned replica must come up and join routing"
+    );
+    let nc = NetClient::connect(&fd.bound()[0]).expect("connect fd");
+    nc.submit(Request::new(EnergyOnly(cluster(8, 1))))
+        .expect("submit before kill")
+        .wait()
+        .expect("reply before kill");
+    // SIGKILL the child out from under its supervisor: the prober must
+    // notice the death, reap + respawn the child, and the fresh replica
+    // must rejoin routing with no operator action
+    assert!(
+        std::process::Command::new("kill")
+            .args(["-9", &pid.to_string()])
+            .status()
+            .expect("run kill")
+            .success(),
+        "kill -9 must reach the replica child"
+    );
+    assert!(
+        wait_until(Duration::from_secs(10), || fd.live_replicas().is_empty()),
+        "prober must mark the killed replica down"
+    );
+    assert!(
+        wait_until(Duration::from_secs(15), || {
+            fd.live_replicas().len() == 1
+        }),
+        "supervisor must respawn the child and the prober reconnect"
+    );
+    assert!(
+        fd.respawn_counts()[0] >= 1,
+        "the rejoin must come from a supervised respawn: {:?}",
+        fd.respawn_counts()
+    );
+    nc.submit(Request::new(EnergyOnly(cluster(8, 2))))
+        .expect("submit after respawn")
+        .wait()
+        .expect("reply after respawn");
+    nc.close();
+    // shutdown also kills + reaps the supervised child
+    fd.shutdown();
 }
 
 // ---------------------------------------------------------------------

@@ -334,3 +334,197 @@ fn uniform_dispatch_matches_per_row_applies() {
         }
     }
 }
+
+/// Improper rotations (inversion composed with a proper rotation) catch
+/// the parity signs the rotation-only equivariance block cannot see:
+/// every scalar-signal op must transform degree-l blocks with an extra
+/// `det^l` (functions on the sphere: `Y_lm(-u) = (-1)^l Y_lm(u)`), with
+/// directions mapped by the full orthogonal matrix.
+#[test]
+fn every_op_transforms_correctly_under_improper_rotations() {
+    let _guard = SERIAL.lock().unwrap();
+    use gaunt_tp::tp::vector::transform_scalar;
+    let cache = PlanCache::global();
+    let mut rng = Rng::new(2026);
+    for key in keys() {
+        // The CG full tensor product keeps BOTH parities of coupling
+        // path: an (l1, l2) -> l pair with l1 + l2 + l odd (e.g. the
+        // antisymmetric 2 (x) 2 -> 1) transforms with det^(l1+l2), not
+        // det^l, so the scalar-signal parity law does not apply — CG is
+        // an SO(3) op.  Every pointwise-product family (Gaunt, eSCN,
+        // many-body) is a function on the sphere and IS O(3)-covariant.
+        if matches!(key, OpKey::Cg { .. }) {
+            continue;
+        }
+        let op = cache.op(&key);
+        let op = op.as_ref();
+        let n_out = op.irreps_out().dim();
+        let l_in = op.irreps_in().l_max();
+        let l_out = op.irreps_out().l_max();
+        let ops = Operands::random(op, &mut rng);
+        let mut scratch = op.scratch();
+        let mut out = vec![0.0; n_out];
+        op.apply_into(ops.inputs(), &mut scratch, &mut out);
+        let (_, equi_tol) = tolerances(&key);
+        let r = Rot3::random(&mut rng);
+        // compose with inversion: det(o) = -1
+        let o = Rot3([
+            [-r.0[0][0], -r.0[0][1], -r.0[0][2]],
+            [-r.0[1][0], -r.0[1][1], -r.0[1][2]],
+            [-r.0[2][0], -r.0[2][1], -r.0[2][2]],
+        ]);
+        let transformed = Operands {
+            x1: transform_scalar(&ops.x1, l_in, &o),
+            x2: ops.x2.as_ref().map(|x2| {
+                transform_scalar(
+                    x2, op.irreps_in2().unwrap().l_max(), &o,
+                )
+            }),
+            dir: ops.dir.map(|d| o.apply(d)),
+            weights: ops.weights.clone(),
+        };
+        let mut out_t = vec![0.0; n_out];
+        op.apply_into(transformed.inputs(), &mut scratch, &mut out_t);
+        let want = transform_scalar(&out, l_out, &o);
+        assert!(
+            max_abs_diff(&out_t, &want) < equi_tol,
+            "{key:?}: improper-rotation parity violated ({})",
+            max_abs_diff(&out_t, &want)
+        );
+    }
+}
+
+/// The vector plan family under the same four-part contract, with its
+/// OWN transformation laws: the generic `rotate_feature` block-D is
+/// wrong for the `spherical(3, L)` component-major vector layout, so
+/// equivariance here uses the typed `transform_scalar`/`transform_vector`
+/// helpers (polar inputs, polar or pseudo outputs per kind), under both
+/// proper and improper orthogonal maps.
+#[test]
+fn vector_ops_satisfy_the_contract() {
+    let _guard = SERIAL.lock().unwrap();
+    use gaunt_tp::tp::vector::{
+        transform_scalar, transform_vector, VectorKind,
+    };
+    let cache = PlanCache::global();
+    let mut rng = Rng::new(314);
+    let triples: Vec<(VectorKind, usize, usize, usize, ConvMethod)> =
+        if smoke() {
+            vec![(VectorKind::ScalarVector, 2, 1, 2, ConvMethod::Direct)]
+        } else {
+            vec![
+                (VectorKind::ScalarVector, 2, 1, 2, ConvMethod::Direct),
+                (VectorKind::ScalarVector, 2, 2, 3, ConvMethod::Fft),
+                (VectorKind::VectorDot, 2, 2, 2, ConvMethod::Direct),
+                (VectorKind::VectorDot, 2, 1, 3, ConvMethod::Fft),
+                (VectorKind::VectorCross, 1, 1, 1, ConvMethod::Direct),
+                (VectorKind::VectorCross, 2, 1, 2, ConvMethod::Fft),
+            ]
+        };
+    let fd_probes = if smoke() { 4 } else { 10 };
+    for (kind, l1, l2, l3, method) in triples {
+        let key = OpKey::Vector { kind, l1, l2, l3, method };
+        let op = cache.op(&key);
+        let op = op.as_ref();
+        assert_eq!(op.key(), key);
+        let n_out = op.irreps_out().dim();
+        let ops = Operands::random(op, &mut rng);
+        let mut scratch = op.scratch();
+        let mut out = vec![0.0; n_out];
+
+        // 1. trait apply equals the typed plan apply
+        op.apply_into(ops.inputs(), &mut scratch, &mut out);
+        let want = cache
+            .vector(kind, l1, l2, l3, method)
+            .apply(&ops.x1, ops.x2.as_ref().unwrap());
+        assert!(
+            max_abs_diff(&out, &want) < 1e-12,
+            "{key:?}: trait apply diverges from typed apply"
+        );
+
+        // 2. equivariance under proper AND improper orthogonal maps,
+        // with the kind's parity typing
+        let x2 = ops.x2.as_ref().unwrap();
+        for improper in [false, true] {
+            let r = Rot3::random(&mut rng);
+            let o = if improper {
+                Rot3([
+                    [-r.0[0][0], -r.0[0][1], -r.0[0][2]],
+                    [-r.0[1][0], -r.0[1][1], -r.0[1][2]],
+                    [-r.0[2][0], -r.0[2][1], -r.0[2][2]],
+                ])
+            } else {
+                r
+            };
+            let (tx1, tx2, tout) = match kind {
+                VectorKind::ScalarVector => (
+                    transform_scalar(&ops.x1, l1, &o),
+                    transform_vector(x2, l2, &o, false),
+                    transform_vector(&out, l3, &o, false),
+                ),
+                VectorKind::VectorDot => (
+                    transform_vector(&ops.x1, l1, &o, false),
+                    transform_vector(x2, l2, &o, false),
+                    transform_scalar(&out, l3, &o),
+                ),
+                VectorKind::VectorCross => (
+                    transform_vector(&ops.x1, l1, &o, false),
+                    transform_vector(x2, l2, &o, false),
+                    transform_vector(&out, l3, &o, true),
+                ),
+            };
+            let mut out_t = vec![0.0; n_out];
+            op.apply_into(
+                Inputs { x1: &tx1, x2: Some(&tx2), ..ops.inputs() },
+                &mut scratch,
+                &mut out_t,
+            );
+            assert!(
+                max_abs_diff(&out_t, &tout) < 1e-8,
+                "{key:?} improper={improper}: equivariance violated ({})",
+                max_abs_diff(&out_t, &tout)
+            );
+        }
+
+        // 3. zero steady-state allocations (warm the lazy VJP sibling
+        // first)
+        let g = rng.normals(n_out);
+        let mut grad = vec![0.0; op.irreps_in().dim()];
+        op.vjp_into(ops.inputs(), &g, &mut scratch, &mut grad);
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..8 {
+            op.apply_into(ops.inputs(), &mut scratch, &mut out);
+            op.vjp_into(ops.inputs(), &g, &mut scratch, &mut grad);
+        }
+        let delta = ALLOCS.load(Ordering::Relaxed) - before;
+        assert_eq!(
+            delta, 0,
+            "{key:?}: {delta} allocations in 8 steady-state rounds"
+        );
+
+        // 4. VJP vs central finite differences on x1
+        let h = 1e-6;
+        let n1 = ops.x1.len();
+        let mut x = ops.x1.clone();
+        for probe in 0..fd_probes.min(n1) {
+            let i = (probe * n1) / fd_probes.min(n1);
+            let x0 = x[i];
+            x[i] = x0 + h;
+            op.apply_into(
+                Inputs { x1: &x, ..ops.inputs() }, &mut scratch, &mut out,
+            );
+            let fp: f64 = g.iter().zip(&out).map(|(a, b)| a * b).sum();
+            x[i] = x0 - h;
+            op.apply_into(
+                Inputs { x1: &x, ..ops.inputs() }, &mut scratch, &mut out,
+            );
+            let fm: f64 = g.iter().zip(&out).map(|(a, b)| a * b).sum();
+            x[i] = x0;
+            let fd = (fp - fm) / (2.0 * h);
+            assert!(
+                (grad[i] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                "{key:?}: vjp[{i}] = {} but fd = {fd}", grad[i]
+            );
+        }
+    }
+}

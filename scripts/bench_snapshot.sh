@@ -32,6 +32,9 @@
 #           TCP loopback, and a front door sharding N replicas.
 #   md_neighbor: open vs periodic cell-list builds, Verlet rebuild vs
 #           reuse, and ns/step of a 10^5-atom periodic LJ rollout.
+#   vector_tp: the three vector-signal Gaunt operators (sv / dot /
+#           cross) per L — planned direct + FFT vs the dense O(L^6)
+#           Gaunt-tensor contraction.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -58,7 +61,7 @@ fi
 cd rust
 for b in fig1a_feature_interaction fig1b_equivariant_convolution \
          table2_speed_memory simd_kernels model_inference serving \
-         md_neighbor; do
+         md_neighbor fig_vector; do
     echo "== cargo bench --bench $b =="
     cargo bench --bench "$b" "${ARGS[@]+"${ARGS[@]}"}"
 done
@@ -92,6 +95,7 @@ wanted = {
     "resilience": ["resilience"],
     "socket": ["socket"],
     "md_neighbor": ["md_neighbor"],
+    "vector_tp": ["fig_vector"],
 }
 
 benches = {}
@@ -168,6 +172,10 @@ doc = {
                         "verlet_rebuild (before) vs verlet_reuse (after); "
                         "periodic_lj_rollout_step is ns per MD step at "
                         "10^5 atoms"],
+        "vector_tp": ["naive_dense sv/dot/cross (O(L^6) Gaunt-tensor "
+                      "contraction, before)",
+                      "plan_direct / plan_fft sv/dot/cross (planned "
+                      "O(L^3) Cartesian-component route, after)"],
     },
     "benches": benches,
 }

@@ -64,8 +64,8 @@ done
 
 echo "== SMOKE=1 bench snapshot (the committed BENCH_fourier.json path) =="
 # runs fig1a/fig1b/table2/simd_kernels/model_inference/serving/
-# md_neighbor through the REAL snapshot script, so a broken bench OR
-# broken snapshot
+# md_neighbor/fig_vector through the REAL snapshot script, so a broken
+# bench OR broken snapshot
 # plumbing fails tier-1 instead of only when someone regenerates the
 # committed baseline (smoke mode leaves BENCH_fourier.json untouched)
 cd ..
